@@ -1,0 +1,104 @@
+//! Gradient-bias explorer — interactive companion to Theorem 1.
+//!
+//! Monte-Carlo-estimates `E[∇L′] − ∇L` (logit space) and the eq.-12
+//! distribution diagnostics for every sampler, sweeping m.
+//!
+//! ```text
+//! cargo run --release --example bias_explorer -- --n 100 --trials 4000
+//! ```
+
+use anyhow::Result;
+use rfsoftmax::bias::{empirical_bias, theorem_diagnostics};
+use rfsoftmax::cli::Args;
+use rfsoftmax::linalg::{unit_vector, Matrix};
+use rfsoftmax::rng::Rng;
+use rfsoftmax::sampler::{
+    ExactSoftmaxSampler, LogUniformSampler, QuadraticSampler, RffSampler,
+    Sampler, UniformSampler,
+};
+use rfsoftmax::tables::{fmt_sci, Table};
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::parse(&raw, &["help"])?;
+    let n = a.usize_or("n", 100)?;
+    let d = a.usize_or("d", 16)?;
+    let tau = a.f32_or("tau", 8.0)?;
+    let trials = a.usize_or("trials", 4000)?;
+    let rff_d = a.usize_or("dim", 1024)?;
+
+    let mut rng = Rng::seeded(a.u64_or("seed", 5)?);
+    let mut classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+    let h = unit_vector(&mut rng, d);
+    // Plant a skewed softmax: a few classes near h (the regime where the
+    // sampling distribution matters most).
+    for i in 0..3.min(n) {
+        let row = classes.row_mut(i);
+        for (r, &hv) in row.iter_mut().zip(h.iter()) {
+            *r = hv + 0.1 * (i as f32 + 1.0);
+        }
+        rfsoftmax::linalg::l2_normalize(row);
+    }
+    let target = n / 2;
+
+    let samplers: Vec<(&str, Box<dyn Sampler>)> = vec![
+        ("exp", Box::new(ExactSoftmaxSampler::new(&classes, tau))),
+        (
+            "rff",
+            Box::new(RffSampler::new(&classes, rff_d, tau, &mut rng)),
+        ),
+        (
+            "quadratic",
+            Box::new(QuadraticSampler::new(&classes, 100.0, 1.0)),
+        ),
+        ("uniform", Box::new(UniformSampler::new(n))),
+        ("loguniform", Box::new(LogUniformSampler::new(n))),
+    ];
+
+    for m in [5usize, 20, 100] {
+        if m >= n {
+            continue;
+        }
+        let mut table = Table::new(
+            &format!(
+                "Gradient bias, n={n}, d={d}, τ={tau}, m={m}, {trials} trials \
+                 (Theorem 1 empirics)"
+            ),
+            &["sampler", "|bias|∞", "|bias|₂", "MC-se", "UB₁", "ratio-gap"],
+        );
+        for (name, s) in &samplers {
+            let est = empirical_bias(
+                &classes,
+                &h,
+                target,
+                tau,
+                s.as_ref(),
+                m,
+                trials,
+                &mut rng,
+            );
+            let diag = theorem_diagnostics(
+                &classes,
+                &h,
+                target,
+                tau,
+                s.as_ref(),
+                m,
+            );
+            table.row(&[
+                name.to_string(),
+                fmt_sci(est.linf),
+                fmt_sci(est.l2),
+                fmt_sci(est.max_se),
+                fmt_sci(diag.ub1),
+                fmt_sci(diag.max_ratio_gap / diag.floor.sqrt()),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+    println!(
+        "Expected (Theorem 1): EXP ≈ 0 bias and UB₁ = 0; RFF close to EXP;\n\
+         uniform/loguniform clearly worse; all biases shrink as m grows."
+    );
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Extreme-classification driver (paper Table 3): train the sparse-input
+//! model on a planted multi-label dataset at AmazonCat-13K / Delicious-200K
+//! / WikiLSHTC shapes and report PREC@{1,3,5} per sampler.
+//!
+//! ```text
+//! cargo run --release --example extreme_classification -- \
+//!     --prefix xc_amazon --samplers exact,uniform,quadratic,rff --steps 400
+//! ```
+
+use anyhow::Result;
+use rfsoftmax::cli::Args;
+use rfsoftmax::config::Config;
+use rfsoftmax::coordinator::{Trainer, TrainerBuilder};
+use rfsoftmax::runtime::Runtime;
+use rfsoftmax::tables::Table;
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::parse(&raw, &["help"])?;
+    if a.has("help") {
+        println!(
+            "flags: --prefix xc_amazon|xc_delicious|xc_wiki \
+             --samplers a,b,c --steps N --dim D --train-size N"
+        );
+        return Ok(());
+    }
+    let runtime = Runtime::load(Runtime::default_dir())?;
+    let prefix = a.str_or("prefix", "xc_amazon").to_string();
+    let samplers = a.str_or("samplers", "exact,uniform,quadratic,rff").to_string();
+    println!("platform {} | dataset {prefix}", runtime.platform());
+
+    let mut table = Table::new(
+        &format!("PREC@k on {prefix} (paper Table 3 shape)"),
+        &["Method", "PREC@1", "PREC@3", "PREC@5", "wall (s)"],
+    );
+
+    for s in samplers.split(',') {
+        let mut cfg = Config::default();
+        cfg.set("sampler.kind", s)?;
+        cfg.set("sampler.num_negatives", a.str_or("m", "100"))?;
+        cfg.set("sampler.dim", a.str_or("dim", "256"))?;
+        cfg.set("sampler.T", a.str_or("T", "0.5"))?;
+        cfg.set("train.steps", a.str_or("steps", "2500"))?;
+        cfg.set("train.eval_every", a.str_or("steps", "2500"))?;
+        cfg.set("train.eval_batches", a.str_or("eval-batches", "8"))?;
+        cfg.set("train.lr", a.str_or("lr", "1.0"))?;
+        cfg.set("data.train_size", a.str_or("train-size", "12000"))?;
+        cfg.set("data.valid_size", a.str_or("test-size", "1024"))?;
+        cfg.set("data.noise", a.str_or("noise", "0.15"))?;
+        for (k, v) in a.overrides() {
+            if k.contains('.') {
+                cfg.set(k, v)?;
+            }
+        }
+        println!("\n--- {s} ---");
+        let t0 = std::time::Instant::now();
+        let mut trainer = TrainerBuilder::new(&runtime, &prefix, cfg).build()?;
+        let _report = trainer.run()?;
+        let (p1, p3, p5) = match &mut trainer {
+            Trainer::Xc(t) => t.final_precisions()?,
+            _ => anyhow::bail!("{prefix} is not an XC config"),
+        };
+        println!("  PREC@1 {p1:.3}  PREC@3 {p3:.3}  PREC@5 {p5:.3}");
+        table.row(&[
+            s.to_uppercase(),
+            format!("{p1:.2}"),
+            format!("{p3:.2}"),
+            format!("{p5:.2}"),
+            format!("{:.1}", t0.elapsed().as_secs_f64()),
+        ]);
+    }
+
+    println!("\n{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Language-model training driver — the workhorse behind Figures 1–4 and
+//! the end-to-end validation run recorded in EXPERIMENTS.md.
+//!
+//! Examples:
+//!
+//! ```text
+//! # RF-softmax vs baselines on the PTB-scale corpus (Figure 3 shape):
+//! cargo run --release --example lm_language_model -- \
+//!     --prefix ptb --samplers rff,exact,uniform,quadratic,full --steps 600
+//!
+//! # The paper's ν sweep (Figure 1): T = 1/√ν
+//! cargo run --release --example lm_language_model -- \
+//!     --prefix ptb --samplers rff --sweep-T 0.3,0.4,0.5,0.7,1.0
+//!
+//! # End-to-end validation at Bnews scale (~34M parameters):
+//! cargo run --release --example lm_language_model -- \
+//!     --prefix bnews --samplers rff --steps 400
+//! ```
+
+use anyhow::Result;
+use rfsoftmax::cli::Args;
+use rfsoftmax::config::Config;
+use rfsoftmax::coordinator::{TrainerBuilder, TrainReport};
+use rfsoftmax::runtime::Runtime;
+use rfsoftmax::tables::Table;
+
+fn base_config(a: &Args) -> Result<Config> {
+    let mut cfg = Config::default();
+    cfg.set("sampler.num_negatives", a.str_or("m", "100"))?;
+    cfg.set("sampler.dim", a.str_or("dim", "1024"))?;
+    cfg.set("sampler.T", a.str_or("T", "0.5"))?;
+    cfg.set("train.steps", a.str_or("steps", "400"))?;
+    cfg.set("train.eval_every", a.str_or("eval-every", "100"))?;
+    cfg.set("train.eval_batches", a.str_or("eval-batches", "4"))?;
+    cfg.set("train.lr", a.str_or("lr", "0.5"))?;
+    cfg.set("data.train_size", a.str_or("train-tokens", "120000"))?;
+    cfg.set("data.valid_size", a.str_or("valid-tokens", "10000"))?;
+    for (k, v) in a.overrides() {
+        if k.contains('.') {
+            cfg.set(k, v)?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn run_one(
+    runtime: &Runtime,
+    prefix: &str,
+    cfg: Config,
+    label: &str,
+) -> Result<TrainReport> {
+    println!("\n--- {label} ---");
+    let mut trainer = TrainerBuilder::new(runtime, prefix, cfg).build()?;
+    let report = trainer.run()?;
+    for p in &report.history {
+        println!(
+            "  step {:>5} (ep {:.2}) train {:.3} | valid {:.3} | ppl {:.1}",
+            p.step, p.epoch, p.train_loss, p.eval_loss, p.metric
+        );
+    }
+    println!(
+        "  => {} final ppl {:.2} in {:.1}s",
+        report.sampler, report.final_metric, report.wall_seconds
+    );
+    Ok(report)
+}
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::parse(&raw, &["help"])?;
+    if a.has("help") {
+        println!(
+            "flags: --prefix ptb|bnews|quickstart --samplers a,b,c \
+             --steps N --m N --dim D --T t --sweep-T t1,t2 --sweep-D d1,d2 \
+             --lr x --train-tokens N --csv out.csv \
+             (+ any --section.key config override)"
+        );
+        return Ok(());
+    }
+    let runtime = Runtime::load(Runtime::default_dir())?;
+    let prefix = a.str_or("prefix", "ptb").to_string();
+    println!(
+        "platform {} | prefix {prefix} | single-core CPU testbed",
+        runtime.platform()
+    );
+
+    let mut reports: Vec<(String, TrainReport)> = Vec::new();
+
+    if let Some(ts) = a.get("sweep-T") {
+        // Figure 1: vary the RFF kernel temperature T = 1/√ν.
+        for t in ts.split(',') {
+            let mut cfg = base_config(&a)?;
+            cfg.set("sampler.kind", "rff")?;
+            cfg.set("sampler.T", t)?;
+            let r = run_one(&runtime, &prefix, cfg, &format!("rff T={t}"))?;
+            reports.push((format!("rff T={t}"), r));
+        }
+    } else if let Some(ds) = a.get("sweep-D") {
+        // Figure 2: vary the RFF dimension D.
+        for d in ds.split(',') {
+            let mut cfg = base_config(&a)?;
+            cfg.set("sampler.kind", "rff")?;
+            cfg.set("sampler.dim", d)?;
+            let r = run_one(&runtime, &prefix, cfg, &format!("rff D={d}"))?;
+            reports.push((format!("rff D={d}"), r));
+        }
+    } else {
+        // Figures 3/4: sampler comparison.
+        let samplers = a.str_or("samplers", "rff,exact,uniform,quadratic");
+        for s in samplers.split(',') {
+            let mut cfg = base_config(&a)?;
+            cfg.set("sampler.kind", s)?;
+            let r = run_one(&runtime, &prefix, cfg, s)?;
+            reports.push((s.to_string(), r));
+        }
+    }
+
+    // Summary table (validation perplexity per eval point).
+    let steps: Vec<usize> = reports
+        .first()
+        .map(|(_, r)| r.history.iter().map(|p| p.step).collect())
+        .unwrap_or_default();
+    let mut header: Vec<String> = vec!["step".to_string()];
+    header.extend(reports.iter().map(|(n, _)| n.clone()));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        &format!("Validation perplexity on {prefix} (lower is better)"),
+        &header_refs,
+    );
+    for (row_idx, step) in steps.iter().enumerate() {
+        let mut cells = vec![step.to_string()];
+        for (_, r) in &reports {
+            cells.push(
+                r.history
+                    .get(row_idx)
+                    .map(|p| format!("{:.1}", p.metric))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        table.row(&cells);
+    }
+    println!("\n{}", table.render());
+
+    if let Some(csv) = a.get("csv") {
+        std::fs::write(csv, table.to_csv())?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}

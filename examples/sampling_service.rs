@@ -1,0 +1,142 @@
+//! Standalone sampling service — serving-style usage of the library.
+//!
+//! Runs the RF-softmax kernel tree as a request/response service over a
+//! Unix domain socket: clients send a query embedding, the service
+//! replies with m sampled class ids + probabilities. Demonstrates the
+//! coordinator pieces (worker pool, metrics) outside the training loop —
+//! e.g. for retrieval-style "sample candidates ∝ softmax" serving.
+//!
+//! Protocol (little-endian): request = u32 m | u32 d | f32×d query;
+//! response = u32 m | (u32 id, f64 q)×m.
+//!
+//! ```text
+//! cargo run --release --example sampling_service -- --n 50000 --selftest
+//! ```
+
+use anyhow::Result;
+use rfsoftmax::cli::Args;
+use rfsoftmax::linalg::{unit_vector, Matrix};
+use rfsoftmax::metrics::Metrics;
+use rfsoftmax::rng::Rng;
+use rfsoftmax::sampler::{RffSampler, Sampler};
+use std::io::{Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+
+fn handle(
+    mut stream: UnixStream,
+    sampler: &RffSampler,
+    rng: &mut Rng,
+    metrics: &mut Metrics,
+) -> Result<()> {
+    let mut head = [0u8; 8];
+    stream.read_exact(&mut head)?;
+    let m = u32::from_le_bytes(head[0..4].try_into().unwrap()) as usize;
+    let d = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+    let mut buf = vec![0u8; d * 4];
+    stream.read_exact(&mut buf)?;
+    let query: Vec<f32> = buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+
+    let draw = metrics.time("sample", || sampler.sample(&query, m, rng));
+    metrics.incr("requests", 1);
+
+    let mut out = Vec::with_capacity(4 + m * 12);
+    out.extend_from_slice(&(m as u32).to_le_bytes());
+    for (id, q) in draw.ids.iter().zip(&draw.probs) {
+        out.extend_from_slice(&id.to_le_bytes());
+        out.extend_from_slice(&q.to_le_bytes());
+    }
+    stream.write_all(&out)?;
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::parse(&raw, &["help", "selftest"])?;
+    let n = a.usize_or("n", 50_000)?;
+    let d = a.usize_or("d", 64)?;
+    let dim = a.usize_or("dim", 256)?;
+    let nu = a.f32_or("nu", 4.0)?;
+    let requests = a.usize_or("requests", 32)?;
+    let sock_path = std::env::temp_dir().join(format!("rfsm_sampler_{}.sock", std::process::id()));
+
+    println!("building RF-softmax sampler: n={n} d={d} D={dim} ν={nu} …");
+    let mut rng = Rng::seeded(3);
+    let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+    let sampler = RffSampler::new(&classes, dim, nu, &mut rng);
+    println!(
+        "tree memory: {:.1} MiB",
+        sampler.memory_bytes() as f64 / (1 << 20) as f64
+    );
+
+    let _ = std::fs::remove_file(&sock_path);
+    let listener = UnixListener::bind(&sock_path)?;
+    println!("listening on {}", sock_path.display());
+
+    if a.has("selftest") {
+        // Spawn a client thread that fires `requests` queries.
+        let path = sock_path.clone();
+        let client = std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut rng = Rng::seeded(9);
+            let mut latencies = Vec::new();
+            for _ in 0..requests {
+                let q = unit_vector(&mut rng, d);
+                let t0 = std::time::Instant::now();
+                let mut s = UnixStream::connect(&path)?;
+                let m = 10u32;
+                s.write_all(&m.to_le_bytes())?;
+                s.write_all(&(d as u32).to_le_bytes())?;
+                for v in &q {
+                    s.write_all(&v.to_le_bytes())?;
+                }
+                let mut head = [0u8; 4];
+                s.read_exact(&mut head)?;
+                let got = u32::from_le_bytes(head) as usize;
+                let mut body = vec![0u8; got * 12];
+                s.read_exact(&mut body)?;
+                latencies.push(t0.elapsed().as_secs_f64());
+                // Sanity: ids in range, q ∈ (0, 1].
+                for chunk in body.chunks_exact(12) {
+                    let id =
+                        u32::from_le_bytes(chunk[0..4].try_into().unwrap());
+                    let qv =
+                        f64::from_le_bytes(chunk[4..12].try_into().unwrap());
+                    assert!((id as usize) < n);
+                    assert!(qv > 0.0 && qv <= 1.0);
+                }
+            }
+            Ok(latencies)
+        });
+
+        let mut metrics = Metrics::new();
+        let mut served = 0;
+        for stream in listener.incoming() {
+            handle(stream?, &sampler, &mut rng, &mut metrics)?;
+            served += 1;
+            if served >= requests {
+                break;
+            }
+        }
+        let latencies = client.join().expect("client thread")?;
+        let mean = latencies.iter().sum::<f64>() / latencies.len() as f64;
+        println!(
+            "served {served} requests; client mean round-trip {:.2} ms",
+            mean * 1e3
+        );
+        println!(
+            "service-side sample p50 {:?} p95 {:?}",
+            metrics.timer("sample").unwrap().quantile(0.5),
+            metrics.timer("sample").unwrap().quantile(0.95),
+        );
+        let _ = std::fs::remove_file(&sock_path);
+    } else {
+        println!("serving forever (ctrl-c to stop)…");
+        let mut metrics = Metrics::new();
+        for stream in listener.incoming() {
+            handle(stream?, &sampler, &mut rng, &mut metrics)?;
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,353 @@
+"""AOT pipeline: lower every L2 entry point to HLO TEXT + manifest.json.
+
+Usage (normally via `make artifacts`):
+
+    cd python && python -m compile.aot --out ../artifacts [--configs ptb,...]
+
+HLO *text* (not `.serialize()`) is the interchange format: the image's
+xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction
+ids); the text parser reassigns ids (see /opt/xla-example/README.md).
+
+The manifest records every entry point's input/output names, dtypes and
+shapes plus the generating config, so the Rust coordinator discovers model
+shapes from the manifest instead of trusting its own config (no drift).
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ----------------------------------------------------------------------
+# Experiment configs (shapes baked into the artifacts).
+# tau = 1 / 0.3^2: the paper's best FULL temperature (section 4.1).
+# ----------------------------------------------------------------------
+
+TAU = 1.0 / (0.3 * 0.3)
+
+LM_CONFIGS = {
+    # Tiny end-to-end config for tests + quickstart example.
+    "quickstart": dict(n=1000, d=32, hidden=64, seq_len=8, batch=16, m=20,
+                       tau=TAU),
+    # PennTreeBank-scale (paper: n=10,000, d=200; hidden/seq scaled for
+    # CPU wall-time, see DESIGN.md section 2).
+    "ptb": dict(n=10_000, d=100, hidden=128, seq_len=10, batch=64, m=100,
+                tau=TAU),
+    # Bnews-scale (paper: n=64,000, d=512 -> d=256 CPU-scaled).
+    "bnews": dict(n=64_000, d=256, hidden=256, seq_len=10, batch=64, m=100,
+                  tau=TAU),
+}
+
+XC_CONFIGS = {
+    # AmazonCat-13K: n=13,330, v=203,882, d=128 (paper table 3).
+    "xc_amazon": dict(n=13_330, v=203_882, d=128, nnz=16, batch=32, m=100,
+                      tau=TAU),
+    # Delicious-200K: n=205,443, v=782,585.
+    "xc_delicious": dict(n=205_443, v=782_585, d=128, nnz=16, batch=32,
+                         m=100, tau=TAU),
+    # WikiLSHTC-325K: n=325,056, v=1,617,899.
+    "xc_wiki": dict(n=325_056, v=1_617_899, d=128, nnz=16, batch=32, m=100,
+                    tau=TAU),
+}
+
+# Standalone RFF feature-map artifact (bulk phi computation; also the
+# direct L1-kernel smoke artifact for the Rust integration tests).
+RFF_MAP_CONFIG = dict(rows=512, d=128, num_freqs=256)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def tensor_meta(name, s):
+    dt = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[s.dtype]
+    return {"name": name, "dtype": dt, "shape": list(s.shape)}
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.artifacts = {}
+
+    def emit(self, name, fn, inputs, output_names, meta):
+        """Lower `fn` at `inputs` [(name, spec)...] and write HLO text."""
+        specs = [s for _, s in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        # Output shapes from the jitted abstract eval.
+        out = jax.eval_shape(fn, *specs)
+        assert len(out) == len(output_names), (
+            f"{name}: {len(out)} outputs vs {len(output_names)} names"
+        )
+        self.artifacts[name] = {
+            "file": fname,
+            "inputs": [tensor_meta(n, s) for n, s in inputs],
+            "outputs": [
+                tensor_meta(n, s) for n, s in zip(output_names, out)
+            ],
+            "meta": meta,
+        }
+        print(f"  {name:<30} {len(text):>9} chars")
+
+    def write_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump({"version": 1, "artifacts": self.artifacts}, f,
+                      indent=1, sort_keys=True)
+        print(f"wrote {path} ({len(self.artifacts)} artifacts)")
+
+
+def emit_lm(em, prefix, cfg, *, full=True, unnorm=False):
+    n, d, hidden = cfg["n"], cfg["d"], cfg["hidden"]
+    seq_len, batch, m, tau = (
+        cfg["seq_len"], cfg["batch"], cfg["m"], cfg["tau"],
+    )
+    meta = {"kind": "lm", **cfg}
+    ctx = ("ctx_emb", spec([batch, seq_len, d]))
+    wx = ("wx", spec([d, 4 * hidden]))
+    wh = ("wh", spec([hidden, 4 * hidden]))
+    b = ("b", spec([4 * hidden]))
+    proj = ("proj", spec([hidden, d]))
+    enc_inputs = [ctx, wx, wh, b, proj]
+    grad_names = ["d_ctx_emb", "d_wx", "d_wh", "d_b", "d_proj"]
+
+    em.emit(
+        f"{prefix}_encode",
+        functools.partial(model.lm_encode_entry, normalize=True),
+        enc_inputs,
+        ["h"],
+        meta,
+    )
+    sampled_inputs = enc_inputs + [
+        ("tgt_emb", spec([batch, d])),
+        ("neg_emb", spec([m, d])),
+        ("neg_adjust", spec([m])),
+        ("neg_mask", spec([batch, m])),
+    ]
+    sampled_outputs = ["loss"] + grad_names + ["d_tgt_emb", "d_neg_emb"]
+    em.emit(
+        f"{prefix}_train_sampled",
+        functools.partial(
+            model.lm_train_sampled_entry, tau=tau, normalize=True,
+            absolute=False,
+        ),
+        sampled_inputs,
+        sampled_outputs,
+        meta,
+    )
+    em.emit(
+        f"{prefix}_train_sampled_abs",
+        functools.partial(
+            model.lm_train_sampled_entry, tau=tau, normalize=True,
+            absolute=True,
+        ),
+        sampled_inputs,
+        sampled_outputs,
+        meta,
+    )
+    full_inputs = enc_inputs + [
+        ("cls", spec([n, d])),
+        ("targets", spec([batch], jnp.int32)),
+    ]
+    if full:
+        em.emit(
+            f"{prefix}_train_full",
+            functools.partial(
+                model.lm_train_full_entry, tau=tau, normalize=True,
+                absolute=False,
+            ),
+            full_inputs,
+            ["loss"] + grad_names + ["d_cls"],
+            meta,
+        )
+    em.emit(
+        f"{prefix}_eval",
+        functools.partial(model.lm_eval_entry, tau=tau, normalize=True),
+        full_inputs,
+        ["loss"],
+        meta,
+    )
+    if unnorm:
+        em.emit(
+            f"{prefix}_train_full_unnorm",
+            functools.partial(
+                model.lm_train_full_entry, tau=tau, normalize=False,
+                absolute=False,
+            ),
+            full_inputs,
+            ["loss"] + grad_names + ["d_cls"],
+            meta,
+        )
+        em.emit(
+            f"{prefix}_eval_unnorm",
+            functools.partial(
+                model.lm_eval_entry, tau=tau, normalize=False
+            ),
+            full_inputs,
+            ["loss"],
+            meta,
+        )
+
+
+def emit_xc(em, prefix, cfg, *, full=True, unnorm=False):
+    n, d, nnz, batch, m, tau = (
+        cfg["n"], cfg["d"], cfg["nnz"], cfg["batch"], cfg["m"], cfg["tau"],
+    )
+    meta = {"kind": "xc", **cfg}
+    feat = ("feat_emb", spec([batch, nnz, d]))
+    vals = ("vals", spec([batch, nnz]))
+    sampled_inputs = [
+        feat, vals,
+        ("tgt_emb", spec([batch, d])),
+        ("neg_emb", spec([m, d])),
+        ("neg_adjust", spec([m])),
+        ("neg_mask", spec([batch, m])),
+    ]
+    sampled_outputs = ["loss", "d_feat_emb", "d_tgt_emb", "d_neg_emb"]
+    em.emit(
+        f"{prefix}_train_sampled",
+        functools.partial(
+            model.xc_train_sampled_entry, tau=tau, normalize=True,
+            absolute=False,
+        ),
+        sampled_inputs,
+        sampled_outputs,
+        meta,
+    )
+    em.emit(
+        f"{prefix}_train_sampled_abs",
+        functools.partial(
+            model.xc_train_sampled_entry, tau=tau, normalize=True,
+            absolute=True,
+        ),
+        sampled_inputs,
+        sampled_outputs,
+        meta,
+    )
+    full_inputs = [
+        feat, vals,
+        ("cls", spec([n, d])),
+        ("targets", spec([batch], jnp.int32)),
+    ]
+    if full:
+        em.emit(
+            f"{prefix}_train_full",
+            functools.partial(
+                model.xc_train_full_entry, tau=tau, normalize=True,
+                absolute=False,
+            ),
+            full_inputs,
+            ["loss", "d_feat_emb", "d_cls"],
+            meta,
+        )
+    scores_inputs = [feat, vals, ("cls", spec([n, d]))]
+    em.emit(
+        f"{prefix}_scores",
+        functools.partial(model.xc_scores_entry, tau=tau, normalize=True),
+        scores_inputs,
+        ["scores"],
+        meta,
+    )
+    if unnorm:
+        em.emit(
+            f"{prefix}_train_full_unnorm",
+            functools.partial(
+                model.xc_train_full_entry, tau=tau, normalize=False,
+                absolute=False,
+            ),
+            full_inputs,
+            ["loss", "d_feat_emb", "d_cls"],
+            meta,
+        )
+        em.emit(
+            f"{prefix}_scores_unnorm",
+            functools.partial(
+                model.xc_scores_entry, tau=tau, normalize=False
+            ),
+            scores_inputs,
+            ["scores"],
+            meta,
+        )
+
+
+def emit_rff_map(em):
+    from .kernels.rff_map import rff_map
+
+    cfg = RFF_MAP_CONFIG
+    em.emit(
+        "rff_map",
+        rff_map_entry,
+        [
+            ("u", spec([cfg["rows"], cfg["d"]])),
+            ("w", spec([cfg["num_freqs"], cfg["d"]])),
+        ],
+        ["phi"],
+        {"kind": "rff_map", **cfg},
+    )
+
+
+def rff_map_entry(u, w):
+    from .kernels.rff_map import rff_map
+
+    return (rff_map(u, w),)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default="quickstart,ptb,bnews,xc_amazon,xc_delicious,xc_wiki,rff_map",
+        help="comma-separated config names (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    wanted = set(args.configs.split(","))
+    em = Emitter(args.out)
+
+    print("lowering entry points (HLO text):")
+    if "rff_map" in wanted:
+        emit_rff_map(em)
+    for name, cfg in LM_CONFIGS.items():
+        if name not in wanted:
+            continue
+        emit_lm(
+            em, name, cfg,
+            # FULL baseline only where the paper runs it (PTB + tiny);
+            # the Bnews figure has no FULL curve and the dense (n, d)
+            # gradient would dominate compile + step time there.
+            full=(name in ("quickstart", "ptb")),
+            unnorm=(name == "ptb"),
+        )
+    for name, cfg in XC_CONFIGS.items():
+        if name not in wanted:
+            continue
+        emit_xc(
+            em, name, cfg,
+            full=(name == "xc_amazon"),
+            unnorm=(name == "xc_amazon"),
+        )
+    em.write_manifest()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness references).
+
+These are the CORE correctness signal: every Pallas kernel must match its
+oracle to float tolerance under hypothesis-driven shape/value sweeps
+(python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rff_map_ref(u, w):
+    """Reference RFF feature map (paper eq. 17).
+
+    Args:
+      u: (B, d) input vectors.
+      w: (D, d) frequency matrix, rows ~ N(0, nu*I).
+
+    Returns:
+      (B, 2D): [cos(u @ w.T) | sin(u @ w.T)] / sqrt(D).
+    """
+    proj = u @ w.T  # (B, D)
+    d_feat = w.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_feat, dtype=u.dtype))
+    return jnp.concatenate([jnp.cos(proj), jnp.sin(proj)], axis=-1) * scale
+
+
+def sampled_loss_ref(tgt_logit, neg_logits, adjust, mask):
+    """Reference sampled-softmax loss (paper eq. 5-6), per example.
+
+    Args:
+      tgt_logit: (B,) target logits o_t.
+      neg_logits: (B, m) sampled-negative logits o_{s_i}.
+      adjust: (m,) log(m * q_i) adjustments.
+      mask: (B, m) accidental-hit mask; 0 entries are dropped (-inf logit).
+
+    Returns:
+      (B,) per-example loss: logsumexp([o_t, o' ...]) - o_t.
+    """
+    adj = neg_logits - adjust[None, :]
+    adj = jnp.where(mask > 0, adj, NEG_INF)
+    full = jnp.concatenate([tgt_logit[:, None], adj], axis=1)  # (B, m+1)
+    mx = jnp.max(full, axis=1, keepdims=True)
+    lse = jnp.squeeze(mx, 1) + jnp.log(
+        jnp.sum(jnp.exp(full - mx), axis=1)
+    )
+    return lse - tgt_logit
+
+
+def sampled_loss_grads_ref(tgt_logit, neg_logits, adjust, mask):
+    """Gradients of `sampled_loss_ref` w.r.t. (tgt_logit, neg_logits)."""
+    adj = neg_logits - adjust[None, :]
+    adj = jnp.where(mask > 0, adj, NEG_INF)
+    full = jnp.concatenate([tgt_logit[:, None], adj], axis=1)
+    p = jnp.exp(full - jnp.max(full, axis=1, keepdims=True))
+    p = p / jnp.sum(p, axis=1, keepdims=True)
+    d_tgt = p[:, 0] - 1.0
+    d_neg = p[:, 1:]
+    return d_tgt, d_neg
+
+
+def gaussian_kernel_ref(x, y, nu):
+    """exp(-nu * ||x - y||^2 / 2)."""
+    d2 = jnp.sum((x - y) ** 2, axis=-1)
+    return jnp.exp(-nu * d2 / 2.0)
+
+
+def exp_kernel_ref(x, y, tau):
+    """exp(tau * x . y)."""
+    return jnp.exp(tau * jnp.sum(x * y, axis=-1))

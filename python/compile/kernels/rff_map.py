@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: the Random Fourier Feature map (paper eq. 17).
+
+phi(u) = sqrt(1/D) * [cos(W u) | sin(W u)],  W in R^{D x d}
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): the u @ W^T core is an
+MXU matmul tiled (BM x d) x (d x BD); cos/sin are VPU element-wise ops on
+the VMEM-resident accumulator tile. The grid expresses the HBM->VMEM
+schedule a CUDA implementation would write with threadblocks + shared
+memory. `interpret=True` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the kernel lowers to plain HLO for this image and
+serves as the compile-only TPU artifact otherwise.
+
+VMEM footprint per grid step (f32): BM*d + BD*d + 2*BM*BD floats.
+With BM=BD=128, d<=512: 128*512*2*4B = 512 KiB + 128*128*2*4B = 128 KiB
+~ 0.6 MiB << 16 MiB VMEM, leaving room for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles (128 x 128 systolic array).
+BLOCK_ROWS = 128
+BLOCK_FEATS = 128
+
+
+def _rff_kernel(u_ref, w_ref, cos_ref, sin_ref, *, inv_sqrt_d):
+    """One (row-block, feature-block) grid step."""
+    u = u_ref[...]  # (bm, d)
+    w = w_ref[...]  # (bd, d)
+    # MXU: (bm, d) @ (d, bd).
+    proj = jnp.dot(u, w.T, preferred_element_type=jnp.float32)
+    cos_ref[...] = jnp.cos(proj) * inv_sqrt_d
+    sin_ref[...] = jnp.sin(proj) * inv_sqrt_d
+
+
+def rff_map(u, w, *, block_rows=BLOCK_ROWS, block_feats=BLOCK_FEATS):
+    """Pallas RFF map: returns (B, 2D) features [cos | sin] / sqrt(D).
+
+    Shapes must tile evenly for the BlockSpec grid; callers pad. (aot.py
+    only emits configs whose shapes tile.)
+    """
+    b, d = u.shape
+    d_feat = w.shape[0]
+    assert w.shape[1] == d, f"w dim mismatch: {w.shape} vs d={d}"
+    bm = min(block_rows, b)
+    bd = min(block_feats, d_feat)
+    assert b % bm == 0, f"rows {b} must tile by {bm}"
+    assert d_feat % bd == 0, f"features {d_feat} must tile by {bd}"
+    inv_sqrt_d = 1.0 / (d_feat**0.5)
+    grid = (b // bm, d_feat // bd)
+    cos, sin = pl.pallas_call(
+        functools.partial(_rff_kernel, inv_sqrt_d=inv_sqrt_d),
+        grid=grid,
+        in_specs=[
+            # u: one row-block, full d (weights stream over j).
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            # w: one feature-block, full d.
+            pl.BlockSpec((bd, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bd), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d_feat), jnp.float32),
+            jax.ShapeDtypeStruct((b, d_feat), jnp.float32),
+        ],
+        interpret=True,
+    )(u, w)
+    return jnp.concatenate([cos, sin], axis=-1)

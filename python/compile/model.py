@@ -1,0 +1,195 @@
+"""L2: the paper's models in JAX, calling the L1 Pallas kernels.
+
+Two model families (paper section 4.1):
+
+* LM — context tokens -> (gathered) input embeddings -> LSTM -> projection
+  -> L2-normalized h; sampled softmax against target + shared negatives.
+* XC (extreme classification) — sparse features -> (gathered) feature
+  embeddings -> weighted sum -> L2-normalized h; same loss.
+
+Every entry point is a *pure function of explicit tensors* — the Rust
+coordinator owns all state, performs the embedding gathers/scatters, and
+passes parameters each call (DESIGN.md section 1). Gradients are returned
+for every trainable input.
+
+Logit conventions (paper eq. 1, 5):
+  o_i = tau * h^T c_i with h, c normalized (when `normalize`);
+  sampled negatives arrive with `adjust = log(m q)` and an accidental-hit
+  mask; the Quadratic baseline's absolute-softmax variant uses |o|.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sampled_loss import sampled_softmax_loss
+
+EPS = 1e-6
+
+
+def l2_normalize(x, axis=-1):
+    n = jnp.sqrt(jnp.sum(x * x, axis=axis, keepdims=True))
+    return x / jnp.maximum(n, EPS)
+
+
+# ----------------------------------------------------------------------
+# Encoders
+# ----------------------------------------------------------------------
+
+
+def lstm_encode(ctx_emb, wx, wh, b):
+    """Single-layer LSTM over the context window; returns the final h.
+
+    ctx_emb: (B, L, d); wx: (d, 4H); wh: (H, 4H); b: (4H,).
+    Gate order: i, f, g, o (matches the Rust forget-bias init).
+    """
+    bsz = ctx_emb.shape[0]
+    hidden = wh.shape[0]
+
+    def step(carry, x_t):
+        h, c = carry
+        gates = x_t @ wx + h @ wh + b  # (B, 4H)
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        i = jax.nn.sigmoid(i)
+        f = jax.nn.sigmoid(f)
+        g = jnp.tanh(g)
+        o = jax.nn.sigmoid(o)
+        c = f * c + i * g
+        h = o * jnp.tanh(c)
+        return (h, c), None
+
+    xs = jnp.transpose(ctx_emb, (1, 0, 2))  # (L, B, d)
+    init = (
+        jnp.zeros((bsz, hidden), ctx_emb.dtype),
+        jnp.zeros((bsz, hidden), ctx_emb.dtype),
+    )
+    (h, _), _ = jax.lax.scan(step, init, xs)
+    return h  # (B, H)
+
+
+def lm_h(ctx_emb, wx, wh, b, proj, *, normalize=True):
+    """LM input embedding h (B, d)."""
+    h = lstm_encode(ctx_emb, wx, wh, b) @ proj  # (B, d)
+    return l2_normalize(h) if normalize else h
+
+
+def xc_h(feat_emb, vals, *, normalize=True):
+    """XC input embedding: value-weighted feature-embedding sum (B, d)."""
+    h = jnp.sum(vals[..., None] * feat_emb, axis=1)
+    return l2_normalize(h) if normalize else h
+
+
+# ----------------------------------------------------------------------
+# Losses
+# ----------------------------------------------------------------------
+
+
+def _sampled_loss_from_h(h, tgt_emb, neg_emb, adjust, mask, *, tau,
+                         normalize, absolute):
+    """Mean sampled-softmax loss given the input embedding h."""
+    tgt = l2_normalize(tgt_emb) if normalize else tgt_emb
+    neg = l2_normalize(neg_emb) if normalize else neg_emb
+    o_t = tau * jnp.sum(h * tgt, axis=-1)  # (B,)
+    o_n = tau * (h @ neg.T)  # (B, m)
+    if absolute:
+        o_t = jnp.abs(o_t)
+        o_n = jnp.abs(o_n)
+    per_example = sampled_softmax_loss(o_t, o_n, adjust, mask)
+    return jnp.mean(per_example)
+
+
+def _full_loss_from_h(h, cls, targets, *, tau, normalize, absolute):
+    """Mean full-softmax cross-entropy (paper eq. 3)."""
+    c = l2_normalize(cls) if normalize else cls
+    o = tau * (h @ c.T)  # (B, n)
+    if absolute:
+        o = jnp.abs(o)
+    o_t = jnp.take_along_axis(o, targets[:, None], axis=1)[:, 0]
+    lse = jax.scipy.special.logsumexp(o, axis=1)
+    return jnp.mean(lse - o_t)
+
+
+# ----------------------------------------------------------------------
+# LM entry points (each returns a tuple: loss first, then gradients)
+# ----------------------------------------------------------------------
+
+
+def lm_encode_entry(ctx_emb, wx, wh, b, proj, *, normalize=True):
+    return (lm_h(ctx_emb, wx, wh, b, proj, normalize=normalize),)
+
+
+def lm_train_sampled_entry(ctx_emb, wx, wh, b, proj, tgt_emb, neg_emb,
+                           adjust, mask, *, tau, normalize=True,
+                           absolute=False):
+    def loss_fn(ctx_emb, wx, wh, b, proj, tgt_emb, neg_emb):
+        h = lm_h(ctx_emb, wx, wh, b, proj, normalize=normalize)
+        return _sampled_loss_from_h(
+            h, tgt_emb, neg_emb, adjust, mask,
+            tau=tau, normalize=normalize, absolute=absolute,
+        )
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=tuple(range(7)))(
+        ctx_emb, wx, wh, b, proj, tgt_emb, neg_emb
+    )
+    return (loss, *grads)
+
+
+def lm_train_full_entry(ctx_emb, wx, wh, b, proj, cls, targets, *, tau,
+                        normalize=True, absolute=False):
+    def loss_fn(ctx_emb, wx, wh, b, proj, cls):
+        h = lm_h(ctx_emb, wx, wh, b, proj, normalize=normalize)
+        return _full_loss_from_h(
+            h, cls, targets, tau=tau, normalize=normalize, absolute=absolute
+        )
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=tuple(range(6)))(
+        ctx_emb, wx, wh, b, proj, cls
+    )
+    return (loss, *grads)
+
+
+def lm_eval_entry(ctx_emb, wx, wh, b, proj, cls, targets, *, tau,
+                  normalize=True):
+    h = lm_h(ctx_emb, wx, wh, b, proj, normalize=normalize)
+    return (
+        _full_loss_from_h(
+            h, cls, targets, tau=tau, normalize=normalize, absolute=False
+        ),
+    )
+
+
+# ----------------------------------------------------------------------
+# XC entry points
+# ----------------------------------------------------------------------
+
+
+def xc_train_sampled_entry(feat_emb, vals, tgt_emb, neg_emb, adjust, mask,
+                           *, tau, normalize=True, absolute=False):
+    def loss_fn(feat_emb, tgt_emb, neg_emb):
+        h = xc_h(feat_emb, vals, normalize=normalize)
+        return _sampled_loss_from_h(
+            h, tgt_emb, neg_emb, adjust, mask,
+            tau=tau, normalize=normalize, absolute=absolute,
+        )
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(
+        feat_emb, tgt_emb, neg_emb
+    )
+    return (loss, *grads)
+
+
+def xc_train_full_entry(feat_emb, vals, cls, targets, *, tau,
+                        normalize=True, absolute=False):
+    def loss_fn(feat_emb, cls):
+        h = xc_h(feat_emb, vals, normalize=normalize)
+        return _full_loss_from_h(
+            h, cls, targets, tau=tau, normalize=normalize, absolute=absolute
+        )
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(feat_emb, cls)
+    return (loss, *grads)
+
+
+def xc_scores_entry(feat_emb, vals, cls, *, tau, normalize=True):
+    h = xc_h(feat_emb, vals, normalize=normalize)
+    c = l2_normalize(cls) if normalize else cls
+    return (tau * (h @ c.T),)

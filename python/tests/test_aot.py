@@ -1,0 +1,84 @@
+"""AOT pipeline tests: manifest completeness, HLO-text validity, shape
+agreement between the manifest and the lowered computations."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    # Build only the tiny config to keep the test fast.
+    argv = sys.argv
+    sys.argv = ["aot", "--out", str(out), "--configs", "quickstart,rff_map"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    return out
+
+
+def load_manifest(out):
+    with open(os.path.join(out, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_exists_and_complete(built):
+    m = load_manifest(built)
+    names = set(m["artifacts"])
+    assert {
+        "rff_map",
+        "quickstart_encode",
+        "quickstart_train_sampled",
+        "quickstart_train_sampled_abs",
+        "quickstart_train_full",
+        "quickstart_eval",
+    } <= names
+
+
+def test_hlo_files_exist_and_are_text(built):
+    m = load_manifest(built)
+    for name, meta in m["artifacts"].items():
+        path = os.path.join(built, meta["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{name}: not HLO text"
+
+
+def test_manifest_shapes_match_eval_shape(built):
+    m = load_manifest(built)
+    a = m["artifacts"]["quickstart_train_sampled"]
+    cfg = aot.LM_CONFIGS["quickstart"]
+    by_name = {t["name"]: t for t in a["inputs"]}
+    assert by_name["ctx_emb"]["shape"] == [
+        cfg["batch"], cfg["seq_len"], cfg["d"],
+    ]
+    assert by_name["neg_emb"]["shape"] == [cfg["m"], cfg["d"]]
+    assert by_name["neg_mask"]["shape"] == [cfg["batch"], cfg["m"]]
+    outs = {t["name"]: t for t in a["outputs"]}
+    assert outs["loss"]["shape"] == []
+    assert outs["d_ctx_emb"]["shape"] == by_name["ctx_emb"]["shape"]
+    assert outs["d_neg_emb"]["shape"] == by_name["neg_emb"]["shape"]
+
+
+def test_meta_carries_model_dims(built):
+    m = load_manifest(built)
+    meta = m["artifacts"]["quickstart_train_sampled"]["meta"]
+    for k in ("kind", "n", "d", "hidden", "seq_len", "batch", "m", "tau"):
+        assert k in meta, k
+    assert meta["kind"] == "lm"
+
+
+def test_int_inputs_marked_i32(built):
+    m = load_manifest(built)
+    a = m["artifacts"]["quickstart_eval"]
+    by_name = {t["name"]: t for t in a["inputs"]}
+    assert by_name["targets"]["dtype"] == "i32"

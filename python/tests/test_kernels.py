@@ -1,0 +1,184 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+hypothesis sweeps shapes and value regimes; tolerances are f32-scale.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.rff_map import rff_map
+from compile.kernels.sampled_loss import sampled_softmax_loss
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ----------------------------------------------------------------------
+# rff_map
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows_mul=st.integers(1, 3),
+    d=st.sampled_from([8, 32, 64, 200]),
+    freq_mul=st.integers(1, 3),
+    scale=st.sampled_from([0.1, 1.0, 5.0]),
+)
+def test_rff_map_matches_ref(rows_mul, d, freq_mul, scale):
+    # Shapes must tile by the block sizes; the kernel clamps blocks to the
+    # array dims, so any multiple of min(128, dim) works.
+    rows = 128 * rows_mul
+    freqs = 128 * freq_mul
+    u = rand(1, (rows, d), scale)
+    w = rand(2, (freqs, d), scale)
+    got = rff_map(u, w)
+    want = ref.rff_map_ref(u, w)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_rff_map_small_shapes():
+    # Blocks clamp to small arrays.
+    u = rand(3, (16, 8))
+    w = rand(4, (32, 8))
+    got = rff_map(u, w)
+    np.testing.assert_allclose(got, ref.rff_map_ref(u, w), atol=1e-5)
+
+
+def test_rff_map_norm_is_one():
+    # ‖phi‖² = 1 exactly (cos²+sin²).
+    u = rand(5, (128, 16))
+    w = rand(6, (128, 16))
+    phi = rff_map(u, w)
+    np.testing.assert_allclose(
+        jnp.sum(phi * phi, axis=-1), jnp.ones(128), atol=1e-4
+    )
+
+
+def test_rff_map_unbiased_for_gaussian_kernel():
+    # E_w[phi(x)^T phi(y)] = exp(-nu ||x-y||^2 / 2) with w ~ N(0, nu I).
+    nu = 2.0
+    d = 16
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (1, d))
+    x = x / jnp.linalg.norm(x)
+    y = jax.random.normal(jax.random.PRNGKey(8), (1, d))
+    y = y / jnp.linalg.norm(y)
+    acc = 0.0
+    reps = 50
+    for r in range(reps):
+        w = jnp.sqrt(nu) * jax.random.normal(
+            jax.random.PRNGKey(100 + r), (256, d)
+        )
+        px = rff_map(x, w)
+        py = rff_map(y, w)
+        acc += float(jnp.sum(px * py))
+    est = acc / reps
+    exact = float(ref.gaussian_kernel_ref(x[0], y[0], nu))
+    assert abs(est - exact) < 0.05, f"{est} vs {exact}"
+
+
+# ----------------------------------------------------------------------
+# sampled_loss
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b_mul=st.integers(1, 2),
+    m=st.sampled_from([1, 7, 20, 100]),
+    logit_scale=st.sampled_from([0.5, 3.0, 12.0]),
+    with_mask=st.booleans(),
+)
+def test_sampled_loss_matches_ref(b_mul, m, logit_scale, with_mask):
+    b = 128 * b_mul
+    tgt = rand(11, (b,), logit_scale)
+    neg = rand(12, (b, m), logit_scale)
+    adjust = rand(13, (m,), 1.0)
+    if with_mask:
+        mask = (
+            jax.random.uniform(jax.random.PRNGKey(14), (b, m)) > 0.1
+        ).astype(jnp.float32)
+    else:
+        mask = jnp.ones((b, m), jnp.float32)
+    got = sampled_softmax_loss(tgt, neg, adjust, mask)
+    want = ref.sampled_loss_ref(tgt, neg, adjust, mask)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_sampled_loss_grads_match_ref():
+    b, m = 128, 50
+    tgt = rand(21, (b,), 2.0)
+    neg = rand(22, (b, m), 2.0)
+    adjust = rand(23, (m,), 0.5)
+    mask = jnp.ones((b, m), jnp.float32)
+
+    def mean_loss(t, n):
+        return jnp.mean(sampled_softmax_loss(t, n, adjust, mask))
+
+    def mean_loss_ref(t, n):
+        return jnp.mean(ref.sampled_loss_ref(t, n, adjust, mask))
+
+    g = jax.grad(mean_loss, argnums=(0, 1))(tgt, neg)
+    gr = jax.grad(mean_loss_ref, argnums=(0, 1))(tgt, neg)
+    np.testing.assert_allclose(g[0], gr[0], atol=1e-5)
+    np.testing.assert_allclose(g[1], gr[1], atol=1e-5)
+
+
+def test_sampled_loss_grad_vs_finite_difference():
+    b, m = 128, 5
+    tgt = rand(31, (b,), 1.0)
+    neg = rand(32, (b, m), 1.0)
+    adjust = jnp.zeros((m,))
+    mask = jnp.ones((b, m), jnp.float32)
+
+    def f(t):
+        return jnp.mean(sampled_softmax_loss(t, neg, adjust, mask))
+
+    g = jax.grad(f)(tgt)
+    eps = 1e-3
+    e0 = jnp.zeros_like(tgt).at[0].set(eps)
+    fd = (f(tgt + e0) - f(tgt - e0)) / (2 * eps)
+    assert abs(float(fd - g[0])) < 1e-3
+
+
+def test_sampled_loss_stability_large_logits():
+    b, m = 128, 10
+    tgt = jnp.full((b,), 500.0)
+    neg = jnp.full((b, m), 499.0)
+    adjust = jnp.zeros((m,))
+    mask = jnp.ones((b, m), jnp.float32)
+    loss = sampled_softmax_loss(tgt, neg, adjust, mask)
+    assert bool(jnp.all(jnp.isfinite(loss)))
+
+
+def test_mask_drops_entries():
+    # Masking every negative leaves loss = logsumexp([o_t]) - o_t = 0.
+    b, m = 128, 4
+    tgt = rand(41, (b,), 1.0)
+    neg = rand(42, (b, m), 1.0)
+    adjust = jnp.zeros((m,))
+    mask = jnp.zeros((b, m), jnp.float32)
+    loss = sampled_softmax_loss(tgt, neg, adjust, mask)
+    np.testing.assert_allclose(loss, jnp.zeros(b), atol=1e-5)
+
+
+def test_adjustment_shifts_partition():
+    # Uniform q = 1/n with n = m makes adjustment log(m/m)=0 a no-op;
+    # doubling q (adjust += ln 2) must lower each negative's weight.
+    b, m = 128, 8
+    tgt = rand(51, (b,), 1.0)
+    neg = rand(52, (b, m), 1.0)
+    mask = jnp.ones((b, m), jnp.float32)
+    l0 = sampled_softmax_loss(tgt, neg, jnp.zeros((m,)), mask)
+    l1 = sampled_softmax_loss(
+        tgt, neg, jnp.full((m,), float(np.log(2.0))), mask
+    )
+    assert bool(jnp.all(l1 <= l0 + 1e-6))

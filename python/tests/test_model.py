@@ -1,0 +1,182 @@
+"""L2 model entry points: shapes, gradients, and loss semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, L, D, H, M, N, NNZ = 16, 8, 32, 64, 20, 100, 6
+TAU = 1.0 / 0.09
+
+
+def key(i):
+    return jax.random.PRNGKey(i)
+
+
+@pytest.fixture(scope="module")
+def lm_inputs():
+    return dict(
+        ctx_emb=0.1 * jax.random.normal(key(1), (B, L, D)),
+        wx=0.05 * jax.random.normal(key(2), (D, 4 * H)),
+        wh=0.05 * jax.random.normal(key(3), (H, 4 * H)),
+        b=jnp.zeros((4 * H,)),
+        proj=0.1 * jax.random.normal(key(4), (H, D)),
+    )
+
+
+def test_lm_encode_is_normalized(lm_inputs):
+    (h,) = model.lm_encode_entry(**lm_inputs)
+    assert h.shape == (B, D)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(h, axis=-1), jnp.ones(B), atol=1e-5
+    )
+
+
+def test_lm_train_sampled_shapes_and_grads(lm_inputs):
+    tgt = jax.random.normal(key(5), (B, D))
+    neg = jax.random.normal(key(6), (M, D))
+    adjust = jnp.zeros((M,))
+    mask = jnp.ones((B, M))
+    out = model.lm_train_sampled_entry(
+        *lm_inputs.values(), tgt, neg, adjust, mask, tau=TAU
+    )
+    loss, d_ctx, d_wx, d_wh, d_b, d_proj, d_tgt, d_neg = out
+    assert loss.shape == ()
+    assert float(loss) > 0
+    assert d_ctx.shape == (B, L, D)
+    assert d_wx.shape == (D, 4 * H)
+    assert d_wh.shape == (H, 4 * H)
+    assert d_b.shape == (4 * H,)
+    assert d_proj.shape == (H, D)
+    assert d_tgt.shape == (B, D)
+    assert d_neg.shape == (M, D)
+    # Target gradient should pull h toward the target: for normalized
+    # embeddings, d_tgt must be non-zero.
+    assert float(jnp.max(jnp.abs(d_tgt))) > 0
+
+
+def test_lm_full_loss_close_to_sampled_with_exhaustive_negatives(lm_inputs):
+    """Sampled loss with ALL negatives at exact-uniform q == full loss."""
+    n_small = M + 1  # target + M negatives covers the whole class set
+    cls = jax.random.normal(key(7), (n_small, D))
+    targets = jnp.zeros((B,), jnp.int32)  # class 0 for everyone
+    out_full = model.lm_train_full_entry(
+        *lm_inputs.values(), cls, targets, tau=TAU
+    )
+    loss_full = out_full[0]
+
+    # Negatives = classes 1..M with q = 1/M each.
+    tgt_emb = jnp.broadcast_to(cls[0], (B, D))
+    neg_emb = cls[1:]
+    adjust = jnp.log(jnp.full((M,), M * (1.0 / M)))
+    mask = jnp.ones((B, M))
+    out_sampled = model.lm_train_sampled_entry(
+        *lm_inputs.values(), tgt_emb, neg_emb, adjust, mask, tau=TAU
+    )
+    loss_sampled = out_sampled[0]
+    np.testing.assert_allclose(
+        float(loss_full), float(loss_sampled), rtol=1e-5
+    )
+
+
+def test_lm_eval_matches_train_full_loss(lm_inputs):
+    cls = jax.random.normal(key(8), (N, D))
+    targets = jnp.arange(B, dtype=jnp.int32)
+    (loss_eval,) = model.lm_eval_entry(
+        *lm_inputs.values(), cls, targets, tau=TAU
+    )
+    out_full = model.lm_train_full_entry(
+        *lm_inputs.values(), cls, targets, tau=TAU
+    )
+    np.testing.assert_allclose(
+        float(loss_eval), float(out_full[0]), rtol=1e-6
+    )
+
+
+def test_absolute_variant_differs(lm_inputs):
+    cls = jax.random.normal(key(9), (N, D))
+    targets = jnp.arange(B, dtype=jnp.int32)
+    normal = model.lm_train_full_entry(
+        *lm_inputs.values(), cls, targets, tau=TAU, absolute=False
+    )[0]
+    absolute = model.lm_train_full_entry(
+        *lm_inputs.values(), cls, targets, tau=TAU, absolute=True
+    )[0]
+    assert abs(float(normal) - float(absolute)) > 1e-6
+
+
+def test_unnormalized_variant_differs(lm_inputs):
+    cls = jax.random.normal(key(10), (N, D))
+    targets = jnp.arange(B, dtype=jnp.int32)
+    norm = model.lm_eval_entry(
+        *lm_inputs.values(), cls, targets, tau=TAU, normalize=True
+    )[0]
+    unnorm = model.lm_eval_entry(
+        *lm_inputs.values(), cls, targets, tau=TAU, normalize=False
+    )[0]
+    assert abs(float(norm) - float(unnorm)) > 1e-6
+
+
+# ----------------------------------------------------------------------
+# XC model
+# ----------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def xc_inputs():
+    return dict(
+        feat_emb=0.2 * jax.random.normal(key(11), (B, NNZ, D)),
+        vals=jnp.ones((B, NNZ)),
+    )
+
+
+def test_xc_h_is_normalized(xc_inputs):
+    h = model.xc_h(**xc_inputs)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(h, axis=-1), jnp.ones(B), atol=1e-5
+    )
+
+
+def test_xc_train_sampled_shapes(xc_inputs):
+    tgt = jax.random.normal(key(12), (B, D))
+    neg = jax.random.normal(key(13), (M, D))
+    out = model.xc_train_sampled_entry(
+        xc_inputs["feat_emb"], xc_inputs["vals"], tgt, neg,
+        jnp.zeros((M,)), jnp.ones((B, M)), tau=TAU,
+    )
+    loss, d_feat, d_tgt, d_neg = out
+    assert loss.shape == ()
+    assert d_feat.shape == (B, NNZ, D)
+    assert d_tgt.shape == (B, D)
+    assert d_neg.shape == (M, D)
+
+
+def test_xc_scores_shape_and_ordering(xc_inputs):
+    cls = jax.random.normal(key(14), (N, D))
+    (scores,) = model.xc_scores_entry(
+        xc_inputs["feat_emb"], xc_inputs["vals"], cls, tau=TAU
+    )
+    assert scores.shape == (B, N)
+    # Scores must equal tau * <h, normalized class>.
+    h = model.xc_h(**xc_inputs)
+    c = cls / jnp.linalg.norm(cls, axis=-1, keepdims=True)
+    np.testing.assert_allclose(scores, TAU * h @ c.T, rtol=1e-4, atol=1e-4)
+
+
+def test_xc_full_gradient_rows_are_sparse_for_targets(xc_inputs):
+    # Classes never appearing as the target still receive gradient through
+    # the partition function, but the target rows must dominate.
+    cls = 0.1 * jax.random.normal(key(15), (N, D))
+    targets = jnp.zeros((B,), jnp.int32)
+    out = model.xc_train_full_entry(
+        xc_inputs["feat_emb"], xc_inputs["vals"], cls, targets, tau=TAU
+    )
+    d_cls = out[2]
+    row_norms = jnp.linalg.norm(d_cls, axis=-1)
+    assert float(row_norms[0]) == pytest.approx(
+        float(jnp.max(row_norms)), rel=1e-3
+    )

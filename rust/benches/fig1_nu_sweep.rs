@@ -1,0 +1,61 @@
+//! Figure 1 reproduction: validation perplexity on the PTB-scale corpus
+//! for RF-softmax with varying Gaussian-kernel temperature T = 1/√ν
+//! (D = 1024, m = 100).
+//!
+//! Paper shape: the best curve sits at T = 0.5 (ν < τ, the bias/variance
+//! trade-off of §3.3); T too large (≈1.0, weak kernel) and T too small
+//! (= 0.3 = the softmax temperature, high variance) are both worse.
+//!
+//! Run: `cargo bench --bench fig1_nu_sweep` (RFSM_BENCH_STEPS scales it)
+
+use rfsoftmax::benchkit::bench_header;
+use rfsoftmax::coordinator::harness::{
+    bench_steps, config_from, curves_table, train_once,
+};
+use rfsoftmax::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    bench_header("F1", "RF-softmax ν sweep on PTB (paper Figure 1)");
+    let runtime = Runtime::load(Runtime::default_dir())?;
+    let steps = bench_steps(400);
+    let eval_every = (steps / 4).max(1);
+
+    let mut runs = Vec::new();
+    for t in ["0.3", "0.4", "0.5", "0.7", "1.0"] {
+        let cfg = config_from(&[
+            ("sampler.kind", "rff".into()),
+            ("sampler.num_negatives", "100".into()),
+            ("sampler.dim", "1024".into()),
+            ("sampler.T", t.into()),
+            ("train.steps", steps.to_string()),
+            ("train.eval_every", eval_every.to_string()),
+            ("train.eval_batches", "4".into()),
+            ("train.lr", "0.5".into()),
+            ("data.train_size", "120000".into()),
+            ("data.valid_size", "10000".into()),
+        ])?;
+        let r = train_once(&runtime, "ptb", &format!("T={t}"), cfg)?;
+        runs.push((format!("T={t}"), r));
+    }
+
+    println!(
+        "\n{}",
+        curves_table(
+            "Figure 1 — validation perplexity vs step, varying T = 1/√ν \
+             (PTB-scale, D=1024, m=100)",
+            &runs
+        )
+        .render()
+    );
+    let best = runs
+        .iter()
+        .min_by(|a, b| {
+            a.1.final_metric.partial_cmp(&b.1.final_metric).unwrap()
+        })
+        .unwrap();
+    println!(
+        "best T: {} (paper: T = 0.5; some ν < τ must win over T = 0.3)",
+        best.0
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Figure 2 reproduction: validation perplexity on the PTB-scale corpus
+//! for RF-softmax with varying feature dimension D (m = 100, T = 0.5).
+//!
+//! Paper shape: quality improves monotonically with D, approaching the
+//! FULL/EXP curve as D grows (Theorem 2: the q↔p approximation tightens
+//! as √D).
+//!
+//! Run: `cargo bench --bench fig2_dim_sweep`
+
+use rfsoftmax::benchkit::bench_header;
+use rfsoftmax::coordinator::harness::{
+    bench_steps, config_from, curves_table, train_once,
+};
+use rfsoftmax::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    bench_header("F2", "RF-softmax D sweep on PTB (paper Figure 2)");
+    let runtime = Runtime::load(Runtime::default_dir())?;
+    let steps = bench_steps(400);
+    let eval_every = (steps / 4).max(1);
+
+    let mut runs = Vec::new();
+    for d in ["64", "256", "1024", "4096"] {
+        let cfg = config_from(&[
+            ("sampler.kind", "rff".into()),
+            ("sampler.num_negatives", "100".into()),
+            ("sampler.dim", d.into()),
+            ("sampler.T", "0.5".into()),
+            ("train.steps", steps.to_string()),
+            ("train.eval_every", eval_every.to_string()),
+            ("train.eval_batches", "4".into()),
+            ("train.lr", "0.5".into()),
+            ("data.train_size", "120000".into()),
+            ("data.valid_size", "10000".into()),
+        ])?;
+        let r = train_once(&runtime, "ptb", &format!("D={d}"), cfg)?;
+        runs.push((format!("D={d}"), r));
+    }
+    // Reference: EXP (sampling from the exact softmax = D → ∞ limit).
+    let cfg = config_from(&[
+        ("sampler.kind", "exact".into()),
+        ("sampler.num_negatives", "100".into()),
+        ("train.steps", steps.to_string()),
+        ("train.eval_every", eval_every.to_string()),
+        ("train.eval_batches", "4".into()),
+        ("train.lr", "0.5".into()),
+        ("data.train_size", "120000".into()),
+        ("data.valid_size", "10000".into()),
+    ])?;
+    let r = train_once(&runtime, "ptb", "exp", cfg)?;
+    runs.push(("EXP (D→∞)".into(), r));
+
+    println!(
+        "\n{}",
+        curves_table(
+            "Figure 2 — validation perplexity vs step, varying D \
+             (PTB-scale, m=100, T=0.5)",
+            &runs
+        )
+        .render()
+    );
+    println!("shape check: larger D → lower curve, approaching EXP.");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Figure 3 reproduction: RF-softmax vs baselines on the PTB-scale corpus
+//! (m = 100, validation perplexity vs training progress).
+//!
+//! Paper shape: EXP ≈ FULL (sampling from the exact softmax loses almost
+//! nothing); RFF (D=1024) close behind and clearly better than QUADRATIC
+//! and UNIFORM.
+//!
+//! Run: `cargo bench --bench fig3_ptb_baselines`
+
+use rfsoftmax::benchkit::bench_header;
+use rfsoftmax::coordinator::harness::{
+    bench_steps, config_from, curves_table, train_once,
+};
+use rfsoftmax::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    bench_header("F3", "sampler comparison on PTB (paper Figure 3)");
+    let runtime = Runtime::load(Runtime::default_dir())?;
+    let steps = bench_steps(400);
+    let eval_every = (steps / 4).max(1);
+
+    let mut runs = Vec::new();
+    for kind in ["full", "exact", "rff", "quadratic", "uniform"] {
+        let cfg = config_from(&[
+            ("sampler.kind", kind.into()),
+            ("sampler.num_negatives", "100".into()),
+            ("sampler.dim", "2048".into()),
+            ("sampler.T", "0.5".into()),
+            ("train.steps", steps.to_string()),
+            ("train.eval_every", eval_every.to_string()),
+            ("train.eval_batches", "4".into()),
+            ("train.lr", "0.5".into()),
+            ("data.train_size", "120000".into()),
+            ("data.valid_size", "10000".into()),
+        ])?;
+        let label = match kind {
+            "exact" => "EXP",
+            k => k,
+        };
+        let r = train_once(&runtime, "ptb", label, cfg)?;
+        runs.push((label.to_uppercase(), r));
+    }
+
+    println!(
+        "\n{}",
+        curves_table(
+            "Figure 3 — validation perplexity vs step on PTB-scale \
+             (m=100, RFF D=2048)",
+            &runs
+        )
+        .render()
+    );
+    println!(
+        "shape check: EXP ≈ FULL; RFF close to EXP; RFF < QUADRATIC; \
+         UNIFORM worst."
+    );
+    Ok(())
+}

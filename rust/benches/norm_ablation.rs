@@ -1,0 +1,84 @@
+//! §4.2 normalization ablation (the paper's "Normalized vs. unnormalized
+//! embeddings" paragraph): train the FULL-softmax model with and without
+//! L2-normalized embeddings on the PTB-scale corpus and the AmazonCat
+//! stand-in.
+//!
+//! Paper result: PTB valid ppl 120 (normalized) vs 126 (unnormalized)
+//! after 10 epochs; AmazonCat P@1 87% for both. Shape: normalization never
+//! hurts, helps on the LM.
+//!
+//! Run: `cargo bench --bench norm_ablation`
+
+use anyhow::Result;
+use rfsoftmax::benchkit::bench_header;
+use rfsoftmax::coordinator::harness::{bench_steps, config_from};
+use rfsoftmax::coordinator::{Trainer, TrainerBuilder};
+use rfsoftmax::runtime::Runtime;
+use rfsoftmax::tables::Table;
+
+fn main() -> Result<()> {
+    bench_header("N1", "normalized vs unnormalized embeddings (paper §4.2)");
+    let runtime = Runtime::load(Runtime::default_dir())?;
+    let steps = bench_steps(400);
+
+    // --- LM (PTB-scale) -------------------------------------------------
+    let mut t = Table::new(
+        "PTB-scale FULL softmax: normalized vs unnormalized",
+        &["variant", "valid ppl", "paper"],
+    );
+    for (unnorm, label, paper) in
+        [(false, "normalized", "120"), (true, "unnormalized", "126")]
+    {
+        let cfg = config_from(&[
+            ("sampler.kind", "full".into()),
+            ("train.steps", steps.to_string()),
+            ("train.eval_every", steps.to_string()),
+            ("train.eval_batches", "6".into()),
+            ("train.lr", "0.5".into()),
+            ("data.train_size", "120000".into()),
+            ("data.valid_size", "10000".into()),
+        ])?;
+        let mut trainer = TrainerBuilder::new(&runtime, "ptb", cfg)
+            .unnormalized(unnorm)
+            .build()?;
+        let r = trainer.run()?;
+        println!("  [{label}] ppl {:.1}", r.final_metric);
+        t.row(&[
+            label.into(),
+            format!("{:.1}", r.final_metric),
+            paper.into(),
+        ]);
+    }
+    println!("\n{}", t.render());
+
+    // --- XC (AmazonCat stand-in) ----------------------------------------
+    let mut t2 = Table::new(
+        "AmazonCat-13K-shape FULL softmax: normalized vs unnormalized",
+        &["variant", "P@1", "paper"],
+    );
+    for (unnorm, label) in [(false, "normalized"), (true, "unnormalized")] {
+        let cfg = config_from(&[
+            ("sampler.kind", "full".into()),
+            ("train.steps", (steps * 3).to_string()),
+            ("train.eval_every", (steps * 3).to_string()),
+            ("train.eval_batches", "8".into()),
+            ("train.lr", "1.0".into()),
+            ("data.train_size", "12000".into()),
+            ("data.valid_size", "1024".into()),
+            ("data.noise", "0.15".into()),
+        ])?;
+        let mut trainer = TrainerBuilder::new(&runtime, "xc_amazon", cfg)
+            .unnormalized(unnorm)
+            .build()?;
+        trainer.run()?;
+        let (p1, _, _) = match &mut trainer {
+            Trainer::Xc(x) => x.final_precisions()?,
+            _ => unreachable!(),
+        };
+        println!("  [{label}] P@1 {p1:.3}");
+        t2.row(&[label.into(), format!("{p1:.2}"), "0.87".into()]);
+    }
+    println!("\n{}", t2.render());
+    println!("shape check: normalized ≤ unnormalized ppl on the LM; P@1 ≈ equal on XC.");
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! Hot-path microbenchmarks for the §Perf optimization loop (DESIGN.md
+//! §7): the L3 operations that sit on every training step.
+//!
+//! * kernel-tree `sample` / `update` at several (n, D),
+//! * feature maps: classic RFF vs ORF vs SORF (O(Dd) vs O(D log d)),
+//! * sampled-softmax loss oracle,
+//! * batch negative-draw path as the coordinator runs it.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use rfsoftmax::benchkit::{bench_header, black_box, Bencher};
+use rfsoftmax::featmap::{FeatureMap, OrfMap, RffMap, SorfMap};
+use rfsoftmax::linalg::{unit_vector, Matrix};
+use rfsoftmax::rng::Rng;
+use rfsoftmax::sampler::{KernelTree, RffSampler, Sampler};
+use rfsoftmax::softmax::sampled_softmax_loss;
+use std::time::Duration;
+
+fn main() {
+    bench_header("PERF", "L3 hot-path microbenchmarks");
+    let b = Bencher {
+        warmup: Duration::from_millis(100),
+        budget: Duration::from_millis(600),
+        samples: 12,
+    };
+
+    // ------------------------------------------------------------------
+    // Feature maps (φ computation): RFF vs ORF vs SORF.
+    // ------------------------------------------------------------------
+    println!("\n# feature maps (d=128)");
+    let mut rng = Rng::seeded(1);
+    let d = 128;
+    let u = unit_vector(&mut rng, d);
+    for nf in [256usize, 1024, 4096] {
+        let rff = RffMap::new(d, nf, 4.0, &mut rng);
+        let orf = OrfMap::new(d, nf, 4.0, &mut rng);
+        let sorf = SorfMap::new(d, nf, 4.0, &mut rng);
+        let mut out = vec![0.0f32; rff.output_dim()];
+        println!("{}", b.run(&format!("rff_map D={nf}"), || {
+            rff.map_into(&u, &mut out);
+            black_box(out[0])
+        }).report());
+        println!("{}", b.run(&format!("orf_map D={nf}"), || {
+            orf.map_into(&u, &mut out);
+            black_box(out[0])
+        }).report());
+        println!("{}", b.run(&format!("sorf_map D={nf}"), || {
+            sorf.map_into(&u, &mut out);
+            black_box(out[0])
+        }).report());
+    }
+
+    // ------------------------------------------------------------------
+    // Kernel tree: sample + update at several scales.
+    // ------------------------------------------------------------------
+    println!("\n# kernel tree (query dim = 2D feature coords)");
+    for (n, nf) in [(10_000usize, 128usize), (10_000, 512), (100_000, 128)] {
+        let dim = 2 * nf;
+        let mut rng = Rng::seeded(2);
+        let mut tree = KernelTree::new(n, dim, 1e-8);
+        let mut phi = vec![0.0f32; dim];
+        for i in 0..n {
+            rng.fill_gaussian_f32(&mut phi);
+            tree.add_leaf(i, &phi);
+        }
+        let mut z = vec![0.0f32; dim];
+        rng.fill_gaussian_f32(&mut z);
+        let mut sample_rng = Rng::seeded(3);
+        println!("{}", b.run(&format!("tree_sample n={n} D'={dim}"), || {
+            black_box(tree.sample(&z, &mut sample_rng))
+        }).report());
+        let mut delta = vec![0.0f32; dim];
+        rng.fill_gaussian_f32(&mut delta);
+        let mut i = 0usize;
+        println!("{}", b.run(&format!("tree_update n={n} D'={dim}"), || {
+            i = (i + 1) % n;
+            tree.update_leaf(i, &delta);
+            black_box(i)
+        }).report());
+    }
+
+    // ------------------------------------------------------------------
+    // Full coordinator negative-draw path (φ(h) + m tree draws).
+    // ------------------------------------------------------------------
+    println!("\n# negative-draw path (n=10k, d=64, m=100)");
+    let mut rng = Rng::seeded(4);
+    let classes = Matrix::randn(&mut rng, 10_000, 64).l2_normalized_rows();
+    for nf in [256usize, 1024] {
+        let sampler = RffSampler::new(&classes, nf, 4.0, &mut rng);
+        let h = unit_vector(&mut rng, 64);
+        let mut draw_rng = Rng::seeded(5);
+        println!("{}", b.run(&format!("rff_draw m=100 D={nf}"), || {
+            black_box(sampler.sample(&h, 100, &mut draw_rng))
+        }).report());
+    }
+
+    // §Perf A/B: memoized batch walk vs m independent walks on the raw
+    // tree (the optimization's before/after, recorded in EXPERIMENTS.md).
+    println!("\n# tree batch-draw memoization A/B (n=10k, D'=2048, m=100)");
+    {
+        let dim = 2048;
+        let n = 10_000;
+        let mut rng = Rng::seeded(9);
+        let mut tree = KernelTree::new(n, dim, 1e-8);
+        let mut phi = vec![0.0f32; dim];
+        for i in 0..n {
+            rng.fill_gaussian_f32(&mut phi);
+            tree.add_leaf(i, &phi);
+        }
+        let mut z = vec![0.0f32; dim];
+        rng.fill_gaussian_f32(&mut z);
+        let mut r1 = Rng::seeded(10);
+        println!("{}", b.run("sample_many m=100 (memo, after)", || {
+            black_box(tree.sample_many(&z, 100, &mut r1))
+        }).report());
+        let mut r2 = Rng::seeded(10);
+        println!("{}", b.run("sample_many m=100 (nomemo, before)", || {
+            black_box(tree.sample_many_nomemo(&z, 100, &mut r2))
+        }).report());
+    }
+
+    // ------------------------------------------------------------------
+    // Loss oracle (rust-side, used by the bias harness + table2).
+    // ------------------------------------------------------------------
+    println!("\n# sampled-softmax loss oracle");
+    let mut rng = Rng::seeded(6);
+    for m in [10usize, 100, 1000] {
+        let negs: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let q: Vec<f64> = (0..m).map(|_| rng.f64_open()).collect();
+        println!("{}", b.run(&format!("loss m={m}"), || {
+            black_box(sampled_softmax_loss(0.5, &negs, &q).loss)
+        }).report());
+    }
+}

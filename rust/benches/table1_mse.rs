@@ -1,0 +1,105 @@
+//! Table 1 reproduction: MSE of approximating the exponential kernel
+//! `exp(τ·hᵀc)` on USPS-like normalized data (d = 256).
+//!
+//! Paper rows: Quadratic D=256² (2.8e-3), RFF D=100/1000/256²
+//! (2.6e-3 / 2.7e-4 / 5.5e-6), Random Maclaurin D=256² (8.8e-2).
+//! The *shape* to reproduce: RFF ≪ Quadratic at equal D; RFF MSE ∝ 1/D;
+//! Maclaurin worst by orders of magnitude at practical D.
+//!
+//! Run: `cargo bench --bench table1_mse`
+
+use rfsoftmax::benchkit::bench_header;
+use rfsoftmax::data::usps_like::{pairs, UspsLikeParams};
+use rfsoftmax::featmap::{
+    exp_kernel, FeatureMap, MaclaurinMap, OrfMap, QuadraticMap, RffMap,
+    SorfMap,
+};
+use rfsoftmax::rng::Rng;
+use rfsoftmax::tables::{fmt_sci, Table};
+
+fn mse_for(
+    map: &dyn FeatureMap,
+    scale: f64,
+    tau: f32,
+    ps: &[(Vec<f32>, Vec<f32>)],
+) -> f64 {
+    let mut se = 0.0;
+    for (x, y) in ps {
+        let e = exp_kernel(tau, x, y) - scale * map.approx_kernel(x, y);
+        se += e * e;
+    }
+    se / ps.len() as f64
+}
+
+fn main() {
+    bench_header("T1", "kernel-approximation MSE (paper Table 1)");
+    let d = 256;
+    let tau = 1.0f32;
+    let n_pairs: usize = std::env::var("RFSM_T1_PAIRS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    let mut rng = Rng::seeded(1);
+    let ps = pairs(&UspsLikeParams::default(), 512, n_pairs, &mut rng);
+    let scale = (tau as f64).exp(); // RFF estimates e^{-ν}·exp-kernel
+
+    let mut t = Table::new(
+        &format!("Table 1 — MSE approximating exp(τhᵀc), τ={tau}, d={d}, {n_pairs} pairs"),
+        &["Method", "D", "MSE", "paper"],
+    );
+
+    let quad = QuadraticMap::fit(d, &ps, |x, y| exp_kernel(tau, x, y));
+    t.row(&[
+        "Quadratic (fit α,β)".into(),
+        format!("{}", d * d),
+        fmt_sci(mse_for(&quad, 1.0, tau, &ps)),
+        "2.8e-3".into(),
+    ]);
+    let quad_fixed = QuadraticMap::new(d, 100.0, 1.0);
+    t.row(&[
+        "Quadratic (α=100)".into(),
+        format!("{}", d * d),
+        fmt_sci(mse_for(&quad_fixed, 1.0, tau, &ps)),
+        "(larger)".into(),
+    ]);
+
+    for (dd, paper) in [(100usize, "2.6e-3"), (1000, "2.7e-4"), (d * d, "5.5e-6")] {
+        let m = RffMap::new(d, dd, tau, &mut rng);
+        t.row(&[
+            "Random Fourier".into(),
+            format!("{dd}"),
+            fmt_sci(mse_for(&m, scale, tau, &ps)),
+            paper.into(),
+        ]);
+    }
+
+    // Extensions beyond the paper's table: ORF/SORF at D=1000.
+    let orf = OrfMap::new(d, 1000, tau, &mut rng);
+    t.row(&[
+        "Orthogonal RF (ext)".into(),
+        "1000".into(),
+        fmt_sci(mse_for(&orf, scale, tau, &ps)),
+        "-".into(),
+    ]);
+    let sorf = SorfMap::new(d, 1000, tau, &mut rng);
+    t.row(&[
+        "Structured ORF (ext)".into(),
+        "1000".into(),
+        fmt_sci(mse_for(&sorf, scale, tau, &ps)),
+        "-".into(),
+    ]);
+
+    let mac = MaclaurinMap::new(d, d * d, tau, &mut rng);
+    t.row(&[
+        "Random Maclaurin".into(),
+        format!("{}", d * d),
+        fmt_sci(mse_for(&mac, 1.0, tau, &ps)),
+        "8.8e-2".into(),
+    ]);
+
+    println!("{}", t.render());
+    println!(
+        "shape check: RFF(1000) < RFF(100); RFF(100) ≤ Quadratic(fit); \
+         Maclaurin worst."
+    );
+}

@@ -1,0 +1,164 @@
+//! Table 2 reproduction: wall time to compute the sampled-softmax loss
+//! for one batch (batch = 10, m = 10, d = 64) under each model-dependent
+//! sampling method, at n = 10,000 and n = 500,000.
+//!
+//! Paper rows (ms): n=10k — EXP 1.4, QUADRATIC 6.5, RFF(50/200/500/1000)
+//! 0.5/0.6/1.2/1.4; n=500k — EXP 32.3, QUADRATIC 8.2, RFF 1.6/1.7/2.0/2.4.
+//! Shape to reproduce: EXP grows linearly in n and loses badly at 500k;
+//! RFF stays ~flat in n (log n) and scales mildly with D; QUADRATIC sits
+//! well above RFF at the same n (its D is d² = 4096).
+//!
+//! `RFSM_QUICK=1` limits to n = 10,000 (the 500k tree builds take ~1 min
+//! on this single-core box and are reported separately as build time).
+//!
+//! Run: `cargo bench --bench table2_walltime`
+
+use rfsoftmax::benchkit::{bench_header, black_box, Bencher};
+use rfsoftmax::linalg::{unit_vector, Matrix};
+use rfsoftmax::rng::Rng;
+use rfsoftmax::sampler::{
+    BucketKernelSampler, ExactSoftmaxSampler, RffSampler, Sampler,
+};
+use rfsoftmax::softmax::sampled_softmax_loss;
+use rfsoftmax::tables::Table;
+use std::time::Duration;
+
+const BATCH: usize = 10;
+const M: usize = 10;
+const D_EMB: usize = 64;
+const TAU: f32 = 4.0;
+
+/// One "compute sampled softmax loss" unit, as the paper times it:
+/// draw m negatives for the batch query, adjust, evaluate the loss for
+/// every example in the batch.
+fn loss_once(
+    sampler: &dyn Sampler,
+    queries: &[Vec<f32>],
+    classes: &Matrix,
+    rng: &mut Rng,
+) -> f64 {
+    let q0 = &queries[0];
+    let draw = sampler.sample(q0, M, rng);
+    let mut acc = 0.0;
+    for h in queries {
+        let o_t = (TAU * rfsoftmax::linalg::dot(h, classes.row(0))) as f64;
+        let negs: Vec<f64> = draw
+            .ids
+            .iter()
+            .map(|&i| {
+                (TAU * rfsoftmax::linalg::dot(h, classes.row(i as usize)))
+                    as f64
+            })
+            .collect();
+        acc += sampled_softmax_loss(o_t, &negs, &draw.probs).loss;
+    }
+    acc
+}
+
+fn bench_method(
+    b: &Bencher,
+    name: &str,
+    sampler: &dyn Sampler,
+    classes: &Matrix,
+    build_secs: f64,
+    table: &mut Table,
+    paper: &str,
+) {
+    let mut rng = Rng::seeded(77);
+    let queries: Vec<Vec<f32>> =
+        (0..BATCH).map(|_| unit_vector(&mut rng, D_EMB)).collect();
+    let mut sample_rng = Rng::seeded(78);
+    let s = b.run(name, || {
+        black_box(loss_once(sampler, &queries, classes, &mut sample_rng))
+    });
+    println!("  {}", s.report());
+    table.row(&[
+        name.to_string(),
+        format!("{:.2} ms", s.mean() * 1e3),
+        paper.to_string(),
+        format!("{build_secs:.1} s"),
+    ]);
+}
+
+fn run_for_n(n: usize, paper: &[(&str, &str)]) {
+    println!("\n-- n = {n} --");
+    let mut rng = Rng::seeded(7);
+    let classes = Matrix::randn(&mut rng, n, D_EMB).l2_normalized_rows();
+    let b = Bencher {
+        warmup: Duration::from_millis(100),
+        budget: Duration::from_millis(800),
+        samples: 10,
+    };
+    let mut table = Table::new(
+        &format!("Table 2 — sampled-softmax loss wall time, n={n} (batch=10, m=10, d=64)"),
+        &["Method", "wall", "paper", "build"],
+    );
+
+    // EXP: exact softmax sampling, O(dn).
+    let t0 = std::time::Instant::now();
+    let exact = ExactSoftmaxSampler::new(&classes, TAU);
+    bench_method(&b, "Exp", &exact, &classes, t0.elapsed().as_secs_f64(), &mut table, paper[0].1);
+
+    // QUADRATIC: kernel tree with D = d²+1 (bucketed at large n).
+    let t0 = std::time::Instant::now();
+    if n <= 100_000 {
+        let quad = rfsoftmax::sampler::QuadraticSampler::new(&classes, 100.0, 1.0);
+        bench_method(&b, "Quadratic", &quad, &classes, t0.elapsed().as_secs_f64(), &mut table, paper[1].1);
+    } else {
+        let map = rfsoftmax::featmap::QuadraticMap::new(D_EMB, 100.0, 1.0);
+        let quad = BucketKernelSampler::with_map(&classes, map, 1024, "quadratic");
+        bench_method(&b, "Quadratic (bucketed)", &quad, &classes, t0.elapsed().as_secs_f64(), &mut table, paper[1].1);
+    }
+
+    // RFF at D = 50, 200, 500, 1000.
+    for (idx, dd) in [50usize, 200, 500, 1000].iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        let mut seed_rng = Rng::seeded(100 + *dd as u64);
+        let rff = RffSampler::new(&classes, *dd, TAU, &mut seed_rng);
+        bench_method(
+            &b,
+            &format!("Rff (D={dd})"),
+            &rff,
+            &classes,
+            t0.elapsed().as_secs_f64(),
+            &mut table,
+            paper[2 + idx].1,
+        );
+    }
+
+    println!("\n{}", table.render());
+}
+
+fn main() {
+    bench_header("T2", "sampling wall time (paper Table 2)");
+    run_for_n(
+        10_000,
+        &[
+            ("Exp", "1.4 ms"),
+            ("Quadratic", "6.5 ms"),
+            ("Rff50", "0.5 ms"),
+            ("Rff200", "0.6 ms"),
+            ("Rff500", "1.2 ms"),
+            ("Rff1000", "1.4 ms"),
+        ],
+    );
+    if std::env::var("RFSM_QUICK").is_err() {
+        run_for_n(
+            500_000,
+            &[
+                ("Exp", "32.3 ms"),
+                ("Quadratic", "8.2 ms"),
+                ("Rff50", "1.6 ms"),
+                ("Rff200", "1.7 ms"),
+                ("Rff500", "2.0 ms"),
+                ("Rff1000", "2.4 ms"),
+            ],
+        );
+    } else {
+        println!("(RFSM_QUICK set: skipping n = 500,000)");
+    }
+    println!(
+        "shape check: Exp ≈ linear in n; Rff ≈ flat in n, mild in D; \
+         Quadratic ≫ Rff at both n."
+    );
+}

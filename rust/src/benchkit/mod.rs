@@ -1,0 +1,214 @@
+//! Benchmark harness (criterion substitute, DESIGN.md §2).
+//!
+//! Features: warmup, adaptive iteration counts targeting a measurement
+//! budget, mean / p50 / p95 / stddev over per-iteration samples, throughput
+//! reporting, and a `black_box` to defeat constant folding. All bench
+//! targets (`rust/benches/*.rs`, `harness = false`) print through this.
+
+use std::hint;
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    hint::black_box(x)
+}
+
+/// One benchmark's collected samples (seconds per iteration).
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl Summary {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let var = self
+            .samples
+            .iter()
+            .map(|&x| (x - m) * (x - m))
+            .sum::<f64>()
+            / (self.samples.len().max(2) - 1) as f64;
+        var.sqrt()
+    }
+
+    fn sorted(&self) -> Vec<f64> {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        let s = self.sorted();
+        let idx = ((s.len() - 1) as f64 * q).round() as usize;
+        s[idx]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted()[0]
+    }
+
+    /// Render a one-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} mean {:>12}  p50 {:>12}  p95 {:>12}  ±{:>9}  ({} samples × {} iters)",
+            self.name,
+            fmt_time(self.mean()),
+            fmt_time(self.quantile(0.5)),
+            fmt_time(self.quantile(0.95)),
+            fmt_time(self.stddev()),
+            self.samples.len(),
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// Format a duration in adaptive units.
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.1} ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else {
+        format!("{seconds:.3} s")
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    /// Wall-clock budget for warmup.
+    pub warmup: Duration,
+    /// Wall-clock budget for measurement.
+    pub budget: Duration,
+    /// Number of samples to split the budget into.
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(1),
+            samples: 20,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for heavy end-to-end benches (training runs).
+    pub fn heavy() -> Self {
+        Self {
+            warmup: Duration::from_millis(0),
+            budget: Duration::from_millis(1),
+            samples: 1,
+        }
+    }
+
+    /// Measure `f`, calling it repeatedly. Each sample times a batch of
+    /// iterations sized so that one batch ≈ budget/samples.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Summary {
+        // Warmup + estimate cost of one iteration.
+        let mut iters_done: u64 = 0;
+        let t0 = Instant::now();
+        loop {
+            black_box(f());
+            iters_done += 1;
+            if t0.elapsed() >= self.warmup && iters_done >= 3 {
+                break;
+            }
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / iters_done as f64;
+        let per_sample_budget =
+            self.budget.as_secs_f64() / self.samples as f64;
+        let iters_per_sample =
+            ((per_sample_budget / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        Summary { name: name.to_string(), samples, iters_per_sample }
+    }
+
+    /// Measure once (for long-running end-to-end drivers where a single
+    /// execution IS the experiment).
+    pub fn run_once<T>(&self, name: &str, f: impl FnOnce() -> T) -> (T, Summary) {
+        let t = Instant::now();
+        let out = black_box(f());
+        let dt = t.elapsed().as_secs_f64();
+        (
+            out,
+            Summary { name: name.to_string(), samples: vec![dt], iters_per_sample: 1 },
+        )
+    }
+}
+
+/// Standard bench-binary entry header (so every bench output is labeled
+/// and greppable in bench_output.txt).
+pub fn bench_header(id: &str, description: &str) {
+    println!();
+    println!("=== {id} — {description} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(40),
+            samples: 5,
+        };
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", || {
+            acc = acc.wrapping_add(1);
+            black_box(acc)
+        });
+        assert!(s.mean() > 0.0);
+        assert_eq!(s.samples.len(), 5);
+        assert!(s.quantile(0.5) <= s.quantile(0.95) + 1e-12);
+    }
+
+    #[test]
+    fn run_once_returns_value() {
+        let b = Bencher::default();
+        let (v, s) = b.run_once("x", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(s.samples.len(), 1);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).contains("ns"));
+        assert!(fmt_time(5e-6).contains("µs"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(5.0).contains(" s"));
+    }
+
+    #[test]
+    fn summary_stats_reasonable() {
+        let s = Summary {
+            name: "t".into(),
+            samples: vec![1.0, 2.0, 3.0],
+            iters_per_sample: 1,
+        };
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert!((s.stddev() - 1.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+    }
+}

@@ -1,0 +1,265 @@
+//! Gradient-bias measurement harness — the empirical counterpart of
+//! Theorem 1.
+//!
+//! Works in logit space (`∇_θ o_i = e_i`, `M = 1`), where the theorem's
+//! statement is exact and fully observable:
+//!
+//! * [`empirical_bias`] Monte-Carlo-estimates `E[∇L′] − ∇L ∈ ℝⁿ` for any
+//!   [`Sampler`];
+//! * [`TheoremDiagnostics`] computes the three distribution-quality
+//!   functionals of eq. 12 (plus the UB₁ magnitude of eq. 11), which the
+//!   `bias_ablation` bench reports per sampler — this is the paper's
+//!   predicted ordering RFF < uniform, EXP ≈ 0.
+
+use crate::linalg::dot;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::sampler::Sampler;
+use crate::softmax::{full_softmax_grad, sampled_softmax_loss, scatter_grad};
+
+/// Result of a Monte-Carlo bias estimate.
+#[derive(Clone, Debug)]
+pub struct BiasEstimate {
+    /// `E[∇L′] − ∇L` per logit coordinate.
+    pub bias: Vec<f64>,
+    /// ‖bias‖∞.
+    pub linf: f64,
+    /// ‖bias‖₂.
+    pub l2: f64,
+    /// Standard error (max over coordinates) of the Monte-Carlo estimate,
+    /// to judge significance of `linf`.
+    pub max_se: f64,
+    pub trials: usize,
+}
+
+/// Monte-Carlo estimate of the gradient bias of sampled softmax under
+/// `sampler`, for one `(h, target)` and `m` negatives per draw.
+pub fn empirical_bias(
+    classes: &Matrix,
+    h: &[f32],
+    target: usize,
+    tau: f32,
+    sampler: &dyn Sampler,
+    m: usize,
+    trials: usize,
+    rng: &mut Rng,
+) -> BiasEstimate {
+    let n = classes.rows();
+    let logits: Vec<f64> = (0..n)
+        .map(|i| (tau * dot(h, classes.row(i))) as f64)
+        .collect();
+    let g_full = full_softmax_grad(&logits, target);
+
+    let mut mean = vec![0.0f64; n];
+    let mut m2 = vec![0.0f64; n];
+    for k in 0..trials {
+        let draw = sampler.sample_negatives(h, target, m, rng);
+        let negs: Vec<f64> =
+            draw.ids.iter().map(|&i| logits[i as usize]).collect();
+        let s = sampled_softmax_loss(logits[target], &negs, &draw.probs);
+        let g = scatter_grad(n, target, &draw.ids, &s.grad);
+        // Welford per-coordinate.
+        for i in 0..n {
+            let delta = g[i] - mean[i];
+            mean[i] += delta / (k + 1) as f64;
+            m2[i] += delta * (g[i] - mean[i]);
+        }
+    }
+    let bias: Vec<f64> =
+        mean.iter().zip(&g_full).map(|(e, f)| e - f).collect();
+    let linf = bias.iter().fold(0.0f64, |a, b| a.max(b.abs()));
+    let l2 = bias.iter().map(|b| b * b).sum::<f64>().sqrt();
+    let max_se = m2
+        .iter()
+        .map(|v| (v / (trials.max(2) - 1) as f64 / trials as f64).sqrt())
+        .fold(0.0f64, f64::max);
+    BiasEstimate { bias, linf, l2, max_se, trials }
+}
+
+/// The three sampling-distribution functionals of Theorem 1 / eq. 12,
+/// evaluated exactly for a given `(h, target)`.
+#[derive(Clone, Debug)]
+pub struct TheoremDiagnostics {
+    /// `Σ_{j∈N_t} e^{2o_j}/q_j` — minimized (= Z_t²) iff q ∝ e^o.
+    pub sum_sq_over_q: f64,
+    /// Its Cauchy–Schwarz floor `Z_t²`.
+    pub floor: f64,
+    /// `max_{i,i'} |e^{o_i}/q_i − e^{o_{i'}}/q_{i'}|` (drives UB₂).
+    pub max_ratio_gap: f64,
+    /// `max_k |Z_t − e^{o_k}/q_k|` (drives LB).
+    pub max_lb_gap: f64,
+    /// The UB₁ magnitude `(Σ e^{2o}/q − Z_t²)/(m·Z³)` of eq. 11.
+    pub ub1: f64,
+}
+
+/// Evaluate the Theorem-1 diagnostics for a sampler. `q` is taken
+/// conditioned on excluding the target (the theorem's sampling model).
+pub fn theorem_diagnostics(
+    classes: &Matrix,
+    h: &[f32],
+    target: usize,
+    tau: f32,
+    sampler: &dyn Sampler,
+    m: usize,
+) -> TheoremDiagnostics {
+    let n = classes.rows();
+    let logits: Vec<f64> = (0..n)
+        .map(|i| (tau * dot(h, classes.row(i))) as f64)
+        .collect();
+    // Stabilize exp() by shifting logits; every eq.-12 quantity is then a
+    // *relative* statement (we report shifted values consistently; ratios
+    // and the UB₁ normalization are shift-covariant as Z shifts too).
+    let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let e: Vec<f64> = logits.iter().map(|&o| (o - mx).exp()).collect();
+    let z: f64 = e.iter().sum();
+    let z_t: f64 = z - e[target];
+
+    let q_t = sampler.probability(h, target);
+    let renorm = (1.0 - q_t).max(f64::MIN_POSITIVE);
+
+    let mut sum_sq_over_q = 0.0;
+    let mut ratios: Vec<f64> = Vec::with_capacity(n - 1);
+    for j in 0..n {
+        if j == target {
+            continue;
+        }
+        let q = (sampler.probability(h, j) / renorm).max(f64::MIN_POSITIVE);
+        sum_sq_over_q += e[j] * e[j] / q;
+        ratios.push(e[j] / q);
+    }
+    let rmax = ratios.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let rmin = ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max_lb_gap = ratios
+        .iter()
+        .map(|r| (z_t - r).abs())
+        .fold(0.0f64, f64::max);
+    TheoremDiagnostics {
+        sum_sq_over_q,
+        floor: z_t * z_t,
+        max_ratio_gap: rmax - rmin,
+        max_lb_gap,
+        ub1: (sum_sq_over_q - z_t * z_t) / (m as f64 * z * z * z),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::unit_vector;
+    use crate::sampler::{ExactSoftmaxSampler, UniformSampler};
+
+    fn setup(rng: &mut Rng, n: usize, d: usize) -> (Matrix, Vec<f32>) {
+        let classes = Matrix::randn(rng, n, d).l2_normalized_rows();
+        let h = unit_vector(rng, d);
+        (classes, h)
+    }
+
+    #[test]
+    fn exact_sampler_has_negligible_bias() {
+        let mut rng = Rng::seeded(131);
+        let (classes, h) = setup(&mut rng, 20, 8);
+        let tau = 4.0;
+        let sampler = ExactSoftmaxSampler::new(&classes, tau);
+        let est = empirical_bias(
+            &classes, &h, 0, tau, &sampler, 10, 4000, &mut rng,
+        );
+        // Exact-softmax sampling ⇒ bias O(1/m); must be small and within a
+        // few standard errors of the uniform sampler's bias scale.
+        assert!(
+            est.linf < 0.02 + 4.0 * est.max_se,
+            "EXP bias too large: {} (se {})",
+            est.linf,
+            est.max_se
+        );
+    }
+
+    #[test]
+    fn uniform_bias_exceeds_exact_bias() {
+        // The Theorem-1 story: a skewed softmax + uniform q ⇒ larger bias
+        // than exact sampling at the same m.
+        let mut rng = Rng::seeded(132);
+        let n = 30;
+        let d = 8;
+        let (mut classes, h) = setup(&mut rng, n, d);
+        // Plant strong skew: a few classes very close to h.
+        for i in 0..3 {
+            let row = classes.row_mut(i);
+            for (r, &hv) in row.iter_mut().zip(h.iter()) {
+                *r = hv + 0.05 * (i as f32 + 1.0);
+            }
+            crate::linalg::l2_normalize(row);
+        }
+        let tau = 8.0;
+        let m = 5;
+        let trials = 3000;
+        let exact = ExactSoftmaxSampler::new(&classes, tau);
+        let uniform = UniformSampler::new(n);
+        let be = empirical_bias(
+            &classes, &h, 5, tau, &exact, m, trials, &mut rng,
+        );
+        let bu = empirical_bias(
+            &classes, &h, 5, tau, &uniform, m, trials, &mut rng,
+        );
+        assert!(
+            bu.l2 > be.l2,
+            "uniform bias {} should exceed exact bias {}",
+            bu.l2,
+            be.l2
+        );
+    }
+
+    #[test]
+    fn diagnostics_floor_attained_by_exact_sampler() {
+        let mut rng = Rng::seeded(133);
+        let (classes, h) = setup(&mut rng, 25, 6);
+        let tau = 5.0;
+        let exact = ExactSoftmaxSampler::new(&classes, tau);
+        let d = theorem_diagnostics(&classes, &h, 2, tau, &exact, 10);
+        // q ∝ e^o ⇒ Σ e^{2o}/q = Z_t² exactly (eq. 13 equality case).
+        assert!(
+            (d.sum_sq_over_q - d.floor).abs() / d.floor < 1e-6,
+            "{} vs floor {}",
+            d.sum_sq_over_q,
+            d.floor
+        );
+        assert!(d.ub1.abs() < 1e-9);
+        // e^{o_j}/q_j is constant (= Z_t) ⇒ both gaps vanish.
+        assert!(d.max_ratio_gap / d.floor.sqrt() < 1e-6);
+        assert!(d.max_lb_gap / d.floor.sqrt() < 1e-6);
+    }
+
+    #[test]
+    fn diagnostics_uniform_worse_than_exact() {
+        let mut rng = Rng::seeded(134);
+        let (classes, h) = setup(&mut rng, 25, 6);
+        let tau = 8.0;
+        let exact = ExactSoftmaxSampler::new(&classes, tau);
+        let uniform = UniformSampler::new(25);
+        let de = theorem_diagnostics(&classes, &h, 2, tau, &exact, 10);
+        let du = theorem_diagnostics(&classes, &h, 2, tau, &uniform, 10);
+        assert!(du.ub1 > de.ub1, "uniform UB1 {} vs exact {}", du.ub1, de.ub1);
+        assert!(du.max_ratio_gap > de.max_ratio_gap);
+    }
+
+    #[test]
+    fn bias_shrinks_with_m() {
+        // Theorem 1: every bias term carries a 1/m factor.
+        let mut rng = Rng::seeded(135);
+        let (classes, h) = setup(&mut rng, 20, 6);
+        let tau = 6.0;
+        let uniform = UniformSampler::new(20);
+        let trials = 6000;
+        let small = empirical_bias(
+            &classes, &h, 1, tau, &uniform, 2, trials, &mut rng,
+        );
+        let large = empirical_bias(
+            &classes, &h, 1, tau, &uniform, 16, trials, &mut rng,
+        );
+        assert!(
+            large.l2 < small.l2,
+            "bias should shrink with m: m=2 → {}, m=16 → {}",
+            small.l2,
+            large.l2
+        );
+    }
+}

@@ -1,0 +1,210 @@
+//! Command-line parsing substrate (no clap offline).
+//!
+//! A deliberately small, typed flag parser supporting:
+//!
+//! * subcommands (`rfsoftmax train --config cfg.json --sampler rff`),
+//! * `--flag value` and `--flag=value` forms,
+//! * typed accessors with defaults and range validation,
+//! * automatic `--help` text generation,
+//! * collection of unknown flags into errors (catches typos early).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A declared flag for help text + validation.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+}
+
+/// Parsed argument bag for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    bools: Vec<String>,
+}
+
+/// CLI error with a user-facing message.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse raw args (already excluding the program name / subcommand).
+    /// `bool_flags` lists flags that take no value (e.g. `--verbose`).
+    pub fn parse(raw: &[String], bool_flags: &[&str]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    let (k, v) = body.split_at(eq);
+                    out.flags.insert(k.to_string(), v[1..].to_string());
+                } else if bool_flags.contains(&body) {
+                    out.bools.push(body.to_string());
+                } else {
+                    let v = raw.get(i + 1).ok_or_else(|| {
+                        CliError(format!("flag --{body} expects a value"))
+                    })?;
+                    out.flags.insert(body.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name) || self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                CliError(format!("--{name}: expected integer, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                CliError(format!("--{name}: expected integer, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                CliError(format!("--{name}: expected float, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32, CliError> {
+        Ok(self.f64_or(name, default as f64)? as f32)
+    }
+
+    /// Reject flags that are not in the allowed set (typo protection).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<(), CliError> {
+        for k in self.flags.keys().chain(self.bools.iter()) {
+            if !allowed.contains(&k.as_str()) {
+                return Err(CliError(format!(
+                    "unknown flag --{k}; known flags: {}",
+                    allowed
+                        .iter()
+                        .map(|a| format!("--{a}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// All `--key value` overrides as (key, value) pairs, for config overlay.
+    pub fn overrides(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.flags.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+/// Render a help block for a subcommand.
+pub fn render_help(command: &str, about: &str, flags: &[FlagSpec]) -> String {
+    let mut s = format!("{command} — {about}\n\nFlags:\n");
+    for f in flags {
+        let default = f
+            .default
+            .as_ref()
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, default));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_both_flag_forms() {
+        let a = Args::parse(&raw(&["--x", "1", "--y=2", "pos"]), &[]).unwrap();
+        assert_eq!(a.get("x"), Some("1"));
+        assert_eq!(a.get("y"), Some("2"));
+        assert_eq!(a.positional(), &["pos".to_string()]);
+    }
+
+    #[test]
+    fn bool_flags_take_no_value() {
+        let a = Args::parse(&raw(&["--verbose", "--n", "3"]), &["verbose"]).unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let a = Args::parse(&raw(&["--lr", "0.5"]), &[]).unwrap();
+        assert_eq!(a.f64_or("lr", 1.0).unwrap(), 0.5);
+        assert_eq!(a.f64_or("missing", 1.0).unwrap(), 1.0);
+        assert!(a.f64_or("lr", 1.0).is_ok());
+        let bad = Args::parse(&raw(&["--lr", "abc"]), &[]).unwrap();
+        assert!(bad.f64_or("lr", 1.0).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&raw(&["--x"]), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = Args::parse(&raw(&["--tpyo", "1"]), &[]).unwrap();
+        assert!(a.check_known(&["typo"]).is_err());
+        assert!(a.check_known(&["tpyo"]).is_ok());
+    }
+
+    #[test]
+    fn help_rendering() {
+        let h = render_help(
+            "train",
+            "train a model",
+            &[FlagSpec { name: "steps", help: "number of steps", default: Some("100".into()) }],
+        );
+        assert!(h.contains("--steps"));
+        assert!(h.contains("default: 100"));
+    }
+}

@@ -1,0 +1,671 @@
+//! Typed configuration system.
+//!
+//! Configs are plain structs with JSON (de)serialization through the
+//! [`crate::json`] substrate plus a `--section.key=value` command-line
+//! overlay, so every experiment is reproducible from a single file and
+//! every bench/example can tweak parameters without recompiling:
+//!
+//! ```text
+//! rfsoftmax train --config runs/ptb.json --sampler.kind rff --sampler.dim 1024
+//! ```
+
+use crate::json::{self, Json};
+use std::fmt;
+
+/// Which model family to instantiate (see `python/compile/model.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Language model: embedding → LSTM → L2-normalized h (paper §4.1 NLP).
+    Lm,
+    /// Extreme classification: sparse features → projection → normalized h.
+    Extreme,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "lm" => Ok(ModelKind::Lm),
+            "extreme" => Ok(ModelKind::Extreme),
+            _ => Err(ConfigError(format!("unknown model kind '{s}' (lm|extreme)"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Lm => "lm",
+            ModelKind::Extreme => "extreme",
+        }
+    }
+}
+
+/// Which negative-sampling distribution the coordinator uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// RF-softmax (the paper's method): q_i ∝ φ(c_i)ᵀφ(h), RFF map.
+    Rff,
+    /// Quadratic kernel sampling (Blanc & Rendle 2018 baseline).
+    Quadratic,
+    /// Uniform over negatives.
+    Uniform,
+    /// Log-uniform (Zipfian id-rank prior; the classic TF sampler).
+    LogUniform,
+    /// Static unigram prior via alias table.
+    Unigram,
+    /// Exact softmax distribution (EXP baseline, O(dn)).
+    Exact,
+    /// Gumbel-top-k over exact logits (extension baseline, paper §1.1 [13]).
+    Gumbel,
+    /// No sampling — full softmax loss (FULL baseline).
+    Full,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "rff" => Ok(SamplerKind::Rff),
+            "quadratic" => Ok(SamplerKind::Quadratic),
+            "uniform" => Ok(SamplerKind::Uniform),
+            "loguniform" => Ok(SamplerKind::LogUniform),
+            "unigram" => Ok(SamplerKind::Unigram),
+            "exact" | "exp" => Ok(SamplerKind::Exact),
+            "gumbel" => Ok(SamplerKind::Gumbel),
+            "full" => Ok(SamplerKind::Full),
+            _ => Err(ConfigError(format!(
+                "unknown sampler '{s}' (rff|quadratic|uniform|loguniform|unigram|exact|gumbel|full)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Rff => "rff",
+            SamplerKind::Quadratic => "quadratic",
+            SamplerKind::Uniform => "uniform",
+            SamplerKind::LogUniform => "loguniform",
+            SamplerKind::Unigram => "unigram",
+            SamplerKind::Exact => "exact",
+            SamplerKind::Gumbel => "gumbel",
+            SamplerKind::Full => "full",
+        }
+    }
+}
+
+/// Feature-map family for kernel-based samplers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureMapKind {
+    /// Classic Random Fourier Features (paper eq. 17).
+    Rff,
+    /// Orthogonal Random Features (Yu et al. 2016).
+    Orf,
+    /// Structured Orthogonal Random Features (HD₁HD₂HD₃, O(D log d)).
+    Sorf,
+}
+
+impl FeatureMapKind {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "rff" => Ok(FeatureMapKind::Rff),
+            "orf" => Ok(FeatureMapKind::Orf),
+            "sorf" => Ok(FeatureMapKind::Sorf),
+            _ => Err(ConfigError(format!("unknown feature map '{s}' (rff|orf|sorf)"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FeatureMapKind::Rff => "rff",
+            FeatureMapKind::Orf => "orf",
+            FeatureMapKind::Sorf => "sorf",
+        }
+    }
+}
+
+/// Model hyperparameters.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub kind: ModelKind,
+    /// Number of classes n (vocab size for LM).
+    pub num_classes: usize,
+    /// Embedding dimension d.
+    pub embed_dim: usize,
+    /// LSTM hidden size (LM only).
+    pub hidden_dim: usize,
+    /// Unrolled sequence length (LM only).
+    pub seq_len: usize,
+    /// Sparse input feature dimension v (extreme only).
+    pub feature_dim: usize,
+    /// Non-zeros per sparse input (extreme only).
+    pub nnz: usize,
+    /// Softmax inverse temperature τ (paper eq. 1). Temperature = 1/√τ.
+    pub tau: f32,
+    /// L2-normalize input & class embeddings (paper §3.2 requirement).
+    pub normalize: bool,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            kind: ModelKind::Lm,
+            num_classes: 10_000,
+            embed_dim: 200,
+            hidden_dim: 256,
+            seq_len: 20,
+            feature_dim: 4096,
+            nnz: 32,
+            // Paper §4.1: temperature 1/√τ = 0.3 ⇒ τ ≈ 11.1.
+            tau: 1.0 / (0.3f32 * 0.3f32),
+            normalize: true,
+        }
+    }
+}
+
+/// Sampler hyperparameters.
+#[derive(Clone, Debug)]
+pub struct SamplerConfig {
+    pub kind: SamplerKind,
+    /// Number of sampled negatives m per example.
+    pub num_negatives: usize,
+    /// Feature dimension D of the kernel map (RFF/quadratic).
+    pub dim: usize,
+    /// RFF Gaussian kernel parameter ν (paper eq. 16). The paper's best
+    /// setting is T = 1/√ν = 0.5 ⇒ ν = 4.
+    pub nu: f32,
+    /// Feature-map family for RFF sampling.
+    pub feature_map: FeatureMapKind,
+    /// Quadratic kernel α (paper eq. 15; [12] uses 100).
+    pub alpha: f32,
+    /// Train the Quadratic baseline with the absolute-softmax loss
+    /// (paper §4.1 / [12]). Off by default: under our synthetic corpora
+    /// and the standard perplexity eval, the |o| objective admits
+    /// negative-logit degenerate solutions and diverges — see
+    /// EXPERIMENTS.md (documented deviation).
+    pub absolute: bool,
+    /// Share one negative set across the batch (standard trick; the paper's
+    /// timing setup samples per batch).
+    pub share_across_batch: bool,
+    pub seed: u64,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        Self {
+            kind: SamplerKind::Rff,
+            num_negatives: 100,
+            dim: 1024,
+            nu: 4.0,
+            feature_map: FeatureMapKind::Rff,
+            alpha: 100.0,
+            absolute: false,
+            share_across_batch: true,
+            seed: 17,
+        }
+    }
+}
+
+/// Optimizer selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Momentum,
+    Adagrad,
+    Adam,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "sgd" => Ok(OptimizerKind::Sgd),
+            "momentum" => Ok(OptimizerKind::Momentum),
+            "adagrad" => Ok(OptimizerKind::Adagrad),
+            "adam" => Ok(OptimizerKind::Adam),
+            _ => Err(ConfigError(format!(
+                "unknown optimizer '{s}' (sgd|momentum|adagrad|adam)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd => "sgd",
+            OptimizerKind::Momentum => "momentum",
+            OptimizerKind::Adagrad => "adagrad",
+            OptimizerKind::Adam => "adam",
+        }
+    }
+}
+
+/// Training-loop parameters.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub batch_size: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub optimizer: OptimizerKind,
+    /// Per-coordinate gradient clip (Theorem 1's bounded-gradient M).
+    pub grad_clip: f32,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// Sampling worker threads in the coordinator.
+    pub workers: usize,
+    /// Prefetch depth of the batch pipeline (double buffering = 2).
+    pub pipeline_depth: usize,
+    pub seed: u64,
+    /// Optional checkpoint directory.
+    pub checkpoint_dir: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 32,
+            steps: 500,
+            lr: 0.1,
+            optimizer: OptimizerKind::Adagrad,
+            grad_clip: 10.0,
+            eval_every: 100,
+            eval_batches: 8,
+            workers: 2,
+            pipeline_depth: 2,
+            seed: 42,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+/// Synthetic-dataset parameters (see DESIGN.md §2 substitutions).
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    /// "synthlm" | "extreme".
+    pub dataset: String,
+    /// Zipf exponent of the unigram class prior.
+    pub zipf_s: f64,
+    /// Rank of the low-rank Markov transition structure (synthlm).
+    pub markov_rank: usize,
+    /// Interpolation weight of Markov structure vs unigram prior.
+    pub markov_weight: f64,
+    /// Training tokens (synthlm) or examples (extreme).
+    pub train_size: usize,
+    /// Validation tokens/examples.
+    pub valid_size: usize,
+    /// Labels per example (extreme, multi-label → multi-class reduction).
+    pub labels_per_example: usize,
+    /// Latent dimension d* of the planted extreme-classification model.
+    /// Lower values concentrate the label distribution (more examples per
+    /// class), which is what makes PREC@k learnable at our reduced
+    /// train-set sizes (paper datasets have 10⁵–10⁶ training points).
+    pub latent_dim: usize,
+    /// Topic clusters of the planted generator (see
+    /// [`crate::data::extreme::ExtremeParams::clusters`]).
+    pub clusters: usize,
+    /// Noise std of the planted-embedding generator (extreme).
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "synthlm".to_string(),
+            zipf_s: 1.0,
+            markov_rank: 16,
+            markov_weight: 0.7,
+            train_size: 200_000,
+            valid_size: 20_000,
+            labels_per_example: 3,
+            latent_dim: 12,
+            clusters: 200,
+            noise: 0.3,
+            seed: 7,
+        }
+    }
+}
+
+/// The top-level experiment config.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub model: ModelConfig,
+    pub sampler: SamplerConfig,
+    pub train: TrainConfig,
+    pub data: DataConfig,
+}
+
+/// Config error with a user-facing message.
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl Config {
+    /// Load from a JSON file, then apply `--section.key=value` overrides.
+    pub fn load(
+        path: Option<&str>,
+        overrides: impl Iterator<Item = (String, String)>,
+    ) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| ConfigError(format!("cannot read {p}: {e}")))?;
+            let j = json::parse(&text)
+                .map_err(|e| ConfigError(format!("{p}: {e}")))?;
+            cfg.apply_json(&j)?;
+        }
+        for (k, v) in overrides {
+            cfg.set(&k, &v)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed JSON document (sections: model/sampler/train/data).
+    pub fn apply_json(&mut self, j: &Json) -> Result<(), ConfigError> {
+        let obj = j
+            .as_object()
+            .ok_or_else(|| ConfigError("top level must be an object".into()))?;
+        for (section, body) in obj {
+            let fields = body.as_object().ok_or_else(|| {
+                ConfigError(format!("section '{section}' must be an object"))
+            })?;
+            for (key, val) in fields {
+                let flat = format!("{section}.{key}");
+                let as_text = match val {
+                    Json::Str(s) => s.clone(),
+                    Json::Num(n) => n.to_string(),
+                    Json::Bool(b) => b.to_string(),
+                    _ => {
+                        return Err(ConfigError(format!(
+                            "{flat}: unsupported value type"
+                        )))
+                    }
+                };
+                self.set(&flat, &as_text)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Set one `section.key` from its string form.
+    pub fn set(&mut self, key: &str, v: &str) -> Result<(), ConfigError> {
+        fn us(key: &str, v: &str) -> Result<usize, ConfigError> {
+            v.parse()
+                .map_err(|_| ConfigError(format!("{key}: expected integer, got '{v}'")))
+        }
+        fn f32v(key: &str, v: &str) -> Result<f32, ConfigError> {
+            v.parse()
+                .map_err(|_| ConfigError(format!("{key}: expected float, got '{v}'")))
+        }
+        fn f64v(key: &str, v: &str) -> Result<f64, ConfigError> {
+            v.parse()
+                .map_err(|_| ConfigError(format!("{key}: expected float, got '{v}'")))
+        }
+        fn u64v(key: &str, v: &str) -> Result<u64, ConfigError> {
+            v.parse()
+                .map_err(|_| ConfigError(format!("{key}: expected integer, got '{v}'")))
+        }
+        fn boolean(key: &str, v: &str) -> Result<bool, ConfigError> {
+            match v {
+                "true" | "1" => Ok(true),
+                "false" | "0" => Ok(false),
+                _ => Err(ConfigError(format!("{key}: expected bool, got '{v}'"))),
+            }
+        }
+
+        match key {
+            "model.kind" => self.model.kind = ModelKind::parse(v)?,
+            "model.num_classes" => self.model.num_classes = us(key, v)?,
+            "model.embed_dim" => self.model.embed_dim = us(key, v)?,
+            "model.hidden_dim" => self.model.hidden_dim = us(key, v)?,
+            "model.seq_len" => self.model.seq_len = us(key, v)?,
+            "model.feature_dim" => self.model.feature_dim = us(key, v)?,
+            "model.nnz" => self.model.nnz = us(key, v)?,
+            "model.tau" => self.model.tau = f32v(key, v)?,
+            "model.temperature" => {
+                let t = f32v(key, v)?;
+                if t <= 0.0 {
+                    return Err(ConfigError("temperature must be > 0".into()));
+                }
+                self.model.tau = 1.0 / (t * t);
+            }
+            "model.normalize" => self.model.normalize = boolean(key, v)?,
+
+            "sampler.kind" => self.sampler.kind = SamplerKind::parse(v)?,
+            "sampler.num_negatives" | "sampler.m" => {
+                self.sampler.num_negatives = us(key, v)?
+            }
+            "sampler.dim" | "sampler.D" => self.sampler.dim = us(key, v)?,
+            "sampler.nu" => self.sampler.nu = f32v(key, v)?,
+            "sampler.T" => {
+                let t = f32v(key, v)?;
+                if t <= 0.0 {
+                    return Err(ConfigError("sampler.T must be > 0".into()));
+                }
+                self.sampler.nu = 1.0 / (t * t);
+            }
+            "sampler.feature_map" => {
+                self.sampler.feature_map = FeatureMapKind::parse(v)?
+            }
+            "sampler.alpha" => self.sampler.alpha = f32v(key, v)?,
+            "sampler.absolute" => self.sampler.absolute = boolean(key, v)?,
+            "sampler.share_across_batch" => {
+                self.sampler.share_across_batch = boolean(key, v)?
+            }
+            "sampler.seed" => self.sampler.seed = u64v(key, v)?,
+
+            "train.batch_size" => self.train.batch_size = us(key, v)?,
+            "train.steps" => self.train.steps = us(key, v)?,
+            "train.lr" => self.train.lr = f32v(key, v)?,
+            "train.optimizer" => self.train.optimizer = OptimizerKind::parse(v)?,
+            "train.grad_clip" => self.train.grad_clip = f32v(key, v)?,
+            "train.eval_every" => self.train.eval_every = us(key, v)?,
+            "train.eval_batches" => self.train.eval_batches = us(key, v)?,
+            "train.workers" => self.train.workers = us(key, v)?,
+            "train.pipeline_depth" => self.train.pipeline_depth = us(key, v)?,
+            "train.seed" => self.train.seed = u64v(key, v)?,
+            "train.checkpoint_dir" => {
+                self.train.checkpoint_dir = Some(v.to_string())
+            }
+
+            "data.dataset" => self.data.dataset = v.to_string(),
+            "data.zipf_s" => self.data.zipf_s = f64v(key, v)?,
+            "data.markov_rank" => self.data.markov_rank = us(key, v)?,
+            "data.markov_weight" => self.data.markov_weight = f64v(key, v)?,
+            "data.train_size" => self.data.train_size = us(key, v)?,
+            "data.valid_size" => self.data.valid_size = us(key, v)?,
+            "data.labels_per_example" => {
+                self.data.labels_per_example = us(key, v)?
+            }
+            "data.latent_dim" => self.data.latent_dim = us(key, v)?,
+            "data.clusters" => self.data.clusters = us(key, v)?,
+            "data.noise" => self.data.noise = f64v(key, v)?,
+            "data.seed" => self.data.seed = u64v(key, v)?,
+
+            _ => return Err(ConfigError(format!("unknown config key '{key}'"))),
+        }
+        Ok(())
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.model.num_classes < 2 {
+            return Err(ConfigError("model.num_classes must be >= 2".into()));
+        }
+        if self.model.embed_dim == 0 {
+            return Err(ConfigError("model.embed_dim must be > 0".into()));
+        }
+        if self.model.tau <= 0.0 {
+            return Err(ConfigError("model.tau must be > 0".into()));
+        }
+        if self.sampler.kind != SamplerKind::Full
+            && self.sampler.num_negatives == 0
+        {
+            return Err(ConfigError("sampler.num_negatives must be > 0".into()));
+        }
+        if self.sampler.num_negatives >= self.model.num_classes {
+            return Err(ConfigError(format!(
+                "sampler.num_negatives ({}) must be < model.num_classes ({})",
+                self.sampler.num_negatives, self.model.num_classes
+            )));
+        }
+        if matches!(self.sampler.kind, SamplerKind::Rff)
+            && self.sampler.dim == 0
+        {
+            return Err(ConfigError("sampler.dim must be > 0 for rff".into()));
+        }
+        if self.train.batch_size == 0 {
+            return Err(ConfigError("train.batch_size must be > 0".into()));
+        }
+        if self.train.pipeline_depth == 0 {
+            return Err(ConfigError("train.pipeline_depth must be > 0".into()));
+        }
+        Ok(())
+    }
+
+    /// Serialize to JSON (for run manifests / EXPERIMENTS.md records).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "model",
+                Json::obj(vec![
+                    ("kind", Json::from(self.model.kind.name())),
+                    ("num_classes", Json::from(self.model.num_classes)),
+                    ("embed_dim", Json::from(self.model.embed_dim)),
+                    ("hidden_dim", Json::from(self.model.hidden_dim)),
+                    ("seq_len", Json::from(self.model.seq_len)),
+                    ("feature_dim", Json::from(self.model.feature_dim)),
+                    ("nnz", Json::from(self.model.nnz)),
+                    ("tau", Json::from(self.model.tau as f64)),
+                    ("normalize", Json::from(self.model.normalize)),
+                ]),
+            ),
+            (
+                "sampler",
+                Json::obj(vec![
+                    ("kind", Json::from(self.sampler.kind.name())),
+                    ("num_negatives", Json::from(self.sampler.num_negatives)),
+                    ("dim", Json::from(self.sampler.dim)),
+                    ("nu", Json::from(self.sampler.nu as f64)),
+                    ("feature_map", Json::from(self.sampler.feature_map.name())),
+                    ("alpha", Json::from(self.sampler.alpha as f64)),
+                    ("absolute", Json::from(self.sampler.absolute)),
+                    (
+                        "share_across_batch",
+                        Json::from(self.sampler.share_across_batch),
+                    ),
+                    ("seed", Json::from(self.sampler.seed as usize)),
+                ]),
+            ),
+            (
+                "train",
+                Json::obj(vec![
+                    ("batch_size", Json::from(self.train.batch_size)),
+                    ("steps", Json::from(self.train.steps)),
+                    ("lr", Json::from(self.train.lr as f64)),
+                    ("optimizer", Json::from(self.train.optimizer.name())),
+                    ("grad_clip", Json::from(self.train.grad_clip as f64)),
+                    ("eval_every", Json::from(self.train.eval_every)),
+                    ("eval_batches", Json::from(self.train.eval_batches)),
+                    ("workers", Json::from(self.train.workers)),
+                    ("pipeline_depth", Json::from(self.train.pipeline_depth)),
+                    ("seed", Json::from(self.train.seed as usize)),
+                ]),
+            ),
+            (
+                "data",
+                Json::obj(vec![
+                    ("dataset", Json::from(self.data.dataset.as_str())),
+                    ("zipf_s", Json::from(self.data.zipf_s)),
+                    ("markov_rank", Json::from(self.data.markov_rank)),
+                    ("markov_weight", Json::from(self.data.markov_weight)),
+                    ("train_size", Json::from(self.data.train_size)),
+                    ("valid_size", Json::from(self.data.valid_size)),
+                    (
+                        "labels_per_example",
+                        Json::from(self.data.labels_per_example),
+                    ),
+                    ("latent_dim", Json::from(self.data.latent_dim)),
+                    ("clusters", Json::from(self.data.clusters)),
+                    ("noise", Json::from(self.data.noise)),
+                    ("seed", Json::from(self.data.seed as usize)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_and_get_round_trip() {
+        let mut c = Config::default();
+        c.set("model.num_classes", "5000").unwrap();
+        c.set("sampler.kind", "quadratic").unwrap();
+        c.set("train.lr", "0.25").unwrap();
+        c.set("data.zipf_s", "1.5").unwrap();
+        assert_eq!(c.model.num_classes, 5000);
+        assert_eq!(c.sampler.kind, SamplerKind::Quadratic);
+        assert!((c.train.lr - 0.25).abs() < 1e-6);
+        assert_eq!(c.data.zipf_s, 1.5);
+    }
+
+    #[test]
+    fn temperature_maps_to_tau() {
+        let mut c = Config::default();
+        c.set("model.temperature", "0.5").unwrap();
+        assert!((c.model.tau - 4.0).abs() < 1e-5);
+        c.set("sampler.T", "0.5").unwrap();
+        assert!((c.sampler.nu - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = Config::default();
+        assert!(c.set("model.bogus", "1").is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut c = Config::default();
+        c.set("model.num_classes", "123").unwrap();
+        c.set("sampler.dim", "77").unwrap();
+        let j = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.model.num_classes, 123);
+        assert_eq!(c2.sampler.dim, 77);
+    }
+
+    #[test]
+    fn validation_catches_bad_m() {
+        let mut c = Config::default();
+        c.model.num_classes = 10;
+        c.sampler.num_negatives = 10;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn load_applies_overrides() {
+        let dir = std::env::temp_dir().join("rfsm_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        std::fs::write(&p, r#"{"model": {"num_classes": 400}}"#).unwrap();
+        let cfg = Config::load(
+            Some(p.to_str().unwrap()),
+            vec![("model.embed_dim".to_string(), "64".to_string())].into_iter(),
+        )
+        .unwrap();
+        assert_eq!(cfg.model.num_classes, 400);
+        assert_eq!(cfg.model.embed_dim, 64);
+    }
+}

@@ -1,0 +1,91 @@
+//! Small helpers shared by the bench harnesses (`rust/benches/*`): build
+//! a config from key/value overrides, run one training, and format
+//! perplexity curves as paper-style table rows.
+
+use super::{TrainReport, TrainerBuilder};
+use crate::config::Config;
+use crate::runtime::Runtime;
+use crate::tables::Table;
+use anyhow::Result;
+
+/// Number of training steps for figure benches, scaled by
+/// `RFSM_BENCH_STEPS` (default 240; set higher for smoother curves).
+pub fn bench_steps(default: usize) -> usize {
+    std::env::var("RFSM_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Build a config from `--section.key=value`-style pairs.
+pub fn config_from(pairs: &[(&str, String)]) -> Result<Config> {
+    let mut cfg = Config::default();
+    for (k, v) in pairs {
+        cfg.set(k, v).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    Ok(cfg)
+}
+
+/// Run one training and return its report (printing progress).
+pub fn train_once(
+    runtime: &Runtime,
+    prefix: &str,
+    label: &str,
+    cfg: Config,
+) -> Result<TrainReport> {
+    println!("  [{label}] training…");
+    let mut t = TrainerBuilder::new(runtime, prefix, cfg).build()?;
+    let r = t.run()?;
+    println!(
+        "  [{label}] final metric {:.2} in {:.1}s",
+        r.final_metric, r.wall_seconds
+    );
+    Ok(r)
+}
+
+/// Render a set of labeled training curves (validation metric per eval
+/// step) as one table — the text analogue of the paper's figures.
+pub fn curves_table(title: &str, runs: &[(String, TrainReport)]) -> Table {
+    let steps: Vec<usize> = runs
+        .first()
+        .map(|(_, r)| r.history.iter().map(|p| p.step).collect())
+        .unwrap_or_default();
+    let mut header: Vec<String> = vec!["step".into()];
+    header.extend(runs.iter().map(|(n, _)| n.clone()));
+    let refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &refs);
+    for (i, s) in steps.iter().enumerate() {
+        let mut row = vec![s.to_string()];
+        for (_, r) in runs {
+            row.push(
+                r.history
+                    .get(i)
+                    .map(|p| format!("{:.1}", p.metric))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        t.row(&row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_from_pairs() {
+        let cfg = config_from(&[
+            ("sampler.kind", "uniform".to_string()),
+            ("train.steps", "7".to_string()),
+        ])
+        .unwrap();
+        assert_eq!(cfg.train.steps, 7);
+    }
+
+    #[test]
+    fn bench_steps_default() {
+        std::env::remove_var("RFSM_BENCH_STEPS");
+        assert_eq!(bench_steps(240), 240);
+    }
+}

@@ -1,0 +1,544 @@
+//! Language-model training driver (PennTreeBank / Bnews experiments,
+//! paper Figures 1–4).
+//!
+//! Architecture (mirrors `python/compile/model.py::lm_*`):
+//! context tokens → input-embedding gather (Rust) → LSTM → projection →
+//! L2-normalized h → sampled-softmax loss against target + shared
+//! negatives. The AOT executables do the differentiable math; Rust does
+//! gathers/scatters, sampling, optimization and tree propagation.
+
+use super::sampler_service::{build_sampler, SamplerService};
+use super::{aggregate_rows, step_cap, EvalPoint, TrainReport};
+use crate::config::{Config, SamplerKind};
+use crate::data::synthlm::{Split, SynthCorpus, SynthLmParams};
+use crate::data::LmBatch;
+use crate::eval::perplexity;
+use crate::linalg::{l2_normalize, Matrix};
+use crate::metrics::{Ewma, Metrics};
+use crate::model::ParamStore;
+use crate::optim::Optimizer;
+use crate::rng::Rng;
+use crate::runtime::{HostTensor, Runtime};
+use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Shapes discovered from the manifest.
+#[derive(Clone, Debug)]
+pub struct LmShapes {
+    pub n: usize,
+    pub d: usize,
+    pub hidden: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub m: usize,
+    pub tau: f32,
+}
+
+pub struct LmTrainer<'rt> {
+    runtime: &'rt Runtime,
+    prefix: String,
+    cfg: Config,
+    pub shapes: LmShapes,
+    corpus: Arc<SynthCorpus>,
+    params: ParamStore,
+    optimizer: Optimizer,
+    service: Option<SamplerService>,
+    pub metrics: Metrics,
+    #[allow(dead_code)] rng: Rng, // reserved for trainer-side stochastic features
+    stale_sampling: bool,
+    /// Use the `*_unnorm` artifact variants (§4.2 ablation; FULL only).
+    unnormalized: bool,
+    /// Query embedding carried across steps in stale-sampling mode.
+    prev_query: Vec<f32>,
+}
+
+// Parameter block ids (order matters for nothing but readability).
+const EMB: usize = 0;
+const WX: usize = 1;
+const WH: usize = 2;
+const BIAS: usize = 3;
+const PROJ: usize = 4;
+const CLS: usize = 5;
+
+impl<'rt> LmTrainer<'rt> {
+    pub fn new(
+        runtime: &'rt Runtime,
+        prefix: &str,
+        cfg: Config,
+        stale_sampling: bool,
+        unnormalized: bool,
+    ) -> Result<Self> {
+        super::validate_sampler_kind(cfg.sampler.kind)?;
+        let meta = runtime
+            .manifest()
+            .get(&format!("{prefix}_train_sampled"))
+            .ok_or_else(|| anyhow!("missing {prefix}_train_sampled"))?;
+        let g = |k: &str| -> Result<usize> {
+            meta.meta_usize(k)
+                .ok_or_else(|| anyhow!("manifest meta missing '{k}'"))
+        };
+        let shapes = LmShapes {
+            n: g("n")?,
+            d: g("d")?,
+            hidden: g("hidden")?,
+            seq_len: g("seq_len")?,
+            batch: g("batch")?,
+            m: g("m")?,
+            tau: meta.meta_f64("tau").ok_or_else(|| anyhow!("meta tau"))?
+                as f32,
+        };
+
+        // --- data -----------------------------------------------------
+        let corpus = Arc::new(SynthCorpus::generate(&SynthLmParams {
+            vocab_size: shapes.n,
+            zipf_s: cfg.data.zipf_s,
+            rank: cfg.data.markov_rank,
+            markov_weight: cfg.data.markov_weight,
+            train_tokens: cfg.data.train_size,
+            valid_tokens: cfg.data.valid_size,
+            seed: cfg.data.seed,
+        }));
+
+        // --- parameters -------------------------------------------------
+        let mut rng = Rng::seeded(cfg.train.seed);
+        let mut params = ParamStore::new();
+        let (n, d, h) = (shapes.n, shapes.d, shapes.hidden);
+        let id = params.add_randn("emb", &[n, d], 0.1, &mut rng);
+        assert_eq!(id, EMB);
+        let scale = 1.0 / (h as f32).sqrt();
+        assert_eq!(params.add_randn("wx", &[d, 4 * h], scale, &mut rng), WX);
+        assert_eq!(params.add_randn("wh", &[h, 4 * h], scale, &mut rng), WH);
+        assert_eq!(params.add_zeros("b", &[4 * h]), BIAS);
+        // Forget-gate bias init = 1 (gate order: i, f, g, o).
+        {
+            let b = params.get_mut(BIAS);
+            for v in &mut b.data[h..2 * h] {
+                *v = 1.0;
+            }
+        }
+        assert_eq!(params.add_randn("proj", &[h, d], scale, &mut rng), PROJ);
+        assert_eq!(params.add_randn("cls", &[n, d], 0.1, &mut rng), CLS);
+
+        // --- sampling service -------------------------------------------
+        let service = if cfg.sampler.kind == SamplerKind::Full {
+            None
+        } else {
+            let normalized = normalized_classes(&params, CLS);
+            let unigram = corpus.unigram_prior();
+            let sampler =
+                build_sampler(&cfg, &normalized, Some(&unigram), &mut rng)?;
+            // The artifact is compiled for exactly m negatives.
+            anyhow::ensure!(
+                cfg.sampler.num_negatives == shapes.m,
+                "config m={} but artifact compiled for m={}",
+                cfg.sampler.num_negatives,
+                shapes.m
+            );
+            Some(SamplerService::new(
+                sampler,
+                shapes.m,
+                Rng::seeded(cfg.sampler.seed),
+            ))
+        };
+
+        let optimizer = Optimizer::from_config(&cfg.train);
+        Ok(Self {
+            runtime,
+            prefix: prefix.to_string(),
+            cfg,
+            shapes,
+            corpus,
+            params,
+            optimizer,
+            service,
+            metrics: Metrics::new(),
+            rng,
+            stale_sampling,
+            unnormalized,
+            prev_query: Vec::new(),
+        })
+    }
+
+    fn artifact(&self, entry: &str) -> String {
+        if self.unnormalized && matches!(entry, "train_full" | "eval") {
+            format!("{}_{entry}_unnorm", self.prefix)
+        } else {
+            format!("{}_{entry}", self.prefix)
+        }
+    }
+
+    /// Which training artifact this sampler uses: the Quadratic baseline
+    /// optimizes the absolute-softmax loss (paper §4.1).
+    fn train_entry(&self) -> String {
+        match self.cfg.sampler.kind {
+            SamplerKind::Full => self.artifact("train_full"),
+            // The absolute-softmax loss ([12]'s pairing for the quadratic
+            // kernel) is opt-in; see SamplerConfig::absolute.
+            SamplerKind::Quadratic if self.cfg.sampler.absolute => {
+                self.artifact("train_sampled_abs")
+            }
+            _ => self.artifact("train_sampled"),
+        }
+    }
+
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let t0 = Instant::now();
+        let shapes = self.shapes.clone();
+        let total_steps = step_cap()
+            .map(|c| c.min(self.cfg.train.steps))
+            .unwrap_or(self.cfg.train.steps);
+        let bsz = shapes.batch;
+
+        // Bounded prefetch of training batches (producer thread).
+        let corpus = Arc::clone(&self.corpus);
+        let (seq_len, depth) = (shapes.seq_len, self.cfg.train.pipeline_depth);
+        let base_seed = self.cfg.data.seed;
+        let prefetcher = crate::exec::Prefetcher::spawn(
+            depth,
+            Some(total_steps),
+            move |i| {
+                // Re-derive the batch for global step i: epoch-major order.
+                let windows = corpus.train.len() - seq_len;
+                let steps_per_epoch = (windows / bsz).max(1);
+                let epoch = i / steps_per_epoch;
+                let within = i % steps_per_epoch;
+                corpus
+                    .batches(
+                        Split::Train,
+                        seq_len,
+                        bsz,
+                        base_seed ^ (epoch as u64).wrapping_mul(0x9E3779B9),
+                    )
+                    .nth(within)
+                    .expect("batch index out of range")
+            },
+        );
+
+        let mut ewma = Ewma::new(0.05);
+        let mut history = Vec::new();
+        let mut step = 0usize;
+        while let Some(batch) = prefetcher.next() {
+            let loss = self.step(&batch)?;
+            let smooth = ewma.record(loss);
+            self.metrics.observe("train_loss", loss);
+            self.metrics.incr("steps", 1);
+            step += 1;
+
+            if step % self.cfg.train.eval_every == 0 || step == total_steps {
+                let (eval_loss, ppl) = self.evaluate()?;
+                let windows = self.corpus.train.len() - shapes.seq_len;
+                history.push(EvalPoint {
+                    step,
+                    epoch: step as f64 * bsz as f64 / windows as f64,
+                    train_loss: smooth,
+                    eval_loss,
+                    metric: ppl,
+                });
+            }
+            if step >= total_steps {
+                break;
+            }
+        }
+        let stats = &prefetcher.stats();
+        self.metrics.incr(
+            "pipeline_producer_stalls",
+            stats.producer_stalls.load(std::sync::atomic::Ordering::Relaxed),
+        );
+        self.metrics.incr(
+            "pipeline_consumer_stalls",
+            stats.consumer_stalls.load(std::sync::atomic::Ordering::Relaxed),
+        );
+
+        if let Some(dir) = self.cfg.train.checkpoint_dir.clone() {
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("mkdir {dir}"))?;
+            let path = std::path::Path::new(&dir)
+                .join(format!("{}_{}.ckpt", self.prefix, self.sampler_name()));
+            self.params.save(&path)?;
+        }
+
+        let last = history.last().cloned().unwrap_or(EvalPoint {
+            step,
+            epoch: 0.0,
+            train_loss: f64::NAN,
+            eval_loss: f64::NAN,
+            metric: f64::NAN,
+        });
+        Ok(TrainReport {
+            sampler: self.sampler_name().to_string(),
+            history,
+            final_metric: last.metric,
+            final_eval_loss: last.eval_loss,
+            steps_run: step,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            metrics: self.metrics.to_json(),
+        })
+    }
+
+    fn sampler_name(&self) -> &'static str {
+        match &self.service {
+            Some(s) => s.name(),
+            None => "full",
+        }
+    }
+
+    /// One optimizer step; returns the training loss.
+    fn step(&mut self, batch: &LmBatch) -> Result<f64> {
+        if self.cfg.sampler.kind == SamplerKind::Full {
+            self.step_full(batch)
+        } else {
+            self.step_sampled(batch)
+        }
+    }
+
+    fn step_sampled(&mut self, batch: &LmBatch) -> Result<f64> {
+        let s = &self.shapes;
+        let (bsz, seq_len, d, m) = (s.batch, s.seq_len, s.d, s.m);
+
+        // 1. Gather context embeddings.
+        let t_gather = Instant::now();
+        let ctx_emb = gather_rows(self.params.get(EMB).data_view(), d, &batch.contexts);
+        self.metrics.record_duration("gather", t_gather.elapsed());
+
+        // 2. Query embedding for sampling: encoder pass (or stale query).
+        let t_sample = Instant::now();
+        let query: Vec<f32> = if self.stale_sampling && !self.prev_query.is_empty()
+        {
+            self.prev_query.clone()
+        } else {
+            let enc = self.runtime.get(&self.artifact("encode"))?;
+            let outs = enc.run(&[
+                HostTensor::f32(&[bsz, seq_len, d], ctx_emb.clone()),
+                self.block_tensor(WX),
+                self.block_tensor(WH),
+                self.block_tensor(BIAS),
+                self.block_tensor(PROJ),
+            ])?;
+            let h = outs[0].as_f32();
+            mean_query(h, bsz, d)
+        };
+
+        // 3. Draw shared negatives + package adjustments/masks.
+        let svc = self.service.as_mut().expect("sampled step without service");
+        let pack = svc.draw(&query, &batch.targets);
+        self.metrics
+            .incr("accidental_hits", pack.accidental_hits as u64);
+        self.metrics.record_duration("sample", t_sample.elapsed());
+
+        // 4. Gather class rows and execute the fused train step.
+        let t_exec = Instant::now();
+        let tgt_emb = gather_rows(self.params.get(CLS).data_view(), d, &batch.targets);
+        let neg_emb = gather_rows(self.params.get(CLS).data_view(), d, &pack.ids);
+        let exe = self.runtime.get(&self.train_entry())?;
+        let outs = exe.run(&[
+            HostTensor::f32(&[bsz, seq_len, d], ctx_emb),
+            self.block_tensor(WX),
+            self.block_tensor(WH),
+            self.block_tensor(BIAS),
+            self.block_tensor(PROJ),
+            HostTensor::f32(&[bsz, d], tgt_emb),
+            HostTensor::f32(&[m, d], neg_emb),
+            HostTensor::f32(&[m], pack.adjust.clone()),
+            HostTensor::f32(&[bsz, m], pack.mask.clone()),
+        ])?;
+        self.metrics.record_duration("execute", t_exec.elapsed());
+        let loss = outs[0].scalar() as f64;
+
+        // 5. Optimizer updates.
+        let t_opt = Instant::now();
+        // Dense blocks.
+        for (block, out_idx) in [(WX, 2), (WH, 3), (BIAS, 4), (PROJ, 5)] {
+            let grad = outs[out_idx].as_f32().to_vec();
+            let param = self.params.get_mut(block);
+            self.optimizer.update_dense(block, &mut param.data, &grad);
+        }
+        // Sparse: input embeddings (contexts).
+        let (rows, grads) = aggregate_rows(&batch.contexts, outs[1].as_f32(), d);
+        {
+            let param = self.params.get_mut(EMB);
+            self.optimizer.update_rows(EMB, &mut param.data, d, &rows, &grads);
+        }
+        // Sparse: class embeddings (targets + negatives).
+        let mut cls_ids: Vec<u32> = batch.targets.clone();
+        cls_ids.extend_from_slice(&pack.ids);
+        let mut cls_grads: Vec<f32> = outs[6].as_f32().to_vec();
+        cls_grads.extend_from_slice(outs[7].as_f32());
+        let (crow, cgrads) = aggregate_rows(&cls_ids, &cls_grads, d);
+        {
+            let param = self.params.get_mut(CLS);
+            self.optimizer
+                .update_rows(CLS, &mut param.data, d, &crow, &cgrads);
+        }
+        self.metrics.record_duration("optimize", t_opt.elapsed());
+
+        // 6. Propagate updated class embeddings to the sampling tree.
+        let t_tree = Instant::now();
+        let cls_block = self.params.get(CLS);
+        let svc = self.service.as_mut().unwrap();
+        for &r in &crow {
+            svc.update_class(r, cls_block.row(r));
+        }
+        self.metrics.record_duration("tree_update", t_tree.elapsed());
+        self.metrics.incr("tree_updates", crow.len() as u64);
+
+        if self.stale_sampling {
+            self.prev_query = mean_query_from_rows(self.params.get(CLS), &batch.targets, d);
+        }
+        Ok(loss)
+    }
+
+    fn step_full(&mut self, batch: &LmBatch) -> Result<f64> {
+        let s = &self.shapes;
+        let (bsz, seq_len, d, n) = (s.batch, s.seq_len, s.d, s.n);
+        let ctx_emb = gather_rows(self.params.get(EMB).data_view(), d, &batch.contexts);
+        let targets: Vec<i32> =
+            batch.targets.iter().map(|&t| t as i32).collect();
+        let t_exec = Instant::now();
+        let exe = self.runtime.get(&self.artifact("train_full"))?;
+        let outs = exe.run(&[
+            HostTensor::f32(&[bsz, seq_len, d], ctx_emb),
+            self.block_tensor(WX),
+            self.block_tensor(WH),
+            self.block_tensor(BIAS),
+            self.block_tensor(PROJ),
+            self.block_tensor(CLS),
+            HostTensor::i32(&[bsz], targets),
+        ])?;
+        self.metrics.record_duration("execute", t_exec.elapsed());
+        let loss = outs[0].scalar() as f64;
+
+        for (block, out_idx) in [(WX, 2), (WH, 3), (BIAS, 4), (PROJ, 5)] {
+            let grad = outs[out_idx].as_f32().to_vec();
+            let param = self.params.get_mut(block);
+            self.optimizer.update_dense(block, &mut param.data, &grad);
+        }
+        let (rows, grads) = aggregate_rows(&batch.contexts, outs[1].as_f32(), d);
+        {
+            let param = self.params.get_mut(EMB);
+            self.optimizer.update_rows(EMB, &mut param.data, d, &rows, &grads);
+        }
+        {
+            let grad = outs[6].as_f32().to_vec();
+            let param = self.params.get_mut(CLS);
+            self.optimizer.update_dense(CLS, &mut param.data, &grad);
+        }
+        let _ = n;
+        Ok(loss)
+    }
+
+    /// Full-softmax validation loss + perplexity over `eval_batches`.
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        let s = &self.shapes;
+        let (bsz, seq_len, d) = (s.batch, s.seq_len, s.d);
+        let exe = self.runtime.get(&self.artifact("eval"))?;
+        let mut total = 0.0;
+        let mut count = 0usize;
+        let t_eval = Instant::now();
+        for batch in self
+            .corpus
+            .batches(Split::Valid, seq_len, bsz, 0)
+            .take(self.cfg.train.eval_batches)
+        {
+            let ctx_emb =
+                gather_rows(self.params.get(EMB).data_view(), d, &batch.contexts);
+            let targets: Vec<i32> =
+                batch.targets.iter().map(|&t| t as i32).collect();
+            let outs = exe.run(&[
+                HostTensor::f32(&[bsz, seq_len, d], ctx_emb),
+                self.block_tensor(WX),
+                self.block_tensor(WH),
+                self.block_tensor(BIAS),
+                self.block_tensor(PROJ),
+                self.block_tensor(CLS),
+                HostTensor::i32(&[bsz], targets),
+            ])?;
+            total += outs[0].scalar() as f64;
+            count += 1;
+        }
+        self.metrics.record_duration("eval", t_eval.elapsed());
+        anyhow::ensure!(count > 0, "no validation batches");
+        let mean = total / count as f64;
+        Ok((mean, perplexity(mean)))
+    }
+
+    fn block_tensor(&self, id: usize) -> HostTensor {
+        let b = self.params.get(id);
+        HostTensor::f32(&b.shape, b.data.clone())
+    }
+}
+
+/// Normalized copy of the class-embedding block as a Matrix.
+fn normalized_classes(params: &ParamStore, id: usize) -> Matrix {
+    let b = params.get(id);
+    Matrix::from_vec(b.rows(), b.cols(), b.data.clone()).l2_normalized_rows()
+}
+
+/// Gather `ids` rows from a flat `rows × dim` table.
+pub(crate) fn gather_rows(table: &[f32], dim: usize, ids: &[u32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(ids.len() * dim);
+    for &id in ids {
+        let s = id as usize * dim;
+        out.extend_from_slice(&table[s..s + dim]);
+    }
+    out
+}
+
+/// Normalized mean of the batch's h rows — the shared sampling query.
+pub(crate) fn mean_query(h: &[f32], bsz: usize, d: usize) -> Vec<f32> {
+    let mut q = vec![0.0f32; d];
+    for b in 0..bsz {
+        for (qi, &hi) in q.iter_mut().zip(&h[b * d..(b + 1) * d]) {
+            *qi += hi;
+        }
+    }
+    l2_normalize(&mut q);
+    q
+}
+
+fn mean_query_from_rows(
+    block: &crate::model::Block,
+    ids: &[u32],
+    d: usize,
+) -> Vec<f32> {
+    let mut q = vec![0.0f32; d];
+    for &id in ids {
+        for (qi, &v) in q.iter_mut().zip(block.row(id as usize)) {
+            *qi += v;
+        }
+    }
+    l2_normalize(&mut q);
+    q
+}
+
+// Helper trait to view a Block's data as a slice without borrowing issues.
+trait DataView {
+    fn data_view(&self) -> &[f32];
+}
+
+impl DataView for crate::model::Block {
+    fn data_view(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_rows_layout() {
+        let table = vec![0.0f32, 1.0, 10.0, 11.0, 20.0, 21.0];
+        let out = gather_rows(&table, 2, &[2, 0]);
+        assert_eq!(out, vec![20.0, 21.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn mean_query_is_normalized() {
+        let h = vec![1.0f32, 0.0, 0.0, 1.0]; // two 2-d rows
+        let q = mean_query(&h, 2, 2);
+        let norm: f32 = q.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+        assert!((q[0] - q[1]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,283 @@
+//! The L3 training coordinator — the paper's system integrated as a
+//! framework feature.
+//!
+//! The [`Trainer`] owns the full training lifecycle:
+//!
+//! 1. **data** — synthetic corpus / extreme-classification batches
+//!    (prefetched on a producer thread with bounded depth);
+//! 2. **sampling service** — the configured negative sampler (RF-softmax
+//!    kernel tree or a baseline), including the logit adjustment
+//!    `log(m·q)` and accidental-hit masks;
+//! 3. **execution** — one PJRT call per step against the AOT artifacts
+//!    (`{prefix}_train_sampled`, `{prefix}_train_full`, `{prefix}_eval`,
+//!    …) whose shapes are *read from the manifest*, not assumed;
+//! 4. **state** — the [`ParamStore`] and optimizer; sparse row updates for
+//!    embedding tables, dense updates for the rest;
+//! 5. **propagation** — updated class embeddings pushed back into the
+//!    sampling tree (`O(D log n)` per touched class, paper §3.1);
+//! 6. **metrics** — per-phase timers and loss curves, dumped as JSON.
+//!
+//! Model shapes are discovered from `artifacts/manifest.json`, so the Rust
+//! side can never drift from what the Python AOT pipeline compiled.
+
+pub mod harness;
+mod lm;
+mod sampler_service;
+mod xc;
+
+pub use lm::LmTrainer;
+pub use sampler_service::{build_sampler, SamplerService};
+pub use xc::XcTrainer;
+
+use crate::config::{Config, SamplerKind};
+use crate::json::Json;
+use crate::metrics::Metrics;
+use crate::runtime::Runtime;
+use anyhow::{bail, Result};
+
+/// One evaluation point on the training curve.
+#[derive(Clone, Debug)]
+pub struct EvalPoint {
+    pub step: usize,
+    /// Fractional epoch at this step.
+    pub epoch: f64,
+    /// Smoothed training loss (sampled or full, whichever is optimized).
+    pub train_loss: f64,
+    /// Full-softmax validation loss.
+    pub eval_loss: f64,
+    /// Task metric: perplexity (LM) or PREC@1 (extreme).
+    pub metric: f64,
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub sampler: String,
+    pub history: Vec<EvalPoint>,
+    pub final_metric: f64,
+    pub final_eval_loss: f64,
+    pub steps_run: usize,
+    pub wall_seconds: f64,
+    pub metrics: Json,
+}
+
+impl TrainReport {
+    /// Render the history as a compact curve string for logs.
+    pub fn curve(&self) -> String {
+        self.history
+            .iter()
+            .map(|p| format!("({}, {:.2})", p.step, p.metric))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sampler", Json::from(self.sampler.as_str())),
+            ("final_metric", Json::from(self.final_metric)),
+            ("final_eval_loss", Json::from(self.final_eval_loss)),
+            ("steps", Json::from(self.steps_run)),
+            ("wall_seconds", Json::from(self.wall_seconds)),
+            (
+                "history",
+                Json::Arr(
+                    self.history
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("step", Json::from(p.step)),
+                                ("epoch", Json::from(p.epoch)),
+                                ("train_loss", Json::from(p.train_loss)),
+                                ("eval_loss", Json::from(p.eval_loss)),
+                                ("metric", Json::from(p.metric)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Task-dispatching trainer facade. Examples and benches construct this
+/// via [`TrainerBuilder`] and call [`Trainer::run`].
+pub enum Trainer<'rt> {
+    Lm(LmTrainer<'rt>),
+    Xc(XcTrainer<'rt>),
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn run(&mut self) -> Result<TrainReport> {
+        match self {
+            Trainer::Lm(t) => t.run(),
+            Trainer::Xc(t) => t.run(),
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        match self {
+            Trainer::Lm(t) => &t.metrics,
+            Trainer::Xc(t) => &t.metrics,
+        }
+    }
+}
+
+/// Builder resolving artifacts + data + sampler from a [`Config`] and an
+/// artifact prefix (e.g. `"ptb"`, `"bnews"`, `"xc_amazon"`).
+pub struct TrainerBuilder<'rt> {
+    runtime: &'rt Runtime,
+    prefix: String,
+    config: Config,
+    /// Sample negatives with the previous step's query embedding,
+    /// skipping the per-step encoder pass (systems ablation; see
+    /// DESIGN.md §Perf).
+    pub stale_sampling: bool,
+    /// Use the unnormalized-embedding artifact variants (`*_unnorm`) —
+    /// the paper's §4.2 normalization ablation. FULL sampler only.
+    pub unnormalized: bool,
+}
+
+impl<'rt> TrainerBuilder<'rt> {
+    pub fn new(runtime: &'rt Runtime, prefix: &str, config: Config) -> Self {
+        Self {
+            runtime,
+            prefix: prefix.to_string(),
+            config,
+            stale_sampling: false,
+            unnormalized: false,
+        }
+    }
+
+    pub fn stale_sampling(mut self, on: bool) -> Self {
+        self.stale_sampling = on;
+        self
+    }
+
+    pub fn unnormalized(mut self, on: bool) -> Self {
+        self.unnormalized = on;
+        self
+    }
+
+    pub fn build(self) -> Result<Trainer<'rt>> {
+        let key = format!("{}_train_sampled", self.prefix);
+        let meta = match self.runtime.manifest().get(&key) {
+            Some(m) => m,
+            None => bail!(
+                "no artifact '{key}' in manifest — is the prefix right? \
+                 available: {}",
+                self.runtime.manifest().names().join(", ")
+            ),
+        };
+        let kind = meta
+            .meta
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .unwrap_or("lm")
+            .to_string();
+        if self.unnormalized {
+            anyhow::ensure!(
+                self.config.sampler.kind == SamplerKind::Full,
+                "unnormalized mode is a FULL-softmax ablation (paper §4.2)"
+            );
+        }
+        match kind.as_str() {
+            "lm" => Ok(Trainer::Lm(LmTrainer::new(
+                self.runtime,
+                &self.prefix,
+                self.config,
+                self.stale_sampling,
+                self.unnormalized,
+            )?)),
+            "xc" => Ok(Trainer::Xc(XcTrainer::new(
+                self.runtime,
+                &self.prefix,
+                self.config,
+                self.unnormalized,
+            )?)),
+            other => bail!("unknown task kind '{other}' in manifest"),
+        }
+    }
+}
+
+/// Aggregate per-row gradients with duplicate row ids: returns unique row
+/// ids and their **summed** gradients (applying duplicates sequentially
+/// through a stateful optimizer would be wrong).
+pub fn aggregate_rows(
+    ids: &[u32],
+    grads: &[f32],
+    dim: usize,
+) -> (Vec<usize>, Vec<f32>) {
+    assert_eq!(grads.len(), ids.len() * dim);
+    let mut index: std::collections::HashMap<u32, usize> =
+        std::collections::HashMap::with_capacity(ids.len());
+    let mut unique: Vec<usize> = Vec::new();
+    let mut summed: Vec<f32> = Vec::new();
+    for (k, &id) in ids.iter().enumerate() {
+        let slot = *index.entry(id).or_insert_with(|| {
+            unique.push(id as usize);
+            summed.extend(std::iter::repeat(0.0).take(dim));
+            unique.len() - 1
+        });
+        let g = &grads[k * dim..(k + 1) * dim];
+        let dst = &mut summed[slot * dim..(slot + 1) * dim];
+        for (d, &x) in dst.iter_mut().zip(g) {
+            *d += x;
+        }
+    }
+    (unique, summed)
+}
+
+/// Was the run killed early by `$RFSM_MAX_STEPS` (CI guard)?
+pub fn step_cap() -> Option<usize> {
+    std::env::var("RFSM_MAX_STEPS").ok().and_then(|v| v.parse().ok())
+}
+
+/// Check that the configured sampler kind makes sense for training
+/// (shared validation for both tasks).
+pub(crate) fn validate_sampler_kind(kind: SamplerKind) -> Result<()> {
+    // All kinds are supported; Full bypasses sampling entirely.
+    let _ = kind;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_rows_sums_duplicates() {
+        let ids = [3u32, 1, 3];
+        let grads = [1.0f32, 1.0, 2.0, 2.0, 10.0, 10.0];
+        let (unique, summed) = aggregate_rows(&ids, &grads, 2);
+        assert_eq!(unique, vec![3, 1]);
+        assert_eq!(summed, vec![11.0, 11.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn aggregate_rows_empty() {
+        let (u, s) = aggregate_rows(&[], &[], 4);
+        assert!(u.is_empty() && s.is_empty());
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let r = TrainReport {
+            sampler: "rff".into(),
+            history: vec![EvalPoint {
+                step: 10,
+                epoch: 0.5,
+                train_loss: 2.0,
+                eval_loss: 2.1,
+                metric: 8.2,
+            }],
+            final_metric: 8.2,
+            final_eval_loss: 2.1,
+            steps_run: 10,
+            wall_seconds: 1.0,
+            metrics: Json::Null,
+        };
+        let j = r.to_json();
+        assert_eq!(j.at(&["history", "0", "step"]).unwrap().as_i64(), Some(10));
+        assert!(r.curve().contains("(10, 8.20)"));
+    }
+}

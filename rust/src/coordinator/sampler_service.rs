@@ -1,0 +1,222 @@
+//! Sampling service: builds the configured [`Sampler`] and packages each
+//! step's negative draw into the tensors the loss executable expects —
+//! the logit adjustment `log(m·q)` (paper eq. 5) and the accidental-hit
+//! mask (a sampled negative equal to an example's target gets its logit
+//! pushed to −∞, the standard sampled-softmax correction).
+
+use crate::config::{Config, SamplerKind};
+use crate::linalg::{l2_normalize, Matrix};
+use crate::rng::Rng;
+use crate::sampler::{
+    AliasSampler, ExactSoftmaxSampler, GumbelTopKSampler, LogUniformSampler,
+    NegativeDraw, QuadraticSampler, RffSampler, Sampler, UniformSampler,
+};
+use anyhow::{bail, Result};
+
+/// Build a sampler from config. `classes` must hold the *normalized*
+/// class embeddings (the kernel samplers assume the paper's normalized
+/// regime); `unigram` supplies the prior for [`SamplerKind::Unigram`].
+pub fn build_sampler(
+    cfg: &Config,
+    classes: &Matrix,
+    unigram: Option<&[f64]>,
+    rng: &mut Rng,
+) -> Result<Box<dyn Sampler>> {
+    let n = classes.rows();
+    let s = &cfg.sampler;
+    Ok(match s.kind {
+        SamplerKind::Rff => Box::new(RffSampler::with_kind(
+            classes,
+            s.dim,
+            s.nu,
+            s.feature_map,
+            rng,
+        )),
+        SamplerKind::Quadratic => {
+            // The quadratic map's D = d²+1 makes the full per-node tree
+            // cost O(n·d²) floats; above ~2 GB fall back to the bounded
+            // two-level bucket sampler (exact for the quadratic kernel).
+            let d = classes.cols();
+            let dim = d * d + 1;
+            let tree_bytes = 2 * n.next_power_of_two() * dim * 4;
+            if tree_bytes > 2 << 30 {
+                let map =
+                    crate::featmap::QuadraticMap::new(d, s.alpha, 1.0);
+                Box::new(crate::sampler::BucketKernelSampler::with_map(
+                    classes, map, 1024, "quadratic",
+                ))
+            } else {
+                Box::new(QuadraticSampler::new(classes, s.alpha, 1.0))
+            }
+        }
+        SamplerKind::Uniform => Box::new(UniformSampler::new(n)),
+        SamplerKind::LogUniform => Box::new(LogUniformSampler::new(n)),
+        SamplerKind::Unigram => match unigram {
+            Some(w) => Box::new(AliasSampler::new(w)),
+            None => bail!("unigram sampler requires a class prior"),
+        },
+        SamplerKind::Exact => {
+            Box::new(ExactSoftmaxSampler::new(classes, cfg.model.tau))
+        }
+        SamplerKind::Gumbel => {
+            Box::new(GumbelTopKSampler::new(classes, cfg.model.tau))
+        }
+        SamplerKind::Full => {
+            bail!("SamplerKind::Full does not use a sampling service")
+        }
+    })
+}
+
+/// One step's packaged negatives.
+#[derive(Clone, Debug)]
+pub struct NegativePack {
+    /// Sampled class ids (shared across the batch), length m.
+    pub ids: Vec<u32>,
+    /// `log(m·q_i)` adjustments, length m.
+    pub adjust: Vec<f32>,
+    /// Accidental-hit mask, `batch × m` (1 = keep, 0 = mask out).
+    pub mask: Vec<f32>,
+    /// Count of masked (accidental-hit) entries, for metrics.
+    pub accidental_hits: usize,
+}
+
+/// Wraps a sampler with query normalization, packaging and class-update
+/// propagation. Owns the per-run RNG stream for sampling.
+pub struct SamplerService {
+    sampler: Box<dyn Sampler>,
+    pub m: usize,
+    rng: Rng,
+}
+
+impl SamplerService {
+    pub fn new(sampler: Box<dyn Sampler>, m: usize, rng: Rng) -> Self {
+        assert!(m > 0);
+        Self { sampler, m, rng }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.sampler.name()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.sampler.num_classes()
+    }
+
+    /// Draw the step's shared negatives for query `h` (any scale; it is
+    /// normalized here) and package adjustments + masks against the
+    /// batch's targets.
+    pub fn draw(&mut self, h: &[f32], targets: &[u32]) -> NegativePack {
+        let mut q = h.to_vec();
+        l2_normalize(&mut q);
+        let draw: NegativeDraw = self.sampler.sample(&q, self.m, &mut self.rng);
+        self.package(draw, targets)
+    }
+
+    fn package(&self, draw: NegativeDraw, targets: &[u32]) -> NegativePack {
+        let m = draw.ids.len();
+        let log_m = (m as f64).ln();
+        let adjust: Vec<f32> = draw
+            .probs
+            .iter()
+            .map(|&p| (log_m + p.max(f64::MIN_POSITIVE).ln()) as f32)
+            .collect();
+        let mut mask = vec![1.0f32; targets.len() * m];
+        let mut hits = 0usize;
+        for (b, &t) in targets.iter().enumerate() {
+            for (j, &id) in draw.ids.iter().enumerate() {
+                if id == t {
+                    mask[b * m + j] = 0.0;
+                    hits += 1;
+                }
+            }
+        }
+        NegativePack { ids: draw.ids, adjust, mask, accidental_hits: hits }
+    }
+
+    /// Propagate an updated class embedding (normalized here) into the
+    /// sampler's structure — `O(D log n)` for the kernel tree.
+    pub fn update_class(&mut self, class: usize, embedding: &[f32]) {
+        let mut e = embedding.to_vec();
+        l2_normalize(&mut e);
+        self.sampler.update_class(class, &e);
+    }
+
+    /// Direct access for diagnostics (bias harness, tests).
+    pub fn sampler(&self) -> &dyn Sampler {
+        self.sampler.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::unit_vector;
+
+    fn service(n: usize, m: usize) -> SamplerService {
+        SamplerService::new(
+            Box::new(UniformSampler::new(n)),
+            m,
+            Rng::seeded(1),
+        )
+    }
+
+    #[test]
+    fn adjustment_is_log_mq() {
+        let mut s = service(100, 10);
+        let h = vec![1.0f32; 4];
+        let pack = s.draw(&h, &[0]);
+        // uniform q = 1/100, m = 10 ⇒ log(10/100) = log(0.1).
+        for &a in &pack.adjust {
+            assert!((a - (0.1f32).ln()).abs() < 1e-5, "adjust {a}");
+        }
+    }
+
+    #[test]
+    fn mask_flags_accidental_hits() {
+        let mut s = service(4, 50);
+        let h = vec![1.0f32; 2];
+        // With n=4 and m=50, targets will certainly collide.
+        let pack = s.draw(&h, &[2, 3]);
+        assert!(pack.accidental_hits > 0);
+        for (b, &t) in [2u32, 3u32].iter().enumerate() {
+            for (j, &id) in pack.ids.iter().enumerate() {
+                let want = if id == t { 0.0 } else { 1.0 };
+                assert_eq!(pack.mask[b * 50 + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn build_sampler_covers_kinds() {
+        let mut rng = Rng::seeded(2);
+        let classes = Matrix::randn(&mut rng, 20, 8).l2_normalized_rows();
+        let mut cfg = Config::default();
+        cfg.model.num_classes = 20;
+        cfg.sampler.dim = 16;
+        cfg.sampler.num_negatives = 5;
+        let prior: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        for kind in ["rff", "quadratic", "uniform", "loguniform", "unigram", "exact", "gumbel"] {
+            cfg.sampler.kind = SamplerKind::parse(kind).unwrap();
+            let s = build_sampler(&cfg, &classes, Some(&prior), &mut rng)
+                .unwrap_or_else(|e| panic!("{kind}: {e}"));
+            assert_eq!(s.num_classes(), 20, "{kind}");
+            let h = unit_vector(&mut rng, 8);
+            let draw = s.sample(&h, 5, &mut rng);
+            assert_eq!(draw.len(), 5, "{kind}");
+        }
+        cfg.sampler.kind = SamplerKind::Full;
+        assert!(build_sampler(&cfg, &classes, None, &mut rng).is_err());
+    }
+
+    #[test]
+    fn update_class_propagates() {
+        let mut rng = Rng::seeded(3);
+        let classes = Matrix::randn(&mut rng, 10, 4).l2_normalized_rows();
+        let sampler = Box::new(ExactSoftmaxSampler::new(&classes, 8.0));
+        let mut svc = SamplerService::new(sampler, 3, Rng::seeded(4));
+        let h = unit_vector(&mut rng, 4);
+        let before = svc.sampler().probability(&h, 1);
+        svc.update_class(1, &h);
+        assert!(svc.sampler().probability(&h, 1) > before);
+    }
+}

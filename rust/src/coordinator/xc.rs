@@ -1,0 +1,406 @@
+//! Extreme-classification training driver (AmazonCat-13K / Delicious-200K
+//! / WikiLSHTC experiments, paper Table 3).
+//!
+//! Architecture (mirrors `python/compile/model.py::xc_*`): sparse features
+//! → feature-embedding gather (Rust) → weighted sum → L2-normalized h →
+//! sampled softmax against the reduced multi-class target. The sampling
+//! query h is cheap enough here to compute in Rust directly (no encoder
+//! artifact needed).
+
+use super::sampler_service::{build_sampler, SamplerService};
+use super::{aggregate_rows, step_cap, EvalPoint, TrainReport};
+use crate::config::{Config, SamplerKind};
+use crate::data::extreme::{ExtremeDataset, ExtremeParams};
+use crate::data::SparseBatch;
+use crate::eval::batch_precision_at_k;
+use crate::linalg::{l2_normalize, Matrix};
+use crate::metrics::{Ewma, Metrics};
+use crate::model::ParamStore;
+use crate::optim::Optimizer;
+use crate::rng::Rng;
+use crate::runtime::{HostTensor, Runtime};
+use anyhow::{anyhow, Result};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct XcShapes {
+    pub n: usize,
+    pub d: usize,
+    pub v: usize,
+    pub nnz: usize,
+    pub batch: usize,
+    pub m: usize,
+    pub tau: f32,
+}
+
+pub struct XcTrainer<'rt> {
+    runtime: &'rt Runtime,
+    prefix: String,
+    cfg: Config,
+    pub shapes: XcShapes,
+    data: ExtremeDataset,
+    params: ParamStore,
+    optimizer: Optimizer,
+    service: Option<SamplerService>,
+    pub metrics: Metrics,
+    rng: Rng,
+    /// Use the `*_unnorm` artifact variants (§4.2 ablation; FULL only).
+    unnormalized: bool,
+}
+
+const W: usize = 0; // feature embeddings (v, d)
+const CLS: usize = 1; // class embeddings (n, d)
+
+impl<'rt> XcTrainer<'rt> {
+    pub fn new(
+        runtime: &'rt Runtime,
+        prefix: &str,
+        cfg: Config,
+        unnormalized: bool,
+    ) -> Result<Self> {
+        super::validate_sampler_kind(cfg.sampler.kind)?;
+        let meta = runtime
+            .manifest()
+            .get(&format!("{prefix}_train_sampled"))
+            .ok_or_else(|| anyhow!("missing {prefix}_train_sampled"))?;
+        let g = |k: &str| -> Result<usize> {
+            meta.meta_usize(k)
+                .ok_or_else(|| anyhow!("manifest meta missing '{k}'"))
+        };
+        let shapes = XcShapes {
+            n: g("n")?,
+            d: g("d")?,
+            v: g("v")?,
+            nnz: g("nnz")?,
+            batch: g("batch")?,
+            m: g("m")?,
+            tau: meta.meta_f64("tau").ok_or_else(|| anyhow!("meta tau"))? as f32,
+        };
+        anyhow::ensure!(
+            cfg.sampler.kind == SamplerKind::Full
+                || cfg.sampler.num_negatives == shapes.m,
+            "config m={} but artifact compiled for m={}",
+            cfg.sampler.num_negatives,
+            shapes.m
+        );
+
+        let data = ExtremeDataset::generate(&ExtremeParams {
+            num_classes: shapes.n,
+            feature_dim: shapes.v,
+            latent_dim: cfg.data.latent_dim.max(2),
+            nnz: shapes.nnz,
+            labels_per_example: cfg.data.labels_per_example,
+            train_examples: cfg.data.train_size,
+            test_examples: cfg.data.valid_size,
+            noise: cfg.data.noise,
+            candidates: if shapes.n > 20_000 { 4096 } else { 0 },
+            clusters: cfg.data.clusters,
+            seed: cfg.data.seed,
+        });
+
+        let mut rng = Rng::seeded(cfg.train.seed);
+        let mut params = ParamStore::new();
+        assert_eq!(
+            params.add_randn("w", &[shapes.v, shapes.d], 0.1, &mut rng),
+            W
+        );
+        assert_eq!(
+            params.add_randn("cls", &[shapes.n, shapes.d], 0.1, &mut rng),
+            CLS
+        );
+
+        let service = if cfg.sampler.kind == SamplerKind::Full {
+            None
+        } else {
+            let b = params.get(CLS);
+            let normalized = Matrix::from_vec(b.rows(), b.cols(), b.data.clone())
+                .l2_normalized_rows();
+            let prior = data.class_prior();
+            let sampler = build_sampler(&cfg, &normalized, Some(&prior), &mut rng)?;
+            Some(SamplerService::new(
+                sampler,
+                shapes.m,
+                Rng::seeded(cfg.sampler.seed),
+            ))
+        };
+
+        let optimizer = Optimizer::from_config(&cfg.train);
+        Ok(Self {
+            runtime,
+            prefix: prefix.to_string(),
+            cfg,
+            shapes,
+            data,
+            params,
+            optimizer,
+            service,
+            metrics: Metrics::new(),
+            rng,
+            unnormalized,
+        })
+    }
+
+    fn artifact(&self, entry: &str) -> String {
+        if self.unnormalized && matches!(entry, "train_full" | "scores") {
+            format!("{}_{entry}_unnorm", self.prefix)
+        } else {
+            format!("{}_{entry}", self.prefix)
+        }
+    }
+
+    fn train_entry(&self) -> String {
+        match self.cfg.sampler.kind {
+            SamplerKind::Full => self.artifact("train_full"),
+            // The absolute-softmax loss ([12]'s pairing for the quadratic
+            // kernel) is opt-in; see SamplerConfig::absolute.
+            SamplerKind::Quadratic if self.cfg.sampler.absolute => {
+                self.artifact("train_sampled_abs")
+            }
+            _ => self.artifact("train_sampled"),
+        }
+    }
+
+    fn sampler_name(&self) -> &'static str {
+        match &self.service {
+            Some(s) => s.name(),
+            None => "full",
+        }
+    }
+
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let t0 = Instant::now();
+        let total_steps = step_cap()
+            .map(|c| c.min(self.cfg.train.steps))
+            .unwrap_or(self.cfg.train.steps);
+        let bsz = self.shapes.batch;
+        let ntrain = self.data.train.len();
+
+        let mut ewma = Ewma::new(0.05);
+        let mut history = Vec::new();
+        for step in 1..=total_steps {
+            // Batch assembly: random with-replacement example draw.
+            let idx: Vec<usize> =
+                (0..bsz).map(|_| self.rng.index(ntrain)).collect();
+            let mut data_rng = self.rng.split();
+            let batch = self.data.train_batch(&idx, &mut data_rng);
+            let loss = self.step(&batch)?;
+            let smooth = ewma.record(loss);
+            self.metrics.observe("train_loss", loss);
+            self.metrics.incr("steps", 1);
+
+            if step % self.cfg.train.eval_every == 0 || step == total_steps {
+                let (p1, p3, p5) = self.evaluate()?;
+                history.push(EvalPoint {
+                    step,
+                    epoch: step as f64 * bsz as f64 / ntrain as f64,
+                    train_loss: smooth,
+                    eval_loss: smooth,
+                    metric: p1,
+                });
+                self.metrics.observe("prec_at_3", p3);
+                self.metrics.observe("prec_at_5", p5);
+            }
+        }
+
+        let last = history.last().cloned().unwrap_or(EvalPoint {
+            step: 0,
+            epoch: 0.0,
+            train_loss: f64::NAN,
+            eval_loss: f64::NAN,
+            metric: f64::NAN,
+        });
+        Ok(TrainReport {
+            sampler: self.sampler_name().to_string(),
+            history,
+            final_metric: last.metric,
+            final_eval_loss: last.eval_loss,
+            steps_run: total_steps,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            metrics: self.metrics.to_json(),
+        })
+    }
+
+    /// Final PREC@{1,3,5} (the Table-3 row for this sampler).
+    pub fn final_precisions(&mut self) -> Result<(f64, f64, f64)> {
+        self.evaluate()
+    }
+
+    fn step(&mut self, batch: &SparseBatch) -> Result<f64> {
+        if self.cfg.sampler.kind == SamplerKind::Full {
+            self.step_full(batch)
+        } else {
+            self.step_sampled(batch)
+        }
+    }
+
+    /// Input embedding h for one example, computed Rust-side (used as the
+    /// shared sampling query).
+    fn query_of_batch(&self, batch: &SparseBatch) -> Vec<f32> {
+        let d = self.shapes.d;
+        let w = self.params.get(W);
+        let mut q = vec![0.0f32; d];
+        for i in 0..batch.batch {
+            let (feats, vals) = batch.feature_row(i);
+            let mut h = vec![0.0f32; d];
+            for (&f, &v) in feats.iter().zip(vals) {
+                for (hj, &wj) in h.iter_mut().zip(w.row(f as usize)) {
+                    *hj += v * wj;
+                }
+            }
+            l2_normalize(&mut h);
+            for (qj, hj) in q.iter_mut().zip(&h) {
+                *qj += hj;
+            }
+        }
+        l2_normalize(&mut q);
+        q
+    }
+
+    fn step_sampled(&mut self, batch: &SparseBatch) -> Result<f64> {
+        let s = &self.shapes;
+        let (bsz, nnz, d, m) = (s.batch, s.nnz, s.d, s.m);
+
+        let t_sample = Instant::now();
+        let query = self.query_of_batch(batch);
+        let svc = self.service.as_mut().expect("sampled step without service");
+        let pack = svc.draw(&query, &batch.targets);
+        self.metrics
+            .incr("accidental_hits", pack.accidental_hits as u64);
+        self.metrics.record_duration("sample", t_sample.elapsed());
+
+        let t_exec = Instant::now();
+        let feat_emb = super::lm::gather_rows(
+            &self.params.get(W).data,
+            d,
+            &batch.features,
+        );
+        let tgt_emb = super::lm::gather_rows(
+            &self.params.get(CLS).data,
+            d,
+            &batch.targets,
+        );
+        let neg_emb =
+            super::lm::gather_rows(&self.params.get(CLS).data, d, &pack.ids);
+        let exe = self.runtime.get(&self.train_entry())?;
+        let outs = exe.run(&[
+            HostTensor::f32(&[bsz, nnz, d], feat_emb),
+            HostTensor::f32(&[bsz, nnz], batch.values.clone()),
+            HostTensor::f32(&[bsz, d], tgt_emb),
+            HostTensor::f32(&[m, d], neg_emb),
+            HostTensor::f32(&[m], pack.adjust.clone()),
+            HostTensor::f32(&[bsz, m], pack.mask.clone()),
+        ])?;
+        self.metrics.record_duration("execute", t_exec.elapsed());
+        let loss = outs[0].scalar() as f64;
+
+        let t_opt = Instant::now();
+        let (rows, grads) = aggregate_rows(&batch.features, outs[1].as_f32(), d);
+        {
+            let param = self.params.get_mut(W);
+            self.optimizer.update_rows(W, &mut param.data, d, &rows, &grads);
+        }
+        let mut cls_ids: Vec<u32> = batch.targets.clone();
+        cls_ids.extend_from_slice(&pack.ids);
+        let mut cls_grads: Vec<f32> = outs[2].as_f32().to_vec();
+        cls_grads.extend_from_slice(outs[3].as_f32());
+        let (crow, cgrads) = aggregate_rows(&cls_ids, &cls_grads, d);
+        {
+            let param = self.params.get_mut(CLS);
+            self.optimizer.update_rows(CLS, &mut param.data, d, &crow, &cgrads);
+        }
+        self.metrics.record_duration("optimize", t_opt.elapsed());
+
+        let t_tree = Instant::now();
+        let cls_block = self.params.get(CLS);
+        let svc = self.service.as_mut().unwrap();
+        for &r in &crow {
+            svc.update_class(r, cls_block.row(r));
+        }
+        self.metrics.record_duration("tree_update", t_tree.elapsed());
+        Ok(loss)
+    }
+
+    fn step_full(&mut self, batch: &SparseBatch) -> Result<f64> {
+        let s = &self.shapes;
+        let (bsz, nnz, d) = (s.batch, s.nnz, s.d);
+        let feat_emb = super::lm::gather_rows(
+            &self.params.get(W).data,
+            d,
+            &batch.features,
+        );
+        let targets: Vec<i32> =
+            batch.targets.iter().map(|&t| t as i32).collect();
+        let exe = self.runtime.get(&self.artifact("train_full"))?;
+        let t_exec = Instant::now();
+        let outs = exe.run(&[
+            HostTensor::f32(&[bsz, nnz, d], feat_emb),
+            HostTensor::f32(&[bsz, nnz], batch.values.clone()),
+            {
+                let b = self.params.get(CLS);
+                HostTensor::f32(&b.shape, b.data.clone())
+            },
+            HostTensor::i32(&[bsz], targets),
+        ])?;
+        self.metrics.record_duration("execute", t_exec.elapsed());
+        let loss = outs[0].scalar() as f64;
+
+        let (rows, grads) = aggregate_rows(&batch.features, outs[1].as_f32(), d);
+        {
+            let param = self.params.get_mut(W);
+            self.optimizer.update_rows(W, &mut param.data, d, &rows, &grads);
+        }
+        {
+            let grad = outs[2].as_f32().to_vec();
+            let param = self.params.get_mut(CLS);
+            self.optimizer.update_dense(CLS, &mut param.data, &grad);
+        }
+        Ok(loss)
+    }
+
+    /// PREC@{1,3,5} on the test split via the scores artifact.
+    pub fn evaluate(&mut self) -> Result<(f64, f64, f64)> {
+        let s = &self.shapes;
+        let (bsz, nnz, d, n) = (s.batch, s.nnz, s.d, s.n);
+        let exe = self.runtime.get(&self.artifact("scores"))?;
+        let t_eval = Instant::now();
+        let mut p1 = 0.0;
+        let mut p3 = 0.0;
+        let mut p5 = 0.0;
+        let mut batches = 0usize;
+        let eval_examples = (self.cfg.train.eval_batches * bsz)
+            .min(self.data.test.len() / bsz * bsz);
+        for chunk in (0..eval_examples).collect::<Vec<_>>().chunks(bsz) {
+            if chunk.len() < bsz {
+                break;
+            }
+            let mut features = Vec::with_capacity(bsz * nnz);
+            let mut values = Vec::with_capacity(bsz * nnz);
+            let mut labels: Vec<Vec<u32>> = Vec::with_capacity(bsz);
+            for &i in chunk {
+                let ex = &self.data.test[i];
+                features.extend_from_slice(&ex.features);
+                values.extend_from_slice(&ex.values);
+                labels.push(ex.labels.clone());
+            }
+            let feat_emb =
+                super::lm::gather_rows(&self.params.get(W).data, d, &features);
+            let outs = exe.run(&[
+                HostTensor::f32(&[bsz, nnz, d], feat_emb),
+                HostTensor::f32(&[bsz, nnz], values),
+                {
+                    let b = self.params.get(CLS);
+                    HostTensor::f32(&b.shape, b.data.clone())
+                },
+            ])?;
+            let scores = outs[0].as_f32();
+            p1 += batch_precision_at_k(scores, n, &labels, 1);
+            p3 += batch_precision_at_k(scores, n, &labels, 3);
+            p5 += batch_precision_at_k(scores, n, &labels, 5);
+            batches += 1;
+        }
+        self.metrics.record_duration("eval", t_eval.elapsed());
+        anyhow::ensure!(batches > 0, "no eval batches");
+        let b = batches as f64;
+        Ok((p1 / b, p3 / b, p5 / b))
+    }
+}

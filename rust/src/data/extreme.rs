@@ -1,0 +1,403 @@
+//! Planted-embedding extreme-classification generator (AmazonCat-13K /
+//! Delicious-200K / WikiLSHTC stand-in; DESIGN.md §2).
+//!
+//! Generative model with a known Bayes-optimal ranking:
+//!
+//! 1. ground-truth class vectors `c*_1..c*_n` on the unit sphere of ℝ^{d*};
+//! 2. each feature `f ∈ [v]` carries a latent vector `a_f` (gaussian);
+//! 3. an example draws `nnz` feature ids from a Zipf prior, sums their
+//!    latents (+ noise) into a normalized latent `u`;
+//! 4. its label set is the top `labels_per_example` classes by `uᵀc*_i`
+//!    over a random candidate subset (exact top-k over all n for modest n).
+//!
+//! Training pairs follow the paper's multi-label→multi-class reduction
+//! (footnote 1): each step samples one positive label as the target.
+//! PREC@k against the held-out label sets has a meaningful ceiling because
+//! the optimal predictor recovers `u ↦ top-k(uᵀc*)`.
+
+use super::SparseBatch;
+use crate::linalg::{dot, l2_normalize, Matrix};
+use crate::rng::{Rng, Zipf};
+
+#[derive(Clone, Debug)]
+pub struct ExtremeParams {
+    pub num_classes: usize,
+    pub feature_dim: usize,
+    /// Latent dimension d* of the planted model.
+    pub latent_dim: usize,
+    /// Active features per example.
+    pub nnz: usize,
+    pub labels_per_example: usize,
+    pub train_examples: usize,
+    pub test_examples: usize,
+    /// Gaussian noise std added to the latent before ranking.
+    pub noise: f64,
+    /// Candidate-subset size for label selection (caps generation cost at
+    /// large n; `0` ⇒ rank all classes).
+    pub candidates: usize,
+    /// Topic clusters: each example draws all of its features from one
+    /// cluster's feature pool, so the latent distribution has `clusters`
+    /// modes and the induced label distribution concentrates — without
+    /// this, labels spread over nearly every class and PREC@k is
+    /// unlearnable at our reduced train-set sizes (the paper's datasets
+    /// have 10⁵–10⁶ examples). `0` disables clustering.
+    pub clusters: usize,
+    pub seed: u64,
+}
+
+impl Default for ExtremeParams {
+    fn default() -> Self {
+        Self {
+            num_classes: 1000,
+            feature_dim: 8192,
+            latent_dim: 32,
+            nnz: 16,
+            labels_per_example: 3,
+            train_examples: 20_000,
+            test_examples: 2000,
+            noise: 0.3,
+            candidates: 0,
+            clusters: 200,
+            seed: 11,
+        }
+    }
+}
+
+/// One example: sparse features + ground-truth label set.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub features: Vec<u32>,
+    pub values: Vec<f32>,
+    pub labels: Vec<u32>,
+}
+
+pub struct ExtremeDataset {
+    pub params: ExtremeParams,
+    pub train: Vec<Example>,
+    pub test: Vec<Example>,
+    /// Planted class vectors (diagnostics / Bayes ceiling only).
+    pub true_classes: Matrix,
+    /// Per-class positive counts in train (for unigram priors).
+    pub class_freq: Vec<u64>,
+}
+
+impl ExtremeDataset {
+    pub fn generate(p: &ExtremeParams) -> Self {
+        assert!(p.labels_per_example >= 1);
+        assert!(p.nnz >= 1 && p.nnz <= p.feature_dim);
+        let mut rng = Rng::seeded(p.seed);
+        let true_classes =
+            Matrix::randn(&mut rng, p.num_classes, p.latent_dim)
+                .l2_normalized_rows();
+        let feat_latents =
+            Matrix::randn_scaled(&mut rng, p.feature_dim, p.latent_dim, 1.0);
+        let feat_prior = Zipf::new(p.feature_dim, 1.0);
+        // Cluster-restricted feature prior: cluster c owns features
+        // {f : f ≡ c (mod clusters)}; within a pool, rank-Zipf.
+        let clusters = p.clusters.min(p.feature_dim / p.nnz.max(1)).max(0);
+        let cluster_prior =
+            if clusters > 0 { Some(Zipf::new(clusters, 1.0)) } else { None };
+        let pool_size = if clusters > 0 {
+            p.feature_dim / clusters
+        } else {
+            0
+        };
+        let pool_rank =
+            if clusters > 0 { Some(Zipf::new(pool_size, 1.0)) } else { None };
+        // Cluster centers on the latent sphere: in clustered mode the
+        // example latent is center + noise, so the induced label sets
+        // concentrate to a few per cluster (learnable from the
+        // cluster-exclusive features).
+        let centers = if clusters > 0 {
+            Some(
+                Matrix::randn(&mut rng, clusters, p.latent_dim)
+                    .l2_normalized_rows(),
+            )
+        } else {
+            None
+        };
+        // Per-cluster label shortlists: the top classes by center·c*.
+        // Example latents are center + small noise, so their true top-k
+        // lies inside the shortlist with overwhelming probability — this
+        // replaces a full n-way ranking per example with a 256-way one
+        // (a random candidate subset would destroy the planted structure:
+        // different examples of one cluster would rank disjoint subsets).
+        let shortlist_len = (64 * p.labels_per_example).clamp(64, 512).min(p.num_classes);
+        let shortlists: Option<Vec<Vec<u32>>> = centers.as_ref().map(|ctr| {
+            (0..clusters)
+                .map(|c| {
+                    let mut scored: Vec<(f32, u32)> = (0..p.num_classes)
+                        .map(|i| {
+                            (dot(ctr.row(c), true_classes.row(i)), i as u32)
+                        })
+                        .collect();
+                    scored.select_nth_unstable_by(
+                        shortlist_len - 1,
+                        |a, b| b.0.partial_cmp(&a.0).unwrap(),
+                    );
+                    scored.truncate(shortlist_len);
+                    scored.into_iter().map(|(_, i)| i).collect()
+                })
+                .collect()
+        });
+
+        let gen_one = |rng: &mut Rng| -> Example {
+            // Distinct feature ids, drawn from one cluster's pool (or the
+            // global Zipf prior when clustering is disabled).
+            let mut feats = Vec::with_capacity(p.nnz);
+            let mut seen = std::collections::HashSet::new();
+            let mut u = vec![0.0f32; p.latent_dim];
+            let mut cluster_of_example: Option<usize> = None;
+            match (&cluster_prior, &pool_rank, &centers) {
+                (Some(cp), Some(pr), Some(ctr)) => {
+                    let c = cp.sample(rng) as u32;
+                    cluster_of_example = Some(c as usize);
+                    while feats.len() < p.nnz {
+                        let rank = pr.sample(rng) as u32;
+                        let f = rank * clusters as u32 + c;
+                        if seen.insert(f) {
+                            feats.push(f);
+                        }
+                    }
+                    // Latent = cluster center + noise. `noise` is the
+                    // expected *norm* of the perturbation relative to the
+                    // unit center, so scale per-coordinate by 1/√d*.
+                    let per_coord = p.noise / (p.latent_dim as f64).sqrt();
+                    for (ui, &ci) in u.iter_mut().zip(ctr.row(c as usize)) {
+                        *ui = ci + (rng.gaussian() * per_coord) as f32;
+                    }
+                }
+                _ => {
+                    while feats.len() < p.nnz {
+                        let f = feat_prior.sample(rng) as u32;
+                        if seen.insert(f) {
+                            feats.push(f);
+                        }
+                    }
+                    // Latent = normalized sum of feature latents + noise.
+                    for &f in &feats {
+                        for (ui, ai) in
+                            u.iter_mut().zip(feat_latents.row(f as usize))
+                        {
+                            *ui += ai;
+                        }
+                    }
+                    for ui in u.iter_mut() {
+                        *ui += (rng.gaussian() * p.noise) as f32;
+                    }
+                }
+            }
+            l2_normalize(&mut u);
+            let values = vec![1.0f32; p.nnz];
+            // Label set = top-k classes by u·c*: over the cluster's
+            // shortlist when clustered, else over candidates / all n.
+            let candidates: Vec<usize> = match (&shortlists, cluster_of_example) {
+                (Some(sl), Some(c)) => {
+                    sl[c].iter().map(|&i| i as usize).collect()
+                }
+                _ if p.candidates == 0 || p.candidates >= p.num_classes => {
+                    (0..p.num_classes).collect()
+                }
+                _ => {
+                    let mut c =
+                        rng.sample_distinct(p.num_classes, p.candidates);
+                    c.sort_unstable();
+                    c
+                }
+            };
+            let mut scored: Vec<(f32, u32)> = candidates
+                .iter()
+                .map(|&i| (dot(&u, true_classes.row(i)), i as u32))
+                .collect();
+            let k = p.labels_per_example.min(scored.len());
+            scored.select_nth_unstable_by(k - 1, |a, b| {
+                b.0.partial_cmp(&a.0).unwrap()
+            });
+            scored.truncate(k);
+            let labels: Vec<u32> = scored.into_iter().map(|(_, i)| i).collect();
+            Example { features: feats, values, labels }
+        };
+
+        let train: Vec<Example> =
+            (0..p.train_examples).map(|_| gen_one(&mut rng)).collect();
+        let test: Vec<Example> =
+            (0..p.test_examples).map(|_| gen_one(&mut rng)).collect();
+
+        let mut class_freq = vec![0u64; p.num_classes];
+        for ex in &train {
+            for &l in &ex.labels {
+                class_freq[l as usize] += 1;
+            }
+        }
+        Self { params: p.clone(), train, test, true_classes, class_freq }
+    }
+
+    /// Assemble a training batch: one uniformly-drawn positive label per
+    /// example (multi-label → multi-class reduction).
+    pub fn train_batch(
+        &self,
+        indices: &[usize],
+        rng: &mut Rng,
+    ) -> SparseBatch {
+        let p = &self.params;
+        let b = indices.len();
+        let mut features = Vec::with_capacity(b * p.nnz);
+        let mut values = Vec::with_capacity(b * p.nnz);
+        let mut targets = Vec::with_capacity(b);
+        for &i in indices {
+            let ex = &self.train[i];
+            features.extend_from_slice(&ex.features);
+            values.extend_from_slice(&ex.values);
+            targets.push(ex.labels[rng.index(ex.labels.len())]);
+        }
+        SparseBatch { features, values, targets, batch: b, nnz: p.nnz }
+    }
+
+    /// Smoothed unigram prior over classes.
+    pub fn class_prior(&self) -> Vec<f64> {
+        self.class_freq.iter().map(|&c| (c + 1) as f64).collect()
+    }
+
+    /// Bayes-optimal PREC@k on the test split (score classes by the
+    /// planted `uᵀc*` with the noiseless latent reconstructed from
+    /// features) — the ceiling our trained models chase. Noise in label
+    /// generation keeps this below 1.
+    pub fn bayes_prec_at_k(&self, k: usize) -> f64 {
+        // Reconstruct each test latent from its features via the same
+        // generator (without noise) — we regenerate feat latents from the
+        // stored seed to stay self-contained.
+        let p = &self.params;
+        let mut rng = Rng::seeded(p.seed);
+        let _classes =
+            Matrix::randn(&mut rng, p.num_classes, p.latent_dim);
+        let feat_latents =
+            Matrix::randn_scaled(&mut rng, p.feature_dim, p.latent_dim, 1.0);
+        // Mirror generate()'s RNG consumption order exactly.
+        let clusters = p.clusters.min(p.feature_dim / p.nnz.max(1));
+        let centers = if clusters > 0 {
+            Some(
+                Matrix::randn(&mut rng, clusters, p.latent_dim)
+                    .l2_normalized_rows(),
+            )
+        } else {
+            None
+        };
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for ex in &self.test {
+            let mut u = vec![0.0f32; p.latent_dim];
+            if let Some(ctr) = &centers {
+                // Cluster id is recoverable from any feature (pools are
+                // residue classes mod `clusters`).
+                let c = ex.features[0] as usize % clusters;
+                u.copy_from_slice(ctr.row(c));
+            } else {
+                for &f in &ex.features {
+                    for (ui, ai) in
+                        u.iter_mut().zip(feat_latents.row(f as usize))
+                    {
+                        *ui += ai;
+                    }
+                }
+            }
+            l2_normalize(&mut u);
+            let mut scored: Vec<(f32, u32)> = (0..p.num_classes)
+                .map(|i| (dot(&u, self.true_classes.row(i)), i as u32))
+                .collect();
+            let kk = k.min(scored.len());
+            scored.select_nth_unstable_by(kk - 1, |a, b| {
+                b.0.partial_cmp(&a.0).unwrap()
+            });
+            scored.truncate(kk);
+            let labelset: std::collections::HashSet<u32> =
+                ex.labels.iter().copied().collect();
+            hits += scored.iter().filter(|(_, i)| labelset.contains(i)).count();
+            total += kk;
+        }
+        hits as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ExtremeParams {
+        ExtremeParams {
+            num_classes: 50,
+            feature_dim: 500,
+            latent_dim: 8,
+            nnz: 6,
+            labels_per_example: 3,
+            train_examples: 300,
+            test_examples: 100,
+            noise: 0.2,
+            candidates: 0,
+            clusters: 10,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let d = ExtremeDataset::generate(&small());
+        assert_eq!(d.train.len(), 300);
+        assert_eq!(d.test.len(), 100);
+        for ex in d.train.iter().chain(d.test.iter()) {
+            assert_eq!(ex.features.len(), 6);
+            assert_eq!(ex.labels.len(), 3);
+            assert!(ex.features.iter().all(|&f| (f as usize) < 500));
+            assert!(ex.labels.iter().all(|&l| (l as usize) < 50));
+            let set: std::collections::HashSet<_> = ex.features.iter().collect();
+            assert_eq!(set.len(), 6, "duplicate features");
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = ExtremeDataset::generate(&small());
+        let b = ExtremeDataset::generate(&small());
+        assert_eq!(a.train[0].features, b.train[0].features);
+        assert_eq!(a.train[0].labels, b.train[0].labels);
+    }
+
+    #[test]
+    fn bayes_ceiling_is_high() {
+        // With modest noise the planted ranking should recover most labels.
+        let d = ExtremeDataset::generate(&small());
+        let prec1 = d.bayes_prec_at_k(1);
+        assert!(prec1 > 0.5, "bayes PREC@1 too low: {prec1}");
+        // And PREC@k decreases in k (labels_per_example = 3 < ranked 5).
+        let prec5 = d.bayes_prec_at_k(5);
+        assert!(prec5 <= prec1 + 1e-9);
+    }
+
+    #[test]
+    fn train_batch_targets_are_positive_labels() {
+        let d = ExtremeDataset::generate(&small());
+        let mut rng = Rng::seeded(9);
+        let batch = d.train_batch(&[0, 1, 2, 3], &mut rng);
+        assert_eq!(batch.batch, 4);
+        for i in 0..4 {
+            assert!(d.train[i].labels.contains(&batch.targets[i]));
+            let (f, v) = batch.feature_row(i);
+            assert_eq!(f, &d.train[i].features[..]);
+            assert_eq!(v.len(), 6);
+        }
+    }
+
+    #[test]
+    fn class_prior_positive_everywhere() {
+        let d = ExtremeDataset::generate(&small());
+        assert!(d.class_prior().iter().all(|&w| w > 0.0));
+        assert_eq!(d.class_prior().len(), 50);
+    }
+
+    #[test]
+    fn candidate_capping_works() {
+        let mut p = small();
+        p.candidates = 10;
+        let d = ExtremeDataset::generate(&p);
+        assert_eq!(d.train.len(), 300);
+    }
+}

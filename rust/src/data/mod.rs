@@ -1,0 +1,59 @@
+//! Dataset substrates.
+//!
+//! The paper evaluates on licensed corpora (PennTreeBank, Bnews) and the
+//! extreme-classification repository, none of which are redistributable or
+//! reachable here (repro band 0). Per DESIGN.md §2 we implement synthetic
+//! generators that preserve the properties the paper's comparisons
+//! actually exercise:
+//!
+//! * [`synthlm`] — Zipf–Markov language corpus: heavy-tailed unigram
+//!   class frequencies (what separates UNIFORM from softmax-tracking
+//!   samplers) plus low-rank bigram structure (so the model has something
+//!   to learn and the class-embedding geometry evolves during training).
+//! * [`extreme`] — planted-embedding sparse multi-label generator with a
+//!   known Bayes-optimal ranking (so PREC@k has a meaningful ceiling).
+//! * [`usps_like`] — normalized vectors with a USPS-like cosine spread for
+//!   the Table-1 kernel-MSE harness.
+
+pub mod extreme;
+pub mod synthlm;
+pub mod usps_like;
+
+/// A batch of language-model examples: fixed-length contexts + next-token
+/// targets. Layout matches the AOT `train_step` executable's inputs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LmBatch {
+    /// `batch × seq_len` token ids, row-major.
+    pub contexts: Vec<u32>,
+    /// `batch` target ids.
+    pub targets: Vec<u32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl LmBatch {
+    pub fn context(&self, i: usize) -> &[u32] {
+        &self.contexts[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+}
+
+/// A batch of extreme-classification examples: sparse features + one
+/// target class (multi-label reduced to multi-class per paper footnote 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseBatch {
+    /// `batch × nnz` active feature ids, row-major.
+    pub features: Vec<u32>,
+    /// `batch × nnz` feature values.
+    pub values: Vec<f32>,
+    /// `batch` target class ids.
+    pub targets: Vec<u32>,
+    pub batch: usize,
+    pub nnz: usize,
+}
+
+impl SparseBatch {
+    pub fn feature_row(&self, i: usize) -> (&[u32], &[f32]) {
+        let s = i * self.nnz;
+        (&self.features[s..s + self.nnz], &self.values[s..s + self.nnz])
+    }
+}

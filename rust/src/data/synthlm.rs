@@ -1,0 +1,283 @@
+//! Synthetic Zipf–Markov language corpus (PennTreeBank / Bnews stand-in;
+//! DESIGN.md §2).
+//!
+//! Word ids are frequency-ranked (id 0 = most frequent), drawn from a
+//! Zipf(s) unigram prior blended with a low-rank Markov channel: each word
+//! belongs to one of `rank` topics, and with probability `markov_weight`
+//! the next word is drawn from the *successor topic's* word distribution
+//! instead of the prior. The result has (a) natural-language-like
+//! heavy-tailed class frequencies and (b) learnable bigram structure, the
+//! two properties the paper's sampler comparisons exercise.
+
+use super::LmBatch;
+use crate::rng::{AliasTable, Rng, Zipf};
+
+/// Corpus generator + tokenized train/valid splits.
+pub struct SynthCorpus {
+    pub vocab_size: usize,
+    pub train: Vec<u32>,
+    pub valid: Vec<u32>,
+    /// Empirical unigram counts over the train split (for unigram priors).
+    pub unigram: Vec<u64>,
+    /// Topic assignment per word (generation ground truth; useful for
+    /// diagnostics, not visible to the model).
+    pub topic: Vec<u16>,
+}
+
+/// Generation parameters.
+#[derive(Clone, Debug)]
+pub struct SynthLmParams {
+    pub vocab_size: usize,
+    pub zipf_s: f64,
+    pub rank: usize,
+    pub markov_weight: f64,
+    pub train_tokens: usize,
+    pub valid_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for SynthLmParams {
+    fn default() -> Self {
+        Self {
+            vocab_size: 10_000,
+            zipf_s: 1.0,
+            rank: 16,
+            markov_weight: 0.7,
+            train_tokens: 200_000,
+            valid_tokens: 20_000,
+            seed: 7,
+        }
+    }
+}
+
+impl SynthCorpus {
+    pub fn generate(p: &SynthLmParams) -> Self {
+        assert!(p.vocab_size >= 2);
+        assert!(p.rank >= 1);
+        assert!((0.0..=1.0).contains(&p.markov_weight));
+        let mut rng = Rng::seeded(p.seed);
+        let n = p.vocab_size;
+        let prior = Zipf::new(n, p.zipf_s);
+
+        // Topic structure: word w belongs to topic w % rank; topic z's
+        // successor topic is (z+1) % rank; topic z's word distribution is
+        // the Zipf prior restricted to its members (renormalized).
+        let topic: Vec<u16> = (0..n).map(|w| (w % p.rank) as u16).collect();
+        let pmf = prior.pmf();
+        let mut topic_tables: Vec<AliasTable> = Vec::with_capacity(p.rank);
+        let mut topic_members: Vec<Vec<u32>> = vec![Vec::new(); p.rank];
+        for w in 0..n {
+            topic_members[w % p.rank].push(w as u32);
+        }
+        for z in 0..p.rank {
+            let weights: Vec<f64> =
+                topic_members[z].iter().map(|&w| pmf[w as usize]).collect();
+            topic_tables.push(AliasTable::new(&weights));
+        }
+
+        let total = p.train_tokens + p.valid_tokens;
+        let mut tokens = Vec::with_capacity(total);
+        let mut prev = prior.sample(&mut rng) as u32;
+        tokens.push(prev);
+        while tokens.len() < total {
+            let next = if rng.bernoulli(p.markov_weight) {
+                let z = (topic[prev as usize] as usize + 1) % p.rank;
+                let k = topic_tables[z].sample(&mut rng);
+                topic_members[z][k]
+            } else {
+                prior.sample(&mut rng) as u32
+            };
+            tokens.push(next);
+            prev = next;
+        }
+
+        let valid = tokens.split_off(p.train_tokens);
+        let mut unigram = vec![0u64; n];
+        for &t in &tokens {
+            unigram[t as usize] += 1;
+        }
+        Self { vocab_size: n, train: tokens, valid, unigram, topic }
+    }
+
+    /// Unigram prior with add-one smoothing (for the unigram sampler).
+    pub fn unigram_prior(&self) -> Vec<f64> {
+        self.unigram.iter().map(|&c| (c + 1) as f64).collect()
+    }
+
+    /// Iterator over `(context, target)` training windows with the given
+    /// epoch's deterministic shuffled order.
+    pub fn batches<'a>(
+        &'a self,
+        split: Split,
+        seq_len: usize,
+        batch: usize,
+        epoch_seed: u64,
+    ) -> LmBatchIter<'a> {
+        let tokens = match split {
+            Split::Train => &self.train,
+            Split::Valid => &self.valid,
+        };
+        assert!(
+            tokens.len() > seq_len,
+            "split too small for seq_len {seq_len}"
+        );
+        let num_windows = tokens.len() - seq_len;
+        let mut order: Vec<usize> = (0..num_windows).collect();
+        if matches!(split, Split::Train) {
+            Rng::seeded(epoch_seed).shuffle(&mut order);
+        }
+        LmBatchIter { tokens, order, pos: 0, seq_len, batch }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Valid,
+}
+
+/// Iterator yielding [`LmBatch`]es; the final partial batch is dropped
+/// (fixed shapes are required by the AOT executables).
+pub struct LmBatchIter<'a> {
+    tokens: &'a [u32],
+    order: Vec<usize>,
+    pos: usize,
+    seq_len: usize,
+    batch: usize,
+}
+
+impl<'a> Iterator for LmBatchIter<'a> {
+    type Item = LmBatch;
+
+    fn next(&mut self) -> Option<LmBatch> {
+        if self.pos + self.batch > self.order.len() {
+            return None;
+        }
+        let mut contexts = Vec::with_capacity(self.batch * self.seq_len);
+        let mut targets = Vec::with_capacity(self.batch);
+        for k in 0..self.batch {
+            let start = self.order[self.pos + k];
+            contexts.extend_from_slice(&self.tokens[start..start + self.seq_len]);
+            targets.push(self.tokens[start + self.seq_len]);
+        }
+        self.pos += self.batch;
+        Some(LmBatch { contexts, targets, batch: self.batch, seq_len: self.seq_len })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SynthLmParams {
+        SynthLmParams {
+            vocab_size: 100,
+            zipf_s: 1.0,
+            rank: 4,
+            markov_weight: 0.6,
+            train_tokens: 5000,
+            valid_tokens: 500,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn sizes_and_ranges() {
+        let c = SynthCorpus::generate(&small());
+        assert_eq!(c.train.len(), 5000);
+        assert_eq!(c.valid.len(), 500);
+        assert!(c.train.iter().all(|&t| (t as usize) < 100));
+        assert!(c.valid.iter().all(|&t| (t as usize) < 100));
+    }
+
+    #[test]
+    fn determinism() {
+        let a = SynthCorpus::generate(&small());
+        let b = SynthCorpus::generate(&small());
+        assert_eq!(a.train, b.train);
+        let mut p2 = small();
+        p2.seed = 2;
+        let c = SynthCorpus::generate(&p2);
+        assert_ne!(a.train, c.train);
+    }
+
+    #[test]
+    fn frequencies_are_zipf_skewed() {
+        let c = SynthCorpus::generate(&SynthLmParams {
+            vocab_size: 200,
+            train_tokens: 100_000,
+            ..small()
+        });
+        // Head words (ids < 20) should dominate tail words (ids >= 150).
+        let head: u64 = c.unigram[..20].iter().sum();
+        let tail: u64 = c.unigram[150..].iter().sum();
+        assert!(
+            head > 5 * tail.max(1),
+            "head {head} vs tail {tail} — not Zipfian"
+        );
+    }
+
+    #[test]
+    fn markov_structure_is_present() {
+        // Successor-topic transition should beat the unigram rate:
+        // P(topic(w_{t+1}) = topic(w_t)+1) ≫ 1/rank.
+        let p = SynthLmParams {
+            markov_weight: 0.8,
+            train_tokens: 50_000,
+            ..small()
+        };
+        let c = SynthCorpus::generate(&p);
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for w in c.train.windows(2) {
+            let zt = c.topic[w[0] as usize] as usize;
+            let zn = c.topic[w[1] as usize] as usize;
+            if zn == (zt + 1) % p.rank {
+                hits += 1;
+            }
+            total += 1;
+        }
+        let frac = hits as f64 / total as f64;
+        assert!(
+            frac > 0.5,
+            "successor-topic fraction {frac} too low — no Markov structure"
+        );
+    }
+
+    #[test]
+    fn batches_cover_and_shapes() {
+        let c = SynthCorpus::generate(&small());
+        let mut count = 0;
+        for b in c.batches(Split::Train, 8, 16, 0) {
+            assert_eq!(b.contexts.len(), 16 * 8);
+            assert_eq!(b.targets.len(), 16);
+            assert_eq!(b.context(3).len(), 8);
+            count += 1;
+        }
+        assert_eq!(count, (5000 - 8) / 16);
+    }
+
+    #[test]
+    fn train_batches_shuffle_by_epoch() {
+        let c = SynthCorpus::generate(&small());
+        let b0 = c.batches(Split::Train, 4, 8, 0).next().unwrap();
+        let b1 = c.batches(Split::Train, 4, 8, 1).next().unwrap();
+        assert_ne!(b0, b1, "different epochs must shuffle differently");
+        let b0_again = c.batches(Split::Train, 4, 8, 0).next().unwrap();
+        assert_eq!(b0, b0_again, "same epoch must be deterministic");
+    }
+
+    #[test]
+    fn valid_batches_are_sequential() {
+        let c = SynthCorpus::generate(&small());
+        let a = c.batches(Split::Valid, 4, 8, 0).next().unwrap();
+        let b = c.batches(Split::Valid, 4, 8, 99).next().unwrap();
+        assert_eq!(a, b, "validation order must not depend on epoch seed");
+    }
+
+    #[test]
+    fn unigram_prior_strictly_positive() {
+        let c = SynthCorpus::generate(&small());
+        assert!(c.unigram_prior().iter().all(|&w| w > 0.0));
+    }
+}

@@ -1,0 +1,125 @@
+//! USPS-like embedding pairs for the Table-1 kernel-MSE harness.
+//!
+//! USPS digits are nonnegative pixel vectors; after L2 normalization their
+//! pairwise cosines concentrate well above 0 (images share background
+//! structure). The MSE of a kernel approximation over such pairs depends
+//! only on that cosine distribution, so we synthesize unit vectors as
+//! `normalize(μ + σ·g)` around a shared direction μ with per-class jitter,
+//! which reproduces a USPS-like cosine spread (mean ≈ 0.55, sd ≈ 0.2).
+
+use crate::linalg::{l2_normalize, unit_vector};
+#[cfg(test)]
+use crate::linalg::cosine;
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct UspsLikeParams {
+    pub dim: usize,
+    /// Number of synthetic "digit classes" sharing a cluster direction.
+    pub classes: usize,
+    /// Spread of samples around their class direction.
+    pub within_sigma: f32,
+    /// Spread of class directions around the global mean.
+    pub between_sigma: f32,
+}
+
+impl Default for UspsLikeParams {
+    fn default() -> Self {
+        // d = 256 matches USPS (16×16); sigmas tuned so that pairwise
+        // cosines land in the USPS-like band (see tests).
+        Self { dim: 256, classes: 10, within_sigma: 0.55, between_sigma: 0.9 }
+    }
+}
+
+/// Generate `n` unit vectors with USPS-like cosine geometry.
+pub fn vectors(p: &UspsLikeParams, n: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+    let global = unit_vector(rng, p.dim);
+    let class_dirs: Vec<Vec<f32>> = (0..p.classes)
+        .map(|_| {
+            let mut v: Vec<f32> = global
+                .iter()
+                .map(|&g| g + p.between_sigma * rng.gaussian_f32() / (p.dim as f32).sqrt())
+                .collect();
+            l2_normalize(&mut v);
+            v
+        })
+        .collect();
+    (0..n)
+        .map(|i| {
+            let c = &class_dirs[i % p.classes];
+            let mut v: Vec<f32> = c
+                .iter()
+                .map(|&ci| ci + p.within_sigma * rng.gaussian_f32() / (p.dim as f32).sqrt())
+                .collect();
+            l2_normalize(&mut v);
+            v
+        })
+        .collect()
+}
+
+/// Generate `n` random (h, c) pairs (distinct indices) from the vector
+/// pool, as used by the Table-1 harness.
+pub fn pairs(
+    p: &UspsLikeParams,
+    pool: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> Vec<(Vec<f32>, Vec<f32>)> {
+    let vs = vectors(p, pool, rng);
+    (0..n)
+        .map(|_| {
+            let i = rng.index(pool);
+            let mut j = rng.index(pool);
+            while j == i {
+                j = rng.index(pool);
+            }
+            (vs[i].clone(), vs[j].clone())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vectors_are_unit_norm() {
+        let mut rng = Rng::seeded(151);
+        let vs = vectors(&UspsLikeParams::default(), 50, &mut rng);
+        for v in &vs {
+            let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cosine_spread_is_usps_like() {
+        let mut rng = Rng::seeded(152);
+        let vs = vectors(&UspsLikeParams::default(), 200, &mut rng);
+        let mut cosines = Vec::new();
+        for i in 0..50 {
+            for j in (i + 1)..50 {
+                cosines.push(cosine(&vs[i], &vs[j]) as f64);
+            }
+        }
+        let mean = cosines.iter().sum::<f64>() / cosines.len() as f64;
+        let var = cosines.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>()
+            / cosines.len() as f64;
+        assert!(
+            (0.3..0.85).contains(&mean),
+            "mean cosine {mean} outside USPS-like band"
+        );
+        assert!(var.sqrt() > 0.03, "cosine spread too tight: {}", var.sqrt());
+    }
+
+    #[test]
+    fn pairs_are_distinct_and_sized() {
+        let mut rng = Rng::seeded(153);
+        let ps = pairs(&UspsLikeParams::default(), 100, 30, &mut rng);
+        assert_eq!(ps.len(), 30);
+        for (a, b) in &ps {
+            assert_eq!(a.len(), 256);
+            assert_ne!(a, b);
+        }
+    }
+}

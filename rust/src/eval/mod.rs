@@ -1,0 +1,106 @@
+//! Evaluation metrics: perplexity (NLP experiments, Figures 1–4) and
+//! precision@k (extreme classification, Table 3).
+
+/// Perplexity from a mean cross-entropy (natural-log) loss.
+pub fn perplexity(mean_loss: f64) -> f64 {
+    mean_loss.exp()
+}
+
+/// PREC@k for one example: fraction of the top-k predictions that are in
+/// the label set (the extreme-classification convention, paper §4.1).
+pub fn precision_at_k(scores: &[f32], labels: &[u32], k: usize) -> f64 {
+    assert!(k >= 1);
+    let k = k.min(scores.len());
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    let labelset: std::collections::HashSet<u32> =
+        labels.iter().copied().collect();
+    let hits = idx.iter().filter(|i| labelset.contains(i)).count();
+    hits as f64 / k as f64
+}
+
+/// Batched PREC@k: `scores` is `batch × n` row-major; `labels[i]` the
+/// label set of example i. Returns the mean over examples.
+pub fn batch_precision_at_k(
+    scores: &[f32],
+    n: usize,
+    labels: &[Vec<u32>],
+    k: usize,
+) -> f64 {
+    assert_eq!(scores.len(), n * labels.len());
+    let mut acc = 0.0;
+    for (i, ls) in labels.iter().enumerate() {
+        acc += precision_at_k(&scores[i * n..(i + 1) * n], ls, k);
+    }
+    acc / labels.len() as f64
+}
+
+/// Top-k indices by score, descending (ties broken arbitrarily).
+pub fn top_k(scores: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx.sort_by(|&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_uniform() {
+        // Uniform over 100 classes → loss = ln 100 → ppl = 100.
+        assert!((perplexity((100f64).ln()) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prec_at_k_basics() {
+        let scores = [0.1f32, 0.9, 0.5, 0.3];
+        // top-1 = class 1.
+        assert_eq!(precision_at_k(&scores, &[1], 1), 1.0);
+        assert_eq!(precision_at_k(&scores, &[0], 1), 0.0);
+        // top-2 = {1, 2}; labels {2, 3} → 1 hit of 2.
+        assert_eq!(precision_at_k(&scores, &[2, 3], 2), 0.5);
+    }
+
+    #[test]
+    fn prec_k_clamps_to_n() {
+        let scores = [0.5f32, 0.4];
+        assert_eq!(precision_at_k(&scores, &[0, 1], 10), 1.0);
+    }
+
+    #[test]
+    fn batch_prec_mean() {
+        let n = 3;
+        // ex0 scores favor class 0; ex1 favor class 2.
+        let scores = vec![0.9f32, 0.1, 0.0, 0.0, 0.1, 0.9];
+        let labels = vec![vec![0u32], vec![0u32]];
+        let p = batch_precision_at_k(&scores, n, &labels, 1);
+        assert!((p - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top_k_is_sorted_desc() {
+        let scores = [0.2f32, 0.9, 0.5, 0.7];
+        assert_eq!(top_k(&scores, 3), vec![1, 3, 2]);
+        assert_eq!(top_k(&scores, 0), Vec::<u32>::new());
+    }
+}

@@ -1,0 +1,84 @@
+//! Execution substrate: thread pool, bounded channels, and the
+//! double-buffered prefetch pipeline the coordinator uses to overlap
+//! negative sampling (L3) with PJRT execution (runtime).
+//!
+//! tokio is unavailable offline (DESIGN.md §2); the coordinator's
+//! concurrency needs are CPU-bound fan-out + a bounded producer/consumer
+//! pipeline, which std threads model directly and predictably.
+
+mod pipeline;
+mod pool;
+
+pub use pipeline::{Prefetcher, PipelineStats};
+pub use pool::ThreadPool;
+
+/// Run `f(i)` for `i in 0..n` across `workers` threads (scoped; borrows
+/// allowed). Results are returned in index order.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(workers > 0);
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.min(n);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                **slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("parallel_map: missing slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_map_ordered_and_complete() {
+        let got = parallel_map(100, 4, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_map_runs_on_multiple_threads() {
+        // Not strictly guaranteed, but with 8 workers and a yield inside,
+        // at least 2 distinct threads should participate.
+        let ids = std::sync::Mutex::new(std::collections::HashSet::new());
+        parallel_map(64, 8, |_| {
+            std::thread::yield_now();
+            ids.lock().unwrap().insert(std::thread::current().id());
+        });
+        assert!(ids.lock().unwrap().len() >= 2);
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let got: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn work_is_executed_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        parallel_map(1000, 7, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+}

@@ -1,0 +1,178 @@
+//! Bounded prefetch pipeline: a producer thread computes items ahead of the
+//! consumer, with backpressure once `depth` items are queued. This is how
+//! the coordinator overlaps negative sampling for batch `t+1` with PJRT
+//! execution of batch `t` (DESIGN.md §1).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Counters exposed by the prefetcher (consumed by [`crate::metrics`]).
+#[derive(Debug, Default)]
+pub struct PipelineStats {
+    /// Times the producer blocked on a full queue (consumer-bound).
+    pub producer_stalls: AtomicU64,
+    /// Times the consumer blocked on an empty queue (producer-bound).
+    pub consumer_stalls: AtomicU64,
+    /// Items produced.
+    pub produced: AtomicU64,
+}
+
+struct Chan<T> {
+    queue: Mutex<ChanState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct ChanState<T> {
+    items: VecDeque<T>,
+    finished: bool,
+    cancelled: bool,
+}
+
+/// A single-producer single-consumer bounded prefetcher.
+pub struct Prefetcher<T: Send + 'static> {
+    chan: Arc<Chan<T>>,
+    stats: Arc<PipelineStats>,
+    producer: Option<JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> Prefetcher<T> {
+    /// Spawn a producer running `make(i)` for `i = 0..count` (or endlessly
+    /// when `count` is `None`), keeping at most `depth` items buffered.
+    pub fn spawn<F>(depth: usize, count: Option<usize>, make: F) -> Self
+    where
+        F: FnMut(usize) -> T + Send + 'static,
+    {
+        assert!(depth > 0, "Prefetcher: depth must be > 0");
+        let chan = Arc::new(Chan {
+            queue: Mutex::new(ChanState {
+                items: VecDeque::with_capacity(depth),
+                finished: false,
+                cancelled: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        });
+        let stats = Arc::new(PipelineStats::default());
+        let producer = {
+            let chan = Arc::clone(&chan);
+            let stats = Arc::clone(&stats);
+            let mut make = make;
+            std::thread::Builder::new()
+                .name("rfsm-prefetch".to_string())
+                .spawn(move || {
+                    let mut i = 0usize;
+                    loop {
+                        if let Some(c) = count {
+                            if i >= c {
+                                break;
+                            }
+                        }
+                        let item = make(i);
+                        i += 1;
+                        let mut st = chan.queue.lock().unwrap();
+                        if st.items.len() >= depth {
+                            stats.producer_stalls.fetch_add(1, Ordering::Relaxed);
+                            while st.items.len() >= depth && !st.cancelled {
+                                st = chan.not_full.wait(st).unwrap();
+                            }
+                        }
+                        if st.cancelled {
+                            return;
+                        }
+                        st.items.push_back(item);
+                        stats.produced.fetch_add(1, Ordering::Relaxed);
+                        drop(st);
+                        chan.not_empty.notify_one();
+                    }
+                    let mut st = chan.queue.lock().unwrap();
+                    st.finished = true;
+                    drop(st);
+                    chan.not_empty.notify_all();
+                })
+                .expect("spawn prefetch producer")
+        };
+        Self { chan, stats, producer: Some(producer) }
+    }
+
+    /// Blocking pop; `None` once the producer is done and the queue empty.
+    pub fn next(&self) -> Option<T> {
+        let mut st = self.chan.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.chan.not_full.notify_one();
+                return Some(item);
+            }
+            if st.finished {
+                return None;
+            }
+            self.stats.consumer_stalls.fetch_add(1, Ordering::Relaxed);
+            st = self.chan.not_empty.wait(st).unwrap();
+        }
+    }
+
+    pub fn stats(&self) -> &PipelineStats {
+        &self.stats
+    }
+}
+
+impl<T: Send + 'static> Drop for Prefetcher<T> {
+    fn drop(&mut self) {
+        {
+            let mut st = self.chan.queue.lock().unwrap();
+            st.cancelled = true;
+            st.items.clear();
+        }
+        self.chan.not_full.notify_all();
+        if let Some(h) = self.producer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yields_all_items_in_order() {
+        let p = Prefetcher::spawn(2, Some(50), |i| i * 3);
+        let got: Vec<usize> = std::iter::from_fn(|| p.next()).collect();
+        let want: Vec<usize> = (0..50).map(|i| i * 3).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn bounded_depth_causes_producer_stalls() {
+        let p = Prefetcher::spawn(1, Some(20), |i| i);
+        // Let the producer hit the bound before we consume.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let mut n = 0;
+        while p.next().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 20);
+        assert!(p.stats().producer_stalls.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn drop_cancels_endless_producer() {
+        let p: Prefetcher<usize> = Prefetcher::spawn(2, None, |i| i);
+        assert_eq!(p.next(), Some(0));
+        drop(p); // must not hang
+    }
+
+    #[test]
+    fn slow_producer_stalls_consumer() {
+        let p = Prefetcher::spawn(4, Some(3), |i| {
+            std::thread::sleep(std::time::Duration::from_millis(15));
+            i
+        });
+        let got: Vec<usize> = std::iter::from_fn(|| p.next()).collect();
+        assert_eq!(got, vec![0, 1, 2]);
+        assert!(p.stats().consumer_stalls.load(Ordering::Relaxed) > 0);
+    }
+}

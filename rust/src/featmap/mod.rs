@@ -1,0 +1,146 @@
+//! Kernel feature maps — the heart of RF-softmax (paper §3).
+//!
+//! A [`FeatureMap`] is a nonlinear map `φ: ℝᵈ → ℝᴰ` linearizing a kernel:
+//! `K(h, c) ≈ φ(h)ᵀ φ(c)`. Kernel-based sampling (paper §3.1) then draws
+//! class `i` with probability `q_i ∝ φ(c_i)ᵀ φ(h)` in `O(D log n)` via the
+//! [`crate::sampler::KernelTree`].
+//!
+//! Implemented maps:
+//!
+//! * [`RffMap`] — classic Random Fourier Features for the Gaussian kernel
+//!   (paper eq. 17): `φ(u) = √(1/D) [cos(Wu) ‖ sin(Wu)]`, `W ~ N(0, I/ν)`
+//!   — 2D output coordinates for D frequencies. For L2-normalized inputs,
+//!   `e^{ν uᵀv} = e^{ν} e^{-ν‖u−v‖²/2}` (paper eq. 16), so RFF approximates
+//!   the exponential (softmax) kernel up to the constant `e^{ν}` which
+//!   cancels under normalization of q.
+//! * [`OrfMap`] — Orthogonal Random Features (Yu et al. 2016): rows of W
+//!   orthogonalized, same estimator with strictly lower variance.
+//! * [`SorfMap`] — Structured ORF: `W ≈ √(ν⁻¹)·(d^{-1/2} H D₁ H D₂ H D₃)`
+//!   blocks where H is Walsh–Hadamard and Dᵢ are random sign diagonals;
+//!   `φ` costs `O(D log d)` via the fast Walsh–Hadamard transform.
+//! * [`MaclaurinMap`] — Random Maclaurin features for the *exponential*
+//!   (dot-product) kernel (Kar & Karnick 2012): unbiased but high-variance;
+//!   reproduced as the Table-1 baseline.
+//! * [`QuadraticMap`] — explicit linearization `φ(z) = [√α·(z⊗z), 1]` of
+//!   the quadratic kernel `α(hᵀc)² + 1` (Blanc & Rendle 2018), the paper's
+//!   main kernel-sampling baseline. `D = d² + 1`.
+
+mod maclaurin;
+mod quadratic;
+mod rff;
+mod sorf;
+
+pub use maclaurin::MaclaurinMap;
+pub use quadratic::QuadraticMap;
+pub use rff::{OrfMap, RffMap};
+pub use sorf::{fwht, SorfMap};
+
+use crate::linalg::dot;
+
+/// A feature map linearizing a kernel: `K(x, y) ≈ φ(x)ᵀφ(y)`.
+pub trait FeatureMap: Send + Sync {
+    /// Output dimensionality D′ of φ (for RFF this is 2·D frequencies).
+    fn output_dim(&self) -> usize;
+
+    /// Input dimensionality d.
+    fn input_dim(&self) -> usize;
+
+    /// Compute φ(u) into `out` (`out.len() == output_dim()`).
+    fn map_into(&self, u: &[f32], out: &mut [f32]);
+
+    /// Allocating convenience wrapper.
+    fn map(&self, u: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.output_dim()];
+        self.map_into(u, &mut out);
+        out
+    }
+
+    /// The kernel value this map approximates, evaluated *exactly*
+    /// (used by tests and the Table-1 MSE harness).
+    fn exact_kernel(&self, x: &[f32], y: &[f32]) -> f64;
+
+    /// The approximate kernel `φ(x)ᵀφ(y)`.
+    fn approx_kernel(&self, x: &[f32], y: &[f32]) -> f64 {
+        dot(&self.map(x), &self.map(y)) as f64
+    }
+}
+
+/// Exact exponential (softmax) kernel `exp(τ·xᵀy)`.
+pub fn exp_kernel(tau: f32, x: &[f32], y: &[f32]) -> f64 {
+    ((tau * dot(x, y)) as f64).exp()
+}
+
+/// Exact Gaussian kernel `exp(-ν‖x−y‖²/2)`.
+pub fn gaussian_kernel(nu: f32, x: &[f32], y: &[f32]) -> f64 {
+    let mut d2 = 0.0f64;
+    for (a, b) in x.iter().zip(y.iter()) {
+        let diff = (a - b) as f64;
+        d2 += diff * diff;
+    }
+    (-(nu as f64) * d2 / 2.0).exp()
+}
+
+/// Mean squared error of `map`'s kernel approximation over sample pairs.
+/// This is exactly the quantity of paper Table 1.
+pub fn kernel_mse(
+    map: &dyn FeatureMap,
+    pairs: &[(Vec<f32>, Vec<f32>)],
+) -> f64 {
+    let mut se = 0.0;
+    for (x, y) in pairs {
+        let exact = map.exact_kernel(x, y);
+        let approx = map.approx_kernel(x, y);
+        se += (exact - approx) * (exact - approx);
+    }
+    se / pairs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::unit_vector;
+    use crate::rng::Rng;
+
+    #[test]
+    fn exp_and_gaussian_kernels_agree_on_sphere() {
+        // For unit vectors: exp(ν xᵀy) = e^ν · exp(-ν‖x−y‖²/2)  (eq. 16).
+        let mut rng = Rng::seeded(41);
+        let nu = 3.0f32;
+        for _ in 0..20 {
+            let x = unit_vector(&mut rng, 16);
+            let y = unit_vector(&mut rng, 16);
+            let lhs = exp_kernel(nu, &x, &y);
+            let rhs = (nu as f64).exp() * gaussian_kernel(nu, &x, &y);
+            assert!(
+                (lhs - rhs).abs() < 1e-6 * lhs.abs().max(1.0),
+                "{lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_mse_zero_for_perfect_map() {
+        // A trivial identity-ish map whose exact kernel is defined as its
+        // own approximation must give MSE 0.
+        struct Identity;
+        impl FeatureMap for Identity {
+            fn output_dim(&self) -> usize {
+                4
+            }
+            fn input_dim(&self) -> usize {
+                4
+            }
+            fn map_into(&self, u: &[f32], out: &mut [f32]) {
+                out.copy_from_slice(u);
+            }
+            fn exact_kernel(&self, x: &[f32], y: &[f32]) -> f64 {
+                dot(x, y) as f64
+            }
+        }
+        let mut rng = Rng::seeded(42);
+        let pairs: Vec<_> = (0..10)
+            .map(|_| (unit_vector(&mut rng, 4), unit_vector(&mut rng, 4)))
+            .collect();
+        assert!(kernel_mse(&Identity, &pairs) < 1e-10);
+    }
+}

@@ -1,0 +1,174 @@
+//! Explicit quadratic-kernel linearization (Blanc & Rendle 2018, paper
+//! eq. 15): `K_quad(h, c) = α·(hᵀc)² + β` with the feature map
+//! `φ(z) = [√α·(z ⊗ z), √β]`, so `φ(x)ᵀφ(y) = α(xᵀy)² + β` **exactly**
+//! (zero approximation error with respect to its own kernel — the bias is
+//! in how poorly the quadratic kernel tracks `e^{o}`; paper §3.1).
+//!
+//! `D = d² + 1`, which is what makes Quadratic-softmax cost `O(d² log n)`
+//! per sample and motivates RF-softmax.
+
+use super::FeatureMap;
+use crate::linalg::dot;
+
+#[derive(Clone, Debug)]
+pub struct QuadraticMap {
+    input_dim: usize,
+    alpha: f32,
+    beta: f32,
+}
+
+impl QuadraticMap {
+    /// The paper's baseline uses α = 100, β = 1.
+    pub fn new(input_dim: usize, alpha: f32, beta: f32) -> Self {
+        assert!(input_dim > 0);
+        assert!(alpha >= 0.0 && beta >= 0.0, "QuadraticMap: α, β must be ≥ 0");
+        Self { input_dim, alpha, beta }
+    }
+
+    pub fn alpha(&self) -> f32 {
+        self.alpha
+    }
+
+    pub fn beta(&self) -> f32 {
+        self.beta
+    }
+
+    /// Least-squares fit of (α, β) minimizing
+    /// `Σ (α·(xᵀy)² + β − target(x,y))²` over sample pairs — the
+    /// "optimal MSE" variant reported in paper Table 1.
+    pub fn fit(
+        input_dim: usize,
+        pairs: &[(Vec<f32>, Vec<f32>)],
+        target: impl Fn(&[f32], &[f32]) -> f64,
+    ) -> Self {
+        // Normal equations for the 2-parameter linear model y = αu + β,
+        // u := (xᵀy)².
+        let mut suu = 0.0f64;
+        let mut su = 0.0f64;
+        let mut sy = 0.0f64;
+        let mut suy = 0.0f64;
+        let n = pairs.len() as f64;
+        for (x, y) in pairs {
+            let u = (dot(x, y) as f64).powi(2);
+            let t = target(x, y);
+            suu += u * u;
+            su += u;
+            sy += t;
+            suy += u * t;
+        }
+        let det = suu * n - su * su;
+        let (alpha, beta) = if det.abs() < 1e-12 {
+            (0.0, sy / n)
+        } else {
+            let a = (suy * n - su * sy) / det;
+            let b = (suu * sy - su * suy) / det;
+            (a, b)
+        };
+        // The sampling tree needs a nonnegative kernel; clamp.
+        Self {
+            input_dim,
+            alpha: alpha.max(0.0) as f32,
+            beta: beta.max(0.0) as f32,
+        }
+    }
+}
+
+impl FeatureMap for QuadraticMap {
+    fn output_dim(&self) -> usize {
+        self.input_dim * self.input_dim + 1
+    }
+
+    fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    fn map_into(&self, u: &[f32], out: &mut [f32]) {
+        let d = self.input_dim;
+        debug_assert_eq!(u.len(), d);
+        debug_assert_eq!(out.len(), d * d + 1);
+        let sa = self.alpha.sqrt();
+        for i in 0..d {
+            let ui = u[i] * sa;
+            let row = &mut out[i * d..(i + 1) * d];
+            for (o, &uj) in row.iter_mut().zip(u.iter()) {
+                *o = ui * uj;
+            }
+        }
+        out[d * d] = self.beta.sqrt();
+    }
+
+    fn exact_kernel(&self, x: &[f32], y: &[f32]) -> f64 {
+        let s = dot(x, y) as f64;
+        self.alpha as f64 * s * s + self.beta as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featmap::exp_kernel;
+    use crate::linalg::unit_vector;
+    use crate::rng::Rng;
+
+    #[test]
+    fn linearization_is_exact() {
+        let mut rng = Rng::seeded(71);
+        let m = QuadraticMap::new(12, 100.0, 1.0);
+        for _ in 0..20 {
+            let x = unit_vector(&mut rng, 12);
+            let y = unit_vector(&mut rng, 12);
+            let exact = m.exact_kernel(&x, &y);
+            let approx = m.approx_kernel(&x, &y);
+            assert!(
+                (exact - approx).abs() < 1e-3 * exact.abs().max(1.0),
+                "{exact} vs {approx}"
+            );
+        }
+    }
+
+    #[test]
+    fn output_dim_is_d_squared_plus_one() {
+        let m = QuadraticMap::new(16, 100.0, 1.0);
+        assert_eq!(m.output_dim(), 257);
+    }
+
+    #[test]
+    fn fit_beats_fixed_alpha_for_exp_target() {
+        let mut rng = Rng::seeded(72);
+        let d = 16;
+        let tau = 1.0f32;
+        let pairs: Vec<_> = (0..500)
+            .map(|_| (unit_vector(&mut rng, d), unit_vector(&mut rng, d)))
+            .collect();
+        let target = |x: &[f32], y: &[f32]| exp_kernel(tau, x, y);
+        let fitted = QuadraticMap::fit(d, &pairs, target);
+        let fixed = QuadraticMap::new(d, 100.0, 1.0);
+        let mse = |m: &QuadraticMap| {
+            pairs
+                .iter()
+                .map(|(x, y)| {
+                    let e = target(x, y) - m.exact_kernel(x, y);
+                    e * e
+                })
+                .sum::<f64>()
+                / pairs.len() as f64
+        };
+        assert!(
+            mse(&fitted) <= mse(&fixed),
+            "fitted {:.3e} vs fixed {:.3e}",
+            mse(&fitted),
+            mse(&fixed)
+        );
+    }
+
+    #[test]
+    fn fitted_params_nonnegative() {
+        let mut rng = Rng::seeded(73);
+        let d = 8;
+        let pairs: Vec<_> = (0..100)
+            .map(|_| (unit_vector(&mut rng, d), unit_vector(&mut rng, d)))
+            .collect();
+        let m = QuadraticMap::fit(d, &pairs, |x, y| exp_kernel(1.0, x, y));
+        assert!(m.alpha() >= 0.0 && m.beta() >= 0.0);
+    }
+}

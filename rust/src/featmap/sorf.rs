@@ -1,0 +1,254 @@
+//! Structured Orthogonal Random Features (SORF, Yu et al. 2016).
+//!
+//! Replaces the dense Gaussian frequency matrix by products of Walsh–
+//! Hadamard transforms and random sign diagonals:
+//!
+//! `W_SORF = √(d)·ν^{1/2} · H̃D₁H̃D₂H̃D₃`
+//!
+//! where `H̃ = H/√d` is the normalized Hadamard matrix and `Dᵢ` are random
+//! ±1 diagonals. Computing `Wu` costs `O(D log d)` via the fast Walsh–
+//! Hadamard transform ([`fwht`]) instead of `O(Dd)` — this is the paper's
+//! §3.2 remark that SORF reduces the map cost to `O(D log d)`.
+//!
+//! Input dims are zero-padded to the next power of two (zero padding
+//! preserves pairwise distances, hence the Gaussian kernel).
+
+use super::FeatureMap;
+use crate::rng::Rng;
+
+/// In-place fast Walsh–Hadamard transform (unnormalized): applies the
+/// ±1 Hadamard matrix H. `data.len()` must be a power of two.
+pub fn fwht(data: &mut [f32]) {
+    let n = data.len();
+    debug_assert!(n.is_power_of_two(), "fwht: length must be a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let x = data[j];
+                let y = data[j + h];
+                data[j] = x + y;
+                data[j + h] = x - y;
+            }
+            i += h * 2;
+        }
+        h *= 2;
+    }
+}
+
+/// One HD₁HD₂HD₃ block operating on the padded dimension.
+#[derive(Clone, Debug)]
+struct SorfBlock {
+    /// Sign diagonals, applied right-to-left: d3 first.
+    d1: Vec<f32>,
+    d2: Vec<f32>,
+    d3: Vec<f32>,
+}
+
+impl SorfBlock {
+    fn new(dim: usize, rng: &mut Rng) -> Self {
+        let signs = |rng: &mut Rng| -> Vec<f32> {
+            (0..dim)
+                .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                .collect()
+        };
+        Self { d1: signs(rng), d2: signs(rng), d3: signs(rng) }
+    }
+
+    /// scratch := block(u_padded); scratch.len() == padded dim.
+    fn apply(&self, scratch: &mut [f32]) {
+        let n = scratch.len() as f32;
+        let inv_sqrt_n = 1.0 / n.sqrt();
+        for (v, s) in scratch.iter_mut().zip(&self.d3) {
+            *v *= s;
+        }
+        fwht(scratch);
+        for (v, s) in scratch.iter_mut().zip(&self.d2) {
+            *v *= s * inv_sqrt_n;
+        }
+        fwht(scratch);
+        for (v, s) in scratch.iter_mut().zip(&self.d1) {
+            *v *= s * inv_sqrt_n;
+        }
+        fwht(scratch);
+        // Final H̃ normalization folded with the global √d scale below.
+        for v in scratch.iter_mut() {
+            *v *= inv_sqrt_n;
+        }
+    }
+}
+
+/// SORF feature map for the Gaussian kernel with parameter ν.
+#[derive(Clone, Debug)]
+pub struct SorfMap {
+    blocks: Vec<SorfBlock>,
+    input_dim: usize,
+    padded: usize,
+    num_freqs: usize,
+    nu: f32,
+    inv_sqrt_d: f32,
+}
+
+impl SorfMap {
+    /// `num_freqs` = D frequencies (output dim 2D). D is rounded up
+    /// internally to a multiple of the padded input dim; excess rows of the
+    /// last block are simply unused.
+    pub fn new(input_dim: usize, num_freqs: usize, nu: f32, rng: &mut Rng) -> Self {
+        assert!(input_dim > 0 && num_freqs > 0);
+        assert!(nu > 0.0, "SorfMap: ν must be positive");
+        let padded = input_dim.next_power_of_two();
+        let nblocks = num_freqs.div_ceil(padded);
+        let blocks = (0..nblocks).map(|_| SorfBlock::new(padded, rng)).collect();
+        Self {
+            blocks,
+            input_dim,
+            padded,
+            num_freqs,
+            nu,
+            inv_sqrt_d: 1.0 / (num_freqs as f32).sqrt(),
+        }
+    }
+
+    pub fn nu(&self) -> f32 {
+        self.nu
+    }
+
+    pub fn num_freqs(&self) -> usize {
+        self.num_freqs
+    }
+}
+
+impl FeatureMap for SorfMap {
+    fn output_dim(&self) -> usize {
+        2 * self.num_freqs
+    }
+
+    fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    fn map_into(&self, u: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(u.len(), self.input_dim);
+        debug_assert_eq!(out.len(), 2 * self.num_freqs);
+        // Row norms of W_SORF are exactly √(padded); scaling by
+        // √ν·√padded makes wᵀu match the N(0, νI) projection scale.
+        let scale = (self.nu * self.padded as f32).sqrt();
+        let mut scratch = vec![0.0f32; self.padded];
+        let mut emitted = 0usize;
+        for block in &self.blocks {
+            scratch[..self.input_dim].copy_from_slice(u);
+            scratch[self.input_dim..].fill(0.0);
+            block.apply(&mut scratch);
+            let take = (self.num_freqs - emitted).min(self.padded);
+            for j in 0..take {
+                let proj = scratch[j] * scale;
+                let (s, c) = proj.sin_cos();
+                out[emitted + j] = c * self.inv_sqrt_d;
+                out[self.num_freqs + emitted + j] = s * self.inv_sqrt_d;
+            }
+            emitted += take;
+        }
+    }
+
+    fn exact_kernel(&self, x: &[f32], y: &[f32]) -> f64 {
+        super::gaussian_kernel(self.nu, x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featmap::{gaussian_kernel, kernel_mse, RffMap};
+    use crate::linalg::unit_vector;
+
+    #[test]
+    fn fwht_matches_naive_hadamard() {
+        // H_2 ⊗ H_2: verify against a hand-computed 4-point transform.
+        let mut v = vec![1.0f32, 2.0, 3.0, 4.0];
+        fwht(&mut v);
+        assert_eq!(v, vec![10.0, -2.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn fwht_is_scaled_involution() {
+        // H·H = n·I.
+        let mut rng = Rng::seeded(61);
+        let n = 64;
+        let orig: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let mut v = orig.clone();
+        fwht(&mut v);
+        fwht(&mut v);
+        for (a, b) in v.iter().zip(orig.iter()) {
+            assert!((a / n as f32 - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sorf_output_norm_is_one() {
+        let mut rng = Rng::seeded(62);
+        let m = SorfMap::new(10, 48, 2.0, &mut rng);
+        let u = unit_vector(&mut rng, 10);
+        let phi = m.map(&u);
+        assert_eq!(phi.len(), 96);
+        let norm2: f32 = phi.iter().map(|v| v * v).sum();
+        assert!((norm2 - 1.0).abs() < 1e-4, "‖φ‖² = {norm2}");
+    }
+
+    #[test]
+    fn sorf_approximates_gaussian_kernel() {
+        let mut rng = Rng::seeded(63);
+        let d = 32;
+        let nu = 1.0;
+        let ps: Vec<_> = (0..200)
+            .map(|_| (unit_vector(&mut rng, d), unit_vector(&mut rng, d)))
+            .collect();
+        // Average MSE over independent maps (single-map MSE fluctuates).
+        let mut mse = 0.0;
+        let reps = 6;
+        for _ in 0..reps {
+            let m = SorfMap::new(d, 256, nu, &mut rng);
+            mse += kernel_mse(&m, &ps);
+        }
+        mse /= reps as f64;
+        // Must be comparable to plain RFF at the same D.
+        let mut rff = 0.0;
+        for _ in 0..reps {
+            let m = RffMap::new(d, 256, nu, &mut rng);
+            rff += kernel_mse(&m, &ps);
+        }
+        rff /= reps as f64;
+        assert!(
+            mse < rff * 1.5 + 1e-4,
+            "sorf mse {mse:.3e} vs rff {rff:.3e}"
+        );
+    }
+
+    #[test]
+    fn sorf_low_bias_pointwise() {
+        let mut rng = Rng::seeded(64);
+        let d = 16;
+        let nu = 2.0;
+        let x = unit_vector(&mut rng, d);
+        let y = unit_vector(&mut rng, d);
+        let exact = gaussian_kernel(nu, &x, &y);
+        let mut acc = 0.0;
+        let reps = 200;
+        for _ in 0..reps {
+            let m = SorfMap::new(d, 64, nu, &mut rng);
+            acc += m.approx_kernel(&x, &y);
+        }
+        let est = acc / reps as f64;
+        assert!((est - exact).abs() < 0.04, "{est} vs {exact}");
+    }
+
+    #[test]
+    fn nonpow2_input_is_padded() {
+        let mut rng = Rng::seeded(65);
+        let m = SorfMap::new(7, 16, 1.0, &mut rng);
+        assert_eq!(m.input_dim(), 7);
+        let u = unit_vector(&mut rng, 7);
+        let phi = m.map(&u);
+        assert_eq!(phi.len(), 32);
+    }
+}

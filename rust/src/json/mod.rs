@@ -1,0 +1,174 @@
+//! Minimal JSON substrate (parser + writer), built from scratch because no
+//! serde is available offline. Used for:
+//!
+//! * reading `artifacts/manifest.json` written by the python AOT pipeline,
+//! * the [`crate::config`] file format,
+//! * metric / experiment-result dumps.
+//!
+//! Supports the full JSON grammar (objects, arrays, strings with escapes,
+//! numbers, booleans, null). Numbers are held as f64; integer accessors
+//! check representability.
+
+mod parse;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use write::to_string_pretty;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// BTreeMap for deterministic iteration / serialization order.
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && n.abs() < 2f64.powi(53) => {
+                Some(*n as i64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field access; returns `None` for non-objects/missing keys.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_object().and_then(|o| o.get(key))
+    }
+
+    /// Path access: `j.at(&["model", "dims", "0"])` — numeric path
+    /// components index into arrays.
+    pub fn at(&self, path: &[&str]) -> Option<&Json> {
+        let mut cur = self;
+        for p in path {
+            cur = match cur {
+                Json::Obj(o) => o.get(*p)?,
+                Json::Arr(a) => a.get(p.parse::<usize>().ok()?)?,
+                _ => return None,
+            };
+        }
+        Some(cur)
+    }
+
+    /// Builder: object from pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr_f64(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    pub fn arr_usize(xs: &[usize]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write::write_compact(self, f)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
+}
+
+impl From<f64> for Json {
+    fn from(n: f64) -> Self {
+        Json::Num(n)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(n: usize) -> Self {
+        Json::Num(n as f64)
+    }
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Self {
+        Json::Bool(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let j = parse(r#"{"a": 1, "b": [true, null, "x"], "c": {"d": 2.5}}"#)
+            .unwrap();
+        assert_eq!(j.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(j.at(&["b", "0"]).unwrap().as_bool(), Some(true));
+        assert_eq!(j.at(&["b", "2"]).unwrap().as_str(), Some("x"));
+        assert_eq!(j.at(&["c", "d"]).unwrap().as_f64(), Some(2.5));
+        assert_eq!(j.at(&["c", "missing"]), None);
+        assert_eq!(j.at(&["b", "9"]), None);
+    }
+
+    #[test]
+    fn i64_rejects_fractional() {
+        assert_eq!(Json::Num(1.5).as_i64(), None);
+        assert_eq!(Json::Num(3.0).as_i64(), Some(3));
+    }
+
+    #[test]
+    fn round_trip_display() {
+        let src = r#"{"k":[1,2.5,"s\n",false,null]}"#;
+        let j = parse(src).unwrap();
+        let again = parse(&j.to_string()).unwrap();
+        assert_eq!(j, again);
+    }
+}

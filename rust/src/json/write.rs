@@ -1,0 +1,147 @@
+//! JSON serialization: compact (via `Display`) and pretty-printed.
+
+use super::Json;
+use std::fmt::{self, Write as _};
+
+pub(super) fn write_compact(j: &Json, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    let mut buf = String::new();
+    write_value(j, &mut buf, None, 0);
+    f.write_str(&buf)
+}
+
+/// Pretty-print with 2-space indentation.
+pub fn to_string_pretty(j: &Json) -> String {
+    let mut buf = String::new();
+    write_value(j, &mut buf, Some(2), 0);
+    buf.push('\n');
+    buf
+}
+
+fn write_value(j: &Json, out: &mut String, indent: Option<usize>, depth: usize) {
+    match j {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(n) => write_number(*n, out),
+        Json::Str(s) => write_string(s, out),
+        Json::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, depth + 1);
+                write_value(item, out, indent, depth + 1);
+            }
+            newline_indent(out, indent, depth);
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, v)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, depth + 1);
+                write_string(k, out);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(v, out, indent, depth + 1);
+            }
+            newline_indent(out, indent, depth);
+            out.push('}');
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_number(n: f64, out: &mut String) {
+    if n.is_finite() {
+        if n.fract() == 0.0 && n.abs() < 1e15 {
+            let _ = write!(out, "{}", n as i64);
+        } else {
+            // Shortest round-trippable representation Rust offers.
+            let _ = write!(out, "{n}");
+        }
+    } else {
+        // JSON has no NaN/Inf; emit null (documented lossy behaviour for
+        // metric dumps that hit numerical edge cases).
+        out.push_str("null");
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{parse, Json};
+    use super::*;
+
+    #[test]
+    fn compact_round_trip() {
+        let j = parse(r#"{"b":[1,2.5,-3e2],"a":"x\ny","n":null,"t":true}"#).unwrap();
+        let s = j.to_string();
+        assert_eq!(parse(&s).unwrap(), j);
+    }
+
+    #[test]
+    fn pretty_round_trip() {
+        let j = parse(r#"{"outer":{"inner":[1,{"deep":[]}]}}"#).unwrap();
+        let s = to_string_pretty(&j);
+        assert!(s.contains("\n  "));
+        assert_eq!(parse(&s).unwrap(), j);
+    }
+
+    #[test]
+    fn integers_without_decimal_point() {
+        assert_eq!(Json::Num(42.0).to_string(), "42");
+        assert_eq!(Json::Num(-0.5).to_string(), "-0.5");
+    }
+
+    #[test]
+    fn nonfinite_becomes_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        let j = Json::Str("\u{0001}".into());
+        assert_eq!(j.to_string(), "\"\\u0001\"");
+        assert_eq!(parse(&j.to_string()).unwrap(), j);
+    }
+}

@@ -1,0 +1,87 @@
+//! # rfsoftmax — Sampled Softmax with Random Fourier Features
+//!
+//! A production-shaped training framework for classification problems with
+//! very large output spaces (10⁴–10⁶ classes), reproducing
+//! *Sampled Softmax with Random Fourier Features* (Rawat, Chen, Yu, Suresh,
+//! Kumar — NeurIPS 2019).
+//!
+//! The headline feature is **RF-softmax**: kernel-based negative sampling
+//! where classes are drawn with probability proportional to
+//! `φ(c_i)ᵀ φ(h)` for a Random-Fourier-Feature map `φ`, which (for
+//! L2-normalized embeddings) tightly and multiplicatively approximates the
+//! softmax distribution `p_i ∝ exp(τ hᵀc_i)` while costing only
+//! `O(D log n)` per sample via a divide-and-conquer tree (paper §3.1).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: sampling service (kernel tree +
+//!   baselines), training event loop, parameter store + optimizers,
+//!   synthetic-data substrates, metrics, CLI.
+//! * **L2 (JAX, build time)** — model fwd/bwd (`python/compile/model.py`),
+//!   AOT-lowered to HLO text once by `make artifacts`.
+//! * **L1 (Pallas, build time)** — the RFF feature-map and fused
+//!   sampled-softmax-loss kernels (`python/compile/kernels/`), lowered into
+//!   the same HLO.
+//!
+//! Python never runs on the training hot path: the [`runtime`] module loads
+//! the HLO artifacts into a PJRT CPU client and [`coordinator::Trainer`]
+//! drives everything from Rust.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use rfsoftmax::prelude::*;
+//!
+//! let mut rng = Rng::seeded(42);
+//! // 1,000 classes with 32-d normalized embeddings.
+//! let classes = Matrix::randn(&mut rng, 1000, 32).l2_normalized_rows();
+//! // RF-softmax sampler with D = 64 random features, ν = 4.0.
+//! let mut sampler = RffSampler::new(&classes, 64, 4.0, &mut rng);
+//! let h = unit_vector(&mut rng, 32);
+//! let draw = sampler.sample(&h, 10, &mut rng);
+//! assert_eq!(draw.ids.len(), 10);
+//! ```
+//!
+//! See `examples/` for end-to-end training drivers and `rust/benches/` for
+//! the harnesses that regenerate every table and figure of the paper.
+
+pub mod benchkit;
+pub mod bias;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod exec;
+pub mod featmap;
+pub mod json;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod propkit;
+pub mod rng;
+pub mod runtime;
+pub mod sampler;
+pub mod softmax;
+pub mod tables;
+
+/// Commonly used items, re-exported for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{DataConfig, ModelConfig, SamplerConfig, TrainConfig};
+    pub use crate::coordinator::{Trainer, TrainerBuilder};
+    pub use crate::data::{extreme::ExtremeDataset, synthlm::SynthCorpus};
+    pub use crate::featmap::{
+        FeatureMap, MaclaurinMap, OrfMap, QuadraticMap, RffMap, SorfMap,
+    };
+    pub use crate::linalg::{unit_vector, Matrix};
+    pub use crate::rng::Rng;
+    pub use crate::sampler::{
+        AliasSampler, BucketKernelSampler, ExactSoftmaxSampler,
+        GumbelTopKSampler, KernelTree, LogUniformSampler, NegativeDraw,
+        QuadraticSampler, RffSampler, Sampler, UniformSampler,
+    };
+    pub use crate::softmax::{
+        full_softmax_loss, sampled_softmax_loss, SampledLoss,
+    };
+}

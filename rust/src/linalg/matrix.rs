@@ -1,0 +1,257 @@
+//! Row-major f32 matrix with the handful of operations the framework needs
+//! outside the AOT-compiled HLO: row access for embedding tables, matvec
+//! for feature maps, Gram–Schmidt for orthogonal random features.
+
+use super::{dot, l2_normalize};
+use crate::rng::Rng;
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-filled `rows × cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// From an existing row-major buffer (length must be rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "Matrix::from_vec: size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// i.i.d. standard gaussian entries.
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_gaussian_f32(&mut m.data);
+        m
+    }
+
+    /// Gaussian entries scaled by `std`.
+    pub fn randn_scaled(rng: &mut Rng, rows: usize, cols: usize, std: f32) -> Self {
+        let mut m = Self::randn(rng, rows, cols);
+        for v in m.data.iter_mut() {
+            *v *= std;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// `out[i] = row_i · x` for all rows. `out.len() == rows`.
+    pub fn matvec_into(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = dot(self.row(i), x);
+        }
+    }
+
+    /// Convenience allocating matvec.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows];
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// Dense matmul `self (r×c) @ other (c×k)`, blocked over k for cache
+    /// locality. Only used at setup time (e.g. building feature tables),
+    /// never on the per-step hot path.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul: inner dims");
+        let (r, c, k) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(r, k);
+        for i in 0..r {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * k..(i + 1) * k];
+            for (l, &a) in a_row.iter().enumerate().take(c) {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = other.row(l);
+                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Return a copy whose rows are L2-normalized (zero rows untouched).
+    pub fn l2_normalized_rows(mut self) -> Matrix {
+        for i in 0..self.rows {
+            l2_normalize(self.row_mut(i));
+        }
+        self
+    }
+
+    /// In-place row normalization.
+    pub fn normalize_rows_in_place(&mut self) {
+        for i in 0..self.rows {
+            l2_normalize(self.row_mut(i));
+        }
+    }
+
+    /// Orthonormalize the rows in place by modified Gram–Schmidt
+    /// (requires rows <= cols). Rows that collapse numerically are
+    /// re-randomized from `rng` and re-orthogonalized.
+    pub fn orthonormalize_rows(&mut self, rng: &mut Rng) {
+        assert!(
+            self.rows <= self.cols,
+            "orthonormalize_rows: rows {} > cols {}",
+            self.rows,
+            self.cols
+        );
+        for i in 0..self.rows {
+            loop {
+                // Subtract projections on previous rows.
+                for j in 0..i {
+                    let proj = dot(self.row(i), self.row(j));
+                    let (head, tail) = self.data.split_at_mut(i * self.cols);
+                    let prev = &head[j * self.cols..(j + 1) * self.cols];
+                    let cur = &mut tail[..self.cols];
+                    for (c, p) in cur.iter_mut().zip(prev.iter()) {
+                        *c -= proj * p;
+                    }
+                }
+                let n = l2_normalize(self.row_mut(i));
+                if n > 1e-6 {
+                    break;
+                }
+                // Degenerate row — resample and retry.
+                let row = self.row_mut(i);
+                rng.fill_gaussian_f32(row);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_access_layout() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.row(0), &[1., 2., 3.]);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.get(1, 2), 6.0);
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let y = m.matvec(&[1., 0., -1.]);
+        assert_eq!(y, vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::seeded(31);
+        let a = Matrix::randn(&mut rng, 4, 4);
+        let mut eye = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            eye.set(i, i, 1.0);
+        }
+        let b = a.matmul(&eye);
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Rng::seeded(32);
+        let a = Matrix::randn(&mut rng, 3, 5);
+        let b = a.transpose().transpose();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn normalized_rows_are_unit() {
+        let mut rng = Rng::seeded(33);
+        let m = Matrix::randn(&mut rng, 10, 7).l2_normalized_rows();
+        for i in 0..10 {
+            let n = super::super::norm2(m.row(i));
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gram_schmidt_orthonormal() {
+        let mut rng = Rng::seeded(34);
+        let mut m = Matrix::randn(&mut rng, 6, 8);
+        m.orthonormalize_rows(&mut rng);
+        for i in 0..6 {
+            for j in 0..6 {
+                let d = dot(m.row(i), m.row(j));
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-4, "({i},{j}): {d}");
+            }
+        }
+    }
+}

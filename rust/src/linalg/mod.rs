@@ -1,0 +1,180 @@
+//! Dense linear-algebra substrate (f32, row-major).
+//!
+//! No BLAS / ndarray offline, so the kernels this framework needs on the
+//! Rust hot path — dot products, matvec against feature maps, row
+//! normalization — are implemented here with manual 4-way unrolling that
+//! LLVM auto-vectorizes well on x86-64. The heavy model math itself lives
+//! in the AOT-compiled HLO (L1/L2); this module serves the *sampler* and
+//! evaluation paths.
+
+mod matrix;
+
+pub use matrix::Matrix;
+
+use crate::rng::Rng;
+
+/// Dot product with 4 accumulators (breaks the fp dependency chain; LLVM
+/// vectorizes this to SIMD lanes).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut tail = 0.0f32;
+    for j in chunks * 4..n {
+        tail += a[j] * b[j];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// L2-normalize in place; returns the original norm. Zero vectors are left
+/// untouched (norm 0 returned) rather than producing NaNs.
+pub fn l2_normalize(x: &mut [f32]) -> f32 {
+    let n = norm2(x);
+    if n > 0.0 {
+        scale(1.0 / n, x);
+    }
+    n
+}
+
+/// Cosine similarity; 0 if either vector is zero.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let na = norm2(a);
+    let nb = norm2(b);
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot(a, b) / (na * nb)
+    }
+}
+
+/// Random unit vector of dimension `d` (gaussian direction, normalized).
+pub fn unit_vector(rng: &mut Rng, d: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; d];
+    rng.fill_gaussian_f32(&mut v);
+    l2_normalize(&mut v);
+    v
+}
+
+/// Numerically-stable log-sum-exp of a slice (f64 accumulation).
+pub fn logsumexp(xs: &[f64]) -> f64 {
+    let mx = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if mx.is_infinite() {
+        return mx;
+    }
+    let s: f64 = xs.iter().map(|&x| (x - mx).exp()).sum();
+    mx + s.ln()
+}
+
+/// Stable softmax of a slice (f64), returning a normalized pmf.
+pub fn softmax(xs: &[f64]) -> Vec<f64> {
+    let mx = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = xs.iter().map(|&x| (x - mx).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::seeded(21);
+        for n in [0usize, 1, 3, 4, 7, 64, 129] {
+            let a: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-3 + naive.abs() * 1e-4);
+        }
+    }
+
+    #[test]
+    fn normalize_gives_unit_norm() {
+        let mut rng = Rng::seeded(22);
+        let mut v: Vec<f32> = (0..37).map(|_| rng.gaussian_f32() * 5.0).collect();
+        let n0 = l2_normalize(&mut v);
+        assert!(n0 > 0.0);
+        assert!((norm2(&v) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn normalize_zero_is_noop() {
+        let mut v = vec![0.0f32; 8];
+        assert_eq!(l2_normalize(&mut v), 0.0);
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn unit_vector_is_unit() {
+        let mut rng = Rng::seeded(23);
+        let v = unit_vector(&mut rng, 100);
+        assert!((norm2(&v) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn logsumexp_stable_and_correct() {
+        // Large offsets must not overflow.
+        let v = [1000.0, 1000.0];
+        assert!((logsumexp(&v) - (1000.0 + 2f64.ln())).abs() < 1e-9);
+        let w = [0.0, (2f64).ln(), (3f64).ln()];
+        assert!((logsumexp(&w) - (6f64).ln()).abs() < 1e-12);
+        assert_eq!(logsumexp(&[f64::NEG_INFINITY]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        let s: f64 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut y = vec![10.0f32, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, vec![6.0, 12.0, 18.0]);
+    }
+
+    #[test]
+    fn cosine_of_parallel_and_orthogonal() {
+        assert!((cosine(&[1.0, 0.0], &[2.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 3.0]).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+}

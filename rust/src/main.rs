@@ -1,0 +1,221 @@
+//! `rfsoftmax` — CLI entrypoint for the RF-softmax training framework.
+//!
+//! ```text
+//! rfsoftmax train --prefix ptb --sampler.kind rff --train.steps 2000
+//! rfsoftmax info                       # list compiled artifacts
+//! rfsoftmax sample --sampler.kind rff  # standalone sampling demo
+//! rfsoftmax bias --sampler.kind uniform
+//! ```
+
+use anyhow::{bail, Result};
+use rfsoftmax::cli::{render_help, Args, FlagSpec};
+use rfsoftmax::config::Config;
+use rfsoftmax::coordinator::TrainerBuilder;
+use rfsoftmax::json::to_string_pretty;
+use rfsoftmax::linalg::{unit_vector, Matrix};
+use rfsoftmax::rng::Rng;
+use rfsoftmax::runtime::Runtime;
+
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "info" => cmd_info(rest),
+        "sample" => cmd_sample(rest),
+        "bias" => cmd_bias(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try: train, info, sample, bias)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "rfsoftmax — Sampled Softmax with Random Fourier Features (NeurIPS 2019)\n\n\
+         Commands:\n  \
+         train   train a model with a configured negative sampler\n  \
+         info    list compiled AOT artifacts\n  \
+         sample  standalone sampling demo (no artifacts needed)\n  \
+         bias    gradient-bias diagnostic (Theorem 1 empirics)\n\n\
+         Run `rfsoftmax <command> --help` for flags."
+    );
+}
+
+/// Split raw args into (known command flags, config overrides): anything
+/// with a '.' in the key is treated as a config override.
+fn split_config_overrides(a: &Args) -> Vec<(String, String)> {
+    a.overrides()
+        .filter(|(k, _)| k.contains('.'))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+fn cmd_train(raw: &[String]) -> Result<()> {
+    let a = Args::parse(raw, &["help", "stale-sampling"])?;
+    if a.has("help") {
+        println!(
+            "{}",
+            render_help(
+                "train",
+                "train a model against the AOT artifacts",
+                &[
+                    FlagSpec {
+                        name: "prefix",
+                        help: "artifact prefix (quickstart|ptb|bnews|xc_*)",
+                        default: Some("quickstart".into()),
+                    },
+                    FlagSpec {
+                        name: "config",
+                        help: "JSON config file",
+                        default: None,
+                    },
+                    FlagSpec {
+                        name: "artifacts",
+                        help: "artifact directory",
+                        default: Some("artifacts".into()),
+                    },
+                    FlagSpec {
+                        name: "stale-sampling",
+                        help: "sample with the previous step's query (pipelined mode)",
+                        default: None,
+                    },
+                    FlagSpec {
+                        name: "<section>.<key>",
+                        help: "any config override, e.g. --sampler.kind rff",
+                        default: None,
+                    },
+                ]
+            )
+        );
+        return Ok(());
+    }
+    let prefix = a.str_or("prefix", "quickstart").to_string();
+    let dir = a.str_or("artifacts", "artifacts").to_string();
+    let cfg = Config::load(a.get("config"), split_config_overrides(&a).into_iter())?;
+    let runtime = Runtime::load(&dir)?;
+    println!(
+        "platform: {} | prefix: {prefix} | sampler: {}",
+        runtime.platform(),
+        cfg.sampler.kind.name()
+    );
+    let mut trainer = TrainerBuilder::new(&runtime, &prefix, cfg)
+        .stale_sampling(a.has("stale-sampling"))
+        .build()?;
+    let report = trainer.run()?;
+    println!(
+        "done: sampler={} steps={} final_metric={:.4} wall={:.1}s",
+        report.sampler, report.steps_run, report.final_metric, report.wall_seconds
+    );
+    println!("curve: {}", report.curve());
+    println!("{}", to_string_pretty(&report.to_json()));
+    Ok(())
+}
+
+fn cmd_info(raw: &[String]) -> Result<()> {
+    let a = Args::parse(raw, &["help"])?;
+    let dir = a.str_or("artifacts", "artifacts").to_string();
+    let runtime = Runtime::load(&dir)?;
+    println!("platform: {}", runtime.platform());
+    println!("artifacts in {dir}:");
+    for meta in runtime.manifest().iter() {
+        let ins: Vec<String> = meta
+            .inputs
+            .iter()
+            .map(|t| format!("{}:{}{:?}", t.name, t.dtype, t.shape))
+            .collect();
+        println!("  {:<28} {} -> {} outputs", meta.name, ins.join(" "), meta.outputs.len());
+    }
+    Ok(())
+}
+
+fn cmd_sample(raw: &[String]) -> Result<()> {
+    let a = Args::parse(raw, &["help"])?;
+    let cfg = Config::load(a.get("config"), split_config_overrides(&a).into_iter())?;
+    let n = cfg.model.num_classes.min(10_000);
+    let d = cfg.model.embed_dim.min(128);
+    let mut rng = Rng::seeded(cfg.sampler.seed);
+    let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+    let sampler = rfsoftmax::coordinator::build_sampler(
+        &cfg,
+        &classes,
+        Some(&vec![1.0; n]),
+        &mut rng,
+    )?;
+    let h = unit_vector(&mut rng, d);
+    let t0 = std::time::Instant::now();
+    let draw = sampler.sample(&h, cfg.sampler.num_negatives, &mut rng);
+    let dt = t0.elapsed();
+    println!(
+        "sampler={} n={n} d={d} m={} wall={:?}",
+        sampler.name(),
+        draw.len(),
+        dt
+    );
+    for (id, q) in draw.ids.iter().zip(&draw.probs).take(10) {
+        println!("  class {id:>6}  q = {q:.3e}");
+    }
+    Ok(())
+}
+
+fn cmd_bias(raw: &[String]) -> Result<()> {
+    let a = Args::parse(raw, &["help"])?;
+    let cfg = Config::load(a.get("config"), split_config_overrides(&a).into_iter())?;
+    let n = cfg.model.num_classes.min(200);
+    let d = cfg.model.embed_dim.min(32);
+    let trials = a.usize_or("trials", 3000)?;
+    let mut rng = Rng::seeded(cfg.sampler.seed);
+    let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+    let sampler = rfsoftmax::coordinator::build_sampler(
+        &cfg,
+        &classes,
+        Some(&vec![1.0; n]),
+        &mut rng,
+    )?;
+    let h = unit_vector(&mut rng, d);
+    let est = rfsoftmax::bias::empirical_bias(
+        &classes,
+        &h,
+        0,
+        cfg.model.tau,
+        sampler.as_ref(),
+        cfg.sampler.num_negatives,
+        trials,
+        &mut rng,
+    );
+    let diag = rfsoftmax::bias::theorem_diagnostics(
+        &classes,
+        &h,
+        0,
+        cfg.model.tau,
+        sampler.as_ref(),
+        cfg.sampler.num_negatives,
+    );
+    println!(
+        "sampler={} n={n} m={} trials={trials}",
+        sampler.name(),
+        cfg.sampler.num_negatives
+    );
+    println!("  |bias|_inf = {:.4e} (MC se {:.1e})", est.linf, est.max_se);
+    println!("  |bias|_2   = {:.4e}", est.l2);
+    println!("  UB1        = {:.4e}", diag.ub1);
+    println!(
+        "  Σe²ᵒ/q vs floor: {:.4e} / {:.4e}",
+        diag.sum_sq_over_q, diag.floor
+    );
+    Ok(())
+}

@@ -1,0 +1,284 @@
+//! Metrics substrate: counters, timers, EWMAs, streaming statistics and
+//! histograms, plus JSON/CSV emitters. The coordinator records per-phase
+//! timings (sample / execute / optimize / tree-update) through this module;
+//! the bench harness reuses [`Summary`] for reporting.
+
+use crate::json::Json;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Streaming mean/variance/min/max via Welford's algorithm.
+#[derive(Clone, Debug, Default)]
+pub struct Stream {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stream {
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        if self.n == 1 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exponentially-weighted moving average (for smoothed loss curves).
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { alpha, value: None }
+    }
+
+    pub fn record(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Fixed-bucket latency histogram (log-spaced, nanoseconds).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// bucket i covers [2^i, 2^{i+1}) ns; 64 buckets cover everything.
+    buckets: [u64; 64],
+    stream: Stream,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { buckets: [0; 64], stream: Stream::default() }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos().max(1) as u64;
+        let idx = 63 - ns.leading_zeros() as usize;
+        self.buckets[idx] += 1;
+        self.stream.record(ns as f64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.stream.count()
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.stream.mean() as u64)
+    }
+
+    /// Approximate quantile from the log buckets (upper bucket edge).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.stream.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Duration::from_nanos(1u64 << (i + 1).min(63));
+            }
+        }
+        Duration::from_nanos(u64::MAX)
+    }
+}
+
+/// A registry of named metrics for one run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    streams: BTreeMap<String, Stream>,
+    timers: BTreeMap<String, LatencyHistogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn observe(&mut self, name: &str, x: f64) {
+        self.streams.entry(name.to_string()).or_default().record(x);
+    }
+
+    pub fn stream(&self, name: &str) -> Option<&Stream> {
+        self.streams.get(name)
+    }
+
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record_duration(name, t0.elapsed());
+        out
+    }
+
+    pub fn record_duration(&mut self, name: &str, d: Duration) {
+        self.timers.entry(name.to_string()).or_default().record(d);
+    }
+
+    pub fn timer(&self, name: &str) -> Option<&LatencyHistogram> {
+        self.timers.get(name)
+    }
+
+    /// Dump everything as JSON (for EXPERIMENTS.md records).
+    pub fn to_json(&self) -> Json {
+        let mut counters = Vec::new();
+        for (k, v) in &self.counters {
+            counters.push((k.as_str(), Json::from(*v as usize)));
+        }
+        let mut streams = Vec::new();
+        for (k, s) in &self.streams {
+            streams.push((
+                k.as_str(),
+                Json::obj(vec![
+                    ("count", Json::from(s.count() as usize)),
+                    ("mean", Json::from(s.mean())),
+                    ("stddev", Json::from(s.stddev())),
+                    ("min", Json::from(s.min())),
+                    ("max", Json::from(s.max())),
+                ]),
+            ));
+        }
+        let mut timers = Vec::new();
+        for (k, t) in &self.timers {
+            timers.push((
+                k.as_str(),
+                Json::obj(vec![
+                    ("count", Json::from(t.count() as usize)),
+                    ("mean_us", Json::from(t.mean().as_secs_f64() * 1e6)),
+                    (
+                        "p50_us",
+                        Json::from(t.quantile(0.5).as_secs_f64() * 1e6),
+                    ),
+                    (
+                        "p95_us",
+                        Json::from(t.quantile(0.95).as_secs_f64() * 1e6),
+                    ),
+                ]),
+            ));
+        }
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("streams", Json::obj(streams)),
+            ("timers", Json::obj(timers)),
+        ])
+    }
+}
+
+/// Simple scoped timer returning elapsed seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_stats() {
+        let mut s = Stream::default();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.record(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.record(10.0), 10.0);
+        let v = e.record(0.0);
+        assert!((v - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::default();
+        for us in [1u64, 10, 100, 1000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.quantile(0.5) <= h.quantile(0.95));
+        assert!(h.quantile(0.95) <= h.quantile(1.0));
+    }
+
+    #[test]
+    fn registry_counters_and_json() {
+        let mut m = Metrics::new();
+        m.incr("steps", 3);
+        m.observe("loss", 1.5);
+        m.observe("loss", 0.5);
+        m.time("op", || std::thread::sleep(Duration::from_millis(1)));
+        assert_eq!(m.counter("steps"), 3);
+        assert!((m.stream("loss").unwrap().mean() - 1.0).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.at(&["counters", "steps"]).unwrap().as_i64(), Some(3));
+        assert!(j.at(&["timers", "op", "mean_us"]).unwrap().as_f64().unwrap() >= 1000.0);
+    }
+}

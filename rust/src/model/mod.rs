@@ -1,0 +1,293 @@
+//! Parameter store: named, shaped f32 blocks owned by the Rust
+//! coordinator. The PJRT executables are pure functions — parameters are
+//! passed in and gradients returned every step — so this store is the
+//! single source of truth for model state (L3 owns state; DESIGN.md §1).
+//!
+//! Includes binary checkpointing (save/load with shape validation) and
+//! L2-normalized row views for the paper's normalized-embedding regime.
+
+use crate::linalg::l2_normalize;
+use crate::rng::Rng;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// One named parameter block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Block {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Block {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Rows/cols for 2-D blocks (embedding tables).
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows(): block {} is not 2-D", self.name);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols(): block {} is not 2-D", self.name);
+        self.shape[1]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// L2-normalize every row in place (paper §3.2 normalized embeddings).
+    pub fn normalize_rows(&mut self) {
+        let c = self.cols();
+        for chunk in self.data.chunks_mut(c) {
+            l2_normalize(chunk);
+        }
+    }
+}
+
+/// Ordered collection of parameter blocks. Block order is the calling
+/// convention of the AOT executables (see `artifacts/manifest.json`).
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    blocks: Vec<Block>,
+    index: BTreeMap<String, usize>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a block initialized with gaussian(0, std) entries.
+    pub fn add_randn(
+        &mut self,
+        name: &str,
+        shape: &[usize],
+        std: f32,
+        rng: &mut Rng,
+    ) -> usize {
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0.0f32; numel];
+        rng.fill_gaussian_f32(&mut data);
+        for v in data.iter_mut() {
+            *v *= std;
+        }
+        self.add(name, shape, data)
+    }
+
+    /// Add a zero block.
+    pub fn add_zeros(&mut self, name: &str, shape: &[usize]) -> usize {
+        let numel: usize = shape.iter().product();
+        self.add(name, shape, vec![0.0; numel])
+    }
+
+    pub fn add(&mut self, name: &str, shape: &[usize], data: Vec<f32>) -> usize {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "ParamStore::add({name}): data/shape mismatch"
+        );
+        assert!(
+            !self.index.contains_key(name),
+            "ParamStore: duplicate block '{name}'"
+        );
+        let id = self.blocks.len();
+        self.index.insert(name.to_string(), id);
+        self.blocks.push(Block {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            data,
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.blocks.iter().map(|b| b.numel()).sum()
+    }
+
+    pub fn get(&self, id: usize) -> &Block {
+        &self.blocks[id]
+    }
+
+    pub fn get_mut(&mut self, id: usize) -> &mut Block {
+        &mut self.blocks[id]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Block> {
+        self.index.get(name).map(|&i| &self.blocks[i])
+    }
+
+    pub fn by_name_mut(&mut self, name: &str) -> Option<&mut Block> {
+        if let Some(&i) = self.index.get(name) {
+            Some(&mut self.blocks[i])
+        } else {
+            None
+        }
+    }
+
+    pub fn id_of(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Block> {
+        self.blocks.iter()
+    }
+
+    /// Binary checkpoint format:
+    /// magic "RFSM" | u32 version | u32 nblocks | per block:
+    /// u32 name_len | name | u32 ndim | u64 dims… | f32 data…
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"RFSM")?;
+        f.write_all(&1u32.to_le_bytes())?;
+        f.write_all(&(self.blocks.len() as u32).to_le_bytes())?;
+        for b in &self.blocks {
+            f.write_all(&(b.name.len() as u32).to_le_bytes())?;
+            f.write_all(b.name.as_bytes())?;
+            f.write_all(&(b.shape.len() as u32).to_le_bytes())?;
+            for &d in &b.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &v in &b.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"RFSM" {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "bad checkpoint magic",
+            ));
+        }
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u32b)?;
+        let version = u32::from_le_bytes(u32b);
+        if version != 1 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("unsupported checkpoint version {version}"),
+            ));
+        }
+        f.read_exact(&mut u32b)?;
+        let nblocks = u32::from_le_bytes(u32b) as usize;
+        let mut store = ParamStore::new();
+        for _ in 0..nblocks {
+            f.read_exact(&mut u32b)?;
+            let name_len = u32::from_le_bytes(u32b) as usize;
+            let mut name_buf = vec![0u8; name_len];
+            f.read_exact(&mut name_buf)?;
+            let name = String::from_utf8(name_buf).map_err(|_| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "bad block name",
+                )
+            })?;
+            f.read_exact(&mut u32b)?;
+            let ndim = u32::from_le_bytes(u32b) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            let mut u64b = [0u8; 8];
+            for _ in 0..ndim {
+                f.read_exact(&mut u64b)?;
+                shape.push(u64::from_le_bytes(u64b) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut data = vec![0.0f32; numel];
+            let mut f32b = [0u8; 4];
+            for v in data.iter_mut() {
+                f.read_exact(&mut f32b)?;
+                *v = f32::from_le_bytes(f32b);
+            }
+            store.add(&name, &shape, data);
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_lookup() {
+        let mut rng = Rng::seeded(141);
+        let mut s = ParamStore::new();
+        let id = s.add_randn("emb", &[10, 4], 0.1, &mut rng);
+        assert_eq!(s.id_of("emb"), Some(id));
+        assert_eq!(s.get(id).rows(), 10);
+        assert_eq!(s.get(id).cols(), 4);
+        assert_eq!(s.total_params(), 40);
+        assert!(s.by_name("missing").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate block")]
+    fn duplicate_name_panics() {
+        let mut s = ParamStore::new();
+        s.add_zeros("x", &[2]);
+        s.add_zeros("x", &[2]);
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut rng = Rng::seeded(142);
+        let mut s = ParamStore::new();
+        s.add_randn("c", &[7, 5], 2.0, &mut rng);
+        s.by_name_mut("c").unwrap().normalize_rows();
+        let b = s.by_name("c").unwrap();
+        for i in 0..7 {
+            let n: f32 = b.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn checkpoint_round_trip() {
+        let mut rng = Rng::seeded(143);
+        let mut s = ParamStore::new();
+        s.add_randn("emb", &[6, 3], 0.5, &mut rng);
+        s.add_randn("proj", &[3, 4], 0.5, &mut rng);
+        s.add_zeros("bias", &[4]);
+        let dir = std::env::temp_dir().join("rfsm_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.ckpt");
+        s.save(&p).unwrap();
+        let loaded = ParamStore::load(&p).unwrap();
+        assert_eq!(loaded.len(), 3);
+        for (a, b) in s.iter().zip(loaded.iter()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("rfsm_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.ckpt");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(ParamStore::load(&p).is_err());
+    }
+}

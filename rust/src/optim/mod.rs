@@ -1,0 +1,273 @@
+//! First-order optimizers, applied by the L3 coordinator to the
+//! [`crate::model::ParamStore`] after each PJRT step. All support both
+//! dense block updates and **sparse row updates** (only the target +
+//! sampled class-embedding rows change each step — the update pattern
+//! sampled softmax exists to enable).
+//!
+//! Gradient clipping is per-coordinate (`clip`), matching Theorem 1's
+//! bounded-gradient assumption (footnote 3 of the paper).
+
+use std::collections::BTreeMap;
+
+/// Optimizer state slot per (block, parameter) as needed.
+#[derive(Clone, Debug, Default)]
+struct Slot {
+    /// First moment / momentum / accumulator (algorithm-dependent).
+    m: Vec<f32>,
+    /// Second moment (Adam only).
+    v: Vec<f32>,
+}
+
+/// Which algorithm an [`Optimizer`] runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Algo {
+    Sgd,
+    /// Heavy-ball momentum with coefficient β.
+    Momentum { beta: f32 },
+    /// Adagrad with accumulator floor ε.
+    Adagrad { eps: f32 },
+    /// Adam (β₁, β₂, ε). Bias correction uses a per-block step count.
+    Adam { beta1: f32, beta2: f32, eps: f32 },
+}
+
+/// A stateful optimizer over identified parameter blocks.
+#[derive(Clone, Debug)]
+pub struct Optimizer {
+    pub algo: Algo,
+    pub lr: f32,
+    /// Per-coordinate gradient clip (0 ⇒ disabled).
+    pub clip: f32,
+    slots: BTreeMap<usize, Slot>,
+    steps: BTreeMap<usize, u64>,
+}
+
+impl Optimizer {
+    pub fn new(algo: Algo, lr: f32, clip: f32) -> Self {
+        assert!(lr > 0.0, "Optimizer: lr must be > 0");
+        assert!(clip >= 0.0);
+        Self { algo, lr, clip, slots: BTreeMap::new(), steps: BTreeMap::new() }
+    }
+
+    pub fn sgd(lr: f32, clip: f32) -> Self {
+        Self::new(Algo::Sgd, lr, clip)
+    }
+
+    pub fn momentum(lr: f32, beta: f32, clip: f32) -> Self {
+        Self::new(Algo::Momentum { beta }, lr, clip)
+    }
+
+    pub fn adagrad(lr: f32, clip: f32) -> Self {
+        Self::new(Algo::Adagrad { eps: 1e-8 }, lr, clip)
+    }
+
+    pub fn adam(lr: f32, clip: f32) -> Self {
+        Self::new(Algo::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }, lr, clip)
+    }
+
+    pub fn from_config(cfg: &crate::config::TrainConfig) -> Self {
+        use crate::config::OptimizerKind::*;
+        match cfg.optimizer {
+            Sgd => Self::sgd(cfg.lr, cfg.grad_clip),
+            Momentum => Self::momentum(cfg.lr, 0.9, cfg.grad_clip),
+            Adagrad => Self::adagrad(cfg.lr, cfg.grad_clip),
+            Adam => Self::adam(cfg.lr, cfg.grad_clip),
+        }
+    }
+
+    fn slot(&mut self, block: usize, numel: usize, need_v: bool) -> &mut Slot {
+        let slot = self.slots.entry(block).or_default();
+        if slot.m.len() != numel {
+            slot.m = vec![0.0; numel];
+        }
+        if need_v && slot.v.len() != numel {
+            slot.v = vec![0.0; numel];
+        }
+        slot
+    }
+
+    /// Dense update of a whole block: `param -= lr * step(grad)`.
+    pub fn update_dense(&mut self, block: usize, param: &mut [f32], grad: &[f32]) {
+        assert_eq!(param.len(), grad.len());
+        let indices: Vec<usize> = (0..param.len()).collect();
+        self.update_at(block, param, grad, &indices, param.len());
+    }
+
+    /// Sparse update: `grad` holds one packed gradient value per entry of
+    /// `coords` (flat indices into the block).
+    pub fn update_sparse(
+        &mut self,
+        block: usize,
+        param: &mut [f32],
+        coords: &[usize],
+        grad: &[f32],
+    ) {
+        assert_eq!(coords.len(), grad.len());
+        let numel = param.len();
+        self.update_at(block, param, grad, coords, numel);
+    }
+
+    /// Sparse *row* update for 2-D blocks: `grads` is `rows.len() × cols`
+    /// packed row-major.
+    pub fn update_rows(
+        &mut self,
+        block: usize,
+        param: &mut [f32],
+        cols: usize,
+        rows: &[usize],
+        grads: &[f32],
+    ) {
+        assert_eq!(grads.len(), rows.len() * cols);
+        let mut coords = Vec::with_capacity(grads.len());
+        for &r in rows {
+            for c in 0..cols {
+                coords.push(r * cols + c);
+            }
+        }
+        let numel = param.len();
+        self.update_at(block, param, grads, &coords, numel);
+    }
+
+    fn update_at(
+        &mut self,
+        block: usize,
+        param: &mut [f32],
+        grad: &[f32],
+        coords: &[usize],
+        numel: usize,
+    ) {
+        let lr = self.lr;
+        let clip = self.clip;
+        let clipg = |g: f32| if clip > 0.0 { g.clamp(-clip, clip) } else { g };
+        match self.algo {
+            Algo::Sgd => {
+                for (&c, &g) in coords.iter().zip(grad.iter()) {
+                    param[c] -= lr * clipg(g);
+                }
+            }
+            Algo::Momentum { beta } => {
+                let slot = self.slot(block, numel, false);
+                for (&c, &g) in coords.iter().zip(grad.iter()) {
+                    let g = clipg(g);
+                    slot.m[c] = beta * slot.m[c] + g;
+                    param[c] -= lr * slot.m[c];
+                }
+            }
+            Algo::Adagrad { eps } => {
+                let slot = self.slot(block, numel, false);
+                for (&c, &g) in coords.iter().zip(grad.iter()) {
+                    let g = clipg(g);
+                    slot.m[c] += g * g;
+                    param[c] -= lr * g / (slot.m[c].sqrt() + eps);
+                }
+            }
+            Algo::Adam { beta1, beta2, eps } => {
+                let t = {
+                    let e = self.steps.entry(block).or_insert(0);
+                    *e += 1;
+                    *e
+                };
+                let slot = self.slot(block, numel, true);
+                let bc1 = 1.0 - beta1.powi(t as i32);
+                let bc2 = 1.0 - beta2.powi(t as i32);
+                for (&c, &g) in coords.iter().zip(grad.iter()) {
+                    let g = clipg(g);
+                    slot.m[c] = beta1 * slot.m[c] + (1.0 - beta1) * g;
+                    slot.v[c] = beta2 * slot.v[c] + (1.0 - beta2) * g * g;
+                    let mhat = slot.m[c] / bc1;
+                    let vhat = slot.v[c] / bc2;
+                    param[c] -= lr * mhat / (vhat.sqrt() + eps);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimize f(x) = ½‖x − target‖² and require convergence.
+    fn converges(mut opt: Optimizer, steps: usize, tol: f32) {
+        let target = [1.0f32, -2.0, 0.5];
+        let mut x = [0.0f32; 3];
+        for _ in 0..steps {
+            let grad: Vec<f32> =
+                x.iter().zip(&target).map(|(xi, ti)| xi - ti).collect();
+            opt.update_dense(0, &mut x, &grad);
+        }
+        for (xi, ti) in x.iter().zip(&target) {
+            assert!(
+                (xi - ti).abs() < tol,
+                "{:?} did not converge: {x:?}",
+                opt.algo
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_converges() {
+        converges(Optimizer::sgd(0.1, 0.0), 200, 1e-3);
+    }
+
+    #[test]
+    fn momentum_converges() {
+        converges(Optimizer::momentum(0.05, 0.9, 0.0), 300, 1e-2);
+    }
+
+    #[test]
+    fn adagrad_converges() {
+        converges(Optimizer::adagrad(0.5, 0.0), 800, 2e-2);
+    }
+
+    #[test]
+    fn adam_converges() {
+        converges(Optimizer::adam(0.05, 0.0), 600, 1e-2);
+    }
+
+    #[test]
+    fn clipping_limits_step() {
+        let mut opt = Optimizer::sgd(1.0, 0.5);
+        let mut x = [0.0f32];
+        opt.update_dense(0, &mut x, &[100.0]);
+        assert!((x[0] + 0.5).abs() < 1e-6, "clip failed: {}", x[0]);
+    }
+
+    #[test]
+    fn sparse_row_update_touches_only_rows() {
+        let mut opt = Optimizer::sgd(1.0, 0.0);
+        let mut param = vec![0.0f32; 4 * 3]; // 4 rows × 3 cols
+        let grads = vec![1.0f32; 2 * 3];
+        opt.update_rows(0, &mut param, 3, &[1, 3], &grads);
+        assert!(param[0..3].iter().all(|&v| v == 0.0));
+        assert!(param[3..6].iter().all(|&v| v == -1.0));
+        assert!(param[6..9].iter().all(|&v| v == 0.0));
+        assert!(param[9..12].iter().all(|&v| v == -1.0));
+    }
+
+    #[test]
+    fn adagrad_sparse_state_is_per_coordinate() {
+        // Two updates to row 0 must decay its effective lr, while row 1's
+        // first update uses the full lr.
+        let mut opt = Optimizer::adagrad(1.0, 0.0);
+        let mut param = vec![0.0f32; 2 * 2];
+        opt.update_rows(0, &mut param, 2, &[0], &[1.0, 1.0]);
+        let after_first = param[0];
+        opt.update_rows(0, &mut param, 2, &[0], &[1.0, 1.0]);
+        let second_step = param[0] - after_first;
+        opt.update_rows(0, &mut param, 2, &[1], &[1.0, 1.0]);
+        let fresh_step = param[2];
+        assert!(second_step.abs() < fresh_step.abs());
+    }
+
+    #[test]
+    fn separate_blocks_have_separate_state() {
+        let mut opt = Optimizer::adagrad(1.0, 0.0);
+        let mut a = vec![0.0f32; 2];
+        let mut b = vec![0.0f32; 2];
+        opt.update_dense(0, &mut a, &[1.0, 1.0]);
+        opt.update_dense(0, &mut a, &[1.0, 1.0]);
+        opt.update_dense(1, &mut b, &[1.0, 1.0]);
+        // Block 1's first step is un-decayed.
+        assert!((b[0] - a[0] / 2.0).abs() > 0.1);
+    }
+}

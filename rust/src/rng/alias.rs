@@ -1,0 +1,164 @@
+//! Walker alias method: O(n) construction, O(1) sampling from a fixed
+//! categorical distribution. Used for static sampling priors (log-uniform,
+//! unigram) and inside the synthetic data generators.
+
+use super::Rng;
+
+/// Alias table over `n` outcomes.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    /// Acceptance probability for the "home" outcome of each bucket.
+    prob: Vec<f64>,
+    /// Alias outcome used when the home outcome is rejected.
+    alias: Vec<u32>,
+    /// The normalized pmf (kept for exact probability queries).
+    pmf: Vec<f64>,
+}
+
+impl AliasTable {
+    /// Build from unnormalized non-negative weights. Panics on empty input
+    /// or zero/negative total mass.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "AliasTable: empty weights");
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && total.is_finite(),
+            "AliasTable: invalid total mass {total}"
+        );
+        assert!(
+            weights.iter().all(|&w| w >= 0.0),
+            "AliasTable: negative weight"
+        );
+        let pmf: Vec<f64> = weights.iter().map(|&w| w / total).collect();
+
+        // Scaled probabilities; bucket i is "small" if scaled < 1.
+        let mut scaled: Vec<f64> = pmf.iter().map(|&p| p * n as f64).collect();
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+
+        let mut prob = vec![1.0f64; n];
+        let mut alias = vec![0u32; n];
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s as usize] = scaled[s as usize];
+            alias[s as usize] = l;
+            scaled[l as usize] -= 1.0 - scaled[s as usize];
+            if scaled[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Leftovers (numerical slack) get probability 1.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i as usize] = 1.0;
+        }
+
+        Self { prob, alias, pmf }
+    }
+
+    /// Number of outcomes.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Exact probability of outcome `i` under the table's distribution.
+    #[inline]
+    pub fn probability(&self, i: usize) -> f64 {
+        self.pmf[i]
+    }
+
+    /// Draw one outcome in O(1).
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.index(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+
+    /// Draw `m` outcomes (with replacement).
+    pub fn sample_many(&self, rng: &mut Rng, m: usize) -> Vec<usize> {
+        (0..m).map(|_| self.sample(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(weights: &[f64], trials: usize, seed: u64) -> Vec<f64> {
+        let table = AliasTable::new(weights);
+        let mut rng = Rng::seeded(seed);
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..trials {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / trials as f64).collect()
+    }
+
+    #[test]
+    fn matches_pmf_uniformish() {
+        let w = [1.0, 1.0, 1.0, 1.0];
+        let freq = empirical(&w, 200_000, 1);
+        for f in freq {
+            assert!((f - 0.25).abs() < 0.006, "{f}");
+        }
+    }
+
+    #[test]
+    fn matches_pmf_skewed() {
+        let w = [0.5, 10.0, 0.01, 3.0, 0.0, 1.0];
+        let total: f64 = w.iter().sum();
+        let freq = empirical(&w, 400_000, 2);
+        for (i, f) in freq.iter().enumerate() {
+            let p = w[i] / total;
+            assert!((f - p).abs() < 0.01, "class {i}: {f} vs {p}");
+        }
+        // Zero-weight class never sampled.
+        assert_eq!(freq[4], 0.0);
+    }
+
+    #[test]
+    fn probability_query_is_normalized() {
+        let w = [2.0, 3.0, 5.0];
+        let t = AliasTable::new(&w);
+        let s: f64 = (0..3).map(|i| t.probability(i)).sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert!((t.probability(2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_outcome() {
+        let t = AliasTable::new(&[42.0]);
+        let mut rng = Rng::seeded(3);
+        for _ in 0..100 {
+            assert_eq!(t.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_mass() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_negative() {
+        AliasTable::new(&[1.0, -0.5]);
+    }
+}

@@ -1,0 +1,119 @@
+//! Zipf-distributed sampler over `{0, ..., n-1}`:
+//! `P(k) ∝ 1/(k+1)^s`. Precomputes the CDF once, samples by binary search
+//! (O(log n)). Drives the class-frequency skew of the synthetic language
+//! corpora (natural-language unigram frequencies are famously Zipfian).
+
+use super::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+    s: f64,
+}
+
+impl Zipf {
+    /// `n` outcomes with exponent `s` (s=1.0 is the classic Zipf law).
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "Zipf: n must be positive");
+        assert!(s >= 0.0 && s.is_finite(), "Zipf: bad exponent {s}");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        Self { cdf, s }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    pub fn exponent(&self) -> f64 {
+        self.s
+    }
+
+    /// Probability of outcome `k`.
+    pub fn probability(&self, k: usize) -> f64 {
+        if k == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[k] - self.cdf[k - 1]
+        }
+    }
+
+    /// Draw one outcome in O(log n).
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        // partition_point returns the first index with cdf > u.
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+
+    /// The full pmf (used to build alias tables / priors).
+    pub fn pmf(&self) -> Vec<f64> {
+        (0..self.len()).map(|k| self.probability(k)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pmf_sums_to_one() {
+        let z = Zipf::new(1000, 1.0);
+        let s: f64 = z.pmf().iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn head_heavier_than_tail() {
+        let z = Zipf::new(100, 1.0);
+        assert!(z.probability(0) > 10.0 * z.probability(99));
+    }
+
+    #[test]
+    fn s_zero_is_uniform() {
+        let z = Zipf::new(10, 0.0);
+        for k in 0..10 {
+            assert!((z.probability(k) - 0.1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empirical_matches_pmf() {
+        let z = Zipf::new(50, 1.2);
+        let mut rng = Rng::seeded(11);
+        let trials = 300_000;
+        let mut counts = vec![0usize; 50];
+        for _ in 0..trials {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for k in 0..50 {
+            let p = z.probability(k);
+            let f = counts[k] as f64 / trials as f64;
+            assert!(
+                (f - p).abs() < 0.01 + 3.0 * (p / trials as f64).sqrt() * 10.0,
+                "k={k}: {f} vs {p}"
+            );
+        }
+    }
+
+    #[test]
+    fn sample_in_range() {
+        let z = Zipf::new(7, 2.0);
+        let mut rng = Rng::seeded(12);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 7);
+        }
+    }
+}

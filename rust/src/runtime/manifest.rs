@@ -1,0 +1,199 @@
+//! Typed view of `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`). Example document:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "artifacts": {
+//!     "ptb_train_sampled": {
+//!       "file": "ptb_train_sampled.hlo.txt",
+//!       "inputs":  [{"name": "ctx_emb", "dtype": "f32", "shape": [32, 10, 100]}],
+//!       "outputs": [{"name": "loss", "dtype": "f32", "shape": []}],
+//!       "meta": {"config": "ptb", "tau": 11.11}
+//!     }
+//!   }
+//! }
+//! ```
+
+use crate::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// Shape + dtype of one input/output tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: &'static str,
+    pub shape: Vec<usize>,
+}
+
+/// One entry point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    /// Free-form metadata (the generating config, τ, etc.).
+    pub meta: Json,
+}
+
+impl ArtifactMeta {
+    /// Look up a numeric metadata field (e.g. `tau`).
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(|j| j.as_f64())
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|j| j.as_usize())
+    }
+
+    /// Index of a named input.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|t| t.name == name)
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let j = json::parse(text).map_err(|e| e.to_string())?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_object())
+            .ok_or("manifest: missing 'artifacts' object")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, body) in arts {
+            let file = body
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| format!("artifact '{name}': missing file"))?
+                .to_string();
+            let inputs = parse_tensors(body.get("inputs"), name, "inputs")?;
+            let outputs = parse_tensors(body.get("outputs"), name, "outputs")?;
+            let meta =
+                body.get("meta").cloned().unwrap_or(Json::Obj(Default::default()));
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta { name: name.clone(), file, inputs, outputs, meta },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.get(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.artifacts.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.artifacts.values()
+    }
+}
+
+fn parse_tensors(
+    j: Option<&Json>,
+    artifact: &str,
+    field: &str,
+) -> Result<Vec<TensorMeta>, String> {
+    let arr = j
+        .and_then(|x| x.as_array())
+        .ok_or_else(|| format!("artifact '{artifact}': missing {field}"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, t) in arr.iter().enumerate() {
+        let name = t
+            .get("name")
+            .and_then(|n| n.as_str())
+            .unwrap_or(&format!("{field}{i}"))
+            .to_string();
+        let dtype = match t.get("dtype").and_then(|d| d.as_str()) {
+            Some("f32") => "f32",
+            Some("i32") => "i32",
+            other => {
+                return Err(format!(
+                    "artifact '{artifact}' {field}[{i}]: bad dtype {other:?}"
+                ))
+            }
+        };
+        let shape = t
+            .get("shape")
+            .and_then(|s| s.as_array())
+            .ok_or_else(|| {
+                format!("artifact '{artifact}' {field}[{i}]: missing shape")
+            })?
+            .iter()
+            .map(|d| {
+                d.as_usize().ok_or_else(|| {
+                    format!("artifact '{artifact}' {field}[{i}]: bad dim")
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        out.push(TensorMeta { name, dtype, shape });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "artifacts": {
+            "demo": {
+                "file": "demo.hlo.txt",
+                "inputs": [
+                    {"name": "x", "dtype": "f32", "shape": [2, 3]},
+                    {"name": "ids", "dtype": "i32", "shape": [4]}
+                ],
+                "outputs": [{"name": "loss", "dtype": "f32", "shape": []}],
+                "meta": {"tau": 4.0, "config": "tiny"}
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.get("demo").unwrap();
+        assert_eq!(a.file, "demo.hlo.txt");
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[1].dtype, "i32");
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(a.meta_f64("tau"), Some(4.0));
+        assert_eq!(a.input_index("ids"), Some(1));
+        assert_eq!(a.input_index("nope"), None);
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"i32\"", "\"f16\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_artifacts_key() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

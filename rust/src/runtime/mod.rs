@@ -1,0 +1,274 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`) and executes them from the
+//! Rust hot path. Python never runs here.
+//!
+//! Interchange is **HLO text** — the image's xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §1).
+//!
+//! The manifest (`artifacts/manifest.json`) lists every entry point with
+//! its input/output shapes and dtypes; [`Runtime`] validates calls against
+//! it and compiles executables lazily (first use) with caching.
+
+mod manifest;
+
+pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A host-side tensor to pass into / receive from an executable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "HostTensor::f32 shape/data mismatch"
+        );
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "HostTensor::i32 shape/data mismatch"
+        );
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } => shape,
+            HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "f32",
+            HostTensor::I32 { .. } => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            _ => panic!("HostTensor: expected f32, got {}", self.dtype()),
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            _ => panic!("HostTensor: expected f32"),
+        }
+    }
+
+    pub fn scalar(&self) -> f32 {
+        let d = self.as_f32();
+        assert_eq!(d.len(), 1, "HostTensor::scalar on non-scalar");
+        d[0]
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => {
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            HostTensor::I32 { data, .. } => {
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>()?,
+            }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>()?,
+            }),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+/// A compiled entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl Executable {
+    /// Execute with shape/dtype validation against the manifest.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, m)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if t.shape() != m.shape.as_slice() || t.dtype() != m.dtype {
+                bail!(
+                    "{}: input {i} ('{}') expects {}{:?}, got {}{:?}",
+                    self.meta.name,
+                    m.name,
+                    m.dtype,
+                    m.shape,
+                    t.dtype(),
+                    t.shape()
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out_lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = out_lit.to_tuple()?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for p in &parts {
+            outs.push(HostTensor::from_literal(p)?);
+        }
+        if outs.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: manifest declares {} outputs, executable returned {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// Artifact registry + lazy compiler. One PJRT CPU client per runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest from an artifact directory (does not compile yet).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text)
+            .map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifact directory (`$RFSM_ARTIFACTS` or `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("RFSM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Whether an entry point exists in the manifest.
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.get(name).is_some()
+    }
+
+    /// Get (compiling + caching on first use) an executable by name.
+    pub fn get(&self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown artifact '{name}'; manifest has: {}",
+                    self.manifest.names().join(", ")
+                )
+            })?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let executable = std::rc::Rc::new(Executable { exe, meta });
+        self.cache.borrow_mut().insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let t = HostTensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), "f32");
+        let s = HostTensor::scalar_f32(4.0);
+        assert_eq!(s.scalar(), 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn host_tensor_rejects_bad_shape() {
+        HostTensor::f32(&[2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn missing_manifest_is_friendly_error() {
+        let msg = match Runtime::load("/nonexistent/dir") {
+            Ok(_) => panic!("load of missing dir must fail"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+    }
+}

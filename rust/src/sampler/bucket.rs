@@ -1,0 +1,272 @@
+//! Two-level bucketed kernel sampler — bounded-memory variant of the
+//! §3.1 sampling tree for very large `n × D` products (e.g. the Quadratic
+//! baseline's `D = d²+1` features at n ≥ 200k, where a full per-node tree
+//! would need tens of GB).
+//!
+//! Structure: classes are grouped into `⌈n/b⌉` buckets.
+//!
+//! * **Across buckets**: a [`KernelTree`] over the bucket φ-sums —
+//!   `O(D log(n/b))` to pick a bucket.
+//! * **Within a bucket**: the kernel `K(h, c_i)` is evaluated *directly*
+//!   (via [`FeatureMap::exact_kernel`], `O(d)` per class — no feature
+//!   vector needed), and a class is drawn by an `O(b)` clamped scan.
+//!
+//! The returned probability is exactly `P(bucket) · P(i | bucket)` of the
+//! procedure that produced the sample, so the importance-weighted
+//! partition estimate (paper eq. 5) stays unbiased; the distribution
+//! equals the tree sampler's up to the feature map's approximation error
+//! inside `P(bucket)` (exact for the quadratic map, whose linearization
+//! is exact).
+//!
+//! Memory: `O((n/b)·D + n·d)` instead of `O(n·D)`.
+
+use super::{KernelTree, NegativeDraw, Sampler};
+use crate::featmap::FeatureMap;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use std::cell::RefCell;
+
+const EPS: f64 = 1e-8;
+
+pub struct BucketKernelSampler<M: FeatureMap> {
+    map: M,
+    /// Tree over bucket-level φ sums.
+    tree: KernelTree,
+    classes: Matrix,
+    bucket_size: usize,
+    num_buckets: usize,
+    scratch: RefCell<Scratch>,
+    name: &'static str,
+}
+
+struct Scratch {
+    query: Vec<f32>,
+    phi_old: Vec<f32>,
+    phi_new: Vec<f32>,
+    masses: Vec<f64>,
+}
+
+impl<M: FeatureMap> BucketKernelSampler<M> {
+    pub fn with_map(
+        classes: &Matrix,
+        map: M,
+        bucket_size: usize,
+        name: &'static str,
+    ) -> Self {
+        assert!(bucket_size >= 1);
+        let n = classes.rows();
+        let dim = map.output_dim();
+        let num_buckets = n.div_ceil(bucket_size);
+        let mut tree = KernelTree::new(num_buckets, dim, EPS);
+        let mut phi = vec![0.0f32; dim];
+        let mut sum = vec![0.0f32; dim];
+        for bkt in 0..num_buckets {
+            sum.iter_mut().for_each(|v| *v = 0.0);
+            let lo = bkt * bucket_size;
+            let hi = (lo + bucket_size).min(n);
+            for i in lo..hi {
+                map.map_into(classes.row(i), &mut phi);
+                for (s, p) in sum.iter_mut().zip(&phi) {
+                    *s += p;
+                }
+            }
+            tree.add_leaf(bkt, &sum);
+        }
+        Self {
+            map,
+            tree,
+            classes: classes.clone(),
+            bucket_size,
+            num_buckets,
+            scratch: RefCell::new(Scratch {
+                query: vec![0.0; dim],
+                phi_old: vec![0.0; dim],
+                phi_new: vec![0.0; dim],
+                masses: vec![0.0; bucket_size],
+            }),
+            name,
+        }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.tree.memory_bytes()
+            + self.classes.data().len() * std::mem::size_of::<f32>()
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.num_buckets
+    }
+
+    fn bucket_range(&self, bkt: usize) -> (usize, usize) {
+        let lo = bkt * self.bucket_size;
+        (lo, (lo + self.bucket_size).min(self.classes.rows()))
+    }
+
+    /// Clamped within-bucket masses for query h; returns total.
+    fn bucket_masses(&self, h: &[f32], bkt: usize, masses: &mut Vec<f64>) -> f64 {
+        let (lo, hi) = self.bucket_range(bkt);
+        masses.clear();
+        let mut total = 0.0;
+        for i in lo..hi {
+            let k = self.map.exact_kernel(h, self.classes.row(i)).max(0.0) + EPS;
+            masses.push(k);
+            total += k;
+        }
+        total
+    }
+}
+
+impl<M: FeatureMap> Sampler for BucketKernelSampler<M> {
+    fn num_classes(&self) -> usize {
+        self.classes.rows()
+    }
+
+    fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
+        let mut sc = self.scratch.borrow_mut();
+        let Scratch { query, masses, .. } = &mut *sc;
+        self.map.map_into(h, query);
+        let mut out = NegativeDraw::with_capacity(m);
+        for _ in 0..m {
+            let (bkt, q_bucket) = self.tree.sample(query, rng);
+            let total = self.bucket_masses(h, bkt, masses);
+            let mut u = rng.f64() * total;
+            let mut pick = masses.len() - 1;
+            for (j, &w) in masses.iter().enumerate() {
+                u -= w;
+                if u < 0.0 {
+                    pick = j;
+                    break;
+                }
+            }
+            let (lo, _) = self.bucket_range(bkt);
+            out.ids.push((lo + pick) as u32);
+            out.probs.push(q_bucket * masses[pick] / total);
+        }
+        out
+    }
+
+    fn probability(&self, h: &[f32], class: usize) -> f64 {
+        let bkt = class / self.bucket_size;
+        let mut sc = self.scratch.borrow_mut();
+        let Scratch { query, masses, .. } = &mut *sc;
+        self.map.map_into(h, query);
+        let q_bucket = self.tree.probability(query, bkt);
+        let total = self.bucket_masses(h, bkt, masses);
+        let (lo, _) = self.bucket_range(bkt);
+        q_bucket * masses[class - lo] / total
+    }
+
+    fn update_class(&mut self, class: usize, embedding: &[f32]) {
+        let bkt = class / self.bucket_size;
+        let sc = self.scratch.get_mut();
+        self.map.map_into(self.classes.row(class), &mut sc.phi_old);
+        self.map.map_into(embedding, &mut sc.phi_new);
+        for (new, old) in sc.phi_new.iter_mut().zip(sc.phi_old.iter()) {
+            *new -= old;
+        }
+        self.tree.update_leaf(bkt, &sc.phi_new);
+        self.classes.row_mut(class).copy_from_slice(embedding);
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+unsafe impl<M: FeatureMap> Send for BucketKernelSampler<M> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featmap::QuadraticMap;
+    use crate::linalg::{dot, unit_vector};
+
+    fn setup(n: usize, d: usize, b: usize) -> (Matrix, BucketKernelSampler<QuadraticMap>) {
+        let mut rng = Rng::seeded(161);
+        let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+        let map = QuadraticMap::new(d, 100.0, 1.0);
+        let s = BucketKernelSampler::with_map(&classes, map, b, "quadratic-bucket");
+        (classes, s)
+    }
+
+    #[test]
+    fn matches_exact_quadratic_distribution() {
+        // For the quadratic map P(bucket) is exact, so the two-level
+        // probability must equal the global kernel distribution.
+        let (classes, s) = setup(37, 8, 5);
+        let mut rng = Rng::seeded(162);
+        let h = unit_vector(&mut rng, 8);
+        let k: Vec<f64> = (0..37)
+            .map(|i| {
+                let v = dot(&h, classes.row(i)) as f64;
+                100.0 * v * v + 1.0
+            })
+            .collect();
+        let tot: f64 = k.iter().sum();
+        let mut qsum = 0.0;
+        for i in 0..37 {
+            let q = s.probability(&h, i);
+            let want = k[i] / tot;
+            assert!(
+                (q - want).abs() < 2e-3 * want.max(1e-6),
+                "class {i}: {q} vs {want}"
+            );
+            qsum += q;
+        }
+        assert!((qsum - 1.0).abs() < 1e-6, "Σq = {qsum}");
+    }
+
+    #[test]
+    fn sampling_frequency_matches_probability() {
+        let (_, s) = setup(20, 6, 4);
+        let mut rng = Rng::seeded(163);
+        let h = unit_vector(&mut rng, 6);
+        let trials = 100_000;
+        let draw = s.sample(&h, trials, &mut rng);
+        let mut counts = vec![0usize; 20];
+        for &id in &draw.ids {
+            counts[id as usize] += 1;
+        }
+        for i in 0..20 {
+            let q = s.probability(&h, i);
+            let freq = counts[i] as f64 / trials as f64;
+            let sd = (q * (1.0 - q) / trials as f64).sqrt();
+            assert!(
+                (freq - q).abs() < 5.0 * sd + 1e-3,
+                "class {i}: freq {freq} vs q {q}"
+            );
+        }
+    }
+
+    #[test]
+    fn update_propagates_both_levels() {
+        let (_, mut s) = setup(24, 6, 4);
+        let mut rng = Rng::seeded(164);
+        let h = unit_vector(&mut rng, 6);
+        let before = s.probability(&h, 10);
+        s.update_class(10, &h); // align with query → kernel value jumps
+        let after = s.probability(&h, 10);
+        assert!(after > before, "{before} → {after}");
+        // Distribution still normalized.
+        let qsum: f64 = (0..24).map(|i| s.probability(&h, i)).sum();
+        assert!((qsum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn memory_is_bounded_by_buckets() {
+        let (_, coarse) = setup(512, 8, 128);
+        let (_, fine) = setup(512, 8, 2);
+        assert!(coarse.memory_bytes() < fine.memory_bytes());
+    }
+
+    #[test]
+    fn bucket_size_one_equals_tree_semantics() {
+        let (_, s) = setup(9, 4, 1);
+        let mut rng = Rng::seeded(165);
+        let h = unit_vector(&mut rng, 4);
+        let qsum: f64 = (0..9).map(|i| s.probability(&h, i)).sum();
+        assert!((qsum - 1.0).abs() < 1e-6);
+        let draw = s.sample(&h, 50, &mut rng);
+        assert_eq!(draw.len(), 50);
+    }
+}

@@ -1,0 +1,414 @@
+//! Kernel-based samplers: the paper's RF-softmax and the Quadratic-softmax
+//! baseline, both running on the [`KernelTree`].
+//!
+//! The sampler owns (a) the feature map φ, (b) a copy of the class
+//! embeddings (needed to recompute `φ_old` on updates — this keeps tree
+//! memory at `O(nD)` node sums instead of additionally storing every leaf
+//! feature vector), and (c) reusable query scratch.
+
+use super::{KernelTree, NegativeDraw, Sampler};
+use crate::config::FeatureMapKind;
+use crate::featmap::{FeatureMap, OrfMap, QuadraticMap, RffMap, SorfMap};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use std::cell::RefCell;
+
+/// Probability floor fed to the tree; keeps every q_i strictly positive
+/// (Theorem 1's requirement) while being negligible against real kernel
+/// mass (RFF values are O(1) for normalized embeddings).
+const TREE_EPS: f64 = 1e-8;
+
+/// Generic kernel sampler over an arbitrary feature map.
+pub struct KernelSampler<M: FeatureMap> {
+    map: M,
+    tree: KernelTree,
+    /// Copy of current class embeddings (n × d).
+    classes: Matrix,
+    /// Scratch for φ computations (avoids per-call allocation).
+    scratch: RefCell<Scratch>,
+    name: &'static str,
+}
+
+struct Scratch {
+    query: Vec<f32>,
+    phi_old: Vec<f32>,
+    phi_new: Vec<f32>,
+}
+
+impl<M: FeatureMap> KernelSampler<M> {
+    pub fn with_map(classes: &Matrix, map: M, name: &'static str) -> Self {
+        let n = classes.rows();
+        let dim = map.output_dim();
+        assert_eq!(
+            classes.cols(),
+            map.input_dim(),
+            "class embedding dim must match feature-map input dim"
+        );
+        let mut tree = KernelTree::new(n, dim, TREE_EPS);
+        let mut phi = vec![0.0f32; dim];
+        for i in 0..n {
+            map.map_into(classes.row(i), &mut phi);
+            tree.add_leaf(i, &phi);
+        }
+        Self {
+            map,
+            tree,
+            classes: classes.clone(),
+            scratch: RefCell::new(Scratch {
+                query: vec![0.0; dim],
+                phi_old: vec![0.0; dim],
+                phi_new: vec![0.0; dim],
+            }),
+            name,
+        }
+    }
+
+    /// The tree's memory footprint (for the Table-2 harness notes).
+    pub fn memory_bytes(&self) -> usize {
+        self.tree.memory_bytes()
+            + self.classes.data().len() * std::mem::size_of::<f32>()
+    }
+
+    pub fn feature_map(&self) -> &M {
+        &self.map
+    }
+
+    /// Rebuild the tree from scratch (counters numerical drift after very
+    /// long runs; `O(nD + nd·cost(φ))`).
+    pub fn rebuild(&mut self) {
+        let n = self.classes.rows();
+        let dim = self.map.output_dim();
+        let mut tree = KernelTree::new(n, dim, TREE_EPS);
+        let mut phi = vec![0.0f32; dim];
+        for i in 0..n {
+            self.map.map_into(self.classes.row(i), &mut phi);
+            tree.add_leaf(i, &phi);
+        }
+        self.tree = tree;
+    }
+}
+
+impl<M: FeatureMap> Sampler for KernelSampler<M> {
+    fn num_classes(&self) -> usize {
+        self.tree.num_classes()
+    }
+
+    fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
+        let mut sc = self.scratch.borrow_mut();
+        self.map.map_into(h, &mut sc.query);
+        let (ids, probs) = self.tree.sample_many(&sc.query, m, rng);
+        NegativeDraw { ids, probs }
+    }
+
+    fn probability(&self, h: &[f32], class: usize) -> f64 {
+        let mut sc = self.scratch.borrow_mut();
+        self.map.map_into(h, &mut sc.query);
+        self.tree.probability(&sc.query, class)
+    }
+
+    fn update_class(&mut self, class: usize, embedding: &[f32]) {
+        let sc = self.scratch.get_mut();
+        self.map.map_into(self.classes.row(class), &mut sc.phi_old);
+        self.map.map_into(embedding, &mut sc.phi_new);
+        for (new, old) in sc.phi_new.iter_mut().zip(sc.phi_old.iter()) {
+            *new -= old; // phi_new now holds the delta
+        }
+        self.tree.update_leaf(class, &sc.phi_new);
+        self.classes.row_mut(class).copy_from_slice(embedding);
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+// The scratch RefCell is only touched from &self methods on a single
+// thread at a time; the coordinator gives each worker its own sampler
+// clone or routes through &mut. RefCell is !Sync, so assert Send only.
+unsafe impl<M: FeatureMap> Send for KernelSampler<M> {}
+
+/// RF-softmax (the paper's method): RFF/ORF/SORF features of the Gaussian
+/// kernel with parameter ν ⇒ `q_i ∝ exp(-ν‖c_i − h‖²/2) ∝ exp(ν hᵀc_i)`
+/// for normalized embeddings (paper eq. 16, 19).
+pub enum RffSampler {
+    Classic(KernelSampler<RffMap>),
+    Orf(KernelSampler<OrfMap>),
+    Sorf(KernelSampler<SorfMap>),
+}
+
+impl RffSampler {
+    /// `num_freqs` = D frequencies (map output dim is 2D), ν the Gaussian
+    /// kernel parameter (paper recommends ν < τ; T = 1/√ν = 0.5 is the
+    /// paper's best PTB setting).
+    pub fn new(
+        classes: &Matrix,
+        num_freqs: usize,
+        nu: f32,
+        rng: &mut Rng,
+    ) -> Self {
+        Self::with_kind(classes, num_freqs, nu, FeatureMapKind::Rff, rng)
+    }
+
+    pub fn with_kind(
+        classes: &Matrix,
+        num_freqs: usize,
+        nu: f32,
+        kind: FeatureMapKind,
+        rng: &mut Rng,
+    ) -> Self {
+        let d = classes.cols();
+        match kind {
+            FeatureMapKind::Rff => RffSampler::Classic(KernelSampler::with_map(
+                classes,
+                RffMap::new(d, num_freqs, nu, rng),
+                "rff",
+            )),
+            FeatureMapKind::Orf => RffSampler::Orf(KernelSampler::with_map(
+                classes,
+                OrfMap::new(d, num_freqs, nu, rng),
+                "rff-orf",
+            )),
+            FeatureMapKind::Sorf => RffSampler::Sorf(KernelSampler::with_map(
+                classes,
+                SorfMap::new(d, num_freqs, nu, rng),
+                "rff-sorf",
+            )),
+        }
+    }
+
+    fn inner(&self) -> &dyn Sampler {
+        match self {
+            RffSampler::Classic(s) => s,
+            RffSampler::Orf(s) => s,
+            RffSampler::Sorf(s) => s,
+        }
+    }
+
+    fn inner_mut(&mut self) -> &mut dyn Sampler {
+        match self {
+            RffSampler::Classic(s) => s,
+            RffSampler::Orf(s) => s,
+            RffSampler::Sorf(s) => s,
+        }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            RffSampler::Classic(s) => s.memory_bytes(),
+            RffSampler::Orf(s) => s.memory_bytes(),
+            RffSampler::Sorf(s) => s.memory_bytes(),
+        }
+    }
+
+    pub fn rebuild(&mut self) {
+        match self {
+            RffSampler::Classic(s) => s.rebuild(),
+            RffSampler::Orf(s) => s.rebuild(),
+            RffSampler::Sorf(s) => s.rebuild(),
+        }
+    }
+}
+
+impl Sampler for RffSampler {
+    fn num_classes(&self) -> usize {
+        self.inner().num_classes()
+    }
+
+    fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
+        self.inner().sample(h, m, rng)
+    }
+
+    fn probability(&self, h: &[f32], class: usize) -> f64 {
+        self.inner().probability(h, class)
+    }
+
+    fn update_class(&mut self, class: usize, embedding: &[f32]) {
+        self.inner_mut().update_class(class, embedding)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner().name()
+    }
+}
+
+/// Quadratic-softmax baseline [12]: `q_i ∝ α(hᵀc_i)² + β` via the exact
+/// `D = d²+1` linearization. Cost `O(d² log n)` per draw.
+pub struct QuadraticSampler {
+    inner: KernelSampler<QuadraticMap>,
+}
+
+impl QuadraticSampler {
+    /// The paper's baseline setting is α = 100, β = 1.
+    pub fn new(classes: &Matrix, alpha: f32, beta: f32) -> Self {
+        let map = QuadraticMap::new(classes.cols(), alpha, beta);
+        Self { inner: KernelSampler::with_map(classes, map, "quadratic") }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.inner.memory_bytes()
+    }
+}
+
+impl Sampler for QuadraticSampler {
+    fn num_classes(&self) -> usize {
+        self.inner.num_classes()
+    }
+
+    fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
+        self.inner.sample(h, m, rng)
+    }
+
+    fn probability(&self, h: &[f32], class: usize) -> f64 {
+        self.inner.probability(h, class)
+    }
+
+    fn update_class(&mut self, class: usize, embedding: &[f32]) {
+        self.inner.update_class(class, embedding)
+    }
+
+    fn name(&self) -> &'static str {
+        "quadratic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::unit_vector;
+
+    fn normalized_classes(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+        Matrix::randn(rng, n, d).l2_normalized_rows()
+    }
+
+    #[test]
+    fn rff_sampler_tracks_softmax_distribution() {
+        // With ν = τ and large D, q should correlate strongly with the
+        // softmax distribution p ∝ exp(τ hᵀc) (paper Theorem 2).
+        let mut rng = Rng::seeded(101);
+        let n = 64;
+        let d = 16;
+        let tau = 2.0f32;
+        let classes = normalized_classes(&mut rng, n, d);
+        let sampler = RffSampler::new(&classes, 2048, tau, &mut rng);
+        let h = unit_vector(&mut rng, d);
+        let logits: Vec<f64> = (0..n)
+            .map(|i| (tau * crate::linalg::dot(&h, classes.row(i))) as f64)
+            .collect();
+        let p = crate::linalg::softmax(&logits);
+        let q: Vec<f64> = (0..n).map(|i| sampler.probability(&h, i)).collect();
+        // Pearson correlation between p and q should be high.
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let (mp, mq) = (mean(&p), mean(&q));
+        let cov: f64 =
+            p.iter().zip(&q).map(|(a, b)| (a - mp) * (b - mq)).sum();
+        let vp: f64 = p.iter().map(|a| (a - mp) * (a - mp)).sum();
+        let vq: f64 = q.iter().map(|b| (b - mq) * (b - mq)).sum();
+        let corr = cov / (vp.sqrt() * vq.sqrt());
+        assert!(corr > 0.9, "correlation q↔p = {corr}");
+    }
+
+    #[test]
+    fn quadratic_sampler_matches_kernel_exactly() {
+        let mut rng = Rng::seeded(102);
+        let n = 32;
+        let d = 8;
+        let classes = normalized_classes(&mut rng, n, d);
+        let sampler = QuadraticSampler::new(&classes, 100.0, 1.0);
+        let h = unit_vector(&mut rng, d);
+        // Brute-force kernel distribution.
+        let k: Vec<f64> = (0..n)
+            .map(|i| {
+                let s = crate::linalg::dot(&h, classes.row(i)) as f64;
+                100.0 * s * s + 1.0
+            })
+            .collect();
+        let tot: f64 = k.iter().sum();
+        for i in 0..n {
+            let q = sampler.probability(&h, i);
+            let want = k[i] / tot;
+            assert!(
+                (q - want).abs() < 1e-4,
+                "class {i}: q {q} vs kernel {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn update_class_shifts_distribution() {
+        let mut rng = Rng::seeded(103);
+        let n = 16;
+        let d = 8;
+        let classes = normalized_classes(&mut rng, n, d);
+        let mut sampler = QuadraticSampler::new(&classes, 100.0, 1.0);
+        let h = unit_vector(&mut rng, d);
+        let before = sampler.probability(&h, 3);
+        // Move class 3 onto h ⇒ its kernel value (and q) must rise.
+        sampler.update_class(3, &h);
+        let after = sampler.probability(&h, 3);
+        assert!(
+            after > before,
+            "q(3) should increase after aligning: {before} → {after}"
+        );
+    }
+
+    #[test]
+    fn update_matches_rebuild() {
+        let mut rng = Rng::seeded(104);
+        let n = 24;
+        let d = 6;
+        let classes = normalized_classes(&mut rng, n, d);
+        let mut a =
+            RffSampler::new(&classes, 64, 1.0, &mut Rng::seeded(500));
+        // Apply updates then compare against a freshly-built sampler with
+        // identical map (same seed) and final embeddings.
+        let mut final_classes = classes.clone();
+        for step in 0..10 {
+            let i = step % n;
+            let e = unit_vector(&mut rng, d);
+            a.update_class(i, &e);
+            final_classes.row_mut(i).copy_from_slice(&e);
+        }
+        let b = RffSampler::new(&final_classes, 64, 1.0, &mut Rng::seeded(500));
+        let h = unit_vector(&mut rng, d);
+        for i in 0..n {
+            let pa = a.probability(&h, i);
+            let pb = b.probability(&h, i);
+            assert!(
+                (pa - pb).abs() < 1e-4 * pa.max(pb).max(1e-9),
+                "class {i}: {pa} vs {pb}"
+            );
+        }
+    }
+
+    #[test]
+    fn sample_negatives_excludes_target() {
+        let mut rng = Rng::seeded(105);
+        let n = 20;
+        let d = 4;
+        let classes = normalized_classes(&mut rng, n, d);
+        let sampler = RffSampler::new(&classes, 32, 2.0, &mut rng);
+        let h = unit_vector(&mut rng, d);
+        let draw = sampler.sample_negatives(&h, 7, 50, &mut rng);
+        assert_eq!(draw.len(), 50);
+        assert!(draw.ids.iter().all(|&i| i != 7));
+        assert!(draw.probs.iter().all(|&q| q > 0.0 && q <= 1.0));
+    }
+
+    #[test]
+    fn sorf_variant_works_end_to_end() {
+        let mut rng = Rng::seeded(106);
+        let classes = normalized_classes(&mut rng, 10, 8);
+        let sampler = RffSampler::with_kind(
+            &classes,
+            32,
+            2.0,
+            FeatureMapKind::Sorf,
+            &mut rng,
+        );
+        let h = unit_vector(&mut rng, 8);
+        let draw = sampler.sample(&h, 16, &mut rng);
+        assert_eq!(draw.len(), 16);
+        let total: f64 = (0..10).map(|i| sampler.probability(&h, i)).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+}

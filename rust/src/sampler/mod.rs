@@ -1,0 +1,150 @@
+//! Negative-sampling distributions for sampled softmax (paper §1.1, §3).
+//!
+//! A [`Sampler`] produces `m` class indices with their exact sampling
+//! probabilities `q_i` — the probabilities feed the logit adjustment
+//! `o′ = o − log(m·q)` (paper eq. 5) that makes the sampled partition
+//! function unbiased.
+//!
+//! The paper's taxonomy, reproduced here:
+//!
+//! | Sampler | q_i | cost/sample | paper role |
+//! |---|---|---|---|
+//! | [`RffSampler`] | `∝ φ_RFF(c_i)ᵀφ_RFF(h)` | `O(D log n)` | **RF-softmax (the contribution)** |
+//! | [`QuadraticSampler`] | `∝ α(hᵀc_i)²+β` | `O(d² log n)` | Quadratic-softmax baseline [12] |
+//! | [`ExactSoftmaxSampler`] | `∝ e^{τhᵀc_i}` | `O(dn)` | EXP baseline |
+//! | [`UniformSampler`] | `1/n` | `O(1)` | UNIFORM baseline |
+//! | [`LogUniformSampler`] | `∝ log((i+2)/(i+1))` | `O(1)` | classic LM prior |
+//! | [`AliasSampler`] | arbitrary static pmf | `O(1)` | unigram prior |
+//! | [`GumbelTopKSampler`] | top-k of perturbed logits | `O(dn)` | Gumbel-trick extension [13] |
+//!
+//! Kernel-based samplers run on the [`KernelTree`] divide-and-conquer
+//! structure of §3.1 and support `O(D log n)` embedding updates.
+
+mod bucket;
+mod kernel_samplers;
+mod simple;
+mod tree;
+
+pub use bucket::BucketKernelSampler;
+pub use kernel_samplers::{QuadraticSampler, RffSampler};
+pub use simple::{
+    AliasSampler, ExactSoftmaxSampler, GumbelTopKSampler, LogUniformSampler,
+    UniformSampler,
+};
+pub use tree::KernelTree;
+
+use crate::rng::Rng;
+
+/// Result of drawing `m` classes: ids plus their exact sampling
+/// probabilities under the sampler's distribution (conditioned on the
+/// excluded target when drawn via [`Sampler::sample_negatives`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NegativeDraw {
+    pub ids: Vec<u32>,
+    pub probs: Vec<f64>,
+}
+
+impl NegativeDraw {
+    pub fn with_capacity(m: usize) -> Self {
+        Self { ids: Vec::with_capacity(m), probs: Vec::with_capacity(m) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
+/// A (possibly input-dependent) sampling distribution over classes.
+pub trait Sampler: Send {
+    /// Total number of classes n.
+    fn num_classes(&self) -> usize;
+
+    /// Draw `m` classes i.i.d. from `q(· | h)`, returning exact
+    /// probabilities. `h` is the current input embedding (ignored by
+    /// static samplers).
+    fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw;
+
+    /// Exact probability `q_i(h)` of class `i`.
+    fn probability(&self, h: &[f32], class: usize) -> f64;
+
+    /// Draw `m` *negatives*: classes i.i.d. from `q(· | h)` conditioned on
+    /// `≠ target`, with probabilities renormalized by `1 − q_target`
+    /// (rejection sampling; exact).
+    fn sample_negatives(
+        &self,
+        h: &[f32],
+        target: usize,
+        m: usize,
+        rng: &mut Rng,
+    ) -> NegativeDraw {
+        let q_t = self.probability(h, target);
+        let renorm = (1.0 - q_t).max(f64::MIN_POSITIVE);
+        let mut out = NegativeDraw::with_capacity(m);
+        let mut guard = 0usize;
+        while out.ids.len() < m {
+            let draw = self.sample(h, m - out.ids.len(), rng);
+            for (id, p) in draw.ids.iter().zip(draw.probs.iter()) {
+                if *id as usize != target {
+                    out.ids.push(*id);
+                    out.probs.push(p / renorm);
+                }
+            }
+            guard += 1;
+            assert!(
+                guard < 10_000,
+                "sample_negatives: rejection not terminating (q_target={q_t})"
+            );
+        }
+        out
+    }
+
+    /// Propagate an updated class embedding into the sampler's state
+    /// (no-op for input-independent samplers).
+    fn update_class(&mut self, class: usize, embedding: &[f32]);
+
+    /// Human-readable name (matches the paper's method labels).
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Chi-square goodness-of-fit of empirical draws vs claimed probs.
+    /// Shared across sampler tests via pub(crate).
+    pub(crate) fn chi2_check(
+        sampler: &dyn Sampler,
+        h: &[f32],
+        trials: usize,
+        rng: &mut Rng,
+        tol_sigma: f64,
+    ) {
+        let n = sampler.num_classes();
+        let mut counts = vec![0usize; n];
+        let draw = sampler.sample(h, trials, rng);
+        for &id in &draw.ids {
+            counts[id as usize] += 1;
+        }
+        for i in 0..n {
+            let q = sampler.probability(h, i);
+            let expect = q * trials as f64;
+            let sd = (trials as f64 * q * (1.0 - q)).sqrt().max(1.0);
+            assert!(
+                (counts[i] as f64 - expect).abs() <= tol_sigma * sd + 3.0,
+                "class {i}: count {} vs expected {expect:.1} (q={q:.5})",
+                counts[i]
+            );
+        }
+    }
+
+    #[test]
+    fn negative_draw_capacity() {
+        let d = NegativeDraw::with_capacity(5);
+        assert!(d.is_empty());
+        assert_eq!(d.len(), 0);
+    }
+}

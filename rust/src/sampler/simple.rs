@@ -1,0 +1,366 @@
+//! Input-independent baselines (UNIFORM, log-uniform, unigram/alias) plus
+//! the two `O(dn)` oracles: the EXP baseline (exact softmax sampling) and
+//! the Gumbel-top-k extension.
+
+use super::{NegativeDraw, Sampler};
+use crate::linalg::{dot, Matrix};
+use crate::rng::{AliasTable, Rng};
+
+/// UNIFORM baseline: `q_i = 1/n`, `O(1)` per draw.
+pub struct UniformSampler {
+    n: usize,
+}
+
+impl UniformSampler {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        Self { n }
+    }
+}
+
+impl Sampler for UniformSampler {
+    fn num_classes(&self) -> usize {
+        self.n
+    }
+
+    fn sample(&self, _h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
+        let q = 1.0 / self.n as f64;
+        NegativeDraw {
+            ids: (0..m).map(|_| rng.index(self.n) as u32).collect(),
+            probs: vec![q; m],
+        }
+    }
+
+    fn probability(&self, _h: &[f32], _class: usize) -> f64 {
+        1.0 / self.n as f64
+    }
+
+    fn update_class(&mut self, _class: usize, _embedding: &[f32]) {}
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+/// Log-uniform (Zipfian rank) prior, the classic language-model negative
+/// sampler: `P(k) = log((k+2)/(k+1)) / log(n+1)`. Assumes class ids are
+/// ordered by decreasing frequency (true for our synthetic corpora).
+/// Sampling is `O(1)` by analytic inverse CDF.
+pub struct LogUniformSampler {
+    n: usize,
+    log_n1: f64,
+}
+
+impl LogUniformSampler {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        Self { n, log_n1: ((n + 1) as f64).ln() }
+    }
+}
+
+impl Sampler for LogUniformSampler {
+    fn num_classes(&self) -> usize {
+        self.n
+    }
+
+    fn sample(&self, _h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
+        let mut out = NegativeDraw::with_capacity(m);
+        for _ in 0..m {
+            // CDF(k) = log(k+2)/log(n+1) ⇒ k = ⌊e^{u·log(n+1)}⌋ − 1.
+            let u = rng.f64();
+            let k = ((u * self.log_n1).exp() as usize)
+                .saturating_sub(1)
+                .min(self.n - 1);
+            out.ids.push(k as u32);
+            out.probs.push(self.probability(&[], k));
+        }
+        out
+    }
+
+    fn probability(&self, _h: &[f32], class: usize) -> f64 {
+        (((class + 2) as f64).ln() - ((class + 1) as f64).ln()) / self.log_n1
+    }
+
+    fn update_class(&mut self, _class: usize, _embedding: &[f32]) {}
+
+    fn name(&self) -> &'static str {
+        "loguniform"
+    }
+}
+
+/// Static prior over classes (e.g. the empirical unigram distribution)
+/// via a Walker alias table: `O(1)` per draw.
+pub struct AliasSampler {
+    table: AliasTable,
+}
+
+impl AliasSampler {
+    pub fn new(weights: &[f64]) -> Self {
+        Self { table: AliasTable::new(weights) }
+    }
+}
+
+impl Sampler for AliasSampler {
+    fn num_classes(&self) -> usize {
+        self.table.len()
+    }
+
+    fn sample(&self, _h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
+        let mut out = NegativeDraw::with_capacity(m);
+        for _ in 0..m {
+            let i = self.table.sample(rng);
+            out.ids.push(i as u32);
+            out.probs.push(self.table.probability(i));
+        }
+        out
+    }
+
+    fn probability(&self, _h: &[f32], class: usize) -> f64 {
+        self.table.probability(class)
+    }
+
+    fn update_class(&mut self, _class: usize, _embedding: &[f32]) {}
+
+    fn name(&self) -> &'static str {
+        "unigram"
+    }
+}
+
+/// EXP baseline: sample *exactly* from the softmax distribution
+/// `q_i ∝ exp(τ hᵀc_i)` by computing all n logits — `O(dn)` per call,
+/// the cost RF-softmax exists to avoid. Gradient-wise this is the gold
+/// standard (Theorem 1: zero bias).
+pub struct ExactSoftmaxSampler {
+    classes: Matrix,
+    tau: f32,
+}
+
+impl ExactSoftmaxSampler {
+    pub fn new(classes: &Matrix, tau: f32) -> Self {
+        assert!(tau > 0.0);
+        Self { classes: classes.clone(), tau }
+    }
+
+    /// Full softmax pmf for a query (shared by sample/probability).
+    fn pmf(&self, h: &[f32]) -> Vec<f64> {
+        let n = self.classes.rows();
+        let mut logits = Vec::with_capacity(n);
+        for i in 0..n {
+            logits.push((self.tau * dot(h, self.classes.row(i))) as f64);
+        }
+        crate::linalg::softmax(&logits)
+    }
+}
+
+impl Sampler for ExactSoftmaxSampler {
+    fn num_classes(&self) -> usize {
+        self.classes.rows()
+    }
+
+    fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
+        let p = self.pmf(h);
+        // Alias table amortizes the m draws after the O(dn) logit pass.
+        let table = AliasTable::new(&p);
+        let mut out = NegativeDraw::with_capacity(m);
+        for _ in 0..m {
+            let i = table.sample(rng);
+            out.ids.push(i as u32);
+            out.probs.push(p[i]);
+        }
+        out
+    }
+
+    fn probability(&self, h: &[f32], class: usize) -> f64 {
+        self.pmf(h)[class]
+    }
+
+    fn update_class(&mut self, class: usize, embedding: &[f32]) {
+        self.classes.row_mut(class).copy_from_slice(embedding);
+    }
+
+    fn name(&self) -> &'static str {
+        "exp"
+    }
+}
+
+/// Gumbel-top-k extension (paper §1.1, ref [13]): perturb all logits with
+/// i.i.d. Gumbel noise and take the top `m` — a sample of m *distinct*
+/// classes whose marginal inclusion tracks the softmax distribution.
+/// Reported probabilities are the softmax marginals (the standard
+/// practical surrogate; exact subset probabilities are intractable).
+pub struct GumbelTopKSampler {
+    classes: Matrix,
+    tau: f32,
+}
+
+impl GumbelTopKSampler {
+    pub fn new(classes: &Matrix, tau: f32) -> Self {
+        assert!(tau > 0.0);
+        Self { classes: classes.clone(), tau }
+    }
+}
+
+impl Sampler for GumbelTopKSampler {
+    fn num_classes(&self) -> usize {
+        self.classes.rows()
+    }
+
+    fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
+        let n = self.classes.rows();
+        assert!(m <= n, "GumbelTopK: m > n");
+        let mut logits = Vec::with_capacity(n);
+        for i in 0..n {
+            logits.push((self.tau * dot(h, self.classes.row(i))) as f64);
+        }
+        let p = crate::linalg::softmax(&logits);
+        // Perturb and select top-m by partial sort.
+        let mut keyed: Vec<(f64, u32)> = logits
+            .iter()
+            .enumerate()
+            .map(|(i, &o)| (o + rng.gumbel(), i as u32))
+            .collect();
+        keyed.select_nth_unstable_by(m - 1, |a, b| {
+            b.0.partial_cmp(&a.0).unwrap()
+        });
+        keyed.truncate(m);
+        let mut out = NegativeDraw::with_capacity(m);
+        for (_, i) in keyed {
+            out.ids.push(i);
+            out.probs.push(p[i as usize]);
+        }
+        out
+    }
+
+    fn probability(&self, h: &[f32], class: usize) -> f64 {
+        let n = self.classes.rows();
+        let mut logits = Vec::with_capacity(n);
+        for i in 0..n {
+            logits.push((self.tau * dot(h, self.classes.row(i))) as f64);
+        }
+        crate::linalg::softmax(&logits)[class]
+    }
+
+    fn update_class(&mut self, class: usize, embedding: &[f32]) {
+        self.classes.row_mut(class).copy_from_slice(embedding);
+    }
+
+    fn name(&self) -> &'static str {
+        "gumbel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::unit_vector;
+    use crate::sampler::tests::chi2_check;
+
+    #[test]
+    fn uniform_probabilities() {
+        let s = UniformSampler::new(100);
+        assert!((s.probability(&[], 42) - 0.01).abs() < 1e-12);
+        let mut rng = Rng::seeded(111);
+        chi2_check(&s, &[], 100_000, &mut rng, 5.0);
+    }
+
+    #[test]
+    fn loguniform_pmf_sums_to_one_and_is_decreasing() {
+        let s = LogUniformSampler::new(1000);
+        let total: f64 = (0..1000).map(|i| s.probability(&[], i)).sum();
+        assert!((total - 1.0).abs() < 1e-9, "Σq = {total}");
+        assert!(s.probability(&[], 0) > s.probability(&[], 999));
+    }
+
+    #[test]
+    fn loguniform_empirical_matches_pmf() {
+        let s = LogUniformSampler::new(50);
+        let mut rng = Rng::seeded(112);
+        chi2_check(&s, &[], 200_000, &mut rng, 5.0);
+    }
+
+    #[test]
+    fn alias_sampler_matches_weights() {
+        let w = vec![1.0, 5.0, 0.5, 2.0, 1.5];
+        let s = AliasSampler::new(&w);
+        let mut rng = Rng::seeded(113);
+        chi2_check(&s, &[], 100_000, &mut rng, 5.0);
+    }
+
+    #[test]
+    fn exact_softmax_matches_brute_force() {
+        let mut rng = Rng::seeded(114);
+        let n = 30;
+        let d = 8;
+        let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+        let s = ExactSoftmaxSampler::new(&classes, 3.0);
+        let h = unit_vector(&mut rng, d);
+        // Direct softmax check.
+        // Match the sampler's f32 multiply-then-cast order exactly.
+        let logits: Vec<f64> = (0..n)
+            .map(|i| (3.0f32 * dot(&h, classes.row(i))) as f64)
+            .collect();
+        let p = crate::linalg::softmax(&logits);
+        for i in 0..n {
+            assert!((s.probability(&h, i) - p[i]).abs() < 1e-9);
+        }
+        chi2_check(&s, &h, 100_000, &mut rng, 5.0);
+    }
+
+    #[test]
+    fn exact_softmax_update_changes_pmf() {
+        let mut rng = Rng::seeded(115);
+        let classes = Matrix::randn(&mut rng, 10, 4).l2_normalized_rows();
+        let mut s = ExactSoftmaxSampler::new(&classes, 5.0);
+        let h = unit_vector(&mut rng, 4);
+        let before = s.probability(&h, 2);
+        s.update_class(2, &h); // align class 2 with h
+        assert!(s.probability(&h, 2) > before);
+    }
+
+    #[test]
+    fn gumbel_returns_distinct_classes() {
+        let mut rng = Rng::seeded(116);
+        let classes = Matrix::randn(&mut rng, 40, 6).l2_normalized_rows();
+        let s = GumbelTopKSampler::new(&classes, 4.0);
+        let h = unit_vector(&mut rng, 6);
+        let draw = s.sample(&h, 15, &mut rng);
+        assert_eq!(draw.len(), 15);
+        let set: std::collections::HashSet<_> = draw.ids.iter().collect();
+        assert_eq!(set.len(), 15, "gumbel-top-k must be distinct");
+    }
+
+    #[test]
+    fn gumbel_favors_high_logit_classes() {
+        let mut rng = Rng::seeded(117);
+        let d = 6;
+        let mut classes = Matrix::randn(&mut rng, 20, d).l2_normalized_rows();
+        let h = unit_vector(&mut rng, d);
+        classes.row_mut(5).copy_from_slice(&h); // class 5 = argmax logit
+        let s = GumbelTopKSampler::new(&classes, 10.0);
+        let mut hits = 0;
+        let trials = 300;
+        for _ in 0..trials {
+            let draw = s.sample(&h, 3, &mut rng);
+            if draw.ids.contains(&5) {
+                hits += 1;
+            }
+        }
+        assert!(
+            hits > trials * 8 / 10,
+            "top class included only {hits}/{trials} times"
+        );
+    }
+
+    #[test]
+    fn sample_negatives_renormalizes() {
+        // For uniform over n classes excluding t, q' must be 1/(n-1)·…
+        // — exactly q/(1-q_t).
+        let s = UniformSampler::new(10);
+        let mut rng = Rng::seeded(118);
+        let draw = s.sample_negatives(&[], 3, 1000, &mut rng);
+        assert!(draw.ids.iter().all(|&i| i != 3));
+        for &q in &draw.probs {
+            assert!((q - (0.1 / 0.9)).abs() < 1e-12);
+        }
+    }
+}

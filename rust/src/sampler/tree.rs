@@ -1,0 +1,536 @@
+//! The divide-and-conquer kernel sampling tree (paper §3.1; Blanc &
+//! Rendle 2018).
+//!
+//! Classes live at the leaves of an implicit complete binary tree; each
+//! internal node stores the *sum of feature vectors* `S = Σ φ(c_j)` over
+//! its **left** subtree (the right subtree's sum is recovered as
+//! `parent − left`, halving memory). Given a query `z = φ(h)`:
+//!
+//! * the mass of a subtree is `zᵀS` — one `O(D)` dot per level,
+//! * sampling walks root→leaf choosing branches proportionally to their
+//!   masses: `O(D log n)` per draw,
+//! * updating one class adds `Δ = φ_new − φ_old` along its root→leaf path:
+//!   `O(D log n)` per update,
+//! * the probability of the reached leaf is the telescoping product of
+//!   branch probabilities — with all-positive leaf masses it equals
+//!   `zᵀφ(c_i) / zᵀΣ_j φ(c_j)` exactly.
+//!
+//! **Negativity handling** (an implementation reality the paper inherits
+//! from [12] without discussion): RFF inner products can be negative.
+//! Branch masses are clamped at 0 and every *real* leaf carries a small
+//! `ε` floor, so `q_i > 0` for all classes (required by Theorem 1) and the
+//! returned probability is always the exact probability of the walk that
+//! produced the sample — the estimator stays unbiased regardless of the
+//! clamping.
+//!
+//! Memory is `O(n·D)` floats (`pad−1` left-sums + the root total), the
+//! inherent cost of the data structure.
+
+use crate::linalg::dot;
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct KernelTree {
+    /// Feature dimension D (the map's *output* dim).
+    dim: usize,
+    /// Number of real classes.
+    n: usize,
+    /// Leaves padded to a power of two; phantom leaves hold φ = 0.
+    pad: usize,
+    /// Left-child subtree sums for internal nodes 1..pad-1 (heap order),
+    /// flattened: node k's sum at `[(k-1)*dim .. k*dim]`.
+    left_sums: Vec<f32>,
+    /// Sum over all leaves (the root's total).
+    total: Vec<f32>,
+    /// Per-leaf probability floor (pseudo-mass added to every real leaf).
+    eps: f64,
+}
+
+impl KernelTree {
+    /// Empty tree for `n` classes with feature dim `dim`.
+    pub fn new(n: usize, dim: usize, eps: f64) -> Self {
+        assert!(n >= 1, "KernelTree: need at least one class");
+        assert!(dim >= 1);
+        assert!(eps > 0.0, "KernelTree: eps must be > 0 (Theorem 1 needs q_i > 0)");
+        let pad = n.next_power_of_two().max(2);
+        Self {
+            dim,
+            n,
+            pad,
+            left_sums: vec![0.0; (pad - 1) * dim],
+            total: vec![0.0; dim],
+            eps,
+        }
+    }
+
+    /// Build from per-class feature vectors (φ(c_0), …, φ(c_{n-1})).
+    pub fn build<'a>(
+        n: usize,
+        dim: usize,
+        eps: f64,
+        mut phi_of: impl FnMut(usize) -> &'a [f32],
+    ) -> Self {
+        let mut t = Self::new(n, dim, eps);
+        for i in 0..n {
+            let phi = phi_of(i);
+            t.add_leaf(i, phi);
+        }
+        t
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.n
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn eps(&self) -> f64 {
+        self.eps
+    }
+
+    /// Memory footprint of the node sums, in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        (self.left_sums.len() + self.total.len()) * std::mem::size_of::<f32>()
+    }
+
+    #[inline]
+    fn left_sum(&self, node: usize) -> &[f32] {
+        &self.left_sums[(node - 1) * self.dim..node * self.dim]
+    }
+
+    #[inline]
+    fn left_sum_mut(&mut self, node: usize) -> &mut [f32] {
+        &mut self.left_sums[(node - 1) * self.dim..node * self.dim]
+    }
+
+    /// Add `delta` to class `i`'s leaf (and all ancestor sums).
+    pub fn update_leaf(&mut self, i: usize, delta: &[f32]) {
+        assert!(i < self.n, "update_leaf: class {i} out of range");
+        assert_eq!(delta.len(), self.dim);
+        for (t, d) in self.total.iter_mut().zip(delta.iter()) {
+            *t += d;
+        }
+        // Walk root→leaf; when we descend left, the node's left-sum
+        // includes this leaf.
+        let mut node = 1usize;
+        let mut lo = 0usize;
+        let mut size = self.pad;
+        while size > 1 {
+            let half = size / 2;
+            if i < lo + half {
+                let ls = self.left_sum_mut(node);
+                for (t, d) in ls.iter_mut().zip(delta.iter()) {
+                    *t += d;
+                }
+                node *= 2;
+            } else {
+                node = node * 2 + 1;
+                lo += half;
+            }
+            size = half;
+        }
+    }
+
+    /// Initialize class `i`'s leaf value (identical to `update_leaf`, kept
+    /// separate for call-site clarity during construction).
+    pub fn add_leaf(&mut self, i: usize, phi: &[f32]) {
+        self.update_leaf(i, phi);
+    }
+
+    /// Total (unclamped) kernel mass `zᵀ Σ_j φ(c_j)` for a query.
+    pub fn mass(&self, z: &[f32]) -> f64 {
+        dot(&self.total, z) as f64
+    }
+
+    /// Effective (clamped + ε·count) mass of a subtree, given its raw mass.
+    ///
+    /// A subtree with no real leaves has *exactly* zero mass by
+    /// construction; its raw value reaches us via a chain of f32
+    /// subtractions whose rounding error would otherwise leak real
+    /// probability into phantom leaves (observed ~1% at n≈40 when most
+    /// masses clamp to the ε floor), so it is forced to 0 here.
+    #[inline]
+    fn eff(&self, raw: f64, real_leaves: usize) -> f64 {
+        if real_leaves == 0 {
+            return 0.0;
+        }
+        raw.max(0.0) + self.eps * real_leaves as f64
+    }
+
+    #[inline]
+    fn real_leaves(&self, lo: usize, size: usize) -> usize {
+        self.n.saturating_sub(lo).min(size)
+    }
+
+    /// Draw one class: returns `(class, q)` where `q` is the exact
+    /// probability of this draw under the clamped walk. `O(D log n)`.
+    pub fn sample(&self, z: &[f32], rng: &mut Rng) -> (usize, f64) {
+        debug_assert_eq!(z.len(), self.dim);
+        let mut node = 1usize;
+        let mut lo = 0usize;
+        let mut size = self.pad;
+        let mut raw = self.mass(z);
+        let mut q = 1.0f64;
+        while size > 1 {
+            let half = size / 2;
+            let raw_left = dot(self.left_sum(node), z) as f64;
+            let raw_right = raw - raw_left;
+            let nl = self.real_leaves(lo, half);
+            let nr = self.real_leaves(lo + half, half);
+            let el = self.eff(raw_left, nl);
+            let er = self.eff(raw_right, nr);
+            let tot = el + er;
+            debug_assert!(tot > 0.0, "zero effective mass at node {node}");
+            let p_left = el / tot;
+            if rng.f64() < p_left {
+                q *= p_left;
+                raw = raw_left;
+                node *= 2;
+            } else {
+                q *= 1.0 - p_left;
+                raw = raw_right;
+                node = node * 2 + 1;
+                lo += half;
+            }
+            size = half;
+        }
+        debug_assert!(lo < self.n, "sampled phantom leaf {lo}");
+        (lo, q)
+    }
+
+    /// Exact probability that [`sample`] returns class `i` for query `z`.
+    /// `O(D log n)`.
+    pub fn probability(&self, z: &[f32], i: usize) -> f64 {
+        assert!(i < self.n);
+        let mut node = 1usize;
+        let mut lo = 0usize;
+        let mut size = self.pad;
+        let mut raw = self.mass(z);
+        let mut q = 1.0f64;
+        while size > 1 {
+            let half = size / 2;
+            let raw_left = dot(self.left_sum(node), z) as f64;
+            let raw_right = raw - raw_left;
+            let el = self.eff(raw_left, self.real_leaves(lo, half));
+            let er = self.eff(raw_right, self.real_leaves(lo + half, half));
+            let p_left = el / (el + er);
+            if i < lo + half {
+                q *= p_left;
+                raw = raw_left;
+                node *= 2;
+            } else {
+                q *= 1.0 - p_left;
+                raw = raw_right;
+                node = node * 2 + 1;
+                lo += half;
+            }
+            size = half;
+        }
+        q
+    }
+
+    /// Draw `m` classes i.i.d. for one shared query.
+    ///
+    /// Perf (§Perf iteration 1): the m walks share the upper levels of the
+    /// tree, so the `zᵀS_left` dot products there are memoized in a flat
+    /// per-call cache (top `MEMO_NODES` heap slots; O(1) lookup, no
+    /// hashing). For m = 100 at n = 10k this removes ~40% of the dot
+    /// products versus m independent [`KernelTree::sample`] calls — see
+    /// `benches/perf_hotpath.rs` (`rff_draw` vs `rff_draw_nomemo`).
+    pub fn sample_many(
+        &self,
+        z: &[f32],
+        m: usize,
+        rng: &mut Rng,
+    ) -> (Vec<u32>, Vec<f64>) {
+        const MEMO_NODES: usize = 4096;
+        let cache_len = self.pad.min(MEMO_NODES);
+        let mut cache = vec![f64::NAN; cache_len];
+        let root_raw = self.mass(z);
+
+        let mut ids = Vec::with_capacity(m);
+        let mut probs = Vec::with_capacity(m);
+        for _ in 0..m {
+            let mut node = 1usize;
+            let mut lo = 0usize;
+            let mut size = self.pad;
+            let mut raw = root_raw;
+            let mut q = 1.0f64;
+            while size > 1 {
+                let half = size / 2;
+                let raw_left = if node < cache_len {
+                    let c = cache[node];
+                    if c.is_nan() {
+                        let v = dot(self.left_sum(node), z) as f64;
+                        cache[node] = v;
+                        v
+                    } else {
+                        c
+                    }
+                } else {
+                    dot(self.left_sum(node), z) as f64
+                };
+                let raw_right = raw - raw_left;
+                let el = self.eff(raw_left, self.real_leaves(lo, half));
+                let er =
+                    self.eff(raw_right, self.real_leaves(lo + half, half));
+                let tot = el + er;
+                debug_assert!(tot > 0.0, "zero effective mass at node {node}");
+                let p_left = el / tot;
+                if rng.f64() < p_left {
+                    q *= p_left;
+                    raw = raw_left;
+                    node *= 2;
+                } else {
+                    q *= 1.0 - p_left;
+                    raw = raw_right;
+                    node = node * 2 + 1;
+                    lo += half;
+                }
+                size = half;
+            }
+            debug_assert!(lo < self.n, "sampled phantom leaf {lo}");
+            ids.push(lo as u32);
+            probs.push(q);
+        }
+        (ids, probs)
+    }
+
+    /// Unmemoized variant of [`KernelTree::sample_many`] (m independent
+    /// walks). Kept as the §Perf baseline and for A/B testing.
+    pub fn sample_many_nomemo(
+        &self,
+        z: &[f32],
+        m: usize,
+        rng: &mut Rng,
+    ) -> (Vec<u32>, Vec<f64>) {
+        let mut ids = Vec::with_capacity(m);
+        let mut probs = Vec::with_capacity(m);
+        for _ in 0..m {
+            let (i, q) = self.sample(z, rng);
+            ids.push(i as u32);
+            probs.push(q);
+        }
+        (ids, probs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::propkit::{check, close, gen};
+
+    /// Reference: exact clamped distribution computed by brute force on
+    /// leaf masses (matches the tree's ε-floor semantics only when all
+    /// internal partial sums are nonnegative — guaranteed for nonneg φ).
+    fn brute_force_probs(phis: &[Vec<f32>], z: &[f32], eps: f64) -> Vec<f64> {
+        let masses: Vec<f64> =
+            phis.iter().map(|p| (dot(p, z) as f64).max(0.0) + eps).collect();
+        let tot: f64 = masses.iter().sum();
+        masses.iter().map(|m| m / tot).collect()
+    }
+
+    fn build_tree(phis: &[Vec<f32>], eps: f64) -> KernelTree {
+        KernelTree::build(phis.len(), phis[0].len(), eps, |i| &phis[i])
+    }
+
+    #[test]
+    fn probabilities_match_brute_force_for_nonneg_phi() {
+        check("tree-prob-vs-brute", |rng| {
+            let n = gen::usize_in(rng, 1, 40);
+            let d = gen::usize_in(rng, 1, 8);
+            // Nonnegative feature vectors → no clamping ambiguity.
+            let phis: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.f32()).collect())
+                .collect();
+            let z: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+            let eps = 1e-9;
+            let tree = build_tree(&phis, eps);
+            let brute = brute_force_probs(&phis, &z, eps);
+            for i in 0..n {
+                let p = tree.probability(&z, i);
+                prop_assert!(
+                    close(p, brute[i], 1e-4, 1e-9),
+                    "class {i}: tree {p} vs brute {}",
+                    brute[i]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        check("tree-prob-sums-1", |rng| {
+            let n = gen::usize_in(rng, 2, 64);
+            let d = gen::usize_in(rng, 1, 6);
+            // Mixed-sign features exercise the clamping path.
+            let phis: Vec<Vec<f32>> =
+                (0..n).map(|_| gen::vector(rng, d)).collect();
+            let z = gen::vector(rng, d);
+            let tree = build_tree(&phis, 1e-6);
+            let total: f64 = (0..n).map(|i| tree.probability(&z, i)).sum();
+            prop_assert!(close(total, 1.0, 1e-6, 1e-9), "Σq = {total}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sample_prob_matches_probability_query() {
+        check("tree-sample-q-consistent", |rng| {
+            let n = gen::usize_in(rng, 2, 50);
+            let d = gen::usize_in(rng, 1, 6);
+            let phis: Vec<Vec<f32>> =
+                (0..n).map(|_| gen::vector(rng, d)).collect();
+            let z = gen::vector(rng, d);
+            let tree = build_tree(&phis, 1e-6);
+            let (i, q) = tree.sample(&z, rng);
+            let q2 = tree.probability(&z, i);
+            prop_assert!(close(q, q2, 1e-9, 1e-15), "q {q} vs query {q2}");
+            prop_assert!(i < n, "sampled phantom leaf");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn update_equals_rebuild() {
+        check("tree-update-vs-rebuild", |rng| {
+            let n = gen::usize_in(rng, 2, 32);
+            let d = gen::usize_in(rng, 1, 5);
+            // Nonnegative φ: keeps masses away from the clamp boundary,
+            // where f32 rounding makes updated-vs-rebuilt comparisons
+            // ill-conditioned by construction (see `eff`).
+            let mut phis: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.f32()).collect())
+                .collect();
+            let mut tree = build_tree(&phis, 1e-6);
+            // Apply a few random updates to both representations.
+            for _ in 0..5 {
+                let i = rng.index(n);
+                let newphi: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+                let delta: Vec<f32> = newphi
+                    .iter()
+                    .zip(&phis[i])
+                    .map(|(a, b)| a - b)
+                    .collect();
+                tree.update_leaf(i, &delta);
+                phis[i] = newphi;
+            }
+            let rebuilt = build_tree(&phis, 1e-6);
+            let z: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+            for i in 0..n {
+                let a = tree.probability(&z, i);
+                let b = rebuilt.probability(&z, i);
+                prop_assert!(
+                    close(a, b, 1e-3, 1e-7),
+                    "class {i}: updated {a} vs rebuilt {b}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empirical_frequency_matches_q() {
+        let mut rng = Rng::seeded(91);
+        let n = 17;
+        let d = 4;
+        let phis: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.f32() + 0.1).collect())
+            .collect();
+        let z: Vec<f32> = (0..d).map(|_| rng.f32() + 0.1).collect();
+        let tree = build_tree(&phis, 1e-9);
+        let trials = 200_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            let (i, _) = tree.sample(&z, &mut rng);
+            counts[i] += 1;
+        }
+        for i in 0..n {
+            let q = tree.probability(&z, i);
+            let freq = counts[i] as f64 / trials as f64;
+            let sd = (q * (1.0 - q) / trials as f64).sqrt();
+            assert!(
+                (freq - q).abs() < 5.0 * sd + 1e-4,
+                "class {i}: freq {freq:.5} vs q {q:.5}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_negative_masses_fall_back_to_floor() {
+        // Every kernel value negative → ε floor ⇒ ~uniform sampling.
+        let n = 8;
+        let phis: Vec<Vec<f32>> = (0..n).map(|_| vec![-1.0, -1.0]).collect();
+        let tree = build_tree(&phis, 1e-6);
+        let z = vec![1.0f32, 1.0];
+        let mut rng = Rng::seeded(92);
+        for i in 0..n {
+            let q = tree.probability(&z, i);
+            assert!(
+                (q - 1.0 / n as f64).abs() < 1e-3,
+                "class {i}: q = {q}, want ≈ 1/{n}"
+            );
+        }
+        let (i, q) = tree.sample(&z, &mut rng);
+        assert!(i < n && q > 0.0);
+    }
+
+    #[test]
+    fn single_class_tree() {
+        let phis = vec![vec![0.5f32, 0.5]];
+        let tree = build_tree(&phis, 1e-6);
+        let mut rng = Rng::seeded(93);
+        let (i, q) = tree.sample(&[1.0, 1.0], &mut rng);
+        assert_eq!(i, 0);
+        assert!((q - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_many_memo_matches_nomemo_distribution() {
+        // The memoized batch path must produce the same distribution as m
+        // independent walks (and identical q for identical draws).
+        let mut rng = Rng::seeded(95);
+        let n = 33;
+        let d = 5;
+        let phis: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.f32()).collect())
+            .collect();
+        let z: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+        let tree = build_tree(&phis, 1e-8);
+        // Same RNG stream ⇒ identical draws and probabilities.
+        let (ids_a, q_a) =
+            tree.sample_many(&z, 500, &mut Rng::seeded(1234));
+        let (ids_b, q_b) =
+            tree.sample_many_nomemo(&z, 500, &mut Rng::seeded(1234));
+        assert_eq!(ids_a, ids_b);
+        for (a, b) in q_a.iter().zip(&q_b) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let tree = KernelTree::new(1000, 64, 1e-6);
+        // pad = 1024 → 1023 internal sums + total, × 64 × 4 bytes.
+        assert_eq!(tree.memory_bytes(), (1023 + 1) * 64 * 4);
+    }
+
+    #[test]
+    fn non_pow2_never_samples_phantoms() {
+        let mut rng = Rng::seeded(94);
+        let n = 5; // pad = 8 → 3 phantom leaves
+        let phis: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..3).map(|_| rng.f32()).collect())
+            .collect();
+        let tree = build_tree(&phis, 1e-6);
+        let z = vec![1.0f32, 1.0, 1.0];
+        for _ in 0..5000 {
+            let (i, _) = tree.sample(&z, &mut rng);
+            assert!(i < n);
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Statistical integration tests across the sampler stack: empirical
+//! sampling frequencies vs claimed probabilities (χ²-style), cross-sampler
+//! distribution agreement, and the RF-softmax ↔ softmax approximation
+//! quality that Theorem 2 promises — run at realistic sizes.
+
+use rfsoftmax::featmap::QuadraticMap;
+use rfsoftmax::linalg::{dot, softmax, unit_vector, Matrix};
+use rfsoftmax::rng::Rng;
+use rfsoftmax::sampler::{
+    BucketKernelSampler, KernelTree, QuadraticSampler, RffSampler, Sampler,
+};
+
+fn normalized(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+    Matrix::randn(rng, n, d).l2_normalized_rows()
+}
+
+/// Total-variation distance between a sampler's q and the softmax p.
+fn tv_to_softmax(s: &dyn Sampler, classes: &Matrix, h: &[f32], tau: f32) -> f64 {
+    let n = classes.rows();
+    let logits: Vec<f64> = (0..n)
+        .map(|i| (tau * dot(h, classes.row(i))) as f64)
+        .collect();
+    let p = softmax(&logits);
+    let mut tv = 0.0;
+    for i in 0..n {
+        tv += (s.probability(h, i) - p[i]).abs();
+    }
+    tv / 2.0
+}
+
+#[test]
+fn rff_tv_distance_decreases_with_d() {
+    // Theorem 2: q → p as D grows (ν = τ). TV(q, p) must fall with D.
+    let mut rng = Rng::seeded(901);
+    let n = 256;
+    let d = 24;
+    let tau = 3.0;
+    let classes = normalized(&mut rng, n, d);
+    let h = unit_vector(&mut rng, d);
+    let mut prev = f64::INFINITY;
+    for nf in [32usize, 256, 2048] {
+        // Average a few maps to tame map-to-map variance.
+        let mut tv = 0.0;
+        for rep in 0..3 {
+            let mut map_rng = Rng::seeded(1000 + nf as u64 * 7 + rep);
+            let s = RffSampler::new(&classes, nf, tau, &mut map_rng);
+            tv += tv_to_softmax(&s, &classes, &h, tau);
+        }
+        tv /= 3.0;
+        assert!(
+            tv < prev * 1.05,
+            "TV did not decrease: D={nf} gave {tv} (prev {prev})"
+        );
+        prev = tv;
+    }
+    assert!(prev < 0.25, "TV at D=2048 still large: {prev}");
+}
+
+#[test]
+fn bucket_and_tree_quadratic_agree() {
+    // The bucketed sampler must match the full-tree sampler's
+    // distribution for the (exactly linearized) quadratic kernel.
+    let mut rng = Rng::seeded(902);
+    let n = 300;
+    let d = 12;
+    let classes = normalized(&mut rng, n, d);
+    let tree = QuadraticSampler::new(&classes, 100.0, 1.0);
+    let bucket = BucketKernelSampler::with_map(
+        &classes,
+        QuadraticMap::new(d, 100.0, 1.0),
+        32,
+        "quadratic-bucket",
+    );
+    let h = unit_vector(&mut rng, d);
+    for i in (0..n).step_by(7) {
+        let a = tree.probability(&h, i);
+        let b = bucket.probability(&h, i);
+        assert!(
+            (a - b).abs() < 5e-3 * a.max(b).max(1e-9),
+            "class {i}: tree {a} vs bucket {b}"
+        );
+    }
+}
+
+#[test]
+fn empirical_frequencies_match_probabilities_at_scale() {
+    // n = 5000 classes, 200k draws through the memoized batch path.
+    let mut rng = Rng::seeded(903);
+    let n = 5000;
+    let dim = 64;
+    let mut tree = KernelTree::new(n, dim, 1e-8);
+    let mut phi = vec![0.0f32; dim];
+    for i in 0..n {
+        for v in phi.iter_mut() {
+            *v = rng.f32() + 0.01; // nonnegative → no clamping path
+        }
+        tree.add_leaf(i, &phi);
+    }
+    let z: Vec<f32> = (0..dim).map(|_| rng.f32() + 0.01).collect();
+    let trials = 200_000;
+    let (ids, _) = tree.sample_many(&z, trials, &mut rng);
+    let mut counts = vec![0u32; n];
+    for &i in &ids {
+        counts[i as usize] += 1;
+    }
+    // Check the head classes (largest q) precisely and the aggregate χ².
+    let mut chi2 = 0.0;
+    let mut dof = 0;
+    for i in 0..n {
+        let q = tree.probability(&z, i);
+        let e = q * trials as f64;
+        if e >= 5.0 {
+            let o = counts[i] as f64;
+            chi2 += (o - e) * (o - e) / e;
+            dof += 1;
+        }
+    }
+    // χ² concentration: mean ≈ dof, sd ≈ √(2·dof); allow 6σ.
+    let bound = dof as f64 + 6.0 * (2.0 * dof as f64).sqrt();
+    assert!(
+        chi2 < bound,
+        "χ² = {chi2:.1} over {dof} cells exceeds {bound:.1}"
+    );
+}
+
+#[test]
+fn update_stream_keeps_distribution_consistent() {
+    // Simulate training-like churn: 2000 embedding updates, then verify
+    // the tree still matches a fresh rebuild (drift bound).
+    let mut rng = Rng::seeded(904);
+    let n = 400;
+    let d = 16;
+    let mut classes = normalized(&mut rng, n, d);
+    let mut sampler = RffSampler::new(&classes, 128, 2.0, &mut Rng::seeded(77));
+    for _ in 0..2000 {
+        let i = rng.index(n);
+        let e = unit_vector(&mut rng, d);
+        sampler.update_class(i, &e);
+        classes.row_mut(i).copy_from_slice(&e);
+    }
+    let fresh = RffSampler::new(&classes, 128, 2.0, &mut Rng::seeded(77));
+    let h = unit_vector(&mut rng, d);
+    for i in (0..n).step_by(13) {
+        let a = sampler.probability(&h, i);
+        let b = fresh.probability(&h, i);
+        assert!(
+            (a - b).abs() < 1e-3 * a.max(b).max(1e-6),
+            "drift after 2000 updates at class {i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn adjusted_partition_estimate_unbiased_under_kernel_q() {
+    // eq. 5 end-to-end: with q from a kernel sampling tree (clamps,
+    // ε-floor and all), E[Z′] must equal Z because q is the *exact*
+    // sampling probability of the procedure. The quadratic kernel keeps
+    // the importance weights e^o/q bounded, so the Monte-Carlo mean
+    // converges at a testable rate (an RFF q at small D has heavy-tailed
+    // weights — unbiased but impractically slow to verify; that estimator
+    // is exercised distributionally by `rff_tv_distance_decreases_with_d`).
+    let mut rng = Rng::seeded(905);
+    let n = 64;
+    let d = 12;
+    let tau = 2.0;
+    let classes = normalized(&mut rng, n, d);
+    let sampler = QuadraticSampler::new(&classes, 100.0, 1.0);
+    let h = unit_vector(&mut rng, d);
+    let logits: Vec<f64> = (0..n)
+        .map(|i| (tau * dot(&h, classes.row(i))) as f64)
+        .collect();
+    let t = 0usize;
+    let z_true: f64 = logits.iter().map(|o| o.exp()).sum();
+    let m = 20;
+    let trials = 4000;
+    let mut acc = 0.0;
+    for _ in 0..trials {
+        let draw = sampler.sample_negatives(&h, t, m, &mut rng);
+        let negs: Vec<f64> =
+            draw.ids.iter().map(|&i| logits[i as usize]).collect();
+        let s = rfsoftmax::softmax::sampled_softmax_loss(
+            logits[t], &negs, &draw.probs,
+        );
+        acc += s.z_estimate;
+    }
+    let z_hat = acc / trials as f64;
+    assert!(
+        (z_hat - z_true).abs() / z_true < 0.03,
+        "E[Z′] = {z_hat:.4} vs Z = {z_true:.4}"
+    );
+}

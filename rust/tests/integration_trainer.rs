@@ -1,0 +1,118 @@
+//! End-to-end trainer smoke tests over the quickstart artifacts:
+//! every sampler kind must run steps, reduce the training loss, and keep
+//! the coordinator's bookkeeping consistent.
+
+use rfsoftmax::config::Config;
+use rfsoftmax::coordinator::TrainerBuilder;
+use rfsoftmax::runtime::Runtime;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::load(Runtime::default_dir()) {
+        Ok(rt) if rt.has("quickstart_train_sampled") => Some(rt),
+        Ok(_) | Err(_) => {
+            eprintln!("SKIP: quickstart artifacts not built");
+            None
+        }
+    }
+}
+
+fn quickstart_config(sampler: &str, steps: usize) -> Config {
+    let mut cfg = Config::default();
+    for (k, v) in [
+        ("sampler.kind", sampler),
+        ("sampler.num_negatives", "20"),
+        ("sampler.dim", "64"),
+        ("sampler.nu", "4.0"),
+        ("train.steps", &steps.to_string()),
+        ("train.eval_every", &steps.to_string()),
+        ("train.eval_batches", "4"),
+        ("train.lr", "0.5"),
+        ("train.optimizer", "adagrad"),
+        ("data.train_size", "20000"),
+        ("data.valid_size", "2000"),
+        // quickstart artifact shape: n=1000.
+        ("model.num_classes", "1000"),
+    ] {
+        cfg.set(k, v).unwrap();
+    }
+    cfg
+}
+
+#[test]
+fn rff_trainer_reduces_loss() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut cfg = quickstart_config("rff", 150);
+    cfg.set("train.eval_every", "30").unwrap();
+    let mut t = TrainerBuilder::new(&rt, "quickstart", cfg).build().unwrap();
+    let report = t.run().unwrap();
+    assert_eq!(report.steps_run, 150);
+    assert_eq!(report.sampler, "rff");
+    let first = report.history.first().unwrap();
+    let last = report.history.last().unwrap();
+    // τ ≈ 11 inflates the random-init loss above ln(n) ≈ 6.9; training
+    // must drive a clear monotone-ish improvement within 150 steps.
+    assert!(
+        last.eval_loss < first.eval_loss - 0.5,
+        "no learning: eval {} → {}",
+        first.eval_loss,
+        last.eval_loss
+    );
+    assert!(last.metric.is_finite() && last.metric > 1.0);
+}
+
+#[test]
+fn all_sampler_kinds_run() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for kind in ["uniform", "loguniform", "unigram", "exact", "quadratic", "gumbel", "full"] {
+        let cfg = quickstart_config(kind, 8);
+        let mut t = TrainerBuilder::new(&rt, "quickstart", cfg)
+            .build()
+            .unwrap_or_else(|e| panic!("{kind}: {e}"));
+        let report = t.run().unwrap_or_else(|e| panic!("{kind}: {e}"));
+        assert_eq!(report.steps_run, 8, "{kind}");
+        assert!(
+            report.history.last().unwrap().eval_loss.is_finite(),
+            "{kind}: non-finite eval loss"
+        );
+    }
+}
+
+#[test]
+fn stale_sampling_mode_runs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = quickstart_config("rff", 10);
+    let mut t = TrainerBuilder::new(&rt, "quickstart", cfg)
+        .stale_sampling(true)
+        .build()
+        .unwrap();
+    let report = t.run().unwrap();
+    assert_eq!(report.steps_run, 10);
+}
+
+#[test]
+fn wrong_m_is_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut cfg = quickstart_config("rff", 5);
+    cfg.set("sampler.num_negatives", "33").unwrap();
+    let err = match TrainerBuilder::new(&rt, "quickstart", cfg).build() {
+        Ok(_) => panic!("m mismatch must fail"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("m=33"), "unhelpful error: {err}");
+}
+
+#[test]
+fn checkpointing_round_trips() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let dir = std::env::temp_dir().join("rfsm_trainer_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut cfg = quickstart_config("uniform", 5);
+    cfg.train.checkpoint_dir = Some(dir.to_str().unwrap().to_string());
+    let mut t = TrainerBuilder::new(&rt, "quickstart", cfg).build().unwrap();
+    t.run().unwrap();
+    let ckpt = dir.join("quickstart_uniform.ckpt");
+    assert!(ckpt.exists(), "missing checkpoint {}", ckpt.display());
+    let store = rfsoftmax::model::ParamStore::load(&ckpt).unwrap();
+    assert!(store.by_name("cls").is_some());
+    assert_eq!(store.by_name("cls").unwrap().rows(), 1000);
+}
