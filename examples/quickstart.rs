@@ -3,13 +3,42 @@
 //! Rust coordinator → PJRT executable (JAX L2 + Pallas L1, AOT-compiled)
 //! — and compare against uniform sampling.
 //!
+//! The training loop is **batch-first**: each step maps the whole
+//! batch's queries through φ in one gemm, draws its shared negatives
+//! with one `SamplerService::draw_batch` call (per-example conditioned
+//! probabilities, batch-wide accidental-hit masks) and pushes the step's
+//! embedding updates into the sampling tree as one sharded batch. The
+//! standalone demo below shows the same `Sampler::sample_batch` API the
+//! coordinator uses, without needing compiled artifacts.
+//!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
 use rfsoftmax::config::Config;
 use rfsoftmax::coordinator::TrainerBuilder;
+use rfsoftmax::prelude::*;
 use rfsoftmax::runtime::Runtime;
 
+/// Artifact-free demo of the batch sampling API.
+fn batch_sampling_demo() {
+    let mut rng = Rng::seeded(42);
+    let classes = Matrix::randn(&mut rng, 1000, 32).l2_normalized_rows();
+    let sampler = RffSampler::new(&classes, 128, 4.0, &mut rng);
+    // 8 example queries → one call, 20 negatives each; example b's draw
+    // excludes targets[b] and reports exact conditioned probabilities.
+    let queries = Matrix::randn(&mut rng, 8, 32).l2_normalized_rows();
+    let targets: Vec<u32> = (0..8).collect();
+    let batch = sampler.sample_batch(&queries, &targets, 20, &mut rng);
+    println!(
+        "batch draw: {} examples × {} negatives (q₀₀ = {:.2e})",
+        batch.batch(),
+        batch.m(),
+        batch.draws[0].probs[0]
+    );
+}
+
 fn main() -> anyhow::Result<()> {
+    batch_sampling_demo();
+
     let runtime = Runtime::load(Runtime::default_dir())?;
     println!("PJRT platform: {}", runtime.platform());
 

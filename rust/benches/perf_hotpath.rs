@@ -4,12 +4,15 @@
 //! * kernel-tree `sample` / `update` at several (n, D),
 //! * feature maps: classic RFF vs ORF vs SORF (O(Dd) vs O(D log d)),
 //! * sampled-softmax loss oracle,
-//! * batch negative-draw path as the coordinator runs it.
+//! * batch negative-draw path as the coordinator runs it,
+//! * batch-vs-scalar `sample_batch` throughput (emits `BENCH {json}`
+//!   lines so the perf trajectory is machine-readable).
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 
 use rfsoftmax::benchkit::{bench_header, black_box, Bencher};
 use rfsoftmax::featmap::{FeatureMap, OrfMap, RffMap, SorfMap};
+use rfsoftmax::json::Json;
 use rfsoftmax::linalg::{unit_vector, Matrix};
 use rfsoftmax::rng::Rng;
 use rfsoftmax::sampler::{KernelTree, RffSampler, Sampler};
@@ -117,6 +120,58 @@ fn main() {
         println!("{}", b.run("sample_many m=100 (nomemo, before)", || {
             black_box(tree.sample_many_nomemo(&z, 100, &mut r2))
         }).report());
+    }
+
+    // ------------------------------------------------------------------
+    // Batch-vs-scalar sampling throughput (ISSUE 1 acceptance gate:
+    // batch-256 ≥ 2× the scalar loop at n = 10⁵). The scalar loop is the
+    // pre-refactor coordinator shape — one sample_negatives call per
+    // example, re-mapping φ(h) every time; sample_batch maps the whole
+    // batch in one gemm and fans the walks out across threads.
+    // ------------------------------------------------------------------
+    println!("\n# batch-vs-scalar sampling (d=64, D=128, m=20 negatives/example)");
+    for &n in &[10_000usize, 100_000] {
+        let mut rng = Rng::seeded(7);
+        let d = 64;
+        let m = 20;
+        let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+        let sampler = RffSampler::new(&classes, 128, 4.0, &mut rng);
+        for &bsz in &[1usize, 32, 256] {
+            let h = Matrix::randn(&mut rng, bsz, d).l2_normalized_rows();
+            let targets: Vec<u32> = (0..bsz).map(|b| (b % n) as u32).collect();
+            let mut r1 = Rng::seeded(11);
+            let s_batch = b.run(&format!("sample_batch n={n} bsz={bsz}"), || {
+                black_box(sampler.sample_batch(&h, &targets, m, &mut r1))
+            });
+            let mut r2 = Rng::seeded(11);
+            let s_scalar = b.run(&format!("scalar_loop  n={n} bsz={bsz}"), || {
+                let mut total = 0usize;
+                for bi in 0..bsz {
+                    let draw = sampler.sample_negatives(
+                        h.row(bi),
+                        targets[bi] as usize,
+                        m,
+                        &mut r2,
+                    );
+                    total += draw.len();
+                }
+                black_box(total)
+            });
+            println!("{}", s_batch.report());
+            println!("{}", s_scalar.report());
+            let batch_sps = (bsz * m) as f64 / s_batch.mean();
+            let scalar_sps = (bsz * m) as f64 / s_scalar.mean();
+            let record = Json::obj(vec![
+                ("bench", Json::from("batch_vs_scalar_sampling")),
+                ("n", Json::from(n)),
+                ("batch", Json::from(bsz)),
+                ("m", Json::from(m)),
+                ("batch_samples_per_sec", Json::from(batch_sps)),
+                ("scalar_samples_per_sec", Json::from(scalar_sps)),
+                ("speedup", Json::from(batch_sps / scalar_sps)),
+            ]);
+            println!("BENCH {record}");
+        }
     }
 
     // ------------------------------------------------------------------

@@ -183,6 +183,14 @@ pub struct SamplerConfig {
     /// Share one negative set across the batch (standard trick; the paper's
     /// timing setup samples per batch).
     pub share_across_batch: bool,
+    /// Shard count for the kernel sampling tree (rounded up to a power of
+    /// two). `0` or `1` keeps the single monolithic tree; `> 1` uses the
+    /// two-level [`crate::sampler::ShardedKernelTree`], whose disjoint
+    /// shards absorb batched embedding updates in parallel. Applies to
+    /// the kernel samplers (`rff`, `quadratic` — except when the
+    /// quadratic memory fallback routes to the bucket sampler); static
+    /// samplers have no tree and ignore it.
+    pub shards: usize,
     pub seed: u64,
 }
 
@@ -197,6 +205,7 @@ impl Default for SamplerConfig {
             alpha: 100.0,
             absolute: false,
             share_across_batch: true,
+            shards: 0,
             seed: 17,
         }
     }
@@ -454,6 +463,7 @@ impl Config {
             "sampler.share_across_batch" => {
                 self.sampler.share_across_batch = boolean(key, v)?
             }
+            "sampler.shards" => self.sampler.shards = us(key, v)?,
             "sampler.seed" => self.sampler.seed = u64v(key, v)?,
 
             "train.batch_size" => self.train.batch_size = us(key, v)?,
@@ -556,6 +566,7 @@ impl Config {
                         "share_across_batch",
                         Json::from(self.sampler.share_across_batch),
                     ),
+                    ("shards", Json::from(self.sampler.shards)),
                     ("seed", Json::from(self.sampler.seed as usize)),
                 ]),
             ),

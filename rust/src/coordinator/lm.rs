@@ -301,11 +301,13 @@ impl<'rt> LmTrainer<'rt> {
         let ctx_emb = gather_rows(self.params.get(EMB).data_view(), d, &batch.contexts);
         self.metrics.record_duration("gather", t_gather.elapsed());
 
-        // 2. Query embedding for sampling: encoder pass (or stale query).
+        // 2. Per-example query rows for sampling: encoder pass (or, in
+        //    stale mode, a single-row pool — replicating the stale query
+        //    would only multiply φ work on identical rows).
         let t_sample = Instant::now();
-        let query: Vec<f32> = if self.stale_sampling && !self.prev_query.is_empty()
+        let queries: Matrix = if self.stale_sampling && !self.prev_query.is_empty()
         {
-            self.prev_query.clone()
+            Matrix::from_vec(1, d, self.prev_query.clone())
         } else {
             let enc = self.runtime.get(&self.artifact("encode"))?;
             let outs = enc.run(&[
@@ -315,13 +317,14 @@ impl<'rt> LmTrainer<'rt> {
                 self.block_tensor(BIAS),
                 self.block_tensor(PROJ),
             ])?;
-            let h = outs[0].as_f32();
-            mean_query(h, bsz, d)
+            Matrix::from_vec(bsz, d, outs[0].as_f32().to_vec())
         };
 
-        // 3. Draw shared negatives + package adjustments/masks.
+        // 3. One batched draw serves the whole step: shared negatives
+        //    drawn from the batch's per-example queries (round-robin slot
+        //    ownership, exact per-slot probabilities), masks batch-wide.
         let svc = self.service.as_mut().expect("sampled step without service");
-        let pack = svc.draw(&query, &batch.targets);
+        let pack = svc.draw_batch(&queries, &batch.targets);
         self.metrics
             .incr("accidental_hits", pack.accidental_hits as u64);
         self.metrics.record_duration("sample", t_sample.elapsed());
@@ -372,13 +375,19 @@ impl<'rt> LmTrainer<'rt> {
         }
         self.metrics.record_duration("optimize", t_opt.elapsed());
 
-        // 6. Propagate updated class embeddings to the sampling tree.
+        // 6. Propagate updated class embeddings to the sampling tree as
+        //    one batch: φ recomputation collapses into two gemms and
+        //    sharded trees absorb disjoint shards in parallel.
         let t_tree = Instant::now();
         let cls_block = self.params.get(CLS);
+        let crow_u32: Vec<u32> = crow.iter().map(|&r| r as u32).collect();
+        let upd = Matrix::from_vec(
+            crow.len(),
+            d,
+            gather_rows(&cls_block.data, d, &crow_u32),
+        );
         let svc = self.service.as_mut().unwrap();
-        for &r in &crow {
-            svc.update_class(r, cls_block.row(r));
-        }
+        svc.update_classes(&crow, &upd);
         self.metrics.record_duration("tree_update", t_tree.elapsed());
         self.metrics.incr("tree_updates", crow.len() as u64);
 
@@ -484,7 +493,10 @@ pub(crate) fn gather_rows(table: &[f32], dim: usize, ids: &[u32]) -> Vec<f32> {
     out
 }
 
-/// Normalized mean of the batch's h rows — the shared sampling query.
+/// Normalized mean of the batch's h rows — the pre-batch-pipeline shared
+/// sampling query, kept for diagnostics and A/B comparisons against
+/// per-example batch queries.
+#[allow(dead_code)]
 pub(crate) fn mean_query(h: &[f32], bsz: usize, d: usize) -> Vec<f32> {
     let mut q = vec![0.0f32; d];
     for b in 0..bsz {

@@ -4,12 +4,14 @@
 //! mask (a sampled negative equal to an example's target gets its logit
 //! pushed to −∞, the standard sampled-softmax correction).
 
-use crate::config::{Config, SamplerKind};
+use crate::config::{Config, FeatureMapKind, SamplerKind};
+use crate::featmap::{OrfMap, RffMap, SorfMap};
 use crate::linalg::{l2_normalize, Matrix};
 use crate::rng::Rng;
 use crate::sampler::{
     AliasSampler, ExactSoftmaxSampler, GumbelTopKSampler, LogUniformSampler,
-    NegativeDraw, QuadraticSampler, RffSampler, Sampler, UniformSampler,
+    NegativeDraw, QuadraticSampler, RffSampler, Sampler, ShardedKernelSampler,
+    UniformSampler,
 };
 use anyhow::{bail, Result};
 
@@ -25,6 +27,32 @@ pub fn build_sampler(
     let n = classes.rows();
     let s = &cfg.sampler;
     Ok(match s.kind {
+        // `sampler.shards > 1` routes RF-softmax onto the two-level
+        // sharded tree: same distribution family, parallel batched
+        // updates across disjoint shards.
+        SamplerKind::Rff if s.shards > 1 => {
+            let d = classes.cols();
+            match s.feature_map {
+                FeatureMapKind::Rff => Box::new(ShardedKernelSampler::with_map(
+                    classes,
+                    RffMap::new(d, s.dim, s.nu, rng),
+                    s.shards,
+                    "rff-sharded",
+                )),
+                FeatureMapKind::Orf => Box::new(ShardedKernelSampler::with_map(
+                    classes,
+                    OrfMap::new(d, s.dim, s.nu, rng),
+                    s.shards,
+                    "rff-orf-sharded",
+                )),
+                FeatureMapKind::Sorf => Box::new(ShardedKernelSampler::with_map(
+                    classes,
+                    SorfMap::new(d, s.dim, s.nu, rng),
+                    s.shards,
+                    "rff-sorf-sharded",
+                )),
+            }
+        }
         SamplerKind::Rff => Box::new(RffSampler::with_kind(
             classes,
             s.dim,
@@ -36,6 +64,8 @@ pub fn build_sampler(
             // The quadratic map's D = d²+1 makes the full per-node tree
             // cost O(n·d²) floats; above ~2 GB fall back to the bounded
             // two-level bucket sampler (exact for the quadratic kernel).
+            // Sharding does not reduce the O(n·D) node sums, so the
+            // memory fallback takes priority over `sampler.shards`.
             let d = classes.cols();
             let dim = d * d + 1;
             let tree_bytes = 2 * n.next_power_of_two() * dim * 4;
@@ -44,6 +74,13 @@ pub fn build_sampler(
                     crate::featmap::QuadraticMap::new(d, s.alpha, 1.0);
                 Box::new(crate::sampler::BucketKernelSampler::with_map(
                     classes, map, 1024, "quadratic",
+                ))
+            } else if s.shards > 1 {
+                Box::new(ShardedKernelSampler::with_map(
+                    classes,
+                    crate::featmap::QuadraticMap::new(d, s.alpha, 1.0),
+                    s.shards,
+                    "quadratic-sharded",
                 ))
             } else {
                 Box::new(QuadraticSampler::new(classes, s.alpha, 1.0))
@@ -112,6 +149,56 @@ impl SamplerService {
         self.package(draw, targets)
     }
 
+    /// Batch-first draw: rows of `h_rows` form the step's query pool
+    /// (normally one row per example; any scale — rows are normalized
+    /// here), `targets` the batch's target list for masking. One
+    /// [`Sampler::sample_batch_shared`] call serves the whole step: each
+    /// of the `m` shared negative slots is owned round-robin by one
+    /// query row and drawn *unconditioned* from `q(· | h_owner)` with
+    /// its exact probability. No target is excluded from the proposal —
+    /// the full support is what keeps the eq.-5 partition estimate
+    /// unbiased for every example in the batch (a slot conditioned on
+    /// one example's target would silently drop that class's mass from
+    /// everyone else's estimate); collisions with any example's target
+    /// are handled by the accidental-hit mask exactly as in the classic
+    /// shared-negative contract. When the pool has more than `m` rows,
+    /// only the first `m` serve as slot owners so no drawn walk is
+    /// wasted; a 1-row pool (e.g. stale-sampling mode) degenerates to
+    /// the classic single-query shared draw.
+    pub fn draw_batch(&mut self, h_rows: &Matrix, targets: &[u32]) -> NegativePack {
+        let bsz = h_rows.rows();
+        assert!(bsz > 0, "draw_batch: empty query pool");
+        assert!(!targets.is_empty(), "draw_batch: empty targets");
+        let owners = bsz.min(self.m).max(1);
+        let mut q = if owners == bsz {
+            h_rows.clone()
+        } else {
+            let d = h_rows.cols();
+            let mut sub = Matrix::zeros(owners, d);
+            for b in 0..owners {
+                sub.row_mut(b).copy_from_slice(h_rows.row(b));
+            }
+            sub
+        };
+        q.normalize_rows_in_place();
+        let per_owner = self.m.div_ceil(owners);
+        let batch = self.sampler.sample_batch_shared(&q, per_owner, &mut self.rng);
+        // Interleave slot ownership draw-index-major so truncation to m
+        // keeps owner coverage balanced.
+        let mut ids = Vec::with_capacity(self.m);
+        let mut probs = Vec::with_capacity(self.m);
+        'fill: for k in 0..per_owner {
+            for d in &batch.draws {
+                if ids.len() == self.m {
+                    break 'fill;
+                }
+                ids.push(d.ids[k]);
+                probs.push(d.probs[k]);
+            }
+        }
+        self.package(NegativeDraw { ids, probs }, targets)
+    }
+
     fn package(&self, draw: NegativeDraw, targets: &[u32]) -> NegativePack {
         let m = draw.ids.len();
         let log_m = (m as f64).ln();
@@ -139,6 +226,22 @@ impl SamplerService {
         let mut e = embedding.to_vec();
         l2_normalize(&mut e);
         self.sampler.update_class(class, &e);
+    }
+
+    /// Batched propagation of one step's touched classes: rows of
+    /// `embeddings` (normalized here) replace classes `rows[k]`. Kernel
+    /// samplers recompute φ for the whole batch in two gemms; the sharded
+    /// sampler additionally applies disjoint shards in parallel. Ids must
+    /// be unique (gradient aggregation guarantees this).
+    pub fn update_classes(&mut self, rows: &[usize], embeddings: &Matrix) {
+        assert_eq!(rows.len(), embeddings.rows(), "update_classes: mismatch");
+        if rows.is_empty() {
+            return;
+        }
+        let mut normed = embeddings.clone();
+        normed.normalize_rows_in_place();
+        let ids: Vec<u32> = rows.iter().map(|&r| r as u32).collect();
+        self.sampler.update_classes(&ids, &normed);
     }
 
     /// Direct access for diagnostics (bias harness, tests).
@@ -206,6 +309,84 @@ mod tests {
         }
         cfg.sampler.kind = SamplerKind::Full;
         assert!(build_sampler(&cfg, &classes, None, &mut rng).is_err());
+    }
+
+    #[test]
+    fn build_sampler_routes_shards_to_sharded_tree() {
+        let mut rng = Rng::seeded(5);
+        let classes = Matrix::randn(&mut rng, 32, 8).l2_normalized_rows();
+        let mut cfg = Config::default();
+        cfg.model.num_classes = 32;
+        cfg.sampler.dim = 16;
+        cfg.sampler.num_negatives = 5;
+        cfg.sampler.shards = 4;
+        let s = build_sampler(&cfg, &classes, None, &mut rng).unwrap();
+        assert_eq!(s.name(), "rff-sharded");
+        assert_eq!(s.num_classes(), 32);
+        let h = unit_vector(&mut rng, 8);
+        let total: f64 = (0..32).map(|i| s.probability(&h, i)).sum();
+        assert!((total - 1.0).abs() < 1e-6, "Σq = {total}");
+    }
+
+    #[test]
+    fn draw_batch_packages_shared_negatives() {
+        let mut svc = service(50, 12);
+        let mut h = Matrix::zeros(5, 4);
+        for b in 0..5 {
+            h.row_mut(b).copy_from_slice(&[1.0, b as f32, 0.0, -1.0]);
+        }
+        let targets = [0u32, 1, 2, 3, 4];
+        let pack = svc.draw_batch(&h, &targets);
+        assert_eq!(pack.ids.len(), 12);
+        assert_eq!(pack.adjust.len(), 12);
+        assert_eq!(pack.mask.len(), 5 * 12);
+        assert!(pack.adjust.iter().all(|a| a.is_finite()));
+        // Slots are drawn unconditioned; collisions with any example's
+        // target are masked, exactly as in the shared-draw contract.
+        for (b, &t) in targets.iter().enumerate() {
+            for (j, &id) in pack.ids.iter().enumerate() {
+                let want = if id == t { 0.0 } else { 1.0 };
+                assert_eq!(pack.mask[b * 12 + j], want);
+            }
+        }
+        // Uniform sampler, unconditioned: every slot's q is 1/n ⇒
+        // adjust is log(m·q) = log(12/50).
+        for &a in &pack.adjust {
+            let want = (12.0f32 / 50.0).ln();
+            assert!((a - want).abs() < 1e-5, "adjust {a} vs {want}");
+        }
+    }
+
+    #[test]
+    fn draw_batch_caps_owners_at_m() {
+        // batch 30 > m 4: only the first 4 rows serve as slot owners;
+        // the pack still has exactly m slots and a full batch×m mask.
+        let mut svc = service(20, 4);
+        let h = Matrix::zeros(30, 4);
+        let targets: Vec<u32> = (0..30).map(|b| (b % 20) as u32).collect();
+        let pack = svc.draw_batch(&h, &targets);
+        assert_eq!(pack.ids.len(), 4);
+        assert_eq!(pack.mask.len(), 30 * 4);
+        for &a in &pack.adjust {
+            let want = (4.0f32 / 20.0).ln();
+            assert!((a - want).abs() < 1e-5, "adjust {a} vs {want}");
+        }
+    }
+
+    #[test]
+    fn batched_update_classes_propagates() {
+        let mut rng = Rng::seeded(6);
+        let classes = Matrix::randn(&mut rng, 10, 4).l2_normalized_rows();
+        let sampler = Box::new(ExactSoftmaxSampler::new(&classes, 8.0));
+        let mut svc = SamplerService::new(sampler, 3, Rng::seeded(7));
+        let h = unit_vector(&mut rng, 4);
+        let before = svc.sampler().probability(&h, 2);
+        let mut emb = Matrix::zeros(2, 4);
+        emb.row_mut(0).copy_from_slice(&h);
+        let other = unit_vector(&mut rng, 4);
+        emb.row_mut(1).copy_from_slice(&other);
+        svc.update_classes(&[2, 7], &emb);
+        assert!(svc.sampler().probability(&h, 2) > before);
     }
 
     #[test]

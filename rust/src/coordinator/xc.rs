@@ -13,7 +13,7 @@ use crate::config::{Config, SamplerKind};
 use crate::data::extreme::{ExtremeDataset, ExtremeParams};
 use crate::data::SparseBatch;
 use crate::eval::batch_precision_at_k;
-use crate::linalg::{l2_normalize, Matrix};
+use crate::linalg::{axpy_rows, l2_normalize, Matrix};
 use crate::metrics::{Ewma, Metrics};
 use crate::model::ParamStore;
 use crate::optim::Optimizer;
@@ -233,26 +233,20 @@ impl<'rt> XcTrainer<'rt> {
         }
     }
 
-    /// Input embedding h for one example, computed Rust-side (used as the
-    /// shared sampling query).
-    fn query_of_batch(&self, batch: &SparseBatch) -> Vec<f32> {
+    /// Per-example input embeddings h, computed Rust-side as the sampling
+    /// query matrix (one L2-normalized row per example — no mean-query
+    /// collapse; each row is a weighted feature-row sum via
+    /// [`axpy_rows`]).
+    fn queries_of_batch(&self, batch: &SparseBatch) -> Matrix {
         let d = self.shapes.d;
         let w = self.params.get(W);
-        let mut q = vec![0.0f32; d];
+        let mut q = Matrix::zeros(batch.batch, d);
         for i in 0..batch.batch {
             let (feats, vals) = batch.feature_row(i);
-            let mut h = vec![0.0f32; d];
-            for (&f, &v) in feats.iter().zip(vals) {
-                for (hj, &wj) in h.iter_mut().zip(w.row(f as usize)) {
-                    *hj += v * wj;
-                }
-            }
-            l2_normalize(&mut h);
-            for (qj, hj) in q.iter_mut().zip(&h) {
-                *qj += hj;
-            }
+            let row = q.row_mut(i);
+            axpy_rows(&w.data, d, feats, vals, row);
+            l2_normalize(row);
         }
-        l2_normalize(&mut q);
         q
     }
 
@@ -261,9 +255,9 @@ impl<'rt> XcTrainer<'rt> {
         let (bsz, nnz, d, m) = (s.batch, s.nnz, s.d, s.m);
 
         let t_sample = Instant::now();
-        let query = self.query_of_batch(batch);
+        let queries = self.queries_of_batch(batch);
         let svc = self.service.as_mut().expect("sampled step without service");
-        let pack = svc.draw(&query, &batch.targets);
+        let pack = svc.draw_batch(&queries, &batch.targets);
         self.metrics
             .incr("accidental_hits", pack.accidental_hits as u64);
         self.metrics.record_duration("sample", t_sample.elapsed());
@@ -310,12 +304,17 @@ impl<'rt> XcTrainer<'rt> {
         }
         self.metrics.record_duration("optimize", t_opt.elapsed());
 
+        // Propagate the step's touched classes as one sharded batch.
         let t_tree = Instant::now();
         let cls_block = self.params.get(CLS);
+        let crow_u32: Vec<u32> = crow.iter().map(|&r| r as u32).collect();
+        let upd = Matrix::from_vec(
+            crow.len(),
+            d,
+            super::lm::gather_rows(&cls_block.data, d, &crow_u32),
+        );
         let svc = self.service.as_mut().unwrap();
-        for &r in &crow {
-            svc.update_class(r, cls_block.row(r));
-        }
+        svc.update_classes(&crow, &upd);
         self.metrics.record_duration("tree_update", t_tree.elapsed());
         Ok(loss)
     }

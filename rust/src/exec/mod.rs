@@ -12,6 +12,16 @@ mod pool;
 pub use pipeline::{Prefetcher, PipelineStats};
 pub use pool::ThreadPool;
 
+/// Worker-count heuristic for CPU-bound fan-out (batched sampling walks,
+/// sharded tree updates): the machine's available parallelism, capped —
+/// kernel-tree walks are memory-bandwidth-bound well before 16 threads.
+pub fn recommended_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
 /// Run `f(i)` for `i in 0..n` across `workers` threads (scoped; borrows
 /// allowed). Results are returned in index order.
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
@@ -65,6 +75,12 @@ mod tests {
             ids.lock().unwrap().insert(std::thread::current().id());
         });
         assert!(ids.lock().unwrap().len() >= 2);
+    }
+
+    #[test]
+    fn recommended_workers_is_sane() {
+        let w = recommended_workers();
+        assert!((1..=16).contains(&w));
     }
 
     #[test]

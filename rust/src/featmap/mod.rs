@@ -35,7 +35,7 @@ pub use quadratic::QuadraticMap;
 pub use rff::{OrfMap, RffMap};
 pub use sorf::{fwht, SorfMap};
 
-use crate::linalg::dot;
+use crate::linalg::{dot, Matrix};
 
 /// A feature map linearizing a kernel: `K(x, y) ≈ φ(x)ᵀφ(y)`.
 pub trait FeatureMap: Send + Sync {
@@ -52,6 +52,29 @@ pub trait FeatureMap: Send + Sync {
     fn map(&self, u: &[f32]) -> Vec<f32> {
         let mut out = vec![0.0; self.output_dim()];
         self.map_into(u, &mut out);
+        out
+    }
+
+    /// Batch-map: row `i` of `out` becomes `φ(u.row(i))`.
+    ///
+    /// Default implementation loops [`FeatureMap::map_into`] per row;
+    /// projection-based maps override with one blocked gemm
+    /// (`U · Wᵀ` via [`Matrix::matmul_nt`]) followed by the pointwise
+    /// nonlinearity — the batch-first entry point of the sampling
+    /// pipeline.
+    fn map_batch_into(&self, u: &Matrix, out: &mut Matrix) {
+        assert_eq!(u.cols(), self.input_dim(), "map_batch_into: input dim");
+        assert_eq!(out.cols(), self.output_dim(), "map_batch_into: output dim");
+        assert_eq!(u.rows(), out.rows(), "map_batch_into: batch mismatch");
+        for i in 0..u.rows() {
+            self.map_into(u.row(i), out.row_mut(i));
+        }
+    }
+
+    /// Allocating batch-map convenience wrapper.
+    fn map_batch(&self, u: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(u.rows(), self.output_dim());
+        self.map_batch_into(u, &mut out);
         out
     }
 
@@ -100,6 +123,40 @@ mod tests {
     use super::*;
     use crate::linalg::unit_vector;
     use crate::rng::Rng;
+
+    /// Every map (default impl and overrides alike) must satisfy:
+    /// `map_batch(U).row(i) == map(U.row(i))`.
+    #[test]
+    fn batch_map_matches_per_row_for_all_maps() {
+        let mut rng = Rng::seeded(43);
+        let d = 12;
+        let maps: Vec<Box<dyn FeatureMap>> = vec![
+            Box::new(RffMap::new(d, 32, 2.0, &mut rng)),
+            Box::new(OrfMap::new(d, 32, 2.0, &mut rng)),
+            Box::new(SorfMap::new(d, 32, 2.0, &mut rng)),
+            Box::new(QuadraticMap::new(d, 100.0, 1.0)),
+            Box::new(MaclaurinMap::new(d, 32, 1.0, &mut rng)),
+        ];
+        let mut u = Matrix::zeros(5, d);
+        for i in 0..5 {
+            let v = unit_vector(&mut rng, d);
+            u.row_mut(i).copy_from_slice(&v);
+        }
+        for map in &maps {
+            let batch = map.map_batch(&u);
+            assert_eq!(batch.rows(), 5);
+            assert_eq!(batch.cols(), map.output_dim());
+            for i in 0..5 {
+                let single = map.map(u.row(i));
+                for (a, b) in batch.row(i).iter().zip(&single) {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "row {i}: batch {a} vs scalar {b}"
+                    );
+                }
+            }
+        }
+    }
 
     #[test]
     fn exp_and_gaussian_kernels_agree_on_sphere() {

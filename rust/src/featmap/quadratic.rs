@@ -97,6 +97,33 @@ impl FeatureMap for QuadraticMap {
         out[d * d] = self.beta.sqrt();
     }
 
+    /// Batch override: hoists the √α/√β constants out of the row loop and
+    /// writes each row's outer product in one streaming pass.
+    fn map_batch_into(
+        &self,
+        u: &crate::linalg::Matrix,
+        out: &mut crate::linalg::Matrix,
+    ) {
+        let d = self.input_dim;
+        assert_eq!(u.cols(), d, "map_batch_into: input dim");
+        assert_eq!(out.cols(), d * d + 1, "map_batch_into: output dim");
+        assert_eq!(u.rows(), out.rows(), "map_batch_into: batch mismatch");
+        let sa = self.alpha.sqrt();
+        let sb = self.beta.sqrt();
+        for r in 0..u.rows() {
+            let urow = u.row(r);
+            let orow = out.row_mut(r);
+            for i in 0..d {
+                let ui = urow[i] * sa;
+                let dst = &mut orow[i * d..(i + 1) * d];
+                for (o, &uj) in dst.iter_mut().zip(urow.iter()) {
+                    *o = ui * uj;
+                }
+            }
+            orow[d * d] = sb;
+        }
+    }
+
     fn exact_kernel(&self, x: &[f32], y: &[f32]) -> f64 {
         let s = dot(x, y) as f64;
         self.alpha as f64 * s * s + self.beta as f64

@@ -66,6 +66,26 @@ impl FeatureMap for RffMap {
         }
     }
 
+    /// Batch override: the whole batch's projections come from one
+    /// blocked gemm `U · Wᵀ` (amortizing W traffic across rows), then a
+    /// single pointwise `sin_cos` sweep writes the cos‖sin halves.
+    fn map_batch_into(&self, u: &Matrix, out: &mut Matrix) {
+        let d_f = self.w.rows();
+        assert_eq!(u.cols(), self.w.cols(), "map_batch_into: input dim");
+        assert_eq!(out.cols(), 2 * d_f, "map_batch_into: output dim");
+        assert_eq!(u.rows(), out.rows(), "map_batch_into: batch mismatch");
+        let proj = u.matmul_nt(&self.w);
+        for i in 0..u.rows() {
+            let prow = proj.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..d_f {
+                let (s, c) = prow[j].sin_cos();
+                orow[j] = c * self.inv_sqrt_d;
+                orow[d_f + j] = s * self.inv_sqrt_d;
+            }
+        }
+    }
+
     fn exact_kernel(&self, x: &[f32], y: &[f32]) -> f64 {
         super::gaussian_kernel(self.nu, x, y)
     }
@@ -130,6 +150,10 @@ impl FeatureMap for OrfMap {
 
     fn map_into(&self, u: &[f32], out: &mut [f32]) {
         self.inner.map_into(u, out)
+    }
+
+    fn map_batch_into(&self, u: &Matrix, out: &mut Matrix) {
+        self.inner.map_batch_into(u, out)
     }
 
     fn exact_kernel(&self, x: &[f32], y: &[f32]) -> f64 {

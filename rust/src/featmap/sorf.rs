@@ -117,6 +117,32 @@ impl SorfMap {
     pub fn num_freqs(&self) -> usize {
         self.num_freqs
     }
+
+    /// Core φ computation with caller-provided FWHT scratch
+    /// (`scratch.len() == self.padded`), shared by the scalar and batch
+    /// entry points.
+    fn map_into_with_scratch(&self, u: &[f32], out: &mut [f32], scratch: &mut [f32]) {
+        debug_assert_eq!(u.len(), self.input_dim);
+        debug_assert_eq!(out.len(), 2 * self.num_freqs);
+        debug_assert_eq!(scratch.len(), self.padded);
+        // Row norms of W_SORF are exactly √(padded); scaling by
+        // √ν·√padded makes wᵀu match the N(0, νI) projection scale.
+        let scale = (self.nu * self.padded as f32).sqrt();
+        let mut emitted = 0usize;
+        for block in &self.blocks {
+            scratch[..self.input_dim].copy_from_slice(u);
+            scratch[self.input_dim..].fill(0.0);
+            block.apply(scratch);
+            let take = (self.num_freqs - emitted).min(self.padded);
+            for j in 0..take {
+                let proj = scratch[j] * scale;
+                let (s, c) = proj.sin_cos();
+                out[emitted + j] = c * self.inv_sqrt_d;
+                out[self.num_freqs + emitted + j] = s * self.inv_sqrt_d;
+            }
+            emitted += take;
+        }
+    }
 }
 
 impl FeatureMap for SorfMap {
@@ -129,25 +155,20 @@ impl FeatureMap for SorfMap {
     }
 
     fn map_into(&self, u: &[f32], out: &mut [f32]) {
-        debug_assert_eq!(u.len(), self.input_dim);
-        debug_assert_eq!(out.len(), 2 * self.num_freqs);
-        // Row norms of W_SORF are exactly √(padded); scaling by
-        // √ν·√padded makes wᵀu match the N(0, νI) projection scale.
-        let scale = (self.nu * self.padded as f32).sqrt();
         let mut scratch = vec![0.0f32; self.padded];
-        let mut emitted = 0usize;
-        for block in &self.blocks {
-            scratch[..self.input_dim].copy_from_slice(u);
-            scratch[self.input_dim..].fill(0.0);
-            block.apply(&mut scratch);
-            let take = (self.num_freqs - emitted).min(self.padded);
-            for j in 0..take {
-                let proj = scratch[j] * scale;
-                let (s, c) = proj.sin_cos();
-                out[emitted + j] = c * self.inv_sqrt_d;
-                out[self.num_freqs + emitted + j] = s * self.inv_sqrt_d;
-            }
-            emitted += take;
+        self.map_into_with_scratch(u, out, &mut scratch);
+    }
+
+    /// Batch override: one FWHT scratch buffer serves every row (the
+    /// transform itself is already `O(D log d)`; the per-call allocation
+    /// was the batch-path overhead).
+    fn map_batch_into(&self, u: &crate::linalg::Matrix, out: &mut crate::linalg::Matrix) {
+        assert_eq!(u.cols(), self.input_dim, "map_batch_into: input dim");
+        assert_eq!(out.cols(), 2 * self.num_freqs, "map_batch_into: output dim");
+        assert_eq!(u.rows(), out.rows(), "map_batch_into: batch mismatch");
+        let mut scratch = vec![0.0f32; self.padded];
+        for i in 0..u.rows() {
+            self.map_into_with_scratch(u.row(i), out.row_mut(i), &mut scratch);
         }
     }
 

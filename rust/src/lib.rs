@@ -12,11 +12,12 @@
 //! softmax distribution `p_i ∝ exp(τ hᵀc_i)` while costing only
 //! `O(D log n)` per sample via a divide-and-conquer tree (paper §3.1).
 //!
-//! ## Architecture (three layers)
+//! ## Architecture (three layers, batch-first)
 //!
-//! * **L3 (this crate)** — the coordinator: sampling service (kernel tree +
-//!   baselines), training event loop, parameter store + optimizers,
-//!   synthetic-data substrates, metrics, CLI.
+//! * **L3 (this crate)** — the coordinator: a **batch-first sampling
+//!   pipeline** (kernel trees + baselines), training event loop,
+//!   parameter store + optimizers, synthetic-data substrates, metrics,
+//!   CLI.
 //! * **L2 (JAX, build time)** — model fwd/bwd (`python/compile/model.py`),
 //!   AOT-lowered to HLO text once by `make artifacts`.
 //! * **L1 (Pallas, build time)** — the RFF feature-map and fused
@@ -27,6 +28,33 @@
 //! the HLO artifacts into a PJRT CPU client and [`coordinator::Trainer`]
 //! drives everything from Rust.
 //!
+//! ## The batch-first sampling pipeline
+//!
+//! Every stage of the L3 hot path operates on whole training batches
+//! rather than single examples:
+//!
+//! 1. **[`linalg`]** supplies a blocked `Matrix::matmul_nt` gemm (both
+//!    operands row-major, 4-accumulator inner dot) and batched
+//!    `axpy_rows` accumulation.
+//! 2. **[`featmap`]** maps all queries at once:
+//!    `FeatureMap::map_batch_into` computes `Φ = f(H · Wᵀ)` in one gemm
+//!    for RFF/ORF (FWHT-scratch-amortized for SORF, constant-hoisted for
+//!    the quadratic map) instead of one matvec per example.
+//! 3. **[`sampler`]** exposes `Sampler::sample_batch(H, targets, m, rng)`
+//!    — per-example negative draws with *exact* per-example conditioned
+//!    probabilities — and `Sampler::update_classes` for batched
+//!    embedding propagation. Kernel samplers fan the per-example tree
+//!    walks out across the [`exec`] substrate, and the
+//!    [`sampler::ShardedKernelTree`] partitions classes into
+//!    power-of-two shards (alias-pick a shard by root mass, then walk
+//!    within it) so disjoint-shard updates apply in parallel.
+//! 4. **[`coordinator`]** requests one `SamplerService::draw_batch` per
+//!    training step — shared negatives drawn round-robin from the
+//!    batch's per-example queries with accidental-hit masks computed
+//!    batch-wide — and pushes the step's embedding updates as one
+//!    sharded batch, while the [`exec`] prefetcher keeps producing whole
+//!    batches ahead of the consumer.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -36,14 +64,31 @@
 //! // 1,000 classes with 32-d normalized embeddings.
 //! let classes = Matrix::randn(&mut rng, 1000, 32).l2_normalized_rows();
 //! // RF-softmax sampler with D = 64 random features, ν = 4.0.
-//! let mut sampler = RffSampler::new(&classes, 64, 4.0, &mut rng);
-//! let h = unit_vector(&mut rng, 32);
-//! let draw = sampler.sample(&h, 10, &mut rng);
-//! assert_eq!(draw.ids.len(), 10);
+//! let sampler = RffSampler::new(&classes, 64, 4.0, &mut rng);
+//!
+//! // Batch-first: 8 example queries, one call, 10 negatives each
+//! // (example b's draw excludes targets[b], probabilities exact).
+//! let queries = Matrix::randn(&mut rng, 8, 32).l2_normalized_rows();
+//! let targets: Vec<u32> = (0..8).collect();
+//! let batch = sampler.sample_batch(&queries, &targets, 10, &mut rng);
+//! assert_eq!(batch.batch(), 8);
+//! assert_eq!(batch.m(), 10);
+//!
+//! // Scaling further: shard the tree so batched updates parallelize.
+//! let sharded = ShardedKernelSampler::with_map(
+//!     &classes,
+//!     RffMap::new(32, 64, 4.0, &mut rng),
+//!     8,
+//!     "rff-sharded",
+//! );
+//! let draw = sharded.sample_batch(&queries, &targets, 10, &mut rng);
+//! assert_eq!(draw.total(), 80);
 //! ```
 //!
 //! See `examples/` for end-to-end training drivers and `rust/benches/` for
-//! the harnesses that regenerate every table and figure of the paper.
+//! the harnesses that regenerate every table and figure of the paper
+//! (plus `perf_hotpath` for the batch-vs-scalar sampling throughput
+//! trajectory).
 
 pub mod benchkit;
 pub mod bias;
@@ -77,9 +122,10 @@ pub mod prelude {
     pub use crate::linalg::{unit_vector, Matrix};
     pub use crate::rng::Rng;
     pub use crate::sampler::{
-        AliasSampler, BucketKernelSampler, ExactSoftmaxSampler,
+        AliasSampler, BatchDraw, BucketKernelSampler, ExactSoftmaxSampler,
         GumbelTopKSampler, KernelTree, LogUniformSampler, NegativeDraw,
-        QuadraticSampler, RffSampler, Sampler, UniformSampler,
+        QuadraticSampler, RffSampler, Sampler, ShardedKernelSampler,
+        ShardedKernelTree, UniformSampler,
     };
     pub use crate::softmax::{
         full_softmax_loss, sampled_softmax_loss, SampledLoss,

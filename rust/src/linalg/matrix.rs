@@ -122,6 +122,36 @@ impl Matrix {
         out
     }
 
+    /// Blocked gemm against a transposed right operand:
+    /// `self (r×d) @ otherᵀ` where `other` is `k×d`, giving `out (r×k)`
+    /// with `out[i][j] = self.row(i) · other.row(j)`.
+    ///
+    /// Both operands stream row-major (no transposed strides), the inner
+    /// product reuses [`dot`]'s 4-accumulator unrolling, and `other`'s
+    /// rows are visited in blocks so they stay L2-resident across the `r`
+    /// sweep. This is the batch-path workhorse: feature maps compute
+    /// `Φ = f(U · Wᵀ)` for a whole batch `U` in one call instead of `r`
+    /// matvecs.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt: inner dims");
+        let (r, k) = (self.rows, other.rows);
+        let mut out = Matrix::zeros(r, k);
+        const BLOCK: usize = 64;
+        let mut j0 = 0usize;
+        while j0 < k {
+            let j1 = (j0 + BLOCK).min(k);
+            for i in 0..r {
+                let a = self.row(i);
+                let out_row = &mut out.data[i * k..(i + 1) * k];
+                for j in j0..j1 {
+                    out_row[j] = dot(a, other.row(j));
+                }
+            }
+            j0 = j1;
+        }
+        out
+    }
+
     /// Transposed copy.
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
@@ -221,6 +251,21 @@ mod tests {
         let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
         let c = a.matmul(&b);
         assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_nt_matches_matmul_of_transpose() {
+        let mut rng = Rng::seeded(35);
+        // Odd sizes cross the column-block boundary logic.
+        let a = Matrix::randn(&mut rng, 7, 13);
+        let b = Matrix::randn(&mut rng, 70, 13);
+        let fast = a.matmul_nt(&b);
+        let slow = a.matmul(&b.transpose());
+        assert_eq!(fast.rows(), 7);
+        assert_eq!(fast.cols(), 70);
+        for (x, y) in fast.data().iter().zip(slow.data()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
     }
 
     #[test]

@@ -44,6 +44,29 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Batched axpy over selected rows of a flat row-major table:
+/// `y += Σ_k alphas[k] · table[ids[k]]` with rows of width `dim`.
+///
+/// This is the accumulation kernel behind weighted row-sums on the batch
+/// path (e.g. the extreme-classification sparse-feature query assembly):
+/// one pass per selected row, each an [`axpy`] that LLVM vectorizes.
+/// Takes a slice rather than a [`Matrix`] so embedding-table blocks
+/// qualify without a copy.
+pub fn axpy_rows(
+    table: &[f32],
+    dim: usize,
+    ids: &[u32],
+    alphas: &[f32],
+    y: &mut [f32],
+) {
+    assert_eq!(ids.len(), alphas.len(), "axpy_rows: ids/alphas mismatch");
+    assert_eq!(y.len(), dim, "axpy_rows: output dim mismatch");
+    for (&id, &a) in ids.iter().zip(alphas.iter()) {
+        let s = id as usize * dim;
+        axpy(a, &table[s..s + dim], y);
+    }
+}
+
 /// `x *= alpha`.
 #[inline]
 pub fn scale(alpha: f32, x: &mut [f32]) {
@@ -159,6 +182,16 @@ mod tests {
         let s: f64 = p.iter().sum();
         assert!((s - 1.0).abs() < 1e-12);
         assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn axpy_rows_matches_manual_accumulation() {
+        // 3×2 row-major table.
+        let table = vec![1.0f32, 2., 3., 4., 5., 6.];
+        let mut y = vec![10.0f32, 20.0];
+        axpy_rows(&table, 2, &[2, 0, 2], &[1.0, 0.5, -1.0], &mut y);
+        // 10 + 5 + 0.5 − 5 = 10.5; 20 + 6 + 1 − 6 = 21.
+        assert_eq!(y, vec![10.5, 21.0]);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //!
 //! Memory: `O((n/b)·D + n·d)` instead of `O(n·D)`.
 
-use super::{KernelTree, NegativeDraw, Sampler};
+use super::{BatchDraw, KernelTree, NegativeDraw, Sampler};
 use crate::featmap::FeatureMap;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
@@ -114,6 +114,81 @@ impl<M: FeatureMap> BucketKernelSampler<M> {
         }
         total
     }
+
+    /// One two-level draw for a pre-mapped query: `(class, q)`.
+    fn draw_one(
+        &self,
+        query: &[f32],
+        h: &[f32],
+        rng: &mut Rng,
+        masses: &mut Vec<f64>,
+    ) -> (u32, f64) {
+        let (bkt, q_bucket) = self.tree.sample(query, rng);
+        let total = self.bucket_masses(h, bkt, masses);
+        let mut u = rng.f64() * total;
+        let mut pick = masses.len() - 1;
+        for (j, &w) in masses.iter().enumerate() {
+            u -= w;
+            if u < 0.0 {
+                pick = j;
+                break;
+            }
+        }
+        let (lo, _) = self.bucket_range(bkt);
+        ((lo + pick) as u32, q_bucket * masses[pick] / total)
+    }
+
+    /// Two-level probability for a pre-mapped query.
+    fn probability_with_query(
+        &self,
+        query: &[f32],
+        h: &[f32],
+        class: usize,
+        masses: &mut Vec<f64>,
+    ) -> f64 {
+        let bkt = class / self.bucket_size;
+        let q_bucket = self.tree.probability(query, bkt);
+        let total = self.bucket_masses(h, bkt, masses);
+        let (lo, _) = self.bucket_range(bkt);
+        q_bucket * masses[class - lo] / total
+    }
+
+    /// Negatives (`≠ target`) for a pre-mapped query, with the standard
+    /// rejection + uniform fallback (never aborts).
+    fn negatives_with_query(
+        &self,
+        query: &[f32],
+        h: &[f32],
+        target: usize,
+        m: usize,
+        rng: &mut Rng,
+        masses: &mut Vec<f64>,
+    ) -> NegativeDraw {
+        let n = self.classes.rows();
+        assert!(n > 1, "sample_negatives: need ≥ 2 classes to exclude one");
+        let q_t = self.probability_with_query(query, h, target, masses);
+        let renorm = (1.0 - q_t).max(f64::MIN_POSITIVE);
+        let mut out = NegativeDraw::with_capacity(m);
+        // Per-draw attempts rather than per-round: cap at m rounds' worth.
+        let max_attempts = m.saturating_mul(super::REJECTION_ROUNDS).max(64);
+        let mut attempts = 0usize;
+        while out.ids.len() < m
+            && attempts < max_attempts
+            && q_t < super::DEGENERATE_Q
+        {
+            let (id, q) = self.draw_one(query, h, rng, masses);
+            if id as usize != target {
+                out.ids.push(id);
+                out.probs.push(q / renorm);
+            }
+            attempts += 1;
+        }
+        while out.ids.len() < m {
+            out.ids.push(super::uniform_excluding(n, target, rng) as u32);
+            out.probs.push(1.0 / (n - 1) as f64);
+        }
+        out
+    }
 }
 
 impl<M: FeatureMap> Sampler for BucketKernelSampler<M> {
@@ -127,33 +202,59 @@ impl<M: FeatureMap> Sampler for BucketKernelSampler<M> {
         self.map.map_into(h, query);
         let mut out = NegativeDraw::with_capacity(m);
         for _ in 0..m {
-            let (bkt, q_bucket) = self.tree.sample(query, rng);
-            let total = self.bucket_masses(h, bkt, masses);
-            let mut u = rng.f64() * total;
-            let mut pick = masses.len() - 1;
-            for (j, &w) in masses.iter().enumerate() {
-                u -= w;
-                if u < 0.0 {
-                    pick = j;
-                    break;
-                }
-            }
-            let (lo, _) = self.bucket_range(bkt);
-            out.ids.push((lo + pick) as u32);
-            out.probs.push(q_bucket * masses[pick] / total);
+            let (id, q) = self.draw_one(query, h, rng, masses);
+            out.ids.push(id);
+            out.probs.push(q);
         }
         out
     }
 
     fn probability(&self, h: &[f32], class: usize) -> f64 {
-        let bkt = class / self.bucket_size;
         let mut sc = self.scratch.borrow_mut();
         let Scratch { query, masses, .. } = &mut *sc;
         self.map.map_into(h, query);
-        let q_bucket = self.tree.probability(query, bkt);
-        let total = self.bucket_masses(h, bkt, masses);
-        let (lo, _) = self.bucket_range(bkt);
-        q_bucket * masses[class - lo] / total
+        self.probability_with_query(query, h, class, masses)
+    }
+
+    fn sample_negatives(
+        &self,
+        h: &[f32],
+        target: usize,
+        m: usize,
+        rng: &mut Rng,
+    ) -> NegativeDraw {
+        let mut sc = self.scratch.borrow_mut();
+        let Scratch { query, masses, .. } = &mut *sc;
+        self.map.map_into(h, query);
+        self.negatives_with_query(query, h, target, m, rng, masses)
+    }
+
+    /// Batch override: every query mapped in one [`FeatureMap::map_batch`]
+    /// call, then per-example two-level draws reusing one mass buffer.
+    fn sample_batch(
+        &self,
+        h: &Matrix,
+        targets: &[u32],
+        m: usize,
+        rng: &mut Rng,
+    ) -> BatchDraw {
+        let bsz = h.rows();
+        assert_eq!(bsz, targets.len(), "sample_batch: batch mismatch");
+        let queries = self.map.map_batch(h);
+        let mut masses: Vec<f64> = Vec::with_capacity(self.bucket_size);
+        let draws = (0..bsz)
+            .map(|b| {
+                self.negatives_with_query(
+                    queries.row(b),
+                    h.row(b),
+                    targets[b] as usize,
+                    m,
+                    rng,
+                    &mut masses,
+                )
+            })
+            .collect();
+        BatchDraw { draws }
     }
 
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
@@ -250,6 +351,35 @@ mod tests {
         // Distribution still normalized.
         let qsum: f64 = (0..24).map(|i| s.probability(&h, i)).sum();
         assert!((qsum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sample_batch_matches_conditioned_probabilities() {
+        let (_, s) = setup(30, 6, 4);
+        let mut rng = Rng::seeded(166);
+        let bsz = 4;
+        let mut h = Matrix::zeros(bsz, 6);
+        for b in 0..bsz {
+            let v = unit_vector(&mut rng, 6);
+            h.row_mut(b).copy_from_slice(&v);
+        }
+        let targets = [3u32, 11, 19, 27];
+        let batch = s.sample_batch(&h, &targets, 25, &mut rng);
+        assert_eq!(batch.batch(), bsz);
+        for (b, draw) in batch.draws.iter().enumerate() {
+            assert_eq!(draw.len(), 25);
+            let t = targets[b] as usize;
+            let q_t = s.probability(h.row(b), t);
+            for (&id, &q) in draw.ids.iter().zip(&draw.probs) {
+                assert_ne!(id as usize, t);
+                let want =
+                    s.probability(h.row(b), id as usize) / (1.0 - q_t);
+                assert!(
+                    (q - want).abs() < 1e-9 * want.max(1e-12),
+                    "example {b} id {id}: {q} vs {want}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! memory at `O(nD)` node sums instead of additionally storing every leaf
 //! feature vector), and (c) reusable query scratch.
 
-use super::{KernelTree, NegativeDraw, Sampler};
+use super::{BatchDraw, KernelTree, NegativeDraw, Sampler};
 use crate::config::FeatureMapKind;
 use crate::featmap::{FeatureMap, OrfMap, QuadraticMap, RffMap, SorfMap};
 use crate::linalg::Matrix;
@@ -106,6 +106,62 @@ impl<M: FeatureMap> Sampler for KernelSampler<M> {
         self.tree.probability(&sc.query, class)
     }
 
+    fn sample_negatives(
+        &self,
+        h: &[f32],
+        target: usize,
+        m: usize,
+        rng: &mut Rng,
+    ) -> NegativeDraw {
+        // Map φ(h) once; the trait default would re-map on every
+        // rejection round and for the q_target query.
+        let mut sc = self.scratch.borrow_mut();
+        self.map.map_into(h, &mut sc.query);
+        let (ids, probs) = self.tree.sample_negatives(&sc.query, target, m, rng);
+        NegativeDraw { ids, probs }
+    }
+
+    /// Batch draw: φ of every query in one [`FeatureMap::map_batch`]
+    /// gemm, then per-example tree walks fanned out via
+    /// [`super::fan_out_draws`]. The tree is shared read-only; the
+    /// `RefCell` scratch is not touched on this path.
+    fn sample_batch(
+        &self,
+        h: &Matrix,
+        targets: &[u32],
+        m: usize,
+        rng: &mut Rng,
+    ) -> BatchDraw {
+        let bsz = h.rows();
+        assert_eq!(bsz, targets.len(), "sample_batch: batch mismatch");
+        let queries = self.map.map_batch(h);
+        let tree = &self.tree;
+        let draws = super::fan_out_draws(bsz, m, rng, |b, r| {
+            let (ids, probs) =
+                tree.sample_negatives(queries.row(b), targets[b] as usize, m, r);
+            NegativeDraw { ids, probs }
+        });
+        BatchDraw { draws }
+    }
+
+    /// Unconditioned batch draw (shared-pool contract): same gemm +
+    /// fan-out, walks via the memoized [`KernelTree::sample_many`].
+    fn sample_batch_shared(
+        &self,
+        h: &Matrix,
+        m: usize,
+        rng: &mut Rng,
+    ) -> BatchDraw {
+        let bsz = h.rows();
+        let queries = self.map.map_batch(h);
+        let tree = &self.tree;
+        let draws = super::fan_out_draws(bsz, m, rng, |b, r| {
+            let (ids, probs) = tree.sample_many(queries.row(b), m, r);
+            NegativeDraw { ids, probs }
+        });
+        BatchDraw { draws }
+    }
+
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
         let sc = self.scratch.get_mut();
         self.map.map_into(self.classes.row(class), &mut sc.phi_old);
@@ -115,6 +171,40 @@ impl<M: FeatureMap> Sampler for KernelSampler<M> {
         }
         self.tree.update_leaf(class, &sc.phi_new);
         self.classes.row_mut(class).copy_from_slice(embedding);
+    }
+
+    /// Batched propagation: φ_old / φ_new for all touched classes come
+    /// from two `map_batch` gemms; the single tree then applies leaf
+    /// deltas serially (shard-level write parallelism lives in
+    /// [`super::ShardedKernelSampler`]).
+    fn update_classes(&mut self, classes: &[u32], embeddings: &Matrix) {
+        let k = classes.len();
+        assert_eq!(k, embeddings.rows(), "update_classes: ids/rows mismatch");
+        super::debug_assert_unique(classes);
+        if k == 0 {
+            return;
+        }
+        let d = self.classes.cols();
+        let mut old = Matrix::zeros(k, d);
+        for (r, &c) in classes.iter().enumerate() {
+            old.row_mut(r).copy_from_slice(self.classes.row(c as usize));
+        }
+        let phi_old = self.map.map_batch(&old);
+        let phi_new = self.map.map_batch(embeddings);
+        let mut delta = vec![0.0f32; self.tree.dim()];
+        for r in 0..k {
+            for ((dst, &a), &b) in delta
+                .iter_mut()
+                .zip(phi_new.row(r))
+                .zip(phi_old.row(r))
+            {
+                *dst = a - b;
+            }
+            self.tree.update_leaf(classes[r] as usize, &delta);
+            self.classes
+                .row_mut(classes[r] as usize)
+                .copy_from_slice(embeddings.row(r));
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -222,8 +312,41 @@ impl Sampler for RffSampler {
         self.inner().probability(h, class)
     }
 
+    fn sample_negatives(
+        &self,
+        h: &[f32],
+        target: usize,
+        m: usize,
+        rng: &mut Rng,
+    ) -> NegativeDraw {
+        self.inner().sample_negatives(h, target, m, rng)
+    }
+
+    fn sample_batch(
+        &self,
+        h: &Matrix,
+        targets: &[u32],
+        m: usize,
+        rng: &mut Rng,
+    ) -> BatchDraw {
+        self.inner().sample_batch(h, targets, m, rng)
+    }
+
+    fn sample_batch_shared(
+        &self,
+        h: &Matrix,
+        m: usize,
+        rng: &mut Rng,
+    ) -> BatchDraw {
+        self.inner().sample_batch_shared(h, m, rng)
+    }
+
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
         self.inner_mut().update_class(class, embedding)
+    }
+
+    fn update_classes(&mut self, classes: &[u32], embeddings: &Matrix) {
+        self.inner_mut().update_classes(classes, embeddings)
     }
 
     fn name(&self) -> &'static str {
@@ -262,8 +385,41 @@ impl Sampler for QuadraticSampler {
         self.inner.probability(h, class)
     }
 
+    fn sample_negatives(
+        &self,
+        h: &[f32],
+        target: usize,
+        m: usize,
+        rng: &mut Rng,
+    ) -> NegativeDraw {
+        self.inner.sample_negatives(h, target, m, rng)
+    }
+
+    fn sample_batch(
+        &self,
+        h: &Matrix,
+        targets: &[u32],
+        m: usize,
+        rng: &mut Rng,
+    ) -> BatchDraw {
+        self.inner.sample_batch(h, targets, m, rng)
+    }
+
+    fn sample_batch_shared(
+        &self,
+        h: &Matrix,
+        m: usize,
+        rng: &mut Rng,
+    ) -> BatchDraw {
+        self.inner.sample_batch_shared(h, m, rng)
+    }
+
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
         self.inner.update_class(class, embedding)
+    }
+
+    fn update_classes(&mut self, classes: &[u32], embeddings: &Matrix) {
+        self.inner.update_classes(classes, embeddings)
     }
 
     fn name(&self) -> &'static str {
@@ -392,6 +548,68 @@ mod tests {
         assert_eq!(draw.len(), 50);
         assert!(draw.ids.iter().all(|&i| i != 7));
         assert!(draw.probs.iter().all(|&q| q > 0.0 && q <= 1.0));
+    }
+
+    #[test]
+    fn sample_batch_preserves_exact_per_example_probabilities() {
+        let mut rng = Rng::seeded(107);
+        let n = 30;
+        let d = 6;
+        let classes = normalized_classes(&mut rng, n, d);
+        let sampler = RffSampler::new(&classes, 64, 2.0, &mut rng);
+        let bsz = 8;
+        let mut h = Matrix::zeros(bsz, d);
+        for b in 0..bsz {
+            let v = unit_vector(&mut rng, d);
+            h.row_mut(b).copy_from_slice(&v);
+        }
+        let targets: Vec<u32> = (0..bsz as u32).collect();
+        // bsz·m ≥ 64 ⇒ exercises the parallel fan-out when cores allow.
+        let batch = sampler.sample_batch(&h, &targets, 40, &mut rng);
+        assert_eq!(batch.batch(), bsz);
+        for (b, draw) in batch.draws.iter().enumerate() {
+            assert_eq!(draw.len(), 40);
+            let t = targets[b] as usize;
+            let q_t = sampler.probability(h.row(b), t);
+            for (&id, &q) in draw.ids.iter().zip(&draw.probs) {
+                assert_ne!(id as usize, t);
+                let want =
+                    sampler.probability(h.row(b), id as usize) / (1.0 - q_t);
+                assert!(
+                    (q - want).abs() < 1e-9 * want.max(1e-12),
+                    "example {b} id {id}: {q} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_update_classes_matches_serial() {
+        let mut rng = Rng::seeded(108);
+        let n = 20;
+        let d = 6;
+        let classes = normalized_classes(&mut rng, n, d);
+        let mut a = RffSampler::new(&classes, 32, 1.5, &mut Rng::seeded(600));
+        let mut b = RffSampler::new(&classes, 32, 1.5, &mut Rng::seeded(600));
+        let ids: Vec<u32> = vec![1, 4, 9, 16];
+        let mut emb = Matrix::zeros(ids.len(), d);
+        for r in 0..ids.len() {
+            let e = unit_vector(&mut rng, d);
+            emb.row_mut(r).copy_from_slice(&e);
+        }
+        a.update_classes(&ids, &emb);
+        for (r, &c) in ids.iter().enumerate() {
+            b.update_class(c as usize, emb.row(r));
+        }
+        let h = unit_vector(&mut rng, d);
+        for i in 0..n {
+            let pa = a.probability(&h, i);
+            let pb = b.probability(&h, i);
+            assert!(
+                (pa - pb).abs() < 1e-7 * pa.max(pb).max(1e-9),
+                "class {i}: {pa} vs {pb}"
+            );
+        }
     }
 
     #[test]

@@ -22,18 +22,87 @@
 
 mod bucket;
 mod kernel_samplers;
+mod sharded;
 mod simple;
 mod tree;
 
 pub use bucket::BucketKernelSampler;
 pub use kernel_samplers::{QuadraticSampler, RffSampler};
+pub use sharded::{ShardedKernelSampler, ShardedKernelTree};
 pub use simple::{
     AliasSampler, ExactSoftmaxSampler, GumbelTopKSampler, LogUniformSampler,
     UniformSampler,
 };
 pub use tree::KernelTree;
 
+use crate::linalg::Matrix;
 use crate::rng::Rng;
+
+/// Cap on rejection rounds before [`Sampler::sample_negatives`] (and the
+/// kernel-tree equivalents) switch to the deterministic
+/// uniform-excluding-target fallback. Each round attempts all still-missing
+/// slots, so with any non-degenerate `q_target` the fallback is
+/// unreachable in practice; it exists so production runs never abort when
+/// `q_target ≈ 1`.
+pub(crate) const REJECTION_ROUNDS: usize = 64;
+
+/// `q_target` above this is treated as degenerate: rejection would loop
+/// (nearly) forever, so the fallback engages immediately.
+pub(crate) const DEGENERATE_Q: f64 = 1.0 - 1e-9;
+
+/// Map a uniform draw over `n − 1` slots onto class ids skipping `target`.
+#[inline]
+pub(crate) fn uniform_excluding(
+    n: usize,
+    target: usize,
+    rng: &mut Rng,
+) -> usize {
+    debug_assert!(n > 1);
+    let k = rng.index(n - 1);
+    if k >= target {
+        k + 1
+    } else {
+        k
+    }
+}
+
+/// Shared fan-out for batched per-example draws: pre-splits one RNG
+/// stream per example (so results are deterministic in `rng` regardless
+/// of thread scheduling) and spreads the walks across the exec substrate
+/// when the batch is large enough to amortize the spawn cost.
+pub(crate) fn fan_out_draws(
+    bsz: usize,
+    m: usize,
+    rng: &mut Rng,
+    draw: impl Fn(usize, &mut Rng) -> NegativeDraw + Sync,
+) -> Vec<NegativeDraw> {
+    let streams: Vec<Rng> = (0..bsz).map(|_| rng.split()).collect();
+    let run = |b: usize| {
+        let mut r = streams[b].clone();
+        draw(b, &mut r)
+    };
+    let workers = crate::exec::recommended_workers().min(bsz.max(1));
+    if workers > 1 && bsz > 1 && bsz * m >= 64 {
+        crate::exec::parallel_map(bsz, workers, run)
+    } else {
+        (0..bsz).map(run).collect()
+    }
+}
+
+/// Debug-build check that a batched-update id list is duplicate-free
+/// (duplicates would make φ_old-based delta computation corrupt tree
+/// sums; the serial trait default is the only duplicate-safe path).
+#[inline]
+pub(crate) fn debug_assert_unique(classes: &[u32]) {
+    debug_assert!(
+        {
+            let mut seen =
+                std::collections::HashSet::with_capacity(classes.len());
+            classes.iter().all(|c| seen.insert(*c))
+        },
+        "update_classes: duplicate class ids"
+    );
+}
 
 /// Result of drawing `m` classes: ids plus their exact sampling
 /// probabilities under the sampler's distribution (conditioned on the
@@ -58,6 +127,40 @@ impl NegativeDraw {
     }
 }
 
+/// Result of a batched negative draw: one [`NegativeDraw`] per example
+/// (row of the query matrix), each of `m` classes conditioned on
+/// `≠ targets[b]` with exact per-example probabilities.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchDraw {
+    pub draws: Vec<NegativeDraw>,
+}
+
+impl BatchDraw {
+    /// Number of examples.
+    pub fn batch(&self) -> usize {
+        self.draws.len()
+    }
+
+    /// Negatives per example (0 for an empty batch).
+    pub fn m(&self) -> usize {
+        self.draws.first().map_or(0, NegativeDraw::len)
+    }
+
+    /// Total draws across the batch.
+    pub fn total(&self) -> usize {
+        self.draws.iter().map(NegativeDraw::len).sum()
+    }
+
+    /// Flattened `batch × m` ids, row-major.
+    pub fn flat_ids(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.total());
+        for d in &self.draws {
+            out.extend_from_slice(&d.ids);
+        }
+        out
+    }
+}
+
 /// A (possibly input-dependent) sampling distribution over classes.
 pub trait Sampler: Send {
     /// Total number of classes n.
@@ -74,6 +177,15 @@ pub trait Sampler: Send {
     /// Draw `m` *negatives*: classes i.i.d. from `q(· | h)` conditioned on
     /// `≠ target`, with probabilities renormalized by `1 − q_target`
     /// (rejection sampling; exact).
+    ///
+    /// Termination is unconditional: if `q_target ≈ 1` (or rejection
+    /// fails to fill `m` slots within [`REJECTION_ROUNDS`] rounds, which
+    /// implies the same degeneracy), the remaining slots fall back to a
+    /// uniform draw over the `n − 1` non-target classes with the exact
+    /// fallback probability `1/(n − 1)`. Each slot reports the pmf of the
+    /// mechanism that actually produced it, so the importance-weighted
+    /// partition estimate (paper eq. 5) stays well-defined — production
+    /// runs never abort.
     fn sample_negatives(
         &self,
         h: &[f32],
@@ -81,11 +193,13 @@ pub trait Sampler: Send {
         m: usize,
         rng: &mut Rng,
     ) -> NegativeDraw {
+        let n = self.num_classes();
+        assert!(n > 1, "sample_negatives: need ≥ 2 classes to exclude one");
         let q_t = self.probability(h, target);
         let renorm = (1.0 - q_t).max(f64::MIN_POSITIVE);
         let mut out = NegativeDraw::with_capacity(m);
-        let mut guard = 0usize;
-        while out.ids.len() < m {
+        let mut rounds = 0usize;
+        while out.ids.len() < m && rounds < REJECTION_ROUNDS && q_t < DEGENERATE_Q {
             let draw = self.sample(h, m - out.ids.len(), rng);
             for (id, p) in draw.ids.iter().zip(draw.probs.iter()) {
                 if *id as usize != target {
@@ -93,18 +207,78 @@ pub trait Sampler: Send {
                     out.probs.push(p / renorm);
                 }
             }
-            guard += 1;
-            assert!(
-                guard < 10_000,
-                "sample_negatives: rejection not terminating (q_target={q_t})"
-            );
+            rounds += 1;
+        }
+        while out.ids.len() < m {
+            out.ids.push(uniform_excluding(n, target, rng) as u32);
+            out.probs.push(1.0 / (n - 1) as f64);
         }
         out
+    }
+
+    /// Batched negative draw: row `b` of `h` is example b's query and
+    /// `targets[b]` is excluded from its `m` draws, with exact
+    /// per-example probabilities preserved.
+    ///
+    /// Default implementation loops [`Sampler::sample_negatives`] per
+    /// row; kernel samplers override it with one batched feature map
+    /// (`φ` of every query in a single gemm) and tree walks fanned out
+    /// across the [`crate::exec`] substrate.
+    fn sample_batch(
+        &self,
+        h: &Matrix,
+        targets: &[u32],
+        m: usize,
+        rng: &mut Rng,
+    ) -> BatchDraw {
+        assert_eq!(h.rows(), targets.len(), "sample_batch: batch mismatch");
+        let draws = (0..h.rows())
+            .map(|b| {
+                self.sample_negatives(h.row(b), targets[b] as usize, m, rng)
+            })
+            .collect();
+        BatchDraw { draws }
+    }
+
+    /// Unconditioned batched draw for *shared* negative pools: row `b`
+    /// contributes `m` i.i.d. draws from `q(· | h_b)` with exact
+    /// (unconditioned) probabilities — no target exclusion, matching the
+    /// classic shared-negative contract where accidental hits against any
+    /// example's target are handled by the coordinator's logit mask.
+    /// Keeping the proposal's support full is what keeps the eq.-5
+    /// partition estimate unbiased for *every* example in the batch, not
+    /// just the slot's owner.
+    fn sample_batch_shared(
+        &self,
+        h: &Matrix,
+        m: usize,
+        rng: &mut Rng,
+    ) -> BatchDraw {
+        let draws = (0..h.rows())
+            .map(|b| self.sample(h.row(b), m, rng))
+            .collect();
+        BatchDraw { draws }
     }
 
     /// Propagate an updated class embedding into the sampler's state
     /// (no-op for input-independent samplers).
     fn update_class(&mut self, class: usize, embedding: &[f32]);
+
+    /// Batched class propagation: class `classes[k]` takes the embedding
+    /// in `embeddings.row(k)`. Ids must be unique (the coordinator's
+    /// gradient aggregation guarantees this). Default applies serially;
+    /// [`ShardedKernelSampler`] overrides with batched φ recomputation
+    /// and shard-parallel tree updates.
+    fn update_classes(&mut self, classes: &[u32], embeddings: &Matrix) {
+        assert_eq!(
+            classes.len(),
+            embeddings.rows(),
+            "update_classes: ids/rows mismatch"
+        );
+        for (k, &c) in classes.iter().enumerate() {
+            self.update_class(c as usize, embeddings.row(k));
+        }
+    }
 
     /// Human-readable name (matches the paper's method labels).
     fn name(&self) -> &'static str;
@@ -146,5 +320,131 @@ mod tests {
         let d = NegativeDraw::with_capacity(5);
         assert!(d.is_empty());
         assert_eq!(d.len(), 0);
+    }
+
+    /// Pathological sampler: all probability mass on one class. The old
+    /// rejection loop panicked after 10k rounds here; the fallback must
+    /// return uniform-excluding-target draws instead.
+    struct DegenerateSampler {
+        n: usize,
+        hot: usize,
+    }
+
+    impl Sampler for DegenerateSampler {
+        fn num_classes(&self) -> usize {
+            self.n
+        }
+
+        fn sample(&self, _h: &[f32], m: usize, _rng: &mut Rng) -> NegativeDraw {
+            NegativeDraw {
+                ids: vec![self.hot as u32; m],
+                probs: vec![1.0; m],
+            }
+        }
+
+        fn probability(&self, _h: &[f32], class: usize) -> f64 {
+            if class == self.hot {
+                1.0
+            } else {
+                0.0
+            }
+        }
+
+        fn update_class(&mut self, _class: usize, _embedding: &[f32]) {}
+
+        fn name(&self) -> &'static str {
+            "degenerate"
+        }
+    }
+
+    #[test]
+    fn sample_negatives_falls_back_when_q_target_is_one() {
+        let s = DegenerateSampler { n: 10, hot: 3 };
+        let mut rng = Rng::seeded(120);
+        let draw = s.sample_negatives(&[], 3, 40, &mut rng);
+        assert_eq!(draw.len(), 40);
+        assert!(draw.ids.iter().all(|&i| i != 3 && (i as usize) < 10));
+        for &q in &draw.probs {
+            assert!((q - 1.0 / 9.0).abs() < 1e-12, "fallback q = {q}");
+        }
+    }
+
+    /// Sampler whose claimed `q_target` looks benign but whose draws
+    /// always hit the target — exercises the round-cap escape hatch
+    /// (as opposed to the `q_target ≈ 1` early exit above).
+    struct StuckSampler {
+        n: usize,
+        target: usize,
+    }
+
+    impl Sampler for StuckSampler {
+        fn num_classes(&self) -> usize {
+            self.n
+        }
+
+        fn sample(&self, _h: &[f32], m: usize, _rng: &mut Rng) -> NegativeDraw {
+            NegativeDraw {
+                ids: vec![self.target as u32; m],
+                probs: vec![0.5; m],
+            }
+        }
+
+        fn probability(&self, _h: &[f32], _class: usize) -> f64 {
+            0.5
+        }
+
+        fn update_class(&mut self, _class: usize, _embedding: &[f32]) {}
+
+        fn name(&self) -> &'static str {
+            "stuck"
+        }
+    }
+
+    #[test]
+    fn sample_negatives_falls_back_when_rejection_cannot_fill() {
+        let s = StuckSampler { n: 4, target: 0 };
+        let mut rng = Rng::seeded(121);
+        let draw = s.sample_negatives(&[], 0, 12, &mut rng);
+        assert_eq!(draw.len(), 12);
+        assert!(draw.ids.iter().all(|&i| i != 0));
+        assert!(draw.probs.iter().all(|&q| (q - 1.0 / 3.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn default_sample_batch_excludes_per_example_targets() {
+        let s = super::UniformSampler::new(16);
+        let mut rng = Rng::seeded(122);
+        let mut h = Matrix::zeros(3, 2);
+        for b in 0..3 {
+            h.row_mut(b).copy_from_slice(&[b as f32, 1.0]);
+        }
+        let targets = [2u32, 5, 9];
+        let batch = s.sample_batch(&h, &targets, 25, &mut rng);
+        assert_eq!(batch.batch(), 3);
+        assert_eq!(batch.m(), 25);
+        assert_eq!(batch.total(), 75);
+        assert_eq!(batch.flat_ids().len(), 75);
+        for (b, d) in batch.draws.iter().enumerate() {
+            assert_eq!(d.len(), 25);
+            assert!(d.ids.iter().all(|&i| i != targets[b]));
+            // Uniform conditioned on ≠ target: q = (1/16)/(15/16) = 1/15.
+            for &q in &d.probs {
+                assert!((q - 1.0 / 15.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_excluding_covers_all_non_targets() {
+        let mut rng = Rng::seeded(123);
+        let mut seen = [false; 7];
+        for _ in 0..2000 {
+            let i = uniform_excluding(7, 4, &mut rng);
+            assert!(i < 7 && i != 4);
+            seen[i] = true;
+        }
+        for (i, &s) in seen.iter().enumerate() {
+            assert!(s || i == 4, "class {i} never drawn");
+        }
     }
 }

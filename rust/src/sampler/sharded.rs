@@ -1,0 +1,567 @@
+//! Sharded kernel sampling tree — the batch-first scaling layer over the
+//! §3.1 divide-and-conquer structure.
+//!
+//! [`ShardedKernelTree`] partitions the `n` classes into `S` (a power of
+//! two) contiguous shards, each holding its own [`KernelTree`]. Sampling
+//! is two-level:
+//!
+//! * **across shards**: an alias table over the shards' effective root
+//!   masses (`zᵀΣφ` clamped at 0 plus the ε·count floor — the same
+//!   semantics a full tree applies at its root) picks a shard in `O(1)`
+//!   after an `O(S·D)` mass pass shared by all `m` draws;
+//! * **within a shard**: a root→leaf walk of the shard's tree,
+//!   `O(D log(n/S))`.
+//!
+//! The returned probability is exactly `P(shard) · P(i | shard)` of the
+//! procedure that produced the draw, so Σ_i q_i = 1 and the eq.-5
+//! importance weights stay unbiased. The payoff is *write* parallelism:
+//! embedding updates touching disjoint shards commute, so a training
+//! step's batched `update_classes` fans out across shards on scoped
+//! threads instead of serializing `O(D log n)` walks — and per-shard
+//! trees keep update working sets small enough to stay cache-resident.
+//!
+//! Degenerate tail shards with a single class are safe by the
+//! [`KernelTree`] `pad.max(2)` invariant (see `KernelTree::new`).
+
+use super::{KernelTree, NegativeDraw, Sampler};
+use crate::featmap::FeatureMap;
+use crate::linalg::Matrix;
+use crate::rng::{AliasTable, Rng};
+
+/// Two-level (shard → leaf) kernel sampling structure.
+#[derive(Clone, Debug)]
+pub struct ShardedKernelTree {
+    shards: Vec<KernelTree>,
+    /// Classes per shard (last shard may hold fewer).
+    shard_size: usize,
+    n: usize,
+    dim: usize,
+    eps: f64,
+}
+
+impl ShardedKernelTree {
+    /// Empty sharded tree for `n` classes with feature dim `dim`.
+    /// `num_shards` is rounded up to a power of two and clamped to `n`.
+    pub fn new(n: usize, dim: usize, num_shards: usize, eps: f64) -> Self {
+        assert!(n >= 1, "ShardedKernelTree: need at least one class");
+        assert!(dim >= 1);
+        assert!(eps > 0.0, "ShardedKernelTree: eps must be > 0");
+        assert!(num_shards >= 1, "ShardedKernelTree: need ≥ 1 shard");
+        let s = num_shards.next_power_of_two().min(n.next_power_of_two());
+        let shard_size = n.div_ceil(s).max(1);
+        let count = n.div_ceil(shard_size);
+        let shards = (0..count)
+            .map(|i| {
+                let lo = i * shard_size;
+                let hi = ((i + 1) * shard_size).min(n);
+                KernelTree::new(hi - lo, dim, eps)
+            })
+            .collect();
+        Self { shards, shard_size, n, dim, eps }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn eps(&self) -> f64 {
+        self.eps
+    }
+
+    /// Memory footprint of all shard trees' node sums, in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.shards.iter().map(KernelTree::memory_bytes).sum()
+    }
+
+    #[inline]
+    fn shard_of(&self, class: usize) -> (usize, usize) {
+        (class / self.shard_size, class % self.shard_size)
+    }
+
+    /// Add `phi` to class `i`'s leaf (construction-time).
+    pub fn add_leaf(&mut self, i: usize, phi: &[f32]) {
+        self.update_leaf(i, phi);
+    }
+
+    /// Add `delta` to class `i`'s leaf and its shard's ancestor sums.
+    pub fn update_leaf(&mut self, i: usize, delta: &[f32]) {
+        assert!(i < self.n, "update_leaf: class {i} out of range");
+        let (s, local) = self.shard_of(i);
+        self.shards[s].update_leaf(local, delta);
+    }
+
+    /// Apply a batch of leaf deltas. Disjoint shards commute, so touched
+    /// shards are partitioned across at most
+    /// [`crate::exec::recommended_workers`] scoped threads (one thread
+    /// per *group of shards*, not per shard — at 512 shards the spawn
+    /// cost would otherwise dwarf the `O(D log(n/S))` walks). Within a
+    /// shard, application order is the caller's slice order. Small
+    /// batches stay serial.
+    pub fn update_leaves_batch(&mut self, updates: &[(usize, Vec<f32>)]) {
+        if updates.len() < 64 || self.shards.len() < 2 {
+            for (i, delta) in updates {
+                self.update_leaf(*i, delta);
+            }
+            return;
+        }
+        let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (k, (i, _)) in updates.iter().enumerate() {
+            assert!(*i < self.n, "update_leaves_batch: class {i} out of range");
+            per_shard[i / self.shard_size].push(k);
+        }
+        let shard_size = self.shard_size;
+        let mut jobs: Vec<(usize, &mut KernelTree)> = self
+            .shards
+            .iter_mut()
+            .enumerate()
+            .filter(|(s, _)| !per_shard[*s].is_empty())
+            .collect();
+        if jobs.is_empty() {
+            return;
+        }
+        let workers = crate::exec::recommended_workers().min(jobs.len());
+        let chunk = jobs.len().div_ceil(workers);
+        let per_shard = &per_shard;
+        std::thread::scope(|scope| {
+            for group in jobs.chunks_mut(chunk) {
+                scope.spawn(move || {
+                    for (s, tree) in group.iter_mut() {
+                        for &k in &per_shard[*s] {
+                            let (i, delta) = &updates[k];
+                            tree.update_leaf(*i - *s * shard_size, delta);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    /// Effective (clamped + ε·count) root mass of every shard for query
+    /// `z`, plus the total. Always strictly positive per shard.
+    fn shard_weights(&self, z: &[f32]) -> (Vec<f64>, f64) {
+        let mut weights = Vec::with_capacity(self.shards.len());
+        let mut total = 0.0f64;
+        for tree in &self.shards {
+            let w = tree.mass(z).max(0.0)
+                + self.eps * tree.num_classes() as f64;
+            weights.push(w);
+            total += w;
+        }
+        (weights, total)
+    }
+
+    /// Draw one class: `(class, q)` with `q` the exact two-level
+    /// probability. `O(S·D + D log(n/S))`.
+    pub fn sample(&self, z: &[f32], rng: &mut Rng) -> (usize, f64) {
+        debug_assert_eq!(z.len(), self.dim);
+        let (weights, total) = self.shard_weights(z);
+        let s = rng.categorical(&weights);
+        let (local, q_in) = self.shards[s].sample(z, rng);
+        (s * self.shard_size + local, weights[s] / total * q_in)
+    }
+
+    /// Exact probability that sampling returns class `i` for query `z`.
+    pub fn probability(&self, z: &[f32], i: usize) -> f64 {
+        assert!(i < self.n);
+        let (weights, total) = self.shard_weights(z);
+        let (s, local) = self.shard_of(i);
+        weights[s] / total * self.shards[s].probability(z, local)
+    }
+
+    /// Draw `m` classes i.i.d. for one shared query: the shard masses and
+    /// their alias table are computed once (`O(S·D + S)`), then each draw
+    /// is an `O(1)` shard pick plus one within-shard walk.
+    pub fn sample_many(
+        &self,
+        z: &[f32],
+        m: usize,
+        rng: &mut Rng,
+    ) -> (Vec<u32>, Vec<f64>) {
+        let (weights, total) = self.shard_weights(z);
+        let table = AliasTable::new(&weights);
+        let mut ids = Vec::with_capacity(m);
+        let mut probs = Vec::with_capacity(m);
+        for _ in 0..m {
+            let s = table.sample(rng);
+            let (local, q_in) = self.shards[s].sample(z, rng);
+            ids.push((s * self.shard_size + local) as u32);
+            probs.push(weights[s] / total * q_in);
+        }
+        (ids, probs)
+    }
+
+    /// Draw `m` negatives (`≠ target`) with probabilities renormalized by
+    /// `1 − q_target`; mirrors [`KernelTree::sample_negatives`] including
+    /// the never-aborting uniform fallback.
+    pub fn sample_negatives(
+        &self,
+        z: &[f32],
+        target: usize,
+        m: usize,
+        rng: &mut Rng,
+    ) -> (Vec<u32>, Vec<f64>) {
+        assert!(target < self.n, "sample_negatives: target out of range");
+        assert!(
+            self.n > 1,
+            "sample_negatives: need ≥ 2 classes to exclude one"
+        );
+        let q_t = self.probability(z, target);
+        let renorm = (1.0 - q_t).max(f64::MIN_POSITIVE);
+        let mut ids = Vec::with_capacity(m);
+        let mut probs = Vec::with_capacity(m);
+        let mut rounds = 0usize;
+        while ids.len() < m
+            && rounds < super::REJECTION_ROUNDS
+            && q_t < super::DEGENERATE_Q
+        {
+            let (cand, cand_q) = self.sample_many(z, m - ids.len(), rng);
+            for (id, p) in cand.iter().zip(cand_q.iter()) {
+                if *id as usize != target {
+                    ids.push(*id);
+                    probs.push(p / renorm);
+                }
+            }
+            rounds += 1;
+        }
+        while ids.len() < m {
+            ids.push(super::uniform_excluding(self.n, target, rng) as u32);
+            probs.push(1.0 / (self.n - 1) as f64);
+        }
+        (ids, probs)
+    }
+}
+
+/// Kernel sampler over a [`ShardedKernelTree`]: the batch-first sibling
+/// of the unsharded `KernelSampler` behind [`super::RffSampler`]. Holds
+/// no interior mutability, so it is naturally `Send + Sync` and its
+/// batch paths can fan out freely.
+pub struct ShardedKernelSampler<M: FeatureMap> {
+    map: M,
+    tree: ShardedKernelTree,
+    /// Copy of current class embeddings (n × d), for recomputing φ_old.
+    classes: Matrix,
+    name: &'static str,
+}
+
+/// Probability floor per leaf (matches the unsharded samplers).
+const TREE_EPS: f64 = 1e-8;
+
+impl<M: FeatureMap> ShardedKernelSampler<M> {
+    /// Build from normalized class embeddings, partitioning into
+    /// `num_shards` (rounded to a power of two).
+    pub fn with_map(
+        classes: &Matrix,
+        map: M,
+        num_shards: usize,
+        name: &'static str,
+    ) -> Self {
+        let n = classes.rows();
+        let dim = map.output_dim();
+        assert_eq!(
+            classes.cols(),
+            map.input_dim(),
+            "class embedding dim must match feature-map input dim"
+        );
+        let mut tree = ShardedKernelTree::new(n, dim, num_shards, TREE_EPS);
+        let mut phi = vec![0.0f32; dim];
+        for i in 0..n {
+            map.map_into(classes.row(i), &mut phi);
+            tree.add_leaf(i, &phi);
+        }
+        Self { map, tree, classes: classes.clone(), name }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.tree.num_shards()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.tree.memory_bytes()
+            + self.classes.data().len() * std::mem::size_of::<f32>()
+    }
+
+    pub fn feature_map(&self) -> &M {
+        &self.map
+    }
+}
+
+impl<M: FeatureMap> Sampler for ShardedKernelSampler<M> {
+    fn num_classes(&self) -> usize {
+        self.tree.num_classes()
+    }
+
+    fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
+        let z = self.map.map(h);
+        let (ids, probs) = self.tree.sample_many(&z, m, rng);
+        NegativeDraw { ids, probs }
+    }
+
+    fn probability(&self, h: &[f32], class: usize) -> f64 {
+        let z = self.map.map(h);
+        self.tree.probability(&z, class)
+    }
+
+    fn sample_negatives(
+        &self,
+        h: &[f32],
+        target: usize,
+        m: usize,
+        rng: &mut Rng,
+    ) -> NegativeDraw {
+        // Map φ(h) once and run the walk-level primitive (the trait
+        // default would re-map on every rejection round).
+        let z = self.map.map(h);
+        let (ids, probs) = self.tree.sample_negatives(&z, target, m, rng);
+        NegativeDraw { ids, probs }
+    }
+
+    /// Batch draw: one gemm maps every query, then per-example walks fan
+    /// out via [`super::fan_out_draws`] (deterministic in `rng`
+    /// regardless of scheduling).
+    fn sample_batch(
+        &self,
+        h: &Matrix,
+        targets: &[u32],
+        m: usize,
+        rng: &mut Rng,
+    ) -> super::BatchDraw {
+        let bsz = h.rows();
+        assert_eq!(bsz, targets.len(), "sample_batch: batch mismatch");
+        let queries = self.map.map_batch(h);
+        let tree = &self.tree;
+        let draws = super::fan_out_draws(bsz, m, rng, |b, r| {
+            let (ids, probs) =
+                tree.sample_negatives(queries.row(b), targets[b] as usize, m, r);
+            NegativeDraw { ids, probs }
+        });
+        super::BatchDraw { draws }
+    }
+
+    /// Unconditioned batch draw (shared-pool contract): same gemm +
+    /// fan-out, walks via [`ShardedKernelTree::sample_many`].
+    fn sample_batch_shared(
+        &self,
+        h: &Matrix,
+        m: usize,
+        rng: &mut Rng,
+    ) -> super::BatchDraw {
+        let bsz = h.rows();
+        let queries = self.map.map_batch(h);
+        let tree = &self.tree;
+        let draws = super::fan_out_draws(bsz, m, rng, |b, r| {
+            let (ids, probs) = tree.sample_many(queries.row(b), m, r);
+            NegativeDraw { ids, probs }
+        });
+        super::BatchDraw { draws }
+    }
+
+    fn update_class(&mut self, class: usize, embedding: &[f32]) {
+        let phi_old = self.map.map(self.classes.row(class));
+        let mut delta = self.map.map(embedding);
+        for (new, old) in delta.iter_mut().zip(phi_old.iter()) {
+            *new -= old;
+        }
+        self.tree.update_leaf(class, &delta);
+        self.classes.row_mut(class).copy_from_slice(embedding);
+    }
+
+    /// Batched propagation: φ_old and φ_new for every touched class come
+    /// from two gemms, then the leaf deltas apply shard-parallel.
+    fn update_classes(&mut self, classes: &[u32], embeddings: &Matrix) {
+        let k = classes.len();
+        assert_eq!(k, embeddings.rows(), "update_classes: ids/rows mismatch");
+        super::debug_assert_unique(classes);
+        if k == 0 {
+            return;
+        }
+        let d = self.classes.cols();
+        let mut old = Matrix::zeros(k, d);
+        for (r, &c) in classes.iter().enumerate() {
+            old.row_mut(r).copy_from_slice(self.classes.row(c as usize));
+        }
+        let phi_old = self.map.map_batch(&old);
+        let phi_new = self.map.map_batch(embeddings);
+        let updates: Vec<(usize, Vec<f32>)> = (0..k)
+            .map(|r| {
+                let delta: Vec<f32> = phi_new
+                    .row(r)
+                    .iter()
+                    .zip(phi_old.row(r))
+                    .map(|(a, b)| a - b)
+                    .collect();
+                (classes[r] as usize, delta)
+            })
+            .collect();
+        self.tree.update_leaves_batch(&updates);
+        for (r, &c) in classes.iter().enumerate() {
+            self.classes
+                .row_mut(c as usize)
+                .copy_from_slice(embeddings.row(r));
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featmap::RffMap;
+    use crate::linalg::unit_vector;
+
+    fn sharded_rff(
+        n: usize,
+        d: usize,
+        shards: usize,
+        seed: u64,
+    ) -> (Matrix, ShardedKernelSampler<RffMap>) {
+        let mut rng = Rng::seeded(seed);
+        let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+        let map = RffMap::new(d, 64, 2.0, &mut Rng::seeded(seed + 1));
+        let s = ShardedKernelSampler::with_map(&classes, map, shards, "rff-sharded");
+        (classes, s)
+    }
+
+    #[test]
+    fn probabilities_sum_to_one_across_shards() {
+        for &(n, shards) in &[(37usize, 4usize), (64, 8), (5, 8), (100, 1)] {
+            let (_, s) = sharded_rff(n, 8, shards, 200);
+            let mut rng = Rng::seeded(201);
+            let h = unit_vector(&mut rng, 8);
+            let total: f64 = (0..n).map(|i| s.probability(&h, i)).sum();
+            assert!(
+                (total - 1.0).abs() < 1e-6,
+                "n={n} S={shards}: Σq = {total}"
+            );
+        }
+    }
+
+    #[test]
+    fn sample_prob_matches_probability_query() {
+        let (_, s) = sharded_rff(50, 6, 8, 210);
+        let mut rng = Rng::seeded(211);
+        let h = unit_vector(&mut rng, 6);
+        let z = s.feature_map().map(&h);
+        for _ in 0..200 {
+            let (i, q) = s.tree.sample(&z, &mut rng);
+            let q2 = s.tree.probability(&z, i);
+            assert!(i < 50);
+            assert!((q - q2).abs() < 1e-12, "q {q} vs query {q2}");
+        }
+    }
+
+    #[test]
+    fn single_class_tail_shards_never_walk_out_of_bounds() {
+        // n = 5 with 8 requested shards ⇒ shard_size 1: every shard is the
+        // degenerate single-class tree the pad.max(2) invariant protects.
+        let (_, s) = sharded_rff(5, 4, 8, 220);
+        assert_eq!(s.num_shards(), 5);
+        let mut rng = Rng::seeded(221);
+        let h = unit_vector(&mut rng, 4);
+        let draw = s.sample(&h, 500, &mut rng);
+        assert!(draw.ids.iter().all(|&i| (i as usize) < 5));
+        let total: f64 = (0..5).map(|i| s.probability(&h, i)).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empirical_frequency_matches_q() {
+        let (_, s) = sharded_rff(24, 6, 4, 230);
+        let mut rng = Rng::seeded(231);
+        let h = unit_vector(&mut rng, 6);
+        let trials = 100_000;
+        let draw = s.sample(&h, trials, &mut rng);
+        let mut counts = vec![0usize; 24];
+        for &id in &draw.ids {
+            counts[id as usize] += 1;
+        }
+        for i in 0..24 {
+            let q = s.probability(&h, i);
+            let freq = counts[i] as f64 / trials as f64;
+            let sd = (q * (1.0 - q) / trials as f64).sqrt();
+            assert!(
+                (freq - q).abs() < 5.0 * sd + 1e-3,
+                "class {i}: freq {freq:.5} vs q {q:.5}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_update_matches_serial_updates() {
+        // 96 distinct updated classes > the 64-update serial cutoff, so
+        // this exercises the shard-parallel scoped-thread path.
+        let (_, mut a) = sharded_rff(128, 6, 4, 240);
+        let (_, mut b) = sharded_rff(128, 6, 4, 240);
+        let mut rng = Rng::seeded(241);
+        let ids: Vec<u32> = (0..96).map(|i| (i * 4 % 127) as u32).collect();
+        {
+            let set: std::collections::HashSet<_> = ids.iter().collect();
+            assert_eq!(set.len(), ids.len(), "test needs distinct ids");
+        }
+        let mut emb = Matrix::zeros(ids.len(), 6);
+        for r in 0..ids.len() {
+            let e = unit_vector(&mut rng, 6);
+            emb.row_mut(r).copy_from_slice(&e);
+        }
+        a.update_classes(&ids, &emb);
+        for (r, &c) in ids.iter().enumerate() {
+            b.update_class(c as usize, emb.row(r));
+        }
+        let h = unit_vector(&mut rng, 6);
+        for i in 0..128 {
+            let pa = a.probability(&h, i);
+            let pb = b.probability(&h, i);
+            assert!(
+                (pa - pb).abs() < 1e-6 * pa.max(pb).max(1e-9),
+                "class {i}: batched {pa} vs serial {pb}"
+            );
+        }
+    }
+
+    #[test]
+    fn sample_batch_excludes_targets_with_exact_probs() {
+        let (_, s) = sharded_rff(32, 8, 4, 250);
+        let mut rng = Rng::seeded(251);
+        let bsz = 6;
+        let mut h = Matrix::zeros(bsz, 8);
+        for bi in 0..bsz {
+            let v = unit_vector(&mut rng, 8);
+            h.row_mut(bi).copy_from_slice(&v);
+        }
+        let targets: Vec<u32> = (0..bsz as u32).collect();
+        let batch = s.sample_batch(&h, &targets, 30, &mut rng);
+        assert_eq!(batch.batch(), bsz);
+        for (bi, d) in batch.draws.iter().enumerate() {
+            assert_eq!(d.len(), 30);
+            let t = targets[bi] as usize;
+            let q_t = s.probability(h.row(bi), t);
+            for (&id, &q) in d.ids.iter().zip(&d.probs) {
+                assert_ne!(id as usize, t);
+                let want =
+                    s.probability(h.row(bi), id as usize) / (1.0 - q_t);
+                assert!(
+                    (q - want).abs() < 1e-9 * want.max(1e-12),
+                    "example {bi} id {id}: {q} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_scales_with_shard_count() {
+        // More shards ⇒ shallower trees ⇒ fewer internal node sums.
+        let (_, coarse) = sharded_rff(256, 8, 1, 260);
+        let (_, fine) = sharded_rff(256, 8, 16, 260);
+        assert!(fine.memory_bytes() <= coarse.memory_bytes());
+    }
+}

@@ -2,7 +2,7 @@
 //! the two `O(dn)` oracles: the EXP baseline (exact softmax sampling) and
 //! the Gumbel-top-k extension.
 
-use super::{NegativeDraw, Sampler};
+use super::{uniform_excluding, BatchDraw, NegativeDraw, Sampler};
 use crate::linalg::{dot, Matrix};
 use crate::rng::{AliasTable, Rng};
 
@@ -33,6 +33,31 @@ impl Sampler for UniformSampler {
 
     fn probability(&self, _h: &[f32], _class: usize) -> f64 {
         1.0 / self.n as f64
+    }
+
+    /// Batch override: direct uniform-excluding-target draws — exactly
+    /// the conditioned distribution `q/(1 − q_t) = 1/(n−1)`, with no
+    /// rejection loop at all.
+    fn sample_batch(
+        &self,
+        h: &Matrix,
+        targets: &[u32],
+        m: usize,
+        rng: &mut Rng,
+    ) -> BatchDraw {
+        assert_eq!(h.rows(), targets.len(), "sample_batch: batch mismatch");
+        assert!(self.n > 1, "sample_batch: need ≥ 2 classes");
+        let q = 1.0 / (self.n - 1) as f64;
+        let draws = targets
+            .iter()
+            .map(|&t| NegativeDraw {
+                ids: (0..m)
+                    .map(|_| uniform_excluding(self.n, t as usize, rng) as u32)
+                    .collect(),
+                probs: vec![q; m],
+            })
+            .collect();
+        BatchDraw { draws }
     }
 
     fn update_class(&mut self, _class: usize, _embedding: &[f32]) {}
@@ -172,6 +197,56 @@ impl Sampler for ExactSoftmaxSampler {
 
     fn probability(&self, h: &[f32], class: usize) -> f64 {
         self.pmf(h)[class]
+    }
+
+    /// Batch override: all `batch × n` logits from one blocked gemm
+    /// (`H · Cᵀ`), then per example an alias table over the pmf with the
+    /// target zeroed — direct conditioned sampling, no rejection, exact
+    /// `q/(1 − q_t)` probabilities.
+    fn sample_batch(
+        &self,
+        h: &Matrix,
+        targets: &[u32],
+        m: usize,
+        rng: &mut Rng,
+    ) -> BatchDraw {
+        let bsz = h.rows();
+        assert_eq!(bsz, targets.len(), "sample_batch: batch mismatch");
+        assert_eq!(h.cols(), self.classes.cols(), "sample_batch: query dim");
+        let n = self.classes.rows();
+        assert!(n > 1, "sample_batch: need ≥ 2 classes");
+        let scores = h.matmul_nt(&self.classes);
+        let mut draws = Vec::with_capacity(bsz);
+        for b in 0..bsz {
+            // Same f32-multiply-then-cast order as `pmf` for bit parity.
+            let logits: Vec<f64> = scores
+                .row(b)
+                .iter()
+                .map(|&s| (self.tau * s) as f64)
+                .collect();
+            let p = crate::linalg::softmax(&logits);
+            let t = targets[b] as usize;
+            let renorm = 1.0 - p[t];
+            let mut out = NegativeDraw::with_capacity(m);
+            if renorm > 1e-12 {
+                let mut w = p.clone();
+                w[t] = 0.0;
+                let table = AliasTable::new(&w);
+                for _ in 0..m {
+                    let i = table.sample(rng);
+                    out.ids.push(i as u32);
+                    out.probs.push(p[i] / renorm);
+                }
+            } else {
+                // Degenerate: essentially all mass on the target.
+                for _ in 0..m {
+                    out.ids.push(uniform_excluding(n, t, rng) as u32);
+                    out.probs.push(1.0 / (n - 1) as f64);
+                }
+            }
+            draws.push(out);
+        }
+        BatchDraw { draws }
     }
 
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
@@ -349,6 +424,62 @@ mod tests {
             hits > trials * 8 / 10,
             "top class included only {hits}/{trials} times"
         );
+    }
+
+    #[test]
+    fn exact_softmax_batch_matches_conditioned_pmf() {
+        let mut rng = Rng::seeded(119);
+        let n = 25;
+        let d = 6;
+        let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+        let s = ExactSoftmaxSampler::new(&classes, 4.0);
+        let bsz = 3;
+        let mut h = Matrix::zeros(bsz, d);
+        for b in 0..bsz {
+            let v = unit_vector(&mut rng, d);
+            h.row_mut(b).copy_from_slice(&v);
+        }
+        let targets = [0u32, 7, 24];
+        let batch = s.sample_batch(&h, &targets, 60, &mut rng);
+        for (b, draw) in batch.draws.iter().enumerate() {
+            let t = targets[b] as usize;
+            let q_t = s.probability(h.row(b), t);
+            assert_eq!(draw.len(), 60);
+            for (&id, &q) in draw.ids.iter().zip(&draw.probs) {
+                assert_ne!(id as usize, t);
+                let want = s.probability(h.row(b), id as usize) / (1.0 - q_t);
+                assert!(
+                    (q - want).abs() < 1e-9,
+                    "example {b} id {id}: {q} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_batch_is_uniform_excluding_target() {
+        let s = UniformSampler::new(8);
+        let mut rng = Rng::seeded(125);
+        let h = Matrix::zeros(2, 3);
+        let batch = s.sample_batch(&h, &[1, 6], 2000, &mut rng);
+        for (b, &t) in [1u32, 6].iter().enumerate() {
+            let draw = &batch.draws[b];
+            assert!(draw.ids.iter().all(|&i| i != t && i < 8));
+            assert!(draw
+                .probs
+                .iter()
+                .all(|&q| (q - 1.0 / 7.0).abs() < 1e-12));
+            // Every non-target class shows up in 2000 draws.
+            let mut seen = [false; 8];
+            for &i in &draw.ids {
+                seen[i as usize] = true;
+            }
+            assert_eq!(
+                seen.iter().filter(|&&x| x).count(),
+                7,
+                "coverage for target {t}"
+            );
+        }
     }
 
     #[test]

@@ -52,7 +52,19 @@ impl KernelTree {
         assert!(n >= 1, "KernelTree: need at least one class");
         assert!(dim >= 1);
         assert!(eps > 0.0, "KernelTree: eps must be > 0 (Theorem 1 needs q_i > 0)");
+        // Padding invariant: `pad = next_pow2(n).max(2)`. The `.max(2)` is
+        // load-bearing for n = 1 — without it `pad = 1`, `left_sums` is
+        // empty, and the very first walk iteration would index node 1 out
+        // of bounds. With pad = 2 a single-class tree has one internal
+        // node whose right (phantom) child carries zero mass, so the walk
+        // deterministically ends at leaf 0 with q = 1. This is exactly the
+        // degenerate shape [`super::ShardedKernelTree`] produces for its
+        // single-class tail shards.
         let pad = n.next_power_of_two().max(2);
+        debug_assert!(
+            pad >= 2 && pad.is_power_of_two() && pad >= n,
+            "KernelTree: pad invariant violated (n={n}, pad={pad})"
+        );
         Self {
             dim,
             n,
@@ -298,6 +310,51 @@ impl KernelTree {
         (ids, probs)
     }
 
+    /// Draw `m` negatives (`≠ target`) for a pre-mapped query `z`, with
+    /// probabilities renormalized by `1 − q_target` — the walk-level
+    /// primitive behind the batch sampling path (the caller has already
+    /// paid for `φ(h)` once; no re-mapping per draw or per probability).
+    ///
+    /// Uses the same memoized multi-walk as [`KernelTree::sample_many`]
+    /// and the same never-aborting uniform-excluding-target fallback as
+    /// [`crate::sampler::Sampler::sample_negatives`].
+    pub fn sample_negatives(
+        &self,
+        z: &[f32],
+        target: usize,
+        m: usize,
+        rng: &mut Rng,
+    ) -> (Vec<u32>, Vec<f64>) {
+        assert!(target < self.n, "sample_negatives: target out of range");
+        assert!(
+            self.n > 1,
+            "sample_negatives: need ≥ 2 classes to exclude one"
+        );
+        let q_t = self.probability(z, target);
+        let renorm = (1.0 - q_t).max(f64::MIN_POSITIVE);
+        let mut ids = Vec::with_capacity(m);
+        let mut probs = Vec::with_capacity(m);
+        let mut rounds = 0usize;
+        while ids.len() < m
+            && rounds < crate::sampler::REJECTION_ROUNDS
+            && q_t < crate::sampler::DEGENERATE_Q
+        {
+            let (cand, cand_q) = self.sample_many(z, m - ids.len(), rng);
+            for (id, p) in cand.iter().zip(cand_q.iter()) {
+                if *id as usize != target {
+                    ids.push(*id);
+                    probs.push(p / renorm);
+                }
+            }
+            rounds += 1;
+        }
+        while ids.len() < m {
+            ids.push(crate::sampler::uniform_excluding(self.n, target, rng) as u32);
+            probs.push(1.0 / (self.n - 1) as f64);
+        }
+        (ids, probs)
+    }
+
     /// Unmemoized variant of [`KernelTree::sample_many`] (m independent
     /// walks). Kept as the §Perf baseline and for A/B testing.
     pub fn sample_many_nomemo(
@@ -509,6 +566,27 @@ mod tests {
         assert_eq!(ids_a, ids_b);
         for (a, b) in q_a.iter().zip(&q_b) {
             assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn tree_sample_negatives_excludes_and_renormalizes() {
+        let mut rng = Rng::seeded(96);
+        let n = 12;
+        let d = 4;
+        let phis: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.f32() + 0.1).collect())
+            .collect();
+        let z: Vec<f32> = (0..d).map(|_| rng.f32() + 0.1).collect();
+        let tree = build_tree(&phis, 1e-9);
+        let target = 5;
+        let q_t = tree.probability(&z, target);
+        let (ids, probs) = tree.sample_negatives(&z, target, 200, &mut rng);
+        assert_eq!(ids.len(), 200);
+        for (&id, &q) in ids.iter().zip(&probs) {
+            assert_ne!(id as usize, target);
+            let want = tree.probability(&z, id as usize) / (1.0 - q_t);
+            assert!((q - want).abs() < 1e-12, "id {id}: {q} vs {want}");
         }
     }
 

@@ -3,11 +3,12 @@
 //! distribution agreement, and the RF-softmax ↔ softmax approximation
 //! quality that Theorem 2 promises — run at realistic sizes.
 
-use rfsoftmax::featmap::QuadraticMap;
+use rfsoftmax::featmap::{QuadraticMap, RffMap};
 use rfsoftmax::linalg::{dot, softmax, unit_vector, Matrix};
 use rfsoftmax::rng::Rng;
 use rfsoftmax::sampler::{
     BucketKernelSampler, KernelTree, QuadraticSampler, RffSampler, Sampler,
+    ShardedKernelSampler,
 };
 
 fn normalized(rng: &mut Rng, n: usize, d: usize) -> Matrix {
@@ -121,6 +122,135 @@ fn empirical_frequencies_match_probabilities_at_scale() {
         chi2 < bound,
         "χ² = {chi2:.1} over {dof} cells exceeds {bound:.1}"
     );
+}
+
+/// χ² goodness-of-fit of a sampler's `sample_batch` draws against its own
+/// `probability()` claims, per example, conditioned on `≠ target`.
+fn chi2_batch_vs_probability(
+    sampler: &dyn Sampler,
+    h: &Matrix,
+    targets: &[u32],
+    per_call_m: usize,
+    reps: usize,
+    rng: &mut Rng,
+) {
+    let n = sampler.num_classes();
+    let bsz = h.rows();
+    let mut counts = vec![vec![0usize; n]; bsz];
+    for _ in 0..reps {
+        let batch = sampler.sample_batch(h, targets, per_call_m, rng);
+        assert_eq!(batch.batch(), bsz);
+        for (b, draw) in batch.draws.iter().enumerate() {
+            assert_eq!(draw.len(), per_call_m);
+            for &id in &draw.ids {
+                counts[b][id as usize] += 1;
+            }
+        }
+    }
+    let trials = (reps * per_call_m) as f64;
+    for b in 0..bsz {
+        let t = targets[b] as usize;
+        assert_eq!(counts[b][t], 0, "example {b} drew its own target");
+        let q_t = sampler.probability(h.row(b), t);
+        let renorm = 1.0 - q_t;
+        let mut chi2 = 0.0;
+        let mut dof = 0usize;
+        for i in 0..n {
+            if i == t {
+                continue;
+            }
+            let q = sampler.probability(h.row(b), i) / renorm;
+            let e = q * trials;
+            if e >= 5.0 {
+                let o = counts[b][i] as f64;
+                chi2 += (o - e) * (o - e) / e;
+                dof += 1;
+            }
+        }
+        assert!(dof > 5, "example {b}: too few testable cells ({dof})");
+        // χ² concentration: mean ≈ dof, sd ≈ √(2·dof); allow 6σ.
+        let bound = dof as f64 + 6.0 * (2.0 * dof as f64).sqrt();
+        assert!(
+            chi2 < bound,
+            "example {b}: χ² = {chi2:.1} over {dof} cells exceeds {bound:.1}"
+        );
+    }
+}
+
+fn batch_queries(rng: &mut Rng, bsz: usize, d: usize) -> Matrix {
+    let mut h = Matrix::zeros(bsz, d);
+    for b in 0..bsz {
+        let v = unit_vector(rng, d);
+        h.row_mut(b).copy_from_slice(&v);
+    }
+    h
+}
+
+#[test]
+fn batched_rff_draws_match_claimed_probabilities() {
+    // The batch path (gemm φ + parallel fan-out + rejection) must
+    // reproduce probability() per example — χ² at 20k draws/example.
+    let mut rng = Rng::seeded(906);
+    let n = 48;
+    let d = 10;
+    let classes = normalized(&mut rng, n, d);
+    let sampler = RffSampler::new(&classes, 256, 2.0, &mut rng);
+    let h = batch_queries(&mut rng, 4, d);
+    let targets = [0u32, 11, 23, 47];
+    chi2_batch_vs_probability(&sampler, &h, &targets, 50, 400, &mut rng);
+}
+
+#[test]
+fn batched_sharded_draws_match_claimed_probabilities() {
+    let mut rng = Rng::seeded(907);
+    let n = 48;
+    let d = 10;
+    let classes = normalized(&mut rng, n, d);
+    let sampler = ShardedKernelSampler::with_map(
+        &classes,
+        RffMap::new(d, 256, 2.0, &mut Rng::seeded(908)),
+        8,
+        "rff-sharded",
+    );
+    let h = batch_queries(&mut rng, 4, d);
+    let targets = [3u32, 17, 29, 41];
+    chi2_batch_vs_probability(&sampler, &h, &targets, 50, 400, &mut rng);
+}
+
+#[test]
+fn sharded_probabilities_are_exact_over_all_classes() {
+    // Exactness: the two-level (shard → leaf) probabilities form a true
+    // pmf — Σ_i q_i = 1 — for shard counts spanning degenerate
+    // single-class tails through a monolithic single shard.
+    let mut rng = Rng::seeded(909);
+    let n = 321; // non-power-of-two, exercises ragged tail shards
+    let d = 12;
+    let classes = normalized(&mut rng, n, d);
+    let h = unit_vector(&mut rng, d);
+    for &shards in &[1usize, 2, 8, 64, 512] {
+        let s = ShardedKernelSampler::with_map(
+            &classes,
+            RffMap::new(d, 64, 2.0, &mut Rng::seeded(910)),
+            shards,
+            "rff-sharded",
+        );
+        let total: f64 = (0..n).map(|i| s.probability(&h, i)).sum();
+        assert!(
+            (total - 1.0).abs() < 1e-6,
+            "S={shards}: Σq = {total}"
+        );
+        // And the sharded q agrees with itself under sampling: each
+        // draw's reported probability equals the probability query.
+        let mut r = Rng::seeded(911);
+        let draw = s.sample(&h, 64, &mut r);
+        for (&id, &q) in draw.ids.iter().zip(&draw.probs) {
+            let want = s.probability(&h, id as usize);
+            assert!(
+                (q - want).abs() < 1e-12,
+                "S={shards} id {id}: {q} vs {want}"
+            );
+        }
+    }
 }
 
 #[test]
