@@ -1,0 +1,77 @@
+//! Serving-subsystem benchmark: closed-loop throughput and latency of the
+//! epoch-versioned `SamplerServer` + request micro-batcher, under live
+//! writer churn — the perf trajectory of the serving path, alongside
+//! `perf_hotpath`'s training-path lines.
+//!
+//! Covers `{rff, rff-sharded} × {1, 4, 8}` reader threads and emits one
+//! `BENCH {json}` record per cell with qps, p50/p99 latency (µs), mean
+//! coalesced batch size, published epochs, and swap-stall count.
+//!
+//! Run: `cargo bench --bench perf_serving`
+
+use rfsoftmax::benchkit::bench_header;
+use rfsoftmax::featmap::RffMap;
+use rfsoftmax::linalg::Matrix;
+use rfsoftmax::rng::Rng;
+use rfsoftmax::sampler::{RffSampler, Sampler, ShardedKernelSampler};
+use rfsoftmax::serving::{run_closed_loop, BatcherOptions, LoadSpec};
+use std::time::Duration;
+
+fn main() {
+    bench_header("SERVE", "serving subsystem closed-loop load (L3.5)");
+    let n = 20_000;
+    let d = 64;
+    let num_freqs = 128;
+    let m = 20;
+    let mut rng = Rng::seeded(1);
+    let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+
+    let samplers: Vec<(&str, Box<dyn Sampler>)> = vec![
+        (
+            "rff",
+            Box::new(RffSampler::new(&classes, num_freqs, 4.0, &mut rng)),
+        ),
+        (
+            "rff-sharded",
+            Box::new(ShardedKernelSampler::with_map(
+                &classes,
+                RffMap::new(d, num_freqs, 4.0, &mut Rng::seeded(2)),
+                8,
+                "rff-sharded",
+            )),
+        ),
+    ];
+
+    println!(
+        "\n# closed loop: n={n} d={d} D={num_freqs} m={m}, writer swaps \
+         every 32 updates"
+    );
+    for (label, sampler) in &samplers {
+        for &readers in &[1usize, 4, 8] {
+            let spec = LoadSpec {
+                readers,
+                // Keep total work comparable across thread counts.
+                requests_per_reader: 4000 / readers,
+                m,
+                dim: d,
+                seed: 7,
+                // Natural batching (no artificial wait): with closed-loop
+                // readers, any positive max_wait would dominate the
+                // measured latency instead of the sampler.
+                batcher: BatcherOptions {
+                    max_batch: 32,
+                    max_wait: Duration::ZERO,
+                },
+                updates_per_swap: 32,
+                swap_pause: Duration::from_micros(200),
+            };
+            match run_closed_loop(sampler.as_ref(), &spec) {
+                Ok(report) => {
+                    println!("{}", report.render());
+                    println!("BENCH {}", report.to_json());
+                }
+                Err(e) => println!("{label}: SKIP ({e})"),
+            }
+        }
+    }
+}

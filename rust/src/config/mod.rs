@@ -211,6 +211,39 @@ impl Default for SamplerConfig {
     }
 }
 
+/// Online-serving subsystem parameters (`rust/src/serving`).
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// Double-buffered async class updates in the trainers: stage
+    /// `update_classes` into a shadow sampler on a writer thread
+    /// (overlapping the step's loss execution) and swap the snapshot at
+    /// the next step boundary — the ROADMAP "async double-buffered tree
+    /// updates" item. Always *distribution*-identical to synchronous
+    /// mode, and draw-*stream*-identical when the sampler's `fork` is an
+    /// exact clone (sharded kernel trees, static samplers); the
+    /// unsharded kernel samplers fork onto a 1-shard sharded tree whose
+    /// walk consumes RNG differently, so their streams diverge even
+    /// though the distribution does not. Off by default so the
+    /// single-threaded path stays the reference. Requires a sampler that
+    /// supports serving forks (all kernel and static samplers; not the
+    /// bucket fallback).
+    pub double_buffer: bool,
+    /// Micro-batcher: max requests coalesced into one serving batch.
+    pub max_batch: usize,
+    /// Micro-batcher: max extra wait for a batch to fill, in
+    /// microseconds. `0` (the default) serves whatever has queued as
+    /// soon as the batcher is free — coalescing still emerges under load
+    /// because requests accumulate while a batch is being served —
+    /// without taxing every light-load request with an artificial delay.
+    pub max_wait_us: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self { double_buffer: false, max_batch: 32, max_wait_us: 0 }
+    }
+}
+
 /// Optimizer selection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OptimizerKind {
@@ -334,6 +367,7 @@ impl Default for DataConfig {
 pub struct Config {
     pub model: ModelConfig,
     pub sampler: SamplerConfig,
+    pub serving: ServingConfig,
     pub train: TrainConfig,
     pub data: DataConfig,
 }
@@ -466,6 +500,12 @@ impl Config {
             "sampler.shards" => self.sampler.shards = us(key, v)?,
             "sampler.seed" => self.sampler.seed = u64v(key, v)?,
 
+            "serving.double_buffer" => {
+                self.serving.double_buffer = boolean(key, v)?
+            }
+            "serving.max_batch" => self.serving.max_batch = us(key, v)?,
+            "serving.max_wait_us" => self.serving.max_wait_us = u64v(key, v)?,
+
             "train.batch_size" => self.train.batch_size = us(key, v)?,
             "train.steps" => self.train.steps = us(key, v)?,
             "train.lr" => self.train.lr = f32v(key, v)?,
@@ -526,6 +566,9 @@ impl Config {
         {
             return Err(ConfigError("sampler.dim must be > 0 for rff".into()));
         }
+        if self.serving.max_batch == 0 {
+            return Err(ConfigError("serving.max_batch must be > 0".into()));
+        }
         if self.train.batch_size == 0 {
             return Err(ConfigError("train.batch_size must be > 0".into()));
         }
@@ -568,6 +611,14 @@ impl Config {
                     ),
                     ("shards", Json::from(self.sampler.shards)),
                     ("seed", Json::from(self.sampler.seed as usize)),
+                ]),
+            ),
+            (
+                "serving",
+                Json::obj(vec![
+                    ("double_buffer", Json::from(self.serving.double_buffer)),
+                    ("max_batch", Json::from(self.serving.max_batch)),
+                    ("max_wait_us", Json::from(self.serving.max_wait_us as usize)),
                 ]),
             ),
             (
@@ -637,6 +688,26 @@ mod tests {
         assert!((c.model.tau - 4.0).abs() < 1e-5);
         c.set("sampler.T", "0.5").unwrap();
         assert!((c.sampler.nu - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn serving_keys_round_trip() {
+        let mut c = Config::default();
+        assert!(!c.serving.double_buffer);
+        c.set("serving.double_buffer", "true").unwrap();
+        c.set("serving.max_batch", "64").unwrap();
+        c.set("serving.max_wait_us", "500").unwrap();
+        assert!(c.serving.double_buffer);
+        assert_eq!(c.serving.max_batch, 64);
+        assert_eq!(c.serving.max_wait_us, 500);
+        let j = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&j).unwrap();
+        assert!(c2.serving.double_buffer);
+        assert_eq!(c2.serving.max_batch, 64);
+        assert_eq!(c2.serving.max_wait_us, 500);
+        c.serving.max_batch = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

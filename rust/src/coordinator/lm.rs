@@ -135,11 +135,18 @@ impl<'rt> LmTrainer<'rt> {
                 cfg.sampler.num_negatives,
                 shapes.m
             );
-            Some(SamplerService::new(
-                sampler,
-                shapes.m,
-                Rng::seeded(cfg.sampler.seed),
-            ))
+            let svc_rng = Rng::seeded(cfg.sampler.seed);
+            // serving.double_buffer stages each step's update_classes
+            // into a shadow sampler on a writer thread so the tree
+            // refresh overlaps the step; the swap lands before the next
+            // draw (see rust/src/serving). Distribution-identical to the
+            // synchronous path (and stream-identical when the sampler's
+            // fork is exact, e.g. sharded trees).
+            Some(if cfg.serving.double_buffer {
+                SamplerService::new_double_buffered(sampler, shapes.m, svc_rng)?
+            } else {
+                SamplerService::new(sampler, shapes.m, svc_rng)
+            })
         };
 
         let optimizer = Optimizer::from_config(&cfg.train);
@@ -249,6 +256,9 @@ impl<'rt> LmTrainer<'rt> {
             "pipeline_consumer_stalls",
             stats.consumer_stalls.load(std::sync::atomic::Ordering::Relaxed),
         );
+        if let Some(svc) = &self.service {
+            svc.record_serving_metrics(&mut self.metrics);
+        }
 
         if let Some(dir) = self.cfg.train.checkpoint_dir.clone() {
             std::fs::create_dir_all(&dir)

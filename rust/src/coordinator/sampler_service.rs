@@ -9,10 +9,11 @@ use crate::featmap::{OrfMap, RffMap, SorfMap};
 use crate::linalg::{l2_normalize, Matrix};
 use crate::rng::Rng;
 use crate::sampler::{
-    AliasSampler, ExactSoftmaxSampler, GumbelTopKSampler, LogUniformSampler,
-    NegativeDraw, QuadraticSampler, RffSampler, Sampler, ShardedKernelSampler,
-    UniformSampler,
+    AliasSampler, ExactSoftmaxSampler, GumbelTopKSampler, KernelTree,
+    LogUniformSampler, NegativeDraw, QuadraticSampler, RffSampler, Sampler,
+    ShardedKernelSampler, UniformSampler,
 };
+use crate::serving::{DoubleBufferedSampler, ServingStats};
 use anyhow::{bail, Result};
 
 /// Build a sampler from config. `classes` must hold the *normalized*
@@ -29,27 +30,33 @@ pub fn build_sampler(
     Ok(match s.kind {
         // `sampler.shards > 1` routes RF-softmax onto the two-level
         // sharded tree: same distribution family, parallel batched
-        // updates across disjoint shards.
-        SamplerKind::Rff if s.shards > 1 => {
+        // updates across disjoint shards. `serving.double_buffer` forces
+        // the sharded representation too (1 shard when unsharded was
+        // requested): its serving fork is an allocation-level exact
+        // clone, so the double buffer costs a memcpy instead of an
+        // O(n·cost(φ)) tree rebuild and keeps draw streams exact.
+        SamplerKind::Rff if s.shards > 1 || cfg.serving.double_buffer => {
             let d = classes.cols();
+            let shards = s.shards.max(1);
+            let multi = s.shards > 1;
             match s.feature_map {
                 FeatureMapKind::Rff => Box::new(ShardedKernelSampler::with_map(
                     classes,
                     RffMap::new(d, s.dim, s.nu, rng),
-                    s.shards,
-                    "rff-sharded",
+                    shards,
+                    if multi { "rff-sharded" } else { "rff" },
                 )),
                 FeatureMapKind::Orf => Box::new(ShardedKernelSampler::with_map(
                     classes,
                     OrfMap::new(d, s.dim, s.nu, rng),
-                    s.shards,
-                    "rff-orf-sharded",
+                    shards,
+                    if multi { "rff-orf-sharded" } else { "rff-orf" },
                 )),
                 FeatureMapKind::Sorf => Box::new(ShardedKernelSampler::with_map(
                     classes,
                     SorfMap::new(d, s.dim, s.nu, rng),
-                    s.shards,
-                    "rff-sorf-sharded",
+                    shards,
+                    if multi { "rff-sorf-sharded" } else { "rff-sorf" },
                 )),
             }
         }
@@ -65,22 +72,37 @@ pub fn build_sampler(
             // cost O(n·d²) floats; above ~2 GB fall back to the bounded
             // two-level bucket sampler (exact for the quadratic kernel).
             // Sharding does not reduce the O(n·D) node sums, so the
-            // memory fallback takes priority over `sampler.shards`.
+            // memory fallback takes priority over `sampler.shards`. The
+            // estimate comes from the tree's own accounting (plus the
+            // sampler's n×d class copy), so the threshold tracks the
+            // actual storage type instead of a hardcoded element size.
+            // Double-buffered serving keeps two full sampler copies
+            // alive (published snapshot + shadow) and holds a third
+            // transiently while forking at construction, so the budget
+            // is charged per copy. (The bucket fallback does not support
+            // serving forks; hitting it with serving.double_buffer set
+            // surfaces as a clear construction error.)
             let d = classes.cols();
             let dim = d * d + 1;
-            let tree_bytes = 2 * n.next_power_of_two() * dim * 4;
+            let per_copy = KernelTree::estimate_bytes(n, dim)
+                + n * d * std::mem::size_of::<f32>();
+            let copies = if cfg.serving.double_buffer { 3 } else { 1 };
+            let tree_bytes = per_copy * copies;
             if tree_bytes > 2 << 30 {
                 let map =
                     crate::featmap::QuadraticMap::new(d, s.alpha, 1.0);
                 Box::new(crate::sampler::BucketKernelSampler::with_map(
                     classes, map, 1024, "quadratic",
                 ))
-            } else if s.shards > 1 {
+            } else if s.shards > 1 || cfg.serving.double_buffer {
+                // Same serving rationale as the Rff arm: the sharded
+                // representation's fork is a memcpy clone, so the double
+                // buffer skips a second O(n·d²) tree rebuild.
                 Box::new(ShardedKernelSampler::with_map(
                     classes,
                     crate::featmap::QuadraticMap::new(d, s.alpha, 1.0),
-                    s.shards,
-                    "quadratic-sharded",
+                    s.shards.max(1),
+                    if s.shards > 1 { "quadratic-sharded" } else { "quadratic" },
                 ))
             } else {
                 Box::new(QuadraticSampler::new(classes, s.alpha, 1.0))
@@ -119,33 +141,127 @@ pub struct NegativePack {
 
 /// Wraps a sampler with query normalization, packaging and class-update
 /// propagation. Owns the per-run RNG stream for sampling.
+///
+/// Two backends share the same API and serve the same distribution (the
+/// draw *streams* also match whenever the sampler's `fork` is an exact
+/// clone — sharded kernel trees, static samplers — while unsharded
+/// kernel samplers fork onto a 1-shard sharded tree that consumes RNG
+/// differently):
+///
+/// * **direct** ([`SamplerService::new`]): the sampler is owned inline
+///   and `update_classes` applies synchronously (the single-threaded
+///   reference path);
+/// * **double-buffered** ([`SamplerService::new_double_buffered`]):
+///   draws run against a pinned [`crate::serving`] snapshot,
+///   `update_classes` stages into the server's shadow on a writer
+///   thread (overlapping the caller's next phase), and the snapshot
+///   swap is forced at the next draw — so no draw ever sees a stale
+///   epoch.
 pub struct SamplerService {
-    sampler: Box<dyn Sampler>,
+    backend: Backend,
     pub m: usize,
     rng: Rng,
+    /// Reusable normalized-query scratch: `draw_batch` copies the owner
+    /// rows here and normalizes in place instead of cloning the full
+    /// query matrix every step.
+    scratch: Matrix,
+}
+
+enum Backend {
+    Direct(Box<dyn Sampler>),
+    Served(DoubleBufferedSampler),
 }
 
 impl SamplerService {
     pub fn new(sampler: Box<dyn Sampler>, m: usize, rng: Rng) -> Self {
         assert!(m > 0);
-        Self { sampler, m, rng }
+        Self {
+            backend: Backend::Direct(sampler),
+            m,
+            rng,
+            scratch: Matrix::zeros(0, 0),
+        }
+    }
+
+    /// Double-buffered serving mode (ROADMAP: async double-buffered tree
+    /// updates). Fails if the sampler does not support serving forks.
+    pub fn new_double_buffered(
+        sampler: Box<dyn Sampler>,
+        m: usize,
+        rng: Rng,
+    ) -> Result<Self> {
+        assert!(m > 0);
+        let served = DoubleBufferedSampler::new(sampler.as_ref())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "sampler '{}' does not support serving forks \
+                     (serving.double_buffer)",
+                    sampler.name()
+                )
+            })?;
+        Ok(Self {
+            backend: Backend::Served(served),
+            m,
+            rng,
+            scratch: Matrix::zeros(0, 0),
+        })
     }
 
     pub fn name(&self) -> &'static str {
-        self.sampler.name()
+        self.sampler().name()
     }
 
     pub fn num_classes(&self) -> usize {
-        self.sampler.num_classes()
+        self.sampler().num_classes()
+    }
+
+    /// Whether updates are double-buffered through the serving layer.
+    pub fn is_double_buffered(&self) -> bool {
+        matches!(self.backend, Backend::Served(_))
+    }
+
+    /// Serving counters (double-buffered mode only).
+    pub fn serving_stats(&self) -> Option<ServingStats> {
+        match &self.backend {
+            Backend::Direct(_) => None,
+            Backend::Served(db) => Some(db.stats()),
+        }
+    }
+
+    /// Fold the serving counters into a run's metrics (no-op in direct
+    /// mode) — shared by both trainers so the metric names can't drift.
+    pub fn record_serving_metrics(&self, metrics: &mut crate::metrics::Metrics) {
+        if let Some(st) = self.serving_stats() {
+            metrics.incr("serving_publishes", st.publishes);
+            metrics.incr("serving_swap_stalls", st.swap_stalls);
+            // Non-overlapped remainder of the staged tree refreshes.
+            metrics.record_duration(
+                "serving_publish_wait",
+                std::time::Duration::from_nanos(st.publish_wait_ns),
+            );
+        }
+    }
+
+    /// Step boundary for the served backend: make sure every staged
+    /// update is published before the next draw. No-op in direct mode or
+    /// when nothing was staged.
+    fn sync_serving(&mut self) {
+        if let Backend::Served(db) = &mut self.backend {
+            db.sync();
+        }
     }
 
     /// Draw the step's shared negatives for query `h` (any scale; it is
     /// normalized here) and package adjustments + masks against the
     /// batch's targets.
     pub fn draw(&mut self, h: &[f32], targets: &[u32]) -> NegativePack {
+        self.sync_serving();
         let mut q = h.to_vec();
         l2_normalize(&mut q);
-        let draw: NegativeDraw = self.sampler.sample(&q, self.m, &mut self.rng);
+        let draw: NegativeDraw = match &self.backend {
+            Backend::Direct(s) => s.sample(&q, self.m, &mut self.rng),
+            Backend::Served(db) => db.sampler().sample(&q, self.m, &mut self.rng),
+        };
         self.package(draw, targets)
     }
 
@@ -169,20 +285,29 @@ impl SamplerService {
         let bsz = h_rows.rows();
         assert!(bsz > 0, "draw_batch: empty query pool");
         assert!(!targets.is_empty(), "draw_batch: empty targets");
+        self.sync_serving();
         let owners = bsz.min(self.m).max(1);
-        let mut q = if owners == bsz {
-            h_rows.clone()
-        } else {
-            let d = h_rows.cols();
-            let mut sub = Matrix::zeros(owners, d);
-            for b in 0..owners {
-                sub.row_mut(b).copy_from_slice(h_rows.row(b));
-            }
-            sub
-        };
-        q.normalize_rows_in_place();
+        let d = h_rows.cols();
+        // Normalize the owner rows into the reusable scratch matrix (no
+        // per-step clone of the full query matrix).
+        if self.scratch.rows() != owners || self.scratch.cols() != d {
+            self.scratch = Matrix::zeros(owners, d);
+        }
+        for b in 0..owners {
+            self.scratch.row_mut(b).copy_from_slice(h_rows.row(b));
+        }
+        self.scratch.normalize_rows_in_place();
         let per_owner = self.m.div_ceil(owners);
-        let batch = self.sampler.sample_batch_shared(&q, per_owner, &mut self.rng);
+        let batch = match &self.backend {
+            Backend::Direct(s) => {
+                s.sample_batch_shared(&self.scratch, per_owner, &mut self.rng)
+            }
+            Backend::Served(db) => db.sampler().sample_batch_shared(
+                &self.scratch,
+                per_owner,
+                &mut self.rng,
+            ),
+        };
         // Interleave slot ownership draw-index-major so truncation to m
         // keeps owner coverage balanced.
         let mut ids = Vec::with_capacity(self.m);
@@ -221,18 +346,29 @@ impl SamplerService {
     }
 
     /// Propagate an updated class embedding (normalized here) into the
-    /// sampler's structure — `O(D log n)` for the kernel tree.
+    /// sampler's structure — `O(D log n)` for the kernel tree. In
+    /// double-buffered mode the update is staged asynchronously and
+    /// becomes visible at the next draw.
     pub fn update_class(&mut self, class: usize, embedding: &[f32]) {
         let mut e = embedding.to_vec();
         l2_normalize(&mut e);
-        self.sampler.update_class(class, &e);
+        match &mut self.backend {
+            Backend::Direct(s) => s.update_class(class, &e),
+            Backend::Served(db) => {
+                let d = e.len();
+                db.stage_updates(vec![class as u32], Matrix::from_vec(1, d, e));
+            }
+        }
     }
 
     /// Batched propagation of one step's touched classes: rows of
     /// `embeddings` (normalized here) replace classes `rows[k]`. Kernel
     /// samplers recompute φ for the whole batch in two gemms; the sharded
     /// sampler additionally applies disjoint shards in parallel. Ids must
-    /// be unique (gradient aggregation guarantees this).
+    /// be unique (gradient aggregation guarantees this). In
+    /// double-buffered mode the batch is staged into the serving shadow
+    /// and the tree refresh overlaps the caller's next phase; the swap
+    /// lands before the next draw.
     pub fn update_classes(&mut self, rows: &[usize], embeddings: &Matrix) {
         assert_eq!(rows.len(), embeddings.rows(), "update_classes: mismatch");
         if rows.is_empty() {
@@ -241,12 +377,20 @@ impl SamplerService {
         let mut normed = embeddings.clone();
         normed.normalize_rows_in_place();
         let ids: Vec<u32> = rows.iter().map(|&r| r as u32).collect();
-        self.sampler.update_classes(&ids, &normed);
+        match &mut self.backend {
+            Backend::Direct(s) => s.update_classes(&ids, &normed),
+            Backend::Served(db) => db.stage_updates(ids, normed),
+        }
     }
 
-    /// Direct access for diagnostics (bias harness, tests).
+    /// Direct access for diagnostics (bias harness, tests). In
+    /// double-buffered mode this is the *pinned snapshot* — stable until
+    /// the next draw publishes staged updates.
     pub fn sampler(&self) -> &dyn Sampler {
-        self.sampler.as_ref()
+        match &self.backend {
+            Backend::Direct(s) => s.as_ref(),
+            Backend::Served(db) => db.sampler(),
+        }
     }
 }
 
@@ -387,6 +531,104 @@ mod tests {
         emb.row_mut(1).copy_from_slice(&other);
         svc.update_classes(&[2, 7], &emb);
         assert!(svc.sampler().probability(&h, 2) > before);
+    }
+
+    #[test]
+    fn double_buffered_service_matches_direct_stream_for_sharded_rff() {
+        // The sharded sampler's fork is stream-exact, so with identical
+        // seeds the served backend must reproduce the direct backend's
+        // draws bit-for-bit — any stale-epoch read (an update staged but
+        // not published before the next draw) would diverge the ids.
+        let mut rng = Rng::seeded(900);
+        let d = 8;
+        let classes = Matrix::randn(&mut rng, 64, d).l2_normalized_rows();
+        let build = || {
+            let map = crate::featmap::RffMap::new(d, 32, 2.0, &mut Rng::seeded(901));
+            Box::new(ShardedKernelSampler::with_map(
+                &classes, map, 4, "rff-sharded",
+            )) as Box<dyn Sampler>
+        };
+        let m = 10;
+        let mut direct = SamplerService::new(build(), m, Rng::seeded(902));
+        let mut served =
+            SamplerService::new_double_buffered(build(), m, Rng::seeded(902))
+                .unwrap();
+        assert!(served.is_double_buffered());
+        assert!(!direct.is_double_buffered());
+
+        let mut data_rng = Rng::seeded(903);
+        for step in 1..=5u64 {
+            let mut h = Matrix::zeros(6, d);
+            for b in 0..6 {
+                let v = unit_vector(&mut data_rng, d);
+                h.row_mut(b).copy_from_slice(&v);
+            }
+            let targets: Vec<u32> = (0..6).collect();
+            let pd = direct.draw_batch(&h, &targets);
+            let ps = served.draw_batch(&h, &targets);
+            assert_eq!(pd.ids, ps.ids, "step {step}: draw streams diverged");
+            assert_eq!(pd.adjust, ps.adjust, "step {step}: adjustments");
+            assert_eq!(pd.mask, ps.mask, "step {step}: masks");
+
+            // Stage the same updates into both backends.
+            let rows: Vec<usize> = vec![step as usize, 32 + step as usize];
+            let mut emb = Matrix::zeros(2, d);
+            for r in 0..2 {
+                let v = unit_vector(&mut data_rng, d);
+                emb.row_mut(r).copy_from_slice(&v);
+            }
+            direct.update_classes(&rows, &emb);
+            served.update_classes(&rows, &emb);
+        }
+        // One publish per step (each draw after staged updates swaps).
+        let final_h = Matrix::zeros(1, d);
+        let _ = served.draw_batch(&final_h, &[0]);
+        let stats = served.serving_stats().unwrap();
+        assert_eq!(stats.publishes, 5);
+        assert_eq!(stats.epoch, 5);
+        assert_eq!(stats.swap_stalls, 0);
+        assert!(direct.serving_stats().is_none());
+    }
+
+    #[test]
+    fn draw_batch_reuses_scratch_without_cloning() {
+        let mut svc = service(40, 6);
+        let mut h = Matrix::zeros(4, 3);
+        for b in 0..4 {
+            h.row_mut(b).copy_from_slice(&[b as f32 + 1.0, 0.0, 2.0]);
+        }
+        let targets = [0u32, 1, 2, 3];
+        let p1 = svc.draw_batch(&h, &targets);
+        assert_eq!(svc.scratch.rows(), 4);
+        assert_eq!(svc.scratch.cols(), 3);
+        // Scratch rows are the normalized queries.
+        for b in 0..4 {
+            let n: f32 =
+                svc.scratch.row(b).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5, "row {b} norm {n}");
+        }
+        // Same-shape second call reuses the buffer; owner-capped call
+        // (bsz > m) resizes to m rows.
+        let _ = svc.draw_batch(&h, &targets);
+        assert_eq!(svc.scratch.rows(), 4);
+        let big = Matrix::zeros(20, 3);
+        let big_targets: Vec<u32> = (0..20).collect();
+        let p2 = svc.draw_batch(&big, &big_targets);
+        assert_eq!(svc.scratch.rows(), 6); // owners = min(bsz, m)
+        assert_eq!(p1.ids.len(), 6);
+        assert_eq!(p2.ids.len(), 6);
+        assert_eq!(p2.mask.len(), 20 * 6);
+    }
+
+    #[test]
+    fn quadratic_memory_estimate_tracks_tree_accounting() {
+        // The fallback threshold derives from KernelTree::estimate_bytes;
+        // for a buildable size the estimate must equal the real tree.
+        let n = 500;
+        let d = 8;
+        let dim = d * d + 1;
+        let tree = KernelTree::new(n, dim, 1e-8);
+        assert_eq!(KernelTree::estimate_bytes(n, dim), tree.memory_bytes());
     }
 
     #[test]

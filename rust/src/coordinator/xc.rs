@@ -117,11 +117,15 @@ impl<'rt> XcTrainer<'rt> {
                 .l2_normalized_rows();
             let prior = data.class_prior();
             let sampler = build_sampler(&cfg, &normalized, Some(&prior), &mut rng)?;
-            Some(SamplerService::new(
-                sampler,
-                shapes.m,
-                Rng::seeded(cfg.sampler.seed),
-            ))
+            let svc_rng = Rng::seeded(cfg.sampler.seed);
+            // serving.double_buffer overlaps tree refresh with the step
+            // (see rust/src/serving); distribution-identical to the
+            // synchronous path (stream-exact for exact forks).
+            Some(if cfg.serving.double_buffer {
+                SamplerService::new_double_buffered(sampler, shapes.m, svc_rng)?
+            } else {
+                SamplerService::new(sampler, shapes.m, svc_rng)
+            })
         };
 
         let optimizer = Optimizer::from_config(&cfg.train);
@@ -200,6 +204,10 @@ impl<'rt> XcTrainer<'rt> {
                 self.metrics.observe("prec_at_3", p3);
                 self.metrics.observe("prec_at_5", p5);
             }
+        }
+
+        if let Some(svc) = &self.service {
+            svc.record_serving_metrics(&mut self.metrics);
         }
 
         let last = history.last().cloned().unwrap_or(EvalPoint {

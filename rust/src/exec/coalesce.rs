@@ -1,0 +1,183 @@
+//! Request-coalescing queue — the exec-substrate front end of the
+//! serving micro-batcher (`rust/src/serving/batcher.rs`).
+//!
+//! Many producer threads `push` items; one consumer repeatedly calls
+//! [`CoalesceQueue::drain_batch`], which blocks until at least one item
+//! is available and then keeps collecting until either `max_batch` items
+//! are in hand or `max_wait` has elapsed since the drain started — the
+//! standard latency/throughput coalescing trade-off, bounded on both
+//! axes. Built on `Mutex` + `Condvar` (std-only, like the rest of
+//! [`crate::exec`]).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded-latency batching queue (multi-producer, single-consumer).
+pub struct CoalesceQueue<T> {
+    state: Mutex<QueueState<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for CoalesceQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> CoalesceQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue one item. Returns `false` (dropping the item) if the
+    /// queue has been closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Block until at least one item arrives (or the queue closes), then
+    /// collect until `max_batch` items are in hand or `max_wait` elapses.
+    /// Returns `None` only when the queue is closed *and* empty — the
+    /// consumer's shutdown signal; items pushed before `close` are still
+    /// drained.
+    pub fn drain_batch(
+        &self,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> Option<Vec<T>> {
+        assert!(max_batch >= 1, "drain_batch: max_batch must be ≥ 1");
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.items.is_empty() {
+                break;
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        let deadline = Instant::now() + max_wait;
+        while st.items.len() < max_batch && !st.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) =
+                self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = st.items.len().min(max_batch);
+        Some(st.items.drain(..take).collect())
+    }
+
+    /// Close the queue: future pushes are refused, blocked drains wake.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn drains_everything_up_to_max_batch() {
+        let q = CoalesceQueue::new();
+        for i in 0..10 {
+            assert!(q.push(i));
+        }
+        let b1 = q.drain_batch(4, Duration::from_millis(1)).unwrap();
+        assert_eq!(b1, vec![0, 1, 2, 3]);
+        let b2 = q.drain_batch(100, Duration::from_millis(1)).unwrap();
+        assert_eq!(b2, vec![4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn drain_blocks_until_item_arrives() {
+        let q = Arc::new(CoalesceQueue::new());
+        let qc = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            qc.push(42u32);
+        });
+        let batch = q.drain_batch(8, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch, vec![42]);
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn close_wakes_blocked_drain_and_refuses_pushes() {
+        let q = Arc::new(CoalesceQueue::<u32>::new());
+        let qc = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || {
+            qc.drain_batch(8, Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(consumer.join().unwrap().is_none());
+        assert!(!q.push(1));
+    }
+
+    #[test]
+    fn items_before_close_still_drain() {
+        let q = CoalesceQueue::new();
+        q.push(7u32);
+        q.close();
+        assert_eq!(q.drain_batch(8, Duration::from_millis(1)), Some(vec![7]));
+        assert_eq!(q.drain_batch(8, Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn concurrent_producers_lose_nothing() {
+        let q = Arc::new(CoalesceQueue::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let qc = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    assert!(qc.push(t * 100 + i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = Vec::new();
+        while got.len() < 400 {
+            got.extend(q.drain_batch(64, Duration::from_millis(1)).unwrap());
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..400).collect::<Vec<_>>());
+    }
+}

@@ -1,14 +1,17 @@
-//! Execution substrate: thread pool, bounded channels, and the
+//! Execution substrate: thread pool, bounded channels, the
 //! double-buffered prefetch pipeline the coordinator uses to overlap
-//! negative sampling (L3) with PJRT execution (runtime).
+//! negative sampling (L3) with PJRT execution (runtime), and the
+//! [`CoalesceQueue`] front end the serving micro-batcher drains.
 //!
 //! tokio is unavailable offline (DESIGN.md §2); the coordinator's
 //! concurrency needs are CPU-bound fan-out + a bounded producer/consumer
 //! pipeline, which std threads model directly and predictably.
 
+mod coalesce;
 mod pipeline;
 mod pool;
 
+pub use coalesce::CoalesceQueue;
 pub use pipeline::{Prefetcher, PipelineStats};
 pub use pool::ThreadPool;
 

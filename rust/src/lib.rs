@@ -12,12 +12,22 @@
 //! softmax distribution `p_i ∝ exp(τ hᵀc_i)` while costing only
 //! `O(D log n)` per sample via a divide-and-conquer tree (paper §3.1).
 //!
-//! ## Architecture (three layers, batch-first)
+//! ## Architecture (batch-first layers)
 //!
 //! * **L3 (this crate)** — the coordinator: a **batch-first sampling
 //!   pipeline** (kernel trees + baselines), training event loop,
 //!   parameter store + optimizers, synthetic-data substrates, metrics,
 //!   CLI.
+//! * **L3.5 ([`serving`])** — the online serving subsystem:
+//!   [`serving::SamplerServer`] publishes epoch-versioned immutable
+//!   sampler snapshots behind an O(1) atomic swap so many reader threads
+//!   serve `sample`/`probability`/`top_k` while a single writer applies
+//!   batched class updates to a double-buffered shadow;
+//!   [`serving::MicroBatcher`] coalesces concurrent requests into one
+//!   `map_batch` gemm + fanned-out walks. The trainers route
+//!   `update_classes` through the same machinery when
+//!   `serving.double_buffer` is set, overlapping tree refresh with the
+//!   step's loss execution.
 //! * **L2 (JAX, build time)** — model fwd/bwd (`python/compile/model.py`),
 //!   AOT-lowered to HLO text once by `make artifacts`.
 //! * **L1 (Pallas, build time)** — the RFF feature-map and fused
@@ -83,12 +93,28 @@
 //! );
 //! let draw = sharded.sample_batch(&queries, &targets, 10, &mut rng);
 //! assert_eq!(draw.total(), 80);
+//!
+//! // Online serving: epoch-versioned snapshots + request micro-batching.
+//! // Readers pin immutable snapshots (never blocking on the writer);
+//! // the writer refreshes a shadow copy and publishes with an O(1) swap.
+//! let (server, mut writer) = SamplerServer::new(sharded.fork().unwrap());
+//! let batcher = MicroBatcher::spawn(server.clone(), BatcherOptions::default());
+//! let reply = batcher.sample(queries.row(0), 10, /*seed=*/ 7);
+//! assert_eq!(reply.epoch, 0);
+//! let top = server.top_k(queries.row(0), 5); // best-first tree search
+//! assert_eq!(top.len(), 5);
+//! let mut emb = Matrix::zeros(1, 32);
+//! emb.row_mut(0).copy_from_slice(queries.row(1));
+//! writer.apply_updates(vec![3], emb); // shadow only — readers unaffected
+//! assert_eq!(writer.publish(), 1);    // atomic epoch-tagged swap
+//! assert_eq!(server.epoch(), 1);
 //! ```
 //!
 //! See `examples/` for end-to-end training drivers and `rust/benches/` for
 //! the harnesses that regenerate every table and figure of the paper
-//! (plus `perf_hotpath` for the batch-vs-scalar sampling throughput
-//! trajectory).
+//! (plus `perf_hotpath` / `perf_serving` for the hot-path and serving
+//! throughput trajectories, and `rfsoftmax serve-bench` for a closed-loop
+//! load test from the CLI).
 
 pub mod benchkit;
 pub mod bias;
@@ -108,6 +134,7 @@ pub mod propkit;
 pub mod rng;
 pub mod runtime;
 pub mod sampler;
+pub mod serving;
 pub mod softmax;
 pub mod tables;
 
@@ -124,8 +151,12 @@ pub mod prelude {
     pub use crate::sampler::{
         AliasSampler, BatchDraw, BucketKernelSampler, ExactSoftmaxSampler,
         GumbelTopKSampler, KernelTree, LogUniformSampler, NegativeDraw,
-        QuadraticSampler, RffSampler, Sampler, ShardedKernelSampler,
-        ShardedKernelTree, UniformSampler,
+        QuadraticSampler, RffSampler, Sampler, ServeSampler,
+        ShardedKernelSampler, ShardedKernelTree, UniformSampler,
+    };
+    pub use crate::serving::{
+        BatcherOptions, DoubleBufferedSampler, MicroBatcher, SamplerServer,
+        SamplerSnapshot, SamplerWriter, ServeReply,
     };
     pub use crate::softmax::{
         full_softmax_loss, sampled_softmax_loss, SampledLoss,

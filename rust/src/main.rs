@@ -5,6 +5,7 @@
 //! rfsoftmax info                       # list compiled artifacts
 //! rfsoftmax sample --sampler.kind rff  # standalone sampling demo
 //! rfsoftmax bias --sampler.kind uniform
+//! rfsoftmax serve-bench --threads 8 --sampler.shards 8  # serving load test
 //! ```
 
 use anyhow::{bail, Result};
@@ -36,11 +37,14 @@ fn dispatch(args: &[String]) -> Result<()> {
         "info" => cmd_info(rest),
         "sample" => cmd_sample(rest),
         "bias" => cmd_bias(rest),
+        "serve-bench" => cmd_serve_bench(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
         }
-        other => bail!("unknown command '{other}' (try: train, info, sample, bias)"),
+        other => bail!(
+            "unknown command '{other}' (try: train, info, sample, bias, serve-bench)"
+        ),
     }
 }
 
@@ -48,10 +52,11 @@ fn print_usage() {
     println!(
         "rfsoftmax — Sampled Softmax with Random Fourier Features (NeurIPS 2019)\n\n\
          Commands:\n  \
-         train   train a model with a configured negative sampler\n  \
-         info    list compiled AOT artifacts\n  \
-         sample  standalone sampling demo (no artifacts needed)\n  \
-         bias    gradient-bias diagnostic (Theorem 1 empirics)\n\n\
+         train        train a model with a configured negative sampler\n  \
+         info         list compiled AOT artifacts\n  \
+         sample       standalone sampling demo (no artifacts needed)\n  \
+         bias         gradient-bias diagnostic (Theorem 1 empirics)\n  \
+         serve-bench  closed-loop load test of the serving subsystem\n\n\
          Run `rfsoftmax <command> --help` for flags."
     );
 }
@@ -169,6 +174,100 @@ fn cmd_sample(raw: &[String]) -> Result<()> {
     for (id, q) in draw.ids.iter().zip(&draw.probs).take(10) {
         println!("  class {id:>6}  q = {q:.3e}");
     }
+    Ok(())
+}
+
+/// Closed-loop serving load generator: R reader threads issuing `sample`
+/// requests through the micro-batcher while a writer applies batched
+/// class updates and publishes epoch-tagged snapshot swaps. Emits a
+/// human-readable summary plus a machine-readable `BENCH {json}` line
+/// (qps, p50/p99 latency, coalescing, swap stalls).
+fn cmd_serve_bench(raw: &[String]) -> Result<()> {
+    let a = Args::parse(raw, &["help", "no-writer"])?;
+    if a.has("help") {
+        println!(
+            "{}",
+            render_help(
+                "serve-bench",
+                "closed-loop load test of the serving subsystem (no artifacts needed)",
+                &[
+                    FlagSpec {
+                        name: "threads",
+                        help: "concurrent reader threads",
+                        default: Some("4".into()),
+                    },
+                    FlagSpec {
+                        name: "requests",
+                        help: "requests per reader",
+                        default: Some("2000".into()),
+                    },
+                    FlagSpec {
+                        name: "updates-per-swap",
+                        help: "classes updated per writer publish cycle",
+                        default: Some("32".into()),
+                    },
+                    FlagSpec {
+                        name: "no-writer",
+                        help: "serve a static snapshot (no update churn)",
+                        default: None,
+                    },
+                    FlagSpec {
+                        name: "config",
+                        help: "JSON config file",
+                        default: None,
+                    },
+                    FlagSpec {
+                        name: "<section>.<key>",
+                        help: "any config override, e.g. --sampler.shards 8",
+                        default: None,
+                    },
+                ]
+            )
+        );
+        return Ok(());
+    }
+    let cfg = Config::load(a.get("config"), split_config_overrides(&a).into_iter())?;
+    let threads = a.usize_or("threads", 4)?;
+    let requests = a.usize_or("requests", 2000)?;
+    let updates_per_swap = if a.has("no-writer") {
+        0
+    } else {
+        a.usize_or("updates-per-swap", 32)?
+    };
+    let n = cfg.model.num_classes.min(50_000);
+    let d = cfg.model.embed_dim.min(128);
+    let mut rng = Rng::seeded(cfg.sampler.seed);
+    let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+    let sampler = rfsoftmax::coordinator::build_sampler(
+        &cfg,
+        &classes,
+        Some(&vec![1.0; n]),
+        &mut rng,
+    )?;
+    let spec = rfsoftmax::serving::LoadSpec {
+        readers: threads,
+        requests_per_reader: requests,
+        m: cfg.sampler.num_negatives,
+        dim: d,
+        seed: cfg.sampler.seed,
+        batcher: rfsoftmax::serving::BatcherOptions {
+            max_batch: cfg.serving.max_batch,
+            max_wait: std::time::Duration::from_micros(cfg.serving.max_wait_us),
+        },
+        updates_per_swap,
+        swap_pause: std::time::Duration::from_micros(200),
+    };
+    println!(
+        "serve-bench: sampler={} n={n} d={d} m={} readers={threads} \
+         requests/reader={requests} max_batch={} max_wait={}µs",
+        sampler.name(),
+        spec.m,
+        cfg.serving.max_batch,
+        cfg.serving.max_wait_us,
+    );
+    let report = rfsoftmax::serving::run_closed_loop(sampler.as_ref(), &spec)?;
+    println!("{}", report.render());
+    println!("BENCH {}", report.to_json());
     Ok(())
 }
 

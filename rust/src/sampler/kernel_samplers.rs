@@ -6,7 +6,7 @@
 //! memory at `O(nD)` node sums instead of additionally storing every leaf
 //! feature vector), and (c) reusable query scratch.
 
-use super::{BatchDraw, KernelTree, NegativeDraw, Sampler};
+use super::{BatchDraw, KernelTree, NegativeDraw, Sampler, ServeSampler};
 use crate::config::FeatureMapKind;
 use crate::featmap::{FeatureMap, OrfMap, QuadraticMap, RffMap, SorfMap};
 use crate::linalg::Matrix;
@@ -88,7 +88,7 @@ impl<M: FeatureMap> KernelSampler<M> {
     }
 }
 
-impl<M: FeatureMap> Sampler for KernelSampler<M> {
+impl<M: FeatureMap + Clone + 'static> Sampler for KernelSampler<M> {
     fn num_classes(&self) -> usize {
         self.tree.num_classes()
     }
@@ -160,6 +160,49 @@ impl<M: FeatureMap> Sampler for KernelSampler<M> {
             NegativeDraw { ids, probs }
         });
         BatchDraw { draws }
+    }
+
+    /// Serving batch entry: one `map_batch` gemm, then per-row walks via
+    /// [`super::fan_out_serve`] on per-seed RNG streams (no scratch
+    /// `RefCell` on this path, so it is safe regardless of how the
+    /// caller fans rows out).
+    fn serve_batch(
+        &self,
+        h: &Matrix,
+        ms: &[usize],
+        seeds: &[u64],
+    ) -> Vec<NegativeDraw> {
+        assert_eq!(h.rows(), ms.len(), "serve_batch: ms mismatch");
+        assert_eq!(h.rows(), seeds.len(), "serve_batch: seeds mismatch");
+        let queries = self.map.map_batch(h);
+        let tree = &self.tree;
+        super::fan_out_serve(ms, seeds, |b, rng| {
+            let (ids, probs) = tree.sample_many(queries.row(b), ms[b], rng);
+            NegativeDraw { ids, probs }
+        })
+    }
+
+    fn top_k(&self, h: &[f32], k: usize) -> Vec<(u32, f64)> {
+        // No scratch borrow: top_k is a serving-path query and must stay
+        // usable while other threads hold the forked snapshot.
+        let z = self.map.map(h);
+        self.tree.top_k(&z, k)
+    }
+
+    /// Serving fork: this sampler's `RefCell` scratch makes it `!Sync`,
+    /// so the fork rebuilds the same distribution on the naturally-`Sync`
+    /// single-shard [`super::ShardedKernelSampler`] (identical tree
+    /// semantics — a one-shard pick is a no-op — and the same `TREE_EPS`
+    /// floor). Note the fork's *draw stream* differs from the unsharded
+    /// walk (the shard pick consumes RNG) even though the distribution
+    /// is identical. `O(n · cost(φ))`, paid once at server construction.
+    fn fork(&self) -> Option<Box<dyn ServeSampler>> {
+        Some(Box::new(super::ShardedKernelSampler::with_map(
+            &self.classes,
+            self.map.clone(),
+            1,
+            self.name,
+        )))
     }
 
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
@@ -341,6 +384,23 @@ impl Sampler for RffSampler {
         self.inner().sample_batch_shared(h, m, rng)
     }
 
+    fn serve_batch(
+        &self,
+        h: &Matrix,
+        ms: &[usize],
+        seeds: &[u64],
+    ) -> Vec<NegativeDraw> {
+        self.inner().serve_batch(h, ms, seeds)
+    }
+
+    fn top_k(&self, h: &[f32], k: usize) -> Vec<(u32, f64)> {
+        self.inner().top_k(h, k)
+    }
+
+    fn fork(&self) -> Option<Box<dyn ServeSampler>> {
+        self.inner().fork()
+    }
+
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
         self.inner_mut().update_class(class, embedding)
     }
@@ -412,6 +472,23 @@ impl Sampler for QuadraticSampler {
         rng: &mut Rng,
     ) -> BatchDraw {
         self.inner.sample_batch_shared(h, m, rng)
+    }
+
+    fn serve_batch(
+        &self,
+        h: &Matrix,
+        ms: &[usize],
+        seeds: &[u64],
+    ) -> Vec<NegativeDraw> {
+        self.inner.serve_batch(h, ms, seeds)
+    }
+
+    fn top_k(&self, h: &[f32], k: usize) -> Vec<(u32, f64)> {
+        self.inner.top_k(h, k)
+    }
+
+    fn fork(&self) -> Option<Box<dyn ServeSampler>> {
+        self.inner.fork()
     }
 
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
@@ -608,6 +685,60 @@ mod tests {
             assert!(
                 (pa - pb).abs() < 1e-7 * pa.max(pb).max(1e-9),
                 "class {i}: {pa} vs {pb}"
+            );
+        }
+    }
+
+    #[test]
+    fn fork_of_unsharded_rff_preserves_distribution() {
+        let mut rng = Rng::seeded(109);
+        let classes = normalized_classes(&mut rng, 30, 8);
+        let mut sampler = RffSampler::new(&classes, 64, 2.0, &mut rng);
+        let mut fork = sampler.fork().expect("rff sampler must fork");
+        assert_eq!(fork.name(), "rff");
+        let h = unit_vector(&mut rng, 8);
+        for i in 0..30 {
+            let a = sampler.probability(&h, i);
+            let b = fork.probability(&h, i);
+            assert!(
+                (a - b).abs() < 1e-12 * a.max(b).max(1e-12),
+                "class {i}: {a} vs {b}"
+            );
+        }
+        // The fork keeps tracking updates exactly like the original.
+        let e = unit_vector(&mut rng, 8);
+        sampler.update_class(4, &e);
+        fork.update_class(4, &e);
+        for i in 0..30 {
+            let a = sampler.probability(&h, i);
+            let b = fork.probability(&h, i);
+            assert!(
+                (a - b).abs() < 1e-9 * a.max(b).max(1e-12),
+                "post-update class {i}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn top_k_matches_probability_ranking() {
+        let mut rng = Rng::seeded(110);
+        let classes = normalized_classes(&mut rng, 40, 6);
+        let sampler = RffSampler::new(&classes, 64, 2.0, &mut rng);
+        let h = unit_vector(&mut rng, 6);
+        let got = sampler.top_k(&h, 6);
+        let mut brute: Vec<(u32, f64)> = (0..40)
+            .map(|i| (i as u32, sampler.probability(&h, i)))
+            .collect();
+        brute.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        assert_eq!(got.len(), 6);
+        for (j, ((gi, gq), (bi, bq))) in got.iter().zip(&brute).enumerate() {
+            assert!(
+                (gq - bq).abs() < 1e-12 * bq.max(1e-12),
+                "rank {j}: q {gq} vs {bq}"
+            );
+            assert!(
+                gi == bi || (gq - bq).abs() < 1e-15,
+                "rank {j}: id {gi} vs {bi}"
             );
         }
     }

@@ -89,6 +89,39 @@ pub(crate) fn fan_out_draws(
     }
 }
 
+/// Shared fan-out for the serving batch path ([`Sampler::serve_batch`]
+/// overrides): row `b` draws on an RNG stream derived only from
+/// `seeds[b]`, so results depend on nothing but (seed, sampler state) —
+/// not batch composition or thread schedule.
+///
+/// The parallel cutoff is higher than [`fan_out_draws`]'s: this sits on
+/// the micro-batcher's latency-critical path and `parallel_map` spawns
+/// scoped OS threads per call, so small coalesced batches stay serial —
+/// the spawn cost would dominate their `O(D log n)` walks. (Routing
+/// serving fan-outs through a persistent worker pool is a ROADMAP item.)
+pub(crate) fn fan_out_serve(
+    ms: &[usize],
+    seeds: &[u64],
+    draw: impl Fn(usize, &mut Rng) -> NegativeDraw + Sync,
+) -> Vec<NegativeDraw> {
+    let bsz = ms.len();
+    debug_assert_eq!(bsz, seeds.len());
+    if bsz == 0 {
+        return Vec::new();
+    }
+    let run = |b: usize| {
+        let mut rng = Rng::seeded(seeds[b]);
+        draw(b, &mut rng)
+    };
+    let total: usize = ms.iter().sum();
+    let workers = crate::exec::recommended_workers().min(bsz);
+    if workers > 1 && bsz > 1 && total >= 256 {
+        crate::exec::parallel_map(bsz, workers, run)
+    } else {
+        (0..bsz).map(run).collect()
+    }
+}
+
 /// Debug-build check that a batched-update id list is duplicate-free
 /// (duplicates would make φ_old-based delta computation corrupt tree
 /// sums; the serial trait default is the only duplicate-safe path).
@@ -260,6 +293,52 @@ pub trait Sampler: Send {
         BatchDraw { draws }
     }
 
+    /// Serving batch entry ([`crate::serving`] micro-batcher): row `b` of
+    /// `h` draws `ms[b]` classes i.i.d. from `q(· | h_b)` with exact
+    /// unconditioned probabilities, using an RNG stream derived *only*
+    /// from `seeds[b]`. Because no randomness is shared across rows, a
+    /// request's draw depends on nothing but its seed and the sampler
+    /// state — not on which other requests it was coalesced with or on
+    /// thread scheduling. Kernel samplers override with one `map_batch`
+    /// gemm plus fanned-out tree walks.
+    fn serve_batch(
+        &self,
+        h: &Matrix,
+        ms: &[usize],
+        seeds: &[u64],
+    ) -> Vec<NegativeDraw> {
+        assert_eq!(h.rows(), ms.len(), "serve_batch: ms mismatch");
+        assert_eq!(h.rows(), seeds.len(), "serve_batch: seeds mismatch");
+        (0..h.rows())
+            .map(|b| {
+                let mut rng = Rng::seeded(seeds[b]);
+                self.sample(h.row(b), ms[b], &mut rng)
+            })
+            .collect()
+    }
+
+    /// The `k` most probable classes under `q(· | h)`, descending (ties
+    /// broken by class id). Default scans all `n` probabilities; kernel
+    /// samplers override with a best-first tree search.
+    fn top_k(&self, h: &[f32], k: usize) -> Vec<(u32, f64)> {
+        let n = self.num_classes();
+        let k = k.min(n);
+        let mut all: Vec<(u32, f64)> =
+            (0..n).map(|i| (i as u32, self.probability(h, i))).collect();
+        all.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        all.truncate(k);
+        all
+    }
+
+    /// Deep-copy this sampler into an independently owned, thread-shareable
+    /// copy — the [`crate::serving`] snapshot/shadow hook. The fork must
+    /// reproduce the same distribution `q(· | h)` as `self` and keep
+    /// tracking it under subsequent `update_classes` calls. Returns `None`
+    /// for samplers that cannot be served (the default).
+    fn fork(&self) -> Option<Box<dyn ServeSampler>> {
+        None
+    }
+
     /// Propagate an updated class embedding into the sampler's state
     /// (no-op for input-independent samplers).
     fn update_class(&mut self, class: usize, embedding: &[f32]);
@@ -282,6 +361,23 @@ pub trait Sampler: Send {
 
     /// Human-readable name (matches the paper's method labels).
     fn name(&self) -> &'static str;
+}
+
+/// A sampler whose shared state may be read from many threads at once —
+/// what the [`crate::serving`] layer stores inside its snapshots. The
+/// blanket impl covers every `Sampler + Sync` type; `!Sync` samplers
+/// (e.g. the scratch-caching unsharded kernel sampler) instead `fork`
+/// into an equivalent `Sync` representation.
+pub trait ServeSampler: Sampler + Sync {
+    /// View as a plain `&dyn Sampler` (kept explicit so the crate does
+    /// not depend on trait-object upcasting).
+    fn as_sampler(&self) -> &dyn Sampler;
+}
+
+impl<T: Sampler + Sync> ServeSampler for T {
+    fn as_sampler(&self) -> &dyn Sampler {
+        self
+    }
 }
 
 #[cfg(test)]

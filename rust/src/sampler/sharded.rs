@@ -81,6 +81,28 @@ impl ShardedKernelTree {
         self.shards.iter().map(KernelTree::memory_bytes).sum()
     }
 
+    /// Same shard layout as `other` (copyable in place).
+    pub fn same_shape(&self, other: &ShardedKernelTree) -> bool {
+        self.n == other.n
+            && self.dim == other.dim
+            && self.shard_size == other.shard_size
+            && self.shards.len() == other.shards.len()
+    }
+
+    /// Copy another sharded tree's node sums into this one without
+    /// reallocating — in-place state restoration for callers managing
+    /// their own spare tree allocations (external double-buffer or
+    /// checkpoint-restore schemes; the in-crate serving writer instead
+    /// recycles whole snapshots via `Arc::try_unwrap`). Layouts must
+    /// match (see [`ShardedKernelTree::same_shape`]).
+    pub fn copy_state_from(&mut self, src: &ShardedKernelTree) {
+        assert!(self.same_shape(src), "copy_state_from: layout mismatch");
+        for (dst, s) in self.shards.iter_mut().zip(&src.shards) {
+            dst.copy_state_from(s);
+        }
+        self.eps = src.eps;
+    }
+
     #[inline]
     fn shard_of(&self, class: usize) -> (usize, usize) {
         (class / self.shard_size, class % self.shard_size)
@@ -198,6 +220,34 @@ impl ShardedKernelTree {
         (ids, probs)
     }
 
+    /// The `k` most probable classes for query `z`, descending. Exact:
+    /// the top `k` of the union is contained in the union of per-shard
+    /// top `k`s, each scaled by its shard's selection probability.
+    /// `O(S · (D + k·D log(n/S)))`.
+    pub fn top_k(&self, z: &[f32], k: usize) -> Vec<(u32, f64)> {
+        let k = k.min(self.n);
+        if k == 0 {
+            return Vec::new();
+        }
+        let (weights, total) = self.shard_weights(z);
+        let mut all: Vec<(u32, f64)> = Vec::with_capacity(self.shards.len() * k);
+        for (s, tree) in self.shards.iter().enumerate() {
+            let frac = weights[s] / total;
+            if frac <= 0.0 {
+                continue;
+            }
+            for (local, q) in tree.top_k(z, k) {
+                all.push((
+                    (s * self.shard_size + local as usize) as u32,
+                    frac * q,
+                ));
+            }
+        }
+        all.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        all.truncate(k);
+        all
+    }
+
     /// Draw `m` negatives (`≠ target`) with probabilities renormalized by
     /// `1 − q_target`; mirrors [`KernelTree::sample_negatives`] including
     /// the never-aborting uniform fallback.
@@ -242,7 +292,9 @@ impl ShardedKernelTree {
 /// Kernel sampler over a [`ShardedKernelTree`]: the batch-first sibling
 /// of the unsharded `KernelSampler` behind [`super::RffSampler`]. Holds
 /// no interior mutability, so it is naturally `Send + Sync` and its
-/// batch paths can fan out freely.
+/// batch paths can fan out freely; `Clone` is what makes its serving
+/// fork stream-exact.
+#[derive(Clone)]
 pub struct ShardedKernelSampler<M: FeatureMap> {
     map: M,
     tree: ShardedKernelTree,
@@ -293,7 +345,7 @@ impl<M: FeatureMap> ShardedKernelSampler<M> {
     }
 }
 
-impl<M: FeatureMap> Sampler for ShardedKernelSampler<M> {
+impl<M: FeatureMap + Clone + 'static> Sampler for ShardedKernelSampler<M> {
     fn num_classes(&self) -> usize {
         self.tree.num_classes()
     }
@@ -361,6 +413,37 @@ impl<M: FeatureMap> Sampler for ShardedKernelSampler<M> {
             NegativeDraw { ids, probs }
         });
         super::BatchDraw { draws }
+    }
+
+    /// Serving batch entry: one gemm maps every query, then each row's
+    /// walks run via [`super::fan_out_serve`] on an RNG stream derived
+    /// only from its own seed — draws are independent of batch
+    /// composition and thread schedule.
+    fn serve_batch(
+        &self,
+        h: &Matrix,
+        ms: &[usize],
+        seeds: &[u64],
+    ) -> Vec<NegativeDraw> {
+        assert_eq!(h.rows(), ms.len(), "serve_batch: ms mismatch");
+        assert_eq!(h.rows(), seeds.len(), "serve_batch: seeds mismatch");
+        let queries = self.map.map_batch(h);
+        let tree = &self.tree;
+        super::fan_out_serve(ms, seeds, |b, rng| {
+            let (ids, probs) = tree.sample_many(queries.row(b), ms[b], rng);
+            NegativeDraw { ids, probs }
+        })
+    }
+
+    fn top_k(&self, h: &[f32], k: usize) -> Vec<(u32, f64)> {
+        let z = self.map.map(h);
+        self.tree.top_k(&z, k)
+    }
+
+    /// Serving fork: a deep copy — this sampler has no interior
+    /// mutability, so the clone is `Sync` and stream-exact.
+    fn fork(&self) -> Option<Box<dyn super::ServeSampler>> {
+        Some(Box::new(self.clone()))
     }
 
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
@@ -554,6 +637,104 @@ mod tests {
                     "example {bi} id {id}: {q} vs {want}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn top_k_matches_probability_ranking_across_shards() {
+        let (_, s) = sharded_rff(47, 6, 4, 270);
+        let mut rng = Rng::seeded(271);
+        let h = unit_vector(&mut rng, 6);
+        let got = s.top_k(&h, 8);
+        let mut brute: Vec<(u32, f64)> =
+            (0..47).map(|i| (i as u32, s.probability(&h, i))).collect();
+        brute.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        assert_eq!(got.len(), 8);
+        for (j, ((gi, gq), (bi, bq))) in got.iter().zip(&brute).enumerate() {
+            assert!(
+                (gq - bq).abs() < 1e-12 * bq.max(1e-12),
+                "rank {j}: q {gq} vs {bq}"
+            );
+            assert!(
+                gi == bi || (gq - bq).abs() < 1e-15,
+                "rank {j}: id {gi} vs {bi}"
+            );
+        }
+    }
+
+    #[test]
+    fn serve_batch_is_seed_deterministic_across_compositions() {
+        let (_, s) = sharded_rff(64, 8, 4, 280);
+        let mut rng = Rng::seeded(281);
+        let mut h = Matrix::zeros(5, 8);
+        for b in 0..5 {
+            let v = unit_vector(&mut rng, 8);
+            h.row_mut(b).copy_from_slice(&v);
+        }
+        let seeds = [11u64, 22, 33, 44, 55];
+        let full = s.serve_batch(&h, &[7; 5], &seeds);
+        // Re-serve row 3 alone with its seed: identical draw.
+        let mut solo = Matrix::zeros(1, 8);
+        solo.row_mut(0).copy_from_slice(h.row(3));
+        let alone = s.serve_batch(&solo, &[7], &[seeds[3]]);
+        assert_eq!(full[3], alone[0]);
+        // Claimed probabilities are the exact unconditioned q.
+        for (b, d) in full.iter().enumerate() {
+            for (&id, &q) in d.ids.iter().zip(&d.probs) {
+                let want = s.probability(h.row(b), id as usize);
+                assert!(
+                    (q - want).abs() < 1e-12 * want.max(1e-12),
+                    "row {b} id {id}: {q} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fork_is_stream_exact_and_tracks_updates() {
+        let (_, mut original) = sharded_rff(96, 6, 4, 290);
+        let mut forked = original.fork().expect("sharded sampler must fork");
+        let mut rng = Rng::seeded(291);
+        let h = unit_vector(&mut rng, 6);
+        // Identical draws from identical streams (deep copy, not a view).
+        let a = original.sample(&h, 50, &mut Rng::seeded(77));
+        let b = forked.sample(&h, 50, &mut Rng::seeded(77));
+        assert_eq!(a, b);
+        // Updates to one side leave the other untouched...
+        let ids: Vec<u32> = (0..20).map(|i| i * 4).collect();
+        let mut emb = Matrix::zeros(ids.len(), 6);
+        for r in 0..ids.len() {
+            let e = unit_vector(&mut rng, 6);
+            emb.row_mut(r).copy_from_slice(&e);
+        }
+        let before = forked.probability(&h, 0);
+        original.update_classes(&ids, &emb);
+        assert_eq!(forked.probability(&h, 0), before);
+        // ...and applying the same updates reconverges exactly.
+        forked.update_classes(&ids, &emb);
+        for i in 0..96 {
+            let pa = original.probability(&h, i);
+            let pb = forked.probability(&h, i);
+            assert!(
+                (pa - pb).abs() < 1e-12 * pa.max(pb).max(1e-12),
+                "class {i}: {pa} vs {pb}"
+            );
+        }
+    }
+
+    #[test]
+    fn copy_state_from_replicates_sharded_distribution() {
+        let (_, a) = sharded_rff(40, 6, 4, 300);
+        let (_, mut b) = sharded_rff(40, 6, 4, 301); // same layout, other state
+        // Restore a's tree state into b's allocations (maps must match
+        // for the *distribution* to match; copy the map explicitly as an
+        // external buffer manager would).
+        b.tree.copy_state_from(&a.tree);
+        let mut rng = Rng::seeded(302);
+        let h = unit_vector(&mut rng, 6);
+        let za = a.feature_map().map(&h);
+        for i in 0..40 {
+            assert_eq!(a.tree.probability(&za, i), b.tree.probability(&za, i));
         }
     }
 

@@ -2,11 +2,12 @@
 //! the two `O(dn)` oracles: the EXP baseline (exact softmax sampling) and
 //! the Gumbel-top-k extension.
 
-use super::{uniform_excluding, BatchDraw, NegativeDraw, Sampler};
+use super::{uniform_excluding, BatchDraw, NegativeDraw, Sampler, ServeSampler};
 use crate::linalg::{dot, Matrix};
 use crate::rng::{AliasTable, Rng};
 
 /// UNIFORM baseline: `q_i = 1/n`, `O(1)` per draw.
+#[derive(Clone)]
 pub struct UniformSampler {
     n: usize,
 }
@@ -62,6 +63,10 @@ impl Sampler for UniformSampler {
 
     fn update_class(&mut self, _class: usize, _embedding: &[f32]) {}
 
+    fn fork(&self) -> Option<Box<dyn ServeSampler>> {
+        Some(Box::new(self.clone()))
+    }
+
     fn name(&self) -> &'static str {
         "uniform"
     }
@@ -71,6 +76,7 @@ impl Sampler for UniformSampler {
 /// sampler: `P(k) = log((k+2)/(k+1)) / log(n+1)`. Assumes class ids are
 /// ordered by decreasing frequency (true for our synthetic corpora).
 /// Sampling is `O(1)` by analytic inverse CDF.
+#[derive(Clone)]
 pub struct LogUniformSampler {
     n: usize,
     log_n1: f64,
@@ -108,6 +114,10 @@ impl Sampler for LogUniformSampler {
 
     fn update_class(&mut self, _class: usize, _embedding: &[f32]) {}
 
+    fn fork(&self) -> Option<Box<dyn ServeSampler>> {
+        Some(Box::new(self.clone()))
+    }
+
     fn name(&self) -> &'static str {
         "loguniform"
     }
@@ -115,6 +125,7 @@ impl Sampler for LogUniformSampler {
 
 /// Static prior over classes (e.g. the empirical unigram distribution)
 /// via a Walker alias table: `O(1)` per draw.
+#[derive(Clone)]
 pub struct AliasSampler {
     table: AliasTable,
 }
@@ -146,6 +157,10 @@ impl Sampler for AliasSampler {
 
     fn update_class(&mut self, _class: usize, _embedding: &[f32]) {}
 
+    fn fork(&self) -> Option<Box<dyn ServeSampler>> {
+        Some(Box::new(self.clone()))
+    }
+
     fn name(&self) -> &'static str {
         "unigram"
     }
@@ -155,6 +170,7 @@ impl Sampler for AliasSampler {
 /// `q_i ∝ exp(τ hᵀc_i)` by computing all n logits — `O(dn)` per call,
 /// the cost RF-softmax exists to avoid. Gradient-wise this is the gold
 /// standard (Theorem 1: zero bias).
+#[derive(Clone)]
 pub struct ExactSoftmaxSampler {
     classes: Matrix,
     tau: f32,
@@ -253,6 +269,10 @@ impl Sampler for ExactSoftmaxSampler {
         self.classes.row_mut(class).copy_from_slice(embedding);
     }
 
+    fn fork(&self) -> Option<Box<dyn ServeSampler>> {
+        Some(Box::new(self.clone()))
+    }
+
     fn name(&self) -> &'static str {
         "exp"
     }
@@ -263,6 +283,7 @@ impl Sampler for ExactSoftmaxSampler {
 /// classes whose marginal inclusion tracks the softmax distribution.
 /// Reported probabilities are the softmax marginals (the standard
 /// practical surrogate; exact subset probabilities are intractable).
+#[derive(Clone)]
 pub struct GumbelTopKSampler {
     classes: Matrix,
     tau: f32,
@@ -317,6 +338,10 @@ impl Sampler for GumbelTopKSampler {
 
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
         self.classes.row_mut(class).copy_from_slice(embedding);
+    }
+
+    fn fork(&self) -> Option<Box<dyn ServeSampler>> {
+        Some(Box::new(self.clone()))
     }
 
     fn name(&self) -> &'static str {

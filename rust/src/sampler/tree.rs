@@ -107,6 +107,40 @@ impl KernelTree {
         (self.left_sums.len() + self.total.len()) * std::mem::size_of::<f32>()
     }
 
+    /// Predicted [`KernelTree::memory_bytes`] for an `(n, dim)` tree that
+    /// has not been built yet, derived from the tree's actual storage
+    /// element (`pad − 1` left-sums plus the root total, each `dim`
+    /// floats). `build_sampler`'s memory fallback uses this so its
+    /// threshold cannot drift from the real storage type.
+    pub fn estimate_bytes(n: usize, dim: usize) -> usize {
+        n.next_power_of_two().max(2) * dim * std::mem::size_of::<f32>()
+    }
+
+    /// Same `(n, dim, pad)` shape as `other` (copyable in place).
+    pub fn same_shape(&self, other: &KernelTree) -> bool {
+        self.n == other.n && self.dim == other.dim && self.pad == other.pad
+    }
+
+    /// Copy another tree's node sums into this one without reallocating —
+    /// in-place state restoration for callers managing their own spare
+    /// tree allocations (external double-buffer or checkpoint-restore
+    /// schemes; the in-crate serving writer instead recycles whole
+    /// snapshots via `Arc::try_unwrap` + replay). Shapes must match
+    /// (see [`KernelTree::same_shape`]).
+    pub fn copy_state_from(&mut self, src: &KernelTree) {
+        assert!(
+            self.same_shape(src),
+            "copy_state_from: shape mismatch (n {} vs {}, dim {} vs {})",
+            self.n,
+            src.n,
+            self.dim,
+            src.dim
+        );
+        self.left_sums.copy_from_slice(&src.left_sums);
+        self.total.copy_from_slice(&src.total);
+        self.eps = src.eps;
+    }
+
     #[inline]
     fn left_sum(&self, node: usize) -> &[f32] {
         &self.left_sums[(node - 1) * self.dim..node * self.dim]
@@ -355,6 +389,98 @@ impl KernelTree {
         (ids, probs)
     }
 
+    /// The `k` leaves with the largest walk probability for query `z`,
+    /// descending (ties broken by class id). Best-first branch-and-bound
+    /// on partial walk products: the product of branch probabilities down
+    /// to an internal node upper-bounds the probability of every leaf
+    /// beneath it (all remaining factors are ≤ 1), so expanding nodes in
+    /// bound order makes the first `k` leaves popped exactly the top `k`.
+    /// Serves the `top_k` request type of [`crate::serving`];
+    /// `O(k · D log n)` in the typical (non-adversarial) case.
+    pub fn top_k(&self, z: &[f32], k: usize) -> Vec<(u32, f64)> {
+        use std::cmp::Ordering as CmpOrdering;
+        use std::collections::BinaryHeap;
+
+        struct Item {
+            q: f64,
+            node: usize,
+            lo: usize,
+            size: usize,
+            raw: f64,
+        }
+        impl PartialEq for Item {
+            fn eq(&self, other: &Self) -> bool {
+                self.cmp(other) == CmpOrdering::Equal
+            }
+        }
+        impl Eq for Item {}
+        impl PartialOrd for Item {
+            fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+                Some(self.cmp(other))
+            }
+        }
+        impl Ord for Item {
+            fn cmp(&self, other: &Self) -> CmpOrdering {
+                // Max-heap on bound; lower class range wins ties so the
+                // result order is deterministic.
+                self.q.total_cmp(&other.q).then(other.lo.cmp(&self.lo))
+            }
+        }
+
+        let k = k.min(self.n);
+        let mut out = Vec::with_capacity(k);
+        if k == 0 {
+            return out;
+        }
+        let mut heap = BinaryHeap::new();
+        heap.push(Item {
+            q: 1.0,
+            node: 1,
+            lo: 0,
+            size: self.pad,
+            raw: self.mass(z),
+        });
+        while let Some(Item { q, node, lo, size, raw }) = heap.pop() {
+            if size == 1 {
+                debug_assert!(lo < self.n, "top_k reached phantom leaf {lo}");
+                out.push((lo as u32, q));
+                if out.len() == k {
+                    break;
+                }
+                continue;
+            }
+            let half = size / 2;
+            let raw_left = dot(self.left_sum(node), z) as f64;
+            let raw_right = raw - raw_left;
+            let el = self.eff(raw_left, self.real_leaves(lo, half));
+            let er = self.eff(raw_right, self.real_leaves(lo + half, half));
+            let tot = el + er;
+            if tot <= 0.0 {
+                continue; // phantom-only subtree carries no mass
+            }
+            let p_left = el / tot;
+            if el > 0.0 {
+                heap.push(Item {
+                    q: q * p_left,
+                    node: node * 2,
+                    lo,
+                    size: half,
+                    raw: raw_left,
+                });
+            }
+            if er > 0.0 {
+                heap.push(Item {
+                    q: q * (1.0 - p_left),
+                    node: node * 2 + 1,
+                    lo: lo + half,
+                    size: half,
+                    raw: raw_right,
+                });
+            }
+        }
+        out
+    }
+
     /// Unmemoized variant of [`KernelTree::sample_many`] (m independent
     /// walks). Kept as the §Perf baseline and for A/B testing.
     pub fn sample_many_nomemo(
@@ -595,6 +721,93 @@ mod tests {
         let tree = KernelTree::new(1000, 64, 1e-6);
         // pad = 1024 → 1023 internal sums + total, × 64 × 4 bytes.
         assert_eq!(tree.memory_bytes(), (1023 + 1) * 64 * 4);
+    }
+
+    #[test]
+    fn estimate_bytes_matches_built_tree() {
+        for &(n, dim) in &[(1usize, 4usize), (5, 3), (1000, 64), (1024, 16)] {
+            let tree = KernelTree::new(n, dim, 1e-6);
+            assert_eq!(
+                KernelTree::estimate_bytes(n, dim),
+                tree.memory_bytes(),
+                "n={n} dim={dim}"
+            );
+        }
+    }
+
+    #[test]
+    fn top_k_matches_probability_ranking() {
+        check("tree-top-k-vs-brute", |rng| {
+            let n = gen::usize_in(rng, 2, 60);
+            let d = gen::usize_in(rng, 1, 6);
+            // Mixed-sign features exercise the clamping path too.
+            let phis: Vec<Vec<f32>> =
+                (0..n).map(|_| gen::vector(rng, d)).collect();
+            let z = gen::vector(rng, d);
+            let tree = build_tree(&phis, 1e-6);
+            let k = gen::usize_in(rng, 1, n.min(10));
+            let got = tree.top_k(&z, k);
+            let mut brute: Vec<(u32, f64)> = (0..n)
+                .map(|i| (i as u32, tree.probability(&z, i)))
+                .collect();
+            brute.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+            brute.truncate(k);
+            prop_assert!(got.len() == k, "got {} of {k}", got.len());
+            for (j, ((gi, gq), (bi, bq))) in
+                got.iter().zip(&brute).enumerate()
+            {
+                // Probabilities must match exactly (same walk product);
+                // ids may differ only on fp ties.
+                prop_assert!(
+                    close(*gq, *bq, 1e-9, 1e-15),
+                    "rank {j}: q {gq} vs brute {bq}"
+                );
+                prop_assert!(
+                    gi == bi || close(*gq, *bq, 1e-12, 1e-18),
+                    "rank {j}: id {gi} vs {bi}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn top_k_full_list_is_whole_distribution() {
+        let mut rng = Rng::seeded(97);
+        let n = 13;
+        let phis: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..4).map(|_| rng.f32()).collect())
+            .collect();
+        let tree = build_tree(&phis, 1e-8);
+        let z: Vec<f32> = (0..4).map(|_| rng.f32()).collect();
+        let all = tree.top_k(&z, n + 10); // k clamps to n
+        assert_eq!(all.len(), n);
+        let total: f64 = all.iter().map(|(_, q)| q).sum();
+        assert!((total - 1.0).abs() < 1e-9, "Σ top-k q = {total}");
+        // Descending and duplicate-free.
+        for w in all.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        let ids: std::collections::HashSet<_> =
+            all.iter().map(|(i, _)| *i).collect();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn copy_state_from_replicates_distribution() {
+        let mut rng = Rng::seeded(98);
+        let n = 21;
+        let d = 5;
+        let phis: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.f32()).collect())
+            .collect();
+        let src = build_tree(&phis, 1e-7);
+        let mut dst = KernelTree::new(n, d, 1e-7);
+        dst.copy_state_from(&src);
+        let z: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+        for i in 0..n {
+            assert_eq!(src.probability(&z, i), dst.probability(&z, i));
+        }
     }
 
     #[test]

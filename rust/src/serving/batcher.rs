@@ -1,0 +1,333 @@
+//! Request micro-batcher: coalesces concurrently-arriving `sample`
+//! queries into one batched serving call.
+//!
+//! Client threads submit `(h, m, seed)` and block for their reply; a
+//! dedicated batcher thread drains the [`crate::exec::CoalesceQueue`]
+//! (bounded by `max_batch` / `max_wait`), pins ONE snapshot for the whole
+//! batch, assembles the query matrix, and issues a single
+//! [`crate::sampler::Sampler::serve_batch`] — one `map_batch` gemm plus
+//! fanned-out tree walks, the PR-1 batch path — so serving throughput
+//! inherits its amortization.
+//!
+//! **Determinism:** each request carries its own seed, and `serve_batch`
+//! derives an independent RNG stream per row from it. A request's draw
+//! therefore depends only on `(seed, snapshot epoch)` — never on which
+//! other requests it was coalesced with, or on thread scheduling.
+
+use super::SamplerServer;
+use crate::exec::CoalesceQueue;
+use crate::linalg::Matrix;
+use crate::sampler::NegativeDraw;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Coalescing bounds (config keys `serving.max_batch` /
+/// `serving.max_wait_us`).
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherOptions {
+    /// Maximum requests coalesced into one serving batch.
+    pub max_batch: usize,
+    /// Maximum *extra* time the batcher waits for the batch to fill
+    /// beyond the first queued request. `Duration::ZERO` (the default)
+    /// serves whatever has queued as soon as the batcher is free —
+    /// "natural batching": under load, requests accumulate while the
+    /// previous batch is being served, so coalescing still happens, but
+    /// a lightly-loaded closed loop is never taxed a full `max_wait` per
+    /// batch (with R blocked closed-loop readers nothing else can
+    /// arrive, and waiting would just add latency).
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherOptions {
+    fn default() -> Self {
+        Self { max_batch: 32, max_wait: Duration::ZERO }
+    }
+}
+
+/// One served sample reply: the draw plus the epoch it was served from.
+#[derive(Clone, Debug)]
+pub struct ServeReply {
+    pub draw: NegativeDraw,
+    pub epoch: u64,
+}
+
+struct PendingSample {
+    h: Vec<f32>,
+    m: usize,
+    seed: u64,
+    resp: mpsc::SyncSender<ServeReply>,
+}
+
+#[derive(Default)]
+struct BatcherStats {
+    requests: AtomicU64,
+    batches: AtomicU64,
+}
+
+/// Handle to a running micro-batcher. Cheap to share behind an `Arc`;
+/// dropping the last handle shuts the batcher thread down.
+pub struct MicroBatcher {
+    queue: Arc<CoalesceQueue<PendingSample>>,
+    stats: Arc<BatcherStats>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MicroBatcher {
+    pub fn spawn(server: SamplerServer, opts: BatcherOptions) -> Self {
+        assert!(opts.max_batch >= 1, "MicroBatcher: max_batch must be ≥ 1");
+        let queue = Arc::new(CoalesceQueue::new());
+        let stats = Arc::new(BatcherStats::default());
+        let worker = {
+            let queue = Arc::clone(&queue);
+            let stats = Arc::clone(&stats);
+            std::thread::Builder::new()
+                .name("rfsm-serve-batcher".into())
+                .spawn(move || batcher_loop(&server, &queue, opts, &stats))
+                .expect("spawn serving batcher")
+        };
+        Self { queue, stats, worker: Some(worker) }
+    }
+
+    /// Submit one sample request and block for its reply. Draw `m`
+    /// classes i.i.d. from `q(· | h)` under the snapshot the batcher pins
+    /// for this request's batch; `seed` fully determines the draw for a
+    /// given epoch.
+    pub fn sample(&self, h: &[f32], m: usize, seed: u64) -> ServeReply {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let accepted = self.queue.push(PendingSample {
+            h: h.to_vec(),
+            m,
+            seed,
+            resp: tx,
+        });
+        assert!(accepted, "MicroBatcher: sample after shutdown");
+        rx.recv().expect(
+            "MicroBatcher: request failed (query dimension rejected by the \
+             sampler?) or batcher shut down",
+        )
+    }
+
+    /// `(requests served, batches formed)` so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.stats.requests.load(Ordering::Relaxed),
+            self.stats.batches.load(Ordering::Relaxed),
+        )
+    }
+}
+
+impl Drop for MicroBatcher {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    server: &SamplerServer,
+    queue: &CoalesceQueue<PendingSample>,
+    opts: BatcherOptions,
+    stats: &BatcherStats,
+) {
+    while let Some(mut reqs) = queue.drain_batch(opts.max_batch, opts.max_wait) {
+        debug_assert!(!reqs.is_empty());
+        // One snapshot pin serves the whole coalesced drain — every reply
+        // in it reports the same epoch.
+        let snap = server.snapshot();
+        // Group by query dimension so one malformed request can only fail
+        // its own group, never a stranger's — and never this thread: the
+        // serve runs under catch_unwind, so a panicking group (e.g. a dim
+        // the feature map rejects) drops its reply senders (those callers
+        // see the failure) while the batcher keeps serving everyone else.
+        while !reqs.is_empty() {
+            let d = reqs[0].h.len();
+            let group: Vec<PendingSample> = {
+                let mut g = Vec::new();
+                let mut rest = Vec::new();
+                for r in reqs {
+                    if r.h.len() == d {
+                        g.push(r);
+                    } else {
+                        rest.push(r);
+                    }
+                }
+                reqs = rest;
+                g
+            };
+            stats.batches.fetch_add(1, Ordering::Relaxed);
+            let served = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    let mut h = Matrix::zeros(group.len(), d);
+                    for (i, r) in group.iter().enumerate() {
+                        h.row_mut(i).copy_from_slice(&r.h);
+                    }
+                    let ms: Vec<usize> = group.iter().map(|r| r.m).collect();
+                    let seeds: Vec<u64> =
+                        group.iter().map(|r| r.seed).collect();
+                    snap.sampler().serve_batch(&h, &ms, &seeds)
+                }),
+            );
+            match served {
+                Ok(draws) => {
+                    stats
+                        .requests
+                        .fetch_add(group.len() as u64, Ordering::Relaxed);
+                    for (req, draw) in group.into_iter().zip(draws) {
+                        // A client that gave up (dropped its receiver) is
+                        // not an error.
+                        let _ = req
+                            .resp
+                            .send(ServeReply { draw, epoch: snap.epoch() });
+                    }
+                }
+                Err(_) => {
+                    // Dropping the group's senders fails exactly the
+                    // offending callers' recv; the batcher lives on.
+                    drop(group);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featmap::RffMap;
+    use crate::linalg::unit_vector;
+    use crate::rng::Rng;
+    use crate::sampler::{ServeSampler, ShardedKernelSampler};
+
+    fn test_server(
+        n: usize,
+        d: usize,
+        seed: u64,
+    ) -> (SamplerServer, super::super::SamplerWriter) {
+        let mut rng = Rng::seeded(seed);
+        let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+        let map = RffMap::new(d, 32, 2.0, &mut Rng::seeded(seed + 1));
+        let s: Box<dyn ServeSampler> = Box::new(ShardedKernelSampler::with_map(
+            &classes,
+            map,
+            4,
+            "rff-sharded",
+        ));
+        SamplerServer::new(s)
+    }
+
+    #[test]
+    fn single_request_round_trips() {
+        let (server, _writer) = test_server(32, 6, 500);
+        let batcher = MicroBatcher::spawn(server.clone(), BatcherOptions::default());
+        let mut rng = Rng::seeded(501);
+        let h = unit_vector(&mut rng, 6);
+        let reply = batcher.sample(&h, 10, 7);
+        assert_eq!(reply.draw.len(), 10);
+        assert_eq!(reply.epoch, 0);
+        assert!(reply.draw.ids.iter().all(|&i| (i as usize) < 32));
+        // Probabilities are the exact unconditioned snapshot q.
+        for (&id, &q) in reply.draw.ids.iter().zip(&reply.draw.probs) {
+            let want = server.probability(&h, id as usize);
+            assert!((q - want).abs() < 1e-12 * want.max(1e-12));
+        }
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce() {
+        let (server, _writer) = test_server(64, 6, 510);
+        let batcher = Arc::new(MicroBatcher::spawn(
+            server,
+            BatcherOptions { max_batch: 16, max_wait: Duration::from_millis(5) },
+        ));
+        let threads = 4;
+        let per_thread = 50;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let batcher = Arc::clone(&batcher);
+                std::thread::spawn(move || {
+                    let mut rng = Rng::seeded(511 + t);
+                    for i in 0..per_thread {
+                        let h = unit_vector(&mut rng, 6);
+                        let reply =
+                            batcher.sample(&h, 5, (t * 1000 + i) as u64);
+                        assert_eq!(reply.draw.len(), 5);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (reqs, batches) = batcher.stats();
+        assert_eq!(reqs, (threads * per_thread) as u64);
+        assert!(batches <= reqs, "batches {batches} > requests {reqs}");
+        assert!(batches >= 1);
+    }
+
+    #[test]
+    fn malformed_request_fails_only_its_caller() {
+        let (server, _writer) = test_server(32, 6, 540);
+        let batcher =
+            Arc::new(MicroBatcher::spawn(server, BatcherOptions::default()));
+        // Wrong query dim (4 ≠ 6): the serve panics inside the batcher's
+        // catch_unwind, failing this caller only.
+        let bad = {
+            let b = Arc::clone(&batcher);
+            std::thread::spawn(move || b.sample(&[1.0f32; 4], 3, 1))
+        };
+        assert!(bad.join().is_err(), "wrong-dim request must fail its caller");
+        // The batcher thread survives and keeps serving valid requests.
+        let mut rng = Rng::seeded(541);
+        let h = unit_vector(&mut rng, 6);
+        let reply = batcher.sample(&h, 5, 2);
+        assert_eq!(reply.draw.len(), 5);
+    }
+
+    #[test]
+    fn same_seed_same_epoch_same_draw_regardless_of_coalescing() {
+        let (server, _writer) = test_server(48, 8, 520);
+        let mut rng = Rng::seeded(521);
+        let h = unit_vector(&mut rng, 8);
+
+        // Serve the probe alone (max_batch 1 ⇒ never coalesced)...
+        let solo = {
+            let b = MicroBatcher::spawn(
+                server.clone(),
+                BatcherOptions { max_batch: 1, max_wait: Duration::ZERO },
+            );
+            b.sample(&h, 12, 999)
+        };
+        // ...and amid heavy concurrent traffic with aggressive batching.
+        let busy = {
+            let b = Arc::new(MicroBatcher::spawn(
+                server.clone(),
+                BatcherOptions {
+                    max_batch: 32,
+                    max_wait: Duration::from_millis(2),
+                },
+            ));
+            let noise: Vec<_> = (0..4)
+                .map(|t| {
+                    let b = Arc::clone(&b);
+                    std::thread::spawn(move || {
+                        let mut rng = Rng::seeded(530 + t);
+                        for i in 0..40 {
+                            let h = unit_vector(&mut rng, 8);
+                            b.sample(&h, 3, (t * 777 + i) as u64);
+                        }
+                    })
+                })
+                .collect();
+            let reply = b.sample(&h, 12, 999);
+            for n in noise {
+                n.join().unwrap();
+            }
+            reply
+        };
+        assert_eq!(solo.epoch, busy.epoch);
+        assert_eq!(solo.draw, busy.draw, "draw depends on coalescing");
+    }
+}

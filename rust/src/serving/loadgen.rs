@@ -1,0 +1,276 @@
+//! Closed-loop load generator for the serving subsystem — the engine
+//! behind the `serve-bench` CLI subcommand and `benches/perf_serving.rs`.
+//!
+//! `R` reader threads each issue `sample` requests back-to-back through
+//! the micro-batcher (closed loop: a new request is issued only when the
+//! previous reply lands) while an optional writer thread applies batched
+//! random class updates to the shadow and publishes — the live-traffic
+//! regime of the ROADMAP north star. Reports throughput, latency
+//! percentiles, coalescing behaviour, and swap stalls as BENCH JSON.
+
+use super::{BatcherOptions, MicroBatcher, SamplerServer};
+use crate::json::Json;
+use crate::linalg::{unit_vector, Matrix};
+use crate::rng::Rng;
+use crate::sampler::Sampler;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Closed-loop run parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    /// Concurrent reader threads.
+    pub readers: usize,
+    /// Requests issued by each reader.
+    pub requests_per_reader: usize,
+    /// Negatives per request.
+    pub m: usize,
+    /// Query / class-embedding dimension d.
+    pub dim: usize,
+    /// Base seed for query generation and per-request draw seeds.
+    pub seed: u64,
+    /// Micro-batcher coalescing bounds.
+    pub batcher: BatcherOptions,
+    /// Classes updated per writer cycle (0 disables the writer).
+    pub updates_per_swap: usize,
+    /// Pause between writer cycles (approximates a training-step cadence;
+    /// 0 = swap as fast as possible).
+    pub swap_pause: Duration,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        Self {
+            readers: 4,
+            requests_per_reader: 1000,
+            m: 20,
+            dim: 64,
+            seed: 1,
+            batcher: BatcherOptions::default(),
+            updates_per_swap: 32,
+            swap_pause: Duration::from_micros(200),
+        }
+    }
+}
+
+/// What a closed-loop run measured.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub sampler: String,
+    pub readers: usize,
+    pub requests: u64,
+    pub wall_seconds: f64,
+    pub qps: f64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub epochs: u64,
+    pub swap_stalls: u64,
+}
+
+impl LoadReport {
+    /// One human-readable summary line.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<14} readers={} qps={:>10.0} p50={:>8.1}µs p99={:>8.1}µs \
+             mean_batch={:>5.1} epochs={} swap_stalls={}",
+            self.sampler,
+            self.readers,
+            self.qps,
+            self.p50_us,
+            self.p99_us,
+            self.mean_batch,
+            self.epochs,
+            self.swap_stalls,
+        )
+    }
+
+    /// Machine-readable BENCH record (matches the `perf_hotpath` idiom).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::from("serving_closed_loop")),
+            ("sampler", Json::from(self.sampler.as_str())),
+            ("readers", Json::from(self.readers)),
+            ("requests", Json::from(self.requests as usize)),
+            ("wall_seconds", Json::from(self.wall_seconds)),
+            ("qps", Json::from(self.qps)),
+            ("mean_us", Json::from(self.mean_us)),
+            ("p50_us", Json::from(self.p50_us)),
+            ("p99_us", Json::from(self.p99_us)),
+            ("batches", Json::from(self.batches as usize)),
+            ("mean_batch", Json::from(self.mean_batch)),
+            ("epochs", Json::from(self.epochs as usize)),
+            ("swap_stalls", Json::from(self.swap_stalls as usize)),
+        ])
+    }
+}
+
+/// Run one closed-loop load test against a fork of `sampler`. The
+/// sampler must support serving forks and its class-embedding dimension
+/// must equal `spec.dim` (writer updates are drawn at that width).
+pub fn run_closed_loop(
+    sampler: &dyn Sampler,
+    spec: &LoadSpec,
+) -> anyhow::Result<LoadReport> {
+    anyhow::ensure!(spec.readers >= 1, "serve load: need ≥ 1 reader");
+    anyhow::ensure!(spec.m >= 1, "serve load: need m ≥ 1");
+    let serve = sampler.fork().ok_or_else(|| {
+        anyhow::anyhow!(
+            "sampler '{}' does not support serving forks",
+            sampler.name()
+        )
+    })?;
+    let name = serve.name().to_string();
+    let num_classes = serve.num_classes();
+    let dim = spec.dim;
+    let (server, mut writer) = SamplerServer::new(serve);
+    let batcher = Arc::new(MicroBatcher::spawn(server.clone(), spec.batcher));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Writer: apply a batch of random class updates, publish, pause.
+    let writer_handle = if spec.updates_per_swap > 0 {
+        let stop = Arc::clone(&stop);
+        let k = spec.updates_per_swap.min(num_classes);
+        let pause = spec.swap_pause;
+        let seed = spec.seed ^ 0x57A9_0000_0000_0000;
+        Some(std::thread::spawn(move || {
+            let mut rng = Rng::seeded(seed);
+            while !stop.load(Ordering::Relaxed) {
+                let ids: Vec<u32> = rng
+                    .sample_distinct(num_classes, k)
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect();
+                let mut emb = Matrix::zeros(k, dim);
+                for r in 0..k {
+                    let v = unit_vector(&mut rng, dim);
+                    emb.row_mut(r).copy_from_slice(&v);
+                }
+                writer.apply_updates(ids, emb);
+                writer.publish();
+                if !pause.is_zero() {
+                    std::thread::sleep(pause);
+                }
+            }
+        }))
+    } else {
+        None
+    };
+
+    // Closed-loop readers.
+    let t0 = Instant::now();
+    let latencies_ns: Vec<Vec<u64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..spec.readers)
+            .map(|r| {
+                let batcher = Arc::clone(&batcher);
+                scope.spawn(move || {
+                    let mut rng = Rng::seeded(
+                        spec.seed
+                            .wrapping_add((r as u64).wrapping_mul(0x9E37_79B9)),
+                    );
+                    let mut lat = Vec::with_capacity(spec.requests_per_reader);
+                    for _ in 0..spec.requests_per_reader {
+                        let h = unit_vector(&mut rng, dim);
+                        let seed = rng.next_u64();
+                        let t = Instant::now();
+                        let reply = batcher.sample(&h, spec.m, seed);
+                        lat.push(t.elapsed().as_nanos() as u64);
+                        std::hint::black_box(reply.draw.ids.len());
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    if let Some(h) = writer_handle {
+        // A dead writer means the run served a frozen snapshot — report
+        // an error, not a healthy-looking BENCH record.
+        anyhow::ensure!(
+            h.join().is_ok(),
+            "serve load: writer thread panicked (LoadSpec.dim mismatch \
+             with the sampler's class-embedding dimension?)"
+        );
+    }
+
+    let mut all: Vec<u64> = latencies_ns.concat();
+    all.sort_unstable();
+    let pct = |q: f64| -> f64 {
+        if all.is_empty() {
+            return 0.0;
+        }
+        all[((all.len() - 1) as f64 * q).round() as usize] as f64 / 1000.0
+    };
+    let requests = all.len() as u64;
+    let mean_us = if all.is_empty() {
+        0.0
+    } else {
+        all.iter().sum::<u64>() as f64 / all.len() as f64 / 1000.0
+    };
+    let (req_stat, batches) = batcher.stats();
+    debug_assert_eq!(req_stat, requests);
+    Ok(LoadReport {
+        sampler: name,
+        readers: spec.readers,
+        requests,
+        wall_seconds: wall,
+        qps: requests as f64 / wall.max(1e-12),
+        mean_us,
+        p50_us: pct(0.50),
+        p99_us: pct(0.99),
+        batches,
+        mean_batch: requests as f64 / (batches.max(1)) as f64,
+        epochs: server.epoch(),
+        swap_stalls: server.swap_stalls(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featmap::RffMap;
+    use crate::sampler::ShardedKernelSampler;
+
+    #[test]
+    fn closed_loop_smoke_under_writer_churn() {
+        let mut rng = Rng::seeded(700);
+        let d = 8;
+        let classes = Matrix::randn(&mut rng, 64, d).l2_normalized_rows();
+        let map = RffMap::new(d, 16, 2.0, &mut Rng::seeded(701));
+        let sampler =
+            ShardedKernelSampler::with_map(&classes, map, 4, "rff-sharded");
+        let report = run_closed_loop(
+            &sampler,
+            &LoadSpec {
+                readers: 2,
+                requests_per_reader: 60,
+                m: 5,
+                dim: d,
+                seed: 3,
+                batcher: BatcherOptions {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(100),
+                },
+                updates_per_swap: 4,
+                swap_pause: Duration::from_micros(50),
+            },
+        )
+        .unwrap();
+        assert_eq!(report.requests, 120);
+        assert!(report.qps > 0.0);
+        assert!(report.p50_us <= report.p99_us);
+        assert!(report.batches >= 1);
+        assert!(report.epochs >= 1, "writer never published");
+        // JSON record is well-formed and tagged.
+        let j = report.to_json();
+        assert_eq!(
+            j.at(&["bench"]).and_then(|v| v.as_str().map(String::from)),
+            Some("serving_closed_loop".into())
+        );
+    }
+}

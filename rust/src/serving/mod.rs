@@ -1,0 +1,44 @@
+//! L3.5 — the online serving subsystem: kernel-based sampling under live
+//! concurrent traffic.
+//!
+//! The paper's `O(D log n)` per-draw cost makes RF-softmax viable beyond
+//! training — for online negative sampling and candidate retrieval — *if*
+//! the sampling structure can be read while it is being refreshed (the
+//! regime of Blanc & Rendle's adaptive kernel sampling and Chen et al.'s
+//! inverted-multi-index variant). This module supplies that concurrency
+//! layer on top of the batch-first sampler pipeline:
+//!
+//! * [`SamplerServer`] / [`SamplerWriter`] (`server.rs`) — epoch-versioned
+//!   immutable snapshots behind an O(1) atomic publication. Readers pin a
+//!   [`SamplerSnapshot`] via `Arc` and never block on the writer; the
+//!   writer applies batched class updates to a private *shadow* sampler
+//!   and swaps it in at step boundaries, recycling the retired snapshot
+//!   through a replay log instead of rebuilding.
+//! * [`MicroBatcher`] (`batcher.rs`) — coalesces concurrently-arriving
+//!   `sample` requests (bounded by `serving.max_batch` /
+//!   `serving.max_wait_us`) into one `serve_batch` call: a single
+//!   `map_batch` gemm plus fanned-out tree walks, so serving throughput
+//!   inherits the PR-1 batch amortization. Per-request seeds make served
+//!   draws deterministic regardless of coalescing or thread schedule.
+//! * [`DoubleBufferedSampler`] (`service.rs`) — the trainer integration:
+//!   `update_classes` is staged to a writer thread and overlaps the
+//!   step's loss execution; the swap lands before the next draw
+//!   (the ROADMAP "async double-buffered tree updates" item).
+//! * [`run_closed_loop`] (`loadgen.rs`) — the closed-loop load generator
+//!   behind `rfsoftmax serve-bench` and `benches/perf_serving.rs`.
+//!
+//! Requests served: `sample` (micro-batched), `probability`, and `top_k`
+//! (best-first tree search — see `KernelTree::top_k`).
+//!
+//! Memory: double buffering keeps exactly two full sampler states alive
+//! (published + shadow) — the inherent cost of never blocking readers.
+
+mod batcher;
+mod loadgen;
+mod server;
+mod service;
+
+pub use batcher::{BatcherOptions, MicroBatcher, ServeReply};
+pub use loadgen::{run_closed_loop, LoadReport, LoadSpec};
+pub use server::{SamplerServer, SamplerSnapshot, SamplerWriter};
+pub use service::{DoubleBufferedSampler, ServingStats};

@@ -1,0 +1,466 @@
+//! Epoch-versioned snapshot server: many concurrent readers, one writer,
+//! O(1) publication.
+//!
+//! ## Protocol
+//!
+//! The server keeps **two published slots**, each a `Mutex<Arc<SamplerSnapshot>>`,
+//! plus an `AtomicU64` epoch. Between publications both slots hold the
+//! current snapshot; a reader loads the epoch (`Acquire`), locks the slot
+//! of matching parity just long enough to clone the `Arc`, and then works
+//! entirely on its pinned, immutable snapshot. The single writer applies
+//! class updates to a privately-owned **shadow** sampler (never visible
+//! to readers) and publishes by storing the shadow into the opposite-parity
+//! slot and bumping the epoch (`Release`) — the atomic epoch store is the
+//! linearization point. Readers therefore:
+//!
+//! * never wait on update work (the writer holds a slot lock only for an
+//!   `Arc` store, never while touching tree state);
+//! * always see a complete, normalized distribution (snapshots are
+//!   immutable, so a reader pinning a pre-swap snapshot keeps Σq = 1
+//!   even while the writer publishes);
+//! * observe a monotonically non-decreasing epoch.
+//!
+//! ## Shadow recycling
+//!
+//! Double buffering keeps exactly two full sampler states alive (published
+//! + shadow). After a publish, the retired snapshot is reclaimed as the
+//! next shadow via `Arc::try_unwrap` (a brief yield loop tolerates
+//! stragglers still pinning it) and caught up by replaying the update
+//! batches staged during the cycle — `O(k · D log n)`, not a full rebuild.
+//! The reclamation is **deferred** out of `publish` itself (run lazily
+//! before the next update, or eagerly by the serving writer thread after
+//! it acks) so a publisher blocking on the step boundary never waits
+//! behind the catch-up. If a reader pins the retired snapshot past the
+//! spin budget the writer forks the published state instead and counts a
+//! **swap stall** (surfaced in `serve-bench` / `perf_serving` output).
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::sampler::{NegativeDraw, Sampler, ServeSampler};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// How many yield rounds the writer spends waiting for stragglers to drop
+/// a retired snapshot before falling back to an O(nD) fork.
+const RECLAIM_SPINS: usize = 256;
+
+/// One immutable, epoch-tagged sampler state. Readers pin it via `Arc`;
+/// the writer never mutates a published snapshot.
+pub struct SamplerSnapshot {
+    epoch: u64,
+    sampler: Box<dyn ServeSampler>,
+}
+
+impl SamplerSnapshot {
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The snapshot's sampler (read-only; `Sync` by construction).
+    pub fn sampler(&self) -> &dyn Sampler {
+        self.sampler.as_sampler()
+    }
+}
+
+struct Shared {
+    /// Two snapshot slots, indexed by epoch parity. Both hold the current
+    /// snapshot between publications; locks guard only `Arc` clone/store.
+    slots: [Mutex<Arc<SamplerSnapshot>>; 2],
+    /// Publication point: readers pick `slots[epoch & 1]`.
+    epoch: AtomicU64,
+    swap_stalls: AtomicU64,
+    publishes: AtomicU64,
+}
+
+/// Cloneable reader handle. All methods are `&self` and safe to call from
+/// any number of threads concurrently with the writer.
+#[derive(Clone)]
+pub struct SamplerServer {
+    shared: Arc<Shared>,
+}
+
+impl SamplerServer {
+    /// Wrap a servable sampler; returns the shared reader handle and the
+    /// single [`SamplerWriter`]. The writer's shadow starts as a fork of
+    /// the initial snapshot, so construction holds two sampler copies —
+    /// the inherent cost of double buffering.
+    pub fn new(sampler: Box<dyn ServeSampler>) -> (SamplerServer, SamplerWriter) {
+        let shadow = sampler
+            .fork()
+            .expect("SamplerServer: sampler must support fork()");
+        let snap = Arc::new(SamplerSnapshot { epoch: 0, sampler });
+        let shared = Arc::new(Shared {
+            slots: [Mutex::new(Arc::clone(&snap)), Mutex::new(snap)],
+            epoch: AtomicU64::new(0),
+            swap_stalls: AtomicU64::new(0),
+            publishes: AtomicU64::new(0),
+        });
+        let server = SamplerServer { shared };
+        let writer = SamplerWriter {
+            server: server.clone(),
+            shadow: Some(shadow),
+            replay: Vec::new(),
+            pending: None,
+        };
+        (server, writer)
+    }
+
+    /// Pin the current snapshot. O(1): one atomic load plus an `Arc`
+    /// clone under a momentary slot lock.
+    ///
+    /// A reader racing a mid-flight publish can pick up a snapshot
+    /// *newer* than the epoch it loaded (the writer stores the slot
+    /// before bumping the epoch). Without correction, a later call could
+    /// then return the older current snapshot — an epoch regression. The
+    /// `fetch_max` below "helps" the epoch forward to what was actually
+    /// observed, so every subsequent load on any thread sees at least
+    /// this snapshot's epoch: per-reader epochs stay monotone, and
+    /// readers still never wait on the writer (the help is one lock-free
+    /// atomic max).
+    pub fn snapshot(&self) -> Arc<SamplerSnapshot> {
+        let e = self.shared.epoch.load(Ordering::Acquire);
+        let snap =
+            Arc::clone(&self.shared.slots[(e & 1) as usize].lock().unwrap());
+        if snap.epoch() > e {
+            self.shared.epoch.fetch_max(snap.epoch(), Ordering::AcqRel);
+        }
+        snap
+    }
+
+    /// Latest published epoch.
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch.load(Ordering::Acquire)
+    }
+
+    /// Times the writer had to fork instead of recycling a retired
+    /// snapshot because a reader still pinned it.
+    pub fn swap_stalls(&self) -> u64 {
+        self.shared.swap_stalls.load(Ordering::Relaxed)
+    }
+
+    /// Total publications (== current epoch, kept separate for clarity
+    /// in stats plumbing).
+    pub fn publishes(&self) -> u64 {
+        self.shared.publishes.load(Ordering::Relaxed)
+    }
+
+    /// One-shot convenience: draw `m` classes from the current snapshot.
+    /// Returns the draw and the epoch it was served from.
+    pub fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> (NegativeDraw, u64) {
+        let snap = self.snapshot();
+        (snap.sampler().sample(h, m, rng), snap.epoch())
+    }
+
+    /// One-shot convenience: `q(class | h)` under the current snapshot.
+    pub fn probability(&self, h: &[f32], class: usize) -> f64 {
+        self.snapshot().sampler().probability(h, class)
+    }
+
+    /// One-shot convenience: top-k classes under the current snapshot.
+    pub fn top_k(&self, h: &[f32], k: usize) -> Vec<(u32, f64)> {
+        self.snapshot().sampler().top_k(h, k)
+    }
+}
+
+/// The single writer: owns the shadow sampler, applies batched class
+/// updates to it off the readers' path, and publishes with an O(1)
+/// epoch-tagged swap at step boundaries.
+pub struct SamplerWriter {
+    server: SamplerServer,
+    /// Writer-private state; `None` while a retired snapshot is pending
+    /// reclamation (see [`SamplerWriter::reclaim_shadow`]).
+    shadow: Option<Box<dyn ServeSampler>>,
+    /// Update batches applied to the shadow since the last publish —
+    /// replayed onto the recycled snapshot so it catches up in O(k·D log n).
+    replay: Vec<(Vec<u32>, Matrix)>,
+    /// `(retired, current)` snapshot pair from the last publish, awaiting
+    /// reclamation into the next shadow. Deferred so a caller blocking on
+    /// `publish`'s return (the trainer's step boundary) never waits
+    /// behind a second application of the cycle's updates.
+    pending: Option<(Arc<SamplerSnapshot>, Arc<SamplerSnapshot>)>,
+}
+
+impl SamplerWriter {
+    /// Reader handle for this server (cloneable).
+    pub fn server(&self) -> &SamplerServer {
+        &self.server
+    }
+
+    /// Apply one batch of class updates (`classes[k]` takes
+    /// `embeddings.row(k)`; ids unique, embeddings already normalized if
+    /// the sampler expects that) to the **shadow** copy, then keep the
+    /// owned batch in the replay log (no copies — this is why the
+    /// arguments are by value). Readers keep sampling the published
+    /// snapshot untouched; the change becomes visible at the next
+    /// [`SamplerWriter::publish`].
+    pub fn apply_updates(&mut self, classes: Vec<u32>, embeddings: Matrix) {
+        self.reclaim_shadow();
+        let shadow = self.shadow.as_mut().expect("apply_updates: no shadow");
+        shadow.update_classes(&classes, &embeddings);
+        self.replay.push((classes, embeddings));
+    }
+
+    /// Publish the shadow as the new snapshot: two momentary `Arc` stores
+    /// and one atomic epoch bump, nothing else — the replay catch-up that
+    /// rebuilds the next shadow is deferred to
+    /// [`SamplerWriter::reclaim_shadow`] (run lazily before the next
+    /// update, or eagerly by the serving writer thread right after it
+    /// acks), so it overlaps the publisher's next phase instead of
+    /// blocking the step boundary. Returns the new epoch.
+    pub fn publish(&mut self) -> u64 {
+        self.reclaim_shadow();
+        let shadow = self.shadow.take().expect("publish: no shadow");
+        let shared = &self.server.shared;
+        let prev = shared.epoch.load(Ordering::Relaxed);
+        let next = prev + 1;
+        let snap = Arc::new(SamplerSnapshot { epoch: next, sampler: shadow });
+
+        // Install in the new-parity slot, then flip the epoch — the
+        // single atomic publication point.
+        *shared.slots[(next & 1) as usize].lock().unwrap() = Arc::clone(&snap);
+        shared.epoch.store(next, Ordering::Release);
+
+        // Retire the old snapshot: swap the stale-parity slot to the new
+        // snapshot too (stragglers that loaded the old epoch just get the
+        // newer state — still consistent), and park the retired Arc for
+        // deferred recycling.
+        let retired = std::mem::replace(
+            &mut *shared.slots[(prev & 1) as usize].lock().unwrap(),
+            Arc::clone(&snap),
+        );
+        shared.publishes.fetch_add(1, Ordering::Relaxed);
+        self.pending = Some((retired, snap));
+        next
+    }
+
+    /// Rebuild the shadow from the last publish's retired snapshot:
+    /// `Arc::try_unwrap` recycles its allocation (a brief yield loop
+    /// tolerates straggler readers) and this cycle's replay log catches
+    /// it up in O(k·D log n); if a reader pins it past the spin budget,
+    /// fork the current snapshot instead and count a swap stall. No-op
+    /// when nothing is pending.
+    pub fn reclaim_shadow(&mut self) {
+        let Some((mut retired, current)) = self.pending.take() else {
+            return;
+        };
+        let mut reclaimed: Option<Box<dyn ServeSampler>> = None;
+        for _ in 0..RECLAIM_SPINS {
+            match Arc::try_unwrap(retired) {
+                Ok(s) => {
+                    reclaimed = Some(s.sampler);
+                    break;
+                }
+                Err(still_pinned) => {
+                    retired = still_pinned;
+                    std::thread::yield_now();
+                }
+            }
+        }
+        match reclaimed {
+            Some(mut sampler) => {
+                // One publish behind: replay that cycle's updates.
+                for (ids, emb) in self.replay.drain(..) {
+                    sampler.update_classes(&ids, &emb);
+                }
+                self.shadow = Some(sampler);
+            }
+            None => {
+                // A long-pinned reader owns the retired snapshot; fork the
+                // published state (already up to date) instead.
+                self.server.shared.swap_stalls.fetch_add(1, Ordering::Relaxed);
+                self.replay.clear();
+                self.shadow = Some(
+                    current
+                        .sampler
+                        .fork()
+                        .expect("reclaim: published sampler must re-fork"),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featmap::RffMap;
+    use crate::linalg::unit_vector;
+    use crate::sampler::ShardedKernelSampler;
+
+    fn servable(
+        n: usize,
+        d: usize,
+        seed: u64,
+    ) -> (Matrix, Box<dyn ServeSampler>) {
+        let mut rng = Rng::seeded(seed);
+        let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+        let map = RffMap::new(d, 32, 2.0, &mut Rng::seeded(seed + 1));
+        let s = ShardedKernelSampler::with_map(&classes, map, 4, "rff-sharded");
+        (classes, Box::new(s))
+    }
+
+    fn sum_q(snap: &SamplerSnapshot, h: &[f32], n: usize) -> f64 {
+        (0..n).map(|i| snap.sampler().probability(h, i)).sum()
+    }
+
+    #[test]
+    fn publish_is_visible_and_epoch_tagged() {
+        let (_, sampler) = servable(32, 6, 400);
+        let (server, mut writer) = SamplerServer::new(sampler);
+        assert_eq!(server.epoch(), 0);
+        let mut rng = Rng::seeded(401);
+        let h = unit_vector(&mut rng, 6);
+        let before = server.probability(&h, 3);
+
+        // Stage an update that aligns class 3 with h, then publish.
+        let mut emb = Matrix::zeros(1, 6);
+        emb.row_mut(0).copy_from_slice(&h);
+        writer.apply_updates(vec![3], emb);
+        // Not yet visible: readers still see epoch 0.
+        assert_eq!(server.epoch(), 0);
+        assert_eq!(server.probability(&h, 3), before);
+
+        let e = writer.publish();
+        assert_eq!(e, 1);
+        assert_eq!(server.epoch(), 1);
+        assert!(server.probability(&h, 3) > before);
+        assert_eq!(server.snapshot().epoch(), 1);
+    }
+
+    #[test]
+    fn pinned_pre_swap_snapshot_stays_consistent() {
+        let n = 24;
+        let (_, sampler) = servable(n, 5, 410);
+        let (server, mut writer) = SamplerServer::new(sampler);
+        let mut rng = Rng::seeded(411);
+        let h = unit_vector(&mut rng, 5);
+
+        let pinned = server.snapshot();
+        let q3_before = pinned.sampler().probability(&h, 3);
+        let total_before = sum_q(&pinned, &h, n);
+        assert!((total_before - 1.0).abs() < 1e-6);
+
+        // Writer churns through several update+publish cycles.
+        for step in 0..5u64 {
+            let mut emb = Matrix::zeros(2, 5);
+            for r in 0..2 {
+                let v = unit_vector(&mut rng, 5);
+                emb.row_mut(r).copy_from_slice(&v);
+            }
+            writer.apply_updates(vec![(step % 12) as u32 * 2, 23], emb);
+            writer.publish();
+        }
+        assert_eq!(server.epoch(), 5);
+
+        // The pinned pre-swap snapshot is untouched: same q, Σq = 1.
+        assert_eq!(pinned.epoch(), 0);
+        assert_eq!(pinned.sampler().probability(&h, 3), q3_before);
+        let total_after = sum_q(&pinned, &h, n);
+        assert!(
+            (total_after - 1.0).abs() < 1e-6,
+            "pinned Σq drifted: {total_after}"
+        );
+        // Holding the pin across publishes forces the fork fallback at
+        // least once (the retired snapshot could not be recycled).
+        assert!(server.swap_stalls() >= 1);
+    }
+
+    #[test]
+    fn recycled_shadow_matches_fresh_sampler_exactly() {
+        // Drive update+publish cycles WITHOUT long pins, so the shadow is
+        // recycled + replayed, and compare against a reference sampler
+        // that applied every update synchronously.
+        let n = 64;
+        let d = 6;
+        let (classes, sampler) = servable(n, d, 420);
+        let (server, mut writer) = SamplerServer::new(sampler);
+        let mut reference = ShardedKernelSampler::with_map(
+            &classes,
+            RffMap::new(d, 32, 2.0, &mut Rng::seeded(421)),
+            4,
+            "rff-sharded",
+        );
+        let mut rng = Rng::seeded(422);
+        for step in 0..8 {
+            let ids: Vec<u32> =
+                (0..6u32).map(|j| (step * 7 + j * 11) % n as u32).collect();
+            let mut uniq = ids.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            let mut emb = Matrix::zeros(uniq.len(), d);
+            for r in 0..uniq.len() {
+                let v = unit_vector(&mut rng, d);
+                emb.row_mut(r).copy_from_slice(&v);
+            }
+            reference.update_classes(&uniq, &emb);
+            writer.apply_updates(uniq, emb);
+            writer.publish();
+        }
+        assert_eq!(server.swap_stalls(), 0, "no pins → no stalls");
+        let h = unit_vector(&mut rng, d);
+        let snap = server.snapshot();
+        for i in 0..n {
+            let a = snap.sampler().probability(&h, i);
+            let b = reference.probability(&h, i);
+            assert!(
+                (a - b).abs() < 1e-9 * a.max(b).max(1e-12),
+                "class {i}: served {a} vs reference {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn concurrent_readers_see_monotone_epochs_and_unit_mass() {
+        let n = 32;
+        let (_, sampler) = servable(n, 5, 430);
+        let (server, mut writer) = SamplerServer::new(sampler);
+        let stop = Arc::new(AtomicU64::new(0));
+        let readers: Vec<_> = (0..4)
+            .map(|r| {
+                let server = server.clone();
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut rng = Rng::seeded(440 + r);
+                    let h = unit_vector(&mut rng, 5);
+                    let mut last_epoch = 0u64;
+                    while stop.load(Ordering::Relaxed) == 0 {
+                        let snap = server.snapshot();
+                        assert!(
+                            snap.epoch() >= last_epoch,
+                            "epoch went backwards: {} < {last_epoch}",
+                            snap.epoch()
+                        );
+                        last_epoch = snap.epoch();
+                        let total: f64 = (0..n)
+                            .map(|i| snap.sampler().probability(&h, i))
+                            .sum();
+                        assert!(
+                            (total - 1.0).abs() < 1e-6,
+                            "Σq = {total} at epoch {}",
+                            snap.epoch()
+                        );
+                    }
+                    last_epoch
+                })
+            })
+            .collect();
+
+        let mut rng = Rng::seeded(431);
+        for step in 0..40u32 {
+            let ids = vec![step % 31, 31];
+            let mut emb = Matrix::zeros(2, 5);
+            for r in 0..2 {
+                let v = unit_vector(&mut rng, 5);
+                emb.row_mut(r).copy_from_slice(&v);
+            }
+            writer.apply_updates(ids, emb);
+            writer.publish();
+        }
+        stop.store(1, Ordering::Relaxed);
+        for h in readers {
+            h.join().unwrap();
+        }
+        assert_eq!(server.epoch(), 40);
+        assert_eq!(server.publishes(), 40);
+    }
+}

@@ -1,0 +1,239 @@
+//! Trainer-side double buffering: the async front end the coordinator's
+//! `SamplerService` routes through when `serving.double_buffer` is on.
+//!
+//! The ROADMAP open item this ships: `update_classes` for step *t* is
+//! **staged** — handed to a dedicated writer thread that applies it to
+//! the server's shadow sampler while the caller proceeds into step *t*'s
+//! loss execution — and the snapshot swap lands at the next step
+//! boundary, before step *t+1*'s draw ([`DoubleBufferedSampler::sync`]).
+//! Because the swap is forced before every draw that follows staged
+//! updates, the served distribution is *exactly* the one a synchronous
+//! service would have used: no stale-epoch reads, identical draw streams
+//! for fork-exact samplers.
+
+use super::{SamplerServer, SamplerSnapshot, SamplerWriter};
+use crate::linalg::Matrix;
+use crate::sampler::{Sampler, ServeSampler};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+enum WriterMsg {
+    Stage { ids: Vec<u32>, embeddings: Matrix },
+    Publish { ack: mpsc::SyncSender<u64> },
+}
+
+/// Counters surfaced into trainer metrics and bench output.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServingStats {
+    /// Epoch currently pinned by the consumer.
+    pub epoch: u64,
+    /// Snapshot publications so far.
+    pub publishes: u64,
+    /// Publications that could not recycle the retired snapshot
+    /// (a reader pinned it past the spin budget).
+    pub swap_stalls: u64,
+    /// Time the consumer spent blocked in [`DoubleBufferedSampler::sync`]
+    /// waiting for staged updates to finish — the part of the tree
+    /// refresh that did NOT overlap with the step.
+    pub publish_wait_ns: u64,
+}
+
+/// Owns the reader handle, a pinned snapshot, and the channel to the
+/// writer thread. Single-consumer by design (the trainer loop).
+pub struct DoubleBufferedSampler {
+    server: SamplerServer,
+    /// `None` only during shutdown.
+    tx: Option<mpsc::Sender<WriterMsg>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    /// The consumer's pinned snapshot. `None` only inside
+    /// [`DoubleBufferedSampler::sync`], which releases the pin *before*
+    /// requesting the publish — holding it across the swap would keep the
+    /// retired snapshot alive and force the writer's O(nD) fork fallback
+    /// on every single publish instead of the O(k·D log n) recycle.
+    pinned: Option<Arc<SamplerSnapshot>>,
+    /// Updates staged since the last publish.
+    dirty: bool,
+    publish_wait_ns: u64,
+}
+
+impl DoubleBufferedSampler {
+    /// Fork `sampler` into a served double buffer. Returns `None` when
+    /// the sampler does not support serving forks.
+    pub fn new(sampler: &dyn Sampler) -> Option<Self> {
+        Some(Self::from_serve(sampler.fork()?))
+    }
+
+    /// Build from an already-forked servable sampler.
+    pub fn from_serve(sampler: Box<dyn ServeSampler>) -> Self {
+        let (server, writer) = SamplerServer::new(sampler);
+        let (tx, rx) = mpsc::channel::<WriterMsg>();
+        let worker = std::thread::Builder::new()
+            .name("rfsm-serve-writer".into())
+            .spawn(move || writer_loop(writer, &rx))
+            .expect("spawn serving writer");
+        let pinned = Some(server.snapshot());
+        Self {
+            server,
+            tx: Some(tx),
+            worker: Some(worker),
+            pinned,
+            dirty: false,
+            publish_wait_ns: 0,
+        }
+    }
+
+    fn pinned(&self) -> &Arc<SamplerSnapshot> {
+        self.pinned.as_ref().expect("pin released outside sync")
+    }
+
+    fn sender(&self) -> &mpsc::Sender<WriterMsg> {
+        self.tx.as_ref().expect("serving writer already shut down")
+    }
+
+    /// Stage one step's class updates into the shadow copy and return
+    /// immediately — the `O(k · D log n)` tree refresh overlaps whatever
+    /// the caller does next (the step's loss execution).
+    pub fn stage_updates(&mut self, ids: Vec<u32>, embeddings: Matrix) {
+        self.sender()
+            .send(WriterMsg::Stage { ids, embeddings })
+            .expect("serving writer died");
+        self.dirty = true;
+    }
+
+    /// Step boundary: if updates were staged since the last publish, wait
+    /// for the writer to finish applying them, swap the snapshot in, and
+    /// re-pin — so the next draw can never read a stale epoch. Returns
+    /// the pinned epoch.
+    pub fn sync(&mut self) -> u64 {
+        if self.dirty {
+            let t0 = Instant::now();
+            // Release our pin first: the publish retires the snapshot we
+            // are holding, and an outstanding `Arc` would force the
+            // writer's fork fallback instead of the cheap recycle. We
+            // block until the new snapshot is pinned, so no draw can run
+            // in the unpinned window.
+            self.pinned = None;
+            let (ack_tx, ack_rx) = mpsc::sync_channel(1);
+            self.sender()
+                .send(WriterMsg::Publish { ack: ack_tx })
+                .expect("serving writer died");
+            let epoch = ack_rx.recv().expect("serving writer died");
+            self.publish_wait_ns += t0.elapsed().as_nanos() as u64;
+            let snap = self.server.snapshot();
+            debug_assert_eq!(snap.epoch(), epoch, "stale-epoch pin");
+            self.pinned = Some(snap);
+            self.dirty = false;
+        }
+        self.pinned().epoch()
+    }
+
+    /// The pinned snapshot's sampler — what draws should run against.
+    /// Stable between [`DoubleBufferedSampler::sync`] calls.
+    pub fn sampler(&self) -> &dyn Sampler {
+        self.pinned().sampler()
+    }
+
+    /// Reader handle (cloneable; for sharing with external serving
+    /// front ends like the micro-batcher).
+    pub fn server(&self) -> &SamplerServer {
+        &self.server
+    }
+
+    pub fn stats(&self) -> ServingStats {
+        ServingStats {
+            epoch: self.pinned().epoch(),
+            publishes: self.server.publishes(),
+            swap_stalls: self.server.swap_stalls(),
+            publish_wait_ns: self.publish_wait_ns,
+        }
+    }
+}
+
+impl Drop for DoubleBufferedSampler {
+    fn drop(&mut self) {
+        // Closing the channel ends the writer loop.
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn writer_loop(mut writer: SamplerWriter, rx: &mpsc::Receiver<WriterMsg>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WriterMsg::Stage { ids, embeddings } => {
+                writer.apply_updates(ids, embeddings);
+            }
+            WriterMsg::Publish { ack } => {
+                let epoch = writer.publish();
+                let _ = ack.send(epoch);
+                // Shadow catch-up runs after the ack, so it overlaps the
+                // publisher's next phase instead of its step boundary.
+                writer.reclaim_shadow();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featmap::RffMap;
+    use crate::linalg::unit_vector;
+    use crate::rng::Rng;
+    use crate::sampler::ShardedKernelSampler;
+
+    fn sharded(n: usize, d: usize, seed: u64) -> ShardedKernelSampler<RffMap> {
+        let mut rng = Rng::seeded(seed);
+        let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+        let map = RffMap::new(d, 32, 2.0, &mut Rng::seeded(seed + 1));
+        ShardedKernelSampler::with_map(&classes, map, 4, "rff-sharded")
+    }
+
+    #[test]
+    fn staged_updates_land_before_the_next_draw() {
+        let n = 48;
+        let d = 6;
+        let mut reference = sharded(n, d, 600);
+        let mut served =
+            DoubleBufferedSampler::new(&reference).expect("forkable");
+        let mut rng = Rng::seeded(601);
+        let h = unit_vector(&mut rng, d);
+
+        for step in 1..=6u64 {
+            let ids: Vec<u32> = vec![(step % 10) as u32, 40 + step as u32 % 8];
+            let mut emb = Matrix::zeros(ids.len(), d);
+            for r in 0..ids.len() {
+                let v = unit_vector(&mut rng, d);
+                emb.row_mut(r).copy_from_slice(&v);
+            }
+            // Reference applies synchronously; served stages async.
+            reference.update_classes(&ids, &emb);
+            served.stage_updates(ids, emb);
+            // Step boundary: the swap must land before the next draw.
+            let epoch = served.sync();
+            assert_eq!(epoch, step, "one publish per staged step");
+            for i in 0..n {
+                let a = served.sampler().probability(&h, i);
+                let b = reference.probability(&h, i);
+                assert!(
+                    (a - b).abs() < 1e-9 * a.max(b).max(1e-12),
+                    "step {step} class {i}: served {a} vs sync {b}"
+                );
+            }
+        }
+        let stats = served.stats();
+        assert_eq!(stats.publishes, 6);
+        assert_eq!(stats.epoch, 6);
+    }
+
+    #[test]
+    fn sync_without_staged_updates_is_free() {
+        let reference = sharded(16, 4, 610);
+        let mut served = DoubleBufferedSampler::new(&reference).unwrap();
+        assert_eq!(served.sync(), 0);
+        assert_eq!(served.sync(), 0);
+        assert_eq!(served.stats().publishes, 0);
+    }
+}

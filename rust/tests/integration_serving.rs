@@ -1,0 +1,304 @@
+//! Concurrent-correctness tests for the serving subsystem (no artifacts
+//! needed): served draws vs the offline sampler under chi-square, the
+//! Σq = 1 invariant sampled mid-swap under a writer applying updates in
+//! a loop, seeded determinism regardless of thread schedule, and the
+//! trainer-style no-stale-epoch contract of the double-buffered service.
+
+use rfsoftmax::featmap::RffMap;
+use rfsoftmax::linalg::{unit_vector, Matrix};
+use rfsoftmax::rng::Rng;
+use rfsoftmax::sampler::{Sampler, ServeSampler, ShardedKernelSampler};
+use rfsoftmax::serving::{BatcherOptions, MicroBatcher, SamplerServer};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sharded_rff(
+    n: usize,
+    d: usize,
+    shards: usize,
+    seed: u64,
+) -> ShardedKernelSampler<RffMap> {
+    let mut rng = Rng::seeded(seed);
+    let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+    let map = RffMap::new(d, 32, 2.0, &mut Rng::seeded(seed + 1));
+    ShardedKernelSampler::with_map(&classes, map, shards, "rff-sharded")
+}
+
+/// Multi-reader chi-square: draws served through the batcher from many
+/// threads must follow the *offline* sampler's distribution exactly.
+#[test]
+fn served_draws_match_offline_sampler_chi_square() {
+    let n = 64;
+    let d = 8;
+    let offline = sharded_rff(n, d, 4, 1000);
+    let serve: Box<dyn ServeSampler> = offline.fork().unwrap();
+    let (server, _writer) = SamplerServer::new(serve);
+    let batcher = Arc::new(MicroBatcher::spawn(
+        server,
+        BatcherOptions { max_batch: 16, max_wait: Duration::from_micros(200) },
+    ));
+
+    let mut rng = Rng::seeded(1001);
+    let h = unit_vector(&mut rng, d);
+    let threads = 4;
+    let per_thread = 1500;
+    let m = 8;
+    let counts: Vec<Vec<usize>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let batcher = Arc::clone(&batcher);
+                let h = h.clone();
+                scope.spawn(move || {
+                    let mut local = vec![0usize; n];
+                    for i in 0..per_thread {
+                        let reply =
+                            batcher.sample(&h, m, (t * 1_000_000 + i) as u64);
+                        assert_eq!(reply.draw.len(), m);
+                        assert_eq!(reply.epoch, 0);
+                        for &id in &reply.draw.ids {
+                            local[id as usize] += 1;
+                        }
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let trials = threads * per_thread * m;
+    let mut total_counts = vec![0usize; n];
+    for c in &counts {
+        for (tc, x) in total_counts.iter_mut().zip(c) {
+            *tc += x;
+        }
+    }
+    for i in 0..n {
+        let q = offline.probability(&h, i);
+        let expect = q * trials as f64;
+        let sd = (trials as f64 * q * (1.0 - q)).sqrt().max(1.0);
+        assert!(
+            (total_counts[i] as f64 - expect).abs() <= 5.0 * sd + 3.0,
+            "class {i}: served count {} vs offline expectation {expect:.1} \
+             (q = {q:.5})",
+            total_counts[i]
+        );
+    }
+}
+
+/// Σq ≈ 1 sampled mid-swap: readers repeatedly pin snapshots and sum the
+/// full distribution while a writer applies update batches and publishes
+/// in a tight loop. Epochs must also be monotone per reader.
+#[test]
+fn unit_mass_invariant_holds_mid_swap_under_writer_loop() {
+    let n = 48;
+    let d = 6;
+    let offline = sharded_rff(n, d, 4, 1100);
+    let (server, mut writer) = SamplerServer::new(offline.fork().unwrap());
+    let done = Arc::new(AtomicBool::new(false));
+
+    let readers: Vec<_> = (0..4)
+        .map(|r| {
+            let server = server.clone();
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                let mut rng = Rng::seeded(1101 + r);
+                let h = unit_vector(&mut rng, d);
+                let mut last_epoch = 0u64;
+                let mut checks = 0usize;
+                while !done.load(Ordering::Relaxed) {
+                    let snap = server.snapshot();
+                    assert!(snap.epoch() >= last_epoch, "epoch regressed");
+                    last_epoch = snap.epoch();
+                    let total: f64 = (0..n)
+                        .map(|i| snap.sampler().probability(&h, i))
+                        .sum();
+                    assert!(
+                        (total - 1.0).abs() < 1e-6,
+                        "Σq = {total} at epoch {}",
+                        snap.epoch()
+                    );
+                    checks += 1;
+                }
+                checks
+            })
+        })
+        .collect();
+
+    let mut rng = Rng::seeded(1102);
+    for step in 0..60u32 {
+        let ids: Vec<u32> = vec![(step % 47) as u32, 47];
+        let mut emb = Matrix::zeros(2, d);
+        for r in 0..2 {
+            let v = unit_vector(&mut rng, d);
+            emb.row_mut(r).copy_from_slice(&v);
+        }
+        writer.apply_updates(ids, emb);
+        writer.publish();
+    }
+    done.store(true, Ordering::Relaxed);
+    let mut total_checks = 0usize;
+    for h in readers {
+        total_checks += h.join().unwrap();
+    }
+    assert!(total_checks > 0, "readers never ran");
+    assert_eq!(server.epoch(), 60);
+}
+
+/// Seeded determinism of served draws regardless of thread schedule: the
+/// same (seed, query, epoch) request yields the identical draw whether it
+/// is served alone, in a coalesced batch, or re-run later — submission
+/// order and coalescing never leak into the result.
+#[test]
+fn served_draws_are_seed_deterministic_across_schedules() {
+    let n = 56;
+    let d = 8;
+    let offline = sharded_rff(n, d, 4, 1200);
+    let m = 6;
+    let probes = 24usize;
+    let mut rng = Rng::seeded(1201);
+    let queries: Vec<Vec<f32>> =
+        (0..probes).map(|_| unit_vector(&mut rng, d)).collect();
+
+    // Run the same probe set through three very different schedules.
+    let run = |threads: usize, max_batch: usize| -> Vec<Vec<u32>> {
+        let (server, _writer) = SamplerServer::new(offline.fork().unwrap());
+        let batcher = Arc::new(MicroBatcher::spawn(
+            server,
+            BatcherOptions {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+            },
+        ));
+        let mut out: Vec<Vec<u32>> = vec![Vec::new(); probes];
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let batcher = Arc::clone(&batcher);
+                    let queries = &queries;
+                    scope.spawn(move || {
+                        let mut got = Vec::new();
+                        let mut i = t;
+                        while i < probes {
+                            let reply = batcher.sample(
+                                &queries[i],
+                                m,
+                                0xABCD + i as u64,
+                            );
+                            got.push((i, reply.draw.ids));
+                            i += threads;
+                        }
+                        got
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, ids) in h.join().unwrap() {
+                    out[i] = ids;
+                }
+            }
+        });
+        out
+    };
+
+    let serial = run(1, 1); // one reader, never coalesced
+    let batched = run(1, 32); // one reader, aggressive coalescing
+    let threaded = run(4, 32); // racing readers, aggressive coalescing
+    assert_eq!(serial, batched, "coalescing changed served draws");
+    assert_eq!(serial, threaded, "thread schedule changed served draws");
+}
+
+/// Trainer-shaped no-stale-epoch contract: a double-buffered service that
+/// stages updates asynchronously must serve draw t+1 from a state that
+/// includes step t's updates — byte-identical to a synchronous service
+/// with the same seeds (the sharded fork is stream-exact, so ANY stale
+/// read would diverge the id streams).
+#[test]
+fn double_buffered_updates_land_before_next_draw_end_to_end() {
+    use rfsoftmax::coordinator::SamplerService;
+    let n = 96;
+    let d = 8;
+    let m = 12;
+    let build = || -> Box<dyn Sampler> { Box::new(sharded_rff(n, d, 4, 1300)) };
+    let mut direct = SamplerService::new(build(), m, Rng::seeded(1301));
+    let mut served =
+        SamplerService::new_double_buffered(build(), m, Rng::seeded(1301))
+            .expect("sharded rff must fork");
+
+    let mut data_rng = Rng::seeded(1302);
+    for step in 1..=12u64 {
+        // Draw (the served backend publishes staged updates first).
+        let bsz = 8;
+        let mut h = Matrix::zeros(bsz, d);
+        for b in 0..bsz {
+            let v = unit_vector(&mut data_rng, d);
+            h.row_mut(b).copy_from_slice(&v);
+        }
+        let targets: Vec<u32> = (0..bsz as u32).collect();
+        let pd = direct.draw_batch(&h, &targets);
+        let ps = served.draw_batch(&h, &targets);
+        assert_eq!(
+            pd.ids, ps.ids,
+            "step {step}: stale-epoch read (draw streams diverged)"
+        );
+        assert_eq!(pd.adjust, ps.adjust, "step {step}: adjustments diverged");
+
+        // Simulate the optimizer touching a batch of classes, then the
+        // tree propagation: synchronous for `direct`, staged for `served`
+        // (overlapping the next phase).
+        let rows: Vec<usize> =
+            (0..10).map(|j| ((step as usize * 17 + j * 7) % n)).collect();
+        let mut uniq = rows.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        let mut emb = Matrix::zeros(uniq.len(), d);
+        for r in 0..uniq.len() {
+            let v = unit_vector(&mut data_rng, d);
+            emb.row_mut(r).copy_from_slice(&v);
+        }
+        direct.update_classes(&uniq, &emb);
+        served.update_classes(&uniq, &emb);
+    }
+    // Final consistency: one more draw forces the last publish, after
+    // which the pinned snapshot's full distribution matches the direct
+    // sampler's exactly.
+    let h = Matrix::zeros(1, d);
+    let _ = direct.draw_batch(&h, &[0]);
+    let _ = served.draw_batch(&h, &[0]);
+    let mut rng = Rng::seeded(1303);
+    let probe = unit_vector(&mut rng, d);
+    for i in 0..n {
+        let a = direct.sampler().probability(&probe, i);
+        let b = served.sampler().probability(&probe, i);
+        assert!(
+            (a - b).abs() < 1e-12 * a.max(b).max(1e-12),
+            "class {i}: direct {a} vs served {b}"
+        );
+    }
+    let stats = served.serving_stats().unwrap();
+    assert_eq!(stats.publishes, 12, "one swap per staged step");
+    assert_eq!(stats.epoch, 12);
+}
+
+/// top_k served through the server matches the offline ranking.
+#[test]
+fn served_top_k_matches_offline_ranking() {
+    let n = 72;
+    let d = 8;
+    let offline = sharded_rff(n, d, 4, 1400);
+    let (server, _writer) = SamplerServer::new(offline.fork().unwrap());
+    let mut rng = Rng::seeded(1401);
+    for _ in 0..5 {
+        let h = unit_vector(&mut rng, d);
+        let served = server.top_k(&h, 10);
+        let offline_top = offline.top_k(&h, 10);
+        assert_eq!(served.len(), 10);
+        for (j, ((si, sq), (oi, oq))) in
+            served.iter().zip(&offline_top).enumerate()
+        {
+            assert_eq!(si, oi, "rank {j}");
+            assert!((sq - oq).abs() < 1e-12 * oq.max(1e-12), "rank {j}");
+        }
+    }
+}
