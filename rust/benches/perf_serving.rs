@@ -3,9 +3,12 @@
 //! writer churn — the perf trajectory of the serving path, alongside
 //! `perf_hotpath`'s training-path lines.
 //!
-//! Covers `{rff, rff-sharded} × {1, 4, 8}` reader threads and emits one
-//! `BENCH {json}` record per cell with qps, p50/p99 latency (µs), mean
-//! coalesced batch size, published epochs, and swap-stall count.
+//! Covers `{rff, rff-sharded} × {1, 4, 8}` reader threads × `{inproc,
+//! uds}` transports (the uds cells run a mixed `8:1:1`
+//! sample:prob:topk request stream over the real wire protocol) and
+//! emits one `BENCH {json}` record per cell with qps, p50/p99 latency
+//! (µs), mean coalesced batch size, per-kind request counts, published
+//! epochs, swap-stall count, and frame encode/decode overhead.
 //!
 //! Run: `cargo bench --bench perf_serving`
 
@@ -14,11 +17,13 @@ use rfsoftmax::featmap::RffMap;
 use rfsoftmax::linalg::Matrix;
 use rfsoftmax::rng::Rng;
 use rfsoftmax::sampler::{RffSampler, Sampler, ShardedKernelSampler};
-use rfsoftmax::serving::{run_closed_loop, BatcherOptions, LoadSpec};
+use rfsoftmax::serving::{
+    run_closed_loop, BatcherOptions, LoadSpec, RequestMix, TransportMode,
+};
 use std::time::Duration;
 
 fn main() {
-    bench_header("SERVE", "serving subsystem closed-loop load (L3.5)");
+    bench_header("SERVE", "serving subsystem closed-loop load (L3.5 + L4)");
     let n = 20_000;
     let d = 64;
     let num_freqs = 128;
@@ -42,35 +47,51 @@ fn main() {
         ),
     ];
 
-    println!(
-        "\n# closed loop: n={n} d={d} D={num_freqs} m={m}, writer swaps \
-         every 32 updates"
-    );
-    for (label, sampler) in &samplers {
-        for &readers in &[1usize, 4, 8] {
-            let spec = LoadSpec {
-                readers,
-                // Keep total work comparable across thread counts.
-                requests_per_reader: 4000 / readers,
-                m,
-                dim: d,
-                seed: 7,
-                // Natural batching (no artificial wait): with closed-loop
-                // readers, any positive max_wait would dominate the
-                // measured latency instead of the sampler.
-                batcher: BatcherOptions {
-                    max_batch: 32,
-                    max_wait: Duration::ZERO,
-                },
-                updates_per_swap: 32,
-                swap_pause: Duration::from_micros(200),
-            };
-            match run_closed_loop(sampler.as_ref(), &spec) {
-                Ok(report) => {
-                    println!("{}", report.render());
-                    println!("BENCH {}", report.to_json());
+    // (transport, mix, total requests across readers): inproc keeps the
+    // PR-2 pure-sample line comparable across PRs; uds exercises the
+    // wire with a mixed request stream.
+    let transports = [
+        (TransportMode::Inproc, RequestMix { sample: 1, prob: 0, topk: 0 }, 4000),
+        (TransportMode::Uds, RequestMix { sample: 8, prob: 1, topk: 1 }, 2000),
+    ];
+
+    for (tmode, mix, total_requests) in &transports {
+        println!(
+            "\n# closed loop: transport={} mix={} n={n} d={d} D={num_freqs} \
+             m={m}, writer swaps every 32 updates",
+            tmode.name(),
+            mix.label(),
+        );
+        for (label, sampler) in &samplers {
+            for &readers in &[1usize, 4, 8] {
+                let spec = LoadSpec {
+                    readers,
+                    // Keep total work comparable across thread counts.
+                    requests_per_reader: total_requests / readers,
+                    m,
+                    top_k: 10,
+                    dim: d,
+                    seed: 7,
+                    // Natural batching (no artificial wait): with
+                    // closed-loop readers, any positive max_wait would
+                    // dominate the measured latency instead of the
+                    // sampler.
+                    batcher: BatcherOptions {
+                        max_batch: 32,
+                        max_wait: Duration::ZERO,
+                    },
+                    updates_per_swap: 32,
+                    swap_pause: Duration::from_micros(200),
+                    transport: *tmode,
+                    mix: *mix,
+                };
+                match run_closed_loop(sampler.as_ref(), &spec) {
+                    Ok(report) => {
+                        println!("{}", report.render());
+                        println!("BENCH {}", report.to_json());
+                    }
+                    Err(e) => println!("{label}: SKIP ({e})"),
                 }
-                Err(e) => println!("{label}: SKIP ({e})"),
             }
         }
     }

@@ -221,12 +221,18 @@ pub struct ServingConfig {
     /// updates" item. Always *distribution*-identical to synchronous
     /// mode, and draw-*stream*-identical when the sampler's `fork` is an
     /// exact clone (sharded kernel trees, static samplers); the
-    /// unsharded kernel samplers fork onto a 1-shard sharded tree whose
-    /// walk consumes RNG differently, so their streams diverge even
-    /// though the distribution does not. Off by default so the
-    /// single-threaded path stays the reference. Requires a sampler that
-    /// supports serving forks (all kernel and static samplers; not the
-    /// bucket fallback).
+    /// unsharded kernel samplers route onto a 1-shard sharded tree under
+    /// this flag, so their served streams are exact too.
+    ///
+    /// **On by default** (flipped in PR 3 per the ROADMAP, gated on the
+    /// stream-exact direct-vs-double-buffered equivalence tests in
+    /// `rust/tests/integration_serving.rs`): the tree refresh overlaps
+    /// the step at no distributional cost. Set
+    /// `--serving.double_buffer false` to keep the single-threaded
+    /// synchronous reference path. Samplers without a serving fork (the
+    /// quadratic bucket memory fallback) degrade to synchronous updates
+    /// with a one-line stderr warning instead of failing, so the default
+    /// stays trainable at every size.
     pub double_buffer: bool,
     /// Micro-batcher: max requests coalesced into one serving batch.
     pub max_batch: usize,
@@ -240,7 +246,7 @@ pub struct ServingConfig {
 
 impl Default for ServingConfig {
     fn default() -> Self {
-        Self { double_buffer: false, max_batch: 32, max_wait_us: 0 }
+        Self { double_buffer: true, max_batch: 32, max_wait_us: 0 }
     }
 }
 
@@ -693,17 +699,19 @@ mod tests {
     #[test]
     fn serving_keys_round_trip() {
         let mut c = Config::default();
-        assert!(!c.serving.double_buffer);
-        c.set("serving.double_buffer", "true").unwrap();
+        // On by default since PR 3 (ROADMAP flip, gated on the
+        // stream-exact equivalence tests).
+        assert!(c.serving.double_buffer);
+        c.set("serving.double_buffer", "false").unwrap();
         c.set("serving.max_batch", "64").unwrap();
         c.set("serving.max_wait_us", "500").unwrap();
-        assert!(c.serving.double_buffer);
+        assert!(!c.serving.double_buffer);
         assert_eq!(c.serving.max_batch, 64);
         assert_eq!(c.serving.max_wait_us, 500);
         let j = c.to_json();
         let mut c2 = Config::default();
         c2.apply_json(&j).unwrap();
-        assert!(c2.serving.double_buffer);
+        assert!(!c2.serving.double_buffer);
         assert_eq!(c2.serving.max_batch, 64);
         assert_eq!(c2.serving.max_wait_us, 500);
         c.serving.max_batch = 0;

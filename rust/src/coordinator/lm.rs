@@ -136,17 +136,20 @@ impl<'rt> LmTrainer<'rt> {
                 shapes.m
             );
             let svc_rng = Rng::seeded(cfg.sampler.seed);
-            // serving.double_buffer stages each step's update_classes
-            // into a shadow sampler on a writer thread so the tree
-            // refresh overlaps the step; the swap lands before the next
-            // draw (see rust/src/serving). Distribution-identical to the
-            // synchronous path (and stream-identical when the sampler's
-            // fork is exact, e.g. sharded trees).
-            Some(if cfg.serving.double_buffer {
-                SamplerService::new_double_buffered(sampler, shapes.m, svc_rng)?
-            } else {
-                SamplerService::new(sampler, shapes.m, svc_rng)
-            })
+            // serving.double_buffer (default on) stages each step's
+            // update_classes into a shadow sampler on a writer thread so
+            // the tree refresh overlaps the step; the swap lands before
+            // the next draw (see rust/src/serving). Distribution-
+            // identical to the synchronous path (and stream-identical
+            // when the sampler's fork is exact, e.g. sharded trees).
+            // Samplers without a serving fork (the quadratic bucket
+            // fallback) degrade to synchronous updates with a warning.
+            Some(SamplerService::new_auto(
+                sampler,
+                shapes.m,
+                svc_rng,
+                cfg.serving.double_buffer,
+            ))
         };
 
         let optimizer = Optimizer::from_config(&cfg.train);

@@ -80,8 +80,8 @@ pub fn build_sampler(
             // alive (published snapshot + shadow) and holds a third
             // transiently while forking at construction, so the budget
             // is charged per copy. (The bucket fallback does not support
-            // serving forks; hitting it with serving.double_buffer set
-            // surfaces as a clear construction error.)
+            // serving forks; the trainers' `new_auto` degrades it to
+            // synchronous updates with a warning.)
             let d = classes.cols();
             let dim = d * d + 1;
             let per_copy = KernelTree::estimate_bytes(n, dim)
@@ -205,6 +205,37 @@ impl SamplerService {
             rng,
             scratch: Matrix::zeros(0, 0),
         })
+    }
+
+    /// The trainers' entry point now that `serving.double_buffer`
+    /// defaults to on: double-buffered when requested *and* the sampler
+    /// supports serving forks, synchronous otherwise — so a default
+    /// config still trains samplers without a fork (the quadratic bucket
+    /// memory fallback) instead of failing at construction; the
+    /// downgrade is reported once on stderr.
+    pub fn new_auto(
+        sampler: Box<dyn Sampler>,
+        m: usize,
+        rng: Rng,
+        double_buffer: bool,
+    ) -> Self {
+        assert!(m > 0);
+        if double_buffer {
+            if let Some(served) = DoubleBufferedSampler::new(sampler.as_ref()) {
+                return Self {
+                    backend: Backend::Served(served),
+                    m,
+                    rng,
+                    scratch: Matrix::zeros(0, 0),
+                };
+            }
+            eprintln!(
+                "serving.double_buffer: sampler '{}' does not support \
+                 serving forks; falling back to synchronous updates",
+                sampler.name()
+            );
+        }
+        Self::new(sampler, m, rng)
     }
 
     pub fn name(&self) -> &'static str {
@@ -588,6 +619,53 @@ mod tests {
         assert_eq!(stats.epoch, 5);
         assert_eq!(stats.swap_stalls, 0);
         assert!(direct.serving_stats().is_none());
+    }
+
+    #[test]
+    fn new_auto_degrades_to_direct_when_fork_unsupported() {
+        // A sampler without a serving fork (like the quadratic bucket
+        // fallback) must still construct under the double_buffer default
+        // — synchronously, not with an error.
+        struct NoFork;
+        impl Sampler for NoFork {
+            fn num_classes(&self) -> usize {
+                8
+            }
+            fn sample(
+                &self,
+                _h: &[f32],
+                m: usize,
+                rng: &mut Rng,
+            ) -> NegativeDraw {
+                let ids: Vec<u32> =
+                    (0..m).map(|_| rng.index(8) as u32).collect();
+                NegativeDraw { ids, probs: vec![1.0 / 8.0; m] }
+            }
+            fn probability(&self, _h: &[f32], _class: usize) -> f64 {
+                1.0 / 8.0
+            }
+            fn update_class(&mut self, _class: usize, _embedding: &[f32]) {}
+            fn name(&self) -> &'static str {
+                "nofork"
+            }
+        }
+        let svc =
+            SamplerService::new_auto(Box::new(NoFork), 3, Rng::seeded(1), true);
+        assert!(!svc.is_double_buffered(), "fork-less must degrade");
+        let svc = SamplerService::new_auto(
+            Box::new(UniformSampler::new(8)),
+            3,
+            Rng::seeded(1),
+            true,
+        );
+        assert!(svc.is_double_buffered(), "forkable + requested must serve");
+        let svc = SamplerService::new_auto(
+            Box::new(UniformSampler::new(8)),
+            3,
+            Rng::seeded(1),
+            false,
+        );
+        assert!(!svc.is_double_buffered(), "not requested must stay direct");
     }
 
     #[test]

@@ -118,14 +118,17 @@ impl<'rt> XcTrainer<'rt> {
             let prior = data.class_prior();
             let sampler = build_sampler(&cfg, &normalized, Some(&prior), &mut rng)?;
             let svc_rng = Rng::seeded(cfg.sampler.seed);
-            // serving.double_buffer overlaps tree refresh with the step
-            // (see rust/src/serving); distribution-identical to the
-            // synchronous path (stream-exact for exact forks).
-            Some(if cfg.serving.double_buffer {
-                SamplerService::new_double_buffered(sampler, shapes.m, svc_rng)?
-            } else {
-                SamplerService::new(sampler, shapes.m, svc_rng)
-            })
+            // serving.double_buffer (default on) overlaps tree refresh
+            // with the step (see rust/src/serving); distribution-
+            // identical to the synchronous path (stream-exact for exact
+            // forks). Fork-less samplers degrade to synchronous updates
+            // with a warning.
+            Some(SamplerService::new_auto(
+                sampler,
+                shapes.m,
+                svc_rng,
+                cfg.serving.double_buffer,
+            ))
         };
 
         let optimizer = Optimizer::from_config(&cfg.train);

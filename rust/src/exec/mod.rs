@@ -1,7 +1,9 @@
 //! Execution substrate: thread pool, bounded channels, the
 //! double-buffered prefetch pipeline the coordinator uses to overlap
-//! negative sampling (L3) with PJRT execution (runtime), and the
-//! [`CoalesceQueue`] front end the serving micro-batcher drains.
+//! negative sampling (L3) with PJRT execution (runtime), the
+//! [`CoalesceQueue`] front end the serving micro-batcher drains, and the
+//! process-wide persistent [`serve_pool`] that the serving fan-out
+//! ([`serve_map`]) runs on instead of spawning scoped threads per batch.
 //!
 //! tokio is unavailable offline (DESIGN.md §2); the coordinator's
 //! concurrency needs are CPU-bound fan-out + a bounded producer/consumer
@@ -25,9 +27,53 @@ pub fn recommended_workers() -> usize {
         .min(16)
 }
 
+/// The process-wide persistent worker pool behind the serving fan-out
+/// ([`serve_map`]): spawned lazily on first use with
+/// [`recommended_workers`] threads and shared by every micro-batcher and
+/// transport connection in the process. Keeping the workers alive is
+/// what removes per-batch thread spawns from the serve path (ROADMAP
+/// item) — a coalesced wave costs one FIFO push per worker, not an OS
+/// `clone`.
+pub fn serve_pool() -> &'static ThreadPool {
+    static POOL: std::sync::OnceLock<ThreadPool> = std::sync::OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(recommended_workers()))
+}
+
+/// Run `f(i)` for `i in 0..n` on the shared [`serve_pool`] using up to
+/// `workers` pool jobs — the zero-spawn sibling of [`parallel_map`] for
+/// the latency-critical serving path. Results in index order; a panic in
+/// `f` re-raises here (pool workers survive). Must not be called from
+/// inside a pool job (see [`ThreadPool::run_wave`]).
+pub fn serve_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let pool = serve_pool();
+    slot_map(n, workers.min(pool.size()), f, Some(pool))
+}
+
 /// Run `f(i)` for `i in 0..n` across `workers` threads (scoped; borrows
 /// allowed). Results are returned in index order.
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    slot_map(n, workers, f, None)
+}
+
+/// Shared work-stealing scaffolding behind [`parallel_map`] and
+/// [`serve_map`]: `workers` jobs race an atomic index over `0..n`,
+/// writing results into per-index slots. `pool` picks where the jobs
+/// run — `Some` executes them as a [`ThreadPool::run_wave`] on
+/// persistent workers, `None` spawns scoped threads.
+fn slot_map<T, F>(
+    n: usize,
+    workers: usize,
+    f: F,
+    pool: Option<&ThreadPool>,
+) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
@@ -37,23 +83,42 @@ where
         return Vec::new();
     }
     let workers = workers.min(n);
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
-        out.iter_mut().map(std::sync::Mutex::new).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let v = f(i);
-                **slots[i].lock().unwrap() = Some(v);
-            });
+    {
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        let next = &next;
+        let slots = &slots;
+        let f = &f;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..workers)
+            .map(|_| {
+                Box::new(move || loop {
+                    let i =
+                        next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    **slots[i].lock().unwrap() = Some(v);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        match pool {
+            Some(pool) => pool.run_wave(jobs),
+            None => {
+                std::thread::scope(|scope| {
+                    for job in jobs {
+                        scope.spawn(job);
+                    }
+                });
+            }
         }
-    });
-    out.into_iter().map(|o| o.expect("parallel_map: missing slot")).collect()
+    }
+    out.into_iter().map(|o| o.expect("slot_map: missing slot")).collect()
 }
 
 #[cfg(test)]
@@ -99,5 +164,40 @@ mod tests {
             counter.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn serve_map_matches_parallel_map_semantics() {
+        let got = serve_map(100, 4, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+        let empty: Vec<usize> = serve_map(0, 4, |i| i);
+        assert!(empty.is_empty());
+        // Single-worker request degrades to the serial path.
+        let serial = serve_map(10, 1, |i| i + 1);
+        assert_eq!(serial, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serve_map_runs_on_pool_workers_not_fresh_spawns() {
+        // Two back-to-back waves must observe the same persistent worker
+        // thread ids (the pool is shared and lazily spawned once).
+        let collect_ids = || {
+            let ids = std::sync::Mutex::new(std::collections::HashSet::new());
+            serve_map(64, 8, |_| {
+                std::thread::yield_now();
+                ids.lock()
+                    .unwrap()
+                    .insert(std::thread::current().id());
+            });
+            ids.into_inner().unwrap()
+        };
+        let a = collect_ids();
+        let b = collect_ids();
+        assert!(!a.is_empty());
+        assert!(
+            a.intersection(&b).count() >= 1,
+            "waves shared no pool worker: {a:?} vs {b:?}"
+        );
     }
 }

@@ -1,7 +1,14 @@
 //! Fixed-size thread pool with a shared FIFO queue. Jobs are boxed
 //! closures; `join()` blocks until the queue drains and all workers are
 //! idle. Workers park on a condvar when idle.
+//!
+//! [`ThreadPool::run_wave`] is the borrowing entry point: it executes a
+//! batch of *non-`'static`* jobs on the persistent workers and blocks
+//! until every one has completed — the zero-spawn replacement for
+//! `std::thread::scope` on the serving hot path (ROADMAP: route
+//! `fan_out_serve` through a persistent worker pool).
 
+use std::any::Any;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -71,6 +78,112 @@ impl ThreadPool {
         let mut st = self.shared.queue.lock().unwrap();
         while !st.jobs.is_empty() || st.in_flight > 0 {
             st = self.shared.idle_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Execute a wave of borrowing jobs on the persistent workers and
+    /// block until every one has completed. This is the pool's
+    /// `std::thread::scope` equivalent: jobs may capture `'scope`
+    /// references because `run_wave` does not return until the last job
+    /// has run, so no borrow outlives its owner.
+    ///
+    /// A panic inside a job is caught on the worker (pool threads never
+    /// die) and re-raised *here* once the wave drains — the same
+    /// propagation a scoped spawn's `join` gives, which is what the
+    /// serving batcher's `catch_unwind` relies on. Only the first panic
+    /// payload is kept.
+    ///
+    /// Waves from different caller threads may interleave in the shared
+    /// FIFO; each caller waits only for its own jobs. Do **not** call
+    /// `run_wave` from inside a pool job: the inner wave would wait for
+    /// queue slots its own caller is occupying and can deadlock.
+    pub fn run_wave<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        struct Wave {
+            remaining: Mutex<usize>,
+            done: Condvar,
+            panic: Mutex<Option<Box<dyn Any + Send>>>,
+        }
+        impl Wave {
+            fn wait(&self) {
+                let mut rem = self.remaining.lock().unwrap();
+                while *rem > 0 {
+                    rem = self.done.wait(rem).unwrap();
+                }
+            }
+        }
+        let n_jobs = jobs.len();
+        let wave = Arc::new(Wave {
+            remaining: Mutex::new(n_jobs),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        // Every successfully-queued lifetime-erased job must complete
+        // before run_wave returns OR unwinds — a queued job still
+        // references the caller's stack. `execute` can panic mid-loop
+        // (pool concurrently shut down), so the enqueue loop runs under
+        // catch_unwind, never-queued jobs are cancelled out of the
+        // count, and the wait happens on every exit path before the
+        // panic (enqueue's or a job's) is re-raised.
+        let mut enqueued = 0usize;
+        let mut enqueue_panic: Option<Box<dyn Any + Send>> = None;
+        for job in jobs {
+            // SAFETY: all exit paths below wait until `remaining == 0`
+            // before returning or resuming an unwind, i.e. until every
+            // queued closure has finished running (a panic inside one is
+            // caught, counted, payload stored), so every `'scope` borrow
+            // strictly outlives its execution. Only the lifetime is
+            // erased; the vtable/layout is unchanged.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'scope>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            let job_wave = Arc::clone(&wave);
+            let worker_job = move || {
+                let result =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                if let Err(p) = result {
+                    let mut slot = job_wave.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(p);
+                    }
+                }
+                let mut rem = job_wave.remaining.lock().unwrap();
+                *rem -= 1;
+                if *rem == 0 {
+                    job_wave.done.notify_all();
+                }
+            };
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.execute(worker_job)
+            })) {
+                Ok(()) => enqueued += 1,
+                Err(p) => {
+                    enqueue_panic = Some(p);
+                    break;
+                }
+            }
+        }
+        if enqueue_panic.is_some() {
+            // Cancel the jobs that never made it into the queue (the one
+            // that panicked in `execute` plus any unconsumed remainder —
+            // `execute` asserts before pushing, so a panicking enqueue
+            // queued nothing). Queued jobs were pushed before any
+            // shutdown flag landed, so workers drain them and the wait
+            // below terminates.
+            let mut rem = wave.remaining.lock().unwrap();
+            *rem -= n_jobs - enqueued;
+            if *rem == 0 {
+                wave.done.notify_all();
+            }
+        }
+        wave.wait();
+        if let Some(p) = enqueue_panic {
+            std::panic::resume_unwind(p);
+        }
+        if let Some(p) = wave.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(p);
         }
     }
 }
@@ -159,6 +272,85 @@ mod tests {
         pool.join();
         drop(pool);
         assert_eq!(counter.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn run_wave_borrows_and_blocks_until_done() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0usize; 64];
+        {
+            let slots: Vec<Mutex<&mut usize>> =
+                out.iter_mut().map(Mutex::new).collect();
+            let slots = &slots;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..64)
+                .map(|i| {
+                    Box::new(move || {
+                        **slots[i].lock().unwrap() = i * 3;
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_wave(jobs);
+        }
+        // run_wave returned ⇒ every borrow-writing job has completed.
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 3);
+        }
+    }
+
+    #[test]
+    fn run_wave_propagates_panics_and_keeps_workers_alive() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("wave job boom")),
+            ];
+            pool.run_wave(jobs);
+        }));
+        assert!(caught.is_err(), "job panic must re-raise in the caller");
+        // The pool survives the panic and keeps serving new waves.
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_wave(jobs);
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn run_wave_empty_is_a_no_op() {
+        let pool = ThreadPool::new(1);
+        pool.run_wave(Vec::new());
+    }
+
+    #[test]
+    fn concurrent_waves_from_many_threads_complete_independently() {
+        let pool = Arc::new(ThreadPool::new(3));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    let counter = AtomicUsize::new(0);
+                    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..50)
+                        .map(|_| {
+                            Box::new(|| {
+                                counter.fetch_add(1, Ordering::Relaxed);
+                            })
+                                as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    pool.run_wave(jobs);
+                    assert_eq!(counter.load(Ordering::Relaxed), 50, "wave {t}");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

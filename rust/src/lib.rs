@@ -23,11 +23,21 @@
 //!   sampler snapshots behind an O(1) atomic swap so many reader threads
 //!   serve `sample`/`probability`/`top_k` while a single writer applies
 //!   batched class updates to a double-buffered shadow;
-//!   [`serving::MicroBatcher`] coalesces concurrent requests into one
-//!   `map_batch` gemm + fanned-out walks. The trainers route
-//!   `update_classes` through the same machinery when
-//!   `serving.double_buffer` is set, overlapping tree refresh with the
-//!   step's loss execution.
+//!   [`serving::MicroBatcher`] coalesces concurrent requests of *every*
+//!   kind into one `map_batch` gemm + per-row tree operations fanned out
+//!   on the persistent [`exec::serve_pool`] (zero per-batch thread
+//!   spawns). The trainers route `update_classes` through the same
+//!   machinery under `serving.double_buffer` (on by default),
+//!   overlapping tree refresh with the step's loss execution.
+//! * **L4 ([`transport`])** — the cross-process serving transport: a
+//!   std-only, length-prefixed, versioned binary wire protocol over
+//!   Unix domain sockets ([`transport::wire`]), a
+//!   [`transport::TransportServer`] accept loop feeding decoded
+//!   requests from every connection into the shared micro-batcher (so
+//!   coalescing spans connections), and a
+//!   [`transport::TransportClient`] with sync and pipelined modes.
+//!   Per-request seeds ride the wire, so identical seeds produce
+//!   byte-identical draws in-process and remotely.
 //! * **L2 (JAX, build time)** — model fwd/bwd (`python/compile/model.py`),
 //!   AOT-lowered to HLO text once by `make artifacts`.
 //! * **L1 (Pallas, build time)** — the RFF feature-map and fused
@@ -94,27 +104,45 @@
 //! let draw = sharded.sample_batch(&queries, &targets, 10, &mut rng);
 //! assert_eq!(draw.total(), 80);
 //!
-//! // Online serving: epoch-versioned snapshots + request micro-batching.
+//! // Online serving: epoch-versioned snapshots + request micro-batching
+//! // (sample, probability, and top_k all coalesce into shared waves).
 //! // Readers pin immutable snapshots (never blocking on the writer);
 //! // the writer refreshes a shadow copy and publishes with an O(1) swap.
 //! let (server, mut writer) = SamplerServer::new(sharded.fork().unwrap());
-//! let batcher = MicroBatcher::spawn(server.clone(), BatcherOptions::default());
+//! let batcher = std::sync::Arc::new(MicroBatcher::spawn(
+//!     server.clone(),
+//!     BatcherOptions::default(),
+//! ));
 //! let reply = batcher.sample(queries.row(0), 10, /*seed=*/ 7);
 //! assert_eq!(reply.epoch, 0);
-//! let top = server.top_k(queries.row(0), 5); // best-first tree search
+//! let (top, _epoch) = batcher.top_k(queries.row(0), 5); // best-first search
 //! assert_eq!(top.len(), 5);
 //! let mut emb = Matrix::zeros(1, 32);
 //! emb.row_mut(0).copy_from_slice(queries.row(1));
 //! writer.apply_updates(vec![3], emb); // shadow only — readers unaffected
 //! assert_eq!(writer.publish(), 1);    // atomic epoch-tagged swap
 //! assert_eq!(server.epoch(), 1);
+//!
+//! // L4 — cross-process serving: the same batcher behind a unix-socket
+//! // wire protocol. Mixed queries, seeds on the wire, so draws are
+//! // byte-identical to the in-process `batcher.sample` for equal seeds.
+//! let sock = std::env::temp_dir()
+//!     .join(format!("rfsm-quickstart-{}.sock", std::process::id()));
+//! let server4 = TransportServer::bind(&sock, std::sync::Arc::clone(&batcher))
+//!     .unwrap();
+//! let mut client = TransportClient::connect(server4.path()).unwrap();
+//! let wired = client.sample(queries.row(0), 10, /*seed=*/ 7).unwrap();
+//! assert_eq!(wired.draw, batcher.sample(queries.row(0), 10, 7).draw);
+//! let (_q, _epoch) = client.probability(queries.row(0), 3).unwrap();
+//! let (_top, _epoch) = client.top_k(queries.row(0), 5).unwrap();
 //! ```
 //!
 //! See `examples/` for end-to-end training drivers and `rust/benches/` for
 //! the harnesses that regenerate every table and figure of the paper
 //! (plus `perf_hotpath` / `perf_serving` for the hot-path and serving
 //! throughput trajectories, and `rfsoftmax serve-bench` for a closed-loop
-//! load test from the CLI).
+//! load test from the CLI — `serve-bench --transport uds --mix 8:1:1`
+//! drives it cross-process through the L4 wire).
 
 pub mod benchkit;
 pub mod bias;
@@ -137,6 +165,7 @@ pub mod sampler;
 pub mod serving;
 pub mod softmax;
 pub mod tables;
+pub mod transport;
 
 /// Commonly used items, re-exported for examples and downstream users.
 pub mod prelude {
@@ -151,12 +180,16 @@ pub mod prelude {
     pub use crate::sampler::{
         AliasSampler, BatchDraw, BucketKernelSampler, ExactSoftmaxSampler,
         GumbelTopKSampler, KernelTree, LogUniformSampler, NegativeDraw,
-        QuadraticSampler, RffSampler, Sampler, ServeSampler,
-        ShardedKernelSampler, ShardedKernelTree, UniformSampler,
+        QuadraticSampler, RffSampler, Sampler, ServeAnswer, ServeQuery,
+        ServeSampler, ShardedKernelSampler, ShardedKernelTree, UniformSampler,
     };
     pub use crate::serving::{
-        BatcherOptions, DoubleBufferedSampler, MicroBatcher, SamplerServer,
-        SamplerSnapshot, SamplerWriter, ServeReply,
+        BatcherOptions, DoubleBufferedSampler, MicroBatcher, QueryReply,
+        RequestMix, SamplerServer, SamplerSnapshot, SamplerWriter, ServeReply,
+        TransportMode,
+    };
+    pub use crate::transport::{
+        ProtocolError, TransportClient, TransportServer, TransportStats,
     };
     pub use crate::softmax::{
         full_softmax_loss, sampled_softmax_loss, SampledLoss,

@@ -6,6 +6,7 @@
 //! rfsoftmax sample --sampler.kind rff  # standalone sampling demo
 //! rfsoftmax bias --sampler.kind uniform
 //! rfsoftmax serve-bench --threads 8 --sampler.shards 8  # serving load test
+//! rfsoftmax serve-bench --transport uds --mix 8:1:1     # cross-process wire
 //! ```
 
 use anyhow::{bail, Result};
@@ -177,11 +178,14 @@ fn cmd_sample(raw: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Closed-loop serving load generator: R reader threads issuing `sample`
-/// requests through the micro-batcher while a writer applies batched
-/// class updates and publishes epoch-tagged snapshot swaps. Emits a
-/// human-readable summary plus a machine-readable `BENCH {json}` line
-/// (qps, p50/p99 latency, coalescing, swap stalls).
+/// Closed-loop serving load generator: R reader threads issuing a
+/// configurable mix of `sample`/`probability`/`top_k` requests — either
+/// straight into the micro-batcher (`--transport inproc`) or as real
+/// wire-protocol clients over a unix socket (`--transport uds`) — while
+/// a writer applies batched class updates and publishes epoch-tagged
+/// snapshot swaps. Emits a human-readable summary plus a
+/// machine-readable `BENCH {json}` line (qps, p50/p99 latency,
+/// coalescing, swap stalls, frame codec overhead).
 fn cmd_serve_bench(raw: &[String]) -> Result<()> {
     let a = Args::parse(raw, &["help", "no-writer"])?;
     if a.has("help") {
@@ -193,13 +197,28 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
                 &[
                     FlagSpec {
                         name: "threads",
-                        help: "concurrent reader threads",
+                        help: "concurrent reader threads (uds: one connection each)",
                         default: Some("4".into()),
                     },
                     FlagSpec {
                         name: "requests",
                         help: "requests per reader",
                         default: Some("2000".into()),
+                    },
+                    FlagSpec {
+                        name: "transport",
+                        help: "inproc (direct batcher calls) or uds (unix-socket wire)",
+                        default: Some("inproc".into()),
+                    },
+                    FlagSpec {
+                        name: "mix",
+                        help: "sample:prob:topk request-mix weights",
+                        default: Some("1:0:0".into()),
+                    },
+                    FlagSpec {
+                        name: "top-k",
+                        help: "k for top_k requests in the mix",
+                        default: Some("10".into()),
                     },
                     FlagSpec {
                         name: "updates-per-swap",
@@ -229,6 +248,10 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
     let cfg = Config::load(a.get("config"), split_config_overrides(&a).into_iter())?;
     let threads = a.usize_or("threads", 4)?;
     let requests = a.usize_or("requests", 2000)?;
+    let transport =
+        rfsoftmax::serving::TransportMode::parse(a.str_or("transport", "inproc"))?;
+    let mix = rfsoftmax::serving::RequestMix::parse(a.str_or("mix", "1:0:0"))?;
+    let top_k = a.usize_or("top-k", 10)?;
     let updates_per_swap = if a.has("no-writer") {
         0
     } else {
@@ -248,6 +271,7 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
         readers: threads,
         requests_per_reader: requests,
         m: cfg.sampler.num_negatives,
+        top_k,
         dim: d,
         seed: cfg.sampler.seed,
         batcher: rfsoftmax::serving::BatcherOptions {
@@ -256,12 +280,16 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
         },
         updates_per_swap,
         swap_pause: std::time::Duration::from_micros(200),
+        transport,
+        mix,
     };
     println!(
-        "serve-bench: sampler={} n={n} d={d} m={} readers={threads} \
-         requests/reader={requests} max_batch={} max_wait={}µs",
+        "serve-bench: sampler={} n={n} d={d} m={} transport={} mix={} \
+         readers={threads} requests/reader={requests} max_batch={} max_wait={}µs",
         sampler.name(),
         spec.m,
+        transport.name(),
+        mix.label(),
         cfg.serving.max_batch,
         cfg.serving.max_wait_us,
     );

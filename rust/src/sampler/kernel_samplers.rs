@@ -162,23 +162,34 @@ impl<M: FeatureMap + Clone + 'static> Sampler for KernelSampler<M> {
         BatchDraw { draws }
     }
 
-    /// Serving batch entry: one `map_batch` gemm, then per-row walks via
-    /// [`super::fan_out_serve`] on per-seed RNG streams (no scratch
-    /// `RefCell` on this path, so it is safe regardless of how the
-    /// caller fans rows out).
-    fn serve_batch(
+    /// Mixed-kind serving wave: one `map_batch` gemm regardless of query
+    /// kind, then per-row φ-level tree operations via
+    /// [`super::fan_out_queries`] on the persistent serve pool (no
+    /// scratch `RefCell` on this path, so it is safe regardless of how
+    /// the caller fans rows out). Also powers `serve_batch` through the
+    /// trait-level wrapper.
+    fn serve_queries(
         &self,
         h: &Matrix,
-        ms: &[usize],
-        seeds: &[u64],
-    ) -> Vec<NegativeDraw> {
-        assert_eq!(h.rows(), ms.len(), "serve_batch: ms mismatch");
-        assert_eq!(h.rows(), seeds.len(), "serve_batch: seeds mismatch");
-        let queries = self.map.map_batch(h);
+        queries: &[super::ServeQuery],
+    ) -> Vec<super::ServeAnswer> {
+        assert_eq!(h.rows(), queries.len(), "serve_queries: length mismatch");
+        let phi = self.map.map_batch(h);
         let tree = &self.tree;
-        super::fan_out_serve(ms, seeds, |b, rng| {
-            let (ids, probs) = tree.sample_many(queries.row(b), ms[b], rng);
-            NegativeDraw { ids, probs }
+        super::fan_out_queries(queries, |b| match queries[b] {
+            super::ServeQuery::Sample { m, seed } => {
+                let mut rng = Rng::seeded(seed);
+                let (ids, probs) = tree.sample_many(phi.row(b), m, &mut rng);
+                super::ServeAnswer::Sample(NegativeDraw { ids, probs })
+            }
+            super::ServeQuery::Probability { class } => {
+                super::ServeAnswer::Probability(
+                    tree.probability(phi.row(b), class),
+                )
+            }
+            super::ServeQuery::TopK { k } => {
+                super::ServeAnswer::TopK(tree.top_k(phi.row(b), k))
+            }
         })
     }
 
@@ -384,13 +395,12 @@ impl Sampler for RffSampler {
         self.inner().sample_batch_shared(h, m, rng)
     }
 
-    fn serve_batch(
+    fn serve_queries(
         &self,
         h: &Matrix,
-        ms: &[usize],
-        seeds: &[u64],
-    ) -> Vec<NegativeDraw> {
-        self.inner().serve_batch(h, ms, seeds)
+        queries: &[super::ServeQuery],
+    ) -> Vec<super::ServeAnswer> {
+        self.inner().serve_queries(h, queries)
     }
 
     fn top_k(&self, h: &[f32], k: usize) -> Vec<(u32, f64)> {
@@ -474,13 +484,12 @@ impl Sampler for QuadraticSampler {
         self.inner.sample_batch_shared(h, m, rng)
     }
 
-    fn serve_batch(
+    fn serve_queries(
         &self,
         h: &Matrix,
-        ms: &[usize],
-        seeds: &[u64],
-    ) -> Vec<NegativeDraw> {
-        self.inner.serve_batch(h, ms, seeds)
+        queries: &[super::ServeQuery],
+    ) -> Vec<super::ServeAnswer> {
+        self.inner.serve_queries(h, queries)
     }
 
     fn top_k(&self, h: &[f32], k: usize) -> Vec<(u32, f64)> {

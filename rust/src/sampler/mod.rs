@@ -89,36 +89,42 @@ pub(crate) fn fan_out_draws(
     }
 }
 
-/// Shared fan-out for the serving batch path ([`Sampler::serve_batch`]
-/// overrides): row `b` draws on an RNG stream derived only from
-/// `seeds[b]`, so results depend on nothing but (seed, sampler state) —
-/// not batch composition or thread schedule.
+/// Shared fan-out for the serving path ([`Sampler::serve_queries`]
+/// overrides): row `b`'s answer is computed by `answer(b)` — for sample
+/// queries on an RNG stream derived only from the request's own seed, so
+/// results depend on nothing but (query, sampler state), not batch
+/// composition or thread schedule.
 ///
-/// The parallel cutoff is higher than [`fan_out_draws`]'s: this sits on
-/// the micro-batcher's latency-critical path and `parallel_map` spawns
-/// scoped OS threads per call, so small coalesced batches stay serial —
-/// the spawn cost would dominate their `O(D log n)` walks. (Routing
-/// serving fan-outs through a persistent worker pool is a ROADMAP item.)
-pub(crate) fn fan_out_serve(
-    ms: &[usize],
-    seeds: &[u64],
-    draw: impl Fn(usize, &mut Rng) -> NegativeDraw + Sync,
-) -> Vec<NegativeDraw> {
-    let bsz = ms.len();
-    debug_assert_eq!(bsz, seeds.len());
+/// Rows run on the persistent [`crate::exec::serve_pool`] via
+/// [`crate::exec::serve_map`] — zero per-batch thread spawns on the
+/// serve path (ROADMAP item; the old scoped-spawn route needed a 256-walk
+/// cutoff just to amortize `clone(2)`). The remaining cutoff only guards
+/// FIFO-dispatch overhead for tiny waves, so it matches
+/// [`fan_out_draws`]'s 64-walk threshold.
+pub(crate) fn fan_out_queries(
+    queries: &[ServeQuery],
+    answer: impl Fn(usize) -> ServeAnswer + Sync,
+) -> Vec<ServeAnswer> {
+    let bsz = queries.len();
     if bsz == 0 {
         return Vec::new();
     }
-    let run = |b: usize| {
-        let mut rng = Rng::seeded(seeds[b]);
-        draw(b, &mut rng)
-    };
-    let total: usize = ms.iter().sum();
+    // Rough walk-count cost per query kind: a sample is m walks, a top-k
+    // is a best-first search over ~k frontier expansions (heavier per
+    // unit, hence the factor), a probability is one root→leaf product.
+    let total: usize = queries
+        .iter()
+        .map(|q| match q {
+            ServeQuery::Sample { m, .. } => *m,
+            ServeQuery::TopK { k } => *k * 4,
+            ServeQuery::Probability { .. } => 1,
+        })
+        .sum();
     let workers = crate::exec::recommended_workers().min(bsz);
-    if workers > 1 && bsz > 1 && total >= 256 {
-        crate::exec::parallel_map(bsz, workers, run)
+    if workers > 1 && bsz > 1 && total >= 64 {
+        crate::exec::serve_map(bsz, workers, answer)
     } else {
-        (0..bsz).map(run).collect()
+        (0..bsz).map(answer).collect()
     }
 }
 
@@ -135,6 +141,31 @@ pub(crate) fn debug_assert_unique(classes: &[u32]) {
         },
         "update_classes: duplicate class ids"
     );
+}
+
+/// One serving query against a pinned sampler state — the unit the
+/// [`crate::serving`] micro-batcher coalesces and the
+/// [`crate::transport`] wire protocol carries. Each variant pairs with a
+/// row of the wave's query matrix; sample queries carry their own seed so
+/// served draws are deterministic regardless of coalescing, thread
+/// schedule, or which process the request came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeQuery {
+    /// Draw `m` classes i.i.d. from `q(· | h)` on an RNG stream derived
+    /// only from `seed`.
+    Sample { m: usize, seed: u64 },
+    /// Exact `q(class | h)`.
+    Probability { class: usize },
+    /// The `k` most probable classes under `q(· | h)`, descending.
+    TopK { k: usize },
+}
+
+/// Answer to one [`ServeQuery`], variant-matched to the query kind.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeAnswer {
+    Sample(NegativeDraw),
+    Probability(f64),
+    TopK(Vec<(u32, f64)>),
 }
 
 /// Result of drawing `m` classes: ids plus their exact sampling
@@ -293,14 +324,39 @@ pub trait Sampler: Send {
         BatchDraw { draws }
     }
 
-    /// Serving batch entry ([`crate::serving`] micro-batcher): row `b` of
-    /// `h` draws `ms[b]` classes i.i.d. from `q(· | h_b)` with exact
-    /// unconditioned probabilities, using an RNG stream derived *only*
-    /// from `seeds[b]`. Because no randomness is shared across rows, a
-    /// request's draw depends on nothing but its seed and the sampler
+    /// Mixed-kind serving wave ([`crate::serving`] micro-batcher): row
+    /// `b` of `h` answers `queries[b]` — a sample draw (on an RNG stream
+    /// derived *only* from the request's seed), an exact probability, or
+    /// a top-k ranking. Because no randomness is shared across rows, a
+    /// request's answer depends on nothing but its query and the sampler
     /// state — not on which other requests it was coalesced with or on
     /// thread scheduling. Kernel samplers override with one `map_batch`
-    /// gemm plus fanned-out tree walks.
+    /// gemm for the whole wave *regardless of query kind*, plus per-row
+    /// φ-level tree operations fanned out on the persistent serve pool.
+    ///
+    /// The answer vector is index- and kind-aligned with `queries`.
+    fn serve_queries(&self, h: &Matrix, queries: &[ServeQuery]) -> Vec<ServeAnswer> {
+        assert_eq!(h.rows(), queries.len(), "serve_queries: length mismatch");
+        (0..h.rows())
+            .map(|b| match queries[b] {
+                ServeQuery::Sample { m, seed } => {
+                    let mut rng = Rng::seeded(seed);
+                    ServeAnswer::Sample(self.sample(h.row(b), m, &mut rng))
+                }
+                ServeQuery::Probability { class } => {
+                    ServeAnswer::Probability(self.probability(h.row(b), class))
+                }
+                ServeQuery::TopK { k } => {
+                    ServeAnswer::TopK(self.top_k(h.row(b), k))
+                }
+            })
+            .collect()
+    }
+
+    /// Sample-only serving batch: row `b` of `h` draws `ms[b]` classes
+    /// i.i.d. from `q(· | h_b)` with exact unconditioned probabilities,
+    /// seeded per row. A thin wrapper over [`Sampler::serve_queries`], so
+    /// overriding that one method is enough to accelerate both entries.
     fn serve_batch(
         &self,
         h: &Matrix,
@@ -309,10 +365,16 @@ pub trait Sampler: Send {
     ) -> Vec<NegativeDraw> {
         assert_eq!(h.rows(), ms.len(), "serve_batch: ms mismatch");
         assert_eq!(h.rows(), seeds.len(), "serve_batch: seeds mismatch");
-        (0..h.rows())
-            .map(|b| {
-                let mut rng = Rng::seeded(seeds[b]);
-                self.sample(h.row(b), ms[b], &mut rng)
+        let queries: Vec<ServeQuery> = ms
+            .iter()
+            .zip(seeds)
+            .map(|(&m, &seed)| ServeQuery::Sample { m, seed })
+            .collect();
+        self.serve_queries(h, &queries)
+            .into_iter()
+            .map(|a| match a {
+                ServeAnswer::Sample(d) => d,
+                _ => unreachable!("sample query answered with non-sample kind"),
             })
             .collect()
     }

@@ -415,23 +415,32 @@ impl<M: FeatureMap + Clone + 'static> Sampler for ShardedKernelSampler<M> {
         super::BatchDraw { draws }
     }
 
-    /// Serving batch entry: one gemm maps every query, then each row's
-    /// walks run via [`super::fan_out_serve`] on an RNG stream derived
-    /// only from its own seed — draws are independent of batch
-    /// composition and thread schedule.
-    fn serve_batch(
+    /// Mixed-kind serving wave: ONE gemm maps every query row regardless
+    /// of kind, then per-row φ-level tree operations (sample walks,
+    /// exact probability, top-k search) run via
+    /// [`super::fan_out_queries`] on the persistent serve pool — sample
+    /// rows on an RNG stream derived only from their own seed, so
+    /// answers are independent of batch composition and thread schedule.
+    fn serve_queries(
         &self,
         h: &Matrix,
-        ms: &[usize],
-        seeds: &[u64],
-    ) -> Vec<NegativeDraw> {
-        assert_eq!(h.rows(), ms.len(), "serve_batch: ms mismatch");
-        assert_eq!(h.rows(), seeds.len(), "serve_batch: seeds mismatch");
-        let queries = self.map.map_batch(h);
+        queries: &[super::ServeQuery],
+    ) -> Vec<super::ServeAnswer> {
+        assert_eq!(h.rows(), queries.len(), "serve_queries: length mismatch");
+        let phi = self.map.map_batch(h);
         let tree = &self.tree;
-        super::fan_out_serve(ms, seeds, |b, rng| {
-            let (ids, probs) = tree.sample_many(queries.row(b), ms[b], rng);
-            NegativeDraw { ids, probs }
+        super::fan_out_queries(queries, |b| match queries[b] {
+            super::ServeQuery::Sample { m, seed } => {
+                let mut rng = Rng::seeded(seed);
+                let (ids, probs) = tree.sample_many(phi.row(b), m, &mut rng);
+                super::ServeAnswer::Sample(NegativeDraw { ids, probs })
+            }
+            super::ServeQuery::Probability { class } => {
+                super::ServeAnswer::Probability(tree.probability(phi.row(b), class))
+            }
+            super::ServeQuery::TopK { k } => {
+                super::ServeAnswer::TopK(tree.top_k(phi.row(b), k))
+            }
         })
     }
 
@@ -686,6 +695,49 @@ mod tests {
                     (q - want).abs() < 1e-12 * want.max(1e-12),
                     "row {b} id {id}: {q} vs {want}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn serve_queries_mixed_wave_matches_single_query_paths() {
+        use crate::sampler::{ServeAnswer, ServeQuery};
+        let (_, s) = sharded_rff(48, 8, 4, 285);
+        let mut rng = Rng::seeded(286);
+        let bsz = 6;
+        let mut h = Matrix::zeros(bsz, 8);
+        for b in 0..bsz {
+            let v = unit_vector(&mut rng, 8);
+            h.row_mut(b).copy_from_slice(&v);
+        }
+        let queries = [
+            ServeQuery::Sample { m: 40, seed: 101 },
+            ServeQuery::Probability { class: 7 },
+            ServeQuery::TopK { k: 5 },
+            ServeQuery::Sample { m: 40, seed: 102 },
+            ServeQuery::Probability { class: 31 },
+            ServeQuery::TopK { k: 3 },
+        ];
+        let answers = s.serve_queries(&h, &queries);
+        assert_eq!(answers.len(), bsz);
+        for (b, (q, a)) in queries.iter().zip(&answers).enumerate() {
+            match (q, a) {
+                (ServeQuery::Sample { m, seed }, ServeAnswer::Sample(d)) => {
+                    assert_eq!(d.len(), *m, "row {b}");
+                    // Identical to a solo serve of the same (h, seed).
+                    let mut solo = Matrix::zeros(1, 8);
+                    solo.row_mut(0).copy_from_slice(h.row(b));
+                    let alone = s.serve_batch(&solo, &[*m], &[*seed]);
+                    assert_eq!(*d, alone[0], "row {b}: coalescing leaked");
+                }
+                (ServeQuery::Probability { class }, ServeAnswer::Probability(p)) => {
+                    let want = s.probability(h.row(b), *class);
+                    assert!((p - want).abs() < 1e-15, "row {b}");
+                }
+                (ServeQuery::TopK { k }, ServeAnswer::TopK(items)) => {
+                    assert_eq!(items, &s.top_k(h.row(b), *k), "row {b}");
+                }
+                _ => panic!("row {b}: answer kind mismatch"),
             }
         }
     }

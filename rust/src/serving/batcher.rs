@@ -1,23 +1,28 @@
-//! Request micro-batcher: coalesces concurrently-arriving `sample`
-//! queries into one batched serving call.
+//! Request micro-batcher: coalesces concurrently-arriving serving
+//! queries — `sample`, `probability`, and `top_k` — into one batched
+//! serving wave.
 //!
-//! Client threads submit `(h, m, seed)` and block for their reply; a
-//! dedicated batcher thread drains the [`crate::exec::CoalesceQueue`]
-//! (bounded by `max_batch` / `max_wait`), pins ONE snapshot for the whole
-//! batch, assembles the query matrix, and issues a single
-//! [`crate::sampler::Sampler::serve_batch`] — one `map_batch` gemm plus
-//! fanned-out tree walks, the PR-1 batch path — so serving throughput
-//! inherits its amortization.
+//! Client threads submit a query embedding plus a [`ServeQuery`] and
+//! either block for the reply (the [`MicroBatcher::sample`]-style
+//! wrappers) or hand in a callback ([`MicroBatcher::submit`], the
+//! [`crate::transport`] path — one connection can keep many requests in
+//! flight). A dedicated batcher thread drains the
+//! [`crate::exec::CoalesceQueue`] (bounded by `max_batch` / `max_wait`),
+//! pins ONE snapshot for the whole wave, assembles the query matrix, and
+//! issues a single [`crate::sampler::Sampler::serve_queries`] — one
+//! `map_batch` gemm for the wave *regardless of query kind*, plus
+//! per-row tree operations fanned out on the persistent serve pool.
 //!
-//! **Determinism:** each request carries its own seed, and `serve_batch`
-//! derives an independent RNG stream per row from it. A request's draw
-//! therefore depends only on `(seed, snapshot epoch)` — never on which
-//! other requests it was coalesced with, or on thread scheduling.
+//! **Determinism:** each sample request carries its own seed and
+//! `serve_queries` derives an independent RNG stream per row from it
+//! (probability/top_k are deterministic given the snapshot). A request's
+//! answer therefore depends only on `(query, snapshot epoch)` — never on
+//! which other requests it was coalesced with, or on thread scheduling.
 
 use super::SamplerServer;
 use crate::exec::CoalesceQueue;
 use crate::linalg::Matrix;
-use crate::sampler::NegativeDraw;
+use crate::sampler::{NegativeDraw, ServeAnswer, ServeQuery};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
@@ -52,23 +57,50 @@ pub struct ServeReply {
     pub epoch: u64,
 }
 
-struct PendingSample {
+/// One served answer of any kind, epoch-tagged. Kind-matched to the
+/// submitted [`ServeQuery`].
+#[derive(Clone, Debug)]
+pub enum QueryReply {
+    Sample(ServeReply),
+    Probability { q: f64, epoch: u64 },
+    TopK { items: Vec<(u32, f64)>, epoch: u64 },
+}
+
+impl QueryReply {
+    /// The snapshot epoch this answer was served from.
+    pub fn epoch(&self) -> u64 {
+        match self {
+            QueryReply::Sample(r) => r.epoch,
+            QueryReply::Probability { epoch, .. } => *epoch,
+            QueryReply::TopK { epoch, .. } => *epoch,
+        }
+    }
+}
+
+/// Callback invoked with the request's outcome. `Err` carries the serve
+/// failure message (e.g. a query dimension the feature map rejects) —
+/// the batcher itself survives every failure.
+type ReplyFn = Box<dyn FnOnce(Result<QueryReply, String>) + Send>;
+
+struct Pending {
     h: Vec<f32>,
-    m: usize,
-    seed: u64,
-    resp: mpsc::SyncSender<ServeReply>,
+    query: ServeQuery,
+    reply: ReplyFn,
 }
 
 #[derive(Default)]
 struct BatcherStats {
     requests: AtomicU64,
     batches: AtomicU64,
+    samples: AtomicU64,
+    probabilities: AtomicU64,
+    top_ks: AtomicU64,
 }
 
 /// Handle to a running micro-batcher. Cheap to share behind an `Arc`;
 /// dropping the last handle shuts the batcher thread down.
 pub struct MicroBatcher {
-    queue: Arc<CoalesceQueue<PendingSample>>,
+    queue: Arc<CoalesceQueue<Pending>>,
     stats: Arc<BatcherStats>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
@@ -89,23 +121,62 @@ impl MicroBatcher {
         Self { queue, stats, worker: Some(worker) }
     }
 
+    /// Enqueue one request without blocking; `reply` is invoked exactly
+    /// once from the batcher thread with the outcome (unless the batcher
+    /// shuts down first, in which case the callback is dropped
+    /// unserved). Returns `false` (dropping the request) after shutdown.
+    /// This is the pipelining entry the transport layer uses to keep
+    /// many requests per connection in flight.
+    pub fn submit(
+        &self,
+        h: Vec<f32>,
+        query: ServeQuery,
+        reply: impl FnOnce(Result<QueryReply, String>) + Send + 'static,
+    ) -> bool {
+        self.queue.push(Pending { h, query, reply: Box::new(reply) })
+    }
+
+    /// Submit one request and block for its reply; panics if the serve
+    /// fails (e.g. a query dimension the sampler rejects) or the batcher
+    /// is gone.
+    fn call(&self, h: &[f32], query: ServeQuery) -> QueryReply {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let accepted = self.submit(h.to_vec(), query, move |res| {
+            let _ = tx.send(res);
+        });
+        assert!(accepted, "MicroBatcher: request after shutdown");
+        rx.recv()
+            .expect("MicroBatcher: batcher shut down mid-request")
+            .unwrap_or_else(|e| panic!("MicroBatcher: request failed: {e}"))
+    }
+
     /// Submit one sample request and block for its reply. Draw `m`
     /// classes i.i.d. from `q(· | h)` under the snapshot the batcher pins
     /// for this request's batch; `seed` fully determines the draw for a
     /// given epoch.
     pub fn sample(&self, h: &[f32], m: usize, seed: u64) -> ServeReply {
-        let (tx, rx) = mpsc::sync_channel(1);
-        let accepted = self.queue.push(PendingSample {
-            h: h.to_vec(),
-            m,
-            seed,
-            resp: tx,
-        });
-        assert!(accepted, "MicroBatcher: sample after shutdown");
-        rx.recv().expect(
-            "MicroBatcher: request failed (query dimension rejected by the \
-             sampler?) or batcher shut down",
-        )
+        match self.call(h, ServeQuery::Sample { m, seed }) {
+            QueryReply::Sample(r) => r,
+            _ => unreachable!("sample query answered with non-sample reply"),
+        }
+    }
+
+    /// Blocking `q(class | h)` under the batcher's pinned snapshot;
+    /// returns `(q, epoch)`.
+    pub fn probability(&self, h: &[f32], class: usize) -> (f64, u64) {
+        match self.call(h, ServeQuery::Probability { class }) {
+            QueryReply::Probability { q, epoch } => (q, epoch),
+            _ => unreachable!("probability query answered with other kind"),
+        }
+    }
+
+    /// Blocking top-k under the batcher's pinned snapshot; returns
+    /// `(ranked (class, q) pairs, epoch)`.
+    pub fn top_k(&self, h: &[f32], k: usize) -> (Vec<(u32, f64)>, u64) {
+        match self.call(h, ServeQuery::TopK { k }) {
+            QueryReply::TopK { items, epoch } => (items, epoch),
+            _ => unreachable!("top_k query answered with other kind"),
+        }
     }
 
     /// `(requests served, batches formed)` so far.
@@ -113,6 +184,15 @@ impl MicroBatcher {
         (
             self.stats.requests.load(Ordering::Relaxed),
             self.stats.batches.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Requests served per kind: `(samples, probabilities, top_ks)`.
+    pub fn kind_counts(&self) -> (u64, u64, u64) {
+        (
+            self.stats.samples.load(Ordering::Relaxed),
+            self.stats.probabilities.load(Ordering::Relaxed),
+            self.stats.top_ks.load(Ordering::Relaxed),
         )
     }
 }
@@ -126,25 +206,63 @@ impl Drop for MicroBatcher {
     }
 }
 
+fn answer_to_reply(answer: ServeAnswer, epoch: u64) -> QueryReply {
+    match answer {
+        ServeAnswer::Sample(draw) => QueryReply::Sample(ServeReply { draw, epoch }),
+        ServeAnswer::Probability(q) => QueryReply::Probability { q, epoch },
+        ServeAnswer::TopK(items) => QueryReply::TopK { items, epoch },
+    }
+}
+
+/// Best-effort human-readable panic payload.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "serve panicked".to_string()
+    }
+}
+
 fn batcher_loop(
     server: &SamplerServer,
-    queue: &CoalesceQueue<PendingSample>,
+    queue: &CoalesceQueue<Pending>,
     opts: BatcherOptions,
     stats: &BatcherStats,
 ) {
-    while let Some(mut reqs) = queue.drain_batch(opts.max_batch, opts.max_wait) {
-        debug_assert!(!reqs.is_empty());
+    while let Some(drained) = queue.drain_batch(opts.max_batch, opts.max_wait) {
+        debug_assert!(!drained.is_empty());
         // One snapshot pin serves the whole coalesced drain — every reply
         // in it reports the same epoch.
         let snap = server.snapshot();
-        // Group by query dimension so one malformed request can only fail
-        // its own group, never a stranger's — and never this thread: the
-        // serve runs under catch_unwind, so a panicking group (e.g. a dim
-        // the feature map rejects) drops its reply senders (those callers
-        // see the failure) while the batcher keeps serving everyone else.
+        // Per-row validation BEFORE grouping: an out-of-range probability
+        // class would panic the sampler's assert mid-wave and fail every
+        // coalesced stranger in the same dim group, so reject it here,
+        // failing exactly its own caller. (Sample draws accept any m;
+        // top_k clamps k internally.)
+        let num_classes = snap.sampler().num_classes();
+        let mut reqs = Vec::with_capacity(drained.len());
+        for r in drained {
+            match r.query {
+                ServeQuery::Probability { class } if class >= num_classes => {
+                    (r.reply)(Err(format!(
+                        "probability class {class} out of range (n = \
+                         {num_classes})"
+                    )));
+                }
+                _ => reqs.push(r),
+            }
+        }
+        // Group by query dimension so a malformed request can only fail
+        // its own group (every member shares the offending dim), never a
+        // stranger's — and never this thread: the serve runs under
+        // catch_unwind, so a panicking group (a dim the feature map
+        // rejects) fails exactly its own callers while the batcher keeps
+        // serving everyone else.
         while !reqs.is_empty() {
             let d = reqs[0].h.len();
-            let group: Vec<PendingSample> = {
+            let group: Vec<Pending> = {
                 let mut g = Vec::new();
                 let mut rest = Vec::new();
                 for r in reqs {
@@ -158,35 +276,45 @@ fn batcher_loop(
                 g
             };
             stats.batches.fetch_add(1, Ordering::Relaxed);
+            let queries: Vec<ServeQuery> =
+                group.iter().map(|r| r.query).collect();
             let served = std::panic::catch_unwind(
                 std::panic::AssertUnwindSafe(|| {
                     let mut h = Matrix::zeros(group.len(), d);
                     for (i, r) in group.iter().enumerate() {
                         h.row_mut(i).copy_from_slice(&r.h);
                     }
-                    let ms: Vec<usize> = group.iter().map(|r| r.m).collect();
-                    let seeds: Vec<u64> =
-                        group.iter().map(|r| r.seed).collect();
-                    snap.sampler().serve_batch(&h, &ms, &seeds)
+                    snap.sampler().serve_queries(&h, &queries)
                 }),
             );
             match served {
-                Ok(draws) => {
+                Ok(answers) => {
                     stats
                         .requests
                         .fetch_add(group.len() as u64, Ordering::Relaxed);
-                    for (req, draw) in group.into_iter().zip(draws) {
-                        // A client that gave up (dropped its receiver) is
-                        // not an error.
-                        let _ = req
-                            .resp
-                            .send(ServeReply { draw, epoch: snap.epoch() });
+                    for q in &queries {
+                        match q {
+                            ServeQuery::Sample { .. } => &stats.samples,
+                            ServeQuery::Probability { .. } => {
+                                &stats.probabilities
+                            }
+                            ServeQuery::TopK { .. } => &stats.top_ks,
+                        }
+                        .fetch_add(1, Ordering::Relaxed);
+                    }
+                    for (req, answer) in group.into_iter().zip(answers) {
+                        // A client that gave up is not an error; the
+                        // callback decides what a dropped receiver means.
+                        (req.reply)(Ok(answer_to_reply(answer, snap.epoch())));
                     }
                 }
-                Err(_) => {
-                    // Dropping the group's senders fails exactly the
-                    // offending callers' recv; the batcher lives on.
-                    drop(group);
+                Err(p) => {
+                    // Fail exactly the offending group's callers with the
+                    // panic message; the batcher lives on.
+                    let msg = panic_msg(p.as_ref());
+                    for req in group {
+                        (req.reply)(Err(msg.clone()));
+                    }
                 }
             }
         }
@@ -236,6 +364,53 @@ mod tests {
     }
 
     #[test]
+    fn mixed_kind_requests_coalesce_and_match_direct_queries() {
+        let (server, _writer) = test_server(40, 6, 505);
+        let batcher = Arc::new(MicroBatcher::spawn(
+            server.clone(),
+            BatcherOptions { max_batch: 16, max_wait: Duration::from_millis(2) },
+        ));
+        let mut rng = Rng::seeded(506);
+        let h = unit_vector(&mut rng, 6);
+        // Issue all three kinds from racing threads against one snapshot.
+        let handles: Vec<_> = (0..3)
+            .map(|t| {
+                let batcher = Arc::clone(&batcher);
+                let server = server.clone();
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..20 {
+                        match (t + i) % 3 {
+                            0 => {
+                                let r = batcher.sample(&h, 6, (t * 100 + i) as u64);
+                                assert_eq!(r.draw.len(), 6);
+                            }
+                            1 => {
+                                let (q, _) = batcher.probability(&h, 7);
+                                let want = server.probability(&h, 7);
+                                assert!((q - want).abs() < 1e-15);
+                            }
+                            _ => {
+                                let (items, _) = batcher.top_k(&h, 5);
+                                assert_eq!(items, server.top_k(&h, 5));
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for th in handles {
+            th.join().unwrap();
+        }
+        let (samples, probs, top_ks) = batcher.kind_counts();
+        assert_eq!(samples + probs + top_ks, 60);
+        assert!(samples > 0 && probs > 0 && top_ks > 0);
+        let (reqs, batches) = batcher.stats();
+        assert_eq!(reqs, 60);
+        assert!(batches >= 1);
+    }
+
+    #[test]
     fn concurrent_requests_coalesce() {
         let (server, _writer) = test_server(64, 6, 510);
         let batcher = Arc::new(MicroBatcher::spawn(
@@ -279,11 +454,74 @@ mod tests {
             std::thread::spawn(move || b.sample(&[1.0f32; 4], 3, 1))
         };
         assert!(bad.join().is_err(), "wrong-dim request must fail its caller");
+        // An out-of-range probability class fails the same way.
+        let bad_class = {
+            let b = Arc::clone(&batcher);
+            std::thread::spawn(move || b.probability(&[1.0f32; 6], 999))
+        };
+        assert!(bad_class.join().is_err(), "bad class must fail its caller");
         // The batcher thread survives and keeps serving valid requests.
         let mut rng = Rng::seeded(541);
         let h = unit_vector(&mut rng, 6);
         let reply = batcher.sample(&h, 5, 2);
         assert_eq!(reply.draw.len(), 5);
+    }
+
+    #[test]
+    fn out_of_range_probability_fails_only_its_request_within_a_wave() {
+        // Both requests land in ONE coalesced wave (max_wait holds the
+        // drain open); the invalid probability must fail alone while the
+        // valid same-dim sample in the same wave is served normally.
+        let (server, _writer) = test_server(32, 6, 548);
+        let batcher = MicroBatcher::spawn(
+            server,
+            BatcherOptions { max_batch: 8, max_wait: Duration::from_millis(50) },
+        );
+        let (tx_bad, rx_bad) = mpsc::sync_channel(1);
+        let (tx_good, rx_good) = mpsc::sync_channel(1);
+        assert!(batcher.submit(
+            vec![0.5f32; 6],
+            ServeQuery::Probability { class: 999 },
+            move |r| {
+                let _ = tx_bad.send(r);
+            },
+        ));
+        assert!(batcher.submit(
+            vec![0.5f32; 6],
+            ServeQuery::Sample { m: 4, seed: 9 },
+            move |r| {
+                let _ = tx_good.send(r);
+            },
+        ));
+        let bad = rx_bad.recv().unwrap();
+        let good = rx_good.recv().unwrap();
+        assert!(bad.is_err(), "out-of-range class must fail its caller");
+        match good {
+            Ok(QueryReply::Sample(r)) => assert_eq!(r.draw.len(), 4),
+            other => {
+                panic!("valid same-wave request must be served: {other:?}")
+            }
+        }
+    }
+
+    #[test]
+    fn submit_delivers_error_instead_of_dropping_the_callback() {
+        // The transport path needs a *typed* failure (an Error response
+        // frame), not a dropped channel: submit's callback must be
+        // invoked with Err on a failing serve.
+        let (server, _writer) = test_server(32, 6, 545);
+        let batcher = MicroBatcher::spawn(server, BatcherOptions::default());
+        let (tx, rx) = mpsc::sync_channel(1);
+        let ok = batcher.submit(
+            vec![1.0f32; 4], // wrong dim
+            ServeQuery::Sample { m: 3, seed: 1 },
+            move |res| {
+                let _ = tx.send(res);
+            },
+        );
+        assert!(ok);
+        let res = rx.recv().expect("callback must run");
+        assert!(res.is_err(), "wrong-dim serve must report Err");
     }
 
     #[test]

@@ -1,31 +1,137 @@
 //! Closed-loop load generator for the serving subsystem — the engine
 //! behind the `serve-bench` CLI subcommand and `benches/perf_serving.rs`.
 //!
-//! `R` reader threads each issue `sample` requests back-to-back through
-//! the micro-batcher (closed loop: a new request is issued only when the
-//! previous reply lands) while an optional writer thread applies batched
-//! random class updates to the shadow and publishes — the live-traffic
-//! regime of the ROADMAP north star. Reports throughput, latency
-//! percentiles, coalescing behaviour, and swap stalls as BENCH JSON.
+//! `R` reader threads each issue requests back-to-back (closed loop: a
+//! new request is issued only when the previous reply lands) while an
+//! optional writer thread applies batched random class updates to the
+//! shadow and publishes — the live-traffic regime of the ROADMAP north
+//! star. Two transports:
+//!
+//! * [`TransportMode::Inproc`] — readers call the [`MicroBatcher`]
+//!   directly (the PR-2 loop);
+//! * [`TransportMode::Uds`] — readers are real
+//!   [`crate::transport::TransportClient`] connections to a
+//!   [`crate::transport::TransportServer`] on a unix socket, so the
+//!   closed loop crosses the wire protocol end to end.
+//!
+//! Requests follow a configurable `sample:probability:top_k` mix
+//! ([`RequestMix`]). Reports throughput, latency percentiles, coalescing
+//! behaviour, swap stalls, per-kind counts, and (for the uds transport)
+//! mean frame encode/decode overhead as BENCH JSON.
 
 use super::{BatcherOptions, MicroBatcher, SamplerServer};
 use crate::json::Json;
 use crate::linalg::{unit_vector, Matrix};
 use crate::rng::Rng;
 use crate::sampler::Sampler;
+use crate::transport::{wire, TransportClient, TransportServer};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// Which plumbing the closed loop runs through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportMode {
+    /// Readers call the micro-batcher in-process.
+    Inproc,
+    /// Readers connect over a unix-domain socket and speak the
+    /// [`crate::transport::wire`] protocol.
+    Uds,
+}
+
+impl TransportMode {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "inproc" => Ok(TransportMode::Inproc),
+            "uds" => Ok(TransportMode::Uds),
+            _ => anyhow::bail!("unknown transport '{s}' (inproc|uds)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportMode::Inproc => "inproc",
+            TransportMode::Uds => "uds",
+        }
+    }
+}
+
+/// Relative weights of the three request kinds in the closed loop.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestMix {
+    pub sample: u32,
+    pub prob: u32,
+    pub topk: u32,
+}
+
+impl Default for RequestMix {
+    fn default() -> Self {
+        Self { sample: 1, prob: 0, topk: 0 }
+    }
+}
+
+impl RequestMix {
+    /// Parse `"sample:prob:topk"` weights, e.g. `8:1:1`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 3,
+            "request mix must be sample:prob:topk, got '{s}'"
+        );
+        let w: Vec<u32> = parts
+            .iter()
+            .map(|p| {
+                p.parse()
+                    .map_err(|_| anyhow::anyhow!("bad mix weight '{p}' in '{s}'"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let mix = Self { sample: w[0], prob: w[1], topk: w[2] };
+        anyhow::ensure!(
+            mix.total() > 0,
+            "request mix '{s}' has zero total weight"
+        );
+        Ok(mix)
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}:{}:{}", self.sample, self.prob, self.topk)
+    }
+
+    fn total(&self) -> u32 {
+        self.sample + self.prob + self.topk
+    }
+
+    /// Weighted kind pick, deterministic in `rng`.
+    fn pick(&self, rng: &mut Rng) -> ReqKind {
+        let r = rng.below(self.total() as u64) as u32;
+        if r < self.sample {
+            ReqKind::Sample
+        } else if r < self.sample + self.prob {
+            ReqKind::Prob
+        } else {
+            ReqKind::TopK
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ReqKind {
+    Sample,
+    Prob,
+    TopK,
+}
+
 /// Closed-loop run parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct LoadSpec {
-    /// Concurrent reader threads.
+    /// Concurrent reader threads (uds: one connection each).
     pub readers: usize,
     /// Requests issued by each reader.
     pub requests_per_reader: usize,
-    /// Negatives per request.
+    /// Negatives per sample request.
     pub m: usize,
+    /// k for top_k requests.
+    pub top_k: usize,
     /// Query / class-embedding dimension d.
     pub dim: usize,
     /// Base seed for query generation and per-request draw seeds.
@@ -37,6 +143,10 @@ pub struct LoadSpec {
     /// Pause between writer cycles (approximates a training-step cadence;
     /// 0 = swap as fast as possible).
     pub swap_pause: Duration,
+    /// In-process batcher calls or the unix-socket wire.
+    pub transport: TransportMode,
+    /// sample:prob:topk request mix.
+    pub mix: RequestMix,
 }
 
 impl Default for LoadSpec {
@@ -45,11 +155,14 @@ impl Default for LoadSpec {
             readers: 4,
             requests_per_reader: 1000,
             m: 20,
+            top_k: 10,
             dim: 64,
             seed: 1,
             batcher: BatcherOptions::default(),
             updates_per_swap: 32,
             swap_pause: Duration::from_micros(200),
+            transport: TransportMode::Inproc,
+            mix: RequestMix::default(),
         }
     }
 }
@@ -58,8 +171,13 @@ impl Default for LoadSpec {
 #[derive(Clone, Debug)]
 pub struct LoadReport {
     pub sampler: String,
+    pub transport: String,
+    pub mix: String,
     pub readers: usize,
     pub requests: u64,
+    pub sample_requests: u64,
+    pub prob_requests: u64,
+    pub topk_requests: u64,
     pub wall_seconds: f64,
     pub qps: f64,
     pub mean_us: f64,
@@ -69,15 +187,23 @@ pub struct LoadReport {
     pub mean_batch: f64,
     pub epochs: u64,
     pub swap_stalls: u64,
+    /// Mean wall time to encode one request frame of this run's mix
+    /// (µs; 0 for the inproc transport, which has no frames).
+    pub frame_encode_us: f64,
+    /// Mean wall time to decode one response frame of this run's mix
+    /// (µs; 0 for inproc).
+    pub frame_decode_us: f64,
 }
 
 impl LoadReport {
     /// One human-readable summary line.
     pub fn render(&self) -> String {
         format!(
-            "{:<14} readers={} qps={:>10.0} p50={:>8.1}µs p99={:>8.1}µs \
-             mean_batch={:>5.1} epochs={} swap_stalls={}",
+            "{:<14} {:<6} mix={} readers={} qps={:>10.0} p50={:>8.1}µs \
+             p99={:>8.1}µs mean_batch={:>5.1} epochs={} swap_stalls={}",
             self.sampler,
+            self.transport,
+            self.mix,
             self.readers,
             self.qps,
             self.p50_us,
@@ -93,8 +219,13 @@ impl LoadReport {
         Json::obj(vec![
             ("bench", Json::from("serving_closed_loop")),
             ("sampler", Json::from(self.sampler.as_str())),
+            ("transport", Json::from(self.transport.as_str())),
+            ("mix", Json::from(self.mix.as_str())),
             ("readers", Json::from(self.readers)),
             ("requests", Json::from(self.requests as usize)),
+            ("sample_requests", Json::from(self.sample_requests as usize)),
+            ("prob_requests", Json::from(self.prob_requests as usize)),
+            ("topk_requests", Json::from(self.topk_requests as usize)),
             ("wall_seconds", Json::from(self.wall_seconds)),
             ("qps", Json::from(self.qps)),
             ("mean_us", Json::from(self.mean_us)),
@@ -104,8 +235,126 @@ impl LoadReport {
             ("mean_batch", Json::from(self.mean_batch)),
             ("epochs", Json::from(self.epochs as usize)),
             ("swap_stalls", Json::from(self.swap_stalls as usize)),
+            ("frame_encode_us", Json::from(self.frame_encode_us)),
+            ("frame_decode_us", Json::from(self.frame_decode_us)),
         ])
     }
+}
+
+/// Per-reader issuing backend: direct batcher calls or a wire client.
+enum Issuer<'a> {
+    Inproc(&'a MicroBatcher),
+    Uds(TransportClient),
+}
+
+impl Issuer<'_> {
+    /// Issue one request; returns a value to black-box so the draw is
+    /// not optimized away.
+    fn issue(
+        &mut self,
+        kind: ReqKind,
+        h: &[f32],
+        m: usize,
+        k: usize,
+        class: usize,
+        seed: u64,
+    ) -> usize {
+        match self {
+            Issuer::Inproc(b) => match kind {
+                ReqKind::Sample => b.sample(h, m, seed).draw.len(),
+                ReqKind::Prob => {
+                    let (q, _) = b.probability(h, class);
+                    q.is_finite() as usize
+                }
+                ReqKind::TopK => b.top_k(h, k).0.len(),
+            },
+            Issuer::Uds(c) => match kind {
+                ReqKind::Sample => c
+                    .sample(h, m, seed)
+                    .expect("uds sample request failed")
+                    .draw
+                    .len(),
+                ReqKind::Prob => {
+                    let (q, _) = c
+                        .probability(h, class)
+                        .expect("uds probability request failed");
+                    q.is_finite() as usize
+                }
+                ReqKind::TopK => {
+                    c.top_k(h, k).expect("uds top_k request failed").0.len()
+                }
+            },
+        }
+    }
+}
+
+/// Mean per-frame encode/decode wall time (µs) for this run's request
+/// mix, measured on in-memory buffers — the wire protocol's CPU overhead
+/// isolated from socket latency. Response decode uses representative
+/// reply shapes (m draws / a top-k list / one probability).
+fn measure_codec_overhead(spec: &LoadSpec) -> (f64, f64) {
+    let kinds: Vec<(ReqKind, u32)> = [
+        (ReqKind::Sample, spec.mix.sample),
+        (ReqKind::Prob, spec.mix.prob),
+        (ReqKind::TopK, spec.mix.topk),
+    ]
+    .into_iter()
+    .filter(|(_, w)| *w > 0)
+    .collect();
+    let mut rng = Rng::seeded(spec.seed ^ 0xC0DE);
+    let h = unit_vector(&mut rng, spec.dim);
+    let reps = 2000usize;
+    let mut encode_us = 0.0;
+    let mut decode_us = 0.0;
+    let total_w: u32 = kinds.iter().map(|(_, w)| w).sum();
+    for (kind, w) in &kinds {
+        let req = match kind {
+            ReqKind::Sample => {
+                wire::Request::Sample { h: h.clone(), m: spec.m as u32, seed: 7 }
+            }
+            ReqKind::Prob => wire::Request::Probability { h: h.clone(), class: 0 },
+            ReqKind::TopK => {
+                wire::Request::TopK { h: h.clone(), k: spec.top_k as u32 }
+            }
+        };
+        let resp = match kind {
+            ReqKind::Sample => wire::Response::Sample {
+                epoch: 1,
+                ids: (0..spec.m as u32).collect(),
+                probs: vec![1e-4; spec.m],
+            },
+            ReqKind::Prob => wire::Response::Probability { epoch: 1, q: 1e-4 },
+            ReqKind::TopK => wire::Response::TopK {
+                epoch: 1,
+                items: (0..spec.top_k as u32).map(|i| (i, 1e-4)).collect(),
+            },
+        };
+        let t0 = Instant::now();
+        let mut sink = 0usize;
+        for i in 0..reps {
+            let mut buf = Vec::new();
+            wire::encode_request(&mut buf, i as u64, &req);
+            sink += buf.len();
+        }
+        let enc = t0.elapsed().as_secs_f64() / reps as f64 * 1e6;
+        std::hint::black_box(sink);
+        let mut buf = Vec::new();
+        wire::encode_response(&mut buf, 1, &resp);
+        let t0 = Instant::now();
+        let mut sink = 0usize;
+        for _ in 0..reps {
+            let decoded = wire::read_response(&mut &buf[..])
+                .expect("codec self-decode")
+                .expect("non-empty");
+            sink += decoded.0 as usize;
+        }
+        let dec = t0.elapsed().as_secs_f64() / reps as f64 * 1e6;
+        std::hint::black_box(sink);
+        let frac = *w as f64 / total_w as f64;
+        encode_us += frac * enc;
+        decode_us += frac * dec;
+    }
+    (encode_us, decode_us)
 }
 
 /// Run one closed-loop load test against a fork of `sampler`. The
@@ -117,6 +366,8 @@ pub fn run_closed_loop(
 ) -> anyhow::Result<LoadReport> {
     anyhow::ensure!(spec.readers >= 1, "serve load: need ≥ 1 reader");
     anyhow::ensure!(spec.m >= 1, "serve load: need m ≥ 1");
+    anyhow::ensure!(spec.top_k >= 1, "serve load: need top_k ≥ 1");
+    anyhow::ensure!(spec.mix.total() > 0, "serve load: empty request mix");
     let serve = sampler.fork().ok_or_else(|| {
         anyhow::anyhow!(
             "sampler '{}' does not support serving forks",
@@ -129,6 +380,28 @@ pub fn run_closed_loop(
     let (server, mut writer) = SamplerServer::new(serve);
     let batcher = Arc::new(MicroBatcher::spawn(server.clone(), spec.batcher));
     let stop = Arc::new(AtomicBool::new(false));
+
+    // The uds transport wraps the same batcher behind a socket.
+    let transport = match spec.transport {
+        TransportMode::Inproc => None,
+        TransportMode::Uds => {
+            // Unique per process AND per run: two concurrent closed loops
+            // with equal seeds must never bind the same path (bind
+            // replaces the file, stranding the first server's listener).
+            static SOCK_SEQ: std::sync::atomic::AtomicU64 =
+                std::sync::atomic::AtomicU64::new(0);
+            let path = std::env::temp_dir().join(format!(
+                "rfsm-serve-{}-{}-{}.sock",
+                std::process::id(),
+                spec.seed,
+                SOCK_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            Some(
+                TransportServer::bind(&path, Arc::clone(&batcher))
+                    .map_err(|e| anyhow::anyhow!("bind {path:?}: {e}"))?,
+            )
+        }
+    };
 
     // Writer: apply a batch of random class updates, publish, pause.
     let writer_handle = if spec.updates_per_swap > 0 {
@@ -162,25 +435,44 @@ pub fn run_closed_loop(
 
     // Closed-loop readers.
     let t0 = Instant::now();
-    let latencies_ns: Vec<Vec<u64>> = std::thread::scope(|scope| {
+    type ReaderOut = (Vec<u64>, [u64; 3]);
+    let reader_out: Vec<ReaderOut> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..spec.readers)
             .map(|r| {
                 let batcher = Arc::clone(&batcher);
+                let sock = transport.as_ref().map(|t| t.path().to_path_buf());
                 scope.spawn(move || {
+                    let mut issuer = match &sock {
+                        None => Issuer::Inproc(&batcher),
+                        Some(p) => Issuer::Uds(
+                            TransportClient::connect(p)
+                                .expect("connect serve socket"),
+                        ),
+                    };
                     let mut rng = Rng::seeded(
                         spec.seed
                             .wrapping_add((r as u64).wrapping_mul(0x9E37_79B9)),
                     );
                     let mut lat = Vec::with_capacity(spec.requests_per_reader);
+                    let mut counts = [0u64; 3];
                     for _ in 0..spec.requests_per_reader {
+                        let kind = spec.mix.pick(&mut rng);
                         let h = unit_vector(&mut rng, dim);
                         let seed = rng.next_u64();
+                        let class = rng.index(num_classes);
                         let t = Instant::now();
-                        let reply = batcher.sample(&h, spec.m, seed);
+                        let out = issuer.issue(
+                            kind, &h, spec.m, spec.top_k, class, seed,
+                        );
                         lat.push(t.elapsed().as_nanos() as u64);
-                        std::hint::black_box(reply.draw.ids.len());
+                        std::hint::black_box(out);
+                        counts[match kind {
+                            ReqKind::Sample => 0,
+                            ReqKind::Prob => 1,
+                            ReqKind::TopK => 2,
+                        }] += 1;
                     }
-                    lat
+                    (lat, counts)
                 })
             })
             .collect();
@@ -197,8 +489,16 @@ pub fn run_closed_loop(
              with the sampler's class-embedding dimension?)"
         );
     }
+    drop(transport); // joins connection threads, removes the socket file
 
-    let mut all: Vec<u64> = latencies_ns.concat();
+    let mut all: Vec<u64> = Vec::new();
+    let mut kind_counts = [0u64; 3];
+    for (lat, counts) in reader_out {
+        all.extend(lat);
+        for (acc, c) in kind_counts.iter_mut().zip(counts) {
+            *acc += c;
+        }
+    }
     all.sort_unstable();
     let pct = |q: f64| -> f64 {
         if all.is_empty() {
@@ -214,10 +514,19 @@ pub fn run_closed_loop(
     };
     let (req_stat, batches) = batcher.stats();
     debug_assert_eq!(req_stat, requests);
+    let (frame_encode_us, frame_decode_us) = match spec.transport {
+        TransportMode::Inproc => (0.0, 0.0),
+        TransportMode::Uds => measure_codec_overhead(spec),
+    };
     Ok(LoadReport {
         sampler: name,
+        transport: spec.transport.name().to_string(),
+        mix: spec.mix.label(),
         readers: spec.readers,
         requests,
+        sample_requests: kind_counts[0],
+        prob_requests: kind_counts[1],
+        topk_requests: kind_counts[2],
         wall_seconds: wall,
         qps: requests as f64 / wall.max(1e-12),
         mean_us,
@@ -227,6 +536,8 @@ pub fn run_closed_loop(
         mean_batch: requests as f64 / (batches.max(1)) as f64,
         epochs: server.epoch(),
         swap_stalls: server.swap_stalls(),
+        frame_encode_us,
+        frame_decode_us,
     })
 }
 
@@ -236,20 +547,24 @@ mod tests {
     use crate::featmap::RffMap;
     use crate::sampler::ShardedKernelSampler;
 
-    #[test]
-    fn closed_loop_smoke_under_writer_churn() {
+    fn test_sampler(d: usize) -> ShardedKernelSampler<RffMap> {
         let mut rng = Rng::seeded(700);
-        let d = 8;
         let classes = Matrix::randn(&mut rng, 64, d).l2_normalized_rows();
         let map = RffMap::new(d, 16, 2.0, &mut Rng::seeded(701));
-        let sampler =
-            ShardedKernelSampler::with_map(&classes, map, 4, "rff-sharded");
+        ShardedKernelSampler::with_map(&classes, map, 4, "rff-sharded")
+    }
+
+    #[test]
+    fn closed_loop_smoke_under_writer_churn() {
+        let d = 8;
+        let sampler = test_sampler(d);
         let report = run_closed_loop(
             &sampler,
             &LoadSpec {
                 readers: 2,
                 requests_per_reader: 60,
                 m: 5,
+                top_k: 4,
                 dim: d,
                 seed: 3,
                 batcher: BatcherOptions {
@@ -258,10 +573,13 @@ mod tests {
                 },
                 updates_per_swap: 4,
                 swap_pause: Duration::from_micros(50),
+                transport: TransportMode::Inproc,
+                mix: RequestMix::default(),
             },
         )
         .unwrap();
         assert_eq!(report.requests, 120);
+        assert_eq!(report.sample_requests, 120, "default mix is all-sample");
         assert!(report.qps > 0.0);
         assert!(report.p50_us <= report.p99_us);
         assert!(report.batches >= 1);
@@ -272,5 +590,57 @@ mod tests {
             j.at(&["bench"]).and_then(|v| v.as_str().map(String::from)),
             Some("serving_closed_loop".into())
         );
+        assert_eq!(
+            j.at(&["transport"]).and_then(|v| v.as_str().map(String::from)),
+            Some("inproc".into())
+        );
+    }
+
+    #[test]
+    fn mixed_uds_closed_loop_crosses_the_wire() {
+        let d = 8;
+        let sampler = test_sampler(d);
+        let report = run_closed_loop(
+            &sampler,
+            &LoadSpec {
+                readers: 2,
+                requests_per_reader: 40,
+                m: 5,
+                top_k: 4,
+                dim: d,
+                seed: 11,
+                batcher: BatcherOptions {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(100),
+                },
+                updates_per_swap: 4,
+                swap_pause: Duration::from_micros(50),
+                transport: TransportMode::Uds,
+                mix: RequestMix { sample: 2, prob: 1, topk: 1 },
+            },
+        )
+        .unwrap();
+        assert_eq!(report.requests, 80);
+        assert_eq!(
+            report.sample_requests + report.prob_requests + report.topk_requests,
+            80
+        );
+        assert!(report.sample_requests > 0, "mix produced no samples");
+        assert_eq!(report.transport, "uds");
+        assert_eq!(report.mix, "2:1:1");
+        assert!(report.frame_encode_us > 0.0, "codec overhead not measured");
+        assert!(report.frame_decode_us > 0.0);
+    }
+
+    #[test]
+    fn request_mix_parses_and_rejects() {
+        let m = RequestMix::parse("8:1:1").unwrap();
+        assert_eq!((m.sample, m.prob, m.topk), (8, 1, 1));
+        assert_eq!(m.label(), "8:1:1");
+        assert!(RequestMix::parse("0:0:0").is_err());
+        assert!(RequestMix::parse("1:2").is_err());
+        assert!(RequestMix::parse("a:b:c").is_err());
+        assert!(TransportMode::parse("uds").is_ok());
+        assert!(TransportMode::parse("tcp").is_err());
     }
 }

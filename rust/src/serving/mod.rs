@@ -15,11 +15,15 @@
 //!   and swaps it in at step boundaries, recycling the retired snapshot
 //!   through a replay log instead of rebuilding.
 //! * [`MicroBatcher`] (`batcher.rs`) — coalesces concurrently-arriving
-//!   `sample` requests (bounded by `serving.max_batch` /
-//!   `serving.max_wait_us`) into one `serve_batch` call: a single
-//!   `map_batch` gemm plus fanned-out tree walks, so serving throughput
-//!   inherits the PR-1 batch amortization. Per-request seeds make served
-//!   draws deterministic regardless of coalescing or thread schedule.
+//!   requests of *every* kind — `sample`, `probability`, and `top_k` —
+//!   (bounded by `serving.max_batch` / `serving.max_wait_us`) into one
+//!   `serve_queries` wave: a single `map_batch` gemm regardless of query
+//!   kind, plus per-row tree operations fanned out on the persistent
+//!   [`crate::exec::serve_pool`] (zero per-batch thread spawns). The
+//!   non-blocking [`MicroBatcher::submit`] callback API is what lets the
+//!   [`crate::transport`] layer keep many requests per connection in
+//!   flight. Per-request seeds make served draws deterministic
+//!   regardless of coalescing or thread schedule.
 //! * [`DoubleBufferedSampler`] (`service.rs`) — the trainer integration:
 //!   `update_classes` is staged to a writer thread and overlaps the
 //!   step's loss execution; the swap lands before the next draw
@@ -27,8 +31,9 @@
 //! * [`run_closed_loop`] (`loadgen.rs`) — the closed-loop load generator
 //!   behind `rfsoftmax serve-bench` and `benches/perf_serving.rs`.
 //!
-//! Requests served: `sample` (micro-batched), `probability`, and `top_k`
-//! (best-first tree search — see `KernelTree::top_k`).
+//! Requests served (all micro-batched): `sample`, `probability`, and
+//! `top_k` (best-first tree search — see `KernelTree::top_k`). For the
+//! cross-process wire around this layer see [`crate::transport`] (L4).
 //!
 //! Memory: double buffering keeps exactly two full sampler states alive
 //! (published + shadow) — the inherent cost of never blocking readers.
@@ -38,7 +43,9 @@ mod loadgen;
 mod server;
 mod service;
 
-pub use batcher::{BatcherOptions, MicroBatcher, ServeReply};
-pub use loadgen::{run_closed_loop, LoadReport, LoadSpec};
+pub use batcher::{BatcherOptions, MicroBatcher, QueryReply, ServeReply};
+pub use loadgen::{
+    run_closed_loop, LoadReport, LoadSpec, RequestMix, TransportMode,
+};
 pub use server::{SamplerServer, SamplerSnapshot, SamplerWriter};
 pub use service::{DoubleBufferedSampler, ServingStats};

@@ -1,0 +1,158 @@
+//! Client side of the serving transport: sync request/response plus a
+//! pipelined mode that keeps many requests in flight on one connection
+//! (that is what makes server-side coalescing reachable from a single
+//! closed-loop client).
+
+use super::wire::{self, ProtocolError, Request, Response};
+use crate::sampler::NegativeDraw;
+use crate::serving::ServeReply;
+use std::io::{BufReader, BufWriter, Write};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+
+/// One connection to a [`super::TransportServer`].
+///
+/// * **Sync mode** ([`TransportClient::sample`] /
+///   [`TransportClient::probability`] / [`TransportClient::top_k`]): one
+///   request on the wire at a time, response id checked.
+/// * **Pipelined mode** ([`TransportClient::pipeline`]): a whole wave of
+///   requests is written before any response is read; responses are
+///   matched back to request order by id, so the server may answer out
+///   of order.
+pub struct TransportClient {
+    reader: BufReader<UnixStream>,
+    writer: BufWriter<UnixStream>,
+    next_id: u64,
+}
+
+impl TransportClient {
+    /// Connect to a serving socket.
+    pub fn connect(path: impl AsRef<Path>) -> std::io::Result<TransportClient> {
+        let stream = UnixStream::connect(path)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let writer = BufWriter::new(stream);
+        Ok(TransportClient { reader, writer, next_id: 1 })
+    }
+
+    fn send(&mut self, id: u64, req: &Request) -> Result<(), ProtocolError> {
+        wire::write_request(&mut self.writer, id, req)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<(u64, Response), ProtocolError> {
+        match wire::read_response(&mut self.reader)? {
+            Some(x) => Ok(x),
+            None => Err(ProtocolError::Truncated),
+        }
+    }
+
+    /// Sync round trip: send one request, read its response, verify the
+    /// echoed id. `Error` responses surface as
+    /// [`ProtocolError::Remote`].
+    fn call(&mut self, req: &Request) -> Result<Response, ProtocolError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.send(id, req)?;
+        let (got_id, resp) = self.recv()?;
+        match resp {
+            Response::Error { code, message } => {
+                Err(ProtocolError::Remote { code, message })
+            }
+            _ if got_id != id => {
+                Err(ProtocolError::IdMismatch { sent: id, got: got_id })
+            }
+            resp => Ok(resp),
+        }
+    }
+
+    /// Draw `m` classes from `q(· | h)` under the server's pinned
+    /// snapshot; `seed` rides the wire, so the draw is byte-identical to
+    /// an in-process `MicroBatcher::sample` with the same seed and
+    /// epoch.
+    pub fn sample(
+        &mut self,
+        h: &[f32],
+        m: usize,
+        seed: u64,
+    ) -> Result<ServeReply, ProtocolError> {
+        let req = Request::Sample { h: h.to_vec(), m: m as u32, seed };
+        match self.call(&req)? {
+            Response::Sample { epoch, ids, probs } => {
+                Ok(ServeReply { draw: NegativeDraw { ids, probs }, epoch })
+            }
+            _ => Err(ProtocolError::Malformed("response kind mismatch")),
+        }
+    }
+
+    /// Exact `q(class | h)` plus the epoch it was read from.
+    pub fn probability(
+        &mut self,
+        h: &[f32],
+        class: usize,
+    ) -> Result<(f64, u64), ProtocolError> {
+        let req = Request::Probability { h: h.to_vec(), class: class as u32 };
+        match self.call(&req)? {
+            Response::Probability { epoch, q } => Ok((q, epoch)),
+            _ => Err(ProtocolError::Malformed("response kind mismatch")),
+        }
+    }
+
+    /// Top-k classes under `q(· | h)`, descending, plus the epoch.
+    pub fn top_k(
+        &mut self,
+        h: &[f32],
+        k: usize,
+    ) -> Result<(Vec<(u32, f64)>, u64), ProtocolError> {
+        let req = Request::TopK { h: h.to_vec(), k: k as u32 };
+        match self.call(&req)? {
+            Response::TopK { epoch, items } => Ok((items, epoch)),
+            _ => Err(ProtocolError::Malformed("response kind mismatch")),
+        }
+    }
+
+    /// Pipelined wave: write every request back-to-back (one flush), then
+    /// read responses until each request has its answer. Returns
+    /// responses in *request order* regardless of the order the server
+    /// answered in; per-request failures appear as
+    /// [`Response::Error`] entries rather than failing the wave.
+    pub fn pipeline(
+        &mut self,
+        requests: &[Request],
+    ) -> Result<Vec<Response>, ProtocolError> {
+        if requests.is_empty() {
+            return Ok(Vec::new());
+        }
+        let base = self.next_id;
+        self.next_id += requests.len() as u64;
+        for (i, req) in requests.iter().enumerate() {
+            wire::write_request(&mut self.writer, base + i as u64, req)?;
+        }
+        self.writer.flush()?;
+        let mut out: Vec<Option<Response>> = vec![None; requests.len()];
+        let mut pending = requests.len();
+        while pending > 0 {
+            let (id, resp) = self.recv()?;
+            if let Response::Error { code, message } = &resp {
+                // Connection-level errors (id 0 / protocol code) fail
+                // the whole wave; request-level errors fill their slot.
+                if *code != wire::ERR_SERVE {
+                    return Err(ProtocolError::Remote {
+                        code: *code,
+                        message: message.clone(),
+                    });
+                }
+            }
+            let slot = id
+                .checked_sub(base)
+                .map(|o| o as usize)
+                .filter(|&o| o < requests.len())
+                .ok_or(ProtocolError::IdMismatch { sent: base, got: id })?;
+            if out[slot].replace(resp).is_some() {
+                return Err(ProtocolError::Malformed("duplicate response id"));
+            }
+            pending -= 1;
+        }
+        Ok(out.into_iter().map(|r| r.expect("filled above")).collect())
+    }
+}

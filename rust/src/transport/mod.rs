@@ -1,0 +1,38 @@
+//! L4 — the cross-process serving transport: the serving subsystem
+//! (L3.5) behind a real wire.
+//!
+//! The paper's `O(D log n)` per-draw cost only dominates serving cost at
+//! production scale if the plumbing around the tree walks is cheap and
+//! shared-work amortization survives the process boundary. This layer
+//! supplies both:
+//!
+//! * [`wire`] — a std-only, length-prefixed, versioned binary protocol
+//!   over Unix domain sockets: request/response codecs for `sample`,
+//!   `probability`, and `top_k`, with per-request seeds on the wire so
+//!   served draws stay deterministic across process boundaries (the same
+//!   (seed, query, epoch) yields byte-identical draws in-process and
+//!   remotely). Framing violations decode to a typed
+//!   [`ProtocolError`] and close only the offending connection.
+//! * [`TransportServer`] (`server.rs`) — accept loop + per-connection
+//!   reader/writer threads feeding decoded requests into the
+//!   [`crate::serving::MicroBatcher`] through its non-blocking callback
+//!   API, so requests from *all* connections coalesce into shared
+//!   `map_batch` waves and responses stream back per connection, matched
+//!   by echoed request id.
+//! * [`TransportClient`] (`client.rs`) — sync and pipelined modes; the
+//!   pipelined wave is what makes server-side coalescing reachable from
+//!   a single closed-loop client, and is how `serve-bench --transport
+//!   uds` drives its cross-process closed loop.
+//!
+//! The fan-out under all of this runs on the persistent
+//! [`crate::exec::serve_pool`] — zero per-batch thread spawns on the
+//! serve path.
+
+pub mod wire;
+
+mod client;
+mod server;
+
+pub use client::TransportClient;
+pub use server::{TransportServer, TransportStats};
+pub use wire::{ProtocolError, Request, Response};

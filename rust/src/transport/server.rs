@@ -1,0 +1,311 @@
+//! Unix-domain-socket accept loop feeding the serving micro-batcher.
+//!
+//! One thread accepts connections; each connection gets a reader thread
+//! (decodes frames, submits to the [`MicroBatcher`] via its non-blocking
+//! callback API — so one connection can keep many requests in flight and
+//! they all coalesce with everyone else's) and a writer thread (drains
+//! the connection's reply channel and encodes response frames, matched
+//! to requests by the echoed id, possibly out of order).
+//!
+//! Framing violations answer with one `Error` frame (code
+//! [`wire::ERR_PROTOCOL`], request id 0) and close that connection only
+//! — the batcher and every other connection keep serving. Serve-level
+//! failures (a query the sampler rejects) answer with an `Error` frame
+//! carrying [`wire::ERR_SERVE`] and the connection stays open.
+
+use super::wire::{self, ProtocolError, Response};
+use crate::serving::{MicroBatcher, QueryReply};
+use std::io::{BufReader, BufWriter, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Transport-level counters (for tests and ops visibility).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransportStats {
+    /// Connections accepted so far.
+    pub connections: u64,
+    /// Request frames decoded and submitted to the batcher.
+    pub requests: u64,
+    /// Framing violations that closed a connection.
+    pub protocol_errors: u64,
+}
+
+struct Shared {
+    batcher: Arc<MicroBatcher>,
+    shutdown: AtomicBool,
+    connections: AtomicU64,
+    requests: AtomicU64,
+    protocol_errors: AtomicU64,
+    /// Clones of *live* connection streams keyed by connection id, so
+    /// shutdown can unblock their reader threads with a socket-level
+    /// `shutdown(2)`. Handlers deregister themselves on exit, so this
+    /// tracks open connections only — no fd growth under churn.
+    streams: Mutex<Vec<(u64, UnixStream)>>,
+    /// Live connection-handler join handles (pushed by the accept
+    /// thread, pruned of finished threads on each accept, drained on
+    /// drop).
+    handlers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Shared {
+    fn unblock_connections(&self) {
+        for (_, s) in self.streams.lock().unwrap().iter() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+/// A running serving transport endpoint. Dropping it shuts down the
+/// accept loop and every connection, then removes the socket file.
+pub struct TransportServer {
+    shared: Arc<Shared>,
+    path: PathBuf,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TransportServer {
+    /// Bind a unix socket at `path` (replacing a stale socket file) and
+    /// start serving the given batcher. The listener is bound before
+    /// this returns, so clients may connect immediately.
+    pub fn bind(
+        path: impl AsRef<Path>,
+        batcher: Arc<MicroBatcher>,
+    ) -> std::io::Result<TransportServer> {
+        let path = path.as_ref().to_path_buf();
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)?;
+        // Nonblocking accept + a short poll lets shutdown terminate the
+        // accept thread deterministically — a blocking accept(2) could
+        // only be woken by connecting to `path`, which hangs if the path
+        // no longer routes to this listener (unlinked or rebound).
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            batcher,
+            shutdown: AtomicBool::new(false),
+            connections: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            protocol_errors: AtomicU64::new(0),
+            streams: Mutex::new(Vec::new()),
+            handlers: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("rfsm-transport-accept".into())
+                .spawn(move || accept_loop(&listener, &shared))
+                .expect("spawn transport accept loop")
+        };
+        Ok(TransportServer { shared, path, accept: Some(accept) })
+    }
+
+    /// The socket path clients connect to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn stats(&self) -> TransportStats {
+        TransportStats {
+            connections: self.shared.connections.load(Ordering::Relaxed),
+            requests: self.shared.requests.load(Ordering::Relaxed),
+            protocol_errors: self.shared.protocol_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for TransportServer {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        // Unblock every connection reader; they see EOF and exit. The
+        // accept thread notices `shutdown` on its next poll tick.
+        self.shared.unblock_connections();
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // Second pass AFTER the accept thread is gone: a connection
+        // accepted concurrently with the first pass may have registered
+        // its stream only after we iterated — with the accept loop
+        // joined, the registry is complete, so no straggler reader can
+        // keep a handler join below blocked.
+        self.shared.unblock_connections();
+        let handlers: Vec<_> =
+            self.shared.handlers.lock().unwrap().drain(..).collect();
+        for h in handlers {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// How long the accept thread parks between polls when idle — bounds
+/// both shutdown latency and the cost of an accept-error storm (EMFILE).
+const ACCEPT_POLL: std::time::Duration = std::time::Duration::from_millis(5);
+
+fn accept_loop(listener: &UnixListener, shared: &Arc<Shared>) {
+    loop {
+        if shared.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        let stream = match listener.accept() {
+            Ok((stream, _addr)) => stream,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+                continue;
+            }
+            Err(_) => {
+                // Accept errors (e.g. EMFILE under fd pressure) must not
+                // busy-spin the accept thread.
+                std::thread::sleep(ACCEPT_POLL);
+                continue;
+            }
+        };
+        // The listener is nonblocking for the poll above; accepted
+        // connection sockets must block normally for their reader/writer
+        // threads.
+        if stream.set_nonblocking(false).is_err() {
+            continue;
+        }
+        let conn_id = shared.connections.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            shared.streams.lock().unwrap().push((conn_id, clone));
+        }
+        let handler = {
+            let shared = Arc::clone(shared);
+            std::thread::Builder::new()
+                .name("rfsm-transport-conn".into())
+                .spawn(move || handle_connection(&shared, conn_id, stream))
+        };
+        let mut handlers = shared.handlers.lock().unwrap();
+        // Prune finished threads so churny workloads don't accumulate
+        // handles (their connections already deregistered themselves).
+        handlers.retain(|h| !h.is_finished());
+        match handler {
+            Ok(h) => handlers.push(h),
+            Err(_) => {
+                drop(handlers);
+                // The handler never ran, so deregister its stream here.
+                shared.streams.lock().unwrap().retain(|(id, _)| *id != conn_id);
+            }
+        }
+    }
+}
+
+fn reply_to_response(result: Result<QueryReply, String>) -> Response {
+    match result {
+        Ok(QueryReply::Sample(r)) => Response::Sample {
+            epoch: r.epoch,
+            ids: r.draw.ids,
+            probs: r.draw.probs,
+        },
+        Ok(QueryReply::Probability { q, epoch }) => {
+            Response::Probability { epoch, q }
+        }
+        Ok(QueryReply::TopK { items, epoch }) => Response::TopK { epoch, items },
+        Err(message) => Response::Error { code: wire::ERR_SERVE, message },
+    }
+}
+
+fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: UnixStream) {
+    // Whatever path exits this handler, drop the registry's stream clone
+    // so closed connections release their duplicated fd immediately.
+    struct Deregister<'a> {
+        shared: &'a Shared,
+        conn_id: u64,
+    }
+    impl Drop for Deregister<'_> {
+        fn drop(&mut self) {
+            self.shared
+                .streams
+                .lock()
+                .unwrap()
+                .retain(|(id, _)| *id != self.conn_id);
+        }
+    }
+    let _deregister = Deregister { shared: shared.as_ref(), conn_id };
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::channel::<(u64, Response)>();
+    let writer = std::thread::Builder::new()
+        .name("rfsm-transport-write".into())
+        .spawn(move || writer_loop(writer_stream, &rx));
+    let mut reader = BufReader::new(stream);
+    loop {
+        match wire::read_request(&mut reader) {
+            Ok(None) => break, // clean EOF
+            Ok(Some((id, request))) => {
+                shared.requests.fetch_add(1, Ordering::Relaxed);
+                let (h, query) = request.into_query();
+                let reply_tx = tx.clone();
+                let accepted = shared.batcher.submit(h, query, move |res| {
+                    // A closed connection drops the receiver; that is the
+                    // client's problem, not the batcher's.
+                    let _ = reply_tx.send((id, reply_to_response(res)));
+                });
+                if !accepted {
+                    let _ = tx.send((
+                        id,
+                        Response::Error {
+                            code: wire::ERR_SHUTDOWN,
+                            message: "server shutting down".into(),
+                        },
+                    ));
+                    break;
+                }
+            }
+            Err(ProtocolError::Io(_)) => {
+                // Dead socket: nothing to answer.
+                break;
+            }
+            Err(e) => {
+                // Framing violation (truncated/oversized/bad version or
+                // kind/malformed): one typed error frame (request id 0 =
+                // connection-level), best-effort since a truncating peer
+                // may already be gone, then close. The batcher never saw
+                // the bytes, so it cannot be poisoned.
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send((
+                    0,
+                    Response::Error {
+                        code: wire::ERR_PROTOCOL,
+                        message: e.to_string(),
+                    },
+                ));
+                break;
+            }
+        }
+    }
+    // Dropping our sender lets the writer exit once every in-flight
+    // reply (whose callbacks hold clones) has been delivered.
+    drop(tx);
+    if let Ok(w) = writer {
+        let _ = w.join();
+    }
+}
+
+fn writer_loop(stream: UnixStream, rx: &mpsc::Receiver<(u64, Response)>) {
+    let mut w = BufWriter::new(stream);
+    'outer: loop {
+        let mut item = match rx.recv() {
+            Ok(x) => x,
+            Err(_) => break,
+        };
+        // Write everything currently queued, then flush once — batches
+        // response frames the same way requests coalesce.
+        loop {
+            if wire::write_response(&mut w, item.0, &item.1).is_err() {
+                break 'outer;
+            }
+            match rx.try_recv() {
+                Ok(next) => item = next,
+                Err(_) => break,
+            }
+        }
+        if w.flush().is_err() {
+            break;
+        }
+    }
+    let _ = w.flush();
+}

@@ -1,0 +1,654 @@
+//! Length-prefixed binary wire protocol for the serving transport —
+//! std-only, little-endian, versioned.
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! bytes 0..2   magic  "RF"
+//! byte  2      protocol version (WIRE_VERSION)
+//! byte  3      frame kind (request 0x01..0x03, response 0x81..0x83, error 0xFF)
+//! bytes 4..12  request id (u64 LE; echoed on the response, 0 = connection-level)
+//! bytes 12..16 payload length (u32 LE, ≤ MAX_PAYLOAD)
+//! bytes 16..   payload (kind-specific, exact length — trailing bytes are malformed)
+//! ```
+//!
+//! ## Payloads
+//!
+//! * `Sample` request: `u32 dim | f32×dim h | u32 m | u64 seed`
+//! * `Probability` request: `u32 dim | f32×dim h | u32 class`
+//! * `TopK` request: `u32 dim | f32×dim h | u32 k`
+//! * `Sample` response: `u64 epoch | u32 count | u32×count ids | f64×count probs`
+//! * `Probability` response: `u64 epoch | f64 q`
+//! * `TopK` response: `u64 epoch | u32 count | (u32 id, f64 q)×count`
+//! * `Error` response: `u8 code | u16 len | utf8×len message`
+//!
+//! Per-request seeds ride the wire inside `Sample` requests, so served
+//! draws are deterministic across process boundaries: the same (seed,
+//! query, epoch) yields byte-identical draws in-process and remotely.
+//!
+//! Framing violations decode to a typed [`ProtocolError`]; the server
+//! answers with one best-effort `Error` frame (code
+//! [`ERR_PROTOCOL`], request id 0) and closes the connection — a
+//! malformed peer can never poison the batcher or other connections.
+
+use crate::sampler::ServeQuery;
+use std::fmt;
+use std::io::{ErrorKind, Read, Write};
+
+/// Protocol version carried in every frame header.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Frame magic (catches peers speaking a different protocol entirely).
+pub const MAGIC: [u8; 2] = *b"RF";
+
+/// Header length in bytes.
+pub const HEADER_LEN: usize = 16;
+
+/// Hard cap on payload length: 16 MiB — far above any real query
+/// (`dim ≤ 10⁴` floats) but small enough that a hostile length prefix
+/// cannot balloon server memory.
+pub const MAX_PAYLOAD: usize = 16 << 20;
+
+/// Error-frame code: framing/versioning violation; the sender closes the
+/// connection after this frame.
+pub const ERR_PROTOCOL: u8 = 1;
+/// Error-frame code: this request failed in the sampler (e.g. a query
+/// dimension the feature map rejects); the connection stays usable.
+pub const ERR_SERVE: u8 = 2;
+/// Error-frame code: server is shutting down.
+pub const ERR_SHUTDOWN: u8 = 3;
+
+const KIND_REQ_SAMPLE: u8 = 0x01;
+const KIND_REQ_PROBABILITY: u8 = 0x02;
+const KIND_REQ_TOP_K: u8 = 0x03;
+const KIND_RESP_SAMPLE: u8 = 0x81;
+const KIND_RESP_PROBABILITY: u8 = 0x82;
+const KIND_RESP_TOP_K: u8 = 0x83;
+const KIND_RESP_ERROR: u8 = 0xFF;
+
+/// Typed transport failure. Framing variants are fatal for the
+/// connection ([`ProtocolError::closes_connection`]); `Remote` with
+/// [`ERR_SERVE`] is a per-request failure the connection survives.
+#[derive(Debug)]
+pub enum ProtocolError {
+    /// Peer closed (or the stream died) mid-frame.
+    Truncated,
+    /// Length prefix exceeds [`MAX_PAYLOAD`].
+    Oversized { len: usize, max: usize },
+    /// First two bytes were not [`MAGIC`].
+    BadMagic([u8; 2]),
+    /// Header carried a version this build does not speak.
+    UnknownVersion(u8),
+    /// Header carried an unknown (or directionally invalid) frame kind.
+    UnknownKind(u8),
+    /// Payload failed structural validation (length/content mismatch).
+    Malformed(&'static str),
+    /// Underlying socket error.
+    Io(std::io::Error),
+    /// The peer answered with an `Error` frame (client side).
+    Remote { code: u8, message: String },
+    /// Sync client got a response for a request it did not send.
+    IdMismatch { sent: u64, got: u64 },
+}
+
+impl ProtocolError {
+    /// Whether the connection must be torn down after this error. Only a
+    /// `Remote` serve failure ([`ERR_SERVE`]) leaves the stream usable.
+    pub fn closes_connection(&self) -> bool {
+        !matches!(self, ProtocolError::Remote { code: ERR_SERVE, .. })
+    }
+}
+
+impl fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtocolError::Truncated => write!(f, "truncated frame"),
+            ProtocolError::Oversized { len, max } => {
+                write!(f, "oversized frame: payload {len} > max {max}")
+            }
+            ProtocolError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:02x?}")
+            }
+            ProtocolError::UnknownVersion(v) => {
+                write!(f, "unknown wire version {v} (speaking {WIRE_VERSION})")
+            }
+            ProtocolError::UnknownKind(k) => {
+                write!(f, "unknown frame kind 0x{k:02x}")
+            }
+            ProtocolError::Malformed(why) => write!(f, "malformed frame: {why}"),
+            ProtocolError::Io(e) => write!(f, "transport i/o: {e}"),
+            ProtocolError::Remote { code, message } => {
+                write!(f, "remote error (code {code}): {message}")
+            }
+            ProtocolError::IdMismatch { sent, got } => {
+                write!(f, "response id {got} for request id {sent}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+impl From<std::io::Error> for ProtocolError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == ErrorKind::UnexpectedEof {
+            ProtocolError::Truncated
+        } else {
+            ProtocolError::Io(e)
+        }
+    }
+}
+
+/// One decoded request: the query embedding plus what to do with it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Sample { h: Vec<f32>, m: u32, seed: u64 },
+    Probability { h: Vec<f32>, class: u32 },
+    TopK { h: Vec<f32>, k: u32 },
+}
+
+impl Request {
+    /// Split into the query embedding and the batcher-level
+    /// [`ServeQuery`] it maps to.
+    pub fn into_query(self) -> (Vec<f32>, ServeQuery) {
+        match self {
+            Request::Sample { h, m, seed } => {
+                (h, ServeQuery::Sample { m: m as usize, seed })
+            }
+            Request::Probability { h, class } => {
+                (h, ServeQuery::Probability { class: class as usize })
+            }
+            Request::TopK { h, k } => (h, ServeQuery::TopK { k: k as usize }),
+        }
+    }
+}
+
+/// One decoded response, epoch-tagged per the serving contract.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Sample { epoch: u64, ids: Vec<u32>, probs: Vec<f64> },
+    Probability { epoch: u64, q: f64 },
+    TopK { epoch: u64, items: Vec<(u32, f64)> },
+    Error { code: u8, message: String },
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn push_frame(out: &mut Vec<u8>, kind: u8, id: u64, payload: &[u8]) {
+    debug_assert!(payload.len() <= MAX_PAYLOAD);
+    out.extend_from_slice(&MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(kind);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+fn push_query(payload: &mut Vec<u8>, h: &[f32]) {
+    payload.extend_from_slice(&(h.len() as u32).to_le_bytes());
+    for x in h {
+        payload.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode one request frame into `out` (appended).
+pub fn encode_request(out: &mut Vec<u8>, id: u64, req: &Request) {
+    let mut payload = Vec::new();
+    let kind = match req {
+        Request::Sample { h, m, seed } => {
+            push_query(&mut payload, h);
+            payload.extend_from_slice(&m.to_le_bytes());
+            payload.extend_from_slice(&seed.to_le_bytes());
+            KIND_REQ_SAMPLE
+        }
+        Request::Probability { h, class } => {
+            push_query(&mut payload, h);
+            payload.extend_from_slice(&class.to_le_bytes());
+            KIND_REQ_PROBABILITY
+        }
+        Request::TopK { h, k } => {
+            push_query(&mut payload, h);
+            payload.extend_from_slice(&k.to_le_bytes());
+            KIND_REQ_TOP_K
+        }
+    };
+    push_frame(out, kind, id, &payload);
+}
+
+/// Encode one response frame into `out` (appended).
+pub fn encode_response(out: &mut Vec<u8>, id: u64, resp: &Response) {
+    let mut payload = Vec::new();
+    let kind = match resp {
+        Response::Sample { epoch, ids, probs } => {
+            debug_assert_eq!(ids.len(), probs.len());
+            payload.extend_from_slice(&epoch.to_le_bytes());
+            payload.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+            for i in ids {
+                payload.extend_from_slice(&i.to_le_bytes());
+            }
+            for q in probs {
+                payload.extend_from_slice(&q.to_le_bytes());
+            }
+            KIND_RESP_SAMPLE
+        }
+        Response::Probability { epoch, q } => {
+            payload.extend_from_slice(&epoch.to_le_bytes());
+            payload.extend_from_slice(&q.to_le_bytes());
+            KIND_RESP_PROBABILITY
+        }
+        Response::TopK { epoch, items } => {
+            payload.extend_from_slice(&epoch.to_le_bytes());
+            payload.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            for (i, q) in items {
+                payload.extend_from_slice(&i.to_le_bytes());
+                payload.extend_from_slice(&q.to_le_bytes());
+            }
+            KIND_RESP_TOP_K
+        }
+        Response::Error { code, message } => {
+            let msg = message.as_bytes();
+            let len = msg.len().min(u16::MAX as usize);
+            payload.push(*code);
+            payload.extend_from_slice(&(len as u16).to_le_bytes());
+            payload.extend_from_slice(&msg[..len]);
+            KIND_RESP_ERROR
+        }
+    };
+    push_frame(out, kind, id, &payload);
+}
+
+/// Write one request frame.
+pub fn write_request(
+    w: &mut impl Write,
+    id: u64,
+    req: &Request,
+) -> Result<(), ProtocolError> {
+    let mut buf = Vec::new();
+    encode_request(&mut buf, id, req);
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Write one response frame.
+pub fn write_response(
+    w: &mut impl Write,
+    id: u64,
+    resp: &Response,
+) -> Result<(), ProtocolError> {
+    let mut buf = Vec::new();
+    encode_response(&mut buf, id, resp);
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked payload reader: every decode failure is a typed
+/// [`ProtocolError::Malformed`].
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtocolError> {
+        if self.pos + n > self.buf.len() {
+            return Err(ProtocolError::Malformed("payload shorter than encoded"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtocolError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ProtocolError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtocolError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtocolError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtocolError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, count: usize) -> Result<Vec<f32>, ProtocolError> {
+        let raw = self.take(count * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn finish(&self) -> Result<(), ProtocolError> {
+        if self.pos != self.buf.len() {
+            return Err(ProtocolError::Malformed("trailing payload bytes"));
+        }
+        Ok(())
+    }
+
+    fn query(&mut self) -> Result<Vec<f32>, ProtocolError> {
+        let dim = self.u32()? as usize;
+        // The dim prefix can never describe more floats than the payload
+        // holds; reject before allocating.
+        if dim * 4 > self.buf.len().saturating_sub(self.pos) {
+            return Err(ProtocolError::Malformed("query dim exceeds payload"));
+        }
+        self.f32s(dim)
+    }
+}
+
+struct Header {
+    kind: u8,
+    id: u64,
+    len: usize,
+}
+
+/// Read exactly one frame header. `Ok(None)` is a clean EOF at a frame
+/// boundary (the peer's shutdown signal); EOF *inside* a header is
+/// [`ProtocolError::Truncated`].
+fn read_header(r: &mut impl Read) -> Result<Option<Header>, ProtocolError> {
+    let mut buf = [0u8; HEADER_LEN];
+    let mut filled = 0;
+    while filled < HEADER_LEN {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 {
+                    Ok(None)
+                } else {
+                    Err(ProtocolError::Truncated)
+                }
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    if buf[0..2] != MAGIC {
+        return Err(ProtocolError::BadMagic([buf[0], buf[1]]));
+    }
+    if buf[2] != WIRE_VERSION {
+        return Err(ProtocolError::UnknownVersion(buf[2]));
+    }
+    let id = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+    let len = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(ProtocolError::Oversized { len, max: MAX_PAYLOAD });
+    }
+    Ok(Some(Header { kind: buf[3], id, len }))
+}
+
+fn read_payload(r: &mut impl Read, len: usize) -> Result<Vec<u8>, ProtocolError> {
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+/// Read one request frame (server side). `Ok(None)` on clean EOF.
+pub fn read_request(
+    r: &mut impl Read,
+) -> Result<Option<(u64, Request)>, ProtocolError> {
+    let Some(head) = read_header(r)? else {
+        return Ok(None);
+    };
+    let payload = read_payload(r, head.len)?;
+    let mut c = Cursor::new(&payload);
+    let req = match head.kind {
+        KIND_REQ_SAMPLE => {
+            let h = c.query()?;
+            let m = c.u32()?;
+            let seed = c.u64()?;
+            Request::Sample { h, m, seed }
+        }
+        KIND_REQ_PROBABILITY => {
+            let h = c.query()?;
+            let class = c.u32()?;
+            Request::Probability { h, class }
+        }
+        KIND_REQ_TOP_K => {
+            let h = c.query()?;
+            let k = c.u32()?;
+            Request::TopK { h, k }
+        }
+        other => return Err(ProtocolError::UnknownKind(other)),
+    };
+    c.finish()?;
+    Ok(Some((head.id, req)))
+}
+
+/// Read one response frame (client side). `Ok(None)` on clean EOF.
+pub fn read_response(
+    r: &mut impl Read,
+) -> Result<Option<(u64, Response)>, ProtocolError> {
+    let Some(head) = read_header(r)? else {
+        return Ok(None);
+    };
+    let payload = read_payload(r, head.len)?;
+    let mut c = Cursor::new(&payload);
+    let resp = match head.kind {
+        KIND_RESP_SAMPLE => {
+            let epoch = c.u64()?;
+            let count = c.u32()? as usize;
+            if count * 12 > payload.len().saturating_sub(c.pos) {
+                return Err(ProtocolError::Malformed("draw count exceeds payload"));
+            }
+            let mut ids = Vec::with_capacity(count);
+            for _ in 0..count {
+                ids.push(c.u32()?);
+            }
+            let mut probs = Vec::with_capacity(count);
+            for _ in 0..count {
+                probs.push(c.f64()?);
+            }
+            Response::Sample { epoch, ids, probs }
+        }
+        KIND_RESP_PROBABILITY => {
+            let epoch = c.u64()?;
+            let q = c.f64()?;
+            Response::Probability { epoch, q }
+        }
+        KIND_RESP_TOP_K => {
+            let epoch = c.u64()?;
+            let count = c.u32()? as usize;
+            if count * 12 > payload.len().saturating_sub(c.pos) {
+                return Err(ProtocolError::Malformed("item count exceeds payload"));
+            }
+            let mut items = Vec::with_capacity(count);
+            for _ in 0..count {
+                let i = c.u32()?;
+                let q = c.f64()?;
+                items.push((i, q));
+            }
+            Response::TopK { epoch, items }
+        }
+        KIND_RESP_ERROR => {
+            let code = c.u8()?;
+            let len = c.u16()? as usize;
+            let raw = c.take(len)?;
+            let message = String::from_utf8_lossy(raw).into_owned();
+            Response::Error { code, message }
+        }
+        other => return Err(ProtocolError::UnknownKind(other)),
+    };
+    c.finish()?;
+    Ok(Some((head.id, resp)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip_request(req: Request) -> (u64, Request) {
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 42, &req);
+        read_request(&mut &buf[..]).unwrap().unwrap()
+    }
+
+    fn round_trip_response(resp: Response) -> (u64, Response) {
+        let mut buf = Vec::new();
+        encode_response(&mut buf, 7, &resp);
+        read_response(&mut &buf[..]).unwrap().unwrap()
+    }
+
+    #[test]
+    fn request_frames_round_trip_all_kinds() {
+        let h = vec![0.25f32, -1.5, 3.0];
+        for req in [
+            Request::Sample { h: h.clone(), m: 20, seed: 0xDEAD_BEEF },
+            Request::Probability { h: h.clone(), class: 17 },
+            Request::TopK { h: h.clone(), k: 5 },
+        ] {
+            let (id, got) = round_trip_request(req.clone());
+            assert_eq!(id, 42);
+            assert_eq!(got, req);
+        }
+        // Empty query embeddings survive too.
+        let (_, got) =
+            round_trip_request(Request::Sample { h: vec![], m: 1, seed: 0 });
+        assert_eq!(got, Request::Sample { h: vec![], m: 1, seed: 0 });
+    }
+
+    #[test]
+    fn response_frames_round_trip_all_kinds() {
+        for resp in [
+            Response::Sample {
+                epoch: 3,
+                ids: vec![1, 2, 9],
+                probs: vec![0.5, 0.25, 1e-9],
+            },
+            Response::Probability { epoch: 0, q: 0.125 },
+            Response::TopK { epoch: 8, items: vec![(4, 0.5), (0, 0.1)] },
+            Response::Error { code: ERR_SERVE, message: "nope".into() },
+        ] {
+            let (id, got) = round_trip_response(resp.clone());
+            assert_eq!(id, 7);
+            assert_eq!(got, resp);
+        }
+    }
+
+    #[test]
+    fn truncated_header_and_payload_are_typed_errors() {
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 1, &Request::TopK { h: vec![1.0], k: 3 });
+        // Cut inside the header…
+        let err = read_request(&mut &buf[..HEADER_LEN - 4]).unwrap_err();
+        assert!(matches!(err, ProtocolError::Truncated), "{err}");
+        // …and inside the payload.
+        let err = read_request(&mut &buf[..buf.len() - 2]).unwrap_err();
+        assert!(matches!(err, ProtocolError::Truncated), "{err}");
+        // Clean EOF at a frame boundary is NOT an error.
+        assert!(read_request(&mut &buf[..0]).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.push(WIRE_VERSION);
+        buf.push(0x01);
+        buf.extend_from_slice(&1u64.to_le_bytes());
+        buf.extend_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        let err = read_request(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, ProtocolError::Oversized { .. }), "{err}");
+    }
+
+    #[test]
+    fn unknown_version_magic_and_kind_are_typed_errors() {
+        let mut ok = Vec::new();
+        encode_request(&mut ok, 1, &Request::TopK { h: vec![1.0], k: 3 });
+
+        let mut bad_version = ok.clone();
+        bad_version[2] = 99;
+        assert!(matches!(
+            read_request(&mut &bad_version[..]).unwrap_err(),
+            ProtocolError::UnknownVersion(99)
+        ));
+
+        let mut bad_magic = ok.clone();
+        bad_magic[0] = b'X';
+        assert!(matches!(
+            read_request(&mut &bad_magic[..]).unwrap_err(),
+            ProtocolError::BadMagic(_)
+        ));
+
+        let mut bad_kind = ok.clone();
+        bad_kind[3] = 0x77;
+        assert!(matches!(
+            read_request(&mut &bad_kind[..]).unwrap_err(),
+            ProtocolError::UnknownKind(0x77)
+        ));
+        // A response kind arriving where requests are expected is equally
+        // a violation.
+        let mut resp_at_server = ok;
+        resp_at_server[3] = 0x81;
+        assert!(matches!(
+            read_request(&mut &resp_at_server[..]).unwrap_err(),
+            ProtocolError::UnknownKind(0x81)
+        ));
+    }
+
+    #[test]
+    fn malformed_payloads_are_rejected() {
+        // Query dim prefix larger than the actual payload.
+        let mut buf = Vec::new();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1000u32.to_le_bytes()); // claims 1000 floats
+        payload.extend_from_slice(&0.5f32.to_le_bytes()); // …delivers one
+        super::push_frame(&mut buf, 0x03, 1, &payload);
+        assert!(matches!(
+            read_request(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // Trailing garbage after a valid body.
+        let mut buf = Vec::new();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&0.5f32.to_le_bytes());
+        payload.extend_from_slice(&3u32.to_le_bytes()); // k
+        payload.push(0xAB); // trailing byte
+        super::push_frame(&mut buf, 0x03, 1, &payload);
+        assert!(matches!(
+            read_request(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn error_classification_for_connection_teardown() {
+        assert!(ProtocolError::Truncated.closes_connection());
+        assert!(ProtocolError::UnknownVersion(9).closes_connection());
+        assert!(ProtocolError::Remote { code: ERR_PROTOCOL, message: String::new() }
+            .closes_connection());
+        assert!(!ProtocolError::Remote { code: ERR_SERVE, message: String::new() }
+            .closes_connection());
+    }
+
+    #[test]
+    fn request_into_query_maps_kinds() {
+        let (h, q) =
+            Request::Sample { h: vec![1.0], m: 9, seed: 4 }.into_query();
+        assert_eq!(h, vec![1.0]);
+        assert_eq!(q, ServeQuery::Sample { m: 9, seed: 4 });
+        let (_, q) = Request::Probability { h: vec![], class: 3 }.into_query();
+        assert_eq!(q, ServeQuery::Probability { class: 3 });
+        let (_, q) = Request::TopK { h: vec![], k: 2 }.into_query();
+        assert_eq!(q, ServeQuery::TopK { k: 2 });
+    }
+}

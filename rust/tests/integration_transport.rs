@@ -1,0 +1,351 @@
+//! Cross-process-style loopback tests for the L4 serving transport: a
+//! real `TransportServer` on a unix socket, real `TransportClient`
+//! connections, and the shared micro-batcher in between. Covers
+//! round-trips for all three query kinds, client-vs-inproc seed
+//! determinism (identical draws for identical seeds across the process
+//! boundary), a chi-square of transported samples against the offline
+//! sampler, concurrent-client coalescing, and malformed-frame hardening.
+
+use rfsoftmax::featmap::RffMap;
+use rfsoftmax::linalg::{unit_vector, Matrix};
+use rfsoftmax::rng::Rng;
+use rfsoftmax::sampler::{Sampler, ShardedKernelSampler};
+use rfsoftmax::serving::{BatcherOptions, MicroBatcher, SamplerServer};
+use rfsoftmax::transport::{
+    wire, ProtocolError, Request, Response, TransportClient, TransportServer,
+};
+use std::io::Write;
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sharded_rff(
+    n: usize,
+    d: usize,
+    seed: u64,
+) -> ShardedKernelSampler<RffMap> {
+    let mut rng = Rng::seeded(seed);
+    let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+    let map = RffMap::new(d, 32, 2.0, &mut Rng::seeded(seed + 1));
+    ShardedKernelSampler::with_map(&classes, map, 4, "rff-sharded")
+}
+
+fn sock_path(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("rfsm-test-{}-{tag}.sock", std::process::id()))
+}
+
+/// Server + batcher + offline reference over the same sampler state.
+fn serve_stack(
+    n: usize,
+    d: usize,
+    seed: u64,
+    opts: BatcherOptions,
+    tag: &str,
+) -> (ShardedKernelSampler<RffMap>, Arc<MicroBatcher>, TransportServer) {
+    let offline = sharded_rff(n, d, seed);
+    let (server, _writer) = SamplerServer::new(offline.fork().unwrap());
+    let batcher = Arc::new(MicroBatcher::spawn(server, opts));
+    let transport =
+        TransportServer::bind(sock_path(tag), Arc::clone(&batcher)).unwrap();
+    (offline, batcher, transport)
+}
+
+#[test]
+fn loopback_round_trip_all_three_query_kinds() {
+    let n = 48;
+    let d = 6;
+    let (offline, _batcher, transport) =
+        serve_stack(n, d, 2000, BatcherOptions::default(), "roundtrip");
+    let mut client = TransportClient::connect(transport.path()).unwrap();
+    let mut rng = Rng::seeded(2001);
+    for probe in 0..4 {
+        let h = unit_vector(&mut rng, d);
+
+        let reply = client.sample(&h, 9, 7000 + probe).unwrap();
+        assert_eq!(reply.draw.len(), 9);
+        assert_eq!(reply.epoch, 0);
+        for (&id, &q) in reply.draw.ids.iter().zip(&reply.draw.probs) {
+            assert!((id as usize) < n);
+            let want = offline.probability(&h, id as usize);
+            assert!(
+                (q - want).abs() < 1e-12 * want.max(1e-12),
+                "transported q {q} vs offline {want}"
+            );
+        }
+
+        let (q, epoch) = client.probability(&h, 11).unwrap();
+        assert_eq!(epoch, 0);
+        assert!((q - offline.probability(&h, 11)).abs() < 1e-15);
+
+        let (top, epoch) = client.top_k(&h, 5).unwrap();
+        assert_eq!(epoch, 0);
+        assert_eq!(top, offline.top_k(&h, 5));
+    }
+    let stats = transport.stats();
+    assert_eq!(stats.connections, 1);
+    assert_eq!(stats.requests, 12);
+    assert_eq!(stats.protocol_errors, 0);
+}
+
+#[test]
+fn wire_draws_are_byte_identical_to_inproc_for_equal_seeds() {
+    let n = 64;
+    let d = 8;
+    let (offline, batcher, transport) =
+        serve_stack(n, d, 2100, BatcherOptions::default(), "determinism");
+    let mut client = TransportClient::connect(transport.path()).unwrap();
+    let mut rng = Rng::seeded(2101);
+    for i in 0..12u64 {
+        let h = unit_vector(&mut rng, d);
+        let wired = client.sample(&h, 7, 0xABC0 + i).unwrap();
+        let local = batcher.sample(&h, 7, 0xABC0 + i);
+        assert_eq!(wired.epoch, local.epoch);
+        assert_eq!(
+            wired.draw, local.draw,
+            "seed {i}: wire and inproc draws diverged"
+        );
+        // The deterministic kinds agree too.
+        let (wq, _) = client.probability(&h, (i as usize) % n).unwrap();
+        let (lq, _) = batcher.probability(&h, (i as usize) % n);
+        assert_eq!(wq, lq);
+        let (wt, _) = client.top_k(&h, 6).unwrap();
+        let (lt, _) = batcher.top_k(&h, 6);
+        assert_eq!(wt, lt);
+        // And both match the offline sampler exactly.
+        assert_eq!(wt, offline.top_k(&h, 6));
+    }
+}
+
+#[test]
+fn transported_samples_match_offline_distribution_chi_square() {
+    let n = 32;
+    let d = 6;
+    let (offline, _batcher, transport) =
+        serve_stack(n, d, 2200, BatcherOptions::default(), "chi2");
+    let mut client = TransportClient::connect(transport.path()).unwrap();
+    let mut rng = Rng::seeded(2201);
+    let h = unit_vector(&mut rng, d);
+    let m = 8;
+    let rounds = 1200usize;
+    let mut counts = vec![0usize; n];
+    for i in 0..rounds {
+        let reply = client.sample(&h, m, 0x517A + i as u64).unwrap();
+        for &id in &reply.draw.ids {
+            counts[id as usize] += 1;
+        }
+    }
+    let trials = (rounds * m) as f64;
+    for i in 0..n {
+        let q = offline.probability(&h, i);
+        let expect = q * trials;
+        let sd = (trials * q * (1.0 - q)).sqrt().max(1.0);
+        assert!(
+            (counts[i] as f64 - expect).abs() <= 5.0 * sd + 3.0,
+            "class {i}: transported count {} vs offline expectation \
+             {expect:.1} (q = {q:.5})",
+            counts[i]
+        );
+    }
+}
+
+#[test]
+fn concurrent_pipelined_clients_coalesce_into_shared_batches() {
+    let n = 64;
+    let d = 8;
+    let (_offline, batcher, transport) = serve_stack(
+        n,
+        d,
+        2300,
+        BatcherOptions { max_batch: 32, max_wait: Duration::from_millis(1) },
+        "coalesce",
+    );
+    let clients = 4usize;
+    let waves = 15usize;
+    let burst = 16usize;
+    let path = transport.path().to_path_buf();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let path = path.clone();
+            std::thread::spawn(move || {
+                let mut client = TransportClient::connect(&path).unwrap();
+                let mut rng = Rng::seeded(2301 + c as u64);
+                for w in 0..waves {
+                    // A pipelined burst keeps `burst` requests in flight
+                    // on this one connection — the server must coalesce
+                    // them (and other clients') into shared waves.
+                    let reqs: Vec<Request> = (0..burst)
+                        .map(|j| {
+                            let h = unit_vector(&mut rng, d);
+                            match j % 3 {
+                                0 => Request::Sample {
+                                    h,
+                                    m: 5,
+                                    seed: (c * 10_000 + w * 100 + j) as u64,
+                                },
+                                1 => Request::Probability {
+                                    h,
+                                    class: (j % n) as u32,
+                                },
+                                _ => Request::TopK { h, k: 4 },
+                            }
+                        })
+                        .collect();
+                    let resps = client.pipeline(&reqs).unwrap();
+                    assert_eq!(resps.len(), burst);
+                    for (req, resp) in reqs.iter().zip(&resps) {
+                        match (req, resp) {
+                            (
+                                Request::Sample { .. },
+                                Response::Sample { ids, probs, .. },
+                            ) => {
+                                assert_eq!(ids.len(), 5);
+                                assert_eq!(probs.len(), 5);
+                            }
+                            (
+                                Request::Probability { .. },
+                                Response::Probability { q, .. },
+                            ) => assert!(q.is_finite()),
+                            (
+                                Request::TopK { .. },
+                                Response::TopK { items, .. },
+                            ) => assert_eq!(items.len(), 4),
+                            other => panic!("kind mismatch: {other:?}"),
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let (requests, batches) = batcher.stats();
+    assert_eq!(requests, (clients * waves * burst) as u64);
+    let mean_batch = requests as f64 / batches.max(1) as f64;
+    assert!(
+        mean_batch > 1.0,
+        "no coalescing under pipelined load: {requests} requests in \
+         {batches} batches (mean {mean_batch:.2})"
+    );
+    let (samples, probs, top_ks) = batcher.kind_counts();
+    assert!(samples > 0 && probs > 0 && top_ks > 0, "mix did not coalesce");
+}
+
+/// Write raw bytes, read one response frame back, then confirm EOF.
+fn send_raw_expect_error(path: &PathBuf, bytes: &[u8]) -> Response {
+    let mut stream = UnixStream::connect(path).unwrap();
+    stream.write_all(bytes).unwrap();
+    stream.flush().unwrap();
+    // Half-close the write side so a server waiting for more payload
+    // bytes sees the truncation immediately.
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let (id, resp) = wire::read_response(&mut stream)
+        .expect("server must answer with a typed error frame")
+        .expect("connection closed without an error frame");
+    assert_eq!(id, 0, "protocol errors are connection-level (id 0)");
+    // After the error frame the server closes the connection.
+    assert!(
+        wire::read_response(&mut stream).unwrap().is_none(),
+        "connection must close after a protocol error"
+    );
+    resp
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_and_never_poison_the_batcher() {
+    let n = 32;
+    let d = 6;
+    let (_offline, batcher, transport) =
+        serve_stack(n, d, 2400, BatcherOptions::default(), "malformed");
+    let path = transport.path().to_path_buf();
+
+    // A valid frame to mutate.
+    let mut valid = Vec::new();
+    wire::encode_request(
+        &mut valid,
+        1,
+        &Request::TopK { h: vec![0.5; d], k: 3 },
+    );
+
+    // 1. Truncated: header promises payload the peer never sends.
+    let resp = send_raw_expect_error(&path, &valid[..valid.len() - 4]);
+    let Response::Error { code, message } = resp else {
+        panic!("expected error frame, got {resp:?}")
+    };
+    assert_eq!(code, wire::ERR_PROTOCOL);
+    assert!(message.contains("truncated"), "message: {message}");
+
+    // 2. Oversized: length prefix beyond MAX_PAYLOAD.
+    let mut oversized = valid.clone();
+    oversized[12..16]
+        .copy_from_slice(&(wire::MAX_PAYLOAD as u32 + 1).to_le_bytes());
+    let resp = send_raw_expect_error(&path, &oversized);
+    let Response::Error { code, message } = resp else {
+        panic!("expected error frame, got {resp:?}")
+    };
+    assert_eq!(code, wire::ERR_PROTOCOL);
+    assert!(message.contains("oversized"), "message: {message}");
+
+    // 3. Unknown version.
+    let mut bad_version = valid.clone();
+    bad_version[2] = 9;
+    let resp = send_raw_expect_error(&path, &bad_version);
+    let Response::Error { code, message } = resp else {
+        panic!("expected error frame, got {resp:?}")
+    };
+    assert_eq!(code, wire::ERR_PROTOCOL);
+    assert!(message.contains("version"), "message: {message}");
+
+    // 4. Garbage magic.
+    let resp = send_raw_expect_error(&path, &[0xDEu8; 64]);
+    let Response::Error { code, .. } = resp else {
+        panic!("expected error frame, got {resp:?}")
+    };
+    assert_eq!(code, wire::ERR_PROTOCOL);
+
+    assert_eq!(transport.stats().protocol_errors, 4);
+
+    // The batcher was never poisoned: a fresh well-formed client works,
+    // and so do serve-level errors on a live connection.
+    let mut client = TransportClient::connect(&path).unwrap();
+    let mut rng = Rng::seeded(2401);
+    let h = unit_vector(&mut rng, d);
+    let reply = client.sample(&h, 5, 1).unwrap();
+    assert_eq!(reply.draw.len(), 5);
+
+    // A query the sampler rejects (wrong dim) is a *request*-level error
+    // (ERR_SERVE): typed, and the connection survives it.
+    let err = client.sample(&[1.0f32; 3], 5, 2).unwrap_err();
+    match &err {
+        ProtocolError::Remote { code, .. } => {
+            assert_eq!(*code, wire::ERR_SERVE);
+            assert!(!err.closes_connection());
+        }
+        other => panic!("expected remote serve error, got {other:?}"),
+    }
+    let reply = client.sample(&h, 5, 3).unwrap();
+    assert_eq!(reply.draw.len(), 5);
+
+    // Every well-formed request above flowed through the shared batcher.
+    let (requests, _batches) = batcher.stats();
+    assert!(requests >= 3);
+}
+
+#[test]
+fn server_shutdown_closes_connections_cleanly() {
+    let n = 24;
+    let d = 6;
+    let (_offline, _batcher, transport) =
+        serve_stack(n, d, 2500, BatcherOptions::default(), "shutdown");
+    let path = transport.path().to_path_buf();
+    let mut client = TransportClient::connect(&path).unwrap();
+    let mut rng = Rng::seeded(2501);
+    let h = unit_vector(&mut rng, d);
+    assert_eq!(client.sample(&h, 4, 1).unwrap().draw.len(), 4);
+    drop(transport);
+    // The socket file is gone and the connection is dead.
+    assert!(!path.exists(), "socket file must be removed on shutdown");
+    assert!(client.sample(&h, 4, 2).is_err());
+}
