@@ -18,7 +18,8 @@ use rfsoftmax::linalg::Matrix;
 use rfsoftmax::rng::Rng;
 use rfsoftmax::sampler::{RffSampler, Sampler, ShardedKernelSampler};
 use rfsoftmax::serving::{
-    run_closed_loop, BatcherOptions, LoadSpec, RequestMix, TransportMode,
+    run_closed_loop, BatcherOptions, ChurnSpec, LoadSpec, RequestMix,
+    TransportMode,
 };
 use std::time::Duration;
 
@@ -84,6 +85,7 @@ fn main() {
                     swap_pause: Duration::from_micros(200),
                     transport: *tmode,
                     mix: *mix,
+                    churn: None,
                 };
                 match run_closed_loop(sampler.as_ref(), &spec) {
                     Ok(report) => {
@@ -92,6 +94,47 @@ fn main() {
                     }
                     Err(e) => println!("{label}: SKIP ({e})"),
                 }
+            }
+        }
+    }
+
+    // Churn cells: live class-universe mutation (3 adds : 1 retire, 200
+    // ops of 8 classes) under the mixed closed loop — the BENCH records
+    // carry mutation-latency percentiles and post-churn qps so the
+    // trajectory tracks churn cost from this PR onward. The uds cell
+    // drives the mutations as ADD_CLASSES/RETIRE_CLASSES admin frames.
+    let churn = ChurnSpec { adds: 3, retires: 1, ops: 200, batch: 8 };
+    for (tmode, mix, total_requests) in &transports {
+        println!(
+            "\n# churn closed loop: transport={} mix={} churn={} n={n}",
+            tmode.name(),
+            mix.label(),
+            churn.label(),
+        );
+        for (label, sampler) in &samplers {
+            let spec = LoadSpec {
+                readers: 4,
+                requests_per_reader: total_requests / 4,
+                m,
+                top_k: 10,
+                dim: d,
+                seed: 7,
+                batcher: BatcherOptions {
+                    max_batch: 32,
+                    max_wait: Duration::ZERO,
+                },
+                updates_per_swap: 32,
+                swap_pause: Duration::from_micros(200),
+                transport: *tmode,
+                mix: *mix,
+                churn: Some(churn),
+            };
+            match run_closed_loop(sampler.as_ref(), &spec) {
+                Ok(report) => {
+                    println!("{}", report.render());
+                    println!("BENCH {}", report.to_json());
+                }
+                Err(e) => println!("{label}: SKIP ({e})"),
             }
         }
     }

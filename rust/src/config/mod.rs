@@ -191,6 +191,21 @@ pub struct SamplerConfig {
     /// quadratic memory fallback routes to the bucket sampler); static
     /// samplers have no tree and ignore it.
     pub shards: usize,
+    /// Planned ceiling on runtime class growth (`add_classes` /
+    /// `extend_vocab`). `0` = no growth planned. Only sizing decisions
+    /// read it — the quadratic memory fallback gates on the capacity the
+    /// tree would occupy after growing to this many classes (capacity
+    /// doubling means a grown tree is as large as one built at this size
+    /// up front), so the fallback choice cannot be invalidated later by
+    /// churn. Growth beyond the ceiling still works; it just wasn't
+    /// budgeted for.
+    pub max_capacity: usize,
+    /// Live-count imbalance ratio (heaviest/lightest shard) above which
+    /// a sharded kernel tree redistributes its live classes after a
+    /// mutation. Retire-skew is the only way shards drift (inserts
+    /// already route to the lightest shard). `<= 1` disables. Only
+    /// meaningful with `sampler.shards > 1`.
+    pub rebalance: f64,
     pub seed: u64,
 }
 
@@ -206,6 +221,8 @@ impl Default for SamplerConfig {
             absolute: false,
             share_across_batch: true,
             shards: 0,
+            max_capacity: 0,
+            rebalance: 4.0,
             seed: 17,
         }
     }
@@ -504,6 +521,10 @@ impl Config {
                 self.sampler.share_across_batch = boolean(key, v)?
             }
             "sampler.shards" => self.sampler.shards = us(key, v)?,
+            "sampler.max_capacity" => {
+                self.sampler.max_capacity = us(key, v)?
+            }
+            "sampler.rebalance" => self.sampler.rebalance = f64v(key, v)?,
             "sampler.seed" => self.sampler.seed = u64v(key, v)?,
 
             "serving.double_buffer" => {
@@ -572,6 +593,14 @@ impl Config {
         {
             return Err(ConfigError("sampler.dim must be > 0 for rff".into()));
         }
+        if self.sampler.max_capacity != 0
+            && self.sampler.max_capacity < self.model.num_classes
+        {
+            return Err(ConfigError(format!(
+                "sampler.max_capacity ({}) must be 0 or >= model.num_classes ({})",
+                self.sampler.max_capacity, self.model.num_classes
+            )));
+        }
         if self.serving.max_batch == 0 {
             return Err(ConfigError("serving.max_batch must be > 0".into()));
         }
@@ -616,6 +645,8 @@ impl Config {
                         Json::from(self.sampler.share_across_batch),
                     ),
                     ("shards", Json::from(self.sampler.shards)),
+                    ("max_capacity", Json::from(self.sampler.max_capacity)),
+                    ("rebalance", Json::from(self.sampler.rebalance)),
                     ("seed", Json::from(self.sampler.seed as usize)),
                 ]),
             ),
@@ -715,6 +746,26 @@ mod tests {
         assert_eq!(c2.serving.max_batch, 64);
         assert_eq!(c2.serving.max_wait_us, 500);
         c.serving.max_batch = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn vocab_knobs_round_trip_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.sampler.max_capacity, 0);
+        assert!((c.sampler.rebalance - 4.0).abs() < 1e-12);
+        c.set("sampler.max_capacity", "50000").unwrap();
+        c.set("sampler.rebalance", "2.5").unwrap();
+        assert_eq!(c.sampler.max_capacity, 50_000);
+        assert!((c.sampler.rebalance - 2.5).abs() < 1e-12);
+        let j = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.sampler.max_capacity, 50_000);
+        assert!((c2.sampler.rebalance - 2.5).abs() < 1e-12);
+        // A nonzero capacity below n is a config error.
+        c.sampler.max_capacity = 100;
+        c.model.num_classes = 1000;
         assert!(c.validate().is_err());
     }
 

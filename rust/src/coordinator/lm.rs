@@ -178,6 +178,38 @@ impl<'rt> LmTrainer<'rt> {
         }
     }
 
+    /// Grow the label universe mid-run: each row of `embeddings` (any
+    /// scale; the sampling service normalizes its copy) becomes a new
+    /// class, returned as stable ids extending `0..n`. The CLS parameter
+    /// block grows in place (optimizer state padded, history preserved)
+    /// and the sampler's tree grows in amortized `O(D log n)` per class —
+    /// under `serving.double_buffer` as an epoch-versioned snapshot swap
+    /// that lands before the next draw. Training keeps working because
+    /// the sampled-loss artifacts are *n-independent* (they consume
+    /// gathered target/negative rows, never the full table); the
+    /// full-softmax eval keeps scoring the compiled base vocabulary,
+    /// which is exactly the corpus's label space.
+    pub fn extend_vocab(&mut self, embeddings: &Matrix) -> Result<Vec<u32>> {
+        super::extend_vocab_impl(
+            self.service.as_mut(),
+            &mut self.params,
+            &mut self.optimizer,
+            &mut self.metrics,
+            CLS,
+            self.shapes.d,
+            embeddings,
+        )
+    }
+
+    /// Retire live classes: permanent holes the sampler never draws
+    /// again. The CLS rows stay allocated (ids are stable), they just
+    /// stop receiving sampling mass. See
+    /// [`super::retire_classes_impl`] for the retired-target
+    /// precondition on the data stream.
+    pub fn retire_classes(&mut self, ids: &[u32]) -> Result<()> {
+        super::retire_classes_impl(self.service.as_mut(), &mut self.metrics, ids)
+    }
+
     /// Which training artifact this sampler uses: the Quadratic baseline
     /// optimizes the absolute-softmax loss (paper §4.1).
     fn train_entry(&self) -> String {
@@ -424,7 +456,7 @@ impl<'rt> LmTrainer<'rt> {
             self.block_tensor(WH),
             self.block_tensor(BIAS),
             self.block_tensor(PROJ),
-            self.block_tensor(CLS),
+            self.block_tensor_rows(CLS, n),
             HostTensor::i32(&[bsz], targets),
         ])?;
         self.metrics.record_duration("execute", t_exec.elapsed());
@@ -445,7 +477,6 @@ impl<'rt> LmTrainer<'rt> {
             let param = self.params.get_mut(CLS);
             self.optimizer.update_dense(CLS, &mut param.data, &grad);
         }
-        let _ = n;
         Ok(loss)
     }
 
@@ -472,7 +503,9 @@ impl<'rt> LmTrainer<'rt> {
                 self.block_tensor(WH),
                 self.block_tensor(BIAS),
                 self.block_tensor(PROJ),
-                self.block_tensor(CLS),
+                // Fixed-shape view: the compiled eval scores the base
+                // vocabulary even after extend_vocab grew the table.
+                self.block_tensor_rows(CLS, self.shapes.n),
                 HostTensor::i32(&[bsz], targets),
             ])?;
             total += outs[0].scalar() as f64;
@@ -487,6 +520,13 @@ impl<'rt> LmTrainer<'rt> {
     fn block_tensor(&self, id: usize) -> HostTensor {
         let b = self.params.get(id);
         HostTensor::f32(&b.shape, b.data.clone())
+    }
+
+    /// First `rows` rows of a 2-D block — the compiled artifacts' fixed
+    /// shape view of a table that may have grown past it via
+    /// [`LmTrainer::extend_vocab`].
+    fn block_tensor_rows(&self, id: usize, rows: usize) -> HostTensor {
+        super::block_rows_tensor(&self.params, id, rows)
     }
 }
 

@@ -199,6 +199,80 @@ impl<'rt> TrainerBuilder<'rt> {
     }
 }
 
+/// Shared trainer-side vocabulary growth (LmTrainer/XcTrainer both
+/// delegate here so the CLS/optimizer/sampler sequencing can never
+/// drift between tasks): extend the sampling service, verify the
+/// assigned ids continue the CLS block's rows, grow the block in place,
+/// and zero-pad the optimizer state (preserving accumulator history).
+pub(crate) fn extend_vocab_impl(
+    service: Option<&mut sampler_service::SamplerService>,
+    params: &mut crate::model::ParamStore,
+    optimizer: &mut crate::optim::Optimizer,
+    metrics: &mut Metrics,
+    cls_block: usize,
+    d: usize,
+    embeddings: &crate::linalg::Matrix,
+) -> Result<Vec<u32>> {
+    if embeddings.rows() == 0 {
+        return Ok(Vec::new()); // a no-label step is not an error
+    }
+    anyhow::ensure!(
+        embeddings.cols() == d,
+        "extend_vocab: embedding dim {} != d {d}",
+        embeddings.cols()
+    );
+    let expected = params.get(cls_block).rows() as u32;
+    let svc = service.ok_or_else(|| {
+        anyhow::anyhow!("extend_vocab: FULL softmax has no sampling service")
+    })?;
+    let ids = svc.extend_vocab(embeddings)?;
+    anyhow::ensure!(
+        ids.first().copied() == Some(expected),
+        "extend_vocab: sampler assigned ids from {:?} but CLS has \
+         {expected} rows — sampler/trainer state diverged",
+        ids.first()
+    );
+    let cls = params.get_mut(cls_block);
+    cls.append_rows(embeddings);
+    let numel = cls.numel();
+    optimizer.grow_state(cls_block, numel);
+    metrics.incr("vocab_added", ids.len() as u64);
+    Ok(ids)
+}
+
+/// Shared trainer-side retirement. **Precondition**: once a class is
+/// retired, the data stream must stop producing it as a *target* — a
+/// retired target reaching `sample_negatives` is an invariant violation
+/// that panics (the batch pipeline owns its label space; validating
+/// every batch's targets against holes on the hot path is not worth the
+/// cost). Retired classes appearing as *negatives* cannot happen — the
+/// sampler never emits holes.
+pub(crate) fn retire_classes_impl(
+    service: Option<&mut sampler_service::SamplerService>,
+    metrics: &mut Metrics,
+    ids: &[u32],
+) -> Result<()> {
+    let svc = service.ok_or_else(|| {
+        anyhow::anyhow!("retire_classes: FULL softmax has no sampling service")
+    })?;
+    svc.retire_classes(ids)?;
+    metrics.incr("vocab_retired", ids.len() as u64);
+    Ok(())
+}
+
+/// First `rows` rows of a 2-D parameter block as a tensor — the compiled
+/// artifacts' fixed-shape view of a table that may have grown past it
+/// via `extend_vocab`.
+pub(crate) fn block_rows_tensor(
+    params: &crate::model::ParamStore,
+    id: usize,
+    rows: usize,
+) -> crate::runtime::HostTensor {
+    let b = params.get(id);
+    let d = b.cols();
+    crate::runtime::HostTensor::f32(&[rows, d], b.data[..rows * d].to_vec())
+}
+
 /// Aggregate per-row gradients with duplicate row ids: returns unique row
 /// ids and their **summed** gradients (applying duplicates sequentially
 /// through a stateful optimizer would be wrong).

@@ -39,25 +39,39 @@ pub fn build_sampler(
             let d = classes.cols();
             let shards = s.shards.max(1);
             let multi = s.shards > 1;
+            // `sampler.rebalance` arms retire-skew redistribution on the
+            // sharded representation (a no-op until classes churn).
             match s.feature_map {
-                FeatureMapKind::Rff => Box::new(ShardedKernelSampler::with_map(
-                    classes,
-                    RffMap::new(d, s.dim, s.nu, rng),
-                    shards,
-                    if multi { "rff-sharded" } else { "rff" },
-                )),
-                FeatureMapKind::Orf => Box::new(ShardedKernelSampler::with_map(
-                    classes,
-                    OrfMap::new(d, s.dim, s.nu, rng),
-                    shards,
-                    if multi { "rff-orf-sharded" } else { "rff-orf" },
-                )),
-                FeatureMapKind::Sorf => Box::new(ShardedKernelSampler::with_map(
-                    classes,
-                    SorfMap::new(d, s.dim, s.nu, rng),
-                    shards,
-                    if multi { "rff-sorf-sharded" } else { "rff-sorf" },
-                )),
+                FeatureMapKind::Rff => {
+                    let mut sk = ShardedKernelSampler::with_map(
+                        classes,
+                        RffMap::new(d, s.dim, s.nu, rng),
+                        shards,
+                        if multi { "rff-sharded" } else { "rff" },
+                    );
+                    sk.set_rebalance_threshold(s.rebalance);
+                    Box::new(sk)
+                }
+                FeatureMapKind::Orf => {
+                    let mut sk = ShardedKernelSampler::with_map(
+                        classes,
+                        OrfMap::new(d, s.dim, s.nu, rng),
+                        shards,
+                        if multi { "rff-orf-sharded" } else { "rff-orf" },
+                    );
+                    sk.set_rebalance_threshold(s.rebalance);
+                    Box::new(sk)
+                }
+                FeatureMapKind::Sorf => {
+                    let mut sk = ShardedKernelSampler::with_map(
+                        classes,
+                        SorfMap::new(d, s.dim, s.nu, rng),
+                        shards,
+                        if multi { "rff-sorf-sharded" } else { "rff-sorf" },
+                    );
+                    sk.set_rebalance_threshold(s.rebalance);
+                    Box::new(sk)
+                }
             }
         }
         SamplerKind::Rff => Box::new(RffSampler::with_kind(
@@ -81,11 +95,18 @@ pub fn build_sampler(
             // transiently while forking at construction, so the budget
             // is charged per copy. (The bucket fallback does not support
             // serving forks; the trainers' `new_auto` degrades it to
-            // synchronous updates with a warning.)
+            // synchronous updates with a warning.) The estimate is taken
+            // at the planned **capacity** (`sampler.max_capacity`), not
+            // just today's class count: capacity doubling means a tree
+            // that grows to `max_capacity` classes occupies exactly what
+            // a tree built at that size would, so the fallback decision
+            // stays correct after runtime growth instead of being made
+            // against a universe about to be outgrown.
             let d = classes.cols();
             let dim = d * d + 1;
-            let per_copy = KernelTree::estimate_bytes(n, dim)
-                + n * d * std::mem::size_of::<f32>();
+            let plan_n = n.max(s.max_capacity);
+            let per_copy = KernelTree::estimate_bytes(plan_n, dim)
+                + plan_n * d * std::mem::size_of::<f32>();
             let copies = if cfg.serving.double_buffer { 3 } else { 1 };
             let tree_bytes = per_copy * copies;
             if tree_bytes > 2 << 30 {
@@ -98,12 +119,14 @@ pub fn build_sampler(
                 // Same serving rationale as the Rff arm: the sharded
                 // representation's fork is a memcpy clone, so the double
                 // buffer skips a second O(n·d²) tree rebuild.
-                Box::new(ShardedKernelSampler::with_map(
+                let mut sk = ShardedKernelSampler::with_map(
                     classes,
                     crate::featmap::QuadraticMap::new(d, s.alpha, 1.0),
                     s.shards.max(1),
                     if s.shards > 1 { "quadratic-sharded" } else { "quadratic" },
-                ))
+                );
+                sk.set_rebalance_threshold(s.rebalance);
+                Box::new(sk)
             } else {
                 Box::new(QuadraticSampler::new(classes, s.alpha, 1.0))
             }
@@ -414,6 +437,40 @@ impl SamplerService {
         }
     }
 
+    /// Grow the class universe: row `k` of `embeddings` (normalized
+    /// here) becomes a new class; returns the assigned ids (stable —
+    /// they extend `0..n` contiguously). Direct mode applies
+    /// synchronously; double-buffered mode stages onto the serving
+    /// shadow and the growth becomes visible at the next draw as one
+    /// epoch swap. Errors (typed, not panics) for fixed-universe
+    /// samplers.
+    pub fn extend_vocab(&mut self, embeddings: &Matrix) -> Result<Vec<u32>> {
+        let mut normed = embeddings.clone();
+        normed.normalize_rows_in_place();
+        match &mut self.backend {
+            Backend::Direct(s) => s
+                .add_classes(&normed)
+                .map_err(|e| anyhow::anyhow!("extend_vocab: {e}")),
+            Backend::Served(db) => db
+                .extend_vocab(normed)
+                .map_err(|e| anyhow::anyhow!("extend_vocab: {e}")),
+        }
+    }
+
+    /// Retire live classes: their slots become permanent holes that are
+    /// never drawn again (no zero-probability support left behind). In
+    /// double-buffered mode the holes appear at the next draw.
+    pub fn retire_classes(&mut self, ids: &[u32]) -> Result<()> {
+        match &mut self.backend {
+            Backend::Direct(s) => s
+                .retire_classes(ids)
+                .map_err(|e| anyhow::anyhow!("retire_classes: {e}")),
+            Backend::Served(db) => db
+                .retire_classes(ids.to_vec())
+                .map_err(|e| anyhow::anyhow!("retire_classes: {e}")),
+        }
+    }
+
     /// Direct access for diagnostics (bias harness, tests). In
     /// double-buffered mode this is the *pinned snapshot* — stable until
     /// the next draw publishes staged updates.
@@ -696,6 +753,58 @@ mod tests {
         assert_eq!(p1.ids.len(), 6);
         assert_eq!(p2.ids.len(), 6);
         assert_eq!(p2.mask.len(), 20 * 6);
+    }
+
+    #[test]
+    fn extend_and_retire_through_both_backends() {
+        let mut rng = Rng::seeded(950);
+        let d = 6;
+        let classes = Matrix::randn(&mut rng, 20, d).l2_normalized_rows();
+        let build = || {
+            let map =
+                crate::featmap::RffMap::new(d, 32, 2.0, &mut Rng::seeded(951));
+            Box::new(ShardedKernelSampler::with_map(
+                &classes, map, 4, "rff-sharded",
+            )) as Box<dyn Sampler>
+        };
+        let mut direct = SamplerService::new(build(), 4, Rng::seeded(952));
+        let mut served =
+            SamplerService::new_double_buffered(build(), 4, Rng::seeded(952))
+                .unwrap();
+        let mut grow = Matrix::zeros(3, d);
+        for r in 0..3 {
+            // Deliberately unnormalized: the service normalizes.
+            let mut v = unit_vector(&mut rng, d);
+            v.iter_mut().for_each(|x| *x *= 3.0);
+            grow.row_mut(r).copy_from_slice(&v);
+        }
+        let ids_d = direct.extend_vocab(&grow).unwrap();
+        let ids_s = served.extend_vocab(&grow).unwrap();
+        assert_eq!(ids_d, vec![20, 21, 22]);
+        assert_eq!(ids_d, ids_s);
+        direct.retire_classes(&[1, 21]).unwrap();
+        served.retire_classes(&[1, 21]).unwrap();
+        assert_eq!(direct.num_classes(), 23);
+        // Direct mode is immediate; served mode lands at the next draw.
+        assert_eq!(direct.sampler().live_classes(), 21);
+        let h = Matrix::from_vec(1, d, unit_vector(&mut rng, d));
+        let _ = served.draw_batch(&h, &[0]);
+        assert_eq!(served.num_classes(), 23);
+        assert_eq!(served.sampler().live_classes(), 21);
+        // Both serve the same (normalized-embedding) distribution.
+        let q = unit_vector(&mut rng, d);
+        for i in 0..23 {
+            let a = direct.sampler().probability(&q, i);
+            let b = served.sampler().probability(&q, i);
+            assert!(
+                (a - b).abs() < 1e-9 * a.max(b).max(1e-12),
+                "class {i}: direct {a} vs served {b}"
+            );
+        }
+        assert_eq!(direct.sampler().probability(&q, 1), 0.0);
+        // Typed error surfaces through the service.
+        assert!(direct.retire_classes(&[1]).is_err());
+        assert!(served.retire_classes(&[1]).is_err());
     }
 
     #[test]

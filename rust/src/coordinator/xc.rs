@@ -174,6 +174,39 @@ impl<'rt> XcTrainer<'rt> {
         }
     }
 
+    /// Grow the label universe mid-run (streaming extreme-classification
+    /// deployments gain labels continuously): rows of `embeddings`
+    /// become new classes with stable ids extending `0..n`. The CLS
+    /// block grows in place (optimizer history preserved), the sampler
+    /// tree grows in amortized `O(D log n)` per class, and the sampled
+    /// train path keeps working unchanged (its artifacts gather rows —
+    /// they are n-independent). PREC@k evaluation keeps ranking the
+    /// compiled base label set.
+    pub fn extend_vocab(&mut self, embeddings: &Matrix) -> Result<Vec<u32>> {
+        super::extend_vocab_impl(
+            self.service.as_mut(),
+            &mut self.params,
+            &mut self.optimizer,
+            &mut self.metrics,
+            CLS,
+            self.shapes.d,
+            embeddings,
+        )
+    }
+
+    /// Retire live labels: permanent holes the sampler never draws again.
+    /// See [`super::retire_classes_impl`] for the retired-target
+    /// precondition on the data stream.
+    pub fn retire_classes(&mut self, ids: &[u32]) -> Result<()> {
+        super::retire_classes_impl(self.service.as_mut(), &mut self.metrics, ids)
+    }
+
+    /// First `rows` rows of a 2-D block — the compiled artifacts' fixed
+    /// shape view of a table that may have grown past it.
+    fn block_tensor_rows(&self, id: usize, rows: usize) -> HostTensor {
+        super::block_rows_tensor(&self.params, id, rows)
+    }
+
     pub fn run(&mut self) -> Result<TrainReport> {
         let t0 = Instant::now();
         let total_steps = step_cap()
@@ -345,10 +378,7 @@ impl<'rt> XcTrainer<'rt> {
         let outs = exe.run(&[
             HostTensor::f32(&[bsz, nnz, d], feat_emb),
             HostTensor::f32(&[bsz, nnz], batch.values.clone()),
-            {
-                let b = self.params.get(CLS);
-                HostTensor::f32(&b.shape, b.data.clone())
-            },
+            self.block_tensor_rows(CLS, self.shapes.n),
             HostTensor::i32(&[bsz], targets),
         ])?;
         self.metrics.record_duration("execute", t_exec.elapsed());
@@ -397,10 +427,9 @@ impl<'rt> XcTrainer<'rt> {
             let outs = exe.run(&[
                 HostTensor::f32(&[bsz, nnz, d], feat_emb),
                 HostTensor::f32(&[bsz, nnz], values),
-                {
-                    let b = self.params.get(CLS);
-                    HostTensor::f32(&b.shape, b.data.clone())
-                },
+                // Fixed-shape view: scores the compiled base label set
+                // even after extend_vocab grew the table.
+                self.block_tensor_rows(CLS, n),
             ])?;
             let scores = outs[0].as_f32();
             p1 += batch_precision_at_k(scores, n, &labels, 1);

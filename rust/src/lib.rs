@@ -37,7 +37,41 @@
 //!   coalescing spans connections), and a
 //!   [`transport::TransportClient`] with sync and pipelined modes.
 //!   Per-request seeds ride the wire, so identical seeds produce
-//!   byte-identical draws in-process and remotely.
+//!   byte-identical draws in-process and remotely. Per-connection
+//!   backpressure (in-flight cap + typed `ERR_OVERLOAD` sheds + reader
+//!   flow control) bounds server memory against slow pipelined clients,
+//!   and responses encode zero-copy into reused per-connection buffers.
+//!
+//! ## Mutable class universe (this PR's tentpole)
+//!
+//! Every real extreme-classification deployment faces a *streaming*
+//! label space: classes appear and retire under live traffic. The class
+//! universe is therefore mutable end-to-end:
+//!
+//! * **tree** — [`sampler::KernelTree::insert_class`] appends a leaf
+//!   with power-of-two capacity doubling (amortized `O(D log n)`;
+//!   never a full rebuild on the hot path);
+//!   [`sampler::KernelTree::retire_class`] drops the leaf from the
+//!   live-count-driven ε floor, so a hole carries *exactly* zero mass;
+//! * **sharded tree** — [`sampler::ShardedKernelTree`] keeps an explicit
+//!   slot-assignment table: inserts route to the lightest shard, and the
+//!   sampler redistributes live classes when retire-skew crosses the
+//!   `sampler.rebalance` ratio;
+//! * **sampler trait** — [`sampler::Sampler::add_classes`] /
+//!   [`sampler::Sampler::retire_classes`] with stable ids (holes are
+//!   never reused) and a typed [`sampler::VocabError`] from
+//!   fixed-universe baselines. Retired classes are *masked out*: never
+//!   emitted by `sample*`/`serve_queries`/`top_k` (rejection fallbacks
+//!   included), and `probability` returns an exact 0;
+//! * **serving** — the [`serving::SamplerWriter`] applies structural
+//!   mutations to its private shadow and publishes them as ordinary
+//!   epoch-versioned snapshot swaps, so readers never observe a
+//!   half-grown tree; trainers expose `extend_vocab`/`retire_classes`
+//!   through [`serving::DoubleBufferedSampler`];
+//! * **wire** — versioned `ADD_CLASSES`/`RETIRE_CLASSES` admin frames
+//!   (wire v2) drive churn cross-process via
+//!   [`transport::VocabAdmin`], and `serve-bench --churn adds:retires`
+//!   reports mutation-latency percentiles and post-churn qps.
 //! * **L2 (JAX, build time)** — model fwd/bwd (`python/compile/model.py`),
 //!   AOT-lowered to HLO text once by `make artifacts`.
 //! * **L1 (Pallas, build time)** — the RFF feature-map and fused
@@ -135,6 +169,25 @@
 //! assert_eq!(wired.draw, batcher.sample(queries.row(0), 10, 7).draw);
 //! let (_q, _epoch) = client.probability(queries.row(0), 3).unwrap();
 //! let (_top, _epoch) = client.top_k(queries.row(0), 5).unwrap();
+//!
+//! // Dynamic vocabulary: grow and shrink the class universe at runtime
+//! // (amortized O(D log n) per mutation; ids are stable, retired slots
+//! // become permanent zero-probability holes). Through the serving
+//! // writer this lands as one epoch-versioned snapshot swap; over the
+//! // wire it travels as ADD_CLASSES/RETIRE_CLASSES admin frames
+//! // (`serve-bench --transport uds --churn 3:1` drives it under load).
+//! let mut growing = ShardedKernelSampler::with_map(
+//!     &classes,
+//!     RffMap::new(32, 64, 4.0, &mut rng),
+//!     8,
+//!     "rff-sharded",
+//! );
+//! let fresh = Matrix::randn(&mut rng, 2, 32).l2_normalized_rows();
+//! let new_ids = growing.add_classes(&fresh).unwrap();
+//! assert_eq!(new_ids, vec![1000, 1001]);       // appended, stable
+//! growing.retire_classes(&[3]).unwrap();       // permanent hole
+//! assert_eq!(growing.live_classes(), 1001);    // 1000 + 2 − 1
+//! assert_eq!(growing.probability(queries.row(0), 3), 0.0);
 //! ```
 //!
 //! See `examples/` for end-to-end training drivers and `rust/benches/` for
@@ -182,14 +235,16 @@ pub mod prelude {
         GumbelTopKSampler, KernelTree, LogUniformSampler, NegativeDraw,
         QuadraticSampler, RffSampler, Sampler, ServeAnswer, ServeQuery,
         ServeSampler, ShardedKernelSampler, ShardedKernelTree, UniformSampler,
+        VocabError,
     };
     pub use crate::serving::{
-        BatcherOptions, DoubleBufferedSampler, MicroBatcher, QueryReply,
-        RequestMix, SamplerServer, SamplerSnapshot, SamplerWriter, ServeReply,
-        TransportMode,
+        BatcherOptions, ChurnSpec, DoubleBufferedSampler, MicroBatcher,
+        QueryReply, RequestMix, SamplerServer, SamplerSnapshot, SamplerWriter,
+        ServeReply, TransportMode,
     };
     pub use crate::transport::{
         ProtocolError, TransportClient, TransportServer, TransportStats,
+        VocabAdmin,
     };
     pub use crate::softmax::{
         full_softmax_loss, sampled_softmax_loss, SampledLoss,

@@ -152,6 +152,16 @@ impl Matrix {
         out
     }
 
+    /// Append one row (the dynamic-vocabulary growth path: kernel
+    /// samplers extend their class-embedding copy in place instead of
+    /// reallocating the whole table per insert; `Vec` doubling makes the
+    /// copy cost amortized O(cols) per appended row).
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "push_row: width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
     /// Transposed copy.
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);

@@ -221,6 +221,13 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
                         default: Some("10".into()),
                     },
                     FlagSpec {
+                        name: "churn",
+                        help: "class-universe churn adds:retires[:ops] \
+                               (admin frames over uds; reports mutation \
+                               latency + post-churn qps)",
+                        default: None,
+                    },
+                    FlagSpec {
                         name: "updates-per-swap",
                         help: "classes updated per writer publish cycle",
                         default: Some("32".into()),
@@ -252,6 +259,10 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
         rfsoftmax::serving::TransportMode::parse(a.str_or("transport", "inproc"))?;
     let mix = rfsoftmax::serving::RequestMix::parse(a.str_or("mix", "1:0:0"))?;
     let top_k = a.usize_or("top-k", 10)?;
+    let churn = match a.get("churn") {
+        Some(s) => Some(rfsoftmax::serving::ChurnSpec::parse(s)?),
+        None => None,
+    };
     let updates_per_swap = if a.has("no-writer") {
         0
     } else {
@@ -282,6 +293,7 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
         swap_pause: std::time::Duration::from_micros(200),
         transport,
         mix,
+        churn,
     };
     println!(
         "serve-bench: sampler={} n={n} d={d} m={} transport={} mix={} \

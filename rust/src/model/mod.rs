@@ -53,6 +53,20 @@ impl Block {
             l2_normalize(chunk);
         }
     }
+
+    /// Append rows to a 2-D block (dynamic-vocabulary growth: the class
+    /// table grows in place when the sampler's universe is extended;
+    /// `Vec` doubling amortizes the copy). Width must match.
+    pub fn append_rows(&mut self, extra: &crate::linalg::Matrix) {
+        assert_eq!(
+            self.cols(),
+            extra.cols(),
+            "append_rows({}): width mismatch",
+            self.name
+        );
+        self.data.extend_from_slice(extra.data());
+        self.shape[0] += extra.rows();
+    }
 }
 
 /// Ordered collection of parameter blocks. Block order is the calling

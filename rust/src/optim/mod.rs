@@ -85,6 +85,23 @@ impl Optimizer {
         slot
     }
 
+    /// Grow a block's state to `new_numel`, padding with zeros — the
+    /// dynamic-vocabulary path: existing accumulators keep their history
+    /// (the lazy `slot()` sizing would otherwise RESET the whole block's
+    /// state on the first post-growth update), new rows start cold. A
+    /// no-op for blocks that have no state yet (it will be created lazily
+    /// at the right size).
+    pub fn grow_state(&mut self, block: usize, new_numel: usize) {
+        if let Some(slot) = self.slots.get_mut(&block) {
+            if !slot.m.is_empty() && slot.m.len() < new_numel {
+                slot.m.resize(new_numel, 0.0);
+            }
+            if !slot.v.is_empty() && slot.v.len() < new_numel {
+                slot.v.resize(new_numel, 0.0);
+            }
+        }
+    }
+
     /// Dense update of a whole block: `param -= lr * step(grad)`.
     pub fn update_dense(&mut self, block: usize, param: &mut [f32], grad: &[f32]) {
         assert_eq!(param.len(), grad.len());

@@ -20,7 +20,7 @@
 //!
 //! Memory: `O((n/b)·D + n·d)` instead of `O(n·D)`.
 
-use super::{BatchDraw, KernelTree, NegativeDraw, Sampler};
+use super::{BatchDraw, KernelTree, NegativeDraw, Sampler, VocabError};
 use crate::featmap::FeatureMap;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
@@ -28,13 +28,23 @@ use std::cell::RefCell;
 
 const EPS: f64 = 1e-8;
 
+/// `slot_of` sentinel for retired classes.
+const RETIRED: u32 = u32::MAX;
+
 pub struct BucketKernelSampler<M: FeatureMap> {
     map: M,
-    /// Tree over bucket-level φ sums.
+    /// Tree over bucket-level φ sums (bucket leaves retire when they
+    /// drain and revive if the tail bucket refills on append).
     tree: KernelTree,
     classes: Matrix,
     bucket_size: usize,
     num_buckets: usize,
+    /// Live class ids (swap-remove on retire) + inverse index — O(1)
+    /// membership for the uniform fallback and hole masking.
+    live_ids: Vec<u32>,
+    slot_of: Vec<u32>,
+    /// Live classes per bucket (bucket retires at 0).
+    bucket_live: Vec<u32>,
     scratch: RefCell<Scratch>,
     name: &'static str,
 }
@@ -72,12 +82,20 @@ impl<M: FeatureMap> BucketKernelSampler<M> {
             }
             tree.add_leaf(bkt, &sum);
         }
+        let mut bucket_live = vec![bucket_size as u32; num_buckets];
+        if num_buckets > 0 {
+            bucket_live[num_buckets - 1] =
+                (n - (num_buckets - 1) * bucket_size) as u32;
+        }
         Self {
             map,
             tree,
             classes: classes.clone(),
             bucket_size,
             num_buckets,
+            live_ids: (0..n as u32).collect(),
+            slot_of: (0..n as u32).collect(),
+            bucket_live,
             scratch: RefCell::new(Scratch {
                 query: vec![0.0; dim],
                 phi_old: vec![0.0; dim],
@@ -102,13 +120,19 @@ impl<M: FeatureMap> BucketKernelSampler<M> {
         (lo, (lo + self.bucket_size).min(self.classes.rows()))
     }
 
-    /// Clamped within-bucket masses for query h; returns total.
+    /// Clamped within-bucket masses for query h; returns total. Retired
+    /// classes contribute exactly 0 (no ε floor), so they are never
+    /// picked by the in-bucket scan.
     fn bucket_masses(&self, h: &[f32], bkt: usize, masses: &mut Vec<f64>) -> f64 {
         let (lo, hi) = self.bucket_range(bkt);
         masses.clear();
         let mut total = 0.0;
         for i in lo..hi {
-            let k = self.map.exact_kernel(h, self.classes.row(i)).max(0.0) + EPS;
+            let k = if self.slot_of[i] == RETIRED {
+                0.0
+            } else {
+                self.map.exact_kernel(h, self.classes.row(i)).max(0.0) + EPS
+            };
             masses.push(k);
             total += k;
         }
@@ -125,20 +149,28 @@ impl<M: FeatureMap> BucketKernelSampler<M> {
     ) -> (u32, f64) {
         let (bkt, q_bucket) = self.tree.sample(query, rng);
         let total = self.bucket_masses(h, bkt, masses);
+        debug_assert!(total > 0.0, "drew a drained bucket {bkt}");
         let mut u = rng.f64() * total;
-        let mut pick = masses.len() - 1;
+        let mut pick = usize::MAX;
         for (j, &w) in masses.iter().enumerate() {
             u -= w;
-            if u < 0.0 {
+            if u < 0.0 && w > 0.0 {
                 pick = j;
                 break;
             }
+        }
+        if pick == usize::MAX {
+            // fp boundary: fall back to the last positive-mass slot.
+            pick = masses
+                .iter()
+                .rposition(|&w| w > 0.0)
+                .expect("bucket with zero total mass");
         }
         let (lo, _) = self.bucket_range(bkt);
         ((lo + pick) as u32, q_bucket * masses[pick] / total)
     }
 
-    /// Two-level probability for a pre-mapped query.
+    /// Two-level probability for a pre-mapped query. Exact 0 for holes.
     fn probability_with_query(
         &self,
         query: &[f32],
@@ -146,6 +178,9 @@ impl<M: FeatureMap> BucketKernelSampler<M> {
         class: usize,
         masses: &mut Vec<f64>,
     ) -> f64 {
+        if self.slot_of[class] == RETIRED {
+            return 0.0;
+        }
         let bkt = class / self.bucket_size;
         let q_bucket = self.tree.probability(query, bkt);
         let total = self.bucket_masses(h, bkt, masses);
@@ -154,7 +189,8 @@ impl<M: FeatureMap> BucketKernelSampler<M> {
     }
 
     /// Negatives (`≠ target`) for a pre-mapped query, with the standard
-    /// rejection + uniform fallback (never aborts).
+    /// rejection + live-aware uniform fallback (never aborts, never
+    /// emits holes).
     fn negatives_with_query(
         &self,
         query: &[f32],
@@ -164,8 +200,13 @@ impl<M: FeatureMap> BucketKernelSampler<M> {
         rng: &mut Rng,
         masses: &mut Vec<f64>,
     ) -> NegativeDraw {
-        let n = self.classes.rows();
-        assert!(n > 1, "sample_negatives: need ≥ 2 classes to exclude one");
+        let live = self.live_ids.len();
+        assert!(
+            live > 1,
+            "sample_negatives: need ≥ 2 live classes to exclude one"
+        );
+        let t_slot = self.slot_of[target];
+        assert!(t_slot != RETIRED, "sample_negatives: retired target");
         let q_t = self.probability_with_query(query, h, target, masses);
         let renorm = (1.0 - q_t).max(f64::MIN_POSITIVE);
         let mut out = NegativeDraw::with_capacity(m);
@@ -184,8 +225,9 @@ impl<M: FeatureMap> BucketKernelSampler<M> {
             attempts += 1;
         }
         while out.ids.len() < m {
-            out.ids.push(super::uniform_excluding(n, target, rng) as u32);
-            out.probs.push(1.0 / (n - 1) as f64);
+            let pick = super::uniform_excluding(live, t_slot as usize, rng);
+            out.ids.push(self.live_ids[pick]);
+            out.probs.push(1.0 / (live - 1) as f64);
         }
         out
     }
@@ -194,6 +236,82 @@ impl<M: FeatureMap> BucketKernelSampler<M> {
 impl<M: FeatureMap> Sampler for BucketKernelSampler<M> {
     fn num_classes(&self) -> usize {
         self.classes.rows()
+    }
+
+    fn live_classes(&self) -> usize {
+        self.live_ids.len()
+    }
+
+    /// Append new classes. Each lands in the tail bucket (`id /
+    /// bucket_size`): a fresh bucket inserts a new leaf into the
+    /// bucket-level tree (capacity doubling as needed), a drained tail
+    /// bucket revives, a live one just accumulates φ. `O(D log(n/b))`
+    /// per class.
+    fn add_classes(&mut self, embeddings: &Matrix) -> Result<Vec<u32>, VocabError> {
+        if embeddings.rows() == 0 {
+            return Ok(Vec::new());
+        }
+        super::validate_add_dim(embeddings.cols(), self.classes.cols())?;
+        let mut ids = Vec::with_capacity(embeddings.rows());
+        for r in 0..embeddings.rows() {
+            let id = self.classes.rows();
+            let bkt = id / self.bucket_size;
+            let sc = self.scratch.get_mut();
+            self.map.map_into(embeddings.row(r), &mut sc.phi_new);
+            if bkt == self.num_buckets {
+                let leaf = self.tree.insert_class(&sc.phi_new);
+                debug_assert_eq!(leaf, bkt);
+                self.num_buckets += 1;
+                self.bucket_live.push(0);
+            } else if self.bucket_live[bkt] == 0 && self.tree.is_retired(bkt)
+            {
+                self.tree.revive_class(bkt, &sc.phi_new);
+            } else {
+                self.tree.update_leaf(bkt, &sc.phi_new);
+            }
+            self.bucket_live[bkt] += 1;
+            self.classes.push_row(embeddings.row(r));
+            self.slot_of.push(self.live_ids.len() as u32);
+            self.live_ids.push(id as u32);
+            ids.push(id as u32);
+        }
+        Ok(ids)
+    }
+
+    /// Retire live classes: subtract φ from the bucket leaf, zero the
+    /// in-bucket mass, and retire the bucket leaf itself when it drains.
+    fn retire_classes(&mut self, classes: &[u32]) -> Result<(), VocabError> {
+        super::validate_retire(
+            classes,
+            self.classes.rows(),
+            self.live_ids.len(),
+            |c| self.slot_of[c] == RETIRED,
+        )?;
+        for &c in classes {
+            let c = c as usize;
+            let bkt = c / self.bucket_size;
+            let sc = self.scratch.get_mut();
+            self.map.map_into(self.classes.row(c), &mut sc.phi_old);
+            for v in sc.phi_old.iter_mut() {
+                *v = -*v;
+            }
+            self.tree.update_leaf(bkt, &sc.phi_old);
+            self.bucket_live[bkt] -= 1;
+            if self.bucket_live[bkt] == 0 {
+                // Drained: retire the bucket leaf so its fp residue can
+                // never be picked (subtraction of zero — the mass is
+                // already gone).
+                sc.phi_old.iter_mut().for_each(|v| *v = 0.0);
+                self.tree.retire_class(bkt, &sc.phi_old);
+            }
+            let at = self.slot_of[c] as usize;
+            self.live_ids.swap_remove(at);
+            if at < self.live_ids.len() {
+                self.slot_of[self.live_ids[at] as usize] = at as u32;
+            }
+            self.slot_of[c] = RETIRED;
+        }
+        Ok(())
     }
 
     fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
@@ -258,6 +376,10 @@ impl<M: FeatureMap> Sampler for BucketKernelSampler<M> {
     }
 
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
+        assert!(
+            self.slot_of[class] != RETIRED,
+            "update_class: class {class} is retired"
+        );
         let bkt = class / self.bucket_size;
         let sc = self.scratch.get_mut();
         self.map.map_into(self.classes.row(class), &mut sc.phi_old);
@@ -380,6 +502,79 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn bucket_churn_matches_scratch_rebuild_and_skips_holes() {
+        let (classes, mut s) = setup(17, 6, 4);
+        let mut rng = Rng::seeded(167);
+        let mut all = classes.clone();
+        // Add 9 classes: fills the tail bucket and opens two more
+        // (17 → 26 over bucket_size 4 ⇒ buckets 5 → 7).
+        let mut add = Matrix::zeros(9, 6);
+        for r in 0..9 {
+            let v = unit_vector(&mut rng, 6);
+            add.row_mut(r).copy_from_slice(&v);
+            all.push_row(add.row(r));
+        }
+        let ids = s.add_classes(&add).unwrap();
+        assert_eq!(ids, (17u32..26).collect::<Vec<_>>());
+        assert_eq!(s.num_buckets(), 7);
+        // Retire one whole interior bucket (ids 4..8), a straggler, and
+        // the ENTIRE tail bucket (ids 24..26) to set up revival below.
+        s.retire_classes(&[4, 5, 6, 7, 12, 24, 25]).unwrap();
+        assert_eq!(s.num_classes(), 26);
+        assert_eq!(s.live_classes(), 19);
+        assert!(s.retire_classes(&[4]).is_err(), "double retire");
+
+        let h = unit_vector(&mut rng, 6);
+        let retired = [4usize, 5, 6, 7, 12, 24, 25];
+        for &r in &retired {
+            assert_eq!(s.probability(&h, r), 0.0, "hole {r}");
+        }
+        let total: f64 =
+            (0..26).map(|i| s.probability(&h, i)).sum();
+        assert!((total - 1.0).abs() < 1e-6, "Σq = {total}");
+        // The quadratic bucket probability is exact, so survivors must
+        // match a from-scratch sampler on the live set.
+        let live_ids: Vec<usize> =
+            (0..26).filter(|i| !retired.contains(i)).collect();
+        let mut live_mat = Matrix::zeros(0, 6);
+        for &g in &live_ids {
+            live_mat.push_row(all.row(g));
+        }
+        let reference = BucketKernelSampler::with_map(
+            &live_mat,
+            QuadraticMap::new(6, 100.0, 1.0),
+            4,
+            "quadratic-bucket",
+        );
+        for (rank, &g) in live_ids.iter().enumerate() {
+            let a = s.probability(&h, g);
+            let b = reference.probability(&h, rank);
+            assert!(
+                (a - b).abs() < 1e-3 * a.max(b).max(1e-7),
+                "global {g} / rank {rank}: churned {a} vs rebuilt {b}"
+            );
+        }
+        // Draws + negatives (incl. the uniform fallback path) skip holes.
+        let draw = s.sample(&h, 20_000, &mut rng);
+        assert!(draw.ids.iter().all(|&i| !retired.contains(&(i as usize))));
+        let negs = s.sample_negatives(&h, 0, 2000, &mut rng);
+        assert!(negs.ids.iter().all(|&i| {
+            i != 0 && !retired.contains(&(i as usize))
+        }));
+        // Tail-bucket revival: bucket 6 (ids 24..26) fully drained above,
+        // so this append must revive its bucket-level leaf.
+        let mut one = Matrix::zeros(1, 6);
+        let v = unit_vector(&mut rng, 6);
+        one.row_mut(0).copy_from_slice(&v);
+        let revived = s.add_classes(&one).unwrap();
+        assert_eq!(revived, vec![26]);
+        assert!(s.probability(&h, 26) > 0.0);
+        let total: f64 =
+            (0..27).map(|i| s.probability(&h, i)).sum();
+        assert!((total - 1.0).abs() < 1e-6, "post-revival Σq = {total}");
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! memory at `O(nD)` node sums instead of additionally storing every leaf
 //! feature vector), and (c) reusable query scratch.
 
-use super::{BatchDraw, KernelTree, NegativeDraw, Sampler, ServeSampler};
+use super::{
+    BatchDraw, KernelTree, NegativeDraw, Sampler, ServeSampler, VocabError,
+};
 use crate::config::FeatureMapKind;
 use crate::featmap::{FeatureMap, OrfMap, QuadraticMap, RffMap, SorfMap};
 use crate::linalg::Matrix;
@@ -74,23 +76,79 @@ impl<M: FeatureMap> KernelSampler<M> {
     }
 
     /// Rebuild the tree from scratch (counters numerical drift after very
-    /// long runs; `O(nD + nd·cost(φ))`).
+    /// long runs; `O(nD + nd·cost(φ))`). Preserves retired holes.
     pub fn rebuild(&mut self) {
         let n = self.classes.rows();
         let dim = self.map.output_dim();
         let mut tree = KernelTree::new(n, dim, TREE_EPS);
         let mut phi = vec![0.0f32; dim];
         for i in 0..n {
+            if self.tree.is_retired(i) {
+                continue; // leave the hole's leaf at exactly zero
+            }
             self.map.map_into(self.classes.row(i), &mut phi);
             tree.add_leaf(i, &phi);
         }
+        let zeros = vec![0.0f32; dim];
+        for i in 0..n {
+            if self.tree.is_retired(i) {
+                // Re-tombstone: the fresh leaf holds no mass, so the
+                // subtraction is of a zero vector.
+                tree.retire_class(i, &zeros);
+            }
+        }
         self.tree = tree;
+    }
+
+    /// Slot ids currently retired (holes), ascending.
+    fn retired_ids(&self) -> Vec<u32> {
+        (0..self.tree.num_classes() as u32)
+            .filter(|&i| self.tree.is_retired(i as usize))
+            .collect()
     }
 }
 
 impl<M: FeatureMap + Clone + 'static> Sampler for KernelSampler<M> {
     fn num_classes(&self) -> usize {
         self.tree.num_classes()
+    }
+
+    fn live_classes(&self) -> usize {
+        self.tree.live_classes()
+    }
+
+    /// Append new classes (amortized `O(D log n)` each: one path update
+    /// plus the capacity-doubling copy amortized over the doubling).
+    fn add_classes(&mut self, embeddings: &Matrix) -> Result<Vec<u32>, VocabError> {
+        if embeddings.rows() == 0 {
+            return Ok(Vec::new());
+        }
+        super::validate_add_dim(embeddings.cols(), self.classes.cols())?;
+        let phis = self.map.map_batch(embeddings);
+        let mut ids = Vec::with_capacity(embeddings.rows());
+        for r in 0..embeddings.rows() {
+            let g = self.tree.insert_class(phis.row(r));
+            self.classes.push_row(embeddings.row(r));
+            debug_assert_eq!(g + 1, self.classes.rows());
+            ids.push(g as u32);
+        }
+        Ok(ids)
+    }
+
+    /// Retire live classes (`O(D log n)` each); validated up front, with
+    /// φ of every victim from one `map_batch` gemm.
+    fn retire_classes(&mut self, classes: &[u32]) -> Result<(), VocabError> {
+        super::validate_retire(
+            classes,
+            self.tree.num_classes(),
+            self.tree.live_classes(),
+            |c| self.tree.is_retired(c),
+        )?;
+        let (map, cls, tree) = (&self.map, &self.classes, &mut self.tree);
+        super::retire_phi_batch(map, cls, classes, |c, phi| {
+            tree.retire_class(c, phi)
+        });
+        Ok(())
     }
 
     fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
@@ -204,16 +262,24 @@ impl<M: FeatureMap + Clone + 'static> Sampler for KernelSampler<M> {
     /// so the fork rebuilds the same distribution on the naturally-`Sync`
     /// single-shard [`super::ShardedKernelSampler`] (identical tree
     /// semantics — a one-shard pick is a no-op — and the same `TREE_EPS`
-    /// floor). Note the fork's *draw stream* differs from the unsharded
-    /// walk (the shard pick consumes RNG) even though the distribution
-    /// is identical. `O(n · cost(φ))`, paid once at server construction.
+    /// floor), then re-retires this sampler's holes so a churned
+    /// universe forks faithfully. Note the fork's *draw stream* differs
+    /// from the unsharded walk (the shard pick consumes RNG) even though
+    /// the distribution is identical. `O(n · cost(φ))`, paid once at
+    /// server construction.
     fn fork(&self) -> Option<Box<dyn ServeSampler>> {
-        Some(Box::new(super::ShardedKernelSampler::with_map(
+        let mut fork = super::ShardedKernelSampler::with_map(
             &self.classes,
             self.map.clone(),
             1,
             self.name,
-        )))
+        );
+        let retired = self.retired_ids();
+        if !retired.is_empty() {
+            fork.retire_classes(&retired)
+                .expect("fork: re-retiring valid holes cannot fail");
+        }
+        Some(Box::new(fork))
     }
 
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
@@ -358,6 +424,18 @@ impl Sampler for RffSampler {
         self.inner().num_classes()
     }
 
+    fn live_classes(&self) -> usize {
+        self.inner().live_classes()
+    }
+
+    fn add_classes(&mut self, embeddings: &Matrix) -> Result<Vec<u32>, VocabError> {
+        self.inner_mut().add_classes(embeddings)
+    }
+
+    fn retire_classes(&mut self, classes: &[u32]) -> Result<(), VocabError> {
+        self.inner_mut().retire_classes(classes)
+    }
+
     fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
         self.inner().sample(h, m, rng)
     }
@@ -445,6 +523,18 @@ impl QuadraticSampler {
 impl Sampler for QuadraticSampler {
     fn num_classes(&self) -> usize {
         self.inner.num_classes()
+    }
+
+    fn live_classes(&self) -> usize {
+        self.inner.live_classes()
+    }
+
+    fn add_classes(&mut self, embeddings: &Matrix) -> Result<Vec<u32>, VocabError> {
+        self.inner.add_classes(embeddings)
+    }
+
+    fn retire_classes(&mut self, classes: &[u32]) -> Result<(), VocabError> {
+        self.inner.retire_classes(classes)
     }
 
     fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
@@ -748,6 +838,77 @@ mod tests {
             assert!(
                 gi == bi || (gq - bq).abs() < 1e-15,
                 "rank {j}: id {gi} vs {bi}"
+            );
+        }
+    }
+
+    #[test]
+    fn unsharded_churn_matches_scratch_rebuild_and_forks_with_holes() {
+        // Quadratic kernel: strictly positive masses, so probabilities
+        // are pad-layout-independent and a from-scratch rebuild on the
+        // live set is an exact reference (up to ε/fp).
+        let mut rng = Rng::seeded(150);
+        let d = 6;
+        let classes = normalized_classes(&mut rng, 10, d);
+        let mut s = QuadraticSampler::new(&classes, 100.0, 1.0);
+        let mut all = classes.clone();
+        // Add 12 classes (forces a pad doubling from 16 → 32), retire 4.
+        let mut add = Matrix::zeros(12, d);
+        for r in 0..12 {
+            let v = unit_vector(&mut rng, d);
+            add.row_mut(r).copy_from_slice(&v);
+            all.push_row(add.row(r));
+        }
+        let ids = s.add_classes(&add).unwrap();
+        assert_eq!(ids, (10u32..22).collect::<Vec<_>>());
+        s.retire_classes(&[2, 9, 13, 21]).unwrap();
+        assert_eq!(s.num_classes(), 22);
+        assert_eq!(s.live_classes(), 18);
+        // Mutation errors are typed, not panics.
+        assert!(s.retire_classes(&[2]).is_err(), "double retire");
+        assert!(s.retire_classes(&[99]).is_err(), "out of range");
+
+        let live_ids: Vec<usize> = (0..22)
+            .filter(|i| ![2usize, 9, 13, 21].contains(i))
+            .collect();
+        let mut live_mat = Matrix::zeros(0, d);
+        for &g in &live_ids {
+            live_mat.push_row(all.row(g));
+        }
+        let reference = QuadraticSampler::new(&live_mat, 100.0, 1.0);
+        let h = unit_vector(&mut rng, d);
+        let mut total = 0.0;
+        for (rank, &g) in live_ids.iter().enumerate() {
+            let a = s.probability(&h, g);
+            let b = reference.probability(&h, rank);
+            assert!(
+                (a - b).abs() < 1e-3 * a.max(b).max(1e-7),
+                "global {g} / rank {rank}: churned {a} vs rebuilt {b}"
+            );
+            total += a;
+        }
+        for &r in &[2usize, 9, 13, 21] {
+            assert_eq!(s.probability(&h, r), 0.0, "retired class {r}");
+        }
+        assert!((total - 1.0).abs() < 1e-6, "Σq = {total}");
+        // Draws and negatives never emit holes.
+        let draw = s.sample(&h, 10_000, &mut rng);
+        assert!(draw.ids.iter().all(|&i| !matches!(i, 2 | 9 | 13 | 21)));
+        let negs = s.sample_negatives(&h, 0, 2000, &mut rng);
+        assert!(negs
+            .ids
+            .iter()
+            .all(|&i| !matches!(i, 0 | 2 | 9 | 13 | 21)));
+        // The serving fork reproduces the holes exactly.
+        let fork = s.fork().expect("kernel sampler must fork");
+        assert_eq!(fork.num_classes(), 22);
+        assert_eq!(fork.live_classes(), 18);
+        for i in 0..22 {
+            let a = s.probability(&h, i);
+            let b = fork.probability(&h, i);
+            assert!(
+                (a - b).abs() < 1e-6 * a.max(b).max(1e-9),
+                "fork class {i}: {a} vs {b}"
             );
         }
     }

@@ -37,6 +37,32 @@ pub use tree::KernelTree;
 
 use crate::linalg::Matrix;
 use crate::rng::Rng;
+use std::fmt;
+
+/// A class-universe mutation was requested of a sampler that cannot
+/// honor it (fixed-universe baselines, or malformed arguments such as
+/// retiring an already-retired slot). Typed so the serving and wire
+/// layers can answer with a per-request error instead of panicking a
+/// shared thread.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VocabError(pub String);
+
+impl VocabError {
+    pub(crate) fn fixed(name: &str) -> Self {
+        VocabError(format!(
+            "sampler '{name}' has a fixed class universe (no \
+             add_classes/retire_classes)"
+        ))
+    }
+}
+
+impl fmt::Display for VocabError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "vocab mutation failed: {}", self.0)
+    }
+}
+
+impl std::error::Error for VocabError {}
 
 /// Cap on rejection rounds before [`Sampler::sample_negatives`] (and the
 /// kernel-tree equivalents) switch to the deterministic
@@ -125,6 +151,75 @@ pub(crate) fn fan_out_queries(
         crate::exec::serve_map(bsz, workers, answer)
     } else {
         (0..bsz).map(answer).collect()
+    }
+}
+
+/// Shared up-front validation for [`Sampler::retire_classes`]
+/// implementations: every id must be in range, live, and unique, and at
+/// least one live class must survive. Errors before any mutation, so a
+/// bad batch leaves the sampler untouched.
+pub(crate) fn validate_retire(
+    classes: &[u32],
+    n: usize,
+    live: usize,
+    is_retired: impl Fn(usize) -> bool,
+) -> Result<(), VocabError> {
+    let mut seen = std::collections::HashSet::with_capacity(classes.len());
+    for &c in classes {
+        if c as usize >= n {
+            return Err(VocabError(format!(
+                "retire_classes: class {c} out of range (n = {n})"
+            )));
+        }
+        if is_retired(c as usize) {
+            return Err(VocabError(format!(
+                "retire_classes: class {c} already retired"
+            )));
+        }
+        if !seen.insert(c) {
+            return Err(VocabError(format!(
+                "retire_classes: duplicate class {c}"
+            )));
+        }
+    }
+    if live <= classes.len() {
+        return Err(VocabError(format!(
+            "retire_classes: would retire all {live} live classes"
+        )));
+    }
+    Ok(())
+}
+
+/// Batched φ recomputation for the kernel samplers' retire paths:
+/// gather the victims' embedding rows, ONE `map_batch` gemm, then apply
+/// `retire(class, φ)` per victim — the batch-first sibling of the add
+/// path, shared so the gather/map/apply sequence exists once.
+pub(crate) fn retire_phi_batch<M: crate::featmap::FeatureMap>(
+    map: &M,
+    classes: &Matrix,
+    ids: &[u32],
+    mut retire: impl FnMut(usize, &[f32]),
+) {
+    let d = classes.cols();
+    let mut victims = Matrix::zeros(ids.len(), d);
+    for (r, &c) in ids.iter().enumerate() {
+        victims.row_mut(r).copy_from_slice(classes.row(c as usize));
+    }
+    let phis = map.map_batch(&victims);
+    for (r, &c) in ids.iter().enumerate() {
+        retire(c as usize, phis.row(r));
+    }
+}
+
+/// Shared embedding-width check for [`Sampler::add_classes`]
+/// implementations.
+pub(crate) fn validate_add_dim(got: usize, want: usize) -> Result<(), VocabError> {
+    if got == want {
+        Ok(())
+    } else {
+        Err(VocabError(format!(
+            "add_classes: embedding dim {got} != class dim {want}"
+        )))
     }
 }
 
@@ -226,9 +321,50 @@ impl BatchDraw {
 }
 
 /// A (possibly input-dependent) sampling distribution over classes.
+///
+/// ## Mutable class universe
+///
+/// Samplers may support runtime growth ([`Sampler::add_classes`]) and
+/// shrinkage ([`Sampler::retire_classes`]). The contract:
+///
+/// * slot ids are **stable**: adding appends new ids
+///   `num_classes()..num_classes()+k`, retiring leaves a permanent hole
+///   (ids are never reused), so trained embedding tables never need
+///   re-indexing;
+/// * retired slots are **masked out**, not left as zero-probability
+///   support: `sample*`/`serve_queries`/`top_k` never emit them (even
+///   through rejection fallbacks) and `probability` returns an exact 0;
+/// * mutations are amortized `O(D log n)` for the kernel samplers
+///   (capacity doubling only — never a full-tree rebuild on the hot
+///   path).
+///
+/// Fixed-universe samplers (the default) answer every mutation with a
+/// typed [`VocabError`].
 pub trait Sampler: Send {
-    /// Total number of classes n.
+    /// Total number of class slots n (live + retired holes).
     fn num_classes(&self) -> usize;
+
+    /// Live (non-retired) classes — the support of the distribution.
+    /// Equals [`Sampler::num_classes`] for fixed-universe samplers.
+    fn live_classes(&self) -> usize {
+        self.num_classes()
+    }
+
+    /// Append `embeddings.rows()` new classes (row `k` becomes class
+    /// `num_classes() + k`), returning the assigned ids. Default: a
+    /// typed error for fixed-universe samplers.
+    fn add_classes(&mut self, embeddings: &Matrix) -> Result<Vec<u32>, VocabError> {
+        let _ = embeddings;
+        Err(VocabError::fixed(self.name()))
+    }
+
+    /// Retire the given live classes: their slots become permanent holes
+    /// that are never emitted again. Ids must be live and duplicate-free.
+    /// Default: a typed error for fixed-universe samplers.
+    fn retire_classes(&mut self, classes: &[u32]) -> Result<(), VocabError> {
+        let _ = classes;
+        Err(VocabError::fixed(self.name()))
+    }
 
     /// Draw `m` classes i.i.d. from `q(· | h)`, returning exact
     /// probabilities. `h` is the current input embedding (ignored by
@@ -381,12 +517,17 @@ pub trait Sampler: Send {
 
     /// The `k` most probable classes under `q(· | h)`, descending (ties
     /// broken by class id). Default scans all `n` probabilities; kernel
-    /// samplers override with a best-first tree search.
+    /// samplers override with a best-first tree search. `k` clamps to
+    /// the live count, and in a universe with holes the zero-mass
+    /// retired slots are filtered so they can never pad the tail.
     fn top_k(&self, h: &[f32], k: usize) -> Vec<(u32, f64)> {
         let n = self.num_classes();
-        let k = k.min(n);
-        let mut all: Vec<(u32, f64)> =
-            (0..n).map(|i| (i as u32, self.probability(h, i))).collect();
+        let live = self.live_classes();
+        let k = k.min(live);
+        let mut all: Vec<(u32, f64)> = (0..n)
+            .map(|i| (i as u32, self.probability(h, i)))
+            .filter(|&(_, q)| live == n || q > 0.0)
+            .collect();
         all.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
         all.truncate(k);
         all

@@ -22,19 +22,45 @@
 //!
 //! Degenerate tail shards with a single class are safe by the
 //! [`KernelTree`] `pad.max(2)` invariant (see `KernelTree::new`).
+//!
+//! **Mutable class universe**: the class → (shard, local-slot) map is an
+//! explicit assignment table rather than arithmetic, so the universe can
+//! churn at runtime: [`ShardedKernelTree::insert_class`] routes each new
+//! class to the **lightest** shard (fewest live classes — amortized
+//! `O(D log(n/S))` via the per-shard capacity-doubling insert) and
+//! [`ShardedKernelTree::retire_class`] tombstones the slot. Retire-skew
+//! can still unbalance shards; [`ShardedKernelSampler`] redistributes
+//! live classes evenly when the live-count imbalance crosses the
+//! `sampler.rebalance` ratio (an `O(n·D)` off-hot-path event amortized
+//! over the O(n) mutations needed to create the skew).
 
-use super::{KernelTree, NegativeDraw, Sampler};
+use super::{KernelTree, NegativeDraw, Sampler, VocabError};
 use crate::featmap::FeatureMap;
 use crate::linalg::Matrix;
 use crate::rng::{AliasTable, Rng};
+
+/// Where one global class id lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Slot {
+    Live { shard: u32, local: u32 },
+    /// A retired hole: the id stays valid forever, is never reused, and
+    /// carries exactly zero probability.
+    Retired,
+}
 
 /// Two-level (shard → leaf) kernel sampling structure.
 #[derive(Clone, Debug)]
 pub struct ShardedKernelTree {
     shards: Vec<KernelTree>,
-    /// Classes per shard (last shard may hold fewer).
-    shard_size: usize,
+    /// Global slot id → location (or tombstone). Length == `n`.
+    assign: Vec<Slot>,
+    /// Per-shard inverse map: local slot → global id (`u32::MAX` once
+    /// the local slot is retired).
+    globals: Vec<Vec<u32>>,
+    /// Total slots ever created (live + retired).
     n: usize,
+    /// Live classes across all shards.
+    live: usize,
     dim: usize,
     eps: f64,
 }
@@ -42,6 +68,8 @@ pub struct ShardedKernelTree {
 impl ShardedKernelTree {
     /// Empty sharded tree for `n` classes with feature dim `dim`.
     /// `num_shards` is rounded up to a power of two and clamped to `n`.
+    /// Initial assignment is contiguous blocks (the classic layout);
+    /// runtime inserts then go wherever is lightest.
     pub fn new(n: usize, dim: usize, num_shards: usize, eps: f64) -> Self {
         assert!(n >= 1, "ShardedKernelTree: need at least one class");
         assert!(dim >= 1);
@@ -50,22 +78,50 @@ impl ShardedKernelTree {
         let s = num_shards.next_power_of_two().min(n.next_power_of_two());
         let shard_size = n.div_ceil(s).max(1);
         let count = n.div_ceil(shard_size);
-        let shards = (0..count)
+        let shards: Vec<KernelTree> = (0..count)
             .map(|i| {
                 let lo = i * shard_size;
                 let hi = ((i + 1) * shard_size).min(n);
                 KernelTree::new(hi - lo, dim, eps)
             })
             .collect();
-        Self { shards, shard_size, n, dim, eps }
+        let assign = (0..n)
+            .map(|i| Slot::Live {
+                shard: (i / shard_size) as u32,
+                local: (i % shard_size) as u32,
+            })
+            .collect();
+        let globals = (0..count)
+            .map(|i| {
+                let lo = i * shard_size;
+                let hi = ((i + 1) * shard_size).min(n);
+                (lo as u32..hi as u32).collect()
+            })
+            .collect();
+        Self { shards, assign, globals, n, live: n, dim, eps }
     }
 
     pub fn num_classes(&self) -> usize {
         self.n
     }
 
+    /// Live (non-retired) classes — the support of the distribution.
+    pub fn live_classes(&self) -> usize {
+        self.live
+    }
+
+    /// Whether global slot `i` has been retired.
+    pub fn is_retired(&self, i: usize) -> bool {
+        matches!(self.assign[i], Slot::Retired)
+    }
+
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Per-shard live-class counts (the rebalance signal).
+    pub fn shard_live_counts(&self) -> Vec<usize> {
+        self.shards.iter().map(KernelTree::live_classes).collect()
     }
 
     pub fn dim(&self) -> usize {
@@ -81,12 +137,12 @@ impl ShardedKernelTree {
         self.shards.iter().map(KernelTree::memory_bytes).sum()
     }
 
-    /// Same shard layout as `other` (copyable in place).
+    /// Same slot assignment as `other` (copyable in place).
     pub fn same_shape(&self, other: &ShardedKernelTree) -> bool {
         self.n == other.n
             && self.dim == other.dim
-            && self.shard_size == other.shard_size
             && self.shards.len() == other.shards.len()
+            && self.assign == other.assign
     }
 
     /// Copy another sharded tree's node sums into this one without
@@ -100,12 +156,19 @@ impl ShardedKernelTree {
         for (dst, s) in self.shards.iter_mut().zip(&src.shards) {
             dst.copy_state_from(s);
         }
+        self.live = src.live;
         self.eps = src.eps;
     }
 
+    /// Location of a live class; panics on retired slots (writes to a
+    /// hole are always a caller bug — reads go through `probability`,
+    /// which returns an exact 0 instead).
     #[inline]
-    fn shard_of(&self, class: usize) -> (usize, usize) {
-        (class / self.shard_size, class % self.shard_size)
+    fn loc(&self, class: usize) -> (usize, usize) {
+        match self.assign[class] {
+            Slot::Live { shard, local } => (shard as usize, local as usize),
+            Slot::Retired => panic!("class {class} is retired"),
+        }
     }
 
     /// Add `phi` to class `i`'s leaf (construction-time).
@@ -116,8 +179,123 @@ impl ShardedKernelTree {
     /// Add `delta` to class `i`'s leaf and its shard's ancestor sums.
     pub fn update_leaf(&mut self, i: usize, delta: &[f32]) {
         assert!(i < self.n, "update_leaf: class {i} out of range");
-        let (s, local) = self.shard_of(i);
+        let (s, local) = self.loc(i);
         self.shards[s].update_leaf(local, delta);
+    }
+
+    /// Append a new class: routed to the **lightest** shard (fewest live
+    /// classes; ties to the lowest index), amortized `O(D log(n/S))`.
+    /// Returns the stable global id (`== num_classes()` before the call).
+    pub fn insert_class(&mut self, phi: &[f32]) -> usize {
+        let s = (0..self.shards.len())
+            .min_by_key(|&s| self.shards[s].live_classes())
+            .expect("ShardedKernelTree: no shards");
+        let local = self.shards[s].insert_class(phi);
+        debug_assert_eq!(local, self.globals[s].len());
+        let g = self.n;
+        self.globals[s].push(g as u32);
+        self.assign.push(Slot::Live { shard: s as u32, local: local as u32 });
+        self.n += 1;
+        self.live += 1;
+        g
+    }
+
+    /// Retire global slot `i` (subtracting its current feature vector
+    /// `phi`): the slot becomes a permanent zero-mass hole. A shard may
+    /// legitimately drain to zero live classes — its root weight is then
+    /// forced to exactly 0 and it is never picked. `O(D log(n/S))`.
+    pub fn retire_class(&mut self, i: usize, phi: &[f32]) {
+        assert!(i < self.n, "retire_class: class {i} out of range");
+        assert!(
+            self.live > 1,
+            "retire_class: cannot retire the last live class"
+        );
+        let (s, local) = match self.assign[i] {
+            Slot::Live { shard, local } => (shard as usize, local as usize),
+            Slot::Retired => panic!("retire_class: class {i} already retired"),
+        };
+        self.shards[s].retire_class(local, phi);
+        self.globals[s][local] = u32::MAX;
+        self.assign[i] = Slot::Retired;
+        self.live -= 1;
+    }
+
+    /// Re-partition the **live** classes evenly across `num_shards`
+    /// fresh shards (global ids preserved; retired ids stay retired).
+    /// `phi_of(global, buf)` must write class `global`'s current feature
+    /// vector — the tree stores only sums, so the owner of the class
+    /// embeddings drives the rebuild. `O(live · D)`; called by the
+    /// sampler layer when retire-skew crosses its rebalance threshold,
+    /// never on the per-draw hot path.
+    pub fn redistribute(
+        &mut self,
+        num_shards: usize,
+        mut phi_of: impl FnMut(usize, &mut [f32]),
+    ) {
+        let live_ids: Vec<usize> = (0..self.n)
+            .filter(|&i| !self.is_retired(i))
+            .collect();
+        let l = live_ids.len();
+        assert!(l >= 1, "redistribute: no live classes");
+        let s = num_shards
+            .max(1)
+            .next_power_of_two()
+            .min(l.next_power_of_two());
+        let chunk = l.div_ceil(s).max(1);
+        let count = l.div_ceil(chunk);
+        let mut shards = Vec::with_capacity(count);
+        let mut globals: Vec<Vec<u32>> = Vec::with_capacity(count);
+        let mut assign = vec![Slot::Retired; self.n];
+        let mut phi = vec![0.0f32; self.dim];
+        for sh in 0..count {
+            let ids = &live_ids[sh * chunk..((sh + 1) * chunk).min(l)];
+            let mut tree = KernelTree::new(ids.len(), self.dim, self.eps);
+            let mut inv = Vec::with_capacity(ids.len());
+            for (local, &g) in ids.iter().enumerate() {
+                phi_of(g, &mut phi);
+                tree.add_leaf(local, &phi);
+                assign[g] =
+                    Slot::Live { shard: sh as u32, local: local as u32 };
+                inv.push(g as u32);
+            }
+            shards.push(tree);
+            globals.push(inv);
+        }
+        self.shards = shards;
+        self.globals = globals;
+        self.assign = assign;
+        debug_assert_eq!(self.live, l);
+    }
+
+    /// Uniform draw over live classes excluding live `target` — the
+    /// never-aborting fallback for [`ShardedKernelTree::sample_negatives`]
+    /// in a universe with holes. Exact `1/(live − 1)` per candidate.
+    pub fn uniform_live_excluding(
+        &self,
+        target: usize,
+        rng: &mut Rng,
+    ) -> usize {
+        let (ts, tl) = self.loc(target);
+        let avail: Vec<usize> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(s, t)| t.live_classes() - usize::from(s == ts))
+            .collect();
+        let total: usize = avail.iter().sum();
+        assert!(total >= 1, "uniform_live_excluding: no live candidates");
+        let mut u = rng.below(total as u64) as usize;
+        let mut s = avail.len() - 1;
+        for (i, &a) in avail.iter().enumerate() {
+            if u < a {
+                s = i;
+                break;
+            }
+            u -= a;
+        }
+        let excl = if s == ts { Some(tl) } else { None };
+        let local = self.shards[s].uniform_live_excluding(excl, rng);
+        self.globals[s][local] as usize
     }
 
     /// Apply a batch of leaf deltas. Disjoint shards commute, so touched
@@ -135,11 +313,13 @@ impl ShardedKernelTree {
             return;
         }
         let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        let mut locals: Vec<u32> = Vec::with_capacity(updates.len());
         for (k, (i, _)) in updates.iter().enumerate() {
             assert!(*i < self.n, "update_leaves_batch: class {i} out of range");
-            per_shard[i / self.shard_size].push(k);
+            let (s, local) = self.loc(*i);
+            per_shard[s].push(k);
+            locals.push(local as u32);
         }
-        let shard_size = self.shard_size;
         let mut jobs: Vec<(usize, &mut KernelTree)> = self
             .shards
             .iter_mut()
@@ -152,13 +332,14 @@ impl ShardedKernelTree {
         let workers = crate::exec::recommended_workers().min(jobs.len());
         let chunk = jobs.len().div_ceil(workers);
         let per_shard = &per_shard;
+        let locals = &locals;
         std::thread::scope(|scope| {
             for group in jobs.chunks_mut(chunk) {
                 scope.spawn(move || {
                     for (s, tree) in group.iter_mut() {
                         for &k in &per_shard[*s] {
-                            let (i, delta) = &updates[k];
-                            tree.update_leaf(*i - *s * shard_size, delta);
+                            let (_, delta) = &updates[k];
+                            tree.update_leaf(locals[k] as usize, delta);
                         }
                     }
                 });
@@ -166,18 +347,38 @@ impl ShardedKernelTree {
         });
     }
 
-    /// Effective (clamped + ε·count) root mass of every shard for query
-    /// `z`, plus the total. Always strictly positive per shard.
+    /// Effective (clamped + ε·live) root mass of every shard for query
+    /// `z`, plus the total. A shard with zero live classes carries
+    /// exactly zero weight (mirroring [`KernelTree`]'s dead-subtree
+    /// rule), so a fully-retired shard is never picked.
     fn shard_weights(&self, z: &[f32]) -> (Vec<f64>, f64) {
         let mut weights = Vec::with_capacity(self.shards.len());
         let mut total = 0.0f64;
         for tree in &self.shards {
-            let w = tree.mass(z).max(0.0)
-                + self.eps * tree.num_classes() as f64;
+            let lv = tree.live_classes();
+            let w = if lv == 0 {
+                0.0
+            } else {
+                tree.mass(z).max(0.0) + self.eps * lv as f64
+            };
             weights.push(w);
             total += w;
         }
         (weights, total)
+    }
+
+    /// Guard against an fp-boundary pick of a dead shard (weight exactly
+    /// 0 should make it unreachable; alias/categorical edge rounding is
+    /// the only way in): reroute to the first live shard.
+    #[inline]
+    fn live_shard(&self, s: usize) -> usize {
+        if self.shards[s].live_classes() > 0 {
+            return s;
+        }
+        self.shards
+            .iter()
+            .position(|t| t.live_classes() > 0)
+            .expect("ShardedKernelTree: no live classes")
     }
 
     /// Draw one class: `(class, q)` with `q` the exact two-level
@@ -185,16 +386,20 @@ impl ShardedKernelTree {
     pub fn sample(&self, z: &[f32], rng: &mut Rng) -> (usize, f64) {
         debug_assert_eq!(z.len(), self.dim);
         let (weights, total) = self.shard_weights(z);
-        let s = rng.categorical(&weights);
+        let s = self.live_shard(rng.categorical(&weights));
         let (local, q_in) = self.shards[s].sample(z, rng);
-        (s * self.shard_size + local, weights[s] / total * q_in)
+        (self.globals[s][local] as usize, weights[s] / total * q_in)
     }
 
     /// Exact probability that sampling returns class `i` for query `z`.
+    /// An exact `0.0` for retired slots.
     pub fn probability(&self, z: &[f32], i: usize) -> f64 {
         assert!(i < self.n);
+        let (s, local) = match self.assign[i] {
+            Slot::Live { shard, local } => (shard as usize, local as usize),
+            Slot::Retired => return 0.0,
+        };
         let (weights, total) = self.shard_weights(z);
-        let (s, local) = self.shard_of(i);
         weights[s] / total * self.shards[s].probability(z, local)
     }
 
@@ -212,9 +417,9 @@ impl ShardedKernelTree {
         let mut ids = Vec::with_capacity(m);
         let mut probs = Vec::with_capacity(m);
         for _ in 0..m {
-            let s = table.sample(rng);
+            let s = self.live_shard(table.sample(rng));
             let (local, q_in) = self.shards[s].sample(z, rng);
-            ids.push((s * self.shard_size + local) as u32);
+            ids.push(self.globals[s][local]);
             probs.push(weights[s] / total * q_in);
         }
         (ids, probs)
@@ -223,9 +428,9 @@ impl ShardedKernelTree {
     /// The `k` most probable classes for query `z`, descending. Exact:
     /// the top `k` of the union is contained in the union of per-shard
     /// top `k`s, each scaled by its shard's selection probability.
-    /// `O(S · (D + k·D log(n/S)))`.
+    /// `O(S · (D + k·D log(n/S)))`. `k` clamps to the live count.
     pub fn top_k(&self, z: &[f32], k: usize) -> Vec<(u32, f64)> {
-        let k = k.min(self.n);
+        let k = k.min(self.live);
         if k == 0 {
             return Vec::new();
         }
@@ -237,10 +442,7 @@ impl ShardedKernelTree {
                 continue;
             }
             for (local, q) in tree.top_k(z, k) {
-                all.push((
-                    (s * self.shard_size + local as usize) as u32,
-                    frac * q,
-                ));
+                all.push((self.globals[s][local as usize], frac * q));
             }
         }
         all.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
@@ -250,7 +452,7 @@ impl ShardedKernelTree {
 
     /// Draw `m` negatives (`≠ target`) with probabilities renormalized by
     /// `1 − q_target`; mirrors [`KernelTree::sample_negatives`] including
-    /// the never-aborting uniform fallback.
+    /// the never-aborting, live-aware uniform fallback.
     pub fn sample_negatives(
         &self,
         z: &[f32],
@@ -259,9 +461,10 @@ impl ShardedKernelTree {
         rng: &mut Rng,
     ) -> (Vec<u32>, Vec<f64>) {
         assert!(target < self.n, "sample_negatives: target out of range");
+        assert!(!self.is_retired(target), "sample_negatives: retired target");
         assert!(
-            self.n > 1,
-            "sample_negatives: need ≥ 2 classes to exclude one"
+            self.live > 1,
+            "sample_negatives: need ≥ 2 live classes to exclude one"
         );
         let q_t = self.probability(z, target);
         let renorm = (1.0 - q_t).max(f64::MIN_POSITIVE);
@@ -282,8 +485,8 @@ impl ShardedKernelTree {
             rounds += 1;
         }
         while ids.len() < m {
-            ids.push(super::uniform_excluding(self.n, target, rng) as u32);
-            probs.push(1.0 / (self.n - 1) as f64);
+            ids.push(self.uniform_live_excluding(target, rng) as u32);
+            probs.push(1.0 / (self.live - 1) as f64);
         }
         (ids, probs)
     }
@@ -298,8 +501,16 @@ impl ShardedKernelTree {
 pub struct ShardedKernelSampler<M: FeatureMap> {
     map: M,
     tree: ShardedKernelTree,
-    /// Copy of current class embeddings (n × d), for recomputing φ_old.
+    /// Copy of current class embeddings (n × d, one row per slot — rows
+    /// of retired slots go stale and are never read), for recomputing
+    /// φ_old and for rebalance rebuilds.
     classes: Matrix,
+    /// Shard count to rebuild toward when rebalancing.
+    target_shards: usize,
+    /// Live-count imbalance ratio (heaviest / lightest shard) above
+    /// which a mutation triggers [`ShardedKernelTree::redistribute`].
+    /// `<= 1` disables rebalancing (config key `sampler.rebalance`).
+    rebalance_threshold: f64,
     name: &'static str,
 }
 
@@ -328,11 +539,69 @@ impl<M: FeatureMap> ShardedKernelSampler<M> {
             map.map_into(classes.row(i), &mut phi);
             tree.add_leaf(i, &phi);
         }
-        Self { map, tree, classes: classes.clone(), name }
+        Self {
+            map,
+            tree,
+            classes: classes.clone(),
+            target_shards: num_shards.max(1),
+            rebalance_threshold: 0.0,
+            name,
+        }
     }
 
     pub fn num_shards(&self) -> usize {
         self.tree.num_shards()
+    }
+
+    /// Enable (ratio > 1) or disable live-count rebalancing. When the
+    /// heaviest shard holds more than `ratio ×` the lightest shard's
+    /// live classes after a mutation, the live set is re-partitioned
+    /// evenly (`O(live·D)`, off the draw hot path). Config:
+    /// `sampler.rebalance`.
+    pub fn set_rebalance_threshold(&mut self, ratio: f64) {
+        self.rebalance_threshold = ratio;
+    }
+
+    /// Shard count [`ShardedKernelTree::redistribute`] would produce for
+    /// `live` classes toward `target` shards — the same arithmetic, so
+    /// checking against it is idempotent (no rebuild loop).
+    fn desired_shard_count(target: usize, live: usize) -> usize {
+        let s = target
+            .max(1)
+            .next_power_of_two()
+            .min(live.next_power_of_two());
+        let chunk = live.div_ceil(s).max(1);
+        live.div_ceil(chunk)
+    }
+
+    fn maybe_rebalance(&mut self) {
+        if self.rebalance_threshold <= 1.0 {
+            return;
+        }
+        let live = self.tree.live_classes();
+        if live == 0 {
+            return;
+        }
+        // Two triggers: retire-skew imbalance, and a shard count that
+        // drifted from what the target supports (a shrinking
+        // redistribute reduces the count; balanced growth alone would
+        // otherwise never restore it — or the log(n/S) walk depth).
+        let counts = self.tree.shard_live_counts();
+        let max = counts.iter().copied().max().unwrap_or(0);
+        let min = counts.iter().copied().min().unwrap_or(0);
+        let skewed = self.tree.num_shards() >= 2
+            && (max as f64) > self.rebalance_threshold * (min.max(1) as f64);
+        // Factor-2 hysteresis: rebuilding on every ±1 drift would thrash
+        // at power-of-two boundaries as live oscillates around them.
+        let cur = self.tree.num_shards();
+        let want = Self::desired_shard_count(self.target_shards, live);
+        let count_off = want >= cur * 2 || cur >= want * 2;
+        if skewed || count_off {
+            let (map, classes) = (&self.map, &self.classes);
+            self.tree.redistribute(self.target_shards, |g, buf| {
+                map.map_into(classes.row(g), buf)
+            });
+        }
     }
 
     pub fn memory_bytes(&self) -> usize {
@@ -348,6 +617,49 @@ impl<M: FeatureMap> ShardedKernelSampler<M> {
 impl<M: FeatureMap + Clone + 'static> Sampler for ShardedKernelSampler<M> {
     fn num_classes(&self) -> usize {
         self.tree.num_classes()
+    }
+
+    fn live_classes(&self) -> usize {
+        self.tree.live_classes()
+    }
+
+    /// Append new classes: φ of all rows in one `map_batch` gemm, each
+    /// then routed to the lightest shard (amortized `O(D log(n/S))` per
+    /// class). May trigger a rebalance afterwards.
+    fn add_classes(&mut self, embeddings: &Matrix) -> Result<Vec<u32>, VocabError> {
+        if embeddings.rows() == 0 {
+            return Ok(Vec::new());
+        }
+        super::validate_add_dim(embeddings.cols(), self.classes.cols())?;
+        let phis = self.map.map_batch(embeddings);
+        let mut ids = Vec::with_capacity(embeddings.rows());
+        for r in 0..embeddings.rows() {
+            let g = self.tree.insert_class(phis.row(r));
+            self.classes.push_row(embeddings.row(r));
+            debug_assert_eq!(g + 1, self.classes.rows());
+            ids.push(g as u32);
+        }
+        self.maybe_rebalance();
+        Ok(ids)
+    }
+
+    /// Retire live classes (`O(D log(n/S))` each). Validated up front so
+    /// a bad id poisons nothing; φ of every victim comes from one
+    /// `map_batch` gemm (the batch-first idiom, matching the add path);
+    /// may trigger a rebalance afterwards.
+    fn retire_classes(&mut self, classes: &[u32]) -> Result<(), VocabError> {
+        super::validate_retire(
+            classes,
+            self.tree.num_classes(),
+            self.tree.live_classes(),
+            |c| self.tree.is_retired(c),
+        )?;
+        let (map, cls, tree) = (&self.map, &self.classes, &mut self.tree);
+        super::retire_phi_batch(map, cls, classes, |c, phi| {
+            tree.retire_class(c, phi)
+        });
+        self.maybe_rebalance();
+        Ok(())
     }
 
     fn sample(&self, h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
@@ -787,6 +1099,156 @@ mod tests {
         let za = a.feature_map().map(&h);
         for i in 0..40 {
             assert_eq!(a.tree.probability(&za, i), b.tree.probability(&za, i));
+        }
+    }
+
+    fn sharded_quadratic(
+        n: usize,
+        d: usize,
+        shards: usize,
+        seed: u64,
+    ) -> (Matrix, ShardedKernelSampler<crate::featmap::QuadraticMap>) {
+        let mut rng = Rng::seeded(seed);
+        let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+        let map = crate::featmap::QuadraticMap::new(d, 100.0, 1.0);
+        let s = ShardedKernelSampler::with_map(
+            &classes,
+            map,
+            shards,
+            "quadratic-sharded",
+        );
+        (classes, s)
+    }
+
+    #[test]
+    fn churned_universe_matches_scratch_rebuild() {
+        // Adds route to the lightest shard, retires tombstone slots; the
+        // final distribution must match a sampler built from scratch on
+        // the surviving class set (live slots in id order). The
+        // quadratic kernel is strictly positive, so the two-level
+        // probability is layout-independent — churned and scratch trees
+        // may shard differently yet must agree.
+        let mut rng = Rng::seeded(310);
+        let d = 6;
+        let (classes, mut s) = sharded_quadratic(24, d, 4, 311);
+        let mut all = classes.clone();
+        let mut retired: Vec<bool> = vec![false; 24];
+        for step in 0..6 {
+            let mut add = Matrix::zeros(3, d);
+            for r in 0..3 {
+                let v = unit_vector(&mut rng, d);
+                add.row_mut(r).copy_from_slice(&v);
+            }
+            let base = all.rows() as u32;
+            let ids = s.add_classes(&add).unwrap();
+            assert_eq!(ids, vec![base, base + 1, base + 2], "stable ids");
+            for r in 0..3 {
+                all.push_row(add.row(r));
+                retired.push(false);
+            }
+            let live: Vec<u32> = (0..all.rows() as u32)
+                .filter(|&i| !retired[i as usize])
+                .collect();
+            let victim = live[(step * 5) % live.len()];
+            s.retire_classes(&[victim]).unwrap();
+            retired[victim as usize] = true;
+        }
+        assert_eq!(s.num_classes(), 24 + 18);
+        assert_eq!(s.live_classes(), 24 + 18 - 6);
+        // Scratch rebuild on the live set with the same feature map.
+        let live_ids: Vec<usize> =
+            (0..all.rows()).filter(|&i| !retired[i]).collect();
+        let mut live_mat = Matrix::zeros(0, d);
+        for &g in &live_ids {
+            live_mat.push_row(all.row(g));
+        }
+        let reference = ShardedKernelSampler::with_map(
+            &live_mat,
+            crate::featmap::QuadraticMap::new(d, 100.0, 1.0),
+            4,
+            "quadratic-sharded",
+        );
+        let h = unit_vector(&mut rng, d);
+        for (rank, &g) in live_ids.iter().enumerate() {
+            let a = s.probability(&h, g);
+            let b = reference.probability(&h, rank);
+            assert!(
+                (a - b).abs() < 1e-3 * a.max(b).max(1e-7),
+                "global {g} / rank {rank}: churned {a} vs rebuilt {b}"
+            );
+        }
+        // Retired slots: exact zero, never drawn, absent from top-k.
+        let retired_ids: Vec<u32> = (0..all.rows() as u32)
+            .filter(|&i| retired[i as usize])
+            .collect();
+        for &r in &retired_ids {
+            assert_eq!(s.probability(&h, r as usize), 0.0);
+        }
+        let draw = s.sample(&h, 20_000, &mut rng);
+        assert!(draw.ids.iter().all(|i| !retired_ids.contains(i)));
+        let top = s.top_k(&h, s.num_classes());
+        assert_eq!(top.len(), s.live_classes());
+        assert!(top.iter().all(|(i, _)| !retired_ids.contains(i)));
+        let total: f64 =
+            (0..s.num_classes()).map(|i| s.probability(&h, i)).sum();
+        assert!((total - 1.0).abs() < 1e-6, "Σq = {total}");
+    }
+
+    #[test]
+    fn rebalance_evens_live_counts_and_preserves_distribution() {
+        // Quadratic kernel: strictly positive masses, so the rebuilt
+        // layout must renormalize the survivors exactly (up to ε/fp).
+        let mut rng = Rng::seeded(320);
+        let d = 6;
+        let (_, mut s) = sharded_quadratic(32, d, 4, 321);
+        s.set_rebalance_threshold(2.0);
+        let h = unit_vector(&mut rng, d);
+        // Retire most of shard 0's block (ids 0..8 under the contiguous
+        // initial layout) to force the imbalance past the threshold.
+        let before: Vec<f64> =
+            (0..32).map(|i| s.probability(&h, i)).collect();
+        s.retire_classes(&[0, 1, 2, 3, 4, 5]).unwrap();
+        let counts = s.tree.shard_live_counts();
+        let max = counts.iter().max().unwrap();
+        let min = counts.iter().min().unwrap();
+        assert!(
+            *max as f64 <= 2.0 * (*min as f64).max(1.0),
+            "rebalance did not even the shards: {counts:?}"
+        );
+        // Distribution over survivors: renormalized original masses.
+        let surviving: f64 = (6..32).map(|i| before[i]).sum();
+        for i in 6..32 {
+            let want = before[i] / surviving;
+            let got = s.probability(&h, i);
+            assert!(
+                (got - want).abs() < 1e-3 * want.max(1e-7),
+                "class {i}: {got} vs renormalized {want}"
+            );
+        }
+        // Updates and draws still work against the rebuilt layout.
+        let e = unit_vector(&mut rng, d);
+        s.update_class(17, &e);
+        let draw = s.sample(&h, 2000, &mut rng);
+        assert!(draw.ids.iter().all(|&i| i >= 6 && i < 32));
+    }
+
+    #[test]
+    fn fully_retired_shard_is_never_picked() {
+        // 8 classes over 4 shards of 2: retiring ids 0 and 1 drains
+        // shard 0 to zero live classes.
+        let mut rng = Rng::seeded(330);
+        let (_, mut s) = sharded_rff(8, 4, 4, 331);
+        s.retire_classes(&[0, 1]).unwrap();
+        assert_eq!(s.tree.shard_live_counts()[0], 0);
+        let h = unit_vector(&mut rng, 4);
+        let draw = s.sample(&h, 10_000, &mut rng);
+        assert!(draw.ids.iter().all(|&i| i >= 2 && i < 8));
+        let total: f64 = (0..8).map(|i| s.probability(&h, i)).sum();
+        assert!((total - 1.0).abs() < 1e-6, "Σq = {total}");
+        // The live-aware uniform fallback skips the dead shard too.
+        for _ in 0..2000 {
+            let g = s.tree.uniform_live_excluding(5, &mut rng);
+            assert!(g >= 2 && g < 8 && g != 5);
         }
     }
 

@@ -2,43 +2,135 @@
 //! the two `O(dn)` oracles: the EXP baseline (exact softmax sampling) and
 //! the Gumbel-top-k extension.
 
-use super::{uniform_excluding, BatchDraw, NegativeDraw, Sampler, ServeSampler};
+use super::{
+    uniform_excluding, BatchDraw, NegativeDraw, Sampler, ServeSampler,
+    VocabError,
+};
 use crate::linalg::{dot, Matrix};
 use crate::rng::{AliasTable, Rng};
 
-/// UNIFORM baseline: `q_i = 1/n`, `O(1)` per draw.
+/// UNIFORM baseline: `q_i = 1/live`, `O(1)` per draw. Supports the
+/// mutable class universe: adds append slots, retires leave permanent
+/// zero-probability holes (the live-id list + inverse index keep draws
+/// `O(1)` and hole-free).
 #[derive(Clone)]
 pub struct UniformSampler {
-    n: usize,
+    /// Live slot ids (order irrelevant; swap-remove on retire).
+    live: Vec<u32>,
+    /// Slot id → index into `live`, `u32::MAX` once retired.
+    index: Vec<u32>,
 }
+
+const RETIRED: u32 = u32::MAX;
 
 impl UniformSampler {
     pub fn new(n: usize) -> Self {
         assert!(n > 0);
-        Self { n }
+        Self {
+            live: (0..n as u32).collect(),
+            index: (0..n as u32).collect(),
+        }
+    }
+
+    fn is_retired(&self, class: usize) -> bool {
+        self.index[class] == RETIRED
     }
 }
 
 impl Sampler for UniformSampler {
     fn num_classes(&self) -> usize {
-        self.n
+        self.index.len()
+    }
+
+    fn live_classes(&self) -> usize {
+        self.live.len()
+    }
+
+    fn add_classes(&mut self, embeddings: &Matrix) -> Result<Vec<u32>, VocabError> {
+        // Input-independent: only the row count matters.
+        let mut ids = Vec::with_capacity(embeddings.rows());
+        for _ in 0..embeddings.rows() {
+            let id = self.index.len() as u32;
+            self.index.push(self.live.len() as u32);
+            self.live.push(id);
+            ids.push(id);
+        }
+        Ok(ids)
+    }
+
+    fn retire_classes(&mut self, classes: &[u32]) -> Result<(), VocabError> {
+        // Shared up-front validation: a bad id mutates nothing.
+        super::validate_retire(
+            classes,
+            self.index.len(),
+            self.live.len(),
+            |c| self.index[c] == RETIRED,
+        )?;
+        for &c in classes {
+            // Swap-remove from the live list, patching the swapped id's
+            // inverse entry.
+            let at = self.index[c as usize] as usize;
+            self.live.swap_remove(at);
+            if at < self.live.len() {
+                self.index[self.live[at] as usize] = at as u32;
+            }
+            self.index[c as usize] = RETIRED;
+        }
+        Ok(())
     }
 
     fn sample(&self, _h: &[f32], m: usize, rng: &mut Rng) -> NegativeDraw {
-        let q = 1.0 / self.n as f64;
+        let q = 1.0 / self.live.len() as f64;
         NegativeDraw {
-            ids: (0..m).map(|_| rng.index(self.n) as u32).collect(),
+            ids: (0..m)
+                .map(|_| self.live[rng.index(self.live.len())])
+                .collect(),
             probs: vec![q; m],
         }
     }
 
-    fn probability(&self, _h: &[f32], _class: usize) -> f64 {
-        1.0 / self.n as f64
+    fn probability(&self, _h: &[f32], class: usize) -> f64 {
+        if self.is_retired(class) {
+            0.0
+        } else {
+            1.0 / self.live.len() as f64
+        }
     }
 
-    /// Batch override: direct uniform-excluding-target draws — exactly
-    /// the conditioned distribution `q/(1 − q_t) = 1/(n−1)`, with no
-    /// rejection loop at all.
+    /// Direct conditioned draw over the live list (the trait default's
+    /// rejection loop would fall back to a flat `uniform_excluding(n)`
+    /// that can emit retired holes once the universe has them).
+    fn sample_negatives(
+        &self,
+        _h: &[f32],
+        target: usize,
+        m: usize,
+        rng: &mut Rng,
+    ) -> NegativeDraw {
+        assert!(
+            self.live.len() > 1,
+            "sample_negatives: need ≥ 2 live classes to exclude one"
+        );
+        let slot = self.index[target];
+        assert!(slot != RETIRED, "sample_negatives: retired target {target}");
+        let q = 1.0 / (self.live.len() - 1) as f64;
+        NegativeDraw {
+            ids: (0..m)
+                .map(|_| {
+                    self.live[uniform_excluding(
+                        self.live.len(),
+                        slot as usize,
+                        rng,
+                    )]
+                })
+                .collect(),
+            probs: vec![q; m],
+        }
+    }
+
+    /// Batch override: direct uniform-excluding-target draws over the
+    /// live list — exactly the conditioned distribution
+    /// `q/(1 − q_t) = 1/(live−1)`, with no rejection loop at all.
     fn sample_batch(
         &self,
         h: &Matrix,
@@ -47,15 +139,25 @@ impl Sampler for UniformSampler {
         rng: &mut Rng,
     ) -> BatchDraw {
         assert_eq!(h.rows(), targets.len(), "sample_batch: batch mismatch");
-        assert!(self.n > 1, "sample_batch: need ≥ 2 classes");
-        let q = 1.0 / (self.n - 1) as f64;
+        assert!(self.live.len() > 1, "sample_batch: need ≥ 2 live classes");
+        let q = 1.0 / (self.live.len() - 1) as f64;
         let draws = targets
             .iter()
-            .map(|&t| NegativeDraw {
-                ids: (0..m)
-                    .map(|_| uniform_excluding(self.n, t as usize, rng) as u32)
-                    .collect(),
-                probs: vec![q; m],
+            .map(|&t| {
+                let slot = self.index[t as usize];
+                assert!(slot != RETIRED, "sample_batch: retired target {t}");
+                NegativeDraw {
+                    ids: (0..m)
+                        .map(|_| {
+                            self.live[uniform_excluding(
+                                self.live.len(),
+                                slot as usize,
+                                rng,
+                            )]
+                        })
+                        .collect(),
+                    probs: vec![q; m],
+                }
             })
             .collect();
         BatchDraw { draws }
@@ -361,6 +463,38 @@ mod tests {
         assert!((s.probability(&[], 42) - 0.01).abs() < 1e-12);
         let mut rng = Rng::seeded(111);
         chi2_check(&s, &[], 100_000, &mut rng, 5.0);
+    }
+
+    #[test]
+    fn uniform_churn_stays_uniform_over_live() {
+        let mut s = UniformSampler::new(6);
+        let added = s.add_classes(&Matrix::zeros(4, 1)).unwrap();
+        assert_eq!(added, vec![6, 7, 8, 9]);
+        s.retire_classes(&[1, 7, 9]).unwrap();
+        assert_eq!(s.num_classes(), 10);
+        assert_eq!(s.live_classes(), 7);
+        assert!(s.retire_classes(&[1]).is_err(), "double retire");
+        assert!(s.retire_classes(&[0, 0]).is_err(), "duplicate");
+        for &r in &[1usize, 7, 9] {
+            assert_eq!(s.probability(&[], r), 0.0);
+        }
+        let total: f64 = (0..10).map(|i| s.probability(&[], i)).sum();
+        assert!((total - 1.0).abs() < 1e-12, "Σq = {total}");
+        let mut rng = Rng::seeded(140);
+        let draw = s.sample(&[], 20_000, &mut rng);
+        assert!(draw.ids.iter().all(|&i| !matches!(i, 1 | 7 | 9)));
+        assert!(draw.probs.iter().all(|&q| (q - 1.0 / 7.0).abs() < 1e-12));
+        chi2_check(&s, &[], 100_000, &mut rng, 5.0);
+        // Conditioned batch draws skip holes and the target.
+        let batch = s.sample_batch(&Matrix::zeros(1, 1), &[4], 5000, &mut rng);
+        assert!(batch.draws[0]
+            .ids
+            .iter()
+            .all(|&i| !matches!(i, 1 | 4 | 7 | 9)));
+        assert!(batch.draws[0]
+            .probs
+            .iter()
+            .all(|&q| (q - 1.0 / 6.0).abs() < 1e-12));
     }
 
     #[test]

@@ -25,6 +25,17 @@
 //!
 //! Memory is `O(n·D)` floats (`pad−1` left-sums + the root total), the
 //! inherent cost of the data structure.
+//!
+//! **Mutable class universe**: the tree supports runtime growth and
+//! shrinkage. [`KernelTree::insert_class`] appends a leaf, doubling the
+//! padded capacity when full (the old tree becomes the left subtree of a
+//! fresh root — an `O(n·D)` copy amortized to `O(D)` per insert, so an
+//! insert is amortized `O(D log n)` including the path update).
+//! [`KernelTree::retire_class`] subtracts the leaf's φ and drops it from
+//! the per-subtree **live-leaf counts** that drive the ε floor, so a
+//! retired slot carries exactly zero effective mass — the walk can never
+//! end there, its ε floor vanishes, and `probability` returns an exact 0.
+//! Retired slots are holes: ids stay stable and are never reused.
 
 use crate::linalg::dot;
 use crate::rng::Rng;
@@ -33,16 +44,25 @@ use crate::rng::Rng;
 pub struct KernelTree {
     /// Feature dimension D (the map's *output* dim).
     dim: usize,
-    /// Number of real classes.
+    /// Number of leaf slots ever created (live + retired; phantom
+    /// padding excluded). Slot ids are stable: `0..n`, holes allowed.
     n: usize,
     /// Leaves padded to a power of two; phantom leaves hold φ = 0.
     pad: usize,
     /// Left-child subtree sums for internal nodes 1..pad-1 (heap order),
     /// flattened: node k's sum at `[(k-1)*dim .. k*dim]`.
     left_sums: Vec<f32>,
+    /// Live-leaf count of each internal node's **left** subtree (heap
+    /// order, parallel to `left_sums`). Drives the ε floor and keeps
+    /// retired/phantom subtrees at exactly zero effective mass.
+    left_live: Vec<u32>,
     /// Sum over all leaves (the root's total).
     total: Vec<f32>,
-    /// Per-leaf probability floor (pseudo-mass added to every real leaf).
+    /// Total live (non-retired) leaves.
+    live: usize,
+    /// Per-slot retirement flags (`retired[i]` ⇒ slot i is a hole).
+    retired: Vec<bool>,
+    /// Per-leaf probability floor (pseudo-mass added to every live leaf).
     eps: f64,
 }
 
@@ -65,13 +85,36 @@ impl KernelTree {
             pad >= 2 && pad.is_power_of_two() && pad >= n,
             "KernelTree: pad invariant violated (n={n}, pad={pad})"
         );
-        Self {
+        let mut t = Self {
             dim,
             n,
             pad,
             left_sums: vec![0.0; (pad - 1) * dim],
+            left_live: vec![0; pad - 1],
             total: vec![0.0; dim],
+            live: n,
+            retired: vec![false; n],
             eps,
+        };
+        t.init_left_live();
+        t
+    }
+
+    /// Recompute every internal node's left-subtree live count from the
+    /// contiguous all-live layout `0..n` (construction and growth; later
+    /// mutations maintain the counts incrementally).
+    fn init_left_live(&mut self) {
+        let mut depth_start = 1usize; // first heap index at this depth
+        let mut size = self.pad; // subtree size at this depth
+        while size > 1 {
+            let half = size / 2;
+            for k in depth_start..depth_start * 2 {
+                let lo = (k - depth_start) * size;
+                self.left_live[k - 1] =
+                    self.n.saturating_sub(lo).min(half) as u32;
+            }
+            depth_start *= 2;
+            size = half;
         }
     }
 
@@ -94,6 +137,16 @@ impl KernelTree {
         self.n
     }
 
+    /// Live (non-retired) classes — the support of the distribution.
+    pub fn live_classes(&self) -> usize {
+        self.live
+    }
+
+    /// Whether slot `i` has been retired (a permanent hole).
+    pub fn is_retired(&self, i: usize) -> bool {
+        self.retired[i]
+    }
+
     pub fn dim(&self) -> usize {
         self.dim
     }
@@ -102,18 +155,183 @@ impl KernelTree {
         self.eps
     }
 
-    /// Memory footprint of the node sums, in bytes.
+    /// Memory footprint of the node sums + live counts, in bytes.
     pub fn memory_bytes(&self) -> usize {
         (self.left_sums.len() + self.total.len()) * std::mem::size_of::<f32>()
+            + self.left_live.len() * std::mem::size_of::<u32>()
     }
 
     /// Predicted [`KernelTree::memory_bytes`] for an `(n, dim)` tree that
     /// has not been built yet, derived from the tree's actual storage
-    /// element (`pad − 1` left-sums plus the root total, each `dim`
-    /// floats). `build_sampler`'s memory fallback uses this so its
-    /// threshold cannot drift from the real storage type.
+    /// elements (`pad − 1` left-sums plus the root total, each `dim`
+    /// floats, plus `pad − 1` live counts). `build_sampler`'s memory
+    /// fallback uses this so its threshold cannot drift from the real
+    /// storage type; pass the planned **capacity** (`sampler.
+    /// max_capacity`), not just the current class count, when the
+    /// universe is expected to grow — capacity doubling means a tree that
+    /// outgrew its seed size occupies `next_pow2(slots)`, exactly what
+    /// this predicts for `n = slots`.
     pub fn estimate_bytes(n: usize, dim: usize) -> usize {
-        n.next_power_of_two().max(2) * dim * std::mem::size_of::<f32>()
+        let pad = n.next_power_of_two().max(2);
+        pad * dim * std::mem::size_of::<f32>()
+            + (pad - 1) * std::mem::size_of::<u32>()
+    }
+
+    /// Double the padded capacity: the existing tree becomes the **left
+    /// subtree** of a fresh root, so every stored sum and live count is
+    /// moved (not recomputed) — old heap node `k` at depth ℓ maps to
+    /// `k + 2^ℓ`, the new root's left sum is the old total, and the new
+    /// right half is all-phantom. `O(pad · D)` copy, amortized `O(D)`
+    /// per insert across the `pad/2` inserts that fit before the next
+    /// doubling. Preserves the `pad = next_pow2(n).max(2)` invariant.
+    fn grow(&mut self) {
+        let old_pad = self.pad;
+        let new_pad = old_pad * 2;
+        let dim = self.dim;
+        let mut sums = vec![0.0f32; (new_pad - 1) * dim];
+        let mut lives = vec![0u32; new_pad - 1];
+        sums[..dim].copy_from_slice(&self.total);
+        lives[0] = self.live as u32;
+        for k in 1..old_pad {
+            // floor(log2 k) without fp: position of k's leading bit.
+            let msb = 1usize << (usize::BITS - 1 - k.leading_zeros());
+            let nk = k + msb;
+            sums[(nk - 1) * dim..nk * dim]
+                .copy_from_slice(&self.left_sums[(k - 1) * dim..k * dim]);
+            lives[nk - 1] = self.left_live[k - 1];
+        }
+        self.left_sums = sums;
+        self.left_live = lives;
+        self.pad = new_pad;
+        debug_assert_eq!(self.pad, self.n.next_power_of_two().max(2) * 2);
+    }
+
+    /// Append a new class with feature vector `phi`, returning its slot
+    /// id (`== num_classes()` before the call; ids are stable forever).
+    /// Amortized `O(D log n)`: one root→leaf sum update plus the
+    /// capacity-doubling copy amortized over the inserts that fit in it.
+    pub fn insert_class(&mut self, phi: &[f32]) -> usize {
+        assert_eq!(phi.len(), self.dim, "insert_class: dim mismatch");
+        if self.n == self.pad {
+            self.grow();
+        }
+        let i = self.n;
+        self.n += 1;
+        self.retired.push(false);
+        self.live += 1;
+        self.adjust_live(i, 1);
+        self.update_leaf(i, phi);
+        debug_assert!(
+            self.pad.is_power_of_two() && self.pad >= self.n.max(2),
+            "insert_class: pad invariant violated (n={}, pad={})",
+            self.n,
+            self.pad
+        );
+        i
+    }
+
+    /// Retire slot `i`: subtract its current feature vector `phi` (the
+    /// caller owns φ — the tree stores only sums) and remove it from the
+    /// live counts, so the slot's effective mass is exactly zero: never
+    /// sampled, never in `top_k`, `probability` returns an exact 0, no ε
+    /// floor. `O(D log n)`. The slot id stays valid (a hole) and is
+    /// never reused.
+    pub fn retire_class(&mut self, i: usize, phi: &[f32]) {
+        assert!(i < self.n, "retire_class: class {i} out of range");
+        assert!(!self.retired[i], "retire_class: class {i} already retired");
+        // live may legitimately drain to 0 here: a ShardedKernelTree
+        // shard with no survivors simply carries zero weight. Samplers
+        // that serve a distribution enforce "≥ 1 live" at their layer.
+        assert_eq!(phi.len(), self.dim, "retire_class: dim mismatch");
+        let neg: Vec<f32> = phi.iter().map(|x| -x).collect();
+        self.update_leaf(i, &neg);
+        self.retired[i] = true;
+        self.live -= 1;
+        self.adjust_live(i, -1);
+    }
+
+    /// Un-retire slot `i`, re-seeding it with `phi` — for **container**
+    /// leaves only (e.g. [`crate::sampler::BucketKernelSampler`]'s
+    /// bucket-level tree, where a drained tail bucket refills when new
+    /// classes append into it). Class-level samplers never revive: class
+    /// ids stay permanent holes. `O(D log n)`.
+    pub fn revive_class(&mut self, i: usize, phi: &[f32]) {
+        assert!(i < self.n, "revive_class: slot {i} out of range");
+        assert!(self.retired[i], "revive_class: slot {i} is not retired");
+        self.retired[i] = false;
+        self.live += 1;
+        self.adjust_live(i, 1);
+        self.update_leaf(i, phi);
+    }
+
+    /// Add `delta` to the live count along leaf `i`'s root→leaf path
+    /// (left-descents only — right-subtree counts are derived).
+    fn adjust_live(&mut self, i: usize, delta: i32) {
+        let mut node = 1usize;
+        let mut lo = 0usize;
+        let mut size = self.pad;
+        while size > 1 {
+            let half = size / 2;
+            if i < lo + half {
+                let c = &mut self.left_live[node - 1];
+                *c = c.wrapping_add_signed(delta);
+                node *= 2;
+            } else {
+                node = node * 2 + 1;
+                lo += half;
+            }
+            size = half;
+        }
+    }
+
+    /// Uniform draw over **live** leaves, optionally excluding one live
+    /// `target` — the never-aborting fallback for
+    /// [`KernelTree::sample_negatives`] in a universe with holes (a flat
+    /// `uniform_excluding(n, …)` would emit retired slots). Walks the
+    /// live counts root→leaf: `O(log n)`, exact `1/(live − |excl|)` per
+    /// candidate.
+    pub fn uniform_live_excluding(
+        &self,
+        target: Option<usize>,
+        rng: &mut Rng,
+    ) -> usize {
+        if let Some(t) = target {
+            debug_assert!(t < self.n && !self.retired[t]);
+        }
+        let in_range = |t: Option<usize>, lo: usize, size: usize| -> usize {
+            match t {
+                Some(t) if t >= lo && t < lo + size => 1,
+                _ => 0,
+            }
+        };
+        let avail = self.live - target.map_or(0, |_| 1);
+        assert!(avail >= 1, "uniform_live_excluding: no live candidates");
+        let mut node = 1usize;
+        let mut lo = 0usize;
+        let mut size = self.pad;
+        let mut live = self.live; // raw live count of current subtree
+        while size > 1 {
+            let half = size / 2;
+            let nl_raw = self.left_live[node - 1] as usize;
+            let nr_raw = live - nl_raw;
+            let nl = nl_raw - in_range(target, lo, half);
+            let nr = nr_raw - in_range(target, lo + half, half);
+            debug_assert!(nl + nr > 0, "no candidates under node {node}");
+            if rng.below((nl + nr) as u64) < nl as u64 {
+                live = nl_raw;
+                node *= 2;
+            } else {
+                live = nr_raw;
+                node = node * 2 + 1;
+                lo += half;
+            }
+            size = half;
+        }
+        debug_assert!(
+            lo < self.n && !self.retired[lo] && target != Some(lo),
+            "uniform_live_excluding landed on slot {lo}"
+        );
+        lo
     }
 
     /// Same `(n, dim, pad)` shape as `other` (copyable in place).
@@ -137,7 +355,11 @@ impl KernelTree {
             src.dim
         );
         self.left_sums.copy_from_slice(&src.left_sums);
+        self.left_live.copy_from_slice(&src.left_live);
         self.total.copy_from_slice(&src.total);
+        self.live = src.live;
+        self.retired.clear();
+        self.retired.extend_from_slice(&src.retired);
         self.eps = src.eps;
     }
 
@@ -155,6 +377,9 @@ impl KernelTree {
     pub fn update_leaf(&mut self, i: usize, delta: &[f32]) {
         assert!(i < self.n, "update_leaf: class {i} out of range");
         assert_eq!(delta.len(), self.dim);
+        // retire_class flips the flag only after its own subtraction, so
+        // this rejects exactly the external writes a hole must never see.
+        assert!(!self.retired[i], "update_leaf: class {i} is retired");
         for (t, d) in self.total.iter_mut().zip(delta.iter()) {
             *t += d;
         }
@@ -190,24 +415,22 @@ impl KernelTree {
         dot(&self.total, z) as f64
     }
 
-    /// Effective (clamped + ε·count) mass of a subtree, given its raw mass.
+    /// Effective (clamped + ε·count) mass of a subtree, given its raw
+    /// mass and **live**-leaf count.
     ///
-    /// A subtree with no real leaves has *exactly* zero mass by
-    /// construction; its raw value reaches us via a chain of f32
-    /// subtractions whose rounding error would otherwise leak real
-    /// probability into phantom leaves (observed ~1% at n≈40 when most
-    /// masses clamp to the ε floor), so it is forced to 0 here.
+    /// A subtree with no live leaves (all phantom padding, all retired,
+    /// or both) has *exactly* zero mass by construction; its raw value
+    /// reaches us via a chain of f32 subtractions whose rounding error
+    /// would otherwise leak real probability into dead leaves (observed
+    /// ~1% at n≈40 when most masses clamp to the ε floor), so it is
+    /// forced to 0 here — this is also what guarantees a retired slot is
+    /// never emitted.
     #[inline]
-    fn eff(&self, raw: f64, real_leaves: usize) -> f64 {
-        if real_leaves == 0 {
+    fn eff(&self, raw: f64, live_leaves: usize) -> f64 {
+        if live_leaves == 0 {
             return 0.0;
         }
-        raw.max(0.0) + self.eps * real_leaves as f64
-    }
-
-    #[inline]
-    fn real_leaves(&self, lo: usize, size: usize) -> usize {
-        self.n.saturating_sub(lo).min(size)
+        raw.max(0.0) + self.eps * live_leaves as f64
     }
 
     /// Draw one class: returns `(class, q)` where `q` is the exact
@@ -218,13 +441,14 @@ impl KernelTree {
         let mut lo = 0usize;
         let mut size = self.pad;
         let mut raw = self.mass(z);
+        let mut live = self.live;
         let mut q = 1.0f64;
         while size > 1 {
             let half = size / 2;
             let raw_left = dot(self.left_sum(node), z) as f64;
             let raw_right = raw - raw_left;
-            let nl = self.real_leaves(lo, half);
-            let nr = self.real_leaves(lo + half, half);
+            let nl = self.left_live[node - 1] as usize;
+            let nr = live - nl;
             let el = self.eff(raw_left, nl);
             let er = self.eff(raw_right, nr);
             let tot = el + er;
@@ -233,42 +457,57 @@ impl KernelTree {
             if rng.f64() < p_left {
                 q *= p_left;
                 raw = raw_left;
+                live = nl;
                 node *= 2;
             } else {
                 q *= 1.0 - p_left;
                 raw = raw_right;
+                live = nr;
                 node = node * 2 + 1;
                 lo += half;
             }
             size = half;
         }
-        debug_assert!(lo < self.n, "sampled phantom leaf {lo}");
+        debug_assert!(
+            lo < self.n && !self.retired[lo],
+            "sampled dead leaf {lo}"
+        );
         (lo, q)
     }
 
     /// Exact probability that [`sample`] returns class `i` for query `z`.
-    /// `O(D log n)`.
+    /// `O(D log n)`. An exact `0.0` for retired slots (their subtree's
+    /// effective mass is forced to zero at the last branch).
     pub fn probability(&self, z: &[f32], i: usize) -> f64 {
         assert!(i < self.n);
         let mut node = 1usize;
         let mut lo = 0usize;
         let mut size = self.pad;
         let mut raw = self.mass(z);
+        let mut live = self.live;
         let mut q = 1.0f64;
         while size > 1 {
             let half = size / 2;
             let raw_left = dot(self.left_sum(node), z) as f64;
             let raw_right = raw - raw_left;
-            let el = self.eff(raw_left, self.real_leaves(lo, half));
-            let er = self.eff(raw_right, self.real_leaves(lo + half, half));
-            let p_left = el / (el + er);
+            let nl = self.left_live[node - 1] as usize;
+            let nr = live - nl;
+            let el = self.eff(raw_left, nl);
+            let er = self.eff(raw_right, nr);
+            let tot = el + er;
+            if tot <= 0.0 {
+                return 0.0; // dead subtree: exact zero, no 0/0
+            }
+            let p_left = el / tot;
             if i < lo + half {
                 q *= p_left;
                 raw = raw_left;
+                live = nl;
                 node *= 2;
             } else {
                 q *= 1.0 - p_left;
                 raw = raw_right;
+                live = nr;
                 node = node * 2 + 1;
                 lo += half;
             }
@@ -303,6 +542,7 @@ impl KernelTree {
             let mut lo = 0usize;
             let mut size = self.pad;
             let mut raw = root_raw;
+            let mut live = self.live;
             let mut q = 1.0f64;
             while size > 1 {
                 let half = size / 2;
@@ -319,25 +559,31 @@ impl KernelTree {
                     dot(self.left_sum(node), z) as f64
                 };
                 let raw_right = raw - raw_left;
-                let el = self.eff(raw_left, self.real_leaves(lo, half));
-                let er =
-                    self.eff(raw_right, self.real_leaves(lo + half, half));
+                let nl = self.left_live[node - 1] as usize;
+                let nr = live - nl;
+                let el = self.eff(raw_left, nl);
+                let er = self.eff(raw_right, nr);
                 let tot = el + er;
                 debug_assert!(tot > 0.0, "zero effective mass at node {node}");
                 let p_left = el / tot;
                 if rng.f64() < p_left {
                     q *= p_left;
                     raw = raw_left;
+                    live = nl;
                     node *= 2;
                 } else {
                     q *= 1.0 - p_left;
                     raw = raw_right;
+                    live = nr;
                     node = node * 2 + 1;
                     lo += half;
                 }
                 size = half;
             }
-            debug_assert!(lo < self.n, "sampled phantom leaf {lo}");
+            debug_assert!(
+                lo < self.n && !self.retired[lo],
+                "sampled dead leaf {lo}"
+            );
             ids.push(lo as u32);
             probs.push(q);
         }
@@ -360,9 +606,10 @@ impl KernelTree {
         rng: &mut Rng,
     ) -> (Vec<u32>, Vec<f64>) {
         assert!(target < self.n, "sample_negatives: target out of range");
+        assert!(!self.retired[target], "sample_negatives: retired target");
         assert!(
-            self.n > 1,
-            "sample_negatives: need ≥ 2 classes to exclude one"
+            self.live > 1,
+            "sample_negatives: need ≥ 2 live classes to exclude one"
         );
         let q_t = self.probability(z, target);
         let renorm = (1.0 - q_t).max(f64::MIN_POSITIVE);
@@ -382,9 +629,11 @@ impl KernelTree {
             }
             rounds += 1;
         }
+        // Live-aware uniform fallback: a flat draw over `0..n` could emit
+        // retired slots once the universe has holes.
         while ids.len() < m {
-            ids.push(crate::sampler::uniform_excluding(self.n, target, rng) as u32);
-            probs.push(1.0 / (self.n - 1) as f64);
+            ids.push(self.uniform_live_excluding(Some(target), rng) as u32);
+            probs.push(1.0 / (self.live - 1) as f64);
         }
         (ids, probs)
     }
@@ -407,6 +656,7 @@ impl KernelTree {
             lo: usize,
             size: usize,
             raw: f64,
+            live: usize,
         }
         impl PartialEq for Item {
             fn eq(&self, other: &Self) -> bool {
@@ -427,7 +677,7 @@ impl KernelTree {
             }
         }
 
-        let k = k.min(self.n);
+        let k = k.min(self.live);
         let mut out = Vec::with_capacity(k);
         if k == 0 {
             return out;
@@ -439,10 +689,14 @@ impl KernelTree {
             lo: 0,
             size: self.pad,
             raw: self.mass(z),
+            live: self.live,
         });
-        while let Some(Item { q, node, lo, size, raw }) = heap.pop() {
+        while let Some(Item { q, node, lo, size, raw, live }) = heap.pop() {
             if size == 1 {
-                debug_assert!(lo < self.n, "top_k reached phantom leaf {lo}");
+                debug_assert!(
+                    lo < self.n && !self.retired[lo],
+                    "top_k reached dead leaf {lo}"
+                );
                 out.push((lo as u32, q));
                 if out.len() == k {
                     break;
@@ -452,11 +706,13 @@ impl KernelTree {
             let half = size / 2;
             let raw_left = dot(self.left_sum(node), z) as f64;
             let raw_right = raw - raw_left;
-            let el = self.eff(raw_left, self.real_leaves(lo, half));
-            let er = self.eff(raw_right, self.real_leaves(lo + half, half));
+            let nl = self.left_live[node - 1] as usize;
+            let nr = live - nl;
+            let el = self.eff(raw_left, nl);
+            let er = self.eff(raw_right, nr);
             let tot = el + er;
             if tot <= 0.0 {
-                continue; // phantom-only subtree carries no mass
+                continue; // dead (phantom/retired) subtree carries no mass
             }
             let p_left = el / tot;
             if el > 0.0 {
@@ -466,6 +722,7 @@ impl KernelTree {
                     lo,
                     size: half,
                     raw: raw_left,
+                    live: nl,
                 });
             }
             if er > 0.0 {
@@ -475,6 +732,7 @@ impl KernelTree {
                     lo: lo + half,
                     size: half,
                     raw: raw_right,
+                    live: nr,
                 });
             }
         }
@@ -719,8 +977,9 @@ mod tests {
     #[test]
     fn memory_accounting() {
         let tree = KernelTree::new(1000, 64, 1e-6);
-        // pad = 1024 → 1023 internal sums + total, × 64 × 4 bytes.
-        assert_eq!(tree.memory_bytes(), (1023 + 1) * 64 * 4);
+        // pad = 1024 → 1023 internal sums + total (× 64 × 4 bytes), plus
+        // 1023 u32 live counts.
+        assert_eq!(tree.memory_bytes(), (1023 + 1) * 64 * 4 + 1023 * 4);
     }
 
     #[test]
@@ -808,6 +1067,178 @@ mod tests {
         for i in 0..n {
             assert_eq!(src.probability(&z, i), dst.probability(&z, i));
         }
+    }
+
+    #[test]
+    fn insert_grows_to_match_a_fresh_build() {
+        // Start small, insert past several capacity doublings, and
+        // require the grown tree to match a tree built directly on the
+        // final class set — probabilities, Σq, and top-k.
+        check("tree-insert-vs-rebuild", |rng| {
+            let n0 = gen::usize_in(rng, 1, 6);
+            let added = gen::usize_in(rng, 1, 30);
+            let d = gen::usize_in(rng, 1, 6);
+            let phis: Vec<Vec<f32>> = (0..n0 + added)
+                .map(|_| (0..d).map(|_| rng.f32()).collect())
+                .collect();
+            let mut tree = build_tree(&phis[..n0], 1e-6);
+            for (expect, phi) in phis.iter().enumerate().skip(n0) {
+                prop_assert!(
+                    tree.insert_class(phi) == expect,
+                    "insert id mismatch"
+                );
+            }
+            let rebuilt = build_tree(&phis, 1e-6);
+            let z: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+            let mut total = 0.0;
+            for i in 0..n0 + added {
+                let a = tree.probability(&z, i);
+                let b = rebuilt.probability(&z, i);
+                prop_assert!(
+                    close(a, b, 1e-3, 1e-7),
+                    "class {i}: grown {a} vs rebuilt {b}"
+                );
+                total += a;
+            }
+            prop_assert!(close(total, 1.0, 1e-6, 1e-9), "Σq = {total}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn retired_classes_are_never_emitted_and_carry_zero_mass() {
+        let mut rng = Rng::seeded(99);
+        let n = 13;
+        let d = 4;
+        let phis: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.f32() + 0.1).collect())
+            .collect();
+        let mut tree = build_tree(&phis, 1e-8);
+        for &r in &[3usize, 7, 12] {
+            tree.retire_class(r, &phis[r]);
+        }
+        assert_eq!(tree.live_classes(), n - 3);
+        assert!(tree.is_retired(3) && !tree.is_retired(4));
+        let z: Vec<f32> = (0..d).map(|_| rng.f32() + 0.1).collect();
+        // Exact zero probability for holes; Σq over live slots is 1.
+        for &r in &[3usize, 7, 12] {
+            assert_eq!(tree.probability(&z, r), 0.0);
+        }
+        let total: f64 = (0..n).map(|i| tree.probability(&z, i)).sum();
+        assert!((total - 1.0).abs() < 1e-6, "Σq = {total}");
+        // Draws and top-k avoid the holes; top_k clamps k to live.
+        let (ids, _) = tree.sample_many(&z, 5000, &mut rng);
+        assert!(ids.iter().all(|&i| !matches!(i, 3 | 7 | 12)));
+        let all = tree.top_k(&z, n + 5);
+        assert_eq!(all.len(), n - 3);
+        assert!(all.iter().all(|&(i, _)| !matches!(i, 3 | 7 | 12)));
+        // Negatives (incl. the live-aware uniform fallback path) too.
+        let (nids, _) = tree.sample_negatives(&z, 5, 2000, &mut rng);
+        assert!(nids.iter().all(|&i| !matches!(i, 3 | 7 | 12) && i != 5));
+    }
+
+    #[test]
+    fn uniform_live_excluding_is_uniform_over_live_non_targets() {
+        let mut rng = Rng::seeded(77);
+        let n = 10;
+        let phis: Vec<Vec<f32>> = (0..n).map(|_| vec![0.5f32, 0.5]).collect();
+        let mut tree = build_tree(&phis, 1e-8);
+        tree.retire_class(2, &phis[2]);
+        tree.retire_class(8, &phis[8]);
+        let target = 4usize;
+        let trials = 40_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            counts[tree.uniform_live_excluding(Some(target), &mut rng)] += 1;
+        }
+        assert_eq!(counts[2] + counts[8] + counts[target], 0);
+        let expect = trials as f64 / 7.0; // 10 − 2 retired − 1 target
+        for (i, &c) in counts.iter().enumerate() {
+            if matches!(i, 2 | 8) || i == target {
+                continue;
+            }
+            assert!(
+                (c as f64 - expect).abs() < 5.0 * expect.sqrt() + 5.0,
+                "slot {i}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn churn_sequence_matches_scratch_rebuild_on_final_live_set() {
+        // Interleave inserts, retires, and updates, then compare against
+        // a tree built directly on the surviving class set (live slots in
+        // id order) — the L1 version of the PR's acceptance criterion.
+        let mut rng = Rng::seeded(173);
+        let d = 5;
+        let mut phis: Vec<Vec<f32>> =
+            (0..8).map(|_| (0..d).map(|_| rng.f32()).collect()).collect();
+        let mut retired: Vec<bool> = vec![false; 8];
+        let mut tree = build_tree(&phis, 1e-7);
+        for step in 0..40 {
+            match step % 4 {
+                0 | 1 => {
+                    let phi: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+                    let id = tree.insert_class(&phi);
+                    assert_eq!(id, phis.len());
+                    phis.push(phi);
+                    retired.push(false);
+                }
+                2 => {
+                    let live: Vec<usize> = (0..phis.len())
+                        .filter(|&i| !retired[i])
+                        .collect();
+                    if live.len() > 2 {
+                        let pick = live[rng.index(live.len())];
+                        tree.retire_class(pick, &phis[pick]);
+                        retired[pick] = true;
+                    }
+                }
+                _ => {
+                    let live: Vec<usize> = (0..phis.len())
+                        .filter(|&i| !retired[i])
+                        .collect();
+                    let pick = live[rng.index(live.len())];
+                    let newphi: Vec<f32> =
+                        (0..d).map(|_| rng.f32()).collect();
+                    let delta: Vec<f32> = newphi
+                        .iter()
+                        .zip(&phis[pick])
+                        .map(|(a, b)| a - b)
+                        .collect();
+                    tree.update_leaf(pick, &delta);
+                    phis[pick] = newphi;
+                }
+            }
+        }
+        let live_ids: Vec<usize> =
+            (0..phis.len()).filter(|&i| !retired[i]).collect();
+        let live_phis: Vec<Vec<f32>> =
+            live_ids.iter().map(|&i| phis[i].clone()).collect();
+        let reference = build_tree(&live_phis, 1e-7);
+        assert_eq!(tree.live_classes(), live_ids.len());
+        let z: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+        for (rank, &g) in live_ids.iter().enumerate() {
+            let a = tree.probability(&z, g);
+            let b = reference.probability(&z, rank);
+            assert!(
+                (a - b).abs() < 1e-3 * a.max(b).max(1e-7),
+                "global {g} / rank {rank}: churned {a} vs rebuilt {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn estimate_bytes_tracks_growth() {
+        let mut tree = KernelTree::new(5, 8, 1e-6); // pad 8
+        let before = tree.memory_bytes();
+        assert_eq!(KernelTree::estimate_bytes(5, 8), before);
+        for _ in 0..5 {
+            tree.insert_class(&[0.1; 8]); // crosses 8 → 16
+        }
+        assert_eq!(tree.num_classes(), 10);
+        assert_eq!(KernelTree::estimate_bytes(10, 8), tree.memory_bytes());
+        assert!(tree.memory_bytes() > before);
     }
 
     #[test]

@@ -19,15 +19,118 @@
 //! behaviour, swap stalls, per-kind counts, and (for the uds transport)
 //! mean frame encode/decode overhead as BENCH JSON.
 
-use super::{BatcherOptions, MicroBatcher, SamplerServer};
+use super::{BatcherOptions, MicroBatcher, SamplerServer, SamplerWriter};
 use crate::json::Json;
 use crate::linalg::{unit_vector, Matrix};
 use crate::rng::Rng;
 use crate::sampler::Sampler;
-use crate::transport::{wire, TransportClient, TransportServer};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use crate::transport::{wire, TransportClient, TransportServer, VocabAdmin};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Class-universe churn driven during the closed loop (`serve-bench
+/// --churn adds:retires[:ops]`): `ops` structural mutations, each an
+/// add-batch or retire-batch picked with `adds:retires` weights. Over
+/// the uds transport the mutations travel as `ADD_CLASSES` /
+/// `RETIRE_CLASSES` admin frames on a dedicated connection; inproc they
+/// apply straight through the shared sampler writer. Mutation latency
+/// percentiles and post-churn qps land in the BENCH JSON.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnSpec {
+    /// Relative weight of add mutations.
+    pub adds: u32,
+    /// Relative weight of retire mutations.
+    pub retires: u32,
+    /// Total structural mutations to perform.
+    pub ops: usize,
+    /// Classes added/retired per mutation.
+    pub batch: usize,
+}
+
+impl ChurnSpec {
+    /// Parse `"adds:retires"` or `"adds:retires:ops"` (e.g. `3:1`,
+    /// `3:1:500`). Defaults: 200 ops of 8 classes each.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 2 || parts.len() == 3,
+            "churn must be adds:retires[:ops], got '{s}'"
+        );
+        let num = |p: &str| -> anyhow::Result<u32> {
+            p.parse()
+                .map_err(|_| anyhow::anyhow!("bad churn weight '{p}' in '{s}'"))
+        };
+        let spec = Self {
+            adds: num(parts[0])?,
+            retires: num(parts[1])?,
+            ops: if parts.len() == 3 { num(parts[2])? as usize } else { 200 },
+            batch: 8,
+        };
+        anyhow::ensure!(
+            spec.adds + spec.retires > 0,
+            "churn '{s}' has zero total weight"
+        );
+        Ok(spec)
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}:{}:{}", self.adds, self.retires, self.ops)
+    }
+}
+
+/// [`VocabAdmin`] over a shared sampler writer: apply the mutation to
+/// the shadow, publish one epoch-versioned swap, echo the epoch. This
+/// is what [`crate::transport::TransportServer::bind_with_admin`]
+/// routes the `ADD_CLASSES`/`RETIRE_CLASSES` admin frames through —
+/// exported so any embedder of the transport reuses the same ingestion
+/// contract (wire embeddings are row-normalized here: the kernel
+/// samplers assume the paper's normalized regime, so a class added over
+/// uds lands identically to one added by the trainer).
+pub struct SharedWriterAdmin {
+    writer: Arc<Mutex<SamplerWriter>>,
+    dim: usize,
+}
+
+impl SharedWriterAdmin {
+    /// `dim` is the serving class-embedding width; admin frames with any
+    /// other width are rejected per-request.
+    pub fn new(writer: Arc<Mutex<SamplerWriter>>, dim: usize) -> Self {
+        Self { writer, dim }
+    }
+}
+
+impl VocabAdmin for SharedWriterAdmin {
+    fn add_classes(
+        &self,
+        dim: usize,
+        rows: usize,
+        data: Vec<f32>,
+    ) -> Result<(Vec<u32>, u64), String> {
+        if dim != self.dim {
+            return Err(format!(
+                "add_classes: embedding dim {dim} != serving dim {}",
+                self.dim
+            ));
+        }
+        let mut emb = Matrix::from_vec(rows, dim, data);
+        // Same ingestion contract as SamplerService::extend_vocab: the
+        // kernel samplers assume the paper's normalized-embedding
+        // regime, so raw wire floats are normalized here — a class
+        // added over uds and one added by the trainer land identically.
+        emb.normalize_rows_in_place();
+        let mut w = self.writer.lock().unwrap();
+        let ids = w.apply_add_classes(emb).map_err(|e| e.to_string())?;
+        let epoch = w.publish();
+        Ok((ids, epoch))
+    }
+
+    fn retire_classes(&self, ids: &[u32]) -> Result<u64, String> {
+        let mut w = self.writer.lock().unwrap();
+        w.apply_retire_classes(ids.to_vec()).map_err(|e| e.to_string())?;
+        Ok(w.publish())
+    }
+}
 
 /// Which plumbing the closed loop runs through.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -147,6 +250,8 @@ pub struct LoadSpec {
     pub transport: TransportMode,
     /// sample:prob:topk request mix.
     pub mix: RequestMix,
+    /// Optional class-universe churn running alongside the readers.
+    pub churn: Option<ChurnSpec>,
 }
 
 impl Default for LoadSpec {
@@ -163,6 +268,7 @@ impl Default for LoadSpec {
             swap_pause: Duration::from_micros(200),
             transport: TransportMode::Inproc,
             mix: RequestMix::default(),
+            churn: None,
         }
     }
 }
@@ -187,18 +293,39 @@ pub struct LoadReport {
     pub mean_batch: f64,
     pub epochs: u64,
     pub swap_stalls: u64,
-    /// Mean wall time to encode one request frame of this run's mix
-    /// (µs; 0 for the inproc transport, which has no frames).
+    /// Mean wall time to encode one request frame of this run's mix into
+    /// a reused buffer — the zero-copy production path (µs; 0 for the
+    /// inproc transport, which has no frames).
     pub frame_encode_us: f64,
+    /// Same encode but into a fresh `Vec` per frame (the pre-zero-copy
+    /// behaviour), kept so the delta stays visible in the trajectory.
+    pub frame_encode_fresh_us: f64,
     /// Mean wall time to decode one response frame of this run's mix
     /// (µs; 0 for inproc).
     pub frame_decode_us: f64,
+    /// Churn label (`adds:retires:ops`; empty when churn is off).
+    pub churn: String,
+    /// Structural mutations performed (adds + retires).
+    pub mutations: u64,
+    /// Classes added / retired across the run.
+    pub classes_added: u64,
+    pub classes_retired: u64,
+    /// Mutation latency percentiles (µs; end-to-end over the admin
+    /// frames for the uds transport, writer-apply + publish inproc).
+    pub mut_p50_us: f64,
+    pub mut_p99_us: f64,
+    /// Throughput measured over the tail of the run after the last
+    /// structural mutation landed (0 when churn is off or nothing
+    /// completed afterwards).
+    pub post_churn_qps: f64,
+    /// Live classes at the end of the run.
+    pub live_final: u64,
 }
 
 impl LoadReport {
     /// One human-readable summary line.
     pub fn render(&self) -> String {
-        format!(
+        let mut line = format!(
             "{:<14} {:<6} mix={} readers={} qps={:>10.0} p50={:>8.1}µs \
              p99={:>8.1}µs mean_batch={:>5.1} epochs={} swap_stalls={}",
             self.sampler,
@@ -211,7 +338,19 @@ impl LoadReport {
             self.mean_batch,
             self.epochs,
             self.swap_stalls,
-        )
+        );
+        if self.mutations > 0 {
+            line.push_str(&format!(
+                " churn={} mut_p50={:>7.1}µs mut_p99={:>7.1}µs \
+                 post_churn_qps={:>9.0} live={}",
+                self.churn,
+                self.mut_p50_us,
+                self.mut_p99_us,
+                self.post_churn_qps,
+                self.live_final,
+            ));
+        }
+        line
     }
 
     /// Machine-readable BENCH record (matches the `perf_hotpath` idiom).
@@ -236,7 +375,19 @@ impl LoadReport {
             ("epochs", Json::from(self.epochs as usize)),
             ("swap_stalls", Json::from(self.swap_stalls as usize)),
             ("frame_encode_us", Json::from(self.frame_encode_us)),
+            (
+                "frame_encode_fresh_us",
+                Json::from(self.frame_encode_fresh_us),
+            ),
             ("frame_decode_us", Json::from(self.frame_decode_us)),
+            ("churn", Json::from(self.churn.as_str())),
+            ("mutations", Json::from(self.mutations as usize)),
+            ("classes_added", Json::from(self.classes_added as usize)),
+            ("classes_retired", Json::from(self.classes_retired as usize)),
+            ("mut_p50_us", Json::from(self.mut_p50_us)),
+            ("mut_p99_us", Json::from(self.mut_p99_us)),
+            ("post_churn_qps", Json::from(self.post_churn_qps)),
+            ("live_final", Json::from(self.live_final as usize)),
         ])
     }
 }
@@ -290,9 +441,13 @@ impl Issuer<'_> {
 
 /// Mean per-frame encode/decode wall time (µs) for this run's request
 /// mix, measured on in-memory buffers — the wire protocol's CPU overhead
-/// isolated from socket latency. Response decode uses representative
-/// reply shapes (m draws / a top-k list / one probability).
-fn measure_codec_overhead(spec: &LoadSpec) -> (f64, f64) {
+/// isolated from socket latency. Returns `(encode_reused,
+/// encode_fresh, decode)`: the reused-buffer encode is the zero-copy
+/// production path, the fresh-`Vec` encode is kept as the baseline so
+/// the saving stays visible in `frame_encode_us` vs
+/// `frame_encode_fresh_us`. Response decode uses representative reply
+/// shapes (m draws / a top-k list / one probability).
+fn measure_codec_overhead(spec: &LoadSpec) -> (f64, f64, f64) {
     let kinds: Vec<(ReqKind, u32)> = [
         (ReqKind::Sample, spec.mix.sample),
         (ReqKind::Prob, spec.mix.prob),
@@ -305,6 +460,7 @@ fn measure_codec_overhead(spec: &LoadSpec) -> (f64, f64) {
     let h = unit_vector(&mut rng, spec.dim);
     let reps = 2000usize;
     let mut encode_us = 0.0;
+    let mut encode_fresh_us = 0.0;
     let mut decode_us = 0.0;
     let total_w: u32 = kinds.iter().map(|(_, w)| w).sum();
     for (kind, w) in &kinds {
@@ -329,14 +485,26 @@ fn measure_codec_overhead(spec: &LoadSpec) -> (f64, f64) {
                 items: (0..spec.top_k as u32).map(|i| (i, 1e-4)).collect(),
             },
         };
+        // Zero-copy path: one reused buffer, cleared per frame.
+        let mut reused = Vec::with_capacity(4 * 1024);
+        let t0 = Instant::now();
+        let mut sink = 0usize;
+        for i in 0..reps {
+            reused.clear();
+            wire::encode_request(&mut reused, i as u64, &req);
+            sink += reused.len();
+        }
+        let enc = t0.elapsed().as_secs_f64() / reps as f64 * 1e6;
+        std::hint::black_box(sink);
+        // Baseline: a fresh allocation per frame.
         let t0 = Instant::now();
         let mut sink = 0usize;
         for i in 0..reps {
             let mut buf = Vec::new();
             wire::encode_request(&mut buf, i as u64, &req);
-            sink += buf.len();
+            sink += std::hint::black_box(buf).len();
         }
-        let enc = t0.elapsed().as_secs_f64() / reps as f64 * 1e6;
+        let enc_fresh = t0.elapsed().as_secs_f64() / reps as f64 * 1e6;
         std::hint::black_box(sink);
         let mut buf = Vec::new();
         wire::encode_response(&mut buf, 1, &resp);
@@ -352,9 +520,10 @@ fn measure_codec_overhead(spec: &LoadSpec) -> (f64, f64) {
         std::hint::black_box(sink);
         let frac = *w as f64 / total_w as f64;
         encode_us += frac * enc;
+        encode_fresh_us += frac * enc_fresh;
         decode_us += frac * dec;
     }
-    (encode_us, decode_us)
+    (encode_us, encode_fresh_us, decode_us)
 }
 
 /// Run one closed-loop load test against a fork of `sampler`. The
@@ -377,11 +546,18 @@ pub fn run_closed_loop(
     let name = serve.name().to_string();
     let num_classes = serve.num_classes();
     let dim = spec.dim;
-    let (server, mut writer) = SamplerServer::new(serve);
+    let (server, writer) = SamplerServer::new(serve);
+    let writer = Arc::new(Mutex::new(writer));
     let batcher = Arc::new(MicroBatcher::spawn(server.clone(), spec.batcher));
     let stop = Arc::new(AtomicBool::new(false));
+    // Requests completed so far (all readers) — the churn driver
+    // snapshots it when its last mutation lands, so post-churn qps can
+    // be computed from the tail of the run.
+    let completed = Arc::new(AtomicU64::new(0));
 
-    // The uds transport wraps the same batcher behind a socket.
+    // The uds transport wraps the same batcher behind a socket, with the
+    // admin hook routed through the shared sampler writer so
+    // ADD_CLASSES/RETIRE_CLASSES frames work cross-process.
     let transport = match spec.transport {
         TransportMode::Inproc => None,
         TransportMode::Uds => {
@@ -396,38 +572,166 @@ pub fn run_closed_loop(
                 spec.seed,
                 SOCK_SEQ.fetch_add(1, Ordering::Relaxed)
             ));
+            let admin =
+                Arc::new(SharedWriterAdmin::new(Arc::clone(&writer), dim));
             Some(
-                TransportServer::bind(&path, Arc::clone(&batcher))
-                    .map_err(|e| anyhow::anyhow!("bind {path:?}: {e}"))?,
+                TransportServer::bind_with_admin(
+                    &path,
+                    Arc::clone(&batcher),
+                    admin,
+                )
+                .map_err(|e| anyhow::anyhow!("bind {path:?}: {e}"))?,
             )
         }
     };
 
-    // Writer: apply a batch of random class updates, publish, pause.
-    let writer_handle = if spec.updates_per_swap > 0 {
+    // Driver: apply batches of random class updates (publishing each),
+    // and — when churn is configured — interleave structural mutations,
+    // timing each one. A single driver owns the live-id pool, so update
+    // picks can never race a retire.
+    struct ChurnOut {
+        latencies_ns: Vec<u64>,
+        adds: u64,
+        retires: u64,
+        churn_done: Option<(Instant, u64)>,
+    }
+    let driver_handle = if spec.updates_per_swap > 0 || spec.churn.is_some() {
         let stop = Arc::clone(&stop);
-        let k = spec.updates_per_swap.min(num_classes);
+        let writer = Arc::clone(&writer);
+        let completed = Arc::clone(&completed);
+        let sock = transport.as_ref().map(|t| t.path().to_path_buf());
+        let churn = spec.churn;
+        let updates_per_swap = spec.updates_per_swap;
         let pause = spec.swap_pause;
         let seed = spec.seed ^ 0x57A9_0000_0000_0000;
         Some(std::thread::spawn(move || {
             let mut rng = Rng::seeded(seed);
-            while !stop.load(Ordering::Relaxed) {
-                let ids: Vec<u32> = rng
-                    .sample_distinct(num_classes, k)
-                    .into_iter()
-                    .map(|i| i as u32)
-                    .collect();
-                let mut emb = Matrix::zeros(k, dim);
-                for r in 0..k {
-                    let v = unit_vector(&mut rng, dim);
-                    emb.row_mut(r).copy_from_slice(&v);
+            // Admin connection for cross-process churn (uds only).
+            let mut admin_client = match (&churn, &sock) {
+                (Some(_), Some(p)) => Some(
+                    TransportClient::connect(p).expect("connect admin socket"),
+                ),
+                _ => None,
+            };
+            // The driver's view of the universe: live ids, never below
+            // the floor (readers keep sampling m draws throughout).
+            let mut live: Vec<u32> = (0..num_classes as u32).collect();
+            let floor = (num_classes / 2).max(2);
+            let mut out = ChurnOut {
+                latencies_ns: Vec::new(),
+                adds: 0,
+                retires: 0,
+                churn_done: None,
+            };
+            let mut ops_left = churn.map_or(0, |c| c.ops);
+            loop {
+                if stop.load(Ordering::Relaxed) && ops_left == 0 {
+                    break;
                 }
-                writer.apply_updates(ids, emb);
-                writer.publish();
+                // Embedding-update churn (the PR-2 writer loop).
+                if updates_per_swap > 0 {
+                    let k = updates_per_swap.min(live.len());
+                    let ids: Vec<u32> = rng
+                        .sample_distinct(live.len(), k)
+                        .into_iter()
+                        .map(|i| live[i])
+                        .collect();
+                    let mut emb = Matrix::zeros(k, dim);
+                    for r in 0..k {
+                        let v = unit_vector(&mut rng, dim);
+                        emb.row_mut(r).copy_from_slice(&v);
+                    }
+                    let mut w = writer.lock().unwrap();
+                    w.apply_updates(ids, emb);
+                    w.publish();
+                }
+                // Structural churn.
+                if ops_left > 0 {
+                    let c = churn.expect("ops_left > 0 without churn");
+                    let retire_ok = live.len() >= floor + c.batch;
+                    if !retire_ok && c.adds == 0 {
+                        // Pure-retire churn hit the live floor: stop
+                        // early rather than shrink the serving set away.
+                        ops_left = 0;
+                        out.churn_done = Some((
+                            Instant::now(),
+                            completed.load(Ordering::Relaxed),
+                        ));
+                        continue;
+                    }
+                    let want_add = c.retires == 0
+                        || (c.adds > 0
+                            && rng.below((c.adds + c.retires) as u64)
+                                < c.adds as u64);
+                    // Payloads are built BEFORE the latency timer starts,
+                    // so mut_p50/p99 measure the mutation (writer apply +
+                    // publish, or the admin-frame round trip) and nothing
+                    // else.
+                    if want_add || !retire_ok {
+                        let mut emb = Matrix::zeros(c.batch, dim);
+                        for r in 0..c.batch {
+                            let v = unit_vector(&mut rng, dim);
+                            emb.row_mut(r).copy_from_slice(&v);
+                        }
+                        let t0 = Instant::now();
+                        let ids = match &mut admin_client {
+                            Some(cl) => {
+                                cl.add_classes(&emb)
+                                    .expect("admin add_classes failed")
+                                    .0
+                            }
+                            None => {
+                                let mut w = writer.lock().unwrap();
+                                let ids = w
+                                    .apply_add_classes(emb)
+                                    .expect("add_classes failed");
+                                w.publish();
+                                ids
+                            }
+                        };
+                        out.latencies_ns
+                            .push(t0.elapsed().as_nanos() as u64);
+                        live.extend_from_slice(&ids);
+                        out.adds += c.batch as u64;
+                    } else {
+                        let victims: Vec<u32> = rng
+                            .sample_distinct(live.len(), c.batch)
+                            .into_iter()
+                            .map(|i| live[i])
+                            .collect();
+                        let t0 = Instant::now();
+                        match &mut admin_client {
+                            Some(cl) => {
+                                cl.retire_classes(&victims)
+                                    .expect("admin retire_classes failed");
+                            }
+                            None => {
+                                let mut w = writer.lock().unwrap();
+                                w.apply_retire_classes(victims.clone())
+                                    .expect("retire_classes failed");
+                                w.publish();
+                            }
+                        }
+                        out.latencies_ns
+                            .push(t0.elapsed().as_nanos() as u64);
+                        live.retain(|id| !victims.contains(id));
+                        out.retires += c.batch as u64;
+                    }
+                    ops_left -= 1;
+                    if ops_left == 0 {
+                        out.churn_done = Some((
+                            Instant::now(),
+                            completed.load(Ordering::Relaxed),
+                        ));
+                    }
+                } else if stop.load(Ordering::Relaxed) {
+                    break;
+                }
                 if !pause.is_zero() {
                     std::thread::sleep(pause);
                 }
             }
+            out
         }))
     } else {
         None
@@ -440,6 +744,7 @@ pub fn run_closed_loop(
         let handles: Vec<_> = (0..spec.readers)
             .map(|r| {
                 let batcher = Arc::clone(&batcher);
+                let completed = Arc::clone(&completed);
                 let sock = transport.as_ref().map(|t| t.path().to_path_buf());
                 scope.spawn(move || {
                     let mut issuer = match &sock {
@@ -465,6 +770,7 @@ pub fn run_closed_loop(
                             kind, &h, spec.m, spec.top_k, class, seed,
                         );
                         lat.push(t.elapsed().as_nanos() as u64);
+                        completed.fetch_add(1, Ordering::Relaxed);
                         std::hint::black_box(out);
                         counts[match kind {
                             ReqKind::Sample => 0,
@@ -479,16 +785,20 @@ pub fn run_closed_loop(
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
     let wall = t0.elapsed().as_secs_f64();
+    let run_end = Instant::now();
     stop.store(true, Ordering::Relaxed);
-    if let Some(h) = writer_handle {
-        // A dead writer means the run served a frozen snapshot — report
+    let churn_out = match driver_handle {
+        // A dead driver means the run served a frozen snapshot — report
         // an error, not a healthy-looking BENCH record.
-        anyhow::ensure!(
-            h.join().is_ok(),
-            "serve load: writer thread panicked (LoadSpec.dim mismatch \
-             with the sampler's class-embedding dimension?)"
-        );
-    }
+        Some(h) => Some(h.join().map_err(|_| {
+            anyhow::anyhow!(
+                "serve load: driver thread panicked (LoadSpec.dim mismatch \
+                 with the sampler's class-embedding dimension?)"
+            )
+        })?),
+        None => None,
+    };
+    let live_final = server.snapshot().sampler().live_classes() as u64;
     drop(transport); // joins connection threads, removes the socket file
 
     let mut all: Vec<u64> = Vec::new();
@@ -514,10 +824,43 @@ pub fn run_closed_loop(
     };
     let (req_stat, batches) = batcher.stats();
     debug_assert_eq!(req_stat, requests);
-    let (frame_encode_us, frame_decode_us) = match spec.transport {
-        TransportMode::Inproc => (0.0, 0.0),
-        TransportMode::Uds => measure_codec_overhead(spec),
-    };
+    let (frame_encode_us, frame_encode_fresh_us, frame_decode_us) =
+        match spec.transport {
+            TransportMode::Inproc => (0.0, 0.0, 0.0),
+            TransportMode::Uds => measure_codec_overhead(spec),
+        };
+    // Mutation latency percentiles + the post-churn tail throughput.
+    let (mutations, adds, retires, mut_p50_us, mut_p99_us, post_churn_qps) =
+        match churn_out {
+            Some(mut c) if !c.latencies_ns.is_empty() => {
+                c.latencies_ns.sort_unstable();
+                let mpct = |q: f64| -> f64 {
+                    c.latencies_ns
+                        [((c.latencies_ns.len() - 1) as f64 * q).round() as usize]
+                        as f64
+                        / 1000.0
+                };
+                let tail_qps = match c.churn_done {
+                    Some((at, done_count)) => {
+                        let tail_secs =
+                            run_end.saturating_duration_since(at).as_secs_f64();
+                        let tail_reqs =
+                            requests.saturating_sub(done_count) as f64;
+                        if tail_secs > 0.0 { tail_reqs / tail_secs } else { 0.0 }
+                    }
+                    None => 0.0,
+                };
+                (
+                    c.latencies_ns.len() as u64,
+                    c.adds,
+                    c.retires,
+                    mpct(0.50),
+                    mpct(0.99),
+                    tail_qps,
+                )
+            }
+            _ => (0, 0, 0, 0.0, 0.0, 0.0),
+        };
     Ok(LoadReport {
         sampler: name,
         transport: spec.transport.name().to_string(),
@@ -537,7 +880,16 @@ pub fn run_closed_loop(
         epochs: server.epoch(),
         swap_stalls: server.swap_stalls(),
         frame_encode_us,
+        frame_encode_fresh_us,
         frame_decode_us,
+        churn: spec.churn.map(|c| c.label()).unwrap_or_default(),
+        mutations,
+        classes_added: adds,
+        classes_retired: retires,
+        mut_p50_us,
+        mut_p99_us,
+        post_churn_qps,
+        live_final,
     })
 }
 
@@ -575,6 +927,7 @@ mod tests {
                 swap_pause: Duration::from_micros(50),
                 transport: TransportMode::Inproc,
                 mix: RequestMix::default(),
+                churn: None,
             },
         )
         .unwrap();
@@ -617,6 +970,7 @@ mod tests {
                 swap_pause: Duration::from_micros(50),
                 transport: TransportMode::Uds,
                 mix: RequestMix { sample: 2, prob: 1, topk: 1 },
+                churn: None,
             },
         )
         .unwrap();
@@ -642,5 +996,76 @@ mod tests {
         assert!(RequestMix::parse("a:b:c").is_err());
         assert!(TransportMode::parse("uds").is_ok());
         assert!(TransportMode::parse("tcp").is_err());
+    }
+
+    #[test]
+    fn churn_spec_parses_and_rejects() {
+        let c = ChurnSpec::parse("3:1").unwrap();
+        assert_eq!((c.adds, c.retires, c.ops), (3, 1, 200));
+        let c = ChurnSpec::parse("2:2:50").unwrap();
+        assert_eq!((c.adds, c.retires, c.ops), (2, 2, 50));
+        assert_eq!(c.label(), "2:2:50");
+        assert!(ChurnSpec::parse("0:0").is_err());
+        assert!(ChurnSpec::parse("1").is_err());
+        assert!(ChurnSpec::parse("a:b").is_err());
+    }
+
+    #[test]
+    fn closed_loop_with_churn_reports_mutation_stats() {
+        for transport in [TransportMode::Inproc, TransportMode::Uds] {
+            let d = 8;
+            let sampler = test_sampler(d);
+            let report = run_closed_loop(
+                &sampler,
+                &LoadSpec {
+                    readers: 2,
+                    requests_per_reader: 80,
+                    m: 5,
+                    top_k: 4,
+                    dim: d,
+                    seed: 21,
+                    batcher: BatcherOptions {
+                        max_batch: 8,
+                        max_wait: Duration::from_micros(100),
+                    },
+                    updates_per_swap: 4,
+                    swap_pause: Duration::from_micros(50),
+                    transport,
+                    mix: RequestMix { sample: 2, prob: 1, topk: 1 },
+                    churn: Some(ChurnSpec {
+                        adds: 2,
+                        retires: 1,
+                        ops: 10,
+                        batch: 4,
+                    }),
+                },
+            )
+            .unwrap();
+            assert_eq!(report.requests, 160, "{transport:?}");
+            assert_eq!(report.mutations, 10, "{transport:?}");
+            assert_eq!(
+                report.classes_added + report.classes_retired,
+                40,
+                "{transport:?}"
+            );
+            assert!(report.mut_p99_us >= report.mut_p50_us);
+            assert!(report.mut_p50_us > 0.0, "{transport:?}");
+            assert_eq!(report.churn, "2:1:10");
+            // 64 initial classes ± net churn.
+            assert_eq!(
+                report.live_final,
+                64 + report.classes_added - report.classes_retired,
+                "{transport:?}"
+            );
+            let j = report.to_json();
+            assert!(j.at(&["mut_p99_us"]).is_some());
+            assert!(j.at(&["post_churn_qps"]).is_some());
+            if transport == TransportMode::Uds {
+                assert!(
+                    report.frame_encode_fresh_us >= 0.0
+                        && report.frame_encode_us > 0.0
+                );
+            }
+        }
     }
 }

@@ -45,7 +45,8 @@ mod service;
 
 pub use batcher::{BatcherOptions, MicroBatcher, QueryReply, ServeReply};
 pub use loadgen::{
-    run_closed_loop, LoadReport, LoadSpec, RequestMix, TransportMode,
+    run_closed_loop, ChurnSpec, LoadReport, LoadSpec, RequestMix,
+    SharedWriterAdmin, TransportMode,
 };
 pub use server::{SamplerServer, SamplerSnapshot, SamplerWriter};
 pub use service::{DoubleBufferedSampler, ServingStats};

@@ -36,9 +36,19 @@
 
 use crate::linalg::Matrix;
 use crate::rng::Rng;
-use crate::sampler::{NegativeDraw, Sampler, ServeSampler};
+use crate::sampler::{NegativeDraw, Sampler, ServeSampler, VocabError};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// One staged shadow mutation, kept (by value — no copies) in the replay
+/// log so the retired snapshot can catch up after recycling. Structural
+/// ops replay in order with the embedding updates, so a recycled shadow
+/// converges to the exact same universe the published snapshot has.
+enum StagedOp {
+    Update { ids: Vec<u32>, embeddings: Matrix },
+    Add { embeddings: Matrix },
+    Retire { ids: Vec<u32> },
+}
 
 /// How many yield rounds the writer spends waiting for stragglers to drop
 /// a retired snapshot before falling back to an O(nD) fork.
@@ -170,9 +180,9 @@ pub struct SamplerWriter {
     /// Writer-private state; `None` while a retired snapshot is pending
     /// reclamation (see [`SamplerWriter::reclaim_shadow`]).
     shadow: Option<Box<dyn ServeSampler>>,
-    /// Update batches applied to the shadow since the last publish —
-    /// replayed onto the recycled snapshot so it catches up in O(k·D log n).
-    replay: Vec<(Vec<u32>, Matrix)>,
+    /// Mutations applied to the shadow since the last publish — replayed
+    /// onto the recycled snapshot so it catches up in O(k·D log n).
+    replay: Vec<StagedOp>,
     /// `(retired, current)` snapshot pair from the last publish, awaiting
     /// reclamation into the next shadow. Deferred so a caller blocking on
     /// `publish`'s return (the trainer's step boundary) never waits
@@ -197,7 +207,40 @@ impl SamplerWriter {
         self.reclaim_shadow();
         let shadow = self.shadow.as_mut().expect("apply_updates: no shadow");
         shadow.update_classes(&classes, &embeddings);
-        self.replay.push((classes, embeddings));
+        self.replay.push(StagedOp::Update { ids: classes, embeddings });
+    }
+
+    /// Stage a **structural** mutation: append `embeddings.rows()` new
+    /// classes to the shadow's universe, returning their assigned ids.
+    /// Readers keep serving the published snapshot — they can never
+    /// observe a half-grown tree; the grown universe becomes visible
+    /// atomically at the next [`SamplerWriter::publish`] (an
+    /// epoch-versioned swap, like every other change). Id assignment is
+    /// deterministic in the sampler's slot count, so the replay catch-up
+    /// on the recycled snapshot reproduces identical ids.
+    pub fn apply_add_classes(
+        &mut self,
+        embeddings: Matrix,
+    ) -> Result<Vec<u32>, VocabError> {
+        self.reclaim_shadow();
+        let shadow = self.shadow.as_mut().expect("apply_add_classes: no shadow");
+        let ids = shadow.add_classes(&embeddings)?;
+        self.replay.push(StagedOp::Add { embeddings });
+        Ok(ids)
+    }
+
+    /// Stage a structural retire of live classes on the shadow; the
+    /// holes become visible at the next publish, as one epoch swap.
+    pub fn apply_retire_classes(
+        &mut self,
+        ids: Vec<u32>,
+    ) -> Result<(), VocabError> {
+        self.reclaim_shadow();
+        let shadow =
+            self.shadow.as_mut().expect("apply_retire_classes: no shadow");
+        shadow.retire_classes(&ids)?;
+        self.replay.push(StagedOp::Retire { ids });
+        Ok(())
     }
 
     /// Publish the shadow as the new snapshot: two momentary `Arc` stores
@@ -258,9 +301,25 @@ impl SamplerWriter {
         }
         match reclaimed {
             Some(mut sampler) => {
-                // One publish behind: replay that cycle's updates.
-                for (ids, emb) in self.replay.drain(..) {
-                    sampler.update_classes(&ids, &emb);
+                // One publish behind: replay that cycle's mutations in
+                // order (structural ops included — add ids re-assign
+                // deterministically from the slot count).
+                for op in self.replay.drain(..) {
+                    match op {
+                        StagedOp::Update { ids, embeddings } => {
+                            sampler.update_classes(&ids, &embeddings);
+                        }
+                        StagedOp::Add { embeddings } => {
+                            sampler
+                                .add_classes(&embeddings)
+                                .expect("replay: add_classes diverged");
+                        }
+                        StagedOp::Retire { ids } => {
+                            sampler
+                                .retire_classes(&ids)
+                                .expect("replay: retire_classes diverged");
+                        }
+                    }
                 }
                 self.shadow = Some(sampler);
             }
@@ -407,6 +466,68 @@ mod tests {
                 "class {i}: served {a} vs reference {b}"
             );
         }
+    }
+
+    #[test]
+    fn structural_mutations_swap_atomically_and_replay_correctly() {
+        let n = 24;
+        let d = 5;
+        let (_, sampler) = servable(n, d, 440);
+        let (server, mut writer) = SamplerServer::new(sampler);
+        let mut rng = Rng::seeded(441);
+        let h = unit_vector(&mut rng, d);
+
+        // Pin the pre-mutation snapshot.
+        let pinned_before = server.snapshot();
+        assert_eq!(pinned_before.sampler().num_classes(), n);
+
+        // Stage an add + a retire; invisible until publish.
+        let mut emb = Matrix::zeros(2, d);
+        for r in 0..2 {
+            let v = unit_vector(&mut rng, d);
+            emb.row_mut(r).copy_from_slice(&v);
+        }
+        let ids = writer.apply_add_classes(emb).unwrap();
+        assert_eq!(ids, vec![n as u32, n as u32 + 1]);
+        writer.apply_retire_classes(vec![3]).unwrap();
+        assert_eq!(server.snapshot().sampler().num_classes(), n);
+        assert!(server.snapshot().sampler().probability(&h, 3) > 0.0);
+
+        // Publish: the grown universe appears in ONE epoch step.
+        writer.publish();
+        drop(pinned_before);
+        let snap = server.snapshot();
+        assert_eq!(snap.epoch(), 1);
+        assert_eq!(snap.sampler().num_classes(), n + 2);
+        assert_eq!(snap.sampler().live_classes(), n + 1);
+        assert_eq!(snap.sampler().probability(&h, 3), 0.0);
+        assert!(snap.sampler().probability(&h, n) > 0.0);
+        let total: f64 = (0..n + 2)
+            .map(|i| snap.sampler().probability(&h, i))
+            .sum();
+        assert!((total - 1.0).abs() < 1e-6, "Σq = {total}");
+
+        // A second cycle exercises the recycled-shadow structural
+        // replay (the retired snapshot must catch up through Add/Retire
+        // ops, not just updates).
+        let mut emb2 = Matrix::zeros(1, d);
+        let v = unit_vector(&mut rng, d);
+        emb2.row_mut(0).copy_from_slice(&v);
+        drop(snap); // release the pin so the shadow can be recycled
+        let ids2 = writer.apply_add_classes(emb2).unwrap();
+        assert_eq!(ids2, vec![n as u32 + 2]);
+        writer.publish();
+        writer.reclaim_shadow();
+        let mut emb3 = Matrix::zeros(1, d);
+        emb3.row_mut(0).copy_from_slice(&h);
+        // Updating the newest class on the recycled shadow only works if
+        // the replay grew it to n+3 slots.
+        writer.apply_updates(vec![n as u32 + 2], emb3);
+        writer.publish();
+        let snap = server.snapshot();
+        assert_eq!(snap.epoch(), 3);
+        assert_eq!(snap.sampler().num_classes(), n + 3);
+        assert_eq!(server.swap_stalls(), 0, "no pins → structural recycle");
     }
 
     #[test]

@@ -19,6 +19,19 @@ use std::time::Instant;
 
 enum WriterMsg {
     Stage { ids: Vec<u32>, embeddings: Matrix },
+    /// Structural grow: applied to the shadow, acked with the assigned
+    /// ids (the caller usually needs them to size its own tables before
+    /// the next step).
+    Extend {
+        embeddings: Matrix,
+        ack: mpsc::SyncSender<Result<Vec<u32>, String>>,
+    },
+    /// Structural shrink: applied to the shadow, acked so validation
+    /// errors surface to the caller instead of killing the writer.
+    Retire {
+        ids: Vec<u32>,
+        ack: mpsc::SyncSender<Result<(), String>>,
+    },
     Publish { ack: mpsc::SyncSender<u64> },
 }
 
@@ -100,6 +113,37 @@ impl DoubleBufferedSampler {
         self.dirty = true;
     }
 
+    /// Grow the served class universe: row `k` of `embeddings` becomes a
+    /// new class. Applied to the shadow (blocking briefly for the
+    /// assigned ids — vocabulary growth is rare and callers need the ids
+    /// to size their own tables); visible to draws after the next
+    /// [`DoubleBufferedSampler::sync`] as one epoch swap, so no reader
+    /// ever observes a half-grown tree.
+    pub fn extend_vocab(
+        &mut self,
+        embeddings: Matrix,
+    ) -> Result<Vec<u32>, String> {
+        let (ack_tx, ack_rx) = mpsc::sync_channel(1);
+        self.sender()
+            .send(WriterMsg::Extend { embeddings, ack: ack_tx })
+            .expect("serving writer died");
+        let ids = ack_rx.recv().expect("serving writer died")?;
+        self.dirty = true;
+        Ok(ids)
+    }
+
+    /// Retire live classes from the served universe (permanent holes);
+    /// visible at the next [`DoubleBufferedSampler::sync`].
+    pub fn retire_classes(&mut self, ids: Vec<u32>) -> Result<(), String> {
+        let (ack_tx, ack_rx) = mpsc::sync_channel(1);
+        self.sender()
+            .send(WriterMsg::Retire { ids, ack: ack_tx })
+            .expect("serving writer died");
+        ack_rx.recv().expect("serving writer died")?;
+        self.dirty = true;
+        Ok(())
+    }
+
     /// Step boundary: if updates were staged since the last publish, wait
     /// for the writer to finish applying them, swap the snapshot in, and
     /// re-pin — so the next draw can never read a stale epoch. Returns
@@ -165,6 +209,18 @@ fn writer_loop(mut writer: SamplerWriter, rx: &mpsc::Receiver<WriterMsg>) {
             WriterMsg::Stage { ids, embeddings } => {
                 writer.apply_updates(ids, embeddings);
             }
+            WriterMsg::Extend { embeddings, ack } => {
+                let res = writer
+                    .apply_add_classes(embeddings)
+                    .map_err(|e| e.to_string());
+                let _ = ack.send(res);
+            }
+            WriterMsg::Retire { ids, ack } => {
+                let res = writer
+                    .apply_retire_classes(ids)
+                    .map_err(|e| e.to_string());
+                let _ = ack.send(res);
+            }
             WriterMsg::Publish { ack } => {
                 let epoch = writer.publish();
                 let _ = ack.send(epoch);
@@ -226,6 +282,45 @@ mod tests {
         let stats = served.stats();
         assert_eq!(stats.publishes, 6);
         assert_eq!(stats.epoch, 6);
+    }
+
+    #[test]
+    fn extend_and_retire_land_at_the_next_sync() {
+        let n = 32;
+        let d = 6;
+        let reference = sharded(n, d, 620);
+        let mut served = DoubleBufferedSampler::new(&reference).unwrap();
+        let mut rng = Rng::seeded(621);
+        let h = unit_vector(&mut rng, d);
+
+        let mut emb = Matrix::zeros(2, d);
+        for r in 0..2 {
+            let v = unit_vector(&mut rng, d);
+            emb.row_mut(r).copy_from_slice(&v);
+        }
+        let ids = served.extend_vocab(emb).unwrap();
+        assert_eq!(ids, vec![n as u32, n as u32 + 1]);
+        served.retire_classes(vec![5]).unwrap();
+        // Not yet visible on the pinned snapshot...
+        assert_eq!(served.sampler().num_classes(), n);
+        assert!(served.sampler().probability(&h, 5) > 0.0);
+        // ...but exactly one sync later it all lands in one epoch.
+        assert_eq!(served.sync(), 1);
+        assert_eq!(served.sampler().num_classes(), n + 2);
+        assert_eq!(served.sampler().live_classes(), n + 1);
+        assert_eq!(served.sampler().probability(&h, 5), 0.0);
+        let total: f64 = (0..n + 2)
+            .map(|i| served.sampler().probability(&h, i))
+            .sum();
+        assert!((total - 1.0).abs() < 1e-6, "Σq = {total}");
+        // Validation errors surface as Err, and the writer survives.
+        assert!(served.retire_classes(vec![5]).is_err(), "double retire");
+        assert!(served.retire_classes(vec![9999]).is_err(), "out of range");
+        served.stage_updates(
+            vec![ids[0]],
+            Matrix::from_vec(1, d, h.clone()),
+        );
+        assert_eq!(served.sync(), 2, "writer alive after rejected mutations");
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! closed-loop client).
 
 use super::wire::{self, ProtocolError, Request, Response};
+use crate::linalg::Matrix;
 use crate::sampler::NegativeDraw;
 use crate::serving::ServeReply;
 use std::io::{BufReader, BufWriter, Write};
@@ -23,6 +24,9 @@ pub struct TransportClient {
     reader: BufReader<UnixStream>,
     writer: BufWriter<UnixStream>,
     next_id: u64,
+    /// Reused encode buffer (zero-copy frame path: one allocation serves
+    /// every request this client ever sends).
+    encode_buf: Vec<u8>,
 }
 
 impl TransportClient {
@@ -31,11 +35,18 @@ impl TransportClient {
         let stream = UnixStream::connect(path)?;
         let reader = BufReader::new(stream.try_clone()?);
         let writer = BufWriter::new(stream);
-        Ok(TransportClient { reader, writer, next_id: 1 })
+        Ok(TransportClient {
+            reader,
+            writer,
+            next_id: 1,
+            encode_buf: Vec::with_capacity(4 * 1024),
+        })
     }
 
     fn send(&mut self, id: u64, req: &Request) -> Result<(), ProtocolError> {
-        wire::write_request(&mut self.writer, id, req)?;
+        self.encode_buf.clear();
+        wire::encode_request(&mut self.encode_buf, id, req);
+        self.writer.write_all(&self.encode_buf)?;
         self.writer.flush()?;
         Ok(())
     }
@@ -111,32 +122,97 @@ impl TransportClient {
         }
     }
 
-    /// Pipelined wave: write every request back-to-back (one flush), then
-    /// read responses until each request has its answer. Returns
-    /// responses in *request order* regardless of the order the server
-    /// answered in; per-request failures appear as
+    /// Grow the served class universe: row `k` of `embeddings` becomes a
+    /// new class (admin frame; the server must have been bound with a
+    /// [`super::VocabAdmin`] hook). Returns the assigned ids and the
+    /// epoch of the snapshot swap that made them visible.
+    pub fn add_classes(
+        &mut self,
+        embeddings: &Matrix,
+    ) -> Result<(Vec<u32>, u64), ProtocolError> {
+        let req = Request::AddClasses {
+            dim: embeddings.cols() as u32,
+            embeddings: embeddings.data().to_vec(),
+        };
+        match self.call(&req)? {
+            Response::AddClasses { epoch, ids } => Ok((ids, epoch)),
+            _ => Err(ProtocolError::Malformed("response kind mismatch")),
+        }
+    }
+
+    /// Retire live classes from the served universe (admin frame);
+    /// returns the epoch of the swap that exposed the holes.
+    pub fn retire_classes(
+        &mut self,
+        ids: &[u32],
+    ) -> Result<u64, ProtocolError> {
+        let req = Request::RetireClasses { ids: ids.to_vec() };
+        match self.call(&req)? {
+            Response::RetireClasses { epoch, .. } => Ok(epoch),
+            _ => Err(ProtocolError::Malformed("response kind mismatch")),
+        }
+    }
+
+    /// Pipelined wave with a **sliding window**: keep up to
+    /// `PIPELINE_WINDOW` requests in flight, topping the window up in
+    /// buffered chunks and reading responses as they stream back.
+    /// Windowing is what makes arbitrarily large waves safe: a client
+    /// that blind-writes a whole wave before reading can deadlock
+    /// against the server's flow control once both socket buffers fill
+    /// (server reader throttled at its outstanding-reply ceiling, server
+    /// writer blocked on an unread socket). The window also stays below
+    /// the server's per-connection in-flight cap, so a well-behaved
+    /// client is never shed.
+    ///
+    /// Returns responses in *request order* regardless of the order the
+    /// server answered in; per-request failures — serve rejections and
+    /// [`wire::ERR_OVERLOAD`] backpressure sheds — appear as
     /// [`Response::Error`] entries rather than failing the wave.
     pub fn pipeline(
         &mut self,
         requests: &[Request],
     ) -> Result<Vec<Response>, ProtocolError> {
+        /// Max requests awaiting replies — half the server's shed cap,
+        /// so coalescing stays deep while overload shedding never
+        /// engages for this client.
+        const PIPELINE_WINDOW: usize = super::server::MAX_IN_FLIGHT / 2;
+
         if requests.is_empty() {
             return Ok(Vec::new());
         }
         let base = self.next_id;
         self.next_id += requests.len() as u64;
-        for (i, req) in requests.iter().enumerate() {
-            wire::write_request(&mut self.writer, base + i as u64, req)?;
-        }
-        self.writer.flush()?;
         let mut out: Vec<Option<Response>> = vec![None; requests.len()];
-        let mut pending = requests.len();
-        while pending > 0 {
+        let mut sent = 0usize;
+        let mut received = 0usize;
+        while received < requests.len() {
+            // Top the window up in one buffered write whenever it drops
+            // to half depth (amortizes write syscalls without ever
+            // letting the in-flight count exceed the window).
+            let in_flight = sent - received;
+            if sent < requests.len() && in_flight <= PIPELINE_WINDOW / 2 {
+                let until =
+                    requests.len().min(received + PIPELINE_WINDOW);
+                self.encode_buf.clear();
+                for (i, req) in
+                    requests.iter().enumerate().take(until).skip(sent)
+                {
+                    wire::encode_request(
+                        &mut self.encode_buf,
+                        base + i as u64,
+                        req,
+                    );
+                }
+                self.writer.write_all(&self.encode_buf)?;
+                self.writer.flush()?;
+                sent = until;
+            }
             let (id, resp) = self.recv()?;
             if let Response::Error { code, message } = &resp {
                 // Connection-level errors (id 0 / protocol code) fail
-                // the whole wave; request-level errors fill their slot.
-                if *code != wire::ERR_SERVE {
+                // the whole wave; request-level errors (serve failures,
+                // overload sheds) fill their slot.
+                if !matches!(*code, wire::ERR_SERVE | wire::ERR_OVERLOAD) {
                     return Err(ProtocolError::Remote {
                         code: *code,
                         message: message.clone(),
@@ -151,7 +227,7 @@ impl TransportClient {
             if out[slot].replace(resp).is_some() {
                 return Err(ProtocolError::Malformed("duplicate response id"));
             }
-            pending -= 1;
+            received += 1;
         }
         Ok(out.into_iter().map(|r| r.expect("filled above")).collect())
     }

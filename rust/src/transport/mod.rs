@@ -34,5 +34,5 @@ mod client;
 mod server;
 
 pub use client::TransportClient;
-pub use server::{TransportServer, TransportStats};
+pub use server::{TransportServer, TransportStats, VocabAdmin, MAX_IN_FLIGHT};
 pub use wire::{ProtocolError, Request, Response};

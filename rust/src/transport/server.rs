@@ -12,14 +12,70 @@
 //! — the batcher and every other connection keep serving. Serve-level
 //! failures (a query the sampler rejects) answer with an `Error` frame
 //! carrying [`wire::ERR_SERVE`] and the connection stays open.
+//!
+//! **Backpressure** (per connection): at most [`MAX_IN_FLIGHT`] requests
+//! may be awaiting replies — requests beyond the cap are *shed* with a
+//! typed [`wire::ERR_OVERLOAD`] frame instead of being submitted, and
+//! past a hard outstanding-reply ceiling the reader simply stops reading
+//! the socket (classic flow control), so one slow pipelined client can
+//! never balloon server memory. The batcher's reply callbacks never
+//! block: pending batcher replies are bounded by the in-flight cap, and
+//! overload/error frames by the reader throttle.
+//!
+//! **Admin frames**: `ADD_CLASSES`/`RETIRE_CLASSES` route to an optional
+//! [`VocabAdmin`] hook (see [`TransportServer::bind_with_admin`]) that
+//! applies the mutation through the sampler writer as one epoch-versioned
+//! snapshot swap; without a hook they answer [`wire::ERR_SERVE`].
 
 use super::wire::{self, ProtocolError, Response};
 use crate::serving::{MicroBatcher, QueryReply};
-use std::io::{BufReader, BufWriter, Write};
+use std::io::{BufReader, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+
+/// Per-connection cap on requests submitted to the batcher and awaiting
+/// replies; beyond it requests are shed with [`wire::ERR_OVERLOAD`].
+pub const MAX_IN_FLIGHT: usize = 1024;
+
+/// Hard per-connection ceiling on outstanding reply frames of any kind
+/// (served replies + shed errors). At the ceiling the reader stops
+/// reading until the writer drains — socket-level flow control.
+const MAX_OUTSTANDING: usize = 2 * MAX_IN_FLIGHT;
+
+/// Reader park interval while throttled at [`MAX_OUTSTANDING`].
+const THROTTLE_POLL: std::time::Duration = std::time::Duration::from_micros(50);
+
+/// Upper bound on one continuous throttle park. The throttle exists to
+/// bound memory against a peer that writes without reading; it must not
+/// become a live-lock if the connection writer dies mid-backlog (its
+/// `outstanding` decrements stop forever). After this grace the reader
+/// proceeds to the next read regardless: on a dead socket that read
+/// errors out and the handler exits, and on a merely-slow peer the
+/// overshoot is bounded to one frame per grace period.
+const THROTTLE_GRACE: std::time::Duration = std::time::Duration::from_secs(2);
+
+/// Hook that applies admin (class-universe) mutations. Implemented over
+/// the serving layer's `SamplerWriter` (see
+/// `crate::serving::run_closed_loop`): apply to the shadow, publish one
+/// epoch-versioned swap, return the epoch — readers can never observe a
+/// half-grown tree. Implementations own the ingestion contract for raw
+/// wire embeddings — normalize rows if the served sampler assumes the
+/// normalized-embedding regime (the in-crate impl does).
+pub trait VocabAdmin: Send + Sync {
+    /// Append `rows` classes (row-major `data`, width `dim`); returns
+    /// the assigned ids and the publish epoch.
+    fn add_classes(
+        &self,
+        dim: usize,
+        rows: usize,
+        data: Vec<f32>,
+    ) -> Result<(Vec<u32>, u64), String>;
+
+    /// Retire live classes; returns the publish epoch.
+    fn retire_classes(&self, ids: &[u32]) -> Result<u64, String>;
+}
 
 /// Transport-level counters (for tests and ops visibility).
 #[derive(Clone, Copy, Debug, Default)]
@@ -30,14 +86,22 @@ pub struct TransportStats {
     pub requests: u64,
     /// Framing violations that closed a connection.
     pub protocol_errors: u64,
+    /// Admin (add/retire) frames applied.
+    pub admin_requests: u64,
+    /// Requests shed with [`wire::ERR_OVERLOAD`] (per-connection
+    /// in-flight cap exceeded).
+    pub overloads: u64,
 }
 
 struct Shared {
     batcher: Arc<MicroBatcher>,
+    admin: Option<Arc<dyn VocabAdmin>>,
     shutdown: AtomicBool,
     connections: AtomicU64,
     requests: AtomicU64,
     protocol_errors: AtomicU64,
+    admin_requests: AtomicU64,
+    overloads: AtomicU64,
     /// Clones of *live* connection streams keyed by connection id, so
     /// shutdown can unblock their reader threads with a socket-level
     /// `shutdown(2)`. Handlers deregister themselves on exit, so this
@@ -73,6 +137,24 @@ impl TransportServer {
         path: impl AsRef<Path>,
         batcher: Arc<MicroBatcher>,
     ) -> std::io::Result<TransportServer> {
+        Self::bind_inner(path, batcher, None)
+    }
+
+    /// [`TransportServer::bind`] plus a [`VocabAdmin`] hook, enabling the
+    /// `ADD_CLASSES`/`RETIRE_CLASSES` admin frames on every connection.
+    pub fn bind_with_admin(
+        path: impl AsRef<Path>,
+        batcher: Arc<MicroBatcher>,
+        admin: Arc<dyn VocabAdmin>,
+    ) -> std::io::Result<TransportServer> {
+        Self::bind_inner(path, batcher, Some(admin))
+    }
+
+    fn bind_inner(
+        path: impl AsRef<Path>,
+        batcher: Arc<MicroBatcher>,
+        admin: Option<Arc<dyn VocabAdmin>>,
+    ) -> std::io::Result<TransportServer> {
         let path = path.as_ref().to_path_buf();
         let _ = std::fs::remove_file(&path);
         let listener = UnixListener::bind(&path)?;
@@ -83,10 +165,13 @@ impl TransportServer {
         listener.set_nonblocking(true)?;
         let shared = Arc::new(Shared {
             batcher,
+            admin,
             shutdown: AtomicBool::new(false),
             connections: AtomicU64::new(0),
             requests: AtomicU64::new(0),
             protocol_errors: AtomicU64::new(0),
+            admin_requests: AtomicU64::new(0),
+            overloads: AtomicU64::new(0),
             streams: Mutex::new(Vec::new()),
             handlers: Mutex::new(Vec::new()),
         });
@@ -110,6 +195,8 @@ impl TransportServer {
             connections: self.shared.connections.load(Ordering::Relaxed),
             requests: self.shared.requests.load(Ordering::Relaxed),
             protocol_errors: self.shared.protocol_errors.load(Ordering::Relaxed),
+            admin_requests: self.shared.admin_requests.load(Ordering::Relaxed),
+            overloads: self.shared.overloads.load(Ordering::Relaxed),
         }
     }
 }
@@ -228,23 +315,92 @@ fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: UnixStream) {
         Err(_) => return,
     };
     let (tx, rx) = mpsc::channel::<(u64, Response)>();
-    let writer = std::thread::Builder::new()
-        .name("rfsm-transport-write".into())
-        .spawn(move || writer_loop(writer_stream, &rx));
+    // Replies of any kind awaiting the writer (served + error frames):
+    // incremented by the reader per answered request, decremented by the
+    // writer per frame written. Bounds this connection's queued memory.
+    let outstanding = Arc::new(AtomicUsize::new(0));
+    // Subset submitted to the batcher and not yet answered — the soft
+    // cap that sheds with ERR_OVERLOAD.
+    let in_flight = Arc::new(AtomicUsize::new(0));
+    let writer = {
+        let outstanding = Arc::clone(&outstanding);
+        std::thread::Builder::new()
+            .name("rfsm-transport-write".into())
+            .spawn(move || writer_loop(writer_stream, &rx, &outstanding))
+    };
     let mut reader = BufReader::new(stream);
     loop {
+        // Hard flow control: past the outstanding-reply ceiling, stop
+        // reading the socket (up to THROTTLE_GRACE) until the writer
+        // drains — the kernel's socket buffers then stall the over-eager
+        // peer, and server memory stays bounded no matter how hard it
+        // pipelines. The grace bound keeps a dead writer (peer crashed
+        // mid-backlog) from parking this thread forever: the next read
+        // observes the dead socket and exits.
+        let mut throttled = std::time::Duration::ZERO;
+        while outstanding.load(Ordering::Acquire) >= MAX_OUTSTANDING
+            && !shared.shutdown.load(Ordering::Relaxed)
+            && throttled < THROTTLE_GRACE
+        {
+            std::thread::sleep(THROTTLE_POLL);
+            throttled += THROTTLE_POLL;
+        }
         match wire::read_request(&mut reader) {
             Ok(None) => break, // clean EOF
+            Ok(Some((id, request))) if request.is_admin() => {
+                shared.admin_requests.fetch_add(1, Ordering::Relaxed);
+                outstanding.fetch_add(1, Ordering::AcqRel);
+                let resp = match &shared.admin {
+                    None => Response::Error {
+                        code: wire::ERR_SERVE,
+                        message: "admin frames not enabled on this server"
+                            .into(),
+                    },
+                    Some(admin) => apply_admin(admin.as_ref(), request),
+                };
+                if tx.send((id, resp)).is_err() {
+                    break;
+                }
+            }
             Ok(Some((id, request))) => {
                 shared.requests.fetch_add(1, Ordering::Relaxed);
+                if in_flight.load(Ordering::Acquire) >= MAX_IN_FLIGHT {
+                    // Shed: typed overload error, request never reaches
+                    // the batcher. The connection stays usable.
+                    shared.overloads.fetch_add(1, Ordering::Relaxed);
+                    outstanding.fetch_add(1, Ordering::AcqRel);
+                    if tx
+                        .send((
+                            id,
+                            Response::Error {
+                                code: wire::ERR_OVERLOAD,
+                                message: format!(
+                                    "connection exceeded {MAX_IN_FLIGHT} \
+                                     in-flight requests"
+                                ),
+                            },
+                        ))
+                        .is_err()
+                    {
+                        break;
+                    }
+                    continue;
+                }
                 let (h, query) = request.into_query();
                 let reply_tx = tx.clone();
+                outstanding.fetch_add(1, Ordering::AcqRel);
+                in_flight.fetch_add(1, Ordering::AcqRel);
+                let in_flight_cb = Arc::clone(&in_flight);
                 let accepted = shared.batcher.submit(h, query, move |res| {
+                    in_flight_cb.fetch_sub(1, Ordering::AcqRel);
                     // A closed connection drops the receiver; that is the
                     // client's problem, not the batcher's.
                     let _ = reply_tx.send((id, reply_to_response(res)));
                 });
                 if !accepted {
+                    // The callback was dropped unserved: undo its
+                    // accounting and answer shutdown ourselves.
+                    in_flight.fetch_sub(1, Ordering::AcqRel);
                     let _ = tx.send((
                         id,
                         Response::Error {
@@ -266,6 +422,7 @@ fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: UnixStream) {
                 // may already be gone, then close. The batcher never saw
                 // the bytes, so it cannot be poisoned.
                 shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                outstanding.fetch_add(1, Ordering::AcqRel);
                 let _ = tx.send((
                     0,
                     Response::Error {
@@ -285,27 +442,73 @@ fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: UnixStream) {
     }
 }
 
-fn writer_loop(stream: UnixStream, rx: &mpsc::Receiver<(u64, Response)>) {
-    let mut w = BufWriter::new(stream);
-    'outer: loop {
-        let mut item = match rx.recv() {
+fn apply_admin(admin: &dyn VocabAdmin, request: wire::Request) -> Response {
+    match request {
+        wire::Request::AddClasses { dim, embeddings } => {
+            let dim = dim as usize;
+            if dim == 0 || embeddings.len() % dim != 0 {
+                return Response::Error {
+                    code: wire::ERR_SERVE,
+                    message: "AddClasses: data is not rows×dim".into(),
+                };
+            }
+            let rows = embeddings.len() / dim;
+            match admin.add_classes(dim, rows, embeddings) {
+                Ok((ids, epoch)) => Response::AddClasses { epoch, ids },
+                Err(message) => {
+                    Response::Error { code: wire::ERR_SERVE, message }
+                }
+            }
+        }
+        wire::Request::RetireClasses { ids } => {
+            let count = ids.len() as u32;
+            match admin.retire_classes(&ids) {
+                Ok(epoch) => Response::RetireClasses { epoch, count },
+                Err(message) => {
+                    Response::Error { code: wire::ERR_SERVE, message }
+                }
+            }
+        }
+        _ => unreachable!("apply_admin: non-admin frame"),
+    }
+}
+
+fn writer_loop(
+    mut stream: UnixStream,
+    rx: &mpsc::Receiver<(u64, Response)>,
+    outstanding: &AtomicUsize,
+) {
+    // Zero-copy frame encode: every response of a drain wave is encoded
+    // into this one reused buffer (header first, length backfilled) and
+    // written with a single write_all — no per-frame Vec, no BufWriter
+    // double copy. The buffer's capacity persists across waves, but is
+    // clamped back after an oversized wave so one burst of huge replies
+    // cannot pin its high-water allocation for the connection's
+    // lifetime (that would quietly undo the backpressure memory bound).
+    const BUF_KEEP: usize = 256 * 1024;
+    let mut buf: Vec<u8> = Vec::with_capacity(16 * 1024);
+    loop {
+        let first = match rx.recv() {
             Ok(x) => x,
             Err(_) => break,
         };
-        // Write everything currently queued, then flush once — batches
+        buf.clear();
+        let mut frames = 0usize;
+        wire::encode_response(&mut buf, first.0, &first.1);
+        frames += 1;
+        // Encode everything currently queued, then write once — batches
         // response frames the same way requests coalesce.
-        loop {
-            if wire::write_response(&mut w, item.0, &item.1).is_err() {
-                break 'outer;
-            }
-            match rx.try_recv() {
-                Ok(next) => item = next,
-                Err(_) => break,
-            }
+        while let Ok((id, resp)) = rx.try_recv() {
+            wire::encode_response(&mut buf, id, &resp);
+            frames += 1;
         }
-        if w.flush().is_err() {
+        let ok = stream.write_all(&buf).is_ok();
+        outstanding.fetch_sub(frames, Ordering::AcqRel);
+        if buf.capacity() > BUF_KEEP {
+            buf = Vec::with_capacity(BUF_KEEP);
+        }
+        if !ok || stream.flush().is_err() {
             break;
         }
     }
-    let _ = w.flush();
 }

@@ -17,26 +17,44 @@
 //! * `Sample` request: `u32 dim | f32×dim h | u32 m | u64 seed`
 //! * `Probability` request: `u32 dim | f32×dim h | u32 class`
 //! * `TopK` request: `u32 dim | f32×dim h | u32 k`
+//! * `AddClasses` admin request: `u32 rows | u32 dim | f32×rows·dim embeddings`
+//! * `RetireClasses` admin request: `u32 count | u32×count ids`
 //! * `Sample` response: `u64 epoch | u32 count | u32×count ids | f64×count probs`
 //! * `Probability` response: `u64 epoch | f64 q`
 //! * `TopK` response: `u64 epoch | u32 count | (u32 id, f64 q)×count`
+//! * `AddClasses` response: `u64 epoch | u32 count | u32×count assigned ids`
+//! * `RetireClasses` response: `u64 epoch | u32 retired-count`
 //! * `Error` response: `u8 code | u16 len | utf8×len message`
 //!
 //! Per-request seeds ride the wire inside `Sample` requests, so served
 //! draws are deterministic across process boundaries: the same (seed,
 //! query, epoch) yields byte-identical draws in-process and remotely.
 //!
+//! The `ADD_CLASSES`/`RETIRE_CLASSES` **admin frames** (wire version 2)
+//! drive the mutable class universe cross-process: the server applies
+//! them through the sampler writer as epoch-versioned snapshot swaps and
+//! echoes the new epoch, so a churn driver on one machine can grow the
+//! universe another machine is serving from.
+//!
 //! Framing violations decode to a typed [`ProtocolError`]; the server
 //! answers with one best-effort `Error` frame (code
 //! [`ERR_PROTOCOL`], request id 0) and closes the connection — a
 //! malformed peer can never poison the batcher or other connections.
+//!
+//! Encoders write straight into a caller-supplied buffer (header first,
+//! payload appended, length backfilled) — no per-frame payload `Vec` —
+//! so a connection writer can stream thousands of response frames per
+//! wave from one reused allocation (`frame_encode_us` vs
+//! `frame_encode_fresh_us` in `serve-bench` reports the delta).
 
 use crate::sampler::ServeQuery;
 use std::fmt;
 use std::io::{ErrorKind, Read, Write};
 
-/// Protocol version carried in every frame header.
-pub const WIRE_VERSION: u8 = 1;
+/// Protocol version carried in every frame header. v2 added the
+/// `ADD_CLASSES`/`RETIRE_CLASSES` admin frames and [`ERR_OVERLOAD`];
+/// v1 peers are refused with [`ProtocolError::UnknownVersion`].
+pub const WIRE_VERSION: u8 = 2;
 
 /// Frame magic (catches peers speaking a different protocol entirely).
 pub const MAGIC: [u8; 2] = *b"RF";
@@ -57,13 +75,21 @@ pub const ERR_PROTOCOL: u8 = 1;
 pub const ERR_SERVE: u8 = 2;
 /// Error-frame code: server is shutting down.
 pub const ERR_SHUTDOWN: u8 = 3;
+/// Error-frame code: this connection exceeded its in-flight request cap
+/// (backpressure); the request was **not** served. The connection stays
+/// usable — retry after draining pending replies.
+pub const ERR_OVERLOAD: u8 = 4;
 
 const KIND_REQ_SAMPLE: u8 = 0x01;
 const KIND_REQ_PROBABILITY: u8 = 0x02;
 const KIND_REQ_TOP_K: u8 = 0x03;
+const KIND_REQ_ADD_CLASSES: u8 = 0x10;
+const KIND_REQ_RETIRE_CLASSES: u8 = 0x11;
 const KIND_RESP_SAMPLE: u8 = 0x81;
 const KIND_RESP_PROBABILITY: u8 = 0x82;
 const KIND_RESP_TOP_K: u8 = 0x83;
+const KIND_RESP_ADD_CLASSES: u8 = 0x90;
+const KIND_RESP_RETIRE_CLASSES: u8 = 0x91;
 const KIND_RESP_ERROR: u8 = 0xFF;
 
 /// Typed transport failure. Framing variants are fatal for the
@@ -92,10 +118,15 @@ pub enum ProtocolError {
 }
 
 impl ProtocolError {
-    /// Whether the connection must be torn down after this error. Only a
-    /// `Remote` serve failure ([`ERR_SERVE`]) leaves the stream usable.
+    /// Whether the connection must be torn down after this error. Only
+    /// the per-request `Remote` failures — a serve rejection
+    /// ([`ERR_SERVE`]) or backpressure shedding ([`ERR_OVERLOAD`]) —
+    /// leave the stream usable.
     pub fn closes_connection(&self) -> bool {
-        !matches!(self, ProtocolError::Remote { code: ERR_SERVE, .. })
+        !matches!(
+            self,
+            ProtocolError::Remote { code: ERR_SERVE | ERR_OVERLOAD, .. }
+        )
     }
 }
 
@@ -139,17 +170,35 @@ impl From<std::io::Error> for ProtocolError {
     }
 }
 
-/// One decoded request: the query embedding plus what to do with it.
+/// One decoded request: a serve query, or an admin mutation of the
+/// served class universe.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Sample { h: Vec<f32>, m: u32, seed: u64 },
     Probability { h: Vec<f32>, class: u32 },
     TopK { h: Vec<f32>, k: u32 },
+    /// Admin: append `rows` new classes (row-major embeddings, width
+    /// `dim`); the response echoes the assigned ids and the epoch of the
+    /// snapshot swap that made them visible.
+    AddClasses { dim: u32, embeddings: Vec<f32> },
+    /// Admin: retire the given live classes.
+    RetireClasses { ids: Vec<u32> },
 }
 
 impl Request {
-    /// Split into the query embedding and the batcher-level
-    /// [`ServeQuery`] it maps to.
+    /// Whether this is an admin (universe-mutating) frame rather than a
+    /// serve query.
+    pub fn is_admin(&self) -> bool {
+        matches!(
+            self,
+            Request::AddClasses { .. } | Request::RetireClasses { .. }
+        )
+    }
+
+    /// Split a serve query into the embedding and the batcher-level
+    /// [`ServeQuery`] it maps to. Panics on admin frames (route those
+    /// through the server's admin hook instead — see
+    /// [`Request::is_admin`]).
     pub fn into_query(self) -> (Vec<f32>, ServeQuery) {
         match self {
             Request::Sample { h, m, seed } => {
@@ -159,6 +208,9 @@ impl Request {
                 (h, ServeQuery::Probability { class: class as usize })
             }
             Request::TopK { h, k } => (h, ServeQuery::TopK { k: k as usize }),
+            Request::AddClasses { .. } | Request::RetireClasses { .. } => {
+                panic!("into_query: admin frame is not a serve query")
+            }
         }
     }
 }
@@ -169,6 +221,12 @@ pub enum Response {
     Sample { epoch: u64, ids: Vec<u32>, probs: Vec<f64> },
     Probability { epoch: u64, q: f64 },
     TopK { epoch: u64, items: Vec<(u32, f64)> },
+    /// Admin ack: ids assigned to the appended classes, and the epoch at
+    /// which they became visible.
+    AddClasses { epoch: u64, ids: Vec<u32> },
+    /// Admin ack: how many classes were retired, and the epoch at which
+    /// the holes became visible.
+    RetireClasses { epoch: u64, count: u32 },
     Error { code: u8, message: String },
 }
 
@@ -176,14 +234,26 @@ pub enum Response {
 // Encoding
 // ---------------------------------------------------------------------------
 
-fn push_frame(out: &mut Vec<u8>, kind: u8, id: u64, payload: &[u8]) {
-    debug_assert!(payload.len() <= MAX_PAYLOAD);
+/// Append a frame header with a placeholder length; returns the offset
+/// of the length field so [`finish_frame`] can backfill it once the
+/// payload has been written in place — the zero-copy path: no per-frame
+/// payload `Vec`, the caller's (reusable) buffer is the only allocation.
+fn begin_frame(out: &mut Vec<u8>, kind: u8, id: u64) -> usize {
     out.extend_from_slice(&MAGIC);
     out.push(WIRE_VERSION);
     out.push(kind);
     out.extend_from_slice(&id.to_le_bytes());
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(payload);
+    let len_at = out.len();
+    out.extend_from_slice(&0u32.to_le_bytes());
+    len_at
+}
+
+/// Backfill the length field of the frame opened by [`begin_frame`].
+fn finish_frame(out: &mut Vec<u8>, len_at: usize) {
+    let payload_len = out.len() - (len_at + 4);
+    debug_assert!(payload_len <= MAX_PAYLOAD);
+    out[len_at..len_at + 4]
+        .copy_from_slice(&(payload_len as u32).to_le_bytes());
 }
 
 fn push_query(payload: &mut Vec<u8>, h: &[f32]) {
@@ -193,73 +263,113 @@ fn push_query(payload: &mut Vec<u8>, h: &[f32]) {
     }
 }
 
-/// Encode one request frame into `out` (appended).
+/// Encode one request frame into `out` (appended in place — reuse one
+/// buffer across frames for the zero-copy path).
 pub fn encode_request(out: &mut Vec<u8>, id: u64, req: &Request) {
-    let mut payload = Vec::new();
     let kind = match req {
+        Request::Sample { .. } => KIND_REQ_SAMPLE,
+        Request::Probability { .. } => KIND_REQ_PROBABILITY,
+        Request::TopK { .. } => KIND_REQ_TOP_K,
+        Request::AddClasses { .. } => KIND_REQ_ADD_CLASSES,
+        Request::RetireClasses { .. } => KIND_REQ_RETIRE_CLASSES,
+    };
+    let len_at = begin_frame(out, kind, id);
+    match req {
         Request::Sample { h, m, seed } => {
-            push_query(&mut payload, h);
-            payload.extend_from_slice(&m.to_le_bytes());
-            payload.extend_from_slice(&seed.to_le_bytes());
-            KIND_REQ_SAMPLE
+            push_query(out, h);
+            out.extend_from_slice(&m.to_le_bytes());
+            out.extend_from_slice(&seed.to_le_bytes());
         }
         Request::Probability { h, class } => {
-            push_query(&mut payload, h);
-            payload.extend_from_slice(&class.to_le_bytes());
-            KIND_REQ_PROBABILITY
+            push_query(out, h);
+            out.extend_from_slice(&class.to_le_bytes());
         }
         Request::TopK { h, k } => {
-            push_query(&mut payload, h);
-            payload.extend_from_slice(&k.to_le_bytes());
-            KIND_REQ_TOP_K
+            push_query(out, h);
+            out.extend_from_slice(&k.to_le_bytes());
         }
-    };
-    push_frame(out, kind, id, &payload);
+        Request::AddClasses { dim, embeddings } => {
+            debug_assert!(
+                *dim as usize != 0 && embeddings.len() % *dim as usize == 0,
+                "AddClasses: embeddings not row-major of width dim"
+            );
+            let rows = embeddings.len() as u32 / dim;
+            out.extend_from_slice(&rows.to_le_bytes());
+            out.extend_from_slice(&dim.to_le_bytes());
+            for x in embeddings {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Request::RetireClasses { ids } => {
+            out.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+            for i in ids {
+                out.extend_from_slice(&i.to_le_bytes());
+            }
+        }
+    }
+    finish_frame(out, len_at);
 }
 
-/// Encode one response frame into `out` (appended).
+/// Encode one response frame into `out` (appended in place — reuse one
+/// buffer across frames for the zero-copy path).
 pub fn encode_response(out: &mut Vec<u8>, id: u64, resp: &Response) {
-    let mut payload = Vec::new();
     let kind = match resp {
+        Response::Sample { .. } => KIND_RESP_SAMPLE,
+        Response::Probability { .. } => KIND_RESP_PROBABILITY,
+        Response::TopK { .. } => KIND_RESP_TOP_K,
+        Response::AddClasses { .. } => KIND_RESP_ADD_CLASSES,
+        Response::RetireClasses { .. } => KIND_RESP_RETIRE_CLASSES,
+        Response::Error { .. } => KIND_RESP_ERROR,
+    };
+    let len_at = begin_frame(out, kind, id);
+    match resp {
         Response::Sample { epoch, ids, probs } => {
             debug_assert_eq!(ids.len(), probs.len());
-            payload.extend_from_slice(&epoch.to_le_bytes());
-            payload.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&(ids.len() as u32).to_le_bytes());
             for i in ids {
-                payload.extend_from_slice(&i.to_le_bytes());
+                out.extend_from_slice(&i.to_le_bytes());
             }
             for q in probs {
-                payload.extend_from_slice(&q.to_le_bytes());
+                out.extend_from_slice(&q.to_le_bytes());
             }
-            KIND_RESP_SAMPLE
         }
         Response::Probability { epoch, q } => {
-            payload.extend_from_slice(&epoch.to_le_bytes());
-            payload.extend_from_slice(&q.to_le_bytes());
-            KIND_RESP_PROBABILITY
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&q.to_le_bytes());
         }
         Response::TopK { epoch, items } => {
-            payload.extend_from_slice(&epoch.to_le_bytes());
-            payload.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&(items.len() as u32).to_le_bytes());
             for (i, q) in items {
-                payload.extend_from_slice(&i.to_le_bytes());
-                payload.extend_from_slice(&q.to_le_bytes());
+                out.extend_from_slice(&i.to_le_bytes());
+                out.extend_from_slice(&q.to_le_bytes());
             }
-            KIND_RESP_TOP_K
+        }
+        Response::AddClasses { epoch, ids } => {
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+            for i in ids {
+                out.extend_from_slice(&i.to_le_bytes());
+            }
+        }
+        Response::RetireClasses { epoch, count } => {
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&count.to_le_bytes());
         }
         Response::Error { code, message } => {
             let msg = message.as_bytes();
             let len = msg.len().min(u16::MAX as usize);
-            payload.push(*code);
-            payload.extend_from_slice(&(len as u16).to_le_bytes());
-            payload.extend_from_slice(&msg[..len]);
-            KIND_RESP_ERROR
+            out.push(*code);
+            out.extend_from_slice(&(len as u16).to_le_bytes());
+            out.extend_from_slice(&msg[..len]);
         }
-    };
-    push_frame(out, kind, id, &payload);
+    }
+    finish_frame(out, len_at);
 }
 
-/// Write one request frame.
+/// Write one request frame (allocating convenience; hot paths encode
+/// into a reused buffer and write that).
 pub fn write_request(
     w: &mut impl Write,
     id: u64,
@@ -271,7 +381,9 @@ pub fn write_request(
     Ok(())
 }
 
-/// Write one response frame.
+/// Write one response frame (allocating convenience; the transport
+/// server's writer loop instead encodes into a reused per-connection
+/// buffer).
 pub fn write_response(
     w: &mut impl Write,
     id: u64,
@@ -426,6 +538,43 @@ pub fn read_request(
             let k = c.u32()?;
             Request::TopK { h, k }
         }
+        KIND_REQ_ADD_CLASSES => {
+            let rows = c.u32()? as usize;
+            let dim = c.u32()?;
+            if dim == 0 {
+                return Err(ProtocolError::Malformed(
+                    "AddClasses: zero embedding dim",
+                ));
+            }
+            // Reject before allocating: the claimed rows×dim may not
+            // describe more floats than the payload holds. u64 math for
+            // the product (u32×u32 always fits) and checked_mul for the
+            // byte count, which a hostile 2^31×2^31 claim WOULD wrap.
+            let floats = rows as u64 * dim as u64;
+            let byte_len = floats.checked_mul(4).ok_or(
+                ProtocolError::Malformed("AddClasses: rows×dim overflows"),
+            )?;
+            if byte_len > payload.len().saturating_sub(c.pos) as u64 {
+                return Err(ProtocolError::Malformed(
+                    "AddClasses: rows×dim exceeds payload",
+                ));
+            }
+            let embeddings = c.f32s(floats as usize)?;
+            Request::AddClasses { dim, embeddings }
+        }
+        KIND_REQ_RETIRE_CLASSES => {
+            let count = c.u32()? as usize;
+            if count * 4 > payload.len().saturating_sub(c.pos) {
+                return Err(ProtocolError::Malformed(
+                    "RetireClasses: count exceeds payload",
+                ));
+            }
+            let mut ids = Vec::with_capacity(count);
+            for _ in 0..count {
+                ids.push(c.u32()?);
+            }
+            Request::RetireClasses { ids }
+        }
         other => return Err(ProtocolError::UnknownKind(other)),
     };
     c.finish()?;
@@ -476,6 +625,25 @@ pub fn read_response(
                 items.push((i, q));
             }
             Response::TopK { epoch, items }
+        }
+        KIND_RESP_ADD_CLASSES => {
+            let epoch = c.u64()?;
+            let count = c.u32()? as usize;
+            if count * 4 > payload.len().saturating_sub(c.pos) {
+                return Err(ProtocolError::Malformed(
+                    "AddClasses ack: count exceeds payload",
+                ));
+            }
+            let mut ids = Vec::with_capacity(count);
+            for _ in 0..count {
+                ids.push(c.u32()?);
+            }
+            Response::AddClasses { epoch, ids }
+        }
+        KIND_RESP_RETIRE_CLASSES => {
+            let epoch = c.u64()?;
+            let count = c.u32()?;
+            Response::RetireClasses { epoch, count }
         }
         KIND_RESP_ERROR => {
             let code = c.u8()?;
@@ -543,6 +711,133 @@ mod tests {
     }
 
     #[test]
+    fn admin_frames_round_trip() {
+        let req = Request::AddClasses {
+            dim: 3,
+            embeddings: vec![0.1, 0.2, 0.3, -1.0, 2.0, 0.5],
+        };
+        let (id, got) = round_trip_request(req.clone());
+        assert_eq!(id, 42);
+        assert_eq!(got, req);
+        assert!(got.is_admin());
+        let req = Request::RetireClasses { ids: vec![7, 9, 1000] };
+        let (_, got) = round_trip_request(req.clone());
+        assert_eq!(got, req);
+        assert!(got.is_admin());
+        assert!(!Request::TopK { h: vec![], k: 1 }.is_admin());
+
+        for resp in [
+            Response::AddClasses { epoch: 5, ids: vec![100, 101] },
+            Response::RetireClasses { epoch: 6, count: 3 },
+        ] {
+            let (_, got) = round_trip_response(resp.clone());
+            assert_eq!(got, resp);
+        }
+    }
+
+    #[test]
+    fn malformed_admin_frames_are_rejected() {
+        // rows×dim prefix describing more floats than delivered.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 0x10, 1);
+        buf.extend_from_slice(&1000u32.to_le_bytes()); // rows
+        buf.extend_from_slice(&1000u32.to_le_bytes()); // dim
+        buf.extend_from_slice(&0.5f32.to_le_bytes()); // one float
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_request(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // A hostile rows×dim whose BYTE count wraps u64 (2^31 × 2^31 ×
+        // 4 ≡ 0 mod 2^64) must be rejected by the checked multiply, not
+        // decoded as an empty embedding batch.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 0x10, 1);
+        buf.extend_from_slice(&0x8000_0000u32.to_le_bytes()); // rows
+        buf.extend_from_slice(&0x8000_0000u32.to_le_bytes()); // dim
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_request(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // Zero dim is structurally invalid.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 0x10, 1);
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_request(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // Retire count exceeding the payload.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 0x11, 1);
+        buf.extend_from_slice(&50u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes()); // one id only
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_request(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // Trailing garbage after a valid retire body.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 0x11, 1);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        buf.push(0xEE);
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_request(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn overload_error_keeps_connection_usable() {
+        assert!(!ProtocolError::Remote {
+            code: ERR_OVERLOAD,
+            message: String::new()
+        }
+        .closes_connection());
+        let (_, got) = round_trip_response(Response::Error {
+            code: ERR_OVERLOAD,
+            message: "in-flight cap".into(),
+        });
+        assert_eq!(
+            got,
+            Response::Error { code: ERR_OVERLOAD, message: "in-flight cap".into() }
+        );
+    }
+
+    #[test]
+    fn reused_buffer_encode_matches_fresh_encode() {
+        // The zero-copy path (header first, length backfilled) must be
+        // byte-identical to a fresh single-frame encode, including when
+        // frames accumulate in one buffer.
+        let reqs = [
+            Request::Sample { h: vec![1.0, -2.0], m: 9, seed: 77 },
+            Request::RetireClasses { ids: vec![1, 2, 3] },
+            Request::TopK { h: vec![0.5; 7], k: 4 },
+        ];
+        let mut joint = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            encode_request(&mut joint, i as u64, r);
+        }
+        let mut cursor = &joint[..];
+        for (i, r) in reqs.iter().enumerate() {
+            let (id, got) = read_request(&mut cursor).unwrap().unwrap();
+            assert_eq!(id, i as u64);
+            assert_eq!(&got, r);
+        }
+        assert!(read_request(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
     fn truncated_header_and_payload_are_typed_errors() {
         let mut buf = Vec::new();
         encode_request(&mut buf, 1, &Request::TopK { h: vec![1.0], k: 3 });
@@ -607,10 +902,10 @@ mod tests {
     fn malformed_payloads_are_rejected() {
         // Query dim prefix larger than the actual payload.
         let mut buf = Vec::new();
-        let mut payload = Vec::new();
-        payload.extend_from_slice(&1000u32.to_le_bytes()); // claims 1000 floats
-        payload.extend_from_slice(&0.5f32.to_le_bytes()); // …delivers one
-        super::push_frame(&mut buf, 0x03, 1, &payload);
+        let len_at = super::begin_frame(&mut buf, 0x03, 1);
+        buf.extend_from_slice(&1000u32.to_le_bytes()); // claims 1000 floats
+        buf.extend_from_slice(&0.5f32.to_le_bytes()); // …delivers one
+        super::finish_frame(&mut buf, len_at);
         assert!(matches!(
             read_request(&mut &buf[..]).unwrap_err(),
             ProtocolError::Malformed(_)
@@ -618,12 +913,12 @@ mod tests {
 
         // Trailing garbage after a valid body.
         let mut buf = Vec::new();
-        let mut payload = Vec::new();
-        payload.extend_from_slice(&1u32.to_le_bytes());
-        payload.extend_from_slice(&0.5f32.to_le_bytes());
-        payload.extend_from_slice(&3u32.to_le_bytes()); // k
-        payload.push(0xAB); // trailing byte
-        super::push_frame(&mut buf, 0x03, 1, &payload);
+        let len_at = super::begin_frame(&mut buf, 0x03, 1);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&0.5f32.to_le_bytes());
+        buf.extend_from_slice(&3u32.to_le_bytes()); // k
+        buf.push(0xAB); // trailing byte
+        super::finish_frame(&mut buf, len_at);
         assert!(matches!(
             read_request(&mut &buf[..]).unwrap_err(),
             ProtocolError::Malformed(_)

@@ -1,0 +1,461 @@
+//! Mutable-class-universe integration: churn (adds + retires) driven
+//! through every layer — sampler, epoch-versioned serving, and the uds
+//! wire's admin frames — checked against from-scratch rebuilds on the
+//! final class set.
+//!
+//! * chi-square of the churned sampler's draws vs a sampler rebuilt from
+//!   scratch on the surviving classes (unsharded + sharded kernel
+//!   samplers, in-process and over the uds transport);
+//! * a mid-growth epoch-swap test: concurrent readers never observe Σq
+//!   drifting from 1 while a writer grows/shrinks the universe;
+//! * wire round-trips for the ADD_CLASSES/RETIRE_CLASSES admin frames,
+//!   including malformed-frame rejection and the no-admin-hook refusal.
+
+use rfsoftmax::featmap::RffMap;
+use rfsoftmax::linalg::{unit_vector, Matrix};
+use rfsoftmax::rng::Rng;
+use rfsoftmax::sampler::{RffSampler, Sampler, ShardedKernelSampler};
+use rfsoftmax::serving::{
+    BatcherOptions, MicroBatcher, SamplerServer, SamplerWriter,
+    SharedWriterAdmin,
+};
+use rfsoftmax::transport::{
+    wire, ProtocolError, TransportClient, TransportServer,
+};
+use std::io::Write;
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// RFF dimensions chosen so kernel masses are positive w.h.p. (D large,
+/// ν small): the two-level probability is then layout-independent and a
+/// from-scratch rebuild — with a different pad/shard layout — is a valid
+/// statistical reference for the churned sampler.
+const NUM_FREQS: usize = 256;
+const NU: f32 = 1.0;
+
+fn sock_path(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("rfsm-churn-{}-{tag}.sock", std::process::id()))
+}
+
+/// Apply a deterministic add/retire script; returns (all-classes matrix,
+/// retired flags).
+fn churn_script(
+    sampler: &mut dyn Sampler,
+    classes: &Matrix,
+    seed: u64,
+) -> (Matrix, Vec<bool>) {
+    let d = classes.cols();
+    let mut rng = Rng::seeded(seed);
+    let mut all = classes.clone();
+    let mut retired = vec![false; classes.rows()];
+    for round in 0..4 {
+        let mut add = Matrix::zeros(3, d);
+        for r in 0..3 {
+            let v = unit_vector(&mut rng, d);
+            add.row_mut(r).copy_from_slice(&v);
+        }
+        let base = all.rows() as u32;
+        let ids = sampler.add_classes(&add).unwrap();
+        assert_eq!(ids, vec![base, base + 1, base + 2], "ids must be stable");
+        for r in 0..3 {
+            all.push_row(add.row(r));
+            retired.push(false);
+        }
+        // Retire two live classes per round, spread over old + new ids.
+        let live: Vec<u32> = (0..all.rows() as u32)
+            .filter(|&i| !retired[i as usize])
+            .collect();
+        let victims = [
+            live[(round * 7) % live.len()],
+            live[(round * 13 + 5) % live.len()],
+        ];
+        assert_ne!(victims[0], victims[1], "script must pick distinct ids");
+        sampler.retire_classes(&victims).unwrap();
+        for &v in &victims {
+            retired[v as usize] = true;
+        }
+    }
+    (all, retired)
+}
+
+/// Chi-square of `counts` (indexed by live rank) against `reference`
+/// probabilities over `trials` draws.
+fn chi2_against(
+    counts: &[usize],
+    reference: &dyn Sampler,
+    h: &[f32],
+    trials: usize,
+    tag: &str,
+) {
+    for (rank, &c) in counts.iter().enumerate() {
+        let q = reference.probability(h, rank);
+        let expect = q * trials as f64;
+        let sd = (trials as f64 * q * (1.0 - q)).sqrt().max(1.0);
+        assert!(
+            (c as f64 - expect).abs() <= 5.0 * sd + 3.0,
+            "{tag}: rank {rank}: churned count {c} vs rebuilt expectation \
+             {expect:.1} (q = {q:.5})"
+        );
+    }
+}
+
+/// Shared body: churn `sampler`, then chi-square its draws against a
+/// from-scratch rebuild (built by `rebuild` from the live class set).
+fn churned_matches_rebuild(
+    mut sampler: Box<dyn Sampler>,
+    classes: Matrix,
+    rebuild: impl Fn(&Matrix) -> Box<dyn Sampler>,
+    seed: u64,
+    tag: &str,
+) {
+    let (all, retired) = churn_script(sampler.as_mut(), &classes, seed);
+    let live_ids: Vec<usize> =
+        (0..all.rows()).filter(|&i| !retired[i]).collect();
+    assert_eq!(sampler.live_classes(), live_ids.len(), "{tag}");
+    assert_eq!(sampler.num_classes(), all.rows(), "{tag}");
+    let mut live_mat = Matrix::zeros(0, all.cols());
+    for &g in &live_ids {
+        live_mat.push_row(all.row(g));
+    }
+    let reference = rebuild(&live_mat);
+
+    let mut rng = Rng::seeded(seed + 99);
+    let h = unit_vector(&mut rng, all.cols());
+    // Retired slots carry exactly zero mass and Σq over all slots is 1.
+    let mut total = 0.0;
+    for i in 0..all.rows() {
+        let q = sampler.probability(&h, i);
+        if retired[i] {
+            assert_eq!(q, 0.0, "{tag}: hole {i} has mass");
+        }
+        total += q;
+    }
+    assert!((total - 1.0).abs() < 1e-6, "{tag}: Σq = {total}");
+
+    let trials = 120_000;
+    let draw = sampler.sample(&h, trials, &mut rng);
+    let mut rank_of = vec![usize::MAX; all.rows()];
+    for (rank, &g) in live_ids.iter().enumerate() {
+        rank_of[g] = rank;
+    }
+    let mut counts = vec![0usize; live_ids.len()];
+    for &id in &draw.ids {
+        assert!(!retired[id as usize], "{tag}: emitted retired id {id}");
+        counts[rank_of[id as usize]] += 1;
+    }
+    chi2_against(&counts, reference.as_ref(), &h, trials, tag);
+}
+
+#[test]
+fn unsharded_churn_chi_square_vs_scratch_rebuild() {
+    let mut rng = Rng::seeded(3000);
+    let classes = Matrix::randn(&mut rng, 24, 8).l2_normalized_rows();
+    let sampler: Box<dyn Sampler> = Box::new(RffSampler::new(
+        &classes,
+        NUM_FREQS,
+        NU,
+        &mut Rng::seeded(3001),
+    ));
+    churned_matches_rebuild(
+        sampler,
+        classes,
+        |live| {
+            Box::new(RffSampler::new(
+                live,
+                NUM_FREQS,
+                NU,
+                &mut Rng::seeded(3001),
+            ))
+        },
+        3002,
+        "rff-unsharded",
+    );
+}
+
+#[test]
+fn sharded_churn_chi_square_vs_scratch_rebuild() {
+    let mut rng = Rng::seeded(3100);
+    let classes = Matrix::randn(&mut rng, 24, 8).l2_normalized_rows();
+    let map = || RffMap::new(8, NUM_FREQS, NU, &mut Rng::seeded(3101));
+    let sampler: Box<dyn Sampler> = Box::new(ShardedKernelSampler::with_map(
+        &classes,
+        map(),
+        4,
+        "rff-sharded",
+    ));
+    churned_matches_rebuild(
+        sampler,
+        classes,
+        |live| {
+            Box::new(ShardedKernelSampler::with_map(
+                live,
+                map(),
+                4,
+                "rff-sharded",
+            ))
+        },
+        3102,
+        "rff-sharded",
+    );
+}
+
+#[test]
+fn readers_never_observe_sigma_q_drift_during_growth_swaps() {
+    let n = 32;
+    let d = 6;
+    let mut rng = Rng::seeded(3200);
+    let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+    let offline = ShardedKernelSampler::with_map(
+        &classes,
+        RffMap::new(d, 32, 2.0, &mut Rng::seeded(3201)),
+        4,
+        "rff-sharded",
+    );
+    let (server, mut writer) = SamplerServer::new(offline.fork().unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..4)
+        .map(|r| {
+            let server = server.clone();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut rng = Rng::seeded(3210 + r);
+                let h = unit_vector(&mut rng, d);
+                let mut last_epoch = 0u64;
+                let mut observed_sizes =
+                    std::collections::HashSet::new();
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = server.snapshot();
+                    assert!(snap.epoch() >= last_epoch, "epoch regressed");
+                    last_epoch = snap.epoch();
+                    let slots = snap.sampler().num_classes();
+                    observed_sizes.insert(slots);
+                    // The pinned snapshot is a complete universe: Σq
+                    // over every slot (holes contribute exactly 0) is 1
+                    // even while the writer grows/shrinks mid-flight.
+                    let total: f64 = (0..slots)
+                        .map(|i| snap.sampler().probability(&h, i))
+                        .sum();
+                    assert!(
+                        (total - 1.0).abs() < 1e-6,
+                        "Σq = {total} at epoch {} ({} slots)",
+                        snap.epoch(),
+                        slots
+                    );
+                }
+                observed_sizes.len()
+            })
+        })
+        .collect();
+
+    // Writer: grow + shrink under the readers, one epoch swap per
+    // mutation batch.
+    let mut wrng = Rng::seeded(3220);
+    let mut live: Vec<u32> = (0..n as u32).collect();
+    for cycle in 0..24 {
+        if cycle % 3 == 2 && live.len() > n / 2 {
+            let victim = live[(cycle * 11) % live.len()];
+            writer.apply_retire_classes(vec![victim]).unwrap();
+            live.retain(|&x| x != victim);
+        } else {
+            let mut emb = Matrix::zeros(2, d);
+            for r in 0..2 {
+                let v = unit_vector(&mut wrng, d);
+                emb.row_mut(r).copy_from_slice(&v);
+            }
+            let ids = writer.apply_add_classes(emb).unwrap();
+            live.extend_from_slice(&ids);
+        }
+        writer.publish();
+    }
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        let sizes_seen = r.join().unwrap();
+        assert!(sizes_seen >= 1);
+    }
+    assert_eq!(server.epoch(), 24);
+    let final_snap = server.snapshot();
+    assert_eq!(final_snap.sampler().live_classes(), live.len());
+}
+
+#[test]
+fn uds_admin_churn_chi_square_vs_scratch_rebuild() {
+    let n = 24;
+    let d = 8;
+    let mut rng = Rng::seeded(3300);
+    let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+    let map = || RffMap::new(d, NUM_FREQS, NU, &mut Rng::seeded(3301));
+    let offline =
+        ShardedKernelSampler::with_map(&classes, map(), 4, "rff-sharded");
+    let (server, writer) = SamplerServer::new(offline.fork().unwrap());
+    let writer = Arc::new(Mutex::new(writer));
+    let batcher = Arc::new(MicroBatcher::spawn(
+        server.clone(),
+        BatcherOptions::default(),
+    ));
+    let admin =
+        Arc::new(SharedWriterAdmin::new(Arc::clone(&writer), d));
+    let transport = TransportServer::bind_with_admin(
+        sock_path("admin-chi2"),
+        Arc::clone(&batcher),
+        admin,
+    )
+    .unwrap();
+    let mut client = TransportClient::connect(transport.path()).unwrap();
+
+    // Drive the same churn script over the wire, mirroring it locally.
+    let mut all = classes.clone();
+    let mut retired = vec![false; n];
+    let mut crng = Rng::seeded(3302);
+    for round in 0..4u64 {
+        let mut add = Matrix::zeros(3, d);
+        for r in 0..3 {
+            let v = unit_vector(&mut crng, d);
+            add.row_mut(r).copy_from_slice(&v);
+        }
+        let base = all.rows() as u32;
+        let (ids, epoch) = client.add_classes(&add).unwrap();
+        assert_eq!(ids, vec![base, base + 1, base + 2]);
+        assert_eq!(epoch, 2 * round + 1, "one swap per admin frame");
+        for r in 0..3 {
+            all.push_row(add.row(r));
+            retired.push(false);
+        }
+        let live: Vec<u32> = (0..all.rows() as u32)
+            .filter(|&i| !retired[i as usize])
+            .collect();
+        let victim = live[(round as usize * 7 + 2) % live.len()];
+        let epoch = client.retire_classes(&[victim]).unwrap();
+        assert_eq!(epoch, 2 * round + 2);
+        retired[victim as usize] = true;
+    }
+
+    // From-scratch rebuild on the surviving set.
+    let live_ids: Vec<usize> =
+        (0..all.rows()).filter(|&i| !retired[i]).collect();
+    let mut live_mat = Matrix::zeros(0, d);
+    for &g in &live_ids {
+        live_mat.push_row(all.row(g));
+    }
+    let reference =
+        ShardedKernelSampler::with_map(&live_mat, map(), 4, "rff-sharded");
+
+    // Chi-square the *transported* draws against the rebuild.
+    let h = unit_vector(&mut crng, d);
+    let m = 2000;
+    let rounds = 40usize;
+    let mut rank_of = vec![usize::MAX; all.rows()];
+    for (rank, &g) in live_ids.iter().enumerate() {
+        rank_of[g] = rank;
+    }
+    let mut counts = vec![0usize; live_ids.len()];
+    for i in 0..rounds {
+        let reply = client.sample(&h, m, 0xC0FE + i as u64).unwrap();
+        assert_eq!(reply.epoch, 8, "draws must come post-churn");
+        for &id in &reply.draw.ids {
+            assert!(
+                !retired[id as usize],
+                "wire emitted retired id {id}"
+            );
+            counts[rank_of[id as usize]] += 1;
+        }
+    }
+    chi2_against(&counts, &reference, &h, rounds * m, "uds-admin");
+    assert_eq!(transport.stats().admin_requests, 8);
+
+    // Admin validation errors are per-request and typed; the connection
+    // (and the serving path) survive them.
+    let err = client.retire_classes(&[9999]).unwrap_err();
+    match &err {
+        ProtocolError::Remote { code, .. } => {
+            assert_eq!(*code, wire::ERR_SERVE);
+            assert!(!err.closes_connection());
+        }
+        other => panic!("expected remote serve error, got {other:?}"),
+    }
+    assert_eq!(client.sample(&h, 5, 1).unwrap().draw.len(), 5);
+}
+
+/// Write raw bytes, read one response frame back.
+fn send_raw_expect_error(path: &PathBuf, bytes: &[u8]) -> wire::Response {
+    let mut stream = UnixStream::connect(path).unwrap();
+    stream.write_all(bytes).unwrap();
+    stream.flush().unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let (id, resp) = wire::read_response(&mut stream)
+        .expect("server must answer with a typed error frame")
+        .expect("connection closed without an error frame");
+    assert_eq!(id, 0, "protocol errors are connection-level (id 0)");
+    assert!(
+        wire::read_response(&mut stream).unwrap().is_none(),
+        "connection must close after a protocol error"
+    );
+    resp
+}
+
+#[test]
+fn malformed_admin_frames_are_rejected_and_admin_requires_a_hook() {
+    let n = 16;
+    let d = 6;
+    let mut rng = Rng::seeded(3400);
+    let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+    let offline = ShardedKernelSampler::with_map(
+        &classes,
+        RffMap::new(d, 32, 2.0, &mut Rng::seeded(3401)),
+        4,
+        "rff-sharded",
+    );
+    // Server WITHOUT an admin hook: well-formed admin frames get a typed
+    // per-request refusal, not a dead connection.
+    let (server, _writer) = SamplerServer::new(offline.fork().unwrap());
+    let batcher = Arc::new(MicroBatcher::spawn(
+        server.clone(),
+        BatcherOptions::default(),
+    ));
+    let transport = TransportServer::bind(
+        sock_path("admin-malformed"),
+        Arc::clone(&batcher),
+    )
+    .unwrap();
+    let path = transport.path().to_path_buf();
+
+    let mut client = TransportClient::connect(&path).unwrap();
+    let one = Matrix::from_vec(1, d, vec![0.5; d]);
+    let err = client.add_classes(&one).unwrap_err();
+    match &err {
+        ProtocolError::Remote { code, message } => {
+            assert_eq!(*code, wire::ERR_SERVE);
+            assert!(message.contains("admin"), "message: {message}");
+            assert!(!err.closes_connection());
+        }
+        other => panic!("expected remote refusal, got {other:?}"),
+    }
+    // Connection still serves.
+    let h = unit_vector(&mut rng, d);
+    assert_eq!(client.sample(&h, 4, 9).unwrap().draw.len(), 4);
+
+    // Malformed admin payload (rows×dim overruns the frame) is a
+    // connection-level protocol error.
+    let mut valid = Vec::new();
+    wire::encode_request(
+        &mut valid,
+        1,
+        &wire::Request::AddClasses {
+            dim: d as u32,
+            embeddings: vec![0.5; d],
+        },
+    );
+    // Corrupt the row count (first payload u32) to claim 1000 rows.
+    let mut corrupt = valid.clone();
+    corrupt[wire::HEADER_LEN..wire::HEADER_LEN + 4]
+        .copy_from_slice(&1000u32.to_le_bytes());
+    let resp = send_raw_expect_error(&path, &corrupt);
+    let wire::Response::Error { code, message } = resp else {
+        panic!("expected error frame, got {resp:?}")
+    };
+    assert_eq!(code, wire::ERR_PROTOCOL);
+    assert!(message.contains("malformed"), "message: {message}");
+    assert_eq!(transport.stats().protocol_errors, 1);
+}

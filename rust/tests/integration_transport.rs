@@ -334,6 +334,110 @@ fn malformed_frames_get_typed_errors_and_never_poison_the_batcher() {
 }
 
 #[test]
+fn overload_backpressure_sheds_typed_errors_and_survives() {
+    let n = 32;
+    let d = 6;
+    // A wide, slow batcher window: the blind-written burst below decodes
+    // in full while the batcher is still waiting for its batch to fill,
+    // so the per-connection in-flight cap is deterministically exceeded.
+    let (_offline, _batcher, transport) = serve_stack(
+        n,
+        d,
+        2600,
+        BatcherOptions {
+            max_batch: 8192,
+            max_wait: Duration::from_millis(300),
+        },
+        "overload",
+    );
+    // A *foreign* client that writes its whole burst before reading
+    // anything (TransportClient::pipeline windows itself below the cap
+    // precisely to be immune — so emulate the misbehaving peer by hand).
+    // The burst stays under the server's outstanding-reply ceiling and
+    // both directions fit the socket buffers, so the blind write cannot
+    // deadlock this test.
+    let mut rng = Rng::seeded(2601);
+    let burst = rfsoftmax::transport::MAX_IN_FLIGHT + 600;
+    let mut buf = Vec::new();
+    for j in 0..burst {
+        wire::encode_request(
+            &mut buf,
+            1 + j as u64,
+            &Request::Probability {
+                h: unit_vector(&mut rng, d),
+                class: (j % n) as u32,
+            },
+        );
+    }
+    let mut stream = UnixStream::connect(transport.path()).unwrap();
+    stream.write_all(&buf).unwrap();
+    stream.flush().unwrap();
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    for _ in 0..burst {
+        let (id, resp) = wire::read_response(&mut stream)
+            .expect("typed frame")
+            .expect("connection must stay open");
+        assert!(id >= 1 && id <= burst as u64);
+        match resp {
+            Response::Probability { q, .. } => {
+                assert!(q.is_finite());
+                served += 1;
+            }
+            Response::Error { code, .. } => {
+                assert_eq!(
+                    code,
+                    wire::ERR_OVERLOAD,
+                    "only overload sheds expected"
+                );
+                shed += 1;
+            }
+            other => panic!("unexpected response kind: {other:?}"),
+        }
+    }
+    assert_eq!(served + shed, burst);
+    assert!(shed > 0, "cap never engaged ({served} served)");
+    assert!(
+        served >= 1,
+        "everything shed — the cap must still serve up to its limit"
+    );
+    assert_eq!(transport.stats().overloads, shed as u64);
+    // The connection survives shedding: a calm follow-up request on the
+    // same socket is served.
+    let mut again = Vec::new();
+    wire::encode_request(
+        &mut again,
+        99_999,
+        &Request::Probability { h: unit_vector(&mut rng, d), class: 3 },
+    );
+    stream.write_all(&again).unwrap();
+    stream.flush().unwrap();
+    let (id, resp) = wire::read_response(&mut stream).unwrap().unwrap();
+    assert_eq!(id, 99_999);
+    assert!(matches!(resp, Response::Probability { .. }));
+
+    // And the windowed TransportClient::pipeline is immune by design: a
+    // wave far larger than the cap completes with zero sheds.
+    let shed_before = transport.stats().overloads;
+    let mut client = TransportClient::connect(transport.path()).unwrap();
+    let reqs: Vec<Request> = (0..rfsoftmax::transport::MAX_IN_FLIGHT + 600)
+        .map(|j| Request::Probability {
+            h: unit_vector(&mut rng, d),
+            class: (j % n) as u32,
+        })
+        .collect();
+    let resps = client.pipeline(&reqs).unwrap();
+    assert!(resps
+        .iter()
+        .all(|r| matches!(r, Response::Probability { .. })));
+    assert_eq!(
+        transport.stats().overloads,
+        shed_before,
+        "windowed pipeline must never be shed"
+    );
+}
+
+#[test]
 fn server_shutdown_closes_connections_cleanly() {
     let n = 24;
     let d = 6;
