@@ -9,6 +9,12 @@
 //!   lines so the perf trajectory is machine-readable).
 //!
 //! Run: `cargo bench --bench perf_hotpath`
+//!
+//! `--smoke` (CI bench-smoke job: `cargo bench --bench perf_hotpath --
+//! --smoke`) shrinks every axis — problem sizes, warmup, budget — so the
+//! full harness executes end to end in seconds and still emits every
+//! `BENCH {json}` record kind; the numbers are not comparable to full
+//! runs (the record gains `"smoke": true` so the trajectory can filter).
 
 use rfsoftmax::benchkit::{bench_header, black_box, Bencher};
 use rfsoftmax::featmap::{FeatureMap, OrfMap, RffMap, SorfMap};
@@ -20,11 +26,27 @@ use rfsoftmax::softmax::sampled_softmax_loss;
 use std::time::Duration;
 
 fn main() {
-    bench_header("PERF", "L3 hot-path microbenchmarks");
-    let b = Bencher {
-        warmup: Duration::from_millis(100),
-        budget: Duration::from_millis(600),
-        samples: 12,
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    bench_header(
+        "PERF",
+        if smoke {
+            "L3 hot-path microbenchmarks (SMOKE: tiny sizes, seconds-scale)"
+        } else {
+            "L3 hot-path microbenchmarks"
+        },
+    );
+    let b = if smoke {
+        Bencher {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(40),
+            samples: 3,
+        }
+    } else {
+        Bencher {
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_millis(600),
+            samples: 12,
+        }
     };
 
     // ------------------------------------------------------------------
@@ -34,7 +56,9 @@ fn main() {
     let mut rng = Rng::seeded(1);
     let d = 128;
     let u = unit_vector(&mut rng, d);
-    for nf in [256usize, 1024, 4096] {
+    let map_sizes: &[usize] =
+        if smoke { &[256] } else { &[256, 1024, 4096] };
+    for &nf in map_sizes {
         let rff = RffMap::new(d, nf, 4.0, &mut rng);
         let orf = OrfMap::new(d, nf, 4.0, &mut rng);
         let sorf = SorfMap::new(d, nf, 4.0, &mut rng);
@@ -57,7 +81,12 @@ fn main() {
     // Kernel tree: sample + update at several scales.
     // ------------------------------------------------------------------
     println!("\n# kernel tree (query dim = 2D feature coords)");
-    for (n, nf) in [(10_000usize, 128usize), (10_000, 512), (100_000, 128)] {
+    let tree_cells: &[(usize, usize)] = if smoke {
+        &[(2_000, 128)]
+    } else {
+        &[(10_000, 128), (10_000, 512), (100_000, 128)]
+    };
+    for &(n, nf) in tree_cells {
         let dim = 2 * nf;
         let mut rng = Rng::seeded(2);
         let mut tree = KernelTree::new(n, dim, 1e-8);
@@ -87,8 +116,10 @@ fn main() {
     // ------------------------------------------------------------------
     println!("\n# negative-draw path (n=10k, d=64, m=100)");
     let mut rng = Rng::seeded(4);
-    let classes = Matrix::randn(&mut rng, 10_000, 64).l2_normalized_rows();
-    for nf in [256usize, 1024] {
+    let draw_n = if smoke { 2_000 } else { 10_000 };
+    let classes = Matrix::randn(&mut rng, draw_n, 64).l2_normalized_rows();
+    let draw_sizes: &[usize] = if smoke { &[256] } else { &[256, 1024] };
+    for &nf in draw_sizes {
         let sampler = RffSampler::new(&classes, nf, 4.0, &mut rng);
         let h = unit_vector(&mut rng, 64);
         let mut draw_rng = Rng::seeded(5);
@@ -101,8 +132,8 @@ fn main() {
     // tree (the optimization's before/after, recorded in EXPERIMENTS.md).
     println!("\n# tree batch-draw memoization A/B (n=10k, D'=2048, m=100)");
     {
-        let dim = 2048;
-        let n = 10_000;
+        let dim = if smoke { 512 } else { 2048 };
+        let n = if smoke { 2_000 } else { 10_000 };
         let mut rng = Rng::seeded(9);
         let mut tree = KernelTree::new(n, dim, 1e-8);
         let mut phi = vec![0.0f32; dim];
@@ -130,13 +161,17 @@ fn main() {
     // batch in one gemm and fans the walks out across threads.
     // ------------------------------------------------------------------
     println!("\n# batch-vs-scalar sampling (d=64, D=128, m=20 negatives/example)");
-    for &n in &[10_000usize, 100_000] {
+    let bvs_sizes: &[usize] =
+        if smoke { &[2_000] } else { &[10_000, 100_000] };
+    for &n in bvs_sizes {
         let mut rng = Rng::seeded(7);
         let d = 64;
         let m = 20;
         let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
         let sampler = RffSampler::new(&classes, 128, 4.0, &mut rng);
-        for &bsz in &[1usize, 32, 256] {
+        let batch_sizes: &[usize] =
+            if smoke { &[1, 32] } else { &[1, 32, 256] };
+        for &bsz in batch_sizes {
             let h = Matrix::randn(&mut rng, bsz, d).l2_normalized_rows();
             let targets: Vec<u32> = (0..bsz).map(|b| (b % n) as u32).collect();
             let mut r1 = Rng::seeded(11);
@@ -169,6 +204,7 @@ fn main() {
                 ("batch_samples_per_sec", Json::from(batch_sps)),
                 ("scalar_samples_per_sec", Json::from(scalar_sps)),
                 ("speedup", Json::from(batch_sps / scalar_sps)),
+                ("smoke", Json::from(smoke)),
             ]);
             println!("BENCH {record}");
         }
@@ -179,7 +215,9 @@ fn main() {
     // ------------------------------------------------------------------
     println!("\n# sampled-softmax loss oracle");
     let mut rng = Rng::seeded(6);
-    for m in [10usize, 100, 1000] {
+    let loss_sizes: &[usize] =
+        if smoke { &[10, 100] } else { &[10, 100, 1000] };
+    for &m in loss_sizes {
         let negs: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
         let q: Vec<f64> = (0..m).map(|_| rng.f64_open()).collect();
         println!("{}", b.run(&format!("loss m={m}"), || {

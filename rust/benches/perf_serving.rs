@@ -4,11 +4,14 @@
 //! `perf_hotpath`'s training-path lines.
 //!
 //! Covers `{rff, rff-sharded} × {1, 4, 8}` reader threads × `{inproc,
-//! uds}` transports (the uds cells run a mixed `8:1:1`
-//! sample:prob:topk request stream over the real wire protocol) and
-//! emits one `BENCH {json}` record per cell with qps, p50/p99 latency
-//! (µs), mean coalesced batch size, per-kind request counts, published
-//! epochs, swap-stall count, and frame encode/decode overhead.
+//! uds, tcp}` transports (the wire cells run a mixed `8:1:1`
+//! sample:prob:topk request stream over the real protocol) and emits
+//! one `BENCH {json}` record per cell with qps, p50/p99 latency (µs),
+//! mean coalesced batch size, per-kind request counts, published
+//! epochs, swap-stall count, and frame encode/decode overhead. A final
+//! tcp section sweeps the wire v3 wave size (1 vs 8 vs 32) so the
+//! per-request header amortization (`req_headers_per_request`) rides
+//! the trajectory.
 //!
 //! Run: `cargo bench --bench perf_serving`
 
@@ -49,11 +52,12 @@ fn main() {
     ];
 
     // (transport, mix, total requests across readers): inproc keeps the
-    // PR-2 pure-sample line comparable across PRs; uds exercises the
-    // wire with a mixed request stream.
+    // PR-2 pure-sample line comparable across PRs; uds and tcp exercise
+    // the wire with a mixed request stream.
     let transports = [
         (TransportMode::Inproc, RequestMix { sample: 1, prob: 0, topk: 0 }, 4000),
         (TransportMode::Uds, RequestMix { sample: 8, prob: 1, topk: 1 }, 2000),
+        (TransportMode::Tcp, RequestMix { sample: 8, prob: 1, topk: 1 }, 2000),
     ];
 
     for (tmode, mix, total_requests) in &transports {
@@ -86,6 +90,8 @@ fn main() {
                     transport: *tmode,
                     mix: *mix,
                     churn: None,
+                    wave: 1,
+                    listen: "127.0.0.1:0".into(),
                 };
                 match run_closed_loop(sampler.as_ref(), &spec) {
                     Ok(report) => {
@@ -128,6 +134,8 @@ fn main() {
                 transport: *tmode,
                 mix: *mix,
                 churn: Some(churn),
+                wave: 1,
+                listen: "127.0.0.1:0".into(),
             };
             match run_closed_loop(sampler.as_ref(), &spec) {
                 Ok(report) => {
@@ -136,6 +144,41 @@ fn main() {
                 }
                 Err(e) => println!("{label}: SKIP ({e})"),
             }
+        }
+    }
+
+    // Wave-size sweep over tcp: the per-request frame-header overhead
+    // (req/resp_headers_per_request in the BENCH records) drops toward
+    // 1/wave, the observable the batched-wave frames exist for.
+    println!("\n# tcp wave sweep: mix=8:1:1 readers=4 n={n}");
+    for &wave in &[1usize, 8, 32] {
+        let sampler = &samplers[1].1; // rff-sharded
+        let spec = LoadSpec {
+            readers: 4,
+            requests_per_reader: 512,
+            m,
+            top_k: 10,
+            dim: d,
+            seed: 7,
+            batcher: BatcherOptions {
+                // Batch bound ≥ wave so one wave coalesces whole.
+                max_batch: 32,
+                max_wait: Duration::ZERO,
+            },
+            updates_per_swap: 32,
+            swap_pause: Duration::from_micros(200),
+            transport: TransportMode::Tcp,
+            mix: RequestMix { sample: 8, prob: 1, topk: 1 },
+            churn: None,
+            wave,
+            listen: "127.0.0.1:0".into(),
+        };
+        match run_closed_loop(sampler.as_ref(), &spec) {
+            Ok(report) => {
+                println!("{}", report.render());
+                println!("BENCH {}", report.to_json());
+            }
+            Err(e) => println!("wave={wave}: SKIP ({e})"),
         }
     }
 }

@@ -259,11 +259,23 @@ pub struct ServingConfig {
     /// because requests accumulate while a batch is being served —
     /// without taxing every light-load request with an artificial delay.
     pub max_wait_us: u64,
+    /// TCP bind address for the L4 transport (`serve-bench --transport
+    /// tcp`, `TransportServer::bind_tcp`): `host:port`, where port `0`
+    /// asks the kernel for an ephemeral port (the server reports the
+    /// real one via `endpoint()`). The default binds loopback only —
+    /// serving cross-machine means deliberately widening this to an
+    /// interface address.
+    pub listen: String,
 }
 
 impl Default for ServingConfig {
     fn default() -> Self {
-        Self { double_buffer: true, max_batch: 32, max_wait_us: 0 }
+        Self {
+            double_buffer: true,
+            max_batch: 32,
+            max_wait_us: 0,
+            listen: "127.0.0.1:0".into(),
+        }
     }
 }
 
@@ -532,6 +544,7 @@ impl Config {
             }
             "serving.max_batch" => self.serving.max_batch = us(key, v)?,
             "serving.max_wait_us" => self.serving.max_wait_us = u64v(key, v)?,
+            "serving.listen" => self.serving.listen = v.to_string(),
 
             "train.batch_size" => self.train.batch_size = us(key, v)?,
             "train.steps" => self.train.steps = us(key, v)?,
@@ -604,6 +617,11 @@ impl Config {
         if self.serving.max_batch == 0 {
             return Err(ConfigError("serving.max_batch must be > 0".into()));
         }
+        if self.serving.listen.is_empty() {
+            return Err(ConfigError(
+                "serving.listen must be a host:port bind address".into(),
+            ));
+        }
         if self.train.batch_size == 0 {
             return Err(ConfigError("train.batch_size must be > 0".into()));
         }
@@ -656,6 +674,7 @@ impl Config {
                     ("double_buffer", Json::from(self.serving.double_buffer)),
                     ("max_batch", Json::from(self.serving.max_batch)),
                     ("max_wait_us", Json::from(self.serving.max_wait_us as usize)),
+                    ("listen", Json::from(self.serving.listen.as_str())),
                 ]),
             ),
             (
@@ -733,19 +752,26 @@ mod tests {
         // On by default since PR 3 (ROADMAP flip, gated on the
         // stream-exact equivalence tests).
         assert!(c.serving.double_buffer);
+        assert_eq!(c.serving.listen, "127.0.0.1:0");
         c.set("serving.double_buffer", "false").unwrap();
         c.set("serving.max_batch", "64").unwrap();
         c.set("serving.max_wait_us", "500").unwrap();
+        c.set("serving.listen", "0.0.0.0:7411").unwrap();
         assert!(!c.serving.double_buffer);
         assert_eq!(c.serving.max_batch, 64);
         assert_eq!(c.serving.max_wait_us, 500);
+        assert_eq!(c.serving.listen, "0.0.0.0:7411");
         let j = c.to_json();
         let mut c2 = Config::default();
         c2.apply_json(&j).unwrap();
         assert!(!c2.serving.double_buffer);
         assert_eq!(c2.serving.max_batch, 64);
         assert_eq!(c2.serving.max_wait_us, 500);
+        assert_eq!(c2.serving.listen, "0.0.0.0:7411");
         c.serving.max_batch = 0;
+        assert!(c.validate().is_err());
+        c.serving.max_batch = 32;
+        c.serving.listen = String::new();
         assert!(c.validate().is_err());
     }
 

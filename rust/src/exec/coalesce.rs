@@ -51,6 +51,27 @@ impl<T> CoalesceQueue<T> {
         true
     }
 
+    /// Enqueue a whole batch under ONE lock acquisition, so the items
+    /// are contiguous in the queue and a single `drain_batch` collects
+    /// them together (up to its `max_batch`) — the wave-aware submit
+    /// path: a decoded wire wave lands as one coalesced batch instead of
+    /// interleaving with other producers item by item. All-or-nothing:
+    /// returns `false` (dropping every item) if the queue is closed.
+    pub fn push_many(&self, items: Vec<T>) -> bool {
+        if items.is_empty() {
+            return true;
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        st.items.extend(items);
+        drop(st);
+        // Single consumer: one wake drains the whole contiguous run.
+        self.cv.notify_one();
+        true
+    }
+
     /// Block until at least one item arrives (or the queue closes), then
     /// collect until `max_batch` items are in hand or `max_wait` elapses.
     /// Returns `None` only when the queue is closed *and* empty — the

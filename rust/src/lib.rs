@@ -30,17 +30,26 @@
 //!   machinery under `serving.double_buffer` (on by default),
 //!   overlapping tree refresh with the step's loss execution.
 //! * **L4 ([`transport`])** — the cross-process serving transport: a
-//!   std-only, length-prefixed, versioned binary wire protocol over
-//!   Unix domain sockets ([`transport::wire`]), a
+//!   std-only, length-prefixed, versioned binary wire protocol
+//!   ([`transport::wire`]) over Unix domain sockets on one machine or
+//!   **TCP across machines** ([`transport::TransportServer::bind_tcp`],
+//!   config `serving.listen`, `TCP_NODELAY` everywhere), with a
 //!   [`transport::TransportServer`] accept loop feeding decoded
 //!   requests from every connection into the shared micro-batcher (so
 //!   coalescing spans connections), and a
 //!   [`transport::TransportClient`] with sync and pipelined modes.
+//!   Wire v3 adds **batched wave frames**: a pipelined burst packs into
+//!   one frame (one header parse per wave instead of per request,
+//!   `serve-bench --wave N`), the server submits the decoded wave to
+//!   the batcher as ONE coalesced batch, replies to v3 peers pack the
+//!   same way, and v2 single-frame peers interoperate untouched.
 //!   Per-request seeds ride the wire, so identical seeds produce
-//!   byte-identical draws in-process and remotely. Per-connection
-//!   backpressure (in-flight cap + typed `ERR_OVERLOAD` sheds + reader
-//!   flow control) bounds server memory against slow pipelined clients,
-//!   and responses encode zero-copy into reused per-connection buffers.
+//!   byte-identical draws in-process, over uds, and over tcp.
+//!   Per-connection backpressure (in-flight cap + typed `ERR_OVERLOAD`
+//!   sheds + reader flow control) bounds server memory against slow
+//!   pipelined clients — waves are admitted or shed whole, never split
+//!   across an overload boundary — and responses encode zero-copy into
+//!   reused per-connection buffers.
 //!
 //! ## Mutable class universe (this PR's tentpole)
 //!
@@ -195,7 +204,11 @@
 //! (plus `perf_hotpath` / `perf_serving` for the hot-path and serving
 //! throughput trajectories, and `rfsoftmax serve-bench` for a closed-loop
 //! load test from the CLI — `serve-bench --transport uds --mix 8:1:1`
-//! drives it cross-process through the L4 wire).
+//! drives it cross-process through the L4 wire, `--transport tcp` runs
+//! the same loop over a TCP listener bound at `serving.listen`, and
+//! `--wave 32` packs the pipelined bursts into wire v3 batched wave
+//! frames, cutting frame-header parses per request by ~the wave size —
+//! the BENCH JSON's `req_headers_per_request` field tracks it).
 
 pub mod benchkit;
 pub mod bias;
@@ -243,8 +256,8 @@ pub mod prelude {
         ServeReply, TransportMode,
     };
     pub use crate::transport::{
-        ProtocolError, TransportClient, TransportServer, TransportStats,
-        VocabAdmin,
+        Endpoint, ProtocolError, TransportClient, TransportServer,
+        TransportStats, VocabAdmin,
     };
     pub use crate::softmax::{
         full_softmax_loss, sampled_softmax_loss, SampledLoss,

@@ -7,6 +7,8 @@
 //! rfsoftmax bias --sampler.kind uniform
 //! rfsoftmax serve-bench --threads 8 --sampler.shards 8  # serving load test
 //! rfsoftmax serve-bench --transport uds --mix 8:1:1     # cross-process wire
+//! rfsoftmax serve-bench --transport tcp --wave 32       # TCP + batched waves
+//! rfsoftmax bench-check BENCH_serving.json              # validate BENCH JSON
 //! ```
 
 use anyhow::{bail, Result};
@@ -39,12 +41,14 @@ fn dispatch(args: &[String]) -> Result<()> {
         "sample" => cmd_sample(rest),
         "bias" => cmd_bias(rest),
         "serve-bench" => cmd_serve_bench(rest),
+        "bench-check" => cmd_bench_check(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
         }
         other => bail!(
-            "unknown command '{other}' (try: train, info, sample, bias, serve-bench)"
+            "unknown command '{other}' (try: train, info, sample, bias, \
+             serve-bench, bench-check)"
         ),
     }
 }
@@ -57,7 +61,8 @@ fn print_usage() {
          info         list compiled AOT artifacts\n  \
          sample       standalone sampling demo (no artifacts needed)\n  \
          bias         gradient-bias diagnostic (Theorem 1 empirics)\n  \
-         serve-bench  closed-loop load test of the serving subsystem\n\n\
+         serve-bench  closed-loop load test of the serving subsystem\n  \
+         bench-check  validate BENCH JSON records (CI bench-smoke gate)\n\n\
          Run `rfsoftmax <command> --help` for flags."
     );
 }
@@ -207,8 +212,17 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
                     },
                     FlagSpec {
                         name: "transport",
-                        help: "inproc (direct batcher calls) or uds (unix-socket wire)",
+                        help: "inproc (direct batcher calls), uds \
+                               (unix-socket wire), or tcp (cross-machine \
+                               wire; binds serving.listen)",
                         default: Some("inproc".into()),
+                    },
+                    FlagSpec {
+                        name: "wave",
+                        help: "pack each reader's pipelined burst into \
+                               wire v3 wave frames of N sub-requests \
+                               (1 = one frame per request; uds/tcp only)",
+                        default: Some("1".into()),
                     },
                     FlagSpec {
                         name: "mix",
@@ -257,6 +271,7 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
     let requests = a.usize_or("requests", 2000)?;
     let transport =
         rfsoftmax::serving::TransportMode::parse(a.str_or("transport", "inproc"))?;
+    let wave = a.usize_or("wave", 1)?;
     let mix = rfsoftmax::serving::RequestMix::parse(a.str_or("mix", "1:0:0"))?;
     let top_k = a.usize_or("top-k", 10)?;
     let churn = match a.get("churn") {
@@ -294,10 +309,13 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
         transport,
         mix,
         churn,
+        wave,
+        listen: cfg.serving.listen.clone(),
     };
     println!(
-        "serve-bench: sampler={} n={n} d={d} m={} transport={} mix={} \
-         readers={threads} requests/reader={requests} max_batch={} max_wait={}µs",
+        "serve-bench: sampler={} n={n} d={d} m={} transport={} wave={wave} \
+         mix={} readers={threads} requests/reader={requests} max_batch={} \
+         max_wait={}µs",
         sampler.name(),
         spec.m,
         transport.name(),
@@ -308,6 +326,134 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
     let report = rfsoftmax::serving::run_closed_loop(sampler.as_ref(), &spec)?;
     println!("{}", report.render());
     println!("BENCH {}", report.to_json());
+    Ok(())
+}
+
+/// Validate BENCH JSON artifacts with the in-crate `json` parser — the
+/// CI `bench-smoke` gate. Each positional file may hold raw
+/// `BENCH {json}` lines (as the benches print them) or bare JSON lines;
+/// every record must parse, and at least one record must exist overall.
+/// With `--require-wave-amortization R`, the serving records must also
+/// prove the batched-wave win: some tcp `wave > 1` record's
+/// `req_headers_per_request` must be ≤ 1/R of a tcp `wave == 1` record's
+/// at the same mix (the ISSUE 5 acceptance gate, checked by machine
+/// rather than by review).
+fn cmd_bench_check(raw: &[String]) -> Result<()> {
+    let a = Args::parse(raw, &["help"])?;
+    if a.has("help") {
+        println!(
+            "{}",
+            render_help(
+                "bench-check",
+                "validate BENCH JSON records emitted by the benches",
+                &[
+                    FlagSpec {
+                        name: "require-wave-amortization",
+                        help: "also require a tcp wave>1 serving record \
+                               with per-request header overhead reduced \
+                               by ≥ this factor vs the wave=1 record at \
+                               the same mix",
+                        default: None,
+                    },
+                    FlagSpec {
+                        name: "<files…>",
+                        help: "files of BENCH lines (positional)",
+                        default: None,
+                    },
+                ]
+            )
+        );
+        return Ok(());
+    }
+    a.check_known(&["help", "require-wave-amortization"])?;
+    anyhow::ensure!(
+        !a.positional().is_empty(),
+        "bench-check: give at least one BENCH file"
+    );
+    let mut records: Vec<rfsoftmax::json::Json> = Vec::new();
+    for file in a.positional() {
+        let text = std::fs::read_to_string(file)
+            .map_err(|e| anyhow::anyhow!("read {file}: {e}"))?;
+        let mut in_file = 0usize;
+        for (lineno, line) in text.lines().enumerate() {
+            let body = match line.strip_prefix("BENCH ") {
+                Some(b) => b,
+                None if line.trim_start().starts_with('{') => line,
+                None => continue,
+            };
+            let j = rfsoftmax::json::parse(body).map_err(|e| {
+                anyhow::anyhow!("{file}:{}: invalid BENCH JSON: {e}", lineno + 1)
+            })?;
+            anyhow::ensure!(
+                j.get("bench").and_then(|b| b.as_str()).is_some(),
+                "{file}:{}: BENCH record lacks a 'bench' tag",
+                lineno + 1
+            );
+            in_file += 1;
+            records.push(j);
+        }
+        anyhow::ensure!(in_file > 0, "{file}: no BENCH records found");
+        println!("bench-check: {file}: {in_file} records ok");
+    }
+    if let Some(factor) = a.get("require-wave-amortization") {
+        let factor: f64 = factor.parse().map_err(|_| {
+            anyhow::anyhow!("--require-wave-amortization: bad factor '{factor}'")
+        })?;
+        let serving = |j: &rfsoftmax::json::Json, key: &str| -> Option<f64> {
+            if j.get("bench")?.as_str()? != "serving_closed_loop"
+                || j.get("transport")?.as_str()? != "tcp"
+            {
+                return None;
+            }
+            j.get(key)?.as_f64()
+        };
+        // Best (baseline, waved) pair = the one with the largest
+        // reduction, over all same-mix tcp record pairs.
+        let mut best: Option<(f64, f64)> = None;
+        for base in &records {
+            let (Some(1), Some(hdr)) = (
+                base.get("wave").and_then(|w| w.as_usize()),
+                serving(base, "req_headers_per_request"),
+            ) else {
+                continue;
+            };
+            let mix = base.get("mix").and_then(|m| m.as_str());
+            for waved in &records {
+                let (Some(w), Some(whdr)) = (
+                    waved.get("wave").and_then(|w| w.as_usize()),
+                    serving(waved, "req_headers_per_request"),
+                ) else {
+                    continue;
+                };
+                if w <= 1 || waved.get("mix").and_then(|m| m.as_str()) != mix {
+                    continue;
+                }
+                let reduction = hdr / whdr.max(1e-12);
+                let best_reduction =
+                    best.map_or(0.0, |(b, v)| b / v.max(1e-12));
+                if reduction > best_reduction {
+                    best = Some((hdr, whdr));
+                }
+            }
+        }
+        let Some((baseline, waved)) = best else {
+            bail!(
+                "bench-check: no tcp wave=1/wave>1 serving record pair at a \
+                 shared mix — cannot prove wave amortization"
+            );
+        };
+        let reduction = baseline / waved.max(1e-12);
+        anyhow::ensure!(
+            reduction >= factor,
+            "bench-check: header overhead reduced {reduction:.1}× \
+             (baseline {baseline:.4} → waved {waved:.4}), need ≥ {factor}×"
+        );
+        println!(
+            "bench-check: wave amortization {reduction:.1}× \
+             (hdr/req {baseline:.4} → {waved:.4}) ≥ {factor}× ok"
+        );
+    }
+    println!("bench-check: {} records valid", records.len());
     Ok(())
 }
 

@@ -79,8 +79,11 @@ impl QueryReply {
 
 /// Callback invoked with the request's outcome. `Err` carries the serve
 /// failure message (e.g. a query dimension the feature map rejects) —
-/// the batcher itself survives every failure.
-type ReplyFn = Box<dyn FnOnce(Result<QueryReply, String>) + Send>;
+/// the batcher itself survives every failure. Public alias so the
+/// transport layer can pre-box callbacks for [`MicroBatcher::submit_wave`].
+pub type SubmitReply = Box<dyn FnOnce(Result<QueryReply, String>) + Send>;
+
+type ReplyFn = SubmitReply;
 
 struct Pending {
     h: Vec<f32>,
@@ -134,6 +137,26 @@ impl MicroBatcher {
         reply: impl FnOnce(Result<QueryReply, String>) + Send + 'static,
     ) -> bool {
         self.queue.push(Pending { h, query, reply: Box::new(reply) })
+    }
+
+    /// Enqueue a whole decoded wire wave as ONE contiguous run in the
+    /// coalescing queue (single lock acquisition), so the wave lands in
+    /// a single drain and is served as one coalesced batch — one
+    /// `map_batch` gemm for the burst (waves larger than
+    /// `serving.max_batch` split across consecutive drains). Every
+    /// callback is invoked exactly once, like [`MicroBatcher::submit`];
+    /// all-or-nothing `false` after shutdown (dropping the callbacks
+    /// unserved — the transport answers those itself).
+    pub fn submit_wave(
+        &self,
+        entries: Vec<(Vec<f32>, ServeQuery, SubmitReply)>,
+    ) -> bool {
+        self.queue.push_many(
+            entries
+                .into_iter()
+                .map(|(h, query, reply)| Pending { h, query, reply })
+                .collect(),
+        )
     }
 
     /// Submit one request and block for its reply; panics if the serve

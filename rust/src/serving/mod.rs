@@ -43,7 +43,9 @@ mod loadgen;
 mod server;
 mod service;
 
-pub use batcher::{BatcherOptions, MicroBatcher, QueryReply, ServeReply};
+pub use batcher::{
+    BatcherOptions, MicroBatcher, QueryReply, ServeReply, SubmitReply,
+};
 pub use loadgen::{
     run_closed_loop, ChurnSpec, LoadReport, LoadSpec, RequestMix,
     SharedWriterAdmin, TransportMode,

@@ -1,14 +1,18 @@
 //! Client side of the serving transport: sync request/response plus a
 //! pipelined mode that keeps many requests in flight on one connection
 //! (that is what makes server-side coalescing reachable from a single
-//! closed-loop client).
+//! closed-loop client). Transport-agnostic: the same client speaks over
+//! a unix socket ([`TransportClient::connect`]) or TCP
+//! ([`TransportClient::connect_tcp`], `TCP_NODELAY` set).
 
-use super::wire::{self, ProtocolError, Request, Response};
+use super::net::{Endpoint, Stream};
+use super::wire::{self, ProtocolError, Request, Response, ResponseFrame};
 use crate::linalg::Matrix;
 use crate::sampler::NegativeDraw;
 use crate::serving::ServeReply;
+use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter, Write};
-use std::os::unix::net::UnixStream;
+use std::net::ToSocketAddrs;
 use std::path::Path;
 
 /// One connection to a [`super::TransportServer`].
@@ -16,23 +20,57 @@ use std::path::Path;
 /// * **Sync mode** ([`TransportClient::sample`] /
 ///   [`TransportClient::probability`] / [`TransportClient::top_k`]): one
 ///   request on the wire at a time, response id checked.
-/// * **Pipelined mode** ([`TransportClient::pipeline`]): a whole wave of
-///   requests is written before any response is read; responses are
-///   matched back to request order by id, so the server may answer out
-///   of order.
+/// * **Pipelined mode** ([`TransportClient::pipeline`] /
+///   [`TransportClient::pipeline_waves`]): a whole burst of requests is
+///   kept in flight behind a sliding window; responses are matched back
+///   to request order by id, so the server may answer out of order.
+///   `pipeline_waves` additionally packs the burst into wire v3 **wave
+///   frames** — one header per `wave` requests instead of per request —
+///   and accepts wave response frames back.
 pub struct TransportClient {
-    reader: BufReader<UnixStream>,
-    writer: BufWriter<UnixStream>,
+    reader: BufReader<Stream>,
+    writer: BufWriter<Stream>,
     next_id: u64,
     /// Reused encode buffer (zero-copy frame path: one allocation serves
     /// every request this client ever sends).
     encode_buf: Vec<u8>,
+    /// Sub-responses decoded from a wave frame beyond the one the
+    /// current `recv_any` caller consumed.
+    pending: VecDeque<(u64, Response)>,
+    /// Frames carrying responses parsed, and responses received — the
+    /// client-side per-request header overhead is
+    /// `resp_frames / resp_items` (1.0 without waves, ≈ 1/wave with
+    /// packed replies).
+    resp_frames: u64,
+    resp_items: u64,
 }
 
 impl TransportClient {
-    /// Connect to a serving socket.
+    /// Connect to a serving unix socket.
     pub fn connect(path: impl AsRef<Path>) -> std::io::Result<TransportClient> {
-        let stream = UnixStream::connect(path)?;
+        Self::from_stream(Stream::connect(&Endpoint::Uds(
+            path.as_ref().to_path_buf(),
+        ))?)
+    }
+
+    /// Connect to a serving TCP address (e.g. `"127.0.0.1:7411"`);
+    /// `TCP_NODELAY` is set — frames are written whole, so Nagle could
+    /// only add latency.
+    pub fn connect_tcp(
+        addr: impl ToSocketAddrs,
+    ) -> std::io::Result<TransportClient> {
+        Self::from_stream(Stream::connect_tcp(addr)?)
+    }
+
+    /// Connect to whichever endpoint a server reports
+    /// ([`super::TransportServer::endpoint`]).
+    pub fn connect_endpoint(
+        endpoint: &Endpoint,
+    ) -> std::io::Result<TransportClient> {
+        Self::from_stream(Stream::connect(endpoint)?)
+    }
+
+    fn from_stream(stream: Stream) -> std::io::Result<TransportClient> {
         let reader = BufReader::new(stream.try_clone()?);
         let writer = BufWriter::new(stream);
         Ok(TransportClient {
@@ -40,7 +78,16 @@ impl TransportClient {
             writer,
             next_id: 1,
             encode_buf: Vec::with_capacity(4 * 1024),
+            pending: VecDeque::new(),
+            resp_frames: 0,
+            resp_items: 0,
         })
+    }
+
+    /// `(response frames parsed, responses received)` so far — the
+    /// header-amortization observable on the reply direction.
+    pub fn frame_stats(&self) -> (u64, u64) {
+        (self.resp_frames, self.resp_items)
     }
 
     fn send(&mut self, id: u64, req: &Request) -> Result<(), ProtocolError> {
@@ -51,10 +98,27 @@ impl TransportClient {
         Ok(())
     }
 
-    fn recv(&mut self) -> Result<(u64, Response), ProtocolError> {
-        match wire::read_response(&mut self.reader)? {
-            Some(x) => Ok(x),
+    /// Next `(id, response)`, transparently unpacking wave response
+    /// frames (subs beyond the first queue up for subsequent calls).
+    fn recv_any(&mut self) -> Result<(u64, Response), ProtocolError> {
+        if let Some(x) = self.pending.pop_front() {
+            return Ok(x);
+        }
+        match wire::read_response_frame(&mut self.reader)? {
             None => Err(ProtocolError::Truncated),
+            Some(ResponseFrame::Single(id, resp)) => {
+                self.resp_frames += 1;
+                self.resp_items += 1;
+                Ok((id, resp))
+            }
+            Some(ResponseFrame::Wave(mut subs)) => {
+                self.resp_frames += 1;
+                self.resp_items += subs.len() as u64;
+                // decode_wave rejects empty waves, so there is a first.
+                let first = subs.remove(0);
+                self.pending.extend(subs);
+                Ok(first)
+            }
         }
     }
 
@@ -65,7 +129,7 @@ impl TransportClient {
         let id = self.next_id;
         self.next_id += 1;
         self.send(id, req)?;
-        let (got_id, resp) = self.recv()?;
+        let (got_id, resp) = self.recv_any()?;
         match resp {
             Response::Error { code, message } => {
                 Err(ProtocolError::Remote { code, message })
@@ -153,30 +217,52 @@ impl TransportClient {
         }
     }
 
-    /// Pipelined wave with a **sliding window**: keep up to
-    /// `PIPELINE_WINDOW` requests in flight, topping the window up in
-    /// buffered chunks and reading responses as they stream back.
-    /// Windowing is what makes arbitrarily large waves safe: a client
-    /// that blind-writes a whole wave before reading can deadlock
-    /// against the server's flow control once both socket buffers fill
-    /// (server reader throttled at its outstanding-reply ceiling, server
-    /// writer blocked on an unread socket). The window also stays below
-    /// the server's per-connection in-flight cap, so a well-behaved
-    /// client is never shed.
+    /// Pipelined burst with single-request frames (wire v2 compatible):
+    /// [`TransportClient::pipeline_waves`] with a wave size of 1.
+    pub fn pipeline(
+        &mut self,
+        requests: &[Request],
+    ) -> Result<Vec<Response>, ProtocolError> {
+        self.pipeline_waves(requests, 1)
+    }
+
+    /// Pipelined burst with a **wave-gated sliding window**: requests
+    /// are packed into wire v3 wave frames of up to `wave` sub-requests
+    /// (one header parse per wave at the server instead of per request,
+    /// and the whole wave lands in the batcher as one coalesced batch),
+    /// while a sliding window keeps the in-flight total below the
+    /// server's shed cap. The window advances in *whole waves* — a wave
+    /// is written in full or not at all, so it can never be split across
+    /// an `ERR_OVERLOAD` boundary, and the server's wave-level cap check
+    /// mirrors the same all-or-nothing contract. `wave == 1` degrades to
+    /// plain single-request frames (no v3 needed on the peer). Waves
+    /// beyond [`wire::MAX_WAVE`] sub-requests or ~1 MiB of encoding are
+    /// chunked into consecutive frames.
+    ///
+    /// Windowing is what makes arbitrarily large bursts safe: a client
+    /// that blind-writes everything before reading can deadlock against
+    /// the server's flow control once both socket buffers fill (server
+    /// reader throttled at its outstanding-reply ceiling, server writer
+    /// blocked on an unread socket). The window also stays below the
+    /// server's per-connection in-flight cap, so a well-behaved client
+    /// is never shed.
     ///
     /// Returns responses in *request order* regardless of the order the
     /// server answered in; per-request failures — serve rejections and
     /// [`wire::ERR_OVERLOAD`] backpressure sheds — appear as
-    /// [`Response::Error`] entries rather than failing the wave.
-    pub fn pipeline(
+    /// [`Response::Error`] entries rather than failing the burst.
+    pub fn pipeline_waves(
         &mut self,
         requests: &[Request],
+        wave: usize,
     ) -> Result<Vec<Response>, ProtocolError> {
         /// Max requests awaiting replies — half the server's shed cap,
         /// so coalescing stays deep while overload shedding never
         /// engages for this client.
         const PIPELINE_WINDOW: usize = super::server::MAX_IN_FLIGHT / 2;
 
+        assert!(wave >= 1, "pipeline_waves: wave must be ≥ 1");
+        let wave = wave.min(wire::MAX_WAVE);
         if requests.is_empty() {
             return Ok(Vec::new());
         }
@@ -187,30 +273,70 @@ impl TransportClient {
         let mut received = 0usize;
         while received < requests.len() {
             // Top the window up in one buffered write whenever it drops
-            // to half depth (amortizes write syscalls without ever
-            // letting the in-flight count exceed the window).
+            // to half depth (amortizes write syscalls without letting
+            // the in-flight count exceed the window). The windowing unit
+            // is the emitted wire FRAME: every frame leaves this loop
+            // either at `in_flight == 0` (the server's wave-level
+            // admission takes any single frame whole) or with
+            // `in_flight + frame ≤ PIPELINE_WINDOW < MAX_IN_FLIGHT` —
+            // so no frame can ever arrive with the shed cap already
+            // consumed, even when byte-chunking splits one logical wave
+            // across frames. That is what keeps the never-shed /
+            // never-split-across-ERR_OVERLOAD contract intact.
             let in_flight = sent - received;
-            if sent < requests.len() && in_flight <= PIPELINE_WINDOW / 2 {
-                let until =
-                    requests.len().min(received + PIPELINE_WINDOW);
+            if sent < requests.len()
+                && (in_flight == 0
+                    || (in_flight <= PIPELINE_WINDOW / 2
+                        && in_flight + wave <= PIPELINE_WINDOW))
+            {
                 self.encode_buf.clear();
-                for (i, req) in
-                    requests.iter().enumerate().take(until).skip(sent)
-                {
-                    wire::encode_request(
-                        &mut self.encode_buf,
-                        base + i as u64,
-                        req,
-                    );
+                let mut new_sent = sent;
+                while new_sent < requests.len() {
+                    let w = wave.min(requests.len() - new_sent);
+                    let in_f = new_sent - received;
+                    if in_f > 0 && in_f + w > PIPELINE_WINDOW {
+                        break;
+                    }
+                    if w == 1 {
+                        wire::encode_request(
+                            &mut self.encode_buf,
+                            base + new_sent as u64,
+                            &requests[new_sent],
+                        );
+                        new_sent += 1;
+                    } else {
+                        // ONE wave frame: up to `w` subs, closed early at
+                        // the shared soft byte bound so it never nears
+                        // MAX_PAYLOAD (whose violation would kill the
+                        // connection); the leftover subs go through the
+                        // window check again as their own frame.
+                        let frame_start = self.encode_buf.len();
+                        let mut enc = wire::WaveEncoder::begin_request_wave(
+                            &mut self.encode_buf,
+                        );
+                        while enc.count() < w
+                            && (enc.count() == 0
+                                || self.encode_buf.len() - frame_start
+                                    < wire::WAVE_SOFT_PAYLOAD)
+                        {
+                            enc.push_request(
+                                &mut self.encode_buf,
+                                base + new_sent as u64,
+                                &requests[new_sent],
+                            );
+                            new_sent += 1;
+                        }
+                        enc.finish(&mut self.encode_buf);
+                    }
                 }
                 self.writer.write_all(&self.encode_buf)?;
                 self.writer.flush()?;
-                sent = until;
+                sent = new_sent;
             }
-            let (id, resp) = self.recv()?;
+            let (id, resp) = self.recv_any()?;
             if let Response::Error { code, message } = &resp {
                 // Connection-level errors (id 0 / protocol code) fail
-                // the whole wave; request-level errors (serve failures,
+                // the whole burst; request-level errors (serve failures,
                 // overload sheds) fill their slot.
                 if !matches!(*code, wire::ERR_SERVE | wire::ERR_OVERLOAD) {
                     return Err(ProtocolError::Remote {

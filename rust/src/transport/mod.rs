@@ -1,28 +1,44 @@
 //! L4 — the cross-process serving transport: the serving subsystem
-//! (L3.5) behind a real wire.
+//! (L3.5) behind a real wire, over unix sockets on one machine or TCP
+//! across machines.
 //!
 //! The paper's `O(D log n)` per-draw cost only dominates serving cost at
 //! production scale if the plumbing around the tree walks is cheap and
 //! shared-work amortization survives the process boundary. This layer
 //! supplies both:
 //!
-//! * [`wire`] — a std-only, length-prefixed, versioned binary protocol
-//!   over Unix domain sockets: request/response codecs for `sample`,
-//!   `probability`, and `top_k`, with per-request seeds on the wire so
-//!   served draws stay deterministic across process boundaries (the same
-//!   (seed, query, epoch) yields byte-identical draws in-process and
-//!   remotely). Framing violations decode to a typed
-//!   [`ProtocolError`] and close only the offending connection.
+//! * [`wire`] — a std-only, length-prefixed, versioned binary protocol:
+//!   request/response codecs for `sample`, `probability`, and `top_k`,
+//!   with per-request seeds on the wire so served draws stay
+//!   deterministic across process boundaries (the same (seed, query,
+//!   epoch) yields byte-identical draws in-process, over uds, and over
+//!   tcp). Wire v3 adds **batched wave frames**: a pipelined burst packs
+//!   into one frame — one header parse and one length check per wave
+//!   instead of per request — with sub-request ids preserved and
+//!   per-sub-request errors isolated; v2 peers interoperate untouched.
+//!   Framing violations decode to a typed [`ProtocolError`] and close
+//!   only the offending connection.
+//! * [`net`](self) (internal) — a socket-agnostic stream substrate: the
+//!   server and client are parameterized over unix-domain and TCP
+//!   sockets ([`Endpoint`]), with `TCP_NODELAY` on every TCP connection
+//!   (frames are written whole; Nagle could only add latency).
 //! * [`TransportServer`] (`server.rs`) — accept loop + per-connection
 //!   reader/writer threads feeding decoded requests into the
 //!   [`crate::serving::MicroBatcher`] through its non-blocking callback
 //!   API, so requests from *all* connections coalesce into shared
 //!   `map_batch` waves and responses stream back per connection, matched
-//!   by echoed request id.
+//!   by echoed request id. A decoded wire wave is submitted as ONE
+//!   coalesced batch (`MicroBatcher::submit_wave`), the per-connection
+//!   in-flight cap admits or sheds waves whole (never split across an
+//!   `ERR_OVERLOAD` boundary), and replies to v3 peers pack into wave
+//!   response frames. Binds a uds path ([`TransportServer::bind`]) or a
+//!   TCP address ([`TransportServer::bind_tcp`], config
+//!   `serving.listen`).
 //! * [`TransportClient`] (`client.rs`) — sync and pipelined modes; the
-//!   pipelined wave is what makes server-side coalescing reachable from
-//!   a single closed-loop client, and is how `serve-bench --transport
-//!   uds` drives its cross-process closed loop.
+//!   pipelined burst is what makes server-side coalescing reachable from
+//!   a single closed-loop client ([`TransportClient::pipeline_waves`]
+//!   packs it into wave frames), and is how `serve-bench --transport
+//!   uds|tcp [--wave N]` drives its cross-process closed loop.
 //!
 //! The fan-out under all of this runs on the persistent
 //! [`crate::exec::serve_pool`] — zero per-batch thread spawns on the
@@ -31,8 +47,10 @@
 pub mod wire;
 
 mod client;
+mod net;
 mod server;
 
 pub use client::TransportClient;
+pub use net::Endpoint;
 pub use server::{TransportServer, TransportStats, VocabAdmin, MAX_IN_FLIGHT};
 pub use wire::{ProtocolError, Request, Response};

@@ -1,0 +1,151 @@
+//! Socket-agnostic stream substrate for the serving transport.
+//!
+//! The frame codec in [`super::wire`] reads and writes through generic
+//! `Read + Write` streams, so the transport server/client are
+//! parameterized over the *kind* of socket by the two small enums here:
+//! [`Stream`] (a connected byte stream) and [`Listener`] (an accepting
+//! endpoint), each delegating to the `std` unix-domain or TCP primitive.
+//! An enum — not a trait object — because the server needs concrete
+//! capabilities (`try_clone`, `shutdown`, nonblocking accept) that `dyn
+//! Read + Write` cannot offer, and std-only rules out a generic
+//! `mio`-style abstraction.
+//!
+//! TCP streams get `TCP_NODELAY` set on both the accept and connect
+//! paths: the wire protocol writes whole frames (and whole batched
+//! waves) with single `write_all` calls, so Nagle's algorithm could only
+//! add latency, never useful coalescing — the batching already happened
+//! at the frame layer.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+
+/// Where a [`super::TransportServer`] is reachable: a unix-socket path
+/// on this machine, or a TCP address that may cross machines. For TCP
+/// this is the *actual* bound address — binding `serving.listen =
+/// "127.0.0.1:0"` yields the kernel-assigned port, so tests and benches
+/// can run loopback listeners without port coordination.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    Uds(PathBuf),
+    Tcp(SocketAddr),
+}
+
+impl std::fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Endpoint::Uds(p) => write!(f, "uds:{}", p.display()),
+            Endpoint::Tcp(a) => write!(f, "tcp:{a}"),
+        }
+    }
+}
+
+/// One connected byte stream of either flavor. Implements `Read`/`Write`
+/// by delegation so the [`super::wire`] codecs are oblivious to the
+/// underlying socket kind.
+#[derive(Debug)]
+pub(crate) enum Stream {
+    Uds(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    /// Connect to an endpoint (TCP connects get `TCP_NODELAY`).
+    pub(crate) fn connect(endpoint: &Endpoint) -> std::io::Result<Stream> {
+        match endpoint {
+            Endpoint::Uds(p) => Ok(Stream::Uds(UnixStream::connect(p)?)),
+            Endpoint::Tcp(a) => {
+                let s = TcpStream::connect(a)?;
+                s.set_nodelay(true)?;
+                Ok(Stream::Tcp(s))
+            }
+        }
+    }
+
+    /// Connect to a TCP address given in any `ToSocketAddrs` form.
+    pub(crate) fn connect_tcp(
+        addr: impl ToSocketAddrs,
+    ) -> std::io::Result<Stream> {
+        let s = TcpStream::connect(addr)?;
+        s.set_nodelay(true)?;
+        Ok(Stream::Tcp(s))
+    }
+
+    pub(crate) fn try_clone(&self) -> std::io::Result<Stream> {
+        Ok(match self {
+            Stream::Uds(s) => Stream::Uds(s.try_clone()?),
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+        })
+    }
+
+    pub(crate) fn shutdown(
+        &self,
+        how: std::net::Shutdown,
+    ) -> std::io::Result<()> {
+        match self {
+            Stream::Uds(s) => s.shutdown(how),
+            Stream::Tcp(s) => s.shutdown(how),
+        }
+    }
+
+    pub(crate) fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Uds(s) => s.set_nonblocking(nb),
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Uds(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Uds(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Uds(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// An accepting endpoint of either flavor, nonblocking so the accept
+/// loop can poll for shutdown.
+pub(crate) enum Listener {
+    Uds(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    pub(crate) fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Uds(l) => l.set_nonblocking(nb),
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    /// Accept one connection (TCP accepts get `TCP_NODELAY`).
+    pub(crate) fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Uds(l) => Ok(Stream::Uds(l.accept()?.0)),
+            Listener::Tcp(l) => {
+                let (s, _addr) = l.accept()?;
+                s.set_nodelay(true)?;
+                Ok(Stream::Tcp(s))
+            }
+        }
+    }
+}

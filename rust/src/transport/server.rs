@@ -1,4 +1,8 @@
-//! Unix-domain-socket accept loop feeding the serving micro-batcher.
+//! Accept loop feeding the serving micro-batcher — socket-agnostic: the
+//! same server logic binds a unix-domain socket ([`TransportServer::bind`])
+//! or a TCP listener ([`TransportServer::bind_tcp`], config key
+//! `serving.listen`, `TCP_NODELAY` on every accepted connection), so
+//! serving crosses machines with identical semantics.
 //!
 //! One thread accepts connections; each connection gets a reader thread
 //! (decodes frames, submits to the [`MicroBatcher`] via its non-blocking
@@ -6,6 +10,15 @@
 //! they all coalesce with everyone else's) and a writer thread (drains
 //! the connection's reply channel and encodes response frames, matched
 //! to requests by the echoed id, possibly out of order).
+//!
+//! **Batched wave frames** (wire v3): a pipelined burst arriving as one
+//! wave frame costs one header parse for the whole burst, and the
+//! decoded sub-requests are submitted to the batcher as ONE coalesced
+//! batch ([`MicroBatcher::submit_wave`]) — the wave is the batch. Once a
+//! connection has sent a wave (proving it speaks v3), the writer packs
+//! each drain of queued replies into wave response frames too, so the
+//! reply direction amortizes headers the same way. v2 peers never see a
+//! wave frame: their replies stay one frame per response.
 //!
 //! Framing violations answer with one `Error` frame (code
 //! [`wire::ERR_PROTOCOL`], request id 0) and close that connection only
@@ -18,25 +31,30 @@
 //! typed [`wire::ERR_OVERLOAD`] frame instead of being submitted, and
 //! past a hard outstanding-reply ceiling the reader simply stops reading
 //! the socket (classic flow control), so one slow pipelined client can
-//! never balloon server memory. The batcher's reply callbacks never
-//! block: pending batcher replies are bounded by the in-flight cap, and
-//! overload/error frames by the reader throttle.
+//! never balloon server memory. The cap is gated on *waves*, not
+//! sub-requests: a wave is admitted in full (the soft cap may overshoot
+//! by at most one wave, bounded by [`wire::MAX_WAVE`]) or shed in full —
+//! never split across an `ERR_OVERLOAD` boundary. The batcher's reply
+//! callbacks never block: pending batcher replies are bounded by the
+//! in-flight cap, and overload/error frames by the reader throttle.
 //!
 //! **Admin frames**: `ADD_CLASSES`/`RETIRE_CLASSES` route to an optional
 //! [`VocabAdmin`] hook (see [`TransportServer::bind_with_admin`]) that
 //! applies the mutation through the sampler writer as one epoch-versioned
 //! snapshot swap; without a hook they answer [`wire::ERR_SERVE`].
 
-use super::wire::{self, ProtocolError, Response};
-use crate::serving::{MicroBatcher, QueryReply};
+use super::net::{Endpoint, Listener, Stream};
+use super::wire::{self, ProtocolError, RequestFrame, Response};
+use crate::serving::{MicroBatcher, QueryReply, SubmitReply};
 use std::io::{BufReader, Write};
-use std::os::unix::net::{UnixListener, UnixStream};
+use std::os::unix::net::UnixListener;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
 /// Per-connection cap on requests submitted to the batcher and awaiting
 /// replies; beyond it requests are shed with [`wire::ERR_OVERLOAD`].
+/// Checked per wave for wave frames — a wave is never split by the cap.
 pub const MAX_IN_FLIGHT: usize = 1024;
 
 /// Hard per-connection ceiling on outstanding reply frames of any kind
@@ -55,6 +73,10 @@ const THROTTLE_POLL: std::time::Duration = std::time::Duration::from_micros(50);
 /// errors out and the handler exits, and on a merely-slow peer the
 /// overshoot is bounded to one frame per grace period.
 const THROTTLE_GRACE: std::time::Duration = std::time::Duration::from_secs(2);
+
+/// Max sub-responses the writer packs into one wave response frame; the
+/// byte bound is the shared [`wire::WAVE_SOFT_PAYLOAD`].
+const WAVE_PACK_MAX: usize = 256;
 
 /// Hook that applies admin (class-universe) mutations. Implemented over
 /// the serving layer's `SamplerWriter` (see
@@ -82,14 +104,24 @@ pub trait VocabAdmin: Send + Sync {
 pub struct TransportStats {
     /// Connections accepted so far.
     pub connections: u64,
-    /// Request frames decoded and submitted to the batcher.
+    /// Serve requests decoded (wave sub-requests included).
     pub requests: u64,
+    /// Frames carrying requests parsed (singles + waves): the
+    /// numerator of the per-request header overhead —
+    /// `request_frames / requests` is 1.0 for a single-frame client and
+    /// `≈ 1/wave` for a wave-batched one.
+    pub request_frames: u64,
+    /// Wave frames among `request_frames`.
+    pub wave_frames: u64,
+    /// Frames carrying responses written (wave packing makes this less
+    /// than the response count for v3 connections).
+    pub response_frames: u64,
     /// Framing violations that closed a connection.
     pub protocol_errors: u64,
     /// Admin (add/retire) frames applied.
     pub admin_requests: u64,
     /// Requests shed with [`wire::ERR_OVERLOAD`] (per-connection
-    /// in-flight cap exceeded).
+    /// in-flight cap exceeded; every sub-request of a shed wave counts).
     pub overloads: u64,
 }
 
@@ -99,6 +131,9 @@ struct Shared {
     shutdown: AtomicBool,
     connections: AtomicU64,
     requests: AtomicU64,
+    request_frames: AtomicU64,
+    wave_frames: AtomicU64,
+    response_frames: AtomicU64,
     protocol_errors: AtomicU64,
     admin_requests: AtomicU64,
     overloads: AtomicU64,
@@ -106,7 +141,7 @@ struct Shared {
     /// shutdown can unblock their reader threads with a socket-level
     /// `shutdown(2)`. Handlers deregister themselves on exit, so this
     /// tracks open connections only — no fd growth under churn.
-    streams: Mutex<Vec<(u64, UnixStream)>>,
+    streams: Mutex<Vec<(u64, Stream)>>,
     /// Live connection-handler join handles (pushed by the accept
     /// thread, pruned of finished threads on each accept, drained on
     /// drop).
@@ -121,11 +156,12 @@ impl Shared {
     }
 }
 
-/// A running serving transport endpoint. Dropping it shuts down the
-/// accept loop and every connection, then removes the socket file.
+/// A running serving transport endpoint — unix-socket or TCP. Dropping
+/// it shuts down the accept loop and every connection, then removes the
+/// socket file (uds only).
 pub struct TransportServer {
     shared: Arc<Shared>,
-    path: PathBuf,
+    endpoint: Endpoint,
     accept: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -137,7 +173,7 @@ impl TransportServer {
         path: impl AsRef<Path>,
         batcher: Arc<MicroBatcher>,
     ) -> std::io::Result<TransportServer> {
-        Self::bind_inner(path, batcher, None)
+        Self::bind_uds_inner(path, batcher, None)
     }
 
     /// [`TransportServer::bind`] plus a [`VocabAdmin`] hook, enabling the
@@ -147,20 +183,61 @@ impl TransportServer {
         batcher: Arc<MicroBatcher>,
         admin: Arc<dyn VocabAdmin>,
     ) -> std::io::Result<TransportServer> {
-        Self::bind_inner(path, batcher, Some(admin))
+        Self::bind_uds_inner(path, batcher, Some(admin))
     }
 
-    fn bind_inner(
+    /// Bind a TCP listener at `addr` (e.g. `"127.0.0.1:7411"`; port `0`
+    /// asks the kernel for an ephemeral port — read the real one back
+    /// via [`TransportServer::endpoint`]) and start serving the given
+    /// batcher. This is what lets serving cross machines: the wire
+    /// protocol, backpressure, and determinism contracts are identical
+    /// to the unix-socket transport.
+    pub fn bind_tcp(
+        addr: &str,
+        batcher: Arc<MicroBatcher>,
+    ) -> std::io::Result<TransportServer> {
+        Self::bind_tcp_inner(addr, batcher, None)
+    }
+
+    /// [`TransportServer::bind_tcp`] plus a [`VocabAdmin`] hook.
+    pub fn bind_tcp_with_admin(
+        addr: &str,
+        batcher: Arc<MicroBatcher>,
+        admin: Arc<dyn VocabAdmin>,
+    ) -> std::io::Result<TransportServer> {
+        Self::bind_tcp_inner(addr, batcher, Some(admin))
+    }
+
+    fn bind_uds_inner(
         path: impl AsRef<Path>,
         batcher: Arc<MicroBatcher>,
         admin: Option<Arc<dyn VocabAdmin>>,
     ) -> std::io::Result<TransportServer> {
         let path = path.as_ref().to_path_buf();
         let _ = std::fs::remove_file(&path);
-        let listener = UnixListener::bind(&path)?;
+        let listener = Listener::Uds(UnixListener::bind(&path)?);
+        Self::start(listener, Endpoint::Uds(path), batcher, admin)
+    }
+
+    fn bind_tcp_inner(
+        addr: &str,
+        batcher: Arc<MicroBatcher>,
+        admin: Option<Arc<dyn VocabAdmin>>,
+    ) -> std::io::Result<TransportServer> {
+        let listener = std::net::TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        Self::start(Listener::Tcp(listener), Endpoint::Tcp(local), batcher, admin)
+    }
+
+    fn start(
+        listener: Listener,
+        endpoint: Endpoint,
+        batcher: Arc<MicroBatcher>,
+        admin: Option<Arc<dyn VocabAdmin>>,
+    ) -> std::io::Result<TransportServer> {
         // Nonblocking accept + a short poll lets shutdown terminate the
         // accept thread deterministically — a blocking accept(2) could
-        // only be woken by connecting to `path`, which hangs if the path
+        // only be woken by connecting to the endpoint, which hangs if it
         // no longer routes to this listener (unlinked or rebound).
         listener.set_nonblocking(true)?;
         let shared = Arc::new(Shared {
@@ -169,6 +246,9 @@ impl TransportServer {
             shutdown: AtomicBool::new(false),
             connections: AtomicU64::new(0),
             requests: AtomicU64::new(0),
+            request_frames: AtomicU64::new(0),
+            wave_frames: AtomicU64::new(0),
+            response_frames: AtomicU64::new(0),
             protocol_errors: AtomicU64::new(0),
             admin_requests: AtomicU64::new(0),
             overloads: AtomicU64::new(0),
@@ -182,18 +262,33 @@ impl TransportServer {
                 .spawn(move || accept_loop(&listener, &shared))
                 .expect("spawn transport accept loop")
         };
-        Ok(TransportServer { shared, path, accept: Some(accept) })
+        Ok(TransportServer { shared, endpoint, accept: Some(accept) })
     }
 
-    /// The socket path clients connect to.
+    /// Where clients connect: the uds path or the actual TCP address
+    /// (ephemeral port resolved).
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
+    }
+
+    /// The socket path clients connect to (unix-socket servers only;
+    /// panics on a TCP server — use [`TransportServer::endpoint`]).
     pub fn path(&self) -> &Path {
-        &self.path
+        match &self.endpoint {
+            Endpoint::Uds(p) => p,
+            Endpoint::Tcp(a) => {
+                panic!("TransportServer::path on tcp endpoint {a} — use endpoint()")
+            }
+        }
     }
 
     pub fn stats(&self) -> TransportStats {
         TransportStats {
             connections: self.shared.connections.load(Ordering::Relaxed),
             requests: self.shared.requests.load(Ordering::Relaxed),
+            request_frames: self.shared.request_frames.load(Ordering::Relaxed),
+            wave_frames: self.shared.wave_frames.load(Ordering::Relaxed),
+            response_frames: self.shared.response_frames.load(Ordering::Relaxed),
             protocol_errors: self.shared.protocol_errors.load(Ordering::Relaxed),
             admin_requests: self.shared.admin_requests.load(Ordering::Relaxed),
             overloads: self.shared.overloads.load(Ordering::Relaxed),
@@ -221,7 +316,9 @@ impl Drop for TransportServer {
         for h in handlers {
             let _ = h.join();
         }
-        let _ = std::fs::remove_file(&self.path);
+        if let Endpoint::Uds(path) = &self.endpoint {
+            let _ = std::fs::remove_file(path);
+        }
     }
 }
 
@@ -229,13 +326,13 @@ impl Drop for TransportServer {
 /// both shutdown latency and the cost of an accept-error storm (EMFILE).
 const ACCEPT_POLL: std::time::Duration = std::time::Duration::from_millis(5);
 
-fn accept_loop(listener: &UnixListener, shared: &Arc<Shared>) {
+fn accept_loop(listener: &Listener, shared: &Arc<Shared>) {
     loop {
         if shared.shutdown.load(Ordering::Relaxed) {
             break;
         }
         let stream = match listener.accept() {
-            Ok((stream, _addr)) => stream,
+            Ok(stream) => stream,
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(ACCEPT_POLL);
                 continue;
@@ -293,7 +390,16 @@ fn reply_to_response(result: Result<QueryReply, String>) -> Response {
     }
 }
 
-fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: UnixStream) {
+fn overload_response() -> Response {
+    Response::Error {
+        code: wire::ERR_OVERLOAD,
+        message: format!(
+            "connection exceeded {MAX_IN_FLIGHT} in-flight requests"
+        ),
+    }
+}
+
+fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: Stream) {
     // Whatever path exits this handler, drop the registry's stream clone
     // so closed connections release their duplicated fd immediately.
     struct Deregister<'a> {
@@ -317,19 +423,26 @@ fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: UnixStream) {
     let (tx, rx) = mpsc::channel::<(u64, Response)>();
     // Replies of any kind awaiting the writer (served + error frames):
     // incremented by the reader per answered request, decremented by the
-    // writer per frame written. Bounds this connection's queued memory.
+    // writer per response written. Bounds this connection's queued memory.
     let outstanding = Arc::new(AtomicUsize::new(0));
     // Subset submitted to the batcher and not yet answered — the soft
     // cap that sheds with ERR_OVERLOAD.
     let in_flight = Arc::new(AtomicUsize::new(0));
+    // Set once the peer sends a wave frame (proving it speaks wire v3);
+    // from then on the writer may pack replies into wave frames.
+    let wants_wave = Arc::new(AtomicBool::new(false));
     let writer = {
         let outstanding = Arc::clone(&outstanding);
+        let wants_wave = Arc::clone(&wants_wave);
+        let shared_w = Arc::clone(shared);
         std::thread::Builder::new()
             .name("rfsm-transport-write".into())
-            .spawn(move || writer_loop(writer_stream, &rx, &outstanding))
+            .spawn(move || {
+                writer_loop(writer_stream, &rx, &outstanding, &wants_wave, &shared_w)
+            })
     };
     let mut reader = BufReader::new(stream);
-    loop {
+    'conn: loop {
         // Hard flow control: past the outstanding-reply ceiling, stop
         // reading the socket (up to THROTTLE_GRACE) until the writer
         // drains — the kernel's socket buffers then stall the over-eager
@@ -345,43 +458,23 @@ fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: UnixStream) {
             std::thread::sleep(THROTTLE_POLL);
             throttled += THROTTLE_POLL;
         }
-        match wire::read_request(&mut reader) {
+        match wire::read_request_frame(&mut reader) {
             Ok(None) => break, // clean EOF
-            Ok(Some((id, request))) if request.is_admin() => {
-                shared.admin_requests.fetch_add(1, Ordering::Relaxed);
-                outstanding.fetch_add(1, Ordering::AcqRel);
-                let resp = match &shared.admin {
-                    None => Response::Error {
-                        code: wire::ERR_SERVE,
-                        message: "admin frames not enabled on this server"
-                            .into(),
-                    },
-                    Some(admin) => apply_admin(admin.as_ref(), request),
-                };
-                if tx.send((id, resp)).is_err() {
-                    break;
+            Ok(Some(RequestFrame::Single(id, request))) => {
+                shared.request_frames.fetch_add(1, Ordering::Relaxed);
+                if request.is_admin() {
+                    if !answer_admin(shared, &tx, &outstanding, id, request) {
+                        break;
+                    }
+                    continue;
                 }
-            }
-            Ok(Some((id, request))) => {
                 shared.requests.fetch_add(1, Ordering::Relaxed);
                 if in_flight.load(Ordering::Acquire) >= MAX_IN_FLIGHT {
                     // Shed: typed overload error, request never reaches
                     // the batcher. The connection stays usable.
                     shared.overloads.fetch_add(1, Ordering::Relaxed);
                     outstanding.fetch_add(1, Ordering::AcqRel);
-                    if tx
-                        .send((
-                            id,
-                            Response::Error {
-                                code: wire::ERR_OVERLOAD,
-                                message: format!(
-                                    "connection exceeded {MAX_IN_FLIGHT} \
-                                     in-flight requests"
-                                ),
-                            },
-                        ))
-                        .is_err()
-                    {
+                    if tx.send((id, overload_response())).is_err() {
                         break;
                     }
                     continue;
@@ -409,6 +502,74 @@ fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: UnixStream) {
                         },
                     ));
                     break;
+                }
+            }
+            Ok(Some(RequestFrame::Wave(subs))) => {
+                shared.request_frames.fetch_add(1, Ordering::Relaxed);
+                shared.wave_frames.fetch_add(1, Ordering::Relaxed);
+                wants_wave.store(true, Ordering::Release);
+                let serve_subs =
+                    subs.iter().filter(|(_, r)| !r.is_admin()).count() as u64;
+                shared.requests.fetch_add(serve_subs, Ordering::Relaxed);
+                // Wave-gated backpressure: the in-flight cap is checked
+                // ONCE for the whole wave — it is admitted in full
+                // (overshooting the soft cap by at most MAX_WAVE) or
+                // shed in full, never split across an ERR_OVERLOAD
+                // boundary.
+                let shed = serve_subs > 0
+                    && in_flight.load(Ordering::Acquire) >= MAX_IN_FLIGHT;
+                let mut entries: Vec<(Vec<f32>, crate::sampler::ServeQuery, SubmitReply)> =
+                    Vec::with_capacity(subs.len());
+                let mut entry_ids = Vec::with_capacity(subs.len());
+                for (id, request) in subs {
+                    if request.is_admin() {
+                        if !answer_admin(shared, &tx, &outstanding, id, request)
+                        {
+                            break 'conn;
+                        }
+                    } else if shed {
+                        shared.overloads.fetch_add(1, Ordering::Relaxed);
+                        outstanding.fetch_add(1, Ordering::AcqRel);
+                        if tx.send((id, overload_response())).is_err() {
+                            break 'conn;
+                        }
+                    } else {
+                        let (h, query) = request.into_query();
+                        let reply_tx = tx.clone();
+                        outstanding.fetch_add(1, Ordering::AcqRel);
+                        in_flight.fetch_add(1, Ordering::AcqRel);
+                        let in_flight_cb = Arc::clone(&in_flight);
+                        entry_ids.push(id);
+                        entries.push((
+                            h,
+                            query,
+                            Box::new(move |res| {
+                                in_flight_cb.fetch_sub(1, Ordering::AcqRel);
+                                let _ = reply_tx
+                                    .send((id, reply_to_response(res)));
+                            }),
+                        ));
+                    }
+                }
+                if !entries.is_empty() {
+                    let n = entries.len();
+                    // One decoded wave lands as one coalesced batch.
+                    if !shared.batcher.submit_wave(entries) {
+                        // Callbacks were dropped unserved: undo their
+                        // accounting and answer shutdown per sub-request
+                        // (outstanding was already counted above).
+                        in_flight.fetch_sub(n, Ordering::AcqRel);
+                        for id in entry_ids {
+                            let _ = tx.send((
+                                id,
+                                Response::Error {
+                                    code: wire::ERR_SHUTDOWN,
+                                    message: "server shutting down".into(),
+                                },
+                            ));
+                        }
+                        break;
+                    }
                 }
             }
             Err(ProtocolError::Io(_)) => {
@@ -440,6 +601,28 @@ fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: UnixStream) {
     if let Ok(w) = writer {
         let _ = w.join();
     }
+}
+
+/// Answer one admin frame inline (mutations are writer-serialized, not
+/// batched); returns `false` when the reply channel is gone and the
+/// connection should close.
+fn answer_admin(
+    shared: &Shared,
+    tx: &mpsc::Sender<(u64, Response)>,
+    outstanding: &AtomicUsize,
+    id: u64,
+    request: wire::Request,
+) -> bool {
+    shared.admin_requests.fetch_add(1, Ordering::Relaxed);
+    outstanding.fetch_add(1, Ordering::AcqRel);
+    let resp = match &shared.admin {
+        None => Response::Error {
+            code: wire::ERR_SERVE,
+            message: "admin frames not enabled on this server".into(),
+        },
+        Some(admin) => apply_admin(admin.as_ref(), request),
+    };
+    tx.send((id, resp)).is_ok()
 }
 
 fn apply_admin(admin: &dyn VocabAdmin, request: wire::Request) -> Response {
@@ -474,9 +657,11 @@ fn apply_admin(admin: &dyn VocabAdmin, request: wire::Request) -> Response {
 }
 
 fn writer_loop(
-    mut stream: UnixStream,
+    mut stream: Stream,
     rx: &mpsc::Receiver<(u64, Response)>,
     outstanding: &AtomicUsize,
+    wants_wave: &AtomicBool,
+    shared: &Shared,
 ) {
     // Zero-copy frame encode: every response of a drain wave is encoded
     // into this one reused buffer (header first, length backfilled) and
@@ -493,17 +678,61 @@ fn writer_loop(
             Err(_) => break,
         };
         buf.clear();
-        let mut frames = 0usize;
-        wire::encode_response(&mut buf, first.0, &first.1);
-        frames += 1;
-        // Encode everything currently queued, then write once — batches
+        // Drain everything currently queued, then write once — batches
         // response frames the same way requests coalesce.
-        while let Ok((id, resp)) = rx.try_recv() {
-            wire::encode_response(&mut buf, id, &resp);
-            frames += 1;
+        let responses;
+        if wants_wave.load(Ordering::Acquire) {
+            // v3 peer: pack the drain into wave frames — one header per
+            // packed group instead of per response. Chunked by count and
+            // by a soft byte bound so no frame approaches MAX_PAYLOAD.
+            // (A lone reply still goes as a plain single frame.)
+            let mut batch: Vec<(u64, Response)> = vec![first];
+            while let Ok(x) = rx.try_recv() {
+                batch.push(x);
+            }
+            responses = batch.len();
+            if responses == 1 {
+                let (id, resp) = &batch[0];
+                wire::encode_response(&mut buf, *id, resp);
+                shared.response_frames.fetch_add(1, Ordering::Relaxed);
+            } else {
+                let mut frames = 0u64;
+                let mut it = batch.into_iter().peekable();
+                while it.peek().is_some() {
+                    let frame_start = buf.len();
+                    let mut w =
+                        wire::WaveEncoder::begin_response_wave(&mut buf);
+                    while let Some((id, resp)) = it.next_if(|_| {
+                        w.count() < WAVE_PACK_MAX
+                            && (w.count() == 0
+                                || buf.len() - frame_start
+                                    < wire::WAVE_SOFT_PAYLOAD)
+                    }) {
+                        w.push_response(&mut buf, id, &resp);
+                    }
+                    w.finish(&mut buf);
+                    frames += 1;
+                }
+                shared.response_frames.fetch_add(frames, Ordering::Relaxed);
+            }
+        } else {
+            // v2/sync peer: encode straight from the channel into the
+            // reused buffer — the original zero-allocation drain (no
+            // intermediate Vec on the per-response hot path).
+            let mut n = 0usize;
+            wire::encode_response(&mut buf, first.0, &first.1);
+            n += 1;
+            while let Ok((id, resp)) = rx.try_recv() {
+                wire::encode_response(&mut buf, id, &resp);
+                n += 1;
+            }
+            responses = n;
+            shared
+                .response_frames
+                .fetch_add(responses as u64, Ordering::Relaxed);
         }
         let ok = stream.write_all(&buf).is_ok();
-        outstanding.fetch_sub(frames, Ordering::AcqRel);
+        outstanding.fetch_sub(responses, Ordering::AcqRel);
         if buf.capacity() > BUF_KEEP {
             buf = Vec::with_capacity(BUF_KEEP);
         }

@@ -1,16 +1,38 @@
 //! Length-prefixed binary wire protocol for the serving transport —
-//! std-only, little-endian, versioned.
+//! std-only, little-endian, versioned, socket-agnostic (the codecs read
+//! and write through generic `Read + Write` streams; see [`super::net`]
+//! for the unix-socket/TCP stream substrate they run over).
 //!
 //! ## Frame layout
 //!
 //! ```text
 //! bytes 0..2   magic  "RF"
-//! byte  2      protocol version (WIRE_VERSION)
-//! byte  3      frame kind (request 0x01..0x03, response 0x81..0x83, error 0xFF)
-//! bytes 4..12  request id (u64 LE; echoed on the response, 0 = connection-level)
+//! byte  2      protocol version (2 for single-request frames, 3 for waves)
+//! byte  3      frame kind (request 0x01..0x03, admin 0x10..0x11, wave 0x20,
+//!              response 0x81..0x91, response wave 0xA0, error 0xFF)
+//! bytes 4..12  request id (u64 LE; echoed on the response, 0 = connection-level;
+//!              unused on wave frames — sub-request ids are authoritative)
 //! bytes 12..16 payload length (u32 LE, ≤ MAX_PAYLOAD)
 //! bytes 16..   payload (kind-specific, exact length — trailing bytes are malformed)
 //! ```
+//!
+//! ## Batched wave frames (wire v3)
+//!
+//! A pipelined burst can ride in ONE `Wave` frame instead of one frame
+//! per request: the payload is `u32 count` followed by `count`
+//! sub-requests, each `u64 id | u8 kind | u32 len | payload[len]` with
+//! the *same* per-kind payload encoding as the standalone frame. The
+//! receiver parses one 16-byte header (and runs one length/magic/version
+//! check) per wave rather than per request, and the server submits the
+//! whole decoded wave to the micro-batcher as one coalesced batch.
+//! Responses travel back the same way (`0xA0`), sub-ids preserved, and a
+//! failing sub-request yields an `Error` *sub-response* in its slot —
+//! partial failure never poisons the rest of the wave. Counts are
+//! overflow-guarded: `count` is bounded by [`MAX_WAVE`] and validated
+//! against the delivered payload *before* any allocation, and nested
+//! waves are malformed. Wave frames carry version 3; single frames keep
+//! encoding at version 2, so a v2 peer interoperates untouched as long
+//! as nobody sends it waves.
 //!
 //! ## Payloads
 //!
@@ -51,10 +73,39 @@ use crate::sampler::ServeQuery;
 use std::fmt;
 use std::io::{ErrorKind, Read, Write};
 
-/// Protocol version carried in every frame header. v2 added the
-/// `ADD_CLASSES`/`RETIRE_CLASSES` admin frames and [`ERR_OVERLOAD`];
-/// v1 peers are refused with [`ProtocolError::UnknownVersion`].
-pub const WIRE_VERSION: u8 = 2;
+/// Greatest protocol version this build speaks. v2 added the
+/// `ADD_CLASSES`/`RETIRE_CLASSES` admin frames and [`ERR_OVERLOAD`]; v3
+/// added the batched wave frames. Headers carrying
+/// [`MIN_WIRE_VERSION`]`..=`[`WIRE_VERSION`] are accepted; anything else
+/// is refused with [`ProtocolError::UnknownVersion`]. Single frames
+/// still *encode* at v2 (only wave frames need v3), so v2 peers keep
+/// interoperating in both directions.
+pub const WIRE_VERSION: u8 = 3;
+
+/// Oldest protocol version still accepted.
+pub const MIN_WIRE_VERSION: u8 = 2;
+
+/// Version written on single-request/response frames: the lowest version
+/// whose peers understand them, so a v3 build stays wire-compatible with
+/// v2 peers on everything except waves.
+const SINGLE_FRAME_VERSION: u8 = 2;
+
+/// Version a wave frame requires (and is encoded with).
+const WAVE_FRAME_VERSION: u8 = 3;
+
+/// Hard cap on sub-requests (or sub-responses) in one wave frame — far
+/// above any useful coalescing depth, small enough that a hostile count
+/// prefix cannot balloon memory before the per-sub length checks run.
+pub const MAX_WAVE: usize = 4096;
+
+/// Soft byte bound senders apply per wave frame: once a wave's encoding
+/// crosses it, the wave closes and the remaining sub-frames continue in
+/// the next frame. Shared by the client's request chunking and the
+/// server's reply packing so the boundary rule cannot drift between
+/// them, and sized so no frame ever approaches [`MAX_PAYLOAD`] (whose
+/// violation kills the connection). Real queries (dim ≤ 10⁴ floats ≈
+/// 40 KiB) pack dozens of subs per frame before this binds.
+pub const WAVE_SOFT_PAYLOAD: usize = 1 << 20;
 
 /// Frame magic (catches peers speaking a different protocol entirely).
 pub const MAGIC: [u8; 2] = *b"RF";
@@ -85,12 +136,19 @@ const KIND_REQ_PROBABILITY: u8 = 0x02;
 const KIND_REQ_TOP_K: u8 = 0x03;
 const KIND_REQ_ADD_CLASSES: u8 = 0x10;
 const KIND_REQ_RETIRE_CLASSES: u8 = 0x11;
+const KIND_REQ_WAVE: u8 = 0x20;
 const KIND_RESP_SAMPLE: u8 = 0x81;
 const KIND_RESP_PROBABILITY: u8 = 0x82;
 const KIND_RESP_TOP_K: u8 = 0x83;
 const KIND_RESP_ADD_CLASSES: u8 = 0x90;
 const KIND_RESP_RETIRE_CLASSES: u8 = 0x91;
+const KIND_RESP_WAVE: u8 = 0xA0;
 const KIND_RESP_ERROR: u8 = 0xFF;
+
+/// Bytes of the fixed per-sub-frame prefix inside a wave payload
+/// (`u64 id | u8 kind | u32 len`) — the floor used to validate a wave's
+/// count prefix against the delivered payload before allocating.
+const WAVE_SUB_PREFIX: usize = 13;
 
 /// Typed transport failure. Framing variants are fatal for the
 /// connection ([`ProtocolError::closes_connection`]); `Remote` with
@@ -141,7 +199,11 @@ impl fmt::Display for ProtocolError {
                 write!(f, "bad frame magic {m:02x?}")
             }
             ProtocolError::UnknownVersion(v) => {
-                write!(f, "unknown wire version {v} (speaking {WIRE_VERSION})")
+                write!(
+                    f,
+                    "unknown wire version {v} (speaking \
+                     {MIN_WIRE_VERSION}..={WIRE_VERSION})"
+                )
             }
             ProtocolError::UnknownKind(k) => {
                 write!(f, "unknown frame kind 0x{k:02x}")
@@ -238,9 +300,9 @@ pub enum Response {
 /// of the length field so [`finish_frame`] can backfill it once the
 /// payload has been written in place — the zero-copy path: no per-frame
 /// payload `Vec`, the caller's (reusable) buffer is the only allocation.
-fn begin_frame(out: &mut Vec<u8>, kind: u8, id: u64) -> usize {
+fn begin_frame(out: &mut Vec<u8>, version: u8, kind: u8, id: u64) -> usize {
     out.extend_from_slice(&MAGIC);
-    out.push(WIRE_VERSION);
+    out.push(version);
     out.push(kind);
     out.extend_from_slice(&id.to_le_bytes());
     let len_at = out.len();
@@ -263,17 +325,20 @@ fn push_query(payload: &mut Vec<u8>, h: &[f32]) {
     }
 }
 
-/// Encode one request frame into `out` (appended in place — reuse one
-/// buffer across frames for the zero-copy path).
-pub fn encode_request(out: &mut Vec<u8>, id: u64, req: &Request) {
-    let kind = match req {
+fn request_kind(req: &Request) -> u8 {
+    match req {
         Request::Sample { .. } => KIND_REQ_SAMPLE,
         Request::Probability { .. } => KIND_REQ_PROBABILITY,
         Request::TopK { .. } => KIND_REQ_TOP_K,
         Request::AddClasses { .. } => KIND_REQ_ADD_CLASSES,
         Request::RetireClasses { .. } => KIND_REQ_RETIRE_CLASSES,
-    };
-    let len_at = begin_frame(out, kind, id);
+    }
+}
+
+/// Append a request's kind-specific payload bytes — shared between the
+/// single-frame encoder and the wave sub-frame encoder, so both paths
+/// are byte-identical at the payload level.
+fn encode_request_payload(out: &mut Vec<u8>, req: &Request) {
     match req {
         Request::Sample { h, m, seed } => {
             push_query(out, h);
@@ -307,21 +372,30 @@ pub fn encode_request(out: &mut Vec<u8>, id: u64, req: &Request) {
             }
         }
     }
+}
+
+/// Encode one request frame into `out` (appended in place — reuse one
+/// buffer across frames for the zero-copy path).
+pub fn encode_request(out: &mut Vec<u8>, id: u64, req: &Request) {
+    let len_at = begin_frame(out, SINGLE_FRAME_VERSION, request_kind(req), id);
+    encode_request_payload(out, req);
     finish_frame(out, len_at);
 }
 
-/// Encode one response frame into `out` (appended in place — reuse one
-/// buffer across frames for the zero-copy path).
-pub fn encode_response(out: &mut Vec<u8>, id: u64, resp: &Response) {
-    let kind = match resp {
+fn response_kind(resp: &Response) -> u8 {
+    match resp {
         Response::Sample { .. } => KIND_RESP_SAMPLE,
         Response::Probability { .. } => KIND_RESP_PROBABILITY,
         Response::TopK { .. } => KIND_RESP_TOP_K,
         Response::AddClasses { .. } => KIND_RESP_ADD_CLASSES,
         Response::RetireClasses { .. } => KIND_RESP_RETIRE_CLASSES,
         Response::Error { .. } => KIND_RESP_ERROR,
-    };
-    let len_at = begin_frame(out, kind, id);
+    }
+}
+
+/// Append a response's kind-specific payload bytes (single-frame and
+/// wave sub-frame encodings share this).
+fn encode_response_payload(out: &mut Vec<u8>, resp: &Response) {
     match resp {
         Response::Sample { epoch, ids, probs } => {
             debug_assert_eq!(ids.len(), probs.len());
@@ -365,7 +439,123 @@ pub fn encode_response(out: &mut Vec<u8>, id: u64, resp: &Response) {
             out.extend_from_slice(&msg[..len]);
         }
     }
+}
+
+/// Encode one response frame into `out` (appended in place — reuse one
+/// buffer across frames for the zero-copy path).
+pub fn encode_response(out: &mut Vec<u8>, id: u64, resp: &Response) {
+    let len_at = begin_frame(out, SINGLE_FRAME_VERSION, response_kind(resp), id);
+    encode_response_payload(out, resp);
     finish_frame(out, len_at);
+}
+
+// ---------------------------------------------------------------------------
+// Wave (v3 multi-request) frame encoding
+// ---------------------------------------------------------------------------
+
+/// Incremental encoder for one wave frame: `begin_*` writes the header
+/// and a placeholder count, each `push_*` appends one sub-frame
+/// (`u64 id | u8 kind | u32 len | payload`) with its length backfilled,
+/// and [`WaveEncoder::finish`] backfills the count and the frame length.
+/// Everything lands in the caller's (reusable) buffer — the wave path
+/// inherits the single-frame zero-copy discipline. One encoder is
+/// request-only or response-only, matching how it was begun.
+pub struct WaveEncoder {
+    len_at: usize,
+    count_at: usize,
+    count: u32,
+}
+
+impl WaveEncoder {
+    /// Open a request wave frame (kind 0x20, wire v3).
+    pub fn begin_request_wave(out: &mut Vec<u8>) -> WaveEncoder {
+        Self::begin(out, KIND_REQ_WAVE)
+    }
+
+    /// Open a response wave frame (kind 0xA0, wire v3).
+    pub fn begin_response_wave(out: &mut Vec<u8>) -> WaveEncoder {
+        Self::begin(out, KIND_RESP_WAVE)
+    }
+
+    fn begin(out: &mut Vec<u8>, kind: u8) -> WaveEncoder {
+        let len_at = begin_frame(out, WAVE_FRAME_VERSION, kind, 0);
+        let count_at = out.len();
+        out.extend_from_slice(&0u32.to_le_bytes());
+        WaveEncoder { len_at, count_at, count: 0 }
+    }
+
+    fn push_sub(&mut self, out: &mut Vec<u8>, id: u64, kind: u8) -> usize {
+        debug_assert!(
+            (self.count as usize) < MAX_WAVE,
+            "wave frame exceeds MAX_WAVE sub-frames"
+        );
+        self.count += 1;
+        out.extend_from_slice(&id.to_le_bytes());
+        out.push(kind);
+        let sub_len_at = out.len();
+        out.extend_from_slice(&0u32.to_le_bytes());
+        sub_len_at
+    }
+
+    fn finish_sub(out: &mut Vec<u8>, sub_len_at: usize) {
+        let len = out.len() - (sub_len_at + 4);
+        out[sub_len_at..sub_len_at + 4]
+            .copy_from_slice(&(len as u32).to_le_bytes());
+    }
+
+    /// Append one sub-request (only on an encoder begun with
+    /// [`WaveEncoder::begin_request_wave`]).
+    pub fn push_request(&mut self, out: &mut Vec<u8>, id: u64, req: &Request) {
+        let sub_len_at = self.push_sub(out, id, request_kind(req));
+        encode_request_payload(out, req);
+        Self::finish_sub(out, sub_len_at);
+    }
+
+    /// Append one sub-response (only on an encoder begun with
+    /// [`WaveEncoder::begin_response_wave`]).
+    pub fn push_response(
+        &mut self,
+        out: &mut Vec<u8>,
+        id: u64,
+        resp: &Response,
+    ) {
+        let sub_len_at = self.push_sub(out, id, response_kind(resp));
+        encode_response_payload(out, resp);
+        Self::finish_sub(out, sub_len_at);
+    }
+
+    /// Number of sub-frames pushed so far — callers chunking by payload
+    /// size read this to decide when to close one frame and open the
+    /// next.
+    pub fn count(&self) -> usize {
+        self.count as usize
+    }
+
+    /// Backfill the count and frame length, closing the wave frame.
+    pub fn finish(self, out: &mut Vec<u8>) {
+        out[self.count_at..self.count_at + 4]
+            .copy_from_slice(&self.count.to_le_bytes());
+        finish_frame(out, self.len_at);
+    }
+}
+
+/// Encode one request wave frame from `(id, request)` pairs. Panics in
+/// debug builds beyond [`MAX_WAVE`] items — senders chunk above that.
+pub fn encode_request_wave(out: &mut Vec<u8>, items: &[(u64, &Request)]) {
+    let mut w = WaveEncoder::begin_request_wave(out);
+    for (id, req) in items {
+        w.push_request(out, *id, req);
+    }
+    w.finish(out);
+}
+
+/// Encode one response wave frame from `(id, response)` pairs.
+pub fn encode_response_wave(out: &mut Vec<u8>, items: &[(u64, Response)]) {
+    let mut w = WaveEncoder::begin_response_wave(out);
+    for (id, resp) in items {
+        w.push_response(out, *id, resp);
+    }
+    w.finish(out);
 }
 
 /// Write one request frame (allocating convenience; hot paths encode
@@ -467,6 +657,7 @@ impl<'a> Cursor<'a> {
 }
 
 struct Header {
+    version: u8,
     kind: u8,
     id: u64,
     len: usize,
@@ -495,7 +686,7 @@ fn read_header(r: &mut impl Read) -> Result<Option<Header>, ProtocolError> {
     if buf[0..2] != MAGIC {
         return Err(ProtocolError::BadMagic([buf[0], buf[1]]));
     }
-    if buf[2] != WIRE_VERSION {
+    if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&buf[2]) {
         return Err(ProtocolError::UnknownVersion(buf[2]));
     }
     let id = u64::from_le_bytes(buf[4..12].try_into().unwrap());
@@ -503,7 +694,7 @@ fn read_header(r: &mut impl Read) -> Result<Option<Header>, ProtocolError> {
     if len > MAX_PAYLOAD {
         return Err(ProtocolError::Oversized { len, max: MAX_PAYLOAD });
     }
-    Ok(Some(Header { kind: buf[3], id, len }))
+    Ok(Some(Header { version: buf[2], kind: buf[3], id, len }))
 }
 
 fn read_payload(r: &mut impl Read, len: usize) -> Result<Vec<u8>, ProtocolError> {
@@ -512,16 +703,15 @@ fn read_payload(r: &mut impl Read, len: usize) -> Result<Vec<u8>, ProtocolError>
     Ok(payload)
 }
 
-/// Read one request frame (server side). `Ok(None)` on clean EOF.
-pub fn read_request(
-    r: &mut impl Read,
-) -> Result<Option<(u64, Request)>, ProtocolError> {
-    let Some(head) = read_header(r)? else {
-        return Ok(None);
-    };
-    let payload = read_payload(r, head.len)?;
-    let mut c = Cursor::new(&payload);
-    let req = match head.kind {
+/// Decode one request's kind-specific payload (a whole single-frame
+/// payload, or one wave sub-frame's payload — the encodings are
+/// identical). Enforces exact length: trailing bytes are malformed.
+fn decode_request_payload(
+    kind: u8,
+    payload: &[u8],
+) -> Result<Request, ProtocolError> {
+    let mut c = Cursor::new(payload);
+    let req = match kind {
         KIND_REQ_SAMPLE => {
             let h = c.query()?;
             let m = c.u32()?;
@@ -578,19 +768,17 @@ pub fn read_request(
         other => return Err(ProtocolError::UnknownKind(other)),
     };
     c.finish()?;
-    Ok(Some((head.id, req)))
+    Ok(req)
 }
 
-/// Read one response frame (client side). `Ok(None)` on clean EOF.
-pub fn read_response(
-    r: &mut impl Read,
-) -> Result<Option<(u64, Response)>, ProtocolError> {
-    let Some(head) = read_header(r)? else {
-        return Ok(None);
-    };
-    let payload = read_payload(r, head.len)?;
-    let mut c = Cursor::new(&payload);
-    let resp = match head.kind {
+/// Decode one response's kind-specific payload (single-frame or wave
+/// sub-frame — identical encodings, exact length enforced).
+fn decode_response_payload(
+    kind: u8,
+    payload: &[u8],
+) -> Result<Response, ProtocolError> {
+    let mut c = Cursor::new(payload);
+    let resp = match kind {
         KIND_RESP_SAMPLE => {
             let epoch = c.u64()?;
             let count = c.u32()? as usize;
@@ -655,7 +843,129 @@ pub fn read_response(
         other => return Err(ProtocolError::UnknownKind(other)),
     };
     c.finish()?;
-    Ok(Some((head.id, resp)))
+    Ok(resp)
+}
+
+/// Decode a wave payload into `(id, item)` pairs via the given per-kind
+/// payload decoder. The count prefix is validated against [`MAX_WAVE`]
+/// and against the delivered bytes *before* the item vector is
+/// allocated, so a hostile count cannot balloon memory; nested waves
+/// are structurally malformed.
+fn decode_wave<T>(
+    payload: &[u8],
+    decode: impl Fn(u8, &[u8]) -> Result<T, ProtocolError>,
+) -> Result<Vec<(u64, T)>, ProtocolError> {
+    let mut c = Cursor::new(payload);
+    let count = c.u32()? as usize;
+    if count == 0 {
+        return Err(ProtocolError::Malformed("empty wave frame"));
+    }
+    if count > MAX_WAVE {
+        return Err(ProtocolError::Malformed("wave count exceeds MAX_WAVE"));
+    }
+    if count * WAVE_SUB_PREFIX > payload.len().saturating_sub(c.pos) {
+        return Err(ProtocolError::Malformed("wave count exceeds payload"));
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let id = c.u64()?;
+        let kind = c.u8()?;
+        if kind == KIND_REQ_WAVE || kind == KIND_RESP_WAVE {
+            return Err(ProtocolError::Malformed("nested wave frame"));
+        }
+        let len = c.u32()? as usize;
+        let sub = c.take(len)?;
+        out.push((id, decode(kind, sub)?));
+    }
+    c.finish()?;
+    Ok(out)
+}
+
+/// One decoded request-direction frame: a single request, or a batched
+/// wave of them (wire v3).
+#[derive(Debug)]
+pub enum RequestFrame {
+    Single(u64, Request),
+    Wave(Vec<(u64, Request)>),
+}
+
+/// One decoded response-direction frame.
+#[derive(Debug)]
+pub enum ResponseFrame {
+    Single(u64, Response),
+    Wave(Vec<(u64, Response)>),
+}
+
+/// Read one request-direction frame — single or wave — (server side).
+/// `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_request_frame(
+    r: &mut impl Read,
+) -> Result<Option<RequestFrame>, ProtocolError> {
+    let Some(head) = read_header(r)? else {
+        return Ok(None);
+    };
+    let payload = read_payload(r, head.len)?;
+    if head.kind == KIND_REQ_WAVE {
+        if head.version < WAVE_FRAME_VERSION {
+            return Err(ProtocolError::Malformed(
+                "wave frame requires wire v3",
+            ));
+        }
+        let subs = decode_wave(&payload, decode_request_payload)?;
+        return Ok(Some(RequestFrame::Wave(subs)));
+    }
+    let req = decode_request_payload(head.kind, &payload)?;
+    Ok(Some(RequestFrame::Single(head.id, req)))
+}
+
+/// Read one single-request frame (legacy/single-frame contexts; waves
+/// are a framing violation here — servers use [`read_request_frame`]).
+pub fn read_request(
+    r: &mut impl Read,
+) -> Result<Option<(u64, Request)>, ProtocolError> {
+    match read_request_frame(r)? {
+        None => Ok(None),
+        Some(RequestFrame::Single(id, req)) => Ok(Some((id, req))),
+        Some(RequestFrame::Wave(_)) => Err(ProtocolError::Malformed(
+            "unexpected wave frame (single-frame reader)",
+        )),
+    }
+}
+
+/// Read one response-direction frame — single or wave — (client side).
+/// `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_response_frame(
+    r: &mut impl Read,
+) -> Result<Option<ResponseFrame>, ProtocolError> {
+    let Some(head) = read_header(r)? else {
+        return Ok(None);
+    };
+    let payload = read_payload(r, head.len)?;
+    if head.kind == KIND_RESP_WAVE {
+        if head.version < WAVE_FRAME_VERSION {
+            return Err(ProtocolError::Malformed(
+                "wave frame requires wire v3",
+            ));
+        }
+        let subs = decode_wave(&payload, decode_response_payload)?;
+        return Ok(Some(ResponseFrame::Wave(subs)));
+    }
+    let resp = decode_response_payload(head.kind, &payload)?;
+    Ok(Some(ResponseFrame::Single(head.id, resp)))
+}
+
+/// Read one single-response frame (sync clients and tests; wave-capable
+/// clients use [`read_response_frame`]).
+pub fn read_response(
+    r: &mut impl Read,
+) -> Result<Option<(u64, Response)>, ProtocolError> {
+    match read_response_frame(r)? {
+        None => Ok(None),
+        Some(ResponseFrame::Single(id, resp)) => Ok(Some((id, resp))),
+        Some(ResponseFrame::Wave(_)) => Err(ProtocolError::Malformed(
+            "unexpected wave frame (single-frame reader)",
+        )),
+    }
 }
 
 #[cfg(test)]
@@ -739,7 +1049,7 @@ mod tests {
     fn malformed_admin_frames_are_rejected() {
         // rows×dim prefix describing more floats than delivered.
         let mut buf = Vec::new();
-        let len_at = super::begin_frame(&mut buf, 0x10, 1);
+        let len_at = super::begin_frame(&mut buf, 2, 0x10, 1);
         buf.extend_from_slice(&1000u32.to_le_bytes()); // rows
         buf.extend_from_slice(&1000u32.to_le_bytes()); // dim
         buf.extend_from_slice(&0.5f32.to_le_bytes()); // one float
@@ -753,7 +1063,7 @@ mod tests {
         // 4 ≡ 0 mod 2^64) must be rejected by the checked multiply, not
         // decoded as an empty embedding batch.
         let mut buf = Vec::new();
-        let len_at = super::begin_frame(&mut buf, 0x10, 1);
+        let len_at = super::begin_frame(&mut buf, 2, 0x10, 1);
         buf.extend_from_slice(&0x8000_0000u32.to_le_bytes()); // rows
         buf.extend_from_slice(&0x8000_0000u32.to_le_bytes()); // dim
         super::finish_frame(&mut buf, len_at);
@@ -764,7 +1074,7 @@ mod tests {
 
         // Zero dim is structurally invalid.
         let mut buf = Vec::new();
-        let len_at = super::begin_frame(&mut buf, 0x10, 1);
+        let len_at = super::begin_frame(&mut buf, 2, 0x10, 1);
         buf.extend_from_slice(&0u32.to_le_bytes());
         buf.extend_from_slice(&0u32.to_le_bytes());
         super::finish_frame(&mut buf, len_at);
@@ -775,7 +1085,7 @@ mod tests {
 
         // Retire count exceeding the payload.
         let mut buf = Vec::new();
-        let len_at = super::begin_frame(&mut buf, 0x11, 1);
+        let len_at = super::begin_frame(&mut buf, 2, 0x11, 1);
         buf.extend_from_slice(&50u32.to_le_bytes());
         buf.extend_from_slice(&1u32.to_le_bytes()); // one id only
         super::finish_frame(&mut buf, len_at);
@@ -786,7 +1096,7 @@ mod tests {
 
         // Trailing garbage after a valid retire body.
         let mut buf = Vec::new();
-        let len_at = super::begin_frame(&mut buf, 0x11, 1);
+        let len_at = super::begin_frame(&mut buf, 2, 0x11, 1);
         buf.extend_from_slice(&1u32.to_le_bytes());
         buf.extend_from_slice(&3u32.to_le_bytes());
         buf.push(0xEE);
@@ -902,7 +1212,7 @@ mod tests {
     fn malformed_payloads_are_rejected() {
         // Query dim prefix larger than the actual payload.
         let mut buf = Vec::new();
-        let len_at = super::begin_frame(&mut buf, 0x03, 1);
+        let len_at = super::begin_frame(&mut buf, 2, 0x03, 1);
         buf.extend_from_slice(&1000u32.to_le_bytes()); // claims 1000 floats
         buf.extend_from_slice(&0.5f32.to_le_bytes()); // …delivers one
         super::finish_frame(&mut buf, len_at);
@@ -913,7 +1223,7 @@ mod tests {
 
         // Trailing garbage after a valid body.
         let mut buf = Vec::new();
-        let len_at = super::begin_frame(&mut buf, 0x03, 1);
+        let len_at = super::begin_frame(&mut buf, 2, 0x03, 1);
         buf.extend_from_slice(&1u32.to_le_bytes());
         buf.extend_from_slice(&0.5f32.to_le_bytes());
         buf.extend_from_slice(&3u32.to_le_bytes()); // k
@@ -945,5 +1255,226 @@ mod tests {
         assert_eq!(q, ServeQuery::Probability { class: 3 });
         let (_, q) = Request::TopK { h: vec![], k: 2 }.into_query();
         assert_eq!(q, ServeQuery::TopK { k: 2 });
+    }
+
+    // -----------------------------------------------------------------
+    // Wire v3: batched wave frames
+    // -----------------------------------------------------------------
+
+    fn mixed_requests() -> Vec<Request> {
+        vec![
+            Request::Sample { h: vec![0.5, -1.0], m: 4, seed: 11 },
+            Request::Probability { h: vec![2.0, 0.0], class: 7 },
+            Request::TopK { h: vec![1.0; 3], k: 2 },
+            Request::RetireClasses { ids: vec![3, 9] },
+        ]
+    }
+
+    #[test]
+    fn request_wave_round_trips_with_sub_ids_preserved() {
+        let reqs = mixed_requests();
+        let items: Vec<(u64, &Request)> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (100 + i as u64, r))
+            .collect();
+        let mut buf = Vec::new();
+        encode_request_wave(&mut buf, &items);
+        // One header for the whole burst, carrying wire v3.
+        assert_eq!(buf[2], 3, "wave frames must carry wire v3");
+        let frame = read_request_frame(&mut &buf[..]).unwrap().unwrap();
+        let RequestFrame::Wave(subs) = frame else {
+            panic!("expected wave frame")
+        };
+        assert_eq!(subs.len(), reqs.len());
+        for (i, (id, got)) in subs.iter().enumerate() {
+            assert_eq!(*id, 100 + i as u64, "sub-request id not preserved");
+            assert_eq!(got, &reqs[i]);
+        }
+    }
+
+    #[test]
+    fn response_wave_round_trips_including_error_subs() {
+        // Partial failure: an Error sub-response rides in its slot
+        // without poisoning the rest of the wave.
+        let items = vec![
+            (
+                7u64,
+                Response::Sample { epoch: 2, ids: vec![1], probs: vec![0.5] },
+            ),
+            (
+                8u64,
+                Response::Error { code: ERR_SERVE, message: "bad dim".into() },
+            ),
+            (9u64, Response::TopK { epoch: 2, items: vec![(3, 0.25)] }),
+        ];
+        let mut buf = Vec::new();
+        encode_response_wave(&mut buf, &items);
+        let frame = read_response_frame(&mut &buf[..]).unwrap().unwrap();
+        let ResponseFrame::Wave(subs) = frame else {
+            panic!("expected wave frame")
+        };
+        assert_eq!(subs.len(), 3);
+        for ((want_id, want), (id, got)) in items.iter().zip(&subs) {
+            assert_eq!(want_id, id);
+            assert_eq!(want, got);
+        }
+    }
+
+    #[test]
+    fn single_frames_keep_encoding_v2_for_interop() {
+        // v2 peers must keep understanding everything except waves, so
+        // singles pin version 2 on the wire even in a v3 build...
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 1, &Request::TopK { h: vec![1.0], k: 3 });
+        assert_eq!(buf[2], 2, "single frames must stay at wire v2");
+        let mut buf = Vec::new();
+        encode_response(&mut buf, 1, &Response::Probability { epoch: 0, q: 0.5 });
+        assert_eq!(buf[2], 2);
+        // ...and this build accepts both versions on the way in: the
+        // same frame bytes decode whether stamped v2 or v3.
+        let mut v3 = Vec::new();
+        encode_request(&mut v3, 1, &Request::TopK { h: vec![1.0], k: 3 });
+        v3[2] = 3;
+        assert!(read_request(&mut &v3[..]).unwrap().is_some());
+    }
+
+    #[test]
+    fn wave_frame_with_v2_header_is_malformed() {
+        let reqs = mixed_requests();
+        let items: Vec<(u64, &Request)> =
+            reqs.iter().map(|r| (1u64, r)).collect();
+        let mut buf = Vec::new();
+        encode_request_wave(&mut buf, &items);
+        buf[2] = 2; // a v2 peer could never have produced this kind
+        assert!(matches!(
+            read_request_frame(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+        // And a single-frame reader refuses waves outright.
+        let mut ok = Vec::new();
+        encode_request_wave(&mut ok, &items);
+        assert!(matches!(
+            read_request(&mut &ok[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn malformed_wave_counts_are_rejected_before_allocation() {
+        let patch_count = |buf: &mut Vec<u8>, count: u32| {
+            buf[HEADER_LEN..HEADER_LEN + 4]
+                .copy_from_slice(&count.to_le_bytes());
+        };
+        let reqs = mixed_requests();
+        let items: Vec<(u64, &Request)> =
+            reqs.iter().map(|r| (1u64, r)).collect();
+
+        // Count prefix claiming more sub-frames than the payload holds.
+        let mut buf = Vec::new();
+        encode_request_wave(&mut buf, &items);
+        patch_count(&mut buf, 50_000);
+        assert!(matches!(
+            read_request_frame(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // Count beyond MAX_WAVE even if the payload were big enough.
+        let mut buf = Vec::new();
+        encode_request_wave(&mut buf, &items);
+        patch_count(&mut buf, MAX_WAVE as u32 + 1);
+        assert!(matches!(
+            read_request_frame(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // Zero-count waves are structurally invalid.
+        let mut buf = Vec::new();
+        encode_request_wave(&mut buf, &items);
+        patch_count(&mut buf, 0);
+        assert!(matches!(
+            read_request_frame(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // Count prefix smaller than the delivered sub-frames: trailing
+        // bytes after the last counted sub are malformed.
+        let mut buf = Vec::new();
+        encode_request_wave(&mut buf, &items);
+        patch_count(&mut buf, items.len() as u32 - 1);
+        assert!(matches!(
+            read_request_frame(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // A sub-frame length prefix overrunning the wave payload.
+        let mut buf = Vec::new();
+        encode_request_wave(&mut buf, &items[..1]);
+        let sub_len_at = HEADER_LEN + 4 + 8 + 1;
+        buf[sub_len_at..sub_len_at + 4]
+            .copy_from_slice(&10_000u32.to_le_bytes());
+        assert!(matches!(
+            read_request_frame(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // A nested wave kind inside a wave.
+        let mut buf = Vec::new();
+        let mut w = WaveEncoder::begin_request_wave(&mut buf);
+        let sub_at = {
+            w.count += 1;
+            buf.extend_from_slice(&1u64.to_le_bytes());
+            buf.push(0x20); // nested wave kind
+            let at = buf.len();
+            buf.extend_from_slice(&0u32.to_le_bytes());
+            at
+        };
+        WaveEncoder::finish_sub(&mut buf, sub_at);
+        w.finish(&mut buf);
+        assert!(matches!(
+            read_request_frame(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn wave_sub_payloads_match_single_frame_payloads() {
+        // The per-kind payload encoding is shared between singles and
+        // wave subs; a decoded sub must equal the single-frame decode of
+        // the same request.
+        for req in mixed_requests() {
+            let mut single = Vec::new();
+            encode_request(&mut single, 5, &req);
+            let (_, from_single) =
+                read_request(&mut &single[..]).unwrap().unwrap();
+            let mut wave = Vec::new();
+            encode_request_wave(&mut wave, &[(5, &req)]);
+            let RequestFrame::Wave(subs) =
+                read_request_frame(&mut &wave[..]).unwrap().unwrap()
+            else {
+                panic!("expected wave")
+            };
+            assert_eq!(subs[0].1, from_single);
+        }
+    }
+
+    #[test]
+    fn incremental_wave_encoder_matches_slice_encoder() {
+        let reqs = mixed_requests();
+        let items: Vec<(u64, &Request)> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (i as u64, r))
+            .collect();
+        let mut a = Vec::new();
+        encode_request_wave(&mut a, &items);
+        let mut b = Vec::new();
+        let mut w = WaveEncoder::begin_request_wave(&mut b);
+        for (id, r) in &items {
+            w.push_request(&mut b, *id, r);
+        }
+        assert_eq!(w.count(), items.len());
+        w.finish(&mut b);
+        assert_eq!(a, b);
     }
 }

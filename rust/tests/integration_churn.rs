@@ -9,7 +9,9 @@
 //! * a mid-growth epoch-swap test: concurrent readers never observe Σq
 //!   drifting from 1 while a writer grows/shrinks the universe;
 //! * wire round-trips for the ADD_CLASSES/RETIRE_CLASSES admin frames,
-//!   including malformed-frame rejection and the no-admin-hook refusal.
+//!   including malformed-frame rejection and the no-admin-hook refusal;
+//! * uds-vs-tcp equivalence: the same admin script driven over both
+//!   socket kinds leaves byte-identical served states.
 
 use rfsoftmax::featmap::RffMap;
 use rfsoftmax::linalg::{unit_vector, Matrix};
@@ -458,4 +460,115 @@ fn malformed_admin_frames_are_rejected_and_admin_requires_a_hook() {
     assert_eq!(code, wire::ERR_PROTOCOL);
     assert!(message.contains("malformed"), "message: {message}");
     assert_eq!(transport.stats().protocol_errors, 1);
+}
+
+/// One admin-capable serving stack (uds or tcp) over a fork of
+/// `offline`, returning the pieces the equivalence test needs.
+fn admin_stack(
+    offline: &ShardedKernelSampler<RffMap>,
+    d: usize,
+    tcp: bool,
+    tag: &str,
+) -> (SamplerServer, Arc<MicroBatcher>, TransportServer, TransportClient) {
+    let (server, writer) = SamplerServer::new(offline.fork().unwrap());
+    let writer = Arc::new(Mutex::new(writer));
+    let batcher = Arc::new(MicroBatcher::spawn(
+        server.clone(),
+        BatcherOptions::default(),
+    ));
+    let admin = Arc::new(SharedWriterAdmin::new(Arc::clone(&writer), d));
+    let transport = if tcp {
+        TransportServer::bind_tcp_with_admin(
+            "127.0.0.1:0",
+            Arc::clone(&batcher),
+            admin,
+        )
+        .unwrap()
+    } else {
+        TransportServer::bind_with_admin(
+            sock_path(tag),
+            Arc::clone(&batcher),
+            admin,
+        )
+        .unwrap()
+    };
+    let client =
+        TransportClient::connect_endpoint(transport.endpoint()).unwrap();
+    (server, batcher, transport, client)
+}
+
+#[test]
+fn tcp_and_uds_admin_churn_leave_identical_served_states() {
+    let n = 24;
+    let d = 8;
+    let mut rng = Rng::seeded(3500);
+    let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+    let offline = ShardedKernelSampler::with_map(
+        &classes,
+        RffMap::new(d, NUM_FREQS, NU, &mut Rng::seeded(3501)),
+        4,
+        "rff-sharded",
+    );
+    // Two forks of the same state, one behind each socket kind.
+    let (uds_server, _ub, _ut, mut uds_client) =
+        admin_stack(&offline, d, false, "uds-tcp-equiv");
+    let (tcp_server, _tb, _tt, mut tcp_client) =
+        admin_stack(&offline, d, true, "unused");
+
+    // Drive the identical admin script through both wires: adds carry
+    // deliberately UNnormalized embeddings so the equivalence also
+    // covers the admin hook's ingestion-normalization contract.
+    let mut crng = Rng::seeded(3502);
+    let mut next_id = n as u32;
+    let mut live: Vec<u32> = (0..n as u32).collect();
+    for round in 0..4u64 {
+        let mut add = Matrix::zeros(2, d);
+        for r in 0..2 {
+            let mut v = unit_vector(&mut crng, d);
+            for x in &mut v {
+                *x *= 3.0;
+            }
+            add.row_mut(r).copy_from_slice(&v);
+        }
+        let (ids_u, epoch_u) = uds_client.add_classes(&add).unwrap();
+        let (ids_t, epoch_t) = tcp_client.add_classes(&add).unwrap();
+        assert_eq!(ids_u, ids_t, "round {round}: assigned ids diverged");
+        assert_eq!(epoch_u, epoch_t);
+        assert_eq!(ids_u, vec![next_id, next_id + 1]);
+        live.extend_from_slice(&ids_u);
+        next_id += 2;
+        let victim = live[(round as usize * 5 + 1) % live.len()];
+        assert_eq!(
+            uds_client.retire_classes(&[victim]).unwrap(),
+            tcp_client.retire_classes(&[victim]).unwrap(),
+            "round {round}: retire epochs diverged"
+        );
+        live.retain(|&i| i != victim);
+    }
+
+    // The served states must now be byte-identical: exact probabilities,
+    // identical top-k rankings, identical draws for equal seeds.
+    let usnap = uds_server.snapshot();
+    let tsnap = tcp_server.snapshot();
+    assert_eq!(usnap.epoch(), tsnap.epoch());
+    assert_eq!(
+        usnap.sampler().live_classes(),
+        tsnap.sampler().live_classes()
+    );
+    assert_eq!(usnap.sampler().live_classes(), live.len());
+    let mut prng = Rng::seeded(3503);
+    for probe in 0..6u64 {
+        let h = unit_vector(&mut prng, d);
+        for class in 0..(n + 8) {
+            let (qu, _) = uds_client.probability(&h, class).unwrap();
+            let (qt, _) = tcp_client.probability(&h, class).unwrap();
+            assert_eq!(qu, qt, "probe {probe}: q({class}) diverged");
+        }
+        let (tu, _) = uds_client.top_k(&h, 5).unwrap();
+        let (tt, _) = tcp_client.top_k(&h, 5).unwrap();
+        assert_eq!(tu, tt, "probe {probe}: top-k diverged");
+        let su = uds_client.sample(&h, 6, 0xC0FE + probe).unwrap();
+        let st = tcp_client.sample(&h, 6, 0xC0FE + probe).unwrap();
+        assert_eq!(su.draw, st.draw, "probe {probe}: draws diverged");
+    }
 }

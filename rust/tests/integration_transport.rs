@@ -1,10 +1,13 @@
 //! Cross-process-style loopback tests for the L4 serving transport: a
-//! real `TransportServer` on a unix socket, real `TransportClient`
-//! connections, and the shared micro-batcher in between. Covers
-//! round-trips for all three query kinds, client-vs-inproc seed
+//! real `TransportServer` on a unix socket or a loopback TCP listener,
+//! real `TransportClient` connections, and the shared micro-batcher in
+//! between. Covers round-trips for all query kinds (admin frames
+//! included) on both transports, client-vs-inproc and uds-vs-tcp seed
 //! determinism (identical draws for identical seeds across the process
-//! boundary), a chi-square of transported samples against the offline
-//! sampler, concurrent-client coalescing, and malformed-frame hardening.
+//! boundary and across socket kinds), a chi-square of transported
+//! samples against the offline sampler, concurrent-client coalescing,
+//! wire v3 batched wave pipelining (header amortization + whole-wave
+//! overload shedding), and malformed-frame hardening.
 
 use rfsoftmax::featmap::RffMap;
 use rfsoftmax::linalg::{unit_vector, Matrix};
@@ -435,6 +438,378 @@ fn overload_backpressure_sheds_typed_errors_and_survives() {
         shed_before,
         "windowed pipeline must never be shed"
     );
+}
+
+// ---------------------------------------------------------------------
+// TCP transport
+// ---------------------------------------------------------------------
+
+/// TCP server + batcher + offline reference over the same sampler state.
+fn tcp_serve_stack(
+    n: usize,
+    d: usize,
+    seed: u64,
+    opts: BatcherOptions,
+) -> (ShardedKernelSampler<RffMap>, Arc<MicroBatcher>, TransportServer) {
+    let offline = sharded_rff(n, d, seed);
+    let (server, _writer) = SamplerServer::new(offline.fork().unwrap());
+    let batcher = Arc::new(MicroBatcher::spawn(server, opts));
+    let transport =
+        TransportServer::bind_tcp("127.0.0.1:0", Arc::clone(&batcher)).unwrap();
+    (offline, batcher, transport)
+}
+
+#[test]
+fn tcp_loopback_round_trip_all_query_kinds() {
+    let n = 48;
+    let d = 6;
+    let (offline, _batcher, transport) =
+        tcp_serve_stack(n, d, 2700, BatcherOptions::default());
+    let mut client =
+        TransportClient::connect_endpoint(transport.endpoint()).unwrap();
+    let mut rng = Rng::seeded(2701);
+    for probe in 0..4 {
+        let h = unit_vector(&mut rng, d);
+
+        let reply = client.sample(&h, 9, 7100 + probe).unwrap();
+        assert_eq!(reply.draw.len(), 9);
+        assert_eq!(reply.epoch, 0);
+        for (&id, &q) in reply.draw.ids.iter().zip(&reply.draw.probs) {
+            assert!((id as usize) < n);
+            let want = offline.probability(&h, id as usize);
+            assert!(
+                (q - want).abs() < 1e-12 * want.max(1e-12),
+                "tcp-transported q {q} vs offline {want}"
+            );
+        }
+
+        let (q, epoch) = client.probability(&h, 11).unwrap();
+        assert_eq!(epoch, 0);
+        assert!((q - offline.probability(&h, 11)).abs() < 1e-15);
+
+        let (top, epoch) = client.top_k(&h, 5).unwrap();
+        assert_eq!(epoch, 0);
+        assert_eq!(top, offline.top_k(&h, 5));
+    }
+    let stats = transport.stats();
+    assert_eq!(stats.connections, 1);
+    assert_eq!(stats.requests, 12);
+    assert_eq!(stats.request_frames, 12, "one frame per sync request");
+    assert_eq!(stats.protocol_errors, 0);
+}
+
+#[test]
+fn tcp_admin_frames_mutate_the_served_universe() {
+    let n = 24;
+    let d = 6;
+    let mut rng = Rng::seeded(2800);
+    let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+    let offline = ShardedKernelSampler::with_map(
+        &classes,
+        RffMap::new(d, 32, 2.0, &mut Rng::seeded(2801)),
+        4,
+        "rff-sharded",
+    );
+    let (server, writer) = SamplerServer::new(offline.fork().unwrap());
+    let writer = std::sync::Arc::new(std::sync::Mutex::new(writer));
+    let batcher = Arc::new(MicroBatcher::spawn(
+        server.clone(),
+        BatcherOptions::default(),
+    ));
+    let admin = Arc::new(rfsoftmax::serving::SharedWriterAdmin::new(
+        Arc::clone(&writer),
+        d,
+    ));
+    let transport = TransportServer::bind_tcp_with_admin(
+        "127.0.0.1:0",
+        Arc::clone(&batcher),
+        admin,
+    )
+    .unwrap();
+    let mut client =
+        TransportClient::connect_endpoint(transport.endpoint()).unwrap();
+
+    // Grow by two classes over TCP, retire one, and verify the served
+    // universe tracks it exactly.
+    let add = Matrix::randn(&mut rng, 2, d).l2_normalized_rows();
+    let (ids, epoch) = client.add_classes(&add).unwrap();
+    assert_eq!(ids, vec![n as u32, n as u32 + 1]);
+    assert_eq!(epoch, 1);
+    let epoch = client.retire_classes(&[3]).unwrap();
+    assert_eq!(epoch, 2);
+    let snap = server.snapshot();
+    assert_eq!(snap.sampler().num_classes(), n + 2);
+    assert_eq!(snap.sampler().live_classes(), n + 1);
+    let h = unit_vector(&mut rng, d);
+    let (q, _) = client.probability(&h, 3).unwrap();
+    assert_eq!(q, 0.0, "retired class must serve exact zero");
+    assert_eq!(transport.stats().admin_requests, 2);
+}
+
+#[test]
+fn uds_and_tcp_draws_are_byte_identical_for_equal_seeds() {
+    let n = 64;
+    let d = 8;
+    // Two forks of the SAME offline sampler state behind the two socket
+    // kinds: the transport must be a pure pipe, so equal (seed, query,
+    // epoch) means byte-identical draws across uds and tcp.
+    let offline = sharded_rff(n, d, 2900);
+    let (uds_server, _w1) = SamplerServer::new(offline.fork().unwrap());
+    let uds_batcher =
+        Arc::new(MicroBatcher::spawn(uds_server, BatcherOptions::default()));
+    let uds = TransportServer::bind(
+        sock_path("uds-vs-tcp"),
+        Arc::clone(&uds_batcher),
+    )
+    .unwrap();
+    let (tcp_server, _w2) = SamplerServer::new(offline.fork().unwrap());
+    let tcp_batcher =
+        Arc::new(MicroBatcher::spawn(tcp_server, BatcherOptions::default()));
+    let tcp =
+        TransportServer::bind_tcp("127.0.0.1:0", Arc::clone(&tcp_batcher))
+            .unwrap();
+    let mut uds_client = TransportClient::connect(uds.path()).unwrap();
+    let mut tcp_client =
+        TransportClient::connect_endpoint(tcp.endpoint()).unwrap();
+    let mut rng = Rng::seeded(2901);
+    for i in 0..12u64 {
+        let h = unit_vector(&mut rng, d);
+        let a = uds_client.sample(&h, 7, 0xBEE0 + i).unwrap();
+        let b = tcp_client.sample(&h, 7, 0xBEE0 + i).unwrap();
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.draw, b.draw, "seed {i}: uds and tcp draws diverged");
+        let (qa, _) = uds_client.probability(&h, (i as usize) % n).unwrap();
+        let (qb, _) = tcp_client.probability(&h, (i as usize) % n).unwrap();
+        assert_eq!(qa, qb);
+        let (ta, _) = uds_client.top_k(&h, 6).unwrap();
+        let (tb, _) = tcp_client.top_k(&h, 6).unwrap();
+        assert_eq!(ta, tb);
+        assert_eq!(ta, offline.top_k(&h, 6));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire v3 batched waves over the transport
+// ---------------------------------------------------------------------
+
+#[test]
+fn wave_pipeline_amortizes_headers_and_coalesces() {
+    let n = 64;
+    let d = 8;
+    let (offline, batcher, transport) = tcp_serve_stack(
+        n,
+        d,
+        3000,
+        BatcherOptions { max_batch: 64, max_wait: Duration::from_millis(1) },
+    );
+    let mut client =
+        TransportClient::connect_endpoint(transport.endpoint()).unwrap();
+    let mut rng = Rng::seeded(3001);
+    let burst = 64usize;
+    let wave = 16usize;
+    let reqs: Vec<Request> = (0..burst)
+        .map(|j| {
+            let h = unit_vector(&mut rng, d);
+            match j % 3 {
+                0 => Request::Sample { h, m: 5, seed: 0x3000 + j as u64 },
+                1 => Request::Probability { h, class: (j % n) as u32 },
+                _ => Request::TopK { h, k: 4 },
+            }
+        })
+        .collect();
+    let resps = client.pipeline_waves(&reqs, wave).unwrap();
+    assert_eq!(resps.len(), burst);
+    // Snapshot batcher stats BEFORE the verification loop below issues
+    // its own direct (uncoalesced) cross-check requests.
+    let (batched_requests, batches) = batcher.stats();
+    for (req, resp) in reqs.iter().zip(&resps) {
+        match (req, resp) {
+            (Request::Sample { h, m, seed }, Response::Sample { ids, probs, .. }) => {
+                assert_eq!(ids.len(), *m as usize);
+                assert_eq!(probs.len(), *m as usize);
+                // Byte-identical to a sync call with the same seed (the
+                // snapshot never swapped: no writer in this stack).
+                let direct = batcher.sample(h, *m as usize, *seed);
+                assert_eq!(ids, &direct.draw.ids);
+                assert_eq!(probs, &direct.draw.probs);
+            }
+            (Request::Probability { h, class }, Response::Probability { q, .. }) => {
+                assert_eq!(*q, offline.probability(h, *class as usize));
+            }
+            (Request::TopK { h, k }, Response::TopK { items, .. }) => {
+                assert_eq!(items, &offline.top_k(h, *k as usize));
+            }
+            other => panic!("kind mismatch: {other:?}"),
+        }
+    }
+    let stats = transport.stats();
+    // Header amortization, request direction: 64 requests rode in
+    // exactly 64/16 = 4 wave frames.
+    assert_eq!(stats.requests, burst as u64);
+    assert_eq!(stats.request_frames, (burst / wave) as u64);
+    assert_eq!(stats.wave_frames, (burst / wave) as u64);
+    // The client parsed fewer response frames than responses whenever
+    // the server packed replies (never more than one frame each).
+    let (resp_frames, resp_items) = client.frame_stats();
+    assert_eq!(resp_items, burst as u64);
+    assert!(resp_frames <= resp_items);
+    // One decoded wave lands as one coalesced batch: with waves of 16
+    // and max_batch 64, the serve path must have coalesced.
+    assert_eq!(batched_requests, burst as u64);
+    let mean_batch = batched_requests as f64 / batches.max(1) as f64;
+    assert!(
+        mean_batch >= wave as f64 / 2.0,
+        "wave submission did not coalesce: mean batch {mean_batch:.2}"
+    );
+}
+
+#[test]
+fn overload_sheds_whole_waves_never_split() {
+    let n = 32;
+    let d = 6;
+    // Wide, slow batcher window (as in the single-frame overload test):
+    // the blind-written burst decodes in full while the batcher is still
+    // waiting, so the cap is deterministically reached before the wave
+    // frame arrives.
+    let (_offline, _batcher, transport) = tcp_serve_stack(
+        n,
+        d,
+        3100,
+        BatcherOptions { max_batch: 8192, max_wait: Duration::from_millis(300) },
+    );
+    let mut rng = Rng::seeded(3101);
+    let cap = rfsoftmax::transport::MAX_IN_FLIGHT;
+    let wave = 16usize;
+    let mut buf = Vec::new();
+    // Fill the in-flight cap with singles…
+    for j in 0..cap {
+        wire::encode_request(
+            &mut buf,
+            1 + j as u64,
+            &Request::Probability {
+                h: unit_vector(&mut rng, d),
+                class: (j % n) as u32,
+            },
+        );
+    }
+    // …then one wave: with the cap already reached, the whole wave must
+    // shed as ERR_OVERLOAD — all 16 sub-requests, no partial admit.
+    let wave_reqs: Vec<Request> = (0..wave)
+        .map(|j| Request::Probability {
+            h: unit_vector(&mut rng, d),
+            class: (j % n) as u32,
+        })
+        .collect();
+    let wave_items: Vec<(u64, &Request)> = wave_reqs
+        .iter()
+        .enumerate()
+        .map(|(j, r)| (100_000 + j as u64, r))
+        .collect();
+    wire::encode_request_wave(&mut buf, &wave_items);
+    let mut stream = std::net::TcpStream::connect(match transport.endpoint() {
+        rfsoftmax::transport::Endpoint::Tcp(a) => *a,
+        other => panic!("expected tcp endpoint, got {other}"),
+    })
+    .unwrap();
+    stream.write_all(&buf).unwrap();
+    stream.flush().unwrap();
+    // Sending a wave flips the connection to v3 replies: read frames
+    // (singles or packed waves) until every response arrived.
+    let mut served = 0usize;
+    let mut wave_sheds = 0usize;
+    let mut seen = 0usize;
+    while seen < cap + wave {
+        let frame = wire::read_response_frame(&mut stream)
+            .expect("typed frame")
+            .expect("connection must stay open");
+        let items = match frame {
+            wire::ResponseFrame::Single(id, resp) => vec![(id, resp)],
+            wire::ResponseFrame::Wave(subs) => subs,
+        };
+        for (id, resp) in items {
+            seen += 1;
+            match resp {
+                Response::Probability { q, .. } => {
+                    assert!(q.is_finite());
+                    assert!(id <= cap as u64, "wave sub-request was admitted");
+                    served += 1;
+                }
+                Response::Error { code, .. } => {
+                    assert_eq!(code, wire::ERR_OVERLOAD);
+                    assert!(
+                        id >= 100_000,
+                        "a single was shed before the wave arrived"
+                    );
+                    wave_sheds += 1;
+                }
+                other => panic!("unexpected response kind: {other:?}"),
+            }
+        }
+    }
+    assert_eq!(served, cap, "every single below the cap must be served");
+    assert_eq!(
+        wave_sheds, wave,
+        "the wave must shed whole — all sub-requests or none"
+    );
+    assert_eq!(transport.stats().overloads, wave as u64);
+}
+
+#[test]
+fn v2_single_frame_client_is_served_by_a_v3_server() {
+    let n = 32;
+    let d = 6;
+    let (_offline, _batcher, transport) =
+        serve_stack(n, d, 3200, BatcherOptions::default(), "v2-interop");
+    // A v2 peer's frames are byte-identical to our single-frame encoding
+    // (which pins version 2); hand-roll one and verify both that it is
+    // served and that the reply comes back stamped v2 so the v2 peer
+    // can decode it.
+    let mut rng = Rng::seeded(3201);
+    let mut buf = Vec::new();
+    wire::encode_request(
+        &mut buf,
+        9,
+        &Request::Probability { h: unit_vector(&mut rng, d), class: 5 },
+    );
+    assert_eq!(buf[2], 2, "single-frame encoding must stay v2");
+    let mut stream = UnixStream::connect(transport.path()).unwrap();
+    stream.write_all(&buf).unwrap();
+    stream.flush().unwrap();
+    let mut head = [0u8; wire::HEADER_LEN];
+    std::io::Read::read_exact(&mut stream, &mut head).unwrap();
+    assert_eq!(&head[0..2], b"RF");
+    assert_eq!(head[2], 2, "reply to a v2 single must be stamped v2");
+    // And a v3-stamped single (same bytes, bumped version) is accepted
+    // too — the server speaks 2..=3.
+    let mut v3 = Vec::new();
+    wire::encode_request(
+        &mut v3,
+        10,
+        &Request::Probability { h: unit_vector(&mut rng, d), class: 6 },
+    );
+    v3[2] = 3;
+    let mut stream = UnixStream::connect(transport.path()).unwrap();
+    stream.write_all(&v3).unwrap();
+    stream.flush().unwrap();
+    let (id, resp) = wire::read_response(&mut stream).unwrap().unwrap();
+    assert_eq!(id, 10);
+    assert!(matches!(resp, Response::Probability { .. }));
+}
+
+#[test]
+fn tcp_server_shutdown_closes_connections_cleanly() {
+    let n = 24;
+    let d = 6;
+    let (_offline, _batcher, transport) =
+        tcp_serve_stack(n, d, 3300, BatcherOptions::default());
+    let endpoint = transport.endpoint().clone();
+    let mut client = TransportClient::connect_endpoint(&endpoint).unwrap();
+    let mut rng = Rng::seeded(3301);
+    let h = unit_vector(&mut rng, d);
+    assert_eq!(client.sample(&h, 4, 1).unwrap().draw.len(), 4);
+    drop(transport);
+    // The listener is gone and the connection is dead.
+    assert!(client.sample(&h, 4, 2).is_err());
 }
 
 #[test]
