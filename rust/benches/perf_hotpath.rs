@@ -3,6 +3,10 @@
 //!
 //! * kernel-tree `sample` / `update` at several (n, D),
 //! * feature maps: classic RFF vs ORF vs SORF (O(Dd) vs O(D log d)),
+//! * SIMD `matmul_nt` microkernel vs the scalar reference (the ISSUE 6
+//!   dispatch win, gated in CI via `bench-check --require-simd-speedup`),
+//! * quantized sampler embeddings: draw throughput + memory at
+//!   `none`/`f16`/`i8` storage,
 //! * sampled-softmax loss oracle,
 //! * batch negative-draw path as the coordinator runs it,
 //! * batch-vs-scalar `sample_batch` throughput (emits `BENCH {json}`
@@ -17,9 +21,10 @@
 //! runs (the record gains `"smoke": true` so the trajectory can filter).
 
 use rfsoftmax::benchkit::{bench_header, black_box, Bencher};
+use rfsoftmax::config::FeatureMapKind;
 use rfsoftmax::featmap::{FeatureMap, OrfMap, RffMap, SorfMap};
 use rfsoftmax::json::Json;
-use rfsoftmax::linalg::{unit_vector, Matrix};
+use rfsoftmax::linalg::{simd, unit_vector, Matrix, QuantizeKind};
 use rfsoftmax::rng::Rng;
 use rfsoftmax::sampler::{KernelTree, RffSampler, Sampler};
 use rfsoftmax::softmax::sampled_softmax_loss;
@@ -78,6 +83,47 @@ fn main() {
     }
 
     // ------------------------------------------------------------------
+    // SIMD gemm microkernel A/B: the runtime-dispatched matmul_nt vs the
+    // always-compiled scalar reference on the same buffers. The BENCH
+    // record carries the resolved tier so forced-scalar CI lanes
+    // (speedup ≈ 1) are distinguishable from real vectorized runs.
+    // ------------------------------------------------------------------
+    println!("\n# simd matmul_nt microkernel (dispatch tier: {})", simd::tier_name());
+    {
+        let (r, k, cols) = if smoke { (64, 256, 256) } else { (256, 1000, 256) };
+        let mut rng = Rng::seeded(12);
+        let mut a = vec![0.0f32; r * k];
+        let mut bt = vec![0.0f32; cols * k];
+        rng.fill_gaussian_f32(&mut a);
+        rng.fill_gaussian_f32(&mut bt);
+        let mut out = vec![0.0f32; r * cols];
+        let s_simd = b.run(&format!("matmul_nt {r}x{k} x {cols}x{k}T (simd)"), || {
+            simd::matmul_nt_into(&a, r, k, &bt, cols, &mut out);
+            black_box(out[0])
+        });
+        let s_scalar = b.run(&format!("matmul_nt {r}x{k} x {cols}x{k}T (scalar)"), || {
+            simd::scalar::matmul_nt_into(&a, r, k, &bt, cols, &mut out);
+            black_box(out[0])
+        });
+        println!("{}", s_simd.report());
+        println!("{}", s_scalar.report());
+        let simd_per_sec = 1.0 / s_simd.mean();
+        let scalar_per_sec = 1.0 / s_scalar.mean();
+        let record = Json::obj(vec![
+            ("bench", Json::from("simd_matmul_nt")),
+            ("r", Json::from(r)),
+            ("k", Json::from(k)),
+            ("d", Json::from(cols)),
+            ("simd", Json::from(simd::tier_name())),
+            ("simd_per_sec", Json::from(simd_per_sec)),
+            ("scalar_per_sec", Json::from(scalar_per_sec)),
+            ("speedup", Json::from(simd_per_sec / scalar_per_sec)),
+            ("smoke", Json::from(smoke)),
+        ]);
+        println!("BENCH {record}");
+    }
+
+    // ------------------------------------------------------------------
     // Kernel tree: sample + update at several scales.
     // ------------------------------------------------------------------
     println!("\n# kernel tree (query dim = 2D feature coords)");
@@ -126,6 +172,49 @@ fn main() {
         println!("{}", b.run(&format!("rff_draw m=100 D={nf}"), || {
             black_box(sampler.sample(&h, 100, &mut draw_rng))
         }).report());
+    }
+
+    // ------------------------------------------------------------------
+    // Quantized sampler embeddings: draw throughput and resident memory
+    // at each storage precision. The f32 cell doubles as the quantized
+    // cells' baseline under `bench-check --baseline`.
+    // ------------------------------------------------------------------
+    {
+        let qn = if smoke { 2_000 } else { 20_000 };
+        let d = 64;
+        let m = 20;
+        println!("\n# quantized sampler embeddings (n={qn}, d={d}, D=128, m={m})");
+        let mut rng = Rng::seeded(13);
+        let classes = Matrix::randn(&mut rng, qn, d).l2_normalized_rows();
+        for qk in [QuantizeKind::None, QuantizeKind::F16, QuantizeKind::I8] {
+            let sampler = RffSampler::with_kind_opts(
+                &classes,
+                128,
+                4.0,
+                FeatureMapKind::Rff,
+                &mut Rng::seeded(14),
+                0,
+                qk,
+            );
+            let h = unit_vector(&mut rng, d);
+            let mut draw_rng = Rng::seeded(15);
+            let s = b.run(&format!("rff_draw m={m} quantize={}", qk.name()), || {
+                black_box(sampler.sample(&h, m, &mut draw_rng))
+            });
+            println!("{}", s.report());
+            let record = Json::obj(vec![
+                ("bench", Json::from("quantized_sampler")),
+                ("n", Json::from(qn)),
+                ("d", Json::from(d)),
+                ("m", Json::from(m)),
+                ("quantize", Json::from(qk.name())),
+                ("simd", Json::from(simd::tier_name())),
+                ("draws_per_sec", Json::from(m as f64 / s.mean())),
+                ("memory_bytes", Json::from(sampler.memory_bytes())),
+                ("smoke", Json::from(smoke)),
+            ]);
+            println!("BENCH {record}");
+        }
     }
 
     // §Perf A/B: memoized batch walk vs m independent walks on the raw
@@ -204,6 +293,7 @@ fn main() {
                 ("batch_samples_per_sec", Json::from(batch_sps)),
                 ("scalar_samples_per_sec", Json::from(scalar_sps)),
                 ("speedup", Json::from(batch_sps / scalar_sps)),
+                ("simd", Json::from(simd::tier_name())),
                 ("smoke", Json::from(smoke)),
             ]);
             println!("BENCH {record}");

@@ -17,7 +17,7 @@
 
 use rfsoftmax::benchkit::bench_header;
 use rfsoftmax::featmap::RffMap;
-use rfsoftmax::linalg::Matrix;
+use rfsoftmax::linalg::{Matrix, QuantizeKind};
 use rfsoftmax::rng::Rng;
 use rfsoftmax::sampler::{RffSampler, Sampler, ShardedKernelSampler};
 use rfsoftmax::serving::{
@@ -92,6 +92,7 @@ fn main() {
                     churn: None,
                     wave: 1,
                     listen: "127.0.0.1:0".into(),
+                    quantize: QuantizeKind::None,
                 };
                 match run_closed_loop(sampler.as_ref(), &spec) {
                     Ok(report) => {
@@ -136,6 +137,7 @@ fn main() {
                 churn: Some(churn),
                 wave: 1,
                 listen: "127.0.0.1:0".into(),
+                quantize: QuantizeKind::None,
             };
             match run_closed_loop(sampler.as_ref(), &spec) {
                 Ok(report) => {
@@ -172,6 +174,7 @@ fn main() {
             churn: None,
             wave,
             listen: "127.0.0.1:0".into(),
+            quantize: QuantizeKind::None,
         };
         match run_closed_loop(sampler.as_ref(), &spec) {
             Ok(report) => {

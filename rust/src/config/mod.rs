@@ -206,6 +206,14 @@ pub struct SamplerConfig {
     /// already route to the lightest shard). `<= 1` disables. Only
     /// meaningful with `sampler.shards > 1`.
     pub rebalance: f64,
+    /// Storage precision of the kernel samplers' private class-embedding
+    /// copy (`none` = f32, `f16`, `i8` with per-row scales). Halves or
+    /// quarters that copy's memory; the sampled distribution drifts only
+    /// within the RFF bias budget (see the chi-square drift test in
+    /// `rust/tests/integration_sampler_stats.rs`). φ is always computed
+    /// from the dequantized stored rows, so tree bookkeeping stays
+    /// exactly consistent within a run.
+    pub quantize: crate::linalg::QuantizeKind,
     pub seed: u64,
 }
 
@@ -223,6 +231,7 @@ impl Default for SamplerConfig {
             shards: 0,
             max_capacity: 0,
             rebalance: 4.0,
+            quantize: crate::linalg::QuantizeKind::None,
             seed: 17,
         }
     }
@@ -537,6 +546,14 @@ impl Config {
                 self.sampler.max_capacity = us(key, v)?
             }
             "sampler.rebalance" => self.sampler.rebalance = f64v(key, v)?,
+            "sampler.quantize" => {
+                self.sampler.quantize =
+                    crate::linalg::QuantizeKind::parse(v).ok_or_else(|| {
+                        ConfigError(format!(
+                            "unknown quantize mode '{v}' (none|f16|i8)"
+                        ))
+                    })?
+            }
             "sampler.seed" => self.sampler.seed = u64v(key, v)?,
 
             "serving.double_buffer" => {
@@ -665,6 +682,7 @@ impl Config {
                     ("shards", Json::from(self.sampler.shards)),
                     ("max_capacity", Json::from(self.sampler.max_capacity)),
                     ("rebalance", Json::from(self.sampler.rebalance)),
+                    ("quantize", Json::from(self.sampler.quantize.name())),
                     ("seed", Json::from(self.sampler.seed as usize)),
                 ]),
             ),
@@ -793,6 +811,24 @@ mod tests {
         c.sampler.max_capacity = 100;
         c.model.num_classes = 1000;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn quantize_knob_round_trips_and_rejects_garbage() {
+        use crate::linalg::QuantizeKind;
+        let mut c = Config::default();
+        assert_eq!(c.sampler.quantize, QuantizeKind::None);
+        c.set("sampler.quantize", "f16").unwrap();
+        assert_eq!(c.sampler.quantize, QuantizeKind::F16);
+        let j = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.sampler.quantize, QuantizeKind::F16);
+        c.set("sampler.quantize", "i8").unwrap();
+        assert_eq!(c.sampler.quantize, QuantizeKind::I8);
+        c.set("sampler.quantize", "none").unwrap();
+        assert_eq!(c.sampler.quantize, QuantizeKind::None);
+        assert!(c.set("sampler.quantize", "f8").is_err());
     }
 
     #[test]

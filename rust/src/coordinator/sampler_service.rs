@@ -40,46 +40,56 @@ pub fn build_sampler(
             let shards = s.shards.max(1);
             let multi = s.shards > 1;
             // `sampler.rebalance` arms retire-skew redistribution on the
-            // sharded representation (a no-op until classes churn).
+            // sharded representation (a no-op until classes churn);
+            // `sampler.max_capacity` pre-reserves shard-tree padding and
+            // `sampler.quantize` picks the class-copy precision.
             match s.feature_map {
                 FeatureMapKind::Rff => {
-                    let mut sk = ShardedKernelSampler::with_map(
+                    let mut sk = ShardedKernelSampler::with_map_opts(
                         classes,
                         RffMap::new(d, s.dim, s.nu, rng),
                         shards,
                         if multi { "rff-sharded" } else { "rff" },
+                        s.max_capacity,
+                        s.quantize,
                     );
                     sk.set_rebalance_threshold(s.rebalance);
                     Box::new(sk)
                 }
                 FeatureMapKind::Orf => {
-                    let mut sk = ShardedKernelSampler::with_map(
+                    let mut sk = ShardedKernelSampler::with_map_opts(
                         classes,
                         OrfMap::new(d, s.dim, s.nu, rng),
                         shards,
                         if multi { "rff-orf-sharded" } else { "rff-orf" },
+                        s.max_capacity,
+                        s.quantize,
                     );
                     sk.set_rebalance_threshold(s.rebalance);
                     Box::new(sk)
                 }
                 FeatureMapKind::Sorf => {
-                    let mut sk = ShardedKernelSampler::with_map(
+                    let mut sk = ShardedKernelSampler::with_map_opts(
                         classes,
                         SorfMap::new(d, s.dim, s.nu, rng),
                         shards,
                         if multi { "rff-sorf-sharded" } else { "rff-sorf" },
+                        s.max_capacity,
+                        s.quantize,
                     );
                     sk.set_rebalance_threshold(s.rebalance);
                     Box::new(sk)
                 }
             }
         }
-        SamplerKind::Rff => Box::new(RffSampler::with_kind(
+        SamplerKind::Rff => Box::new(RffSampler::with_kind_opts(
             classes,
             s.dim,
             s.nu,
             s.feature_map,
             rng,
+            s.max_capacity,
+            s.quantize,
         )),
         SamplerKind::Quadratic => {
             // The quadratic map's D = d²+1 makes the full per-node tree
@@ -105,8 +115,14 @@ pub fn build_sampler(
             let d = classes.cols();
             let dim = d * d + 1;
             let plan_n = n.max(s.max_capacity);
-            let per_copy = KernelTree::estimate_bytes(plan_n, dim)
-                + plan_n * d * std::mem::size_of::<f32>();
+            // The class-copy term honors `sampler.quantize` (f16 halves,
+            // i8 quarters plus one f32 scale per row).
+            let class_bytes = match s.quantize {
+                crate::linalg::QuantizeKind::None => plan_n * d * 4,
+                crate::linalg::QuantizeKind::F16 => plan_n * d * 2,
+                crate::linalg::QuantizeKind::I8 => plan_n * d + plan_n * 4,
+            };
+            let per_copy = KernelTree::estimate_bytes(plan_n, dim) + class_bytes;
             let copies = if cfg.serving.double_buffer { 3 } else { 1 };
             let tree_bytes = per_copy * copies;
             if tree_bytes > 2 << 30 {
@@ -119,16 +135,24 @@ pub fn build_sampler(
                 // Same serving rationale as the Rff arm: the sharded
                 // representation's fork is a memcpy clone, so the double
                 // buffer skips a second O(n·d²) tree rebuild.
-                let mut sk = ShardedKernelSampler::with_map(
+                let mut sk = ShardedKernelSampler::with_map_opts(
                     classes,
                     crate::featmap::QuadraticMap::new(d, s.alpha, 1.0),
                     s.shards.max(1),
                     if s.shards > 1 { "quadratic-sharded" } else { "quadratic" },
+                    s.max_capacity,
+                    s.quantize,
                 );
                 sk.set_rebalance_threshold(s.rebalance);
                 Box::new(sk)
             } else {
-                Box::new(QuadraticSampler::new(classes, s.alpha, 1.0))
+                Box::new(QuadraticSampler::new_opts(
+                    classes,
+                    s.alpha,
+                    1.0,
+                    s.max_capacity,
+                    s.quantize,
+                ))
             }
         }
         SamplerKind::Uniform => Box::new(UniformSampler::new(n)),
@@ -555,6 +579,24 @@ mod tests {
         let s = build_sampler(&cfg, &classes, None, &mut rng).unwrap();
         assert_eq!(s.name(), "rff-sharded");
         assert_eq!(s.num_classes(), 32);
+        let h = unit_vector(&mut rng, 8);
+        let total: f64 = (0..32).map(|i| s.probability(&h, i)).sum();
+        assert!((total - 1.0).abs() < 1e-6, "Σq = {total}");
+    }
+
+    #[test]
+    fn build_sampler_threads_quantize_and_capacity() {
+        let mut rng = Rng::seeded(8);
+        let classes = Matrix::randn(&mut rng, 32, 8).l2_normalized_rows();
+        let mut cfg = Config::default();
+        cfg.model.num_classes = 32;
+        cfg.sampler.dim = 16;
+        cfg.sampler.num_negatives = 5;
+        cfg.sampler.shards = 4;
+        cfg.sampler.max_capacity = 64;
+        cfg.set("sampler.quantize", "f16").unwrap();
+        let s = build_sampler(&cfg, &classes, None, &mut rng).unwrap();
+        assert_eq!(s.name(), "rff-sharded");
         let h = unit_vector(&mut rng, 8);
         let total: f64 = (0..32).map(|i| s.probability(&h, i)).sum();
         assert!((total - 1.0).abs() < 1e-6, "Σq = {total}");

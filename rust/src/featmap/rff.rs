@@ -67,8 +67,10 @@ impl FeatureMap for RffMap {
     }
 
     /// Batch override: the whole batch's projections come from one
-    /// blocked gemm `U · Wᵀ` (amortizing W traffic across rows), then a
-    /// single pointwise `sin_cos` sweep writes the cos‖sin halves.
+    /// gemm `U · Wᵀ` — [`Matrix::matmul_nt`], which dispatches to the
+    /// [`crate::linalg::simd`] microkernel tier resolved at startup —
+    /// amortizing W traffic across rows, then a single pointwise
+    /// `sin_cos` sweep writes the cos‖sin halves.
     fn map_batch_into(&self, u: &Matrix, out: &mut Matrix) {
         let d_f = self.w.rows();
         assert_eq!(u.cols(), self.w.cols(), "map_batch_into: input dim");

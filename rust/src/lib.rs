@@ -97,8 +97,8 @@
 //! rather than single examples:
 //!
 //! 1. **[`linalg`]** supplies a blocked `Matrix::matmul_nt` gemm (both
-//!    operands row-major, 4-accumulator inner dot) and batched
-//!    `axpy_rows` accumulation.
+//!    operands row-major, dispatched through the [`linalg::simd`]
+//!    microkernels) and batched `axpy_rows` accumulation.
 //! 2. **[`featmap`]** maps all queries at once:
 //!    `FeatureMap::map_batch_into` computes `Φ = f(H · Wᵀ)` in one gemm
 //!    for RFF/ORF (FWHT-scratch-amortized for SORF, constant-hoisted for
@@ -117,6 +117,46 @@
 //!    batch-wide — and pushes the step's embedding updates as one
 //!    sharded batch, while the [`exec`] prefetcher keeps producing whole
 //!    batches ahead of the consumer.
+//!
+//! ## Performance
+//!
+//! The raw-speed hot path is owned by three mechanisms, all on by
+//! default and all observable in the BENCH JSON trajectory:
+//!
+//! * **Runtime-dispatched SIMD kernels** ([`linalg::simd`]) — `dot`,
+//!   the register-blocked `matmul_nt` microkernel, and `axpy` resolve
+//!   once at startup to AVX2+FMA (x86-64), NEON (aarch64), or the
+//!   always-compiled scalar reference; every tier produces identical
+//!   results for `axpy` (mul+add, no FMA contraction) and the
+//!   equivalence suite pins SIMD-vs-scalar agreement on remainder
+//!   lengths, ragged tiles, and NaN/inf propagation. Setting
+//!   `RFSM_FORCE_SCALAR=1` pins the scalar tier for bit-for-bit
+//!   reproducibility across machines (CI runs the unit suite both
+//!   ways). The `simd_matmul_nt` BENCH record carries the resolved
+//!   tier plus the measured speedup, and CI's
+//!   `bench-check --require-simd-speedup 2` gate machine-checks the
+//!   win on every push.
+//! * **Cache-conscious tree walks** — each root→leaf step in
+//!   [`sampler::KernelTree`] software-prefetches both children of the
+//!   *next* level while the current level's dot products run, and
+//!   `sample_many` eagerly fills the top memo levels once so every
+//!   draw after the first walks warm cache lines.
+//! * **Quantized sampler embeddings** (`sampler.quantize = none | f16
+//!   | i8`) — the sampler's private class-embedding copy stores as
+//!   IEEE f16 (half the memory, round-off-level drift) or as i8 with
+//!   per-row scales (quarter the memory, percent-level drift);
+//!   feature maps always consume the *dequantized* rows, so Σq = 1
+//!   stays exact and the χ² drift suite
+//!   (`integration_sampler_stats`) proves sampled distributions stay
+//!   within the existing bias budget vs f32. The `quantized_sampler`
+//!   BENCH cells track draws/sec + resident bytes per mode, and
+//!   serving records tag both `quantize` and `simd`.
+//!
+//! Capacity growth is amortized away too: `sampler.max_capacity`
+//! pre-reserves tree slots so a known churn schedule pays zero
+//! doubling copies (`growths()` exposes the counter, and
+//! `bench-check --baseline` ratchets every BENCH cell against the
+//! previous CI run's artifacts).
 //!
 //! ## Quick start
 //!

@@ -99,9 +99,11 @@ impl Matrix {
         out
     }
 
-    /// Dense matmul `self (r×c) @ other (c×k)`, blocked over k for cache
-    /// locality. Only used at setup time (e.g. building feature tables),
-    /// never on the per-step hot path.
+    /// Dense matmul `self (r×c) @ other (c×k)` with a column-major-ish
+    /// right operand. Scalar on purpose: every hot gemm in the crate
+    /// goes through [`Matrix::matmul_nt`] (both operands row-major,
+    /// SIMD-dispatched), and this variant survives as the independent
+    /// reference implementation the `matmul_nt` tests check against.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul: inner dims");
         let (r, c, k) = (self.rows, self.cols, other.cols);
@@ -126,29 +128,25 @@ impl Matrix {
     /// `self (r×d) @ otherᵀ` where `other` is `k×d`, giving `out (r×k)`
     /// with `out[i][j] = self.row(i) · other.row(j)`.
     ///
-    /// Both operands stream row-major (no transposed strides), the inner
-    /// product reuses [`dot`]'s 4-accumulator unrolling, and `other`'s
-    /// rows are visited in blocks so they stay L2-resident across the `r`
-    /// sweep. This is the batch-path workhorse: feature maps compute
-    /// `Φ = f(U · Wᵀ)` for a whole batch `U` in one call instead of `r`
-    /// matvecs.
+    /// Both operands stream row-major (no transposed strides) and the
+    /// whole product runs through the runtime-dispatched microkernel in
+    /// [`super::simd`] — a register-blocked 4×2 FMA tile on AVX2, a
+    /// NEON vector dot on aarch64, and the blocked 4-accumulator scalar
+    /// loop everywhere else. This is the batch-path workhorse: feature
+    /// maps compute `Φ = f(U · Wᵀ)` for a whole batch `U` in one call
+    /// instead of `r` matvecs.
     pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_nt: inner dims");
         let (r, k) = (self.rows, other.rows);
         let mut out = Matrix::zeros(r, k);
-        const BLOCK: usize = 64;
-        let mut j0 = 0usize;
-        while j0 < k {
-            let j1 = (j0 + BLOCK).min(k);
-            for i in 0..r {
-                let a = self.row(i);
-                let out_row = &mut out.data[i * k..(i + 1) * k];
-                for j in j0..j1 {
-                    out_row[j] = dot(a, other.row(j));
-                }
-            }
-            j0 = j1;
-        }
+        super::simd::matmul_nt_into(
+            &self.data,
+            r,
+            self.cols,
+            &other.data,
+            k,
+            &mut out.data,
+        );
         out
     }
 
@@ -162,13 +160,28 @@ impl Matrix {
         self.rows += 1;
     }
 
-    /// Transposed copy.
+    /// Transposed copy, tiled so both the row-major reads and the
+    /// column-major writes stay within one cache-block worth of lines
+    /// at a time (the naive double loop streams reads but scatters a
+    /// write per row across `rows` distinct lines).
     pub fn transpose(&self) -> Matrix {
+        const TILE: usize = 32;
         let mut out = Matrix::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+        let mut i0 = 0usize;
+        while i0 < self.rows {
+            let i1 = (i0 + TILE).min(self.rows);
+            let mut j0 = 0usize;
+            while j0 < self.cols {
+                let j1 = (j0 + TILE).min(self.cols);
+                for i in i0..i1 {
+                    for j in j0..j1 {
+                        out.data[j * self.rows + i] =
+                            self.data[i * self.cols + j];
+                    }
+                }
+                j0 = j1;
             }
+            i0 = i1;
         }
         out
     }
@@ -284,6 +297,22 @@ mod tests {
         let a = Matrix::randn(&mut rng, 3, 5);
         let b = a.transpose().transpose();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn transpose_is_exact_across_tile_boundaries() {
+        // 33×70 straddles the 32-wide tiles in both dimensions.
+        let mut rng = Rng::seeded(36);
+        let a = Matrix::randn(&mut rng, 33, 70);
+        let t = a.transpose();
+        assert_eq!(t.rows(), 70);
+        assert_eq!(t.cols(), 33);
+        for i in 0..33 {
+            for j in 0..70 {
+                assert_eq!(a.get(i, j).to_bits(), t.get(j, i).to_bits());
+            }
+        }
+        assert_eq!(a, t.transpose());
     }
 
     #[test]

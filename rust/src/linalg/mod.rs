@@ -1,47 +1,38 @@
 //! Dense linear-algebra substrate (f32, row-major).
 //!
 //! No BLAS / ndarray offline, so the kernels this framework needs on the
-//! Rust hot path — dot products, matvec against feature maps, row
-//! normalization — are implemented here with manual 4-way unrolling that
-//! LLVM auto-vectorizes well on x86-64. The heavy model math itself lives
-//! in the AOT-compiled HLO (L1/L2); this module serves the *sampler* and
+//! Rust hot path — dot products, gemms against feature maps, row
+//! normalization — are implemented here. The entry points (`dot`,
+//! `axpy`, `Matrix::matmul_nt`) dispatch through [`simd`] — explicit
+//! `std::arch` intrinsics (AVX2+FMA / NEON) chosen once at startup by
+//! runtime feature detection, with the portable 4-accumulator scalar
+//! loops always compiled in as the fallback and correctness reference.
+//! [`quant`] adds the opt-in f16/i8 storage for the sampler's private
+//! class-embedding copy. The heavy model math itself lives in the
+//! AOT-compiled HLO (L1/L2); this module serves the *sampler* and
 //! evaluation paths.
 
 mod matrix;
+pub mod quant;
+pub mod simd;
 
 pub use matrix::Matrix;
+pub use quant::{ClassStore, QuantizeKind};
 
 use crate::rng::Rng;
 
-/// Dot product with 4 accumulators (breaks the fp dependency chain; LLVM
-/// vectorizes this to SIMD lanes).
+/// Dot product, SIMD-dispatched (AVX2/NEON when detected, 4-accumulator
+/// scalar otherwise — see [`simd::tier`]).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut tail = 0.0f32;
-    for j in chunks * 4..n {
-        tail += a[j] * b[j];
-    }
-    (s0 + s1) + (s2 + s3) + tail
+    simd::dot(a, b)
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x`, SIMD-dispatched. Bit-exact across dispatch tiers
+/// (element-wise, no reassociation).
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * xi;
-    }
+    simd::axpy(alpha, x, y)
 }
 
 /// Batched axpy over selected rows of a flat row-major table:
@@ -49,9 +40,9 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 ///
 /// This is the accumulation kernel behind weighted row-sums on the batch
 /// path (e.g. the extreme-classification sparse-feature query assembly):
-/// one pass per selected row, each an [`axpy`] that LLVM vectorizes.
-/// Takes a slice rather than a [`Matrix`] so embedding-table blocks
-/// qualify without a copy.
+/// one pass per selected row, each a SIMD-dispatched [`axpy`]. Takes a
+/// slice rather than a [`Matrix`] so embedding-table blocks qualify
+/// without a copy.
 pub fn axpy_rows(
     table: &[f32],
     dim: usize,

@@ -1,0 +1,602 @@
+//! Quantized storage for the sampler's private class-embedding copy.
+//!
+//! The kernel samplers keep their own copy of the class-embedding
+//! table (the "universe" the tree walks over). RF-softmax tolerates
+//! approximation by construction — the sampling distribution only has
+//! to track `q_i ∝ φ(c_i)ᵀφ(h)` within a bias budget — so this private
+//! copy is the one place the crate quantizes aggressively: the
+//! opt-in `sampler.quantize` knob stores it in IEEE 754 half precision
+//! (`f16`, half the bytes) or `i8` with per-row scales (a quarter of
+//! the bytes), and every read dequantizes back to f32 before the SIMD
+//! kernels run. Quantization happens **on ingest** (build, add,
+//! update), and φ is always computed from the *dequantized* stored
+//! row, so the tree's interior sums are consistently sums of
+//! `φ(deq(quant(c)))` — drift shows up as a slightly perturbed
+//! universe, not as tree-internal inconsistency.
+//!
+//! `f16` conversion is hand-rolled (no new deps): round-to-nearest-even
+//! with subnormal and inf/NaN handling. The x86_64 fast path
+//! dequantizes rows with `_mm256_cvtph_ps` (F16C) / `_mm256_cvtepi8_epi32`;
+//! both are element-wise exact, so SIMD and scalar dequantization
+//! produce bit-identical f32 rows and dispatch never perturbs draws
+//! within a tier.
+
+use super::simd::{self, SimdTier};
+use super::Matrix;
+
+/// How the sampler stores its private class-embedding copy
+/// (`sampler.quantize`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantizeKind {
+    /// Full f32 rows (the default; byte-identical to the historic
+    /// behavior).
+    None,
+    /// IEEE 754 binary16 rows — half the bytes, ~1e-3 relative error.
+    F16,
+    /// i8 rows with one f32 scale per row — a quarter of the bytes,
+    /// ~1/255 relative error per element.
+    I8,
+}
+
+impl QuantizeKind {
+    /// Parse a `sampler.quantize` config value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" => Some(QuantizeKind::None),
+            "f16" => Some(QuantizeKind::F16),
+            "i8" => Some(QuantizeKind::I8),
+            _ => None,
+        }
+    }
+
+    /// The config-file / BENCH-JSON spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantizeKind::None => "none",
+            QuantizeKind::F16 => "f16",
+            QuantizeKind::I8 => "i8",
+        }
+    }
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even. Overflow goes
+/// to ±inf, tiny values to signed zero/subnormals, NaN stays NaN (quiet
+/// bit forced so the payload never collapses to inf).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // inf / NaN: keep NaN-ness explicit.
+        return if man == 0 {
+            sign | 0x7C00
+        } else {
+            sign | 0x7E00 | ((man >> 13) as u16 & 0x03FF) | 0x0200
+        };
+    }
+    let half_exp = exp - 127 + 15;
+    if half_exp >= 0x1F {
+        // Too large for half precision: round to infinity.
+        return sign | 0x7C00;
+    }
+    if half_exp <= 0 {
+        // Subnormal (or zero) in half precision.
+        let shift = 14 - half_exp; // bits of mantissa dropped beyond 10
+        if shift > 24 {
+            return sign; // rounds to signed zero
+        }
+        let full_man = man | 0x0080_0000; // implicit leading one
+        let half_man = (full_man >> shift) as u16;
+        // Round to nearest even on the dropped bits.
+        let round_bit = 1u32 << (shift - 1);
+        if (full_man & round_bit) != 0
+            && (full_man & (3 * round_bit - 1)) != 0
+        {
+            return sign | (half_man + 1);
+        }
+        return sign | half_man;
+    }
+    let half = sign | ((half_exp as u16) << 10) | ((man >> 13) as u16);
+    // RNE on the 13 dropped mantissa bits; the +1 on the assembled u16
+    // deliberately carries into the exponent (and on to inf) when the
+    // mantissa overflows.
+    let round_bit = 1u32 << 12;
+    if (man & round_bit) != 0 && (man & (3 * round_bit - 1)) != 0 {
+        half + 1
+    } else {
+        half
+    }
+}
+
+/// IEEE 754 binary16 bits → f32 (exact: every f16 value is
+/// representable in f32).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign);
+        }
+        // Subnormal: man · 2⁻²⁴, exact in f32.
+        let mag = man as f32 * f32::from_bits(0x3380_0000);
+        return if sign != 0 { -mag } else { mag };
+    }
+    if exp == 0x1F {
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13));
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// Quantize one row to i8 with a shared scale; returns the scale.
+/// Zero rows get scale 1.0 so dequantization is exact for them.
+fn quantize_i8_row(row: &[f32], out: &mut [i8]) -> f32 {
+    let maxabs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+    for (o, &v) in out.iter_mut().zip(row.iter()) {
+        *o = (v / scale).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+/// Scalar f16 row dequantization (the reference the SIMD kernel must
+/// match bit-for-bit).
+fn dequant_f16_scalar(src: &[u16], dst: &mut [f32]) {
+    for (d, &h) in dst.iter_mut().zip(src.iter()) {
+        *d = f16_to_f32(h);
+    }
+}
+
+fn dequant_i8_scalar(src: &[i8], scale: f32, dst: &mut [f32]) {
+    for (d, &q) in dst.iter_mut().zip(src.iter()) {
+        *d = q as f32 * scale;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// 8-at-a-time f16 → f32 via F16C. `_mm256_cvtph_ps` implements the
+    /// exact IEEE conversion, so this is bit-identical to the scalar
+    /// path.
+    #[target_feature(enable = "avx2,f16c")]
+    pub unsafe fn dequant_f16(src: &[u16], dst: &mut [f32]) {
+        let n = src.len();
+        let sp = src.as_ptr();
+        let dp = dst.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let h = _mm_loadu_si128(sp.add(i) as *const __m128i);
+            _mm256_storeu_ps(dp.add(i), _mm256_cvtph_ps(h));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = super::f16_to_f32(*sp.add(i));
+            i += 1;
+        }
+    }
+
+    /// 8-at-a-time i8 → f32·scale. Widening conversion is exact and the
+    /// single multiply rounds identically to scalar, so this too is
+    /// bit-identical to the scalar path.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_i8(src: &[i8], scale: f32, dst: &mut [f32]) {
+        let n = src.len();
+        let sp = src.as_ptr();
+        let dp = dst.as_mut_ptr();
+        let vs = _mm256_set1_ps(scale);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let q = _mm_loadl_epi64(sp.add(i) as *const __m128i);
+            let wide = _mm256_cvtepi8_epi32(q);
+            let f = _mm256_cvtepi32_ps(wide);
+            _mm256_storeu_ps(dp.add(i), _mm256_mul_ps(f, vs));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = *sp.add(i) as f32 * scale;
+            i += 1;
+        }
+    }
+}
+
+fn dequant_f16(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd::tier() == SimdTier::Avx2 {
+        // SAFETY: Avx2 tier ⇒ runtime-detected avx2+f16c.
+        unsafe { x86::dequant_f16(src, dst) };
+        return;
+    }
+    let _ = simd::tier(); // keep dispatch cost symmetric off-x86
+    dequant_f16_scalar(src, dst);
+}
+
+fn dequant_i8(src: &[i8], scale: f32, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd::tier() == SimdTier::Avx2 {
+        // SAFETY: Avx2 tier ⇒ runtime-detected avx2.
+        unsafe { x86::dequant_i8(src, scale, dst) };
+        return;
+    }
+    let _ = simd::tier();
+    dequant_i8_scalar(src, scale, dst);
+}
+
+/// The sampler's class-embedding table in its configured precision.
+///
+/// Row-major like [`Matrix`]; `push_row`/`set_row` quantize on ingest,
+/// `row_into`/`dequantized` hand back f32 for the compute kernels.
+#[derive(Clone, Debug)]
+pub enum ClassStore {
+    /// Plain f32 rows (wraps the historic `Matrix` layout).
+    F32(Matrix),
+    /// binary16 rows.
+    F16 { cols: usize, data: Vec<u16> },
+    /// i8 rows with one f32 scale per row.
+    I8 { cols: usize, data: Vec<i8>, scales: Vec<f32> },
+}
+
+impl ClassStore {
+    /// Quantize an f32 table into the requested representation.
+    pub fn from_matrix(m: &Matrix, kind: QuantizeKind) -> Self {
+        match kind {
+            QuantizeKind::None => ClassStore::F32(m.clone()),
+            QuantizeKind::F16 => {
+                let data =
+                    m.data().iter().map(|&v| f32_to_f16(v)).collect();
+                ClassStore::F16 { cols: m.cols(), data }
+            }
+            QuantizeKind::I8 => {
+                let (rows, cols) = (m.rows(), m.cols());
+                let mut data = vec![0i8; rows * cols];
+                let mut scales = Vec::with_capacity(rows);
+                for r in 0..rows {
+                    let s = quantize_i8_row(
+                        m.row(r),
+                        &mut data[r * cols..(r + 1) * cols],
+                    );
+                    scales.push(s);
+                }
+                ClassStore::I8 { cols, data, scales }
+            }
+        }
+    }
+
+    /// Which representation this store uses.
+    pub fn kind(&self) -> QuantizeKind {
+        match self {
+            ClassStore::F32(_) => QuantizeKind::None,
+            ClassStore::F16 { .. } => QuantizeKind::F16,
+            ClassStore::I8 { .. } => QuantizeKind::I8,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            ClassStore::F32(m) => m.rows(),
+            ClassStore::F16 { cols, data } => data.len() / cols,
+            ClassStore::I8 { scales, .. } => scales.len(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            ClassStore::F32(m) => m.cols(),
+            ClassStore::F16 { cols, .. } => *cols,
+            ClassStore::I8 { cols, .. } => *cols,
+        }
+    }
+
+    /// Append one row, quantizing on ingest.
+    pub fn push_row(&mut self, row: &[f32]) {
+        match self {
+            ClassStore::F32(m) => m.push_row(row),
+            ClassStore::F16 { cols, data } => {
+                assert_eq!(row.len(), *cols, "push_row: width mismatch");
+                data.extend(row.iter().map(|&v| f32_to_f16(v)));
+            }
+            ClassStore::I8 { cols, data, scales } => {
+                assert_eq!(row.len(), *cols, "push_row: width mismatch");
+                let base = data.len();
+                data.resize(base + *cols, 0);
+                let s = quantize_i8_row(row, &mut data[base..]);
+                scales.push(s);
+            }
+        }
+    }
+
+    /// Overwrite row `i`, quantizing on ingest.
+    pub fn set_row(&mut self, i: usize, row: &[f32]) {
+        match self {
+            ClassStore::F32(m) => m.row_mut(i).copy_from_slice(row),
+            ClassStore::F16 { cols, data } => {
+                assert_eq!(row.len(), *cols, "set_row: width mismatch");
+                for (d, &v) in data[i * *cols..(i + 1) * *cols]
+                    .iter_mut()
+                    .zip(row.iter())
+                {
+                    *d = f32_to_f16(v);
+                }
+            }
+            ClassStore::I8 { cols, data, scales } => {
+                assert_eq!(row.len(), *cols, "set_row: width mismatch");
+                scales[i] = quantize_i8_row(
+                    row,
+                    &mut data[i * *cols..(i + 1) * *cols],
+                );
+            }
+        }
+    }
+
+    /// Dequantize row `i` into `out` (f32 passes through untouched).
+    pub fn row_into(&self, i: usize, out: &mut [f32]) {
+        match self {
+            ClassStore::F32(m) => out.copy_from_slice(m.row(i)),
+            ClassStore::F16 { cols, data } => {
+                dequant_f16(&data[i * cols..(i + 1) * cols], out);
+            }
+            ClassStore::I8 { cols, data, scales } => {
+                dequant_i8(
+                    &data[i * cols..(i + 1) * cols],
+                    scales[i],
+                    out,
+                );
+            }
+        }
+    }
+
+    /// Materialize the whole table as f32 (used for gemm inputs and
+    /// forks; for `None` this is a plain copy).
+    pub fn dequantized(&self) -> Matrix {
+        match self {
+            ClassStore::F32(m) => m.clone(),
+            _ => {
+                let (rows, cols) = (self.rows(), self.cols());
+                let mut out = Matrix::zeros(rows, cols);
+                for r in 0..rows {
+                    self.row_into(r, out.row_mut(r));
+                }
+                out
+            }
+        }
+    }
+
+    /// Gather a subset of rows as a dense f32 matrix.
+    pub fn gather_rows(&self, ids: &[u32]) -> Matrix {
+        let cols = self.cols();
+        let mut out = Matrix::zeros(ids.len(), cols);
+        for (r, &id) in ids.iter().enumerate() {
+            self.row_into(id as usize, out.row_mut(r));
+        }
+        out
+    }
+
+    /// Bytes held by the table payload (what `sampler.quantize` is
+    /// buying down).
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            ClassStore::F32(m) => m.data().len() * 4,
+            ClassStore::F16 { data, .. } => data.len() * 2,
+            ClassStore::I8 { data, scales, .. } => {
+                data.len() + scales.len() * 4
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for kind in
+            [QuantizeKind::None, QuantizeKind::F16, QuantizeKind::I8]
+        {
+            assert_eq!(QuantizeKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(QuantizeKind::parse("fp8"), None);
+    }
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-2.0), 0xC000);
+        assert_eq!(f32_to_f16(0.5), 0x3800);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF); // f16::MAX
+        assert_eq!(f32_to_f16(65520.0), 0x7C00); // rounds to +inf
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xFC00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // Smallest subnormal is 2⁻²⁴; half of it ties to even zero.
+        assert_eq!(f32_to_f16(2.0f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16(2.0f32.powi(-25)), 0x0000);
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0x7C00), f32::INFINITY);
+        assert_eq!(f16_to_f32(0xFC00), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f16_round_trip_is_idempotent_and_close() {
+        let mut rng = Rng::seeded(11);
+        for _ in 0..2000 {
+            let v = rng.gaussian_f32();
+            let h = f32_to_f16(v);
+            let back = f16_to_f32(h);
+            // Within half an f16 ulp (~2⁻¹¹ relative for normals).
+            assert!(
+                (back - v).abs() <= v.abs() * 1.0e-3 + 1.0e-7,
+                "{v} -> {back}"
+            );
+            // f16 values round-trip exactly.
+            assert_eq!(f32_to_f16(back), h);
+        }
+    }
+
+    #[test]
+    fn i8_rows_use_full_range_and_handle_zeros() {
+        let row = [0.5f32, -1.0, 0.25, 0.0];
+        let mut q = [0i8; 4];
+        let scale = quantize_i8_row(&row, &mut q);
+        assert_eq!(q[1], -127, "maxabs element must hit the rail");
+        let mut back = [0.0f32; 4];
+        dequant_i8_scalar(&q, scale, &mut back);
+        for (b, v) in back.iter().zip(row.iter()) {
+            assert!((b - v).abs() <= scale * 0.5 + 1e-7);
+        }
+        let zeros = [0.0f32; 4];
+        let mut qz = [0i8; 4];
+        let sz = quantize_i8_row(&zeros, &mut qz);
+        assert_eq!(sz, 1.0);
+        assert_eq!(qz, [0, 0, 0, 0]);
+    }
+
+    fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seeded(seed);
+        let mut m = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            for v in m.row_mut(r) {
+                *v = rng.gaussian_f32();
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn store_round_trips_within_kind_tolerance() {
+        let m = random_matrix(17, 29, 23);
+        for (kind, tol) in [
+            (QuantizeKind::None, 0.0f32),
+            (QuantizeKind::F16, 2.0e-3),
+            (QuantizeKind::I8, 4.0e-2),
+        ] {
+            let store = ClassStore::from_matrix(&m, kind);
+            assert_eq!(store.kind(), kind);
+            assert_eq!(store.rows(), 17);
+            assert_eq!(store.cols(), 29);
+            let back = store.dequantized();
+            for r in 0..17 {
+                let scale = m.row(r).iter().fold(0.0f32, |a, &v| {
+                    a.max(v.abs())
+                });
+                for (got, want) in
+                    back.row(r).iter().zip(m.row(r).iter())
+                {
+                    assert!(
+                        (got - want).abs() <= tol * scale.max(1.0),
+                        "{kind:?} row {r}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn push_and_set_match_from_matrix() {
+        let m = random_matrix(9, 16, 31);
+        for kind in
+            [QuantizeKind::None, QuantizeKind::F16, QuantizeKind::I8]
+        {
+            let whole = ClassStore::from_matrix(&m, kind);
+            let mut grown =
+                ClassStore::from_matrix(&Matrix::zeros(0, 16), kind);
+            for r in 0..9 {
+                grown.push_row(m.row(r));
+            }
+            let mut buf_a = vec![0.0f32; 16];
+            let mut buf_b = vec![0.0f32; 16];
+            for r in 0..9 {
+                whole.row_into(r, &mut buf_a);
+                grown.row_into(r, &mut buf_b);
+                assert_eq!(buf_a, buf_b, "{kind:?} push row {r}");
+            }
+            // Overwriting a row matches quantizing it fresh.
+            grown.set_row(4, m.row(7));
+            whole.row_into(7, &mut buf_a);
+            grown.row_into(4, &mut buf_b);
+            assert_eq!(buf_a, buf_b, "{kind:?} set_row");
+        }
+    }
+
+    #[test]
+    fn simd_dequant_matches_scalar_reference() {
+        // Compare the dispatched row_into against the pure-scalar
+        // converters across awkward lengths; on AVX2 machines this
+        // pins the F16C/cvtepi8 kernels to the scalar bit patterns.
+        let mut rng = Rng::seeded(47);
+        for cols in [1usize, 7, 8, 9, 16, 31, 40] {
+            let mut m = Matrix::zeros(3, cols);
+            for r in 0..3 {
+                for v in m.row_mut(r) {
+                    *v = rng.gaussian_f32();
+                }
+            }
+            for kind in [QuantizeKind::F16, QuantizeKind::I8] {
+                let store = ClassStore::from_matrix(&m, kind);
+                let mut got = vec![0.0f32; cols];
+                let mut want = vec![0.0f32; cols];
+                for r in 0..3 {
+                    store.row_into(r, &mut got);
+                    match &store {
+                        ClassStore::F16 { cols, data } => {
+                            dequant_f16_scalar(
+                                &data[r * cols..(r + 1) * cols],
+                                &mut want,
+                            );
+                        }
+                        ClassStore::I8 { cols, data, scales } => {
+                            dequant_i8_scalar(
+                                &data[r * cols..(r + 1) * cols],
+                                scales[r],
+                                &mut want,
+                            );
+                        }
+                        ClassStore::F32(_) => unreachable!(),
+                    }
+                    for i in 0..cols {
+                        assert_eq!(
+                            got[i].to_bits(),
+                            want[i].to_bits(),
+                            "{kind:?} cols={cols} row {r} elem {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn memory_accounting_tracks_kind() {
+        let m = random_matrix(10, 32, 53);
+        let f32b = ClassStore::from_matrix(&m, QuantizeKind::None)
+            .memory_bytes();
+        let f16b = ClassStore::from_matrix(&m, QuantizeKind::F16)
+            .memory_bytes();
+        let i8b =
+            ClassStore::from_matrix(&m, QuantizeKind::I8).memory_bytes();
+        assert_eq!(f32b, 10 * 32 * 4);
+        assert_eq!(f16b, 10 * 32 * 2);
+        assert_eq!(i8b, 10 * 32 + 10 * 4);
+    }
+
+    #[test]
+    fn gather_rows_dequantizes_selected_ids() {
+        let m = random_matrix(12, 8, 67);
+        let store = ClassStore::from_matrix(&m, QuantizeKind::F16);
+        let picked = store.gather_rows(&[3, 11, 0]);
+        assert_eq!(picked.rows(), 3);
+        let mut want = vec![0.0f32; 8];
+        for (r, &id) in [3u32, 11, 0].iter().enumerate() {
+            store.row_into(id as usize, &mut want);
+            assert_eq!(picked.row(r), &want[..]);
+        }
+    }
+}

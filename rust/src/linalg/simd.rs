@@ -1,0 +1,714 @@
+//! Runtime-dispatched SIMD microkernels for the f32 hot path.
+//!
+//! The toolchain is pinned to stable Rust (no nightly `std::simd`), so
+//! vectorization is explicit `std::arch` intrinsics behind **runtime
+//! feature detection**: one binary carries a scalar path (always
+//! compiled, the correctness reference), an AVX2+FMA path (x86_64), and
+//! a NEON path (aarch64). The tier is detected once per process
+//! ([`tier`], cached in a `OnceLock`) and every public entry point here
+//! dispatches on it, so callers — [`super::dot`], `Matrix::matmul_nt`,
+//! [`super::axpy_rows`], the feature-map gemms — pick up the fast path
+//! without caring which machine they run on.
+//!
+//! Dispatch tiers:
+//!
+//! * **`avx2`** — requires `avx2 && fma && f16c` together (every AVX2
+//!   part since Haswell has all three; one flag also covers the f16
+//!   dequantization kernel in [`super::quant`]). 8-wide `_mm256` dot
+//!   with 4 independent accumulators, and a register-blocked 4×2
+//!   `matmul_nt` microkernel (8 FMA accumulators per tile).
+//! * **`neon`** — aarch64 baseline NEON: 4-wide `vfmaq_f32` dot; the
+//!   gemm reuses the vector dot per output cell.
+//! * **`scalar`** — the portable 4-accumulator loops (what the whole
+//!   crate used before dispatch existed). Also forced by setting the
+//!   env var `RFSM_FORCE_SCALAR` (any value other than empty or `0`),
+//!   which CI uses to exercise both paths on one runner.
+//!
+//! Numerical contract: `dot`/`matmul_nt_into` may differ from the
+//! scalar path in the last ulps (different accumulator shapes ⇒
+//! different rounding order); NaN/inf propagate identically. `axpy` is
+//! **bit-exact** across tiers — it is element-wise with no
+//! reassociation, and the vector paths deliberately use mul+add (not
+//! FMA) to keep per-element rounding identical to scalar.
+
+use std::sync::OnceLock;
+
+/// Which instruction-set tier [`tier`] selected for this process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// Portable fallback (also the `RFSM_FORCE_SCALAR` override).
+    Scalar,
+    /// x86_64 with AVX2 + FMA + F16C (runtime-detected).
+    Avx2,
+    /// aarch64 NEON.
+    Neon,
+}
+
+static TIER: OnceLock<SimdTier> = OnceLock::new();
+
+/// Whether the given `RFSM_FORCE_SCALAR` value requests the scalar
+/// tier. Unset, empty, and `"0"` mean "no"; anything else means "yes".
+fn force_scalar_requested(val: Option<&str>) -> bool {
+    match val {
+        None => false,
+        Some(v) => !v.is_empty() && v != "0",
+    }
+}
+
+fn detect() -> SimdTier {
+    let forced = std::env::var("RFSM_FORCE_SCALAR").ok();
+    if force_scalar_requested(forced.as_deref()) {
+        return SimdTier::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        // All three ship together on every AVX2 core since Haswell;
+        // requiring the trio means one tier flag also covers the F16C
+        // dequantization kernels in `linalg::quant`.
+        if is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+            && is_x86_feature_detected!("f16c")
+        {
+            return SimdTier::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return SimdTier::Neon;
+        }
+    }
+    SimdTier::Scalar
+}
+
+/// The dispatch tier for this process (detected once, then cached).
+#[inline]
+pub fn tier() -> SimdTier {
+    *TIER.get_or_init(detect)
+}
+
+/// The tier as the string the BENCH JSON records (`"simd"` field), so
+/// artifacts from heterogeneous runners stay comparable.
+pub fn tier_name() -> &'static str {
+    match tier() {
+        SimdTier::Scalar => "scalar",
+        SimdTier::Avx2 => "avx2",
+        SimdTier::Neon => "neon",
+    }
+}
+
+/// Dot product, dispatched. Very short vectors skip straight to the
+/// scalar path — below one vector tile the intrinsics only add call
+/// overhead.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    if a.len() < 16 {
+        return scalar::dot(a, b);
+    }
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx2 tier is only ever selected after runtime
+        // detection of avx2+fma on this CPU.
+        SimdTier::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon tier ⇒ runtime-detected NEON support.
+        SimdTier::Neon => unsafe { neon::dot(a, b) },
+        _ => scalar::dot(a, b),
+    }
+}
+
+/// `out[i·b_rows + j] = a_row_i · b_row_j` for row-major `a`
+/// (`a_rows × k`) and `b` (`b_rows × k`) — the `A·Bᵀ` gemm both
+/// operands row-major, dispatched. `out` must hold `a_rows · b_rows`.
+pub fn matmul_nt_into(
+    a: &[f32],
+    a_rows: usize,
+    k: usize,
+    b: &[f32],
+    b_rows: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), a_rows * k, "matmul_nt_into: lhs shape");
+    assert_eq!(b.len(), b_rows * k, "matmul_nt_into: rhs shape");
+    assert_eq!(out.len(), a_rows * b_rows, "matmul_nt_into: out shape");
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 tier ⇒ runtime-detected avx2+fma.
+        SimdTier::Avx2 => unsafe {
+            avx2::matmul_nt_into(a, a_rows, k, b, b_rows, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon tier ⇒ runtime-detected NEON support.
+        SimdTier::Neon => unsafe {
+            neon::matmul_nt_into(a, a_rows, k, b, b_rows, out)
+        },
+        _ => scalar::matmul_nt_into(a, a_rows, k, b, b_rows, out),
+    }
+}
+
+/// `y += alpha · x`, dispatched. Bit-exact across tiers (element-wise
+/// mul+add, no reassociation, no FMA).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    if x.len() < 16 {
+        return scalar::axpy(alpha, x, y);
+    }
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 tier ⇒ runtime-detected avx2+fma.
+        SimdTier::Avx2 => unsafe { avx2::axpy(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon tier ⇒ runtime-detected NEON support.
+        SimdTier::Neon => unsafe { neon::axpy(alpha, x, y) },
+        _ => scalar::axpy(alpha, x, y),
+    }
+}
+
+/// Hint the cache that `data`'s first line is about to be read (L1
+/// temporal prefetch). On x86_64 this is `_mm_prefetch`; elsewhere a
+/// volatile touch of the first element requests the line without
+/// blocking retirement. No-op for empty slices.
+#[inline]
+pub fn prefetch_read(data: &[f32]) {
+    if data.is_empty() {
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: the pointer is derived from a live slice; prefetch has no
+    // memory effects beyond the cache.
+    unsafe {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<_MM_HINT_T0>(data.as_ptr() as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    // SAFETY: reading the first element of a live non-empty slice.
+    unsafe {
+        let _ = std::ptr::read_volatile(data.as_ptr());
+    }
+}
+
+/// The portable reference kernels — always compiled on every arch, so
+/// equivalence tests and the `perf_hotpath` SIMD-vs-scalar A/B cell can
+/// pit them against the dispatched path inside one process.
+pub mod scalar {
+    /// Dot product with 4 accumulators (breaks the fp dependency chain;
+    /// LLVM vectorizes this reasonably even without explicit
+    /// intrinsics).
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+        for i in 0..chunks {
+            let j = i * 4;
+            s0 += a[j] * b[j];
+            s1 += a[j + 1] * b[j + 1];
+            s2 += a[j + 2] * b[j + 2];
+            s3 += a[j + 3] * b[j + 3];
+        }
+        let mut tail = 0.0f32;
+        for j in chunks * 4..n {
+            tail += a[j] * b[j];
+        }
+        (s0 + s1) + (s2 + s3) + tail
+    }
+
+    /// Scalar `A·Bᵀ`: j-blocked so a panel of `b` rows stays
+    /// L2-resident while every `a` row streams past it.
+    pub fn matmul_nt_into(
+        a: &[f32],
+        a_rows: usize,
+        k: usize,
+        b: &[f32],
+        b_rows: usize,
+        out: &mut [f32],
+    ) {
+        const BLOCK: usize = 64;
+        let mut j0 = 0;
+        while j0 < b_rows {
+            let j1 = (j0 + BLOCK).min(b_rows);
+            for i in 0..a_rows {
+                let ar = &a[i * k..(i + 1) * k];
+                let or = &mut out[i * b_rows..(i + 1) * b_rows];
+                for j in j0..j1 {
+                    or[j] = dot(ar, &b[j * k..(j + 1) * k]);
+                }
+            }
+            j0 = j1;
+        }
+    }
+
+    /// `y += alpha · x` (element-wise mul+add — the rounding reference
+    /// the vector tiers reproduce exactly).
+    #[inline]
+    pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        for (yi, xi) in y.iter_mut().zip(x.iter()) {
+            *yi += alpha * xi;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of one 8-lane register.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(_mm256_castps256_ps128(v), hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// 8-wide FMA dot with 4 independent accumulators (32 floats per
+    /// main-loop iteration).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut c0 = _mm256_setzero_ps();
+        let mut c1 = _mm256_setzero_ps();
+        let mut c2 = _mm256_setzero_ps();
+        let mut c3 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            c0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i)),
+                _mm256_loadu_ps(bp.add(i)),
+                c0,
+            );
+            c1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 8)),
+                _mm256_loadu_ps(bp.add(i + 8)),
+                c1,
+            );
+            c2 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 16)),
+                _mm256_loadu_ps(bp.add(i + 16)),
+                c2,
+            );
+            c3 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 24)),
+                _mm256_loadu_ps(bp.add(i + 24)),
+                c3,
+            );
+            i += 32;
+        }
+        while i + 8 <= n {
+            c0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i)),
+                _mm256_loadu_ps(bp.add(i)),
+                c0,
+            );
+            i += 8;
+        }
+        let mut sum = hsum(_mm256_add_ps(
+            _mm256_add_ps(c0, c1),
+            _mm256_add_ps(c2, c3),
+        ));
+        while i < n {
+            sum += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        sum
+    }
+
+    /// One 4×2 register tile: 4 `a` rows against 2 `b` rows, 8 FMA
+    /// accumulators living in registers across the whole `k` sweep (6
+    /// loads feed 8 FMAs per 8-wide step).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn tile_4x2(
+        a: *const f32,
+        k: usize,
+        b0: *const f32,
+        b1: *const f32,
+        out: *mut f32,
+        b_rows: usize,
+    ) {
+        let a0 = a;
+        let a1 = a.add(k);
+        let a2 = a.add(2 * k);
+        let a3 = a.add(3 * k);
+        let mut c00 = _mm256_setzero_ps();
+        let mut c01 = _mm256_setzero_ps();
+        let mut c10 = _mm256_setzero_ps();
+        let mut c11 = _mm256_setzero_ps();
+        let mut c20 = _mm256_setzero_ps();
+        let mut c21 = _mm256_setzero_ps();
+        let mut c30 = _mm256_setzero_ps();
+        let mut c31 = _mm256_setzero_ps();
+        let mut p = 0usize;
+        while p + 8 <= k {
+            let vb0 = _mm256_loadu_ps(b0.add(p));
+            let vb1 = _mm256_loadu_ps(b1.add(p));
+            let va0 = _mm256_loadu_ps(a0.add(p));
+            c00 = _mm256_fmadd_ps(va0, vb0, c00);
+            c01 = _mm256_fmadd_ps(va0, vb1, c01);
+            let va1 = _mm256_loadu_ps(a1.add(p));
+            c10 = _mm256_fmadd_ps(va1, vb0, c10);
+            c11 = _mm256_fmadd_ps(va1, vb1, c11);
+            let va2 = _mm256_loadu_ps(a2.add(p));
+            c20 = _mm256_fmadd_ps(va2, vb0, c20);
+            c21 = _mm256_fmadd_ps(va2, vb1, c21);
+            let va3 = _mm256_loadu_ps(a3.add(p));
+            c30 = _mm256_fmadd_ps(va3, vb0, c30);
+            c31 = _mm256_fmadd_ps(va3, vb1, c31);
+            p += 8;
+        }
+        let mut s00 = hsum(c00);
+        let mut s01 = hsum(c01);
+        let mut s10 = hsum(c10);
+        let mut s11 = hsum(c11);
+        let mut s20 = hsum(c20);
+        let mut s21 = hsum(c21);
+        let mut s30 = hsum(c30);
+        let mut s31 = hsum(c31);
+        while p < k {
+            let y0 = *b0.add(p);
+            let y1 = *b1.add(p);
+            let x0 = *a0.add(p);
+            let x1 = *a1.add(p);
+            let x2 = *a2.add(p);
+            let x3 = *a3.add(p);
+            s00 += x0 * y0;
+            s01 += x0 * y1;
+            s10 += x1 * y0;
+            s11 += x1 * y1;
+            s20 += x2 * y0;
+            s21 += x2 * y1;
+            s30 += x3 * y0;
+            s31 += x3 * y1;
+            p += 1;
+        }
+        *out = s00;
+        *out.add(1) = s01;
+        *out.add(b_rows) = s10;
+        *out.add(b_rows + 1) = s11;
+        *out.add(2 * b_rows) = s20;
+        *out.add(2 * b_rows + 1) = s21;
+        *out.add(3 * b_rows) = s30;
+        *out.add(3 * b_rows + 1) = s31;
+    }
+
+    /// Register-blocked `A·Bᵀ`: 4×2 tiles inside the same 64-row `b`
+    /// panel blocking as the scalar path; row/col remainders fall back
+    /// to the vector dot.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matmul_nt_into(
+        a: &[f32],
+        a_rows: usize,
+        k: usize,
+        b: &[f32],
+        b_rows: usize,
+        out: &mut [f32],
+    ) {
+        const MR: usize = 4;
+        const NR: usize = 2;
+        const BLOCK: usize = 64;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut j0 = 0usize;
+        while j0 < b_rows {
+            let j1 = (j0 + BLOCK).min(b_rows);
+            let mut i = 0usize;
+            while i + MR <= a_rows {
+                let mut j = j0;
+                while j + NR <= j1 {
+                    tile_4x2(
+                        ap.add(i * k),
+                        k,
+                        bp.add(j * k),
+                        bp.add((j + 1) * k),
+                        op.add(i * b_rows + j),
+                        b_rows,
+                    );
+                    j += NR;
+                }
+                while j < j1 {
+                    let br = &b[j * k..(j + 1) * k];
+                    for ii in i..i + MR {
+                        out[ii * b_rows + j] =
+                            dot(&a[ii * k..(ii + 1) * k], br);
+                    }
+                    j += 1;
+                }
+                i += MR;
+            }
+            while i < a_rows {
+                let ar = &a[i * k..(i + 1) * k];
+                for j in j0..j1 {
+                    out[i * b_rows + j] = dot(ar, &b[j * k..(j + 1) * k]);
+                }
+                i += 1;
+            }
+            j0 = j1;
+        }
+    }
+
+    /// Element-wise `y += alpha·x` — mul+add (NOT fmadd), so each lane
+    /// rounds exactly like the scalar reference and the result is
+    /// bit-identical across tiers.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = _mm256_set1_ps(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let prod = _mm256_mul_ps(va, _mm256_loadu_ps(xp.add(i)));
+            let sum = _mm256_add_ps(_mm256_loadu_ps(yp.add(i)), prod);
+            _mm256_storeu_ps(yp.add(i), sum);
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) += alpha * *xp.add(i);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// 4-wide FMA dot with 4 independent accumulators (16 floats per
+    /// main-loop iteration).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut c0 = vdupq_n_f32(0.0);
+        let mut c1 = vdupq_n_f32(0.0);
+        let mut c2 = vdupq_n_f32(0.0);
+        let mut c3 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            c0 = vfmaq_f32(c0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+            c1 = vfmaq_f32(
+                c1,
+                vld1q_f32(ap.add(i + 4)),
+                vld1q_f32(bp.add(i + 4)),
+            );
+            c2 = vfmaq_f32(
+                c2,
+                vld1q_f32(ap.add(i + 8)),
+                vld1q_f32(bp.add(i + 8)),
+            );
+            c3 = vfmaq_f32(
+                c3,
+                vld1q_f32(ap.add(i + 12)),
+                vld1q_f32(bp.add(i + 12)),
+            );
+            i += 16;
+        }
+        while i + 4 <= n {
+            c0 = vfmaq_f32(c0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+            i += 4;
+        }
+        let mut sum =
+            vaddvq_f32(vaddq_f32(vaddq_f32(c0, c1), vaddq_f32(c2, c3)));
+        while i < n {
+            sum += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        sum
+    }
+
+    /// NEON `A·Bᵀ`: the scalar panel blocking with the vector dot per
+    /// output cell (the 128-bit registers don't reward a wider tile the
+    /// way AVX2's do).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn matmul_nt_into(
+        a: &[f32],
+        a_rows: usize,
+        k: usize,
+        b: &[f32],
+        b_rows: usize,
+        out: &mut [f32],
+    ) {
+        const BLOCK: usize = 64;
+        let mut j0 = 0usize;
+        while j0 < b_rows {
+            let j1 = (j0 + BLOCK).min(b_rows);
+            for i in 0..a_rows {
+                let ar = &a[i * k..(i + 1) * k];
+                for j in j0..j1 {
+                    out[i * b_rows + j] = dot(ar, &b[j * k..(j + 1) * k]);
+                }
+            }
+            j0 = j1;
+        }
+    }
+
+    /// Element-wise `y += alpha·x` — vmul+vadd (not vfma) to stay
+    /// bit-identical to the scalar reference.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = vdupq_n_f32(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let prod = vmulq_f32(va, vld1q_f32(xp.add(i)));
+            vst1q_f32(yp.add(i), vaddq_f32(vld1q_f32(yp.add(i)), prod));
+            i += 4;
+        }
+        while i < n {
+            *yp.add(i) += alpha * *xp.add(i);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn pair(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seeded(seed);
+        let a: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn tier_and_name_agree() {
+        let t = tier();
+        let n = tier_name();
+        assert!(matches!(n, "scalar" | "avx2" | "neon"));
+        assert_eq!(t, tier(), "tier must be stable across calls");
+        match t {
+            SimdTier::Scalar => assert_eq!(n, "scalar"),
+            SimdTier::Avx2 => assert_eq!(n, "avx2"),
+            SimdTier::Neon => assert_eq!(n, "neon"),
+        }
+    }
+
+    #[test]
+    fn force_scalar_parsing() {
+        assert!(!force_scalar_requested(None));
+        assert!(!force_scalar_requested(Some("")));
+        assert!(!force_scalar_requested(Some("0")));
+        assert!(force_scalar_requested(Some("1")));
+        assert!(force_scalar_requested(Some("yes")));
+    }
+
+    #[test]
+    fn dot_dispatch_matches_scalar_across_remainder_lengths() {
+        // 0..=2·lanes and beyond: every tail-length class of both the
+        // 32-wide main loop and the 8-wide secondary loop.
+        for n in 0..=67 {
+            let (a, b) = pair(n, 100 + n as u64);
+            let want = scalar::dot(&a, &b);
+            let got = dot(&a, &b);
+            assert!(
+                (got - want).abs() <= 1e-4 + want.abs() * 1e-4,
+                "n={n}: dispatched {got} vs scalar {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_nt_dispatch_matches_scalar_on_awkward_shapes() {
+        // Non-multiples of the 4×2 tile and of the 8-lane width, plus
+        // shapes that straddle the 64-row panel boundary.
+        for &(r, br, k) in &[
+            (1usize, 1usize, 1usize),
+            (2, 3, 4),
+            (4, 2, 8),
+            (5, 9, 13),
+            (7, 70, 13),
+            (8, 8, 32),
+            (13, 66, 40),
+            (3, 128, 9),
+        ] {
+            let mut rng = Rng::seeded(7000 + (r * 31 + br * 7 + k) as u64);
+            let a: Vec<f32> =
+                (0..r * k).map(|_| rng.gaussian_f32()).collect();
+            let b: Vec<f32> =
+                (0..br * k).map(|_| rng.gaussian_f32()).collect();
+            let mut want = vec![0.0f32; r * br];
+            let mut got = vec![0.0f32; r * br];
+            scalar::matmul_nt_into(&a, r, k, &b, br, &mut want);
+            matmul_nt_into(&a, r, k, &b, br, &mut got);
+            for idx in 0..r * br {
+                assert!(
+                    (got[idx] - want[idx]).abs()
+                        <= 1e-4 + want[idx].abs() * 1e-4,
+                    "({r}x{k})·({br}x{k})ᵀ cell {idx}: {} vs {}",
+                    got[idx],
+                    want[idx]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nan_propagates_through_dot_and_matmul() {
+        // A NaN in the vector body and in the scalar tail both poison
+        // the result, on every dispatch tier.
+        for pos in [0usize, 17, 38] {
+            let (mut a, b) = pair(39, 42);
+            a[pos] = f32::NAN;
+            assert!(dot(&a, &b).is_nan(), "NaN at {pos} must propagate");
+            assert!(scalar::dot(&a, &b).is_nan());
+        }
+        let mut a = vec![1.0f32; 2 * 20];
+        let b = vec![1.0f32; 3 * 20];
+        a[20 + 5] = f32::NAN; // poisons row 1 only
+        let mut out = vec![0.0f32; 2 * 3];
+        matmul_nt_into(&a, 2, 20, &b, 3, &mut out);
+        for j in 0..3 {
+            assert!(!out[j].is_nan(), "row 0 must stay clean");
+            assert!(out[3 + j].is_nan(), "row 1 col {j} must be NaN");
+        }
+    }
+
+    #[test]
+    fn inf_propagates_through_dot() {
+        let mut a = vec![1.0f32; 40];
+        let b = vec![2.0f32; 40];
+        a[11] = f32::INFINITY;
+        assert_eq!(dot(&a, &b), f32::INFINITY);
+        a[12] = f32::NEG_INFINITY; // inf + (−inf) ⇒ NaN, like scalar
+        assert!(dot(&a, &b).is_nan());
+    }
+
+    #[test]
+    fn axpy_dispatch_is_bit_exact_vs_scalar() {
+        for n in [0usize, 1, 7, 8, 15, 16, 33, 64, 129] {
+            let (x, y0) = pair(n, 9000 + n as u64);
+            let alpha = 0.37f32;
+            let mut y_scalar = y0.clone();
+            let mut y_simd = y0.clone();
+            scalar::axpy(alpha, &x, &mut y_scalar);
+            axpy(alpha, &x, &mut y_simd);
+            for i in 0..n {
+                assert_eq!(
+                    y_scalar[i].to_bits(),
+                    y_simd[i].to_bits(),
+                    "n={n} elem {i}: axpy must be bit-exact across tiers"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_is_harmless() {
+        prefetch_read(&[]);
+        let v = vec![1.0f32; 64];
+        prefetch_read(&v);
+        prefetch_read(&v[63..]);
+    }
+}

@@ -311,6 +311,7 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
         churn,
         wave,
         listen: cfg.serving.listen.clone(),
+        quantize: cfg.sampler.quantize,
     };
     println!(
         "serve-bench: sampler={} n={n} d={d} m={} transport={} wave={wave} \
@@ -337,7 +338,87 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
 /// prove the batched-wave win: some tcp `wave > 1` record's
 /// `req_headers_per_request` must be ≤ 1/R of a tcp `wave == 1` record's
 /// at the same mix (the ISSUE 5 acceptance gate, checked by machine
-/// rather than by review).
+/// rather than by review). With `--require-simd-speedup R`, some
+/// `simd_matmul_nt` record must show the vectorized microkernel ≥ R×
+/// the scalar reference (the ISSUE 6 gate). With `--baseline FILE`,
+/// every record whose (bench, identity-fields) cell also appears in
+/// FILE must keep its throughput metric within `--max-regression` %
+/// of the baseline value — the cross-run perf ratchet.
+/// Parse one file of `BENCH {json}` (or bare JSON) lines into `out`;
+/// returns how many records the file contributed. Every record must
+/// parse and carry a `bench` tag.
+fn read_bench_records(
+    file: &str,
+    out: &mut Vec<rfsoftmax::json::Json>,
+) -> Result<usize> {
+    let text = std::fs::read_to_string(file)
+        .map_err(|e| anyhow::anyhow!("read {file}: {e}"))?;
+    let mut in_file = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let body = match line.strip_prefix("BENCH ") {
+            Some(b) => b,
+            None if line.trim_start().starts_with('{') => line,
+            None => continue,
+        };
+        let j = rfsoftmax::json::parse(body).map_err(|e| {
+            anyhow::anyhow!("{file}:{}: invalid BENCH JSON: {e}", lineno + 1)
+        })?;
+        anyhow::ensure!(
+            j.get("bench").and_then(|b| b.as_str()).is_some(),
+            "{file}:{}: BENCH record lacks a 'bench' tag",
+            lineno + 1
+        );
+        in_file += 1;
+        out.push(j);
+    }
+    Ok(in_file)
+}
+
+/// Identity fields + higher-is-better throughput metric per bench tag.
+/// Two records agreeing on the tag and every identity field are "the
+/// same cell" across runs; the metric is what `--baseline` ratchets.
+/// Tags not listed here are validated but never baseline-compared.
+fn bench_identity(tag: &str) -> Option<(&'static [&'static str], &'static str)> {
+    match tag {
+        "serving_closed_loop" => Some((
+            &[
+                "sampler", "transport", "mix", "readers", "wave", "churn",
+                "quantize", "simd",
+            ],
+            "qps",
+        )),
+        "batch_vs_scalar_sampling" => {
+            Some((&["n", "batch", "m", "smoke"], "batch_samples_per_sec"))
+        }
+        "simd_matmul_nt" => {
+            Some((&["r", "k", "d", "simd", "smoke"], "simd_per_sec"))
+        }
+        "quantized_sampler" => Some((
+            &["n", "d", "m", "quantize", "simd", "smoke"],
+            "draws_per_sec",
+        )),
+        _ => None,
+    }
+}
+
+/// `(cell key, metric value)` for one BENCH record, when its tag has a
+/// registered identity. Missing identity fields key as `-` so older
+/// baseline records (fewer fields) never alias a different cell.
+fn bench_cell(j: &rfsoftmax::json::Json) -> Option<(String, f64)> {
+    let tag = j.get("bench")?.as_str()?;
+    let (fields, metric) = bench_identity(tag)?;
+    let value = j.get(metric)?.as_f64()?;
+    let mut key = String::from(tag);
+    for f in fields {
+        key.push('|');
+        match j.get(f) {
+            Some(v) => key.push_str(&v.to_string()),
+            None => key.push('-'),
+        }
+    }
+    Some((key, value))
+}
+
 fn cmd_bench_check(raw: &[String]) -> Result<()> {
     let a = Args::parse(raw, &["help"])?;
     if a.has("help") {
@@ -356,6 +437,26 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
                         default: None,
                     },
                     FlagSpec {
+                        name: "require-simd-speedup",
+                        help: "also require a simd_matmul_nt record with \
+                               the vectorized microkernel ≥ this factor \
+                               over the scalar reference",
+                        default: None,
+                    },
+                    FlagSpec {
+                        name: "baseline",
+                        help: "BENCH file from a previous run; matching \
+                               cells must not regress their throughput \
+                               metric by more than --max-regression %",
+                        default: None,
+                    },
+                    FlagSpec {
+                        name: "max-regression",
+                        help: "allowed per-cell throughput drop vs \
+                               --baseline, in percent",
+                        default: Some("50".into()),
+                    },
+                    FlagSpec {
                         name: "<files…>",
                         help: "files of BENCH lines (positional)",
                         default: None,
@@ -365,33 +466,20 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
         );
         return Ok(());
     }
-    a.check_known(&["help", "require-wave-amortization"])?;
+    a.check_known(&[
+        "help",
+        "require-wave-amortization",
+        "require-simd-speedup",
+        "baseline",
+        "max-regression",
+    ])?;
     anyhow::ensure!(
         !a.positional().is_empty(),
         "bench-check: give at least one BENCH file"
     );
     let mut records: Vec<rfsoftmax::json::Json> = Vec::new();
     for file in a.positional() {
-        let text = std::fs::read_to_string(file)
-            .map_err(|e| anyhow::anyhow!("read {file}: {e}"))?;
-        let mut in_file = 0usize;
-        for (lineno, line) in text.lines().enumerate() {
-            let body = match line.strip_prefix("BENCH ") {
-                Some(b) => b,
-                None if line.trim_start().starts_with('{') => line,
-                None => continue,
-            };
-            let j = rfsoftmax::json::parse(body).map_err(|e| {
-                anyhow::anyhow!("{file}:{}: invalid BENCH JSON: {e}", lineno + 1)
-            })?;
-            anyhow::ensure!(
-                j.get("bench").and_then(|b| b.as_str()).is_some(),
-                "{file}:{}: BENCH record lacks a 'bench' tag",
-                lineno + 1
-            );
-            in_file += 1;
-            records.push(j);
-        }
+        let in_file = read_bench_records(file, &mut records)?;
         anyhow::ensure!(in_file > 0, "{file}: no BENCH records found");
         println!("bench-check: {file}: {in_file} records ok");
     }
@@ -451,6 +539,95 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
         println!(
             "bench-check: wave amortization {reduction:.1}× \
              (hdr/req {baseline:.4} → {waved:.4}) ≥ {factor}× ok"
+        );
+    }
+    if let Some(factor) = a.get("require-simd-speedup") {
+        let factor: f64 = factor.parse().map_err(|_| {
+            anyhow::anyhow!("--require-simd-speedup: bad factor '{factor}'")
+        })?;
+        // Best speedup over all simd_matmul_nt cells: the gate proves
+        // the dispatcher beats the scalar reference somewhere, and a
+        // forced-scalar record (speedup ≈ 1) cannot mask a real one.
+        let best = records
+            .iter()
+            .filter(|j| {
+                j.get("bench").and_then(|b| b.as_str())
+                    == Some("simd_matmul_nt")
+            })
+            .filter_map(|j| j.get("speedup").and_then(|s| s.as_f64()))
+            .fold(f64::NEG_INFINITY, f64::max);
+        anyhow::ensure!(
+            best.is_finite(),
+            "bench-check: no simd_matmul_nt record with a 'speedup' field \
+             — cannot prove the SIMD win"
+        );
+        anyhow::ensure!(
+            best >= factor,
+            "bench-check: simd matmul_nt speedup {best:.2}× over scalar, \
+             need ≥ {factor}×"
+        );
+        println!("bench-check: simd speedup {best:.2}× ≥ {factor}× ok");
+    }
+    if let Some(baseline_file) = a.get("baseline") {
+        let max_regression: f64 =
+            a.str_or("max-regression", "50").parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "--max-regression: bad percentage '{}'",
+                    a.str_or("max-regression", "50")
+                )
+            })?;
+        anyhow::ensure!(
+            (0.0..100.0).contains(&max_regression),
+            "--max-regression must be in [0, 100), got {max_regression}"
+        );
+        let mut base_records = Vec::new();
+        read_bench_records(baseline_file, &mut base_records)?;
+        // Duplicate cells (reruns in one file) keep the best value on
+        // both sides: the ratchet compares best-vs-best, not noise.
+        let mut base: std::collections::HashMap<String, f64> =
+            std::collections::HashMap::new();
+        for j in &base_records {
+            if let Some((key, v)) = bench_cell(j) {
+                let e = base.entry(key).or_insert(v);
+                *e = e.max(v);
+            }
+        }
+        let mut current: std::collections::HashMap<String, f64> =
+            std::collections::HashMap::new();
+        for j in &records {
+            if let Some((key, v)) = bench_cell(j) {
+                let e = current.entry(key).or_insert(v);
+                *e = e.max(v);
+            }
+        }
+        let mut compared = 0usize;
+        let mut failures = Vec::new();
+        for (key, now) in &current {
+            let Some(&was) = base.get(key) else { continue };
+            if !(was > 0.0 && now.is_finite()) {
+                continue;
+            }
+            compared += 1;
+            let floor = was * (1.0 - max_regression / 100.0);
+            if *now < floor {
+                failures.push(format!(
+                    "{key}: {now:.0} < {floor:.0} \
+                     (baseline {was:.0}, -{max_regression}% allowed)"
+                ));
+            }
+        }
+        if !failures.is_empty() {
+            failures.sort();
+            bail!(
+                "bench-check: {} cell(s) regressed past --max-regression \
+                 {max_regression}%:\n  {}",
+                failures.len(),
+                failures.join("\n  ")
+            );
+        }
+        println!(
+            "bench-check: {compared} baseline cell(s) within \
+             {max_regression}% of {baseline_file}"
         );
     }
     println!("bench-check: {} records valid", records.len());

@@ -11,7 +11,7 @@ use super::{
 };
 use crate::config::FeatureMapKind;
 use crate::featmap::{FeatureMap, OrfMap, QuadraticMap, RffMap, SorfMap};
-use crate::linalg::Matrix;
+use crate::linalg::{ClassStore, Matrix, QuantizeKind};
 use crate::rng::Rng;
 use std::cell::RefCell;
 
@@ -24,8 +24,13 @@ const TREE_EPS: f64 = 1e-8;
 pub struct KernelSampler<M: FeatureMap> {
     map: M,
     tree: KernelTree,
-    /// Copy of current class embeddings (n × d).
-    classes: Matrix,
+    /// Copy of current class embeddings (n × d), in the configured
+    /// `sampler.quantize` precision. Every φ in the tree is computed
+    /// from the *dequantized* stored row (build, add, update, retire),
+    /// so interior sums are consistently sums of `φ(deq(quant(c)))` —
+    /// quantization perturbs the universe slightly, never the tree's
+    /// internal bookkeeping.
+    classes: ClassStore,
     /// Scratch for φ computations (avoids per-call allocation).
     scratch: RefCell<Scratch>,
     name: &'static str,
@@ -35,40 +40,72 @@ struct Scratch {
     query: Vec<f32>,
     phi_old: Vec<f32>,
     phi_new: Vec<f32>,
+    /// Dequantized embedding-row buffer (input dim d, not feature dim).
+    row: Vec<f32>,
 }
 
 impl<M: FeatureMap> KernelSampler<M> {
     pub fn with_map(classes: &Matrix, map: M, name: &'static str) -> Self {
+        Self::with_map_opts(classes, map, name, 0, QuantizeKind::None)
+    }
+
+    /// Full-option constructor: `capacity` pre-reserves tree padding for
+    /// a planned universe size (`sampler.max_capacity`; 0 = none), and
+    /// `quantize` selects the storage precision of the private class
+    /// copy (`sampler.quantize`).
+    pub fn with_map_opts(
+        classes: &Matrix,
+        map: M,
+        name: &'static str,
+        capacity: usize,
+        quantize: QuantizeKind,
+    ) -> Self {
         let n = classes.rows();
+        let d = classes.cols();
         let dim = map.output_dim();
         assert_eq!(
-            classes.cols(),
+            d,
             map.input_dim(),
             "class embedding dim must match feature-map input dim"
         );
-        let mut tree = KernelTree::new(n, dim, TREE_EPS);
+        let store = ClassStore::from_matrix(classes, quantize);
+        let mut tree = KernelTree::with_capacity(n, dim, TREE_EPS, capacity);
+        let mut row = vec![0.0f32; d];
         let mut phi = vec![0.0f32; dim];
         for i in 0..n {
-            map.map_into(classes.row(i), &mut phi);
+            store.row_into(i, &mut row);
+            map.map_into(&row, &mut phi);
             tree.add_leaf(i, &phi);
         }
         Self {
             map,
             tree,
-            classes: classes.clone(),
+            classes: store,
             scratch: RefCell::new(Scratch {
                 query: vec![0.0; dim],
                 phi_old: vec![0.0; dim],
                 phi_new: vec![0.0; dim],
+                row: vec![0.0; d],
             }),
             name,
         }
     }
 
     /// The tree's memory footprint (for the Table-2 harness notes).
+    /// The class-copy term shrinks 2×/4× under f16/i8 quantization.
     pub fn memory_bytes(&self) -> usize {
-        self.tree.memory_bytes()
-            + self.classes.data().len() * std::mem::size_of::<f32>()
+        self.tree.memory_bytes() + self.classes.memory_bytes()
+    }
+
+    /// Storage precision of the private class copy.
+    pub fn quantize(&self) -> QuantizeKind {
+        self.classes.kind()
+    }
+
+    /// Capacity-doubling copies the tree has paid (0 when `capacity`
+    /// pre-reservation covered the growth schedule).
+    pub fn growths(&self) -> usize {
+        self.tree.growths()
     }
 
     pub fn feature_map(&self) -> &M {
@@ -81,12 +118,14 @@ impl<M: FeatureMap> KernelSampler<M> {
         let n = self.classes.rows();
         let dim = self.map.output_dim();
         let mut tree = KernelTree::new(n, dim, TREE_EPS);
+        let mut row = vec![0.0f32; self.classes.cols()];
         let mut phi = vec![0.0f32; dim];
         for i in 0..n {
             if self.tree.is_retired(i) {
                 continue; // leave the hole's leaf at exactly zero
             }
-            self.map.map_into(self.classes.row(i), &mut phi);
+            self.classes.row_into(i, &mut row);
+            self.map.map_into(&row, &mut phi);
             tree.add_leaf(i, &phi);
         }
         let zeros = vec![0.0f32; dim];
@@ -124,12 +163,21 @@ impl<M: FeatureMap + Clone + 'static> Sampler for KernelSampler<M> {
             return Ok(Vec::new());
         }
         super::validate_add_dim(embeddings.cols(), self.classes.cols())?;
-        let phis = self.map.map_batch(embeddings);
-        let mut ids = Vec::with_capacity(embeddings.rows());
-        for r in 0..embeddings.rows() {
-            let g = self.tree.insert_class(phis.row(r));
+        // Ingest first, then φ from the *dequantized* stored rows, so the
+        // tree's leaf mass matches what updates/retires will later
+        // recompute from the store.
+        let base = self.classes.rows();
+        let k = embeddings.rows();
+        for r in 0..k {
             self.classes.push_row(embeddings.row(r));
-            debug_assert_eq!(g + 1, self.classes.rows());
+        }
+        let new_ids: Vec<u32> = (base..base + k).map(|i| i as u32).collect();
+        let deq = self.classes.gather_rows(&new_ids);
+        let phis = self.map.map_batch(&deq);
+        let mut ids = Vec::with_capacity(k);
+        for r in 0..k {
+            let g = self.tree.insert_class(phis.row(r));
+            debug_assert_eq!(g, base + r);
             ids.push(g as u32);
         }
         Ok(ids)
@@ -268,11 +316,19 @@ impl<M: FeatureMap + Clone + 'static> Sampler for KernelSampler<M> {
     /// the distribution is identical. `O(n · cost(φ))`, paid once at
     /// server construction.
     fn fork(&self) -> Option<Box<dyn ServeSampler>> {
-        let mut fork = super::ShardedKernelSampler::with_map(
-            &self.classes,
+        // Seed the fork from the dequantized store and re-apply the same
+        // quantize kind: for f16 re-quantization is exactly idempotent
+        // (dequant maps every code to a value that rounds back to itself)
+        // so the fork's distribution is bit-faithful; i8 re-derives
+        // per-row scales, which existing fork tests only exercise under
+        // `QuantizeKind::None`.
+        let mut fork = super::ShardedKernelSampler::with_map_opts(
+            &self.classes.dequantized(),
             self.map.clone(),
             1,
             self.name,
+            0,
+            self.classes.kind(),
         );
         let retired = self.retired_ids();
         if !retired.is_empty() {
@@ -283,14 +339,19 @@ impl<M: FeatureMap + Clone + 'static> Sampler for KernelSampler<M> {
     }
 
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
+        // Both φ_old and φ_new come from dequantized *stored* rows (the
+        // old row before `set_row`, the re-read row after), so the leaf
+        // delta is consistent with how the leaf mass was first added.
         let sc = self.scratch.get_mut();
-        self.map.map_into(self.classes.row(class), &mut sc.phi_old);
-        self.map.map_into(embedding, &mut sc.phi_new);
+        self.classes.row_into(class, &mut sc.row);
+        self.map.map_into(&sc.row, &mut sc.phi_old);
+        self.classes.set_row(class, embedding);
+        self.classes.row_into(class, &mut sc.row);
+        self.map.map_into(&sc.row, &mut sc.phi_new);
         for (new, old) in sc.phi_new.iter_mut().zip(sc.phi_old.iter()) {
             *new -= old; // phi_new now holds the delta
         }
         self.tree.update_leaf(class, &sc.phi_new);
-        self.classes.row_mut(class).copy_from_slice(embedding);
     }
 
     /// Batched propagation: φ_old / φ_new for all touched classes come
@@ -304,13 +365,13 @@ impl<M: FeatureMap + Clone + 'static> Sampler for KernelSampler<M> {
         if k == 0 {
             return;
         }
-        let d = self.classes.cols();
-        let mut old = Matrix::zeros(k, d);
+        let phi_old = self.map.map_batch(&self.classes.gather_rows(classes));
         for (r, &c) in classes.iter().enumerate() {
-            old.row_mut(r).copy_from_slice(self.classes.row(c as usize));
+            self.classes.set_row(c as usize, embeddings.row(r));
         }
-        let phi_old = self.map.map_batch(&old);
-        let phi_new = self.map.map_batch(embeddings);
+        // Re-read the freshly-stored rows so φ_new reflects the
+        // quantized values that future updates will see as "old".
+        let phi_new = self.map.map_batch(&self.classes.gather_rows(classes));
         let mut delta = vec![0.0f32; self.tree.dim()];
         for r in 0..k {
             for ((dst, &a), &b) in delta
@@ -321,9 +382,6 @@ impl<M: FeatureMap + Clone + 'static> Sampler for KernelSampler<M> {
                 *dst = a - b;
             }
             self.tree.update_leaf(classes[r] as usize, &delta);
-            self.classes
-                .row_mut(classes[r] as usize)
-                .copy_from_slice(embeddings.row(r));
         }
     }
 
@@ -366,23 +424,57 @@ impl RffSampler {
         kind: FeatureMapKind,
         rng: &mut Rng,
     ) -> Self {
+        Self::with_kind_opts(
+            classes,
+            num_freqs,
+            nu,
+            kind,
+            rng,
+            0,
+            QuantizeKind::None,
+        )
+    }
+
+    /// [`RffSampler::with_kind`] plus the `sampler.max_capacity` tree
+    /// pre-reservation and `sampler.quantize` storage precision.
+    pub fn with_kind_opts(
+        classes: &Matrix,
+        num_freqs: usize,
+        nu: f32,
+        kind: FeatureMapKind,
+        rng: &mut Rng,
+        capacity: usize,
+        quantize: QuantizeKind,
+    ) -> Self {
         let d = classes.cols();
         match kind {
-            FeatureMapKind::Rff => RffSampler::Classic(KernelSampler::with_map(
-                classes,
-                RffMap::new(d, num_freqs, nu, rng),
-                "rff",
-            )),
-            FeatureMapKind::Orf => RffSampler::Orf(KernelSampler::with_map(
-                classes,
-                OrfMap::new(d, num_freqs, nu, rng),
-                "rff-orf",
-            )),
-            FeatureMapKind::Sorf => RffSampler::Sorf(KernelSampler::with_map(
-                classes,
-                SorfMap::new(d, num_freqs, nu, rng),
-                "rff-sorf",
-            )),
+            FeatureMapKind::Rff => {
+                RffSampler::Classic(KernelSampler::with_map_opts(
+                    classes,
+                    RffMap::new(d, num_freqs, nu, rng),
+                    "rff",
+                    capacity,
+                    quantize,
+                ))
+            }
+            FeatureMapKind::Orf => {
+                RffSampler::Orf(KernelSampler::with_map_opts(
+                    classes,
+                    OrfMap::new(d, num_freqs, nu, rng),
+                    "rff-orf",
+                    capacity,
+                    quantize,
+                ))
+            }
+            FeatureMapKind::Sorf => {
+                RffSampler::Sorf(KernelSampler::with_map_opts(
+                    classes,
+                    SorfMap::new(d, num_freqs, nu, rng),
+                    "rff-sorf",
+                    capacity,
+                    quantize,
+                ))
+            }
         }
     }
 
@@ -407,6 +499,24 @@ impl RffSampler {
             RffSampler::Classic(s) => s.memory_bytes(),
             RffSampler::Orf(s) => s.memory_bytes(),
             RffSampler::Sorf(s) => s.memory_bytes(),
+        }
+    }
+
+    /// Capacity-doubling copies the underlying tree has paid.
+    pub fn growths(&self) -> usize {
+        match self {
+            RffSampler::Classic(s) => s.growths(),
+            RffSampler::Orf(s) => s.growths(),
+            RffSampler::Sorf(s) => s.growths(),
+        }
+    }
+
+    /// Storage precision of the private class copy.
+    pub fn quantize(&self) -> QuantizeKind {
+        match self {
+            RffSampler::Classic(s) => s.quantize(),
+            RffSampler::Orf(s) => s.quantize(),
+            RffSampler::Sorf(s) => s.quantize(),
         }
     }
 
@@ -511,12 +621,42 @@ pub struct QuadraticSampler {
 impl QuadraticSampler {
     /// The paper's baseline setting is α = 100, β = 1.
     pub fn new(classes: &Matrix, alpha: f32, beta: f32) -> Self {
+        Self::new_opts(classes, alpha, beta, 0, QuantizeKind::None)
+    }
+
+    /// [`QuadraticSampler::new`] plus tree pre-reservation and storage
+    /// precision (`sampler.max_capacity` / `sampler.quantize`).
+    pub fn new_opts(
+        classes: &Matrix,
+        alpha: f32,
+        beta: f32,
+        capacity: usize,
+        quantize: QuantizeKind,
+    ) -> Self {
         let map = QuadraticMap::new(classes.cols(), alpha, beta);
-        Self { inner: KernelSampler::with_map(classes, map, "quadratic") }
+        Self {
+            inner: KernelSampler::with_map_opts(
+                classes,
+                map,
+                "quadratic",
+                capacity,
+                quantize,
+            ),
+        }
     }
 
     pub fn memory_bytes(&self) -> usize {
         self.inner.memory_bytes()
+    }
+
+    /// Capacity-doubling copies the underlying tree has paid.
+    pub fn growths(&self) -> usize {
+        self.inner.growths()
+    }
+
+    /// Storage precision of the private class copy.
+    pub fn quantize(&self) -> QuantizeKind {
+        self.inner.quantize()
     }
 }
 
@@ -910,6 +1050,57 @@ mod tests {
                 (a - b).abs() < 1e-6 * a.max(b).max(1e-9),
                 "fork class {i}: {a} vs {b}"
             );
+        }
+    }
+
+    #[test]
+    fn quantized_store_tracks_f32_and_survives_updates() {
+        let mut rng = Rng::seeded(120);
+        let n = 32;
+        let d = 8;
+        let classes = normalized_classes(&mut rng, n, d);
+        let exact = QuadraticSampler::new(&classes, 100.0, 1.0);
+        let h = unit_vector(&mut rng, d);
+        for (kind, tol) in
+            [(QuantizeKind::F16, 2e-3), (QuantizeKind::I8, 5e-2)]
+        {
+            let mut q =
+                QuadraticSampler::new_opts(&classes, 100.0, 1.0, 0, kind);
+            assert_eq!(q.quantize(), kind);
+            assert!(
+                q.memory_bytes() < exact.memory_bytes(),
+                "{kind:?} must shrink the class copy"
+            );
+            let mut total = 0.0;
+            for i in 0..n {
+                let a = exact.probability(&h, i);
+                let b = q.probability(&h, i);
+                assert!(
+                    (a - b).abs() < tol * a.max(1e-6),
+                    "{kind:?} class {i}: {a} vs {b}"
+                );
+                total += b;
+            }
+            assert!((total - 1.0).abs() < 1e-6, "{kind:?}: Σq = {total}");
+            // Incremental updates must keep the tree in sync with the
+            // quantized store: after rewriting every row, the churned
+            // sampler matches one built fresh from the final embeddings.
+            let mut finals = classes.clone();
+            for i in 0..n {
+                let e = unit_vector(&mut rng, d);
+                q.update_class(i, &e);
+                finals.row_mut(i).copy_from_slice(&e);
+            }
+            let fresh =
+                QuadraticSampler::new_opts(&finals, 100.0, 1.0, 0, kind);
+            for i in 0..n {
+                let a = q.probability(&h, i);
+                let b = fresh.probability(&h, i);
+                assert!(
+                    (a - b).abs() < 1e-4 * a.max(b).max(1e-9),
+                    "{kind:?} post-update class {i}: {a} vs {b}"
+                );
+            }
         }
     }
 

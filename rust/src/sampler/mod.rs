@@ -191,20 +191,18 @@ pub(crate) fn validate_retire(
 }
 
 /// Batched φ recomputation for the kernel samplers' retire paths:
-/// gather the victims' embedding rows, ONE `map_batch` gemm, then apply
-/// `retire(class, φ)` per victim — the batch-first sibling of the add
-/// path, shared so the gather/map/apply sequence exists once.
+/// gather the victims' (dequantized) embedding rows, ONE `map_batch`
+/// gemm, then apply `retire(class, φ)` per victim — the batch-first
+/// sibling of the add path, shared so the gather/map/apply sequence
+/// exists once. Reading through [`crate::linalg::ClassStore`] keeps the
+/// subtracted φ identical to what the quantized ingest originally added.
 pub(crate) fn retire_phi_batch<M: crate::featmap::FeatureMap>(
     map: &M,
-    classes: &Matrix,
+    classes: &crate::linalg::ClassStore,
     ids: &[u32],
     mut retire: impl FnMut(usize, &[f32]),
 ) {
-    let d = classes.cols();
-    let mut victims = Matrix::zeros(ids.len(), d);
-    for (r, &c) in ids.iter().enumerate() {
-        victims.row_mut(r).copy_from_slice(classes.row(c as usize));
-    }
+    let victims = classes.gather_rows(ids);
     let phis = map.map_batch(&victims);
     for (r, &c) in ids.iter().enumerate() {
         retire(c as usize, phis.row(r));

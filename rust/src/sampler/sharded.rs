@@ -36,7 +36,7 @@
 
 use super::{KernelTree, NegativeDraw, Sampler, VocabError};
 use crate::featmap::FeatureMap;
-use crate::linalg::Matrix;
+use crate::linalg::{ClassStore, Matrix, QuantizeKind};
 use crate::rng::{AliasTable, Rng};
 
 /// Where one global class id lives.
@@ -63,6 +63,12 @@ pub struct ShardedKernelTree {
     live: usize,
     dim: usize,
     eps: f64,
+    /// Total class capacity to pre-reserve (`sampler.max_capacity`;
+    /// 0 = none). Spread across shards so runtime inserts up to this
+    /// many classes never pay a per-shard capacity-doubling copy — also
+    /// re-applied by [`ShardedKernelTree::redistribute`] so a rebalance
+    /// does not forfeit the reservation.
+    reserve: usize,
 }
 
 impl ShardedKernelTree {
@@ -71,6 +77,20 @@ impl ShardedKernelTree {
     /// Initial assignment is contiguous blocks (the classic layout);
     /// runtime inserts then go wherever is lightest.
     pub fn new(n: usize, dim: usize, num_shards: usize, eps: f64) -> Self {
+        Self::with_capacity(n, dim, num_shards, eps, 0)
+    }
+
+    /// [`ShardedKernelTree::new`] plus a total-class `capacity`
+    /// pre-reservation (0 = none): each shard's tree pads for its share
+    /// of `capacity` up front, so growth to that many classes performs
+    /// zero doubling copies (see [`ShardedKernelTree::growths`]).
+    pub fn with_capacity(
+        n: usize,
+        dim: usize,
+        num_shards: usize,
+        eps: f64,
+        capacity: usize,
+    ) -> Self {
         assert!(n >= 1, "ShardedKernelTree: need at least one class");
         assert!(dim >= 1);
         assert!(eps > 0.0, "ShardedKernelTree: eps must be > 0");
@@ -78,11 +98,12 @@ impl ShardedKernelTree {
         let s = num_shards.next_power_of_two().min(n.next_power_of_two());
         let shard_size = n.div_ceil(s).max(1);
         let count = n.div_ceil(shard_size);
+        let per_shard = capacity.div_ceil(count);
         let shards: Vec<KernelTree> = (0..count)
             .map(|i| {
                 let lo = i * shard_size;
                 let hi = ((i + 1) * shard_size).min(n);
-                KernelTree::new(hi - lo, dim, eps)
+                KernelTree::with_capacity(hi - lo, dim, eps, per_shard)
             })
             .collect();
         let assign = (0..n)
@@ -98,7 +119,13 @@ impl ShardedKernelTree {
                 (lo as u32..hi as u32).collect()
             })
             .collect();
-        Self { shards, assign, globals, n, live: n, dim, eps }
+        Self { shards, assign, globals, n, live: n, dim, eps, reserve: capacity }
+    }
+
+    /// Total capacity-doubling copies paid across all shard trees
+    /// (0 when `with_capacity` pre-reservation covered every insert).
+    pub fn growths(&self) -> usize {
+        self.shards.iter().map(KernelTree::growths).sum()
     }
 
     pub fn num_classes(&self) -> usize {
@@ -247,9 +274,15 @@ impl ShardedKernelTree {
         let mut globals: Vec<Vec<u32>> = Vec::with_capacity(count);
         let mut assign = vec![Slot::Retired; self.n];
         let mut phi = vec![0.0f32; self.dim];
+        let per_shard = self.reserve.div_ceil(count);
         for sh in 0..count {
             let ids = &live_ids[sh * chunk..((sh + 1) * chunk).min(l)];
-            let mut tree = KernelTree::new(ids.len(), self.dim, self.eps);
+            let mut tree = KernelTree::with_capacity(
+                ids.len(),
+                self.dim,
+                self.eps,
+                per_shard,
+            );
             let mut inv = Vec::with_capacity(ids.len());
             for (local, &g) in ids.iter().enumerate() {
                 phi_of(g, &mut phi);
@@ -503,8 +536,11 @@ pub struct ShardedKernelSampler<M: FeatureMap> {
     tree: ShardedKernelTree,
     /// Copy of current class embeddings (n × d, one row per slot — rows
     /// of retired slots go stale and are never read), for recomputing
-    /// φ_old and for rebalance rebuilds.
-    classes: Matrix,
+    /// φ_old and for rebalance rebuilds. Stored at the configured
+    /// `sampler.quantize` precision; every φ fed to the tree comes from
+    /// the *dequantized* stored row so leaf masses stay consistent with
+    /// what later updates/retires recompute.
+    classes: ClassStore,
     /// Shard count to rebuild toward when rebalancing.
     target_shards: usize,
     /// Live-count imbalance ratio (heaviest / lightest shard) above
@@ -526,23 +562,50 @@ impl<M: FeatureMap> ShardedKernelSampler<M> {
         num_shards: usize,
         name: &'static str,
     ) -> Self {
+        Self::with_map_opts(
+            classes,
+            map,
+            num_shards,
+            name,
+            0,
+            QuantizeKind::None,
+        )
+    }
+
+    /// [`ShardedKernelSampler::with_map`] plus the tree capacity
+    /// pre-reservation (`sampler.max_capacity`; 0 = none) and class-copy
+    /// storage precision (`sampler.quantize`).
+    pub fn with_map_opts(
+        classes: &Matrix,
+        map: M,
+        num_shards: usize,
+        name: &'static str,
+        capacity: usize,
+        quantize: QuantizeKind,
+    ) -> Self {
         let n = classes.rows();
+        let d = classes.cols();
         let dim = map.output_dim();
         assert_eq!(
-            classes.cols(),
+            d,
             map.input_dim(),
             "class embedding dim must match feature-map input dim"
         );
-        let mut tree = ShardedKernelTree::new(n, dim, num_shards, TREE_EPS);
+        let store = ClassStore::from_matrix(classes, quantize);
+        let mut tree = ShardedKernelTree::with_capacity(
+            n, dim, num_shards, TREE_EPS, capacity,
+        );
+        let mut row = vec![0.0f32; d];
         let mut phi = vec![0.0f32; dim];
         for i in 0..n {
-            map.map_into(classes.row(i), &mut phi);
+            store.row_into(i, &mut row);
+            map.map_into(&row, &mut phi);
             tree.add_leaf(i, &phi);
         }
         Self {
             map,
             tree,
-            classes: classes.clone(),
+            classes: store,
             target_shards: num_shards.max(1),
             rebalance_threshold: 0.0,
             name,
@@ -598,15 +661,26 @@ impl<M: FeatureMap> ShardedKernelSampler<M> {
         let count_off = want >= cur * 2 || cur >= want * 2;
         if skewed || count_off {
             let (map, classes) = (&self.map, &self.classes);
+            let mut row = vec![0.0f32; classes.cols()];
             self.tree.redistribute(self.target_shards, |g, buf| {
-                map.map_into(classes.row(g), buf)
+                classes.row_into(g, &mut row);
+                map.map_into(&row, buf)
             });
         }
     }
 
     pub fn memory_bytes(&self) -> usize {
-        self.tree.memory_bytes()
-            + self.classes.data().len() * std::mem::size_of::<f32>()
+        self.tree.memory_bytes() + self.classes.memory_bytes()
+    }
+
+    /// Storage precision of the private class copy.
+    pub fn quantize(&self) -> QuantizeKind {
+        self.classes.kind()
+    }
+
+    /// Capacity-doubling copies paid across all shard trees.
+    pub fn growths(&self) -> usize {
+        self.tree.growths()
     }
 
     pub fn feature_map(&self) -> &M {
@@ -631,12 +705,20 @@ impl<M: FeatureMap + Clone + 'static> Sampler for ShardedKernelSampler<M> {
             return Ok(Vec::new());
         }
         super::validate_add_dim(embeddings.cols(), self.classes.cols())?;
-        let phis = self.map.map_batch(embeddings);
-        let mut ids = Vec::with_capacity(embeddings.rows());
-        for r in 0..embeddings.rows() {
-            let g = self.tree.insert_class(phis.row(r));
+        // Ingest first, then φ from the *dequantized* stored rows (one
+        // gemm), so leaf masses match later recomputations from the store.
+        let base = self.classes.rows();
+        let k = embeddings.rows();
+        for r in 0..k {
             self.classes.push_row(embeddings.row(r));
-            debug_assert_eq!(g + 1, self.classes.rows());
+        }
+        let new_ids: Vec<u32> = (base..base + k).map(|i| i as u32).collect();
+        let deq = self.classes.gather_rows(&new_ids);
+        let phis = self.map.map_batch(&deq);
+        let mut ids = Vec::with_capacity(k);
+        for r in 0..k {
+            let g = self.tree.insert_class(phis.row(r));
+            debug_assert_eq!(g, base + r);
             ids.push(g as u32);
         }
         self.maybe_rebalance();
@@ -768,13 +850,19 @@ impl<M: FeatureMap + Clone + 'static> Sampler for ShardedKernelSampler<M> {
     }
 
     fn update_class(&mut self, class: usize, embedding: &[f32]) {
-        let phi_old = self.map.map(self.classes.row(class));
-        let mut delta = self.map.map(embedding);
+        // φ_old from the stored (dequantized) row, φ_new from the row as
+        // re-read after `set_row` — the leaf delta is then exactly what
+        // a later retire of this class will subtract.
+        let mut row = vec![0.0f32; self.classes.cols()];
+        self.classes.row_into(class, &mut row);
+        let phi_old = self.map.map(&row);
+        self.classes.set_row(class, embedding);
+        self.classes.row_into(class, &mut row);
+        let mut delta = self.map.map(&row);
         for (new, old) in delta.iter_mut().zip(phi_old.iter()) {
             *new -= old;
         }
         self.tree.update_leaf(class, &delta);
-        self.classes.row_mut(class).copy_from_slice(embedding);
     }
 
     /// Batched propagation: φ_old and φ_new for every touched class come
@@ -786,13 +874,13 @@ impl<M: FeatureMap + Clone + 'static> Sampler for ShardedKernelSampler<M> {
         if k == 0 {
             return;
         }
-        let d = self.classes.cols();
-        let mut old = Matrix::zeros(k, d);
+        let phi_old = self.map.map_batch(&self.classes.gather_rows(classes));
         for (r, &c) in classes.iter().enumerate() {
-            old.row_mut(r).copy_from_slice(self.classes.row(c as usize));
+            self.classes.set_row(c as usize, embeddings.row(r));
         }
-        let phi_old = self.map.map_batch(&old);
-        let phi_new = self.map.map_batch(embeddings);
+        // Re-read the freshly-stored rows so φ_new reflects the
+        // quantized values future mutations will see as "old".
+        let phi_new = self.map.map_batch(&self.classes.gather_rows(classes));
         let updates: Vec<(usize, Vec<f32>)> = (0..k)
             .map(|r| {
                 let delta: Vec<f32> = phi_new
@@ -805,11 +893,6 @@ impl<M: FeatureMap + Clone + 'static> Sampler for ShardedKernelSampler<M> {
             })
             .collect();
         self.tree.update_leaves_batch(&updates);
-        for (r, &c) in classes.iter().enumerate() {
-            self.classes
-                .row_mut(c as usize)
-                .copy_from_slice(embeddings.row(r));
-        }
     }
 
     fn name(&self) -> &'static str {
@@ -1258,5 +1341,88 @@ mod tests {
         let (_, coarse) = sharded_rff(256, 8, 1, 260);
         let (_, fine) = sharded_rff(256, 8, 16, 260);
         assert!(fine.memory_bytes() <= coarse.memory_bytes());
+    }
+
+    #[test]
+    fn pre_reserved_capacity_absorbs_inserts_without_growth() {
+        let mut rng = Rng::seeded(340);
+        let d = 6;
+        let classes = Matrix::randn(&mut rng, 8, d).l2_normalized_rows();
+        let map = crate::featmap::QuadraticMap::new(d, 100.0, 1.0);
+        let mut reserved = ShardedKernelSampler::with_map_opts(
+            &classes,
+            map.clone(),
+            4,
+            "quadratic-sharded",
+            64,
+            QuantizeKind::None,
+        );
+        let mut plain = ShardedKernelSampler::with_map(
+            &classes,
+            map,
+            4,
+            "quadratic-sharded",
+        );
+        // Grow 8 → 64 live classes; the reserved sampler must never pay
+        // a shard-tree doubling copy, the plain one must pay several.
+        for _ in 0..56 {
+            let mut add = Matrix::zeros(1, d);
+            let v = unit_vector(&mut rng, d);
+            add.row_mut(0).copy_from_slice(&v);
+            reserved.add_classes(&add).unwrap();
+            plain.add_classes(&add).unwrap();
+        }
+        assert_eq!(reserved.growths(), 0, "pre-reservation must hold");
+        assert!(plain.growths() > 0, "unreserved tree should have doubled");
+        // Same distribution either way.
+        let h = unit_vector(&mut rng, d);
+        for i in 0..64 {
+            let a = reserved.probability(&h, i);
+            let b = plain.probability(&h, i);
+            assert!(
+                (a - b).abs() < 1e-9 * a.max(b).max(1e-12),
+                "class {i}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_sharded_sampler_stays_normalized_and_close() {
+        let mut rng = Rng::seeded(350);
+        let d = 8;
+        let classes = Matrix::randn(&mut rng, 40, d).l2_normalized_rows();
+        let map = RffMap::new(d, 64, 2.0, &mut Rng::seeded(351));
+        let exact = ShardedKernelSampler::with_map(
+            &classes,
+            map.clone(),
+            4,
+            "rff-sharded",
+        );
+        let h = unit_vector(&mut rng, d);
+        for (kind, tol) in
+            [(QuantizeKind::F16, 2e-3), (QuantizeKind::I8, 5e-2)]
+        {
+            let q = ShardedKernelSampler::with_map_opts(
+                &classes,
+                map.clone(),
+                4,
+                "rff-sharded",
+                0,
+                kind,
+            );
+            assert_eq!(q.quantize(), kind);
+            assert!(q.memory_bytes() < exact.memory_bytes());
+            let mut total = 0.0;
+            for i in 0..40 {
+                let a = exact.probability(&h, i);
+                let b = q.probability(&h, i);
+                assert!(
+                    (a - b).abs() < tol * a.max(1e-6),
+                    "{kind:?} class {i}: {a} vs {b}"
+                );
+                total += b;
+            }
+            assert!((total - 1.0).abs() < 1e-6, "{kind:?}: Σq = {total}");
+        }
     }
 }

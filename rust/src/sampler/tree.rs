@@ -36,8 +36,18 @@
 //! retired slot carries exactly zero effective mass — the walk can never
 //! end there, its ε floor vanishes, and `probability` returns an exact 0.
 //! Retired slots are holes: ids stay stable and are never reused.
+//! [`KernelTree::with_capacity`] pre-pads to a planned capacity so a
+//! known growth schedule never pays the doubling copies.
+//!
+//! **Cache behavior**: the interior sums live in heap order, which puts
+//! the top levels in one compact block at the front of `left_sums` —
+//! they stay cache-resident across consecutive draws (the batched walks
+//! in `sample_many`/`serve_queries` lean on exactly this, plus an eager
+//! sequential sweep of the memo cache's top block). Deeper levels are
+//! sparse and DRAM-bound; the walk software-prefetches both children
+//! one level ahead so the line fetch overlaps the current node's dot.
 
-use crate::linalg::dot;
+use crate::linalg::{dot, simd};
 use crate::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -64,23 +74,37 @@ pub struct KernelTree {
     retired: Vec<bool>,
     /// Per-leaf probability floor (pseudo-mass added to every live leaf).
     eps: f64,
+    /// Capacity-doubling copies performed since construction (telemetry
+    /// for the pre-reservation path: stays 0 when `with_capacity`
+    /// covered the whole growth schedule).
+    growths: usize,
 }
 
 impl KernelTree {
     /// Empty tree for `n` classes with feature dim `dim`.
     pub fn new(n: usize, dim: usize, eps: f64) -> Self {
+        Self::with_capacity(n, dim, eps, 0)
+    }
+
+    /// Empty tree for `n` classes whose padding is pre-reserved for
+    /// `capacity` total slots (`sampler.max_capacity`): a known growth
+    /// schedule then never pays a capacity-doubling copy —
+    /// [`KernelTree::growths`] stays 0. `capacity ≤ n` (including 0)
+    /// reserves nothing and is identical to [`KernelTree::new`].
+    pub fn with_capacity(n: usize, dim: usize, eps: f64, capacity: usize) -> Self {
         assert!(n >= 1, "KernelTree: need at least one class");
         assert!(dim >= 1);
         assert!(eps > 0.0, "KernelTree: eps must be > 0 (Theorem 1 needs q_i > 0)");
-        // Padding invariant: `pad = next_pow2(n).max(2)`. The `.max(2)` is
-        // load-bearing for n = 1 — without it `pad = 1`, `left_sums` is
-        // empty, and the very first walk iteration would index node 1 out
-        // of bounds. With pad = 2 a single-class tree has one internal
-        // node whose right (phantom) child carries zero mass, so the walk
-        // deterministically ends at leaf 0 with q = 1. This is exactly the
-        // degenerate shape [`super::ShardedKernelTree`] produces for its
-        // single-class tail shards.
-        let pad = n.next_power_of_two().max(2);
+        // Padding invariant: `pad = next_pow2(max(n, capacity)).max(2)`.
+        // The `.max(2)` is load-bearing for n = 1 — without it `pad = 1`,
+        // `left_sums` is empty, and the very first walk iteration would
+        // index node 1 out of bounds. With pad = 2 a single-class tree
+        // has one internal node whose right (phantom) child carries zero
+        // mass, so the walk deterministically ends at leaf 0 with q = 1.
+        // This is exactly the degenerate shape
+        // [`super::ShardedKernelTree`] produces for its single-class tail
+        // shards.
+        let pad = n.max(capacity).next_power_of_two().max(2);
         debug_assert!(
             pad >= 2 && pad.is_power_of_two() && pad >= n,
             "KernelTree: pad invariant violated (n={n}, pad={pad})"
@@ -95,6 +119,7 @@ impl KernelTree {
             live: n,
             retired: vec![false; n],
             eps,
+            growths: 0,
         };
         t.init_left_live();
         t
@@ -203,7 +228,16 @@ impl KernelTree {
         self.left_sums = sums;
         self.left_live = lives;
         self.pad = new_pad;
+        self.growths += 1;
         debug_assert_eq!(self.pad, self.n.next_power_of_two().max(2) * 2);
+    }
+
+    /// How many capacity-doubling copies this tree has paid since
+    /// construction. A tree whose `with_capacity` reservation covered
+    /// every insert reports 0 — the pre-reservation churn test asserts
+    /// exactly that.
+    pub fn growths(&self) -> usize {
+        self.growths
     }
 
     /// Append a new class with feature vector `phi`, returning its slot
@@ -373,6 +407,23 @@ impl KernelTree {
         &mut self.left_sums[(node - 1) * self.dim..node * self.dim]
     }
 
+    /// Software-prefetch both children's left-sum rows one level ahead
+    /// of the walk: while the current node's `O(D)` dot executes, the
+    /// lines the *next* branch decision needs are already in flight.
+    /// The heap layout keeps the top levels contiguous at the front of
+    /// `left_sums` (cache-resident across consecutive draws); prefetch
+    /// mostly pays off in the deep, sparse levels. `2·node < pad`
+    /// guards both children: `pad` is even, so an even `2·node ≤ pad−1`
+    /// implies `2·node + 1 ≤ pad − 1` as well.
+    #[inline]
+    fn prefetch_children(&self, node: usize) {
+        let l = 2 * node;
+        if l < self.pad {
+            simd::prefetch_read(self.left_sum(l));
+            simd::prefetch_read(self.left_sum(l + 1));
+        }
+    }
+
     /// Add `delta` to class `i`'s leaf (and all ancestor sums).
     pub fn update_leaf(&mut self, i: usize, delta: &[f32]) {
         assert!(i < self.n, "update_leaf: class {i} out of range");
@@ -444,6 +495,7 @@ impl KernelTree {
         let mut live = self.live;
         let mut q = 1.0f64;
         while size > 1 {
+            self.prefetch_children(node);
             let half = size / 2;
             let raw_left = dot(self.left_sum(node), z) as f64;
             let raw_right = raw - raw_left;
@@ -487,6 +539,7 @@ impl KernelTree {
         let mut live = self.live;
         let mut q = 1.0f64;
         while size > 1 {
+            self.prefetch_children(node);
             let half = size / 2;
             let raw_left = dot(self.left_sum(node), z) as f64;
             let raw_right = raw - raw_left;
@@ -534,6 +587,17 @@ impl KernelTree {
         let cache_len = self.pad.min(MEMO_NODES);
         let mut cache = vec![f64::NAN; cache_len];
         let root_raw = self.mass(z);
+        // Eagerly fill the top of the cache in one pass: with m draws
+        // the first ~log2(m) levels are visited almost surely, and heap
+        // order makes this sweep stream `left_sums` sequentially
+        // (hardware-prefetch friendly) instead of demand-faulting the
+        // same lines mid-walk. Each entry is the identical
+        // `zᵀS_left(node)` the lazy path would compute, so the draw
+        // stream is byte-for-byte unchanged.
+        let eager = (2 * m.next_power_of_two()).min(cache_len);
+        for node in 1..eager {
+            cache[node] = dot(self.left_sum(node), z) as f64;
+        }
 
         let mut ids = Vec::with_capacity(m);
         let mut probs = Vec::with_capacity(m);
@@ -545,6 +609,7 @@ impl KernelTree {
             let mut live = self.live;
             let mut q = 1.0f64;
             while size > 1 {
+                self.prefetch_children(node);
                 let half = size / 2;
                 let raw_left = if node < cache_len {
                     let c = cache[node];
@@ -1226,6 +1291,42 @@ mod tests {
                 "global {g} / rank {rank}: churned {a} vs rebuilt {b}"
             );
         }
+    }
+
+    #[test]
+    fn with_capacity_pre_reservation_avoids_growth_copies() {
+        let dim = 8;
+        let mut reserved = KernelTree::with_capacity(5, dim, 1e-6, 64);
+        let mut plain = KernelTree::new(5, dim, 1e-6);
+        let phi_of = |i: usize| vec![0.01f32 * (i + 1) as f32; 8];
+        for i in 0..5 {
+            reserved.add_leaf(i, &phi_of(i));
+            plain.add_leaf(i, &phi_of(i));
+        }
+        for i in 5..64 {
+            assert_eq!(reserved.insert_class(&phi_of(i)), i);
+            assert_eq!(plain.insert_class(&phi_of(i)), i);
+        }
+        assert_eq!(reserved.growths(), 0, "reservation must prevent doubling");
+        assert!(plain.growths() > 0, "un-reserved tree must have doubled");
+        // Both end at the same padded size and the same distribution.
+        assert_eq!(
+            reserved.memory_bytes(),
+            KernelTree::estimate_bytes(64, dim)
+        );
+        assert_eq!(reserved.memory_bytes(), plain.memory_bytes());
+        let z = vec![1.0f32; dim];
+        for i in 0..64 {
+            let a = reserved.probability(&z, i);
+            let b = plain.probability(&z, i);
+            assert!(
+                (a - b).abs() < 1e-9 * a.max(b).max(1e-12),
+                "class {i}: reserved {a} vs grown {b}"
+            );
+        }
+        // A capacity at or below n is a no-op reservation.
+        let same = KernelTree::with_capacity(5, dim, 1e-6, 3);
+        assert_eq!(same.memory_bytes(), KernelTree::estimate_bytes(5, dim));
     }
 
     #[test]

@@ -35,7 +35,7 @@
 
 use super::{BatcherOptions, MicroBatcher, SamplerServer, SamplerWriter};
 use crate::json::Json;
-use crate::linalg::{unit_vector, Matrix};
+use crate::linalg::{simd, unit_vector, Matrix, QuantizeKind};
 use crate::rng::Rng;
 use crate::sampler::Sampler;
 use crate::transport::{wire, TransportClient, TransportServer, VocabAdmin};
@@ -284,6 +284,10 @@ pub struct LoadSpec {
     /// TCP bind address for [`TransportMode::Tcp`] (config key
     /// `serving.listen`); port 0 asks the kernel for an ephemeral port.
     pub listen: String,
+    /// Sampler-embedding quantization the benched sampler was built with
+    /// (`sampler.quantize`); recorded verbatim in the BENCH JSON so
+    /// f16/i8 cells are distinguishable from f32 runs.
+    pub quantize: QuantizeKind,
 }
 
 impl Default for LoadSpec {
@@ -303,6 +307,7 @@ impl Default for LoadSpec {
             churn: None,
             wave: 1,
             listen: "127.0.0.1:0".into(),
+            quantize: QuantizeKind::None,
         }
     }
 }
@@ -377,6 +382,12 @@ pub struct LoadReport {
     pub post_churn_qps: f64,
     /// Live classes at the end of the run.
     pub live_final: u64,
+    /// Sampler-embedding quantization mode (`none` | `f16` | `i8`).
+    pub quantize: &'static str,
+    /// SIMD dispatch tier the process resolved at startup
+    /// (`avx2` | `neon` | `scalar`) — lets BENCH consumers compare runs
+    /// across machines and the forced-scalar CI lane honestly.
+    pub simd: &'static str,
 }
 
 impl LoadReport {
@@ -467,6 +478,8 @@ impl LoadReport {
             ("mut_p99_us", Json::from(self.mut_p99_us)),
             ("post_churn_qps", Json::from(self.post_churn_qps)),
             ("live_final", Json::from(self.live_final as usize)),
+            ("quantize", Json::from(self.quantize)),
+            ("simd", Json::from(self.simd)),
         ])
     }
 }
@@ -1182,6 +1195,8 @@ pub fn run_closed_loop(
         mut_p99_us,
         post_churn_qps,
         live_final,
+        quantize: spec.quantize.name(),
+        simd: simd::tier_name(),
     })
 }
 
@@ -1222,6 +1237,7 @@ mod tests {
                 churn: None,
                 wave: 1,
                 listen: "127.0.0.1:0".into(),
+                quantize: QuantizeKind::None,
             },
         )
         .unwrap();
@@ -1240,6 +1256,15 @@ mod tests {
         assert_eq!(
             j.at(&["transport"]).and_then(|v| v.as_str().map(String::from)),
             Some("inproc".into())
+        );
+        assert_eq!(
+            j.at(&["quantize"]).and_then(|v| v.as_str().map(String::from)),
+            Some("none".into())
+        );
+        let simd = j.at(&["simd"]).and_then(|v| v.as_str().map(String::from));
+        assert!(
+            matches!(simd.as_deref(), Some("avx2" | "neon" | "scalar")),
+            "unexpected simd tier tag {simd:?}"
         );
     }
 
@@ -1267,6 +1292,7 @@ mod tests {
                 churn: None,
                 wave: 1,
                 listen: "127.0.0.1:0".into(),
+                quantize: QuantizeKind::None,
             },
         )
         .unwrap();
@@ -1322,6 +1348,7 @@ mod tests {
                 churn: None,
                 wave: 1,
                 listen: "127.0.0.1:0".into(),
+                quantize: QuantizeKind::None,
             },
         )
         .unwrap();
@@ -1363,6 +1390,7 @@ mod tests {
                     churn: None,
                     wave,
                     listen: "127.0.0.1:0".into(),
+                    quantize: QuantizeKind::None,
                 },
             )
             .unwrap();
@@ -1436,6 +1464,7 @@ mod tests {
                     }),
                     wave: 1,
                     listen: "127.0.0.1:0".into(),
+                    quantize: QuantizeKind::None,
                 },
             )
             .unwrap();

@@ -14,7 +14,7 @@
 //!   socket kinds leaves byte-identical served states.
 
 use rfsoftmax::featmap::RffMap;
-use rfsoftmax::linalg::{unit_vector, Matrix};
+use rfsoftmax::linalg::{unit_vector, Matrix, QuantizeKind};
 use rfsoftmax::rng::Rng;
 use rfsoftmax::sampler::{RffSampler, Sampler, ShardedKernelSampler};
 use rfsoftmax::serving::{
@@ -202,6 +202,59 @@ fn sharded_churn_chi_square_vs_scratch_rebuild() {
         3102,
         "rff-sharded",
     );
+}
+
+#[test]
+fn pre_reserved_capacity_absorbs_churn_without_tree_growth() {
+    // A sampler built with `sampler.max_capacity` covering the whole
+    // churn schedule must pay zero capacity-doubling copies across the
+    // inserts, while the same schedule forces an unreserved twin to
+    // grow — and the two must still serve the same distribution.
+    let d = 8;
+    let n0 = 16;
+    let adds = 120usize;
+    let mut rng = Rng::seeded(3200);
+    let classes = Matrix::randn(&mut rng, n0, d).l2_normalized_rows();
+    let map = || RffMap::new(d, 64, NU, &mut Rng::seeded(3201));
+    let mut reserved = ShardedKernelSampler::with_map_opts(
+        &classes,
+        map(),
+        4,
+        "rff-sharded",
+        n0 + adds,
+        QuantizeKind::None,
+    );
+    let mut plain =
+        ShardedKernelSampler::with_map(&classes, map(), 4, "rff-sharded");
+    assert_eq!(reserved.growths(), 0);
+    for _ in 0..adds {
+        let mut add = Matrix::zeros(1, d);
+        let v = unit_vector(&mut rng, d);
+        add.row_mut(0).copy_from_slice(&v);
+        reserved.add_classes(&add).unwrap();
+        plain.add_classes(&add).unwrap();
+        assert_eq!(
+            reserved.growths(),
+            0,
+            "pre-reserved sampler paid a doubling copy mid-churn"
+        );
+    }
+    assert!(
+        plain.growths() > 0,
+        "unreserved twin never grew — the reservation assert is vacuous"
+    );
+    let h = unit_vector(&mut rng, d);
+    let mut total = 0.0;
+    for i in 0..n0 + adds {
+        let a = reserved.probability(&h, i);
+        let b = plain.probability(&h, i);
+        assert!(
+            (a - b).abs() < 1e-6 * a.max(b) + 1e-9,
+            "class {i}: reserved {a} vs plain {b}"
+        );
+        total += a;
+    }
+    assert!((total - 1.0).abs() < 1e-6, "Σq = {total}");
 }
 
 #[test]

@@ -3,8 +3,9 @@
 //! distribution agreement, and the RF-softmax ↔ softmax approximation
 //! quality that Theorem 2 promises — run at realistic sizes.
 
+use rfsoftmax::config::FeatureMapKind;
 use rfsoftmax::featmap::{QuadraticMap, RffMap};
-use rfsoftmax::linalg::{dot, softmax, unit_vector, Matrix};
+use rfsoftmax::linalg::{dot, softmax, unit_vector, Matrix, QuantizeKind};
 use rfsoftmax::rng::Rng;
 use rfsoftmax::sampler::{
     BucketKernelSampler, KernelTree, QuadraticSampler, RffSampler, Sampler,
@@ -250,6 +251,87 @@ fn sharded_probabilities_are_exact_over_all_classes() {
                 "S={shards} id {id}: {q} vs {want}"
             );
         }
+    }
+}
+
+#[test]
+fn quantized_sampler_distributions_stay_within_bias_budget() {
+    // Storing the sampler's private class copy in f16/i8
+    // (`sampler.quantize`) must not move the sampled distribution
+    // outside the bias budget the RFF approximation already carries.
+    // Three obligations per mode:
+    //  1. Σq stays an exact pmf (tree sums are built from the
+    //     *dequantized* rows, so q remains the walk's exact law);
+    //  2. TV(q_quant, q_f32) stays far below the TV(q_f32, p) scale —
+    //     f16 at round-off, i8 at percent level;
+    //  3. χ² of the quantized sampler's draws against its own claimed
+    //     probabilities passes at 60k draws (exact self-consistency
+    //     survives quantization).
+    let mut rng = Rng::seeded(940);
+    let n = 256;
+    let d = 16;
+    let tau = 2.0;
+    let classes = normalized(&mut rng, n, d);
+    let h = unit_vector(&mut rng, d);
+    let build = |qk: QuantizeKind| {
+        RffSampler::with_kind_opts(
+            &classes,
+            256,
+            tau,
+            FeatureMapKind::Rff,
+            &mut Rng::seeded(941),
+            0,
+            qk,
+        )
+    };
+    let full = build(QuantizeKind::None);
+    let full_tv_p = tv_to_softmax(&full, &classes, &h, tau);
+    for (qk, budget) in [(QuantizeKind::F16, 5e-3), (QuantizeKind::I8, 8e-2)] {
+        let s = build(qk);
+        let mut tv = 0.0;
+        let mut total = 0.0;
+        for i in 0..n {
+            let q = s.probability(&h, i);
+            tv += (q - full.probability(&h, i)).abs();
+            total += q;
+        }
+        tv /= 2.0;
+        assert!((total - 1.0).abs() < 1e-6, "{}: Σq = {total}", qk.name());
+        assert!(tv < budget, "{}: TV vs f32 = {tv} ≥ {budget}", qk.name());
+        // The softmax-approximation budget is intact: quantization adds
+        // at most its own drift on top of the f32 sampler's TV to p.
+        let tv_p = tv_to_softmax(&s, &classes, &h, tau);
+        assert!(
+            tv_p < full_tv_p + budget,
+            "{}: TV to softmax {tv_p} vs f32's {full_tv_p} + {budget}",
+            qk.name()
+        );
+
+        let trials = 60_000;
+        let mut draw_rng = Rng::seeded(942);
+        let draw = s.sample(&h, trials, &mut draw_rng);
+        let mut counts = vec![0u32; n];
+        for &id in &draw.ids {
+            counts[id as usize] += 1;
+        }
+        let mut chi2 = 0.0;
+        let mut dof = 0usize;
+        for i in 0..n {
+            let e = s.probability(&h, i) * trials as f64;
+            if e >= 5.0 {
+                let o = counts[i] as f64;
+                chi2 += (o - e) * (o - e) / e;
+                dof += 1;
+            }
+        }
+        assert!(dof > 50, "{}: too few testable cells ({dof})", qk.name());
+        // χ² concentration: mean ≈ dof, sd ≈ √(2·dof); allow 6σ.
+        let bound = dof as f64 + 6.0 * (2.0 * dof as f64).sqrt();
+        assert!(
+            chi2 < bound,
+            "{}: χ² = {chi2:.1} over {dof} cells exceeds {bound:.1}",
+            qk.name()
+        );
     }
 }
 
