@@ -11,7 +11,10 @@
 //! epochs, swap-stall count, and frame encode/decode overhead. A final
 //! tcp section sweeps the wire v3 wave size (1 vs 8 vs 32) so the
 //! per-request header amortization (`req_headers_per_request`) rides
-//! the trajectory.
+//! the trajectory. Every record also carries the live-telemetry
+//! `stages` breakdown (per-stage count + p50/p99) and the attributed
+//! `telemetry_overhead_pct`, which CI budgets at ≤ 2% via
+//! `bench-check --require-telemetry-overhead 2`.
 //!
 //! Run: `cargo bench --bench perf_serving`
 
@@ -93,6 +96,7 @@ fn main() {
                     wave: 1,
                     listen: "127.0.0.1:0".into(),
                     quantize: QuantizeKind::None,
+                    hold: Duration::ZERO,
                 };
                 match run_closed_loop(sampler.as_ref(), &spec) {
                     Ok(report) => {
@@ -138,6 +142,7 @@ fn main() {
                 wave: 1,
                 listen: "127.0.0.1:0".into(),
                 quantize: QuantizeKind::None,
+                hold: Duration::ZERO,
             };
             match run_closed_loop(sampler.as_ref(), &spec) {
                 Ok(report) => {
@@ -175,6 +180,7 @@ fn main() {
             wave,
             listen: "127.0.0.1:0".into(),
             quantize: QuantizeKind::None,
+            hold: Duration::ZERO,
         };
         match run_closed_loop(sampler.as_ref(), &spec) {
             Ok(report) => {

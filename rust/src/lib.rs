@@ -158,6 +158,27 @@
 //! `bench-check --baseline` ratchets every BENCH cell against the
 //! previous CI run's artifacts).
 //!
+//! ## Observability
+//!
+//! The serving path is self-describing at runtime via
+//! [`metrics::live`] — a std-only, lock-free telemetry registry
+//! threaded through every layer above. [`metrics::live::LiveRegistry`]
+//! holds sharded atomic counters and log-bucketed latency histograms
+//! (relaxed `fetch_add` on the hot path; snapshots merge shards, never
+//! lock), and every served request is traced through six stages —
+//! `decode → queue_wait → coalesce → gemm_wave → tree_walk →
+//! encode_reply` — with batch-shared stages recording each request's
+//! *share*, so per-stage counts reconcile exactly with request totals.
+//! A bounded worst-N slow-request log keeps per-stage breakdowns of
+//! the worst offenders. The surface is scrapeable three ways: the
+//! read-only wire-v3 `STATS` admin frame (JSON over the same socket
+//! serving traffic), the `rfsoftmax stats <endpoint>` CLI (whose
+//! `--expect-stage-count` flag machine-checks the reconciliation
+//! against a live server), and the serving BENCH records' `stages` +
+//! `telemetry_overhead_pct` fields — the attributed cost of the
+//! telemetry itself, budgeted at ≤ 2% and enforced by
+//! `bench-check --require-telemetry-overhead 2` in CI.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -290,14 +311,15 @@ pub mod prelude {
         ServeSampler, ShardedKernelSampler, ShardedKernelTree, UniformSampler,
         VocabError,
     };
+    pub use crate::metrics::live::{LiveRegistry, Stage};
     pub use crate::serving::{
-        BatcherOptions, ChurnSpec, DoubleBufferedSampler, MicroBatcher,
-        QueryReply, RequestMix, SamplerServer, SamplerSnapshot, SamplerWriter,
-        ServeReply, TransportMode,
+        BatcherOptions, BatcherStats, ChurnSpec, DoubleBufferedSampler,
+        MicroBatcher, QueryReply, RequestMix, SamplerServer, SamplerSnapshot,
+        SamplerWriter, ServeReply, TransportMode,
     };
     pub use crate::transport::{
-        Endpoint, ProtocolError, TransportClient, TransportServer,
-        TransportStats, VocabAdmin,
+        ClientFrameStats, Endpoint, ProtocolError, TransportClient,
+        TransportServer, TransportStats, VocabAdmin,
     };
     pub use crate::softmax::{
         full_softmax_loss, sampled_softmax_loss, SampledLoss,

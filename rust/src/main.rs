@@ -8,6 +8,7 @@
 //! rfsoftmax serve-bench --threads 8 --sampler.shards 8  # serving load test
 //! rfsoftmax serve-bench --transport uds --mix 8:1:1     # cross-process wire
 //! rfsoftmax serve-bench --transport tcp --wave 32       # TCP + batched waves
+//! rfsoftmax stats tcp:127.0.0.1:7411                    # scrape live telemetry
 //! rfsoftmax bench-check BENCH_serving.json              # validate BENCH JSON
 //! ```
 
@@ -41,6 +42,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "sample" => cmd_sample(rest),
         "bias" => cmd_bias(rest),
         "serve-bench" => cmd_serve_bench(rest),
+        "stats" => cmd_stats(rest),
         "bench-check" => cmd_bench_check(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -48,7 +50,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         }
         other => bail!(
             "unknown command '{other}' (try: train, info, sample, bias, \
-             serve-bench, bench-check)"
+             serve-bench, stats, bench-check)"
         ),
     }
 }
@@ -62,6 +64,7 @@ fn print_usage() {
          sample       standalone sampling demo (no artifacts needed)\n  \
          bias         gradient-bias diagnostic (Theorem 1 empirics)\n  \
          serve-bench  closed-loop load test of the serving subsystem\n  \
+         stats        scrape live telemetry from a serving endpoint\n  \
          bench-check  validate BENCH JSON records (CI bench-smoke gate)\n\n\
          Run `rfsoftmax <command> --help` for flags."
     );
@@ -252,6 +255,14 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
                         default: None,
                     },
                     FlagSpec {
+                        name: "hold",
+                        help: "keep the transport listening N seconds \
+                               after the load completes, so an external \
+                               `rfsoftmax stats` can scrape the live \
+                               telemetry (uds/tcp only)",
+                        default: Some("0".into()),
+                    },
+                    FlagSpec {
                         name: "config",
                         help: "JSON config file",
                         default: None,
@@ -283,6 +294,7 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
     } else {
         a.usize_or("updates-per-swap", 32)?
     };
+    let hold = a.usize_or("hold", 0)?;
     let n = cfg.model.num_classes.min(50_000);
     let d = cfg.model.embed_dim.min(128);
     let mut rng = Rng::seeded(cfg.sampler.seed);
@@ -312,6 +324,7 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
         wave,
         listen: cfg.serving.listen.clone(),
         quantize: cfg.sampler.quantize,
+        hold: std::time::Duration::from_secs(hold as u64),
     };
     println!(
         "serve-bench: sampler={} n={n} d={d} m={} transport={} wave={wave} \
@@ -330,6 +343,101 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the `stats` endpoint syntax and connect: `tcp:HOST:PORT`,
+/// `uds:PATH`, or a bare value (a '/' means a socket path, anything
+/// else a TCP address).
+fn connect_stats_endpoint(
+    spec: &str,
+) -> Result<rfsoftmax::transport::TransportClient> {
+    use rfsoftmax::transport::TransportClient;
+    let client = if let Some(addr) = spec.strip_prefix("tcp:") {
+        TransportClient::connect_tcp(addr)
+    } else if let Some(path) = spec.strip_prefix("uds:") {
+        TransportClient::connect(path)
+    } else if spec.contains('/') {
+        TransportClient::connect(spec)
+    } else {
+        TransportClient::connect_tcp(spec)
+    };
+    client.map_err(|e| anyhow::anyhow!("connect {spec}: {e}"))
+}
+
+/// Scrape the live telemetry of a running serving transport: connect,
+/// send the read-only wire-v3 `STATS` admin frame, and print the JSON
+/// the server returns (batcher counters, snapshot epoch, per-stage
+/// latency histograms, slow-request log, transport frame counters).
+/// `--expect-stage-count N` turns the scrape into a machine
+/// reconciliation check — each per-request stage histogram
+/// (queue_wait / coalesce / gemm_wave / tree_walk) must have recorded
+/// exactly N requests — which is how CI proves a live server's
+/// telemetry agrees with the load it just served.
+fn cmd_stats(raw: &[String]) -> Result<()> {
+    let a = Args::parse(raw, &["help", "json"])?;
+    if a.has("help") {
+        println!(
+            "{}",
+            render_help(
+                "stats",
+                "scrape live telemetry (STATS frame) from a serving endpoint",
+                &[
+                    FlagSpec {
+                        name: "json",
+                        help: "print the raw JSON exactly as returned \
+                               (default pretty-prints)",
+                        default: None,
+                    },
+                    FlagSpec {
+                        name: "expect-stage-count",
+                        help: "fail unless each per-request stage \
+                               histogram count equals N (reconciliation \
+                               check for CI)",
+                        default: None,
+                    },
+                    FlagSpec {
+                        name: "<endpoint>",
+                        help: "tcp:HOST:PORT | uds:PATH | bare \
+                               address/path (positional)",
+                        default: None,
+                    },
+                ]
+            )
+        );
+        return Ok(());
+    }
+    a.check_known(&["help", "json", "expect-stage-count"])?;
+    let [endpoint] = a.positional() else {
+        bail!("stats: give exactly one endpoint (tcp:HOST:PORT | uds:PATH)");
+    };
+    let mut client = connect_stats_endpoint(endpoint)?;
+    let text = client
+        .stats()
+        .map_err(|e| anyhow::anyhow!("STATS scrape failed: {e}"))?;
+    let j = rfsoftmax::json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("STATS returned invalid JSON: {e}"))?;
+    if let Some(raw_n) = a.get("expect-stage-count") {
+        let n: i64 = raw_n.parse().map_err(|_| {
+            anyhow::anyhow!("--expect-stage-count: bad count '{raw_n}'")
+        })?;
+        for stage in ["queue_wait", "coalesce", "gemm_wave", "tree_walk"] {
+            let got = j
+                .at(&["telemetry", "stages", stage, "count"])
+                .and_then(|v| v.as_i64());
+            anyhow::ensure!(
+                got == Some(n),
+                "stats: stage '{stage}' count {got:?} does not reconcile \
+                 with the expected {n} requests"
+            );
+        }
+        println!("stats: stage counts reconcile at {n} requests");
+    }
+    if a.has("json") {
+        println!("{text}");
+    } else {
+        println!("{}", to_string_pretty(&j));
+    }
+    Ok(())
+}
+
 /// Validate BENCH JSON artifacts with the in-crate `json` parser — the
 /// CI `bench-smoke` gate. Each positional file may hold raw
 /// `BENCH {json}` lines (as the benches print them) or bare JSON lines;
@@ -340,7 +448,10 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
 /// at the same mix (the ISSUE 5 acceptance gate, checked by machine
 /// rather than by review). With `--require-simd-speedup R`, some
 /// `simd_matmul_nt` record must show the vectorized microkernel ≥ R×
-/// the scalar reference (the ISSUE 6 gate). With `--baseline FILE`,
+/// the scalar reference (the ISSUE 6 gate). With
+/// `--require-telemetry-overhead P`, every serving record's attributed
+/// telemetry cost (`telemetry_overhead_pct`) must be ≤ P percent — the
+/// observability budget, checked by machine. With `--baseline FILE`,
 /// every record whose (bench, identity-fields) cell also appears in
 /// FILE must keep its throughput metric within `--max-regression` %
 /// of the baseline value — the cross-run perf ratchet.
@@ -444,6 +555,13 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
                         default: None,
                     },
                     FlagSpec {
+                        name: "require-telemetry-overhead",
+                        help: "also require every serving record's \
+                               attributed telemetry cost \
+                               (telemetry_overhead_pct) ≤ this percent",
+                        default: None,
+                    },
+                    FlagSpec {
                         name: "baseline",
                         help: "BENCH file from a previous run; matching \
                                cells must not regress their throughput \
@@ -470,6 +588,7 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
         "help",
         "require-wave-amortization",
         "require-simd-speedup",
+        "require-telemetry-overhead",
         "baseline",
         "max-regression",
     ])?;
@@ -567,6 +686,51 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
              need ≥ {factor}×"
         );
         println!("bench-check: simd speedup {best:.2}× ≥ {factor}× ok");
+    }
+    if let Some(limit) = a.get("require-telemetry-overhead") {
+        let limit: f64 = limit.parse().map_err(|_| {
+            anyhow::anyhow!(
+                "--require-telemetry-overhead: bad percent '{limit}'"
+            )
+        })?;
+        // Every serving record must carry the attributed overhead and
+        // stay under budget — one over-budget cell fails the gate, so a
+        // cheap cell can never mask an expensive one.
+        let mut worst = f64::NEG_INFINITY;
+        let mut seen = 0usize;
+        for j in &records {
+            if j.get("bench").and_then(|b| b.as_str())
+                != Some("serving_closed_loop")
+            {
+                continue;
+            }
+            let pct = j
+                .get("telemetry_overhead_pct")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "bench-check: serving record lacks \
+                         telemetry_overhead_pct — cannot prove the \
+                         telemetry budget"
+                    )
+                })?;
+            seen += 1;
+            worst = worst.max(pct);
+            anyhow::ensure!(
+                pct <= limit,
+                "bench-check: attributed telemetry overhead {pct:.3}% \
+                 exceeds the {limit}% budget"
+            );
+        }
+        anyhow::ensure!(
+            seen > 0,
+            "bench-check: no serving_closed_loop record — cannot prove \
+             the telemetry budget"
+        );
+        println!(
+            "bench-check: telemetry overhead worst {worst:.3}% ≤ {limit}% \
+             ok ({seen} serving records)"
+        );
     }
     if let Some(baseline_file) = a.get("baseline") {
         let max_regression: f64 =

@@ -1,0 +1,654 @@
+//! Live, lock-free telemetry for the serving stack.
+//!
+//! The [`Metrics`](super::Metrics) registry in the parent module is
+//! single-owner: every `record` takes `&mut self`, which is exactly
+//! right for the trainer loop and exactly wrong for a serving stack
+//! where dozens of reader/writer/transport threads record
+//! concurrently. This module is the concurrent counterpart, built from
+//! two std-only primitives:
+//!
+//! * [`LiveHistogram`] — the 64-bucket log-spaced latency histogram
+//!   from [`super::LatencyHistogram`], but with `AtomicU64` cells.
+//!   Hot-path recording is a single `Relaxed` `fetch_add` per bucket
+//!   (plus count/sum/max upkeep), never a mutex; readers take a
+//!   [`HistogramSnapshot`] and merge/quantile off-thread. Quantiles
+//!   quote the geometric bucket midpoint, matching the fixed
+//!   upper-edge bias of the single-threaded histogram.
+//! * [`ShardedCounter`] — a cache-line-padded array of `AtomicU64`
+//!   shards with a thread-sticky shard index, so unrelated threads
+//!   bumping the same logical counter do not ping-pong one cache line.
+//!
+//! [`LiveRegistry`] composes them into the one handle the serving
+//! layers share (cloned into batcher / transport / writer workers —
+//! clones are `Arc`-shallow): six fixed per-request **stage**
+//! histograms ([`Stage`]: decode → queue wait → coalesce → gemm wave →
+//! tree walk → encode/reply), named counters and histograms registered
+//! on a cold mutex path but recorded lock-free, and a bounded worst-N
+//! [`SlowLog`] whose hot path is one `Relaxed` threshold load for
+//! every request that is *not* among the worst.
+//!
+//! Recording is gated per registry by [`LiveRegistry::set_enabled`]:
+//! disabled, a stage record costs one relaxed load and a branch — the
+//! "telemetry off" comparator the serve-bench overhead cell measures
+//! against (budget: ≤ 2% of request cost, machine-checked in CI).
+
+use crate::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Per-request serving stages, in pipeline order. `Decode` and
+/// `EncodeReply` only occur on wire transports (uds/tcp); the middle
+/// four are recorded for every request on every transport, so their
+/// snapshot counts reconcile exactly with the request totals a load
+/// generator observes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Wire-frame payload parse (CPU only — socket wait excluded).
+    Decode,
+    /// Submit → drain latency in the coalescing queue.
+    QueueWait,
+    /// Batch admission: dim-grouping plus activation-matrix build.
+    Coalesce,
+    /// The fused feature-map gemm over the coalesced wave.
+    GemmWave,
+    /// Per-row tree sampling/scoring after the gemm.
+    TreeWalk,
+    /// Response-frame encode (wire transports).
+    EncodeReply,
+}
+
+/// Number of [`Stage`] variants (the registry's histogram array size).
+pub const STAGE_COUNT: usize = 6;
+
+impl Stage {
+    /// Every stage, in pipeline order.
+    pub const ALL: [Stage; STAGE_COUNT] = [
+        Stage::Decode,
+        Stage::QueueWait,
+        Stage::Coalesce,
+        Stage::GemmWave,
+        Stage::TreeWalk,
+        Stage::EncodeReply,
+    ];
+
+    /// Stable snake_case name (JSON key in STATS snapshots).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Decode => "decode",
+            Stage::QueueWait => "queue_wait",
+            Stage::Coalesce => "coalesce",
+            Stage::GemmWave => "gemm_wave",
+            Stage::TreeWalk => "tree_walk",
+            Stage::EncodeReply => "encode_reply",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Lock-free log-bucket latency histogram: bucket `i` covers
+/// `[2^i, 2^{i+1})` ns, recording is one relaxed `fetch_add` per cell.
+/// Readers call [`LiveHistogram::snapshot`]; a snapshot taken while
+/// writers are mid-record is still well-formed (each cell is atomic),
+/// merely a momentary view.
+pub struct LiveHistogram {
+    buckets: [AtomicU64; 64],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LiveHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LiveHistogram {
+    pub fn new() -> Self {
+        LiveHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration. All updates are `Relaxed`: per-cell totals
+    /// are exact once writers quiesce; cross-cell consistency is not
+    /// needed for bucket counting.
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// [`LiveHistogram::record`] with a raw nanosecond value.
+    pub fn record_ns(&self, ns: u64) {
+        let idx = 63 - ns.max(1).leading_zeros() as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Records so far (relaxed read).
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Materialize the current cells into a plain snapshot.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].load(Ordering::Relaxed)
+            }),
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A plain (non-atomic) copy of a [`LiveHistogram`]: mergeable across
+/// shards/replicas and quantile-queryable without touching the hot
+/// cells again.
+#[derive(Clone, Debug, Default)]
+pub struct HistogramSnapshot {
+    buckets: [u64; 64],
+    count: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Fold another snapshot into this one (bucket-wise sum) — how
+    /// per-thread or per-replica histograms aggregate.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// Approximate quantile: geometric midpoint of the bucket holding
+    /// the q-th sample, same estimator as
+    /// [`super::LatencyHistogram::quantile`].
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return super::bucket_midpoint_ns(i);
+            }
+        }
+        u64::MAX
+    }
+
+    /// `{count, mean_us, p50_us, p99_us, max_us}` — the shape every
+    /// STATS consumer (CLI, BENCH records, bench-check) parses.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::from(self.count as usize)),
+            ("mean_us", Json::from(self.mean_ns() / 1e3)),
+            ("p50_us", Json::from(self.quantile_ns(0.5) as f64 / 1e3)),
+            ("p99_us", Json::from(self.quantile_ns(0.99) as f64 / 1e3)),
+            ("max_us", Json::from(self.max_ns as f64 / 1e3)),
+        ])
+    }
+}
+
+/// Shards in a [`ShardedCounter`]. More than typical recorder-thread
+/// counts collide on; small enough that summing on the read path stays
+/// trivial.
+const COUNTER_SHARDS: usize = 16;
+
+/// One cache line per shard so two threads bumping the same logical
+/// counter never write the same line.
+#[repr(align(64))]
+struct PaddedCell(AtomicU64);
+
+/// Monotonic counter sharded across cache-line-padded cells; each
+/// thread sticks to one shard (assigned round-robin on first use), so
+/// the hot path is an uncontended relaxed `fetch_add`.
+pub struct ShardedCounter {
+    shards: [PaddedCell; COUNTER_SHARDS],
+}
+
+static SHARD_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static SHARD_IDX: std::cell::Cell<usize> =
+        std::cell::Cell::new(usize::MAX);
+}
+
+fn my_shard() -> usize {
+    SHARD_IDX.with(|c| {
+        let v = c.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = SHARD_SEQ.fetch_add(1, Ordering::Relaxed) % COUNTER_SHARDS;
+        c.set(v);
+        v
+    })
+}
+
+impl Default for ShardedCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardedCounter {
+    pub fn new() -> Self {
+        ShardedCounter {
+            shards: std::array::from_fn(|_| PaddedCell(AtomicU64::new(0))),
+        }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.shards[my_shard()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Sum across shards. Exact once writers quiesce; a momentary
+    /// under-count is possible mid-`add`, never an over-count.
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// One entry of the worst-N slow-request log: the request's total
+/// latency plus its per-stage breakdown (nanoseconds, indexed like
+/// [`Stage::ALL`]; stages that did not occur hold zero).
+#[derive(Clone, Debug)]
+pub struct SlowRequest {
+    /// Submit → reply, nanoseconds.
+    pub total_ns: u64,
+    /// Request kind ("sample" / "probability" / "top_k").
+    pub kind: &'static str,
+    /// How many requests shared the coalesced batch this one rode in.
+    pub batch: usize,
+    /// Snapshot epoch the request was served under.
+    pub epoch: u64,
+    /// Per-stage nanoseconds, `stage_ns[Stage::ALL[i]]`.
+    pub stage_ns: [u64; STAGE_COUNT],
+}
+
+impl SlowRequest {
+    fn to_json(&self) -> Json {
+        let mut stages = BTreeMap::new();
+        for s in Stage::ALL {
+            let ns = self.stage_ns[s.index()];
+            if ns > 0 {
+                stages.insert(s.name().to_string(), Json::from(ns as f64 / 1e3));
+            }
+        }
+        Json::obj(vec![
+            ("total_us", Json::from(self.total_ns as f64 / 1e3)),
+            ("kind", Json::from(self.kind)),
+            ("batch", Json::from(self.batch)),
+            ("epoch", Json::from(self.epoch as usize)),
+            ("stages_us", Json::Obj(stages)),
+        ])
+    }
+}
+
+/// Capacity of the slow-request log.
+const SLOW_LOG_CAP: usize = 8;
+
+/// Bounded worst-N log. The hot path for a request that is *not*
+/// among the current worst is one relaxed load of the admission
+/// threshold — the mutex is taken only when a request actually
+/// displaces an entry, which by construction happens at most
+/// `SLOW_LOG_CAP + O(log of the latency ceiling)` times per regime.
+struct SlowLog {
+    /// Admission bar: the smallest total in a full log (0 until full).
+    threshold_ns: AtomicU64,
+    entries: Mutex<Vec<SlowRequest>>,
+}
+
+impl SlowLog {
+    fn new() -> Self {
+        SlowLog {
+            threshold_ns: AtomicU64::new(0),
+            entries: Mutex::new(Vec::with_capacity(SLOW_LOG_CAP)),
+        }
+    }
+
+    fn offer(&self, r: SlowRequest) {
+        if r.total_ns <= self.threshold_ns.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut entries = self.entries.lock().unwrap();
+        if entries.len() == SLOW_LOG_CAP {
+            // Evict the current fastest (checked again under the lock:
+            // the threshold may have moved since the relaxed load).
+            let (mi, min_total) = entries
+                .iter()
+                .enumerate()
+                .map(|(i, e)| (i, e.total_ns))
+                .min_by_key(|&(_, t)| t)
+                .expect("slow log is non-empty at capacity");
+            if r.total_ns <= min_total {
+                return;
+            }
+            entries.swap_remove(mi);
+        }
+        entries.push(r);
+        if entries.len() == SLOW_LOG_CAP {
+            let min_total = entries.iter().map(|e| e.total_ns).min().unwrap_or(0);
+            self.threshold_ns.store(min_total, Ordering::Relaxed);
+        }
+    }
+
+    /// Worst-first copy of the log.
+    fn snapshot(&self) -> Vec<SlowRequest> {
+        let mut v = self.entries.lock().unwrap().clone();
+        v.sort_by(|a, b| b.total_ns.cmp(&a.total_ns));
+        v
+    }
+}
+
+struct RegistryInner {
+    enabled: AtomicBool,
+    stages: [LiveHistogram; STAGE_COUNT],
+    counters: Mutex<BTreeMap<String, Arc<ShardedCounter>>>,
+    histograms: Mutex<BTreeMap<String, Arc<LiveHistogram>>>,
+    slow: SlowLog,
+}
+
+/// The shared telemetry handle of one serving stack. Cloning is
+/// `Arc`-shallow — the batcher creates one registry and every
+/// transport/writer worker records into the same cells. One registry
+/// per serving stack (not process-global), so concurrently running
+/// stacks — or tests — never cross-contaminate.
+#[derive(Clone)]
+pub struct LiveRegistry {
+    inner: Arc<RegistryInner>,
+}
+
+impl Default for LiveRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LiveRegistry {
+    pub fn new() -> Self {
+        LiveRegistry {
+            inner: Arc::new(RegistryInner {
+                enabled: AtomicBool::new(true),
+                stages: std::array::from_fn(|_| LiveHistogram::new()),
+                counters: Mutex::new(BTreeMap::new()),
+                histograms: Mutex::new(BTreeMap::new()),
+                slow: SlowLog::new(),
+            }),
+        }
+    }
+
+    /// Toggle recording. Disabled, every record degrades to one
+    /// relaxed load + branch — the "telemetry off" side of the
+    /// overhead budget.
+    pub fn set_enabled(&self, on: bool) {
+        self.inner.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Record one per-request stage duration (nanoseconds). For
+    /// batch-shared stages the caller records each request's *share*
+    /// (`batch duration / batch size`), keeping per-stage counts equal
+    /// to request counts and sums equal to attributed CPU time.
+    pub fn record_stage_ns(&self, stage: Stage, ns: u64) {
+        if self.enabled() {
+            self.inner.stages[stage.index()].record_ns(ns);
+        }
+    }
+
+    /// [`LiveRegistry::record_stage_ns`] with a `Duration`.
+    pub fn record_stage(&self, stage: Stage, d: Duration) {
+        self.record_stage_ns(stage, d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Current snapshot of one stage histogram.
+    pub fn stage_snapshot(&self, stage: Stage) -> HistogramSnapshot {
+        self.inner.stages[stage.index()].snapshot()
+    }
+
+    /// Get-or-register a named counter (cold path takes a mutex; keep
+    /// the returned handle and bump it lock-free thereafter).
+    pub fn counter(&self, name: &str) -> Arc<ShardedCounter> {
+        let mut map = self.inner.counters.lock().unwrap();
+        Arc::clone(
+            map.entry(name.to_string())
+                .or_insert_with(|| Arc::new(ShardedCounter::new())),
+        )
+    }
+
+    /// Get-or-register a named histogram (same contract as
+    /// [`LiveRegistry::counter`]).
+    pub fn histogram(&self, name: &str) -> Arc<LiveHistogram> {
+        let mut map = self.inner.histograms.lock().unwrap();
+        Arc::clone(
+            map.entry(name.to_string())
+                .or_insert_with(|| Arc::new(LiveHistogram::new())),
+        )
+    }
+
+    /// Offer a completed request to the worst-N slow log.
+    pub fn offer_slow(&self, r: SlowRequest) {
+        if self.enabled() {
+            self.inner.slow.offer(r);
+        }
+    }
+
+    /// Worst-first copy of the slow-request log.
+    pub fn slow_requests(&self) -> Vec<SlowRequest> {
+        self.inner.slow.snapshot()
+    }
+
+    /// Per-stage `{name: {count, mean_us, p50_us, p99_us, max_us}}`
+    /// for every stage that has recorded at least once.
+    pub fn stages_json(&self) -> Json {
+        let mut stages = BTreeMap::new();
+        for s in Stage::ALL {
+            let snap = self.stage_snapshot(s);
+            if snap.count() > 0 {
+                stages.insert(s.name().to_string(), snap.to_json());
+            }
+        }
+        Json::Obj(stages)
+    }
+
+    /// Full registry snapshot: stages, named counters/histograms, and
+    /// the slow-request log. The core of the STATS wire answer.
+    pub fn snapshot_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, c)| (k.clone(), Json::from(c.get() as usize)))
+            .collect();
+        let histograms: BTreeMap<String, Json> = self
+            .inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, h)| h.count() > 0)
+            .map(|(k, h)| (k.clone(), h.snapshot().to_json()))
+            .collect();
+        let slowest: Vec<Json> = self.slow_requests().iter().map(|r| r.to_json()).collect();
+        Json::obj(vec![
+            ("enabled", Json::from(self.enabled())),
+            ("stages", self.stages_json()),
+            ("counters", Json::Obj(counters)),
+            ("histograms", Json::Obj(histograms)),
+            ("slowest", Json::Arr(slowest)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::LatencyHistogram;
+
+    /// Deterministic per-thread duration sequence (no RNG needed).
+    fn synth_ns(thread: u64, i: u64) -> u64 {
+        (thread * 7919 + i * 263) % 2_000_000 + 1
+    }
+
+    #[test]
+    fn concurrent_recording_matches_single_threaded_reference() {
+        const THREADS: u64 = 8;
+        const PER_THREAD: u64 = 2_000;
+        let live = Arc::new(LiveHistogram::new());
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let live = Arc::clone(&live);
+                s.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        live.record_ns(synth_ns(t, i));
+                    }
+                });
+            }
+        });
+        let snap = live.snapshot();
+        assert_eq!(snap.count(), THREADS * PER_THREAD);
+
+        // Single-threaded reference over the identical sample set: the
+        // merged concurrent snapshot must agree on every quantile (both
+        // use the same buckets and the same midpoint estimator).
+        let mut reference = LatencyHistogram::default();
+        for t in 0..THREADS {
+            for i in 0..PER_THREAD {
+                reference.record(Duration::from_nanos(synth_ns(t, i)));
+            }
+        }
+        for q in [0.5, 0.9, 0.99, 1.0] {
+            let live_q = snap.quantile_ns(q);
+            let ref_q = reference.quantile(q).as_nanos() as u64;
+            assert_eq!(live_q, ref_q, "quantile {q}: live {live_q} vs ref {ref_q}");
+        }
+    }
+
+    #[test]
+    fn snapshot_merge_sums_counts() {
+        let a = LiveHistogram::new();
+        let b = LiveHistogram::new();
+        for i in 1..100u64 {
+            a.record_ns(i * 1000);
+            b.record_ns(i * 37);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged.count(), 198);
+        assert_eq!(merged.max_ns(), 99_000);
+        assert!(merged.quantile_ns(1.0) >= merged.quantile_ns(0.5));
+    }
+
+    #[test]
+    fn sharded_counter_is_exact_across_threads() {
+        let c = Arc::new(ShardedCounter::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.incr();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn slow_log_keeps_the_worst_n() {
+        let reg = LiveRegistry::new();
+        for total in 1..=100u64 {
+            reg.offer_slow(SlowRequest {
+                total_ns: total * 1000,
+                kind: "sample",
+                batch: 1,
+                epoch: 0,
+                stage_ns: [0; STAGE_COUNT],
+            });
+        }
+        let worst = reg.slow_requests();
+        assert_eq!(worst.len(), SLOW_LOG_CAP);
+        // Worst-first, and exactly the top-N totals survived.
+        assert_eq!(worst[0].total_ns, 100_000);
+        assert_eq!(worst[SLOW_LOG_CAP - 1].total_ns, 93_000);
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let reg = LiveRegistry::new();
+        reg.set_enabled(false);
+        reg.record_stage_ns(Stage::GemmWave, 1234);
+        reg.offer_slow(SlowRequest {
+            total_ns: u64::MAX,
+            kind: "sample",
+            batch: 1,
+            epoch: 0,
+            stage_ns: [0; STAGE_COUNT],
+        });
+        assert_eq!(reg.stage_snapshot(Stage::GemmWave).count(), 0);
+        assert!(reg.slow_requests().is_empty());
+        reg.set_enabled(true);
+        reg.record_stage_ns(Stage::GemmWave, 1234);
+        assert_eq!(reg.stage_snapshot(Stage::GemmWave).count(), 1);
+    }
+
+    #[test]
+    fn registry_snapshot_json_shape() {
+        let reg = LiveRegistry::new();
+        reg.counter("requests").add(7);
+        reg.histogram("publish_wait").record_ns(1_000_000);
+        reg.record_stage_ns(Stage::TreeWalk, 5_000);
+        let j = reg.snapshot_json();
+        assert_eq!(j.at(&["counters", "requests"]).unwrap().as_i64(), Some(7));
+        assert_eq!(j.at(&["histograms", "publish_wait", "count"]).unwrap().as_i64(), Some(1));
+        assert_eq!(j.at(&["stages", "tree_walk", "count"]).unwrap().as_i64(), Some(1));
+        // Round-trips through the in-crate parser (the STATS scrape
+        // path re-parses exactly this).
+        let text = j.to_string();
+        let back = crate::json::parse(&text).expect("snapshot reparses");
+        assert_eq!(back.at(&["counters", "requests"]).unwrap().as_i64(), Some(7));
+    }
+}

@@ -7,6 +7,19 @@ use crate::json::Json;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+pub mod live;
+
+/// Geometric midpoint of log bucket `i` (covering `[2^i, 2^{i+1})`
+/// nanoseconds): `√2 · 2^i`. Quantile estimates quote this instead of
+/// the upper bucket edge, which would overstate by up to 2×. Saturates
+/// at the top bucket.
+pub(crate) fn bucket_midpoint_ns(i: usize) -> u64 {
+    if i >= 63 {
+        return u64::MAX;
+    }
+    ((1u64 << i) as f64 * std::f64::consts::SQRT_2) as u64
+}
+
 /// Streaming mean/variance/min/max via Welford's algorithm.
 #[derive(Clone, Debug, Default)]
 pub struct Stream {
@@ -118,7 +131,10 @@ impl LatencyHistogram {
         Duration::from_nanos(self.stream.mean() as u64)
     }
 
-    /// Approximate quantile from the log buckets (upper bucket edge).
+    /// Approximate quantile from the log buckets: the geometric
+    /// midpoint of the bucket holding the q-th sample (see
+    /// [`bucket_midpoint_ns`]), so the estimate is centered within its
+    /// bucket rather than overstated at the upper power-of-two edge.
     pub fn quantile(&self, q: f64) -> Duration {
         let total = self.stream.count();
         if total == 0 {
@@ -129,10 +145,16 @@ impl LatencyHistogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return Duration::from_nanos(1u64 << (i + 1).min(63));
+                return Duration::from_nanos(bucket_midpoint_ns(i));
             }
         }
         Duration::from_nanos(u64::MAX)
+    }
+
+    /// Largest recorded duration (exact, from the Welford stream — not
+    /// bucket-quantized).
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.stream.max() as u64)
     }
 }
 
@@ -214,6 +236,11 @@ impl Metrics {
                         "p95_us",
                         Json::from(t.quantile(0.95).as_secs_f64() * 1e6),
                     ),
+                    (
+                        "p99_us",
+                        Json::from(t.quantile(0.99).as_secs_f64() * 1e6),
+                    ),
+                    ("max_us", Json::from(t.max().as_secs_f64() * 1e6)),
                 ]),
             ));
         }
@@ -266,6 +293,15 @@ mod tests {
         assert_eq!(h.count(), 5);
         assert!(h.quantile(0.5) <= h.quantile(0.95));
         assert!(h.quantile(0.95) <= h.quantile(1.0));
+        // Geometric midpoint, not the upper power-of-two edge: a lone
+        // 100µs sample must be estimated *inside* its bucket
+        // [2^16, 2^17) ns, where the old upper-edge answer (2^17 ns ≈
+        // 131µs) overstated it.
+        let mut one = LatencyHistogram::default();
+        one.record(Duration::from_micros(100));
+        let est = one.quantile(0.5).as_nanos() as u64;
+        assert!((1u64 << 16) <= est && est < (1u64 << 17), "est {est}");
+        assert_eq!(one.max(), Duration::from_micros(100));
     }
 
     #[test]
@@ -280,5 +316,7 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.at(&["counters", "steps"]).unwrap().as_i64(), Some(3));
         assert!(j.at(&["timers", "op", "mean_us"]).unwrap().as_f64().unwrap() >= 1000.0);
+        assert!(j.at(&["timers", "op", "p99_us"]).unwrap().as_f64().is_some());
+        assert!(j.at(&["timers", "op", "max_us"]).unwrap().as_f64().unwrap() >= 1000.0);
     }
 }

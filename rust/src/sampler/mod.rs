@@ -261,6 +261,19 @@ pub enum ServeAnswer {
     TopK(Vec<(u32, f64)>),
 }
 
+/// Per-wave cost attribution from [`Sampler::serve_queries_traced`]:
+/// nanoseconds spent in the batched feature-map gemm (`φ` of every
+/// query row) versus the per-row tree walks / probability reads that
+/// consume it. Samplers without a gemm/walk split report the whole
+/// serve cost as `walk_ns`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeTrace {
+    /// Time in the batched kernel feature map (one gemm per wave).
+    pub gemm_ns: u64,
+    /// Time in per-row tree walks / rankings / probability lookups.
+    pub walk_ns: u64,
+}
+
 /// Result of drawing `m` classes: ids plus their exact sampling
 /// probabilities under the sampler's distribution (conditioned on the
 /// excluded target when drawn via [`Sampler::sample_negatives`]).
@@ -485,6 +498,24 @@ pub trait Sampler: Send {
                 }
             })
             .collect()
+    }
+
+    /// [`Sampler::serve_queries`] with per-stage cost attribution for
+    /// the live-telemetry pipeline: `trace` accumulates the wave's gemm
+    /// (batched feature map) and tree-walk nanoseconds. The default —
+    /// correct for samplers with no batched feature map — times the
+    /// whole call as walk work; [`ShardedKernelSampler`] overrides it
+    /// to split `map_batch` from the fanned-out walks.
+    fn serve_queries_traced(
+        &self,
+        h: &Matrix,
+        queries: &[ServeQuery],
+        trace: &mut ServeTrace,
+    ) -> Vec<ServeAnswer> {
+        let t0 = std::time::Instant::now();
+        let out = self.serve_queries(h, queries);
+        trace.walk_ns += t0.elapsed().as_nanos() as u64;
+        out
     }
 
     /// Sample-only serving batch: row `b` of `h` draws `ms[b]` classes

@@ -838,6 +838,39 @@ impl<M: FeatureMap + Clone + 'static> Sampler for ShardedKernelSampler<M> {
         })
     }
 
+    /// Traced serving wave: same answers as [`Self::serve_queries`]
+    /// (identical gemm + per-seed walks), but attributes the batched
+    /// `map_batch` gemm and the fanned-out φ-level walks to separate
+    /// [`super::ServeTrace`] cells for the live-telemetry pipeline.
+    fn serve_queries_traced(
+        &self,
+        h: &Matrix,
+        queries: &[super::ServeQuery],
+        trace: &mut super::ServeTrace,
+    ) -> Vec<super::ServeAnswer> {
+        assert_eq!(h.rows(), queries.len(), "serve_queries: length mismatch");
+        let t0 = std::time::Instant::now();
+        let phi = self.map.map_batch(h);
+        trace.gemm_ns += t0.elapsed().as_nanos() as u64;
+        let tree = &self.tree;
+        let t1 = std::time::Instant::now();
+        let out = super::fan_out_queries(queries, |b| match queries[b] {
+            super::ServeQuery::Sample { m, seed } => {
+                let mut rng = Rng::seeded(seed);
+                let (ids, probs) = tree.sample_many(phi.row(b), m, &mut rng);
+                super::ServeAnswer::Sample(NegativeDraw { ids, probs })
+            }
+            super::ServeQuery::Probability { class } => {
+                super::ServeAnswer::Probability(tree.probability(phi.row(b), class))
+            }
+            super::ServeQuery::TopK { k } => {
+                super::ServeAnswer::TopK(tree.top_k(phi.row(b), k))
+            }
+        });
+        trace.walk_ns += t1.elapsed().as_nanos() as u64;
+        out
+    }
+
     fn top_k(&self, h: &[f32], k: usize) -> Vec<(u32, f64)> {
         let z = self.map.map(h);
         self.tree.top_k(&z, k)

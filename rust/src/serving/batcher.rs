@@ -18,14 +18,25 @@
 //! (probability/top_k are deterministic given the snapshot). A request's
 //! answer therefore depends only on `(query, snapshot epoch)` — never on
 //! which other requests it was coalesced with, or on thread scheduling.
+//!
+//! **Telemetry:** the batcher owns the serving stack's
+//! [`LiveRegistry`] ([`MicroBatcher::telemetry`]) and folds every
+//! request into the queue-wait / coalesce / gemm-wave / tree-walk
+//! stage histograms (batch-shared stages record each request's share,
+//! so stage counts reconcile with request totals) plus a worst-N
+//! slow-request log. Transport workers clone the registry to add the
+//! decode/encode stages; [`MicroBatcher::stats_json`] is the serving
+//! portion of the `STATS` wire answer.
 
 use super::SamplerServer;
 use crate::exec::CoalesceQueue;
+use crate::json::Json;
 use crate::linalg::Matrix;
-use crate::sampler::{NegativeDraw, ServeAnswer, ServeQuery};
+use crate::metrics::live::{LiveRegistry, SlowRequest, Stage, STAGE_COUNT};
+use crate::sampler::{NegativeDraw, ServeAnswer, ServeQuery, ServeTrace};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Coalescing bounds (config keys `serving.max_batch` /
 /// `serving.max_wait_us`).
@@ -89,10 +100,14 @@ struct Pending {
     h: Vec<f32>,
     query: ServeQuery,
     reply: ReplyFn,
+    /// Submit timestamp — queue-wait and total-latency tracing anchor.
+    enqueued_at: Instant,
+    /// Submit → drain nanoseconds, filled in at drain time.
+    queued_ns: u64,
 }
 
 #[derive(Default)]
-struct BatcherStats {
+struct BatcherCounters {
     requests: AtomicU64,
     batches: AtomicU64,
     samples: AtomicU64,
@@ -100,11 +115,30 @@ struct BatcherStats {
     top_ks: AtomicU64,
 }
 
+/// Point-in-time copy of the micro-batcher's cumulative counters
+/// ([`MicroBatcher::stats`]). Named fields — call sites should never
+/// have to positionally destructure a stats tuple.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatcherStats {
+    /// Requests answered (all kinds, successes only).
+    pub requests: u64,
+    /// Coalesced serving batches formed (gemm waves issued).
+    pub batches: u64,
+    /// Sample draws answered.
+    pub samples: u64,
+    /// Exact-probability queries answered.
+    pub probabilities: u64,
+    /// Top-k rankings answered.
+    pub top_ks: u64,
+}
+
 /// Handle to a running micro-batcher. Cheap to share behind an `Arc`;
 /// dropping the last handle shuts the batcher thread down.
 pub struct MicroBatcher {
     queue: Arc<CoalesceQueue<Pending>>,
-    stats: Arc<BatcherStats>,
+    counters: Arc<BatcherCounters>,
+    telemetry: LiveRegistry,
+    server: SamplerServer,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -112,16 +146,21 @@ impl MicroBatcher {
     pub fn spawn(server: SamplerServer, opts: BatcherOptions) -> Self {
         assert!(opts.max_batch >= 1, "MicroBatcher: max_batch must be ≥ 1");
         let queue = Arc::new(CoalesceQueue::new());
-        let stats = Arc::new(BatcherStats::default());
+        let counters = Arc::new(BatcherCounters::default());
+        let telemetry = LiveRegistry::new();
         let worker = {
             let queue = Arc::clone(&queue);
-            let stats = Arc::clone(&stats);
+            let counters = Arc::clone(&counters);
+            let telemetry = telemetry.clone();
+            let server = server.clone();
             std::thread::Builder::new()
                 .name("rfsm-serve-batcher".into())
-                .spawn(move || batcher_loop(&server, &queue, opts, &stats))
+                .spawn(move || {
+                    batcher_loop(&server, &queue, opts, &counters, &telemetry)
+                })
                 .expect("spawn serving batcher")
         };
-        Self { queue, stats, worker: Some(worker) }
+        Self { queue, counters, telemetry, server, worker: Some(worker) }
     }
 
     /// Enqueue one request without blocking; `reply` is invoked exactly
@@ -136,7 +175,13 @@ impl MicroBatcher {
         query: ServeQuery,
         reply: impl FnOnce(Result<QueryReply, String>) + Send + 'static,
     ) -> bool {
-        self.queue.push(Pending { h, query, reply: Box::new(reply) })
+        self.queue.push(Pending {
+            h,
+            query,
+            reply: Box::new(reply),
+            enqueued_at: Instant::now(),
+            queued_ns: 0,
+        })
     }
 
     /// Enqueue a whole decoded wire wave as ONE contiguous run in the
@@ -151,10 +196,17 @@ impl MicroBatcher {
         &self,
         entries: Vec<(Vec<f32>, ServeQuery, SubmitReply)>,
     ) -> bool {
+        let enqueued_at = Instant::now();
         self.queue.push_many(
             entries
                 .into_iter()
-                .map(|(h, query, reply)| Pending { h, query, reply })
+                .map(|(h, query, reply)| Pending {
+                    h,
+                    query,
+                    reply,
+                    enqueued_at,
+                    queued_ns: 0,
+                })
                 .collect(),
         )
     }
@@ -202,21 +254,52 @@ impl MicroBatcher {
         }
     }
 
-    /// `(requests served, batches formed)` so far.
-    pub fn stats(&self) -> (u64, u64) {
-        (
-            self.stats.requests.load(Ordering::Relaxed),
-            self.stats.batches.load(Ordering::Relaxed),
-        )
+    /// Cumulative counters as a named snapshot.
+    pub fn stats(&self) -> BatcherStats {
+        BatcherStats {
+            requests: self.counters.requests.load(Ordering::Relaxed),
+            batches: self.counters.batches.load(Ordering::Relaxed),
+            samples: self.counters.samples.load(Ordering::Relaxed),
+            probabilities: self.counters.probabilities.load(Ordering::Relaxed),
+            top_ks: self.counters.top_ks.load(Ordering::Relaxed),
+        }
     }
 
-    /// Requests served per kind: `(samples, probabilities, top_ks)`.
-    pub fn kind_counts(&self) -> (u64, u64, u64) {
-        (
-            self.stats.samples.load(Ordering::Relaxed),
-            self.stats.probabilities.load(Ordering::Relaxed),
-            self.stats.top_ks.load(Ordering::Relaxed),
-        )
+    /// The serving stack's shared telemetry registry: the batcher
+    /// thread records queue-wait / coalesce / gemm / tree-walk stages
+    /// into it; transport workers clone it to add decode/encode stages
+    /// and their own named counters.
+    pub fn telemetry(&self) -> &LiveRegistry {
+        &self.telemetry
+    }
+
+    /// The serving-stack portion of the STATS wire answer: batcher
+    /// counters, snapshot-server state, and the full telemetry
+    /// registry snapshot. The transport layer merges its own section
+    /// into this object before encoding.
+    pub fn stats_json(&self) -> Json {
+        let s = self.stats();
+        Json::obj(vec![
+            (
+                "batcher",
+                Json::obj(vec![
+                    ("requests", Json::from(s.requests as usize)),
+                    ("batches", Json::from(s.batches as usize)),
+                    ("samples", Json::from(s.samples as usize)),
+                    ("probabilities", Json::from(s.probabilities as usize)),
+                    ("top_ks", Json::from(s.top_ks as usize)),
+                ]),
+            ),
+            (
+                "server",
+                Json::obj(vec![
+                    ("epoch", Json::from(self.server.epoch() as usize)),
+                    ("publishes", Json::from(self.server.publishes() as usize)),
+                    ("swap_stalls", Json::from(self.server.swap_stalls() as usize)),
+                ]),
+            ),
+            ("telemetry", self.telemetry.snapshot_json()),
+        ])
     }
 }
 
@@ -252,10 +335,16 @@ fn batcher_loop(
     server: &SamplerServer,
     queue: &CoalesceQueue<Pending>,
     opts: BatcherOptions,
-    stats: &BatcherStats,
+    counters: &BatcherCounters,
+    telemetry: &LiveRegistry,
 ) {
-    while let Some(drained) = queue.drain_batch(opts.max_batch, opts.max_wait) {
+    while let Some(mut drained) = queue.drain_batch(opts.max_batch, opts.max_wait) {
         debug_assert!(!drained.is_empty());
+        let drained_at = Instant::now();
+        for r in &mut drained {
+            r.queued_ns = drained_at.duration_since(r.enqueued_at).as_nanos() as u64;
+            telemetry.record_stage_ns(Stage::QueueWait, r.queued_ns);
+        }
         // One snapshot pin serves the whole coalesced drain — every reply
         // in it reports the same epoch.
         let snap = server.snapshot();
@@ -283,6 +372,12 @@ fn batcher_loop(
         // catch_unwind, so a panicking group (a dim the feature map
         // rejects) fails exactly its own callers while the batcher keeps
         // serving everyone else.
+        //
+        // The coalesce stage clock covers everything between serves:
+        // validation, dim-grouping, and the query-matrix build. Each
+        // request is charged its *share* of its group's coalesce time,
+        // so per-stage counts reconcile with request totals.
+        let mut stage_clock = Instant::now();
         while !reqs.is_empty() {
             let d = reqs[0].h.len();
             let group: Vec<Pending> = {
@@ -298,34 +393,65 @@ fn batcher_loop(
                 reqs = rest;
                 g
             };
-            stats.batches.fetch_add(1, Ordering::Relaxed);
+            counters.batches.fetch_add(1, Ordering::Relaxed);
             let queries: Vec<ServeQuery> =
                 group.iter().map(|r| r.query).collect();
+            // The matrix build cannot panic (row lengths match `d` by
+            // construction), so it sits outside catch_unwind, inside
+            // the coalesce stage.
+            let mut h = Matrix::zeros(group.len(), d);
+            for (i, r) in group.iter().enumerate() {
+                h.row_mut(i).copy_from_slice(&r.h);
+            }
+            let coalesce_ns = stage_clock.elapsed().as_nanos() as u64;
+            let mut trace = ServeTrace::default();
             let served = std::panic::catch_unwind(
                 std::panic::AssertUnwindSafe(|| {
-                    let mut h = Matrix::zeros(group.len(), d);
-                    for (i, r) in group.iter().enumerate() {
-                        h.row_mut(i).copy_from_slice(&r.h);
-                    }
-                    snap.sampler().serve_queries(&h, &queries)
+                    snap.sampler().serve_queries_traced(&h, &queries, &mut trace)
                 }),
             );
+            stage_clock = Instant::now();
+            let bsz = group.len() as u64;
+            let coalesce_share = coalesce_ns / bsz;
+            let gemm_share = trace.gemm_ns / bsz;
+            let walk_share = trace.walk_ns / bsz;
             match served {
                 Ok(answers) => {
-                    stats
+                    counters
                         .requests
                         .fetch_add(group.len() as u64, Ordering::Relaxed);
                     for q in &queries {
                         match q {
-                            ServeQuery::Sample { .. } => &stats.samples,
+                            ServeQuery::Sample { .. } => &counters.samples,
                             ServeQuery::Probability { .. } => {
-                                &stats.probabilities
+                                &counters.probabilities
                             }
-                            ServeQuery::TopK { .. } => &stats.top_ks,
+                            ServeQuery::TopK { .. } => &counters.top_ks,
                         }
                         .fetch_add(1, Ordering::Relaxed);
                     }
+                    let batch = answers.len();
                     for (req, answer) in group.into_iter().zip(answers) {
+                        telemetry.record_stage_ns(Stage::Coalesce, coalesce_share);
+                        telemetry.record_stage_ns(Stage::GemmWave, gemm_share);
+                        telemetry.record_stage_ns(Stage::TreeWalk, walk_share);
+                        let kind = match req.query {
+                            ServeQuery::Sample { .. } => "sample",
+                            ServeQuery::Probability { .. } => "probability",
+                            ServeQuery::TopK { .. } => "top_k",
+                        };
+                        let mut stage_ns = [0u64; STAGE_COUNT];
+                        stage_ns[Stage::QueueWait as usize] = req.queued_ns;
+                        stage_ns[Stage::Coalesce as usize] = coalesce_share;
+                        stage_ns[Stage::GemmWave as usize] = gemm_share;
+                        stage_ns[Stage::TreeWalk as usize] = walk_share;
+                        telemetry.offer_slow(SlowRequest {
+                            total_ns: req.enqueued_at.elapsed().as_nanos() as u64,
+                            kind,
+                            batch,
+                            epoch: snap.epoch(),
+                            stage_ns,
+                        });
                         // A client that gave up is not an error; the
                         // callback decides what a dropped receiver means.
                         (req.reply)(Ok(answer_to_reply(answer, snap.epoch())));
@@ -425,12 +551,37 @@ mod tests {
         for th in handles {
             th.join().unwrap();
         }
-        let (samples, probs, top_ks) = batcher.kind_counts();
-        assert_eq!(samples + probs + top_ks, 60);
-        assert!(samples > 0 && probs > 0 && top_ks > 0);
-        let (reqs, batches) = batcher.stats();
-        assert_eq!(reqs, 60);
-        assert!(batches >= 1);
+        let s = batcher.stats();
+        assert_eq!(s.samples + s.probabilities + s.top_ks, 60);
+        assert!(s.samples > 0 && s.probabilities > 0 && s.top_ks > 0);
+        assert_eq!(s.requests, 60);
+        assert!(s.batches >= 1);
+        // Stage telemetry reconciles with the counters: every answered
+        // request records exactly one queue-wait / coalesce / gemm /
+        // tree-walk share.
+        let t = batcher.telemetry();
+        for stage in [
+            Stage::QueueWait,
+            Stage::Coalesce,
+            Stage::GemmWave,
+            Stage::TreeWalk,
+        ] {
+            assert_eq!(
+                t.stage_snapshot(stage).count(),
+                60,
+                "stage {} count must equal requests",
+                stage.name()
+            );
+        }
+        assert!(!t.slow_requests().is_empty());
+        let j = batcher.stats_json();
+        assert_eq!(j.at(&["batcher", "requests"]).unwrap().as_i64(), Some(60));
+        assert_eq!(
+            j.at(&["telemetry", "stages", "gemm_wave", "count"])
+                .unwrap()
+                .as_i64(),
+            Some(60)
+        );
     }
 
     #[test]
@@ -459,10 +610,15 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        let (reqs, batches) = batcher.stats();
-        assert_eq!(reqs, (threads * per_thread) as u64);
-        assert!(batches <= reqs, "batches {batches} > requests {reqs}");
-        assert!(batches >= 1);
+        let s = batcher.stats();
+        assert_eq!(s.requests, (threads * per_thread) as u64);
+        assert!(
+            s.batches <= s.requests,
+            "batches {} > requests {}",
+            s.batches,
+            s.requests
+        );
+        assert!(s.batches >= 1);
     }
 
     #[test]

@@ -36,9 +36,10 @@
 use super::{BatcherOptions, MicroBatcher, SamplerServer, SamplerWriter};
 use crate::json::Json;
 use crate::linalg::{simd, unit_vector, Matrix, QuantizeKind};
+use crate::metrics::live::{LiveRegistry, Stage};
 use crate::rng::Rng;
 use crate::sampler::Sampler;
-use crate::transport::{wire, TransportClient, TransportServer, VocabAdmin};
+use crate::transport::{wire, ClientFrameStats, TransportClient, TransportServer, VocabAdmin};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -288,6 +289,14 @@ pub struct LoadSpec {
     /// (`sampler.quantize`); recorded verbatim in the BENCH JSON so
     /// f16/i8 cells are distinguishable from f32 runs.
     pub quantize: QuantizeKind,
+    /// Keep the transport listening this long after the readers finish
+    /// (`serve-bench --hold`). Zero tears down immediately. A non-zero
+    /// hold is how CI scrapes a live `STATS` frame: the closed loop
+    /// completes, the server stays up with its telemetry intact, and an
+    /// external `rfsoftmax stats` client reconciles stage counts against
+    /// the request total. Stats in the BENCH record are read *before*
+    /// the hold, so scrapes never pollute the frame counters.
+    pub hold: Duration,
 }
 
 impl Default for LoadSpec {
@@ -308,6 +317,7 @@ impl Default for LoadSpec {
             wave: 1,
             listen: "127.0.0.1:0".into(),
             quantize: QuantizeKind::None,
+            hold: Duration::ZERO,
         }
     }
 }
@@ -388,6 +398,20 @@ pub struct LoadReport {
     /// (`avx2` | `neon` | `scalar`) — lets BENCH consumers compare runs
     /// across machines and the forced-scalar CI lane honestly.
     pub simd: &'static str,
+    /// Per-stage latency breakdown from the live telemetry registry:
+    /// `{stage: {count, mean_us, p50_us, p99_us, max_us}}` for decode /
+    /// queue_wait / coalesce / gemm_wave / tree_walk / encode_reply.
+    /// Stage counts equal served-request counts (batch-shared stages
+    /// record each request's share), so BENCH consumers can reconcile
+    /// the breakdown against `requests`. Inproc runs have zero decode /
+    /// encode_reply counts — those stages live in the transport layer.
+    pub stages: Json,
+    /// Attributed telemetry cost as a percent of the mean request cost:
+    /// measured per-record overhead (enabled minus disabled registry,
+    /// tight loop on a scratch registry) × records per request ÷ mean
+    /// per-request wall. Machine-checked by `bench-check
+    /// --require-telemetry-overhead` (ISSUE 7 budget: ≤ 2%).
+    pub telemetry_overhead_pct: f64,
 }
 
 impl LoadReport {
@@ -407,6 +431,7 @@ impl LoadReport {
             self.epochs,
             self.swap_stalls,
         );
+        line.push_str(&format!(" tel_ovh={:.3}%", self.telemetry_overhead_pct));
         if self.wave > 1 {
             line.push_str(&format!(
                 " wave={} hdr/req={:.3} hdr/resp={:.3}",
@@ -480,6 +505,8 @@ impl LoadReport {
             ("live_final", Json::from(self.live_final as usize)),
             ("quantize", Json::from(self.quantize)),
             ("simd", Json::from(self.simd)),
+            ("stages", self.stages.clone()),
+            ("telemetry_overhead_pct", Json::from(self.telemetry_overhead_pct)),
         ])
     }
 }
@@ -533,9 +560,9 @@ impl Issuer<'_> {
 
     /// Client frame counters, for the response-direction header
     /// overhead (zeros for the in-process issuer).
-    fn frame_stats(&self) -> (u64, u64) {
+    fn frame_stats(&self) -> ClientFrameStats {
         match self {
-            Issuer::Inproc(_) => (0, 0),
+            Issuer::Inproc(_) => ClientFrameStats::default(),
             Issuer::Wire(c) => c.frame_stats(),
         }
     }
@@ -699,6 +726,40 @@ fn measure_wave_overhead(spec: &LoadSpec) -> (f64, f64) {
     let dec = t0.elapsed().as_secs_f64() / reps as f64 * 1e6;
     std::hint::black_box(sink);
     (enc, dec)
+}
+
+/// How many telemetry points one served request records end to end on
+/// the wire path: six stage histogram records (decode, queue_wait,
+/// coalesce, gemm_wave, tree_walk, encode_reply), one slow-log offer,
+/// and roughly one sharded-counter bump of per-request accounting.
+const TELEMETRY_RECORDS_PER_REQUEST: f64 = 8.0;
+
+/// Attributed telemetry overhead as a percent of the mean per-request
+/// cost. Measured directly rather than inferred from qps deltas (which
+/// drown in scheduler noise at smoke sizes): a tight loop prices one
+/// histogram record on a *scratch* registry — enabled minus disabled,
+/// so the price is the atomics, not the call — and the per-request
+/// telemetry bill is that price × [`TELEMETRY_RECORDS_PER_REQUEST`].
+/// The scratch registry keeps the measurement loop's fake records out
+/// of the run's real stage histograms (a live `STATS` scrape must
+/// still reconcile counts against the request total).
+fn measure_telemetry_overhead(mean_request_ns: f64) -> f64 {
+    if mean_request_ns <= 0.0 {
+        return 0.0;
+    }
+    let scratch = LiveRegistry::new();
+    let reps: u64 = 200_000;
+    let mut per_record = [0.0f64; 2];
+    for (slot, enabled) in [(0usize, true), (1usize, false)] {
+        scratch.set_enabled(enabled);
+        let t0 = Instant::now();
+        for i in 0..reps {
+            scratch.record_stage_ns(Stage::GemmWave, (i & 1023) + 1);
+        }
+        per_record[slot] = t0.elapsed().as_nanos() as f64 / reps as f64;
+    }
+    let per_request = (per_record[0] - per_record[1]).max(0.0) * TELEMETRY_RECORDS_PER_REQUEST;
+    per_request / mean_request_ns * 100.0
 }
 
 /// Run one closed-loop load test against a fork of `sampler`. The
@@ -938,7 +999,7 @@ pub fn run_closed_loop(
     // requests and the latency samples are per *wave* — the unit a
     // wave-batched client actually waits on.
     let t0 = Instant::now();
-    type ReaderOut = (Vec<u64>, [u64; 3], (u64, u64));
+    type ReaderOut = (Vec<u64>, [u64; 3], ClientFrameStats);
     let reader_out: Vec<ReaderOut> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..spec.readers)
             .map(|r| {
@@ -1063,22 +1124,31 @@ pub fn run_closed_loop(
         None => None,
     };
     let live_final = server.snapshot().sampler().live_classes() as u64;
-    // Server-side frame counters must be read before the transport is
-    // dropped (its shutdown joins every connection).
+    // Server-side frame counters and the per-stage telemetry breakdown
+    // must be read before the transport is dropped (its shutdown joins
+    // every connection) — and before any `--hold` scrapes can add
+    // admin frames or encode_reply records of their own.
     let wire_stats = transport.as_ref().map(|t| t.stats());
+    let stages = batcher.telemetry().stages_json();
+    // Keep the server scrapeable after the load completes: CI's
+    // live-scrape step reconciles an external `rfsoftmax stats` read
+    // against this run's request total during the hold window.
+    if !spec.hold.is_zero() && transport.is_some() {
+        std::thread::sleep(spec.hold);
+    }
     drop(transport); // joins connection threads, removes the socket file
 
     let mut all: Vec<u64> = Vec::new();
     let mut kind_counts = [0u64; 3];
     let mut resp_frames = 0u64;
     let mut resp_items = 0u64;
-    for (lat, counts, (frames, items)) in reader_out {
+    for (lat, counts, fs) in reader_out {
         all.extend(lat);
         for (acc, c) in kind_counts.iter_mut().zip(counts) {
             *acc += c;
         }
-        resp_frames += frames;
-        resp_items += items;
+        resp_frames += fs.resp_frames;
+        resp_items += fs.resp_items;
     }
     all.sort_unstable();
     let pct = |q: f64| -> f64 {
@@ -1095,8 +1165,13 @@ pub fn run_closed_loop(
     } else {
         all.iter().sum::<u64>() as f64 / all.len() as f64 / 1000.0
     };
-    let (req_stat, batches) = batcher.stats();
-    debug_assert_eq!(req_stat, requests);
+    let bstats = batcher.stats();
+    debug_assert_eq!(bstats.requests, requests);
+    let batches = bstats.batches;
+    // Latency samples are per wave when wave > 1; the overhead budget
+    // is per request, so normalize the denominator first.
+    let mean_request_ns = mean_us * 1000.0 / spec.wave.max(1) as f64;
+    let telemetry_overhead_pct = measure_telemetry_overhead(mean_request_ns);
     let (frame_encode_us, frame_encode_fresh_us, frame_decode_us) =
         if spec.transport.is_wire() {
             measure_codec_overhead(spec)
@@ -1197,6 +1272,8 @@ pub fn run_closed_loop(
         live_final,
         quantize: spec.quantize.name(),
         simd: simd::tier_name(),
+        stages,
+        telemetry_overhead_pct,
     })
 }
 
@@ -1238,6 +1315,7 @@ mod tests {
                 wave: 1,
                 listen: "127.0.0.1:0".into(),
                 quantize: QuantizeKind::None,
+                hold: Duration::ZERO,
             },
         )
         .unwrap();
@@ -1266,6 +1344,25 @@ mod tests {
             matches!(simd.as_deref(), Some("avx2" | "neon" | "scalar")),
             "unexpected simd tier tag {simd:?}"
         );
+        // Stage counts reconcile with the request total: every served
+        // request passes through the middle stages exactly once.
+        for stage in ["queue_wait", "coalesce", "gemm_wave", "tree_walk"] {
+            assert_eq!(
+                j.at(&["stages", stage, "count"]).and_then(Json::as_i64),
+                Some(120),
+                "stage {stage} count does not reconcile"
+            );
+        }
+        // Inproc has no wire, so the transport stages never record and
+        // stay absent from the breakdown entirely.
+        assert!(j.at(&["stages", "decode"]).is_none());
+        assert!(j.at(&["stages", "encode_reply"]).is_none());
+        assert!(report.telemetry_overhead_pct >= 0.0);
+        assert!(
+            report.telemetry_overhead_pct < 50.0,
+            "attributed telemetry overhead implausibly high: {}%",
+            report.telemetry_overhead_pct
+        );
     }
 
     #[test]
@@ -1293,6 +1390,7 @@ mod tests {
                 wave: 1,
                 listen: "127.0.0.1:0".into(),
                 quantize: QuantizeKind::None,
+                hold: Duration::ZERO,
             },
         )
         .unwrap();
@@ -1306,6 +1404,16 @@ mod tests {
         assert_eq!(report.mix, "2:1:1");
         assert!(report.frame_encode_us > 0.0, "codec overhead not measured");
         assert!(report.frame_decode_us > 0.0);
+        // On the wire path the transport stages fill in too: one decode
+        // per serve request, one encode per reply.
+        let j = report.to_json();
+        for stage in ["decode", "gemm_wave", "encode_reply"] {
+            assert_eq!(
+                j.at(&["stages", stage, "count"]).and_then(Json::as_i64),
+                Some(80),
+                "stage {stage} count does not reconcile over uds"
+            );
+        }
     }
 
     #[test]
@@ -1349,6 +1457,7 @@ mod tests {
                 wave: 1,
                 listen: "127.0.0.1:0".into(),
                 quantize: QuantizeKind::None,
+                hold: Duration::ZERO,
             },
         )
         .unwrap();
@@ -1391,6 +1500,7 @@ mod tests {
                     wave,
                     listen: "127.0.0.1:0".into(),
                     quantize: QuantizeKind::None,
+                    hold: Duration::ZERO,
                 },
             )
             .unwrap();
@@ -1465,6 +1575,7 @@ mod tests {
                     wave: 1,
                     listen: "127.0.0.1:0".into(),
                     quantize: QuantizeKind::None,
+                    hold: Duration::ZERO,
                 },
             )
             .unwrap();

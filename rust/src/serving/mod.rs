@@ -44,7 +44,8 @@ mod server;
 mod service;
 
 pub use batcher::{
-    BatcherOptions, MicroBatcher, QueryReply, ServeReply, SubmitReply,
+    BatcherOptions, BatcherStats, MicroBatcher, QueryReply, ServeReply,
+    SubmitReply,
 };
 pub use loadgen::{
     run_closed_loop, ChurnSpec, LoadReport, LoadSpec, RequestMix,

@@ -15,6 +15,18 @@ use std::io::{BufReader, BufWriter, Write};
 use std::net::ToSocketAddrs;
 use std::path::Path;
 
+/// Client-side reply-direction frame accounting
+/// ([`TransportClient::frame_stats`]): the per-request header overhead
+/// is `resp_frames / resp_items` — 1.0 without waves, ≈ `1/wave` with
+/// packed replies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClientFrameStats {
+    /// Frames carrying responses parsed.
+    pub resp_frames: u64,
+    /// Responses received (wave sub-responses included).
+    pub resp_items: u64,
+}
+
 /// One connection to a [`super::TransportServer`].
 ///
 /// * **Sync mode** ([`TransportClient::sample`] /
@@ -84,10 +96,13 @@ impl TransportClient {
         })
     }
 
-    /// `(response frames parsed, responses received)` so far — the
+    /// Reply-direction frame accounting as a named snapshot — the
     /// header-amortization observable on the reply direction.
-    pub fn frame_stats(&self) -> (u64, u64) {
-        (self.resp_frames, self.resp_items)
+    pub fn frame_stats(&self) -> ClientFrameStats {
+        ClientFrameStats {
+            resp_frames: self.resp_frames,
+            resp_items: self.resp_items,
+        }
     }
 
     fn send(&mut self, id: u64, req: &Request) -> Result<(), ProtocolError> {
@@ -200,6 +215,18 @@ impl TransportClient {
         };
         match self.call(&req)? {
             Response::AddClasses { epoch, ids } => Ok((ids, epoch)),
+            _ => Err(ProtocolError::Malformed("response kind mismatch")),
+        }
+    }
+
+    /// Scrape the server's live telemetry: one `STATS` admin frame,
+    /// answered on every server (no [`super::VocabAdmin`] hook needed).
+    /// Returns the raw JSON snapshot text — parse it with
+    /// [`crate::json::parse`]. Servers older than wire v3 refuse the
+    /// frame with an unknown-kind protocol error.
+    pub fn stats(&mut self) -> Result<String, ProtocolError> {
+        match self.call(&Request::Stats)? {
+            Response::Stats { json } => Ok(json),
             _ => Err(ProtocolError::Malformed("response kind mismatch")),
         }
     }

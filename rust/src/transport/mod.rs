@@ -16,8 +16,10 @@
 //!   into one frame — one header parse and one length check per wave
 //!   instead of per request — with sub-request ids preserved and
 //!   per-sub-request errors isolated; v2 peers interoperate untouched.
-//!   Framing violations decode to a typed [`ProtocolError`] and close
-//!   only the offending connection.
+//!   The admin family carries class-universe mutations and the
+//!   read-only `STATS` telemetry scrape (wire v3; v2 peers get the
+//!   unknown-kind refusal). Framing violations decode to a typed
+//!   [`ProtocolError`] and close only the offending connection.
 //! * [`net`](self) (internal) — a socket-agnostic stream substrate: the
 //!   server and client are parameterized over unix-domain and TCP
 //!   sockets ([`Endpoint`]), with `TCP_NODELAY` on every TCP connection
@@ -50,7 +52,7 @@ mod client;
 mod net;
 mod server;
 
-pub use client::TransportClient;
+pub use client::{ClientFrameStats, TransportClient};
 pub use net::Endpoint;
 pub use server::{TransportServer, TransportStats, VocabAdmin, MAX_IN_FLIGHT};
 pub use wire::{ProtocolError, Request, Response};

@@ -41,16 +41,29 @@
 //! **Admin frames**: `ADD_CLASSES`/`RETIRE_CLASSES` route to an optional
 //! [`VocabAdmin`] hook (see [`TransportServer::bind_with_admin`]) that
 //! applies the mutation through the sampler writer as one epoch-versioned
-//! snapshot swap; without a hook they answer [`wire::ERR_SERVE`].
+//! snapshot swap; without a hook they answer [`wire::ERR_SERVE`]. The
+//! read-only `STATS` frame is answered inline on every server (no hook
+//! needed): the batcher's serving snapshot
+//! ([`MicroBatcher::stats_json`]) merged with this transport's own
+//! counter section, encoded with the in-crate JSON emitter.
+//!
+//! **Telemetry**: connection readers record the per-request `decode`
+//! stage (CPU-only frame parse, wave cost shared across sub-requests)
+//! and writers the `encode_reply` stage into the batcher's
+//! [`LiveRegistry`](crate::metrics::live::LiveRegistry), completing the
+//! per-stage pipeline trace the batcher starts.
 
 use super::net::{Endpoint, Listener, Stream};
 use super::wire::{self, ProtocolError, RequestFrame, Response};
+use crate::json::Json;
+use crate::metrics::live::Stage;
 use crate::serving::{MicroBatcher, QueryReply, SubmitReply};
 use std::io::{BufReader, Write};
 use std::os::unix::net::UnixListener;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
 /// Per-connection cap on requests submitted to the batcher and awaiting
 /// replies; beyond it requests are shed with [`wire::ERR_OVERLOAD`].
@@ -153,6 +166,43 @@ impl Shared {
         for (_, s) in self.streams.lock().unwrap().iter() {
             let _ = s.shutdown(std::net::Shutdown::Both);
         }
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats {
+            connections: self.connections.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            request_frames: self.request_frames.load(Ordering::Relaxed),
+            wave_frames: self.wave_frames.load(Ordering::Relaxed),
+            response_frames: self.response_frames.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            admin_requests: self.admin_requests.load(Ordering::Relaxed),
+            overloads: self.overloads.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The full STATS wire answer: the batcher's serving snapshot
+    /// (batcher counters, snapshot-server state, telemetry registry)
+    /// plus this transport's own counter section.
+    fn stats_json(&self) -> Json {
+        let mut j = self.batcher.stats_json();
+        let s = self.stats();
+        if let Json::Obj(map) = &mut j {
+            map.insert(
+                "transport".to_string(),
+                Json::obj(vec![
+                    ("connections", Json::from(s.connections as usize)),
+                    ("requests", Json::from(s.requests as usize)),
+                    ("request_frames", Json::from(s.request_frames as usize)),
+                    ("wave_frames", Json::from(s.wave_frames as usize)),
+                    ("response_frames", Json::from(s.response_frames as usize)),
+                    ("protocol_errors", Json::from(s.protocol_errors as usize)),
+                    ("admin_requests", Json::from(s.admin_requests as usize)),
+                    ("overloads", Json::from(s.overloads as usize)),
+                ]),
+            );
+        }
+        j
     }
 }
 
@@ -283,16 +333,13 @@ impl TransportServer {
     }
 
     pub fn stats(&self) -> TransportStats {
-        TransportStats {
-            connections: self.shared.connections.load(Ordering::Relaxed),
-            requests: self.shared.requests.load(Ordering::Relaxed),
-            request_frames: self.shared.request_frames.load(Ordering::Relaxed),
-            wave_frames: self.shared.wave_frames.load(Ordering::Relaxed),
-            response_frames: self.shared.response_frames.load(Ordering::Relaxed),
-            protocol_errors: self.shared.protocol_errors.load(Ordering::Relaxed),
-            admin_requests: self.shared.admin_requests.load(Ordering::Relaxed),
-            overloads: self.shared.overloads.load(Ordering::Relaxed),
-        }
+        self.shared.stats()
+    }
+
+    /// The JSON snapshot a `STATS` wire scrape of this server returns
+    /// (also reachable in-process, e.g. for BENCH records).
+    pub fn stats_json(&self) -> Json {
+        self.shared.stats_json()
     }
 }
 
@@ -442,6 +489,7 @@ fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: Stream) {
             })
     };
     let mut reader = BufReader::new(stream);
+    let telemetry = shared.batcher.telemetry().clone();
     'conn: loop {
         // Hard flow control: past the outstanding-reply ceiling, stop
         // reading the socket (up to THROTTLE_GRACE) until the writer
@@ -458,9 +506,9 @@ fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: Stream) {
             std::thread::sleep(THROTTLE_POLL);
             throttled += THROTTLE_POLL;
         }
-        match wire::read_request_frame(&mut reader) {
+        match wire::read_request_frame_traced(&mut reader) {
             Ok(None) => break, // clean EOF
-            Ok(Some(RequestFrame::Single(id, request))) => {
+            Ok(Some((RequestFrame::Single(id, request), decode_ns))) => {
                 shared.request_frames.fetch_add(1, Ordering::Relaxed);
                 if request.is_admin() {
                     if !answer_admin(shared, &tx, &outstanding, id, request) {
@@ -468,6 +516,7 @@ fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: Stream) {
                     }
                     continue;
                 }
+                telemetry.record_stage_ns(Stage::Decode, decode_ns);
                 shared.requests.fetch_add(1, Ordering::Relaxed);
                 if in_flight.load(Ordering::Acquire) >= MAX_IN_FLIGHT {
                     // Shed: typed overload error, request never reaches
@@ -504,13 +553,22 @@ fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: Stream) {
                     break;
                 }
             }
-            Ok(Some(RequestFrame::Wave(subs))) => {
+            Ok(Some((RequestFrame::Wave(subs), decode_ns))) => {
                 shared.request_frames.fetch_add(1, Ordering::Relaxed);
                 shared.wave_frames.fetch_add(1, Ordering::Relaxed);
                 wants_wave.store(true, Ordering::Release);
                 let serve_subs =
                     subs.iter().filter(|(_, r)| !r.is_admin()).count() as u64;
                 shared.requests.fetch_add(serve_subs, Ordering::Relaxed);
+                // The wave's one header+payload parse is shared: charge
+                // each serve sub-request its share, keeping the decode
+                // stage count equal to the request count.
+                if serve_subs > 0 {
+                    let share = decode_ns / serve_subs;
+                    for _ in 0..serve_subs {
+                        telemetry.record_stage_ns(Stage::Decode, share);
+                    }
+                }
                 // Wave-gated backpressure: the in-flight cap is checked
                 // ONCE for the whole wave — it is admitted in full
                 // (overshooting the soft cap by at most MAX_WAVE) or
@@ -605,7 +663,8 @@ fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: Stream) {
 
 /// Answer one admin frame inline (mutations are writer-serialized, not
 /// batched); returns `false` when the reply channel is gone and the
-/// connection should close.
+/// connection should close. The read-only `STATS` frame is answered on
+/// every server — only mutations need the [`VocabAdmin`] hook.
 fn answer_admin(
     shared: &Shared,
     tx: &mpsc::Sender<(u64, Response)>,
@@ -615,12 +674,16 @@ fn answer_admin(
 ) -> bool {
     shared.admin_requests.fetch_add(1, Ordering::Relaxed);
     outstanding.fetch_add(1, Ordering::AcqRel);
-    let resp = match &shared.admin {
-        None => Response::Error {
-            code: wire::ERR_SERVE,
-            message: "admin frames not enabled on this server".into(),
-        },
-        Some(admin) => apply_admin(admin.as_ref(), request),
+    let resp = if matches!(request, wire::Request::Stats) {
+        Response::Stats { json: shared.stats_json().to_string() }
+    } else {
+        match &shared.admin {
+            None => Response::Error {
+                code: wire::ERR_SERVE,
+                message: "admin frames not enabled on this server".into(),
+            },
+            Some(admin) => apply_admin(admin.as_ref(), request),
+        }
     };
     tx.send((id, resp)).is_ok()
 }
@@ -672,11 +735,16 @@ fn writer_loop(
     // lifetime (that would quietly undo the backpressure memory bound).
     const BUF_KEEP: usize = 256 * 1024;
     let mut buf: Vec<u8> = Vec::with_capacity(16 * 1024);
+    let telemetry = shared.batcher.telemetry().clone();
     loop {
         let first = match rx.recv() {
             Ok(x) => x,
             Err(_) => break,
         };
+        // Encode-stage clock: starts after the blocking recv (socket
+        // and channel waits excluded — CPU cost only) and stops before
+        // the socket write.
+        let encode_t0 = Instant::now();
         buf.clear();
         // Drain everything currently queued, then write once — batches
         // response frames the same way requests coalesce.
@@ -730,6 +798,13 @@ fn writer_loop(
             shared
                 .response_frames
                 .fetch_add(responses as u64, Ordering::Relaxed);
+        }
+        // Each response in the drain is charged its share of the one
+        // encode pass, so the encode_reply stage count matches the
+        // response count.
+        let encode_share = encode_t0.elapsed().as_nanos() as u64 / responses as u64;
+        for _ in 0..responses {
+            telemetry.record_stage_ns(Stage::EncodeReply, encode_share);
         }
         let ok = stream.write_all(&buf).is_ok();
         outstanding.fetch_sub(responses, Ordering::AcqRel);

@@ -7,9 +7,10 @@
 //!
 //! ```text
 //! bytes 0..2   magic  "RF"
-//! byte  2      protocol version (2 for single-request frames, 3 for waves)
-//! byte  3      frame kind (request 0x01..0x03, admin 0x10..0x11, wave 0x20,
-//!              response 0x81..0x91, response wave 0xA0, error 0xFF)
+//! byte  2      protocol version (2 for single-request frames, 3 for waves
+//!              and STATS)
+//! byte  3      frame kind (request 0x01..0x03, admin 0x10..0x12, wave 0x20,
+//!              response 0x81..0x92, response wave 0xA0, error 0xFF)
 //! bytes 4..12  request id (u64 LE; echoed on the response, 0 = connection-level;
 //!              unused on wave frames — sub-request ids are authoritative)
 //! bytes 12..16 payload length (u32 LE, ≤ MAX_PAYLOAD)
@@ -41,6 +42,8 @@
 //! * `TopK` request: `u32 dim | f32×dim h | u32 k`
 //! * `AddClasses` admin request: `u32 rows | u32 dim | f32×rows·dim embeddings`
 //! * `RetireClasses` admin request: `u32 count | u32×count ids`
+//! * `Stats` admin request (v3): empty payload
+//! * `Stats` response (v3): `u32 len | utf8×len json snapshot`
 //! * `Sample` response: `u64 epoch | u32 count | u32×count ids | f64×count probs`
 //! * `Probability` response: `u64 epoch | f64 q`
 //! * `TopK` response: `u64 epoch | u32 count | (u32 id, f64 q)×count`
@@ -136,14 +139,23 @@ const KIND_REQ_PROBABILITY: u8 = 0x02;
 const KIND_REQ_TOP_K: u8 = 0x03;
 const KIND_REQ_ADD_CLASSES: u8 = 0x10;
 const KIND_REQ_RETIRE_CLASSES: u8 = 0x11;
+const KIND_REQ_STATS: u8 = 0x12;
 const KIND_REQ_WAVE: u8 = 0x20;
 const KIND_RESP_SAMPLE: u8 = 0x81;
 const KIND_RESP_PROBABILITY: u8 = 0x82;
 const KIND_RESP_TOP_K: u8 = 0x83;
 const KIND_RESP_ADD_CLASSES: u8 = 0x90;
 const KIND_RESP_RETIRE_CLASSES: u8 = 0x91;
+const KIND_RESP_STATS: u8 = 0x92;
 const KIND_RESP_WAVE: u8 = 0xA0;
 const KIND_RESP_ERROR: u8 = 0xFF;
+
+/// Version the `STATS` admin frames require (added in wire v3 alongside
+/// waves): a `STATS` kind stamped v2 decodes to
+/// [`ProtocolError::UnknownKind`] — exactly the refusal a genuine v2
+/// peer, which predates the kind, would produce — so telemetry scrapes
+/// degrade identically against old and new builds.
+const STATS_FRAME_VERSION: u8 = 3;
 
 /// Bytes of the fixed per-sub-frame prefix inside a wave payload
 /// (`u64 id | u8 kind | u32 len`) — the floor used to validate a wave's
@@ -245,15 +257,21 @@ pub enum Request {
     AddClasses { dim: u32, embeddings: Vec<f32> },
     /// Admin: retire the given live classes.
     RetireClasses { ids: Vec<u32> },
+    /// Admin (wire v3): scrape the server's live telemetry snapshot.
+    /// Empty payload; answered inline with [`Response::Stats`], never
+    /// routed through the batcher.
+    Stats,
 }
 
 impl Request {
-    /// Whether this is an admin (universe-mutating) frame rather than a
-    /// serve query.
+    /// Whether this is an admin frame (universe mutation or telemetry
+    /// scrape) rather than a serve query.
     pub fn is_admin(&self) -> bool {
         matches!(
             self,
-            Request::AddClasses { .. } | Request::RetireClasses { .. }
+            Request::AddClasses { .. }
+                | Request::RetireClasses { .. }
+                | Request::Stats
         )
     }
 
@@ -270,7 +288,9 @@ impl Request {
                 (h, ServeQuery::Probability { class: class as usize })
             }
             Request::TopK { h, k } => (h, ServeQuery::TopK { k: k as usize }),
-            Request::AddClasses { .. } | Request::RetireClasses { .. } => {
+            Request::AddClasses { .. }
+            | Request::RetireClasses { .. }
+            | Request::Stats => {
                 panic!("into_query: admin frame is not a serve query")
             }
         }
@@ -289,6 +309,12 @@ pub enum Response {
     /// Admin ack: how many classes were retired, and the epoch at which
     /// the holes became visible.
     RetireClasses { epoch: u64, count: u32 },
+    /// Telemetry snapshot (wire v3): a JSON document produced by the
+    /// server's live metrics registry (`metrics::live`). Kept as a
+    /// string on the wire so the protocol layer stays oblivious to the
+    /// snapshot schema — consumers parse it with the in-crate `json`
+    /// module.
+    Stats { json: String },
     Error { code: u8, message: String },
 }
 
@@ -332,6 +358,19 @@ fn request_kind(req: &Request) -> u8 {
         Request::TopK { .. } => KIND_REQ_TOP_K,
         Request::AddClasses { .. } => KIND_REQ_ADD_CLASSES,
         Request::RetireClasses { .. } => KIND_REQ_RETIRE_CLASSES,
+        Request::Stats => KIND_REQ_STATS,
+    }
+}
+
+/// Wire version stamped on a single frame of the given kind: v2 for
+/// everything a v2 peer understands, v3 for the kinds introduced with
+/// wire v3 (`STATS`), so a v2 receiver refuses them on the version
+/// byte rather than mis-parsing an unknown kind.
+fn single_frame_version(kind: u8) -> u8 {
+    if kind == KIND_REQ_STATS || kind == KIND_RESP_STATS {
+        STATS_FRAME_VERSION
+    } else {
+        SINGLE_FRAME_VERSION
     }
 }
 
@@ -371,13 +410,15 @@ fn encode_request_payload(out: &mut Vec<u8>, req: &Request) {
                 out.extend_from_slice(&i.to_le_bytes());
             }
         }
+        Request::Stats => {}
     }
 }
 
 /// Encode one request frame into `out` (appended in place — reuse one
 /// buffer across frames for the zero-copy path).
 pub fn encode_request(out: &mut Vec<u8>, id: u64, req: &Request) {
-    let len_at = begin_frame(out, SINGLE_FRAME_VERSION, request_kind(req), id);
+    let kind = request_kind(req);
+    let len_at = begin_frame(out, single_frame_version(kind), kind, id);
     encode_request_payload(out, req);
     finish_frame(out, len_at);
 }
@@ -389,6 +430,7 @@ fn response_kind(resp: &Response) -> u8 {
         Response::TopK { .. } => KIND_RESP_TOP_K,
         Response::AddClasses { .. } => KIND_RESP_ADD_CLASSES,
         Response::RetireClasses { .. } => KIND_RESP_RETIRE_CLASSES,
+        Response::Stats { .. } => KIND_RESP_STATS,
         Response::Error { .. } => KIND_RESP_ERROR,
     }
 }
@@ -431,6 +473,12 @@ fn encode_response_payload(out: &mut Vec<u8>, resp: &Response) {
             out.extend_from_slice(&epoch.to_le_bytes());
             out.extend_from_slice(&count.to_le_bytes());
         }
+        Response::Stats { json } => {
+            let raw = json.as_bytes();
+            debug_assert!(raw.len() <= MAX_PAYLOAD - 4);
+            out.extend_from_slice(&(raw.len() as u32).to_le_bytes());
+            out.extend_from_slice(raw);
+        }
         Response::Error { code, message } => {
             let msg = message.as_bytes();
             let len = msg.len().min(u16::MAX as usize);
@@ -444,7 +492,8 @@ fn encode_response_payload(out: &mut Vec<u8>, resp: &Response) {
 /// Encode one response frame into `out` (appended in place — reuse one
 /// buffer across frames for the zero-copy path).
 pub fn encode_response(out: &mut Vec<u8>, id: u64, resp: &Response) {
-    let len_at = begin_frame(out, SINGLE_FRAME_VERSION, response_kind(resp), id);
+    let kind = response_kind(resp);
+    let len_at = begin_frame(out, single_frame_version(kind), kind, id);
     encode_response_payload(out, resp);
     finish_frame(out, len_at);
 }
@@ -765,6 +814,9 @@ fn decode_request_payload(
             }
             Request::RetireClasses { ids }
         }
+        // Empty payload; `c.finish()` below rejects any stray bytes, so
+        // a malformed (non-empty) STATS request cannot smuggle data.
+        KIND_REQ_STATS => Request::Stats,
         other => return Err(ProtocolError::UnknownKind(other)),
     };
     c.finish()?;
@@ -833,6 +885,21 @@ fn decode_response_payload(
             let count = c.u32()?;
             Response::RetireClasses { epoch, count }
         }
+        KIND_RESP_STATS => {
+            let len = c.u32()? as usize;
+            // Reject before allocating: the length prefix may not claim
+            // more bytes than the payload delivers.
+            if len > payload.len().saturating_sub(c.pos) {
+                return Err(ProtocolError::Malformed(
+                    "stats length exceeds payload",
+                ));
+            }
+            let raw = c.take(len)?;
+            let json = String::from_utf8(raw.to_vec()).map_err(|_| {
+                ProtocolError::Malformed("stats payload is not utf-8")
+            })?;
+            Response::Stats { json }
+        }
         KIND_RESP_ERROR => {
             let code = c.u8()?;
             let len = c.u16()? as usize;
@@ -896,15 +963,34 @@ pub enum ResponseFrame {
     Wave(Vec<(u64, Response)>),
 }
 
+/// Whether a frame kind only exists from wire v3 on. Stamped v2, such
+/// a kind decodes to [`ProtocolError::UnknownKind`] — the identical
+/// refusal a genuine v2 peer (which predates the kind) would produce.
+fn kind_requires_v3(kind: u8) -> bool {
+    kind == KIND_REQ_STATS || kind == KIND_RESP_STATS
+}
+
 /// Read one request-direction frame — single or wave — (server side).
 /// `Ok(None)` on clean EOF at a frame boundary.
 pub fn read_request_frame(
     r: &mut impl Read,
 ) -> Result<Option<RequestFrame>, ProtocolError> {
+    Ok(read_request_frame_traced(r)?.map(|(frame, _)| frame))
+}
+
+/// [`read_request_frame`] plus the frame's decode cost in nanoseconds:
+/// CPU spent parsing the payload only — the blocking socket reads
+/// (header + payload bytes) are excluded, so the serving `decode` stage
+/// histogram measures codec work, never peer think-time or network
+/// wait.
+pub fn read_request_frame_traced(
+    r: &mut impl Read,
+) -> Result<Option<(RequestFrame, u64)>, ProtocolError> {
     let Some(head) = read_header(r)? else {
         return Ok(None);
     };
     let payload = read_payload(r, head.len)?;
+    let t0 = std::time::Instant::now();
     if head.kind == KIND_REQ_WAVE {
         if head.version < WAVE_FRAME_VERSION {
             return Err(ProtocolError::Malformed(
@@ -912,10 +998,15 @@ pub fn read_request_frame(
             ));
         }
         let subs = decode_wave(&payload, decode_request_payload)?;
-        return Ok(Some(RequestFrame::Wave(subs)));
+        let decode_ns = t0.elapsed().as_nanos() as u64;
+        return Ok(Some((RequestFrame::Wave(subs), decode_ns)));
+    }
+    if head.version < STATS_FRAME_VERSION && kind_requires_v3(head.kind) {
+        return Err(ProtocolError::UnknownKind(head.kind));
     }
     let req = decode_request_payload(head.kind, &payload)?;
-    Ok(Some(RequestFrame::Single(head.id, req)))
+    let decode_ns = t0.elapsed().as_nanos() as u64;
+    Ok(Some((RequestFrame::Single(head.id, req), decode_ns)))
 }
 
 /// Read one single-request frame (legacy/single-frame contexts; waves
@@ -949,6 +1040,9 @@ pub fn read_response_frame(
         }
         let subs = decode_wave(&payload, decode_response_payload)?;
         return Ok(Some(ResponseFrame::Wave(subs)));
+    }
+    if head.version < STATS_FRAME_VERSION && kind_requires_v3(head.kind) {
+        return Err(ProtocolError::UnknownKind(head.kind));
     }
     let resp = decode_response_payload(head.kind, &payload)?;
     Ok(Some(ResponseFrame::Single(head.id, resp)))
@@ -1105,6 +1199,116 @@ mod tests {
             read_request(&mut &buf[..]).unwrap_err(),
             ProtocolError::Malformed(_)
         ));
+    }
+
+    // -----------------------------------------------------------------
+    // STATS admin frames (wire v3)
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn stats_frames_round_trip_and_carry_v3() {
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 9, &Request::Stats);
+        assert_eq!(buf[2], 3, "STATS frames must carry wire v3");
+        let (id, got) = read_request(&mut &buf[..]).unwrap().unwrap();
+        assert_eq!(id, 9);
+        assert_eq!(got, Request::Stats);
+        assert!(got.is_admin());
+
+        let resp = Response::Stats {
+            json: r#"{"stages":{"decode":{"count":3}}}"#.into(),
+        };
+        let mut buf = Vec::new();
+        encode_response(&mut buf, 9, &resp);
+        assert_eq!(buf[2], 3);
+        let (_, got) = read_response(&mut &buf[..]).unwrap().unwrap();
+        assert_eq!(got, resp);
+    }
+
+    #[test]
+    fn v2_stamped_stats_gets_the_unknown_kind_refusal() {
+        // A v2 peer predates the STATS kind, so it would refuse it as
+        // unknown; this build must answer a v2-stamped STATS frame with
+        // the exact same refusal rather than serving it.
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 1, &Request::Stats);
+        buf[2] = 2;
+        assert!(matches!(
+            read_request(&mut &buf[..]).unwrap_err(),
+            ProtocolError::UnknownKind(0x12)
+        ));
+        let mut buf = Vec::new();
+        encode_response(&mut buf, 1, &Response::Stats { json: "{}".into() });
+        buf[2] = 2;
+        assert!(matches!(
+            read_response(&mut &buf[..]).unwrap_err(),
+            ProtocolError::UnknownKind(0x92)
+        ));
+    }
+
+    #[test]
+    fn malformed_stats_payloads_are_rejected() {
+        // STATS requests are empty; any payload bytes are malformed.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 3, 0x12, 1);
+        buf.extend_from_slice(b"junk");
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_request(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // Response length prefix claiming more bytes than delivered —
+        // rejected before any allocation.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 3, 0x92, 1);
+        buf.extend_from_slice(&1_000_000u32.to_le_bytes());
+        buf.extend_from_slice(b"{}");
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_response(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // Length prefix smaller than the delivered body: trailing bytes.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 3, 0x92, 1);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(b"{}");
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_response(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // Invalid utf-8 in the snapshot body.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 3, 0x92, 1);
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&[0xFF, 0xFE]);
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_response(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn traced_request_reader_reports_decode_cost() {
+        let mut buf = Vec::new();
+        encode_request(
+            &mut buf,
+            4,
+            &Request::Sample { h: vec![0.5; 64], m: 8, seed: 3 },
+        );
+        let (frame, _decode_ns) = super::read_request_frame_traced(&mut &buf[..])
+            .unwrap()
+            .unwrap();
+        assert!(matches!(frame, RequestFrame::Single(4, Request::Sample { .. })));
+        // Clean EOF still maps to None.
+        assert!(super::read_request_frame_traced(&mut &buf[..0])
+            .unwrap()
+            .is_none());
     }
 
     #[test]

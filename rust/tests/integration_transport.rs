@@ -7,7 +7,10 @@
 //! boundary and across socket kinds), a chi-square of transported
 //! samples against the offline sampler, concurrent-client coalescing,
 //! wire v3 batched wave pipelining (header amortization + whole-wave
-//! overload shedding), and malformed-frame hardening.
+//! overload shedding), malformed-frame hardening, and the read-only
+//! `STATS` telemetry scrape (per-stage counts reconciling with request
+//! totals on both socket kinds; v2-stamped scrape refused exactly like
+//! any unknown kind).
 
 use rfsoftmax::featmap::RffMap;
 use rfsoftmax::linalg::{unit_vector, Matrix};
@@ -224,16 +227,20 @@ fn concurrent_pipelined_clients_coalesce_into_shared_batches() {
     for h in handles {
         h.join().unwrap();
     }
-    let (requests, batches) = batcher.stats();
-    assert_eq!(requests, (clients * waves * burst) as u64);
-    let mean_batch = requests as f64 / batches.max(1) as f64;
+    let stats = batcher.stats();
+    assert_eq!(stats.requests, (clients * waves * burst) as u64);
+    let mean_batch = stats.requests as f64 / stats.batches.max(1) as f64;
     assert!(
         mean_batch > 1.0,
-        "no coalescing under pipelined load: {requests} requests in \
-         {batches} batches (mean {mean_batch:.2})"
+        "no coalescing under pipelined load: {} requests in \
+         {} batches (mean {mean_batch:.2})",
+        stats.requests,
+        stats.batches,
     );
-    let (samples, probs, top_ks) = batcher.kind_counts();
-    assert!(samples > 0 && probs > 0 && top_ks > 0, "mix did not coalesce");
+    assert!(
+        stats.samples > 0 && stats.probabilities > 0 && stats.top_ks > 0,
+        "mix did not coalesce"
+    );
 }
 
 /// Write raw bytes, read one response frame back, then confirm EOF.
@@ -332,8 +339,7 @@ fn malformed_frames_get_typed_errors_and_never_poison_the_batcher() {
     assert_eq!(reply.draw.len(), 5);
 
     // Every well-formed request above flowed through the shared batcher.
-    let (requests, _batches) = batcher.stats();
-    assert!(requests >= 3);
+    assert!(batcher.stats().requests >= 3);
 }
 
 #[test]
@@ -621,7 +627,8 @@ fn wave_pipeline_amortizes_headers_and_coalesces() {
     assert_eq!(resps.len(), burst);
     // Snapshot batcher stats BEFORE the verification loop below issues
     // its own direct (uncoalesced) cross-check requests.
-    let (batched_requests, batches) = batcher.stats();
+    let bstats = batcher.stats();
+    let (batched_requests, batches) = (bstats.requests, bstats.batches);
     for (req, resp) in reqs.iter().zip(&resps) {
         match (req, resp) {
             (Request::Sample { h, m, seed }, Response::Sample { ids, probs, .. }) => {
@@ -650,9 +657,9 @@ fn wave_pipeline_amortizes_headers_and_coalesces() {
     assert_eq!(stats.wave_frames, (burst / wave) as u64);
     // The client parsed fewer response frames than responses whenever
     // the server packed replies (never more than one frame each).
-    let (resp_frames, resp_items) = client.frame_stats();
-    assert_eq!(resp_items, burst as u64);
-    assert!(resp_frames <= resp_items);
+    let fs = client.frame_stats();
+    assert_eq!(fs.resp_items, burst as u64);
+    assert!(fs.resp_frames <= fs.resp_items);
     // One decoded wave lands as one coalesced batch: with waves of 16
     // and max_batch 64, the serve path must have coalesced.
     assert_eq!(batched_requests, burst as u64);
@@ -794,6 +801,94 @@ fn v2_single_frame_client_is_served_by_a_v3_server() {
     let (id, resp) = wire::read_response(&mut stream).unwrap().unwrap();
     assert_eq!(id, 10);
     assert!(matches!(resp, Response::Probability { .. }));
+}
+
+// ---------------------------------------------------------------------
+// STATS telemetry scrape (wire v3 admin family)
+// ---------------------------------------------------------------------
+
+#[test]
+fn stats_frame_scrapes_reconciling_telemetry_over_uds_and_tcp() {
+    let n = 48;
+    let d = 6;
+    for use_tcp in [false, true] {
+        let (_offline, _batcher, transport) = if use_tcp {
+            tcp_serve_stack(n, d, 3400, BatcherOptions::default())
+        } else {
+            serve_stack(n, d, 3400, BatcherOptions::default(), "stats")
+        };
+        let mut client = TransportClient::connect_endpoint(transport.endpoint()).unwrap();
+        let mut rng = Rng::seeded(3401);
+        for i in 0..10u64 {
+            let h = unit_vector(&mut rng, d);
+            client.sample(&h, 5, 0x57A7 + i).unwrap();
+        }
+        for i in 0..5 {
+            let h = unit_vector(&mut rng, d);
+            client.probability(&h, i % n).unwrap();
+            client.top_k(&h, 4).unwrap();
+        }
+        let text = client.stats().unwrap();
+        let j = rfsoftmax::json::parse(&text).unwrap();
+        let count = |path: &[&str]| j.at(path).and_then(|v| v.as_i64());
+        assert_eq!(count(&["batcher", "requests"]), Some(20));
+        assert_eq!(count(&["batcher", "samples"]), Some(10));
+        assert_eq!(count(&["batcher", "probabilities"]), Some(5));
+        assert_eq!(count(&["batcher", "top_ks"]), Some(5));
+        // Stage counts reconcile with the request total: batch-shared
+        // stages record one share per request, and the transport stages
+        // record one point per serve frame decoded / response encoded.
+        for stage in
+            ["decode", "queue_wait", "coalesce", "gemm_wave", "tree_walk", "encode_reply"]
+        {
+            assert_eq!(
+                count(&["telemetry", "stages", stage, "count"]),
+                Some(20),
+                "stage {stage} does not reconcile (tcp={use_tcp})"
+            );
+        }
+        assert_eq!(j.at(&["telemetry", "enabled"]).and_then(|v| v.as_bool()), Some(true));
+        let slowest = j
+            .at(&["telemetry", "slowest"])
+            .and_then(|v| v.as_array().map(|a| a.len()))
+            .unwrap_or(0);
+        assert!(slowest > 0, "slow-request log must have entries after 20 requests");
+        // The transport section reports the scrape itself too (counted
+        // as an admin frame before the JSON is built).
+        assert_eq!(count(&["transport", "requests"]), Some(20));
+        assert_eq!(count(&["transport", "admin_requests"]), Some(1));
+        // Read-only and repeatable: the connection survives, and a
+        // second scrape sees its predecessor in the admin counter.
+        let j2 = rfsoftmax::json::parse(&client.stats().unwrap()).unwrap();
+        assert_eq!(j2.at(&["transport", "admin_requests"]).and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(transport.stats().protocol_errors, 0);
+    }
+}
+
+#[test]
+fn v2_stamped_stats_frame_gets_the_unknown_kind_refusal() {
+    let n = 32;
+    let d = 6;
+    let (_offline, _batcher, transport) =
+        serve_stack(n, d, 3500, BatcherOptions::default(), "stats-v2");
+    let path = transport.path().to_path_buf();
+    // A STATS request is stamped v3 by construction…
+    let mut buf = Vec::new();
+    wire::encode_request(&mut buf, 7, &Request::Stats);
+    assert_eq!(buf[2], 3, "STATS frames must be stamped wire v3");
+    // …and the same bytes stamped v2 must draw the identical refusal a
+    // genuine v2 peer (which predates the kind) would produce.
+    buf[2] = 2;
+    let resp = send_raw_expect_error(&path, &buf);
+    let Response::Error { code, message } = resp else {
+        panic!("expected error frame, got {resp:?}")
+    };
+    assert_eq!(code, wire::ERR_PROTOCOL);
+    assert!(message.contains("kind"), "message: {message}");
+    // The refusal never poisons the server: a fresh v3 client scrapes.
+    let mut client = TransportClient::connect(&path).unwrap();
+    let text = client.stats().unwrap();
+    assert!(rfsoftmax::json::parse(&text).is_ok());
 }
 
 #[test]
