@@ -1,0 +1,267 @@
+//! L5: replicated serving cluster — registry, consistent-hash router,
+//! epoch-sequenced churn replication, and hedged failover.
+//!
+//! One serving stack (L3.5 batcher behind an L4 transport server)
+//! holds one shard of the class universe; this module makes **several
+//! of them answer as one**:
+//!
+//! ```text
+//!            ClusterRouter (one per client thread)
+//!           /       |        \            sample: MASS fan-out, then
+//!   TransportClient conns     \           mass-weighted split draws
+//!         /         |          \          top_k: fan + rescale + merge
+//!    replica 0   replica 1   replica 2    probability: owner lookup
+//!    (shard A)   (shard B)   (shard C)
+//!         \          |          /
+//!          per-replica admin conns
+//!           \        |        /
+//!            ReplicationLog worker (one per Cluster)
+//!                    |
+//!            ReplicaRegistry: ring + health + global<->local ids
+//! ```
+//!
+//! - [`registry`] owns membership: the static endpoint list
+//!   (`cluster.replicas`), per-replica health, the consistent-hash
+//!   ring that maps every global class id to exactly one owner, and
+//!   the global↔local id translation. [`shard_partition`] exposes the
+//!   ring's partition *before* any server exists, so callers can
+//!   build each replica's sampler over exactly its shard.
+//! - [`router`] is the client surface: the same sample / probability /
+//!   top-k API as a single [`crate::transport::TransportClient`], with
+//!   every answer merged exactly (mass-weighted — see the router docs
+//!   for the math) and every failure typed.
+//! - [`replication`] carries churn: adds/retires enter through the
+//!   router, get a cluster-wide sequence number, and drain to owner
+//!   replicas over dedicated admin connections with per-replica acked
+//!   cursors; lag is observable, and [`Cluster::flush`] awaits
+//!   convergence.
+//!
+//! Everything is std-only and sits strictly *above* the transport: no
+//! server-side changes beyond the wire-v3 `MASS` frame exist for the
+//! cluster's benefit, so any wire-v3 server — including one started by
+//! an older build — can be a replica.
+
+pub mod registry;
+pub mod replication;
+pub mod router;
+
+pub use registry::{shard_partition, Replica, ReplicaRegistry};
+pub use router::{ClusterError, ClusterQuery, ClusterReply, ClusterRouter};
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::ClusterConfig;
+use crate::json::Json;
+use crate::metrics::live::LiveRegistry;
+use crate::transport::Endpoint;
+use replication::ReplicationLog;
+
+/// Tunables for [`Cluster::connect`], mirroring the `cluster.*` config
+/// section.
+#[derive(Clone, Debug)]
+pub struct ClusterOptions {
+    /// Per-replica connect and read deadline (`cluster.request_timeout_ms`).
+    pub request_timeout: Duration,
+    /// Duplicate straggling sub-waves after a p99-derived delay
+    /// (`cluster.hedge`).
+    pub hedge: bool,
+    /// Ring points per replica (`cluster.virtual_nodes`).
+    pub virtual_nodes: usize,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        let d = ClusterConfig::default();
+        ClusterOptions {
+            request_timeout: Duration::from_millis(d.request_timeout_ms),
+            hedge: d.hedge,
+            virtual_nodes: d.virtual_nodes,
+        }
+    }
+}
+
+impl ClusterOptions {
+    /// Options from a validated config section (endpoint parsing stays
+    /// with the caller — `cluster.replicas` is a comma-separated list
+    /// of endpoint specs, see [`Endpoint::parse`]).
+    pub fn from_config(cfg: &ClusterConfig) -> ClusterOptions {
+        ClusterOptions {
+            request_timeout: Duration::from_millis(cfg.request_timeout_ms),
+            hedge: cfg.hedge,
+            virtual_nodes: cfg.virtual_nodes,
+        }
+    }
+}
+
+/// Parse a `cluster.replicas`-style comma-separated endpoint list.
+pub fn parse_replicas(spec: &str) -> std::io::Result<Vec<Endpoint>> {
+    spec.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(Endpoint::parse)
+        .collect()
+}
+
+/// The cluster handle: registry + replication log + shared metrics.
+/// One per process (or test); cheap [`ClusterRouter`] handles are made
+/// per client thread with [`Cluster::client`]. Dropping the cluster
+/// stops the replication worker (flush first if queued churn must
+/// land).
+pub struct Cluster {
+    registry: Arc<ReplicaRegistry>,
+    log: ReplicationLog,
+    metrics: LiveRegistry,
+    opts: ClusterOptions,
+}
+
+impl Cluster {
+    /// Stand up the cluster state over a static replica list. No
+    /// connection is made here — routers and the replication worker
+    /// connect lazily, so a replica that is still binding its listener
+    /// does not fail construction.
+    pub fn connect(
+        endpoints: Vec<Endpoint>,
+        opts: ClusterOptions,
+    ) -> Cluster {
+        let registry =
+            Arc::new(ReplicaRegistry::new(endpoints, opts.virtual_nodes));
+        let metrics = LiveRegistry::new();
+        let log = ReplicationLog::new(
+            Arc::clone(&registry),
+            opts.request_timeout,
+            &metrics,
+        );
+        Cluster { registry, log, metrics, opts }
+    }
+
+    /// Bind the initial vocabulary partition (see
+    /// [`ReplicaRegistry::seed`]; produce it with [`shard_partition`]
+    /// and build each replica's sampler over its slice **in order**).
+    pub fn seed(&self, partitions: &[Vec<u32>]) {
+        self.registry.seed(partitions);
+    }
+
+    /// A router handle for one client thread: owns its own per-replica
+    /// serve connections, shares registry/log/metrics with every other
+    /// handle.
+    pub fn client(&self) -> ClusterRouter {
+        ClusterRouter::new(
+            Arc::clone(&self.registry),
+            self.log.shared(),
+            &self.metrics,
+            self.opts.request_timeout,
+            self.opts.hedge,
+        )
+    }
+
+    pub fn registry(&self) -> &Arc<ReplicaRegistry> {
+        &self.registry
+    }
+
+    /// The cluster-side telemetry registry (router counters, sub-wave
+    /// latency, replication counters).
+    pub fn metrics(&self) -> &LiveRegistry {
+        &self.metrics
+    }
+
+    /// Await replication convergence: `true` when every queued churn
+    /// entry has been applied (or abandoned on a dead replica) within
+    /// the timeout.
+    pub fn flush(&self, timeout: Duration) -> bool {
+        self.log.flush(timeout)
+    }
+
+    /// Per-replica replication lag (queued + in-flight entries).
+    pub fn lag(&self) -> Vec<u64> {
+        self.log.lag()
+    }
+
+    /// Per-replica acked replication-sequence cursors.
+    pub fn cursors(&self) -> Vec<u64> {
+        self.log.cursors()
+    }
+
+    /// Per-replica counts of entries abandoned on dead replicas.
+    pub fn dropped(&self) -> Vec<u64> {
+        self.log.dropped()
+    }
+
+    /// Number of replicas currently marked healthy.
+    pub fn alive(&self) -> usize {
+        self.registry.alive().len()
+    }
+
+    /// Cluster-local state snapshot: per-replica endpoint / health /
+    /// cursor / lag / last-ack epoch, plus the shared telemetry
+    /// registry. This is the router's own view — per-replica *server*
+    /// telemetry comes from scraping each endpoint's `STATS` frame
+    /// (`rfsoftmax stats tcp:A tcp:B ...`).
+    pub fn stats_json(&self) -> String {
+        let lag = self.lag();
+        let cursors = self.cursors();
+        let dropped = self.dropped();
+        let epochs = self.log.epochs();
+        let replicas: Vec<Json> = (0..self.registry.len())
+            .map(|r| {
+                let rep = self.registry.replica(r);
+                Json::obj(vec![
+                    ("endpoint", Json::from(rep.endpoint.to_string().as_str())),
+                    ("healthy", Json::from(rep.is_healthy())),
+                    ("cursor", Json::from(cursors[r] as usize)),
+                    ("lag", Json::from(lag[r] as usize)),
+                    ("dropped", Json::from(dropped[r] as usize)),
+                    ("epoch", Json::from(epochs[r] as usize)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("replicas", Json::Arr(replicas)),
+            ("telemetry", self.metrics.snapshot_json()),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn options_mirror_config_defaults() {
+        let o = ClusterOptions::default();
+        assert_eq!(o.request_timeout, Duration::from_millis(1000));
+        assert!(!o.hedge);
+        assert_eq!(o.virtual_nodes, 64);
+    }
+
+    #[test]
+    fn replica_list_parsing() {
+        let eps = parse_replicas("tcp:127.0.0.1:7001, uds:/tmp/b.sock,")
+            .expect("parse");
+        assert_eq!(eps.len(), 2);
+        assert!(matches!(eps[0], Endpoint::Tcp(_)));
+        assert_eq!(eps[1], Endpoint::Uds(PathBuf::from("/tmp/b.sock")));
+        assert!(parse_replicas("").expect("empty ok").is_empty());
+    }
+
+    #[test]
+    fn cluster_state_snapshot_before_any_traffic() {
+        let cluster = Cluster::connect(
+            vec![
+                Endpoint::Uds(PathBuf::from("/tmp/rf-a.sock")),
+                Endpoint::Uds(PathBuf::from("/tmp/rf-b.sock")),
+            ],
+            ClusterOptions::default(),
+        );
+        cluster.seed(&shard_partition(32, 2, 64));
+        assert_eq!(cluster.alive(), 2);
+        assert_eq!(cluster.lag(), vec![0, 0]);
+        let stats = crate::json::parse(&cluster.stats_json()).expect("json");
+        let reps = stats.get("replicas").and_then(Json::as_array).unwrap();
+        assert_eq!(reps.len(), 2);
+        assert_eq!(reps[0].get("healthy").and_then(Json::as_bool), Some(true));
+        assert_eq!(reps[0].get("lag").and_then(Json::as_usize), Some(0));
+    }
+}

@@ -1,0 +1,369 @@
+//! Replica registry and consistent-hash class-shard map.
+//!
+//! The registry is the cluster's source of truth for *who owns what*:
+//! a static list of replica endpoints (from `cluster.replicas`), a
+//! per-replica health bit flipped by the router on failover, and a
+//! consistent-hash ring that assigns every **global class id** to
+//! exactly one replica.
+//!
+//! # The ring
+//!
+//! Each replica contributes `virtual_nodes` points on a `u64` ring,
+//! hashed from `(replica_index, virtual_node)` — deliberately *not*
+//! from the endpoint — so the partition depends only on the replica
+//! count and vnode count. That independence is what makes
+//! [`shard_partition`] possible: callers can pre-partition a vocabulary
+//! and build each replica's sampler *before* any server exists, and the
+//! registry connected to those servers later will agree on ownership
+//! exactly.
+//!
+//! # Global vs. local ids
+//!
+//! Each replica's server numbers classes locally (dense ids from its
+//! own `ClassStore`); the cluster speaks **global** ids. The registry
+//! keeps the two maps in sync:
+//!
+//! - `local_of(global)` — dense local id on the owner, bound when the
+//!   owner acks the add (or at [`ReplicaRegistry::seed`] time for the
+//!   initial vocabulary);
+//! - `global_of(replica, local)` — reverse map, used to translate ids
+//!   in draws and top-k lists coming back from a replica.
+//!
+//! Ownership itself never consults these maps — it is pure ring
+//! arithmetic on the global id — so the replication log can group a
+//! retire by owner before the corresponding add has even been acked.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::transport::Endpoint;
+
+/// SplitMix64 finalizer: the avalanche permutation used for both ring
+/// points and class-id placement. Full 64-bit avalanche, so sequential
+/// ids and sequential vnode indices land uniformly on the ring.
+#[inline]
+pub(crate) fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Domain separators so ring points and class placements can never
+/// collide structurally.
+const RING_SALT: u64 = 0x5249_4E47; // "RING"
+const CLASS_SALT: u64 = 0x434C_4153; // "CLAS"
+
+/// Build the sorted ring for `num_replicas` replicas with
+/// `virtual_nodes` points each: `(point, replica_index)` ascending by
+/// point. Deterministic in its two arguments alone.
+fn build_ring(num_replicas: usize, virtual_nodes: usize) -> Vec<(u64, usize)> {
+    let mut ring = Vec::with_capacity(num_replicas * virtual_nodes);
+    for r in 0..num_replicas {
+        for v in 0..virtual_nodes {
+            let point =
+                mix64(RING_SALT ^ ((r as u64) << 32) ^ v as u64);
+            ring.push((point, r));
+        }
+    }
+    ring.sort_unstable();
+    ring
+}
+
+/// Owner of a global class id on a pre-built ring: first ring point at
+/// or after the id's hash, wrapping at the top.
+fn owner_on_ring(ring: &[(u64, usize)], global: u32) -> usize {
+    let h = mix64(CLASS_SALT ^ global as u64);
+    let i = ring.partition_point(|&(p, _)| p < h);
+    ring[if i == ring.len() { 0 } else { i }].1
+}
+
+/// Partition `0..n_classes` across `num_replicas` replicas by the same
+/// consistent-hash ring a [`ReplicaRegistry`] with the same shape would
+/// build. Returns one ascending id list per replica (their union is the
+/// full range). This is the *pre-serving* half of the ownership
+/// contract: build replica `r`'s sampler over exactly
+/// `partition[r]`'s rows, then [`ReplicaRegistry::seed`] with the same
+/// partition, and router-side ownership lookups will match the data
+/// placement class-for-class.
+pub fn shard_partition(
+    n_classes: usize,
+    num_replicas: usize,
+    virtual_nodes: usize,
+) -> Vec<Vec<u32>> {
+    assert!(num_replicas > 0, "cluster needs at least one replica");
+    assert!(virtual_nodes > 0, "ring needs at least one vnode per replica");
+    let ring = build_ring(num_replicas, virtual_nodes);
+    let mut parts = vec![Vec::new(); num_replicas];
+    for g in 0..n_classes as u32 {
+        parts[owner_on_ring(&ring, g)].push(g);
+    }
+    parts
+}
+
+/// One cluster member: where it listens and whether the router still
+/// considers it alive. Health starts `true` and is flipped down by the
+/// router after a connection fails its retry; a down replica's shards
+/// become unavailable (typed errors for point lookups, mass-renormalized
+/// exclusion for draws) rather than silently wrong.
+pub struct Replica {
+    pub endpoint: Endpoint,
+    healthy: AtomicBool,
+}
+
+impl Replica {
+    pub fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn set_healthy(&self, on: bool) {
+        self.healthy.store(on, Ordering::Release);
+    }
+}
+
+/// Mutable id-translation state, one lock for both directions so an
+/// add-ack binds them atomically.
+struct IdState {
+    /// Next unassigned global id (seeded past the initial vocabulary).
+    next_global: u32,
+    /// global id -> dense local id on its owner. Entries appear when
+    /// the owner acks the add (seeded classes are bound up front) and
+    /// disappear when a retire for the id is acked.
+    local: HashMap<u32, u32>,
+    /// replica -> local id -> global id. Append-only: retired slots
+    /// keep their stale mapping, which is harmless because the server
+    /// never returns a retired id in a draw.
+    global: Vec<Vec<u32>>,
+}
+
+/// See the module docs: endpoints + health + ring + id maps.
+pub struct ReplicaRegistry {
+    replicas: Vec<Replica>,
+    ring: Vec<(u64, usize)>,
+    ids: Mutex<IdState>,
+}
+
+impl ReplicaRegistry {
+    pub fn new(
+        endpoints: Vec<Endpoint>,
+        virtual_nodes: usize,
+    ) -> ReplicaRegistry {
+        assert!(!endpoints.is_empty(), "cluster needs at least one replica");
+        assert!(virtual_nodes > 0, "ring needs at least one vnode per replica");
+        let n = endpoints.len();
+        ReplicaRegistry {
+            replicas: endpoints
+                .into_iter()
+                .map(|endpoint| Replica {
+                    endpoint,
+                    healthy: AtomicBool::new(true),
+                })
+                .collect(),
+            ring: build_ring(n, virtual_nodes),
+            ids: Mutex::new(IdState {
+                next_global: 0,
+                local: HashMap::new(),
+                global: vec![Vec::new(); n],
+            }),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn replica(&self, r: usize) -> &Replica {
+        &self.replicas[r]
+    }
+
+    /// Indices of replicas currently marked healthy.
+    pub fn alive(&self) -> Vec<usize> {
+        (0..self.replicas.len())
+            .filter(|&r| self.replicas[r].is_healthy())
+            .collect()
+    }
+
+    /// Which replica owns this global id (pure ring arithmetic — valid
+    /// even before the id's add has been acked).
+    pub fn owner_of(&self, global: u32) -> usize {
+        owner_on_ring(&self.ring, global)
+    }
+
+    /// Bind the initial vocabulary: replica `r` was built over
+    /// `partitions[r]` in order, so its dense local id `k` is
+    /// `partitions[r][k]`. `partitions` must be the ownership partition
+    /// this registry's ring produces (use [`shard_partition`] with the
+    /// same replica and vnode counts); debug builds assert it.
+    pub fn seed(&self, partitions: &[Vec<u32>]) {
+        assert_eq!(partitions.len(), self.replicas.len());
+        let mut ids = self.ids.lock().unwrap();
+        for (r, part) in partitions.iter().enumerate() {
+            for (local, &g) in part.iter().enumerate() {
+                debug_assert_eq!(self.owner_of(g), r, "seed partition must match the ring");
+                ids.local.insert(g, local as u32);
+                ids.global[r].push(g);
+                ids.next_global = ids.next_global.max(g + 1);
+            }
+        }
+    }
+
+    /// Allocate `count` fresh global ids and their ring owners. The ids
+    /// are not bound to local ids yet — that happens at
+    /// [`ReplicaRegistry::bind`] when the owner acks the add.
+    pub fn assign_new(&self, count: usize) -> Vec<(u32, usize)> {
+        let mut ids = self.ids.lock().unwrap();
+        let base = ids.next_global;
+        ids.next_global += count as u32;
+        (0..count as u32)
+            .map(|k| (base + k, self.owner_of(base + k)))
+            .collect()
+    }
+
+    /// Record an add-ack: the owner assigned `locals[k]` to
+    /// `globals[k]`. Called by the replication worker, in the replica's
+    /// FIFO order, so a later retire of these globals resolves.
+    pub fn bind(&self, replica: usize, globals: &[u32], locals: &[u32]) {
+        debug_assert_eq!(globals.len(), locals.len());
+        let mut ids = self.ids.lock().unwrap();
+        for (&g, &l) in globals.iter().zip(locals) {
+            ids.local.insert(g, l);
+            let rev = &mut ids.global[replica];
+            if rev.len() <= l as usize {
+                rev.resize(l as usize + 1, u32::MAX);
+            }
+            rev[l as usize] = g;
+        }
+    }
+
+    /// Drop retired globals from the forward map (retire-ack path).
+    pub fn unbind(&self, globals: &[u32]) {
+        let mut ids = self.ids.lock().unwrap();
+        for g in globals {
+            ids.local.remove(g);
+        }
+    }
+
+    /// Dense local id of a global on its owner, if the add has been
+    /// acked and the class not retired.
+    pub fn local_of(&self, global: u32) -> Option<u32> {
+        self.ids.lock().unwrap().local.get(&global).copied()
+    }
+
+    /// Global id behind a replica's local id (translating draw results).
+    /// `None` only for local ids the registry has never seen — a
+    /// protocol-level surprise, not a normal condition.
+    pub fn global_of(&self, replica: usize, local: u32) -> Option<u32> {
+        let ids = self.ids.lock().unwrap();
+        match ids.global[replica].get(local as usize) {
+            Some(&g) if g != u32::MAX => Some(g),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn endpoints(n: usize) -> Vec<Endpoint> {
+        (0..n)
+            .map(|i| Endpoint::Uds(PathBuf::from(format!("/tmp/r{i}.sock"))))
+            .collect()
+    }
+
+    #[test]
+    fn partition_is_deterministic_total_and_disjoint() {
+        let a = shard_partition(1000, 3, 64);
+        let b = shard_partition(1000, 3, 64);
+        assert_eq!(a, b);
+        let mut seen = vec![false; 1000];
+        for part in &a {
+            for &g in part {
+                assert!(!seen[g as usize], "class {g} owned twice");
+                seen[g as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every class must have an owner");
+    }
+
+    #[test]
+    fn partition_is_roughly_balanced() {
+        let parts = shard_partition(3000, 3, 64);
+        for (r, part) in parts.iter().enumerate() {
+            // Expected 1000 per replica; 64 vnodes keeps the spread well
+            // within a factor of two.
+            assert!(
+                part.len() > 500 && part.len() < 1700,
+                "replica {r} owns {} of 3000 classes",
+                part.len()
+            );
+        }
+    }
+
+    #[test]
+    fn registry_ring_matches_free_partition() {
+        let reg = ReplicaRegistry::new(endpoints(3), 64);
+        let parts = shard_partition(500, 3, 64);
+        for (r, part) in parts.iter().enumerate() {
+            for &g in part {
+                assert_eq!(reg.owner_of(g), r);
+            }
+        }
+    }
+
+    #[test]
+    fn seed_binds_both_directions() {
+        let reg = ReplicaRegistry::new(endpoints(3), 64);
+        let parts = shard_partition(100, 3, 64);
+        reg.seed(&parts);
+        for (r, part) in parts.iter().enumerate() {
+            for (local, &g) in part.iter().enumerate() {
+                assert_eq!(reg.local_of(g), Some(local as u32));
+                assert_eq!(reg.global_of(r, local as u32), Some(g));
+            }
+        }
+        // Fresh ids start past the seeded range.
+        let fresh = reg.assign_new(4);
+        assert_eq!(fresh[0].0, 100);
+        assert_eq!(fresh[3].0, 103);
+        for &(g, owner) in &fresh {
+            assert_eq!(owner, reg.owner_of(g));
+            assert_eq!(reg.local_of(g), None, "unacked adds are unbound");
+        }
+    }
+
+    #[test]
+    fn bind_and_unbind_track_churn() {
+        let reg = ReplicaRegistry::new(endpoints(2), 32);
+        let parts = shard_partition(10, 2, 32);
+        reg.seed(&parts);
+        let assigned = reg.assign_new(2);
+        let (g0, r0) = assigned[0];
+        // Owner acks with the next dense local ids on that replica.
+        let base = parts[r0].len() as u32;
+        reg.bind(r0, &[g0], &[base]);
+        assert_eq!(reg.local_of(g0), Some(base));
+        assert_eq!(reg.global_of(r0, base), Some(g0));
+        reg.unbind(&[g0]);
+        assert_eq!(reg.local_of(g0), None);
+        // Reverse entry is intentionally stale-but-present; the server
+        // never returns a retired local id.
+        assert_eq!(reg.global_of(r0, base), Some(g0));
+    }
+
+    #[test]
+    fn health_bit_gates_alive_set() {
+        let reg = ReplicaRegistry::new(endpoints(3), 8);
+        assert_eq!(reg.alive(), vec![0, 1, 2]);
+        reg.replica(1).set_healthy(false);
+        assert_eq!(reg.alive(), vec![0, 2]);
+        reg.replica(1).set_healthy(true);
+        assert_eq!(reg.alive(), vec![0, 1, 2]);
+    }
+}

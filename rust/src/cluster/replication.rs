@@ -1,0 +1,441 @@
+//! Epoch-sequenced churn replication log.
+//!
+//! Vocabulary mutations (`ADD_CLASSES` / `RETIRE_CLASSES`) enter the
+//! cluster through the router, which stamps each logical operation with
+//! a monotonically increasing **sequence number** and appends one log
+//! entry per *owner* replica (the consistent-hash ring decides
+//! ownership of each class id, so one router-level add usually fans
+//! into several per-replica entries sharing a sequence number).
+//!
+//! A single background worker drains the per-replica queues round-robin
+//! over dedicated admin connections (separate from the router's serve
+//! connections, so a slow admin apply never stalls reads). Per-replica
+//! queues are strict FIFO, which is the ordering contract the id maps
+//! rely on: a retire's global→local resolution happens at *apply* time,
+//! after the add that created the binding has been acked on the same
+//! queue.
+//!
+//! Progress is observable as per-replica **acked cursors** (the highest
+//! applied sequence number) and **lag** (entries still queued or in
+//! flight) — both surfaced through `Cluster::stats_json` and the
+//! multi-endpoint `rfsoftmax stats` command. Appends return
+//! immediately with the assigned ids and sequence number; callers that
+//! need convergence (tests, shutdown) call
+//! [`ReplicationLog::flush`].
+//!
+//! # Failure policy
+//!
+//! An apply gets one reconnect-and-retry; if the replica still will not
+//! take it, the worker marks the replica unhealthy, abandons its
+//! remaining queue (counting the entries as `dropped`), and advances
+//! the cursor past them. This keeps `flush` from wedging on a killed
+//! replica — the loss is deliberate and *visible* (dropped count +
+//! health bit + failover metrics), matching the cluster's
+//! degrade-loudly contract.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::registry::ReplicaRegistry;
+use crate::linalg::Matrix;
+use crate::metrics::live::{LiveRegistry, ShardedCounter};
+use crate::transport::{ProtocolError, TransportClient};
+
+/// One replicated vocabulary mutation, already narrowed to a single
+/// owner replica's share of the logical operation.
+enum AdminOp {
+    /// Append these globals (row `k` of `embeddings` is `globals[k]`).
+    Add { globals: Vec<u32>, embeddings: Matrix },
+    /// Retire these globals (resolved to local ids at apply time).
+    Retire { globals: Vec<u32> },
+}
+
+struct LogEntry {
+    seq: u64,
+    op: AdminOp,
+}
+
+struct LogState {
+    next_seq: u64,
+    queues: Vec<VecDeque<LogEntry>>,
+    /// Entry popped but not yet acked, per replica — counted by `lag`
+    /// and awaited by `flush`.
+    inflight: Vec<bool>,
+    /// Highest sequence number applied (or abandoned) per replica.
+    acked: Vec<u64>,
+    /// Entries abandoned because the replica died mid-log.
+    dropped: Vec<u64>,
+    shutdown: bool,
+}
+
+pub(crate) struct LogShared {
+    registry: Arc<ReplicaRegistry>,
+    state: Mutex<LogState>,
+    /// Single condvar for both directions: the worker waits on it for
+    /// appends, flushers wait on it for drains; every transition
+    /// `notify_all`s.
+    wake: Condvar,
+    timeout: Duration,
+    /// Last snapshot-swap epoch each replica reported in an admin ack.
+    epochs: Vec<AtomicU64>,
+    applied: Arc<ShardedCounter>,
+    errors: Arc<ShardedCounter>,
+}
+
+impl LogShared {
+    /// Append one logical add: assign fresh global ids, split the rows
+    /// by ring owner, enqueue one entry per owner. Returns the global
+    /// ids (row-aligned with `embeddings`) and the operation's sequence
+    /// number; the binding to local ids happens asynchronously at ack.
+    pub(crate) fn append_add(&self, embeddings: &Matrix) -> (Vec<u32>, u64) {
+        let assigned = self.registry.assign_new(embeddings.rows());
+        let globals: Vec<u32> = assigned.iter().map(|&(g, _)| g).collect();
+        let n = self.registry.len();
+        let mut per_replica: Vec<(Vec<u32>, Vec<f32>)> =
+            vec![(Vec::new(), Vec::new()); n];
+        for (row, &(g, owner)) in assigned.iter().enumerate() {
+            per_replica[owner].0.push(g);
+            per_replica[owner].1.extend_from_slice(embeddings.row(row));
+        }
+        let dim = embeddings.cols();
+        let mut st = self.state.lock().unwrap();
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        for (r, (globals, rows)) in per_replica.into_iter().enumerate() {
+            if globals.is_empty() {
+                continue;
+            }
+            let m = Matrix::from_vec(globals.len(), dim, rows);
+            st.queues[r].push_back(LogEntry {
+                seq,
+                op: AdminOp::Add { globals, embeddings: m },
+            });
+        }
+        drop(st);
+        self.wake.notify_all();
+        (globals, seq)
+    }
+
+    /// Append one logical retire, split by ring owner. Returns the
+    /// sequence number.
+    pub(crate) fn append_retire(&self, globals: &[u32]) -> u64 {
+        let n = self.registry.len();
+        let mut per_replica: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &g in globals {
+            per_replica[self.registry.owner_of(g)].push(g);
+        }
+        let mut st = self.state.lock().unwrap();
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        for (r, globals) in per_replica.into_iter().enumerate() {
+            if globals.is_empty() {
+                continue;
+            }
+            st.queues[r].push_back(LogEntry {
+                seq,
+                op: AdminOp::Retire { globals },
+            });
+        }
+        drop(st);
+        self.wake.notify_all();
+        seq
+    }
+
+    /// Block until every queue is drained and no apply is in flight, or
+    /// the timeout elapses. `true` means converged.
+    pub(crate) fn flush(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let busy = st.inflight.iter().any(|&b| b)
+                || st.queues.iter().any(|q| !q.is_empty());
+            if !busy {
+                return true;
+            }
+            let Some(left) = deadline.checked_duration_since(Instant::now())
+            else {
+                return false;
+            };
+            st = self.wake.wait_timeout(st, left).unwrap().0;
+        }
+    }
+
+    /// Per-replica replication lag: queued entries plus any in-flight
+    /// apply.
+    pub(crate) fn lag(&self) -> Vec<u64> {
+        let st = self.state.lock().unwrap();
+        st.queues
+            .iter()
+            .zip(&st.inflight)
+            .map(|(q, &f)| q.len() as u64 + u64::from(f))
+            .collect()
+    }
+
+    /// Per-replica acked sequence cursors.
+    pub(crate) fn cursors(&self) -> Vec<u64> {
+        self.state.lock().unwrap().acked.clone()
+    }
+
+    /// Per-replica abandoned-entry counts (dead replicas only).
+    pub(crate) fn dropped(&self) -> Vec<u64> {
+        self.state.lock().unwrap().dropped.clone()
+    }
+
+    /// Last admin-ack epoch per replica (0 before any ack).
+    pub(crate) fn epochs(&self) -> Vec<u64> {
+        self.epochs.iter().map(|e| e.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// Handle owning the worker thread; dropping it stops the worker
+/// without draining (call [`ReplicationLog::flush`] first if the queue
+/// must land).
+pub(crate) struct ReplicationLog {
+    shared: Arc<LogShared>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ReplicationLog {
+    pub(crate) fn new(
+        registry: Arc<ReplicaRegistry>,
+        timeout: Duration,
+        metrics: &LiveRegistry,
+    ) -> ReplicationLog {
+        let n = registry.len();
+        let shared = Arc::new(LogShared {
+            registry,
+            state: Mutex::new(LogState {
+                next_seq: 1,
+                queues: (0..n).map(|_| VecDeque::new()).collect(),
+                inflight: vec![false; n],
+                acked: vec![0; n],
+                dropped: vec![0; n],
+                shutdown: false,
+            }),
+            wake: Condvar::new(),
+            timeout,
+            epochs: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            applied: metrics.counter("cluster.repl_applied"),
+            errors: metrics.counter("cluster.repl_errors"),
+        });
+        let worker = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("cluster-repl".into())
+                .spawn(move || replication_worker(&shared))
+                .expect("spawn replication worker")
+        };
+        ReplicationLog { shared, worker: Some(worker) }
+    }
+
+    pub(crate) fn shared(&self) -> Arc<LogShared> {
+        Arc::clone(&self.shared)
+    }
+
+    pub(crate) fn flush(&self, timeout: Duration) -> bool {
+        self.shared.flush(timeout)
+    }
+
+    pub(crate) fn lag(&self) -> Vec<u64> {
+        self.shared.lag()
+    }
+
+    pub(crate) fn cursors(&self) -> Vec<u64> {
+        self.shared.cursors()
+    }
+
+    pub(crate) fn dropped(&self) -> Vec<u64> {
+        self.shared.dropped()
+    }
+
+    pub(crate) fn epochs(&self) -> Vec<u64> {
+        self.shared.epochs()
+    }
+}
+
+impl Drop for ReplicationLog {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.wake.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The drain loop: pop round-robin, apply with one retry, ack or
+/// abandon. Admin connections are lazy and owned here, one per replica.
+fn replication_worker(shared: &LogShared) {
+    let n = shared.registry.len();
+    let mut conns: Vec<Option<TransportClient>> = (0..n).map(|_| None).collect();
+    let mut cursor = 0usize;
+    loop {
+        // Pick the next queued entry, or sleep until one appears.
+        let (r, entry) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                let mut picked = None;
+                for k in 0..n {
+                    let r = (cursor + k) % n;
+                    if let Some(entry) = st.queues[r].pop_front() {
+                        picked = Some((r, entry));
+                        break;
+                    }
+                }
+                if let Some((r, entry)) = picked {
+                    st.inflight[r] = true;
+                    cursor = (r + 1) % n;
+                    break (r, entry);
+                }
+                st = shared.wake.wait(st).unwrap();
+            }
+        };
+
+        let result = apply_with_retry(shared, &mut conns[r], r, &entry.op);
+
+        let mut st = shared.state.lock().unwrap();
+        st.inflight[r] = false;
+        match result {
+            Ok(()) => {
+                st.acked[r] = entry.seq;
+                shared.applied.incr();
+            }
+            Err(_) => {
+                // Replica refused twice (or its connection is gone):
+                // mark it down and abandon its queue so flush cannot
+                // wedge. The cursor still advances — loss is recorded
+                // in `dropped`, not hidden as infinite lag.
+                shared.errors.incr();
+                shared.registry.replica(r).set_healthy(false);
+                conns[r] = None;
+                let mut last = entry.seq;
+                let mut abandoned = 1u64;
+                while let Some(e) = st.queues[r].pop_front() {
+                    last = e.seq;
+                    abandoned += 1;
+                }
+                st.acked[r] = last;
+                st.dropped[r] += abandoned;
+            }
+        }
+        drop(st);
+        shared.wake.notify_all();
+    }
+}
+
+/// Apply one entry; a connection-closing failure gets one fresh
+/// connection and a second attempt (admin frames are idempotent-enough
+/// under this log: an add that *was* applied but whose ack was lost
+/// would double-add, so the retry only fires when the error indicates
+/// the request never reached a healthy server — connect failures and
+/// timeouts close the connection before the send).
+fn apply_with_retry(
+    shared: &LogShared,
+    conn: &mut Option<TransportClient>,
+    r: usize,
+    op: &AdminOp,
+) -> Result<(), ProtocolError> {
+    match apply_once(shared, conn, r, op) {
+        Ok(()) => Ok(()),
+        Err(e) if e.closes_connection() => {
+            *conn = None;
+            apply_once(shared, conn, r, op)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+fn apply_once(
+    shared: &LogShared,
+    conn: &mut Option<TransportClient>,
+    r: usize,
+    op: &AdminOp,
+) -> Result<(), ProtocolError> {
+    if conn.is_none() {
+        let endpoint = &shared.registry.replica(r).endpoint;
+        *conn = Some(TransportClient::connect_endpoint_timeout(
+            endpoint,
+            shared.timeout,
+        )?);
+    }
+    let client = conn.as_mut().unwrap();
+    match op {
+        AdminOp::Add { globals, embeddings } => {
+            let (locals, epoch) = client.add_classes(embeddings)?;
+            if locals.len() != globals.len() {
+                return Err(ProtocolError::Malformed(
+                    "add ack id count mismatch",
+                ));
+            }
+            shared.registry.bind(r, globals, &locals);
+            shared.epochs[r].store(epoch, Ordering::Relaxed);
+        }
+        AdminOp::Retire { globals } => {
+            // FIFO per replica guarantees the adds that created these
+            // bindings were acked on this same queue; an unresolved id
+            // here means the caller retired something never added.
+            let locals: Vec<u32> = globals
+                .iter()
+                .filter_map(|&g| shared.registry.local_of(g))
+                .collect();
+            if !locals.is_empty() {
+                let epoch = client.retire_classes(&locals)?;
+                shared.epochs[r].store(epoch, Ordering::Relaxed);
+            }
+            shared.registry.unbind(globals);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::registry::shard_partition;
+    use crate::transport::Endpoint;
+    use std::path::PathBuf;
+
+    fn log_over(n: usize) -> (Arc<ReplicaRegistry>, ReplicationLog, LiveRegistry) {
+        let endpoints = (0..n)
+            .map(|i| {
+                Endpoint::Uds(PathBuf::from(format!("/tmp/rf-none-{i}.sock")))
+            })
+            .collect();
+        let registry = Arc::new(ReplicaRegistry::new(endpoints, 32));
+        let metrics = LiveRegistry::new();
+        let log = ReplicationLog::new(Arc::clone(&registry), Duration::from_millis(200), &metrics);
+        (registry, log, metrics)
+    }
+
+    #[test]
+    fn empty_log_flushes_immediately_with_zero_lag() {
+        let (_reg, log, _m) = log_over(3);
+        assert!(log.flush(Duration::from_millis(50)));
+        assert_eq!(log.lag(), vec![0, 0, 0]);
+        assert_eq!(log.cursors(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn append_assigns_sequenced_global_ids() {
+        let (reg, log, _m) = log_over(2);
+        reg.seed(&shard_partition(10, 2, 32));
+        let rows = Matrix::from_vec(3, 4, vec![0.5; 12]);
+        let (globals, seq) = log.shared().append_add(&rows);
+        assert_eq!(globals, vec![10, 11, 12]);
+        assert_eq!(seq, 1);
+        let seq2 = log.shared().append_retire(&globals);
+        assert_eq!(seq2, 2);
+        // The endpoints are dead paths, so the worker will abandon the
+        // queues rather than wedge: flush must still terminate.
+        assert!(log.flush(Duration::from_secs(5)), "flush may not wedge");
+        assert!(log.dropped().iter().sum::<u64>() > 0);
+    }
+}

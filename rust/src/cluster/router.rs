@@ -1,0 +1,844 @@
+//! Consistent-hash cluster router: the client-facing half of the L5
+//! serving cluster.
+//!
+//! A [`ClusterRouter`] fronts the same request surface as a single
+//! [`TransportClient`] — sample / probability / top-k plus vocabulary
+//! churn — but fans every logical request out across the replica set by
+//! shard ownership and merges the sub-answers exactly:
+//!
+//! - **sample** runs in two phases. Phase 1 ships one `MASS` frame per
+//!   replica (batched into a wire-v3 wave per replica for bursts) and
+//!   learns each replica's total proposal mass `M_r` at the query.
+//!   Phase 2 splits the `m` requested draws across replicas with a
+//!   router-side RNG seeded from the request seed — slot `j` picks
+//!   replica `r` with probability `M_r / ΣM` — and ships one `SAMPLE`
+//!   sub-request per chosen replica with a per-replica derived seed.
+//!   The merged draw consumes each replica's (conditional) draws in
+//!   slot-pick order and rescales probabilities by `M_r / ΣM`, so the
+//!   cluster marginal is *exactly* the union distribution: `(M_r/ΣM) ·
+//!   q_r(i) = mass(i)/ΣM`. This is the distributed analogue of the
+//!   in-process sharded tree's two-level pick. Total tree-walk work is
+//!   still `m` draws — split, not duplicated — which is what lets the
+//!   cluster beat one replica on throughput.
+//! - **probability** is an owner lookup: ring → owner replica → local
+//!   id → `q_r(i) · M_r / ΣM`.
+//! - **top-k** fans to every live replica, rescales each list by
+//!   `M_r / ΣM`, and merge-sorts (score descending, global id as the
+//!   tie-break) before truncating to `k`.
+//! - **churn** (add/retire) is appended to the epoch-sequenced
+//!   replication log and applied asynchronously; see
+//!   [`super::replication`].
+//!
+//! # Determinism
+//!
+//! For a fixed cluster shape (replica count, vnodes), health set, and
+//! replica epochs, a request seed fully determines the merged draw:
+//! the split RNG, the per-replica sub-seeds, and the replicas' own
+//! walks are all seed-derived. Cluster draws are *reproducible*, but
+//! not byte-identical to a single node serving the union vocabulary —
+//! the draw sequence differs; the distribution does not (the
+//! integration suite checks the χ² consistency of exactly that).
+//!
+//! # Failover and hedging
+//!
+//! Every per-replica sub-batch send/recv gets one
+//! reconnect-and-replay on a connection-closing error (all routed
+//! sub-requests are idempotent reads — churn never passes through
+//! here). A second failure marks the replica down; sample and top-k
+//! re-route the affected items over the survivors with renormalized
+//! masses, while probability for classes owned by the dead replica
+//! fails with a typed [`ClusterError::ReplicaDown`]. With hedging
+//! enabled, the first wait uses a p99-derived deadline instead of the
+//! full request timeout: when it trips, the router abandons the
+//! straggler's connection (a timed-out read may sit mid-frame — the
+//! connection is unusable by construction) and replays the identical
+//! sub-batch on a fresh one. Same seeds, same answers — the hedge can
+//! win time but never change results, and the logical request is
+//! counted once no matter how many copies raced.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::registry::{mix64, ReplicaRegistry};
+use super::replication::LogShared;
+use crate::linalg::Matrix;
+use crate::metrics::live::{LiveHistogram, LiveRegistry, ShardedCounter};
+use crate::rng::Rng;
+use crate::sampler::NegativeDraw;
+use crate::serving::ServeReply;
+use crate::transport::{ProtocolError, Request, Response, TransportClient};
+
+/// Typed cluster failure surface (the "graceful degradation" half of
+/// the router contract: a dead replica yields these, never a hang or a
+/// silently wrong merge).
+#[derive(Debug)]
+pub enum ClusterError {
+    /// A transport-level failure that survived the retry budget.
+    Protocol(ProtocolError),
+    /// No replica is currently healthy.
+    NoReplicas,
+    /// The class id is not (or not yet) bound on its owner — either
+    /// never added, already retired, or its add is still in the
+    /// replication log.
+    UnknownClass(u32),
+    /// The class's owner replica is marked down; point lookups cannot
+    /// be re-routed (ownership is exclusive).
+    ReplicaDown(usize),
+    /// A replica died while this request was in flight. Internal
+    /// re-route marker: `query_burst` retries such items over the
+    /// survivors, so callers only see it when no retry round is left.
+    ReplicaLost(usize),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::Protocol(e) => write!(f, "cluster transport: {e}"),
+            ClusterError::NoReplicas => write!(f, "no healthy replicas"),
+            ClusterError::UnknownClass(g) => {
+                write!(f, "class {g} is not bound on any replica")
+            }
+            ClusterError::ReplicaDown(r) => {
+                write!(f, "owner replica {r} is down")
+            }
+            ClusterError::ReplicaLost(r) => {
+                write!(f, "replica {r} died mid-request")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+impl From<ProtocolError> for ClusterError {
+    fn from(e: ProtocolError) -> Self {
+        ClusterError::Protocol(e)
+    }
+}
+
+/// One logical request against the cluster's global id space.
+#[derive(Clone, Debug)]
+pub enum ClusterQuery {
+    Sample { h: Vec<f32>, m: usize, seed: u64 },
+    Probability { h: Vec<f32>, class: u32 },
+    TopK { h: Vec<f32>, k: usize },
+}
+
+impl ClusterQuery {
+    fn h(&self) -> &[f32] {
+        match self {
+            ClusterQuery::Sample { h, .. }
+            | ClusterQuery::Probability { h, .. }
+            | ClusterQuery::TopK { h, .. } => h,
+        }
+    }
+}
+
+/// Merged cluster answer, global-id space throughout.
+#[derive(Debug)]
+pub enum ClusterReply {
+    Sample(ServeReply),
+    Probability { q: f64, epoch: u64 },
+    TopK { items: Vec<(u32, f64)>, epoch: u64 },
+}
+
+/// Per-item phase-2 plan (what was sent where, and how to merge it).
+enum Plan {
+    /// Slot-pick order of the split; merged draw replays it.
+    Sample { picks: Vec<usize>, total: f64 },
+    Prob { owner: usize, total: f64 },
+    TopK { k: usize, total: f64 },
+    /// Item already resolved (error before phase 2).
+    Done,
+}
+
+/// Minimum sub-wave latency samples before hedging arms, and the
+/// multiple of p99 used as the hedge deadline.
+const HEDGE_MIN_SAMPLES: u64 = 32;
+const HEDGE_P99_MULTIPLE: u64 = 3;
+const HEDGE_FLOOR: Duration = Duration::from_millis(1);
+
+/// See the module docs. One router per client thread (it owns its
+/// per-replica connections, like a `TransportClient` owns its socket);
+/// routers made from the same [`super::Cluster`] share the registry,
+/// replication log, and metrics.
+pub struct ClusterRouter {
+    registry: Arc<ReplicaRegistry>,
+    log: Arc<LogShared>,
+    conns: Vec<Option<TransportClient>>,
+    timeout: Duration,
+    hedge: bool,
+    requests: Arc<ShardedCounter>,
+    hedges_fired: Arc<ShardedCounter>,
+    hedges_won: Arc<ShardedCounter>,
+    failovers: Arc<ShardedCounter>,
+    subwave: Arc<LiveHistogram>,
+}
+
+impl ClusterRouter {
+    pub(crate) fn new(
+        registry: Arc<ReplicaRegistry>,
+        log: Arc<LogShared>,
+        metrics: &LiveRegistry,
+        timeout: Duration,
+        hedge: bool,
+    ) -> ClusterRouter {
+        let n = registry.len();
+        ClusterRouter {
+            registry,
+            log,
+            conns: (0..n).map(|_| None).collect(),
+            timeout,
+            hedge,
+            requests: metrics.counter("cluster.requests"),
+            hedges_fired: metrics.counter("cluster.hedges_fired"),
+            hedges_won: metrics.counter("cluster.hedges_won"),
+            failovers: metrics.counter("cluster.failovers"),
+            subwave: metrics.histogram("cluster.subwave"),
+        }
+    }
+
+    // -- single-request surface (TransportClient-shaped) ----------------
+
+    /// Draw `m` classes from the cluster-wide proposal distribution;
+    /// ids and probabilities are global. See the module docs for the
+    /// two-phase split.
+    pub fn sample(
+        &mut self,
+        h: &[f32],
+        m: usize,
+        seed: u64,
+    ) -> Result<ServeReply, ClusterError> {
+        let q = ClusterQuery::Sample { h: h.to_vec(), m, seed };
+        match self.query_burst(std::slice::from_ref(&q), false).pop().unwrap()? {
+            ClusterReply::Sample(reply) => Ok(reply),
+            _ => Err(ProtocolError::Malformed("reply kind mismatch").into()),
+        }
+    }
+
+    /// Cluster-wide `q(class | h)` for a global class id.
+    pub fn probability(
+        &mut self,
+        h: &[f32],
+        class: u32,
+    ) -> Result<(f64, u64), ClusterError> {
+        let q = ClusterQuery::Probability { h: h.to_vec(), class };
+        match self.query_burst(std::slice::from_ref(&q), false).pop().unwrap()? {
+            ClusterReply::Probability { q, epoch } => Ok((q, epoch)),
+            _ => Err(ProtocolError::Malformed("reply kind mismatch").into()),
+        }
+    }
+
+    /// Cluster-wide top-k (global ids, globally-normalized scores).
+    pub fn top_k(
+        &mut self,
+        h: &[f32],
+        k: usize,
+    ) -> Result<(Vec<(u32, f64)>, u64), ClusterError> {
+        let q = ClusterQuery::TopK { h: h.to_vec(), k };
+        match self.query_burst(std::slice::from_ref(&q), false).pop().unwrap()? {
+            ClusterReply::TopK { items, epoch } => Ok((items, epoch)),
+            _ => Err(ProtocolError::Malformed("reply kind mismatch").into()),
+        }
+    }
+
+    /// Append new classes through the replication log. Returns the
+    /// assigned **global** ids and the log sequence number immediately;
+    /// owners converge asynchronously (flush the cluster to wait).
+    pub fn add_classes(&mut self, embeddings: &Matrix) -> (Vec<u32>, u64) {
+        self.log.append_add(embeddings)
+    }
+
+    /// Retire global classes through the replication log; returns the
+    /// log sequence number.
+    pub fn retire_classes(&mut self, globals: &[u32]) -> u64 {
+        self.log.append_retire(globals)
+    }
+
+    // -- burst surface ---------------------------------------------------
+
+    /// Run a burst of logical requests through the two-phase fan-out,
+    /// batching each replica's sub-requests into wire-v3 wave frames
+    /// when `wave` is set (two round-trips per burst instead of two per
+    /// request). Results are item-aligned with `queries`. Items that
+    /// lose a replica mid-flight are re-routed over the survivors;
+    /// keep bursts at or below [`crate::transport::MAX_IN_FLIGHT`]` / 2`
+    /// so a replica's sub-batch can never trip the server's shed cap.
+    pub fn query_burst(
+        &mut self,
+        queries: &[ClusterQuery],
+        wave: bool,
+    ) -> Vec<Result<ClusterReply, ClusterError>> {
+        // Logical requests count once, however many hedges/retries the
+        // burst spends serving them — the invariant the stats
+        // reconciliation test leans on.
+        self.requests.add(queries.len() as u64);
+        let mut out = self.burst_round(queries, wave);
+        // Re-route items that lost their replica mid-round. Every extra
+        // round implies at least one replica newly died, so the depth
+        // is bounded by the replica count.
+        for _ in 0..self.registry.len() {
+            let failed: Vec<usize> = out
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| {
+                    matches!(r, Err(ClusterError::ReplicaLost(_)))
+                })
+                .map(|(i, _)| i)
+                .collect();
+            if failed.is_empty() || self.registry.alive().is_empty() {
+                break;
+            }
+            let again: Vec<ClusterQuery> =
+                failed.iter().map(|&i| queries[i].clone()).collect();
+            for (slot, res) in
+                failed.into_iter().zip(self.burst_round(&again, wave))
+            {
+                out[slot] = res;
+            }
+        }
+        out
+    }
+
+    fn burst_round(
+        &mut self,
+        queries: &[ClusterQuery],
+        wave: bool,
+    ) -> Vec<Result<ClusterReply, ClusterError>> {
+        let nrep = self.registry.len();
+        let w = queries.len();
+        let alive = self.registry.alive();
+        if alive.is_empty() {
+            return (0..w).map(|_| Err(ClusterError::NoReplicas)).collect();
+        }
+
+        // Phase 1: per-replica total proposal mass at every query point.
+        let mut mass_batches: Vec<Vec<Request>> = vec![Vec::new(); nrep];
+        for &r in &alive {
+            mass_batches[r] = queries
+                .iter()
+                .map(|q| Request::Mass { h: q.h().to_vec() })
+                .collect();
+        }
+        let mass_resps = self.fan_out(mass_batches, wave);
+        let mut masses = vec![vec![0.0f64; nrep]; w];
+        for (r, resps) in mass_resps.into_iter().enumerate() {
+            let Some(resps) = resps else { continue };
+            for (i, resp) in resps.into_iter().enumerate() {
+                if let Response::Mass { mass, .. } = resp {
+                    masses[i][r] = mass.max(0.0);
+                }
+            }
+        }
+
+        // Phase 2: plan and ship per-replica sub-requests.
+        let mut out: Vec<Option<Result<ClusterReply, ClusterError>>> =
+            (0..w).map(|_| None).collect();
+        let mut plans: Vec<Plan> = Vec::with_capacity(w);
+        let mut batches: Vec<Vec<Request>> = vec![Vec::new(); nrep];
+        // Item index behind each sub-request, batch-order per replica.
+        let mut subs: Vec<Vec<usize>> = vec![Vec::new(); nrep];
+        for (i, q) in queries.iter().enumerate() {
+            let total: f64 = masses[i].iter().sum();
+            match q {
+                ClusterQuery::Sample { h, m, seed } => {
+                    if total <= 0.0 {
+                        out[i] = Some(Err(ProtocolError::Malformed(
+                            "cluster proposal mass is zero",
+                        )
+                        .into()));
+                        plans.push(Plan::Done);
+                        continue;
+                    }
+                    let (counts, picks) = split_draws(&masses[i], *m, *seed);
+                    for (r, &c) in counts.iter().enumerate() {
+                        if c > 0 {
+                            batches[r].push(Request::Sample {
+                                h: h.clone(),
+                                m: c,
+                                seed: sub_seed(*seed, r),
+                            });
+                            subs[r].push(i);
+                        }
+                    }
+                    plans.push(Plan::Sample { picks, total });
+                }
+                ClusterQuery::Probability { h, class } => {
+                    let owner = self.registry.owner_of(*class);
+                    if !self.registry.replica(owner).is_healthy() {
+                        out[i] = Some(Err(ClusterError::ReplicaDown(owner)));
+                        plans.push(Plan::Done);
+                        continue;
+                    }
+                    let Some(local) = self.registry.local_of(*class) else {
+                        out[i] = Some(Err(ClusterError::UnknownClass(*class)));
+                        plans.push(Plan::Done);
+                        continue;
+                    };
+                    batches[owner].push(Request::Probability {
+                        h: h.clone(),
+                        class: local,
+                    });
+                    subs[owner].push(i);
+                    plans.push(Plan::Prob { owner, total });
+                }
+                ClusterQuery::TopK { h, k } => {
+                    for &r in &alive {
+                        if masses[i][r] > 0.0 {
+                            batches[r].push(Request::TopK {
+                                h: h.clone(),
+                                k: *k as u32,
+                            });
+                            subs[r].push(i);
+                        }
+                    }
+                    plans.push(Plan::TopK { k: *k, total });
+                }
+            }
+        }
+        let sub_resps = self.fan_out(batches, wave);
+
+        // Regroup sub-responses by item.
+        let mut per_item: Vec<Vec<(usize, Option<Response>)>> =
+            (0..w).map(|_| Vec::new()).collect();
+        for (r, resps) in sub_resps.into_iter().enumerate() {
+            match resps {
+                Some(resps) => {
+                    for (&i, resp) in subs[r].iter().zip(resps) {
+                        per_item[i].push((r, Some(resp)));
+                    }
+                }
+                None => {
+                    for &i in &subs[r] {
+                        per_item[i].push((r, None));
+                    }
+                }
+            }
+        }
+
+        // Phase 3: merge.
+        for (i, plan) in plans.into_iter().enumerate() {
+            if out[i].is_some() {
+                continue;
+            }
+            let entries = std::mem::take(&mut per_item[i]);
+            out[i] = Some(self.merge_item(plan, entries, &masses[i]));
+        }
+        out.into_iter().map(|o| o.expect("every item planned")).collect()
+    }
+
+    /// Merge one item's sub-responses according to its plan.
+    fn merge_item(
+        &self,
+        plan: Plan,
+        entries: Vec<(usize, Option<Response>)>,
+        masses: &[f64],
+    ) -> Result<ClusterReply, ClusterError> {
+        // A dead sub-replica poisons the item (the burst loop re-routes
+        // it); a Response::Error poisons it terminally.
+        let mut resolved = Vec::with_capacity(entries.len());
+        for (r, resp) in entries {
+            match resp {
+                None => return Err(ClusterError::ReplicaLost(r)),
+                Some(Response::Error { code, message }) => {
+                    return Err(ProtocolError::Remote { code, message }.into())
+                }
+                Some(resp) => resolved.push((r, resp)),
+            }
+        }
+        match plan {
+            Plan::Done => unreachable!("Done items never reach merge"),
+            Plan::Sample { picks, total, .. } => {
+                let nrep = masses.len();
+                let mut draws: Vec<Option<(VecDeque<u32>, VecDeque<f64>)>> =
+                    (0..nrep).map(|_| None).collect();
+                let mut epoch = 0u64;
+                for (r, resp) in resolved {
+                    let Response::Sample { epoch: e, ids, probs } = resp
+                    else {
+                        return Err(ProtocolError::Malformed(
+                            "response kind mismatch",
+                        )
+                        .into());
+                    };
+                    epoch = epoch.max(e);
+                    draws[r] = Some((ids.into(), probs.into()));
+                }
+                let mut ids = Vec::with_capacity(picks.len());
+                let mut probs = Vec::with_capacity(picks.len());
+                for &r in &picks {
+                    let Some((lids, lprobs)) = draws[r].as_mut() else {
+                        return Err(ProtocolError::Malformed(
+                            "replica returned no draw for its slots",
+                        )
+                        .into());
+                    };
+                    let (Some(local), Some(q)) =
+                        (lids.pop_front(), lprobs.pop_front())
+                    else {
+                        return Err(ProtocolError::Malformed(
+                            "replica under-delivered draws",
+                        )
+                        .into());
+                    };
+                    let Some(global) = self.registry.global_of(r, local)
+                    else {
+                        return Err(ProtocolError::Malformed(
+                            "replica returned an unmapped local id",
+                        )
+                        .into());
+                    };
+                    ids.push(global);
+                    probs.push(q * masses[r] / total);
+                }
+                Ok(ClusterReply::Sample(ServeReply {
+                    draw: NegativeDraw { ids, probs },
+                    epoch,
+                }))
+            }
+            Plan::Prob { owner, total } => {
+                let Some((_, Response::Probability { epoch, q })) =
+                    resolved.into_iter().next()
+                else {
+                    return Err(ProtocolError::Malformed(
+                        "response kind mismatch",
+                    )
+                    .into());
+                };
+                Ok(ClusterReply::Probability {
+                    q: q * masses[owner] / total,
+                    epoch,
+                })
+            }
+            Plan::TopK { k, total } => {
+                let mut merged: Vec<(u32, f64)> = Vec::new();
+                let mut epoch = 0u64;
+                for (r, resp) in resolved {
+                    let Response::TopK { epoch: e, items } = resp else {
+                        return Err(ProtocolError::Malformed(
+                            "response kind mismatch",
+                        )
+                        .into());
+                    };
+                    epoch = epoch.max(e);
+                    for (local, score) in items {
+                        let Some(global) = self.registry.global_of(r, local)
+                        else {
+                            return Err(ProtocolError::Malformed(
+                                "replica returned an unmapped local id",
+                            )
+                            .into());
+                        };
+                        merged.push((global, score * masses[r] / total));
+                    }
+                }
+                Ok(ClusterReply::TopK {
+                    items: merge_topk(merged, k),
+                    epoch,
+                })
+            }
+        }
+    }
+
+    // -- transport plumbing ----------------------------------------------
+
+    fn conn(
+        &mut self,
+        r: usize,
+    ) -> Result<&mut TransportClient, ProtocolError> {
+        if self.conns[r].is_none() {
+            let endpoint = &self.registry.replica(r).endpoint;
+            self.conns[r] = Some(TransportClient::connect_endpoint_timeout(
+                endpoint,
+                self.timeout,
+            )?);
+        }
+        Ok(self.conns[r].as_mut().unwrap())
+    }
+
+    fn mark_down(&mut self, r: usize) {
+        self.conns[r] = None;
+        self.registry.replica(r).set_healthy(false);
+        self.failovers.incr();
+    }
+
+    /// Ship every replica's batch before reading any reply — the
+    /// replicas overlap their compute while the router is still
+    /// writing, which is the cluster's whole parallelism story on a
+    /// synchronous client. Then collect per replica with
+    /// hedge/failover. `None` marks a replica that died (and has been
+    /// marked down); per-sub `Response::Error`s pass through untouched.
+    fn fan_out(
+        &mut self,
+        batches: Vec<Vec<Request>>,
+        wave: bool,
+    ) -> Vec<Option<Vec<Response>>> {
+        let nrep = batches.len();
+        let mut bases: Vec<Option<u64>> = vec![None; nrep];
+        for (r, batch) in batches.iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            match self.send_with_retry(r, batch, wave) {
+                Ok(base) => bases[r] = Some(base),
+                Err(_) => self.mark_down(r),
+            }
+        }
+        let mut out: Vec<Option<Vec<Response>>> =
+            (0..nrep).map(|_| None).collect();
+        for (r, batch) in batches.iter().enumerate() {
+            let Some(base) = bases[r] else { continue };
+            out[r] = self.collect_with_hedge(r, base, batch, wave);
+        }
+        out
+    }
+
+    /// Write one replica's sub-batch; a connection-closing failure gets
+    /// one fresh connection (with fresh request ids) before giving up.
+    fn send_with_retry(
+        &mut self,
+        r: usize,
+        reqs: &[Request],
+        wave: bool,
+    ) -> Result<u64, ProtocolError> {
+        match self.try_send(r, reqs, wave) {
+            Ok(base) => Ok(base),
+            Err(e) if e.closes_connection() => {
+                self.conns[r] = None;
+                self.try_send(r, reqs, wave)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn try_send(
+        &mut self,
+        r: usize,
+        reqs: &[Request],
+        wave: bool,
+    ) -> Result<u64, ProtocolError> {
+        let client = self.conn(r)?;
+        let base = client.alloc_ids(reqs.len());
+        let items: Vec<(u64, Request)> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, q)| (base + i as u64, q.clone()))
+            .collect();
+        client.send_batch(&items, wave)?;
+        Ok(base)
+    }
+
+    /// Collect one replica's sub-batch. With hedging armed, the first
+    /// wait runs under a p99-derived deadline; tripping it abandons the
+    /// straggler connection and replays the identical (same-seed, hence
+    /// same-answer) sub-batch on a fresh one — the duplicate that
+    /// finishes is the one that counts, and it can only be one of them
+    /// because the abandoned socket is closed before the replay is
+    /// sent. Without hedging the same replay happens once on any
+    /// connection-closing error; a second failure marks the replica
+    /// down and returns `None`.
+    fn collect_with_hedge(
+        &mut self,
+        r: usize,
+        base: u64,
+        reqs: &[Request],
+        wave: bool,
+    ) -> Option<Vec<Response>> {
+        let hedge_after = self.hedge_delay();
+        if let (Some(d), Some(conn)) = (hedge_after, self.conns[r].as_ref()) {
+            let _ = conn.set_read_timeout(Some(d));
+        }
+        let t0 = Instant::now();
+        let resps = match self.try_recv(r, base, reqs.len()) {
+            Ok(resps) => {
+                if hedge_after.is_some() {
+                    if let Some(conn) = self.conns[r].as_ref() {
+                        let _ = conn.set_read_timeout(Some(self.timeout));
+                    }
+                }
+                Some(resps)
+            }
+            Err(e) => {
+                let hedged = hedge_after.is_some()
+                    && matches!(e, ProtocolError::Timeout);
+                if hedged {
+                    self.hedges_fired.incr();
+                }
+                self.conns[r] = None;
+                let replay = match self.try_send(r, reqs, wave) {
+                    Ok(b) => self.try_recv(r, b, reqs.len()),
+                    Err(e) => Err(e),
+                };
+                match replay {
+                    Ok(resps) => {
+                        if hedged {
+                            self.hedges_won.incr();
+                        }
+                        Some(resps)
+                    }
+                    Err(_) => {
+                        self.mark_down(r);
+                        None
+                    }
+                }
+            }
+        };
+        if resps.is_some() {
+            self.subwave.record(t0.elapsed());
+        }
+        resps
+    }
+
+    /// Read `n` responses for ids `base..base+n` off replica `r`,
+    /// re-ordering by id (the server may interleave wave packing).
+    fn try_recv(
+        &mut self,
+        r: usize,
+        base: u64,
+        n: usize,
+    ) -> Result<Vec<Response>, ProtocolError> {
+        let client =
+            self.conns[r].as_mut().expect("collect follows a send");
+        let mut got: Vec<Option<Response>> = (0..n).map(|_| None).collect();
+        let mut remaining = n;
+        while remaining > 0 {
+            let (id, resp) = client.recv_one()?;
+            let idx = id
+                .checked_sub(base)
+                .filter(|&i| i < n as u64)
+                .ok_or(ProtocolError::IdMismatch { sent: base, got: id })?
+                as usize;
+            if got[idx].replace(resp).is_none() {
+                remaining -= 1;
+            }
+        }
+        Ok(got.into_iter().map(|o| o.expect("counted")).collect())
+    }
+
+    /// Hedge deadline: 3× the observed sub-wave p99, floored at 1ms,
+    /// capped at the request timeout. `None` until enough latency
+    /// samples exist (hedging off a cold histogram would fire blind)
+    /// or when hedging is disabled.
+    fn hedge_delay(&self) -> Option<Duration> {
+        if !self.hedge || self.subwave.count() < HEDGE_MIN_SAMPLES {
+            return None;
+        }
+        let p99 = self.subwave.quantile_ns(0.99);
+        let d = Duration::from_nanos(
+            p99.saturating_mul(HEDGE_P99_MULTIPLE)
+                .max(HEDGE_FLOOR.as_nanos() as u64),
+        );
+        Some(d.min(self.timeout))
+    }
+}
+
+/// Split `m` draw slots across replicas proportionally to their masses,
+/// deterministically in `seed`. Returns per-replica counts and the
+/// slot-order pick sequence (the merge replays it so draw order is
+/// reproducible). Zero-mass replicas are never picked.
+fn split_draws(masses: &[f64], m: usize, seed: u64) -> (Vec<u32>, Vec<usize>) {
+    let total: f64 = masses.iter().sum();
+    debug_assert!(total > 0.0);
+    let mut rng = Rng::seeded(mix64(seed ^ SPLIT_SALT));
+    let mut counts = vec![0u32; masses.len()];
+    let mut picks = Vec::with_capacity(m);
+    for _ in 0..m {
+        let mut x = rng.f64() * total;
+        let mut pick = 0usize;
+        for (r, &w) in masses.iter().enumerate() {
+            if w <= 0.0 {
+                continue;
+            }
+            pick = r;
+            x -= w;
+            if x <= 0.0 {
+                break;
+            }
+        }
+        // f64 rounding can leave x marginally positive after the last
+        // positive-mass replica; `pick` already holds it.
+        counts[pick] += 1;
+        picks.push(pick);
+    }
+    (counts, picks)
+}
+
+/// Per-replica sub-seed: derived, stable, and distinct per replica so
+/// replicas never walk correlated streams for one logical request.
+fn sub_seed(seed: u64, replica: usize) -> u64 {
+    mix64(seed ^ SUB_SALT ^ ((replica as u64) << 48))
+}
+
+const SPLIT_SALT: u64 = 0x53504C49_54; // "SPLIT"
+const SUB_SALT: u64 = 0x5355_4253; // "SUBS"
+
+/// Merge-sort a pooled top-k candidate list: score descending, global
+/// id ascending as the tie-break (deterministic across replica
+/// orderings), truncated to `k`.
+fn merge_topk(mut pool: Vec<(u32, f64)>, k: usize) -> Vec<(u32, f64)> {
+    pool.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    pool.truncate(k);
+    pool
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_is_deterministic_and_complete() {
+        let masses = vec![3.0, 0.0, 1.0];
+        let (c1, p1) = split_draws(&masses, 1000, 42);
+        let (c2, p2) = split_draws(&masses, 1000, 42);
+        assert_eq!(c1, c2);
+        assert_eq!(p1, p2);
+        assert_eq!(c1.iter().sum::<u32>(), 1000);
+        assert_eq!(p1.len(), 1000);
+        assert_eq!(c1[1], 0, "zero-mass replica must never be picked");
+        // 3:1 mass ratio → roughly 750/250.
+        assert!(c1[0] > 650 && c1[0] < 850, "got {}", c1[0]);
+        // Counts and picks agree.
+        let mut recount = vec![0u32; 3];
+        for &r in &p1 {
+            recount[r] += 1;
+        }
+        assert_eq!(recount, c1);
+    }
+
+    #[test]
+    fn split_varies_with_seed() {
+        let masses = vec![1.0, 1.0];
+        let (_, p1) = split_draws(&masses, 64, 1);
+        let (_, p2) = split_draws(&masses, 64, 2);
+        assert_ne!(p1, p2, "different seeds must split differently");
+    }
+
+    #[test]
+    fn sub_seeds_are_distinct_per_replica() {
+        let s: Vec<u64> = (0..8).map(|r| sub_seed(977, r)).collect();
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert_ne!(s[i], s[j]);
+            }
+            assert_ne!(s[i], 977, "sub-seed must not echo the request seed");
+        }
+    }
+
+    #[test]
+    fn topk_merge_sorts_and_breaks_ties_by_id() {
+        let pool = vec![
+            (7, 0.25),
+            (1, 0.5),
+            (9, 0.25),
+            (3, 0.125),
+            (2, 0.25),
+        ];
+        let merged = merge_topk(pool, 4);
+        assert_eq!(merged, vec![(1, 0.5), (2, 0.25), (7, 0.25), (9, 0.25)]);
+    }
+}

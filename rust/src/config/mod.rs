@@ -288,6 +288,37 @@ impl Default for ServingConfig {
     }
 }
 
+/// Replicated-serving cluster parameters (`rust/src/cluster`).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Static replica roster: comma-separated endpoints
+    /// (`tcp:HOST:PORT` / `uds:PATH`), empty = single-process serving.
+    /// The registry's consistent-hash ring assigns every class id to
+    /// exactly one of these.
+    pub replicas: String,
+    /// Per-replica connect/read deadline in milliseconds — a dead
+    /// replica fails with a typed `Timeout` instead of hanging the
+    /// router; the failover path depends on it.
+    pub request_timeout_ms: u64,
+    /// Hedge straggler sub-requests: after a p99-derived delay, resend
+    /// the sub-request on a fresh connection and take the first answer.
+    pub hedge: bool,
+    /// Virtual nodes per replica on the consistent-hash ring (more =
+    /// smoother class balance, marginally slower ring lookups).
+    pub virtual_nodes: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            replicas: String::new(),
+            request_timeout_ms: 1000,
+            hedge: false,
+            virtual_nodes: 64,
+        }
+    }
+}
+
 /// Optimizer selection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OptimizerKind {
@@ -412,6 +443,7 @@ pub struct Config {
     pub model: ModelConfig,
     pub sampler: SamplerConfig,
     pub serving: ServingConfig,
+    pub cluster: ClusterConfig,
     pub train: TrainConfig,
     pub data: DataConfig,
 }
@@ -563,6 +595,15 @@ impl Config {
             "serving.max_wait_us" => self.serving.max_wait_us = u64v(key, v)?,
             "serving.listen" => self.serving.listen = v.to_string(),
 
+            "cluster.replicas" => self.cluster.replicas = v.to_string(),
+            "cluster.request_timeout_ms" => {
+                self.cluster.request_timeout_ms = u64v(key, v)?
+            }
+            "cluster.hedge" => self.cluster.hedge = boolean(key, v)?,
+            "cluster.virtual_nodes" => {
+                self.cluster.virtual_nodes = us(key, v)?
+            }
+
             "train.batch_size" => self.train.batch_size = us(key, v)?,
             "train.steps" => self.train.steps = us(key, v)?,
             "train.lr" => self.train.lr = f32v(key, v)?,
@@ -639,6 +680,14 @@ impl Config {
                 "serving.listen must be a host:port bind address".into(),
             ));
         }
+        if self.cluster.request_timeout_ms == 0 {
+            return Err(ConfigError(
+                "cluster.request_timeout_ms must be > 0".into(),
+            ));
+        }
+        if self.cluster.virtual_nodes == 0 {
+            return Err(ConfigError("cluster.virtual_nodes must be > 0".into()));
+        }
         if self.train.batch_size == 0 {
             return Err(ConfigError("train.batch_size must be > 0".into()));
         }
@@ -693,6 +742,18 @@ impl Config {
                     ("max_batch", Json::from(self.serving.max_batch)),
                     ("max_wait_us", Json::from(self.serving.max_wait_us as usize)),
                     ("listen", Json::from(self.serving.listen.as_str())),
+                ]),
+            ),
+            (
+                "cluster",
+                Json::obj(vec![
+                    ("replicas", Json::from(self.cluster.replicas.as_str())),
+                    (
+                        "request_timeout_ms",
+                        Json::from(self.cluster.request_timeout_ms as usize),
+                    ),
+                    ("hedge", Json::from(self.cluster.hedge)),
+                    ("virtual_nodes", Json::from(self.cluster.virtual_nodes)),
                 ]),
             ),
             (
@@ -790,6 +851,35 @@ mod tests {
         assert!(c.validate().is_err());
         c.serving.max_batch = 32;
         c.serving.listen = String::new();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cluster_keys_round_trip_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.cluster.replicas, "");
+        assert_eq!(c.cluster.request_timeout_ms, 1000);
+        assert!(!c.cluster.hedge);
+        assert_eq!(c.cluster.virtual_nodes, 64);
+        c.set("cluster.replicas", "tcp:127.0.0.1:7411,tcp:127.0.0.1:7412")
+            .unwrap();
+        c.set("cluster.request_timeout_ms", "250").unwrap();
+        c.set("cluster.hedge", "true").unwrap();
+        c.set("cluster.virtual_nodes", "128").unwrap();
+        let j = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&j).unwrap();
+        assert_eq!(
+            c2.cluster.replicas,
+            "tcp:127.0.0.1:7411,tcp:127.0.0.1:7412"
+        );
+        assert_eq!(c2.cluster.request_timeout_ms, 250);
+        assert!(c2.cluster.hedge);
+        assert_eq!(c2.cluster.virtual_nodes, 128);
+        c.cluster.request_timeout_ms = 0;
+        assert!(c.validate().is_err());
+        c.cluster.request_timeout_ms = 1000;
+        c.cluster.virtual_nodes = 0;
         assert!(c.validate().is_err());
     }
 

@@ -50,6 +50,26 @@
 //!   pipelined clients — waves are admitted or shed whole, never split
 //!   across an overload boundary — and responses encode zero-copy into
 //!   reused per-connection buffers.
+//! * **L5 ([`cluster`])** — the replicated serving cluster: several L4
+//!   servers, each holding one consistent-hash shard of the class
+//!   universe, answering as one. A [`cluster::ReplicaRegistry`] owns
+//!   the static replica list (`cluster.replicas`), per-replica health,
+//!   the ring that maps every global class id to its owner, and the
+//!   global↔local id translation; a [`cluster::ClusterRouter`] fronts
+//!   the single-node client API, fanning each request out by shard
+//!   ownership and merging exactly (sample via a mass-weighted
+//!   two-phase split over the replicas' advertised `MASS` — the
+//!   distributed analogue of the sharded tree's two-level pick — top-k
+//!   via rescale-and-merge, probability via owner lookup), with
+//!   deterministic per-request seeds so cluster draws are
+//!   reproducible; churn enters through the router and replicates via
+//!   an epoch-sequenced log with per-replica acked cursors and
+//!   observable lag; failover marks dead replicas down and re-routes
+//!   idempotent reads over the survivors, optionally **hedging**
+//!   straggler sub-waves after a p99-derived delay. `serve-bench
+//!   --replicas N` drives an N-replica in-process cluster and
+//!   `bench-check --require-replica-speedup R` gates the scaling win
+//!   in CI.
 //!
 //! ## Mutable class universe (this PR's tentpole)
 //!
@@ -274,6 +294,7 @@
 pub mod benchkit;
 pub mod bias;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -320,6 +341,10 @@ pub mod prelude {
     pub use crate::transport::{
         ClientFrameStats, Endpoint, ProtocolError, TransportClient,
         TransportServer, TransportStats, VocabAdmin,
+    };
+    pub use crate::cluster::{
+        shard_partition, Cluster, ClusterError, ClusterOptions, ClusterQuery,
+        ClusterReply, ClusterRouter, ReplicaRegistry,
     };
     pub use crate::softmax::{
         full_softmax_loss, sampled_softmax_loss, SampledLoss,

@@ -195,7 +195,7 @@ fn cmd_sample(raw: &[String]) -> Result<()> {
 /// machine-readable `BENCH {json}` line (qps, p50/p99 latency,
 /// coalescing, swap stalls, frame codec overhead).
 fn cmd_serve_bench(raw: &[String]) -> Result<()> {
-    let a = Args::parse(raw, &["help", "no-writer"])?;
+    let a = Args::parse(raw, &["help", "no-writer", "hedge"])?;
     if a.has("help") {
         println!(
             "{}",
@@ -226,6 +226,23 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
                                wire v3 wave frames of N sub-requests \
                                (1 = one frame per request; uds/tcp only)",
                         default: Some("1".into()),
+                    },
+                    FlagSpec {
+                        name: "replicas",
+                        help: "spin N in-process serving replicas — each \
+                               owning one consistent-hash shard of the \
+                               class universe — and route the load \
+                               through the L5 cluster router (uds/tcp \
+                               only; adds cluster lag/failover/hedge \
+                               cells to the BENCH record)",
+                        default: Some("1".into()),
+                    },
+                    FlagSpec {
+                        name: "hedge",
+                        help: "hedge straggling replica sub-requests \
+                               after a p99-derived delay (cluster path \
+                               only)",
+                        default: None,
                     },
                     FlagSpec {
                         name: "mix",
@@ -295,16 +312,12 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
         a.usize_or("updates-per-swap", 32)?
     };
     let hold = a.usize_or("hold", 0)?;
+    let replicas = a.usize_or("replicas", 1)?;
+    let hedge = a.has("hedge");
     let n = cfg.model.num_classes.min(50_000);
     let d = cfg.model.embed_dim.min(128);
     let mut rng = Rng::seeded(cfg.sampler.seed);
     let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
-    let sampler = rfsoftmax::coordinator::build_sampler(
-        &cfg,
-        &classes,
-        Some(&vec![1.0; n]),
-        &mut rng,
-    )?;
     let spec = rfsoftmax::serving::LoadSpec {
         readers: threads,
         requests_per_reader: requests,
@@ -325,19 +338,65 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
         listen: cfg.serving.listen.clone(),
         quantize: cfg.sampler.quantize,
         hold: std::time::Duration::from_secs(hold as u64),
+        replicas,
+        hedge,
+        virtual_nodes: cfg.cluster.virtual_nodes,
     };
-    println!(
-        "serve-bench: sampler={} n={n} d={d} m={} transport={} wave={wave} \
-         mix={} readers={threads} requests/reader={requests} max_batch={} \
-         max_wait={}µs",
-        sampler.name(),
-        spec.m,
-        transport.name(),
-        mix.label(),
-        cfg.serving.max_batch,
-        cfg.serving.max_wait_us,
-    );
-    let report = rfsoftmax::serving::run_closed_loop(sampler.as_ref(), &spec)?;
+    let report = if replicas > 1 {
+        // Cluster path: the class universe is pre-partitioned by the
+        // consistent-hash ring, one sampler per replica over exactly
+        // its shard, and the load runs through the L5 router.
+        let parts = rfsoftmax::cluster::shard_partition(
+            n,
+            replicas,
+            cfg.cluster.virtual_nodes,
+        );
+        let mut samplers = Vec::with_capacity(replicas);
+        for p in &parts {
+            let mut shard = Matrix::zeros(p.len(), d);
+            for (i, &g) in p.iter().enumerate() {
+                shard.row_mut(i).copy_from_slice(classes.row(g as usize));
+            }
+            samplers.push(rfsoftmax::coordinator::build_sampler(
+                &cfg,
+                &shard,
+                Some(&vec![1.0; p.len()]),
+                &mut rng,
+            )?);
+        }
+        println!(
+            "serve-bench: sampler={} n={n} d={d} m={} transport={} \
+             replicas={replicas} hedge={hedge} wave={wave} mix={} \
+             readers={threads} requests/reader={requests} max_batch={} \
+             max_wait={}µs",
+            samplers[0].name(),
+            spec.m,
+            transport.name(),
+            mix.label(),
+            cfg.serving.max_batch,
+            cfg.serving.max_wait_us,
+        );
+        rfsoftmax::serving::run_cluster_closed_loop(&samplers, &spec)?
+    } else {
+        let sampler = rfsoftmax::coordinator::build_sampler(
+            &cfg,
+            &classes,
+            Some(&vec![1.0; n]),
+            &mut rng,
+        )?;
+        println!(
+            "serve-bench: sampler={} n={n} d={d} m={} transport={} \
+             wave={wave} mix={} readers={threads} requests/reader={requests} \
+             max_batch={} max_wait={}µs",
+            sampler.name(),
+            spec.m,
+            transport.name(),
+            mix.label(),
+            cfg.serving.max_batch,
+            cfg.serving.max_wait_us,
+        );
+        rfsoftmax::serving::run_closed_loop(sampler.as_ref(), &spec)?
+    };
     println!("{}", report.render());
     println!("BENCH {}", report.to_json());
     Ok(())
@@ -394,9 +453,13 @@ fn cmd_stats(raw: &[String]) -> Result<()> {
                         default: None,
                     },
                     FlagSpec {
-                        name: "<endpoint>",
+                        name: "<endpoints…>",
                         help: "tcp:HOST:PORT | uds:PATH | bare \
-                               address/path (positional)",
+                               address/path (positional; several \
+                               endpoints scrape a whole replica \
+                               cluster and print a merged snapshot \
+                               with per-replica epoch / epoch-lag \
+                               columns)",
                         default: None,
                     },
                 ]
@@ -405,9 +468,15 @@ fn cmd_stats(raw: &[String]) -> Result<()> {
         return Ok(());
     }
     a.check_known(&["help", "json", "expect-stage-count"])?;
-    let [endpoint] = a.positional() else {
-        bail!("stats: give exactly one endpoint (tcp:HOST:PORT | uds:PATH)");
-    };
+    let endpoints = a.positional();
+    anyhow::ensure!(
+        !endpoints.is_empty(),
+        "stats: give at least one endpoint (tcp:HOST:PORT | uds:PATH)"
+    );
+    if endpoints.len() > 1 {
+        return stats_cluster(endpoints, a.has("json"), a.get("expect-stage-count"));
+    }
+    let endpoint = &endpoints[0];
     let mut client = connect_stats_endpoint(endpoint)?;
     let text = client
         .stats()
@@ -435,6 +504,107 @@ fn cmd_stats(raw: &[String]) -> Result<()> {
     } else {
         println!("{}", to_string_pretty(&j));
     }
+    Ok(())
+}
+
+/// Multi-endpoint `stats`: scrape every replica of a serving cluster
+/// and print one merged snapshot. Per-replica columns include the
+/// snapshot epoch and `epoch_lag` — how far each replica's epoch
+/// trails the most-advanced one, the scrape-side view of replication
+/// lag (every replicated churn apply publishes exactly one epoch, so
+/// a converged cluster shows lag 0 everywhere). The router-side lag
+/// (queued log entries) lives in the cluster's own telemetry; this
+/// command needs nothing but the replicas' `STATS` frames, so it works
+/// against any wire-v3 servers.
+fn stats_cluster(
+    endpoints: &[String],
+    raw_json: bool,
+    expect_stage_count: Option<&str>,
+) -> Result<()> {
+    anyhow::ensure!(
+        expect_stage_count.is_none(),
+        "stats: --expect-stage-count reconciles a single endpoint \
+         against one load's request total — scrape replicas one at a \
+         time for that"
+    );
+    let mut snaps: Vec<(String, rfsoftmax::json::Json)> = Vec::new();
+    for ep in endpoints {
+        let mut client = connect_stats_endpoint(ep)?;
+        let text = client
+            .stats()
+            .map_err(|e| anyhow::anyhow!("STATS scrape of {ep} failed: {e}"))?;
+        let j = rfsoftmax::json::parse(&text).map_err(|e| {
+            anyhow::anyhow!("{ep}: STATS returned invalid JSON: {e}")
+        })?;
+        snaps.push((ep.clone(), j));
+    }
+    let epoch_of = |j: &rfsoftmax::json::Json| -> i64 {
+        j.at(&["server", "epoch"]).and_then(|v| v.as_i64()).unwrap_or(0)
+    };
+    let count_of = |j: &rfsoftmax::json::Json, path: &[&str]| -> i64 {
+        j.at(path).and_then(|v| v.as_i64()).unwrap_or(0)
+    };
+    let max_epoch = snaps.iter().map(|(_, j)| epoch_of(j)).max().unwrap_or(0);
+    let mut replicas = Vec::with_capacity(snaps.len());
+    let (mut total_requests, mut total_frames) = (0i64, 0i64);
+    for (ep, j) in &snaps {
+        let epoch = epoch_of(j);
+        let requests = count_of(j, &["batcher", "requests"]);
+        let frames = count_of(j, &["transport", "request_frames"]);
+        total_requests += requests;
+        total_frames += frames;
+        replicas.push(rfsoftmax::json::Json::obj(vec![
+            ("endpoint", rfsoftmax::json::Json::from(ep.as_str())),
+            ("epoch", rfsoftmax::json::Json::from(epoch as f64)),
+            (
+                "epoch_lag",
+                rfsoftmax::json::Json::from((max_epoch - epoch) as f64),
+            ),
+            ("requests", rfsoftmax::json::Json::from(requests as f64)),
+            ("stats", j.clone()),
+        ]));
+    }
+    let merged = rfsoftmax::json::Json::obj(vec![
+        ("replicas", rfsoftmax::json::Json::Arr(replicas)),
+        (
+            "merged",
+            rfsoftmax::json::Json::obj(vec![
+                ("count", rfsoftmax::json::Json::from(snaps.len())),
+                ("max_epoch", rfsoftmax::json::Json::from(max_epoch as f64)),
+                (
+                    "total_requests",
+                    rfsoftmax::json::Json::from(total_requests as f64),
+                ),
+                (
+                    "total_request_frames",
+                    rfsoftmax::json::Json::from(total_frames as f64),
+                ),
+            ]),
+        ),
+    ]);
+    if raw_json {
+        println!("{merged}");
+        return Ok(());
+    }
+    println!(
+        "{:<28} {:>8} {:>10} {:>10}",
+        "endpoint", "epoch", "epoch_lag", "requests"
+    );
+    for (ep, j) in &snaps {
+        let epoch = epoch_of(j);
+        println!(
+            "{:<28} {:>8} {:>10} {:>10}",
+            ep,
+            epoch,
+            max_epoch - epoch,
+            count_of(j, &["batcher", "requests"]),
+        );
+    }
+    println!(
+        "merged: replicas={} max_epoch={max_epoch} total_requests=\
+         {total_requests} total_request_frames={total_frames}",
+        snaps.len()
+    );
     Ok(())
 }
 
@@ -494,7 +664,7 @@ fn bench_identity(tag: &str) -> Option<(&'static [&'static str], &'static str)> 
         "serving_closed_loop" => Some((
             &[
                 "sampler", "transport", "mix", "readers", "wave", "churn",
-                "quantize", "simd",
+                "quantize", "simd", "replicas",
             ],
             "qps",
         )),
@@ -562,6 +732,16 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
                         default: None,
                     },
                     FlagSpec {
+                        name: "require-replica-speedup",
+                        help: "also require a replicas>1 serving record \
+                               with qps ≥ this factor over the \
+                               single-replica record at the same \
+                               transport/mix/wave/readers/churn, with \
+                               no abandoned replication entries and a \
+                               bounded steady-state replication lag",
+                        default: None,
+                    },
+                    FlagSpec {
                         name: "baseline",
                         help: "BENCH file from a previous run; matching \
                                cells must not regress their throughput \
@@ -589,6 +769,7 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
         "require-wave-amortization",
         "require-simd-speedup",
         "require-telemetry-overhead",
+        "require-replica-speedup",
         "baseline",
         "max-regression",
     ])?;
@@ -730,6 +911,86 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
         println!(
             "bench-check: telemetry overhead worst {worst:.3}% ≤ {limit}% \
              ok ({seen} serving records)"
+        );
+    }
+    if let Some(factor) = a.get("require-replica-speedup") {
+        let factor: f64 = factor.parse().map_err(|_| {
+            anyhow::anyhow!("--require-replica-speedup: bad factor '{factor}'")
+        })?;
+        // "Bounded lag": the worst per-replica replication backlog a
+        // qualifying cluster record may report at steady state (the
+        // load generator samples it when the readers finish, before
+        // the convergence flush).
+        const MAX_REPLICA_LAG: usize = 8;
+        // A record pair is comparable when everything but the replica
+        // count matches — same transport, mix, wave, reader count, and
+        // churn schedule — so the speedup measures the cluster, not a
+        // config delta. Records without a 'replicas' field (older
+        // baselines) count as single-replica.
+        let shape = |j: &rfsoftmax::json::Json| -> Option<(String, usize, f64)> {
+            if j.get("bench")?.as_str()? != "serving_closed_loop" {
+                return None;
+            }
+            let key = format!(
+                "{}|{}|{}|{}|{}",
+                j.get("transport")?.as_str()?,
+                j.get("mix")?.as_str()?,
+                j.get("wave")?.as_usize()?,
+                j.get("readers")?.as_usize()?,
+                j.get("churn").and_then(|c| c.as_str()).unwrap_or("-"),
+            );
+            let replicas =
+                j.get("replicas").and_then(|r| r.as_usize()).unwrap_or(1);
+            Some((key, replicas, j.get("qps")?.as_f64()?))
+        };
+        let mut best: Option<(f64, f64, usize)> = None; // (single, multi, n)
+        for single in &records {
+            let Some((key, 1, qps1)) = shape(single) else { continue };
+            for multi in &records {
+                let Some((mkey, n, qpsn)) = shape(multi) else { continue };
+                if n <= 1 || mkey != key {
+                    continue;
+                }
+                // Lost replication entries mean the cluster shed churn
+                // to go fast, and an unbounded steady-state replication
+                // backlog means it deferred the work instead of doing
+                // it — neither record can prove the win.
+                let dropped = multi
+                    .get("repl_dropped")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(0);
+                let lag = multi
+                    .get("repl_lag")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(0);
+                if dropped > 0 || lag > MAX_REPLICA_LAG {
+                    continue;
+                }
+                let speedup = qpsn / qps1.max(1e-12);
+                let best_speedup =
+                    best.map_or(0.0, |(s, m, _)| m / s.max(1e-12));
+                if speedup > best_speedup {
+                    best = Some((qps1, qpsn, n));
+                }
+            }
+        }
+        let Some((qps1, qpsn, n)) = best else {
+            bail!(
+                "bench-check: no comparable replicas=1 / replicas>1 \
+                 serving record pair (same transport/mix/wave/readers/\
+                 churn, repl_dropped=0, repl_lag ≤ {MAX_REPLICA_LAG}) — \
+                 cannot prove the replica speedup"
+            );
+        };
+        let speedup = qpsn / qps1.max(1e-12);
+        anyhow::ensure!(
+            speedup >= factor,
+            "bench-check: {n}-replica qps {qpsn:.0} is {speedup:.2}× the \
+             single-replica {qps1:.0}, need ≥ {factor}×"
+        );
+        println!(
+            "bench-check: replica speedup {speedup:.2}× \
+             ({qps1:.0} → {qpsn:.0} qps at {n} replicas) ≥ {factor}× ok"
         );
     }
     if let Some(baseline_file) = a.get("baseline") {

@@ -212,6 +212,14 @@ impl<M: FeatureMap + Clone + 'static> Sampler for KernelSampler<M> {
         self.tree.probability(&sc.query, class)
     }
 
+    /// Exact normalizer of this sampler's `probability`: the tree's
+    /// effective root mass at φ(h).
+    fn root_mass(&self, h: &[f32]) -> f64 {
+        let mut sc = self.scratch.borrow_mut();
+        self.map.map_into(h, &mut sc.query);
+        self.tree.effective_mass(&sc.query)
+    }
+
     fn sample_negatives(
         &self,
         h: &[f32],

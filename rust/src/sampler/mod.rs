@@ -385,6 +385,19 @@ pub trait Sampler: Send {
     /// Exact probability `q_i(h)` of class `i`.
     fn probability(&self, h: &[f32], class: usize) -> f64;
 
+    /// Total unnormalized proposal mass `M(h)` — the normalizer the
+    /// per-class masses `q_i(h) · M(h)` are divided by. Serving clusters
+    /// use it to merge draws across replicas holding disjoint class
+    /// shards: with each replica advertising its own `M_r(h)`, picking a
+    /// replica ∝ `M_r(h)` and a class within it from `q^(r)(· | h)`
+    /// reproduces the union distribution exactly. The default, `live
+    /// classes`, is exact for uniform samplers (unit mass per live
+    /// class); kernel samplers override it with their tree root mass.
+    fn root_mass(&self, h: &[f32]) -> f64 {
+        let _ = h;
+        self.live_classes() as f64
+    }
+
     /// Draw `m` *negatives*: classes i.i.d. from `q(· | h)` conditioned on
     /// `≠ target`, with probabilities renormalized by `1 − q_target`
     /// (rejection sampling; exact).

@@ -400,6 +400,13 @@ impl ShardedKernelTree {
         (weights, total)
     }
 
+    /// Total effective mass across all shards for query `z` — the
+    /// normalizer of [`ShardedKernelTree::probability`], advertised to
+    /// cluster routers for exact cross-replica merge.
+    pub fn total_mass(&self, z: &[f32]) -> f64 {
+        self.shard_weights(z).1
+    }
+
     /// Guard against an fp-boundary pick of a dead shard (weight exactly
     /// 0 should make it unreachable; alias/categorical edge rounding is
     /// the only way in): reroute to the first live shard.
@@ -755,6 +762,14 @@ impl<M: FeatureMap + Clone + 'static> Sampler for ShardedKernelSampler<M> {
         self.tree.probability(&z, class)
     }
 
+    /// Exact total mass: `probability(h, i) · root_mass(h)` is class
+    /// `i`'s absolute (unnormalized) mass, additive across disjoint
+    /// samplers — what the cluster router's mass-weighted merge needs.
+    fn root_mass(&self, h: &[f32]) -> f64 {
+        let z = self.map.map(h);
+        self.tree.total_mass(&z)
+    }
+
     fn sample_negatives(
         &self,
         h: &[f32],
@@ -962,6 +977,56 @@ mod tests {
             assert!(
                 (total - 1.0).abs() < 1e-6,
                 "n={n} S={shards}: Σq = {total}"
+            );
+        }
+    }
+
+    #[test]
+    fn root_mass_is_the_exact_probability_normalizer() {
+        // Per-class absolute masses q_i·M must be additive across two
+        // disjoint samplers whose union is a third — the invariant the
+        // cluster router's mass-weighted merge rests on.
+        let (classes, whole) = sharded_rff(48, 8, 4, 300);
+        let mut rng = Rng::seeded(301);
+        let h = unit_vector(&mut rng, 8);
+        let m_whole = whole.root_mass(&h);
+        assert!(m_whole > 0.0);
+
+        // Σ_i q_i(h)·M(h) over all classes = M(h) exactly when q sums
+        // to 1 — i.e. M really is the normalizer.
+        let total_q: f64 = (0..48).map(|i| whole.probability(&h, i)).sum();
+        assert!((total_q - 1.0).abs() < 1e-6);
+
+        // Split the universe in half; the halves' masses must sum to a
+        // value consistent with per-class absolute masses of the whole
+        // being partitioned (same ε floor per live class, raw kernel
+        // mass additive over leaves).
+        let rows_of = |range: std::ops::Range<usize>| {
+            let data: Vec<f32> =
+                range.clone().flat_map(|i| classes.row(i).to_vec()).collect();
+            Matrix::from_vec(range.len(), 8, data)
+        };
+        let (lo, hi) = (rows_of(0..24), rows_of(24..48));
+        let map = whole.feature_map().clone();
+        let a = ShardedKernelSampler::with_map(&lo, map.clone(), 2, "rff-sharded");
+        let b = ShardedKernelSampler::with_map(&hi, map, 2, "rff-sharded");
+        let (ma, mb) = (a.root_mass(&h), b.root_mass(&h));
+        // Raw kernel masses are additive over leaves and each sampler
+        // clamps at ≥ 0 per shard, so the split can only gain mass at
+        // clamp boundaries; with unit-normalized RFF features mass stays
+        // far from the clamp and the match is tight.
+        assert!(
+            (ma + mb - m_whole).abs() / m_whole < 1e-3,
+            "split mass {ma}+{mb} vs whole {m_whole}"
+        );
+        // And the merged per-class probability reproduces the whole:
+        // q_union(i) = q_a(i) · ma / (ma+mb) for i in the low half.
+        for i in [0usize, 7, 23] {
+            let merged = a.probability(&h, i) * ma / (ma + mb);
+            let want = whole.probability(&h, i);
+            assert!(
+                (merged - want).abs() / want.max(1e-12) < 5e-3,
+                "class {i}: merged {merged} vs whole {want}"
             );
         }
     }

@@ -466,6 +466,15 @@ impl KernelTree {
         dot(&self.total, z) as f64
     }
 
+    /// Effective root mass for a query: the normalizer every leaf's
+    /// `q_i(z)` is divided by (clamped + ε·live, zero when nothing is
+    /// live). This is the sampler's advertised mass in a cluster —
+    /// `q_i(z) · effective_mass(z)` is leaf `i`'s absolute mass, which
+    /// merges exactly across replicas holding disjoint class shards.
+    pub fn effective_mass(&self, z: &[f32]) -> f64 {
+        self.eff(self.mass(z), self.live)
+    }
+
     /// Effective (clamped + ε·count) mass of a subtree, given its raw
     /// mass and **live**-leaf count.
     ///

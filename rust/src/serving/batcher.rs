@@ -254,6 +254,17 @@ impl MicroBatcher {
         }
     }
 
+    /// Total proposal mass of the *current* snapshot at query `h`, plus
+    /// the epoch it was read from. Answered inline from the snapshot —
+    /// never queued through the batcher — because it is a cheap root
+    /// lookup the cluster router issues before every mass-weighted
+    /// replica pick, and batching it would serialize the router's
+    /// fan-out behind unrelated serve traffic.
+    pub fn mass(&self, h: &[f32]) -> (f64, u64) {
+        let snap = self.server.snapshot();
+        (snap.sampler().root_mass(h), snap.epoch())
+    }
+
     /// Cumulative counters as a named snapshot.
     pub fn stats(&self) -> BatcherStats {
         BatcherStats {

@@ -34,6 +34,9 @@
 //! transports) mean frame and wave encode/decode overhead as BENCH JSON.
 
 use super::{BatcherOptions, MicroBatcher, SamplerServer, SamplerWriter};
+use crate::cluster::{
+    shard_partition, Cluster, ClusterError, ClusterOptions, ClusterQuery,
+};
 use crate::json::Json;
 use crate::linalg::{simd, unit_vector, Matrix, QuantizeKind};
 use crate::metrics::live::{LiveRegistry, Stage};
@@ -297,6 +300,21 @@ pub struct LoadSpec {
     /// the request total. Stats in the BENCH record are read *before*
     /// the hold, so scrapes never pollute the frame counters.
     pub hold: Duration,
+    /// Serving replicas. `1` is the classic single-node closed loop
+    /// ([`run_closed_loop`]); `> 1` spins this many in-process
+    /// [`TransportServer`]s — each owning one consistent-hash shard of
+    /// the class universe — and drives them through a
+    /// [`crate::cluster::ClusterRouter`] ([`run_cluster_closed_loop`]).
+    pub replicas: usize,
+    /// Enable hedged sub-requests in the cluster path
+    /// (`cluster.hedge`): duplicate a straggling replica sub-wave after
+    /// a p99-derived delay. Ignored when `replicas == 1`.
+    pub hedge: bool,
+    /// Consistent-hash ring points per replica
+    /// (`cluster.virtual_nodes`). Must match the partition the
+    /// per-replica samplers were built over. Ignored when
+    /// `replicas == 1`.
+    pub virtual_nodes: usize,
 }
 
 impl Default for LoadSpec {
@@ -318,6 +336,9 @@ impl Default for LoadSpec {
             listen: "127.0.0.1:0".into(),
             quantize: QuantizeKind::None,
             hold: Duration::ZERO,
+            replicas: 1,
+            hedge: false,
+            virtual_nodes: 64,
         }
     }
 }
@@ -412,6 +433,24 @@ pub struct LoadReport {
     /// per-request wall. Machine-checked by `bench-check
     /// --require-telemetry-overhead` (ISSUE 7 budget: ≤ 2%).
     pub telemetry_overhead_pct: f64,
+    /// Serving replicas behind the readers (1 = single node; > 1 =
+    /// cluster path through the [`crate::cluster::ClusterRouter`]).
+    pub replicas: usize,
+    /// Worst per-replica replication lag (queued + in-flight log
+    /// entries) sampled the moment the readers finished — the
+    /// steady-state lag under load, before the final flush converges
+    /// it. Always 0 for single-node runs.
+    pub repl_lag: u64,
+    /// Replication-log entries abandoned on dead replicas across the
+    /// run (0 unless a replica died mid-churn).
+    pub repl_dropped: u64,
+    /// Hedged sub-requests fired / won by the routers (cluster path
+    /// with `hedge` enabled; always 0 otherwise).
+    pub hedges_fired: u64,
+    pub hedges_won: u64,
+    /// Replica connections the routers declared dead and failed over
+    /// from.
+    pub failovers: u64,
 }
 
 impl LoadReport {
@@ -432,6 +471,17 @@ impl LoadReport {
             self.swap_stalls,
         );
         line.push_str(&format!(" tel_ovh={:.3}%", self.telemetry_overhead_pct));
+        if self.replicas > 1 {
+            line.push_str(&format!(
+                " replicas={} lag={} dropped={} failovers={} hedges={}/{}",
+                self.replicas,
+                self.repl_lag,
+                self.repl_dropped,
+                self.failovers,
+                self.hedges_won,
+                self.hedges_fired,
+            ));
+        }
         if self.wave > 1 {
             line.push_str(&format!(
                 " wave={} hdr/req={:.3} hdr/resp={:.3}",
@@ -507,6 +557,12 @@ impl LoadReport {
             ("simd", Json::from(self.simd)),
             ("stages", self.stages.clone()),
             ("telemetry_overhead_pct", Json::from(self.telemetry_overhead_pct)),
+            ("replicas", Json::from(self.replicas)),
+            ("repl_lag", Json::from(self.repl_lag as usize)),
+            ("repl_dropped", Json::from(self.repl_dropped as usize)),
+            ("hedges_fired", Json::from(self.hedges_fired as usize)),
+            ("hedges_won", Json::from(self.hedges_won as usize)),
+            ("failovers", Json::from(self.failovers as usize)),
         ])
     }
 }
@@ -762,6 +818,19 @@ fn measure_telemetry_overhead(mean_request_ns: f64) -> f64 {
     per_request / mean_request_ns * 100.0
 }
 
+/// A unix-socket path unique per process AND per call: two concurrent
+/// closed loops with equal seeds must never bind the same path (bind
+/// replaces the file, stranding the first server's listener).
+fn unique_uds_path(seed: u64) -> std::path::PathBuf {
+    static SOCK_SEQ: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "rfsm-serve-{}-{}-{}.sock",
+        std::process::id(),
+        seed,
+        SOCK_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
 /// Run one closed-loop load test against a fork of `sampler`. The
 /// sampler must support serving forks and its class-embedding dimension
 /// must equal `spec.dim` (writer updates are drawn at that width).
@@ -777,6 +846,11 @@ pub fn run_closed_loop(
     anyhow::ensure!(
         spec.wave == 1 || spec.transport.is_wire(),
         "serve load: --wave needs a wire transport (uds|tcp)"
+    );
+    anyhow::ensure!(
+        spec.replicas <= 1,
+        "serve load: replicas > 1 takes the cluster path \
+         (run_cluster_closed_loop)"
     );
     let serve = sampler.fork().ok_or_else(|| {
         anyhow::anyhow!(
@@ -802,17 +876,7 @@ pub fn run_closed_loop(
     let transport = match spec.transport {
         TransportMode::Inproc => None,
         TransportMode::Uds => {
-            // Unique per process AND per run: two concurrent closed loops
-            // with equal seeds must never bind the same path (bind
-            // replaces the file, stranding the first server's listener).
-            static SOCK_SEQ: std::sync::atomic::AtomicU64 =
-                std::sync::atomic::AtomicU64::new(0);
-            let path = std::env::temp_dir().join(format!(
-                "rfsm-serve-{}-{}-{}.sock",
-                std::process::id(),
-                spec.seed,
-                SOCK_SEQ.fetch_add(1, Ordering::Relaxed)
-            ));
+            let path = unique_uds_path(spec.seed);
             let admin =
                 Arc::new(SharedWriterAdmin::new(Arc::clone(&writer), dim));
             Some(
@@ -1274,7 +1338,462 @@ pub fn run_closed_loop(
         simd: simd::tier_name(),
         stages,
         telemetry_overhead_pct,
+        replicas: 1,
+        repl_lag: 0,
+        repl_dropped: 0,
+        hedges_fired: 0,
+        hedges_won: 0,
+        failovers: 0,
     })
+}
+
+/// One in-process serving replica of the cluster closed loop: its own
+/// snapshot server, micro-batcher, and wire transport over one
+/// consistent-hash shard of the class universe.
+struct ClusterNode {
+    server: SamplerServer,
+    batcher: Arc<MicroBatcher>,
+    transport: TransportServer,
+}
+
+/// Run one closed-loop load test against `spec.replicas` in-process
+/// serving replicas behind a [`crate::cluster::ClusterRouter`] — the
+/// engine behind `serve-bench --replicas N`.
+///
+/// `samplers[r]` must be built over exactly the classes of
+/// [`shard_partition`]`(n, replicas, virtual_nodes)[r]` **in order** (n
+/// = the summed class count); each replica serves its shard and the
+/// routers merge answers back into the global id space. Readers issue
+/// bursts of `spec.wave` logical requests through
+/// [`crate::cluster::ClusterRouter::query_burst`]; churn flows through
+/// the epoch-sequenced replication log (so `mut_p50/p99` time the
+/// **log append** — owner replicas converge asynchronously, and the
+/// run flushes the log before reporting). Differences from the
+/// single-node report: `mean_batch`/`batches` are server-side over all
+/// replicas (a logical sample fans out, and every burst pays a `MASS`
+/// round, so server-side requests exceed logical `requests`);
+/// `req_headers_per_request` counts those extra frames too;
+/// `resp_frames`/`resp_headers_per_request` are 0 (the routers'
+/// internal client connections are not instrumented); `stages` is
+/// replica 0's breakdown, representative under the ring's near-uniform
+/// shard balance; the embedding-update writer loop is single-node-only
+/// (no update admin frame exists), so `updates_per_swap` is ignored.
+pub fn run_cluster_closed_loop(
+    samplers: &[Box<dyn Sampler>],
+    spec: &LoadSpec,
+) -> anyhow::Result<LoadReport> {
+    anyhow::ensure!(spec.replicas >= 2, "cluster load: need replicas ≥ 2");
+    anyhow::ensure!(
+        samplers.len() == spec.replicas,
+        "cluster load: {} samplers for {} replicas",
+        samplers.len(),
+        spec.replicas
+    );
+    anyhow::ensure!(
+        spec.transport.is_wire(),
+        "cluster load: --replicas needs a wire transport (uds|tcp)"
+    );
+    anyhow::ensure!(spec.readers >= 1, "cluster load: need ≥ 1 reader");
+    anyhow::ensure!(spec.m >= 1, "cluster load: need m ≥ 1");
+    anyhow::ensure!(spec.top_k >= 1, "cluster load: need top_k ≥ 1");
+    anyhow::ensure!(spec.mix.total() > 0, "cluster load: empty request mix");
+    anyhow::ensure!(
+        spec.wave >= 1 && spec.wave <= crate::transport::MAX_IN_FLIGHT / 2,
+        "cluster load: wave must be in 1..={} (burst sub-batches must \
+         stay under the server's in-flight shed cap)",
+        crate::transport::MAX_IN_FLIGHT / 2
+    );
+    let n: usize = samplers.iter().map(|s| s.num_classes()).sum();
+    let partitions = shard_partition(n, spec.replicas, spec.virtual_nodes);
+    for (r, (p, s)) in partitions.iter().zip(samplers).enumerate() {
+        anyhow::ensure!(
+            p.len() == s.num_classes(),
+            "cluster load: replica {r} sampler holds {} classes but its \
+             ring shard holds {} — build each replica's sampler over \
+             shard_partition(n, replicas, virtual_nodes)[{r}]",
+            s.num_classes(),
+            p.len()
+        );
+    }
+    let dim = spec.dim;
+    let name = samplers[0].name().to_string();
+
+    let mut nodes = Vec::with_capacity(spec.replicas);
+    let mut endpoints = Vec::with_capacity(spec.replicas);
+    for (r, sampler) in samplers.iter().enumerate() {
+        let serve = sampler.fork().ok_or_else(|| {
+            anyhow::anyhow!(
+                "sampler '{}' does not support serving forks",
+                sampler.name()
+            )
+        })?;
+        let (server, writer) = SamplerServer::new(serve);
+        let writer = Arc::new(Mutex::new(writer));
+        let batcher = Arc::new(MicroBatcher::spawn(server.clone(), spec.batcher));
+        let admin = Arc::new(SharedWriterAdmin::new(Arc::clone(&writer), dim));
+        let transport = match spec.transport {
+            TransportMode::Inproc => unreachable!("validated wire-only"),
+            TransportMode::Uds => {
+                let path = unique_uds_path(spec.seed);
+                TransportServer::bind_with_admin(
+                    &path,
+                    Arc::clone(&batcher),
+                    admin,
+                )
+                .map_err(|e| {
+                    anyhow::anyhow!("replica {r}: bind {path:?}: {e}")
+                })?
+            }
+            TransportMode::Tcp => {
+                // Every replica needs its own port, so the in-process
+                // cluster always asks the kernel (spec.listen would
+                // collide past the first replica).
+                TransportServer::bind_tcp_with_admin(
+                    "127.0.0.1:0",
+                    Arc::clone(&batcher),
+                    admin,
+                )
+                .map_err(|e| anyhow::anyhow!("replica {r}: bind tcp: {e}"))?
+            }
+        };
+        endpoints.push(transport.endpoint().clone());
+        nodes.push(ClusterNode { server, batcher, transport });
+    }
+    let cluster = Cluster::connect(
+        endpoints,
+        ClusterOptions {
+            // Generous next to the default 1s: a loaded CI scheduler
+            // stalling a replica must not fake a failover in the bench.
+            request_timeout: Duration::from_secs(5),
+            hedge: spec.hedge,
+            virtual_nodes: spec.virtual_nodes,
+        },
+    );
+    cluster.seed(&partitions);
+    let completed = Arc::new(AtomicU64::new(0));
+
+    struct ChurnOut {
+        latencies_ns: Vec<u64>,
+        adds: u64,
+        retires: u64,
+        churn_done: Option<(Instant, u64)>,
+    }
+    type ReaderOut = (Vec<u64>, [u64; 3]);
+    let t0 = Instant::now();
+    let (reader_out, churn_out, wall, run_end) =
+        std::thread::scope(|scope| {
+            // Churn driver: structural mutations through the router, so
+            // every add/retire takes the replication-log path the
+            // cluster ships with. The driver owns the live-id pool
+            // (global ids), exactly like the single-node loop.
+            let driver = spec.churn.map(|c| {
+                let completed = Arc::clone(&completed);
+                let cluster = &cluster;
+                let pause = spec.swap_pause;
+                let seed = spec.seed ^ 0x57A9_0000_0000_0000;
+                scope.spawn(move || {
+                    let mut router = cluster.client();
+                    let mut rng = Rng::seeded(seed);
+                    let mut live: Vec<u32> = (0..n as u32).collect();
+                    let floor = (n / 2).max(2);
+                    let mut out = ChurnOut {
+                        latencies_ns: Vec::new(),
+                        adds: 0,
+                        retires: 0,
+                        churn_done: None,
+                    };
+                    for _ in 0..c.ops {
+                        let retire_ok = live.len() >= floor + c.batch;
+                        if !retire_ok && c.adds == 0 {
+                            break;
+                        }
+                        let want_add = c.retires == 0
+                            || (c.adds > 0
+                                && rng.below((c.adds + c.retires) as u64)
+                                    < c.adds as u64);
+                        if want_add || !retire_ok {
+                            let mut emb = Matrix::zeros(c.batch, dim);
+                            for r in 0..c.batch {
+                                let v = unit_vector(&mut rng, dim);
+                                emb.row_mut(r).copy_from_slice(&v);
+                            }
+                            let t = Instant::now();
+                            let (globals, _seq) = router.add_classes(&emb);
+                            out.latencies_ns
+                                .push(t.elapsed().as_nanos() as u64);
+                            live.extend_from_slice(&globals);
+                            out.adds += c.batch as u64;
+                        } else {
+                            let victims: Vec<u32> = rng
+                                .sample_distinct(live.len(), c.batch)
+                                .into_iter()
+                                .map(|i| live[i])
+                                .collect();
+                            let t = Instant::now();
+                            router.retire_classes(&victims);
+                            out.latencies_ns
+                                .push(t.elapsed().as_nanos() as u64);
+                            live.retain(|id| !victims.contains(id));
+                            out.retires += c.batch as u64;
+                        }
+                        if !pause.is_zero() {
+                            std::thread::sleep(pause);
+                        }
+                    }
+                    out.churn_done = Some((
+                        Instant::now(),
+                        completed.load(Ordering::Relaxed),
+                    ));
+                    out
+                })
+            });
+            let handles: Vec<_> = (0..spec.readers)
+                .map(|r| {
+                    let completed = Arc::clone(&completed);
+                    let cluster = &cluster;
+                    scope.spawn(move || {
+                        let mut router = cluster.client();
+                        let mut rng = Rng::seeded(
+                            spec.seed.wrapping_add(
+                                (r as u64).wrapping_mul(0x9E37_79B9),
+                            ),
+                        );
+                        let mut lat = Vec::with_capacity(
+                            spec.requests_per_reader / spec.wave + 1,
+                        );
+                        let mut counts = [0u64; 3];
+                        let mut left = spec.requests_per_reader;
+                        while left > 0 {
+                            let w = spec.wave.min(left);
+                            left -= w;
+                            let mut kinds = Vec::with_capacity(w);
+                            let queries: Vec<ClusterQuery> = (0..w)
+                                .map(|_| {
+                                    let kind = spec.mix.pick(&mut rng);
+                                    kinds.push(kind);
+                                    let h = unit_vector(&mut rng, dim);
+                                    match kind {
+                                        ReqKind::Sample => {
+                                            ClusterQuery::Sample {
+                                                h,
+                                                m: spec.m,
+                                                seed: rng.next_u64(),
+                                            }
+                                        }
+                                        ReqKind::Prob => {
+                                            ClusterQuery::Probability {
+                                                h,
+                                                class: rng.index(n) as u32,
+                                            }
+                                        }
+                                        ReqKind::TopK => ClusterQuery::TopK {
+                                            h,
+                                            k: spec.top_k,
+                                        },
+                                    }
+                                })
+                                .collect();
+                            let t = Instant::now();
+                            let results =
+                                router.query_burst(&queries, spec.wave > 1);
+                            lat.push(t.elapsed().as_nanos() as u64);
+                            completed.fetch_add(w as u64, Ordering::Relaxed);
+                            for (kind, res) in kinds.iter().zip(results) {
+                                match res {
+                                    Ok(reply) => {
+                                        std::hint::black_box(&reply);
+                                    }
+                                    // A probability for a class the
+                                    // churn driver retired is a correct
+                                    // cluster answer, not a failure.
+                                    Err(ClusterError::UnknownClass(_))
+                                        if *kind == ReqKind::Prob => {}
+                                    Err(e) => panic!(
+                                        "cluster request failed: {e}"
+                                    ),
+                                }
+                                counts[match kind {
+                                    ReqKind::Sample => 0,
+                                    ReqKind::Prob => 1,
+                                    ReqKind::TopK => 2,
+                                }] += 1;
+                            }
+                        }
+                        (lat, counts)
+                    })
+                })
+                .collect();
+            let reader_out: Vec<ReaderOut> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            let wall = t0.elapsed().as_secs_f64();
+            let run_end = Instant::now();
+            let churn_out = driver
+                .map(|h| h.join().expect("cluster churn driver panicked"));
+            (reader_out, churn_out, wall, run_end)
+        });
+
+    // Steady-state replication lag, sampled before the converging
+    // flush; then await convergence so live_final and the cursors
+    // reflect every mutation the run appended.
+    let repl_lag = cluster.lag().into_iter().max().unwrap_or(0);
+    anyhow::ensure!(
+        cluster.flush(Duration::from_secs(30)),
+        "cluster load: replication did not converge within 30s"
+    );
+    let repl_dropped: u64 = cluster.dropped().iter().sum();
+    let mx = cluster.metrics();
+    let hedges_fired = mx.counter("cluster.hedges_fired").get();
+    let hedges_won = mx.counter("cluster.hedges_won").get();
+    let failovers = mx.counter("cluster.failovers").get();
+
+    let mut all: Vec<u64> = Vec::new();
+    let mut kind_counts = [0u64; 3];
+    for (lat, counts) in reader_out {
+        all.extend(lat);
+        for (acc, c) in kind_counts.iter_mut().zip(counts) {
+            *acc += c;
+        }
+    }
+    all.sort_unstable();
+    let pct = |q: f64| -> f64 {
+        if all.is_empty() {
+            return 0.0;
+        }
+        all[((all.len() - 1) as f64 * q).round() as usize] as f64 / 1000.0
+    };
+    let requests = kind_counts.iter().sum::<u64>();
+    // Logical requests count once however many hedges/retries served
+    // them — the router's core accounting invariant.
+    debug_assert_eq!(mx.counter("cluster.requests").get(), requests);
+    let mean_us = if all.is_empty() {
+        0.0
+    } else {
+        all.iter().sum::<u64>() as f64 / all.len() as f64 / 1000.0
+    };
+    // Server-side accounting summed over replicas (read before the
+    // transports drop), plus replica 0's stage breakdown.
+    let mut batches = 0u64;
+    let mut served = 0u64;
+    let mut swap_stalls = 0u64;
+    let mut epochs = 0u64;
+    let mut live_final = 0u64;
+    let mut req_frames = 0u64;
+    let mut wave_frames = 0u64;
+    for node in &nodes {
+        let b = node.batcher.stats();
+        batches += b.batches;
+        served += b.requests;
+        epochs = epochs.max(node.server.epoch());
+        swap_stalls += node.server.swap_stalls();
+        live_final +=
+            node.server.snapshot().sampler().live_classes() as u64;
+        let ws = node.transport.stats();
+        req_frames += ws.request_frames;
+        wave_frames += ws.wave_frames;
+    }
+    let stages = nodes[0].batcher.telemetry().stages_json();
+    let mean_request_ns = mean_us * 1000.0 / spec.wave as f64;
+    let telemetry_overhead_pct = measure_telemetry_overhead(mean_request_ns);
+    let (frame_encode_us, frame_encode_fresh_us, frame_decode_us) =
+        measure_codec_overhead(spec);
+    let (wave_encode_us, wave_decode_us) = measure_wave_overhead(spec);
+    let (mutations, adds, retires, mut_p50_us, mut_p99_us, post_churn_qps) =
+        match churn_out {
+            Some(mut c) if !c.latencies_ns.is_empty() => {
+                c.latencies_ns.sort_unstable();
+                let mpct = |q: f64| -> f64 {
+                    c.latencies_ns[((c.latencies_ns.len() - 1) as f64 * q)
+                        .round() as usize] as f64
+                        / 1000.0
+                };
+                let tail_qps = match c.churn_done {
+                    Some((at, done_count)) => {
+                        let tail_secs = run_end
+                            .saturating_duration_since(at)
+                            .as_secs_f64();
+                        let tail_reqs =
+                            requests.saturating_sub(done_count) as f64;
+                        if tail_secs > 0.0 {
+                            tail_reqs / tail_secs
+                        } else {
+                            0.0
+                        }
+                    }
+                    None => 0.0,
+                };
+                (
+                    c.latencies_ns.len() as u64,
+                    c.adds,
+                    c.retires,
+                    mpct(0.50),
+                    mpct(0.99),
+                    tail_qps,
+                )
+            }
+            _ => (0, 0, 0, 0.0, 0.0, 0.0),
+        };
+    let report = LoadReport {
+        sampler: name,
+        transport: spec.transport.name().to_string(),
+        mix: spec.mix.label(),
+        readers: spec.readers,
+        requests,
+        sample_requests: kind_counts[0],
+        prob_requests: kind_counts[1],
+        topk_requests: kind_counts[2],
+        wall_seconds: wall,
+        qps: requests as f64 / wall.max(1e-12),
+        mean_us,
+        p50_us: pct(0.50),
+        p99_us: pct(0.99),
+        batches,
+        mean_batch: served as f64 / batches.max(1) as f64,
+        epochs,
+        swap_stalls,
+        frame_encode_us,
+        frame_encode_fresh_us,
+        frame_decode_us,
+        wave: spec.wave,
+        req_frames,
+        wave_frames,
+        resp_frames: 0,
+        req_headers_per_request: if requests > 0 {
+            req_frames as f64 / requests as f64
+        } else {
+            0.0
+        },
+        resp_headers_per_request: 0.0,
+        wave_encode_us,
+        wave_decode_us,
+        churn: spec.churn.map(|c| c.label()).unwrap_or_default(),
+        mutations,
+        classes_added: adds,
+        classes_retired: retires,
+        mut_p50_us,
+        mut_p99_us,
+        post_churn_qps,
+        live_final,
+        quantize: spec.quantize.name(),
+        simd: simd::tier_name(),
+        stages,
+        telemetry_overhead_pct,
+        replicas: spec.replicas,
+        repl_lag,
+        repl_dropped,
+        hedges_fired,
+        hedges_won,
+        failovers,
+    };
+    // Keep the replica endpoints scrapeable through the hold window,
+    // then tear down the cluster before the transports (the replication
+    // worker's admin connections must close before the servers join
+    // their connection threads).
+    if !spec.hold.is_zero() {
+        std::thread::sleep(spec.hold);
+    }
+    drop(cluster);
+    drop(nodes);
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -1288,6 +1807,33 @@ mod tests {
         let classes = Matrix::randn(&mut rng, 64, d).l2_normalized_rows();
         let map = RffMap::new(d, 16, 2.0, &mut Rng::seeded(701));
         ShardedKernelSampler::with_map(&classes, map, 4, "rff-sharded")
+    }
+
+    /// Per-replica samplers over the ring partition of one shared class
+    /// matrix — the construction contract of `run_cluster_closed_loop`.
+    fn cluster_samplers(
+        n: usize,
+        d: usize,
+        replicas: usize,
+    ) -> Vec<Box<dyn Sampler>> {
+        let mut rng = Rng::seeded(700);
+        let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+        shard_partition(n, replicas, 64)
+            .iter()
+            .map(|p| {
+                let mut shard = Matrix::zeros(p.len(), d);
+                for (i, &g) in p.iter().enumerate() {
+                    shard.row_mut(i).copy_from_slice(classes.row(g as usize));
+                }
+                let map = RffMap::new(d, 16, 2.0, &mut Rng::seeded(701));
+                Box::new(ShardedKernelSampler::with_map(
+                    &shard,
+                    map,
+                    2,
+                    "rff-sharded",
+                )) as Box<dyn Sampler>
+            })
+            .collect()
     }
 
     #[test]
@@ -1316,6 +1862,9 @@ mod tests {
                 listen: "127.0.0.1:0".into(),
                 quantize: QuantizeKind::None,
                 hold: Duration::ZERO,
+                replicas: 1,
+                hedge: false,
+                virtual_nodes: 64,
             },
         )
         .unwrap();
@@ -1391,6 +1940,9 @@ mod tests {
                 listen: "127.0.0.1:0".into(),
                 quantize: QuantizeKind::None,
                 hold: Duration::ZERO,
+                replicas: 1,
+                hedge: false,
+                virtual_nodes: 64,
             },
         )
         .unwrap();
@@ -1458,6 +2010,9 @@ mod tests {
                 listen: "127.0.0.1:0".into(),
                 quantize: QuantizeKind::None,
                 hold: Duration::ZERO,
+                replicas: 1,
+                hedge: false,
+                virtual_nodes: 64,
             },
         )
         .unwrap();
@@ -1501,6 +2056,9 @@ mod tests {
                     listen: "127.0.0.1:0".into(),
                     quantize: QuantizeKind::None,
                     hold: Duration::ZERO,
+                    replicas: 1,
+                    hedge: false,
+                    virtual_nodes: 64,
                 },
             )
             .unwrap();
@@ -1528,6 +2086,97 @@ mod tests {
             assert!(j.at(&["req_headers_per_request"]).is_some());
             assert!(j.at(&["wave_encode_us"]).is_some());
         }
+    }
+
+    #[test]
+    fn cluster_closed_loop_over_two_replicas() {
+        let d = 8;
+        let samplers = cluster_samplers(64, d, 2);
+        let report = run_cluster_closed_loop(
+            &samplers,
+            &LoadSpec {
+                readers: 2,
+                requests_per_reader: 40,
+                m: 5,
+                top_k: 4,
+                dim: d,
+                seed: 91,
+                batcher: BatcherOptions {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(100),
+                },
+                updates_per_swap: 0,
+                swap_pause: Duration::from_micros(50),
+                transport: TransportMode::Uds,
+                mix: RequestMix { sample: 2, prob: 1, topk: 1 },
+                churn: Some(ChurnSpec {
+                    adds: 1,
+                    retires: 1,
+                    ops: 6,
+                    batch: 2,
+                }),
+                wave: 4,
+                listen: "127.0.0.1:0".into(),
+                quantize: QuantizeKind::None,
+                hold: Duration::ZERO,
+                replicas: 2,
+                hedge: false,
+                virtual_nodes: 64,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.requests, 80);
+        assert_eq!(report.replicas, 2);
+        assert!(report.qps > 0.0);
+        assert!(report.sample_requests > 0);
+        assert_eq!(report.mutations, 6);
+        // The pre-report flush converged every mutation onto its owner:
+        // nothing abandoned, and the final live count reconciles with
+        // the net churn across all replicas.
+        assert_eq!(report.repl_dropped, 0);
+        assert_eq!(
+            report.live_final,
+            64 + report.classes_added - report.classes_retired
+        );
+        assert_eq!(report.failovers, 0, "no replica died");
+        let j = report.to_json();
+        assert_eq!(j.at(&["replicas"]).and_then(Json::as_usize), Some(2));
+        assert!(j.at(&["repl_lag"]).is_some());
+        assert!(j.at(&["hedges_fired"]).is_some());
+        assert_eq!(
+            j.at(&["transport"]).and_then(|v| v.as_str().map(String::from)),
+            Some("uds".into())
+        );
+    }
+
+    #[test]
+    fn cluster_closed_loop_rejects_bad_shapes() {
+        let d = 8;
+        let samplers = cluster_samplers(64, d, 2);
+        // replicas must match the sampler count…
+        let err = run_cluster_closed_loop(
+            &samplers,
+            &LoadSpec {
+                transport: TransportMode::Uds,
+                dim: d,
+                replicas: 3,
+                ..LoadSpec::default()
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("samplers"), "{err}");
+        // …and the cluster path is wire-only.
+        let err = run_cluster_closed_loop(
+            &samplers,
+            &LoadSpec {
+                transport: TransportMode::Inproc,
+                dim: d,
+                replicas: 2,
+                ..LoadSpec::default()
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("wire"), "{err}");
     }
 
     #[test]
@@ -1576,6 +2225,9 @@ mod tests {
                     listen: "127.0.0.1:0".into(),
                     quantize: QuantizeKind::None,
                     hold: Duration::ZERO,
+                    replicas: 1,
+                    hedge: false,
+                    virtual_nodes: 64,
                 },
             )
             .unwrap();

@@ -29,7 +29,10 @@
 //!   step's loss execution; the swap lands before the next draw
 //!   (the ROADMAP "async double-buffered tree updates" item).
 //! * [`run_closed_loop`] (`loadgen.rs`) — the closed-loop load generator
-//!   behind `rfsoftmax serve-bench` and `benches/perf_serving.rs`.
+//!   behind `rfsoftmax serve-bench` and `benches/perf_serving.rs`;
+//!   [`run_cluster_closed_loop`] is its replicated sibling, driving
+//!   `--replicas N` in-process shard servers through a
+//!   [`crate::cluster::ClusterRouter`] (L5).
 //!
 //! Requests served (all micro-batched): `sample`, `probability`, and
 //! `top_k` (best-first tree search — see `KernelTree::top_k`). For the
@@ -48,8 +51,8 @@ pub use batcher::{
     SubmitReply,
 };
 pub use loadgen::{
-    run_closed_loop, ChurnSpec, LoadReport, LoadSpec, RequestMix,
-    SharedWriterAdmin, TransportMode,
+    run_closed_loop, run_cluster_closed_loop, ChurnSpec, LoadReport,
+    LoadSpec, RequestMix, SharedWriterAdmin, TransportMode,
 };
 pub use server::{SamplerServer, SamplerSnapshot, SamplerWriter};
 pub use service::{DoubleBufferedSampler, ServingStats};

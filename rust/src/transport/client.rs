@@ -82,6 +82,36 @@ impl TransportClient {
         Self::from_stream(Stream::connect(endpoint)?)
     }
 
+    /// [`TransportClient::connect_endpoint`] with a connect deadline
+    /// *and* a read deadline armed on the resulting connection — a dead
+    /// peer fails with a typed [`ProtocolError::Timeout`] instead of
+    /// hanging forever. The cluster router's failover path depends on
+    /// this. (TCP honors the connect deadline in the kernel; unix-socket
+    /// connects cannot hang on a live filesystem, so only the read
+    /// deadline applies there.)
+    pub fn connect_endpoint_timeout(
+        endpoint: &Endpoint,
+        timeout: std::time::Duration,
+    ) -> std::io::Result<TransportClient> {
+        let client =
+            Self::from_stream(Stream::connect_timeout(endpoint, timeout)?)?;
+        client.set_read_timeout(Some(timeout))?;
+        Ok(client)
+    }
+
+    /// Arm (or with `None` disarm) a read deadline on this connection.
+    /// A read that trips it surfaces as [`ProtocolError::Timeout`] —
+    /// which is fatal for the connection (a partial frame may have been
+    /// consumed), so callers reconnect rather than retry on the same
+    /// stream.
+    pub fn set_read_timeout(
+        &self,
+        timeout: Option<std::time::Duration>,
+    ) -> std::io::Result<()> {
+        // Reader and writer clone one socket; arming either arms both.
+        self.reader.get_ref().set_read_timeout(timeout)
+    }
+
     fn from_stream(stream: Stream) -> std::io::Result<TransportClient> {
         let reader = BufReader::new(stream.try_clone()?);
         let writer = BufWriter::new(stream);
@@ -229,6 +259,74 @@ impl TransportClient {
             Response::Stats { json } => Ok(json),
             _ => Err(ProtocolError::Malformed("response kind mismatch")),
         }
+    }
+
+    /// Total proposal mass `M(h)` of the server's pinned snapshot at
+    /// query `h`, plus the epoch it was read from (wire v3). The
+    /// normalizer of the served distribution: `q(i|h) · M(h)` is class
+    /// `i`'s unnormalized mass, which is what lets a cluster router
+    /// merge draws from disjoint replicas exactly.
+    pub fn mass(&mut self, h: &[f32]) -> Result<(f64, u64), ProtocolError> {
+        let req = Request::Mass { h: h.to_vec() };
+        match self.call(&req)? {
+            Response::Mass { epoch, mass } => Ok((mass, epoch)),
+            _ => Err(ProtocolError::Malformed("response kind mismatch")),
+        }
+    }
+
+    /// Allocate `n` consecutive request ids (router fan-out: sub-request
+    /// ids must be unique per connection even though the router, not
+    /// this client, tracks them).
+    pub(crate) fn alloc_ids(&mut self, n: usize) -> u64 {
+        let base = self.next_id;
+        self.next_id += n as u64;
+        base
+    }
+
+    /// Write a batch of pre-id'd requests to this connection in one
+    /// buffered flush — as ONE wire v3 wave frame per
+    /// [`wire::MAX_WAVE`]/soft-payload chunk when `wave` is set, as
+    /// single frames otherwise — without reading anything back. The
+    /// cluster router uses this to fan sub-requests out to every replica
+    /// *before* collecting replies, so replicas compute in parallel.
+    /// Callers keep batches below the server's in-flight cap.
+    pub(crate) fn send_batch(
+        &mut self,
+        items: &[(u64, Request)],
+        wave: bool,
+    ) -> Result<(), ProtocolError> {
+        self.encode_buf.clear();
+        if !wave || items.len() == 1 {
+            for (id, req) in items {
+                wire::encode_request(&mut self.encode_buf, *id, req);
+            }
+        } else {
+            let mut i = 0;
+            while i < items.len() {
+                let frame_start = self.encode_buf.len();
+                let mut enc =
+                    wire::WaveEncoder::begin_request_wave(&mut self.encode_buf);
+                while i < items.len()
+                    && enc.count() < wire::MAX_WAVE
+                    && (enc.count() == 0
+                        || self.encode_buf.len() - frame_start
+                            < wire::WAVE_SOFT_PAYLOAD)
+                {
+                    enc.push_request(&mut self.encode_buf, items[i].0, &items[i].1);
+                    i += 1;
+                }
+                enc.finish(&mut self.encode_buf);
+            }
+        }
+        self.writer.write_all(&self.encode_buf)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read the next `(id, response)` off this connection, unpacking
+    /// wave frames (router fan-out collection side).
+    pub(crate) fn recv_one(&mut self) -> Result<(u64, Response), ProtocolError> {
+        self.recv_any()
     }
 
     /// Retire live classes from the served universe (admin frame);

@@ -41,6 +41,33 @@ impl std::fmt::Display for Endpoint {
     }
 }
 
+impl Endpoint {
+    /// Parse the endpoint syntax used across the CLI and the cluster
+    /// config: `tcp:HOST:PORT`, `uds:PATH`, or a bare value (a '/' means
+    /// a socket path, anything else a TCP address). TCP hosts resolve
+    /// through `ToSocketAddrs`; the first resolved address wins.
+    pub fn parse(spec: &str) -> std::io::Result<Endpoint> {
+        let tcp = |addr: &str| -> std::io::Result<Endpoint> {
+            let resolved = addr.to_socket_addrs()?.next().ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    format!("endpoint '{addr}' resolved to no address"),
+                )
+            })?;
+            Ok(Endpoint::Tcp(resolved))
+        };
+        if let Some(addr) = spec.strip_prefix("tcp:") {
+            tcp(addr)
+        } else if let Some(path) = spec.strip_prefix("uds:") {
+            Ok(Endpoint::Uds(PathBuf::from(path)))
+        } else if spec.contains('/') {
+            Ok(Endpoint::Uds(PathBuf::from(spec)))
+        } else {
+            tcp(spec)
+        }
+    }
+}
+
 /// One connected byte stream of either flavor. Implements `Read`/`Write`
 /// by delegation so the [`super::wire`] codecs are oblivious to the
 /// underlying socket kind.
@@ -70,6 +97,38 @@ impl Stream {
         let s = TcpStream::connect(addr)?;
         s.set_nodelay(true)?;
         Ok(Stream::Tcp(s))
+    }
+
+    /// Connect with a deadline. TCP uses the kernel's connect timeout;
+    /// unix sockets have no std connect timeout, but a local listener
+    /// either accepts immediately or the path is gone — the connect
+    /// cannot hang the way a dead TCP peer can, so the blocking connect
+    /// is an acceptable fallback there.
+    pub(crate) fn connect_timeout(
+        endpoint: &Endpoint,
+        timeout: std::time::Duration,
+    ) -> std::io::Result<Stream> {
+        match endpoint {
+            Endpoint::Uds(p) => Ok(Stream::Uds(UnixStream::connect(p)?)),
+            Endpoint::Tcp(a) => {
+                let s = TcpStream::connect_timeout(a, timeout)?;
+                s.set_nodelay(true)?;
+                Ok(Stream::Tcp(s))
+            }
+        }
+    }
+
+    /// Arm (or with `None` disarm) a read deadline on the socket. A
+    /// read that trips it fails with `WouldBlock`/`TimedOut`, which the
+    /// wire layer types as `ProtocolError::Timeout`.
+    pub(crate) fn set_read_timeout(
+        &self,
+        timeout: Option<std::time::Duration>,
+    ) -> std::io::Result<()> {
+        match self {
+            Stream::Uds(s) => s.set_read_timeout(timeout),
+            Stream::Tcp(s) => s.set_read_timeout(timeout),
+        }
     }
 
     pub(crate) fn try_clone(&self) -> std::io::Result<Stream> {

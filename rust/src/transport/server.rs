@@ -674,16 +674,23 @@ fn answer_admin(
 ) -> bool {
     shared.admin_requests.fetch_add(1, Ordering::Relaxed);
     outstanding.fetch_add(1, Ordering::AcqRel);
-    let resp = if matches!(request, wire::Request::Stats) {
-        Response::Stats { json: shared.stats_json().to_string() }
-    } else {
-        match &shared.admin {
+    let resp = match request {
+        wire::Request::Stats => {
+            Response::Stats { json: shared.stats_json().to_string() }
+        }
+        // Read-only like STATS: answered on every server, straight off
+        // the current snapshot.
+        wire::Request::Mass { h } => {
+            let (mass, epoch) = shared.batcher.mass(&h);
+            Response::Mass { epoch, mass }
+        }
+        request => match &shared.admin {
             None => Response::Error {
                 code: wire::ERR_SERVE,
                 message: "admin frames not enabled on this server".into(),
             },
             Some(admin) => apply_admin(admin.as_ref(), request),
-        }
+        },
     };
     tx.send((id, resp)).is_ok()
 }

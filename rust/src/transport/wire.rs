@@ -9,7 +9,7 @@
 //! bytes 0..2   magic  "RF"
 //! byte  2      protocol version (2 for single-request frames, 3 for waves
 //!              and STATS)
-//! byte  3      frame kind (request 0x01..0x03, admin 0x10..0x12, wave 0x20,
+//! byte  3      frame kind (request 0x01..0x04, admin 0x10..0x12, wave 0x20,
 //!              response 0x81..0x92, response wave 0xA0, error 0xFF)
 //! bytes 4..12  request id (u64 LE; echoed on the response, 0 = connection-level;
 //!              unused on wave frames — sub-request ids are authoritative)
@@ -40,6 +40,8 @@
 //! * `Sample` request: `u32 dim | f32×dim h | u32 m | u64 seed`
 //! * `Probability` request: `u32 dim | f32×dim h | u32 class`
 //! * `TopK` request: `u32 dim | f32×dim h | u32 k`
+//! * `Mass` request (v3): `u32 dim | f32×dim h`
+//! * `Mass` response (v3): `u64 epoch | f64 mass`
 //! * `AddClasses` admin request: `u32 rows | u32 dim | f32×rows·dim embeddings`
 //! * `RetireClasses` admin request: `u32 count | u32×count ids`
 //! * `Stats` admin request (v3): empty payload
@@ -137,6 +139,7 @@ pub const ERR_OVERLOAD: u8 = 4;
 const KIND_REQ_SAMPLE: u8 = 0x01;
 const KIND_REQ_PROBABILITY: u8 = 0x02;
 const KIND_REQ_TOP_K: u8 = 0x03;
+const KIND_REQ_MASS: u8 = 0x04;
 const KIND_REQ_ADD_CLASSES: u8 = 0x10;
 const KIND_REQ_RETIRE_CLASSES: u8 = 0x11;
 const KIND_REQ_STATS: u8 = 0x12;
@@ -144,6 +147,7 @@ const KIND_REQ_WAVE: u8 = 0x20;
 const KIND_RESP_SAMPLE: u8 = 0x81;
 const KIND_RESP_PROBABILITY: u8 = 0x82;
 const KIND_RESP_TOP_K: u8 = 0x83;
+const KIND_RESP_MASS: u8 = 0x84;
 const KIND_RESP_ADD_CLASSES: u8 = 0x90;
 const KIND_RESP_RETIRE_CLASSES: u8 = 0x91;
 const KIND_RESP_STATS: u8 = 0x92;
@@ -181,6 +185,11 @@ pub enum ProtocolError {
     Malformed(&'static str),
     /// Underlying socket error.
     Io(std::io::Error),
+    /// A connect or read deadline expired before the peer answered.
+    /// Fatal for the connection: a timed-out read may have consumed a
+    /// partial frame, so the stream can never be resumed — callers
+    /// reconnect (or fail over) instead.
+    Timeout,
     /// The peer answered with an `Error` frame (client side).
     Remote { code: u8, message: String },
     /// Sync client got a response for a request it did not send.
@@ -222,6 +231,9 @@ impl fmt::Display for ProtocolError {
             }
             ProtocolError::Malformed(why) => write!(f, "malformed frame: {why}"),
             ProtocolError::Io(e) => write!(f, "transport i/o: {e}"),
+            ProtocolError::Timeout => {
+                write!(f, "request timed out (peer dead or overloaded)")
+            }
             ProtocolError::Remote { code, message } => {
                 write!(f, "remote error (code {code}): {message}")
             }
@@ -236,10 +248,15 @@ impl std::error::Error for ProtocolError {}
 
 impl From<std::io::Error> for ProtocolError {
     fn from(e: std::io::Error) -> Self {
-        if e.kind() == ErrorKind::UnexpectedEof {
-            ProtocolError::Truncated
-        } else {
-            ProtocolError::Io(e)
+        match e.kind() {
+            ErrorKind::UnexpectedEof => ProtocolError::Truncated,
+            // Both kinds mean a socket deadline fired: unix sockets
+            // report WouldBlock, TCP reports TimedOut (platform-
+            // dependent) — callers see one typed Timeout either way.
+            ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+                ProtocolError::Timeout
+            }
+            _ => ProtocolError::Io(e),
         }
     }
 }
@@ -261,6 +278,11 @@ pub enum Request {
     /// Empty payload; answered inline with [`Response::Stats`], never
     /// routed through the batcher.
     Stats,
+    /// Wire v3: report the sampler's total proposal mass (partition
+    /// function of the serving distribution) at the given query.
+    /// Answered inline from the pinned snapshot, never batched — the
+    /// cluster router's mass-weighted replica pick depends on it.
+    Mass { h: Vec<f32> },
 }
 
 impl Request {
@@ -272,6 +294,7 @@ impl Request {
             Request::AddClasses { .. }
                 | Request::RetireClasses { .. }
                 | Request::Stats
+                | Request::Mass { .. }
         )
     }
 
@@ -290,7 +313,8 @@ impl Request {
             Request::TopK { h, k } => (h, ServeQuery::TopK { k: k as usize }),
             Request::AddClasses { .. }
             | Request::RetireClasses { .. }
-            | Request::Stats => {
+            | Request::Stats
+            | Request::Mass { .. } => {
                 panic!("into_query: admin frame is not a serve query")
             }
         }
@@ -315,6 +339,9 @@ pub enum Response {
     /// snapshot schema — consumers parse it with the in-crate `json`
     /// module.
     Stats { json: String },
+    /// Total proposal mass at the queried embedding, epoch-tagged like
+    /// every serve response (wire v3).
+    Mass { epoch: u64, mass: f64 },
     Error { code: u8, message: String },
 }
 
@@ -356,6 +383,7 @@ fn request_kind(req: &Request) -> u8 {
         Request::Sample { .. } => KIND_REQ_SAMPLE,
         Request::Probability { .. } => KIND_REQ_PROBABILITY,
         Request::TopK { .. } => KIND_REQ_TOP_K,
+        Request::Mass { .. } => KIND_REQ_MASS,
         Request::AddClasses { .. } => KIND_REQ_ADD_CLASSES,
         Request::RetireClasses { .. } => KIND_REQ_RETIRE_CLASSES,
         Request::Stats => KIND_REQ_STATS,
@@ -364,10 +392,10 @@ fn request_kind(req: &Request) -> u8 {
 
 /// Wire version stamped on a single frame of the given kind: v2 for
 /// everything a v2 peer understands, v3 for the kinds introduced with
-/// wire v3 (`STATS`), so a v2 receiver refuses them on the version
-/// byte rather than mis-parsing an unknown kind.
+/// wire v3 (`STATS`, `MASS`), so a v2 receiver refuses them on the
+/// version byte rather than mis-parsing an unknown kind.
 fn single_frame_version(kind: u8) -> u8 {
-    if kind == KIND_REQ_STATS || kind == KIND_RESP_STATS {
+    if kind_requires_v3(kind) {
         STATS_FRAME_VERSION
     } else {
         SINGLE_FRAME_VERSION
@@ -411,6 +439,7 @@ fn encode_request_payload(out: &mut Vec<u8>, req: &Request) {
             }
         }
         Request::Stats => {}
+        Request::Mass { h } => push_query(out, h),
     }
 }
 
@@ -428,6 +457,7 @@ fn response_kind(resp: &Response) -> u8 {
         Response::Sample { .. } => KIND_RESP_SAMPLE,
         Response::Probability { .. } => KIND_RESP_PROBABILITY,
         Response::TopK { .. } => KIND_RESP_TOP_K,
+        Response::Mass { .. } => KIND_RESP_MASS,
         Response::AddClasses { .. } => KIND_RESP_ADD_CLASSES,
         Response::RetireClasses { .. } => KIND_RESP_RETIRE_CLASSES,
         Response::Stats { .. } => KIND_RESP_STATS,
@@ -472,6 +502,10 @@ fn encode_response_payload(out: &mut Vec<u8>, resp: &Response) {
         Response::RetireClasses { epoch, count } => {
             out.extend_from_slice(&epoch.to_le_bytes());
             out.extend_from_slice(&count.to_le_bytes());
+        }
+        Response::Mass { epoch, mass } => {
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&mass.to_le_bytes());
         }
         Response::Stats { json } => {
             let raw = json.as_bytes();
@@ -817,6 +851,10 @@ fn decode_request_payload(
         // Empty payload; `c.finish()` below rejects any stray bytes, so
         // a malformed (non-empty) STATS request cannot smuggle data.
         KIND_REQ_STATS => Request::Stats,
+        KIND_REQ_MASS => {
+            let h = c.query()?;
+            Request::Mass { h }
+        }
         other => return Err(ProtocolError::UnknownKind(other)),
     };
     c.finish()?;
@@ -884,6 +922,11 @@ fn decode_response_payload(
             let epoch = c.u64()?;
             let count = c.u32()?;
             Response::RetireClasses { epoch, count }
+        }
+        KIND_RESP_MASS => {
+            let epoch = c.u64()?;
+            let mass = c.f64()?;
+            Response::Mass { epoch, mass }
         }
         KIND_RESP_STATS => {
             let len = c.u32()? as usize;
@@ -967,7 +1010,10 @@ pub enum ResponseFrame {
 /// a kind decodes to [`ProtocolError::UnknownKind`] — the identical
 /// refusal a genuine v2 peer (which predates the kind) would produce.
 fn kind_requires_v3(kind: u8) -> bool {
-    kind == KIND_REQ_STATS || kind == KIND_RESP_STATS
+    matches!(
+        kind,
+        KIND_REQ_STATS | KIND_RESP_STATS | KIND_REQ_MASS | KIND_RESP_MASS
+    )
 }
 
 /// Read one request-direction frame — single or wave — (server side).
@@ -1291,6 +1337,62 @@ mod tests {
             read_response(&mut &buf[..]).unwrap_err(),
             ProtocolError::Malformed(_)
         ));
+    }
+
+    // -----------------------------------------------------------------
+    // MASS frames (wire v3) + timeout classification
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn mass_frames_round_trip_and_carry_v3() {
+        let req = Request::Mass { h: vec![0.5f32, -2.0, 1.25] };
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 11, &req);
+        assert_eq!(buf[2], 3, "MASS frames must carry wire v3");
+        let (id, got) = read_request(&mut &buf[..]).unwrap().unwrap();
+        assert_eq!(id, 11);
+        assert_eq!(got, req);
+        assert!(got.is_admin(), "Mass is answered inline, never batched");
+
+        let resp = Response::Mass { epoch: 9, mass: 1234.5 };
+        let mut buf = Vec::new();
+        encode_response(&mut buf, 11, &resp);
+        assert_eq!(buf[2], 3);
+        let (_, got) = read_response(&mut &buf[..]).unwrap().unwrap();
+        assert_eq!(got, resp);
+    }
+
+    #[test]
+    fn v2_stamped_mass_gets_the_unknown_kind_refusal() {
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 1, &Request::Mass { h: vec![1.0] });
+        buf[2] = 2;
+        assert!(matches!(
+            read_request(&mut &buf[..]).unwrap_err(),
+            ProtocolError::UnknownKind(0x04)
+        ));
+        let mut buf = Vec::new();
+        encode_response(&mut buf, 1, &Response::Mass { epoch: 0, mass: 1.0 });
+        buf[2] = 2;
+        assert!(matches!(
+            read_response(&mut &buf[..]).unwrap_err(),
+            ProtocolError::UnknownKind(0x84)
+        ));
+    }
+
+    #[test]
+    fn socket_deadline_errors_map_to_typed_timeout() {
+        for kind in [ErrorKind::WouldBlock, ErrorKind::TimedOut] {
+            let err: ProtocolError =
+                std::io::Error::new(kind, "deadline").into();
+            assert!(matches!(err, ProtocolError::Timeout), "{err}");
+            // A timed-out read may have consumed a partial frame, so the
+            // connection is unusable afterwards.
+            assert!(err.closes_connection());
+        }
+        let err: ProtocolError =
+            std::io::Error::new(ErrorKind::UnexpectedEof, "eof").into();
+        assert!(matches!(err, ProtocolError::Truncated));
     }
 
     #[test]

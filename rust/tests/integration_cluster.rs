@@ -1,0 +1,447 @@
+//! L5 cluster integration: three real in-process `TransportServer`
+//! replicas (each owning one consistent-hash shard of the class
+//! universe) driven through a [`ClusterRouter`]. Covers the four
+//! cluster contracts end to end:
+//!
+//! 1. merged sample draws are χ²-consistent with a single-node sampler
+//!    over the union vocabulary, and per-draw / probability / top-k
+//!    merges match the union sampler's answers (mass-weighted merge is
+//!    exact, not approximate);
+//! 2. churn through the router converges every replica to the same
+//!    live set and the same epoch-sequence cursor;
+//! 3. killing a replica mid-load fails over without wedging — reads
+//!    keep serving from the survivors, owner-exclusive lookups fail
+//!    with typed errors, and replication flush terminates with the
+//!    loss recorded;
+//! 4. hedged requests never double-count in stats reconciliation —
+//!    the straggler's duplicate is visible server-side while the
+//!    cluster's logical request counter moves once.
+
+use rfsoftmax::cluster::{
+    shard_partition, Cluster, ClusterError, ClusterOptions,
+};
+use rfsoftmax::featmap::RffMap;
+use rfsoftmax::linalg::{unit_vector, Matrix};
+use rfsoftmax::rng::Rng;
+use rfsoftmax::sampler::{Sampler, ShardedKernelSampler};
+use rfsoftmax::serving::{
+    BatcherOptions, MicroBatcher, SamplerServer, SharedWriterAdmin,
+};
+use rfsoftmax::transport::TransportServer;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+const REPLICAS: usize = 3;
+const VNODES: usize = 64;
+
+fn sock_path(tag: &str, replica: usize) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "rfsm-cluster-{}-{tag}-{replica}.sock",
+        std::process::id()
+    ))
+}
+
+/// The RFF feature map every sampler in one fixture shares: replicas
+/// and the union reference must embed with identical features for the
+/// mass-weighted merge to be exactly the union distribution.
+fn feature_map(d: usize, seed: u64) -> RffMap {
+    RffMap::new(d, 32, 2.0, &mut Rng::seeded(seed + 1))
+}
+
+struct Replica {
+    server: SamplerServer,
+    batcher: Arc<MicroBatcher>,
+    /// `Option` so a test can kill one replica by dropping its
+    /// listener (and with it every accepted connection).
+    transport: Option<TransportServer>,
+}
+
+/// One shard-replicated cluster over a shared class matrix, plus the
+/// single-node union reference built over the same rows and feature
+/// map.
+///
+/// Field order matters: `cluster` must drop before `replicas` so the
+/// replication worker's admin connections close before the transport
+/// servers join their connection threads.
+struct ClusterFixture {
+    reference: ShardedKernelSampler<RffMap>,
+    cluster: Cluster,
+    replicas: Vec<Replica>,
+}
+
+fn fixture(
+    n: usize,
+    d: usize,
+    seed: u64,
+    tag: &str,
+    opts_for: impl Fn(usize) -> BatcherOptions,
+    copts: ClusterOptions,
+) -> ClusterFixture {
+    let mut rng = Rng::seeded(seed);
+    let classes = Matrix::randn(&mut rng, n, d).l2_normalized_rows();
+    let reference = ShardedKernelSampler::with_map(
+        &classes,
+        feature_map(d, seed),
+        2,
+        "rff-sharded",
+    );
+    let partitions = shard_partition(n, REPLICAS, VNODES);
+    let mut replicas = Vec::with_capacity(REPLICAS);
+    let mut endpoints = Vec::with_capacity(REPLICAS);
+    for (r, part) in partitions.iter().enumerate() {
+        assert!(!part.is_empty(), "replica {r} owns an empty shard");
+        let mut shard = Matrix::zeros(part.len(), d);
+        for (i, &g) in part.iter().enumerate() {
+            shard.row_mut(i).copy_from_slice(classes.row(g as usize));
+        }
+        let sampler = ShardedKernelSampler::with_map(
+            &shard,
+            feature_map(d, seed),
+            2,
+            "rff-sharded",
+        );
+        let (server, writer) = SamplerServer::new(sampler.fork().unwrap());
+        let writer = Arc::new(Mutex::new(writer));
+        let batcher =
+            Arc::new(MicroBatcher::spawn(server.clone(), opts_for(r)));
+        let admin = Arc::new(SharedWriterAdmin::new(writer, d));
+        let transport = TransportServer::bind_with_admin(
+            sock_path(tag, r),
+            Arc::clone(&batcher),
+            admin,
+        )
+        .unwrap();
+        endpoints.push(transport.endpoint().clone());
+        replicas.push(Replica { server, batcher, transport: Some(transport) });
+    }
+    let cluster = Cluster::connect(endpoints, copts);
+    cluster.seed(&partitions);
+    ClusterFixture { reference, cluster, replicas }
+}
+
+fn fast_opts(_r: usize) -> BatcherOptions {
+    BatcherOptions { max_batch: 16, max_wait: Duration::from_micros(50) }
+}
+
+/// Relative closeness for mass-merged probabilities: the replica trees
+/// accumulate f32 partial sums over different row subsets than the
+/// union reference, so bit-identity is out, but the merge itself is
+/// exact math — anything past ~1e-6 relative drift is a real bug.
+fn close(got: f64, want: f64) -> bool {
+    (got - want).abs() <= 1e-4 * want.abs().max(1e-9)
+}
+
+// -- 1. distribution: merged draws vs the union sampler -----------------
+
+#[test]
+fn merged_draws_chi_square_consistent_with_union_sampler() {
+    let (n, d) = (32, 6);
+    let fx = fixture(n, d, 3000, "chi2", fast_opts, ClusterOptions::default());
+    let mut router = fx.cluster.client();
+    let mut rng = Rng::seeded(3001);
+    let h = unit_vector(&mut rng, d);
+
+    // 75 wave bursts of 8 sample requests, 8 draws each: 4800 draws.
+    // Per-draw probabilities must match the union sampler exactly
+    // (mass-weighted rescale, not an approximation); draw counts must
+    // be χ²-consistent with that distribution.
+    let (bursts, per_burst, m) = (75usize, 8usize, 8usize);
+    let mut counts = vec![0usize; n];
+    for b in 0..bursts {
+        let queries: Vec<rfsoftmax::cluster::ClusterQuery> = (0..per_burst)
+            .map(|j| rfsoftmax::cluster::ClusterQuery::Sample {
+                h: h.clone(),
+                m,
+                seed: 0xC1A0 + (b * per_burst + j) as u64,
+            })
+            .collect();
+        for res in router.query_burst(&queries, true) {
+            let reply = match res.unwrap() {
+                rfsoftmax::cluster::ClusterReply::Sample(reply) => reply,
+                other => panic!("sample reply kind mismatch: {other:?}"),
+            };
+            assert_eq!(reply.draw.len(), m);
+            for (&id, &q) in reply.draw.ids.iter().zip(&reply.draw.probs) {
+                assert!((id as usize) < n, "non-global id {id}");
+                let want = fx.reference.probability(&h, id as usize);
+                assert!(
+                    close(q, want),
+                    "merged q {q} vs union {want} for class {id}"
+                );
+                counts[id as usize] += 1;
+            }
+        }
+    }
+    let trials = (bursts * per_burst * m) as f64;
+    for i in 0..n {
+        let q = fx.reference.probability(&h, i);
+        let expect = trials * q;
+        let sd = (trials * q * (1.0 - q)).sqrt().max(1.0);
+        assert!(
+            (counts[i] as f64 - expect).abs() <= 5.0 * sd + 3.0,
+            "class {i}: merged count {} vs union expectation {expect:.1}",
+            counts[i]
+        );
+    }
+
+    // Point probabilities and top-k merge against the same reference.
+    for class in [0u32, 11, 19, 31] {
+        let (q, _) = router.probability(&h, class).unwrap();
+        let want = fx.reference.probability(&h, class as usize);
+        assert!(close(q, want), "probability {q} vs union {want}");
+    }
+    let (top, _) = router.top_k(&h, 5).unwrap();
+    let want: HashMap<u32, f64> =
+        fx.reference.top_k(&h, 5).into_iter().collect();
+    assert_eq!(top.len(), 5);
+    for (id, score) in &top {
+        let w = want.get(id).unwrap_or_else(|| {
+            panic!("cluster top-5 id {id} not in union top-5: {top:?}")
+        });
+        assert!(close(*score, *w), "top-k score {score} vs union {w}");
+    }
+}
+
+// -- 2. churn convergence ------------------------------------------------
+
+#[test]
+fn churn_converges_every_replica_to_the_same_cursor() {
+    let (n, d) = (48, 6);
+    let fx =
+        fixture(n, d, 3100, "churn", fast_opts, ClusterOptions::default());
+    let mut router = fx.cluster.client();
+    let mut rng = Rng::seeded(3101);
+
+    // 30 adds in three batches (the ring spreads them over all three
+    // replicas), then retire a dozen of the originals.
+    let mut added: Vec<u32> = Vec::new();
+    for _ in 0..3 {
+        let mut emb = Matrix::zeros(10, d);
+        for row in 0..10 {
+            emb.row_mut(row).copy_from_slice(&unit_vector(&mut rng, d));
+        }
+        let (globals, _) = router.add_classes(&emb);
+        assert_eq!(globals.len(), 10);
+        added.extend(globals);
+    }
+    assert!(
+        added.iter().all(|&g| g as usize >= n),
+        "added ids must extend the global space, got {added:?}"
+    );
+    let victims: Vec<u32> = (0..12).map(|i| (i * 4) as u32).collect();
+    router.retire_classes(&victims);
+
+    // Finish with one retire that touches every replica: the entry
+    // fans into one per-owner log record sharing a single sequence
+    // number, so convergence means all three cursors equal it.
+    let registry = fx.cluster.registry();
+    let mut per_owner: Vec<Option<u32>> = vec![None; REPLICAS];
+    for &g in &added {
+        let owner = registry.owner_of(g);
+        per_owner[owner].get_or_insert(g);
+    }
+    let last: Vec<u32> = per_owner.iter().flatten().copied().collect();
+    assert_eq!(last.len(), REPLICAS, "30 adds left a replica unowned");
+    let final_seq = router.retire_classes(&last);
+
+    assert!(
+        fx.cluster.flush(Duration::from_secs(10)),
+        "replication flush wedged"
+    );
+    assert_eq!(fx.cluster.lag(), vec![0; REPLICAS]);
+    assert_eq!(fx.cluster.dropped(), vec![0; REPLICAS]);
+    assert_eq!(
+        fx.cluster.cursors(),
+        vec![final_seq; REPLICAS],
+        "replicas converged to different epoch-sequence cursors"
+    );
+
+    // Replica-local live sets sum to the global live count.
+    let live: usize = fx
+        .replicas
+        .iter()
+        .map(|rep| rep.server.snapshot().sampler().live_classes())
+        .sum();
+    assert_eq!(live, n + 30 - 12 - REPLICAS);
+
+    // Retired ids answer the typed unknown-class error; surviving
+    // added ids serve real probabilities.
+    let h = unit_vector(&mut rng, d);
+    match router.probability(&h, victims[0]) {
+        Err(ClusterError::UnknownClass(g)) => assert_eq!(g, victims[0]),
+        other => panic!("retired class must be unknown, got {other:?}"),
+    }
+    let keep = added.iter().copied().find(|g| !last.contains(g)).unwrap();
+    let (q, _) = router.probability(&h, keep).unwrap();
+    assert!(q.is_finite() && q > 0.0, "added class unservable: q={q}");
+}
+
+// -- 3. failover ---------------------------------------------------------
+
+#[test]
+fn replica_death_mid_load_fails_over_without_wedging() {
+    let (n, d) = (32, 6);
+    let mut fx = fixture(
+        n,
+        d,
+        3200,
+        "failover",
+        fast_opts,
+        ClusterOptions {
+            request_timeout: Duration::from_millis(800),
+            hedge: false,
+            virtual_nodes: VNODES,
+        },
+    );
+    let mut router = fx.cluster.client();
+    let mut rng = Rng::seeded(3201);
+    let h = unit_vector(&mut rng, d);
+    for i in 0..5u64 {
+        router.sample(&h, 6, 0xD0A0 + i).unwrap();
+    }
+
+    // Kill replica 1: dropping the transport closes the listener and
+    // every accepted connection, exactly like a process death.
+    let victim = 1usize;
+    fx.replicas[victim].transport = None;
+
+    // Reads keep serving from the survivors. The first request after
+    // the kill observes the loss, marks the replica down, and
+    // re-routes; typed transport errors are tolerated, hangs and
+    // panics are not.
+    let mut served = 0usize;
+    for i in 0..20u64 {
+        match router.sample(&h, 6, 0xD100 + i) {
+            Ok(reply) => {
+                served += 1;
+                for &id in &reply.draw.ids {
+                    assert_ne!(
+                        fx.cluster.registry().owner_of(id),
+                        victim,
+                        "draw came from the dead replica's shard"
+                    );
+                }
+            }
+            Err(ClusterError::Protocol(_))
+            | Err(ClusterError::ReplicaLost(_)) => {}
+            Err(e) => panic!("untyped failover behavior: {e}"),
+        }
+    }
+    assert!(served >= 15, "cluster wedged after kill: {served}/20 served");
+    assert!(!fx.cluster.registry().replica(victim).is_healthy());
+    assert_eq!(fx.cluster.alive(), REPLICAS - 1);
+    assert!(
+        fx.cluster.metrics().counter("cluster.failovers").get() >= 1,
+        "failover never recorded"
+    );
+
+    // Owner-exclusive lookups on the dead shard degrade loudly with
+    // the typed error, never a hang.
+    let dead_class = (0..n as u32)
+        .find(|&g| fx.cluster.registry().owner_of(g) == victim)
+        .unwrap();
+    match router.probability(&h, dead_class) {
+        Err(ClusterError::ReplicaDown(r)) => assert_eq!(r, victim),
+        other => panic!("wanted ReplicaDown({victim}), got {other:?}"),
+    }
+
+    // Churn aimed at the dead replica is abandoned, not wedged: flush
+    // terminates, the loss is counted, the cursor still advances.
+    let seq = router.retire_classes(&[dead_class]);
+    assert!(
+        fx.cluster.flush(Duration::from_secs(10)),
+        "flush wedged on a dead replica"
+    );
+    assert!(fx.cluster.dropped()[victim] >= 1, "abandoned entry uncounted");
+    assert_eq!(fx.cluster.cursors()[victim], seq);
+}
+
+// -- 4. hedging never double-counts --------------------------------------
+
+#[test]
+fn hedged_stragglers_never_double_count_logical_requests() {
+    let (n, d) = (32, 6);
+    // Replica 2's batcher coalesces for a long 300ms window — a
+    // built-in straggler — while the others answer in ~50µs.
+    let victim = 2usize;
+    let fx = fixture(
+        n,
+        d,
+        3300,
+        "hedge",
+        |r| {
+            if r == victim {
+                BatcherOptions {
+                    max_batch: 64,
+                    max_wait: Duration::from_millis(300),
+                }
+            } else {
+                fast_opts(r)
+            }
+        },
+        ClusterOptions {
+            request_timeout: Duration::from_secs(2),
+            hedge: true,
+            virtual_nodes: VNODES,
+        },
+    );
+    let registry = Arc::clone(fx.cluster.registry());
+    let fast: Vec<u32> =
+        (0..n as u32).filter(|&g| registry.owner_of(g) != victim).collect();
+    let slow =
+        (0..n as u32).find(|&g| registry.owner_of(g) == victim).unwrap();
+    let mut router = fx.cluster.client();
+    let mut rng = Rng::seeded(3301);
+    let h = unit_vector(&mut rng, d);
+
+    // Warm the sub-wave histogram on fast-owner probabilities until
+    // hedging arms with a p99-derived delay in the low milliseconds.
+    // (MASS frames are answered inline by every server — the victim's
+    // slow batcher never delays phase 1, only its serve sub-batch.)
+    let warm = 48usize;
+    for i in 0..warm {
+        let (q, _) =
+            router.probability(&h, fast[i % fast.len()]).unwrap();
+        assert!(q.is_finite());
+    }
+    let metrics = fx.cluster.metrics();
+    let fired_before = metrics.counter("cluster.hedges_fired").get();
+
+    // The victim-owned probability sits in its 300ms coalesce window —
+    // far past the armed hedge delay — so the router abandons the
+    // straggler connection, replays the identical sub-batch on a fresh
+    // one, and still returns the exact union answer.
+    let (q, _) = router.probability(&h, slow).unwrap();
+    assert!(
+        close(q, fx.reference.probability(&h, slow as usize)),
+        "hedged answer diverged from the union sampler"
+    );
+    assert!(
+        metrics.counter("cluster.hedges_fired").get() > fired_before,
+        "straggler did not trip the hedge"
+    );
+    assert!(
+        metrics.counter("cluster.hedges_won").get() >= 1,
+        "hedge replay never won"
+    );
+
+    // Reconciliation invariant: however many duplicates raced, the
+    // logical request counter moved exactly once per request — while
+    // the victim's own server stats prove the duplicate really hit
+    // the wire (the same probability served at least twice).
+    assert_eq!(
+        metrics.counter("cluster.requests").get(),
+        (warm + 1) as u64,
+        "hedges double-counted logical requests"
+    );
+    let victim_probs = fx.replicas[victim].batcher.stats().probabilities;
+    assert!(
+        victim_probs >= 2,
+        "hedge duplicate never reached the straggler: {victim_probs}"
+    );
+    // No replica died: hedging is a race, not a failover.
+    assert_eq!(fx.cluster.alive(), REPLICAS);
+    assert_eq!(metrics.counter("cluster.failovers").get(), 0);
+}
