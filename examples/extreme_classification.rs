@@ -10,6 +10,7 @@
 use anyhow::Result;
 use rfsoftmax::cli::Args;
 use rfsoftmax::config::Config;
+use rfsoftmax::coordinator::harness;
 use rfsoftmax::coordinator::{Trainer, TrainerBuilder};
 use rfsoftmax::runtime::Runtime;
 use rfsoftmax::tables::Table;
@@ -24,7 +25,7 @@ fn main() -> Result<()> {
         );
         return Ok(());
     }
-    let runtime = Runtime::load(Runtime::default_dir())?;
+    let runtime = Runtime::native();
     let prefix = a.str_or("prefix", "xc_amazon").to_string();
     let samplers = a.str_or("samplers", "exact,uniform,quadratic,rff").to_string();
     println!("platform {} | dataset {prefix}", runtime.platform());
@@ -36,6 +37,9 @@ fn main() -> Result<()> {
 
     for s in samplers.split(',') {
         let mut cfg = Config::default();
+        // Planted-dataset shape preset (model.kind = extreme + a
+        // scale-reduced label space); explicit overrides below win.
+        harness::prefix_preset(&mut cfg, &prefix)?;
         cfg.set("sampler.kind", s)?;
         cfg.set("sampler.num_negatives", a.str_or("m", "100"))?;
         cfg.set("sampler.dim", a.str_or("dim", "256"))?;

@@ -20,12 +20,17 @@
 use anyhow::Result;
 use rfsoftmax::cli::Args;
 use rfsoftmax::config::Config;
+use rfsoftmax::coordinator::harness;
 use rfsoftmax::coordinator::{TrainerBuilder, TrainReport};
 use rfsoftmax::runtime::Runtime;
 use rfsoftmax::tables::Table;
 
-fn base_config(a: &Args) -> Result<Config> {
+fn base_config(a: &Args, prefix: &str) -> Result<Config> {
     let mut cfg = Config::default();
+    // Corpus-prefix shape preset for the native backend (the pjrt
+    // backend reads shapes from the artifact manifest instead; explicit
+    // --section.key overrides below still win).
+    harness::prefix_preset(&mut cfg, prefix)?;
     cfg.set("sampler.num_negatives", a.str_or("m", "100"))?;
     cfg.set("sampler.dim", a.str_or("dim", "1024"))?;
     cfg.set("sampler.T", a.str_or("T", "0.5"))?;
@@ -77,8 +82,10 @@ fn main() -> Result<()> {
         );
         return Ok(());
     }
-    let runtime = Runtime::load(Runtime::default_dir())?;
     let prefix = a.str_or("prefix", "ptb").to_string();
+    // Honors a --train.backend pjrt override; defaults to native.
+    let runtime =
+        Runtime::for_train(&base_config(&a, &prefix)?, Runtime::default_dir())?;
     println!(
         "platform {} | prefix {prefix} | single-core CPU testbed",
         runtime.platform()
@@ -89,7 +96,7 @@ fn main() -> Result<()> {
     if let Some(ts) = a.get("sweep-T") {
         // Figure 1: vary the RFF kernel temperature T = 1/√ν.
         for t in ts.split(',') {
-            let mut cfg = base_config(&a)?;
+            let mut cfg = base_config(&a, &prefix)?;
             cfg.set("sampler.kind", "rff")?;
             cfg.set("sampler.T", t)?;
             let r = run_one(&runtime, &prefix, cfg, &format!("rff T={t}"))?;
@@ -98,7 +105,7 @@ fn main() -> Result<()> {
     } else if let Some(ds) = a.get("sweep-D") {
         // Figure 2: vary the RFF dimension D.
         for d in ds.split(',') {
-            let mut cfg = base_config(&a)?;
+            let mut cfg = base_config(&a, &prefix)?;
             cfg.set("sampler.kind", "rff")?;
             cfg.set("sampler.dim", d)?;
             let r = run_one(&runtime, &prefix, cfg, &format!("rff D={d}"))?;
@@ -108,7 +115,7 @@ fn main() -> Result<()> {
         // Figures 3/4: sampler comparison.
         let samplers = a.str_or("samplers", "rff,exact,uniform,quadratic");
         for s in samplers.split(',') {
-            let mut cfg = base_config(&a)?;
+            let mut cfg = base_config(&a, &prefix)?;
             cfg.set("sampler.kind", s)?;
             let r = run_one(&runtime, &prefix, cfg, s)?;
             reports.push((s.to_string(), r));

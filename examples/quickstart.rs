@@ -1,7 +1,7 @@
 //! Quickstart: train a tiny language model (n = 1,000 classes) with
-//! RF-softmax negative sampling end-to-end through all three layers —
-//! Rust coordinator → PJRT executable (JAX L2 + Pallas L1, AOT-compiled)
-//! — and compare against uniform sampling.
+//! RF-softmax negative sampling end-to-end on the default **native**
+//! backend — fused one-pass train step, no compiled artifacts needed —
+//! and compare against uniform sampling.
 //!
 //! The training loop is **batch-first**: each step maps the whole
 //! batch's queries through φ in one gemm, draws its shared negatives
@@ -11,7 +11,7 @@
 //! standalone demo below shows the same `Sampler::sample_batch` API the
 //! coordinator uses, without needing compiled artifacts.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
 
 use rfsoftmax::config::Config;
 use rfsoftmax::coordinator::TrainerBuilder;
@@ -39,15 +39,18 @@ fn batch_sampling_demo() {
 fn main() -> anyhow::Result<()> {
     batch_sampling_demo();
 
-    let runtime = Runtime::load(Runtime::default_dir())?;
-    println!("PJRT platform: {}", runtime.platform());
+    let runtime = Runtime::native();
+    println!("backend: {}", runtime.platform());
 
     let mut results = Vec::new();
     for sampler in ["rff", "uniform"] {
         let mut cfg = Config::default();
         cfg.set("model.num_classes", "1000")?;
+        cfg.set("model.embed_dim", "64")?;
+        cfg.set("model.hidden_dim", "96")?;
+        cfg.set("model.seq_len", "12")?;
         cfg.set("sampler.kind", sampler)?;
-        cfg.set("sampler.num_negatives", "20")?; // quickstart artifact m
+        cfg.set("sampler.num_negatives", "20")?;
         cfg.set("sampler.dim", "128")?;
         cfg.set("sampler.nu", "4.0")?; // T = 1/√ν = 0.5, the paper's pick
         cfg.set("train.steps", "300")?;

@@ -16,7 +16,7 @@ use rfsoftmax::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     bench_header("F1", "RF-softmax ν sweep on PTB (paper Figure 1)");
-    let runtime = Runtime::load(Runtime::default_dir())?;
+    let runtime = Runtime::native();
     let steps = bench_steps(400);
     let eval_every = (steps / 4).max(1);
 

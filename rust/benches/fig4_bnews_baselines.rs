@@ -12,13 +12,13 @@
 
 use rfsoftmax::benchkit::bench_header;
 use rfsoftmax::coordinator::harness::{
-    bench_steps, config_from, curves_table, train_once,
+    bench_steps, corpus_config, curves_table, train_once,
 };
 use rfsoftmax::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     bench_header("F4", "sampler comparison on Bnews (paper Figure 4)");
-    let runtime = Runtime::load(Runtime::default_dir())?;
+    let runtime = Runtime::native();
     let steps = bench_steps(150);
     let eval_every = (steps / 3).max(1);
 
@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
             ("data.valid_size", "8000".into()),
         ];
         pairs.extend(extra);
-        let cfg = config_from(&pairs)?;
+        let cfg = corpus_config("bnews", &pairs)?;
         let r = train_once(&runtime, "bnews", label, cfg)?;
         runs.push((label.to_string(), r));
     }

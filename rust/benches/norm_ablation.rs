@@ -11,14 +11,16 @@
 
 use anyhow::Result;
 use rfsoftmax::benchkit::bench_header;
-use rfsoftmax::coordinator::harness::{bench_steps, config_from};
+use rfsoftmax::coordinator::harness::{
+    bench_steps, config_from, corpus_config,
+};
 use rfsoftmax::coordinator::{Trainer, TrainerBuilder};
 use rfsoftmax::runtime::Runtime;
 use rfsoftmax::tables::Table;
 
 fn main() -> Result<()> {
     bench_header("N1", "normalized vs unnormalized embeddings (paper §4.2)");
-    let runtime = Runtime::load(Runtime::default_dir())?;
+    let runtime = Runtime::native();
     let steps = bench_steps(400);
 
     // --- LM (PTB-scale) -------------------------------------------------
@@ -57,16 +59,19 @@ fn main() -> Result<()> {
         &["variant", "P@1", "paper"],
     );
     for (unnorm, label) in [(false, "normalized"), (true, "unnormalized")] {
-        let cfg = config_from(&[
-            ("sampler.kind", "full".into()),
-            ("train.steps", (steps * 3).to_string()),
-            ("train.eval_every", (steps * 3).to_string()),
-            ("train.eval_batches", "8".into()),
-            ("train.lr", "1.0".into()),
-            ("data.train_size", "12000".into()),
-            ("data.valid_size", "1024".into()),
-            ("data.noise", "0.15".into()),
-        ])?;
+        let cfg = corpus_config(
+            "xc_amazon",
+            &[
+                ("sampler.kind", "full".into()),
+                ("train.steps", (steps * 3).to_string()),
+                ("train.eval_every", (steps * 3).to_string()),
+                ("train.eval_batches", "8".into()),
+                ("train.lr", "1.0".into()),
+                ("data.train_size", "12000".into()),
+                ("data.valid_size", "1024".into()),
+                ("data.noise", "0.15".into()),
+            ],
+        )?;
         let mut trainer = TrainerBuilder::new(&runtime, "xc_amazon", cfg)
             .unnormalized(unnorm)
             .build()?;

@@ -11,11 +11,28 @@
 //! `RFSM_QUICK=1` limits to n = 10,000 (the 500k tree builds take ~1 min
 //! on this single-core box and are reported separately as build time).
 //!
+//! The second half is the **fused-step A/B** (ISSUE 9): one native LM
+//! train step — gather → LSTM forward → one-pass sampled loss/grad →
+//! BPTT backward — through the fused kernels with reusable scratch vs
+//! the composed stage-by-stage baseline (`runtime::native::composed`,
+//! the retired artifact pipeline's shape: fresh buffers per stage, the
+//! full `bsz×(1+m)` logit matrix materialized). Emits a
+//! `BENCH {json}` `train_step_fused` record (total + per-stage times,
+//! `speedup` = composed/fused) gated in CI via
+//! `bench-check --require-fused-speedup`.
+//!
 //! Run: `cargo bench --bench table2_walltime`
+//! `--smoke` (CI bench-smoke job) runs only the fused-step A/B at small
+//! shapes so the record exists in seconds; numbers are not comparable
+//! to full runs (`"smoke": true`).
 
 use rfsoftmax::benchkit::{bench_header, black_box, Bencher};
-use rfsoftmax::linalg::{unit_vector, Matrix};
+use rfsoftmax::json::Json;
+use rfsoftmax::linalg::{simd, unit_vector, Matrix};
 use rfsoftmax::rng::Rng;
+use rfsoftmax::runtime::native::{
+    composed, gather_rows_into, FusedLoss, LmStep,
+};
 use rfsoftmax::sampler::{
     BucketKernelSampler, ExactSoftmaxSampler, RffSampler, Sampler,
 };
@@ -129,36 +146,208 @@ fn run_for_n(n: usize, paper: &[(&str, &str)]) {
     println!("\n{}", table.render());
 }
 
-fn main() {
-    bench_header("T2", "sampling wall time (paper Table 2)");
-    run_for_n(
-        10_000,
-        &[
-            ("Exp", "1.4 ms"),
-            ("Quadratic", "6.5 ms"),
-            ("Rff50", "0.5 ms"),
-            ("Rff200", "0.6 ms"),
-            ("Rff500", "1.2 ms"),
-            ("Rff1000", "1.4 ms"),
-        ],
+/// Fused-vs-composed A/B over one complete LM train step's compute
+/// (sampling excluded: both sides consume the same pre-drawn negative
+/// pack, so the delta is pure execution — fusion + scratch reuse +
+/// fan-out against staged gemms with per-stage allocations).
+fn bench_fused_step(smoke: bool) {
+    let (bsz, l, d, h, m, n) = if smoke {
+        (16usize, 8usize, 32usize, 64usize, 32usize, 4_000usize)
+    } else {
+        (32, 16, 64, 128, 64, 10_000)
+    };
+    let workers = rfsoftmax::exec::recommended_workers();
+    println!(
+        "\n-- fused vs composed LM train step \
+         (b={bsz} l={l} d={d} h={h} m={m} n={n} workers={workers}) --"
     );
-    if std::env::var("RFSM_QUICK").is_err() {
+    let b = if smoke {
+        Bencher {
+            warmup: Duration::from_millis(10),
+            budget: Duration::from_millis(80),
+            samples: 3,
+        }
+    } else {
+        Bencher {
+            warmup: Duration::from_millis(150),
+            budget: Duration::from_millis(900),
+            samples: 10,
+        }
+    };
+
+    let mut rng = Rng::seeded(21);
+    let emb = Matrix::randn(&mut rng, n, d).into_vec();
+    let wx = Matrix::randn(&mut rng, d, 4 * h).into_vec();
+    let wh = Matrix::randn(&mut rng, h, 4 * h).into_vec();
+    let bias = vec![0.0f32; 4 * h];
+    let proj = Matrix::randn(&mut rng, h, d).into_vec();
+    let cls = Matrix::randn(&mut rng, n, d).l2_normalized_rows().into_vec();
+    let contexts: Vec<u32> =
+        (0..bsz * l).map(|_| rng.index(n) as u32).collect();
+    let targets: Vec<u32> = (0..bsz).map(|_| rng.index(n) as u32).collect();
+    let negs: Vec<u32> = (0..m).map(|_| rng.index(n) as u32).collect();
+    // adjust = log(m·q) for a synthetic proposal q ∈ (0, 1/n].
+    let adjust: Vec<f32> = (0..m)
+        .map(|_| ((m as f64) * rng.f64_open() / n as f64).ln() as f32)
+        .collect();
+    let mut mask = vec![1.0f32; bsz * m];
+    for (r, &t) in targets.iter().enumerate() {
+        for (j, &g) in negs.iter().enumerate() {
+            if g == t {
+                mask[r * m + j] = 0.0;
+            }
+        }
+    }
+
+    // Fused path: persistent kernels + scratch, as LmTrainer runs it.
+    let mut lm = LmStep::new(workers);
+    let mut fused = FusedLoss::new(workers);
+    let mut tgt_buf: Vec<f32> = Vec::new();
+    let mut neg_buf: Vec<f32> = Vec::new();
+    let s_fused = b.run("fused one-pass step", || {
+        lm.begin(bsz, l, d, h);
+        lm.load_rows(&emb, &contexts);
+        lm.forward(&wx, &wh, &bias, &proj);
+        gather_rows_into(&cls, d, &targets, &mut tgt_buf);
+        gather_rows_into(&cls, d, &negs, &mut neg_buf);
+        let loss = fused.run(
+            &mut lm.u,
+            &mut tgt_buf,
+            &mut neg_buf,
+            &adjust,
+            &mask,
+            TAU,
+            false,
+        );
+        lm.backward(&wx, &wh, &proj, &fused.d_q);
+        black_box(loss)
+    });
+    println!("  {}", s_fused.report());
+    // Per-stage breakdown (state from the total runs above stays valid).
+    let s_fwd = b.run("  stage: gather+forward", || {
+        lm.begin(bsz, l, d, h);
+        lm.load_rows(&emb, &contexts);
+        lm.forward(&wx, &wh, &bias, &proj);
+        black_box(lm.u.row(0)[0])
+    });
+    let s_loss = b.run("  stage: fused loss/grad", || {
+        gather_rows_into(&cls, d, &targets, &mut tgt_buf);
+        gather_rows_into(&cls, d, &negs, &mut neg_buf);
+        black_box(fused.run(
+            &mut lm.u,
+            &mut tgt_buf,
+            &mut neg_buf,
+            &adjust,
+            &mask,
+            TAU,
+            false,
+        ))
+    });
+    let s_bwd = b.run("  stage: backward", || {
+        lm.backward(&wx, &wh, &proj, &fused.d_q);
+        black_box(lm.dwx[0])
+    });
+    println!("  {}", s_fwd.report());
+    println!("  {}", s_loss.report());
+    println!("  {}", s_bwd.report());
+
+    // Composed baseline: same math, staged with fresh buffers per call.
+    let gather = |table: &[f32], ids: &[u32]| -> Vec<f32> {
+        let mut out = Vec::with_capacity(ids.len() * d);
+        for &id in ids {
+            let s = id as usize * d;
+            out.extend_from_slice(&table[s..s + d]);
+        }
+        out
+    };
+    let s_comp = b.run("composed stage-by-stage step", || {
+        let x = gather(&emb, &contexts);
+        let st = composed::lm_forward(&x, bsz, l, d, h, &wx, &wh, &bias, &proj);
+        let tgt = gather(&cls, &targets);
+        let neg = gather(&cls, &negs);
+        let out = composed::sampled_loss_grad(
+            &st.u, &tgt, &neg, &adjust, &mask, TAU, false,
+        );
+        let g = composed::lm_backward(
+            &st, &x, bsz, l, d, h, &wx, &wh, &proj, &out.d_q,
+        );
+        black_box(out.loss + g.dwx[0])
+    });
+    println!("  {}", s_comp.report());
+
+    let fused_sps = 1.0 / s_fused.mean();
+    let comp_sps = 1.0 / s_comp.mean();
+    let speedup = s_comp.mean() / s_fused.mean();
+    println!(
+        "  fused {:.3} ms vs composed {:.3} ms — {speedup:.2}×",
+        s_fused.mean() * 1e3,
+        s_comp.mean() * 1e3,
+    );
+    let record = Json::obj(vec![
+        ("bench", Json::from("train_step_fused")),
+        ("task", Json::from("lm")),
+        ("b", Json::from(bsz)),
+        ("l", Json::from(l)),
+        ("d", Json::from(d)),
+        ("h", Json::from(h)),
+        ("m", Json::from(m)),
+        ("n", Json::from(n)),
+        ("workers", Json::from(workers)),
+        ("fused_ms", Json::from(s_fused.mean() * 1e3)),
+        ("composed_ms", Json::from(s_comp.mean() * 1e3)),
+        ("fwd_ms", Json::from(s_fwd.mean() * 1e3)),
+        ("loss_ms", Json::from(s_loss.mean() * 1e3)),
+        ("bwd_ms", Json::from(s_bwd.mean() * 1e3)),
+        ("fused_steps_per_sec", Json::from(fused_sps)),
+        ("composed_steps_per_sec", Json::from(comp_sps)),
+        ("speedup", Json::from(speedup)),
+        ("simd", Json::from(simd::tier_name())),
+        ("smoke", Json::from(smoke)),
+    ]);
+    println!("BENCH {record}");
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    bench_header(
+        "T2",
+        if smoke {
+            "fused train step A/B (SMOKE: paper table skipped)"
+        } else {
+            "sampling wall time (paper Table 2) + fused train step A/B"
+        },
+    );
+    if !smoke {
         run_for_n(
-            500_000,
+            10_000,
             &[
-                ("Exp", "32.3 ms"),
-                ("Quadratic", "8.2 ms"),
-                ("Rff50", "1.6 ms"),
-                ("Rff200", "1.7 ms"),
-                ("Rff500", "2.0 ms"),
-                ("Rff1000", "2.4 ms"),
+                ("Exp", "1.4 ms"),
+                ("Quadratic", "6.5 ms"),
+                ("Rff50", "0.5 ms"),
+                ("Rff200", "0.6 ms"),
+                ("Rff500", "1.2 ms"),
+                ("Rff1000", "1.4 ms"),
             ],
         );
-    } else {
-        println!("(RFSM_QUICK set: skipping n = 500,000)");
+        if std::env::var("RFSM_QUICK").is_err() {
+            run_for_n(
+                500_000,
+                &[
+                    ("Exp", "32.3 ms"),
+                    ("Quadratic", "8.2 ms"),
+                    ("Rff50", "1.6 ms"),
+                    ("Rff200", "1.7 ms"),
+                    ("Rff500", "2.0 ms"),
+                    ("Rff1000", "2.4 ms"),
+                ],
+            );
+        } else {
+            println!("(RFSM_QUICK set: skipping n = 500,000)");
+        }
+        println!(
+            "shape check: Exp ≈ linear in n; Rff ≈ flat in n, mild in D; \
+             Quadratic ≫ Rff at both n."
+        );
     }
-    println!(
-        "shape check: Exp ≈ linear in n; Rff ≈ flat in n, mild in D; \
-         Quadratic ≫ Rff at both n."
-    );
+    bench_fused_step(smoke);
 }

@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 use rfsoftmax::benchkit::bench_header;
-use rfsoftmax::coordinator::harness::{bench_steps, config_from};
+use rfsoftmax::coordinator::harness::{bench_steps, corpus_config};
 use rfsoftmax::coordinator::{Trainer, TrainerBuilder};
 use rfsoftmax::runtime::Runtime;
 use rfsoftmax::tables::Table;
@@ -61,7 +61,7 @@ fn kind_of(label: &str) -> &'static str {
 
 fn main() -> Result<()> {
     bench_header("T3", "extreme classification PREC@k (paper Table 3)");
-    let runtime = Runtime::load(Runtime::default_dir())?;
+    let runtime = Runtime::native();
     let base_steps = bench_steps(2500);
     let quick = std::env::var("RFSM_QUICK").is_ok();
 
@@ -80,19 +80,22 @@ fn main() -> Result<()> {
             &["Method", "P@1", "P@3", "P@5", "paper P@1/3/5", "wall (s)"],
         );
         for (label, p1p, p3p, p5p) in *paper_rows {
-            let cfg = config_from(&[
-                ("sampler.kind", kind_of(label).into()),
-                ("sampler.num_negatives", "100".into()),
-                ("sampler.dim", "256".into()),
-                ("sampler.T", "0.5".into()),
-                ("train.steps", steps.to_string()),
-                ("train.eval_every", steps.to_string()),
-                ("train.eval_batches", "8".into()),
-                ("train.lr", "1.0".into()),
-                ("data.train_size", train_size.to_string()),
-                ("data.valid_size", "1024".into()),
-                ("data.noise", "0.15".into()),
-            ])?;
+            let cfg = corpus_config(
+                prefix,
+                &[
+                    ("sampler.kind", kind_of(label).into()),
+                    ("sampler.num_negatives", "100".into()),
+                    ("sampler.dim", "256".into()),
+                    ("sampler.T", "0.5".into()),
+                    ("train.steps", steps.to_string()),
+                    ("train.eval_every", steps.to_string()),
+                    ("train.eval_batches", "8".into()),
+                    ("train.lr", "1.0".into()),
+                    ("data.train_size", train_size.to_string()),
+                    ("data.valid_size", "1024".into()),
+                    ("data.noise", "0.15".into()),
+                ],
+            )?;
             let t0 = std::time::Instant::now();
             let mut trainer =
                 TrainerBuilder::new(&runtime, prefix, cfg).build()?;

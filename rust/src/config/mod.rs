@@ -319,6 +319,39 @@ impl Default for ClusterConfig {
     }
 }
 
+/// Which execution backend runs the training step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TrainBackend {
+    /// Fused one-pass f32 kernels over `linalg::simd` (the default):
+    /// no artifacts directory, no HostTensor round-trips, scratch
+    /// buffers reused across steps (see `runtime::native`).
+    #[default]
+    Native,
+    /// The PJRT/HLO runtime (`make artifacts` + the `pjrt` cargo
+    /// feature). Requesting it from a binary built without the feature
+    /// is a runtime error with a rebuild hint.
+    Pjrt,
+}
+
+impl TrainBackend {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "native" => Ok(TrainBackend::Native),
+            "pjrt" => Ok(TrainBackend::Pjrt),
+            _ => Err(ConfigError(format!(
+                "unknown train backend '{s}' (native|pjrt)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrainBackend::Native => "native",
+            TrainBackend::Pjrt => "pjrt",
+        }
+    }
+}
+
 /// Optimizer selection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OptimizerKind {
@@ -354,6 +387,10 @@ impl OptimizerKind {
 /// Training-loop parameters.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Step-execution backend: `native` (fused in-process kernels, the
+    /// default — needs no artifacts) or `pjrt` (HLO artifacts via the
+    /// optional `pjrt` cargo feature).
+    pub backend: TrainBackend,
     pub batch_size: usize,
     pub steps: usize,
     pub lr: f32,
@@ -374,6 +411,7 @@ pub struct TrainConfig {
 impl Default for TrainConfig {
     fn default() -> Self {
         Self {
+            backend: TrainBackend::Native,
             batch_size: 32,
             steps: 500,
             lr: 0.1,
@@ -604,6 +642,7 @@ impl Config {
                 self.cluster.virtual_nodes = us(key, v)?
             }
 
+            "train.backend" => self.train.backend = TrainBackend::parse(v)?,
             "train.batch_size" => self.train.batch_size = us(key, v)?,
             "train.steps" => self.train.steps = us(key, v)?,
             "train.lr" => self.train.lr = f32v(key, v)?,
@@ -759,6 +798,7 @@ impl Config {
             (
                 "train",
                 Json::obj(vec![
+                    ("backend", Json::from(self.train.backend.name())),
                     ("batch_size", Json::from(self.train.batch_size)),
                     ("steps", Json::from(self.train.steps)),
                     ("lr", Json::from(self.train.lr as f64)),
@@ -919,6 +959,21 @@ mod tests {
         c.set("sampler.quantize", "none").unwrap();
         assert_eq!(c.sampler.quantize, QuantizeKind::None);
         assert!(c.set("sampler.quantize", "f8").is_err());
+    }
+
+    #[test]
+    fn train_backend_round_trips_and_rejects_garbage() {
+        let mut c = Config::default();
+        assert_eq!(c.train.backend, TrainBackend::Native);
+        c.set("train.backend", "pjrt").unwrap();
+        assert_eq!(c.train.backend, TrainBackend::Pjrt);
+        let j = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.train.backend, TrainBackend::Pjrt);
+        c.set("train.backend", "native").unwrap();
+        assert_eq!(c.train.backend, TrainBackend::Native);
+        assert!(c.set("train.backend", "xla").is_err());
     }
 
     #[test]

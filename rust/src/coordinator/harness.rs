@@ -26,6 +26,61 @@ pub fn config_from(pairs: &[(&str, String)]) -> Result<Config> {
     Ok(cfg)
 }
 
+/// Model-shape preset for a named corpus/dataset prefix. On the native
+/// backend these *are* the kernel shapes (the pjrt backend reads shapes
+/// from the artifact manifest and ignores them); unknown prefixes keep
+/// the config defaults (= the PTB scale).
+pub fn prefix_preset(cfg: &mut Config, prefix: &str) -> Result<()> {
+    let pairs: &[(&str, &str)] = match prefix {
+        "quickstart" => &[
+            ("model.kind", "lm"),
+            ("model.num_classes", "1000"),
+            ("model.embed_dim", "64"),
+            ("model.hidden_dim", "96"),
+            ("model.seq_len", "12"),
+        ],
+        // Bnews scale: n·d embedding + class tables ≈ 26M of the ~34M
+        // total parameters.
+        "bnews" => &[("model.kind", "lm"), ("model.num_classes", "64000")],
+        // Planted XC label spaces, scale-reduced from the real
+        // benchmarks to fit the single-core testbed.
+        "xc_amazon" => &[
+            ("model.kind", "extreme"),
+            ("model.num_classes", "13000"),
+            ("model.embed_dim", "64"),
+        ],
+        "xc_delicious" => &[
+            ("model.kind", "extreme"),
+            ("model.num_classes", "20000"),
+            ("model.embed_dim", "64"),
+        ],
+        "xc_wiki" => &[
+            ("model.kind", "extreme"),
+            ("model.num_classes", "32000"),
+            ("model.embed_dim", "64"),
+        ],
+        _ => &[],
+    };
+    for (k, v) in pairs {
+        cfg.set(k, v).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    Ok(())
+}
+
+/// [`config_from`] with the [`prefix_preset`] applied first, so the
+/// explicit pairs win over the preset.
+pub fn corpus_config(
+    prefix: &str,
+    pairs: &[(&str, String)],
+) -> Result<Config> {
+    let mut cfg = Config::default();
+    prefix_preset(&mut cfg, prefix)?;
+    for (k, v) in pairs {
+        cfg.set(k, v).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    Ok(cfg)
+}
+
 /// Run one training and return its report (printing progress).
 pub fn train_once(
     runtime: &Runtime,
@@ -81,6 +136,21 @@ mod tests {
         ])
         .unwrap();
         assert_eq!(cfg.train.steps, 7);
+    }
+
+    #[test]
+    fn prefix_presets_resolve_shapes() {
+        let mut cfg = Config::default();
+        prefix_preset(&mut cfg, "xc_amazon").unwrap();
+        assert_eq!(cfg.model.num_classes, 13_000);
+        assert_eq!(cfg.model.kind.name(), "extreme");
+        // Explicit pairs win over the preset.
+        let cfg = corpus_config(
+            "bnews",
+            &[("model.num_classes", "777".to_string())],
+        )
+        .unwrap();
+        assert_eq!(cfg.model.num_classes, 777);
     }
 
     #[test]

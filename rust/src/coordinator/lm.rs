@@ -2,13 +2,24 @@
 //! paper Figures 1–4).
 //!
 //! Architecture (mirrors `python/compile/model.py::lm_*`):
-//! context tokens → input-embedding gather (Rust) → LSTM → projection →
+//! context tokens → input-embedding gather → LSTM → projection →
 //! L2-normalized h → sampled-softmax loss against target + shared
-//! negatives. The AOT executables do the differentiable math; Rust does
-//! gathers/scatters, sampling, optimization and tree propagation.
+//! negatives.
+//!
+//! On the default **native** backend the whole step runs in-process
+//! through the fused kernels in [`crate::runtime::native`]: one blocked
+//! LSTM forward, one fused loss+gradient sweep (no `bsz×m`
+//! intermediates), one BPTT backward — all over reusable per-trainer
+//! scratch, so a steady-state step allocates nothing (tracked by the
+//! `scratch_growths` metric). The legacy **pjrt** backend (behind the
+//! `pjrt` cargo feature) executes the AOT HLO artifacts instead; Rust
+//! then only does gathers/scatters, sampling, optimization and tree
+//! propagation.
 
 use super::sampler_service::{build_sampler, SamplerService};
-use super::{aggregate_rows, step_cap, EvalPoint, TrainReport};
+#[cfg(feature = "pjrt")]
+use super::aggregate_rows;
+use super::{step_cap, EvalPoint, RowAggregator, TrainReport};
 use crate::config::{Config, SamplerKind};
 use crate::data::synthlm::{Split, SynthCorpus, SynthLmParams};
 use crate::data::LmBatch;
@@ -18,12 +29,17 @@ use crate::metrics::{Ewma, Metrics};
 use crate::model::ParamStore;
 use crate::optim::Optimizer;
 use crate::rng::Rng;
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::native::{gather_rows_into, FullLoss, FusedLoss, LmStep};
+#[cfg(feature = "pjrt")]
+use crate::runtime::HostTensor;
+use crate::runtime::Runtime;
 use anyhow::{anyhow, Context, Result};
 use std::sync::Arc;
 use std::time::Instant;
 
-/// Shapes discovered from the manifest.
+/// Model shapes: from the [`Config`] on the native backend, from the
+/// artifact manifest on pjrt (so the Rust side can never drift from
+/// what the Python AOT pipeline compiled).
 #[derive(Clone, Debug)]
 pub struct LmShapes {
     pub n: usize,
@@ -35,6 +51,50 @@ pub struct LmShapes {
     pub tau: f32,
 }
 
+/// Per-trainer native-backend state: the fused kernels plus every
+/// steady-state scratch buffer. After the first step has sized them,
+/// a training step performs no data-plane allocations; the growth
+/// counters prove it (surfaced as the `scratch_growths` metric, which
+/// must stay flat after warmup).
+struct NativeLm {
+    lm: LmStep,
+    fused: FusedLoss,
+    full: FullLoss,
+    emb_agg: RowAggregator,
+    cls_agg: RowAggregator,
+    tgt_emb: Vec<f32>,
+    neg_emb: Vec<f32>,
+    upd_buf: Vec<f32>,
+    stale_q: Matrix,
+    gather_growths: u64,
+    reported_growths: u64,
+}
+
+impl NativeLm {
+    fn new(workers: usize) -> Self {
+        Self {
+            lm: LmStep::new(workers),
+            fused: FusedLoss::new(workers),
+            full: FullLoss::new(workers),
+            emb_agg: RowAggregator::new(),
+            cls_agg: RowAggregator::new(),
+            tgt_emb: Vec::new(),
+            neg_emb: Vec::new(),
+            upd_buf: Vec::new(),
+            stale_q: Matrix::zeros(1, 1),
+            gather_growths: 0,
+            reported_growths: 0,
+        }
+    }
+
+    fn growths(&self) -> u64 {
+        self.lm.growths()
+            + self.fused.growths()
+            + self.full.growths()
+            + self.gather_growths
+    }
+}
+
 pub struct LmTrainer<'rt> {
     runtime: &'rt Runtime,
     prefix: String,
@@ -44,10 +104,12 @@ pub struct LmTrainer<'rt> {
     params: ParamStore,
     optimizer: Optimizer,
     service: Option<SamplerService>,
+    native: Option<NativeLm>,
     pub metrics: Metrics,
-    #[allow(dead_code)] rng: Rng, // reserved for trainer-side stochastic features
     stale_sampling: bool,
-    /// Use the `*_unnorm` artifact variants (§4.2 ablation; FULL only).
+    /// §4.2 normalization ablation (FULL only): skip the L2 normalization
+    /// of h and the class table (native) / use the `*_unnorm` artifact
+    /// variants (pjrt).
     unnormalized: bool,
     /// Query embedding carried across steps in stale-sampling mode.
     prev_query: Vec<f32>,
@@ -70,23 +132,35 @@ impl<'rt> LmTrainer<'rt> {
         unnormalized: bool,
     ) -> Result<Self> {
         super::validate_sampler_kind(cfg.sampler.kind)?;
-        let meta = runtime
-            .manifest()
-            .get(&format!("{prefix}_train_sampled"))
-            .ok_or_else(|| anyhow!("missing {prefix}_train_sampled"))?;
-        let g = |k: &str| -> Result<usize> {
-            meta.meta_usize(k)
-                .ok_or_else(|| anyhow!("manifest meta missing '{k}'"))
-        };
-        let shapes = LmShapes {
-            n: g("n")?,
-            d: g("d")?,
-            hidden: g("hidden")?,
-            seq_len: g("seq_len")?,
-            batch: g("batch")?,
-            m: g("m")?,
-            tau: meta.meta_f64("tau").ok_or_else(|| anyhow!("meta tau"))?
-                as f32,
+        let shapes = if runtime.is_native() {
+            LmShapes {
+                n: cfg.model.num_classes,
+                d: cfg.model.embed_dim,
+                hidden: cfg.model.hidden_dim,
+                seq_len: cfg.model.seq_len,
+                batch: cfg.train.batch_size,
+                m: cfg.sampler.num_negatives,
+                tau: cfg.model.tau,
+            }
+        } else {
+            let meta = runtime
+                .manifest()
+                .get(&format!("{prefix}_train_sampled"))
+                .ok_or_else(|| anyhow!("missing {prefix}_train_sampled"))?;
+            let g = |k: &str| -> Result<usize> {
+                meta.meta_usize(k)
+                    .ok_or_else(|| anyhow!("manifest meta missing '{k}'"))
+            };
+            LmShapes {
+                n: g("n")?,
+                d: g("d")?,
+                hidden: g("hidden")?,
+                seq_len: g("seq_len")?,
+                batch: g("batch")?,
+                m: g("m")?,
+                tau: meta.meta_f64("tau").ok_or_else(|| anyhow!("meta tau"))?
+                    as f32,
+            }
         };
 
         // --- data -----------------------------------------------------
@@ -128,10 +202,11 @@ impl<'rt> LmTrainer<'rt> {
             let unigram = corpus.unigram_prior();
             let sampler =
                 build_sampler(&cfg, &normalized, Some(&unigram), &mut rng)?;
-            // The artifact is compiled for exactly m negatives.
+            // The step kernel (native) / artifact (pjrt) is shaped for
+            // exactly m negatives.
             anyhow::ensure!(
                 cfg.sampler.num_negatives == shapes.m,
-                "config m={} but artifact compiled for m={}",
+                "config m={} but step compiled for m={}",
                 cfg.sampler.num_negatives,
                 shapes.m
             );
@@ -152,6 +227,17 @@ impl<'rt> LmTrainer<'rt> {
             ))
         };
 
+        let native = if runtime.is_native() {
+            let workers = if cfg.train.workers == 0 {
+                crate::exec::recommended_workers()
+            } else {
+                cfg.train.workers
+            };
+            Some(NativeLm::new(workers))
+        } else {
+            None
+        };
+
         let optimizer = Optimizer::from_config(&cfg.train);
         Ok(Self {
             runtime,
@@ -162,14 +248,15 @@ impl<'rt> LmTrainer<'rt> {
             params,
             optimizer,
             service,
+            native,
             metrics: Metrics::new(),
-            rng,
             stale_sampling,
             unnormalized,
             prev_query: Vec::new(),
         })
     }
 
+    #[cfg(feature = "pjrt")]
     fn artifact(&self, entry: &str) -> String {
         if self.unnormalized && matches!(entry, "train_full" | "eval") {
             format!("{}_{entry}_unnorm", self.prefix)
@@ -185,10 +272,10 @@ impl<'rt> LmTrainer<'rt> {
     /// and the sampler's tree grows in amortized `O(D log n)` per class —
     /// under `serving.double_buffer` as an epoch-versioned snapshot swap
     /// that lands before the next draw. Training keeps working because
-    /// the sampled-loss artifacts are *n-independent* (they consume
-    /// gathered target/negative rows, never the full table); the
-    /// full-softmax eval keeps scoring the compiled base vocabulary,
-    /// which is exactly the corpus's label space.
+    /// the sampled-loss step is *n-independent* (it consumes gathered
+    /// target/negative rows, never the full table); the full-softmax
+    /// eval keeps scoring the base vocabulary, which is exactly the
+    /// corpus's label space.
     pub fn extend_vocab(&mut self, embeddings: &Matrix) -> Result<Vec<u32>> {
         super::extend_vocab_impl(
             self.service.as_mut(),
@@ -212,6 +299,7 @@ impl<'rt> LmTrainer<'rt> {
 
     /// Which training artifact this sampler uses: the Quadratic baseline
     /// optimizes the absolute-softmax loss (paper §4.1).
+    #[cfg(feature = "pjrt")]
     fn train_entry(&self) -> String {
         match self.cfg.sampler.kind {
             SamplerKind::Full => self.artifact("train_full"),
@@ -330,27 +418,312 @@ impl<'rt> LmTrainer<'rt> {
 
     /// One optimizer step; returns the training loss.
     fn step(&mut self, batch: &LmBatch) -> Result<f64> {
-        if self.cfg.sampler.kind == SamplerKind::Full {
-            self.step_full(batch)
+        if self.runtime.is_native() {
+            let loss = if self.cfg.sampler.kind == SamplerKind::Full {
+                self.native_step_full(batch)?
+            } else {
+                self.native_step_sampled(batch)?
+            };
+            self.flush_growths();
+            Ok(loss)
         } else {
-            self.step_sampled(batch)
+            self.pjrt_step(batch)
         }
     }
 
-    fn step_sampled(&mut self, batch: &LmBatch) -> Result<f64> {
+    /// Publish any scratch-buffer capacity growth since the last step as
+    /// the `scratch_growths` counter: it moves during warmup (first step
+    /// per shape) and must stay flat afterwards — the zero-steady-state-
+    /// allocation invariant, machine-checked by `integration_trainer`.
+    fn flush_growths(&mut self) {
+        if let Some(nat) = &mut self.native {
+            let total = nat.growths();
+            let delta = total - nat.reported_growths;
+            if delta > 0 {
+                self.metrics.incr("scratch_growths", delta);
+                nat.reported_growths = total;
+            }
+        }
+    }
+
+    /// The fused native sampled step: blocked LSTM forward → batched
+    /// negative draw → one-pass fused loss/grad kernel → BPTT backward →
+    /// sparse/dense optimizer updates → batched tree propagation. No
+    /// `bsz×m` intermediates, no per-step data-plane allocations.
+    fn native_step_sampled(&mut self, batch: &LmBatch) -> Result<f64> {
+        let LmShapes { d, hidden: h, seq_len: l, batch: bsz, tau, .. } =
+            self.shapes;
+        let absolute = self.cfg.sampler.kind == SamplerKind::Quadratic
+            && self.cfg.sampler.absolute;
+        let stale = self.stale_sampling && !self.prev_query.is_empty();
+        let nat = self.native.as_mut().expect("native step without state");
+        let NativeLm {
+            lm,
+            fused,
+            emb_agg,
+            cls_agg,
+            tgt_emb,
+            neg_emb,
+            upd_buf,
+            stale_q,
+            gather_growths,
+            ..
+        } = nat;
+
+        // 1. Load context embeddings into the step's blocked layout.
+        let t_gather = Instant::now();
+        lm.begin(bsz, l, d, h);
+        lm.load_rows(&self.params.get(EMB).data, &batch.contexts);
+        self.metrics.record_duration("gather", t_gather.elapsed());
+
+        // 2. Encoder forward: the sampling queries come straight out of
+        //    the step's own forward pass — no separate encode round.
+        let t_fwd = Instant::now();
+        lm.forward(
+            &self.params.get(WX).data,
+            &self.params.get(WH).data,
+            &self.params.get(BIAS).data,
+            &self.params.get(PROJ).data,
+        );
+        let fwd_time = t_fwd.elapsed();
+
+        // 3. One batched draw serves the whole step: shared negatives
+        //    drawn from the batch's per-example queries (round-robin slot
+        //    ownership, exact per-slot probabilities), masks batch-wide.
+        //    Stale mode reuses the previous step's pooled query instead
+        //    (replicating it would only multiply φ work on equal rows).
+        let t_sample = Instant::now();
+        let queries: &Matrix = if stale {
+            if stale_q.cols() != d {
+                *stale_q = Matrix::zeros(1, d);
+                *gather_growths += 1;
+            }
+            stale_q.row_mut(0).copy_from_slice(&self.prev_query);
+            &*stale_q
+        } else {
+            &lm.u
+        };
+        let svc = self.service.as_mut().expect("sampled step without service");
+        let pack = svc.draw_batch(queries, &batch.targets);
+        self.metrics
+            .incr("accidental_hits", pack.accidental_hits as u64);
+        self.metrics.record_duration("sample", t_sample.elapsed());
+
+        // 4. Gather class rows into reusable scratch and run the fused
+        //    loss+grad kernel, then BPTT back through the LSTM.
+        let t_loss = Instant::now();
+        {
+            let cls = self.params.get(CLS);
+            if gather_rows_into(&cls.data, d, &batch.targets, tgt_emb) {
+                *gather_growths += 1;
+            }
+            if gather_rows_into(&cls.data, d, &pack.ids, neg_emb) {
+                *gather_growths += 1;
+            }
+        }
+        let loss = fused.run(
+            &mut lm.u,
+            tgt_emb,
+            neg_emb,
+            &pack.adjust,
+            &pack.mask,
+            tau,
+            absolute,
+        ) as f64;
+        lm.backward(
+            &self.params.get(WX).data,
+            &self.params.get(WH).data,
+            &self.params.get(PROJ).data,
+            &fused.d_q,
+        );
+        self.metrics.record_duration("execute", fwd_time + t_loss.elapsed());
+
+        // 5. Optimizer updates: dense LSTM/projection blocks, then the
+        //    sparse embedding tables through the reusable aggregators.
+        let t_opt = Instant::now();
+        for (block, grad) in [
+            (WX, &lm.dwx),
+            (WH, &lm.dwh),
+            (BIAS, &lm.db),
+            (PROJ, &lm.dproj),
+        ] {
+            let param = self.params.get_mut(block);
+            self.optimizer.update_dense(block, &mut param.data, grad);
+        }
+        emb_agg.begin(d);
+        for r in 0..bsz {
+            for t in 0..l {
+                emb_agg.add(batch.contexts[r * l + t], lm.d_x_row(r, t));
+            }
+        }
+        {
+            let param = self.params.get_mut(EMB);
+            self.optimizer.update_rows(
+                EMB,
+                &mut param.data,
+                d,
+                emb_agg.rows(),
+                emb_agg.grads(),
+            );
+        }
+        cls_agg.begin(d);
+        for (r, &t) in batch.targets.iter().enumerate() {
+            cls_agg.add(t, &fused.d_tgt[r * d..(r + 1) * d]);
+        }
+        for (j, &id) in pack.ids.iter().enumerate() {
+            cls_agg.add(id, &fused.d_neg[j * d..(j + 1) * d]);
+        }
+        {
+            let param = self.params.get_mut(CLS);
+            self.optimizer.update_rows(
+                CLS,
+                &mut param.data,
+                d,
+                cls_agg.rows(),
+                cls_agg.grads(),
+            );
+        }
+        self.metrics.record_duration("optimize", t_opt.elapsed());
+
+        // 6. Propagate updated class embeddings to the sampling tree as
+        //    one batch: φ recomputation collapses into two gemms and
+        //    sharded trees absorb disjoint shards in parallel. The row
+        //    buffer round-trips through the Matrix so its capacity is
+        //    reused next step.
+        let t_tree = Instant::now();
+        {
+            let cls = self.params.get(CLS);
+            let cap0 = upd_buf.capacity();
+            upd_buf.clear();
+            for &r in cls_agg.rows() {
+                upd_buf.extend_from_slice(&cls.data[r * d..(r + 1) * d]);
+            }
+            if upd_buf.capacity() > cap0 {
+                *gather_growths += 1;
+            }
+        }
+        let upd =
+            Matrix::from_vec(cls_agg.rows().len(), d, std::mem::take(upd_buf));
+        let svc = self.service.as_mut().unwrap();
+        svc.update_classes(cls_agg.rows(), &upd);
+        *upd_buf = upd.into_vec();
+        self.metrics.record_duration("tree_update", t_tree.elapsed());
+        self.metrics.incr("tree_updates", cls_agg.rows().len() as u64);
+
+        if self.stale_sampling {
+            self.prev_query =
+                mean_query_from_rows(self.params.get(CLS), &batch.targets, d);
+        }
+        Ok(loss)
+    }
+
+    /// Native full-softmax step (FULL baseline): same LSTM forward/BPTT,
+    /// with the one-pass full loss over the whole class table.
+    fn native_step_full(&mut self, batch: &LmBatch) -> Result<f64> {
+        let LmShapes { n, d, hidden: h, seq_len: l, batch: bsz, tau, .. } =
+            self.shapes;
+        let normalize = self.cfg.model.normalize && !self.unnormalized;
+        let nat = self.native.as_mut().expect("native step without state");
+        let NativeLm { lm, full, emb_agg, .. } = nat;
+
+        let t_gather = Instant::now();
+        lm.begin(bsz, l, d, h);
+        lm.load_rows(&self.params.get(EMB).data, &batch.contexts);
+        self.metrics.record_duration("gather", t_gather.elapsed());
+
+        let t_exec = Instant::now();
+        lm.forward(
+            &self.params.get(WX).data,
+            &self.params.get(WH).data,
+            &self.params.get(BIAS).data,
+            &self.params.get(PROJ).data,
+        );
+        // Re-prepare the normalized class table every step — the
+        // optimizer moved it.
+        full.prepare_classes(
+            &self.params.get(CLS).data[..n * d],
+            n,
+            d,
+            normalize,
+        );
+        let loss = full.forward(&mut lm.u, &batch.targets, tau) as f64;
+        full.backward(&lm.u, &batch.targets, tau);
+        lm.backward(
+            &self.params.get(WX).data,
+            &self.params.get(WH).data,
+            &self.params.get(PROJ).data,
+            &full.d_q,
+        );
+        self.metrics.record_duration("execute", t_exec.elapsed());
+
+        let t_opt = Instant::now();
+        for (block, grad) in [
+            (WX, &lm.dwx),
+            (WH, &lm.dwh),
+            (BIAS, &lm.db),
+            (PROJ, &lm.dproj),
+        ] {
+            let param = self.params.get_mut(block);
+            self.optimizer.update_dense(block, &mut param.data, grad);
+        }
+        emb_agg.begin(d);
+        for r in 0..bsz {
+            for t in 0..l {
+                emb_agg.add(batch.contexts[r * l + t], lm.d_x_row(r, t));
+            }
+        }
+        {
+            let param = self.params.get_mut(EMB);
+            self.optimizer.update_rows(
+                EMB,
+                &mut param.data,
+                d,
+                emb_agg.rows(),
+                emb_agg.grads(),
+            );
+        }
+        {
+            let param = self.params.get_mut(CLS);
+            self.optimizer.update_dense(CLS, &mut param.data, &full.d_cls);
+        }
+        self.metrics.record_duration("optimize", t_opt.elapsed());
+        Ok(loss)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn pjrt_step(&mut self, batch: &LmBatch) -> Result<f64> {
+        if self.cfg.sampler.kind == SamplerKind::Full {
+            self.pjrt_step_full(batch)
+        } else {
+            self.pjrt_step_sampled(batch)
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn pjrt_step(&mut self, _batch: &LmBatch) -> Result<f64> {
+        anyhow::bail!(
+            "non-native runtime in a binary built without the `pjrt` \
+             cargo feature"
+        )
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn pjrt_step_sampled(&mut self, batch: &LmBatch) -> Result<f64> {
         let s = &self.shapes;
         let (bsz, seq_len, d, m) = (s.batch, s.seq_len, s.d, s.m);
 
         // 1. Gather context embeddings.
         let t_gather = Instant::now();
-        let ctx_emb = gather_rows(self.params.get(EMB).data_view(), d, &batch.contexts);
+        let ctx_emb =
+            gather_rows(&self.params.get(EMB).data, d, &batch.contexts);
         self.metrics.record_duration("gather", t_gather.elapsed());
 
         // 2. Per-example query rows for sampling: encoder pass (or, in
         //    stale mode, a single-row pool — replicating the stale query
         //    would only multiply φ work on identical rows).
         let t_sample = Instant::now();
-        let queries: Matrix = if self.stale_sampling && !self.prev_query.is_empty()
+        let queries: Matrix = if self.stale_sampling
+            && !self.prev_query.is_empty()
         {
             Matrix::from_vec(1, d, self.prev_query.clone())
         } else {
@@ -365,19 +738,17 @@ impl<'rt> LmTrainer<'rt> {
             Matrix::from_vec(bsz, d, outs[0].as_f32().to_vec())
         };
 
-        // 3. One batched draw serves the whole step: shared negatives
-        //    drawn from the batch's per-example queries (round-robin slot
-        //    ownership, exact per-slot probabilities), masks batch-wide.
+        // 3. One batched draw serves the whole step.
         let svc = self.service.as_mut().expect("sampled step without service");
         let pack = svc.draw_batch(&queries, &batch.targets);
         self.metrics
             .incr("accidental_hits", pack.accidental_hits as u64);
         self.metrics.record_duration("sample", t_sample.elapsed());
 
-        // 4. Gather class rows and execute the fused train step.
+        // 4. Gather class rows and execute the train artifact.
         let t_exec = Instant::now();
-        let tgt_emb = gather_rows(self.params.get(CLS).data_view(), d, &batch.targets);
-        let neg_emb = gather_rows(self.params.get(CLS).data_view(), d, &pack.ids);
+        let tgt_emb = gather_rows(&self.params.get(CLS).data, d, &batch.targets);
+        let neg_emb = gather_rows(&self.params.get(CLS).data, d, &pack.ids);
         let exe = self.runtime.get(&self.train_entry())?;
         let outs = exe.run(&[
             HostTensor::f32(&[bsz, seq_len, d], ctx_emb),
@@ -395,19 +766,16 @@ impl<'rt> LmTrainer<'rt> {
 
         // 5. Optimizer updates.
         let t_opt = Instant::now();
-        // Dense blocks.
         for (block, out_idx) in [(WX, 2), (WH, 3), (BIAS, 4), (PROJ, 5)] {
             let grad = outs[out_idx].as_f32().to_vec();
             let param = self.params.get_mut(block);
             self.optimizer.update_dense(block, &mut param.data, &grad);
         }
-        // Sparse: input embeddings (contexts).
         let (rows, grads) = aggregate_rows(&batch.contexts, outs[1].as_f32(), d);
         {
             let param = self.params.get_mut(EMB);
             self.optimizer.update_rows(EMB, &mut param.data, d, &rows, &grads);
         }
-        // Sparse: class embeddings (targets + negatives).
         let mut cls_ids: Vec<u32> = batch.targets.clone();
         cls_ids.extend_from_slice(&pack.ids);
         let mut cls_grads: Vec<f32> = outs[6].as_f32().to_vec();
@@ -420,9 +788,7 @@ impl<'rt> LmTrainer<'rt> {
         }
         self.metrics.record_duration("optimize", t_opt.elapsed());
 
-        // 6. Propagate updated class embeddings to the sampling tree as
-        //    one batch: φ recomputation collapses into two gemms and
-        //    sharded trees absorb disjoint shards in parallel.
+        // 6. Propagate updated class embeddings to the sampling tree.
         let t_tree = Instant::now();
         let cls_block = self.params.get(CLS);
         let crow_u32: Vec<u32> = crow.iter().map(|&r| r as u32).collect();
@@ -437,15 +803,18 @@ impl<'rt> LmTrainer<'rt> {
         self.metrics.incr("tree_updates", crow.len() as u64);
 
         if self.stale_sampling {
-            self.prev_query = mean_query_from_rows(self.params.get(CLS), &batch.targets, d);
+            self.prev_query =
+                mean_query_from_rows(self.params.get(CLS), &batch.targets, d);
         }
         Ok(loss)
     }
 
-    fn step_full(&mut self, batch: &LmBatch) -> Result<f64> {
+    #[cfg(feature = "pjrt")]
+    fn pjrt_step_full(&mut self, batch: &LmBatch) -> Result<f64> {
         let s = &self.shapes;
         let (bsz, seq_len, d, n) = (s.batch, s.seq_len, s.d, s.n);
-        let ctx_emb = gather_rows(self.params.get(EMB).data_view(), d, &batch.contexts);
+        let ctx_emb =
+            gather_rows(&self.params.get(EMB).data, d, &batch.contexts);
         let targets: Vec<i32> =
             batch.targets.iter().map(|&t| t as i32).collect();
         let t_exec = Instant::now();
@@ -482,6 +851,56 @@ impl<'rt> LmTrainer<'rt> {
 
     /// Full-softmax validation loss + perplexity over `eval_batches`.
     pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        if self.runtime.is_native() {
+            self.native_evaluate()
+        } else {
+            self.pjrt_evaluate()
+        }
+    }
+
+    /// Native eval: prepare the normalized class table once, then score
+    /// every validation batch with the streaming full-softmax kernel.
+    fn native_evaluate(&mut self) -> Result<(f64, f64)> {
+        let LmShapes { n, d, hidden: h, seq_len: l, batch: bsz, tau, .. } =
+            self.shapes;
+        let normalize = self.cfg.model.normalize && !self.unnormalized;
+        let t_eval = Instant::now();
+        let nat = self.native.as_mut().expect("native eval without state");
+        let NativeLm { lm, full, .. } = nat;
+        // Fixed-shape view: score the base vocabulary (exactly the
+        // corpus's label space) even after extend_vocab grew the table.
+        full.prepare_classes(
+            &self.params.get(CLS).data[..n * d],
+            n,
+            d,
+            normalize,
+        );
+        let mut total = 0.0;
+        let mut count = 0usize;
+        for batch in self
+            .corpus
+            .batches(Split::Valid, l, bsz, 0)
+            .take(self.cfg.train.eval_batches)
+        {
+            lm.begin(bsz, l, d, h);
+            lm.load_rows(&self.params.get(EMB).data, &batch.contexts);
+            lm.forward(
+                &self.params.get(WX).data,
+                &self.params.get(WH).data,
+                &self.params.get(BIAS).data,
+                &self.params.get(PROJ).data,
+            );
+            total += full.forward(&mut lm.u, &batch.targets, tau) as f64;
+            count += 1;
+        }
+        self.metrics.record_duration("eval", t_eval.elapsed());
+        anyhow::ensure!(count > 0, "no validation batches");
+        let mean = total / count as f64;
+        Ok((mean, perplexity(mean)))
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn pjrt_evaluate(&mut self) -> Result<(f64, f64)> {
         let s = &self.shapes;
         let (bsz, seq_len, d) = (s.batch, s.seq_len, s.d);
         let exe = self.runtime.get(&self.artifact("eval"))?;
@@ -494,7 +913,7 @@ impl<'rt> LmTrainer<'rt> {
             .take(self.cfg.train.eval_batches)
         {
             let ctx_emb =
-                gather_rows(self.params.get(EMB).data_view(), d, &batch.contexts);
+                gather_rows(&self.params.get(EMB).data, d, &batch.contexts);
             let targets: Vec<i32> =
                 batch.targets.iter().map(|&t| t as i32).collect();
             let outs = exe.run(&[
@@ -517,6 +936,15 @@ impl<'rt> LmTrainer<'rt> {
         Ok((mean, perplexity(mean)))
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    fn pjrt_evaluate(&mut self) -> Result<(f64, f64)> {
+        anyhow::bail!(
+            "non-native runtime in a binary built without the `pjrt` \
+             cargo feature"
+        )
+    }
+
+    #[cfg(feature = "pjrt")]
     fn block_tensor(&self, id: usize) -> HostTensor {
         let b = self.params.get(id);
         HostTensor::f32(&b.shape, b.data.clone())
@@ -525,6 +953,7 @@ impl<'rt> LmTrainer<'rt> {
     /// First `rows` rows of a 2-D block — the compiled artifacts' fixed
     /// shape view of a table that may have grown past it via
     /// [`LmTrainer::extend_vocab`].
+    #[cfg(feature = "pjrt")]
     fn block_tensor_rows(&self, id: usize, rows: usize) -> HostTensor {
         super::block_rows_tensor(&self.params, id, rows)
     }
@@ -536,7 +965,10 @@ fn normalized_classes(params: &ParamStore, id: usize) -> Matrix {
     Matrix::from_vec(b.rows(), b.cols(), b.data.clone()).l2_normalized_rows()
 }
 
-/// Gather `ids` rows from a flat `rows × dim` table.
+/// Gather `ids` rows from a flat `rows × dim` table into a fresh Vec
+/// (the pjrt paths; the native paths use
+/// [`crate::runtime::native::gather_rows_into`] over reusable scratch).
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 pub(crate) fn gather_rows(table: &[f32], dim: usize, ids: &[u32]) -> Vec<f32> {
     let mut out = Vec::with_capacity(ids.len() * dim);
     for &id in ids {
@@ -574,17 +1006,6 @@ fn mean_query_from_rows(
     }
     l2_normalize(&mut q);
     q
-}
-
-// Helper trait to view a Block's data as a slice without borrowing issues.
-trait DataView {
-    fn data_view(&self) -> &[f32];
-}
-
-impl DataView for crate::model::Block {
-    fn data_view(&self) -> &[f32] {
-        &self.data
-    }
 }
 
 #[cfg(test)]

@@ -8,17 +8,22 @@
 //! 2. **sampling service** — the configured negative sampler (RF-softmax
 //!    kernel tree or a baseline), including the logit adjustment
 //!    `log(m·q)` and accidental-hit masks;
-//! 3. **execution** — one PJRT call per step against the AOT artifacts
-//!    (`{prefix}_train_sampled`, `{prefix}_train_full`, `{prefix}_eval`,
-//!    …) whose shapes are *read from the manifest*, not assumed;
+//! 3. **execution** — on the default **native** backend, one fused
+//!    in-process step (forward + one-pass sampled loss/grad + backward,
+//!    [`crate::runtime::native`]) over reusable scratch; on the optional
+//!    **pjrt** backend (cargo feature `pjrt`), one PJRT call per step
+//!    against the AOT artifacts (`{prefix}_train_sampled`,
+//!    `{prefix}_train_full`, `{prefix}_eval`, …) whose shapes are *read
+//!    from the manifest*, not assumed;
 //! 4. **state** — the [`ParamStore`] and optimizer; sparse row updates for
 //!    embedding tables, dense updates for the rest;
 //! 5. **propagation** — updated class embeddings pushed back into the
 //!    sampling tree (`O(D log n)` per touched class, paper §3.1);
 //! 6. **metrics** — per-phase timers and loss curves, dumped as JSON.
 //!
-//! Model shapes are discovered from `artifacts/manifest.json`, so the Rust
-//! side can never drift from what the Python AOT pipeline compiled.
+//! Native model shapes come from the [`Config`]; on pjrt they are
+//! discovered from `artifacts/manifest.json` instead, so the Rust side
+//! can never drift from what the Python AOT pipeline compiled.
 
 pub mod harness;
 mod lm;
@@ -159,21 +164,27 @@ impl<'rt> TrainerBuilder<'rt> {
     }
 
     pub fn build(self) -> Result<Trainer<'rt>> {
-        let key = format!("{}_train_sampled", self.prefix);
-        let meta = match self.runtime.manifest().get(&key) {
-            Some(m) => m,
-            None => bail!(
-                "no artifact '{key}' in manifest — is the prefix right? \
-                 available: {}",
-                self.runtime.manifest().names().join(", ")
-            ),
+        // Native backend: the task kind comes from the config itself.
+        // Pjrt: from the train artifact's manifest meta, so a stale or
+        // mismatched artifact directory fails loudly here.
+        let kind = if self.runtime.is_native() {
+            self.config.model.kind.name().to_string()
+        } else {
+            let key = format!("{}_train_sampled", self.prefix);
+            let meta = match self.runtime.manifest().get(&key) {
+                Some(m) => m,
+                None => bail!(
+                    "no artifact '{key}' in manifest — is the prefix right? \
+                     available: {}",
+                    self.runtime.manifest().names().join(", ")
+                ),
+            };
+            meta.meta
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .unwrap_or("lm")
+                .to_string()
         };
-        let kind = meta
-            .meta
-            .get("kind")
-            .and_then(|k| k.as_str())
-            .unwrap_or("lm")
-            .to_string();
         if self.unnormalized {
             anyhow::ensure!(
                 self.config.sampler.kind == SamplerKind::Full,
@@ -188,13 +199,13 @@ impl<'rt> TrainerBuilder<'rt> {
                 self.stale_sampling,
                 self.unnormalized,
             )?)),
-            "xc" => Ok(Trainer::Xc(XcTrainer::new(
+            "xc" | "extreme" => Ok(Trainer::Xc(XcTrainer::new(
                 self.runtime,
                 &self.prefix,
                 self.config,
                 self.unnormalized,
             )?)),
-            other => bail!("unknown task kind '{other}' in manifest"),
+            other => bail!("unknown task kind '{other}'"),
         }
     }
 }
@@ -263,6 +274,7 @@ pub(crate) fn retire_classes_impl(
 /// First `rows` rows of a 2-D parameter block as a tensor — the compiled
 /// artifacts' fixed-shape view of a table that may have grown past it
 /// via `extend_vocab`.
+#[cfg(feature = "pjrt")]
 pub(crate) fn block_rows_tensor(
     params: &crate::model::ParamStore,
     id: usize,
@@ -271,6 +283,75 @@ pub(crate) fn block_rows_tensor(
     let b = params.get(id);
     let d = b.cols();
     crate::runtime::HostTensor::f32(&[rows, d], b.data[..rows * d].to_vec())
+}
+
+/// Reusable duplicate-summing row-gradient aggregator — the zero-
+/// allocation counterpart of [`aggregate_rows`] for the native step
+/// path. `begin` resets the aggregator for a new step while retaining
+/// every buffer's capacity, so the steady-state `add` loop allocates
+/// nothing once the per-step row population has been seen once.
+/// Summing duplicates first matters for correctness, not just speed:
+/// applying duplicate rows sequentially through a stateful optimizer
+/// (Adagrad accumulators) would diverge from the dense semantics.
+pub struct RowAggregator {
+    index: std::collections::HashMap<u32, usize>,
+    rows: Vec<usize>,
+    grads: Vec<f32>,
+    dim: usize,
+}
+
+impl RowAggregator {
+    pub fn new() -> Self {
+        Self {
+            index: std::collections::HashMap::new(),
+            rows: Vec::new(),
+            grads: Vec::new(),
+            dim: 0,
+        }
+    }
+
+    /// Start a new step: clear contents, keep capacity.
+    pub fn begin(&mut self, dim: usize) {
+        self.index.clear();
+        self.rows.clear();
+        self.grads.clear();
+        self.dim = dim;
+    }
+
+    /// Accumulate one row gradient (summing into the existing slot when
+    /// `id` repeats within the step).
+    pub fn add(&mut self, id: u32, grad: &[f32]) {
+        debug_assert_eq!(grad.len(), self.dim);
+        let slot = if let Some(&s) = self.index.get(&id) {
+            s
+        } else {
+            let s = self.rows.len();
+            self.index.insert(id, s);
+            self.rows.push(id as usize);
+            self.grads.resize((s + 1) * self.dim, 0.0);
+            s
+        };
+        let dst = &mut self.grads[slot * self.dim..(slot + 1) * self.dim];
+        for (d, &x) in dst.iter_mut().zip(grad) {
+            *d += x;
+        }
+    }
+
+    /// Unique row ids touched this step, in first-seen order.
+    pub fn rows(&self) -> &[usize] {
+        &self.rows
+    }
+
+    /// Summed gradients, `rows().len() × dim`, matching `rows()` order.
+    pub fn grads(&self) -> &[f32] {
+        &self.grads
+    }
+}
+
+impl Default for RowAggregator {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Aggregate per-row gradients with duplicate row ids: returns unique row
@@ -331,6 +412,41 @@ mod tests {
     fn aggregate_rows_empty() {
         let (u, s) = aggregate_rows(&[], &[], 4);
         assert!(u.is_empty() && s.is_empty());
+    }
+
+    #[test]
+    fn row_aggregator_matches_aggregate_rows() {
+        let ids = [3u32, 1, 3, 7, 1];
+        let grads: Vec<f32> = (0..ids.len() * 2).map(|i| i as f32).collect();
+        let (unique, summed) = aggregate_rows(&ids, &grads, 2);
+        let mut agg = RowAggregator::new();
+        agg.begin(2);
+        for (k, &id) in ids.iter().enumerate() {
+            agg.add(id, &grads[k * 2..(k + 1) * 2]);
+        }
+        assert_eq!(agg.rows(), unique.as_slice());
+        assert_eq!(agg.grads(), summed.as_slice());
+    }
+
+    #[test]
+    fn row_aggregator_reuses_capacity_across_steps() {
+        let mut agg = RowAggregator::new();
+        agg.begin(3);
+        for id in 0..32u32 {
+            agg.add(id, &[1.0, 2.0, 3.0]);
+        }
+        let cap_rows = agg.rows.capacity();
+        let cap_grads = agg.grads.capacity();
+        for _ in 0..5 {
+            agg.begin(3);
+            for id in 0..32u32 {
+                agg.add(id % 8, &[1.0, 2.0, 3.0]);
+            }
+            assert_eq!(agg.rows().len(), 8);
+            assert_eq!(agg.grads()[0], 4.0); // id 0 hit 4 times
+        }
+        assert_eq!(agg.rows.capacity(), cap_rows);
+        assert_eq!(agg.grads.capacity(), cap_grads);
     }
 
     #[test]

@@ -2,23 +2,35 @@
 //! / WikiLSHTC experiments, paper Table 3).
 //!
 //! Architecture (mirrors `python/compile/model.py::xc_*`): sparse features
-//! → feature-embedding gather (Rust) → weighted sum → L2-normalized h →
-//! sampled softmax against the reduced multi-class target. The sampling
-//! query h is cheap enough here to compute in Rust directly (no encoder
-//! artifact needed).
+//! → feature-embedding gather → weighted sum → L2-normalized h →
+//! sampled softmax against the reduced multi-class target.
+//!
+//! On the default **native** backend the step runs through
+//! [`crate::runtime::native`]: [`XcStep`] produces the raw weighted-sum
+//! encoder output (the loss kernels own the L2 normalization and its
+//! chain rule), [`FusedLoss`] does the one-pass sampled loss/grad sweep,
+//! and [`XcStep::feat_grad`] scales the query grads back onto the
+//! feature slots — all over reusable scratch (`scratch_growths` flat
+//! after warmup). The legacy pjrt artifact path survives behind the
+//! `pjrt` cargo feature.
 
 use super::sampler_service::{build_sampler, SamplerService};
-use super::{aggregate_rows, step_cap, EvalPoint, TrainReport};
+#[cfg(feature = "pjrt")]
+use super::aggregate_rows;
+use super::{step_cap, EvalPoint, RowAggregator, TrainReport};
 use crate::config::{Config, SamplerKind};
 use crate::data::extreme::{ExtremeDataset, ExtremeParams};
 use crate::data::SparseBatch;
 use crate::eval::batch_precision_at_k;
-use crate::linalg::{axpy_rows, l2_normalize, Matrix};
+use crate::linalg::Matrix;
 use crate::metrics::{Ewma, Metrics};
 use crate::model::ParamStore;
 use crate::optim::Optimizer;
 use crate::rng::Rng;
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::native::{gather_rows_into, FullLoss, FusedLoss, XcStep};
+#[cfg(feature = "pjrt")]
+use crate::runtime::HostTensor;
+use crate::runtime::Runtime;
 use anyhow::{anyhow, Result};
 use std::time::Instant;
 
@@ -33,8 +45,51 @@ pub struct XcShapes {
     pub tau: f32,
 }
 
+/// Native-backend state: fused kernels + steady-state scratch (see
+/// the `NativeLm` twin in `lm.rs` for the invariant).
+struct NativeXc {
+    xc: XcStep,
+    fused: FusedLoss,
+    full: FullLoss,
+    feat_agg: RowAggregator,
+    cls_agg: RowAggregator,
+    tgt_emb: Vec<f32>,
+    neg_emb: Vec<f32>,
+    upd_buf: Vec<f32>,
+    scores_buf: Vec<f32>,
+    gather_growths: u64,
+    reported_growths: u64,
+}
+
+impl NativeXc {
+    fn new(workers: usize) -> Self {
+        Self {
+            xc: XcStep::new(workers),
+            fused: FusedLoss::new(workers),
+            full: FullLoss::new(workers),
+            feat_agg: RowAggregator::new(),
+            cls_agg: RowAggregator::new(),
+            tgt_emb: Vec::new(),
+            neg_emb: Vec::new(),
+            upd_buf: Vec::new(),
+            scores_buf: Vec::new(),
+            gather_growths: 0,
+            reported_growths: 0,
+        }
+    }
+
+    fn growths(&self) -> u64 {
+        self.xc.growths()
+            + self.fused.growths()
+            + self.full.growths()
+            + self.gather_growths
+    }
+}
+
 pub struct XcTrainer<'rt> {
     runtime: &'rt Runtime,
+    /// Artifact-name prefix; only consulted by the pjrt entry points.
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     prefix: String,
     cfg: Config,
     pub shapes: XcShapes,
@@ -42,9 +97,11 @@ pub struct XcTrainer<'rt> {
     params: ParamStore,
     optimizer: Optimizer,
     service: Option<SamplerService>,
+    native: Option<NativeXc>,
     pub metrics: Metrics,
     rng: Rng,
-    /// Use the `*_unnorm` artifact variants (§4.2 ablation; FULL only).
+    /// §4.2 normalization ablation (FULL only): skip the L2 norms
+    /// (native) / use the `*_unnorm` artifact variants (pjrt).
     unnormalized: bool,
 }
 
@@ -59,27 +116,40 @@ impl<'rt> XcTrainer<'rt> {
         unnormalized: bool,
     ) -> Result<Self> {
         super::validate_sampler_kind(cfg.sampler.kind)?;
-        let meta = runtime
-            .manifest()
-            .get(&format!("{prefix}_train_sampled"))
-            .ok_or_else(|| anyhow!("missing {prefix}_train_sampled"))?;
-        let g = |k: &str| -> Result<usize> {
-            meta.meta_usize(k)
-                .ok_or_else(|| anyhow!("manifest meta missing '{k}'"))
-        };
-        let shapes = XcShapes {
-            n: g("n")?,
-            d: g("d")?,
-            v: g("v")?,
-            nnz: g("nnz")?,
-            batch: g("batch")?,
-            m: g("m")?,
-            tau: meta.meta_f64("tau").ok_or_else(|| anyhow!("meta tau"))? as f32,
+        let shapes = if runtime.is_native() {
+            XcShapes {
+                n: cfg.model.num_classes,
+                d: cfg.model.embed_dim,
+                v: cfg.model.feature_dim,
+                nnz: cfg.model.nnz,
+                batch: cfg.train.batch_size,
+                m: cfg.sampler.num_negatives,
+                tau: cfg.model.tau,
+            }
+        } else {
+            let meta = runtime
+                .manifest()
+                .get(&format!("{prefix}_train_sampled"))
+                .ok_or_else(|| anyhow!("missing {prefix}_train_sampled"))?;
+            let g = |k: &str| -> Result<usize> {
+                meta.meta_usize(k)
+                    .ok_or_else(|| anyhow!("manifest meta missing '{k}'"))
+            };
+            XcShapes {
+                n: g("n")?,
+                d: g("d")?,
+                v: g("v")?,
+                nnz: g("nnz")?,
+                batch: g("batch")?,
+                m: g("m")?,
+                tau: meta.meta_f64("tau").ok_or_else(|| anyhow!("meta tau"))?
+                    as f32,
+            }
         };
         anyhow::ensure!(
             cfg.sampler.kind == SamplerKind::Full
                 || cfg.sampler.num_negatives == shapes.m,
-            "config m={} but artifact compiled for m={}",
+            "config m={} but step compiled for m={}",
             cfg.sampler.num_negatives,
             shapes.m
         );
@@ -131,6 +201,17 @@ impl<'rt> XcTrainer<'rt> {
             ))
         };
 
+        let native = if runtime.is_native() {
+            let workers = if cfg.train.workers == 0 {
+                crate::exec::recommended_workers()
+            } else {
+                cfg.train.workers
+            };
+            Some(NativeXc::new(workers))
+        } else {
+            None
+        };
+
         let optimizer = Optimizer::from_config(&cfg.train);
         Ok(Self {
             runtime,
@@ -141,12 +222,14 @@ impl<'rt> XcTrainer<'rt> {
             params,
             optimizer,
             service,
+            native,
             metrics: Metrics::new(),
             rng,
             unnormalized,
         })
     }
 
+    #[cfg(feature = "pjrt")]
     fn artifact(&self, entry: &str) -> String {
         if self.unnormalized && matches!(entry, "train_full" | "scores") {
             format!("{}_{entry}_unnorm", self.prefix)
@@ -155,6 +238,7 @@ impl<'rt> XcTrainer<'rt> {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn train_entry(&self) -> String {
         match self.cfg.sampler.kind {
             SamplerKind::Full => self.artifact("train_full"),
@@ -179,9 +263,9 @@ impl<'rt> XcTrainer<'rt> {
     /// become new classes with stable ids extending `0..n`. The CLS
     /// block grows in place (optimizer history preserved), the sampler
     /// tree grows in amortized `O(D log n)` per class, and the sampled
-    /// train path keeps working unchanged (its artifacts gather rows —
-    /// they are n-independent). PREC@k evaluation keeps ranking the
-    /// compiled base label set.
+    /// train path keeps working unchanged (it gathers rows — it is
+    /// n-independent). PREC@k evaluation keeps ranking the base label
+    /// set.
     pub fn extend_vocab(&mut self, embeddings: &Matrix) -> Result<Vec<u32>> {
         super::extend_vocab_impl(
             self.service.as_mut(),
@@ -203,6 +287,7 @@ impl<'rt> XcTrainer<'rt> {
 
     /// First `rows` rows of a 2-D block — the compiled artifacts' fixed
     /// shape view of a table that may have grown past it.
+    #[cfg(feature = "pjrt")]
     fn block_tensor_rows(&self, id: usize, rows: usize) -> HostTensor {
         super::block_rows_tensor(&self.params, id, rows)
     }
@@ -270,17 +355,222 @@ impl<'rt> XcTrainer<'rt> {
     }
 
     fn step(&mut self, batch: &SparseBatch) -> Result<f64> {
-        if self.cfg.sampler.kind == SamplerKind::Full {
-            self.step_full(batch)
+        if self.runtime.is_native() {
+            let loss = if self.cfg.sampler.kind == SamplerKind::Full {
+                self.native_step_full(batch)?
+            } else {
+                self.native_step_sampled(batch)?
+            };
+            self.flush_growths();
+            Ok(loss)
+        } else if self.cfg.sampler.kind == SamplerKind::Full {
+            self.pjrt_step_full(batch)
         } else {
-            self.step_sampled(batch)
+            self.pjrt_step_sampled(batch)
         }
     }
 
+    /// See `LmTrainer::flush_growths`: publishes scratch capacity growth
+    /// as the `scratch_growths` counter (flat after warmup).
+    fn flush_growths(&mut self) {
+        if let Some(nat) = &mut self.native {
+            let total = nat.growths();
+            let delta = total - nat.reported_growths;
+            if delta > 0 {
+                self.metrics.incr("scratch_growths", delta);
+                nat.reported_growths = total;
+            }
+        }
+    }
+
+    /// Fused native sampled step: raw weighted-sum encoder → batched
+    /// negative draw → one-pass fused loss/grad → per-slot feature
+    /// grads → sparse optimizer updates → batched tree propagation.
+    fn native_step_sampled(&mut self, batch: &SparseBatch) -> Result<f64> {
+        let XcShapes { d, nnz, batch: bsz, tau, .. } = self.shapes;
+        let absolute = self.cfg.sampler.kind == SamplerKind::Quadratic
+            && self.cfg.sampler.absolute;
+        let nat = self.native.as_mut().expect("native step without state");
+        let NativeXc {
+            xc,
+            fused,
+            feat_agg,
+            cls_agg,
+            tgt_emb,
+            neg_emb,
+            upd_buf,
+            gather_growths,
+            ..
+        } = nat;
+
+        // 1. Encoder + negative draw. `xc.u` holds the *raw* weighted
+        //    feature sums; the draw normalizes its own scratch copy and
+        //    the fused loss owns the normalization chain rule.
+        let t_sample = Instant::now();
+        xc.forward(
+            &self.params.get(W).data,
+            d,
+            &batch.features,
+            &batch.values,
+            bsz,
+            nnz,
+        );
+        let svc = self.service.as_mut().expect("sampled step without service");
+        let pack = svc.draw_batch(&xc.u, &batch.targets);
+        self.metrics
+            .incr("accidental_hits", pack.accidental_hits as u64);
+        self.metrics.record_duration("sample", t_sample.elapsed());
+
+        // 2. Gather class rows + fused loss/grad + feature-slot grads.
+        let t_exec = Instant::now();
+        {
+            let cls = self.params.get(CLS);
+            if gather_rows_into(&cls.data, d, &batch.targets, tgt_emb) {
+                *gather_growths += 1;
+            }
+            if gather_rows_into(&cls.data, d, &pack.ids, neg_emb) {
+                *gather_growths += 1;
+            }
+        }
+        let loss = fused.run(
+            &mut xc.u,
+            tgt_emb,
+            neg_emb,
+            &pack.adjust,
+            &pack.mask,
+            tau,
+            absolute,
+        ) as f64;
+        xc.feat_grad(&fused.d_q, &batch.values, bsz, nnz, d);
+        self.metrics.record_duration("execute", t_exec.elapsed());
+
+        // 3. Sparse optimizer updates through the reusable aggregators.
+        let t_opt = Instant::now();
+        feat_agg.begin(d);
+        for (k, &f) in batch.features.iter().enumerate() {
+            feat_agg.add(f, &xc.d_feat[k * d..(k + 1) * d]);
+        }
+        {
+            let param = self.params.get_mut(W);
+            self.optimizer.update_rows(
+                W,
+                &mut param.data,
+                d,
+                feat_agg.rows(),
+                feat_agg.grads(),
+            );
+        }
+        cls_agg.begin(d);
+        for (r, &t) in batch.targets.iter().enumerate() {
+            cls_agg.add(t, &fused.d_tgt[r * d..(r + 1) * d]);
+        }
+        for (j, &id) in pack.ids.iter().enumerate() {
+            cls_agg.add(id, &fused.d_neg[j * d..(j + 1) * d]);
+        }
+        {
+            let param = self.params.get_mut(CLS);
+            self.optimizer.update_rows(
+                CLS,
+                &mut param.data,
+                d,
+                cls_agg.rows(),
+                cls_agg.grads(),
+            );
+        }
+        self.metrics.record_duration("optimize", t_opt.elapsed());
+
+        // 4. Propagate the step's touched classes as one sharded batch.
+        let t_tree = Instant::now();
+        {
+            let cls = self.params.get(CLS);
+            let cap0 = upd_buf.capacity();
+            upd_buf.clear();
+            for &r in cls_agg.rows() {
+                upd_buf.extend_from_slice(&cls.data[r * d..(r + 1) * d]);
+            }
+            if upd_buf.capacity() > cap0 {
+                *gather_growths += 1;
+            }
+        }
+        let upd =
+            Matrix::from_vec(cls_agg.rows().len(), d, std::mem::take(upd_buf));
+        let svc = self.service.as_mut().unwrap();
+        svc.update_classes(cls_agg.rows(), &upd);
+        *upd_buf = upd.into_vec();
+        self.metrics.record_duration("tree_update", t_tree.elapsed());
+        self.metrics.incr("tree_updates", cls_agg.rows().len() as u64);
+        Ok(loss)
+    }
+
+    /// Native full-softmax step (FULL baseline / §4.2 ablation).
+    fn native_step_full(&mut self, batch: &SparseBatch) -> Result<f64> {
+        let XcShapes { n, d, nnz, batch: bsz, tau, .. } = self.shapes;
+        let normalize = self.cfg.model.normalize && !self.unnormalized;
+        let nat = self.native.as_mut().expect("native step without state");
+        let NativeXc { xc, full, feat_agg, .. } = nat;
+
+        let t_exec = Instant::now();
+        xc.forward(
+            &self.params.get(W).data,
+            d,
+            &batch.features,
+            &batch.values,
+            bsz,
+            nnz,
+        );
+        full.prepare_classes(
+            &self.params.get(CLS).data[..n * d],
+            n,
+            d,
+            normalize,
+        );
+        let loss = full.forward(&mut xc.u, &batch.targets, tau) as f64;
+        full.backward(&xc.u, &batch.targets, tau);
+        xc.feat_grad(&full.d_q, &batch.values, bsz, nnz, d);
+        self.metrics.record_duration("execute", t_exec.elapsed());
+
+        let t_opt = Instant::now();
+        feat_agg.begin(d);
+        for (k, &f) in batch.features.iter().enumerate() {
+            feat_agg.add(f, &xc.d_feat[k * d..(k + 1) * d]);
+        }
+        {
+            let param = self.params.get_mut(W);
+            self.optimizer.update_rows(
+                W,
+                &mut param.data,
+                d,
+                feat_agg.rows(),
+                feat_agg.grads(),
+            );
+        }
+        {
+            let param = self.params.get_mut(CLS);
+            self.optimizer.update_dense(CLS, &mut param.data, &full.d_cls);
+        }
+        self.metrics.record_duration("optimize", t_opt.elapsed());
+        Ok(loss)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn pjrt_step_sampled(&mut self, _batch: &SparseBatch) -> Result<f64> {
+        anyhow::bail!(
+            "non-native runtime in a binary built without the `pjrt` \
+             cargo feature"
+        )
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn pjrt_step_full(&mut self, _batch: &SparseBatch) -> Result<f64> {
+        anyhow::bail!(
+            "non-native runtime in a binary built without the `pjrt` \
+             cargo feature"
+        )
+    }
+
     /// Per-example input embeddings h, computed Rust-side as the sampling
-    /// query matrix (one L2-normalized row per example — no mean-query
-    /// collapse; each row is a weighted feature-row sum via
-    /// [`axpy_rows`]).
+    /// query matrix (one L2-normalized row per example).
+    #[cfg(feature = "pjrt")]
     fn queries_of_batch(&self, batch: &SparseBatch) -> Matrix {
         let d = self.shapes.d;
         let w = self.params.get(W);
@@ -288,13 +578,14 @@ impl<'rt> XcTrainer<'rt> {
         for i in 0..batch.batch {
             let (feats, vals) = batch.feature_row(i);
             let row = q.row_mut(i);
-            axpy_rows(&w.data, d, feats, vals, row);
-            l2_normalize(row);
+            crate::linalg::axpy_rows(&w.data, d, feats, vals, row);
+            crate::linalg::l2_normalize(row);
         }
         q
     }
 
-    fn step_sampled(&mut self, batch: &SparseBatch) -> Result<f64> {
+    #[cfg(feature = "pjrt")]
+    fn pjrt_step_sampled(&mut self, batch: &SparseBatch) -> Result<f64> {
         let s = &self.shapes;
         let (bsz, nnz, d, m) = (s.batch, s.nnz, s.d, s.m);
 
@@ -363,7 +654,8 @@ impl<'rt> XcTrainer<'rt> {
         Ok(loss)
     }
 
-    fn step_full(&mut self, batch: &SparseBatch) -> Result<f64> {
+    #[cfg(feature = "pjrt")]
+    fn pjrt_step_full(&mut self, batch: &SparseBatch) -> Result<f64> {
         let s = &self.shapes;
         let (bsz, nnz, d) = (s.batch, s.nnz, s.d);
         let feat_emb = super::lm::gather_rows(
@@ -397,8 +689,87 @@ impl<'rt> XcTrainer<'rt> {
         Ok(loss)
     }
 
-    /// PREC@{1,3,5} on the test split via the scores artifact.
+    /// PREC@{1,3,5} on the test split.
     pub fn evaluate(&mut self) -> Result<(f64, f64, f64)> {
+        if self.runtime.is_native() {
+            self.native_evaluate()
+        } else {
+            self.pjrt_evaluate()
+        }
+    }
+
+    /// Native eval: prepare the (normalized) class table once, then
+    /// score each test chunk with the streaming kernel and rank.
+    fn native_evaluate(&mut self) -> Result<(f64, f64, f64)> {
+        let XcShapes { n, d, nnz, batch: bsz, .. } = self.shapes;
+        let normalize = self.cfg.model.normalize && !self.unnormalized;
+        let t_eval = Instant::now();
+        let nat = self.native.as_mut().expect("native eval without state");
+        let NativeXc { xc, full, scores_buf, gather_growths, .. } = nat;
+        // Fixed-shape view: rank the base label set even after
+        // extend_vocab grew the table.
+        full.prepare_classes(
+            &self.params.get(CLS).data[..n * d],
+            n,
+            d,
+            normalize,
+        );
+        if scores_buf.len() != bsz * n {
+            scores_buf.resize(bsz * n, 0.0);
+            *gather_growths += 1;
+        }
+        let mut p1 = 0.0;
+        let mut p3 = 0.0;
+        let mut p5 = 0.0;
+        let mut batches = 0usize;
+        let mut features = Vec::with_capacity(bsz * nnz);
+        let mut values = Vec::with_capacity(bsz * nnz);
+        let mut labels: Vec<Vec<u32>> = Vec::with_capacity(bsz);
+        let eval_examples = (self.cfg.train.eval_batches * bsz)
+            .min(self.data.test.len() / bsz * bsz);
+        for chunk_start in (0..eval_examples).step_by(bsz) {
+            if chunk_start + bsz > eval_examples {
+                break;
+            }
+            features.clear();
+            values.clear();
+            labels.clear();
+            for i in chunk_start..chunk_start + bsz {
+                let ex = &self.data.test[i];
+                features.extend_from_slice(&ex.features);
+                values.extend_from_slice(&ex.values);
+                labels.push(ex.labels.clone());
+            }
+            xc.forward(
+                &self.params.get(W).data,
+                d,
+                &features,
+                &values,
+                bsz,
+                nnz,
+            );
+            full.scores_into(&mut xc.u, scores_buf);
+            p1 += batch_precision_at_k(scores_buf, n, &labels, 1);
+            p3 += batch_precision_at_k(scores_buf, n, &labels, 3);
+            p5 += batch_precision_at_k(scores_buf, n, &labels, 5);
+            batches += 1;
+        }
+        self.metrics.record_duration("eval", t_eval.elapsed());
+        anyhow::ensure!(batches > 0, "no eval batches");
+        let b = batches as f64;
+        Ok((p1 / b, p3 / b, p5 / b))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn pjrt_evaluate(&mut self) -> Result<(f64, f64, f64)> {
+        anyhow::bail!(
+            "non-native runtime in a binary built without the `pjrt` \
+             cargo feature"
+        )
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn pjrt_evaluate(&mut self) -> Result<(f64, f64, f64)> {
         let s = &self.shapes;
         let (bsz, nnz, d, n) = (s.batch, s.nnz, s.d, s.n);
         let exe = self.runtime.get(&self.artifact("scores"))?;

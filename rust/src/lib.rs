@@ -71,7 +71,7 @@
 //!   `bench-check --require-replica-speedup R` gates the scaling win
 //!   in CI.
 //!
-//! ## Mutable class universe (this PR's tentpole)
+//! ## Mutable class universe
 //!
 //! Every real extreme-classification deployment faces a *streaming*
 //! label space: classes appear and retire under live traffic. The class
@@ -101,15 +101,33 @@
 //!   (wire v2) drive churn cross-process via
 //!   [`transport::VocabAdmin`], and `serve-bench --churn adds:retires`
 //!   reports mutation-latency percentiles and post-churn qps.
-//! * **L2 (JAX, build time)** — model fwd/bwd (`python/compile/model.py`),
-//!   AOT-lowered to HLO text once by `make artifacts`.
-//! * **L1 (Pallas, build time)** — the RFF feature-map and fused
-//!   sampled-softmax-loss kernels (`python/compile/kernels/`), lowered into
-//!   the same HLO.
+//! ## Train-step execution ([`runtime`])
 //!
-//! Python never runs on the training hot path: the [`runtime`] module loads
-//! the HLO artifacts into a PJRT CPU client and [`coordinator::Trainer`]
-//! drives everything from Rust.
+//! Training executes on one of two backends behind the [`runtime`]
+//! seam (config `train.backend`):
+//!
+//! * **native** (the default) — [`runtime::native`] runs the whole step
+//!   in-process as fused f32 kernels over the [`linalg::simd`] tiers:
+//!   [`runtime::native::LmStep`] / [`runtime::native::XcStep`] encode,
+//!   [`runtime::native::FusedLoss`] computes the sampled loss *and*
+//!   every gradient in one tile sweep over the `[target | negatives]`
+//!   logits — the `−log(m·q)` correction, the accidental-hit mask, and
+//!   a streaming logsumexp applied in-register, with query/class/dense
+//!   gradients accumulated in the same pass and no `bsz×m` intermediate
+//!   ever materialized — and [`runtime::native::FullLoss`] owns the
+//!   full-softmax eval. Scratch persists across steps (the trainers'
+//!   `scratch_growths` metric counts buffer growths and flatlines after
+//!   warmup) and row work fans out over [`exec::serve_pool`]. Needs no
+//!   artifacts, no Python, no non-default cargo features.
+//! * **pjrt** (`--features pjrt` + `train.backend = pjrt`) — the legacy
+//!   AOT path: JAX model fwd/bwd (`python/compile/model.py`) and Pallas
+//!   RFF/loss kernels (`python/compile/kernels/`) lowered to HLO text
+//!   once by `make artifacts`, executed through a PJRT CPU client. Kept
+//!   as an A/B oracle; the feature is off by default so the tier-1
+//!   build never needs an XLA toolchain.
+//!
+//! Either way, Python never runs on the training hot path:
+//! [`coordinator::Trainer`] drives everything from Rust.
 //!
 //! ## The batch-first sampling pipeline
 //!
@@ -171,6 +189,14 @@
 //!   within the existing bias budget vs f32. The `quantized_sampler`
 //!   BENCH cells track draws/sec + resident bytes per mode, and
 //!   serving records tag both `quantize` and `simd`.
+//! * **Fused native train step** ([`runtime::native`]) — the one-pass
+//!   loss/grad kernels replace the composed gather → forward → loss →
+//!   backward pipeline (fresh buffers per stage, full logit matrix
+//!   materialized) that the artifact path executed. The
+//!   `train_step_fused` BENCH record (`cargo bench --bench
+//!   table2_walltime`) carries the A/B against exactly that composed
+//!   baseline plus a per-stage breakdown, and CI gates the win with
+//!   `bench-check --require-fused-speedup 1.5`.
 //!
 //! Capacity growth is amortized away too: `sampler.max_capacity`
 //! pre-reserves tree slots so a known churn schedule pays zero

@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! rfsoftmax train --prefix ptb --sampler.kind rff --train.steps 2000
-//! rfsoftmax info                       # list compiled artifacts
+//! rfsoftmax train --train.backend pjrt --artifacts artifacts  # HLO path
+//! rfsoftmax info                       # backend + compiled artifacts
 //! rfsoftmax sample --sampler.kind rff  # standalone sampling demo
 //! rfsoftmax bias --sampler.kind uniform
 //! rfsoftmax serve-bench --threads 8 --sampler.shards 8  # serving load test
@@ -86,11 +87,12 @@ fn cmd_train(raw: &[String]) -> Result<()> {
             "{}",
             render_help(
                 "train",
-                "train a model against the AOT artifacts",
+                "train a model on the fused native backend (default) or \
+                 the pjrt artifacts",
                 &[
                     FlagSpec {
                         name: "prefix",
-                        help: "artifact prefix (quickstart|ptb|bnews|xc_*)",
+                        help: "run/artifact prefix (quickstart|ptb|bnews|xc_*)",
                         default: Some("quickstart".into()),
                     },
                     FlagSpec {
@@ -100,7 +102,7 @@ fn cmd_train(raw: &[String]) -> Result<()> {
                     },
                     FlagSpec {
                         name: "artifacts",
-                        help: "artifact directory",
+                        help: "artifact directory (train.backend = pjrt only)",
                         default: Some("artifacts".into()),
                     },
                     FlagSpec {
@@ -120,8 +122,23 @@ fn cmd_train(raw: &[String]) -> Result<()> {
     }
     let prefix = a.str_or("prefix", "quickstart").to_string();
     let dir = a.str_or("artifacts", "artifacts").to_string();
-    let cfg = Config::load(a.get("config"), split_config_overrides(&a).into_iter())?;
-    let runtime = Runtime::load(&dir)?;
+    // Shape sources, least to most specific: the corpus-prefix preset
+    // (the native backend's kernel shapes), then the JSON config file,
+    // then explicit CLI overrides. Later sources win.
+    let mut cfg = Config::default();
+    rfsoftmax::coordinator::harness::prefix_preset(&mut cfg, &prefix)?;
+    if let Some(p) = a.get("config") {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?;
+        let j = rfsoftmax::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+        cfg.apply_json(&j)?;
+    }
+    for (k, v) in split_config_overrides(&a) {
+        cfg.set(&k, &v)?;
+    }
+    cfg.validate()?;
+    let runtime = Runtime::for_train(&cfg, &dir)?;
     println!(
         "platform: {} | prefix: {prefix} | sampler: {}",
         runtime.platform(),
@@ -143,16 +160,28 @@ fn cmd_train(raw: &[String]) -> Result<()> {
 fn cmd_info(raw: &[String]) -> Result<()> {
     let a = Args::parse(raw, &["help"])?;
     let dir = a.str_or("artifacts", "artifacts").to_string();
-    let runtime = Runtime::load(&dir)?;
-    println!("platform: {}", runtime.platform());
-    println!("artifacts in {dir}:");
-    for meta in runtime.manifest().iter() {
-        let ins: Vec<String> = meta
-            .inputs
-            .iter()
-            .map(|t| format!("{}:{}{:?}", t.name, t.dtype, t.shape))
-            .collect();
-        println!("  {:<28} {} -> {} outputs", meta.name, ins.join(" "), meta.outputs.len());
+    // The default backend needs no artifacts; report it first, then list
+    // any pjrt artifact directory that happens to be loadable.
+    let native = Runtime::native();
+    println!("default backend: {}", native.platform());
+    match Runtime::load(&dir) {
+        Ok(runtime) => {
+            println!("pjrt artifacts in {dir}:");
+            for meta in runtime.manifest().iter() {
+                let ins: Vec<String> = meta
+                    .inputs
+                    .iter()
+                    .map(|t| format!("{}:{}{:?}", t.name, t.dtype, t.shape))
+                    .collect();
+                println!(
+                    "  {:<28} {} -> {} outputs",
+                    meta.name,
+                    ins.join(" "),
+                    meta.outputs.len()
+                );
+            }
+        }
+        Err(e) => println!("pjrt backend unavailable: {e:#}"),
     }
     Ok(())
 }
@@ -619,6 +648,9 @@ fn stats_cluster(
 /// rather than by review). With `--require-simd-speedup R`, some
 /// `simd_matmul_nt` record must show the vectorized microkernel ≥ R×
 /// the scalar reference (the ISSUE 6 gate). With
+/// `--require-fused-speedup R`, some `train_step_fused` record must
+/// show the fused one-pass native train step ≥ R× the composed
+/// stage-by-stage baseline (the ISSUE 9 gate). With
 /// `--require-telemetry-overhead P`, every serving record's attributed
 /// telemetry cost (`telemetry_overhead_pct`) must be ≤ P percent — the
 /// observability budget, checked by machine. With `--baseline FILE`,
@@ -678,6 +710,10 @@ fn bench_identity(tag: &str) -> Option<(&'static [&'static str], &'static str)> 
             &["n", "d", "m", "quantize", "simd", "smoke"],
             "draws_per_sec",
         )),
+        "train_step_fused" => Some((
+            &["task", "b", "l", "d", "h", "m", "simd", "smoke"],
+            "fused_steps_per_sec",
+        )),
         _ => None,
     }
 }
@@ -725,6 +761,14 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
                         default: None,
                     },
                     FlagSpec {
+                        name: "require-fused-speedup",
+                        help: "also require a train_step_fused record \
+                               with the fused one-pass train step ≥ this \
+                               factor over the composed stage-by-stage \
+                               baseline",
+                        default: None,
+                    },
+                    FlagSpec {
                         name: "require-telemetry-overhead",
                         help: "also require every serving record's \
                                attributed telemetry cost \
@@ -768,6 +812,7 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
         "help",
         "require-wave-amortization",
         "require-simd-speedup",
+        "require-fused-speedup",
         "require-telemetry-overhead",
         "require-replica-speedup",
         "baseline",
@@ -867,6 +912,34 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
              need ≥ {factor}×"
         );
         println!("bench-check: simd speedup {best:.2}× ≥ {factor}× ok");
+    }
+    if let Some(factor) = a.get("require-fused-speedup") {
+        let factor: f64 = factor.parse().map_err(|_| {
+            anyhow::anyhow!("--require-fused-speedup: bad factor '{factor}'")
+        })?;
+        // Best fused-vs-composed speedup over all train_step_fused
+        // cells: the gate proves the one-pass kernel path beats the
+        // stage-by-stage composed baseline somewhere (same math, same
+        // gemm microkernels — the delta is fusion + scratch reuse).
+        let best = records
+            .iter()
+            .filter(|j| {
+                j.get("bench").and_then(|b| b.as_str())
+                    == Some("train_step_fused")
+            })
+            .filter_map(|j| j.get("speedup").and_then(|s| s.as_f64()))
+            .fold(f64::NEG_INFINITY, f64::max);
+        anyhow::ensure!(
+            best.is_finite(),
+            "bench-check: no train_step_fused record with a 'speedup' \
+             field — cannot prove the fused-step win"
+        );
+        anyhow::ensure!(
+            best >= factor,
+            "bench-check: fused train step {best:.2}× over the composed \
+             baseline, need ≥ {factor}×"
+        );
+        println!("bench-check: fused-step speedup {best:.2}× ≥ {factor}× ok");
     }
     if let Some(limit) = a.get("require-telemetry-overhead") {
         let limit: f64 = limit.parse().map_err(|_| {

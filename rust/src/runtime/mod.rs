@@ -1,25 +1,39 @@
-//! PJRT runtime: loads the HLO-text artifacts produced by
-//! `python/compile/aot.py` (`make artifacts`) and executes them from the
-//! Rust hot path. Python never runs here.
+//! Training runtime: the backend seam between the **native** fused
+//! executor and the optional **PJRT** HLO runtime.
 //!
-//! Interchange is **HLO text** — the image's xla_extension 0.5.1 rejects
-//! jax≥0.5 serialized protos (64-bit instruction ids); the text parser
-//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §1).
+//! * [`Runtime::native`] (the default, `train.backend = native`): the
+//!   trainers run one-pass fused f32 kernels from [`native`] directly
+//!   over the parameter blocks — no artifacts directory, no host↔device
+//!   tensor copies, scratch buffers reused across steps.
+//! * [`Runtime::load`] (`train.backend = pjrt`, requires the `pjrt`
+//!   cargo feature): loads the HLO-text artifacts produced by
+//!   `python/compile/aot.py` (`make artifacts`) and executes them
+//!   through PJRT. The feature carries no in-tree dependency — enabling
+//!   it requires supplying an `xla` crate (PJRT CPU bindings) from an
+//!   external source, which is why it is off by default and the tier-1
+//!   gate builds without it.
 //!
-//! The manifest (`artifacts/manifest.json`) lists every entry point with
-//! its input/output shapes and dtypes; [`Runtime`] validates calls against
-//! it and compiles executables lazily (first use) with caching.
+//! The manifest (`artifacts/manifest.json`) lists every PJRT entry
+//! point with its input/output shapes and dtypes; the pjrt backend
+//! validates calls against it and compiles executables lazily. The
+//! native backend needs no manifest: kernel shapes come from the
+//! trainer's own [`crate::config::Config`].
 
 mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
 pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
+#[cfg(feature = "pjrt")]
+pub use pjrt::Executable;
 
+use crate::config::{Config, TrainBackend};
 use anyhow::{anyhow, bail, Context, Result};
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-/// A host-side tensor to pass into / receive from an executable.
+/// A host-side tensor to pass into / receive from a pjrt executable
+/// (and the shape-checked interchange type of the runtime tests).
 #[derive(Clone, Debug, PartialEq)]
 pub enum HostTensor {
     F32 { shape: Vec<usize>, data: Vec<f32> },
@@ -82,115 +96,92 @@ impl HostTensor {
         assert_eq!(d.len(), 1, "HostTensor::scalar on non-scalar");
         d[0]
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            HostTensor::F32 { data, .. } => {
-                xla::Literal::vec1(data).reshape(&dims)?
-            }
-            HostTensor::I32 { data, .. } => {
-                xla::Literal::vec1(data).reshape(&dims)?
-            }
-        };
-        Ok(lit)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> =
-            shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.ty() {
-            xla::ElementType::F32 => Ok(HostTensor::F32 {
-                shape: dims,
-                data: lit.to_vec::<f32>()?,
-            }),
-            xla::ElementType::S32 => Ok(HostTensor::I32 {
-                shape: dims,
-                data: lit.to_vec::<i32>()?,
-            }),
-            other => bail!("unsupported output element type {other:?}"),
-        }
-    }
 }
 
-/// A compiled entry point.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub meta: ArtifactMeta,
+enum BackendImpl {
+    /// In-process fused kernels; no client, no artifacts.
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtRuntime),
 }
 
-impl Executable {
-    /// Execute with shape/dtype validation against the manifest.
-    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        if inputs.len() != self.meta.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.meta.name,
-                self.meta.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, m)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
-            if t.shape() != m.shape.as_slice() || t.dtype() != m.dtype {
-                bail!(
-                    "{}: input {i} ('{}') expects {}{:?}, got {}{:?}",
-                    self.meta.name,
-                    m.name,
-                    m.dtype,
-                    m.shape,
-                    t.dtype(),
-                    t.shape()
-                );
-            }
-        }
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let out_lit = result[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True.
-        let parts = out_lit.to_tuple()?;
-        let mut outs = Vec::with_capacity(parts.len());
-        for p in &parts {
-            outs.push(HostTensor::from_literal(p)?);
-        }
-        if outs.len() != self.meta.outputs.len() {
-            bail!(
-                "{}: manifest declares {} outputs, executable returned {}",
-                self.meta.name,
-                self.meta.outputs.len(),
-                outs.len()
-            );
-        }
-        Ok(outs)
-    }
-}
-
-/// Artifact registry + lazy compiler. One PJRT CPU client per runtime.
+/// Backend handle the trainers are built against: either the native
+/// fused executor or a PJRT artifact registry + lazy compiler.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: BackendImpl,
     dir: PathBuf,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, std::rc::Rc<Executable>>>,
 }
 
 impl Runtime {
-    /// Load the manifest from an artifact directory (does not compile yet).
+    /// The native fused backend (the default). Needs no artifacts
+    /// directory and carries an empty manifest; trainers built against
+    /// it take their kernel shapes from their own config.
+    pub fn native() -> Self {
+        Self {
+            backend: BackendImpl::Native,
+            dir: PathBuf::new(),
+            manifest: Manifest::default(),
+        }
+    }
+
+    /// Resolve the backend `cfg.train.backend` asks for: `native` needs
+    /// nothing; `pjrt` loads the artifact manifest from `dir` (and is a
+    /// clear error when this binary was built without the `pjrt`
+    /// feature).
+    pub fn for_train(cfg: &Config, dir: impl AsRef<Path>) -> Result<Self> {
+        match cfg.train.backend {
+            TrainBackend::Native => Ok(Self::native()),
+            #[cfg(feature = "pjrt")]
+            TrainBackend::Pjrt => Self::load(dir),
+            #[cfg(not(feature = "pjrt"))]
+            TrainBackend::Pjrt => {
+                let _ = dir;
+                bail!(
+                    "train.backend = pjrt requested but this binary was \
+                     built without the `pjrt` cargo feature — rebuild \
+                     with `cargo build --features pjrt`, or use the \
+                     default native backend (train.backend = native)"
+                )
+            }
+        }
+    }
+
+    /// Load a PJRT artifact directory. The two failure modes get
+    /// distinct, actionable messages: a *missing manifest* means the
+    /// artifacts were never built (`make artifacts`), while a *present
+    /// manifest* in a binary built without the `pjrt` feature means the
+    /// backend itself is unavailable.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path).with_context(|| {
             format!(
-                "cannot read {} — run `make artifacts` first",
+                "cannot read {} — run `make artifacts` first, or use the \
+                 default native backend (train.backend = native), which \
+                 needs no artifacts directory",
                 manifest_path.display()
             )
         })?;
-        let manifest = Manifest::parse(&text)
-            .map_err(|e| anyhow!("manifest parse: {e}"))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+        let manifest =
+            Manifest::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        #[cfg(not(feature = "pjrt"))]
+        {
+            drop(manifest);
+            bail!(
+                "artifact manifest found at {} but the pjrt backend is \
+                 unavailable: this binary was built without the `pjrt` \
+                 cargo feature — rebuild with `cargo build --features \
+                 pjrt`, or use the default native backend \
+                 (train.backend = native)",
+                manifest_path.display()
+            )
+        }
+        #[cfg(feature = "pjrt")]
+        {
+            let rt = pjrt::PjrtRuntime::new()?;
+            Ok(Self { backend: BackendImpl::Pjrt(rt), dir, manifest })
+        }
     }
 
     /// Default artifact directory (`$RFSM_ARTIFACTS` or `artifacts/`).
@@ -200,47 +191,55 @@ impl Runtime {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
+    /// Which backend this runtime executes on.
+    pub fn backend(&self) -> TrainBackend {
+        match &self.backend {
+            BackendImpl::Native => TrainBackend::Native,
+            #[cfg(feature = "pjrt")]
+            BackendImpl::Pjrt(_) => TrainBackend::Pjrt,
+        }
+    }
+
+    pub fn is_native(&self) -> bool {
+        matches!(self.backend, BackendImpl::Native)
+    }
+
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// The artifact directory this runtime was loaded from (empty for
+    /// the native backend, which has none).
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
     }
 
-    /// Whether an entry point exists in the manifest.
+    pub fn platform(&self) -> String {
+        match &self.backend {
+            BackendImpl::Native => {
+                format!("native-cpu/{}", crate::linalg::simd::tier_name())
+            }
+            #[cfg(feature = "pjrt")]
+            BackendImpl::Pjrt(rt) => rt.platform(),
+        }
+    }
+
+    /// Whether an entry point exists in the manifest (always false on
+    /// the native backend — it has no artifacts).
     pub fn has(&self, name: &str) -> bool {
         self.manifest.get(name).is_some()
     }
 
-    /// Get (compiling + caching on first use) an executable by name.
+    /// Get (compiling + caching on first use) a pjrt executable by name.
+    #[cfg(feature = "pjrt")]
     pub fn get(&self, name: &str) -> Result<std::rc::Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
+        match &self.backend {
+            BackendImpl::Pjrt(rt) => rt.get(&self.dir, &self.manifest, name),
+            BackendImpl::Native => bail!(
+                "artifact '{name}' requested on the native backend — \
+                 executables exist only under train.backend = pjrt"
+            ),
         }
-        let meta = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| {
-                anyhow!(
-                    "unknown artifact '{name}'; manifest has: {}",
-                    self.manifest.names().join(", ")
-                )
-            })?
-            .clone();
-        let path = self.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("loading HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact '{name}'"))?;
-        let executable = std::rc::Rc::new(Executable { exe, meta });
-        self.cache.borrow_mut().insert(name.to_string(), executable.clone());
-        Ok(executable)
     }
 }
 
@@ -270,5 +269,51 @@ mod tests {
             Err(e) => format!("{e:#}"),
         };
         assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+        // The missing-manifest path must also point at the native
+        // escape hatch — it needs no artifacts at all.
+        assert!(msg.contains("native"), "no native hint: {msg}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn present_manifest_without_feature_is_backend_unavailable() {
+        // A well-formed manifest on disk but no `pjrt` feature in the
+        // binary: the error must say the *backend* is missing, not that
+        // the artifacts are.
+        let dir = std::env::temp_dir().join("rfsm_runtime_feature_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts": {}}"#)
+            .unwrap();
+        let msg = match Runtime::load(&dir) {
+            Ok(_) => panic!("load without pjrt feature must fail"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("pjrt"), "no feature hint: {msg}");
+        assert!(!msg.contains("make artifacts"), "wrong failure mode: {msg}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn for_train_rejects_pjrt_without_feature() {
+        let mut cfg = Config::default();
+        cfg.set("train.backend", "pjrt").unwrap();
+        let msg = match Runtime::for_train(&cfg, "/nonexistent/dir") {
+            Ok(_) => panic!("pjrt backend without the feature must fail"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("--features pjrt"), "no rebuild hint: {msg}");
+    }
+
+    #[test]
+    fn native_runtime_reports_backend() {
+        let rt = Runtime::native();
+        assert!(rt.is_native());
+        assert_eq!(rt.backend(), TrainBackend::Native);
+        assert!(rt.platform().starts_with("native-cpu/"));
+        assert!(rt.manifest().is_empty());
+        assert!(!rt.has("anything"));
+        let cfg = Config::default();
+        let rt = Runtime::for_train(&cfg, "/nonexistent/dir").unwrap();
+        assert!(rt.is_native(), "default backend must be native");
     }
 }

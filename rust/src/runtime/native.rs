@@ -1,0 +1,2492 @@
+//! Native fused train-step kernels (the default `train.backend`).
+//!
+//! One-pass f32 implementations of the three entry points the trainers
+//! need — encode (LSTM forward), the fused sampled-softmax train step
+//! (paper eq. 5–6), and the full-softmax eval/train step — built on the
+//! `linalg::simd` microkernels (`matmul_nt_into`, `dot`, `axpy`) with
+//! serving-style reusable scratch and fan-out over [`exec::serve_pool`].
+//!
+//! Design rules (mirrors the serving hot path):
+//!
+//! * **No `bsz×m` intermediates.** Logits for `[target | negatives]` are
+//!   produced tile-by-tile ([`TILE`] classes at a time); the `−log(m·q)`
+//!   correction and the accidental-hit mask are applied in-register; a
+//!   streaming (online) logsumexp carries `(max, Σexp)` per row in f64,
+//!   and the backward pass re-computes each tile instead of storing it —
+//!   the flash-attention recompute trick, a win because the tile gemm is
+//!   cheaper than hauling `bsz×m` floats through memory twice.
+//! * **Zero steady-state allocations.** Every buffer lives in the kernel
+//!   struct and is re-`ensure`d per step; a growth counter records any
+//!   capacity growth so trainers can assert the step loop is
+//!   allocation-flat after warmup (the small per-wave job boxes and
+//!   range vectors are control-plane, not tracked).
+//! * **Exact row partition.** A batch is split into contiguous row
+//!   chunks, one pool job per chunk, each owning its rows' outputs;
+//!   cross-row reductions (negative-class grads, dense weight grads) go
+//!   through per-worker partial buffers summed after the wave, so no
+//!   atomics and a deterministic summation order.
+//!
+//! Correctness is anchored to the f64 oracle in [`crate::softmax`] and
+//! finite differences against f64 references (see the tests below), and
+//! the unfused-but-equivalent [`composed`] pipeline doubles as both the
+//! benchmark baseline for `table2_walltime --smoke` and an independent
+//! implementation to diff against.
+
+use crate::exec;
+use crate::linalg::simd;
+use crate::linalg::Matrix;
+
+/// Normalization clamp: `x̂ = x / max(‖x‖, ε)` — the `tf.clip` semantics
+/// of `model.py`, *not* [`crate::linalg::l2_normalize`]'s leave-zero
+/// behavior. The backward for it is [`l2norm_bwd_inplace`].
+pub const NORM_EPS: f32 = 1e-6;
+
+/// Classes per logit tile: big enough that the `rb×TILE` gemm amortizes
+/// dispatch, small enough that a tile of logits stays in L1.
+const TILE: usize = 64;
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// `x ← x / max(‖x‖, ε)`, returning the raw norm for the backward.
+pub fn l2_normalize_eps(x: &mut [f32]) -> f32 {
+    let norm = simd::dot(x, x).sqrt();
+    let inv = 1.0 / norm.max(NORM_EPS);
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+    norm
+}
+
+/// Backward of [`l2_normalize_eps`] through `y = x / max(‖x‖, ε)`:
+/// given the *normalized* `y`, the raw `norm`, and `dy` in place,
+/// produces `dx = (dy − y·(y·dy)) / norm` (or `dy/ε` in the clamped
+/// regime, where the map is linear).
+pub fn l2norm_bwd_inplace(y: &[f32], dy: &mut [f32], norm: f32) {
+    if norm > NORM_EPS {
+        let proj = simd::dot(y, dy);
+        let inv = 1.0 / norm;
+        for (dv, &yv) in dy.iter_mut().zip(y) {
+            *dv = (*dv - yv * proj) * inv;
+        }
+    } else {
+        let inv = 1.0 / NORM_EPS;
+        for dv in dy.iter_mut() {
+            *dv *= inv;
+        }
+    }
+}
+
+/// Contiguous row partition of `0..n` into at most `workers` non-empty
+/// chunks (may return fewer than `workers` chunks for small `n`).
+fn chunk_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let w = workers.min(n).max(1);
+    let per = n.div_ceil(w);
+    let mut out = Vec::with_capacity(w);
+    let mut s = 0;
+    while s < n {
+        let e = (s + per).min(n);
+        out.push((s, e));
+        s = e;
+    }
+    out
+}
+
+/// Split `data` (row width `width`) into per-chunk `&mut` blocks
+/// matching `ranges` (which must partition a prefix of the rows in
+/// order). The chunks are disjoint, so each pool job can own one.
+fn split_chunks<'a, T>(
+    mut data: &'a mut [T],
+    width: usize,
+    ranges: &[(usize, usize)],
+) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut consumed = 0;
+    for &(s, e) in ranges {
+        debug_assert_eq!(s, consumed, "split_chunks: ranges must be dense");
+        let (head, tail) = data.split_at_mut((e - s) * width);
+        out.push(head);
+        data = tail;
+        consumed = e;
+    }
+    out
+}
+
+/// Size `buf` to exactly `len` elements, counting a capacity growth.
+/// Contents are unspecified (callers must fully overwrite).
+fn ensure_len<T: Copy + Default>(
+    buf: &mut Vec<T>,
+    len: usize,
+    growths: &mut u64,
+) {
+    if buf.len() == len {
+        return;
+    }
+    if buf.capacity() < len {
+        *growths += 1;
+    }
+    buf.resize(len, T::default());
+}
+
+/// Size `buf` to exactly `len` zeroed elements, counting growth.
+fn ensure_zeroed<T: Copy + Default>(
+    buf: &mut Vec<T>,
+    len: usize,
+    growths: &mut u64,
+) {
+    if buf.capacity() < len {
+        *growths += 1;
+    }
+    buf.clear();
+    buf.resize(len, T::default());
+}
+
+/// `dst ← srcᵀ` for row-major `src` (`rows × cols`), reusing `dst`.
+fn transpose_into(
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    dst: &mut Vec<f32>,
+    growths: &mut u64,
+) {
+    assert_eq!(src.len(), rows * cols, "transpose_into: shape");
+    ensure_len(dst, rows * cols, growths);
+    for r in 0..rows {
+        for c in 0..cols {
+            dst[c * rows + r] = src[r * cols + c];
+        }
+    }
+}
+
+/// Gather `ids` rows of a flat `rows × dim` table into reusable scratch.
+/// Returns `true` when the scratch had to grow (callers count it).
+pub fn gather_rows_into(
+    table: &[f32],
+    dim: usize,
+    ids: &[u32],
+    out: &mut Vec<f32>,
+) -> bool {
+    let grew = out.capacity() < ids.len() * dim;
+    out.clear();
+    for &id in ids {
+        let s = id as usize * dim;
+        out.extend_from_slice(&table[s..s + dim]);
+    }
+    grew
+}
+
+// ---------------------------------------------------------------------
+// Fused sampled-softmax loss + gradients
+// ---------------------------------------------------------------------
+
+/// The fused sampled-softmax loss/grad kernel (paper eq. 5–6): one pass
+/// over `[target | shared negatives]` per batch row producing the mean
+/// loss and gradients w.r.t. the **raw** (pre-normalization) query,
+/// target-row, and negative-row embeddings.
+///
+/// Forward math per row `r` (matching the retired HLO artifact):
+/// `q̂ = q/max(‖q‖,ε)`, `t̂`, `ĉ_j` likewise; `o_t = τ·q̂·t̂`;
+/// `o_j = τ·q̂·ĉ_j − log(m·q_j)` (the `adjust` input *is*
+/// `log(m·q_j)`); masked (accidental-hit) columns drop out of the sum;
+/// `L_r = logsumexp([o_t, o_*]) − o_t`; loss is the batch mean. Under
+/// `absolute` (the Quadratic baseline's §4.1 pairing) the softmax runs
+/// over `|o|`.
+///
+/// Call [`FusedLoss::run`]; read `d_q` / `d_tgt` / `d_neg` after.
+/// Queries, target rows and negative rows are normalized **in place**.
+pub struct FusedLoss {
+    workers: usize,
+    q_norms: Vec<f32>,
+    t_norms: Vec<f32>,
+    n_norms: Vec<f32>,
+    row_max: Vec<f64>,
+    row_sum: Vec<f64>,
+    lse: Vec<f64>,
+    tlogit: Vec<f64>,
+    loss_part: Vec<f64>,
+    tile: Vec<f32>,
+    chat_part: Vec<f32>,
+    /// `∂L/∂q` (raw query rows), `bsz × d` row-major.
+    pub d_q: Vec<f32>,
+    /// `∂L/∂target_row`, `bsz × d` row-major.
+    pub d_tgt: Vec<f32>,
+    /// `∂L/∂neg_row`, `m × d` row-major (shared across the batch).
+    pub d_neg: Vec<f32>,
+    growths: u64,
+}
+
+impl FusedLoss {
+    pub fn new(workers: usize) -> Self {
+        FusedLoss {
+            workers: workers.max(1),
+            q_norms: Vec::new(),
+            t_norms: Vec::new(),
+            n_norms: Vec::new(),
+            row_max: Vec::new(),
+            row_sum: Vec::new(),
+            lse: Vec::new(),
+            tlogit: Vec::new(),
+            loss_part: Vec::new(),
+            tile: Vec::new(),
+            chat_part: Vec::new(),
+            d_q: Vec::new(),
+            d_tgt: Vec::new(),
+            d_neg: Vec::new(),
+            growths: 0,
+        }
+    }
+
+    /// Scratch-capacity growth events since construction (flat after
+    /// warmup ⇒ the step loop is allocation-free for these buffers).
+    pub fn growths(&self) -> u64 {
+        self.growths
+    }
+
+    /// Run the fused step. `q` is `bsz × d` (normalized in place), `tgt`
+    /// is `bsz·d` gathered target rows, `neg` is `m·d` gathered negative
+    /// rows (both normalized in place), `adjust[j] = log(m·q_j)`, `mask`
+    /// is `bsz × m` with 0 marking accidental hits. Returns mean loss.
+    pub fn run(
+        &mut self,
+        q: &mut Matrix,
+        tgt: &mut [f32],
+        neg: &mut [f32],
+        adjust: &[f32],
+        mask: &[f32],
+        tau: f32,
+        absolute: bool,
+    ) -> f32 {
+        let b = q.rows();
+        let d = q.cols();
+        let m = adjust.len();
+        assert!(b > 0 && d > 0 && m > 0, "FusedLoss: empty inputs");
+        assert_eq!(tgt.len(), b * d, "FusedLoss: tgt shape");
+        assert_eq!(neg.len(), m * d, "FusedLoss: neg shape");
+        assert_eq!(mask.len(), b * m, "FusedLoss: mask shape");
+
+        let pool = exec::serve_pool();
+        let wb = self.workers.min(pool.size().max(1));
+        let rq = chunk_ranges(b, wb);
+        let rn = chunk_ranges(m, wb);
+        let nq = rq.len();
+        let rb_max = rq.iter().map(|&(s, e)| e - s).max().unwrap();
+        let tw = TILE.min(m);
+
+        ensure_zeroed(&mut self.d_q, b * d, &mut self.growths);
+        ensure_zeroed(&mut self.d_tgt, b * d, &mut self.growths);
+        ensure_zeroed(&mut self.d_neg, m * d, &mut self.growths);
+        ensure_len(&mut self.q_norms, b, &mut self.growths);
+        ensure_len(&mut self.t_norms, b, &mut self.growths);
+        ensure_len(&mut self.n_norms, m, &mut self.growths);
+        ensure_len(&mut self.row_max, b, &mut self.growths);
+        ensure_len(&mut self.row_sum, b, &mut self.growths);
+        ensure_len(&mut self.lse, b, &mut self.growths);
+        ensure_len(&mut self.tlogit, b, &mut self.growths);
+        ensure_len(&mut self.tile, nq * rb_max * tw, &mut self.growths);
+        ensure_zeroed(&mut self.chat_part, nq * m * d, &mut self.growths);
+        ensure_zeroed(&mut self.loss_part, nq, &mut self.growths);
+
+        // Wave 1: normalize query / target / negative rows, saving norms.
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(2 * rq.len() + rn.len());
+            let q_chunks = split_chunks(q.data_mut(), d, &rq);
+            let qn_chunks = split_chunks(&mut self.q_norms, 1, &rq);
+            for (rows, norms) in q_chunks.into_iter().zip(qn_chunks) {
+                jobs.push(Box::new(move || {
+                    for (i, nrm) in norms.iter_mut().enumerate() {
+                        *nrm = l2_normalize_eps(&mut rows[i * d..(i + 1) * d]);
+                    }
+                }));
+            }
+            let t_chunks = split_chunks(&mut tgt[..], d, &rq);
+            let tn_chunks = split_chunks(&mut self.t_norms, 1, &rq);
+            for (rows, norms) in t_chunks.into_iter().zip(tn_chunks) {
+                jobs.push(Box::new(move || {
+                    for (i, nrm) in norms.iter_mut().enumerate() {
+                        *nrm = l2_normalize_eps(&mut rows[i * d..(i + 1) * d]);
+                    }
+                }));
+            }
+            let c_chunks = split_chunks(&mut neg[..], d, &rn);
+            let cn_chunks = split_chunks(&mut self.n_norms, 1, &rn);
+            for (rows, norms) in c_chunks.into_iter().zip(cn_chunks) {
+                jobs.push(Box::new(move || {
+                    for (i, nrm) in norms.iter_mut().enumerate() {
+                        *nrm = l2_normalize_eps(&mut rows[i * d..(i + 1) * d]);
+                    }
+                }));
+            }
+            pool.run_wave(jobs);
+        }
+
+        // Wave 2: per row-chunk fused forward + backward (each job owns
+        // its d_q/d_tgt rows; negative grads go to per-worker partials).
+        {
+            let qd: &[f32] = q.data();
+            let tg: &[f32] = tgt;
+            let ng: &[f32] = neg;
+            let q_norms = &self.q_norms;
+            let t_norms = &self.t_norms;
+            let mut dq_it = split_chunks(&mut self.d_q, d, &rq).into_iter();
+            let mut dt_it = split_chunks(&mut self.d_tgt, d, &rq).into_iter();
+            let mut rm_it = split_chunks(&mut self.row_max, 1, &rq).into_iter();
+            let mut rs_it = split_chunks(&mut self.row_sum, 1, &rq).into_iter();
+            let mut ls_it = split_chunks(&mut self.lse, 1, &rq).into_iter();
+            let mut tl_it = split_chunks(&mut self.tlogit, 1, &rq).into_iter();
+            let mut tile_it = self.tile.chunks_mut(rb_max * tw);
+            let mut chat_it = self.chat_part.chunks_mut(m * d);
+            let mut loss_it = self.loss_part.iter_mut();
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(rq.len());
+            for &(s, e) in &rq {
+                let dq = dq_it.next().unwrap();
+                let dt = dt_it.next().unwrap();
+                let rm = rm_it.next().unwrap();
+                let rs = rs_it.next().unwrap();
+                let ls = ls_it.next().unwrap();
+                let tl = tl_it.next().unwrap();
+                let tile = tile_it.next().unwrap();
+                let chat = chat_it.next().unwrap();
+                let loss = loss_it.next().unwrap();
+                jobs.push(Box::new(move || {
+                    fused_row_chunk(
+                        s, e, d, m, b, tau, absolute, qd, tg, ng, adjust,
+                        mask, q_norms, t_norms, dq, dt, rm, rs, ls, tl, tile,
+                        chat, loss,
+                    );
+                }));
+            }
+            pool.run_wave(jobs);
+        }
+
+        // Wave 3: reduce per-worker negative-grad partials, then push the
+        // gradient back through the negatives' normalization.
+        {
+            let chat: &[f32] = &self.chat_part;
+            let n_norms = &self.n_norms;
+            let ng: &[f32] = neg;
+            let mut dn_it = split_chunks(&mut self.d_neg, d, &rn).into_iter();
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(rn.len());
+            for &(s, e) in &rn {
+                let dn = dn_it.next().unwrap();
+                jobs.push(Box::new(move || {
+                    for w in 0..nq {
+                        let part = &chat[w * m * d..][s * d..e * d];
+                        simd::axpy(1.0, part, dn);
+                    }
+                    for r in 0..(e - s) {
+                        let y = &ng[(s + r) * d..(s + r + 1) * d];
+                        l2norm_bwd_inplace(
+                            y,
+                            &mut dn[r * d..(r + 1) * d],
+                            n_norms[s + r],
+                        );
+                    }
+                }));
+            }
+            pool.run_wave(jobs);
+        }
+
+        let total: f64 = self.loss_part.iter().sum();
+        (total / b as f64) as f32
+    }
+}
+
+/// One row-chunk of the fused step: pass A streams the logsumexp over
+/// negative tiles, pass B re-computes each tile (recompute > store) and
+/// turns probabilities into gradients, then the target column and the
+/// normalization backward close out the chunk's rows.
+#[allow(clippy::too_many_arguments)]
+fn fused_row_chunk(
+    s: usize,
+    e: usize,
+    d: usize,
+    m: usize,
+    b: usize,
+    tau: f32,
+    absolute: bool,
+    q: &[f32],
+    tgt: &[f32],
+    neg: &[f32],
+    adjust: &[f32],
+    mask: &[f32],
+    q_norms: &[f32],
+    t_norms: &[f32],
+    d_q: &mut [f32],
+    d_tgt: &mut [f32],
+    row_max: &mut [f64],
+    row_sum: &mut [f64],
+    lse: &mut [f64],
+    tlogit: &mut [f64],
+    tile: &mut [f32],
+    chat_part: &mut [f32],
+    loss_out: &mut f64,
+) {
+    let rb = e - s;
+    let tau64 = tau as f64;
+    let tw = TILE.min(m);
+    let qs = &q[s * d..e * d];
+
+    // Seed the online logsumexp with the target logit: the target column
+    // is part of the softmax (eq. 6) but carries no −log(m·q) correction.
+    for r in 0..rb {
+        let qr = &q[(s + r) * d..(s + r + 1) * d];
+        let tr = &tgt[(s + r) * d..(s + r + 1) * d];
+        let mut ot = tau64 * simd::dot(qr, tr) as f64;
+        if absolute {
+            ot = ot.abs();
+        }
+        tlogit[r] = ot;
+        row_max[r] = ot;
+        row_sum[r] = 1.0;
+    }
+
+    // Pass A: tile logits, adjust, mask, stream the logsumexp.
+    let mut j0 = 0;
+    while j0 < m {
+        let jl = tw.min(m - j0);
+        let tb = &mut tile[..rb * jl];
+        simd::matmul_nt_into(qs, rb, d, &neg[j0 * d..(j0 + jl) * d], jl, tb);
+        for r in 0..rb {
+            let mrow = &mask[(s + r) * m..(s + r + 1) * m];
+            let mut mx = row_max[r];
+            let mut sum = row_sum[r];
+            for j in 0..jl {
+                if mrow[j0 + j] == 0.0 {
+                    continue; // accidental hit: column drops out
+                }
+                let mut v =
+                    tau64 * tb[r * jl + j] as f64 - adjust[j0 + j] as f64;
+                if absolute {
+                    v = v.abs();
+                }
+                if v > mx {
+                    sum = sum * (mx - v).exp() + 1.0;
+                    mx = v;
+                } else {
+                    sum += (v - mx).exp();
+                }
+            }
+            row_max[r] = mx;
+            row_sum[r] = sum;
+        }
+        j0 += jl;
+    }
+    let mut loss = 0.0f64;
+    for r in 0..rb {
+        let l = row_max[r] + row_sum[r].ln();
+        lse[r] = l;
+        loss += l - tlogit[r];
+    }
+    *loss_out += loss;
+
+    // Pass B: recompute each tile, convert probabilities to gradients.
+    // coef_j = τ·p_j/B (times sign(o_j) under `absolute`).
+    let inv_b = 1.0 / b as f64;
+    j0 = 0;
+    while j0 < m {
+        let jl = tw.min(m - j0);
+        let tb = &mut tile[..rb * jl];
+        simd::matmul_nt_into(qs, rb, d, &neg[j0 * d..(j0 + jl) * d], jl, tb);
+        for r in 0..rb {
+            let mrow = &mask[(s + r) * m..(s + r + 1) * m];
+            let qr = &q[(s + r) * d..(s + r + 1) * d];
+            let dqr = &mut d_q[r * d..(r + 1) * d];
+            for j in 0..jl {
+                if mrow[j0 + j] == 0.0 {
+                    continue;
+                }
+                let v = tau64 * tb[r * jl + j] as f64 - adjust[j0 + j] as f64;
+                let (va, sign) = if absolute {
+                    (v.abs(), if v < 0.0 { -1.0 } else { 1.0 })
+                } else {
+                    (v, 1.0)
+                };
+                let coef =
+                    (tau64 * (va - lse[r]).exp() * inv_b * sign) as f32;
+                if coef == 0.0 {
+                    continue;
+                }
+                let cj = &neg[(j0 + j) * d..(j0 + j + 1) * d];
+                simd::axpy(coef, cj, dqr);
+                simd::axpy(
+                    coef,
+                    qr,
+                    &mut chat_part[(j0 + j) * d..(j0 + j + 1) * d],
+                );
+            }
+        }
+        j0 += jl;
+    }
+
+    // Target column + normalization backward for the chunk's own rows.
+    for r in 0..rb {
+        let qr = &q[(s + r) * d..(s + r + 1) * d];
+        let tr = &tgt[(s + r) * d..(s + r + 1) * d];
+        let pt = (tlogit[r] - lse[r]).exp();
+        let sign = if absolute {
+            let raw = tau64 * simd::dot(qr, tr) as f64;
+            if raw < 0.0 {
+                -1.0
+            } else {
+                1.0
+            }
+        } else {
+            1.0
+        };
+        let coef = (tau64 * (pt - 1.0) * inv_b * sign) as f32;
+        let dqr = &mut d_q[r * d..(r + 1) * d];
+        simd::axpy(coef, tr, dqr);
+        let dtr = &mut d_tgt[r * d..(r + 1) * d];
+        for k in 0..d {
+            dtr[k] = coef * qr[k];
+        }
+        l2norm_bwd_inplace(qr, dqr, q_norms[s + r]);
+        l2norm_bwd_inplace(tr, dtr, t_norms[s + r]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Full-softmax loss (training + eval oracle path)
+// ---------------------------------------------------------------------
+
+/// Full-softmax cross-entropy over the whole class table (paper eq. 3):
+/// the eval step and the `SamplerKind::Full` train step. Classes are
+/// prepared once per call site ([`FullLoss::prepare_classes`], which
+/// normalizes into a persistent `cls_hat` copy), then
+/// [`FullLoss::forward`] streams a logsumexp over class tiles and
+/// [`FullLoss::backward`] re-computes the tiles to accumulate gradients
+/// w.r.t. the raw queries and class rows. `normalize = false` is the
+/// §4.2 unnormalized ablation (the retired `*_unnorm` artifacts).
+pub struct FullLoss {
+    workers: usize,
+    normalize: bool,
+    n: usize,
+    d: usize,
+    cls_hat: Vec<f32>,
+    cls_norms: Vec<f32>,
+    q_norms: Vec<f32>,
+    row_max: Vec<f64>,
+    row_sum: Vec<f64>,
+    lse: Vec<f64>,
+    tlogit: Vec<f64>,
+    loss_part: Vec<f64>,
+    tile: Vec<f32>,
+    dq_part: Vec<f32>,
+    /// `∂L/∂q` (raw query rows), `bsz × d`; valid after `backward`.
+    pub d_q: Vec<f32>,
+    /// `∂L/∂cls` (raw class rows), `n × d`; valid after `backward`.
+    pub d_cls: Vec<f32>,
+    growths: u64,
+}
+
+impl FullLoss {
+    pub fn new(workers: usize) -> Self {
+        FullLoss {
+            workers: workers.max(1),
+            normalize: true,
+            n: 0,
+            d: 0,
+            cls_hat: Vec::new(),
+            cls_norms: Vec::new(),
+            q_norms: Vec::new(),
+            row_max: Vec::new(),
+            row_sum: Vec::new(),
+            lse: Vec::new(),
+            tlogit: Vec::new(),
+            loss_part: Vec::new(),
+            tile: Vec::new(),
+            dq_part: Vec::new(),
+            d_q: Vec::new(),
+            d_cls: Vec::new(),
+            growths: 0,
+        }
+    }
+
+    /// See [`FusedLoss::growths`].
+    pub fn growths(&self) -> u64 {
+        self.growths
+    }
+
+    /// Copy (and, unless `normalize = false`, L2-normalize) the first
+    /// `n` rows of the class table into persistent scratch. Call once
+    /// per step / eval pass (the table changes between steps).
+    pub fn prepare_classes(
+        &mut self,
+        cls: &[f32],
+        n: usize,
+        d: usize,
+        normalize: bool,
+    ) {
+        assert!(n > 0 && d > 0, "FullLoss: empty class table");
+        assert!(cls.len() >= n * d, "FullLoss: class table too small");
+        self.n = n;
+        self.d = d;
+        self.normalize = normalize;
+        ensure_len(&mut self.cls_hat, n * d, &mut self.growths);
+        ensure_len(&mut self.cls_norms, n, &mut self.growths);
+        let pool = exec::serve_pool();
+        let rn = chunk_ranges(n, self.workers.min(pool.size().max(1)));
+        let src = &cls[..n * d];
+        let mut hat_it = split_chunks(&mut self.cls_hat, d, &rn).into_iter();
+        let mut nrm_it = split_chunks(&mut self.cls_norms, 1, &rn).into_iter();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(rn.len());
+        for &(s, e) in &rn {
+            let hat = hat_it.next().unwrap();
+            let nrm = nrm_it.next().unwrap();
+            jobs.push(Box::new(move || {
+                hat.copy_from_slice(&src[s * d..e * d]);
+                for (i, v) in nrm.iter_mut().enumerate() {
+                    *v = if normalize {
+                        l2_normalize_eps(&mut hat[i * d..(i + 1) * d])
+                    } else {
+                        1.0
+                    };
+                }
+            }));
+        }
+        pool.run_wave(jobs);
+    }
+
+    /// Mean full-softmax loss for `q` (`bsz × d`, normalized in place
+    /// when the prepared table is) against `targets`. Streams the
+    /// logsumexp over class tiles; keeps per-row stats for `backward`.
+    pub fn forward(&mut self, q: &mut Matrix, targets: &[u32], tau: f32) -> f32 {
+        let (n, d) = (self.n, self.d);
+        assert!(n > 0, "FullLoss::forward before prepare_classes");
+        let b = q.rows();
+        assert_eq!(q.cols(), d, "FullLoss: query dim");
+        assert_eq!(targets.len(), b, "FullLoss: targets length");
+        let pool = exec::serve_pool();
+        let rq = chunk_ranges(b, self.workers.min(pool.size().max(1)));
+        let nq = rq.len();
+        let rb_max = rq.iter().map(|&(s, e)| e - s).max().unwrap();
+        let tw = TILE.min(n);
+
+        ensure_len(&mut self.q_norms, b, &mut self.growths);
+        ensure_len(&mut self.row_max, b, &mut self.growths);
+        ensure_len(&mut self.row_sum, b, &mut self.growths);
+        ensure_len(&mut self.lse, b, &mut self.growths);
+        ensure_len(&mut self.tlogit, b, &mut self.growths);
+        ensure_len(&mut self.tile, nq * rb_max * tw, &mut self.growths);
+        ensure_zeroed(&mut self.loss_part, nq, &mut self.growths);
+
+        if self.normalize {
+            let mut q_it = split_chunks(q.data_mut(), d, &rq).into_iter();
+            let mut n_it = split_chunks(&mut self.q_norms, 1, &rq).into_iter();
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(nq);
+            for _ in &rq {
+                let rows = q_it.next().unwrap();
+                let norms = n_it.next().unwrap();
+                jobs.push(Box::new(move || {
+                    for (i, nrm) in norms.iter_mut().enumerate() {
+                        *nrm = l2_normalize_eps(&mut rows[i * d..(i + 1) * d]);
+                    }
+                }));
+            }
+            pool.run_wave(jobs);
+        }
+
+        {
+            let qd: &[f32] = q.data();
+            let cls_hat = &self.cls_hat;
+            let tau64 = tau as f64;
+            let mut rm_it = split_chunks(&mut self.row_max, 1, &rq).into_iter();
+            let mut rs_it = split_chunks(&mut self.row_sum, 1, &rq).into_iter();
+            let mut ls_it = split_chunks(&mut self.lse, 1, &rq).into_iter();
+            let mut tl_it = split_chunks(&mut self.tlogit, 1, &rq).into_iter();
+            let mut tile_it = self.tile.chunks_mut(rb_max * tw);
+            let mut loss_it = self.loss_part.iter_mut();
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(nq);
+            for &(s, e) in &rq {
+                let rm = rm_it.next().unwrap();
+                let rs = rs_it.next().unwrap();
+                let ls = ls_it.next().unwrap();
+                let tl = tl_it.next().unwrap();
+                let tile = tile_it.next().unwrap();
+                let loss = loss_it.next().unwrap();
+                jobs.push(Box::new(move || {
+                    let rb = e - s;
+                    let qs = &qd[s * d..e * d];
+                    for r in 0..rb {
+                        let t = targets[s + r] as usize;
+                        assert!(t < n, "FullLoss: target {t} out of range");
+                        let qr = &qd[(s + r) * d..(s + r + 1) * d];
+                        tl[r] = tau64
+                            * simd::dot(qr, &cls_hat[t * d..(t + 1) * d])
+                                as f64;
+                        rm[r] = f64::NEG_INFINITY;
+                        rs[r] = 0.0;
+                    }
+                    let mut j0 = 0;
+                    while j0 < n {
+                        let jl = tw.min(n - j0);
+                        let tb = &mut tile[..rb * jl];
+                        simd::matmul_nt_into(
+                            qs,
+                            rb,
+                            d,
+                            &cls_hat[j0 * d..(j0 + jl) * d],
+                            jl,
+                            tb,
+                        );
+                        for r in 0..rb {
+                            let mut mx = rm[r];
+                            let mut sum = rs[r];
+                            for j in 0..jl {
+                                let v = tau64 * tb[r * jl + j] as f64;
+                                if v > mx {
+                                    sum = sum * (mx - v).exp() + 1.0;
+                                    mx = v;
+                                } else {
+                                    sum += (v - mx).exp();
+                                }
+                            }
+                            rm[r] = mx;
+                            rs[r] = sum;
+                        }
+                        j0 += jl;
+                    }
+                    let mut lsum = 0.0f64;
+                    for r in 0..rb {
+                        let l = rm[r] + rs[r].ln();
+                        ls[r] = l;
+                        lsum += l - tl[r];
+                    }
+                    *loss += lsum;
+                }));
+            }
+            pool.run_wave(jobs);
+        }
+
+        let total: f64 = self.loss_part.iter().sum();
+        (total / b as f64) as f32
+    }
+
+    /// Gradients for the batch `forward` just ran on (same `q`, already
+    /// normalized in place by it, same `targets`): fills `d_q`, `d_cls`.
+    pub fn backward(&mut self, q: &Matrix, targets: &[u32], tau: f32) {
+        let (n, d) = (self.n, self.d);
+        let b = q.rows();
+        assert_eq!(self.lse.len(), b, "FullLoss::backward before forward");
+        let pool = exec::serve_pool();
+        let workers = self.workers.min(pool.size().max(1));
+        let rn = chunk_ranges(n, workers);
+        let nn = rn.len();
+        let tw = TILE.min(n);
+
+        ensure_zeroed(&mut self.d_q, b * d, &mut self.growths);
+        ensure_zeroed(&mut self.d_cls, n * d, &mut self.growths);
+        ensure_zeroed(&mut self.dq_part, nn * b * d, &mut self.growths);
+        ensure_len(&mut self.tile, nn * b * tw, &mut self.growths);
+
+        // Class-chunk wave: each job owns its class rows' gradients and
+        // a whole-batch d_q partial (reduced in the wave after).
+        {
+            let qd: &[f32] = q.data();
+            let cls_hat = &self.cls_hat;
+            let cls_norms = &self.cls_norms;
+            let lse = &self.lse;
+            let normalize = self.normalize;
+            let tau64 = tau as f64;
+            let inv_b = 1.0 / b as f64;
+            let mut dc_it = split_chunks(&mut self.d_cls, d, &rn).into_iter();
+            let mut dqp_it = self.dq_part.chunks_mut(b * d);
+            let mut tile_it = self.tile.chunks_mut(b * tw);
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(nn);
+            for &(s, e) in &rn {
+                let dc = dc_it.next().unwrap();
+                let dqp = dqp_it.next().unwrap();
+                let tile = tile_it.next().unwrap();
+                jobs.push(Box::new(move || {
+                    let mut j0 = s;
+                    while j0 < e {
+                        let jl = tw.min(e - j0);
+                        let tb = &mut tile[..b * jl];
+                        simd::matmul_nt_into(
+                            qd,
+                            b,
+                            d,
+                            &cls_hat[j0 * d..(j0 + jl) * d],
+                            jl,
+                            tb,
+                        );
+                        for r in 0..b {
+                            let t = targets[r] as usize;
+                            let qr = &qd[r * d..(r + 1) * d];
+                            let dqr = &mut dqp[r * d..(r + 1) * d];
+                            for j in 0..jl {
+                                let v = tau64 * tb[r * jl + j] as f64;
+                                let p = (v - lse[r]).exp();
+                                let mut coef = tau64 * p * inv_b;
+                                if t == j0 + j {
+                                    coef -= tau64 * inv_b;
+                                }
+                                let cf = coef as f32;
+                                if cf == 0.0 {
+                                    continue;
+                                }
+                                let cj = &cls_hat
+                                    [(j0 + j) * d..(j0 + j + 1) * d];
+                                simd::axpy(cf, cj, dqr);
+                                simd::axpy(
+                                    cf,
+                                    qr,
+                                    &mut dc[(j0 + j - s) * d
+                                        ..(j0 + j - s + 1) * d],
+                                );
+                            }
+                        }
+                        j0 += jl;
+                    }
+                    if normalize {
+                        for r in 0..(e - s) {
+                            let y = &cls_hat[(s + r) * d..(s + r + 1) * d];
+                            l2norm_bwd_inplace(
+                                y,
+                                &mut dc[r * d..(r + 1) * d],
+                                cls_norms[s + r],
+                            );
+                        }
+                    }
+                }));
+            }
+            pool.run_wave(jobs);
+        }
+
+        // Row-chunk reduce wave: d_q rows = Σ per-worker partials, then
+        // back through the query normalization.
+        {
+            let rq = chunk_ranges(b, workers);
+            let dq_part: &[f32] = &self.dq_part;
+            let q_norms = &self.q_norms;
+            let qd: &[f32] = q.data();
+            let normalize = self.normalize;
+            let mut dq_it = split_chunks(&mut self.d_q, d, &rq).into_iter();
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(rq.len());
+            for &(s, e) in &rq {
+                let dq = dq_it.next().unwrap();
+                jobs.push(Box::new(move || {
+                    for w in 0..nn {
+                        let part = &dq_part[w * b * d..][s * d..e * d];
+                        simd::axpy(1.0, part, dq);
+                    }
+                    if normalize {
+                        for r in 0..(e - s) {
+                            let y = &qd[(s + r) * d..(s + r + 1) * d];
+                            l2norm_bwd_inplace(
+                                y,
+                                &mut dq[r * d..(r + 1) * d],
+                                q_norms[s + r],
+                            );
+                        }
+                    }
+                }));
+            }
+            pool.run_wave(jobs);
+        }
+    }
+
+    /// Score every class for every query row (`out` is `bsz × n`,
+    /// row-major): the XC eval path. Normalizes `q` in place when the
+    /// prepared table is normalized. Scores are `q̂ · ĉ_j` (no τ — it is
+    /// monotone in the ranking).
+    pub fn scores_into(&mut self, q: &mut Matrix, out: &mut [f32]) {
+        let (n, d) = (self.n, self.d);
+        assert!(n > 0, "FullLoss::scores_into before prepare_classes");
+        let b = q.rows();
+        assert_eq!(q.cols(), d, "FullLoss: query dim");
+        assert_eq!(out.len(), b * n, "FullLoss: scores shape");
+        let pool = exec::serve_pool();
+        let rq = chunk_ranges(b, self.workers.min(pool.size().max(1)));
+        let cls_hat = &self.cls_hat;
+        let normalize = self.normalize;
+        let mut q_it = split_chunks(q.data_mut(), d, &rq).into_iter();
+        let mut out_it = split_chunks(out, n, &rq).into_iter();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(rq.len());
+        for &(s, e) in &rq {
+            let rows = q_it.next().unwrap();
+            let orows = out_it.next().unwrap();
+            jobs.push(Box::new(move || {
+                let rb = e - s;
+                if normalize {
+                    for i in 0..rb {
+                        l2_normalize_eps(&mut rows[i * d..(i + 1) * d]);
+                    }
+                }
+                simd::matmul_nt_into(rows, rb, d, cls_hat, n, orows);
+            }));
+        }
+        pool.run_wave(jobs);
+    }
+}
+
+// ---------------------------------------------------------------------
+// LSTM encoder step (forward + truncated BPTT backward)
+// ---------------------------------------------------------------------
+
+/// The LM encoder kernel: context embeddings → single-layer LSTM
+/// (gate order i, f, g, o; `model.py::lm_*` semantics) → projection to
+/// the query `u` (`bsz × d`). Forward caches gates/cells/hiddens so one
+/// encoder pass serves both the sampler draw and the loss; `backward`
+/// runs BPTT and produces dense weight grads plus per-(row, t) input
+/// grads for the embedding scatter.
+///
+/// Activations are stored **chunk-block-major**: the rows of pool chunk
+/// `[s, e)` occupy one contiguous block, t-major inside (`(b, t)` at
+/// `(s·l + t·rb + (b−s))·width`), so each wave job reads and writes only
+/// its own contiguous block and every per-`t` gemm gets a contiguous
+/// `rb×width` operand. [`LmStep::x_offset`] maps `(row, t)` into this
+/// layout for the gather/scatter side.
+pub struct LmStep {
+    workers: usize,
+    b: usize,
+    l: usize,
+    d: usize,
+    h: usize,
+    ranges: Vec<(usize, usize)>,
+    /// Per batch row: (chunk start, chunk rows, index within chunk).
+    row_loc: Vec<(usize, usize, usize)>,
+    wxt: Vec<f32>,
+    wht: Vec<f32>,
+    projt: Vec<f32>,
+    x: Vec<f32>,
+    gates: Vec<f32>,
+    cells: Vec<f32>,
+    hs: Vec<f32>,
+    gbuf: Vec<f32>,
+    gbuf2: Vec<f32>,
+    hbuf: Vec<f32>,
+    cbuf: Vec<f32>,
+    wpart: Vec<f32>,
+    d_x: Vec<f32>,
+    /// Encoder output `u` (`bsz × d`), valid after `forward`.
+    pub u: Matrix,
+    /// `∂L/∂wx` (`d × 4h`), valid after `backward`.
+    pub dwx: Vec<f32>,
+    /// `∂L/∂wh` (`h × 4h`), valid after `backward`.
+    pub dwh: Vec<f32>,
+    /// `∂L/∂bias` (`4h`), valid after `backward`.
+    pub db: Vec<f32>,
+    /// `∂L/∂proj` (`h × d`), valid after `backward`.
+    pub dproj: Vec<f32>,
+    growths: u64,
+}
+
+impl LmStep {
+    pub fn new(workers: usize) -> Self {
+        LmStep {
+            workers: workers.max(1),
+            b: 0,
+            l: 0,
+            d: 0,
+            h: 0,
+            ranges: Vec::new(),
+            row_loc: Vec::new(),
+            wxt: Vec::new(),
+            wht: Vec::new(),
+            projt: Vec::new(),
+            x: Vec::new(),
+            gates: Vec::new(),
+            cells: Vec::new(),
+            hs: Vec::new(),
+            gbuf: Vec::new(),
+            gbuf2: Vec::new(),
+            hbuf: Vec::new(),
+            cbuf: Vec::new(),
+            wpart: Vec::new(),
+            d_x: Vec::new(),
+            u: Matrix::zeros(1, 1),
+            dwx: Vec::new(),
+            dwh: Vec::new(),
+            db: Vec::new(),
+            dproj: Vec::new(),
+            growths: 0,
+        }
+    }
+
+    /// See [`FusedLoss::growths`].
+    pub fn growths(&self) -> u64 {
+        self.growths
+    }
+
+    /// Size the step for a `(bsz, seq_len, dim, hidden)` batch; after
+    /// this, fill the input block via [`LmStep::load_rows`] (or
+    /// `x_offset` directly) and call `forward`.
+    pub fn begin(&mut self, b: usize, l: usize, d: usize, h: usize) {
+        assert!(b > 0 && l > 0 && d > 0 && h > 0, "LmStep: empty shape");
+        if self.b != b {
+            self.growths += 1; // ranges + row_loc rebuild
+            self.ranges = chunk_ranges(b, self.workers);
+            self.row_loc.clear();
+            self.row_loc.reserve(b);
+            for &(s, e) in &self.ranges {
+                for r in s..e {
+                    self.row_loc.push((s, e - s, r - s));
+                }
+            }
+        }
+        self.b = b;
+        self.l = l;
+        self.d = d;
+        self.h = h;
+        let fh = 4 * h;
+        ensure_len(&mut self.x, b * l * d, &mut self.growths);
+        ensure_len(&mut self.gates, b * l * fh, &mut self.growths);
+        ensure_len(&mut self.cells, b * (l + 1) * h, &mut self.growths);
+        ensure_len(&mut self.hs, b * (l + 1) * h, &mut self.growths);
+        if self.u.rows() != b || self.u.cols() != d {
+            self.u = Matrix::zeros(b, d);
+            self.growths += 1;
+        }
+    }
+
+    /// Element offset of `(row, t)`'s input vector inside the blocked
+    /// `x` / `d_x` buffers.
+    pub fn x_offset(&self, row: usize, t: usize) -> usize {
+        let (s, rb, idx) = self.row_loc[row];
+        (s * self.l + t * rb + idx) * self.d
+    }
+
+    /// The input block, to be filled before `forward` (layout per
+    /// [`LmStep::x_offset`]).
+    pub fn x_mut(&mut self) -> &mut [f32] {
+        &mut self.x
+    }
+
+    /// Gather `ids` (`bsz·seq_len`, `(row, t)` row-major) from a flat
+    /// embedding table straight into the blocked input buffer.
+    pub fn load_rows(&mut self, table: &[f32], ids: &[u32]) {
+        assert_eq!(ids.len(), self.b * self.l, "LmStep: ids length");
+        let (l, d) = (self.l, self.d);
+        for (i, &id) in ids.iter().enumerate() {
+            let off = self.x_offset(i / l, i % l);
+            let s = id as usize * d;
+            self.x[off..off + d].copy_from_slice(&table[s..s + d]);
+        }
+    }
+
+    /// `(row, t)`'s input gradient after `backward` (for the embedding
+    /// scatter).
+    pub fn d_x_row(&self, row: usize, t: usize) -> &[f32] {
+        let off = self.x_offset(row, t);
+        &self.d_x[off..off + self.d]
+    }
+
+    /// LSTM forward over the loaded inputs: fills the activation caches
+    /// and `u`. Weights are row-major: `wx` `d×4h`, `wh` `h×4h`, `bias`
+    /// `4h`, `proj` `h×d`.
+    pub fn forward(&mut self, wx: &[f32], wh: &[f32], bias: &[f32], proj: &[f32]) {
+        let (l, d, h) = (self.l, self.d, self.h);
+        let fh = 4 * h;
+        assert_eq!(wx.len(), d * fh, "LmStep: wx shape");
+        assert_eq!(wh.len(), h * fh, "LmStep: wh shape");
+        assert_eq!(bias.len(), fh, "LmStep: bias shape");
+        assert_eq!(proj.len(), h * d, "LmStep: proj shape");
+        transpose_into(wx, d, fh, &mut self.wxt, &mut self.growths);
+        transpose_into(wh, h, fh, &mut self.wht, &mut self.growths);
+        transpose_into(proj, h, d, &mut self.projt, &mut self.growths);
+        let nq = self.ranges.len();
+        let rb_max =
+            self.ranges.iter().map(|&(s, e)| e - s).max().unwrap();
+        ensure_len(&mut self.gbuf, nq * rb_max * fh, &mut self.growths);
+        ensure_len(&mut self.gbuf2, nq * rb_max * fh, &mut self.growths);
+
+        let x: &[f32] = &self.x;
+        let wxt: &[f32] = &self.wxt;
+        let wht: &[f32] = &self.wht;
+        let projt: &[f32] = &self.projt;
+        let mut g_it = split_chunks(&mut self.gates, l * fh, &self.ranges)
+            .into_iter();
+        let mut c_it =
+            split_chunks(&mut self.cells, (l + 1) * h, &self.ranges)
+                .into_iter();
+        let mut h_it = split_chunks(&mut self.hs, (l + 1) * h, &self.ranges)
+            .into_iter();
+        let mut u_it =
+            split_chunks(self.u.data_mut(), d, &self.ranges).into_iter();
+        let mut g1_it = self.gbuf.chunks_mut(rb_max * fh);
+        let mut g2_it = self.gbuf2.chunks_mut(rb_max * fh);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(nq);
+        for &(s, e) in &self.ranges {
+            let gb = g_it.next().unwrap();
+            let cb = c_it.next().unwrap();
+            let hb = h_it.next().unwrap();
+            let ub = u_it.next().unwrap();
+            let g1 = g1_it.next().unwrap();
+            let g2 = g2_it.next().unwrap();
+            jobs.push(Box::new(move || {
+                lm_forward_chunk(
+                    s, e, l, d, h, x, wxt, wht, bias, projt, gb, cb, hb, ub,
+                    g1, g2,
+                );
+            }));
+        }
+        exec::serve_pool().run_wave(jobs);
+    }
+
+    /// BPTT from `d_u` (`bsz × d`, e.g. [`FusedLoss::d_q`]) through the
+    /// cached forward: fills `d_x` (read via [`LmStep::d_x_row`]) and
+    /// the dense weight grads `dwx`/`dwh`/`db`/`dproj`.
+    pub fn backward(&mut self, wx: &[f32], wh: &[f32], proj: &[f32], d_u: &[f32]) {
+        let (b, l, d, h) = (self.b, self.l, self.d, self.h);
+        let fh = 4 * h;
+        assert_eq!(d_u.len(), b * d, "LmStep: d_u shape");
+        let nq = self.ranges.len();
+        let rb_max =
+            self.ranges.iter().map(|&(s, e)| e - s).max().unwrap();
+        let psz = d * fh + h * fh + fh + h * d;
+        ensure_len(&mut self.d_x, b * l * d, &mut self.growths);
+        ensure_zeroed(&mut self.wpart, nq * psz, &mut self.growths);
+        ensure_len(&mut self.hbuf, nq * rb_max * h, &mut self.growths);
+        ensure_len(&mut self.cbuf, nq * rb_max * h, &mut self.growths);
+        ensure_len(&mut self.gbuf, nq * rb_max * fh, &mut self.growths);
+        ensure_zeroed(&mut self.dwx, d * fh, &mut self.growths);
+        ensure_zeroed(&mut self.dwh, h * fh, &mut self.growths);
+        ensure_zeroed(&mut self.db, fh, &mut self.growths);
+        ensure_zeroed(&mut self.dproj, h * d, &mut self.growths);
+
+        {
+            let x: &[f32] = &self.x;
+            let gates: &[f32] = &self.gates;
+            let cells: &[f32] = &self.cells;
+            let hs: &[f32] = &self.hs;
+            let mut dx_it =
+                split_chunks(&mut self.d_x, l * d, &self.ranges).into_iter();
+            let mut dh_it = self.hbuf.chunks_mut(rb_max * h);
+            let mut dc_it = self.cbuf.chunks_mut(rb_max * h);
+            let mut dg_it = self.gbuf.chunks_mut(rb_max * fh);
+            let mut wp_it = self.wpart.chunks_mut(psz);
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(nq);
+            for &(s, e) in &self.ranges {
+                let dxb = dx_it.next().unwrap();
+                let dh = dh_it.next().unwrap();
+                let dc = dc_it.next().unwrap();
+                let dg = dg_it.next().unwrap();
+                let wp = wp_it.next().unwrap();
+                jobs.push(Box::new(move || {
+                    lm_backward_chunk(
+                        s, e, l, d, h, x, gates, cells, hs, wx, wh, proj,
+                        d_u, dxb, dh, dc, dg, wp,
+                    );
+                }));
+            }
+            exec::serve_pool().run_wave(jobs);
+        }
+
+        // Deterministic serial reduce of the per-worker weight partials.
+        for w in 0..nq {
+            let part = &self.wpart[w * psz..(w + 1) * psz];
+            simd::axpy(1.0, &part[..d * fh], &mut self.dwx);
+            simd::axpy(1.0, &part[d * fh..(d + h) * fh], &mut self.dwh);
+            simd::axpy(
+                1.0,
+                &part[(d + h) * fh..(d + h + 1) * fh],
+                &mut self.db,
+            );
+            simd::axpy(1.0, &part[(d + h + 1) * fh..], &mut self.dproj);
+        }
+    }
+}
+
+/// Forward one row chunk: per-`t` gate gemms (`x_t·wxᵀ`, `h_{t−1}·whᵀ`),
+/// activations, state update, then the last hidden's projection.
+#[allow(clippy::too_many_arguments)]
+fn lm_forward_chunk(
+    s: usize,
+    e: usize,
+    l: usize,
+    d: usize,
+    h: usize,
+    x: &[f32],
+    wxt: &[f32],
+    wht: &[f32],
+    bias: &[f32],
+    projt: &[f32],
+    gates: &mut [f32],
+    cells: &mut [f32],
+    hs: &mut [f32],
+    u: &mut [f32],
+    g1: &mut [f32],
+    g2: &mut [f32],
+) {
+    let rb = e - s;
+    let fh = 4 * h;
+    let xb = &x[s * l * d..e * l * d];
+    hs[..rb * h].fill(0.0);
+    cells[..rb * h].fill(0.0);
+    for t in 0..l {
+        let xt = &xb[t * rb * d..(t + 1) * rb * d];
+        let g1t = &mut g1[..rb * fh];
+        simd::matmul_nt_into(xt, rb, d, wxt, fh, g1t);
+        let (hlo, hhi) = hs.split_at_mut((t + 1) * rb * h);
+        let hprev = &hlo[t * rb * h..];
+        let g2t = &mut g2[..rb * fh];
+        simd::matmul_nt_into(hprev, rb, h, wht, fh, g2t);
+        let (clo, chi) = cells.split_at_mut((t + 1) * rb * h);
+        let cprev = &clo[t * rb * h..];
+        let cnext = &mut chi[..rb * h];
+        let hnext = &mut hhi[..rb * h];
+        for r in 0..rb {
+            let grow = &mut gates[(t * rb + r) * fh..(t * rb + r + 1) * fh];
+            let a = &g1t[r * fh..(r + 1) * fh];
+            let c = &g2t[r * fh..(r + 1) * fh];
+            for j in 0..fh {
+                grow[j] = a[j] + c[j] + bias[j];
+            }
+            // Saved post-activation (what the backward needs).
+            for k in 0..h {
+                let i = sigmoid(grow[k]);
+                let f = sigmoid(grow[h + k]);
+                let g = grow[2 * h + k].tanh();
+                let o = sigmoid(grow[3 * h + k]);
+                grow[k] = i;
+                grow[h + k] = f;
+                grow[2 * h + k] = g;
+                grow[3 * h + k] = o;
+                let cv = f * cprev[r * h + k] + i * g;
+                cnext[r * h + k] = cv;
+                hnext[r * h + k] = o * cv.tanh();
+            }
+        }
+    }
+    let hlast = &hs[l * rb * h..(l + 1) * rb * h];
+    simd::matmul_nt_into(hlast, rb, h, projt, d, u);
+}
+
+/// Backward one row chunk: dh from the projection, then BPTT over `t`
+/// with gate-gradient gemms producing `d_x_t` and `dh_{t−1}` and axpy
+/// rank-1 accumulation into the chunk's weight partials.
+#[allow(clippy::too_many_arguments)]
+fn lm_backward_chunk(
+    s: usize,
+    e: usize,
+    l: usize,
+    d: usize,
+    h: usize,
+    x: &[f32],
+    gates: &[f32],
+    cells: &[f32],
+    hs: &[f32],
+    wx: &[f32],
+    wh: &[f32],
+    proj: &[f32],
+    d_u: &[f32],
+    d_x: &mut [f32],
+    dh: &mut [f32],
+    dc: &mut [f32],
+    dg: &mut [f32],
+    wpart: &mut [f32],
+) {
+    let rb = e - s;
+    let fh = 4 * h;
+    let xb = &x[s * l * d..e * l * d];
+    let gb = &gates[s * l * fh..e * l * fh];
+    let cb = &cells[s * (l + 1) * h..e * (l + 1) * h];
+    let hb = &hs[s * (l + 1) * h..e * (l + 1) * h];
+    let dur = &d_u[s * d..e * d];
+    let dh = &mut dh[..rb * h];
+    let dc = &mut dc[..rb * h];
+    let dg = &mut dg[..rb * fh];
+    dc.fill(0.0);
+    simd::matmul_nt_into(dur, rb, d, proj, h, dh);
+    let (pwx, rest) = wpart.split_at_mut(d * fh);
+    let (pwh, rest) = rest.split_at_mut(h * fh);
+    let (pb, pproj) = rest.split_at_mut(fh);
+    let hlast = &hb[l * rb * h..];
+    for r in 0..rb {
+        let durow = &dur[r * d..(r + 1) * d];
+        for k in 0..h {
+            simd::axpy(hlast[r * h + k], durow, &mut pproj[k * d..(k + 1) * d]);
+        }
+    }
+    for t in (0..l).rev() {
+        for r in 0..rb {
+            let grow = &gb[(t * rb + r) * fh..(t * rb + r + 1) * fh];
+            let cnext = &cb[((t + 1) * rb + r) * h..((t + 1) * rb + r + 1) * h];
+            let cprev = &cb[(t * rb + r) * h..(t * rb + r + 1) * h];
+            for k in 0..h {
+                let i = grow[k];
+                let f = grow[h + k];
+                let g = grow[2 * h + k];
+                let o = grow[3 * h + k];
+                let tc = cnext[k].tanh();
+                let dhk = dh[r * h + k];
+                let dck = dc[r * h + k] + dhk * o * (1.0 - tc * tc);
+                dg[r * fh + k] = dck * g * i * (1.0 - i);
+                dg[r * fh + h + k] = dck * cprev[k] * f * (1.0 - f);
+                dg[r * fh + 2 * h + k] = dck * i * (1.0 - g * g);
+                dg[r * fh + 3 * h + k] = dhk * tc * o * (1.0 - o);
+                dc[r * h + k] = dck * f;
+            }
+        }
+        let dxt = &mut d_x[t * rb * d..(t + 1) * rb * d];
+        simd::matmul_nt_into(dg, rb, fh, wx, d, dxt);
+        simd::matmul_nt_into(dg, rb, fh, wh, h, dh);
+        for r in 0..rb {
+            let dgrow = &dg[r * fh..(r + 1) * fh];
+            let xrow = &xb[(t * rb + r) * d..(t * rb + r + 1) * d];
+            for k in 0..d {
+                simd::axpy(xrow[k], dgrow, &mut pwx[k * fh..(k + 1) * fh]);
+            }
+            let hprev = &hb[(t * rb + r) * h..(t * rb + r + 1) * h];
+            for k in 0..h {
+                simd::axpy(hprev[k], dgrow, &mut pwh[k * fh..(k + 1) * fh]);
+            }
+            simd::axpy(1.0, dgrow, pb);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// XC encoder step (sparse features → dense query)
+// ---------------------------------------------------------------------
+
+/// The extreme-classification encoder: `u_r = Σ_j vals[r,j]·W[feats[r,j]]`
+/// (a sparse gather-accumulate over [`crate::linalg::axpy_rows`]) and
+/// its backward `d_feat[r,j] = vals[r,j]·d_u_r` for the sparse scatter.
+pub struct XcStep {
+    workers: usize,
+    /// Encoder output `u` (`bsz × d`), valid after `forward`.
+    pub u: Matrix,
+    /// Per-(row, feature-slot) input grads (`bsz·nnz × d`), valid after
+    /// `feat_grad`.
+    pub d_feat: Vec<f32>,
+    growths: u64,
+}
+
+impl XcStep {
+    pub fn new(workers: usize) -> Self {
+        XcStep {
+            workers: workers.max(1),
+            u: Matrix::zeros(1, 1),
+            d_feat: Vec::new(),
+            growths: 0,
+        }
+    }
+
+    /// See [`FusedLoss::growths`].
+    pub fn growths(&self) -> u64 {
+        self.growths
+    }
+
+    pub fn forward(
+        &mut self,
+        w: &[f32],
+        d: usize,
+        feats: &[u32],
+        vals: &[f32],
+        bsz: usize,
+        nnz: usize,
+    ) {
+        assert_eq!(feats.len(), bsz * nnz, "XcStep: feats shape");
+        assert_eq!(vals.len(), bsz * nnz, "XcStep: vals shape");
+        if self.u.rows() != bsz || self.u.cols() != d {
+            self.u = Matrix::zeros(bsz, d);
+            self.growths += 1;
+        }
+        let pool = exec::serve_pool();
+        let rq = chunk_ranges(bsz, self.workers.min(pool.size().max(1)));
+        let mut u_it = split_chunks(self.u.data_mut(), d, &rq).into_iter();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(rq.len());
+        for &(s, e) in &rq {
+            let ub = u_it.next().unwrap();
+            jobs.push(Box::new(move || {
+                for r in 0..(e - s) {
+                    let row = &mut ub[r * d..(r + 1) * d];
+                    row.fill(0.0);
+                    crate::linalg::axpy_rows(
+                        w,
+                        d,
+                        &feats[(s + r) * nnz..(s + r + 1) * nnz],
+                        &vals[(s + r) * nnz..(s + r + 1) * nnz],
+                        row,
+                    );
+                }
+            }));
+        }
+        pool.run_wave(jobs);
+    }
+
+    pub fn feat_grad(
+        &mut self,
+        d_u: &[f32],
+        vals: &[f32],
+        bsz: usize,
+        nnz: usize,
+        d: usize,
+    ) {
+        assert_eq!(d_u.len(), bsz * d, "XcStep: d_u shape");
+        assert_eq!(vals.len(), bsz * nnz, "XcStep: vals shape");
+        ensure_len(&mut self.d_feat, bsz * nnz * d, &mut self.growths);
+        let pool = exec::serve_pool();
+        let rq = chunk_ranges(bsz, self.workers.min(pool.size().max(1)));
+        let mut df_it =
+            split_chunks(&mut self.d_feat, nnz * d, &rq).into_iter();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(rq.len());
+        for &(s, e) in &rq {
+            let dfb = df_it.next().unwrap();
+            jobs.push(Box::new(move || {
+                for r in 0..(e - s) {
+                    let durow = &d_u[(s + r) * d..(s + r + 1) * d];
+                    for j in 0..nnz {
+                        let v = vals[(s + r) * nnz + j];
+                        let out = &mut dfb[(r * nnz + j) * d
+                            ..(r * nnz + j + 1) * d];
+                        for (ov, &dv) in out.iter_mut().zip(durow) {
+                            *ov = v * dv;
+                        }
+                    }
+                }
+            }));
+        }
+        pool.run_wave(jobs);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Composed (unfused) reference pipeline
+// ---------------------------------------------------------------------
+
+/// The *composed* baseline: the same math as the fused kernels, written
+/// the way the retired artifact pipeline staged it — serial, stage by
+/// stage, materializing every intermediate (normalized copies, the full
+/// `bsz×(1+m)` logit matrix, probability rows) and allocating fresh
+/// buffers per call. Still gemm-backed (`Matrix::matmul_nt` over the
+/// same SIMD microkernels), so `bench-check --require-fused-speedup`
+/// measures fusion + scratch reuse + fan-out, not a strawman.
+///
+/// Doubles as an independent implementation for the equivalence tests.
+pub mod composed {
+    use super::{l2_normalize_eps, l2norm_bwd_inplace, sigmoid};
+    use crate::linalg::{logsumexp, simd, softmax, Matrix};
+
+    /// Loss + grads of one sampled-softmax step (see [`super::FusedLoss`]).
+    pub struct SampledOut {
+        pub loss: f32,
+        pub d_q: Vec<f32>,
+        pub d_tgt: Vec<f32>,
+        pub d_neg: Vec<f32>,
+    }
+
+    /// Unfused sampled-softmax loss/grad: normalize → full logit matrix
+    /// → adjust/mask matrix → per-row softmax → gradient scatter, each
+    /// stage a fresh allocation.
+    pub fn sampled_loss_grad(
+        q: &Matrix,
+        tgt: &[f32],
+        neg: &[f32],
+        adjust: &[f32],
+        mask: &[f32],
+        tau: f32,
+        absolute: bool,
+    ) -> SampledOut {
+        let b = q.rows();
+        let d = q.cols();
+        let m = adjust.len();
+        let tau64 = tau as f64;
+        // Stage 1: normalized copies.
+        let mut qn = q.data().to_vec();
+        let mut tn = tgt.to_vec();
+        let mut cn = neg.to_vec();
+        let mut q_norms = vec![0.0f32; b];
+        let mut t_norms = vec![0.0f32; b];
+        let mut c_norms = vec![0.0f32; m];
+        for r in 0..b {
+            q_norms[r] = l2_normalize_eps(&mut qn[r * d..(r + 1) * d]);
+            t_norms[r] = l2_normalize_eps(&mut tn[r * d..(r + 1) * d]);
+        }
+        for j in 0..m {
+            c_norms[j] = l2_normalize_eps(&mut cn[j * d..(j + 1) * d]);
+        }
+        // Stage 2: the full bsz×m negative-logit matrix (one gemm).
+        let qm = Matrix::from_vec(b, d, qn.clone());
+        let cm = Matrix::from_vec(m, d, cn.clone());
+        let raw = qm.matmul_nt(&cm);
+        // Stages 3–5: adjusted logit rows, per-row softmax, gradients.
+        let mut loss = 0.0f64;
+        let mut d_q = vec![0.0f32; b * d];
+        let mut d_tgt = vec![0.0f32; b * d];
+        let mut d_neg = vec![0.0f32; m * d];
+        let inv_b = 1.0 / b as f64;
+        for r in 0..b {
+            let qr = &qn[r * d..(r + 1) * d];
+            let tr = &tn[r * d..(r + 1) * d];
+            let ot_raw = tau64 * simd::dot(qr, tr) as f64;
+            // Adjusted row: [o_t, o_j − log(m·q_j)], masked → −∞.
+            let mut row = Vec::with_capacity(m + 1);
+            let mut signs = Vec::with_capacity(m + 1);
+            let (ot, ts) = if absolute {
+                (ot_raw.abs(), if ot_raw < 0.0 { -1.0 } else { 1.0 })
+            } else {
+                (ot_raw, 1.0)
+            };
+            row.push(ot);
+            signs.push(ts);
+            for j in 0..m {
+                if mask[r * m + j] == 0.0 {
+                    row.push(f64::NEG_INFINITY);
+                    signs.push(1.0);
+                    continue;
+                }
+                let v =
+                    tau64 * raw.get(r, j) as f64 - adjust[j] as f64;
+                if absolute {
+                    row.push(v.abs());
+                    signs.push(if v < 0.0 { -1.0 } else { 1.0 });
+                } else {
+                    row.push(v);
+                    signs.push(1.0);
+                }
+            }
+            loss += logsumexp(&row) - row[0];
+            let probs = softmax(&row);
+            // d_q̂, d_t̂, d_ĉ in normalized coordinates.
+            let mut dq_hat = vec![0.0f32; d];
+            let coef_t = (tau64 * (probs[0] - 1.0) * inv_b * signs[0]) as f32;
+            simd::axpy(coef_t, tr, &mut dq_hat);
+            let mut dt_hat = vec![0.0f32; d];
+            for k in 0..d {
+                dt_hat[k] = coef_t * qr[k];
+            }
+            for j in 0..m {
+                let coef =
+                    (tau64 * probs[j + 1] * inv_b * signs[j + 1]) as f32;
+                if coef == 0.0 {
+                    continue;
+                }
+                simd::axpy(coef, &cn[j * d..(j + 1) * d], &mut dq_hat);
+                simd::axpy(coef, qr, &mut d_neg[j * d..(j + 1) * d]);
+            }
+            l2norm_bwd_inplace(qr, &mut dq_hat, q_norms[r]);
+            l2norm_bwd_inplace(tr, &mut dt_hat, t_norms[r]);
+            d_q[r * d..(r + 1) * d].copy_from_slice(&dq_hat);
+            d_tgt[r * d..(r + 1) * d].copy_from_slice(&dt_hat);
+        }
+        // Stage 6: negatives back through their normalization.
+        for j in 0..m {
+            let y = &cn[j * d..(j + 1) * d];
+            l2norm_bwd_inplace(y, &mut d_neg[j * d..(j + 1) * d], c_norms[j]);
+        }
+        SampledOut {
+            loss: (loss / b as f64) as f32,
+            d_q,
+            d_tgt,
+            d_neg,
+        }
+    }
+
+    /// The cached activations of one serial LSTM forward. Layouts are
+    /// plain `(row, t)` row-major (`gates[(r·l + t)·4h..]` etc.).
+    pub struct LmFwd {
+        pub gates: Vec<f32>,
+        pub cells: Vec<f32>,
+        pub hs: Vec<f32>,
+        pub u: Matrix,
+    }
+
+    /// Serial LSTM forward, fresh transposes and buffers per call
+    /// (mirroring the per-step `block_tensor` clones of the old path).
+    /// `x` is `(row, t)` row-major `bsz·l × d`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn lm_forward(
+        x: &[f32],
+        b: usize,
+        l: usize,
+        d: usize,
+        h: usize,
+        wx: &[f32],
+        wh: &[f32],
+        bias: &[f32],
+        proj: &[f32],
+    ) -> LmFwd {
+        let fh = 4 * h;
+        assert_eq!(x.len(), b * l * d);
+        let wxt = Matrix::from_vec(d, fh, wx.to_vec()).transpose();
+        let wht = Matrix::from_vec(h, fh, wh.to_vec()).transpose();
+        let projt = Matrix::from_vec(h, d, proj.to_vec()).transpose();
+        let mut gates = vec![0.0f32; b * l * fh];
+        let mut cells = vec![0.0f32; b * (l + 1) * h];
+        let mut hs = vec![0.0f32; b * (l + 1) * h];
+        let mut u = Matrix::zeros(b, d);
+        for r in 0..b {
+            for t in 0..l {
+                let g1 = {
+                    let xt = &x[(r * l + t) * d..(r * l + t + 1) * d];
+                    let mut g = vec![0.0f32; fh];
+                    simd::matmul_nt_into(xt, 1, d, wxt.data(), fh, &mut g);
+                    g
+                };
+                let g2 = {
+                    let hp = hs[(r * (l + 1) + t) * h..(r * (l + 1) + t + 1) * h]
+                        .to_vec();
+                    let mut g = vec![0.0f32; fh];
+                    simd::matmul_nt_into(&hp, 1, h, wht.data(), fh, &mut g);
+                    g
+                };
+                let grow = &mut gates[(r * l + t) * fh..(r * l + t + 1) * fh];
+                for j in 0..fh {
+                    grow[j] = g1[j] + g2[j] + bias[j];
+                }
+                for k in 0..h {
+                    let i = sigmoid(grow[k]);
+                    let f = sigmoid(grow[h + k]);
+                    let g = grow[2 * h + k].tanh();
+                    let o = sigmoid(grow[3 * h + k]);
+                    grow[k] = i;
+                    grow[h + k] = f;
+                    grow[2 * h + k] = g;
+                    grow[3 * h + k] = o;
+                    let cv = f * cells[(r * (l + 1) + t) * h + k] + i * g;
+                    cells[(r * (l + 1) + t + 1) * h + k] = cv;
+                    hs[(r * (l + 1) + t + 1) * h + k] = o * cv.tanh();
+                }
+            }
+            let hl =
+                hs[(r * (l + 1) + l) * h..(r * (l + 1) + l + 1) * h].to_vec();
+            simd::matmul_nt_into(&hl, 1, h, projt.data(), d, u.row_mut(r));
+        }
+        LmFwd { gates, cells, hs, u }
+    }
+
+    /// Gradients of one serial BPTT pass (see [`super::LmStep::backward`]).
+    pub struct LmGrads {
+        pub d_x: Vec<f32>,
+        pub dwx: Vec<f32>,
+        pub dwh: Vec<f32>,
+        pub db: Vec<f32>,
+        pub dproj: Vec<f32>,
+    }
+
+    /// Serial BPTT mirror of the fused backward, fresh buffers per call.
+    #[allow(clippy::too_many_arguments)]
+    pub fn lm_backward(
+        st: &LmFwd,
+        x: &[f32],
+        b: usize,
+        l: usize,
+        d: usize,
+        h: usize,
+        wx: &[f32],
+        wh: &[f32],
+        proj: &[f32],
+        d_u: &[f32],
+    ) -> LmGrads {
+        let fh = 4 * h;
+        let mut d_x = vec![0.0f32; b * l * d];
+        let mut dwx = vec![0.0f32; d * fh];
+        let mut dwh = vec![0.0f32; h * fh];
+        let mut db = vec![0.0f32; fh];
+        let mut dproj = vec![0.0f32; h * d];
+        for r in 0..b {
+            let durow = &d_u[r * d..(r + 1) * d];
+            let mut dh = vec![0.0f32; h];
+            simd::matmul_nt_into(durow, 1, d, proj, h, &mut dh);
+            let hl = &st.hs[(r * (l + 1) + l) * h..(r * (l + 1) + l + 1) * h];
+            for k in 0..h {
+                simd::axpy(hl[k], durow, &mut dproj[k * d..(k + 1) * d]);
+            }
+            let mut dc = vec![0.0f32; h];
+            let mut dgates = vec![0.0f32; fh];
+            for t in (0..l).rev() {
+                let grow = &st.gates[(r * l + t) * fh..(r * l + t + 1) * fh];
+                let cnext = &st.cells
+                    [(r * (l + 1) + t + 1) * h..(r * (l + 1) + t + 2) * h];
+                let cprev = &st.cells
+                    [(r * (l + 1) + t) * h..(r * (l + 1) + t + 1) * h];
+                for k in 0..h {
+                    let i = grow[k];
+                    let f = grow[h + k];
+                    let g = grow[2 * h + k];
+                    let o = grow[3 * h + k];
+                    let tc = cnext[k].tanh();
+                    let dck = dc[k] + dh[k] * o * (1.0 - tc * tc);
+                    dgates[k] = dck * g * i * (1.0 - i);
+                    dgates[h + k] = dck * cprev[k] * f * (1.0 - f);
+                    dgates[2 * h + k] = dck * i * (1.0 - g * g);
+                    dgates[3 * h + k] = dh[k] * tc * o * (1.0 - o);
+                    dc[k] = dck * f;
+                }
+                let dxt = &mut d_x[(r * l + t) * d..(r * l + t + 1) * d];
+                simd::matmul_nt_into(&dgates, 1, fh, wx, d, dxt);
+                simd::matmul_nt_into(&dgates, 1, fh, wh, h, &mut dh);
+                let xrow = &x[(r * l + t) * d..(r * l + t + 1) * d];
+                for k in 0..d {
+                    simd::axpy(xrow[k], &dgates, &mut dwx[k * fh..(k + 1) * fh]);
+                }
+                let hprev = &st.hs
+                    [(r * (l + 1) + t) * h..(r * (l + 1) + t + 1) * h];
+                for k in 0..h {
+                    simd::axpy(hprev[k], &dgates, &mut dwh[k * fh..(k + 1) * fh]);
+                }
+                simd::axpy(1.0, &dgates, &mut db);
+            }
+        }
+        LmGrads { d_x, dwx, dwh, db, dproj }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::logsumexp;
+    use crate::rng::Rng;
+    use crate::softmax::{full_softmax_loss, sampled_softmax_loss};
+
+    fn close(got: f32, want: f64, rel: f64, abs: f64, ctx: &str) {
+        let diff = (got as f64 - want).abs();
+        assert!(
+            diff <= rel * want.abs() + abs,
+            "{ctx}: got {got}, want {want} (diff {diff:.3e})"
+        );
+    }
+
+    fn randv(rng: &mut Rng, len: usize, scale: f64) -> Vec<f32> {
+        (0..len).map(|_| (rng.gaussian() * scale) as f32).collect()
+    }
+
+    fn to64(v: &[f32]) -> Vec<f64> {
+        v.iter().map(|&x| x as f64).collect()
+    }
+
+    /// Straight-line f64 reference of the fused sampled loss (normalize
+    /// with the ε clamp → logits → adjust → mask → logsumexp → mean).
+    #[allow(clippy::too_many_arguments)]
+    fn ref_sampled_loss(
+        q: &[f64],
+        tgt: &[f64],
+        neg: &[f64],
+        adjust: &[f64],
+        mask: &[f32],
+        b: usize,
+        d: usize,
+        m: usize,
+        tau: f64,
+        absolute: bool,
+    ) -> f64 {
+        let eps = NORM_EPS as f64;
+        let nrm = |x: &[f64]| -> Vec<f64> {
+            let n = x.iter().map(|v| v * v).sum::<f64>().sqrt().max(eps);
+            x.iter().map(|v| v / n).collect()
+        };
+        let dot = |a: &[f64], c: &[f64]| -> f64 {
+            a.iter().zip(c).map(|(x, y)| x * y).sum()
+        };
+        let mut total = 0.0;
+        for r in 0..b {
+            let qh = nrm(&q[r * d..(r + 1) * d]);
+            let th = nrm(&tgt[r * d..(r + 1) * d]);
+            let ot_raw = tau * dot(&qh, &th);
+            let ot = if absolute { ot_raw.abs() } else { ot_raw };
+            let mut row = vec![ot];
+            for j in 0..m {
+                if mask[r * m + j] == 0.0 {
+                    continue;
+                }
+                let ch = nrm(&neg[j * d..(j + 1) * d]);
+                let v = tau * dot(&qh, &ch) - adjust[j];
+                row.push(if absolute { v.abs() } else { v });
+            }
+            total += logsumexp(&row) - ot;
+        }
+        total / b as f64
+    }
+
+    struct Case {
+        b: usize,
+        d: usize,
+        m: usize,
+        tau: f32,
+        q: Matrix,
+        tgt: Vec<f32>,
+        neg: Vec<f32>,
+        adjust: Vec<f32>,
+        mask: Vec<f32>,
+    }
+
+    fn make_case(seed: u64, b: usize, d: usize, m: usize) -> Case {
+        let mut rng = Rng::seeded(seed);
+        let q = Matrix::from_vec(b, d, randv(&mut rng, b * d, 0.9));
+        let tgt = randv(&mut rng, b * d, 0.9);
+        let neg = randv(&mut rng, m * d, 0.9);
+        let adjust: Vec<f32> = (0..m)
+            .map(|_| ((m as f64) * (0.05 + 0.9 * rng.f64_open())).ln() as f32)
+            .collect();
+        let mask = vec![1.0f32; b * m];
+        Case { b, d, m, tau: 0.8, q, tgt, neg, adjust, mask }
+    }
+
+    /// Run the fused kernel + the f64 reference + central finite
+    /// differences over every input coordinate; assert rel ≤ 1e-4.
+    fn check_fused_against_fd(case: &Case, absolute: bool, ctx: &str) {
+        let (b, d, m) = (case.b, case.d, case.m);
+        let mut q = case.q.clone();
+        let mut tgt = case.tgt.clone();
+        let mut neg = case.neg.clone();
+        let mut fused = FusedLoss::new(4);
+        let loss = fused.run(
+            &mut q,
+            &mut tgt,
+            &mut neg,
+            &case.adjust,
+            &case.mask,
+            case.tau,
+            absolute,
+        );
+        let q64 = to64(case.q.data());
+        let t64 = to64(&case.tgt);
+        let n64 = to64(&case.neg);
+        let a64 = to64(&case.adjust);
+        let tau = case.tau as f64;
+        let f = |q: &[f64], t: &[f64], n: &[f64]| {
+            ref_sampled_loss(
+                q, t, n, &a64, &case.mask, b, d, m, tau, absolute,
+            )
+        };
+        close(loss, f(&q64, &t64, &n64), 1e-5, 1e-7, &format!("{ctx} loss"));
+        let eps = 1e-6;
+        let fd = |v: &mut Vec<f64>,
+                  i: usize,
+                  f: &dyn Fn(&[f64]) -> f64|
+         -> f64 {
+            let save = v[i];
+            v[i] = save + eps;
+            let lp = f(v);
+            v[i] = save - eps;
+            let lm = f(v);
+            v[i] = save;
+            (lp - lm) / (2.0 * eps)
+        };
+        let mut q64m = q64.clone();
+        for i in 0..b * d {
+            let g = fd(&mut q64m, i, &|v| f(v, &t64, &n64));
+            close(fused.d_q[i], g, 1e-4, 5e-6, &format!("{ctx} d_q[{i}]"));
+        }
+        let mut t64m = t64.clone();
+        for i in 0..b * d {
+            let g = fd(&mut t64m, i, &|v| f(&q64, v, &n64));
+            close(fused.d_tgt[i], g, 1e-4, 5e-6, &format!("{ctx} d_tgt[{i}]"));
+        }
+        let mut n64m = n64.clone();
+        for i in 0..m * d {
+            let g = fd(&mut n64m, i, &|v| f(&q64, &t64, v));
+            close(fused.d_neg[i], g, 1e-4, 5e-6, &format!("{ctx} d_neg[{i}]"));
+        }
+    }
+
+    #[test]
+    fn fused_matches_f64_finite_differences() {
+        let case = make_case(11, 3, 7, 5);
+        check_fused_against_fd(&case, false, "plain");
+    }
+
+    #[test]
+    fn fused_matches_fd_with_mask_and_absolute() {
+        let mut case = make_case(13, 3, 6, 5);
+        case.mask[2] = 0.0; // row 0, col 2
+        case.mask[case.m + 4] = 0.0; // row 1, col 4
+        check_fused_against_fd(&case, false, "masked");
+        let case = make_case(17, 2, 5, 4);
+        check_fused_against_fd(&case, true, "absolute");
+    }
+
+    #[test]
+    fn fused_loss_matches_sampled_softmax_oracle() {
+        // Same math as the f64 oracle: q_j = exp(adjust_j)/m, per-row
+        // loss from normalized f64 logits, batch mean.
+        let case = make_case(19, 4, 8, 6);
+        let (b, d, m) = (case.b, case.d, case.m);
+        let mut q = case.q.clone();
+        let mut tgt = case.tgt.clone();
+        let mut neg = case.neg.clone();
+        let mut fused = FusedLoss::new(4);
+        let loss = fused.run(
+            &mut q,
+            &mut tgt,
+            &mut neg,
+            &case.adjust,
+            &case.mask,
+            case.tau,
+            false,
+        );
+        let eps = NORM_EPS as f64;
+        let nrm = |x: &[f64]| -> Vec<f64> {
+            let n = x.iter().map(|v| v * v).sum::<f64>().sqrt().max(eps);
+            x.iter().map(|v| v / n).collect()
+        };
+        let q64 = to64(case.q.data());
+        let t64 = to64(&case.tgt);
+        let n64 = to64(&case.neg);
+        let tau = case.tau as f64;
+        let qs: Vec<f64> = case
+            .adjust
+            .iter()
+            .map(|&a| (a as f64).exp() / m as f64)
+            .collect();
+        let mut want = 0.0;
+        for r in 0..b {
+            let qh = nrm(&q64[r * d..(r + 1) * d]);
+            let th = nrm(&t64[r * d..(r + 1) * d]);
+            let ot: f64 =
+                tau * qh.iter().zip(&th).map(|(a, c)| a * c).sum::<f64>();
+            let negl: Vec<f64> = (0..m)
+                .map(|j| {
+                    let ch = nrm(&n64[j * d..(j + 1) * d]);
+                    tau * qh.iter().zip(&ch).map(|(a, c)| a * c).sum::<f64>()
+                })
+                .collect();
+            want += sampled_softmax_loss(ot, &negl, &qs).loss;
+        }
+        close(loss, want / b as f64, 1e-5, 1e-7, "oracle loss");
+    }
+
+    #[test]
+    fn fused_matches_composed_pipeline() {
+        for &absolute in &[false, true] {
+            let mut case = make_case(23, 5, 9, 7);
+            case.mask[3] = 0.0;
+            let mut q = case.q.clone();
+            let mut tgt = case.tgt.clone();
+            let mut neg = case.neg.clone();
+            let mut fused = FusedLoss::new(3);
+            let loss = fused.run(
+                &mut q,
+                &mut tgt,
+                &mut neg,
+                &case.adjust,
+                &case.mask,
+                case.tau,
+                absolute,
+            );
+            let out = composed::sampled_loss_grad(
+                &case.q,
+                &case.tgt,
+                &case.neg,
+                &case.adjust,
+                &case.mask,
+                case.tau,
+                absolute,
+            );
+            close(loss, out.loss as f64, 1e-5, 1e-6, "composed loss");
+            for (i, (&a, &w)) in
+                fused.d_q.iter().zip(&out.d_q).enumerate()
+            {
+                close(a, w as f64, 1e-4, 1e-6, &format!("composed d_q[{i}]"));
+            }
+            for (i, (&a, &w)) in
+                fused.d_tgt.iter().zip(&out.d_tgt).enumerate()
+            {
+                close(a, w as f64, 1e-4, 1e-6, &format!("composed d_tgt[{i}]"));
+            }
+            for (i, (&a, &w)) in
+                fused.d_neg.iter().zip(&out.d_neg).enumerate()
+            {
+                close(a, w as f64, 1e-4, 1e-6, &format!("composed d_neg[{i}]"));
+            }
+        }
+    }
+
+    #[test]
+    fn fully_masked_class_gets_zero_grad() {
+        let mut case = make_case(29, 3, 5, 4);
+        for r in 0..case.b {
+            case.mask[r * case.m + 1] = 0.0;
+        }
+        let mut q = case.q.clone();
+        let mut tgt = case.tgt.clone();
+        let mut neg = case.neg.clone();
+        let mut fused = FusedLoss::new(2);
+        fused.run(
+            &mut q,
+            &mut tgt,
+            &mut neg,
+            &case.adjust,
+            &case.mask,
+            case.tau,
+            false,
+        );
+        let d = case.d;
+        assert!(
+            fused.d_neg[d..2 * d].iter().all(|&g| g == 0.0),
+            "masked-everywhere class must get zero grad"
+        );
+    }
+
+    #[test]
+    fn zero_query_row_stays_finite() {
+        let mut case = make_case(31, 3, 5, 4);
+        case.q.row_mut(0).fill(0.0);
+        let mut q = case.q.clone();
+        let mut tgt = case.tgt.clone();
+        let mut neg = case.neg.clone();
+        let mut fused = FusedLoss::new(2);
+        let loss = fused.run(
+            &mut q,
+            &mut tgt,
+            &mut neg,
+            &case.adjust,
+            &case.mask,
+            case.tau,
+            false,
+        );
+        assert!(loss.is_finite(), "loss with a zero row must be finite");
+        assert!(fused.d_q.iter().all(|g| g.is_finite()));
+        assert!(fused.d_tgt.iter().all(|g| g.is_finite()));
+        assert!(fused.d_neg.iter().all(|g| g.is_finite()));
+    }
+
+    /// f64 LSTM reference of `J = Σ u ∘ v` for finite differences.
+    #[allow(clippy::too_many_arguments)]
+    fn ref_lm_j(
+        x: &[f64],
+        b: usize,
+        l: usize,
+        d: usize,
+        h: usize,
+        wx: &[f64],
+        wh: &[f64],
+        bias: &[f64],
+        proj: &[f64],
+        v: &[f64],
+    ) -> f64 {
+        let fh = 4 * h;
+        let sg = |x: f64| 1.0 / (1.0 + (-x).exp());
+        let mut total = 0.0;
+        for r in 0..b {
+            let mut hv = vec![0.0f64; h];
+            let mut cv = vec![0.0f64; h];
+            for t in 0..l {
+                let xt = &x[(r * l + t) * d..(r * l + t + 1) * d];
+                let mut g = vec![0.0f64; fh];
+                for (j, gj) in g.iter_mut().enumerate() {
+                    let mut s = bias[j];
+                    for k in 0..d {
+                        s += xt[k] * wx[k * fh + j];
+                    }
+                    for k in 0..h {
+                        s += hv[k] * wh[k * fh + j];
+                    }
+                    *gj = s;
+                }
+                for k in 0..h {
+                    let i = sg(g[k]);
+                    let f = sg(g[h + k]);
+                    let gg = g[2 * h + k].tanh();
+                    let o = sg(g[3 * h + k]);
+                    cv[k] = f * cv[k] + i * gg;
+                    hv[k] = o * cv[k].tanh();
+                }
+            }
+            for j in 0..d {
+                let mut s = 0.0;
+                for k in 0..h {
+                    s += hv[k] * proj[k * d + j];
+                }
+                total += s * v[r * d + j];
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn lm_step_matches_composed_and_f64_fd() {
+        let (b, l, d, h) = (5, 3, 6, 4);
+        let fh = 4 * h;
+        let mut rng = Rng::seeded(37);
+        let xsrc = randv(&mut rng, b * l * d, 0.7);
+        let wx = randv(&mut rng, d * fh, 0.4);
+        let wh = randv(&mut rng, h * fh, 0.4);
+        let bias = randv(&mut rng, fh, 0.2);
+        let proj = randv(&mut rng, h * d, 0.4);
+        let du = randv(&mut rng, b * d, 0.8);
+        let ids: Vec<u32> = (0..(b * l) as u32).collect();
+
+        let mut lm = LmStep::new(3);
+        lm.begin(b, l, d, h);
+        lm.load_rows(&xsrc, &ids);
+        lm.forward(&wx, &wh, &bias, &proj);
+        lm.backward(&wx, &wh, &proj, &du);
+
+        let st = composed::lm_forward(&xsrc, b, l, d, h, &wx, &wh, &bias, &proj);
+        for i in 0..b * d {
+            close(
+                lm.u.data()[i],
+                st.u.data()[i] as f64,
+                1e-4,
+                1e-5,
+                &format!("u[{i}]"),
+            );
+        }
+        let gr = composed::lm_backward(
+            &st, &xsrc, b, l, d, h, &wx, &wh, &proj, &du,
+        );
+        for r in 0..b {
+            for t in 0..l {
+                let a = lm.d_x_row(r, t);
+                let w = &gr.d_x[(r * l + t) * d..(r * l + t + 1) * d];
+                for k in 0..d {
+                    close(
+                        a[k],
+                        w[k] as f64,
+                        1e-4,
+                        1e-5,
+                        &format!("d_x[{r},{t},{k}]"),
+                    );
+                }
+            }
+        }
+        for (name, got, want) in [
+            ("dwx", &lm.dwx, &gr.dwx),
+            ("dwh", &lm.dwh, &gr.dwh),
+            ("db", &lm.db, &gr.db),
+            ("dproj", &lm.dproj, &gr.dproj),
+        ] {
+            assert_eq!(got.len(), want.len());
+            for i in 0..got.len() {
+                close(
+                    got[i],
+                    want[i] as f64,
+                    1e-4,
+                    1e-5,
+                    &format!("{name}[{i}]"),
+                );
+            }
+        }
+
+        // f64 finite differences on J = Σ u∘v (v = du): validates the
+        // BPTT calculus independently of both implementations.
+        let x64 = to64(&xsrc);
+        let wx64 = to64(&wx);
+        let wh64 = to64(&wh);
+        let b64 = to64(&bias);
+        let p64 = to64(&proj);
+        let v64 = to64(&du);
+        let jf = |x: &[f64], wx: &[f64], wh: &[f64], bb: &[f64], pp: &[f64]| {
+            ref_lm_j(x, b, l, d, h, wx, wh, bb, pp, &v64)
+        };
+        let eps = 1e-6;
+        let fd_check = |vsrc: &[f64],
+                            idx: usize,
+                            which: usize,
+                            got: f32,
+                            name: &str| {
+            let mut v = vsrc.to_vec();
+            let save = v[idx];
+            v[idx] = save + eps;
+            let lp = match which {
+                0 => jf(&v, &wx64, &wh64, &b64, &p64),
+                1 => jf(&x64, &v, &wh64, &b64, &p64),
+                2 => jf(&x64, &wx64, &v, &b64, &p64),
+                3 => jf(&x64, &wx64, &wh64, &v, &p64),
+                _ => jf(&x64, &wx64, &wh64, &b64, &v),
+            };
+            v[idx] = save - eps;
+            let lm_ = match which {
+                0 => jf(&v, &wx64, &wh64, &b64, &p64),
+                1 => jf(&x64, &v, &wh64, &b64, &p64),
+                2 => jf(&x64, &wx64, &v, &b64, &p64),
+                3 => jf(&x64, &wx64, &wh64, &v, &p64),
+                _ => jf(&x64, &wx64, &wh64, &b64, &v),
+            };
+            let g = (lp - lm_) / (2.0 * eps);
+            close(got, g, 1e-4, 1e-5, name);
+        };
+        for i in (0..b * l * d).step_by(13) {
+            let (rt, k) = (i / d, i % d);
+            let got = lm.d_x_row(rt / l, rt % l)[k];
+            fd_check(&x64, i, 0, got, &format!("fd d_x[{i}]"));
+        }
+        for i in (0..d * fh).step_by(11) {
+            fd_check(&wx64, i, 1, lm.dwx[i], &format!("fd dwx[{i}]"));
+        }
+        for i in (0..h * fh).step_by(7) {
+            fd_check(&wh64, i, 2, lm.dwh[i], &format!("fd dwh[{i}]"));
+        }
+        for i in 0..fh {
+            fd_check(&b64, i, 3, lm.db[i], &format!("fd db[{i}]"));
+        }
+        for i in (0..h * d).step_by(5) {
+            fd_check(&p64, i, 4, lm.dproj[i], &format!("fd dproj[{i}]"));
+        }
+    }
+
+    /// f64 reference of the full-softmax mean loss (ε-clamped
+    /// normalization optional), for oracle + FD checks.
+    fn ref_full_loss(
+        q: &[f64],
+        cls: &[f64],
+        targets: &[u32],
+        b: usize,
+        n: usize,
+        d: usize,
+        tau: f64,
+        normalize: bool,
+    ) -> f64 {
+        let eps = NORM_EPS as f64;
+        let nrm = |x: &[f64]| -> Vec<f64> {
+            if !normalize {
+                return x.to_vec();
+            }
+            let nn = x.iter().map(|v| v * v).sum::<f64>().sqrt().max(eps);
+            x.iter().map(|v| v / nn).collect()
+        };
+        let ch: Vec<Vec<f64>> =
+            (0..n).map(|j| nrm(&cls[j * d..(j + 1) * d])).collect();
+        let mut total = 0.0;
+        for r in 0..b {
+            let qh = nrm(&q[r * d..(r + 1) * d]);
+            let logits: Vec<f64> = (0..n)
+                .map(|j| {
+                    tau * qh.iter().zip(&ch[j]).map(|(a, c)| a * c).sum::<f64>()
+                })
+                .collect();
+            total += full_softmax_loss(&logits, targets[r] as usize).0;
+        }
+        total / b as f64
+    }
+
+    #[test]
+    fn full_loss_matches_oracle_and_fd() {
+        let (b, n, d) = (3, 9, 5);
+        let tau = 0.7f32;
+        let mut rng = Rng::seeded(41);
+        let cls = randv(&mut rng, n * d, 0.8);
+        let qsrc = randv(&mut rng, b * d, 0.8);
+        let targets: Vec<u32> =
+            (0..b).map(|_| rng.index(n) as u32).collect();
+
+        let mut full = FullLoss::new(4);
+        full.prepare_classes(&cls, n, d, true);
+        let mut q = Matrix::from_vec(b, d, qsrc.clone());
+        let loss = full.forward(&mut q, &targets, tau);
+        let q64 = to64(&qsrc);
+        let c64 = to64(&cls);
+        let want =
+            ref_full_loss(&q64, &c64, &targets, b, n, d, tau as f64, true);
+        close(loss, want, 1e-5, 1e-7, "full loss");
+
+        full.backward(&q, &targets, tau);
+        let eps = 1e-6;
+        let mut qm = q64.clone();
+        for i in 0..b * d {
+            let save = qm[i];
+            qm[i] = save + eps;
+            let lp =
+                ref_full_loss(&qm, &c64, &targets, b, n, d, tau as f64, true);
+            qm[i] = save - eps;
+            let lm =
+                ref_full_loss(&qm, &c64, &targets, b, n, d, tau as f64, true);
+            qm[i] = save;
+            let g = (lp - lm) / (2.0 * eps);
+            close(full.d_q[i], g, 1e-4, 5e-6, &format!("full d_q[{i}]"));
+        }
+        let mut cm = c64.clone();
+        for i in 0..n * d {
+            let save = cm[i];
+            cm[i] = save + eps;
+            let lp =
+                ref_full_loss(&q64, &cm, &targets, b, n, d, tau as f64, true);
+            cm[i] = save - eps;
+            let lm =
+                ref_full_loss(&q64, &cm, &targets, b, n, d, tau as f64, true);
+            cm[i] = save;
+            let g = (lp - lm) / (2.0 * eps);
+            close(full.d_cls[i], g, 1e-4, 5e-6, &format!("full d_cls[{i}]"));
+        }
+
+        // Unnormalized ablation variant.
+        let mut full_u = FullLoss::new(4);
+        full_u.prepare_classes(&cls, n, d, false);
+        let mut q2 = Matrix::from_vec(b, d, qsrc.clone());
+        let loss_u = full_u.forward(&mut q2, &targets, tau);
+        let want_u =
+            ref_full_loss(&q64, &c64, &targets, b, n, d, tau as f64, false);
+        close(loss_u, want_u, 1e-5, 1e-7, "unnorm full loss");
+    }
+
+    #[test]
+    fn full_scores_rank_by_cosine() {
+        let (b, n, d) = (2, 6, 4);
+        let mut rng = Rng::seeded(43);
+        let cls = randv(&mut rng, n * d, 0.8);
+        let qsrc = randv(&mut rng, b * d, 0.8);
+        let mut full = FullLoss::new(3);
+        full.prepare_classes(&cls, n, d, true);
+        let mut q = Matrix::from_vec(b, d, qsrc.clone());
+        let mut scores = vec![0.0f32; b * n];
+        full.scores_into(&mut q, &mut scores);
+        let eps = NORM_EPS as f64;
+        let nrm = |x: &[f64]| -> Vec<f64> {
+            let nn = x.iter().map(|v| v * v).sum::<f64>().sqrt().max(eps);
+            x.iter().map(|v| v / nn).collect()
+        };
+        let q64 = to64(&qsrc);
+        let c64 = to64(&cls);
+        for r in 0..b {
+            let qh = nrm(&q64[r * d..(r + 1) * d]);
+            for j in 0..n {
+                let ch = nrm(&c64[j * d..(j + 1) * d]);
+                let want: f64 =
+                    qh.iter().zip(&ch).map(|(a, c)| a * c).sum();
+                close(
+                    scores[r * n + j],
+                    want,
+                    1e-4,
+                    1e-5,
+                    &format!("score[{r},{j}]"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn xc_step_forward_and_feat_grad() {
+        let d = 3;
+        let w = vec![
+            1.0f32, 2.0, 3.0, // row 0
+            -1.0, 0.5, 0.0, // row 1
+            0.0, 1.0, -2.0, // row 2
+            4.0, 0.0, 1.0, // row 3
+        ];
+        let feats = vec![0u32, 2, 1, 3];
+        let vals = vec![0.5f32, 2.0, 1.0, -1.0];
+        let mut xc = XcStep::new(2);
+        xc.forward(&w, d, &feats, &vals, 2, 2);
+        // row 0: 0.5·w0 + 2·w2 ; row 1: 1·w1 − 1·w3
+        let want0 = [0.5, 3.0, -2.5];
+        let want1 = [-5.0, 0.5, -1.0];
+        for k in 0..d {
+            close(xc.u.get(0, k), want0[k], 1e-6, 1e-6, "xc u0");
+            close(xc.u.get(1, k), want1[k], 1e-6, 1e-6, "xc u1");
+        }
+        let du = vec![1.0f32, -1.0, 2.0, 0.5, 0.5, 0.0];
+        xc.feat_grad(&du, &vals, 2, 2, d);
+        // d_feat[(r, j)] = vals[r, j] · du_r
+        let want = [
+            [0.5, -0.5, 1.0],
+            [2.0, -2.0, 4.0],
+            [0.5, 0.5, 0.0],
+            [-0.5, -0.5, -0.0],
+        ];
+        for (slot, wrow) in want.iter().enumerate() {
+            for k in 0..d {
+                close(
+                    xc.d_feat[slot * d + k],
+                    wrow[k],
+                    1e-6,
+                    1e-6,
+                    "xc d_feat",
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_growth_counters_are_flat_after_warmup() {
+        let case = make_case(47, 6, 8, 10);
+        let mut fused = FusedLoss::new(3);
+        let run = |f: &mut FusedLoss| {
+            let mut q = case.q.clone();
+            let mut tgt = case.tgt.clone();
+            let mut neg = case.neg.clone();
+            f.run(
+                &mut q,
+                &mut tgt,
+                &mut neg,
+                &case.adjust,
+                &case.mask,
+                case.tau,
+                false,
+            );
+        };
+        run(&mut fused);
+        let warm = fused.growths();
+        for _ in 0..3 {
+            run(&mut fused);
+        }
+        assert_eq!(fused.growths(), warm, "FusedLoss must not regrow");
+
+        let (b, l, d, h) = (4, 3, 5, 4);
+        let mut rng = Rng::seeded(49);
+        let xsrc = randv(&mut rng, b * l * d, 0.5);
+        let wx = randv(&mut rng, d * 4 * h, 0.3);
+        let wh = randv(&mut rng, h * 4 * h, 0.3);
+        let bias = randv(&mut rng, 4 * h, 0.1);
+        let proj = randv(&mut rng, h * d, 0.3);
+        let du = randv(&mut rng, b * d, 0.5);
+        let ids: Vec<u32> = (0..(b * l) as u32).collect();
+        let mut lm = LmStep::new(3);
+        let run_lm = |s: &mut LmStep| {
+            s.begin(b, l, d, h);
+            s.load_rows(&xsrc, &ids);
+            s.forward(&wx, &wh, &bias, &proj);
+            s.backward(&wx, &wh, &proj, &du);
+        };
+        run_lm(&mut lm);
+        let warm = lm.growths();
+        for _ in 0..3 {
+            run_lm(&mut lm);
+        }
+        assert_eq!(lm.growths(), warm, "LmStep must not regrow");
+
+        let (n, bq) = (7, 3);
+        let cls = randv(&mut rng, n * d, 0.5);
+        let qsrc = randv(&mut rng, bq * d, 0.5);
+        let targets: Vec<u32> = (0..bq).map(|_| rng.index(n) as u32).collect();
+        let mut full = FullLoss::new(3);
+        let run_full = |f: &mut FullLoss| {
+            f.prepare_classes(&cls, n, d, true);
+            let mut q = Matrix::from_vec(bq, d, qsrc.clone());
+            f.forward(&mut q, &targets, 1.0);
+            f.backward(&q, &targets, 1.0);
+        };
+        run_full(&mut full);
+        let warm = full.growths();
+        for _ in 0..3 {
+            run_full(&mut full);
+        }
+        assert_eq!(full.growths(), warm, "FullLoss must not regrow");
+    }
+
+    #[test]
+    fn chunk_ranges_partition_densely() {
+        for &(n, w) in
+            &[(1usize, 1usize), (5, 2), (10, 4), (10, 7), (3, 16), (64, 5)]
+        {
+            let r = chunk_ranges(n, w);
+            assert!(r.len() <= w.min(n));
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r.last().unwrap().1, n);
+            for i in 1..r.len() {
+                assert_eq!(r[i].0, r[i - 1].1, "ranges must be dense");
+                assert!(r[i].0 < r[i].1, "ranges must be non-empty");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_rows_into_reuses_capacity() {
+        let table = vec![0.0f32, 1.0, 10.0, 11.0, 20.0, 21.0];
+        let mut out = Vec::new();
+        let grew = gather_rows_into(&table, 2, &[2, 0], &mut out);
+        assert!(grew);
+        assert_eq!(out, vec![20.0, 21.0, 0.0, 1.0]);
+        let grew = gather_rows_into(&table, 2, &[1, 2], &mut out);
+        assert!(!grew, "same-size regather must not grow");
+        assert_eq!(out, vec![10.0, 11.0, 20.0, 21.0]);
+    }
+}

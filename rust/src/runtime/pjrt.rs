@@ -1,0 +1,145 @@
+//! The PJRT execution backend (compiled only under the `pjrt` cargo
+//! feature). Loads HLO-text artifacts, compiles them lazily through a
+//! PJRT CPU client, and runs them with manifest shape/dtype validation.
+//!
+//! Interchange is **HLO text** — the image's xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §1).
+//!
+//! The `xla` crate (PJRT CPU bindings) is deliberately not an in-tree
+//! dependency: building with `--features pjrt` requires patching one in,
+//! which keeps the default tier-1 build free of the phantom dependency.
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::HostTensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        HostTensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        HostTensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+    };
+    Ok(lit)
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+        }
+        xla::ElementType::S32 => {
+            Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+        }
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+/// A compiled entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl Executable {
+    /// Execute with shape/dtype validation against the manifest.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, m)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if t.shape() != m.shape.as_slice() || t.dtype() != m.dtype {
+                bail!(
+                    "{}: input {i} ('{}') expects {}{:?}, got {}{:?}",
+                    self.meta.name,
+                    m.name,
+                    m.dtype,
+                    m.shape,
+                    t.dtype(),
+                    t.shape()
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out_lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = out_lit.to_tuple()?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for p in &parts {
+            outs.push(from_literal(p)?);
+        }
+        if outs.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: manifest declares {} outputs, executable returned {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// One PJRT CPU client plus the lazy executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl PjrtRuntime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling + caching on first use) an executable by name.
+    pub fn get(
+        &self,
+        dir: &Path,
+        manifest: &Manifest,
+        name: &str,
+    ) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = manifest
+            .get(name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown artifact '{name}'; manifest has: {}",
+                    manifest.names().join(", ")
+                )
+            })?
+            .clone();
+        let path = dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let executable = Rc::new(Executable { exe, meta });
+        self.cache.borrow_mut().insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+}

@@ -1,212 +1,297 @@
-//! Integration tests over the PJRT runtime + AOT artifacts.
+//! Integration tests over the runtime backend seam.
 //!
-//! These need `make artifacts` to have produced at least the `quickstart`
-//! and `rff_map` configs. When artifacts are missing the tests skip with a
-//! message (so `cargo test` stays usable before the first build), but CI
-//! (`make test`) always builds artifacts first.
+//! The default build exercises the **native** backend: no artifacts,
+//! no `pjrt` feature — `Runtime::native()` plus a config is a complete
+//! training stack. The PJRT artifact tests (HLO executables produced by
+//! `make artifacts`) live in the feature-gated module at the bottom and
+//! only compile with `--features pjrt`; there they still skip politely
+//! when the artifacts are missing.
 
-
-use rfsoftmax::linalg::Matrix;
-use rfsoftmax::rng::Rng;
-use rfsoftmax::runtime::{HostTensor, Runtime};
-
-fn runtime_or_skip() -> Option<Runtime> {
-    let dir = Runtime::default_dir();
-    match Runtime::load(&dir) {
-        Ok(rt) => Some(rt),
-        Err(e) => {
-            eprintln!("SKIP (no artifacts): {e}");
-            None
-        }
-    }
-}
+use rfsoftmax::config::Config;
+use rfsoftmax::coordinator::TrainerBuilder;
+use rfsoftmax::runtime::Runtime;
 
 #[test]
-fn rff_map_artifact_matches_rust_featmap() {
-    let Some(rt) = runtime_or_skip() else { return };
-    if !rt.has("rff_map") {
-        eprintln!("SKIP: rff_map artifact not built");
-        return;
-    }
-    let exe = rt.get("rff_map").expect("compile rff_map");
-    let rows = exe.meta.inputs[0].shape[0];
-    let d = exe.meta.inputs[0].shape[1];
-    let num_freqs = exe.meta.inputs[1].shape[0];
-
-    // Build a frequency matrix w with ν = 1 and the same inputs on both
-    // sides. The Rust RffMap draws its own w, so instead we compare
-    // against the *reference math*: φ = [cos(uWᵀ)|sin(uWᵀ)]/√D.
-    let mut rng = Rng::seeded(2024);
-    let u = Matrix::randn(&mut rng, rows, d);
-    let w = Matrix::randn(&mut rng, num_freqs, d);
-    let outs = exe
-        .run(&[
-            HostTensor::f32(&[rows, d], u.data().to_vec()),
-            HostTensor::f32(&[num_freqs, d], w.data().to_vec()),
-        ])
-        .expect("execute rff_map");
-    let phi = outs[0].as_f32();
-    assert_eq!(outs[0].shape(), &[rows, num_freqs * 2]);
-
-    let inv_sqrt = 1.0 / (num_freqs as f32).sqrt();
-    let mut max_err = 0.0f32;
-    for i in 0..rows {
-        for j in 0..num_freqs {
-            let proj = rfsoftmax::linalg::dot(u.row(i), w.row(j));
-            let c = proj.cos() * inv_sqrt;
-            let s = proj.sin() * inv_sqrt;
-            max_err = max_err.max((phi[i * 2 * num_freqs + j] - c).abs());
-            max_err =
-                max_err.max((phi[i * 2 * num_freqs + num_freqs + j] - s).abs());
-        }
-    }
-    assert!(max_err < 1e-4, "pallas vs reference max err {max_err}");
-}
-
-#[test]
-fn sampled_loss_artifact_matches_rust_oracle() {
-    let Some(rt) = runtime_or_skip() else { return };
-    if !rt.has("quickstart_train_sampled") {
-        eprintln!("SKIP: quickstart artifacts not built");
-        return;
-    }
-    let exe = rt.get("quickstart_train_sampled").expect("compile");
-    let meta = &exe.meta;
-    let b = meta.meta_usize("batch").unwrap();
-    let l = meta.meta_usize("seq_len").unwrap();
-    let d = meta.meta_usize("d").unwrap();
-    let h = meta.meta_usize("hidden").unwrap();
-    let m = meta.meta_usize("m").unwrap();
-    let tau = meta.meta_f64("tau").unwrap() as f32;
-
-    let mut rng = Rng::seeded(7);
-    let ctx = Matrix::randn_scaled(&mut rng, b * l, d, 0.1);
-    let wx = Matrix::randn_scaled(&mut rng, d, 4 * h, 0.05);
-    let wh = Matrix::randn_scaled(&mut rng, h, 4 * h, 0.05);
-    let bias = vec![0.0f32; 4 * h];
-    let proj = Matrix::randn_scaled(&mut rng, h, d, 0.1);
-    let tgt = Matrix::randn(&mut rng, b, d).l2_normalized_rows();
-    let neg = Matrix::randn(&mut rng, m, d).l2_normalized_rows();
-    let adjust: Vec<f32> = (0..m).map(|_| rng.gaussian_f32() * 0.1).collect();
-    let mask = vec![1.0f32; b * m];
-
-    // 1. Run the full train-step artifact.
-    let outs = exe
-        .run(&[
-            HostTensor::f32(&[b, l, d], ctx.data().to_vec()),
-            HostTensor::f32(&[d, 4 * h], wx.data().to_vec()),
-            HostTensor::f32(&[h, 4 * h], wh.data().to_vec()),
-            HostTensor::f32(&[4 * h], bias.clone()),
-            HostTensor::f32(&[h, d], proj.data().to_vec()),
-            HostTensor::f32(&[b, d], tgt.data().to_vec()),
-            HostTensor::f32(&[m, d], neg.data().to_vec()),
-            HostTensor::f32(&[m], adjust.clone()),
-            HostTensor::f32(&[b, m], mask),
-        ])
-        .expect("execute train_sampled");
-    let loss = outs[0].scalar() as f64;
-    assert!(loss.is_finite() && loss > 0.0, "loss = {loss}");
-    // Gradient arity: loss + 7 gradients.
-    assert_eq!(outs.len(), 8);
-
-    // 2. Cross-check the loss against the Rust oracle via the encoder
-    //    artifact (h from PJRT, loss math in pure Rust).
-    let enc = rt.get("quickstart_encode").expect("compile encode");
-    let enc_out = enc
-        .run(&[
-            HostTensor::f32(&[b, l, d], ctx.data().to_vec()),
-            HostTensor::f32(&[d, 4 * h], wx.data().to_vec()),
-            HostTensor::f32(&[h, 4 * h], wh.data().to_vec()),
-            HostTensor::f32(&[4 * h], bias),
-            HostTensor::f32(&[h, d], proj.data().to_vec()),
-        ])
-        .expect("execute encode");
-    let hmat = enc_out[0].as_f32();
-    let mut acc = 0.0f64;
-    for i in 0..b {
-        let hi = &hmat[i * d..(i + 1) * d];
-        let o_t = (tau * rfsoftmax::linalg::dot(hi, tgt.row(i))) as f64;
-        let negs: Vec<f64> = (0..m)
-            .map(|j| (tau * rfsoftmax::linalg::dot(hi, neg.row(j))) as f64)
-            .collect();
-        // q such that log(m·q) = adjust  ⇔  q = exp(adjust)/m.
-        let q: Vec<f64> = adjust
-            .iter()
-            .map(|&a| (a as f64).exp() / m as f64)
-            .collect();
-        let s = rfsoftmax::softmax::sampled_softmax_loss(o_t, &negs, &q);
-        acc += s.loss;
-    }
-    let oracle = acc / b as f64;
-    assert!(
-        (loss - oracle).abs() < 1e-3 * oracle.abs().max(1.0),
-        "artifact loss {loss} vs rust oracle {oracle}"
-    );
-}
-
-#[test]
-fn manifest_lists_expected_quickstart_entries() {
-    let Some(rt) = runtime_or_skip() else { return };
-    for entry in [
-        "quickstart_encode",
-        "quickstart_train_sampled",
-        "quickstart_train_full",
-        "quickstart_eval",
+fn native_backend_needs_no_artifacts() {
+    let rt = Runtime::native();
+    assert!(rt.is_native());
+    assert!(rt.artifact_dir().as_os_str().is_empty());
+    assert!(!rt.has("quickstart_train_sampled"));
+    // A trainer must build straight from the config — no manifest.
+    let mut cfg = Config::default();
+    for (k, v) in [
+        ("model.num_classes", "200"),
+        ("model.embed_dim", "16"),
+        ("model.hidden_dim", "16"),
+        ("model.seq_len", "4"),
+        ("sampler.kind", "uniform"),
+        ("sampler.num_negatives", "10"),
+        ("train.batch_size", "8"),
+        ("train.steps", "2"),
+        ("train.eval_every", "2"),
+        ("train.eval_batches", "2"),
+        ("data.train_size", "2000"),
+        ("data.valid_size", "500"),
     ] {
-        assert!(rt.has(entry), "missing manifest entry {entry}");
+        cfg.set(k, v).unwrap();
     }
+    let mut t = TrainerBuilder::new(&rt, "seam", cfg).build().unwrap();
+    let report = t.run().unwrap();
+    assert_eq!(report.steps_run, 2);
 }
 
 #[test]
-fn eval_artifact_loss_close_to_log_n_at_init() {
-    // With random h and random class embeddings, the full softmax loss
-    // should be near ln(n) (uniform-ish), a sanity anchor for perplexity.
-    let Some(rt) = runtime_or_skip() else { return };
-    if !rt.has("quickstart_eval") {
-        return;
+fn native_eval_loss_close_to_log_n_at_init() {
+    // With near-random parameters the full-softmax eval loss should sit
+    // near ln(n) (uniform-ish predictions) — the same sanity anchor the
+    // pjrt eval artifact is held to.
+    let rt = Runtime::native();
+    let mut cfg = Config::default();
+    for (k, v) in [
+        ("model.num_classes", "1000"),
+        ("model.embed_dim", "32"),
+        ("model.hidden_dim", "32"),
+        ("model.seq_len", "8"),
+        ("sampler.kind", "uniform"),
+        ("sampler.num_negatives", "20"),
+        ("train.batch_size", "16"),
+        ("train.steps", "1"),
+        ("train.eval_every", "1"),
+        ("train.eval_batches", "4"),
+        ("train.lr", "0.01"),
+        ("data.train_size", "5000"),
+        ("data.valid_size", "1000"),
+    ] {
+        cfg.set(k, v).unwrap();
     }
-    let exe = rt.get("quickstart_eval").unwrap();
-    let meta = &exe.meta;
-    let (b, l, d, h, n) = (
-        meta.meta_usize("batch").unwrap(),
-        meta.meta_usize("seq_len").unwrap(),
-        meta.meta_usize("d").unwrap(),
-        meta.meta_usize("hidden").unwrap(),
-        meta.meta_usize("n").unwrap(),
-    );
-    let mut rng = Rng::seeded(8);
-    let outs = exe
-        .run(&[
-            HostTensor::f32(
-                &[b, l, d],
-                Matrix::randn_scaled(&mut rng, b * l, d, 0.1).into_vec(),
-            ),
-            HostTensor::f32(
-                &[d, 4 * h],
-                Matrix::randn_scaled(&mut rng, d, 4 * h, 0.05).into_vec(),
-            ),
-            HostTensor::f32(
-                &[h, 4 * h],
-                Matrix::randn_scaled(&mut rng, h, 4 * h, 0.05).into_vec(),
-            ),
-            HostTensor::f32(&[4 * h], vec![0.0; 4 * h]),
-            HostTensor::f32(
-                &[h, d],
-                Matrix::randn_scaled(&mut rng, h, d, 0.1).into_vec(),
-            ),
-            HostTensor::f32(
-                &[n, d],
-                Matrix::randn_scaled(&mut rng, n, d, 0.1).into_vec(),
-            ),
-            HostTensor::i32(&[b], (0..b as i32).collect()),
-        ])
-        .expect("execute eval");
-    let loss = outs[0].scalar() as f64;
-    let logn = (n as f64).ln();
-    // With τ ≈ 11 the random logits have std ≈ τ/√d ≈ 2, inflating the
+    let mut t = TrainerBuilder::new(&rt, "seam", cfg).build().unwrap();
+    let report = t.run().unwrap();
+    let loss = report.history.first().unwrap().eval_loss;
+    let logn = (1000f64).ln();
+    // With τ ≈ 11 the random logits have std ≈ 2, inflating the
     // logsumexp by ~σ²/2 above ln(n); accept [ln n − 1, ln n + 4].
     assert!(
         loss > logn - 1.0 && loss < logn + 4.0,
-        "init loss {loss} implausible vs ln(n) = {logn}"
+        "init eval loss {loss} implausible vs ln(n) = {logn}"
     );
+}
+
+/// PJRT artifact tests: only meaningful in a `--features pjrt` build,
+/// and within one only when `make artifacts` has produced at least the
+/// `quickstart` and `rff_map` configs (they skip with a message
+/// otherwise so `cargo test` stays usable before the first build).
+#[cfg(feature = "pjrt")]
+mod pjrt_artifacts {
+    use rfsoftmax::linalg::Matrix;
+    use rfsoftmax::rng::Rng;
+    use rfsoftmax::runtime::{HostTensor, Runtime};
+
+    fn runtime_or_skip() -> Option<Runtime> {
+        let dir = Runtime::default_dir();
+        match Runtime::load(&dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("SKIP (no artifacts): {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn rff_map_artifact_matches_rust_featmap() {
+        let Some(rt) = runtime_or_skip() else { return };
+        if !rt.has("rff_map") {
+            eprintln!("SKIP: rff_map artifact not built");
+            return;
+        }
+        let exe = rt.get("rff_map").expect("compile rff_map");
+        let rows = exe.meta.inputs[0].shape[0];
+        let d = exe.meta.inputs[0].shape[1];
+        let num_freqs = exe.meta.inputs[1].shape[0];
+
+        // Build a frequency matrix w with ν = 1 and the same inputs on
+        // both sides. The Rust RffMap draws its own w, so instead we
+        // compare against the *reference math*:
+        // φ = [cos(uWᵀ)|sin(uWᵀ)]/√D.
+        let mut rng = Rng::seeded(2024);
+        let u = Matrix::randn(&mut rng, rows, d);
+        let w = Matrix::randn(&mut rng, num_freqs, d);
+        let outs = exe
+            .run(&[
+                HostTensor::f32(&[rows, d], u.data().to_vec()),
+                HostTensor::f32(&[num_freqs, d], w.data().to_vec()),
+            ])
+            .expect("execute rff_map");
+        let phi = outs[0].as_f32();
+        assert_eq!(outs[0].shape(), &[rows, num_freqs * 2]);
+
+        let inv_sqrt = 1.0 / (num_freqs as f32).sqrt();
+        let mut max_err = 0.0f32;
+        for i in 0..rows {
+            for j in 0..num_freqs {
+                let proj = rfsoftmax::linalg::dot(u.row(i), w.row(j));
+                let c = proj.cos() * inv_sqrt;
+                let s = proj.sin() * inv_sqrt;
+                max_err =
+                    max_err.max((phi[i * 2 * num_freqs + j] - c).abs());
+                max_err = max_err
+                    .max((phi[i * 2 * num_freqs + num_freqs + j] - s).abs());
+            }
+        }
+        assert!(max_err < 1e-4, "pallas vs reference max err {max_err}");
+    }
+
+    #[test]
+    fn sampled_loss_artifact_matches_rust_oracle() {
+        let Some(rt) = runtime_or_skip() else { return };
+        if !rt.has("quickstart_train_sampled") {
+            eprintln!("SKIP: quickstart artifacts not built");
+            return;
+        }
+        let exe = rt.get("quickstart_train_sampled").expect("compile");
+        let meta = &exe.meta;
+        let b = meta.meta_usize("batch").unwrap();
+        let l = meta.meta_usize("seq_len").unwrap();
+        let d = meta.meta_usize("d").unwrap();
+        let h = meta.meta_usize("hidden").unwrap();
+        let m = meta.meta_usize("m").unwrap();
+        let tau = meta.meta_f64("tau").unwrap() as f32;
+
+        let mut rng = Rng::seeded(7);
+        let ctx = Matrix::randn_scaled(&mut rng, b * l, d, 0.1);
+        let wx = Matrix::randn_scaled(&mut rng, d, 4 * h, 0.05);
+        let wh = Matrix::randn_scaled(&mut rng, h, 4 * h, 0.05);
+        let bias = vec![0.0f32; 4 * h];
+        let proj = Matrix::randn_scaled(&mut rng, h, d, 0.1);
+        let tgt = Matrix::randn(&mut rng, b, d).l2_normalized_rows();
+        let neg = Matrix::randn(&mut rng, m, d).l2_normalized_rows();
+        let adjust: Vec<f32> =
+            (0..m).map(|_| rng.gaussian_f32() * 0.1).collect();
+        let mask = vec![1.0f32; b * m];
+
+        // 1. Run the full train-step artifact.
+        let outs = exe
+            .run(&[
+                HostTensor::f32(&[b, l, d], ctx.data().to_vec()),
+                HostTensor::f32(&[d, 4 * h], wx.data().to_vec()),
+                HostTensor::f32(&[h, 4 * h], wh.data().to_vec()),
+                HostTensor::f32(&[4 * h], bias.clone()),
+                HostTensor::f32(&[h, d], proj.data().to_vec()),
+                HostTensor::f32(&[b, d], tgt.data().to_vec()),
+                HostTensor::f32(&[m, d], neg.data().to_vec()),
+                HostTensor::f32(&[m], adjust.clone()),
+                HostTensor::f32(&[b, m], mask),
+            ])
+            .expect("execute train_sampled");
+        let loss = outs[0].scalar() as f64;
+        assert!(loss.is_finite() && loss > 0.0, "loss = {loss}");
+        // Gradient arity: loss + 7 gradients.
+        assert_eq!(outs.len(), 8);
+
+        // 2. Cross-check the loss against the Rust oracle via the
+        //    encoder artifact (h from PJRT, loss math in pure Rust).
+        let enc = rt.get("quickstart_encode").expect("compile encode");
+        let enc_out = enc
+            .run(&[
+                HostTensor::f32(&[b, l, d], ctx.data().to_vec()),
+                HostTensor::f32(&[d, 4 * h], wx.data().to_vec()),
+                HostTensor::f32(&[h, 4 * h], wh.data().to_vec()),
+                HostTensor::f32(&[4 * h], bias),
+                HostTensor::f32(&[h, d], proj.data().to_vec()),
+            ])
+            .expect("execute encode");
+        let hmat = enc_out[0].as_f32();
+        let mut acc = 0.0f64;
+        for i in 0..b {
+            let hi = &hmat[i * d..(i + 1) * d];
+            let o_t = (tau * rfsoftmax::linalg::dot(hi, tgt.row(i))) as f64;
+            let negs: Vec<f64> = (0..m)
+                .map(|j| {
+                    (tau * rfsoftmax::linalg::dot(hi, neg.row(j))) as f64
+                })
+                .collect();
+            // q such that log(m·q) = adjust  ⇔  q = exp(adjust)/m.
+            let q: Vec<f64> = adjust
+                .iter()
+                .map(|&a| (a as f64).exp() / m as f64)
+                .collect();
+            let s = rfsoftmax::softmax::sampled_softmax_loss(o_t, &negs, &q);
+            acc += s.loss;
+        }
+        let oracle = acc / b as f64;
+        assert!(
+            (loss - oracle).abs() < 1e-3 * oracle.abs().max(1.0),
+            "artifact loss {loss} vs rust oracle {oracle}"
+        );
+    }
+
+    #[test]
+    fn manifest_lists_expected_quickstart_entries() {
+        let Some(rt) = runtime_or_skip() else { return };
+        for entry in [
+            "quickstart_encode",
+            "quickstart_train_sampled",
+            "quickstart_train_full",
+            "quickstart_eval",
+        ] {
+            assert!(rt.has(entry), "missing manifest entry {entry}");
+        }
+    }
+
+    #[test]
+    fn eval_artifact_loss_close_to_log_n_at_init() {
+        // With random h and random class embeddings, the full softmax
+        // loss should be near ln(n) (uniform-ish), a sanity anchor for
+        // perplexity.
+        let Some(rt) = runtime_or_skip() else { return };
+        if !rt.has("quickstart_eval") {
+            return;
+        }
+        let exe = rt.get("quickstart_eval").unwrap();
+        let meta = &exe.meta;
+        let (b, l, d, h, n) = (
+            meta.meta_usize("batch").unwrap(),
+            meta.meta_usize("seq_len").unwrap(),
+            meta.meta_usize("d").unwrap(),
+            meta.meta_usize("hidden").unwrap(),
+            meta.meta_usize("n").unwrap(),
+        );
+        let mut rng = Rng::seeded(8);
+        let outs = exe
+            .run(&[
+                HostTensor::f32(
+                    &[b, l, d],
+                    Matrix::randn_scaled(&mut rng, b * l, d, 0.1).into_vec(),
+                ),
+                HostTensor::f32(
+                    &[d, 4 * h],
+                    Matrix::randn_scaled(&mut rng, d, 4 * h, 0.05)
+                        .into_vec(),
+                ),
+                HostTensor::f32(
+                    &[h, 4 * h],
+                    Matrix::randn_scaled(&mut rng, h, 4 * h, 0.05)
+                        .into_vec(),
+                ),
+                HostTensor::f32(&[4 * h], vec![0.0; 4 * h]),
+                HostTensor::f32(
+                    &[h, d],
+                    Matrix::randn_scaled(&mut rng, h, d, 0.1).into_vec(),
+                ),
+                HostTensor::f32(
+                    &[n, d],
+                    Matrix::randn_scaled(&mut rng, n, d, 0.1).into_vec(),
+                ),
+                HostTensor::i32(&[b], (0..b as i32).collect()),
+            ])
+            .expect("execute eval");
+        let loss = outs[0].scalar() as f64;
+        let logn = (n as f64).ln();
+        // With τ ≈ 11 the random logits have std ≈ τ/√d ≈ 2, inflating
+        // the logsumexp by ~σ²/2 above ln(n); accept [ln n−1, ln n+4].
+        assert!(
+            loss > logn - 1.0 && loss < logn + 4.0,
+            "init loss {loss} implausible vs ln(n) = {logn}"
+        );
+    }
 }
