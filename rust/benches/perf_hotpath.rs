@@ -8,6 +8,9 @@
 //! * quantized sampler embeddings: draw throughput + memory at
 //!   `none`/`f16`/`i8` storage,
 //! * sampled-softmax loss oracle,
+//! * warm restart: durable-snapshot restore vs cold rebuild + churn
+//!   replay (the ISSUE 10 durability win, gated in CI via
+//!   `bench-check --require-restore-speedup`),
 //! * batch negative-draw path as the coordinator runs it,
 //! * batch-vs-scalar `sample_batch` throughput (emits `BENCH {json}`
 //!   lines so the perf trajectory is machine-readable).
@@ -215,6 +218,99 @@ fn main() {
             ]);
             println!("BENCH {record}");
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Warm restart: durable-snapshot restore vs the cold crash-recovery
+    // path. Cold recovery of a churned sampler means rebuilding from
+    // the seed embeddings and replaying the whole add/retire history —
+    // n feature-map evaluations plus one O(D·log n) tree walk per op.
+    // Warm restore swaps the captured state into a one-row skeleton
+    // wholesale, O(state). `restore_speedup` compares exactly those two
+    // (the serving stack's `apply_restore` path, state already fetched
+    // and decoded — replica bootstrap streams and decodes the bytes
+    // while the donor keeps serving); the one-time codec decode cost
+    // (checksum + parse) is measured alongside as `decode_ms` so the
+    // full from-bytes wall time is `decode_ms + restore_ms`. CI gates
+    // the speedup via `bench-check --require-restore-speedup`.
+    // ------------------------------------------------------------------
+    {
+        let (wn, wd, wnf, wshards) =
+            if smoke { (2_000, 64, 128, 4) } else { (20_000, 64, 128, 8) };
+        let batch = 8usize;
+        let rounds = wn / batch;
+        println!(
+            "\n# warm restart: snapshot restore vs cold rebuild + churn \
+             replay (n={wn}, d={wd}, D={wnf}, {} replayed ops)",
+            2 * rounds
+        );
+        let mut rng = Rng::seeded(16);
+        let classes = Matrix::randn(&mut rng, wn, wd).l2_normalized_rows();
+        // Churn history: each round grows `batch` fresh classes and
+        // retires `batch` seed classes, pre-generated so every cold
+        // replay reproduces the same final universe the snapshot holds
+        // (live count stays n; the slot table doubles with holes).
+        let adds: Vec<Matrix> = (0..rounds)
+            .map(|_| Matrix::randn(&mut rng, batch, wd).l2_normalized_rows())
+            .collect();
+        let retires: Vec<Vec<u32>> = (0..rounds)
+            .map(|r| (0..batch).map(|j| (r * batch + j) as u32).collect())
+            .collect();
+        let fresh_map = || RffMap::new(wd, wnf, 4.0, &mut Rng::seeded(17));
+        let rebuild = || {
+            let mut s = rfsoftmax::sampler::ShardedKernelSampler::with_map(
+                &classes,
+                fresh_map(),
+                wshards,
+                "rff-sharded",
+            );
+            for (a, r) in adds.iter().zip(&retires) {
+                s.add_classes(a).expect("replay add");
+                s.retire_classes(r).expect("replay retire");
+            }
+            s
+        };
+        let snap = rfsoftmax::snapshot::Snapshot {
+            epoch: rounds as u64,
+            state: rebuild().snapshot_state().expect("sharded snapshots"),
+        };
+        let bytes = rfsoftmax::snapshot::encode(&snap);
+        let skeleton_row = Matrix::zeros(1, wd);
+        let s_cold = b.run("cold_rebuild + replay", || {
+            black_box(rebuild().live_classes())
+        });
+        let s_restore = b.run("warm_restore (skeleton + state swap)", || {
+            let mut skel = rfsoftmax::sampler::ShardedKernelSampler::with_map(
+                &skeleton_row,
+                fresh_map(),
+                wshards,
+                "rff-sharded",
+            );
+            skel.restore_state(&snap.state).expect("restore");
+            black_box(skel.live_classes())
+        });
+        let s_decode = b.run("snapshot_decode (checksum + parse)", || {
+            black_box(rfsoftmax::snapshot::decode(&bytes).expect("decode").epoch)
+        });
+        println!("{}", s_cold.report());
+        println!("{}", s_restore.report());
+        println!("{}", s_decode.report());
+        let record = Json::obj(vec![
+            ("bench", Json::from("warm_restart")),
+            ("n", Json::from(wn)),
+            ("d", Json::from(wd)),
+            ("shards", Json::from(wshards)),
+            ("replayed_ops", Json::from(2 * rounds)),
+            ("snapshot_bytes", Json::from(bytes.len())),
+            ("cold_ms", Json::from(s_cold.mean() * 1e3)),
+            ("restore_ms", Json::from(s_restore.mean() * 1e3)),
+            ("decode_ms", Json::from(s_decode.mean() * 1e3)),
+            ("restore_per_sec", Json::from(1.0 / s_restore.mean())),
+            ("restore_speedup", Json::from(s_cold.mean() / s_restore.mean())),
+            ("simd", Json::from(simd::tier_name())),
+            ("smoke", Json::from(smoke)),
+        ]);
+        println!("BENCH {record}");
     }
 
     // §Perf A/B: memoized batch walk vs m independent walks on the raw

@@ -97,6 +97,7 @@ fn main() {
                     listen: "127.0.0.1:0".into(),
                     quantize: QuantizeKind::None,
                     hold: Duration::ZERO,
+                    ..LoadSpec::default()
                 };
                 match run_closed_loop(sampler.as_ref(), &spec) {
                     Ok(report) => {
@@ -143,6 +144,7 @@ fn main() {
                 listen: "127.0.0.1:0".into(),
                 quantize: QuantizeKind::None,
                 hold: Duration::ZERO,
+                ..LoadSpec::default()
             };
             match run_closed_loop(sampler.as_ref(), &spec) {
                 Ok(report) => {
@@ -181,6 +183,7 @@ fn main() {
             listen: "127.0.0.1:0".into(),
             quantize: QuantizeKind::None,
             hold: Duration::ZERO,
+            ..LoadSpec::default()
         };
         match run_closed_loop(sampler.as_ref(), &spec) {
             Ok(report) => {

@@ -1,0 +1,258 @@
+//! Unified admin surface: one typed vocabulary for every place the
+//! served class universe can be mutated, captured, or restored.
+//!
+//! Before this module the crate had three parallel admin dialects:
+//!
+//! - [`crate::serving::DoubleBufferedSampler::extend_vocab`] /
+//!   `retire_classes` returned `Result<_, String>`,
+//! - the coordinator's `SamplerService` mirrored the same two methods
+//!   with its own signatures, and
+//! - the transport layer's `VocabAdmin` hook spoke `(dim, rows, data)`
+//!   triples with stringly errors.
+//!
+//! Each grew independently, so snapshot/restore would have been a
+//! *fourth* dialect. Instead, every surface now implements
+//! [`AdminSurface`] — a single entry point taking a typed [`AdminOp`]
+//! and returning a typed [`AdminResponse`] or [`AdminError`]. Vocab
+//! churn and durability ops ([`AdminOp::Snapshot`] /
+//! [`AdminOp::Restore`]) are peers: anything that can grow the universe
+//! can also checkpoint it.
+//!
+//! The old method names survive for one release as thin `#[deprecated]`
+//! shims delegating to [`AdminSurface::admin`]; new code should go
+//! through the trait (or the typed convenience wrappers
+//! [`AdminSurface::admin_add`] et al.).
+//!
+//! # Visibility semantics
+//!
+//! The `epoch` carried by a response is the snapshot epoch the surface
+//! observed when the op was accepted. Immediate surfaces (the
+//! transport server's writer, which publishes per-op) return the epoch
+//! at which the mutation is already visible; staged surfaces
+//! ([`crate::serving::DoubleBufferedSampler`], which batches churn into
+//! the next `sync`) return the *currently published* epoch — the op
+//! lands at the next step boundary. Both are documented on the
+//! respective impls.
+
+use crate::linalg::Matrix;
+use crate::sampler::VocabError;
+use crate::snapshot::{SamplerState, Snapshot, SnapshotError};
+use std::fmt;
+
+/// One administrative operation against a served sampler. The class
+/// universe mutations mirror [`crate::sampler::Sampler::add_classes`] /
+/// `retire_classes`; the durability ops mirror
+/// [`crate::sampler::Sampler::snapshot_state`] / `restore_state` but
+/// run through the surface's staging discipline (readers never observe
+/// partial state).
+#[derive(Clone, Debug)]
+pub enum AdminOp {
+    /// Grow the universe: each row of `embeddings` becomes a new class;
+    /// the response carries the assigned contiguous ids.
+    AddClasses { embeddings: Matrix },
+    /// Retire live classes into permanent holes. Ids must be live and
+    /// duplicate-free.
+    RetireClasses { ids: Vec<u32> },
+    /// Capture the full durable sampler state at the published epoch.
+    Snapshot,
+    /// Replace the full sampler state from a previously captured (or
+    /// decoded) snapshot. Boxed: a state is `O(n·D)` and `AdminOp`
+    /// travels through channels by value.
+    Restore { state: Box<SamplerState> },
+}
+
+impl AdminOp {
+    /// Stable lowercase tag, for metrics and log lines.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdminOp::AddClasses { .. } => "add_classes",
+            AdminOp::RetireClasses { .. } => "retire_classes",
+            AdminOp::Snapshot => "snapshot",
+            AdminOp::Restore { .. } => "restore",
+        }
+    }
+}
+
+/// Successful outcome of an [`AdminOp`], variant-matched to the op.
+#[derive(Clone, Debug)]
+pub enum AdminResponse {
+    /// `AddClasses` accepted: the ids assigned to the new rows, and the
+    /// epoch observed at acceptance (see module docs for visibility).
+    Added { ids: Vec<u32>, epoch: u64 },
+    /// `RetireClasses` accepted.
+    Retired { epoch: u64 },
+    /// `Snapshot` captured. Boxed for the same reason as
+    /// [`AdminOp::Restore`].
+    Snapshot { snapshot: Box<Snapshot> },
+    /// `Restore` accepted and staged/applied.
+    Restored { epoch: u64 },
+}
+
+impl AdminResponse {
+    fn kind(&self) -> &'static str {
+        match self {
+            AdminResponse::Added { .. } => "added",
+            AdminResponse::Retired { .. } => "retired",
+            AdminResponse::Snapshot { .. } => "snapshot",
+            AdminResponse::Restored { .. } => "restored",
+        }
+    }
+}
+
+/// Single error type for every admin surface, absorbing the layer-local
+/// errors the three pre-unification dialects used to leak.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdminError {
+    /// The sampler rejected a universe mutation (fixed-universe kind,
+    /// retired/duplicate/out-of-range ids).
+    Vocab(VocabError),
+    /// Snapshot capture/restore failed (corrupt bytes, wrong feature
+    /// map, kind mismatch — see [`SnapshotError`]).
+    Snapshot(SnapshotError),
+    /// A remote peer answered with a wire `Error` frame; `code` is the
+    /// transport error code.
+    Remote { code: u8, message: String },
+    /// The op could not reach (or round-trip to) the surface: socket
+    /// errors, dead writer threads, mismatched response variants.
+    Transport(String),
+    /// The surface cannot perform this op at all (e.g. restore over the
+    /// wire); the payload names the surface.
+    Unsupported(&'static str),
+}
+
+impl fmt::Display for AdminError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdminError::Vocab(e) => write!(f, "admin: {e}"),
+            AdminError::Snapshot(e) => write!(f, "admin: {e}"),
+            AdminError::Remote { code, message } => {
+                write!(f, "admin: remote error {code}: {message}")
+            }
+            AdminError::Transport(msg) => write!(f, "admin: transport: {msg}"),
+            AdminError::Unsupported(surface) => {
+                write!(f, "admin: op not supported by surface '{surface}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdminError {}
+
+impl From<VocabError> for AdminError {
+    fn from(e: VocabError) -> Self {
+        AdminError::Vocab(e)
+    }
+}
+
+impl From<SnapshotError> for AdminError {
+    fn from(e: SnapshotError) -> Self {
+        AdminError::Snapshot(e)
+    }
+}
+
+/// Anything that can administer a served sampler: the trainer-side
+/// double buffer, the coordinator service, the transport server's
+/// writer hook, and the transport *client* (which forwards ops over the
+/// wire) all implement this one trait, so tooling — the CLI, the
+/// cluster bootstrap path, tests — is written once against
+/// `&mut dyn AdminSurface`.
+pub trait AdminSurface {
+    /// Execute one admin op. Implementations must be atomic per op:
+    /// on `Err` the served state is unchanged.
+    fn admin(&mut self, op: AdminOp) -> Result<AdminResponse, AdminError>;
+
+    /// Typed wrapper for [`AdminOp::AddClasses`].
+    fn admin_add(
+        &mut self,
+        embeddings: Matrix,
+    ) -> Result<(Vec<u32>, u64), AdminError> {
+        match self.admin(AdminOp::AddClasses { embeddings })? {
+            AdminResponse::Added { ids, epoch } => Ok((ids, epoch)),
+            other => Err(unexpected("added", &other)),
+        }
+    }
+
+    /// Typed wrapper for [`AdminOp::RetireClasses`].
+    fn admin_retire(&mut self, ids: Vec<u32>) -> Result<u64, AdminError> {
+        match self.admin(AdminOp::RetireClasses { ids })? {
+            AdminResponse::Retired { epoch } => Ok(epoch),
+            other => Err(unexpected("retired", &other)),
+        }
+    }
+
+    /// Typed wrapper for [`AdminOp::Snapshot`].
+    fn admin_snapshot(&mut self) -> Result<Snapshot, AdminError> {
+        match self.admin(AdminOp::Snapshot)? {
+            AdminResponse::Snapshot { snapshot } => Ok(*snapshot),
+            other => Err(unexpected("snapshot", &other)),
+        }
+    }
+
+    /// Typed wrapper for [`AdminOp::Restore`].
+    fn admin_restore(
+        &mut self,
+        state: SamplerState,
+    ) -> Result<u64, AdminError> {
+        match self.admin(AdminOp::Restore { state: Box::new(state) })? {
+            AdminResponse::Restored { epoch } => Ok(epoch),
+            other => Err(unexpected("restored", &other)),
+        }
+    }
+}
+
+fn unexpected(wanted: &'static str, got: &AdminResponse) -> AdminError {
+    AdminError::Transport(format!(
+        "surface answered '{}' to an op expecting '{wanted}'",
+        got.kind()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A toy surface that answers the *wrong* variant, to pin down the
+    /// wrapper's mismatch handling.
+    struct Contrary;
+    impl AdminSurface for Contrary {
+        fn admin(&mut self, op: AdminOp) -> Result<AdminResponse, AdminError> {
+            match op {
+                AdminOp::Snapshot => Ok(AdminResponse::Retired { epoch: 7 }),
+                _ => Err(AdminError::Unsupported("contrary")),
+            }
+        }
+    }
+
+    #[test]
+    fn wrappers_reject_mismatched_response_variants() {
+        let err = Contrary.admin_snapshot().unwrap_err();
+        match err {
+            AdminError::Transport(msg) => {
+                assert!(msg.contains("retired"), "{msg}");
+                assert!(msg.contains("snapshot"), "{msg}");
+            }
+            other => panic!("wanted Transport, got {other:?}"),
+        }
+        assert_eq!(
+            Contrary.admin_retire(vec![1]).unwrap_err(),
+            AdminError::Unsupported("contrary"),
+        );
+    }
+
+    #[test]
+    fn errors_absorb_layer_locals_and_render() {
+        let v: AdminError = VocabError("id 5 is retired".into()).into();
+        assert!(v.to_string().contains("id 5 is retired"));
+        let s: AdminError =
+            SnapshotError::FutureVersion { found: 9, max: 1 }.into();
+        assert!(s.to_string().contains('9'), "{s}");
+        let r = AdminError::Remote { code: 3, message: "nope".into() };
+        assert!(r.to_string().contains("remote error 3"));
+    }
+
+    #[test]
+    fn op_names_are_stable() {
+        assert_eq!(AdminOp::Snapshot.name(), "snapshot");
+        assert_eq!(AdminOp::RetireClasses { ids: vec![] }.name(), "retire_classes");
+    }
+}

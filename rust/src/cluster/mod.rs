@@ -34,7 +34,10 @@
 //!   router, get a cluster-wide sequence number, and drain to owner
 //!   replicas over dedicated admin connections with per-replica acked
 //!   cursors; lag is observable, and [`Cluster::flush`] awaits
-//!   convergence.
+//!   convergence. Ops abandoned on a dead replica are parked with
+//!   their sequence ranges recorded, and a replica restarted from a
+//!   durable snapshot rejoins through [`Cluster::bootstrap_replica`] —
+//!   snapshot state plus replayed log tail, zero lost churn.
 //!
 //! Everything is std-only and sits strictly *above* the transport: no
 //! server-side changes beyond the wire-v3 `MASS` frame exist for the
@@ -187,6 +190,37 @@ impl Cluster {
         self.log.dropped()
     }
 
+    /// Per-replica `(first_seq, last_seq)` abandon ranges still awaiting
+    /// bootstrap replay (empty for a replica once
+    /// [`Cluster::bootstrap_replica`] has re-covered them).
+    pub fn abandoned(&self) -> Vec<Vec<(u64, u64)>> {
+        self.log.abandoned()
+    }
+
+    /// Snapshot-bootstrap a recovered replica back into the cluster.
+    ///
+    /// The caller has already restarted replica `r`'s serving stack at
+    /// the same endpoint from a durable snapshot (fetched earlier via
+    /// the wire `STATE_SNAPSHOT` frame, or read back with
+    /// [`crate::snapshot::read_file`]) whose state carries every churn
+    /// op up to replication cursor `from_seq`. This verifies the parked
+    /// (abandoned) log tail re-covers exactly the sequence numbers the
+    /// cursor advanced past since then, re-enqueues it in FIFO order,
+    /// and marks the replica healthy so the worker reconnects and
+    /// drains. Returns the number of replayed ops; follow with
+    /// [`Cluster::flush`] to await convergence (after which this
+    /// replica's cursor has rejoined the shared sequence and
+    /// [`Cluster::dropped`] for it is back to zero — no lost churn).
+    pub fn bootstrap_replica(
+        &self,
+        r: usize,
+        from_seq: u64,
+    ) -> Result<u64, String> {
+        let n = self.log.reenqueue_parked(r, from_seq)?;
+        self.registry.replica(r).set_healthy(true);
+        Ok(n)
+    }
+
     /// Number of replicas currently marked healthy.
     pub fn alive(&self) -> usize {
         self.registry.alive().len()
@@ -201,6 +235,7 @@ impl Cluster {
         let lag = self.lag();
         let cursors = self.cursors();
         let dropped = self.dropped();
+        let abandoned = self.abandoned();
         let epochs = self.log.epochs();
         let replicas: Vec<Json> = (0..self.registry.len())
             .map(|r| {
@@ -211,6 +246,10 @@ impl Cluster {
                     ("cursor", Json::from(cursors[r] as usize)),
                     ("lag", Json::from(lag[r] as usize)),
                     ("dropped", Json::from(dropped[r] as usize)),
+                    // Abandon events awaiting bootstrap replay, so a
+                    // scrape distinguishes "lost for good" from
+                    // "recoverable via bootstrap_replica".
+                    ("abandoned_ranges", Json::from(abandoned[r].len())),
                     ("epoch", Json::from(epochs[r] as usize)),
                 ])
             })

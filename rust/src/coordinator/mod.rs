@@ -34,6 +34,7 @@ pub use lm::LmTrainer;
 pub use sampler_service::{build_sampler, SamplerService};
 pub use xc::XcTrainer;
 
+use crate::admin::AdminSurface;
 use crate::config::{Config, SamplerKind};
 use crate::json::Json;
 use crate::metrics::Metrics;
@@ -236,7 +237,9 @@ pub(crate) fn extend_vocab_impl(
     let svc = service.ok_or_else(|| {
         anyhow::anyhow!("extend_vocab: FULL softmax has no sampling service")
     })?;
-    let ids = svc.extend_vocab(embeddings)?;
+    let (ids, _epoch) = svc
+        .admin_add(embeddings.clone())
+        .map_err(|e| anyhow::anyhow!("extend_vocab: {e}"))?;
     anyhow::ensure!(
         ids.first().copied() == Some(expected),
         "extend_vocab: sampler assigned ids from {:?} but CLS has \
@@ -266,7 +269,8 @@ pub(crate) fn retire_classes_impl(
     let svc = service.ok_or_else(|| {
         anyhow::anyhow!("retire_classes: FULL softmax has no sampling service")
     })?;
-    svc.retire_classes(ids)?;
+    svc.admin_retire(ids.to_vec())
+        .map_err(|e| anyhow::anyhow!("retire_classes: {e}"))?;
     metrics.incr("vocab_retired", ids.len() as u64);
     Ok(())
 }

@@ -13,6 +13,7 @@ use crate::sampler::{
     LogUniformSampler, NegativeDraw, QuadraticSampler, RffSampler, Sampler,
     ShardedKernelSampler, UniformSampler,
 };
+use crate::admin::{AdminError, AdminOp, AdminResponse, AdminSurface};
 use crate::serving::{DoubleBufferedSampler, ServingStats};
 use anyhow::{bail, Result};
 
@@ -461,38 +462,22 @@ impl SamplerService {
         }
     }
 
-    /// Grow the class universe: row `k` of `embeddings` (normalized
-    /// here) becomes a new class; returns the assigned ids (stable —
-    /// they extend `0..n` contiguously). Direct mode applies
-    /// synchronously; double-buffered mode stages onto the serving
-    /// shadow and the growth becomes visible at the next draw as one
-    /// epoch swap. Errors (typed, not panics) for fixed-universe
-    /// samplers.
+    /// Grow the class universe: deprecated shim over
+    /// [`AdminSurface::admin_add`], kept one release for embedders.
+    #[deprecated(note = "use AdminSurface::admin_add (typed ops/errors)")]
     pub fn extend_vocab(&mut self, embeddings: &Matrix) -> Result<Vec<u32>> {
-        let mut normed = embeddings.clone();
-        normed.normalize_rows_in_place();
-        match &mut self.backend {
-            Backend::Direct(s) => s
-                .add_classes(&normed)
-                .map_err(|e| anyhow::anyhow!("extend_vocab: {e}")),
-            Backend::Served(db) => db
-                .extend_vocab(normed)
-                .map_err(|e| anyhow::anyhow!("extend_vocab: {e}")),
-        }
+        self.admin_add(embeddings.clone())
+            .map(|(ids, _epoch)| ids)
+            .map_err(|e| anyhow::anyhow!("extend_vocab: {e}"))
     }
 
-    /// Retire live classes: their slots become permanent holes that are
-    /// never drawn again (no zero-probability support left behind). In
-    /// double-buffered mode the holes appear at the next draw.
+    /// Retire live classes: deprecated shim over
+    /// [`AdminSurface::admin_retire`], kept one release for embedders.
+    #[deprecated(note = "use AdminSurface::admin_retire (typed ops/errors)")]
     pub fn retire_classes(&mut self, ids: &[u32]) -> Result<()> {
-        match &mut self.backend {
-            Backend::Direct(s) => s
-                .retire_classes(ids)
-                .map_err(|e| anyhow::anyhow!("retire_classes: {e}")),
-            Backend::Served(db) => db
-                .retire_classes(ids.to_vec())
-                .map_err(|e| anyhow::anyhow!("retire_classes: {e}")),
-        }
+        self.admin_retire(ids.to_vec())
+            .map(|_epoch| ())
+            .map_err(|e| anyhow::anyhow!("retire_classes: {e}"))
     }
 
     /// Direct access for diagnostics (bias harness, tests). In
@@ -502,6 +487,63 @@ impl SamplerService {
         match &self.backend {
             Backend::Direct(s) => s.as_ref(),
             Backend::Served(db) => db.sampler(),
+        }
+    }
+}
+
+/// The coordinator's impl of the unified admin API. Direct mode applies
+/// synchronously (there is no epoch versioning — responses report epoch
+/// `0`); double-buffered mode delegates to the
+/// [`DoubleBufferedSampler`] surface, so churn and restores become
+/// visible at the next draw as one epoch swap. Class embeddings are
+/// row-normalized here (the kernel samplers assume the paper's
+/// normalized regime).
+impl AdminSurface for SamplerService {
+    fn admin(&mut self, op: AdminOp) -> Result<AdminResponse, AdminError> {
+        match op {
+            AdminOp::AddClasses { embeddings } => {
+                let mut normed = embeddings;
+                normed.normalize_rows_in_place();
+                match &mut self.backend {
+                    Backend::Direct(s) => {
+                        let ids = s.add_classes(&normed)?;
+                        Ok(AdminResponse::Added { ids, epoch: 0 })
+                    }
+                    Backend::Served(db) => {
+                        db.admin(AdminOp::AddClasses { embeddings: normed })
+                    }
+                }
+            }
+            AdminOp::RetireClasses { ids } => match &mut self.backend {
+                Backend::Direct(s) => {
+                    s.retire_classes(&ids)?;
+                    Ok(AdminResponse::Retired { epoch: 0 })
+                }
+                Backend::Served(db) => {
+                    db.admin(AdminOp::RetireClasses { ids })
+                }
+            },
+            AdminOp::Snapshot => match &mut self.backend {
+                Backend::Direct(s) => {
+                    let state = s
+                        .snapshot_state()
+                        .ok_or(AdminError::Unsupported("direct sampler kind"))?;
+                    Ok(AdminResponse::Snapshot {
+                        snapshot: Box::new(crate::snapshot::Snapshot {
+                            epoch: 0,
+                            state,
+                        }),
+                    })
+                }
+                Backend::Served(db) => db.admin(AdminOp::Snapshot),
+            },
+            AdminOp::Restore { state } => match &mut self.backend {
+                Backend::Direct(s) => {
+                    s.restore_state(&state)?;
+                    Ok(AdminResponse::Restored { epoch: 0 })
+                }
+                Backend::Served(db) => db.admin(AdminOp::Restore { state }),
+            },
         }
     }
 }
@@ -820,12 +862,12 @@ mod tests {
             v.iter_mut().for_each(|x| *x *= 3.0);
             grow.row_mut(r).copy_from_slice(&v);
         }
-        let ids_d = direct.extend_vocab(&grow).unwrap();
-        let ids_s = served.extend_vocab(&grow).unwrap();
+        let (ids_d, _) = direct.admin_add(grow.clone()).unwrap();
+        let (ids_s, _) = served.admin_add(grow.clone()).unwrap();
         assert_eq!(ids_d, vec![20, 21, 22]);
         assert_eq!(ids_d, ids_s);
-        direct.retire_classes(&[1, 21]).unwrap();
-        served.retire_classes(&[1, 21]).unwrap();
+        direct.admin_retire(vec![1, 21]).unwrap();
+        served.admin_retire(vec![1, 21]).unwrap();
         assert_eq!(direct.num_classes(), 23);
         // Direct mode is immediate; served mode lands at the next draw.
         assert_eq!(direct.sampler().live_classes(), 21);
@@ -845,8 +887,43 @@ mod tests {
         }
         assert_eq!(direct.sampler().probability(&q, 1), 0.0);
         // Typed error surfaces through the service.
-        assert!(direct.retire_classes(&[1]).is_err());
-        assert!(served.retire_classes(&[1]).is_err());
+        assert!(matches!(
+            direct.admin_retire(vec![1]),
+            Err(AdminError::Vocab(_))
+        ));
+        assert!(served.admin_retire(vec![1]).is_err());
+        // The deprecated anyhow shims still answer during the
+        // migration window.
+        #[allow(deprecated)]
+        {
+            assert!(direct.retire_classes(&[1]).is_err());
+            let one = Matrix::from_vec(1, d, unit_vector(&mut rng, d));
+            assert_eq!(direct.extend_vocab(&one).unwrap(), vec![23]);
+        }
+    }
+
+    #[test]
+    fn snapshot_and_restore_through_the_service() {
+        let mut rng = Rng::seeded(960);
+        let d = 6;
+        let classes = Matrix::randn(&mut rng, 24, d).l2_normalized_rows();
+        let map =
+            crate::featmap::RffMap::new(d, 32, 2.0, &mut Rng::seeded(961));
+        let sampler = Box::new(ShardedKernelSampler::with_map(
+            &classes, map, 2, "rff-sharded",
+        )) as Box<dyn Sampler>;
+        let mut svc = SamplerService::new(sampler, 4, Rng::seeded(962));
+        svc.admin_retire(vec![7]).unwrap();
+        let snap = svc.admin_snapshot().unwrap();
+        assert_eq!(snap.state.live_classes(), 23);
+        svc.admin_retire(vec![9, 11]).unwrap();
+        assert_eq!(svc.sampler().live_classes(), 21);
+        let epoch = svc.admin_restore(snap.state).unwrap();
+        assert_eq!(epoch, 0, "direct backend has no epoch versioning");
+        assert_eq!(svc.sampler().live_classes(), 23);
+        let q = unit_vector(&mut rng, d);
+        assert!(svc.sampler().probability(&q, 9) > 0.0);
+        assert_eq!(svc.sampler().probability(&q, 7), 0.0);
     }
 
     #[test]

@@ -98,8 +98,9 @@
 //!   half-grown tree; trainers expose `extend_vocab`/`retire_classes`
 //!   through [`serving::DoubleBufferedSampler`];
 //! * **wire** — versioned `ADD_CLASSES`/`RETIRE_CLASSES` admin frames
-//!   (wire v2) drive churn cross-process via
-//!   [`transport::VocabAdmin`], and `serve-bench --churn adds:retires`
+//!   (wire v2) drive churn cross-process through the unified
+//!   [`admin::AdminSurface`] hook ([`transport::VocabAdmin`] remains as
+//!   its legacy adapter), and `serve-bench --churn adds:retires`
 //!   reports mutation-latency percentiles and post-churn qps.
 //! ## Train-step execution ([`runtime`])
 //!
@@ -225,6 +226,55 @@
 //! telemetry itself, budgeted at ≤ 2% and enforced by
 //! `bench-check --require-telemetry-overhead 2` in CI.
 //!
+//! ## Durability
+//!
+//! The sampler's kernel-tree state is what makes near-softmax sampling
+//! cheap, but it is `O(n·D)` to *build* — so it is now durable
+//! ([`snapshot`]):
+//!
+//! * **Snapshot codec** — [`snapshot::encode`]/[`snapshot::decode`]
+//!   serialize the full sampler state (tree node sums, slot/assignment
+//!   tables, live set, quantized [`linalg::ClassStore`], serving
+//!   epoch, capacity reservation) for every sampler kind (kernel,
+//!   sharded, bucket, uniform) into a little-endian binary format:
+//!   `RFSNAP` magic, a `u32` version, and an FNV-1a-64 trailer.
+//!   **Versioning policy:** the version bumps only on layout changes;
+//!   decoders read every version up to their own and reject newer ones
+//!   with a typed `FutureVersion` error (snapshots are warm-start
+//!   artifacts, not archives). Truncation, bit rot, and malformed
+//!   payloads each map to their own [`snapshot::SnapshotError`] — a
+//!   corrupt file can never panic a server.
+//! * **Restore-into-skeleton** — [`sampler::Sampler::restore_state`]
+//!   replaces a cheaply built skeleton sampler's state wholesale in
+//!   `O(state)`, with the feature map verified by a φ-probe
+//!   fingerprint; no φ recomputation, which is where the ≥5× warm
+//!   restart win comes from (the `warm_restart` BENCH cell +
+//!   `bench-check --require-restore-speedup` gate it in CI).
+//! * **Serving + manifest** — snapshot/restore stage through the
+//!   [`serving::SamplerWriter`] replay log as peer ops of churn, so
+//!   readers never observe partial state; files register in
+//!   `artifacts/manifest.json` under a `snapshots` section
+//!   ([`runtime::manifest::SnapshotMeta`]).
+//! * **Wire + cluster** — the wire-v3 `STATE_SNAPSHOT` admin frame
+//!   streams a snapshot in chunks (the 16 MiB frame cap is respected;
+//!   [`transport::TransportClient::fetch_snapshot`] reassembles), and
+//!   a killed/joining replica **snapshot-bootstraps**: fetch the
+//!   shard's snapshot from a live owner, restore, then replay the
+//!   replication-log tail from the snapshot's epoch cursor
+//!   ([`cluster::Cluster::bootstrap_replica`]) — closing the
+//!   abandon-with-cursor-advance durability hole.
+//! * **CLI quickstart** — `rfsoftmax snapshot <endpoint> --out dir/
+//!   --name main` fetches + registers a live server's snapshot;
+//!   `rfsoftmax serve-bench --restore dir/:main` boots the serve loop
+//!   warm from it instead of rebuilding from embeddings.
+//!
+//! Admin surfaces are unified behind [`admin::AdminSurface`]: one
+//! typed [`admin::AdminOp`] enum (add/retire/snapshot/restore) with a
+//! single [`admin::AdminError`], implemented by the serving writer
+//! handle, the coordinator's `SamplerService`, and the transport
+//! client; the pre-existing per-layer methods remain as thin
+//! deprecated shims for one release.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -317,6 +367,7 @@
 //! frames, cutting frame-header parses per request by ~the wave size —
 //! the BENCH JSON's `req_headers_per_request` field tracks it).
 
+pub mod admin;
 pub mod benchkit;
 pub mod bias;
 pub mod cli;
@@ -337,6 +388,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sampler;
 pub mod serving;
+pub mod snapshot;
 pub mod softmax;
 pub mod tables;
 pub mod transport;
@@ -375,4 +427,6 @@ pub mod prelude {
     pub use crate::softmax::{
         full_softmax_loss, sampled_softmax_loss, SampledLoss,
     };
+    pub use crate::admin::{AdminError, AdminOp, AdminResponse, AdminSurface};
+    pub use crate::snapshot::{SamplerState, Snapshot, SnapshotError};
 }

@@ -10,6 +10,8 @@
 //! rfsoftmax serve-bench --transport uds --mix 8:1:1     # cross-process wire
 //! rfsoftmax serve-bench --transport tcp --wave 32       # TCP + batched waves
 //! rfsoftmax stats tcp:127.0.0.1:7411                    # scrape live telemetry
+//! rfsoftmax snapshot tcp:127.0.0.1:7411 --out snaps     # durable state capture
+//! rfsoftmax serve-bench --restore snaps:main            # warm restart from it
 //! rfsoftmax bench-check BENCH_serving.json              # validate BENCH JSON
 //! ```
 
@@ -44,6 +46,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "bias" => cmd_bias(rest),
         "serve-bench" => cmd_serve_bench(rest),
         "stats" => cmd_stats(rest),
+        "snapshot" => cmd_snapshot(rest),
         "bench-check" => cmd_bench_check(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -51,7 +54,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         }
         other => bail!(
             "unknown command '{other}' (try: train, info, sample, bias, \
-             serve-bench, stats, bench-check)"
+             serve-bench, stats, snapshot, bench-check)"
         ),
     }
 }
@@ -66,6 +69,7 @@ fn print_usage() {
          bias         gradient-bias diagnostic (Theorem 1 empirics)\n  \
          serve-bench  closed-loop load test of the serving subsystem\n  \
          stats        scrape live telemetry from a serving endpoint\n  \
+         snapshot     fetch a serving endpoint's durable sampler snapshot\n  \
          bench-check  validate BENCH JSON records (CI bench-smoke gate)\n\n\
          Run `rfsoftmax <command> --help` for flags."
     );
@@ -309,6 +313,16 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
                         default: Some("0".into()),
                     },
                     FlagSpec {
+                        name: "restore",
+                        help: "warm-start from a durable snapshot saved \
+                               by `rfsoftmax snapshot`: DIR or DIR:NAME \
+                               (name defaults to 'main'); the config \
+                               must rebuild the same feature map the \
+                               snapshot was captured under \
+                               (fingerprint-checked; single-node only)",
+                        default: None,
+                    },
+                    FlagSpec {
                         name: "config",
                         help: "JSON config file",
                         default: None,
@@ -343,6 +357,30 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
     let hold = a.usize_or("hold", 0)?;
     let replicas = a.usize_or("replicas", 1)?;
     let hedge = a.has("hedge");
+    // `DIR` or `DIR:NAME` — rsplit so a directory path containing ':'
+    // still parses when the name is given explicitly.
+    let restore = match a.get("restore") {
+        Some(spec) => {
+            let (dir, name) = match spec.rsplit_once(':') {
+                Some((d, n)) if !d.is_empty() && !n.is_empty() => (d, n),
+                _ => (spec, "main"),
+            };
+            let snap = rfsoftmax::snapshot::load_with_manifest(
+                std::path::Path::new(dir),
+                name,
+            )
+            .map_err(|e| anyhow::anyhow!("--restore {spec}: {e}"))?;
+            println!(
+                "restore: {dir}:{name} kind={} epoch={} ({}/{} classes live)",
+                snap.state.kind_name(),
+                snap.epoch,
+                snap.state.live_classes(),
+                snap.state.num_classes(),
+            );
+            Some(std::sync::Arc::new(snap))
+        }
+        None => None,
+    };
     let n = cfg.model.num_classes.min(50_000);
     let d = cfg.model.embed_dim.min(128);
     let mut rng = Rng::seeded(cfg.sampler.seed);
@@ -370,6 +408,7 @@ fn cmd_serve_bench(raw: &[String]) -> Result<()> {
         replicas,
         hedge,
         virtual_nodes: cfg.cluster.virtual_nodes,
+        restore,
     };
     let report = if replicas > 1 {
         // Cluster path: the class universe is pre-partitioned by the
@@ -637,6 +676,98 @@ fn stats_cluster(
     Ok(())
 }
 
+/// Capture a running server's durable sampler state: send the wire-v3
+/// `STATE_SNAPSHOT` request, reassemble the chunk stream, decode it
+/// with the codec's typed checks (magic / version / checksum), and
+/// save it under a manifest-tracked name. This is the capture half of
+/// the warm-restart cycle — `serve-bench --restore DIR:NAME` is the
+/// restore half, and a cluster operator feeds the same artifact to a
+/// recovered replica before `Cluster::bootstrap_replica` replays the
+/// log tail.
+fn cmd_snapshot(raw: &[String]) -> Result<()> {
+    let a = Args::parse(raw, &["help"])?;
+    if a.has("help") {
+        println!(
+            "{}",
+            render_help(
+                "snapshot",
+                "fetch a serving endpoint's durable sampler snapshot \
+                 and save it under a manifest-tracked name",
+                &[
+                    FlagSpec {
+                        name: "out",
+                        help: "snapshot directory (manifest.json + *.rfsnap)",
+                        default: Some("snapshots".into()),
+                    },
+                    FlagSpec {
+                        name: "name",
+                        help: "manifest entry name (re-saving a name \
+                               replaces its artifact)",
+                        default: Some("main".into()),
+                    },
+                    FlagSpec {
+                        name: "max-chunk",
+                        help: "cap response chunks at this many bytes \
+                               (0 = server default; a testing aid for \
+                               the chunked stream)",
+                        default: Some("0".into()),
+                    },
+                    FlagSpec {
+                        name: "<endpoint>",
+                        help: "tcp:HOST:PORT | uds:PATH (positional)",
+                        default: None,
+                    },
+                ]
+            )
+        );
+        return Ok(());
+    }
+    a.check_known(&["help", "out", "name", "max-chunk"])?;
+    let [endpoint] = a.positional() else {
+        bail!(
+            "snapshot: give exactly one serving endpoint \
+             (tcp:HOST:PORT or uds:PATH)"
+        );
+    };
+    let out = std::path::PathBuf::from(a.str_or("out", "snapshots"));
+    let name = a.str_or("name", "main");
+    let max_chunk = a.usize_or("max-chunk", 0)? as u32;
+    let mut client = connect_stats_endpoint(endpoint)?;
+    let t0 = std::time::Instant::now();
+    let (bytes, epoch) = client
+        .fetch_snapshot(max_chunk)
+        .map_err(|e| anyhow::anyhow!("snapshot fetch from {endpoint}: {e}"))?;
+    let fetched = t0.elapsed();
+    // Full typed decode before anything touches disk: a server bug (or
+    // a torn stream) surfaces here as BadChecksum/Malformed, not as a
+    // poisoned artifact discovered at restore time.
+    let snap = rfsoftmax::snapshot::decode(&bytes)
+        .map_err(|e| anyhow::anyhow!("snapshot from {endpoint}: {e}"))?;
+    anyhow::ensure!(
+        snap.epoch == epoch,
+        "snapshot from {endpoint}: chunk headers claim epoch {epoch} but \
+         the decoded state carries epoch {}",
+        snap.epoch
+    );
+    let meta = rfsoftmax::snapshot::save_with_manifest(&out, name, &snap)
+        .map_err(|e| anyhow::anyhow!("save under {}: {e}", out.display()))?;
+    println!(
+        "snapshot: {endpoint} -> {} ({} bytes in {fetched:.1?})",
+        out.join(&meta.file).display(),
+        bytes.len(),
+    );
+    println!(
+        "  name={} kind={} epoch={} classes={}/{} checksum={:#018x}",
+        meta.name,
+        meta.kind,
+        meta.epoch,
+        meta.live_classes,
+        meta.n_classes,
+        meta.checksum,
+    );
+    Ok(())
+}
+
 /// Validate BENCH JSON artifacts with the in-crate `json` parser — the
 /// CI `bench-smoke` gate. Each positional file may hold raw
 /// `BENCH {json}` lines (as the benches print them) or bare JSON lines;
@@ -651,6 +782,9 @@ fn stats_cluster(
 /// `--require-fused-speedup R`, some `train_step_fused` record must
 /// show the fused one-pass native train step ≥ R× the composed
 /// stage-by-stage baseline (the ISSUE 9 gate). With
+/// `--require-restore-speedup R`, some `warm_restart` record must show
+/// the snapshot state swap ≥ R× the cold rebuild-and-replay recovery
+/// path (the ISSUE 10 durability gate). With
 /// `--require-telemetry-overhead P`, every serving record's attributed
 /// telemetry cost (`telemetry_overhead_pct`) must be ≤ P percent — the
 /// observability budget, checked by machine. With `--baseline FILE`,
@@ -714,6 +848,9 @@ fn bench_identity(tag: &str) -> Option<(&'static [&'static str], &'static str)> 
             &["task", "b", "l", "d", "h", "m", "simd", "smoke"],
             "fused_steps_per_sec",
         )),
+        "warm_restart" => {
+            Some((&["n", "d", "shards", "smoke"], "restore_per_sec"))
+        }
         _ => None,
     }
 }
@@ -769,6 +906,14 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
                         default: None,
                     },
                     FlagSpec {
+                        name: "require-restore-speedup",
+                        help: "also require a warm_restart record with \
+                               the snapshot state swap ≥ this factor \
+                               over the cold rebuild + churn-replay \
+                               recovery path",
+                        default: None,
+                    },
+                    FlagSpec {
                         name: "require-telemetry-overhead",
                         help: "also require every serving record's \
                                attributed telemetry cost \
@@ -813,6 +958,7 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
         "require-wave-amortization",
         "require-simd-speedup",
         "require-fused-speedup",
+        "require-restore-speedup",
         "require-telemetry-overhead",
         "require-replica-speedup",
         "baseline",
@@ -940,6 +1086,34 @@ fn cmd_bench_check(raw: &[String]) -> Result<()> {
              baseline, need ≥ {factor}×"
         );
         println!("bench-check: fused-step speedup {best:.2}× ≥ {factor}× ok");
+    }
+    if let Some(factor) = a.get("require-restore-speedup") {
+        let factor: f64 = factor.parse().map_err(|_| {
+            anyhow::anyhow!("--require-restore-speedup: bad factor '{factor}'")
+        })?;
+        // Best warm-vs-cold recovery speedup: restoring a captured
+        // snapshot into a skeleton (the serving `apply_restore` path)
+        // against rebuilding from seed embeddings and replaying the
+        // whole add/retire churn history. The one-time codec decode is
+        // reported separately as `decode_ms` by the bench.
+        let best = records
+            .iter()
+            .filter(|j| {
+                j.get("bench").and_then(|b| b.as_str()) == Some("warm_restart")
+            })
+            .filter_map(|j| j.get("restore_speedup").and_then(|s| s.as_f64()))
+            .fold(f64::NEG_INFINITY, f64::max);
+        anyhow::ensure!(
+            best.is_finite(),
+            "bench-check: no warm_restart record with a 'restore_speedup' \
+             field — cannot prove the warm-restart win"
+        );
+        anyhow::ensure!(
+            best >= factor,
+            "bench-check: snapshot restore {best:.2}× over cold rebuild + \
+             replay, need ≥ {factor}×"
+        );
+        println!("bench-check: restore speedup {best:.2}× ≥ {factor}× ok");
     }
     if let Some(limit) = a.get("require-telemetry-overhead") {
         let limit: f64 = limit.parse().map_err(|_| {

@@ -1,5 +1,6 @@
 //! Typed view of `artifacts/manifest.json` (written by
-//! `python/compile/aot.py`). Example document:
+//! `python/compile/aot.py`, and since the durability work also *by*
+//! this crate when registering sampler snapshots). Example document:
 //!
 //! ```json
 //! {
@@ -11,9 +12,25 @@
 //!       "outputs": [{"name": "loss", "dtype": "f32", "shape": []}],
 //!       "meta": {"config": "ptb", "tau": 11.11}
 //!     }
+//!   },
+//!   "snapshots": {
+//!     "serve_main": {
+//!       "file": "serve_main.rfsnap",
+//!       "kind": "sharded",
+//!       "epoch": 1812,
+//!       "n_classes": 1000000,
+//!       "live_classes": 998731,
+//!       "bytes": 408772113,
+//!       "checksum": "0x1f3a9c0d5e7b2460"
+//!     }
 //!   }
 //! }
 //! ```
+//!
+//! The `snapshots` section is optional (AOT manifests predate it) and
+//! its `checksum` is the snapshot file's FNV-1a trailer rendered as a
+//! hex string — `Json::Num` is f64-backed, so a u64 cannot survive as
+//! a JSON number.
 
 use crate::json::{self, Json};
 use std::collections::BTreeMap;
@@ -57,10 +74,78 @@ impl ArtifactMeta {
     }
 }
 
+/// One registered sampler snapshot (see [`crate::snapshot`]). The
+/// `checksum` mirrors the snapshot file's FNV-1a trailer so a stale
+/// manifest ↔ file pair is caught before decode even starts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SnapshotMeta {
+    pub name: String,
+    pub file: String,
+    /// Sampler kind spelling (`uniform`/`kernel`/`sharded`/`bucket`).
+    pub kind: String,
+    /// Serving epoch at capture — the replication-log replay point.
+    pub epoch: u64,
+    pub n_classes: usize,
+    pub live_classes: usize,
+    pub bytes: usize,
+    pub checksum: u64,
+}
+
+impl SnapshotMeta {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("file", Json::Str(self.file.clone())),
+            ("kind", Json::Str(self.kind.clone())),
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("n_classes", Json::Num(self.n_classes as f64)),
+            ("live_classes", Json::Num(self.live_classes as f64)),
+            ("bytes", Json::Num(self.bytes as f64)),
+            ("checksum", Json::Str(format!("{:#018x}", self.checksum))),
+        ])
+    }
+
+    fn parse(name: &str, body: &Json) -> Result<SnapshotMeta, String> {
+        let field = |key: &str| {
+            body.get(key)
+                .ok_or_else(|| format!("snapshot '{name}': missing {key}"))
+        };
+        let checksum_text = field("checksum")?
+            .as_str()
+            .ok_or_else(|| format!("snapshot '{name}': checksum not a string"))?;
+        let checksum = u64::from_str_radix(
+            checksum_text.trim_start_matches("0x"),
+            16,
+        )
+        .map_err(|_| format!("snapshot '{name}': bad checksum hex"))?;
+        let num = |key: &str| -> Result<usize, String> {
+            field(key)?
+                .as_usize()
+                .ok_or_else(|| format!("snapshot '{name}': bad {key}"))
+        };
+        Ok(SnapshotMeta {
+            name: name.to_string(),
+            file: field("file")?
+                .as_str()
+                .ok_or_else(|| format!("snapshot '{name}': bad file"))?
+                .to_string(),
+            kind: field("kind")?
+                .as_str()
+                .ok_or_else(|| format!("snapshot '{name}': bad kind"))?
+                .to_string(),
+            epoch: num("epoch")? as u64,
+            n_classes: num("n_classes")?,
+            live_classes: num("live_classes")?,
+            bytes: num("bytes")?,
+            checksum,
+        })
+    }
+}
+
 /// The whole manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
     artifacts: BTreeMap<String, ArtifactMeta>,
+    snapshots: BTreeMap<String, SnapshotMeta>,
 }
 
 impl Manifest {
@@ -86,7 +171,14 @@ impl Manifest {
                 ArtifactMeta { name: name.clone(), file, inputs, outputs, meta },
             );
         }
-        Ok(Manifest { artifacts })
+        let mut snapshots = BTreeMap::new();
+        if let Some(snaps) = j.get("snapshots").and_then(|s| s.as_object()) {
+            for (name, body) in snaps {
+                snapshots
+                    .insert(name.clone(), SnapshotMeta::parse(name, body)?);
+            }
+        }
+        Ok(Manifest { artifacts, snapshots })
     }
 
     pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
@@ -108,6 +200,68 @@ impl Manifest {
     pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
         self.artifacts.values()
     }
+
+    /// Look up a registered sampler snapshot by name.
+    pub fn snapshot(&self, name: &str) -> Option<&SnapshotMeta> {
+        self.snapshots.get(name)
+    }
+
+    pub fn snapshots(&self) -> impl Iterator<Item = &SnapshotMeta> {
+        self.snapshots.values()
+    }
+
+    /// Register (or replace) a snapshot entry. Call
+    /// [`Manifest::to_json_string`] afterwards to persist.
+    pub fn insert_snapshot(&mut self, meta: SnapshotMeta) {
+        self.snapshots.insert(meta.name.clone(), meta);
+    }
+
+    /// Render the manifest back to JSON. Round-trips everything
+    /// `parse` reads (artifacts keep their free-form `meta`), so
+    /// registering a snapshot never loses AOT entries.
+    pub fn to_json_string(&self) -> String {
+        let artifacts: BTreeMap<String, Json> = self
+            .artifacts
+            .iter()
+            .map(|(name, a)| {
+                (
+                    name.clone(),
+                    Json::obj(vec![
+                        ("file", Json::Str(a.file.clone())),
+                        ("inputs", tensors_to_json(&a.inputs)),
+                        ("outputs", tensors_to_json(&a.outputs)),
+                        ("meta", a.meta.clone()),
+                    ]),
+                )
+            })
+            .collect();
+        let snapshots: BTreeMap<String, Json> = self
+            .snapshots
+            .iter()
+            .map(|(name, s)| (name.clone(), s.to_json()))
+            .collect();
+        let doc = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("artifacts", Json::Obj(artifacts)),
+            ("snapshots", Json::Obj(snapshots)),
+        ]);
+        json::to_string_pretty(&doc)
+    }
+}
+
+fn tensors_to_json(tensors: &[TensorMeta]) -> Json {
+    Json::Arr(
+        tensors
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("name", Json::Str(t.name.clone())),
+                    ("dtype", Json::Str(t.dtype.to_string())),
+                    ("shape", Json::arr_usize(&t.shape)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 fn parse_tensors(
@@ -195,5 +349,31 @@ mod tests {
     #[test]
     fn rejects_missing_artifacts_key() {
         assert!(Manifest::parse("{}").is_err());
+    }
+
+    #[test]
+    fn snapshot_section_round_trips_with_artifacts_intact() {
+        let mut m = Manifest::parse(SAMPLE).unwrap();
+        m.insert_snapshot(SnapshotMeta {
+            name: "serve_main".to_string(),
+            file: "serve_main.rfsnap".to_string(),
+            kind: "sharded".to_string(),
+            epoch: 1812,
+            n_classes: 1_000_000,
+            live_classes: 998_731,
+            bytes: 4096,
+            checksum: 0xdead_beef_cafe_f00d,
+        });
+        let text = m.to_json_string();
+        let back = Manifest::parse(&text).unwrap();
+        // AOT artifact survives re-rendering, field for field.
+        assert_eq!(back.get("demo"), m.get("demo"));
+        let s = back.snapshot("serve_main").unwrap();
+        assert_eq!(s.checksum, 0xdead_beef_cafe_f00d);
+        assert_eq!(s.epoch, 1812);
+        assert_eq!(s.kind, "sharded");
+        assert!(back.snapshot("nope").is_none());
+        // Manifests without the section parse to an empty map.
+        assert_eq!(Manifest::parse(SAMPLE).unwrap().snapshots().count(), 0);
     }
 }

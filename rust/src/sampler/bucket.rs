@@ -394,6 +394,76 @@ impl<M: FeatureMap> Sampler for BucketKernelSampler<M> {
     fn name(&self) -> &'static str {
         self.name
     }
+
+    fn snapshot_state(&self) -> Option<crate::snapshot::SamplerState> {
+        Some(crate::snapshot::SamplerState::Bucket(
+            crate::snapshot::BucketState {
+                map_fingerprint: crate::snapshot::map_fingerprint(&self.map),
+                tree: self.tree.to_state(),
+                classes_cols: self.classes.cols(),
+                classes: self.classes.data().to_vec(),
+                bucket_size: self.bucket_size,
+                num_buckets: self.num_buckets,
+                live_ids: self.live_ids.clone(),
+                slot_of: self.slot_of.clone(),
+                bucket_live: self.bucket_live.clone(),
+            },
+        ))
+    }
+
+    /// Restore into this sampler as a skeleton (same map, any class
+    /// content): the whole bucket structure — bucket-level tree, raw
+    /// f32 class table, live/slot/bucket accounting — is swapped in
+    /// wholesale after fingerprint + structural validation.
+    fn restore_state(
+        &mut self,
+        state: &crate::snapshot::SamplerState,
+    ) -> Result<(), crate::snapshot::SnapshotError> {
+        use crate::snapshot::{SamplerState, SnapshotError};
+        let SamplerState::Bucket(b) = state else {
+            return Err(SnapshotError::Unsupported(
+                "bucket sampler cannot restore a non-bucket snapshot",
+            ));
+        };
+        state.validate()?;
+        let computed = crate::snapshot::map_fingerprint(&self.map);
+        if computed != b.map_fingerprint {
+            return Err(SnapshotError::MapMismatch {
+                stored: b.map_fingerprint,
+                computed,
+            });
+        }
+        if b.tree.dim != self.map.output_dim() {
+            return Err(SnapshotError::Malformed(
+                "bucket restore: tree dim != map output dim",
+            ));
+        }
+        if b.classes_cols != self.map.input_dim() {
+            return Err(SnapshotError::Malformed(
+                "bucket restore: class cols != map input dim",
+            ));
+        }
+        let tree = KernelTree::from_state(&b.tree)?;
+        self.tree = tree;
+        self.classes = Matrix::from_vec(
+            b.classes.len() / b.classes_cols,
+            b.classes_cols,
+            b.classes.clone(),
+        );
+        self.bucket_size = b.bucket_size;
+        self.num_buckets = b.num_buckets;
+        self.live_ids = b.live_ids.clone();
+        self.slot_of = b.slot_of.clone();
+        self.bucket_live = b.bucket_live.clone();
+        let dim = self.map.output_dim();
+        self.scratch = RefCell::new(Scratch {
+            query: vec![0.0; dim],
+            phi_old: vec![0.0; dim],
+            phi_new: vec![0.0; dim],
+            masses: vec![0.0; self.bucket_size],
+        });
+        Ok(())
+    }
 }
 
 unsafe impl<M: FeatureMap> Send for BucketKernelSampler<M> {}

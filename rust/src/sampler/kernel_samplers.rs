@@ -396,6 +396,64 @@ impl<M: FeatureMap + Clone + 'static> Sampler for KernelSampler<M> {
     fn name(&self) -> &'static str {
         self.name
     }
+
+    fn snapshot_state(&self) -> Option<crate::snapshot::SamplerState> {
+        Some(crate::snapshot::SamplerState::Kernel(
+            crate::snapshot::KernelState {
+                map_fingerprint: crate::snapshot::map_fingerprint(&self.map),
+                tree: self.tree.to_state(),
+                classes: crate::snapshot::ClassStoreState::capture(
+                    &self.classes,
+                ),
+            },
+        ))
+    }
+
+    /// Restore into this sampler as a skeleton: the feature map must
+    /// fingerprint-match the capture-time map (the tree's sums are sums
+    /// of *that* map's φ values), but the current tree/classes content
+    /// is discarded wholesale — build the skeleton from a single dummy
+    /// row and restore replaces everything in `O(state)`.
+    fn restore_state(
+        &mut self,
+        state: &crate::snapshot::SamplerState,
+    ) -> Result<(), crate::snapshot::SnapshotError> {
+        use crate::snapshot::{SamplerState, SnapshotError};
+        let SamplerState::Kernel(k) = state else {
+            return Err(SnapshotError::Unsupported(
+                "kernel sampler cannot restore a non-kernel snapshot",
+            ));
+        };
+        state.validate()?;
+        let computed = crate::snapshot::map_fingerprint(&self.map);
+        if computed != k.map_fingerprint {
+            return Err(SnapshotError::MapMismatch {
+                stored: k.map_fingerprint,
+                computed,
+            });
+        }
+        if k.tree.dim != self.map.output_dim() {
+            return Err(SnapshotError::Malformed(
+                "kernel restore: tree dim != map output dim",
+            ));
+        }
+        if k.classes.cols() != self.map.input_dim() {
+            return Err(SnapshotError::Malformed(
+                "kernel restore: class cols != map input dim",
+            ));
+        }
+        let tree = KernelTree::from_state(&k.tree)?;
+        self.classes = k.classes.materialize();
+        self.tree = tree;
+        let (dim, d) = (self.map.output_dim(), self.map.input_dim());
+        self.scratch = RefCell::new(Scratch {
+            query: vec![0.0; dim],
+            phi_old: vec![0.0; dim],
+            phi_new: vec![0.0; dim],
+            row: vec![0.0; d],
+        });
+        Ok(())
+    }
 }
 
 // The scratch RefCell is only touched from &self methods on a single
@@ -618,6 +676,17 @@ impl Sampler for RffSampler {
     fn name(&self) -> &'static str {
         self.inner().name()
     }
+
+    fn snapshot_state(&self) -> Option<crate::snapshot::SamplerState> {
+        self.inner().snapshot_state()
+    }
+
+    fn restore_state(
+        &mut self,
+        state: &crate::snapshot::SamplerState,
+    ) -> Result<(), crate::snapshot::SnapshotError> {
+        self.inner_mut().restore_state(state)
+    }
 }
 
 /// Quadratic-softmax baseline [12]: `q_i ∝ α(hᵀc_i)² + β` via the exact
@@ -748,6 +817,17 @@ impl Sampler for QuadraticSampler {
 
     fn name(&self) -> &'static str {
         "quadratic"
+    }
+
+    fn snapshot_state(&self) -> Option<crate::snapshot::SamplerState> {
+        self.inner.snapshot_state()
+    }
+
+    fn restore_state(
+        &mut self,
+        state: &crate::snapshot::SamplerState,
+    ) -> Result<(), crate::snapshot::SnapshotError> {
+        self.inner.restore_state(state)
     }
 }
 

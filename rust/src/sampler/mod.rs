@@ -606,6 +606,30 @@ pub trait Sampler: Send {
 
     /// Human-readable name (matches the paper's method labels).
     fn name(&self) -> &'static str;
+
+    /// Capture the sampler's full durable state ([`crate::snapshot`]):
+    /// tree sums, slot tables, live set, quantized class store. `None`
+    /// for samplers without snapshot support (the default) — e.g. the
+    /// MIDX backend until it grows a codec of its own.
+    fn snapshot_state(&self) -> Option<crate::snapshot::SamplerState> {
+        None
+    }
+
+    /// Replace this sampler's state with a captured snapshot. The
+    /// receiver acts as a *skeleton*: it must have been built with the
+    /// same feature map + config (fingerprint-checked for kernel
+    /// samplers), but its class content is discarded wholesale — that
+    /// is what makes restore `O(state)` instead of `O(n · D)` rebuild.
+    /// Kind mismatches and map mismatches are typed errors; partially
+    /// applied restores never escape (implementations swap state in
+    /// only after all validation passes).
+    fn restore_state(
+        &mut self,
+        state: &crate::snapshot::SamplerState,
+    ) -> Result<(), crate::snapshot::SnapshotError> {
+        let _ = state;
+        Err(crate::snapshot::SnapshotError::Unsupported(self.name()))
+    }
 }
 
 /// A sampler whose shared state may be read from many threads at once —

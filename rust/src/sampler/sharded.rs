@@ -187,6 +187,81 @@ impl ShardedKernelTree {
         self.eps = src.eps;
     }
 
+    /// Capture the full two-level state as plain data for the durable
+    /// snapshot codec. The `assign` slot table is packed as
+    /// `shard << 32 | local` with [`crate::snapshot::ASSIGN_RETIRED`]
+    /// marking holes.
+    pub fn to_state(
+        &self,
+        map_fingerprint: u64,
+        target_shards: usize,
+        rebalance_threshold: f64,
+        classes: crate::snapshot::ClassStoreState,
+    ) -> crate::snapshot::ShardedState {
+        crate::snapshot::ShardedState {
+            map_fingerprint,
+            shards: self.shards.iter().map(KernelTree::to_state).collect(),
+            assign: self
+                .assign
+                .iter()
+                .map(|s| match s {
+                    Slot::Live { shard, local } => {
+                        ((*shard as u64) << 32) | *local as u64
+                    }
+                    Slot::Retired => crate::snapshot::ASSIGN_RETIRED,
+                })
+                .collect(),
+            globals: self.globals.clone(),
+            n: self.n,
+            live: self.live,
+            dim: self.dim,
+            eps: self.eps,
+            reserve: self.reserve,
+            target_shards,
+            rebalance_threshold,
+            classes,
+        }
+    }
+
+    /// Rebuild a sharded tree from captured state — `O(state size)`,
+    /// no φ recomputation. The state is re-validated here (same typed
+    /// failures as the codec's decode path) so in-process restores
+    /// cannot produce a structurally inconsistent tree.
+    pub fn from_state(
+        s: &crate::snapshot::ShardedState,
+    ) -> Result<ShardedKernelTree, crate::snapshot::SnapshotError> {
+        crate::snapshot::SamplerState::Sharded(s.clone()).validate()?;
+        let shards = s
+            .shards
+            .iter()
+            .map(KernelTree::from_state)
+            .collect::<Result<Vec<_>, _>>()?;
+        let assign = s
+            .assign
+            .iter()
+            .map(|&packed| {
+                if packed == crate::snapshot::ASSIGN_RETIRED {
+                    Slot::Retired
+                } else {
+                    Slot::Live {
+                        shard: (packed >> 32) as u32,
+                        local: (packed & 0xFFFF_FFFF) as u32,
+                    }
+                }
+            })
+            .collect();
+        Ok(ShardedKernelTree {
+            shards,
+            assign,
+            globals: s.globals.clone(),
+            n: s.n,
+            live: s.live,
+            dim: s.dim,
+            eps: s.eps,
+            reserve: s.reserve,
+        })
+    }
+
     /// Location of a live class; panics on retired slots (writes to a
     /// hole are always a caller bug — reads go through `probability`,
     /// which returns an exact 0 instead).
@@ -945,6 +1020,55 @@ impl<M: FeatureMap + Clone + 'static> Sampler for ShardedKernelSampler<M> {
 
     fn name(&self) -> &'static str {
         self.name
+    }
+
+    fn snapshot_state(&self) -> Option<crate::snapshot::SamplerState> {
+        Some(crate::snapshot::SamplerState::Sharded(self.tree.to_state(
+            crate::snapshot::map_fingerprint(&self.map),
+            self.target_shards,
+            self.rebalance_threshold,
+            crate::snapshot::ClassStoreState::capture(&self.classes),
+        )))
+    }
+
+    /// Restore into this sampler as a skeleton (build it from a single
+    /// dummy row with the same map + config): the fingerprint check
+    /// guarantees the snapshot's tree sums are sums of *this* map's φ
+    /// values, then the whole two-level tree + class store + rebalance
+    /// policy are swapped in wholesale, `O(state)`.
+    fn restore_state(
+        &mut self,
+        state: &crate::snapshot::SamplerState,
+    ) -> Result<(), crate::snapshot::SnapshotError> {
+        use crate::snapshot::{SamplerState, SnapshotError};
+        let SamplerState::Sharded(s) = state else {
+            return Err(SnapshotError::Unsupported(
+                "sharded sampler cannot restore a non-sharded snapshot",
+            ));
+        };
+        let computed = crate::snapshot::map_fingerprint(&self.map);
+        if computed != s.map_fingerprint {
+            return Err(SnapshotError::MapMismatch {
+                stored: s.map_fingerprint,
+                computed,
+            });
+        }
+        if s.dim != self.map.output_dim() {
+            return Err(SnapshotError::Malformed(
+                "sharded restore: tree dim != map output dim",
+            ));
+        }
+        if s.classes.cols() != self.map.input_dim() {
+            return Err(SnapshotError::Malformed(
+                "sharded restore: class cols != map input dim",
+            ));
+        }
+        let tree = ShardedKernelTree::from_state(s)?;
+        self.classes = s.classes.materialize();
+        self.tree = tree;
+        self.target_shards = s.target_shards.max(1);
+        self.rebalance_threshold = s.rebalance_threshold;
+        Ok(())
     }
 }
 

@@ -172,6 +172,30 @@ impl Sampler for UniformSampler {
     fn name(&self) -> &'static str {
         "uniform"
     }
+
+    fn snapshot_state(&self) -> Option<crate::snapshot::SamplerState> {
+        Some(crate::snapshot::SamplerState::Uniform(
+            crate::snapshot::UniformState {
+                live: self.live.clone(),
+                index: self.index.clone(),
+            },
+        ))
+    }
+
+    fn restore_state(
+        &mut self,
+        state: &crate::snapshot::SamplerState,
+    ) -> Result<(), crate::snapshot::SnapshotError> {
+        let crate::snapshot::SamplerState::Uniform(u) = state else {
+            return Err(crate::snapshot::SnapshotError::Unsupported(
+                "uniform sampler cannot restore a non-uniform snapshot",
+            ));
+        };
+        state.validate()?;
+        self.live = u.live.clone();
+        self.index = u.index.clone();
+        Ok(())
+    }
 }
 
 /// Log-uniform (Zipfian rank) prior, the classic language-model negative

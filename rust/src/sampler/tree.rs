@@ -397,6 +397,47 @@ impl KernelTree {
         self.eps = src.eps;
     }
 
+    /// Capture the tree's full state as plain data for the durable
+    /// snapshot codec ([`crate::snapshot`]). Exact: node sums are the
+    /// stored f32s bit for bit, so a restored tree walks identically.
+    pub fn to_state(&self) -> crate::snapshot::TreeState {
+        crate::snapshot::TreeState {
+            dim: self.dim,
+            n: self.n,
+            pad: self.pad,
+            left_sums: self.left_sums.clone(),
+            left_live: self.left_live.clone(),
+            total: self.total.clone(),
+            live: self.live,
+            retired: self.retired.clone(),
+            eps: self.eps,
+            growths: self.growths,
+        }
+    }
+
+    /// Rebuild a tree from captured state. `O(state size)` — no φ
+    /// recomputation, which is the whole point of warm restore. The
+    /// state is re-validated here even though the codec validates on
+    /// decode, so in-process callers (restore over RPC, tests) get the
+    /// same typed failure instead of a corrupt tree.
+    pub fn from_state(
+        s: &crate::snapshot::TreeState,
+    ) -> Result<KernelTree, crate::snapshot::SnapshotError> {
+        s.validate()?;
+        Ok(KernelTree {
+            dim: s.dim,
+            n: s.n,
+            pad: s.pad,
+            left_sums: s.left_sums.clone(),
+            left_live: s.left_live.clone(),
+            total: s.total.clone(),
+            live: s.live,
+            retired: s.retired.clone(),
+            eps: s.eps,
+            growths: s.growths,
+        })
+    }
+
     #[inline]
     fn left_sum(&self, node: usize) -> &[f32] {
         &self.left_sums[(node - 1) * self.dim..node * self.dim]

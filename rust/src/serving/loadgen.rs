@@ -34,6 +34,7 @@
 //! transports) mean frame and wave encode/decode overhead as BENCH JSON.
 
 use super::{BatcherOptions, MicroBatcher, SamplerServer, SamplerWriter};
+use crate::admin::{AdminError, AdminOp, AdminResponse, AdminSurface};
 use crate::cluster::{
     shard_partition, Cluster, ClusterError, ClusterOptions, ClusterQuery,
 };
@@ -41,7 +42,7 @@ use crate::json::Json;
 use crate::linalg::{simd, unit_vector, Matrix, QuantizeKind};
 use crate::metrics::live::{LiveRegistry, Stage};
 use crate::rng::Rng;
-use crate::sampler::Sampler;
+use crate::sampler::{Sampler, VocabError};
 use crate::transport::{wire, ClientFrameStats, TransportClient, TransportServer, VocabAdmin};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -97,14 +98,16 @@ impl ChurnSpec {
     }
 }
 
-/// [`VocabAdmin`] over a shared sampler writer: apply the mutation to
-/// the shadow, publish one epoch-versioned swap, echo the epoch. This
-/// is what [`crate::transport::TransportServer::bind_with_admin`]
-/// routes the `ADD_CLASSES`/`RETIRE_CLASSES` admin frames through —
-/// exported so any embedder of the transport reuses the same ingestion
-/// contract (wire embeddings are row-normalized here: the kernel
-/// samplers assume the paper's normalized regime, so a class added over
-/// uds lands identically to one added by the trainer).
+/// The immediate-publish [`AdminSurface`] over a shared sampler writer:
+/// apply the op to the shadow, publish one epoch-versioned swap, echo
+/// the epoch at which it is already visible. This is what
+/// [`crate::transport::TransportServer`] routes the admin frames
+/// (`ADD_CLASSES`/`RETIRE_CLASSES`/`STATE_SNAPSHOT`) through — exported
+/// so any embedder of the transport reuses the same ingestion contract
+/// (wire embeddings are row-normalized here: the kernel samplers assume
+/// the paper's normalized regime, so a class added over uds lands
+/// identically to one added by the trainer).
+#[derive(Clone)]
 pub struct SharedWriterAdmin {
     writer: Arc<Mutex<SamplerWriter>>,
     dim: usize,
@@ -118,6 +121,52 @@ impl SharedWriterAdmin {
     }
 }
 
+impl AdminSurface for SharedWriterAdmin {
+    fn admin(&mut self, op: AdminOp) -> Result<AdminResponse, AdminError> {
+        match op {
+            AdminOp::AddClasses { embeddings } => {
+                if embeddings.cols() != self.dim {
+                    return Err(AdminError::Vocab(VocabError(format!(
+                        "add_classes: embedding dim {} != serving dim {}",
+                        embeddings.cols(),
+                        self.dim
+                    ))));
+                }
+                // Same ingestion contract as SamplerService::extend_vocab:
+                // the kernel samplers assume the paper's
+                // normalized-embedding regime, so raw wire floats are
+                // normalized here — a class added over uds and one added
+                // by the trainer land identically.
+                let mut emb = embeddings;
+                emb.normalize_rows_in_place();
+                let mut w = self.writer.lock().unwrap();
+                let ids = w.apply_add_classes(emb)?;
+                let epoch = w.publish();
+                Ok(AdminResponse::Added { ids, epoch })
+            }
+            AdminOp::RetireClasses { ids } => {
+                let mut w = self.writer.lock().unwrap();
+                w.apply_retire_classes(ids)?;
+                Ok(AdminResponse::Retired { epoch: w.publish() })
+            }
+            AdminOp::Snapshot => {
+                let w = self.writer.lock().unwrap();
+                let snapshot = w
+                    .server()
+                    .snapshot_state()
+                    .ok_or(AdminError::Unsupported("served sampler kind"))?;
+                Ok(AdminResponse::Snapshot { snapshot: Box::new(snapshot) })
+            }
+            AdminOp::Restore { state } => {
+                let mut w = self.writer.lock().unwrap();
+                w.apply_restore(Arc::new(*state))?;
+                Ok(AdminResponse::Restored { epoch: w.publish() })
+            }
+        }
+    }
+}
+
+/// Legacy wire-admin dialect, delegating to the [`AdminSurface`] impl.
 impl VocabAdmin for SharedWriterAdmin {
     fn add_classes(
         &self,
@@ -125,28 +174,14 @@ impl VocabAdmin for SharedWriterAdmin {
         rows: usize,
         data: Vec<f32>,
     ) -> Result<(Vec<u32>, u64), String> {
-        if dim != self.dim {
-            return Err(format!(
-                "add_classes: embedding dim {dim} != serving dim {}",
-                self.dim
-            ));
-        }
-        let mut emb = Matrix::from_vec(rows, dim, data);
-        // Same ingestion contract as SamplerService::extend_vocab: the
-        // kernel samplers assume the paper's normalized-embedding
-        // regime, so raw wire floats are normalized here — a class
-        // added over uds and one added by the trainer land identically.
-        emb.normalize_rows_in_place();
-        let mut w = self.writer.lock().unwrap();
-        let ids = w.apply_add_classes(emb).map_err(|e| e.to_string())?;
-        let epoch = w.publish();
-        Ok((ids, epoch))
+        let emb = Matrix::from_vec(rows, dim, data);
+        let mut surface = self.clone();
+        surface.admin_add(emb).map_err(|e| e.to_string())
     }
 
     fn retire_classes(&self, ids: &[u32]) -> Result<u64, String> {
-        let mut w = self.writer.lock().unwrap();
-        w.apply_retire_classes(ids.to_vec()).map_err(|e| e.to_string())?;
-        Ok(w.publish())
+        let mut surface = self.clone();
+        surface.admin_retire(ids.to_vec()).map_err(|e| e.to_string())
     }
 }
 
@@ -315,6 +350,13 @@ pub struct LoadSpec {
     /// per-replica samplers were built over. Ignored when
     /// `replicas == 1`.
     pub virtual_nodes: usize,
+    /// Warm-start the serving stack from a durable snapshot
+    /// (`serve-bench --restore DIR:NAME`): the sampler passed to
+    /// [`run_closed_loop`] is treated as a skeleton (same construction
+    /// recipe — the snapshot's feature-map fingerprint must match) and
+    /// the captured state is swapped in wholesale before the first
+    /// reader starts. Single-node only.
+    pub restore: Option<std::sync::Arc<crate::snapshot::Snapshot>>,
 }
 
 impl Default for LoadSpec {
@@ -339,6 +381,7 @@ impl Default for LoadSpec {
             replicas: 1,
             hedge: false,
             virtual_nodes: 64,
+            restore: None,
         }
     }
 }
@@ -859,9 +902,19 @@ pub fn run_closed_loop(
         )
     })?;
     let name = serve.name().to_string();
-    let num_classes = serve.num_classes();
     let dim = spec.dim;
-    let (server, writer) = SamplerServer::new(serve);
+    let (server, mut writer) = SamplerServer::new(serve);
+    // Warm start: swap the snapshot state into the skeleton before any
+    // reader (or the writer loop) sees the stack — the restored epoch
+    // is published as one ordinary swap, so the run begins exactly
+    // where the snapshotted server left off.
+    if let Some(snap) = &spec.restore {
+        writer
+            .apply_restore(Arc::new(snap.state.clone()))
+            .map_err(|e| anyhow::anyhow!("serve load: restore: {e}"))?;
+        writer.publish();
+    }
+    let num_classes = server.snapshot().sampler().num_classes();
     let writer = Arc::new(Mutex::new(writer));
     let batcher = Arc::new(MicroBatcher::spawn(server.clone(), spec.batcher));
     let stop = Arc::new(AtomicBool::new(false));
@@ -871,16 +924,19 @@ pub fn run_closed_loop(
     let completed = Arc::new(AtomicU64::new(0));
 
     // The wire transports wrap the same batcher behind a socket, with
-    // the admin hook routed through the shared sampler writer so
-    // ADD_CLASSES/RETIRE_CLASSES frames work cross-process.
+    // the admin surface routed through the shared sampler writer so
+    // ADD_CLASSES/RETIRE_CLASSES/STATE_SNAPSHOT frames work
+    // cross-process.
     let transport = match spec.transport {
         TransportMode::Inproc => None,
         TransportMode::Uds => {
             let path = unique_uds_path(spec.seed);
-            let admin =
-                Arc::new(SharedWriterAdmin::new(Arc::clone(&writer), dim));
+            let admin = Arc::new(Mutex::new(SharedWriterAdmin::new(
+                Arc::clone(&writer),
+                dim,
+            )));
             Some(
-                TransportServer::bind_with_admin(
+                TransportServer::bind_with_surface(
                     &path,
                     Arc::clone(&batcher),
                     admin,
@@ -889,10 +945,12 @@ pub fn run_closed_loop(
             )
         }
         TransportMode::Tcp => {
-            let admin =
-                Arc::new(SharedWriterAdmin::new(Arc::clone(&writer), dim));
+            let admin = Arc::new(Mutex::new(SharedWriterAdmin::new(
+                Arc::clone(&writer),
+                dim,
+            )));
             Some(
-                TransportServer::bind_tcp_with_admin(
+                TransportServer::bind_tcp_with_surface(
                     &spec.listen,
                     Arc::clone(&batcher),
                     admin,
@@ -1398,6 +1456,11 @@ pub fn run_cluster_closed_loop(
     anyhow::ensure!(spec.top_k >= 1, "cluster load: need top_k ≥ 1");
     anyhow::ensure!(spec.mix.total() > 0, "cluster load: empty request mix");
     anyhow::ensure!(
+        spec.restore.is_none(),
+        "cluster load: --restore is single-node (per-replica snapshots \
+         are fetched and restored through Cluster::bootstrap_replica)"
+    );
+    anyhow::ensure!(
         spec.wave >= 1 && spec.wave <= crate::transport::MAX_IN_FLIGHT / 2,
         "cluster load: wave must be in 1..={} (burst sub-batches must \
          stay under the server's in-flight shed cap)",
@@ -1430,12 +1493,15 @@ pub fn run_cluster_closed_loop(
         let (server, writer) = SamplerServer::new(serve);
         let writer = Arc::new(Mutex::new(writer));
         let batcher = Arc::new(MicroBatcher::spawn(server.clone(), spec.batcher));
-        let admin = Arc::new(SharedWriterAdmin::new(Arc::clone(&writer), dim));
+        let admin = Arc::new(Mutex::new(SharedWriterAdmin::new(
+            Arc::clone(&writer),
+            dim,
+        )));
         let transport = match spec.transport {
             TransportMode::Inproc => unreachable!("validated wire-only"),
             TransportMode::Uds => {
                 let path = unique_uds_path(spec.seed);
-                TransportServer::bind_with_admin(
+                TransportServer::bind_with_surface(
                     &path,
                     Arc::clone(&batcher),
                     admin,
@@ -1448,7 +1514,7 @@ pub fn run_cluster_closed_loop(
                 // Every replica needs its own port, so the in-process
                 // cluster always asks the kernel (spec.listen would
                 // collide past the first replica).
-                TransportServer::bind_tcp_with_admin(
+                TransportServer::bind_tcp_with_surface(
                     "127.0.0.1:0",
                     Arc::clone(&batcher),
                     admin,
@@ -1865,6 +1931,7 @@ mod tests {
                 replicas: 1,
                 hedge: false,
                 virtual_nodes: 64,
+                restore: None,
             },
         )
         .unwrap();
@@ -1943,6 +2010,7 @@ mod tests {
                 replicas: 1,
                 hedge: false,
                 virtual_nodes: 64,
+                restore: None,
             },
         )
         .unwrap();
@@ -2013,6 +2081,7 @@ mod tests {
                 replicas: 1,
                 hedge: false,
                 virtual_nodes: 64,
+                restore: None,
             },
         )
         .unwrap();
@@ -2059,6 +2128,7 @@ mod tests {
                     replicas: 1,
                     hedge: false,
                     virtual_nodes: 64,
+                    restore: None,
                 },
             )
             .unwrap();
@@ -2122,6 +2192,7 @@ mod tests {
                 replicas: 2,
                 hedge: false,
                 virtual_nodes: 64,
+                restore: None,
             },
         )
         .unwrap();
@@ -2228,6 +2299,7 @@ mod tests {
                     replicas: 1,
                     hedge: false,
                     virtual_nodes: 64,
+                    restore: None,
                 },
             )
             .unwrap();

@@ -40,6 +40,14 @@
 //!
 //! Memory: double buffering keeps exactly two full sampler states alive
 //! (published + shadow) — the inherent cost of never blocking readers.
+//!
+//! Durability: [`SamplerServer::snapshot_state`] captures the published
+//! sampler's full state as a [`crate::snapshot::Snapshot`];
+//! [`SamplerWriter::apply_restore`] stages a full-state restore through
+//! the same replay log as churn, so a restore becomes visible as one
+//! epoch swap and readers never observe partial state. Both are reached
+//! uniformly through the [`crate::admin::AdminSurface`] ops on
+//! [`DoubleBufferedSampler`] and [`SharedWriterAdmin`].
 
 mod batcher;
 mod loadgen;

@@ -48,6 +48,10 @@ enum StagedOp {
     Update { ids: Vec<u32>, embeddings: Matrix },
     Add { embeddings: Matrix },
     Retire { ids: Vec<u32> },
+    /// Full state replacement from a durable snapshot
+    /// ([`crate::snapshot`]). Shared via `Arc` so the replay copy costs
+    /// a pointer, not a second `O(n·D)` state.
+    Restore { state: Arc<crate::snapshot::SamplerState> },
 }
 
 /// How many yield rounds the writer spends waiting for stragglers to drop
@@ -170,6 +174,17 @@ impl SamplerServer {
     pub fn top_k(&self, h: &[f32], k: usize) -> Vec<(u32, f64)> {
         self.snapshot().sampler().top_k(h, k)
     }
+
+    /// Capture the published sampler's full durable state, tagged with
+    /// the epoch it was captured at ([`crate::snapshot::Snapshot`]).
+    /// Reads the pinned snapshot only — the writer is never involved,
+    /// so capture runs concurrently with serving traffic. `None` when
+    /// the sampler kind has no snapshot support.
+    pub fn snapshot_state(&self) -> Option<crate::snapshot::Snapshot> {
+        let snap = self.snapshot();
+        let state = snap.sampler().snapshot_state()?;
+        Some(crate::snapshot::Snapshot { epoch: snap.epoch(), state })
+    }
 }
 
 /// The single writer: owns the shadow sampler, applies batched class
@@ -240,6 +255,26 @@ impl SamplerWriter {
             self.shadow.as_mut().expect("apply_retire_classes: no shadow");
         shadow.retire_classes(&ids)?;
         self.replay.push(StagedOp::Retire { ids });
+        Ok(())
+    }
+
+    /// Stage a **full state restore** from a durable snapshot
+    /// ([`crate::snapshot`]): the shadow's state is replaced wholesale
+    /// (validated + fingerprint-checked by the sampler's
+    /// [`crate::sampler::Sampler::restore_state`]), and readers keep
+    /// serving the published snapshot untouched until the next
+    /// [`SamplerWriter::publish`] swaps the restored universe in as one
+    /// epoch step — a restore is a peer of churn in the replay log, so
+    /// partial state can never escape. On error the shadow is
+    /// unchanged (restore validates before mutating).
+    pub fn apply_restore(
+        &mut self,
+        state: Arc<crate::snapshot::SamplerState>,
+    ) -> Result<(), crate::snapshot::SnapshotError> {
+        self.reclaim_shadow();
+        let shadow = self.shadow.as_mut().expect("apply_restore: no shadow");
+        shadow.restore_state(&state)?;
+        self.replay.push(StagedOp::Restore { state });
         Ok(())
     }
 
@@ -318,6 +353,11 @@ impl SamplerWriter {
                             sampler
                                 .retire_classes(&ids)
                                 .expect("replay: retire_classes diverged");
+                        }
+                        StagedOp::Restore { state } => {
+                            sampler
+                                .restore_state(&state)
+                                .expect("replay: restore_state diverged");
                         }
                     }
                 }

@@ -12,8 +12,9 @@
 //! for fork-exact samplers.
 
 use super::{SamplerServer, SamplerSnapshot, SamplerWriter};
+use crate::admin::{AdminError, AdminOp, AdminResponse, AdminSurface};
 use crate::linalg::Matrix;
-use crate::sampler::{Sampler, ServeSampler};
+use crate::sampler::{Sampler, ServeSampler, VocabError};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
@@ -24,13 +25,19 @@ enum WriterMsg {
     /// the next step).
     Extend {
         embeddings: Matrix,
-        ack: mpsc::SyncSender<Result<Vec<u32>, String>>,
+        ack: mpsc::SyncSender<Result<Vec<u32>, VocabError>>,
     },
     /// Structural shrink: applied to the shadow, acked so validation
     /// errors surface to the caller instead of killing the writer.
     Retire {
         ids: Vec<u32>,
-        ack: mpsc::SyncSender<Result<(), String>>,
+        ack: mpsc::SyncSender<Result<(), VocabError>>,
+    },
+    /// Full state replacement from a durable snapshot: staged on the
+    /// shadow like churn, visible at the next sync as one epoch swap.
+    Restore {
+        state: Arc<crate::snapshot::SamplerState>,
+        ack: mpsc::SyncSender<Result<(), crate::snapshot::SnapshotError>>,
     },
     Publish { ack: mpsc::SyncSender<u64> },
 }
@@ -113,31 +120,47 @@ impl DoubleBufferedSampler {
         self.dirty = true;
     }
 
-    /// Grow the served class universe: row `k` of `embeddings` becomes a
-    /// new class. Applied to the shadow (blocking briefly for the
-    /// assigned ids — vocabulary growth is rare and callers need the ids
-    /// to size their own tables); visible to draws after the next
-    /// [`DoubleBufferedSampler::sync`] as one epoch swap, so no reader
-    /// ever observes a half-grown tree.
+    /// Deprecated shim over [`AdminSurface::admin_add`], kept for one
+    /// release so embedders migrate at leisure.
+    #[deprecated(note = "use AdminSurface::admin_add (typed ops/errors)")]
     pub fn extend_vocab(
         &mut self,
         embeddings: Matrix,
     ) -> Result<Vec<u32>, String> {
-        let (ack_tx, ack_rx) = mpsc::sync_channel(1);
-        self.sender()
-            .send(WriterMsg::Extend { embeddings, ack: ack_tx })
-            .expect("serving writer died");
-        let ids = ack_rx.recv().expect("serving writer died")?;
-        self.dirty = true;
-        Ok(ids)
+        self.admin_add(embeddings)
+            .map(|(ids, _epoch)| ids)
+            .map_err(|e| e.to_string())
     }
 
-    /// Retire live classes from the served universe (permanent holes);
-    /// visible at the next [`DoubleBufferedSampler::sync`].
+    /// Deprecated shim over [`AdminSurface::admin_retire`], kept for one
+    /// release so embedders migrate at leisure.
+    #[deprecated(note = "use AdminSurface::admin_retire (typed ops/errors)")]
     pub fn retire_classes(&mut self, ids: Vec<u32>) -> Result<(), String> {
+        self.admin_retire(ids).map(|_epoch| ()).map_err(|e| e.to_string())
+    }
+
+    /// Capture the pinned sampler's full durable state tagged with the
+    /// pinned epoch ([`crate::snapshot::Snapshot`]). Staged-but-unsynced
+    /// churn is *not* included — call [`DoubleBufferedSampler::sync`]
+    /// first if you need it. `None` when the sampler kind has no
+    /// snapshot support.
+    pub fn snapshot(&self) -> Option<crate::snapshot::Snapshot> {
+        let pinned = self.pinned();
+        let state = pinned.sampler().snapshot_state()?;
+        Some(crate::snapshot::Snapshot { epoch: pinned.epoch(), state })
+    }
+
+    /// Stage a full state restore from a durable snapshot; like churn it
+    /// becomes visible at the next [`DoubleBufferedSampler::sync`] as one
+    /// epoch swap, so draws never observe partial state. On `Err` the
+    /// served state is unchanged.
+    pub fn restore(
+        &mut self,
+        state: Arc<crate::snapshot::SamplerState>,
+    ) -> Result<(), crate::snapshot::SnapshotError> {
         let (ack_tx, ack_rx) = mpsc::sync_channel(1);
         self.sender()
-            .send(WriterMsg::Retire { ids, ack: ack_tx })
+            .send(WriterMsg::Restore { state, ack: ack_tx })
             .expect("serving writer died");
         ack_rx.recv().expect("serving writer died")?;
         self.dirty = true;
@@ -193,6 +216,50 @@ impl DoubleBufferedSampler {
     }
 }
 
+/// The staged-surface impl of the unified admin API: universe churn and
+/// restores are applied to the serving shadow and become visible at the
+/// next [`DoubleBufferedSampler::sync`] as one epoch swap; the `epoch`
+/// in responses is therefore the *currently pinned* epoch (the op lands
+/// one sync later). [`AdminOp::Snapshot`] captures the pinned snapshot
+/// — sync first if staged churn must be included.
+impl AdminSurface for DoubleBufferedSampler {
+    fn admin(&mut self, op: AdminOp) -> Result<AdminResponse, AdminError> {
+        match op {
+            AdminOp::AddClasses { embeddings } => {
+                // Blocking briefly for the assigned ids — vocabulary
+                // growth is rare and callers need the ids to size their
+                // own tables before the next step.
+                let (ack_tx, ack_rx) = mpsc::sync_channel(1);
+                self.sender()
+                    .send(WriterMsg::Extend { embeddings, ack: ack_tx })
+                    .expect("serving writer died");
+                let ids = ack_rx.recv().expect("serving writer died")?;
+                self.dirty = true;
+                Ok(AdminResponse::Added { ids, epoch: self.pinned().epoch() })
+            }
+            AdminOp::RetireClasses { ids } => {
+                let (ack_tx, ack_rx) = mpsc::sync_channel(1);
+                self.sender()
+                    .send(WriterMsg::Retire { ids, ack: ack_tx })
+                    .expect("serving writer died");
+                ack_rx.recv().expect("serving writer died")?;
+                self.dirty = true;
+                Ok(AdminResponse::Retired { epoch: self.pinned().epoch() })
+            }
+            AdminOp::Snapshot => {
+                let snapshot = self.snapshot().ok_or(
+                    AdminError::Unsupported("double-buffered sampler kind"),
+                )?;
+                Ok(AdminResponse::Snapshot { snapshot: Box::new(snapshot) })
+            }
+            AdminOp::Restore { state } => {
+                self.restore(Arc::new(*state))?;
+                Ok(AdminResponse::Restored { epoch: self.pinned().epoch() })
+            }
+        }
+    }
+}
+
 impl Drop for DoubleBufferedSampler {
     fn drop(&mut self) {
         // Closing the channel ends the writer loop.
@@ -210,16 +277,13 @@ fn writer_loop(mut writer: SamplerWriter, rx: &mpsc::Receiver<WriterMsg>) {
                 writer.apply_updates(ids, embeddings);
             }
             WriterMsg::Extend { embeddings, ack } => {
-                let res = writer
-                    .apply_add_classes(embeddings)
-                    .map_err(|e| e.to_string());
-                let _ = ack.send(res);
+                let _ = ack.send(writer.apply_add_classes(embeddings));
             }
             WriterMsg::Retire { ids, ack } => {
-                let res = writer
-                    .apply_retire_classes(ids)
-                    .map_err(|e| e.to_string());
-                let _ = ack.send(res);
+                let _ = ack.send(writer.apply_retire_classes(ids));
+            }
+            WriterMsg::Restore { state, ack } => {
+                let _ = ack.send(writer.apply_restore(state));
             }
             WriterMsg::Publish { ack } => {
                 let epoch = writer.publish();
@@ -298,9 +362,10 @@ mod tests {
             let v = unit_vector(&mut rng, d);
             emb.row_mut(r).copy_from_slice(&v);
         }
-        let ids = served.extend_vocab(emb).unwrap();
+        let (ids, epoch0) = served.admin_add(emb).unwrap();
         assert_eq!(ids, vec![n as u32, n as u32 + 1]);
-        served.retire_classes(vec![5]).unwrap();
+        assert_eq!(epoch0, 0, "staged surface reports the pinned epoch");
+        served.admin_retire(vec![5]).unwrap();
         // Not yet visible on the pinned snapshot...
         assert_eq!(served.sampler().num_classes(), n);
         assert!(served.sampler().probability(&h, 5) > 0.0);
@@ -313,9 +378,12 @@ mod tests {
             .map(|i| served.sampler().probability(&h, i))
             .sum();
         assert!((total - 1.0).abs() < 1e-6, "Σq = {total}");
-        // Validation errors surface as Err, and the writer survives.
-        assert!(served.retire_classes(vec![5]).is_err(), "double retire");
-        assert!(served.retire_classes(vec![9999]).is_err(), "out of range");
+        // Validation errors surface as typed Err, and the writer survives.
+        assert!(matches!(
+            served.admin_retire(vec![5]),
+            Err(AdminError::Vocab(_))
+        ), "double retire");
+        assert!(served.admin_retire(vec![9999]).is_err(), "out of range");
         served.stage_updates(
             vec![ids[0]],
             Matrix::from_vec(1, d, h.clone()),
@@ -330,5 +398,66 @@ mod tests {
         assert_eq!(served.sync(), 0);
         assert_eq!(served.sync(), 0);
         assert_eq!(served.stats().publishes, 0);
+    }
+
+    #[test]
+    fn snapshot_then_restore_round_trips_through_the_writer() {
+        let n = 40;
+        let d = 6;
+        let reference = sharded(n, d, 630);
+        let mut served = DoubleBufferedSampler::new(&reference).unwrap();
+        let mut rng = Rng::seeded(631);
+        let h = unit_vector(&mut rng, d);
+
+        // Churn, sync, then capture the durable state at epoch 1.
+        served.admin_retire(vec![3, 17]).unwrap();
+        assert_eq!(served.sync(), 1);
+        let snap = served.admin_snapshot().expect("sharded snapshots");
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(snap.state.live_classes(), n - 2);
+
+        // Diverge: more churn lands at epoch 2.
+        served.admin_retire(vec![8]).unwrap();
+        assert_eq!(served.sync(), 2);
+        assert_eq!(served.sampler().probability(&h, 8), 0.0);
+
+        // Restore rewinds to the captured universe at the next sync —
+        // one epoch swap, never a partial state.
+        served.admin_restore(snap.state.clone()).unwrap();
+        assert_eq!(served.sampler().live_classes(), n - 3, "not yet");
+        assert_eq!(served.sync(), 3);
+        assert_eq!(served.sampler().live_classes(), n - 2);
+        assert!(served.sampler().probability(&h, 8) > 0.0, "8 is back");
+        assert_eq!(served.sampler().probability(&h, 3), 0.0, "3 stays gone");
+        let total: f64 =
+            (0..n).map(|i| served.sampler().probability(&h, i)).sum();
+        assert!((total - 1.0).abs() < 1e-6, "Σq = {total}");
+
+        // The writer survives a rejected restore (wrong kind).
+        let bogus = crate::snapshot::SamplerState::Uniform(
+            crate::snapshot::UniformState { live: vec![0], index: vec![0] },
+        );
+        assert!(matches!(
+            served.admin_restore(bogus),
+            Err(AdminError::Snapshot(_))
+        ));
+        served.admin_retire(vec![9]).unwrap();
+        assert_eq!(served.sync(), 4, "writer alive after rejected restore");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_answer() {
+        let reference = sharded(16, 4, 640);
+        let mut served = DoubleBufferedSampler::new(&reference).unwrap();
+        let mut rng = Rng::seeded(641);
+        let mut emb = Matrix::zeros(1, 4);
+        emb.row_mut(0).copy_from_slice(&unit_vector(&mut rng, 4));
+        let ids = served.extend_vocab(emb).unwrap();
+        assert_eq!(ids, vec![16]);
+        served.retire_classes(vec![2]).unwrap();
+        assert!(served.retire_classes(vec![99]).unwrap_err().contains("admin"));
+        assert_eq!(served.sync(), 1);
+        assert_eq!(served.sampler().live_classes(), 16);
     }
 }

@@ -1,0 +1,1244 @@
+//! Durable sampler state: the versioned, checksummed binary snapshot
+//! codec (ROADMAP item 5b).
+//!
+//! A [`Snapshot`] captures the **full** state of one sampler — tree
+//! node sums, slot/assignment tables, the live set, the quantized
+//! [`ClassStore`], the serving epoch, and the capacity reservation —
+//! as plain data ([`SamplerState`]), decoupled from the feature map:
+//! maps are cheap to rebuild from config + seed, while the `O(n·D)`
+//! tree is exactly what a cold start cannot afford to recompute. A
+//! [`map_fingerprint`] (FNV-1a over φ of a deterministic probe vector)
+//! is stored alongside so restoring into a skeleton built with the
+//! *wrong* map fails with a typed error instead of silently serving a
+//! perturbed distribution.
+//!
+//! ## Wire format (version 1)
+//!
+//! ```text
+//! [ magic  8B "RFSNAP\0\0" ]
+//! [ version u32 LE         ]   decoder rejects > SNAPSHOT_VERSION
+//! [ epoch   u64 LE         ]   serving epoch at capture
+//! [ kind    u8             ]   SamplerState discriminant
+//! [ payload ...            ]   kind-specific, length-prefixed fields
+//! [ checksum u64 LE        ]   FNV-1a 64 over everything above
+//! ```
+//!
+//! All integers little-endian; `Vec` fields are `u64` length-prefixed.
+//! The checksum trailer covers magic through payload, so truncation,
+//! bit rot, and version skew each surface as a distinct
+//! [`SnapshotError`] — never a panic (corruption tests pin this).
+//!
+//! **Versioning policy**: the version bumps only on layout changes;
+//! decoders must read every version ≤ their own and reject newer ones
+//! with [`SnapshotError::FutureVersion`] (forward compatibility is
+//! explicitly *not* promised — a snapshot is a warm-start artifact,
+//! not an archival format).
+//!
+//! Snapshots are registered through [`crate::runtime::manifest`] (a
+//! `snapshots` section beside the AOT `artifacts`), fetched over the
+//! wire via the v3 `STATE_SNAPSHOT` chunked admin frame, and staged
+//! into serving through [`crate::serving::SamplerWriter`] so readers
+//! never observe partial state. See the crate-level Durability docs.
+
+use crate::featmap::FeatureMap;
+use crate::linalg::{ClassStore, Matrix};
+use std::fmt;
+use std::path::Path;
+
+/// Leading bytes of every snapshot file/stream.
+pub const SNAPSHOT_MAGIC: [u8; 8] = *b"RFSNAP\0\0";
+
+/// Current encoder version; decoders accept `1..=SNAPSHOT_VERSION`.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Typed snapshot failures. Decoding never panics: every corruption
+/// mode maps to one of these.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SnapshotError {
+    /// The byte stream ended before the declared structure did.
+    Truncated,
+    /// Leading bytes are not [`SNAPSHOT_MAGIC`].
+    BadMagic,
+    /// Encoded by a newer build than this decoder understands.
+    FutureVersion { found: u32, max: u32 },
+    /// FNV-1a trailer mismatch (bit rot or a torn write).
+    BadChecksum { stored: u64, computed: u64 },
+    /// Structurally invalid payload (lengths/invariants violated).
+    Malformed(&'static str),
+    /// The restoring sampler's feature map does not reproduce the φ
+    /// fingerprint stored at capture time.
+    MapMismatch { stored: u64, computed: u64 },
+    /// The target sampler kind cannot restore this state (or does not
+    /// support snapshots at all).
+    Unsupported(&'static str),
+    /// Filesystem failure reading/writing the snapshot artifact.
+    Io(String),
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Truncated => write!(f, "snapshot truncated"),
+            SnapshotError::BadMagic => write!(f, "snapshot: bad magic"),
+            SnapshotError::FutureVersion { found, max } => write!(
+                f,
+                "snapshot version {found} is newer than supported {max}"
+            ),
+            SnapshotError::BadChecksum { stored, computed } => write!(
+                f,
+                "snapshot checksum mismatch: stored {stored:#018x}, \
+                 computed {computed:#018x}"
+            ),
+            SnapshotError::Malformed(what) => {
+                write!(f, "snapshot malformed: {what}")
+            }
+            SnapshotError::MapMismatch { stored, computed } => write!(
+                f,
+                "snapshot feature-map fingerprint mismatch: stored \
+                 {stored:#018x}, this map computes {computed:#018x}"
+            ),
+            SnapshotError::Unsupported(who) => {
+                write!(f, "snapshot unsupported by sampler '{who}'")
+            }
+            SnapshotError::Io(e) => write!(f, "snapshot io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+impl From<std::io::Error> for SnapshotError {
+    fn from(e: std::io::Error) -> Self {
+        SnapshotError::Io(e.to_string())
+    }
+}
+
+/// FNV-1a 64-bit — std-only, streaming-friendly, good enough to catch
+/// torn writes and bit rot (not adversarial tampering).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Deterministic probe vector for [`map_fingerprint`]: a fixed
+/// xorshift-derived unit vector of dimension `d`, identical on every
+/// build and platform (pure integer generation, then one normalize).
+pub fn probe_vector(d: usize) -> Vec<f32> {
+    let mut x = 0x9e37_79b9_7f4a_7c15u64 ^ (d as u64);
+    let mut v: Vec<f32> = (0..d)
+        .map(|_| {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            // Map to (-1, 1) via the top 24 bits.
+            ((x >> 40) as f32 / 8_388_608.0) - 1.0
+        })
+        .collect();
+    let norm = v.iter().map(|a| (*a as f64) * (*a as f64)).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for a in &mut v {
+            *a = (*a as f64 / norm) as f32;
+        }
+    }
+    v
+}
+
+/// Fingerprint of a feature map: FNV-1a over its dims plus the exact
+/// f32 bit patterns of `φ(probe)`. Two maps agree iff they compute the
+/// same φ on the probe — which is what restore correctness needs (the
+/// tree's sums are sums of this map's φ values).
+pub fn map_fingerprint<M: FeatureMap + ?Sized>(map: &M) -> u64 {
+    let probe = probe_vector(map.input_dim());
+    let phi = map.map(&probe);
+    let mut bytes =
+        Vec::with_capacity(16 + phi.len() * std::mem::size_of::<f32>());
+    bytes.extend_from_slice(&(map.input_dim() as u64).to_le_bytes());
+    bytes.extend_from_slice(&(map.output_dim() as u64).to_le_bytes());
+    for v in &phi {
+        bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fnv1a(&bytes)
+}
+
+// ---------------------------------------------------------------------------
+// Plain-data state mirrors
+// ---------------------------------------------------------------------------
+
+/// Full state of one [`crate::sampler::KernelTree`] (plain data; field
+/// semantics match the tree's own documentation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TreeState {
+    pub dim: usize,
+    pub n: usize,
+    pub pad: usize,
+    pub left_sums: Vec<f32>,
+    pub left_live: Vec<u32>,
+    pub total: Vec<f32>,
+    pub live: usize,
+    pub retired: Vec<bool>,
+    pub eps: f64,
+    pub growths: usize,
+}
+
+impl TreeState {
+    /// Structural invariants a decoded tree must satisfy before it can
+    /// back a live sampler. Every violation is `Malformed`, not a
+    /// panic.
+    pub fn validate(&self) -> Result<(), SnapshotError> {
+        if self.dim == 0 {
+            return Err(SnapshotError::Malformed("tree: dim == 0"));
+        }
+        if self.n == 0 {
+            return Err(SnapshotError::Malformed("tree: n == 0"));
+        }
+        if self.eps <= 0.0 || !self.eps.is_finite() {
+            return Err(SnapshotError::Malformed("tree: eps must be > 0"));
+        }
+        if !self.pad.is_power_of_two() || self.pad < 2 || self.pad < self.n {
+            return Err(SnapshotError::Malformed("tree: bad pad"));
+        }
+        if self.left_sums.len() != (self.pad - 1) * self.dim {
+            return Err(SnapshotError::Malformed("tree: left_sums length"));
+        }
+        if self.left_live.len() != self.pad - 1 {
+            return Err(SnapshotError::Malformed("tree: left_live length"));
+        }
+        if self.total.len() != self.dim {
+            return Err(SnapshotError::Malformed("tree: total length"));
+        }
+        if self.retired.len() != self.n {
+            return Err(SnapshotError::Malformed("tree: retired length"));
+        }
+        let holes = self.retired.iter().filter(|r| **r).count();
+        if self.live != self.n - holes {
+            return Err(SnapshotError::Malformed(
+                "tree: live count disagrees with retired flags",
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Quantized class-embedding table state (mirrors
+/// [`crate::linalg::ClassStore`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClassStoreState {
+    F32 { cols: usize, data: Vec<f32> },
+    F16 { cols: usize, data: Vec<u16> },
+    I8 { cols: usize, data: Vec<i8>, scales: Vec<f32> },
+}
+
+impl ClassStoreState {
+    pub fn cols(&self) -> usize {
+        match self {
+            ClassStoreState::F32 { cols, .. }
+            | ClassStoreState::F16 { cols, .. }
+            | ClassStoreState::I8 { cols, .. } => *cols,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            ClassStoreState::F32 { cols, data } => {
+                data.len() / (*cols).max(1)
+            }
+            ClassStoreState::F16 { cols, data } => {
+                data.len() / (*cols).max(1)
+            }
+            ClassStoreState::I8 { scales, .. } => scales.len(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), SnapshotError> {
+        let cols = self.cols();
+        if cols == 0 {
+            return Err(SnapshotError::Malformed("class store: cols == 0"));
+        }
+        match self {
+            ClassStoreState::F32 { data, .. } => {
+                if data.len() % cols != 0 {
+                    return Err(SnapshotError::Malformed(
+                        "class store: f32 data not a whole number of rows",
+                    ));
+                }
+            }
+            ClassStoreState::F16 { data, .. } => {
+                if data.len() % cols != 0 {
+                    return Err(SnapshotError::Malformed(
+                        "class store: f16 data not a whole number of rows",
+                    ));
+                }
+            }
+            ClassStoreState::I8 { data, scales, .. } => {
+                if data.len() != scales.len() * cols {
+                    return Err(SnapshotError::Malformed(
+                        "class store: i8 data/scales mismatch",
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Capture a live [`ClassStore`].
+    pub fn capture(store: &ClassStore) -> Self {
+        match store {
+            ClassStore::F32(m) => ClassStoreState::F32 {
+                cols: m.cols(),
+                data: m.data().to_vec(),
+            },
+            ClassStore::F16 { cols, data } => ClassStoreState::F16 {
+                cols: *cols,
+                data: data.clone(),
+            },
+            ClassStore::I8 { cols, data, scales } => ClassStoreState::I8 {
+                cols: *cols,
+                data: data.clone(),
+                scales: scales.clone(),
+            },
+        }
+    }
+
+    /// Rebuild a [`ClassStore`] (caller validates first).
+    pub fn materialize(&self) -> ClassStore {
+        match self {
+            ClassStoreState::F32 { cols, data } => ClassStore::F32(
+                Matrix::from_vec(data.len() / cols, *cols, data.clone()),
+            ),
+            ClassStoreState::F16 { cols, data } => {
+                ClassStore::F16 { cols: *cols, data: data.clone() }
+            }
+            ClassStoreState::I8 { cols, data, scales } => ClassStore::I8 {
+                cols: *cols,
+                data: data.clone(),
+                scales: scales.clone(),
+            },
+        }
+    }
+}
+
+/// Unsharded kernel sampler state ([`crate::sampler::RffSampler`] /
+/// `QuadraticSampler`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelState {
+    pub map_fingerprint: u64,
+    pub tree: TreeState,
+    pub classes: ClassStoreState,
+}
+
+/// Sharded kernel sampler state. `assign` packs the slot table as
+/// `shard << 32 | local`, with `u64::MAX` marking a retired hole.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardedState {
+    pub map_fingerprint: u64,
+    pub shards: Vec<TreeState>,
+    pub assign: Vec<u64>,
+    pub globals: Vec<Vec<u32>>,
+    pub n: usize,
+    pub live: usize,
+    pub dim: usize,
+    pub eps: f64,
+    /// Capacity pre-reservation carried through restore so post-restore
+    /// growth keeps its zero-doubling guarantee.
+    pub reserve: usize,
+    pub target_shards: usize,
+    pub rebalance_threshold: f64,
+    pub classes: ClassStoreState,
+}
+
+/// Slot-table sentinel for a retired global id in
+/// [`ShardedState::assign`].
+pub const ASSIGN_RETIRED: u64 = u64::MAX;
+
+/// Bucketed kernel sampler state (classes stored as a plain f32 table —
+/// the bucket sampler evaluates exact kernels on raw embeddings).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BucketState {
+    pub map_fingerprint: u64,
+    pub tree: TreeState,
+    pub classes_cols: usize,
+    pub classes: Vec<f32>,
+    pub bucket_size: usize,
+    pub num_buckets: usize,
+    pub live_ids: Vec<u32>,
+    pub slot_of: Vec<u32>,
+    pub bucket_live: Vec<u32>,
+}
+
+/// Uniform baseline state (live list + inverse index).
+#[derive(Clone, Debug, PartialEq)]
+pub struct UniformState {
+    pub live: Vec<u32>,
+    pub index: Vec<u32>,
+}
+
+/// Full captured state of one sampler, tagged by kind.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SamplerState {
+    Uniform(UniformState),
+    Kernel(KernelState),
+    Sharded(ShardedState),
+    Bucket(BucketState),
+}
+
+impl SamplerState {
+    /// Stable on-wire discriminant.
+    pub fn kind_byte(&self) -> u8 {
+        match self {
+            SamplerState::Uniform(_) => 0,
+            SamplerState::Kernel(_) => 1,
+            SamplerState::Sharded(_) => 2,
+            SamplerState::Bucket(_) => 3,
+        }
+    }
+
+    /// BENCH/manifest spelling of the kind.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            SamplerState::Uniform(_) => "uniform",
+            SamplerState::Kernel(_) => "kernel",
+            SamplerState::Sharded(_) => "sharded",
+            SamplerState::Bucket(_) => "bucket",
+        }
+    }
+
+    /// Total slots (live + retired holes).
+    pub fn num_classes(&self) -> usize {
+        match self {
+            SamplerState::Uniform(u) => u.index.len(),
+            SamplerState::Kernel(k) => k.tree.n,
+            SamplerState::Sharded(s) => s.n,
+            SamplerState::Bucket(b) => b.slot_of.len(),
+        }
+    }
+
+    /// Live (non-retired) classes.
+    pub fn live_classes(&self) -> usize {
+        match self {
+            SamplerState::Uniform(u) => u.live.len(),
+            SamplerState::Kernel(k) => k.tree.live,
+            SamplerState::Sharded(s) => s.live,
+            SamplerState::Bucket(b) => b.live_ids.len(),
+        }
+    }
+
+    /// Structural validation of the whole state (delegates per kind).
+    pub fn validate(&self) -> Result<(), SnapshotError> {
+        match self {
+            SamplerState::Uniform(u) => {
+                if u.live.is_empty() {
+                    return Err(SnapshotError::Malformed(
+                        "uniform: no live classes",
+                    ));
+                }
+                let n = u.index.len();
+                let mut seen = vec![false; n];
+                for (at, &id) in u.live.iter().enumerate() {
+                    let idx = id as usize;
+                    if idx >= n || seen[idx] {
+                        return Err(SnapshotError::Malformed(
+                            "uniform: bad live id",
+                        ));
+                    }
+                    seen[idx] = true;
+                    if u.index[idx] as usize != at {
+                        return Err(SnapshotError::Malformed(
+                            "uniform: inverse index disagrees",
+                        ));
+                    }
+                }
+                for (id, &at) in u.index.iter().enumerate() {
+                    if at != u32::MAX && !seen[id] {
+                        return Err(SnapshotError::Malformed(
+                            "uniform: index marks dead slot live",
+                        ));
+                    }
+                }
+                Ok(())
+            }
+            SamplerState::Kernel(k) => {
+                k.tree.validate()?;
+                k.classes.validate()?;
+                if k.classes.rows() != k.tree.n {
+                    return Err(SnapshotError::Malformed(
+                        "kernel: class rows != tree slots",
+                    ));
+                }
+                Ok(())
+            }
+            SamplerState::Sharded(s) => {
+                if s.shards.is_empty() {
+                    return Err(SnapshotError::Malformed("sharded: no shards"));
+                }
+                for t in &s.shards {
+                    t.validate()?;
+                    if t.dim != s.dim {
+                        return Err(SnapshotError::Malformed(
+                            "sharded: shard dim disagrees",
+                        ));
+                    }
+                }
+                if s.assign.len() != s.n {
+                    return Err(SnapshotError::Malformed(
+                        "sharded: assign length != n",
+                    ));
+                }
+                if s.globals.len() != s.shards.len() {
+                    return Err(SnapshotError::Malformed(
+                        "sharded: globals length != shard count",
+                    ));
+                }
+                let mut live = 0usize;
+                for (g, &slot) in s.assign.iter().enumerate() {
+                    if slot == ASSIGN_RETIRED {
+                        continue;
+                    }
+                    live += 1;
+                    let shard = (slot >> 32) as usize;
+                    let local = (slot & 0xFFFF_FFFF) as usize;
+                    if shard >= s.shards.len()
+                        || local >= s.globals[shard].len()
+                        || s.globals[shard][local] as usize != g
+                    {
+                        return Err(SnapshotError::Malformed(
+                            "sharded: assign/globals disagree",
+                        ));
+                    }
+                }
+                if live != s.live {
+                    return Err(SnapshotError::Malformed(
+                        "sharded: live count disagrees with assign",
+                    ));
+                }
+                for (sh, t) in s.shards.iter().enumerate() {
+                    if s.globals[sh].len() != t.n {
+                        return Err(SnapshotError::Malformed(
+                            "sharded: shard globals length != shard slots",
+                        ));
+                    }
+                }
+                s.classes.validate()?;
+                if s.classes.rows() != s.n {
+                    return Err(SnapshotError::Malformed(
+                        "sharded: class rows != n",
+                    ));
+                }
+                Ok(())
+            }
+            SamplerState::Bucket(b) => {
+                b.tree.validate()?;
+                if b.bucket_size == 0 {
+                    return Err(SnapshotError::Malformed(
+                        "bucket: bucket_size == 0",
+                    ));
+                }
+                if b.classes_cols == 0
+                    || b.classes.len() % b.classes_cols != 0
+                {
+                    return Err(SnapshotError::Malformed(
+                        "bucket: class table shape",
+                    ));
+                }
+                let n = b.classes.len() / b.classes_cols;
+                if b.slot_of.len() != n {
+                    return Err(SnapshotError::Malformed(
+                        "bucket: slot_of length != n",
+                    ));
+                }
+                if b.num_buckets != n.div_ceil(b.bucket_size)
+                    || b.tree.n != b.num_buckets
+                    || b.bucket_live.len() != b.num_buckets
+                {
+                    return Err(SnapshotError::Malformed(
+                        "bucket: bucket accounting",
+                    ));
+                }
+                if b.live_ids.len()
+                    != b.bucket_live.iter().map(|&c| c as usize).sum::<usize>()
+                {
+                    return Err(SnapshotError::Malformed(
+                        "bucket: live_ids disagree with bucket_live",
+                    ));
+                }
+                for (at, &id) in b.live_ids.iter().enumerate() {
+                    if id as usize >= n
+                        || b.slot_of[id as usize] as usize != at
+                    {
+                        return Err(SnapshotError::Malformed(
+                            "bucket: live/slot_of disagree",
+                        ));
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// One captured snapshot: sampler state plus the serving epoch at
+/// capture time (the replication-log replay point for bootstrap).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub epoch: u64,
+    pub state: SamplerState,
+}
+
+// ---------------------------------------------------------------------------
+// Binary codec
+// ---------------------------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32s(&mut self, vs: &[f32]) {
+        self.usize(vs.len());
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn u32s(&mut self, vs: &[u32]) {
+        self.usize(vs.len());
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn u64s(&mut self, vs: &[u64]) {
+        self.usize(vs.len());
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn u16s(&mut self, vs: &[u16]) {
+        self.usize(vs.len());
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn i8s(&mut self, vs: &[i8]) {
+        self.usize(vs.len());
+        for v in vs {
+            self.buf.push(*v as u8);
+        }
+    }
+    fn bools(&mut self, vs: &[bool]) {
+        self.usize(vs.len());
+        for v in vs {
+            self.buf.push(*v as u8);
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        if self.buf.len() - self.at < n {
+            return Err(SnapshotError::Truncated);
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, SnapshotError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, SnapshotError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    /// Length prefix, sanity-capped against remaining bytes so a
+    /// corrupt length can never trigger an absurd pre-allocation.
+    fn len(&mut self, elem: usize) -> Result<usize, SnapshotError> {
+        let n = self.u64()? as usize;
+        if n.checked_mul(elem).is_none_or(|b| b > self.buf.len() - self.at) {
+            return Err(SnapshotError::Truncated);
+        }
+        Ok(n)
+    }
+    fn usize_val(&mut self) -> Result<usize, SnapshotError> {
+        Ok(self.u64()? as usize)
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>, SnapshotError> {
+        let n = self.len(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn u32s(&mut self) -> Result<Vec<u32>, SnapshotError> {
+        let n = self.len(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn u64s(&mut self) -> Result<Vec<u64>, SnapshotError> {
+        let n = self.len(8)?;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn u16s(&mut self) -> Result<Vec<u16>, SnapshotError> {
+        let n = self.len(2)?;
+        let raw = self.take(n * 2)?;
+        Ok(raw
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn i8s(&mut self) -> Result<Vec<i8>, SnapshotError> {
+        let n = self.len(1)?;
+        Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
+    }
+    fn bools(&mut self) -> Result<Vec<bool>, SnapshotError> {
+        let n = self.len(1)?;
+        let raw = self.take(n)?;
+        let mut out = Vec::with_capacity(n);
+        for &b in raw {
+            match b {
+                0 => out.push(false),
+                1 => out.push(true),
+                _ => {
+                    return Err(SnapshotError::Malformed(
+                        "bool byte out of range",
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn write_tree(w: &mut Writer, t: &TreeState) {
+    w.usize(t.dim);
+    w.usize(t.n);
+    w.usize(t.pad);
+    w.f32s(&t.left_sums);
+    w.u32s(&t.left_live);
+    w.f32s(&t.total);
+    w.usize(t.live);
+    w.bools(&t.retired);
+    w.f64(t.eps);
+    w.usize(t.growths);
+}
+
+fn read_tree(r: &mut Reader<'_>) -> Result<TreeState, SnapshotError> {
+    Ok(TreeState {
+        dim: r.usize_val()?,
+        n: r.usize_val()?,
+        pad: r.usize_val()?,
+        left_sums: r.f32s()?,
+        left_live: r.u32s()?,
+        total: r.f32s()?,
+        live: r.usize_val()?,
+        retired: r.bools()?,
+        eps: r.f64()?,
+        growths: r.usize_val()?,
+    })
+}
+
+fn write_store(w: &mut Writer, s: &ClassStoreState) {
+    match s {
+        ClassStoreState::F32 { cols, data } => {
+            w.u8(0);
+            w.usize(*cols);
+            w.f32s(data);
+        }
+        ClassStoreState::F16 { cols, data } => {
+            w.u8(1);
+            w.usize(*cols);
+            w.u16s(data);
+        }
+        ClassStoreState::I8 { cols, data, scales } => {
+            w.u8(2);
+            w.usize(*cols);
+            w.i8s(data);
+            w.f32s(scales);
+        }
+    }
+}
+
+fn read_store(r: &mut Reader<'_>) -> Result<ClassStoreState, SnapshotError> {
+    match r.u8()? {
+        0 => Ok(ClassStoreState::F32 {
+            cols: r.usize_val()?,
+            data: r.f32s()?,
+        }),
+        1 => Ok(ClassStoreState::F16 {
+            cols: r.usize_val()?,
+            data: r.u16s()?,
+        }),
+        2 => Ok(ClassStoreState::I8 {
+            cols: r.usize_val()?,
+            data: r.i8s()?,
+            scales: r.f32s()?,
+        }),
+        _ => Err(SnapshotError::Malformed("unknown class-store kind")),
+    }
+}
+
+/// Serialize a snapshot to its self-checking binary form.
+pub fn encode(snap: &Snapshot) -> Vec<u8> {
+    let mut w = Writer { buf: Vec::with_capacity(4096) };
+    w.buf.extend_from_slice(&SNAPSHOT_MAGIC);
+    w.u32(SNAPSHOT_VERSION);
+    w.u64(snap.epoch);
+    w.u8(snap.state.kind_byte());
+    match &snap.state {
+        SamplerState::Uniform(u) => {
+            w.u32s(&u.live);
+            w.u32s(&u.index);
+        }
+        SamplerState::Kernel(k) => {
+            w.u64(k.map_fingerprint);
+            write_tree(&mut w, &k.tree);
+            write_store(&mut w, &k.classes);
+        }
+        SamplerState::Sharded(s) => {
+            w.u64(s.map_fingerprint);
+            w.usize(s.shards.len());
+            for t in &s.shards {
+                write_tree(&mut w, t);
+            }
+            w.u64s(&s.assign);
+            w.usize(s.globals.len());
+            for g in &s.globals {
+                w.u32s(g);
+            }
+            w.usize(s.n);
+            w.usize(s.live);
+            w.usize(s.dim);
+            w.f64(s.eps);
+            w.usize(s.reserve);
+            w.usize(s.target_shards);
+            w.f64(s.rebalance_threshold);
+            write_store(&mut w, &s.classes);
+        }
+        SamplerState::Bucket(b) => {
+            w.u64(b.map_fingerprint);
+            write_tree(&mut w, &b.tree);
+            w.usize(b.classes_cols);
+            w.f32s(&b.classes);
+            w.usize(b.bucket_size);
+            w.usize(b.num_buckets);
+            w.u32s(&b.live_ids);
+            w.u32s(&b.slot_of);
+            w.u32s(&b.bucket_live);
+        }
+    }
+    let sum = fnv1a(&w.buf);
+    w.u64(sum);
+    w.buf
+}
+
+/// Decode and structurally validate a snapshot byte stream. Rejects
+/// bad magic, future versions, checksum mismatches, truncation, and
+/// every malformed-payload mode with a typed error — never a panic.
+pub fn decode(bytes: &[u8]) -> Result<Snapshot, SnapshotError> {
+    if bytes.len() < SNAPSHOT_MAGIC.len() + 4 + 8 + 1 + 8 {
+        return Err(SnapshotError::Truncated);
+    }
+    if bytes[..SNAPSHOT_MAGIC.len()] != SNAPSHOT_MAGIC {
+        return Err(SnapshotError::BadMagic);
+    }
+    let body = &bytes[..bytes.len() - 8];
+    let stored = u64::from_le_bytes(
+        bytes[bytes.len() - 8..].try_into().unwrap(),
+    );
+    let computed = fnv1a(body);
+    // Version is checked before the checksum so a newer-format file
+    // reports FutureVersion (actionable) rather than BadChecksum.
+    let mut r = Reader { buf: body, at: SNAPSHOT_MAGIC.len() };
+    let version = r.u32()?;
+    if version > SNAPSHOT_VERSION {
+        return Err(SnapshotError::FutureVersion {
+            found: version,
+            max: SNAPSHOT_VERSION,
+        });
+    }
+    if version == 0 {
+        return Err(SnapshotError::Malformed("version 0"));
+    }
+    if stored != computed {
+        return Err(SnapshotError::BadChecksum { stored, computed });
+    }
+    let epoch = r.u64()?;
+    let kind = r.u8()?;
+    let state = match kind {
+        0 => SamplerState::Uniform(UniformState {
+            live: r.u32s()?,
+            index: r.u32s()?,
+        }),
+        1 => SamplerState::Kernel(KernelState {
+            map_fingerprint: r.u64()?,
+            tree: read_tree(&mut r)?,
+            classes: read_store(&mut r)?,
+        }),
+        2 => {
+            let map_fingerprint = r.u64()?;
+            let n_shards = r.len(1)?;
+            let mut shards = Vec::with_capacity(n_shards);
+            for _ in 0..n_shards {
+                shards.push(read_tree(&mut r)?);
+            }
+            let assign = r.u64s()?;
+            let n_globals = r.len(1)?;
+            let mut globals = Vec::with_capacity(n_globals);
+            for _ in 0..n_globals {
+                globals.push(r.u32s()?);
+            }
+            SamplerState::Sharded(ShardedState {
+                map_fingerprint,
+                shards,
+                assign,
+                globals,
+                n: r.usize_val()?,
+                live: r.usize_val()?,
+                dim: r.usize_val()?,
+                eps: r.f64()?,
+                reserve: r.usize_val()?,
+                target_shards: r.usize_val()?,
+                rebalance_threshold: r.f64()?,
+                classes: read_store(&mut r)?,
+            })
+        }
+        3 => SamplerState::Bucket(BucketState {
+            map_fingerprint: r.u64()?,
+            tree: read_tree(&mut r)?,
+            classes_cols: r.usize_val()?,
+            classes: r.f32s()?,
+            bucket_size: r.usize_val()?,
+            num_buckets: r.usize_val()?,
+            live_ids: r.u32s()?,
+            slot_of: r.u32s()?,
+            bucket_live: r.u32s()?,
+        }),
+        _ => return Err(SnapshotError::Malformed("unknown sampler kind")),
+    };
+    if r.at != body.len() {
+        return Err(SnapshotError::Malformed("trailing bytes"));
+    }
+    let snap = Snapshot { epoch, state };
+    snap.state.validate()?;
+    Ok(snap)
+}
+
+// ---------------------------------------------------------------------------
+// File IO + manifest registration
+// ---------------------------------------------------------------------------
+
+/// Write a snapshot file atomically (tmp + rename), returning the
+/// encoded byte count and checksum (the trailer value, reusable as the
+/// manifest's integrity field).
+pub fn write_file(
+    path: &Path,
+    snap: &Snapshot,
+) -> Result<(usize, u64), SnapshotError> {
+    let bytes = encode(snap);
+    let sum = u64::from_le_bytes(
+        bytes[bytes.len() - 8..].try_into().unwrap(),
+    );
+    let tmp = path.with_extension("rfsnap.tmp");
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok((bytes.len(), sum))
+}
+
+/// Read + decode a snapshot file.
+pub fn read_file(path: &Path) -> Result<Snapshot, SnapshotError> {
+    let bytes = std::fs::read(path)?;
+    decode(&bytes)
+}
+
+/// Save a snapshot under `dir` as `<name>.rfsnap` and register it in
+/// `dir/manifest.json` (creating or updating the manifest's
+/// `snapshots` section — the [`crate::runtime::manifest`] schema).
+pub fn save_with_manifest(
+    dir: &Path,
+    name: &str,
+    snap: &Snapshot,
+) -> Result<crate::runtime::manifest::SnapshotMeta, SnapshotError> {
+    use crate::runtime::manifest::{Manifest, SnapshotMeta};
+    std::fs::create_dir_all(dir)?;
+    let file = format!("{name}.rfsnap");
+    let (bytes, checksum) = write_file(&dir.join(&file), snap)?;
+    let meta = SnapshotMeta {
+        name: name.to_string(),
+        file,
+        kind: snap.state.kind_name().to_string(),
+        epoch: snap.epoch,
+        n_classes: snap.state.num_classes(),
+        live_classes: snap.state.live_classes(),
+        bytes,
+        checksum,
+    };
+    let manifest_path = dir.join("manifest.json");
+    let mut manifest = match std::fs::read_to_string(&manifest_path) {
+        Ok(text) => Manifest::parse(&text)
+            .map_err(|e| SnapshotError::Io(format!("manifest: {e}")))?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            Manifest::default()
+        }
+        Err(e) => return Err(e.into()),
+    };
+    manifest.insert_snapshot(meta.clone());
+    let tmp = manifest_path.with_extension("json.tmp");
+    std::fs::write(&tmp, manifest.to_json_string())?;
+    std::fs::rename(&tmp, &manifest_path)?;
+    Ok(meta)
+}
+
+/// Load a named snapshot through `dir/manifest.json`, cross-checking
+/// the manifest's recorded checksum against the file trailer.
+pub fn load_with_manifest(
+    dir: &Path,
+    name: &str,
+) -> Result<Snapshot, SnapshotError> {
+    use crate::runtime::manifest::Manifest;
+    let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+    let manifest = Manifest::parse(&text)
+        .map_err(|e| SnapshotError::Io(format!("manifest: {e}")))?;
+    let meta = manifest.snapshot(name).ok_or_else(|| {
+        SnapshotError::Io(format!("manifest has no snapshot '{name}'"))
+    })?;
+    let bytes = std::fs::read(dir.join(&meta.file))?;
+    if bytes.len() >= 8 {
+        let trailer = u64::from_le_bytes(
+            bytes[bytes.len() - 8..].try_into().unwrap(),
+        );
+        if trailer != meta.checksum {
+            return Err(SnapshotError::BadChecksum {
+                stored: meta.checksum,
+                computed: trailer,
+            });
+        }
+    }
+    decode(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_tree(n: usize, dim: usize) -> TreeState {
+        let pad = n.next_power_of_two().max(2);
+        TreeState {
+            dim,
+            n,
+            pad,
+            left_sums: (0..(pad - 1) * dim).map(|i| i as f32 * 0.5).collect(),
+            left_live: vec![0; pad - 1],
+            total: vec![1.25; dim],
+            live: n,
+            retired: vec![false; n],
+            eps: 1e-8,
+            growths: 2,
+        }
+    }
+
+    fn sample_snapshot() -> Snapshot {
+        Snapshot {
+            epoch: 42,
+            state: SamplerState::Kernel(KernelState {
+                map_fingerprint: 0xdead_beef,
+                tree: sample_tree(5, 3),
+                classes: ClassStoreState::F16 {
+                    cols: 2,
+                    data: vec![0x3C00; 10],
+                },
+            }),
+        }
+    }
+
+    #[test]
+    fn round_trips_every_kind() {
+        let kernel = sample_snapshot();
+        let uniform = Snapshot {
+            epoch: 7,
+            state: SamplerState::Uniform(UniformState {
+                live: vec![0, 2],
+                index: vec![0, u32::MAX, 1],
+            }),
+        };
+        let sharded = Snapshot {
+            epoch: 9,
+            state: SamplerState::Sharded(ShardedState {
+                map_fingerprint: 1,
+                shards: vec![sample_tree(2, 3), sample_tree(2, 3)],
+                assign: vec![0, 1, 1 << 32, (1 << 32) | 1],
+                globals: vec![vec![0, 1], vec![2, 3]],
+                n: 4,
+                live: 4,
+                dim: 3,
+                eps: 1e-8,
+                reserve: 16,
+                target_shards: 2,
+                rebalance_threshold: 2.0,
+                classes: ClassStoreState::I8 {
+                    cols: 2,
+                    data: vec![1; 8],
+                    scales: vec![0.5; 4],
+                },
+            }),
+        };
+        let bucket = Snapshot {
+            epoch: 3,
+            state: SamplerState::Bucket(BucketState {
+                map_fingerprint: 2,
+                tree: sample_tree(2, 3),
+                classes_cols: 2,
+                classes: vec![0.1; 6],
+                bucket_size: 2,
+                num_buckets: 2,
+                live_ids: vec![0, 1, 2],
+                slot_of: vec![0, 1, 2],
+                bucket_live: vec![2, 1],
+            }),
+        };
+        for snap in [kernel, uniform, sharded, bucket] {
+            let bytes = encode(&snap);
+            let back = decode(&bytes).expect("decode");
+            assert_eq!(back, snap);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = encode(&sample_snapshot());
+        bytes[0] ^= 0xFF;
+        assert_eq!(decode(&bytes), Err(SnapshotError::BadMagic));
+    }
+
+    #[test]
+    fn rejects_future_version_before_checksum() {
+        let mut bytes = encode(&sample_snapshot());
+        // Bump the version field; checksum is now stale too, but the
+        // decoder must report the version problem (it is actionable).
+        bytes[8] = 0xFF;
+        match decode(&bytes) {
+            Err(SnapshotError::FutureVersion { found, max }) => {
+                assert!(found > max);
+            }
+            other => panic!("expected FutureVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_flipped_bit_as_checksum_mismatch() {
+        let mut bytes = encode(&sample_snapshot());
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        assert!(matches!(
+            decode(&bytes),
+            Err(SnapshotError::BadChecksum { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_prefix_length() {
+        let bytes = encode(&sample_snapshot());
+        // Every strict prefix must fail *typed* — never panic. Short
+        // prefixes are Truncated; longer ones may surface as a
+        // checksum mismatch (the trailer moved) — both are acceptable,
+        // panics and successes are not.
+        for cut in 0..bytes.len() {
+            let r = decode(&bytes[..cut]);
+            assert!(r.is_err(), "prefix {cut} decoded successfully");
+        }
+    }
+
+    #[test]
+    fn rejects_absurd_length_prefix_without_allocating() {
+        let snap = sample_snapshot();
+        let mut bytes = encode(&snap);
+        // Overwrite the first vector length (tree.left_sums, right
+        // after magic+version+epoch+kind+fingerprint+dim+n+pad) with
+        // u64::MAX and re-seal the checksum: must be Truncated, not an
+        // OOM attempt.
+        let at = 8 + 4 + 8 + 1 + 8 + 24;
+        bytes[at..at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let body_len = bytes.len() - 8;
+        let sum = fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert_eq!(decode(&bytes), Err(SnapshotError::Truncated));
+    }
+
+    #[test]
+    fn validate_catches_live_count_drift() {
+        let mut snap = sample_snapshot();
+        if let SamplerState::Kernel(k) = &mut snap.state {
+            k.tree.live = 3; // n = 5, no retired flags ⇒ must be 5
+        }
+        let bytes = encode(&snap);
+        assert!(matches!(
+            decode(&bytes),
+            Err(SnapshotError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn probe_vector_is_deterministic_and_normalized() {
+        let a = probe_vector(24);
+        let b = probe_vector(24);
+        assert_eq!(a, b);
+        let norm: f64 =
+            a.iter().map(|v| *v as f64 * *v as f64).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-6);
+        // Different dims must not alias the same prefix.
+        assert_ne!(probe_vector(8)[..4], probe_vector(4)[..]);
+    }
+
+    #[test]
+    fn file_round_trip_with_manifest() {
+        let dir = std::env::temp_dir()
+            .join(format!("rfsnap-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let snap = sample_snapshot();
+        let meta = save_with_manifest(&dir, "unit", &snap).expect("save");
+        assert_eq!(meta.kind, "kernel");
+        assert_eq!(meta.n_classes, 5);
+        let back = load_with_manifest(&dir, "unit").expect("load");
+        assert_eq!(back, snap);
+        // Second snapshot lands beside the first in the same manifest.
+        let mut other = snap.clone();
+        other.epoch = 100;
+        save_with_manifest(&dir, "later", &other).expect("save 2");
+        let again = load_with_manifest(&dir, "unit").expect("reload");
+        assert_eq!(again.epoch, 42);
+        assert!(load_with_manifest(&dir, "nope").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -7,6 +7,7 @@
 
 use super::net::{Endpoint, Stream};
 use super::wire::{self, ProtocolError, Request, Response, ResponseFrame};
+use crate::admin::{AdminError, AdminOp, AdminResponse, AdminSurface};
 use crate::linalg::Matrix;
 use crate::sampler::NegativeDraw;
 use crate::serving::ServeReply;
@@ -342,6 +343,70 @@ impl TransportClient {
         }
     }
 
+    /// Fetch the server's full durable sampler state as one encoded
+    /// snapshot (wire v3 `STATE_SNAPSHOT`; the server must have been
+    /// bound with an [`AdminSurface`] hook). The server encodes the
+    /// state once under its pinned epoch and streams it back as chunks
+    /// sharing this request's id; this reassembles them and returns the
+    /// raw [`crate::snapshot::encode`] bytes plus that epoch — decode
+    /// with [`crate::snapshot::decode`], or hand the bytes straight to
+    /// [`crate::snapshot::write_file`] for a durable copy.
+    ///
+    /// `max_chunk == 0` accepts the server's default chunk size
+    /// ([`wire::MAX_SNAPSHOT_CHUNK`]); smaller values force multi-chunk
+    /// streams (tests, tiny-frame transports).
+    pub fn fetch_snapshot(
+        &mut self,
+        max_chunk: u32,
+    ) -> Result<(Vec<u8>, u64), ProtocolError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.send(id, &Request::SnapshotFetch { max_chunk })?;
+        let mut bytes: Vec<u8> = Vec::new();
+        let mut epoch = 0u64;
+        loop {
+            let (got_id, resp) = self.recv_any()?;
+            match resp {
+                Response::Error { code, message } => {
+                    return Err(ProtocolError::Remote { code, message });
+                }
+                _ if got_id != id => {
+                    return Err(ProtocolError::IdMismatch {
+                        sent: id,
+                        got: got_id,
+                    });
+                }
+                Response::SnapshotChunk { epoch: e, total, offset, data } => {
+                    if offset != bytes.len() as u64 {
+                        return Err(ProtocolError::Malformed(
+                            "snapshot chunk out of order",
+                        ));
+                    }
+                    if !bytes.is_empty() && e != epoch {
+                        return Err(ProtocolError::Malformed(
+                            "snapshot epoch changed mid-stream",
+                        ));
+                    }
+                    epoch = e;
+                    bytes.extend_from_slice(&data);
+                    if bytes.len() as u64 > total {
+                        return Err(ProtocolError::Malformed(
+                            "snapshot chunks exceed total",
+                        ));
+                    }
+                    if bytes.len() as u64 == total {
+                        return Ok((bytes, epoch));
+                    }
+                }
+                _ => {
+                    return Err(ProtocolError::Malformed(
+                        "response kind mismatch",
+                    ));
+                }
+            }
+        }
+    }
+
     /// Pipelined burst with single-request frames (wire v2 compatible):
     /// [`TransportClient::pipeline_waves`] with a wave size of 1.
     pub fn pipeline(
@@ -481,5 +546,47 @@ impl TransportClient {
             received += 1;
         }
         Ok(out.into_iter().map(|r| r.expect("filled above")).collect())
+    }
+}
+
+/// The wire-forwarding admin surface: the same typed ops that drive a
+/// local sampler writer drive a remote server over admin frames, so
+/// tooling written against [`AdminSurface`] is transport-agnostic.
+/// `Snapshot` fetches and decodes the chunked `STATE_SNAPSHOT` stream.
+/// `Restore` is deliberately **not** wire-exposed (a remote caller could
+/// otherwise replace a server's entire class universe with one
+/// unauthenticated frame); it answers
+/// [`AdminError::Unsupported`] — restores happen locally, on the process
+/// that owns the writer (CLI `--restore`, cluster bootstrap).
+impl AdminSurface for TransportClient {
+    fn admin(&mut self, op: AdminOp) -> Result<AdminResponse, AdminError> {
+        fn lift(e: ProtocolError) -> AdminError {
+            match e {
+                ProtocolError::Remote { code, message } => {
+                    AdminError::Remote { code, message }
+                }
+                other => AdminError::Transport(other.to_string()),
+            }
+        }
+        match op {
+            AdminOp::AddClasses { embeddings } => {
+                let (ids, epoch) =
+                    self.add_classes(&embeddings).map_err(lift)?;
+                Ok(AdminResponse::Added { ids, epoch })
+            }
+            AdminOp::RetireClasses { ids } => {
+                let epoch = self.retire_classes(&ids).map_err(lift)?;
+                Ok(AdminResponse::Retired { epoch })
+            }
+            AdminOp::Snapshot => {
+                let (bytes, _epoch) =
+                    self.fetch_snapshot(0).map_err(lift)?;
+                let snapshot = crate::snapshot::decode(&bytes)?;
+                Ok(AdminResponse::Snapshot { snapshot: Box::new(snapshot) })
+            }
+            AdminOp::Restore { .. } => {
+                Err(AdminError::Unsupported("wire admin (restore is local)"))
+            }
+        }
     }
 }

@@ -16,9 +16,13 @@
 //!   into one frame — one header parse and one length check per wave
 //!   instead of per request — with sub-request ids preserved and
 //!   per-sub-request errors isolated; v2 peers interoperate untouched.
-//!   The admin family carries class-universe mutations and the
-//!   read-only `STATS` telemetry scrape (wire v3; v2 peers get the
-//!   unknown-kind refusal). Framing violations decode to a typed
+//!   The admin family carries class-universe mutations, the read-only
+//!   `STATS` telemetry scrape, and the chunked `STATE_SNAPSHOT` durable
+//!   state fetch (wire v3; v2 peers get the unknown-kind refusal). All
+//!   admin frames route through one [`crate::admin::AdminSurface`] hook
+//!   ([`TransportServer::bind_with_surface`]); [`TransportClient`]
+//!   implements the same trait wire-forwarded, so admin tooling is
+//!   transport-agnostic. Framing violations decode to a typed
 //!   [`ProtocolError`] and close only the offending connection.
 //! * [`net`](self) (internal) — a socket-agnostic stream substrate: the
 //!   server and client are parameterized over unix-domain and TCP
@@ -55,4 +59,4 @@ mod server;
 pub use client::{ClientFrameStats, TransportClient};
 pub use net::Endpoint;
 pub use server::{TransportServer, TransportStats, VocabAdmin, MAX_IN_FLIGHT};
-pub use wire::{ProtocolError, Request, Response};
+pub use wire::{ProtocolError, Request, Response, MAX_SNAPSHOT_CHUNK};

@@ -38,14 +38,22 @@
 //! callbacks never block: pending batcher replies are bounded by the
 //! in-flight cap, and overload/error frames by the reader throttle.
 //!
-//! **Admin frames**: `ADD_CLASSES`/`RETIRE_CLASSES` route to an optional
-//! [`VocabAdmin`] hook (see [`TransportServer::bind_with_admin`]) that
-//! applies the mutation through the sampler writer as one epoch-versioned
-//! snapshot swap; without a hook they answer [`wire::ERR_SERVE`]. The
-//! read-only `STATS` frame is answered inline on every server (no hook
-//! needed): the batcher's serving snapshot
-//! ([`MicroBatcher::stats_json`]) merged with this transport's own
-//! counter section, encoded with the in-crate JSON emitter.
+//! **Admin frames**: `ADD_CLASSES`/`RETIRE_CLASSES`/`STATE_SNAPSHOT`
+//! route to an optional [`crate::admin::AdminSurface`] hook (see
+//! [`TransportServer::bind_with_surface`]) that applies the op through
+//! the sampler writer as one epoch-versioned snapshot swap; without a
+//! hook they answer [`wire::ERR_SERVE`]. A `STATE_SNAPSHOT` fetch
+//! captures the full durable sampler state once and streams it back as
+//! chunked [`wire::Response::SnapshotChunk`] frames sharing the request
+//! id — each chunk under [`wire::MAX_SNAPSHOT_CHUNK`], so arbitrarily
+//! large states respect the frame cap. The legacy [`VocabAdmin`] hook
+//! ([`TransportServer::bind_with_admin`]) is kept one release as a
+//! deprecated shim — it adapts into the surface but answers
+//! `STATE_SNAPSHOT` with [`wire::ERR_SERVE`]. The read-only `STATS`
+//! frame is answered inline on every server (no hook needed): the
+//! batcher's serving snapshot ([`MicroBatcher::stats_json`]) merged
+//! with this transport's own counter section, encoded with the in-crate
+//! JSON emitter.
 //!
 //! **Telemetry**: connection readers record the per-request `decode`
 //! stage (CPU-only frame parse, wave cost shared across sub-requests)
@@ -55,7 +63,9 @@
 
 use super::net::{Endpoint, Listener, Stream};
 use super::wire::{self, ProtocolError, RequestFrame, Response};
+use crate::admin::{AdminOp, AdminResponse, AdminSurface};
 use crate::json::Json;
+use crate::linalg::Matrix;
 use crate::metrics::live::Stage;
 use crate::serving::{MicroBatcher, QueryReply, SubmitReply};
 use std::io::{BufReader, Write};
@@ -91,13 +101,18 @@ const THROTTLE_GRACE: std::time::Duration = std::time::Duration::from_secs(2);
 /// byte bound is the shared [`wire::WAVE_SOFT_PAYLOAD`].
 const WAVE_PACK_MAX: usize = 256;
 
-/// Hook that applies admin (class-universe) mutations. Implemented over
+/// Legacy hook that applies admin (class-universe) mutations — the wire
+/// dialect that predates the unified [`AdminSurface`]. Implemented over
 /// the serving layer's `SamplerWriter` (see
 /// `crate::serving::run_closed_loop`): apply to the shadow, publish one
 /// epoch-versioned swap, return the epoch — readers can never observe a
 /// half-grown tree. Implementations own the ingestion contract for raw
 /// wire embeddings — normalize rows if the served sampler assumes the
 /// normalized-embedding regime (the in-crate impl does).
+///
+/// New embedders should implement [`AdminSurface`] and bind via
+/// [`TransportServer::bind_with_surface`] instead: the surface speaks
+/// typed ops/errors and additionally answers `STATE_SNAPSHOT` fetches.
 pub trait VocabAdmin: Send + Sync {
     /// Append `rows` classes (row-major `data`, width `dim`); returns
     /// the assigned ids and the publish epoch.
@@ -110,6 +125,42 @@ pub trait VocabAdmin: Send + Sync {
 
     /// Retire live classes; returns the publish epoch.
     fn retire_classes(&self, ids: &[u32]) -> Result<u64, String>;
+}
+
+/// Adapter giving a legacy [`VocabAdmin`] the [`AdminSurface`] shape so
+/// the server routes every admin frame through one hook type. Vocab
+/// churn delegates; snapshot/restore answer
+/// [`crate::admin::AdminError::Unsupported`] (the legacy dialect
+/// predates durability).
+struct LegacyVocabAdmin(Arc<dyn VocabAdmin>);
+
+impl AdminSurface for LegacyVocabAdmin {
+    fn admin(
+        &mut self,
+        op: AdminOp,
+    ) -> Result<AdminResponse, crate::admin::AdminError> {
+        use crate::admin::AdminError;
+        match op {
+            AdminOp::AddClasses { embeddings } => {
+                let (dim, rows) = (embeddings.cols(), embeddings.rows());
+                let (ids, epoch) = self
+                    .0
+                    .add_classes(dim, rows, embeddings.into_vec())
+                    .map_err(AdminError::Transport)?;
+                Ok(AdminResponse::Added { ids, epoch })
+            }
+            AdminOp::RetireClasses { ids } => {
+                let epoch = self
+                    .0
+                    .retire_classes(&ids)
+                    .map_err(AdminError::Transport)?;
+                Ok(AdminResponse::Retired { epoch })
+            }
+            AdminOp::Snapshot | AdminOp::Restore { .. } => {
+                Err(AdminError::Unsupported("legacy VocabAdmin hook"))
+            }
+        }
+    }
 }
 
 /// Transport-level counters (for tests and ops visibility).
@@ -140,7 +191,7 @@ pub struct TransportStats {
 
 struct Shared {
     batcher: Arc<MicroBatcher>,
-    admin: Option<Arc<dyn VocabAdmin>>,
+    admin: Option<Arc<Mutex<dyn AdminSurface + Send>>>,
     shutdown: AtomicBool,
     connections: AtomicU64,
     requests: AtomicU64,
@@ -226,14 +277,33 @@ impl TransportServer {
         Self::bind_uds_inner(path, batcher, None)
     }
 
-    /// [`TransportServer::bind`] plus a [`VocabAdmin`] hook, enabling the
-    /// `ADD_CLASSES`/`RETIRE_CLASSES` admin frames on every connection.
+    /// [`TransportServer::bind`] plus an [`AdminSurface`] hook, enabling
+    /// the `ADD_CLASSES`/`RETIRE_CLASSES`/`STATE_SNAPSHOT` admin frames
+    /// on every connection. The surface is behind a mutex because admin
+    /// mutations are writer-serialized by design — churn is rare and
+    /// epoch-published, never on the query hot path.
+    pub fn bind_with_surface(
+        path: impl AsRef<Path>,
+        batcher: Arc<MicroBatcher>,
+        surface: Arc<Mutex<dyn AdminSurface + Send>>,
+    ) -> std::io::Result<TransportServer> {
+        Self::bind_uds_inner(path, batcher, Some(surface))
+    }
+
+    /// [`TransportServer::bind`] plus a legacy [`VocabAdmin`] hook.
+    #[deprecated(
+        note = "use bind_with_surface (typed AdminSurface hook; also answers STATE_SNAPSHOT)"
+    )]
     pub fn bind_with_admin(
         path: impl AsRef<Path>,
         batcher: Arc<MicroBatcher>,
         admin: Arc<dyn VocabAdmin>,
     ) -> std::io::Result<TransportServer> {
-        Self::bind_uds_inner(path, batcher, Some(admin))
+        Self::bind_uds_inner(
+            path,
+            batcher,
+            Some(Arc::new(Mutex::new(LegacyVocabAdmin(admin)))),
+        )
     }
 
     /// Bind a TCP listener at `addr` (e.g. `"127.0.0.1:7411"`; port `0`
@@ -249,19 +319,35 @@ impl TransportServer {
         Self::bind_tcp_inner(addr, batcher, None)
     }
 
-    /// [`TransportServer::bind_tcp`] plus a [`VocabAdmin`] hook.
+    /// [`TransportServer::bind_tcp`] plus an [`AdminSurface`] hook.
+    pub fn bind_tcp_with_surface(
+        addr: &str,
+        batcher: Arc<MicroBatcher>,
+        surface: Arc<Mutex<dyn AdminSurface + Send>>,
+    ) -> std::io::Result<TransportServer> {
+        Self::bind_tcp_inner(addr, batcher, Some(surface))
+    }
+
+    /// [`TransportServer::bind_tcp`] plus a legacy [`VocabAdmin`] hook.
+    #[deprecated(
+        note = "use bind_tcp_with_surface (typed AdminSurface hook; also answers STATE_SNAPSHOT)"
+    )]
     pub fn bind_tcp_with_admin(
         addr: &str,
         batcher: Arc<MicroBatcher>,
         admin: Arc<dyn VocabAdmin>,
     ) -> std::io::Result<TransportServer> {
-        Self::bind_tcp_inner(addr, batcher, Some(admin))
+        Self::bind_tcp_inner(
+            addr,
+            batcher,
+            Some(Arc::new(Mutex::new(LegacyVocabAdmin(admin)))),
+        )
     }
 
     fn bind_uds_inner(
         path: impl AsRef<Path>,
         batcher: Arc<MicroBatcher>,
-        admin: Option<Arc<dyn VocabAdmin>>,
+        admin: Option<Arc<Mutex<dyn AdminSurface + Send>>>,
     ) -> std::io::Result<TransportServer> {
         let path = path.as_ref().to_path_buf();
         let _ = std::fs::remove_file(&path);
@@ -272,7 +358,7 @@ impl TransportServer {
     fn bind_tcp_inner(
         addr: &str,
         batcher: Arc<MicroBatcher>,
-        admin: Option<Arc<dyn VocabAdmin>>,
+        admin: Option<Arc<Mutex<dyn AdminSurface + Send>>>,
     ) -> std::io::Result<TransportServer> {
         let listener = std::net::TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -283,7 +369,7 @@ impl TransportServer {
         listener: Listener,
         endpoint: Endpoint,
         batcher: Arc<MicroBatcher>,
-        admin: Option<Arc<dyn VocabAdmin>>,
+        admin: Option<Arc<Mutex<dyn AdminSurface + Send>>>,
     ) -> std::io::Result<TransportServer> {
         // Nonblocking accept + a short poll lets shutdown terminate the
         // accept thread deterministically — a blocking accept(2) could
@@ -664,7 +750,11 @@ fn handle_connection(shared: &Arc<Shared>, conn_id: u64, stream: Stream) {
 /// Answer one admin frame inline (mutations are writer-serialized, not
 /// batched); returns `false` when the reply channel is gone and the
 /// connection should close. The read-only `STATS` frame is answered on
-/// every server — only mutations need the [`VocabAdmin`] hook.
+/// every server — only mutations and snapshot fetches need the
+/// [`AdminSurface`] hook. A `STATE_SNAPSHOT` fetch may enqueue several
+/// [`Response::SnapshotChunk`] replies under the one request id; each
+/// extra chunk bumps `outstanding` so the writer's per-response
+/// accounting (and the backpressure bound it feeds) stays exact.
 fn answer_admin(
     shared: &Shared,
     tx: &mpsc::Sender<(u64, Response)>,
@@ -684,18 +774,30 @@ fn answer_admin(
             let (mass, epoch) = shared.batcher.mass(&h);
             Response::Mass { epoch, mass }
         }
+        wire::Request::SnapshotFetch { max_chunk } => {
+            return answer_snapshot_fetch(
+                shared,
+                tx,
+                outstanding,
+                id,
+                max_chunk,
+            );
+        }
         request => match &shared.admin {
             None => Response::Error {
                 code: wire::ERR_SERVE,
                 message: "admin frames not enabled on this server".into(),
             },
-            Some(admin) => apply_admin(admin.as_ref(), request),
+            Some(admin) => apply_admin(admin, request),
         },
     };
     tx.send((id, resp)).is_ok()
 }
 
-fn apply_admin(admin: &dyn VocabAdmin, request: wire::Request) -> Response {
+fn apply_admin(
+    admin: &Mutex<dyn AdminSurface + Send>,
+    request: wire::Request,
+) -> Response {
     match request {
         wire::Request::AddClasses { dim, embeddings } => {
             let dim = dim as usize;
@@ -706,23 +808,119 @@ fn apply_admin(admin: &dyn VocabAdmin, request: wire::Request) -> Response {
                 };
             }
             let rows = embeddings.len() / dim;
-            match admin.add_classes(dim, rows, embeddings) {
-                Ok((ids, epoch)) => Response::AddClasses { epoch, ids },
-                Err(message) => {
-                    Response::Error { code: wire::ERR_SERVE, message }
+            let op = AdminOp::AddClasses {
+                embeddings: Matrix::from_vec(rows, dim, embeddings),
+            };
+            match admin.lock().expect("admin surface poisoned").admin(op) {
+                Ok(AdminResponse::Added { ids, epoch }) => {
+                    Response::AddClasses { epoch, ids }
                 }
+                Ok(other) => mismatched_admin_reply("add_classes", &other),
+                Err(e) => Response::Error {
+                    code: wire::ERR_SERVE,
+                    message: e.to_string(),
+                },
             }
         }
         wire::Request::RetireClasses { ids } => {
             let count = ids.len() as u32;
-            match admin.retire_classes(&ids) {
-                Ok(epoch) => Response::RetireClasses { epoch, count },
-                Err(message) => {
-                    Response::Error { code: wire::ERR_SERVE, message }
+            let op = AdminOp::RetireClasses { ids };
+            match admin.lock().expect("admin surface poisoned").admin(op) {
+                Ok(AdminResponse::Retired { epoch }) => {
+                    Response::RetireClasses { epoch, count }
                 }
+                Ok(other) => mismatched_admin_reply("retire_classes", &other),
+                Err(e) => Response::Error {
+                    code: wire::ERR_SERVE,
+                    message: e.to_string(),
+                },
             }
         }
         _ => unreachable!("apply_admin: non-admin frame"),
+    }
+}
+
+/// A surface answered an op with the wrong response variant — a bug in
+/// the embedder's [`AdminSurface`] impl, reported to the client rather
+/// than crashing the serving thread.
+fn mismatched_admin_reply(wanted: &str, got: &AdminResponse) -> Response {
+    Response::Error {
+        code: wire::ERR_SERVE,
+        message: format!("admin surface answered {got:?} to {wanted}"),
+    }
+}
+
+/// Stream the full durable sampler state back as chunked
+/// `STATE_SNAPSHOT` frames. The state is captured and encoded exactly
+/// once (readers of a half-applied epoch are impossible — the surface
+/// reads the pinned snapshot), then split into chunks of at most
+/// `max_chunk` bytes (`0` means [`wire::MAX_SNAPSHOT_CHUNK`], and the
+/// cap is enforced regardless) that all share the request id. The first
+/// chunk rides the `outstanding` slot `answer_admin` already took; each
+/// later chunk takes its own before being queued.
+fn answer_snapshot_fetch(
+    shared: &Shared,
+    tx: &mpsc::Sender<(u64, Response)>,
+    outstanding: &AtomicUsize,
+    id: u64,
+    max_chunk: u32,
+) -> bool {
+    let encoded = match &shared.admin {
+        None => Err("admin frames not enabled on this server".to_string()),
+        Some(admin) => {
+            let got =
+                admin.lock().expect("admin surface poisoned").admin(
+                    AdminOp::Snapshot,
+                );
+            match got {
+                Ok(AdminResponse::Snapshot { snapshot }) => {
+                    let epoch = snapshot.epoch;
+                    Ok((crate::snapshot::encode(&snapshot), epoch))
+                }
+                Ok(other) => {
+                    Err(format!("admin surface answered {other:?} to snapshot"))
+                }
+                Err(e) => Err(e.to_string()),
+            }
+        }
+    };
+    let (bytes, epoch) = match encoded {
+        Ok(x) => x,
+        Err(message) => {
+            let resp = Response::Error { code: wire::ERR_SERVE, message };
+            return tx.send((id, resp)).is_ok();
+        }
+    };
+    let max = if max_chunk == 0 {
+        wire::MAX_SNAPSHOT_CHUNK
+    } else {
+        (max_chunk as usize).min(wire::MAX_SNAPSHOT_CHUNK)
+    }
+    .max(1);
+    let total = bytes.len() as u64;
+    let mut offset = 0usize;
+    let mut first = true;
+    // An empty encoding still answers one empty chunk (offset 0 == total
+    // 0 marks completion), so the loop shape is do-while.
+    loop {
+        let end = (offset + max).min(bytes.len());
+        let chunk = Response::SnapshotChunk {
+            epoch,
+            total,
+            offset: offset as u64,
+            data: bytes[offset..end].to_vec(),
+        };
+        if !first {
+            outstanding.fetch_add(1, Ordering::AcqRel);
+        }
+        first = false;
+        if tx.send((id, chunk)).is_err() {
+            return false;
+        }
+        offset = end;
+        if offset >= bytes.len() {
+            return true;
+        }
     }
 }
 

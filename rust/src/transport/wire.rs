@@ -143,6 +143,7 @@ const KIND_REQ_MASS: u8 = 0x04;
 const KIND_REQ_ADD_CLASSES: u8 = 0x10;
 const KIND_REQ_RETIRE_CLASSES: u8 = 0x11;
 const KIND_REQ_STATS: u8 = 0x12;
+const KIND_REQ_SNAPSHOT: u8 = 0x13;
 const KIND_REQ_WAVE: u8 = 0x20;
 const KIND_RESP_SAMPLE: u8 = 0x81;
 const KIND_RESP_PROBABILITY: u8 = 0x82;
@@ -151,8 +152,16 @@ const KIND_RESP_MASS: u8 = 0x84;
 const KIND_RESP_ADD_CLASSES: u8 = 0x90;
 const KIND_RESP_RETIRE_CLASSES: u8 = 0x91;
 const KIND_RESP_STATS: u8 = 0x92;
+const KIND_RESP_SNAPSHOT: u8 = 0x93;
 const KIND_RESP_WAVE: u8 = 0xA0;
 const KIND_RESP_ERROR: u8 = 0xFF;
+
+/// Largest snapshot-chunk `data` length a [`Response::SnapshotChunk`]
+/// frame can carry: [`MAX_PAYLOAD`] minus the chunk's fixed prefix
+/// (`u64 epoch | u64 total | u64 offset | u32 len`). Servers clamp their
+/// chunking to this; clients requesting `max_chunk = 0` get it as the
+/// default.
+pub const MAX_SNAPSHOT_CHUNK: usize = MAX_PAYLOAD - 28;
 
 /// Version the `STATS` admin frames require (added in wire v3 alongside
 /// waves): a `STATS` kind stamped v2 decodes to
@@ -283,6 +292,13 @@ pub enum Request {
     /// Answered inline from the pinned snapshot, never batched — the
     /// cluster router's mass-weighted replica pick depends on it.
     Mass { h: Vec<f32> },
+    /// Admin (wire v3): stream the server's full durable sampler state
+    /// (the [`crate::snapshot`] binary encoding) as a sequence of
+    /// [`Response::SnapshotChunk`] frames sharing this request's id.
+    /// `max_chunk` caps the per-frame `data` length (`0` = the server's
+    /// default, [`MAX_SNAPSHOT_CHUNK`]) — small values exist so tests
+    /// and constrained links can force multi-chunk streams.
+    SnapshotFetch { max_chunk: u32 },
 }
 
 impl Request {
@@ -295,6 +311,7 @@ impl Request {
                 | Request::RetireClasses { .. }
                 | Request::Stats
                 | Request::Mass { .. }
+                | Request::SnapshotFetch { .. }
         )
     }
 
@@ -314,7 +331,8 @@ impl Request {
             Request::AddClasses { .. }
             | Request::RetireClasses { .. }
             | Request::Stats
-            | Request::Mass { .. } => {
+            | Request::Mass { .. }
+            | Request::SnapshotFetch { .. } => {
                 panic!("into_query: admin frame is not a serve query")
             }
         }
@@ -342,6 +360,14 @@ pub enum Response {
     /// Total proposal mass at the queried embedding, epoch-tagged like
     /// every serve response (wire v3).
     Mass { epoch: u64, mass: f64 },
+    /// One chunk of a streamed sampler-state snapshot (wire v3): bytes
+    /// `offset..offset+data.len()` of a `total`-byte
+    /// [`crate::snapshot`] encoding captured at `epoch`. All chunks of
+    /// one fetch share the request id and arrive in offset order; the
+    /// fetch is complete when `offset + data.len() == total`. `epoch`
+    /// is identical across chunks — the server encodes once and streams
+    /// the buffer, never a torn state.
+    SnapshotChunk { epoch: u64, total: u64, offset: u64, data: Vec<u8> },
     Error { code: u8, message: String },
 }
 
@@ -387,6 +413,7 @@ fn request_kind(req: &Request) -> u8 {
         Request::AddClasses { .. } => KIND_REQ_ADD_CLASSES,
         Request::RetireClasses { .. } => KIND_REQ_RETIRE_CLASSES,
         Request::Stats => KIND_REQ_STATS,
+        Request::SnapshotFetch { .. } => KIND_REQ_SNAPSHOT,
     }
 }
 
@@ -440,6 +467,9 @@ fn encode_request_payload(out: &mut Vec<u8>, req: &Request) {
         }
         Request::Stats => {}
         Request::Mass { h } => push_query(out, h),
+        Request::SnapshotFetch { max_chunk } => {
+            out.extend_from_slice(&max_chunk.to_le_bytes());
+        }
     }
 }
 
@@ -461,6 +491,7 @@ fn response_kind(resp: &Response) -> u8 {
         Response::AddClasses { .. } => KIND_RESP_ADD_CLASSES,
         Response::RetireClasses { .. } => KIND_RESP_RETIRE_CLASSES,
         Response::Stats { .. } => KIND_RESP_STATS,
+        Response::SnapshotChunk { .. } => KIND_RESP_SNAPSHOT,
         Response::Error { .. } => KIND_RESP_ERROR,
     }
 }
@@ -512,6 +543,14 @@ fn encode_response_payload(out: &mut Vec<u8>, resp: &Response) {
             debug_assert!(raw.len() <= MAX_PAYLOAD - 4);
             out.extend_from_slice(&(raw.len() as u32).to_le_bytes());
             out.extend_from_slice(raw);
+        }
+        Response::SnapshotChunk { epoch, total, offset, data } => {
+            debug_assert!(data.len() <= MAX_SNAPSHOT_CHUNK);
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&total.to_le_bytes());
+            out.extend_from_slice(&offset.to_le_bytes());
+            out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+            out.extend_from_slice(data);
         }
         Response::Error { code, message } => {
             let msg = message.as_bytes();
@@ -855,6 +894,10 @@ fn decode_request_payload(
             let h = c.query()?;
             Request::Mass { h }
         }
+        KIND_REQ_SNAPSHOT => {
+            let max_chunk = c.u32()?;
+            Request::SnapshotFetch { max_chunk }
+        }
         other => return Err(ProtocolError::UnknownKind(other)),
     };
     c.finish()?;
@@ -943,6 +986,27 @@ fn decode_response_payload(
             })?;
             Response::Stats { json }
         }
+        KIND_RESP_SNAPSHOT => {
+            let epoch = c.u64()?;
+            let total = c.u64()?;
+            let offset = c.u64()?;
+            let len = c.u32()? as usize;
+            // Reject before allocating: the length prefix may not claim
+            // more bytes than the payload delivers, and a chunk may not
+            // claim to extend past the stream's total.
+            if len > payload.len().saturating_sub(c.pos) {
+                return Err(ProtocolError::Malformed(
+                    "snapshot chunk length exceeds payload",
+                ));
+            }
+            if offset.checked_add(len as u64).is_none_or(|end| end > total) {
+                return Err(ProtocolError::Malformed(
+                    "snapshot chunk extends past total",
+                ));
+            }
+            let data = c.take(len)?.to_vec();
+            Response::SnapshotChunk { epoch, total, offset, data }
+        }
         KIND_RESP_ERROR => {
             let code = c.u8()?;
             let len = c.u16()? as usize;
@@ -1012,7 +1076,12 @@ pub enum ResponseFrame {
 fn kind_requires_v3(kind: u8) -> bool {
     matches!(
         kind,
-        KIND_REQ_STATS | KIND_RESP_STATS | KIND_REQ_MASS | KIND_RESP_MASS
+        KIND_REQ_STATS
+            | KIND_RESP_STATS
+            | KIND_REQ_MASS
+            | KIND_RESP_MASS
+            | KIND_REQ_SNAPSHOT
+            | KIND_RESP_SNAPSHOT
     )
 }
 
@@ -1335,6 +1404,147 @@ mod tests {
         super::finish_frame(&mut buf, len_at);
         assert!(matches!(
             read_response(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+    }
+
+    // -----------------------------------------------------------------
+    // STATE_SNAPSHOT admin frames (wire v3)
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn snapshot_frames_round_trip_and_carry_v3() {
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 11, &Request::SnapshotFetch { max_chunk: 0 });
+        assert_eq!(buf[2], 3, "SNAPSHOT frames must carry wire v3");
+        let (id, got) = read_request(&mut &buf[..]).unwrap().unwrap();
+        assert_eq!(id, 11);
+        assert_eq!(got, Request::SnapshotFetch { max_chunk: 0 });
+        assert!(got.is_admin());
+
+        // A middle chunk and a final empty-tail boundary chunk.
+        for resp in [
+            Response::SnapshotChunk {
+                epoch: 4,
+                total: 100,
+                offset: 32,
+                data: vec![0xAB; 48],
+            },
+            Response::SnapshotChunk {
+                epoch: 4,
+                total: 100,
+                offset: 96,
+                data: vec![1, 2, 3, 4],
+            },
+            Response::SnapshotChunk {
+                epoch: 0,
+                total: 0,
+                offset: 0,
+                data: vec![],
+            },
+        ] {
+            let mut buf = Vec::new();
+            encode_response(&mut buf, 11, &resp);
+            assert_eq!(buf[2], 3);
+            let (_, got) = read_response(&mut &buf[..]).unwrap().unwrap();
+            assert_eq!(got, resp);
+        }
+    }
+
+    #[test]
+    fn v2_stamped_snapshot_gets_the_unknown_kind_refusal() {
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 1, &Request::SnapshotFetch { max_chunk: 64 });
+        buf[2] = 2;
+        assert!(matches!(
+            read_request(&mut &buf[..]).unwrap_err(),
+            ProtocolError::UnknownKind(0x13)
+        ));
+        let mut buf = Vec::new();
+        encode_response(
+            &mut buf,
+            1,
+            &Response::SnapshotChunk {
+                epoch: 0,
+                total: 1,
+                offset: 0,
+                data: vec![9],
+            },
+        );
+        buf[2] = 2;
+        assert!(matches!(
+            read_response(&mut &buf[..]).unwrap_err(),
+            ProtocolError::UnknownKind(0x93)
+        ));
+    }
+
+    #[test]
+    fn malformed_snapshot_chunks_are_rejected() {
+        // Chunk length prefix claiming more bytes than delivered —
+        // rejected before any allocation.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 3, 0x93, 1);
+        buf.extend_from_slice(&0u64.to_le_bytes()); // epoch
+        buf.extend_from_slice(&10u64.to_le_bytes()); // total
+        buf.extend_from_slice(&0u64.to_le_bytes()); // offset
+        buf.extend_from_slice(&1_000_000u32.to_le_bytes()); // len
+        buf.push(0x01);
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_response(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // offset + len past total: a torn stream must not assemble.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 3, 0x93, 1);
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&4u64.to_le_bytes()); // total 4
+        buf.extend_from_slice(&3u64.to_le_bytes()); // offset 3
+        buf.extend_from_slice(&2u32.to_le_bytes()); // len 2 ⇒ end 5 > 4
+        buf.extend_from_slice(&[7, 8]);
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_response(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // u64 offset overflow in offset+len must be caught, not wrapped.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 3, 0x93, 1);
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&[7, 8]);
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_response(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // Trailing bytes after a valid chunk body.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 3, 0x93, 1);
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&1u64.to_le_bytes());
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(0x01);
+        buf.push(0xEE);
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_response(&mut &buf[..]).unwrap_err(),
+            ProtocolError::Malformed(_)
+        ));
+
+        // SnapshotFetch with a short payload is malformed.
+        let mut buf = Vec::new();
+        let len_at = super::begin_frame(&mut buf, 3, 0x13, 1);
+        buf.extend_from_slice(&[0u8; 2]);
+        super::finish_frame(&mut buf, len_at);
+        assert!(matches!(
+            read_request(&mut &buf[..]).unwrap_err(),
             ProtocolError::Malformed(_)
         ));
     }

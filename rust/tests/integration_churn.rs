@@ -351,8 +351,8 @@ fn uds_admin_churn_chi_square_vs_scratch_rebuild() {
         BatcherOptions::default(),
     ));
     let admin =
-        Arc::new(SharedWriterAdmin::new(Arc::clone(&writer), d));
-    let transport = TransportServer::bind_with_admin(
+        Arc::new(Mutex::new(SharedWriterAdmin::new(Arc::clone(&writer), d)));
+    let transport = TransportServer::bind_with_surface(
         sock_path("admin-chi2"),
         Arc::clone(&batcher),
         admin,
@@ -529,16 +529,17 @@ fn admin_stack(
         server.clone(),
         BatcherOptions::default(),
     ));
-    let admin = Arc::new(SharedWriterAdmin::new(Arc::clone(&writer), d));
+    let admin =
+        Arc::new(Mutex::new(SharedWriterAdmin::new(Arc::clone(&writer), d)));
     let transport = if tcp {
-        TransportServer::bind_tcp_with_admin(
+        TransportServer::bind_tcp_with_surface(
             "127.0.0.1:0",
             Arc::clone(&batcher),
             admin,
         )
         .unwrap()
     } else {
-        TransportServer::bind_with_admin(
+        TransportServer::bind_with_surface(
             sock_path(tag),
             Arc::clone(&batcher),
             admin,

@@ -15,7 +15,11 @@
 //!    loss recorded;
 //! 4. hedged requests never double-count in stats reconciliation —
 //!    the straggler's duplicate is visible server-side while the
-//!    cluster's logical request counter moves once.
+//!    cluster's logical request counter moves once;
+//! 5. a killed replica rejoins via snapshot-bootstrap — chunked
+//!    `STATE_SNAPSHOT` fetch before the crash, restore into a fresh
+//!    skeleton, replay of the parked replication tail — and converges
+//!    to the shared cursor with zero lost churn ops.
 
 use rfsoftmax::cluster::{
     shard_partition, Cluster, ClusterError, ClusterOptions,
@@ -106,8 +110,9 @@ fn fixture(
         let writer = Arc::new(Mutex::new(writer));
         let batcher =
             Arc::new(MicroBatcher::spawn(server.clone(), opts_for(r)));
-        let admin = Arc::new(SharedWriterAdmin::new(writer, d));
-        let transport = TransportServer::bind_with_admin(
+        let admin =
+            Arc::new(Mutex::new(SharedWriterAdmin::new(writer, d)));
+        let transport = TransportServer::bind_with_surface(
             sock_path(tag, r),
             Arc::clone(&batcher),
             admin,
@@ -444,4 +449,169 @@ fn hedged_stragglers_never_double_count_logical_requests() {
     // No replica died: hedging is a race, not a failover.
     assert_eq!(fx.cluster.alive(), REPLICAS);
     assert_eq!(metrics.counter("cluster.failovers").get(), 0);
+}
+
+// -- 5. snapshot-bootstrap rejoin -----------------------------------------
+
+#[test]
+fn killed_replica_rejoins_via_snapshot_bootstrap() {
+    use rfsoftmax::admin::AdminSurface;
+    use rfsoftmax::transport::TransportClient;
+
+    let (n, d) = (36, 6);
+    let seed = 3400u64;
+    let mut fx = fixture(
+        n,
+        d,
+        seed,
+        "bootstrap",
+        fast_opts,
+        ClusterOptions {
+            request_timeout: Duration::from_millis(800),
+            hedge: false,
+            virtual_nodes: VNODES,
+        },
+    );
+    let mut router = fx.cluster.client();
+    let mut rng = Rng::seeded(seed + 1);
+    let victim = 0usize;
+    let victim_endpoint =
+        fx.cluster.registry().replica(victim).endpoint.clone();
+
+    // Churn round 1 (replica alive): 9 adds, 3 retires, fully flushed —
+    // this is the state the durable snapshot will capture.
+    let mut emb = Matrix::zeros(9, d);
+    for row in 0..9 {
+        emb.row_mut(row).copy_from_slice(&unit_vector(&mut rng, d));
+    }
+    let (round1, _) = router.add_classes(&emb);
+    router.retire_classes(&[0, 4, 8]);
+    assert!(fx.cluster.flush(Duration::from_secs(10)), "round-1 flush");
+    assert_eq!(fx.cluster.dropped(), vec![0; REPLICAS]);
+
+    // Fetch the victim's durable state over the wire with a tiny chunk
+    // size, so the 16 MiB frame cap machinery actually streams — the
+    // snapshot must arrive in several STATE_SNAPSHOT chunks.
+    let from_seq = fx.cluster.cursors()[victim];
+    let mut admin_conn =
+        TransportClient::connect_endpoint(&victim_endpoint).unwrap();
+    let (bytes, snap_epoch) = admin_conn.fetch_snapshot(64).unwrap();
+    assert!(bytes.len() > 64, "state too small to exercise chunking");
+    let snap = rfsoftmax::snapshot::decode(&bytes).unwrap();
+    assert_eq!(snap.epoch, snap_epoch);
+    drop(admin_conn);
+
+    // Kill the victim, then churn round 2 into the dead cluster: 18
+    // adds and retires spread over every shard. The victim's share is
+    // abandoned — visibly — while survivors converge.
+    fx.replicas[victim].transport = None;
+    let mut round2: Vec<u32> = Vec::new();
+    for _ in 0..2 {
+        let mut emb = Matrix::zeros(9, d);
+        for row in 0..9 {
+            emb.row_mut(row).copy_from_slice(&unit_vector(&mut rng, d));
+        }
+        let (globals, _) = router.add_classes(&emb);
+        round2.extend(globals);
+    }
+    router.retire_classes(&[1, 5]);
+    // Final retire touching every replica under one sequence number, so
+    // post-bootstrap convergence means every cursor equals it.
+    let registry = fx.cluster.registry();
+    let mut per_owner: Vec<Option<u32>> = vec![None; REPLICAS];
+    for &g in &round2 {
+        per_owner[registry.owner_of(g)].get_or_insert(g);
+    }
+    let last: Vec<u32> = per_owner.iter().flatten().copied().collect();
+    assert_eq!(last.len(), REPLICAS, "18 adds left a replica unowned");
+    let final_seq = router.retire_classes(&last);
+
+    assert!(fx.cluster.flush(Duration::from_secs(10)), "dead-replica flush");
+    let lost = fx.cluster.dropped()[victim];
+    assert!(lost >= 1, "victim saw none of round 2");
+    assert!(
+        !fx.cluster.abandoned()[victim].is_empty(),
+        "abandon must record its seq ranges"
+    );
+
+    // Recover: fresh skeleton over the original shard, state replaced
+    // wholesale by the snapshot through the same admin surface, rebound
+    // at the same endpoint. Slot assignment is deterministic, so the
+    // restored replica reproduces the dead one's local ids and the
+    // registry's existing global→local bindings stay valid.
+    let partitions = shard_partition(n, REPLICAS, VNODES);
+    let mut srng = Rng::seeded(seed);
+    let classes = Matrix::randn(&mut srng, n, d).l2_normalized_rows();
+    let mut shard = Matrix::zeros(partitions[victim].len(), d);
+    for (i, &g) in partitions[victim].iter().enumerate() {
+        shard.row_mut(i).copy_from_slice(classes.row(g as usize));
+    }
+    let skeleton = ShardedKernelSampler::with_map(
+        &shard,
+        feature_map(d, seed),
+        2,
+        "rff-sharded",
+    );
+    let (server, writer) = SamplerServer::new(skeleton.fork().unwrap());
+    let writer = Arc::new(Mutex::new(writer));
+    let batcher =
+        Arc::new(MicroBatcher::spawn(server.clone(), fast_opts(victim)));
+    let mut surface = SharedWriterAdmin::new(Arc::clone(&writer), d);
+    surface.admin_restore(snap.state.clone()).unwrap();
+    let transport = TransportServer::bind_with_surface(
+        sock_path("bootstrap", victim),
+        Arc::clone(&batcher),
+        Arc::new(Mutex::new(surface)),
+    )
+    .unwrap();
+    fx.replicas[victim] =
+        Replica { server, batcher, transport: Some(transport) };
+
+    // Bootstrap: verified replay of exactly the abandoned tail, then
+    // convergence — zero lost churn ops.
+    let replayed = fx.cluster.bootstrap_replica(victim, from_seq).unwrap();
+    assert_eq!(replayed, lost, "replay must cover exactly the abandoned ops");
+    assert!(fx.cluster.flush(Duration::from_secs(10)), "bootstrap flush");
+    assert_eq!(fx.cluster.dropped(), vec![0; REPLICAS], "churn ops lost");
+    assert!(fx.cluster.abandoned()[victim].is_empty());
+    assert_eq!(fx.cluster.lag(), vec![0; REPLICAS]);
+    assert_eq!(
+        fx.cluster.cursors(),
+        vec![final_seq; REPLICAS],
+        "rejoined replica did not converge to the shared cursor"
+    );
+    assert_eq!(fx.cluster.alive(), REPLICAS);
+
+    // The rejoined replica serves: global live counts match the
+    // never-crashed accounting, and classes from every churn era answer
+    // through the router — including round-2 adds the victim only ever
+    // saw through the bootstrap replay.
+    let live: usize = fx
+        .replicas
+        .iter()
+        .map(|rep| rep.server.snapshot().sampler().live_classes())
+        .sum();
+    assert_eq!(live, n + 9 + 18 - 3 - 2 - REPLICAS);
+    let h = unit_vector(&mut rng, d);
+    for g in [round1[0], round2[0]] {
+        if last.contains(&g) {
+            continue;
+        }
+        let (q, _) = router.probability(&h, g).unwrap();
+        assert!(q.is_finite() && q > 0.0, "class {g} unservable: q={q}");
+    }
+    // Prefer a class the victim only ever saw through the bootstrap
+    // replay; if the ring gave the victim exactly one round-2 add (and
+    // the final retire took it), fall back to a snapshot-restored one.
+    let victim_class = round2
+        .iter()
+        .chain(round1.iter())
+        .copied()
+        .find(|&g| registry.owner_of(g) == victim && !last.contains(&g))
+        .expect("a live class owned by the victim");
+    let (q, _) = router.probability(&h, victim_class).unwrap();
+    assert!(
+        q.is_finite() && q > 0.0,
+        "bootstrap-replayed class unservable: q={q}"
+    );
 }

@@ -1,0 +1,231 @@
+//! Durability integration: the full snapshot path — capture under
+//! load, manifest-tracked save, crash, restore into a fresh skeleton —
+//! must be invisible to the served distribution. Two contracts:
+//!
+//! 1. a server that churns, snapshots, dies, and restores, then keeps
+//!    churning, is **exactly** the server that never died: bit-equal
+//!    probabilities, identical live/total accounting, and χ²-consistent
+//!    draws against the never-restarted twin;
+//! 2. on-disk corruption (truncation, flipped bytes, future version)
+//!    surfaces as typed [`SnapshotError`]s — never a panic, never a
+//!    silently-wrong sampler.
+
+use rfsoftmax::featmap::RffMap;
+use rfsoftmax::linalg::{unit_vector, Matrix};
+use rfsoftmax::rng::Rng;
+use rfsoftmax::sampler::ShardedKernelSampler;
+use rfsoftmax::serving::{SamplerServer, SamplerWriter};
+use rfsoftmax::snapshot::{self, SnapshotError};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const N: usize = 40;
+const D: usize = 6;
+const SEED: u64 = 4100;
+
+fn snap_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("rfsm-snap-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One serving stack over a fork of a deterministically-built sharded
+/// RFF sampler — called twice with the same seed, it yields
+/// byte-identical cold states (same classes, same feature map).
+fn stack() -> (SamplerServer, SamplerWriter) {
+    let mut rng = Rng::seeded(SEED);
+    let classes = Matrix::randn(&mut rng, N, D).l2_normalized_rows();
+    let offline = ShardedKernelSampler::with_map(
+        &classes,
+        RffMap::new(D, 32, 2.0, &mut Rng::seeded(SEED + 1)),
+        2,
+        "rff-sharded",
+    );
+    SamplerServer::new(offline.fork().unwrap())
+}
+
+/// One deterministic churn round, applied identically to whichever
+/// writer is passed in: grow by three, retire two, publish — with a
+/// couple of reads in between so the snapshot machinery runs under
+/// load, not in a quiesced gap.
+fn churn_round(
+    server: &SamplerServer,
+    writer: &mut SamplerWriter,
+    round: u64,
+) -> Vec<u32> {
+    let mut rng = Rng::seeded(SEED + 10 + round);
+    let h = unit_vector(&mut rng, D);
+    let mut draw_rng = Rng::seeded(SEED + 20 + round);
+    let _ = server.sample(&h, 4, &mut draw_rng);
+
+    let mut emb = Matrix::zeros(3, D);
+    for r in 0..3 {
+        emb.row_mut(r).copy_from_slice(&unit_vector(&mut rng, D));
+    }
+    let ids = writer.apply_add_classes(emb).unwrap();
+    writer
+        .apply_retire_classes(vec![(2 * round + 1) as u32, (2 * round + 6) as u32])
+        .unwrap();
+    writer.publish();
+
+    let _ = server.sample(&h, 4, &mut draw_rng);
+    ids
+}
+
+#[test]
+fn crash_restart_agrees_with_a_never_restarted_twin() {
+    let dir = snap_dir("crash");
+
+    // Two identical stacks; only `main` will crash.
+    let (main_server, mut main_writer) = stack();
+    let (twin_server, mut twin_writer) = stack();
+
+    // Round 0 on both, then capture main's durable state mid-life.
+    let ids_main = churn_round(&main_server, &mut main_writer, 0);
+    let ids_twin = churn_round(&twin_server, &mut twin_writer, 0);
+    assert_eq!(ids_main, ids_twin, "deterministic id assignment broke");
+
+    let snap = main_server.snapshot_state().expect("sharded kind snapshots");
+    let epoch_at_snap = main_server.epoch();
+    assert_eq!(snap.epoch, epoch_at_snap);
+    let meta = snapshot::save_with_manifest(&dir, "main", &snap).unwrap();
+    assert_eq!(meta.epoch, epoch_at_snap);
+
+    // Crash: the entire serving stack goes away.
+    drop(main_writer);
+    drop(main_server);
+
+    // Restore: cold skeleton (the same construction recipe), state
+    // replaced wholesale from disk, published as one epoch swap.
+    let (server, mut writer) = stack();
+    let loaded = snapshot::load_with_manifest(&dir, "main").unwrap();
+    assert_eq!(loaded, snap, "disk round trip must be lossless");
+    writer.apply_restore(Arc::new(loaded.state)).unwrap();
+    writer.publish();
+
+    // Keep living: an identical post-restore churn round on both.
+    let ids_restored = churn_round(&server, &mut writer, 1);
+    let ids_twin2 = churn_round(&twin_server, &mut twin_writer, 1);
+    assert_eq!(
+        ids_restored, ids_twin2,
+        "restored state re-assigns different ids than the unbroken twin"
+    );
+
+    // Exact accounting: same universe size, same live set, and the
+    // twin's growth history is fully reflected (N + 2 rounds × 3 adds).
+    let restored = server.snapshot();
+    let twin = twin_server.snapshot();
+    assert_eq!(restored.sampler().num_classes(), N + 6);
+    assert_eq!(restored.sampler().num_classes(), twin.sampler().num_classes());
+    assert_eq!(restored.sampler().live_classes(), N + 6 - 4);
+    assert_eq!(
+        restored.sampler().live_classes(),
+        twin.sampler().live_classes()
+    );
+
+    // Bit-equal distribution: restore is a wholesale state replacement,
+    // so every probability — live, retired-to-zero, or grown — must
+    // match the twin exactly, not approximately.
+    let mut rng = Rng::seeded(SEED + 99);
+    let h = unit_vector(&mut rng, D);
+    let total = restored.sampler().num_classes();
+    for class in 0..total {
+        let got = server.probability(&h, class);
+        let want = twin_server.probability(&h, class);
+        assert_eq!(got, want, "class {class}: {got} vs twin {want}");
+    }
+
+    // χ² draw agreement: restored-server draw counts against the
+    // twin's distribution. 600 draws of 8 over ~42 live classes.
+    let (bursts, m) = (600usize, 8usize);
+    let mut counts = vec![0usize; total];
+    let mut draw_rng = Rng::seeded(SEED + 123);
+    for _ in 0..bursts {
+        let (draw, _) = server.sample(&h, m, &mut draw_rng);
+        for &id in &draw.ids {
+            counts[id as usize] += 1;
+        }
+    }
+    let trials = (bursts * m) as f64;
+    for class in 0..total {
+        let q = twin_server.probability(&h, class);
+        let expect = trials * q;
+        let sd = (trials * q * (1.0 - q)).sqrt().max(1.0);
+        assert!(
+            (counts[class] as f64 - expect).abs() <= 5.0 * sd + 3.0,
+            "class {class}: restored count {} vs twin expectation {expect:.1}",
+            counts[class]
+        );
+        if q == 0.0 {
+            assert_eq!(counts[class], 0, "retired class {class} drawn");
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_snapshots_fail_with_typed_errors_never_panics() {
+    let dir = snap_dir("corrupt");
+    let (server, mut writer) = stack();
+    churn_round(&server, &mut writer, 0);
+    let snap = server.snapshot_state().unwrap();
+    let path = dir.join("state.rfsnap");
+    snapshot::write_file(&path, &snap).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    assert_eq!(snapshot::read_file(&path).unwrap(), snap);
+
+    // Truncated: cut mid-payload (keeping the checksum-sized tail so
+    // the length preflight passes and the codec itself must cope).
+    std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+    match snapshot::read_file(&path) {
+        Err(
+            SnapshotError::Truncated
+            | SnapshotError::BadChecksum { .. }
+            | SnapshotError::Malformed(_),
+        ) => {}
+        other => panic!("truncated file must fail typed, got {other:?}"),
+    }
+
+    // Flipped byte mid-payload: the FNV trailer catches it before any
+    // parse can wander.
+    let mut flipped = good.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x40;
+    std::fs::write(&path, &flipped).unwrap();
+    match snapshot::read_file(&path) {
+        Err(SnapshotError::BadChecksum { stored, computed }) => {
+            assert_ne!(stored, computed);
+        }
+        other => panic!("flipped byte must fail the checksum, got {other:?}"),
+    }
+
+    // Future version: bytes 8..12 hold the format version; a newer
+    // writer's file reports FutureVersion (actionable: upgrade) rather
+    // than BadChecksum (misleading: looks like corruption).
+    let mut future = good.clone();
+    future[8..12].copy_from_slice(&999u32.to_le_bytes());
+    std::fs::write(&path, &future).unwrap();
+    match snapshot::read_file(&path) {
+        Err(SnapshotError::FutureVersion { found, max }) => {
+            assert_eq!(found, 999);
+            assert!(max < 999);
+        }
+        other => panic!("future version must be typed, got {other:?}"),
+    }
+
+    // Garbage and absence: still typed.
+    std::fs::write(&path, b"not a snapshot at all").unwrap();
+    assert!(matches!(
+        snapshot::read_file(&path),
+        Err(SnapshotError::Truncated | SnapshotError::BadMagic)
+    ));
+    assert!(matches!(
+        snapshot::read_file(&dir.join("missing.rfsnap")),
+        Err(SnapshotError::Io(_))
+    ));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -522,11 +522,10 @@ fn tcp_admin_frames_mutate_the_served_universe() {
         server.clone(),
         BatcherOptions::default(),
     ));
-    let admin = Arc::new(rfsoftmax::serving::SharedWriterAdmin::new(
-        Arc::clone(&writer),
-        d,
+    let admin = Arc::new(std::sync::Mutex::new(
+        rfsoftmax::serving::SharedWriterAdmin::new(Arc::clone(&writer), d),
     ));
-    let transport = TransportServer::bind_tcp_with_admin(
+    let transport = TransportServer::bind_tcp_with_surface(
         "127.0.0.1:0",
         Arc::clone(&batcher),
         admin,
